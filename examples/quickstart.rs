@@ -1,0 +1,69 @@
+//! Quickstart: the paper's test case (§IV, Figs. 3–5), end to end.
+//!
+//! Boots the hybrid testbed (Fig. 1), applies the verbatim `cow_job.yaml`
+//! manifest (Fig. 3), polls `kubectl get torquejob` (Fig. 4), and prints
+//! the lolcow output staged by the results pod (Fig. 5).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hpcorc::hybrid::{Testbed, TestbedConfig};
+use hpcorc::kube::KIND_TORQUEJOB;
+use hpcorc::util::fmt_age;
+use std::time::Duration;
+
+fn main() {
+    println!("=== hpcorc quickstart: Torque-Operator test case (paper §IV) ===\n");
+    println!("Table I components: kube + pbs | singularity + singularity-cri | operator | rustc+jax-aot\n");
+
+    let mut cfg = TestbedConfig::default();
+    cfg.operator_deployment = true; // the operator's 4 service containers (§III-B)
+    let tb = Testbed::start(cfg).expect("testbed boot");
+    println!(
+        "testbed up: torque queues {:?}, {} kube node objects (incl. virtual node), red-box at {}\n",
+        tb.pbs.queues().names(),
+        tb.api.list("Node", &[]).len(),
+        tb.socket().display()
+    );
+
+    println!("$ kubectl apply -f cow_job.yaml     # Fig. 3 manifest");
+    tb.kubectl_apply(hpcorc::kube::yaml::COW_JOB_YAML).expect("apply");
+
+    // Fig. 4: show each phase transition as a kubectl table.
+    let mut last = String::new();
+    loop {
+        let obj = tb.api.get(KIND_TORQUEJOB, "cow").expect("get torquejob");
+        let phase = obj.status.opt_str("phase").unwrap_or("").to_string();
+        if phase != last && !phase.is_empty() {
+            println!("\n$ kubectl get torquejob");
+            println!("{:<6} {:<5} {:<10}", "NAME", "AGE", "STATUS");
+            let age = fmt_age(Duration::from_secs_f64(
+                (tb.api.now_s() - obj.meta.creation_s).max(0.0),
+            ));
+            println!("{:<6} {:<5} {:<10}", "cow", age, phase);
+            if let Some(job_id) = obj.status.opt_str("jobId") {
+                println!("  (Torque job id: {job_id} — also visible via qstat on the login node)");
+            }
+            last = phase.clone();
+        }
+        if hpcorc::operator::phase::terminal(&phase) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    println!("\n$ cat $HOME/low.out                 # Fig. 5: staged by the results pod");
+    print!("{}", tb.fs.read_string("$HOME/low.out").expect("low.out"));
+    println!("\nresults copy in mount dir: $HOME/low.out -> {}", if tb.fs.exists("$HOME/low.out") { "present" } else { "missing" });
+
+    println!("\npods involved (dummy + results + operator services):");
+    for pod in tb.api.list("Pod", &[]) {
+        println!(
+            "  {:<24} {:<10} node={}",
+            pod.meta.name,
+            pod.status.opt_str("phase").unwrap_or("Pending"),
+            pod.spec.opt_str("nodeName").unwrap_or("<none>")
+        );
+    }
+    tb.stop();
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,4 @@
+"""Build-time compile path: L2 model + L1 kernels + AOT export.
+
+Never imported at runtime — Rust executes the exported artifacts via PJRT.
+"""

@@ -1,0 +1,164 @@
+"""AOT export: lower the L2 programs to HLO *text* + a manifest for Rust.
+
+HLO text (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 (behind the published `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts per model variant:
+  cropyield_init_<v>.hlo.txt    (seed:i32) -> (params...)
+  cropyield_train_<v>.hlo.txt   (step:i32, params...) -> (params..., loss)
+  cropyield_infer_<v>.hlo.txt   (step:i32, params...) -> (yhat, mse)
+plus manifest.json describing shapes/dtypes and artifact roles — the Rust
+runtime (`rust/src/runtime/`) is driven entirely by the manifest.
+
+Usage: python -m compile.aot --out ../artifacts   [--full] [--report]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention as attn_kernel
+from .kernels import matmul_gelu as mm_kernel
+
+DEFAULT_VARIANTS = ["tiny", "small"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def export_variant(variant: str, out_dir: str) -> dict:
+    cfg = model.CONFIGS[variant]
+    pspecs = model.param_specs(cfg)
+    n_params = sum(int(jnp.prod(jnp.array(s.shape))) for s in pspecs)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    entries = {}
+
+    # init: seed -> params
+    init_fn = model.make_init_fn(cfg)
+    lowered = jax.jit(init_fn).lower(seed_spec)
+    path = f"cropyield_init_{variant}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries[f"cropyield_init_{variant}"] = {
+        "file": path,
+        "role": "init",
+        "inputs": [spec_json(seed_spec)],
+        "outputs": [spec_json(s) for s in pspecs],
+    }
+
+    # train_step: (step, params...) -> (params..., loss)
+    train_fn = model.make_train_step_fn(cfg)
+    lowered = jax.jit(train_fn).lower(seed_spec, *pspecs)
+    path = f"cropyield_train_{variant}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries[f"cropyield_train_{variant}"] = {
+        "file": path,
+        "role": "train_step",
+        "init": f"cropyield_init_{variant}",
+        "inputs": [spec_json(seed_spec)] + [spec_json(s) for s in pspecs],
+        "outputs": [spec_json(s) for s in pspecs]
+        + [{"shape": [], "dtype": "float32"}],
+        "metric": "loss",
+        "metricOutputIndex": len(pspecs),
+        "paramCount": len(pspecs),
+        "flopsPerStep": model.flops_per_step(cfg),
+    }
+
+    # infer: (step, params...) -> (yhat, mse)
+    infer_fn = model.make_infer_fn(cfg)
+    lowered = jax.jit(infer_fn).lower(seed_spec, *pspecs)
+    path = f"cropyield_infer_{variant}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries[f"cropyield_infer_{variant}"] = {
+        "file": path,
+        "role": "infer",
+        "init": f"cropyield_init_{variant}",
+        "inputs": [spec_json(seed_spec)] + [spec_json(s) for s in pspecs],
+        "outputs": [
+            {"shape": [cfg["batch"]], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"},
+        ],
+        "metric": "mse",
+        "metricOutputIndex": 1,
+        "paramCount": len(pspecs),
+    }
+
+    print(
+        f"  {variant}: d={cfg['d_model']} L={cfg['n_layers']} "
+        f"params={n_params:,} ({len(pspecs)} arrays)",
+        file=sys.stderr,
+    )
+    return entries
+
+
+def report(variants):
+    """--report: structural L1 analysis (VMEM footprint, MXU estimate) —
+    the basis of EXPERIMENTS.md's TPU-perf *estimates* (interpret mode
+    gives no hardware timing)."""
+    out = {}
+    for v in variants:
+        cfg = model.CONFIGS[v]
+        d, ff = cfg["d_model"], cfg["d_ff"]
+        tokens = cfg["batch"] * cfg["seq"]
+        hd = d // cfg["n_heads"]
+        bh = cfg["batch"] * cfg["n_heads"]
+        out[v] = {
+            "mlp_kernel": {
+                "shape": [tokens, d, ff],
+                "vmem_bytes": mm_kernel.vmem_bytes(tokens, ff, d),
+                "mxu_utilization": mm_kernel.mxu_utilization_estimate(tokens, ff, d),
+            },
+            "attention_kernel": {
+                "shape": [bh, cfg["seq"], hd],
+                "vmem_bytes": attn_kernel.vmem_bytes(bh, cfg["seq"], hd),
+            },
+            "flops_per_train_step": model.flops_per_step(cfg),
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--full", action="store_true", help="also export `base`")
+    ap.add_argument("--report", action="store_true", help="print L1 analysis")
+    args = ap.parse_args()
+
+    variants = DEFAULT_VARIANTS + (["base"] if args.full else [])
+    if args.report:
+        print(json.dumps(report(variants), indent=2))
+        return
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"exporting {variants} -> {out_dir}", file=sys.stderr)
+    manifest = {"formatVersion": 1, "artifacts": {}}
+    for v in variants:
+        manifest["artifacts"].update(export_variant(v, out_dir))
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the containerised compute payloads."""
+
+from . import attention, matmul_gelu, ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: blockwise attention with online softmax (FlashAttention
+re-thought for TPU, per DESIGN.md §Hardware-Adaptation).
+
+Where the CUDA original assigns a threadblock per query tile and streams
+K/V tiles through shared memory, here the grid is (batch*heads, seq/bq):
+each step holds one (bq, d) query tile in VMEM and streams (bk, d) K/V
+tiles with a fori_loop, maintaining the online-softmax running max `m`,
+normaliser `l`, and accumulator — never materialising the (seq, seq)
+score matrix in HBM.
+
+interpret=True as everywhere (CPU PJRT cannot execute Mosaic); numerics
+are validated against ref.attention_ref. Autodiff via custom_vjp with the
+standard analytic backward in plain XLA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(dim: int, preferred: int) -> int:
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk, causal, bq):
+    q = q_ref[0]  # (bq, d)
+    d = q.shape[-1]
+    seq = k_ref.shape[1]
+    nk = seq // bk
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q_row0 = pl.program_id(1) * bq
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(i * bk, bk), :]  # (bk, d) — one K tile
+        v = v_ref[0, pl.dslice(i * bk, bk), :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q.shape[0],), -1e30, dtype=jnp.float32)
+    l0 = jnp.zeros((q.shape[0],), dtype=jnp.float32)
+    acc0 = jnp.zeros_like(q)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[0] = acc / l[:, None]
+
+
+def attention_fwd(q, k, v, *, causal=False, bq=None, bk=None):
+    """softmax(q k^T / sqrt(d)) v over (bh, seq, d) float32 operands."""
+    bh, seq, d = q.shape
+    assert k.shape == (bh, seq, d) and v.shape == (bh, seq, d)
+    bq = bq or _tile(seq, 128)
+    bk = bk or _tile(seq, 128)
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, causal=causal, bq=bq),
+        grid=(bh, seq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal=False):
+    """Differentiable blockwise attention with a Pallas forward."""
+    return attention_fwd(q, k, v, causal=causal)
+
+
+def _softmax_scores(q, k, causal):
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        seq = q.shape[1]
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    return p / p.sum(-1, keepdims=True)
+
+
+def _vjp_fwd(q, k, v, causal):
+    out = attention_fwd(q, k, v, causal=causal)
+    return out, (q, k, v)
+
+
+def _vjp_bwd(causal, res, g):
+    q, k, v = res
+    d = q.shape[-1]
+    p = _softmax_scores(q, k, causal)  # (bh, sq, sk), rematerialised
+    dv = jnp.einsum("bqk,bqd->bkd", p, g)
+    dp = jnp.einsum("bqd,bkd->bqk", g, v)
+    # softmax backward: ds = p * (dp - sum_k p*dp)
+    ds = p * (dp - (p * dp).sum(-1, keepdims=True))
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q) * scale
+    return dq, dk, dv
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_bytes(bh, seq, d, bq=None, bk=None):
+    """Estimated VMEM per grid step: Q tile + streamed K/V tiles + running
+    stats + output tile, f32."""
+    bq = bq or _tile(seq, 128)
+    bk = bk or _tile(seq, 128)
+    return 4 * (bq * d + 2 * bk * d + 2 * bq + 2 * bq * d + bq * bk)

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + GELU — the transformer MLP
+hot spot of the containerised CYBELE-pilot workload.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is
+(m/bm, n/bn, k/bk); each (i, j) output tile accumulates partial products
+over the k axis in a float32 VMEM scratch tile, feeding the MXU with
+(bm, bk) x (bk, bn) blocks. BlockSpec expresses the HBM->VMEM schedule.
+Default tiles are 128x128x128 when the operands allow (128 = MXU lane
+width); smaller operands fall back to the largest divisor tile.
+
+Executed with interpret=True — the CPU PJRT plugin cannot run Mosaic
+custom-calls — so on this testbed the kernel is a *structural* artifact
+whose numerics are validated against ref.matmul_gelu_ref.
+
+Autodiff: pallas_call has no VJP; matmul_gelu is wrapped in a custom_vjp
+whose backward uses the analytic formulas (plain XLA matmuls, which XLA
+fuses well — the forward is where the fusion win lives).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+#: Preferred tile edge — the MXU systolic array is 128x128.
+MXU_TILE = 128
+
+
+def _tile(dim: int, preferred: int = MXU_TILE) -> int:
+    """Largest divisor of `dim` that is <= preferred (>=1)."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk, activation):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        y = acc_ref[...] + b_ref[...]
+        if activation == "gelu":
+            o_ref[...] = ref.gelu(y)
+        else:
+            o_ref[...] = y
+
+
+def matmul_gelu_fwd(x, w, b, *, activation="gelu", bm=None, bn=None, bk=None):
+    """Forward pallas call: act(x @ w + b), f32 in/out."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (1, n), f"bias must be (1, {n}), got {b.shape}"
+    bm = bm or _tile(m)
+    bn = bn or _tile(n)
+    bk = bk or _tile(k)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk, activation=activation),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_gelu(x, w, b, activation="gelu"):
+    """Differentiable fused act(x @ w + b) with a Pallas forward."""
+    return matmul_gelu_fwd(x, w, b, activation=activation)
+
+
+def _vjp_fwd(x, w, b, activation):
+    out = matmul_gelu_fwd(x, w, b, activation=activation)
+    return out, (x, w, b)
+
+
+def _vjp_bwd(activation, res, g):
+    x, w, b = res
+    if activation == "gelu":
+        y = x @ w + b  # pre-activation (recomputed: rematerialisation)
+        g = g * ref.d_gelu(y)
+    dx = g @ w.T
+    dw = x.T @ g
+    db = g.sum(axis=0, keepdims=True)
+    return dx, dw, db
+
+
+matmul_gelu.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_bytes(m, n, k, bm=None, bn=None, bk=None):
+    """Estimated VMEM footprint of one grid step (bytes): x, w, bias, out
+    and accumulator tiles, all f32. Used by aot.py --report and DESIGN.md
+    roofline estimates."""
+    bm = bm or _tile(m)
+    bn = bn or _tile(n)
+    bk = bk or _tile(k)
+    return 4 * (bm * bk + bk * bn + bn + 2 * bm * bn)
+
+
+def mxu_utilization_estimate(m, n, k, bm=None, bn=None, bk=None):
+    """Fraction of MXU-issue slots doing useful work per grid step,
+    assuming the 128x128 systolic array: a (bm,bk)x(bk,bn) block keeps
+    min(bm,128)*min(bn,128)/128^2 of the array busy."""
+    bm = bm or _tile(m)
+    bn = bn or _tile(n)
+    return (min(bm, MXU_TILE) * min(bn, MXU_TILE)) / float(MXU_TILE * MXU_TILE)

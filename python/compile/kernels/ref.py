@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package must match its oracle to float32 tolerance;
+python/tests/test_kernel.py sweeps shapes with hypothesis against these.
+"""
+
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def gelu(y):
+    """tanh-approximation GELU (what the fused kernel applies)."""
+    return 0.5 * y * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (y + 0.044715 * y**3)))
+
+
+def d_gelu(y):
+    """Derivative of the tanh-approximation GELU wrt its input."""
+    inner = SQRT_2_OVER_PI * (y + 0.044715 * y**3)
+    t = jnp.tanh(inner)
+    dinner = SQRT_2_OVER_PI * (1.0 + 3 * 0.044715 * y**2)
+    return 0.5 * (1.0 + t) + 0.5 * y * (1.0 - t**2) * dinner
+
+
+def matmul_gelu_ref(x, w, b, activation="gelu"):
+    """Reference for kernels.matmul_gelu: act(x @ w + b).
+
+    x: (m, k) float32, w: (k, n) float32, b: (1, n) float32.
+    """
+    y = x @ w + b
+    if activation == "gelu":
+        return gelu(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def attention_ref(q, k, v, causal=False):
+    """Reference for kernels.attention: softmax(q k^T / sqrt(d)) v.
+
+    q, k, v: (bh, seq, d) float32.
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        seq = q.shape[1]
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

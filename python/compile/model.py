@@ -1,0 +1,214 @@
+"""L2: the crop-yield forecasting transformer (the CYBELE-pilot stand-in).
+
+The paper's testbed serves the EU CYBELE project (precision agriculture);
+its pilots are the intended benchmarks (§V). As the substitution, the
+containerised HPC jobs train/serve this model: a small encoder transformer
+regressing crop yield from a season of synthetic weather/soil observations.
+
+Shape: x (batch, seq, features) -> dense embed -> L x [pre-LN attention
+(Pallas kernel) + pre-LN MLP (Pallas fused matmul+GELU)] -> mean-pool ->
+linear head -> yhat (batch,).
+
+Ground truth comes from a frozen random *teacher* network, so the loss has
+real signal and the e2e example's loss curve demonstrably decreases.
+
+Everything here runs at BUILD TIME only: aot.py lowers `init_fn`,
+`train_step_fn` and `infer_fn` to HLO text executed from Rust via PJRT.
+The train step generates its own batch from the step index, so the Rust
+hot path passes only (params..., step).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.matmul_gelu import matmul_gelu
+from .kernels import ref
+
+CONFIGS = {
+    # name: (d_model, n_heads, n_layers, d_ff, seq, features, batch, lr)
+    "tiny": dict(d_model=64, n_heads=4, n_layers=2, d_ff=128, seq=16, features=8, batch=16, lr=3e-2),
+    "small": dict(d_model=128, n_heads=8, n_layers=2, d_ff=256, seq=16, features=8, batch=32, lr=2e-2),
+    # 'base' approaches real pilot scale; exported with aot.py --full.
+    "base": dict(d_model=512, n_heads=8, n_layers=8, d_ff=2048, seq=32, features=8, batch=32, lr=1e-2),
+}
+
+
+# ------------------------------------------------------------------ params
+
+def init_params(key, cfg):
+    """Initialise parameters as a flat list of arrays (PJRT-friendly)."""
+    d, ff, layers = cfg["d_model"], cfg["d_ff"], cfg["n_layers"]
+    feats = cfg["features"]
+    keys = jax.random.split(key, 4 + layers * 8)
+    scale = lambda fan_in: 1.0 / jnp.sqrt(jnp.float32(fan_in))
+    params = [
+        jax.random.normal(keys[0], (feats, d)) * scale(feats),  # embed w
+        jnp.zeros((1, d)),                                      # embed b
+    ]
+    ki = 4
+    for _ in range(layers):
+        params += [
+            jax.random.normal(keys[ki], (d, 3 * d)) * scale(d),   # qkv
+            jnp.zeros((1, 3 * d)),
+            jax.random.normal(keys[ki + 1], (d, d)) * scale(d),   # attn out
+            jnp.zeros((1, d)),
+            jax.random.normal(keys[ki + 2], (d, ff)) * scale(d),  # mlp in
+            jnp.zeros((1, ff)),
+            jax.random.normal(keys[ki + 3], (ff, d)) * scale(ff), # mlp out
+            jnp.zeros((1, d)),
+        ]
+        ki += 4
+    params += [
+        jax.random.normal(keys[1], (d, 1)) * scale(d),  # head w
+        jnp.zeros((1, 1)),                              # head b
+    ]
+    return params
+
+
+def n_layer_params():
+    return 8
+
+
+# ----------------------------------------------------------------- forward
+
+def _layernorm(x):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6)
+
+
+def forward(params, x, cfg):
+    """x: (batch, seq, features) f32 -> yhat (batch,) f32."""
+    d, heads, layers = cfg["d_model"], cfg["n_heads"], cfg["n_layers"]
+    b, s, _ = x.shape
+    hd = d // heads
+    embed_w, embed_b = params[0], params[1]
+    # Embedding projection via the fused kernel (no activation).
+    h = matmul_gelu(x.reshape(b * s, -1), embed_w, embed_b, "none").reshape(b, s, d)
+    idx = 2
+    for _ in range(layers):
+        qkv_w, qkv_b, out_w, out_b, in_w, in_b, dn_w, dn_b = params[idx : idx + 8]
+        idx += 8
+        # --- attention block (pre-LN, residual) ---
+        hn = _layernorm(h)
+        qkv = matmul_gelu(hn.reshape(b * s, d), qkv_w, qkv_b, "none")
+        qkv = qkv.reshape(b, s, 3, heads, hd)
+        # (b, s, 3, H, hd) -> three (b*H, s, hd)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        att = attention(q, k, v, False)  # Pallas online-softmax kernel
+        att = att.reshape(b, heads, s, hd).transpose(0, 2, 1, 3).reshape(b * s, d)
+        h = h + matmul_gelu(att, out_w, out_b, "none").reshape(b, s, d)
+        # --- MLP block (pre-LN, residual); fused matmul+GELU kernel ---
+        hn = _layernorm(h).reshape(b * s, d)
+        mid = matmul_gelu(hn, in_w, in_b, "gelu")
+        h = h + matmul_gelu(mid, dn_w, dn_b, "none").reshape(b, s, d)
+    pooled = _layernorm(h).mean(axis=1)  # (b, d)
+    head_w, head_b = params[-2], params[-1]
+    yhat = pooled @ head_w + head_b
+    return yhat[:, 0]
+
+
+def forward_ref(params, x, cfg):
+    """Same network with pure-jnp oracles instead of Pallas kernels —
+    the L2 correctness ground truth used by python/tests."""
+    d, heads, layers = cfg["d_model"], cfg["n_heads"], cfg["n_layers"]
+    b, s, _ = x.shape
+    hd = d // heads
+    h = ref.matmul_gelu_ref(x.reshape(b * s, -1), params[0], params[1], "none").reshape(b, s, d)
+    idx = 2
+    for _ in range(layers):
+        qkv_w, qkv_b, out_w, out_b, in_w, in_b, dn_w, dn_b = params[idx : idx + 8]
+        idx += 8
+        hn = _layernorm(h)
+        qkv = ref.matmul_gelu_ref(hn.reshape(b * s, d), qkv_w, qkv_b, "none")
+        qkv = qkv.reshape(b, s, 3, heads, hd)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        att = ref.attention_ref(q, k, v)
+        att = att.reshape(b, heads, s, hd).transpose(0, 2, 1, 3).reshape(b * s, d)
+        h = h + ref.matmul_gelu_ref(att, out_w, out_b, "none").reshape(b, s, d)
+        hn = _layernorm(h).reshape(b * s, d)
+        mid = ref.matmul_gelu_ref(hn, in_w, in_b, "gelu")
+        h = h + ref.matmul_gelu_ref(mid, dn_w, dn_b, "none").reshape(b, s, d)
+    pooled = _layernorm(h).mean(axis=1)
+    return (pooled @ params[-2] + params[-1])[:, 0]
+
+
+# ------------------------------------------------------------ teacher data
+
+def synth_batch(step, cfg, seed=0):
+    """Deterministic synthetic 'season of observations' batch.
+
+    y comes from a frozen random teacher MLP over pooled features, so the
+    regression problem is learnable and the loss curve is meaningful.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    b, s, f = cfg["batch"], cfg["seq"], cfg["features"]
+    x = jax.random.normal(key, (b, s, f))
+    tkey = jax.random.PRNGKey(7)  # frozen teacher
+    t1 = jax.random.normal(tkey, (f, 16)) / jnp.sqrt(jnp.float32(f))
+    t2 = jax.random.normal(jax.random.fold_in(tkey, 1), (16, 1)) / 4.0
+    pooled = x.mean(axis=1)
+    y = (jnp.tanh(pooled @ t1) @ t2)[:, 0]
+    return x, y
+
+
+# ------------------------------------------------------- exported programs
+
+def loss_fn(params, x, y, cfg):
+    yhat = forward(params, x, cfg)
+    return jnp.mean((yhat - y) ** 2)
+
+
+def make_init_fn(cfg):
+    def init_fn(seed):
+        return tuple(init_params(jax.random.PRNGKey(seed), cfg))
+
+    return init_fn
+
+
+def make_train_step_fn(cfg):
+    lr = cfg["lr"]
+
+    def train_step(step, *params):
+        params = list(params)
+        x, y = synth_batch(step, cfg)
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss,)
+
+    return train_step
+
+
+def make_infer_fn(cfg):
+    def infer(step, *params):
+        params = list(params)
+        x, y = synth_batch(step, cfg, seed=1)  # held-out stream
+        yhat = forward(params, x, cfg)
+        mse = jnp.mean((yhat - y) ** 2)
+        return (yhat, mse)
+
+    return infer
+
+
+def param_specs(cfg):
+    """ShapeDtypeStructs of the flat parameter list."""
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+
+def flops_per_step(cfg):
+    """Rough forward+backward FLOP count per train step (for DESIGN.md
+    roofline estimates)."""
+    d, ff, layers = cfg["d_model"], cfg["d_ff"], cfg["n_layers"]
+    b, s, f = cfg["batch"], cfg["seq"], cfg["features"]
+    tokens = b * s
+    per_layer = 2 * tokens * (d * 3 * d + d * d + d * ff + ff * d) + 2 * b * s * s * d
+    fwd = 2 * tokens * f * d + layers * per_layer + 2 * b * d
+    return 3 * fwd  # fwd + ~2x bwd

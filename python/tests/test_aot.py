@@ -1,0 +1,74 @@
+"""AOT path: manifest consistency and HLO-text round-trip.
+
+The round-trip check re-parses the emitted HLO text with the same
+xla_client that produced it — guarding the interchange contract the Rust
+loader (`HloModuleProto::from_text_file`) depends on.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_structure():
+    m = manifest()
+    assert m["formatVersion"] == 1
+    arts = m["artifacts"]
+    for variant in ("tiny", "small"):
+        for role in ("init", "train", "infer"):
+            assert f"cropyield_{role}_{variant}" in arts, f"missing {role}_{variant}"
+    train = arts["cropyield_train_tiny"]
+    # (step, params...) -> (params..., loss)
+    assert len(train["inputs"]) == train["paramCount"] + 1
+    assert len(train["outputs"]) == train["paramCount"] + 1
+    assert train["outputs"][-1] == {"shape": [], "dtype": "float32"}
+    assert train["metricOutputIndex"] == train["paramCount"]
+    init = arts["cropyield_init_tiny"]
+    # init outputs == train param inputs
+    assert init["outputs"] == train["inputs"][1:]
+
+
+def test_artifact_files_exist_and_are_hlo_text():
+    m = manifest()
+    for name, entry in m["artifacts"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), f"{name}: {path} missing"
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} does not look like HLO text"
+
+
+def test_hlo_text_roundtrips_through_parser():
+    """The text we write must parse back to an XlaComputation — the same
+    contract the rust `xla` crate's from_text_file relies on."""
+    spec = jax.ShapeDtypeStruct((), jnp.int32)
+    cfg = model.CONFIGS["tiny"]
+    pspecs = model.param_specs(cfg)
+    lowered = jax.jit(model.make_infer_fn(cfg)).lower(spec, *pspecs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_report_mode():
+    rep = aot.report(["tiny"])
+    assert rep["tiny"]["mlp_kernel"]["vmem_bytes"] > 0
+    assert 0 < rep["tiny"]["mlp_kernel"]["mxu_utilization"] <= 1.0
+    assert rep["tiny"]["flops_per_train_step"] > 1e6

@@ -1,0 +1,42 @@
+//! E5 — container runtime overhead: Singularity's user-privilege,
+//! daemonless start vs the Docker daemon model vs a bare process — the
+//! quantitative version of the paper's §III argument for Singularity.
+
+use hpcorc::bench::{header, Bench};
+use hpcorc::cluster::{Metrics, SharedFs};
+use hpcorc::singularity::{
+    CancelToken, ContainerSpec, Cri, ImageRegistry, RunRequest, Runtime, RuntimeKind,
+    SingularityCri,
+};
+use std::time::Duration;
+
+fn main() {
+    println!("=== E5: container runtime start/run overhead ===");
+    println!("{}", header());
+    let fs = SharedFs::new();
+    for kind in [RuntimeKind::Native, RuntimeKind::Singularity, RuntimeKind::DockerSim] {
+        let rt = Runtime::new(kind, ImageRegistry::with_defaults(), Metrics::new());
+        let req = RunRequest::new("lolcow_latest.sif");
+        Bench::new(format!("{:<12} run echo container", kind.as_str()))
+            .warmup(10)
+            .iters(200)
+            .run(|| {
+                let res = rt.run(&req, &fs, &CancelToken::new()).unwrap();
+                assert!(res.success());
+            });
+    }
+
+    // Through the CRI (what the kubelet pays per pod).
+    let rt = Runtime::new(RuntimeKind::Singularity, ImageRegistry::with_defaults(), Metrics::new());
+    let cri = SingularityCri::new(rt);
+    Bench::new("singularity-cri start+wait+remove").warmup(5).iters(100).run(|| {
+        let id = cri
+            .start(ContainerSpec::new("b", "lolcow_latest.sif"), fs.clone())
+            .unwrap();
+        cri.wait(id, Duration::from_secs(10)).unwrap();
+        cri.remove(id).unwrap();
+    });
+
+    println!("\nshape: native < singularity << docker-sim (daemon round-trip + root setup);");
+    println!("ratios mirror the real runtimes' published start costs (see DESIGN.md).");
+}

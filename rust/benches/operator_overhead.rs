@@ -1,0 +1,85 @@
+//! E2 — per-job overhead added by the Torque-Operator path vs native qsub,
+//! with the component breakdown (apiserver, kube-scheduler bind, red-box
+//! submit, status-poll observation lag).
+
+use hpcorc::bench::{fmt_ns, header, Bench};
+use hpcorc::encoding::Value;
+use hpcorc::hybrid::{Testbed, TestbedConfig};
+use hpcorc::kube::{WlmJobView, KIND_POD, KIND_TORQUEJOB};
+use hpcorc::redbox::RedboxClient;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn main() {
+    println!("=== E2: operator overhead (TorqueJob-via-operator vs direct qsub) ===");
+    println!("{}", header());
+    let tb = Testbed::start(TestbedConfig::default()).expect("boot");
+
+    // Use an instant job body so orchestration dominates.
+    let script = |n: u64| format!("#PBS -N o{n}\necho x\n");
+
+    let direct = Bench::new("direct qsub -> completed").warmup(5).iters(60).run(|| {
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let id = tb.pbs.qsub(&script(n), "bench").unwrap();
+        tb.pbs.wait_for(id.seq, Duration::from_secs(30)).unwrap();
+    });
+
+    let operator = Bench::new("torquejob via operator -> completed").warmup(5).iters(60).run(|| {
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = format!("op-{n}");
+        tb.api
+            .create(WlmJobView::build_torquejob(&name, &script(n), "", ""))
+            .unwrap();
+        tb.wait_torquejob(&name, Duration::from_secs(30)).unwrap();
+    });
+
+    println!(
+        "\noperator overhead (mean): {} per job",
+        fmt_ns(operator.mean_ns - direct.mean_ns)
+    );
+
+    // Component breakdown on one instrumented job.
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let name = format!("trace-{n}");
+    let t0 = Instant::now();
+    tb.api
+        .create(WlmJobView::build_torquejob(&name, &script(n), "", ""))
+        .unwrap();
+    let t_created = t0.elapsed();
+    // wait for dummy pod bind
+    let t_bound = loop {
+        if let Ok(pod) = tb.api.get(KIND_POD, &format!("{name}-submit")) {
+            if pod.spec.opt_str("nodeName").is_some() {
+                break t0.elapsed();
+            }
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    };
+    let t_submitted = loop {
+        let o = tb.api.get(KIND_TORQUEJOB, &name).unwrap();
+        if o.status.opt_str("jobId").is_some() {
+            break t0.elapsed();
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    };
+    tb.wait_torquejob(&name, Duration::from_secs(30)).unwrap();
+    let t_done = t0.elapsed();
+    println!("\nbreakdown of one operator job:");
+    println!("  api create            {:>10}", fmt_ns(t_created.as_nanos() as f64));
+    println!("  dummy pod bound       {:>10}", fmt_ns(t_bound.as_nanos() as f64));
+    println!("  qsub via red-box      {:>10}", fmt_ns(t_submitted.as_nanos() as f64));
+    println!("  completed observed    {:>10}", fmt_ns(t_done.as_nanos() as f64));
+
+    // Raw red-box hop for reference (the socket cost itself).
+    let client = RedboxClient::connect(tb.socket()).unwrap();
+    Bench::new("red-box JobStatus round trip").warmup(10).iters(200).run(|| {
+        let _ = client.call(
+            "torque.Workload/JobStatus",
+            Value::map().with("jobId", "1.torque-head"),
+        );
+    });
+
+    tb.stop();
+}

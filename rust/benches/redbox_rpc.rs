@@ -1,0 +1,67 @@
+//! E6 — red-box Unix-socket RPC: latency and throughput of the bridge
+//! every operator action crosses (paper §II/III-B).
+
+use hpcorc::bench::{header, Bench};
+use hpcorc::cluster::Metrics;
+use hpcorc::encoding::Value;
+use hpcorc::redbox::{FnService, RedboxClient, RedboxServer};
+use hpcorc::rt::Shutdown;
+use std::sync::Arc;
+
+fn main() {
+    println!("=== E6: red-box RPC over the Unix socket ===");
+    println!("{}", header());
+    let sd = Shutdown::new();
+    let path = std::env::temp_dir().join(format!("hpcorc-bench-rb-{}.sock", std::process::id()));
+    let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+    srv.register(
+        "bench.Echo",
+        Arc::new(FnService(|_: &str, body: &Value| Ok(body.clone()))),
+    );
+
+    let client = RedboxClient::connect(&path).unwrap();
+    let small = Value::map().with("jobId", "42.torque-head");
+    Bench::new("echo small payload (1 conn)").warmup(200).iters(5000).run(|| {
+        client.call("bench.Echo/Run", small.clone()).unwrap();
+    });
+
+    // PBS-script-sized payload (the SubmitJob case).
+    let script: String = hpcorc::kube::yaml::COW_JOB_YAML.repeat(4);
+    let large = Value::map().with("script", script);
+    Bench::new("echo 4KiB payload (1 conn)").warmup(100).iters(2000).run(|| {
+        client.call("bench.Echo/Run", large.clone()).unwrap();
+    });
+
+    // Concurrent clients: aggregate throughput.
+    for n_clients in [2usize, 8] {
+        let per_client = 2000usize;
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|_| {
+                let p = path.clone();
+                std::thread::spawn(move || {
+                    let c = RedboxClient::connect(&p).unwrap();
+                    let body = Value::map().with("jobId", "1.torque-head");
+                    for _ in 0..2000 {
+                        c.call("bench.Echo/Run", body.clone()).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        let total = n_clients * per_client;
+        println!(
+            "{:<44} {:>10.0} req/s ({} clients, {} reqs, {:.2}s)",
+            format!("concurrent throughput x{n_clients}"),
+            total as f64 / wall.as_secs_f64(),
+            n_clients,
+            total,
+            wall.as_secs_f64()
+        );
+    }
+    srv.stop();
+    sd.trigger();
+}

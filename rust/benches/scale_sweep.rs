@@ -1,0 +1,74 @@
+//! E3 — scalability: jobs × nodes sweep on the simulator, reporting both
+//! the scheduling outcomes and the simulator's own throughput (events/s),
+//! plus live-testbed job throughput at increasing concurrency.
+
+use hpcorc::hybrid::{Testbed, TestbedConfig};
+use hpcorc::kube::WlmJobView;
+use hpcorc::sched::EasyBackfill;
+use hpcorc::sim::{simulate, SimParams};
+use hpcorc::workload::TraceGen;
+use std::time::{Duration, Instant};
+
+fn main() {
+    println!("=== E3: scale sweep ===\n");
+    println!("--- sim: jobs x nodes (easy-backfill) ---");
+    println!(
+        "{:<8} {:<8} {:>12} {:>12} {:>12} {:>14}",
+        "jobs", "nodes", "makespan", "mean wait", "util", "sim wallclock"
+    );
+    for &jobs in &[256usize, 1024, 4096] {
+        for &nodes in &[16usize, 64, 256] {
+            let cores = 8u32;
+            let trace = TraceGen::new(7).poisson_batch(
+                jobs,
+                nodes as u32 * cores,
+                0.9,
+                180.0,
+            );
+            let params = SimParams { nodes, cores_per_node: cores, ..SimParams::default() };
+            let t0 = Instant::now();
+            let r = simulate(&trace, &params, &EasyBackfill);
+            let wall = t0.elapsed();
+            println!(
+                "{:<8} {:<8} {:>11.0}s {:>11.1}s {:>11.1}% {:>13.1}ms",
+                jobs,
+                nodes,
+                r.makespan_s,
+                r.mean_wait_s,
+                r.utilization * 100.0,
+                wall.as_secs_f64() * 1e3
+            );
+        }
+    }
+
+    println!("\n--- live testbed: concurrent TorqueJobs -> throughput ---");
+    println!("{:>6} {:>12} {:>12}", "jobs", "wall", "jobs/s");
+    for &n in &[8usize, 32, 64] {
+        let mut cfg = TestbedConfig::default();
+        cfg.torque_nodes = 8;
+        let tb = Testbed::start(cfg).expect("boot");
+        let t0 = Instant::now();
+        for i in 0..n {
+            let name = format!("s{i}");
+            tb.api
+                .create(WlmJobView::build_torquejob(
+                    &name,
+                    &format!("#PBS -N {name}\necho x\n"),
+                    "",
+                    "",
+                ))
+                .unwrap();
+        }
+        for i in 0..n {
+            tb.wait_torquejob(&format!("s{i}"), Duration::from_secs(120)).unwrap();
+        }
+        let wall = t0.elapsed();
+        println!(
+            "{:>6} {:>11.2}s {:>12.1}",
+            n,
+            wall.as_secs_f64(),
+            n as f64 / wall.as_secs_f64()
+        );
+        tb.stop();
+    }
+}

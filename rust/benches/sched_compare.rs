@@ -1,0 +1,62 @@
+//! E1 — the paper's promised evaluation (§V): scheduling efficiency of
+//! container jobs under Kubernetes vs Torque disciplines, plus the hybrid
+//! operator path, across workload families and load levels.
+//!
+//! Regenerates the full table the paper's future work describes; shapes to
+//! check are summarised at the end (and recorded in EXPERIMENTS.md §E1).
+
+use hpcorc::sched::{EasyBackfill, FifoPolicy, KubeGreedyPolicy, SchedPolicy};
+use hpcorc::sim::{simulate, OperatorModel, SimParams};
+use hpcorc::workload::TraceGen;
+
+fn main() {
+    println!("=== E1: K8s vs Torque scheduling efficiency (discrete-event sim, live policy code) ===\n");
+    let params = SimParams { nodes: 16, cores_per_node: 8, ..SimParams::default() };
+    let policies: Vec<Box<dyn SchedPolicy>> =
+        vec![Box::new(FifoPolicy), Box::new(EasyBackfill), Box::new(KubeGreedyPolicy)];
+
+    // Load sweep on the batch workload — where backfill pays.
+    for load in [0.7, 0.9, 1.1] {
+        let trace = TraceGen::new(11).poisson_batch(1500, 128, load, 180.0);
+        println!("--- poisson batch, offered load {load} ({} jobs) ---", trace.len());
+        for p in &policies {
+            println!("  {}", simulate(&trace, &params, p.as_ref()).row());
+        }
+        let hybrid = SimParams {
+            operator: OperatorModel { submit_delay_s: 0.5, poll_s: 0.25 },
+            ..params.clone()
+        };
+        let mut r = simulate(&trace, &hybrid, &EasyBackfill);
+        r.policy = "hybrid-op".into();
+        println!("  {}", r.row());
+        println!();
+    }
+
+    // Wide/narrow mix where FIFO head-blocks.
+    let trace = TraceGen::new(12).backfill_showcase(30, 16);
+    println!("--- backfill showcase ({} jobs) ---", trace.len());
+    for p in &policies {
+        println!("  {}", simulate(&trace, &params, p.as_ref()).row());
+    }
+    println!();
+
+    // Service churn — K8s home turf.
+    let trace = TraceGen::new(13).bursty(50, 30, 30.0);
+    println!("--- bursty service churn ({} jobs) ---", trace.len());
+    for p in &policies {
+        println!("  {}", simulate(&trace, &params, p.as_ref()).row());
+    }
+    println!();
+
+    // CYBELE pilot mix (the paper's named benchmark plan).
+    let trace = TraceGen::new(14).cybele_pilots(40, 400, 4000.0);
+    println!("--- cybele pilots ({} jobs) ---", trace.len());
+    for p in &policies {
+        println!("  {}", simulate(&trace, &params, p.as_ref()).row());
+    }
+
+    println!("\nshapes (expected / recorded in EXPERIMENTS.md §E1):");
+    println!("  * batch @ load>=0.9: easy-backfill < fifo makespan, higher util");
+    println!("  * kube-greedy: competitive mean wait, worst max-wait on wide jobs (starvation)");
+    println!("  * hybrid-op ≈ easy-backfill + sub-second deltas (operator overhead, E2)");
+}

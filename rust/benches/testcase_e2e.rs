@@ -1,0 +1,47 @@
+//! E8 — end-to-end latency of the paper's test case (Figs. 3-5):
+//! TorqueJob submit → dummy pod → qsub → run → results staged → completed.
+
+use hpcorc::bench::{header, Bench};
+use hpcorc::hybrid::{Testbed, TestbedConfig};
+use hpcorc::kube::WlmJobView;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+fn main() {
+    println!("=== E8: Fig.3-5 test-case end-to-end latency ===");
+    println!("{}", header());
+    let tb = Testbed::start(TestbedConfig::default()).expect("boot");
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    // Full flow with the echo (lolcow) payload — measures pure orchestration.
+    Bench::new("torquejob e2e (echo payload)").warmup(3).iters(40).run(|| {
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = format!("bench-{n}");
+        let obj = WlmJobView::build_torquejob(
+            &name,
+            &format!("#PBS -N {name}\n#PBS -o $HOME/{name}.out\nsingularity run lolcow_latest.sif\n"),
+            &format!("$HOME/{name}.out"),
+            "$HOME/bench/",
+        );
+        tb.api.create(obj).unwrap();
+        let phase = tb.wait_torquejob(&name, Duration::from_secs(30)).unwrap();
+        assert_eq!(phase, "completed");
+    });
+
+    // Direct qsub of the same script: the WLM-only baseline (the operator
+    // overhead is the difference; see operator_overhead for the controlled
+    // per-component breakdown).
+    Bench::new("direct qsub (same script)").warmup(3).iters(40).run(|| {
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let id = tb
+            .pbs
+            .qsub(
+                &format!("#PBS -N d{n}\n#PBS -o $HOME/d{n}.out\nsingularity run lolcow_latest.sif\n"),
+                "bench",
+            )
+            .unwrap();
+        tb.pbs.wait_for(id.seq, Duration::from_secs(30)).unwrap();
+    });
+
+    tb.stop();
+}

@@ -1,0 +1,161 @@
+//! Bench harness (criterion substitute — the offline registry has none).
+//!
+//! Measures a closure over warmup + timed iterations and prints
+//! criterion-style rows. `cargo bench` binaries use `harness = false` and
+//! call [`Bench`] directly. All benches print the table/figure they
+//! regenerate (EXPERIMENTS.md cross-references these tags).
+
+use crate::util::Hist;
+use std::time::Instant;
+
+/// One benchmark case.
+pub struct Bench {
+    name: String,
+    warmup: u32,
+    iters: u32,
+}
+
+/// Result statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Stats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}   n={}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns as f64),
+            fmt_ns(self.p95_ns as f64),
+            fmt_ns(self.max_ns as f64),
+            self.iters
+        )
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p95", "max"
+    )
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench { name: name.into(), warmup: 3, iters: 30 }
+    }
+
+    pub fn warmup(mut self, n: u32) -> Bench {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: u32) -> Bench {
+        self.iters = n;
+        self
+    }
+
+    /// Run and return stats; prints the row.
+    pub fn run<F: FnMut()>(self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut hist = Hist::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            hist.record(t0.elapsed().as_nanos() as u64);
+        }
+        let stats = Stats {
+            name: self.name,
+            iters: self.iters,
+            mean_ns: hist.mean(),
+            p50_ns: hist.p50(),
+            p95_ns: hist.p95(),
+            p99_ns: hist.p99(),
+            min_ns: hist.min(),
+            max_ns: hist.max(),
+        };
+        println!("{}", stats.row());
+        stats
+    }
+
+    /// Run a batched workload: `f(batch)` processes `batch` items per call;
+    /// reports per-item latency + items/sec.
+    pub fn run_throughput<F: FnMut(u32)>(self, batch: u32, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f(batch);
+        }
+        let mut hist = Hist::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f(batch);
+            hist.record((t0.elapsed().as_nanos() as u64) / batch.max(1) as u64);
+        }
+        let stats = Stats {
+            name: self.name,
+            iters: self.iters * batch,
+            mean_ns: hist.mean(),
+            p50_ns: hist.p50(),
+            p95_ns: hist.p95(),
+            p99_ns: hist.p99(),
+            min_ns: hist.min(),
+            max_ns: hist.max(),
+        };
+        println!("{}  ({:.0} items/s)", stats.row(), stats.per_sec());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let stats = Bench::new("spin").warmup(1).iters(5).run(|| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(stats.iters, 5);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.min_ns <= stats.max_ns);
+        assert!(stats.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.00s");
+    }
+}

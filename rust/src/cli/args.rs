@@ -1,0 +1,116 @@
+//! Minimal argv parser: positionals + `--flag[=| ]value` + boolean flags.
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+
+pub struct Args {
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (program name already stripped). Flags may appear
+    /// anywhere; `--k v`, `--k=v`, and bare `--k` are accepted.
+    pub fn new(argv: Vec<String>) -> Args {
+        let mut positionals = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    bools.push(name.to_string());
+                }
+            } else if a == "-f" || a == "-o" {
+                // kubectl-isms
+                if i + 1 < argv.len() {
+                    flags.insert(a.trim_start_matches('-').to_string(), argv[i + 1].clone());
+                    i += 1;
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positionals, flags, bools }
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn req_positional(&self, i: usize, what: &str) -> Result<&str> {
+        self.positional(i)
+            .ok_or_else(|| Error::config(format!("missing argument: {what}")))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req_flag(&self, name: &str) -> Result<&str> {
+        self.flag(name).ok_or_else(|| Error::config(format!("missing --{name}")))
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flag(name) {
+            Some(v) => {
+                v.parse().map_err(|_| Error::config(format!("bad value for --{name}: `{v}`")))
+            }
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::new(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = args("kubectl get torquejob --socket /tmp/x.sock -o yaml");
+        assert_eq!(a.positional(0), Some("kubectl"));
+        assert_eq!(a.positional(1), Some("get"));
+        assert_eq!(a.positional(2), Some("torquejob"));
+        assert_eq!(a.flag("socket"), Some("/tmp/x.sock"));
+        assert_eq!(a.flag("o"), Some("yaml"));
+        assert!(a.positional(3).is_none());
+    }
+
+    #[test]
+    fn equals_and_bool_flags() {
+        let a = args("sim --policy=easy --nodes 16 --verbose");
+        assert_eq!(a.flag("policy"), Some("easy"));
+        assert_eq!(a.num::<u32>("nodes", 0).unwrap(), 16);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+        assert_eq!(a.num::<u32>("missing", 7).unwrap(), 7);
+        assert!(args("x --n abc").num::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn required_errors() {
+        let a = args("qsub");
+        assert!(a.req_positional(1, "script").is_err());
+        assert!(a.req_flag("socket").is_err());
+    }
+}

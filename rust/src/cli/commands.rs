@@ -1,0 +1,352 @@
+//! Command implementations.
+
+use super::args::Args;
+use crate::encoding::Value;
+use crate::hybrid::{Testbed, TestbedConfig};
+use crate::kube::{KubeObject, RemoteApi, KIND_TORQUEJOB};
+use crate::redbox::RedboxClient;
+use crate::sched::{EasyBackfill, FifoPolicy, KubeGreedyPolicy, SchedPolicy};
+use crate::sim::{simulate, SimParams};
+use crate::util::{fmt_age, Error, Result};
+use crate::workload::{Trace, TraceGen};
+use std::time::Duration;
+
+pub const USAGE: &str = "\
+hpcorc — Container Orchestration on HPC Systems (Torque-Operator reproduction)
+
+USAGE: hpcorc <command> [args]
+
+Testbed:
+  up        [--nodes N] [--cores C] [--workers W] [--slurm] [--artifacts DIR]
+            [--time-scale S] [--socket PATH] [--run-for SECS]
+            boot the hybrid testbed (Fig. 1) and serve until stopped
+  demo      run the paper's Fig. 3-5 test case end to end and print it
+
+Kubernetes surface (against a running testbed):
+  kubectl apply -f FILE --socket PATH
+  kubectl get KIND [NAME] [--socket PATH] [-o yaml|json]
+  kubectl delete KIND NAME --socket PATH
+  kubectl logs POD --socket PATH
+
+Torque surface (against a running testbed):
+  qsub FILE --socket PATH        submit a PBS script
+  qstat JOBID --socket PATH      show WLM job status
+  qdel JOBID --socket PATH       cancel
+
+Workload tooling:
+  trace gen --kind poisson|bursty|cybele|showcase [--jobs N] [--seed S]
+            [--out FILE]
+  sim --trace FILE|--kind K --policy fifo|easy|kube [--nodes N] [--cores C]
+            run the discrete-event simulator, print the report row
+  sing list                      list built-in container images
+  version [--components]         versions (Table I inventory)
+";
+
+fn policy_by_name(name: &str) -> Result<Box<dyn SchedPolicy>> {
+    Ok(match name {
+        "fifo" => Box::new(FifoPolicy),
+        "easy" | "backfill" => Box::new(EasyBackfill),
+        "kube" | "greedy" => Box::new(KubeGreedyPolicy),
+        other => return Err(Error::config(format!("unknown policy `{other}`"))),
+    })
+}
+
+fn testbed_config(args: &Args) -> Result<TestbedConfig> {
+    let mut cfg = TestbedConfig::default();
+    cfg.torque_nodes = args.num("nodes", cfg.torque_nodes)?;
+    cfg.torque_cores = args.num("cores", cfg.torque_cores)?;
+    cfg.kube_workers = args.num("workers", cfg.kube_workers)?;
+    cfg.with_slurm = args.bool("slurm");
+    cfg.time_scale = args.num("time-scale", cfg.time_scale)?;
+    cfg.operator_deployment = args.bool("operator-deployment");
+    if let Some(dir) = args.flag("artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(sock) = args.flag("socket") {
+        cfg.socket = Some(sock.into());
+    }
+    Ok(cfg)
+}
+
+pub fn cmd_up(args: &mut Args) -> Result<()> {
+    let cfg = testbed_config(args)?;
+    let run_for: f64 = args.num("run-for", 0.0)?;
+    let tb = Testbed::start(cfg)?;
+    println!("hpcorc testbed up");
+    println!("  red-box socket : {}", tb.socket().display());
+    println!("  torque         : server `{}`, queues {:?}", tb.pbs.server_name(), tb.pbs.queues().names());
+    println!("  kubernetes     : {} node objects", tb.api.list("Node", &[]).len());
+    if tb.slurm.is_some() {
+        println!("  slurm          : cluster `slurm` (WLM-Operator baseline)");
+    }
+    println!("  time scale     : {} (nominal->real)", tb.time_scale());
+    if run_for > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(run_for));
+    } else {
+        println!("running until killed (pass --run-for SECS to bound)");
+        tb.shutdown.wait();
+    }
+    for (k, v) in tb.metrics.snapshot() {
+        println!("  metric {k} = {v}");
+    }
+    tb.stop();
+    Ok(())
+}
+
+pub fn cmd_demo(args: &mut Args) -> Result<()> {
+    let mut cfg = testbed_config(args)?;
+    cfg.operator_deployment = true;
+    let tb = Testbed::start(cfg)?;
+    println!("$ kubectl apply -f cow_job.yaml");
+    tb.kubectl_apply(crate::kube::yaml::COW_JOB_YAML)?;
+    // Fig. 4: poll and print the status table on each phase change.
+    let mut last = String::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let obj = tb.api.get(KIND_TORQUEJOB, "cow")?;
+        let phase = obj.status.opt_str("phase").unwrap_or("").to_string();
+        if phase != last {
+            println!("\n$ kubectl get torquejob");
+            println!("{:<6} {:<5} {:<10}", "NAME", "AGE", "STATUS");
+            let age = fmt_age(Duration::from_secs_f64(
+                (tb.api.now_s() - obj.meta.creation_s).max(0.0),
+            ));
+            println!("{:<6} {:<5} {:<10}", "cow", age, phase);
+            last = phase.clone();
+        }
+        if crate::operator::phase::terminal(&phase) {
+            break;
+        }
+        if std::time::Instant::now() > deadline {
+            return Err(Error::wlm("demo timed out"));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    println!("\n$ cat $HOME/low.out        # staged by the results pod (Fig. 5)");
+    print!("{}", tb.fs.read_string("$HOME/low.out")?);
+    tb.stop();
+    Ok(())
+}
+
+fn remote(args: &Args) -> Result<RemoteApi> {
+    let sock = args.req_flag("socket")?;
+    Ok(RemoteApi::new(RedboxClient::connect(sock)?))
+}
+
+fn kind_by_alias(name: &str) -> String {
+    match name.to_ascii_lowercase().as_str() {
+        "pod" | "pods" | "po" => "Pod".into(),
+        "node" | "nodes" | "no" => "Node".into(),
+        "deployment" | "deployments" | "deploy" => "Deployment".into(),
+        "torquejob" | "torquejobs" | "tj" => "TorqueJob".into(),
+        "slurmjob" | "slurmjobs" | "sj" => "SlurmJob".into(),
+        other => other.to_string(),
+    }
+}
+
+pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
+    let sub = args.req_positional(1, "kubectl subcommand")?.to_string();
+    match sub.as_str() {
+        "apply" => {
+            let file = args.req_flag("f")?;
+            let text = std::fs::read_to_string(file)?;
+            let api = remote(args)?;
+            for obj in crate::kube::yaml::parse_manifest(&text)? {
+                let created = api.apply(&obj)?;
+                println!("{}/{} created", created.kind.to_lowercase(), created.meta.name);
+            }
+            Ok(())
+        }
+        "get" => {
+            let kind = kind_by_alias(args.req_positional(2, "kind")?);
+            let api = remote(args)?;
+            match args.positional(3) {
+                Some(name) => {
+                    let obj = api.get(&kind, name)?;
+                    print_object(&obj, args.flag("o"))
+                }
+                None => {
+                    let (now, items) = api.list(&kind)?;
+                    print_table(&kind, now, &items);
+                    Ok(())
+                }
+            }
+        }
+        "delete" => {
+            let kind = kind_by_alias(args.req_positional(2, "kind")?);
+            let name = args.req_positional(3, "name")?.to_string();
+            let api = remote(args)?;
+            api.delete(&kind, &name)?;
+            println!("{}/{} deleted", kind.to_lowercase(), name);
+            Ok(())
+        }
+        "logs" => {
+            let name = args.req_positional(2, "pod name")?.to_string();
+            let api = remote(args)?;
+            let obj = api.get("Pod", &name)?;
+            print!("{}", obj.status.opt_str("log").unwrap_or(""));
+            if let Some(err) = obj.status.opt_str("logErr") {
+                eprint!("{err}");
+            }
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown kubectl subcommand `{other}`"))),
+    }
+}
+
+fn print_object(obj: &KubeObject, output: Option<&str>) -> Result<()> {
+    match output.unwrap_or("yaml") {
+        "json" => println!("{}", crate::encoding::json::to_string_pretty(&obj.encode())),
+        _ => print!("{}", crate::kube::yaml::to_yaml(obj)),
+    }
+    Ok(())
+}
+
+/// The Fig. 4 table (NAME / AGE / STATUS), generalized per kind.
+fn print_table(kind: &str, server_now: f64, items: &[KubeObject]) {
+    match kind {
+        "Pod" => {
+            println!("{:<24} {:<6} {:<11} {:<14}", "NAME", "AGE", "STATUS", "NODE");
+            for o in items {
+                println!(
+                    "{:<24} {:<6} {:<11} {:<14}",
+                    o.meta.name,
+                    fmt_age(Duration::from_secs_f64((server_now - o.meta.creation_s).max(0.0))),
+                    o.status.opt_str("phase").unwrap_or("Pending"),
+                    o.spec.opt_str("nodeName").unwrap_or("<none>")
+                );
+            }
+        }
+        "Node" => {
+            println!("{:<20} {:<6} {:<9} {:<18}", "NAME", "AGE", "STATUS", "RUNTIME");
+            for o in items {
+                println!(
+                    "{:<20} {:<6} {:<9} {:<18}",
+                    o.meta.name,
+                    fmt_age(Duration::from_secs_f64((server_now - o.meta.creation_s).max(0.0))),
+                    o.status.opt_str("phase").unwrap_or(""),
+                    o.status.opt_str("runtime").unwrap_or("")
+                );
+            }
+        }
+        _ => {
+            println!("{:<16} {:<6} {:<12}", "NAME", "AGE", "STATUS");
+            for o in items {
+                println!(
+                    "{:<16} {:<6} {:<12}",
+                    o.meta.name,
+                    fmt_age(Duration::from_secs_f64((server_now - o.meta.creation_s).max(0.0))),
+                    o.status.opt_str("phase").unwrap_or("")
+                );
+            }
+        }
+    }
+}
+
+fn wlm_call(args: &Args, method: &str, body: Value) -> Result<Value> {
+    let sock = args.req_flag("socket")?;
+    let client = RedboxClient::connect(sock)?;
+    client.call(&format!("torque.Workload/{method}"), body)
+}
+
+pub fn cmd_qsub(args: &mut Args) -> Result<()> {
+    let file = args.req_positional(1, "script file")?;
+    let script = std::fs::read_to_string(file)?;
+    let out = wlm_call(
+        args,
+        "SubmitJob",
+        Value::map().with("script", script).with("user", args.flag_or("user", "cli")),
+    )?;
+    println!("{}", out.opt_str("jobId").unwrap_or(""));
+    Ok(())
+}
+
+pub fn cmd_qstat(args: &mut Args) -> Result<()> {
+    let job = args.req_positional(1, "job id")?;
+    let out = wlm_call(args, "JobStatus", Value::map().with("jobId", job))?;
+    println!(
+        "{} {}",
+        job,
+        out.opt_str("state").unwrap_or("unknown")
+    );
+    Ok(())
+}
+
+pub fn cmd_qdel(args: &mut Args) -> Result<()> {
+    let job = args.req_positional(1, "job id")?;
+    wlm_call(args, "CancelJob", Value::map().with("jobId", job))?;
+    println!("{job} deleted");
+    Ok(())
+}
+
+pub fn cmd_trace(args: &mut Args) -> Result<()> {
+    let sub = args.req_positional(1, "trace subcommand")?;
+    if sub != "gen" {
+        return Err(Error::config("only `trace gen` is supported"));
+    }
+    let seed: u64 = args.num("seed", 42)?;
+    let jobs: usize = args.num("jobs", 200)?;
+    let mut g = TraceGen::new(seed);
+    let trace = match args.flag_or("kind", "poisson").as_str() {
+        "poisson" => g.poisson_batch(jobs, args.num("capacity", 64)?, args.num("load", 0.7)?, args.num("mean-runtime", 120.0)?),
+        "bursty" => g.bursty(jobs / 20, 20, 60.0),
+        "cybele" => g.cybele_pilots(jobs / 10, jobs - jobs / 10, 1000.0),
+        "showcase" => g.backfill_showcase(jobs / 5, args.num("capacity", 8)?),
+        other => return Err(Error::config(format!("unknown trace kind `{other}`"))),
+    };
+    let text = trace.to_json();
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, text)?;
+            println!("wrote {} jobs to {path}", trace.len());
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+pub fn cmd_sim(args: &mut Args) -> Result<()> {
+    let trace = match args.flag("trace") {
+        Some(path) => Trace::from_json(&std::fs::read_to_string(path)?)?,
+        None => {
+            let mut g = TraceGen::new(args.num("seed", 42)?);
+            g.poisson_batch(args.num("jobs", 500)?, 128, args.num("load", 0.7)?, 120.0)
+        }
+    };
+    let params = SimParams {
+        nodes: args.num("nodes", 16)?,
+        cores_per_node: args.num("cores", 8)?,
+        ..SimParams::default()
+    };
+    let policy = policy_by_name(&args.flag_or("policy", "easy"))?;
+    let report = simulate(&trace, &params, policy.as_ref());
+    println!("{}", report.row());
+    Ok(())
+}
+
+pub fn cmd_sing(args: &mut Args) -> Result<()> {
+    let sub = args.req_positional(1, "sing subcommand")?;
+    match sub {
+        "list" => {
+            let images = crate::singularity::ImageRegistry::with_defaults();
+            for name in images.list() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown sing subcommand `{other}`"))),
+    }
+}
+
+pub fn cmd_version(args: &mut Args) -> Result<()> {
+    println!("hpcorc {} — Torque-Operator reproduction", env!("CARGO_PKG_VERSION"));
+    if args.bool("components") {
+        // Paper Table I: the core applications of the testbed → our modules.
+        println!("\nTable I — core applications of the testbed:");
+        println!("  {:<34} {}", "Orchestrator", "kube (Kubernetes-like), pbs (Torque)");
+        println!("  {:<34} {}", "Container runtime & its support", "singularity (SIF runtime), singularity::cri (Singularity-CRI)");
+        println!("  {:<34} {}", "Operator", "operator (Torque-Operator, WLM-Operator)");
+        println!("  {:<34} {}", "Compiler", "rustc (Golang in the paper); python/jax AOT for payloads");
+    }
+    Ok(())
+}

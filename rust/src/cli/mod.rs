@@ -1,0 +1,54 @@
+//! `hpcorc` command-line interface (clap substitute).
+//!
+//! Two families of verbs, matching the paper's two user surfaces:
+//! kubectl-style (`apply`, `get`, `delete`, `logs`) against a running
+//! testbed's red-box socket, and Torque-style (`qsub`, `qstat`, `qdel`)
+//! against the same socket's `torque.Workload` service. Plus testbed
+//! lifecycle (`up`, `demo`), workload tooling (`trace`, `sim`) and
+//! `version --components` (paper Table I).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// CLI entrypoint; returns the process exit code.
+pub fn main(argv: Vec<String>) -> i32 {
+    crate::util::log::init_from_env();
+    let mut args = Args::new(argv);
+    let verb = match args.positional(0) {
+        Some(v) => v.to_string(),
+        None => {
+            eprint!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    let result = match verb.as_str() {
+        "up" => commands::cmd_up(&mut args),
+        "demo" => commands::cmd_demo(&mut args),
+        "kubectl" => commands::cmd_kubectl(&mut args),
+        "qsub" => commands::cmd_qsub(&mut args),
+        "qstat" => commands::cmd_qstat(&mut args),
+        "qdel" => commands::cmd_qdel(&mut args),
+        "trace" => commands::cmd_trace(&mut args),
+        "sim" => commands::cmd_sim(&mut args),
+        "sing" => commands::cmd_sing(&mut args),
+        "version" => commands::cmd_version(&mut args),
+        "help" | "--help" | "-h" => {
+            print!("{}", commands::USAGE);
+            Ok(())
+        }
+        other => {
+            eprintln!("hpcorc: unknown command `{other}`\n");
+            eprint!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("hpcorc {verb}: {e}");
+            1
+        }
+    }
+}

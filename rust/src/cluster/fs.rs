@@ -1,0 +1,276 @@
+//! Simulated shared filesystem ($HOME on the clusters).
+//!
+//! The paper's flow stages job output files (`$HOME/low.out`) between the
+//! Torque side and the Kubernetes side via a shared directory. We model a
+//! cluster-wide shared FS as an in-memory path→bytes map with `$HOME` and
+//! `$PATH`-style variable expansion, plus an optional mirror onto a real
+//! temp directory for the CLI/examples to inspect.
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Cluster-shared filesystem handle (clone = same FS, like NFS mounts).
+#[derive(Clone, Default)]
+pub struct SharedFs {
+    inner: Arc<Mutex<FsInner>>,
+}
+
+#[derive(Default)]
+struct FsInner {
+    files: BTreeMap<String, Vec<u8>>,
+    /// Environment used for path expansion ($HOME etc.).
+    env: BTreeMap<String, String>,
+    /// Optional real-directory mirror root.
+    mirror: Option<std::path::PathBuf>,
+}
+
+impl SharedFs {
+    pub fn new() -> Self {
+        let fs = SharedFs::default();
+        fs.set_env("HOME", "/home/user");
+        fs
+    }
+
+    pub fn set_env(&self, key: &str, val: &str) {
+        self.inner.lock().unwrap().env.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn env(&self, key: &str) -> Option<String> {
+        self.inner.lock().unwrap().env.get(key).cloned()
+    }
+
+    /// Mirror writes into a real directory (for human inspection in examples).
+    pub fn set_mirror(&self, dir: impl Into<std::path::PathBuf>) {
+        self.inner.lock().unwrap().mirror = Some(dir.into());
+    }
+
+    /// Expand `$VAR` and `${VAR}` references using the FS environment.
+    pub fn expand(&self, path: &str) -> String {
+        let env = &self.inner.lock().unwrap().env;
+        expand_vars(path, |k| env.get(k).cloned())
+    }
+
+    /// Normalize: expand vars, collapse `//`, strip trailing `/` (dirs keep it).
+    fn norm(&self, path: &str) -> String {
+        let p = self.expand(path);
+        let mut out = String::with_capacity(p.len());
+        let mut prev_slash = false;
+        for c in p.chars() {
+            if c == '/' {
+                if !prev_slash {
+                    out.push(c);
+                }
+                prev_slash = true;
+            } else {
+                prev_slash = false;
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    pub fn write(&self, path: &str, data: impl AsRef<[u8]>) -> Result<()> {
+        let key = self.norm(path);
+        if key.is_empty() || key.ends_with('/') {
+            return Err(Error::Io(format!("invalid file path `{path}`")));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.files.insert(key.clone(), data.as_ref().to_vec());
+        if let Some(root) = inner.mirror.clone() {
+            let rel = key.trim_start_matches('/');
+            let real = root.join(rel);
+            if let Some(parent) = real.parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            let _ = std::fs::write(real, data.as_ref());
+        }
+        Ok(())
+    }
+
+    pub fn append(&self, path: &str, data: impl AsRef<[u8]>) -> Result<()> {
+        let key = self.norm(path);
+        let mut inner = self.inner.lock().unwrap();
+        inner.files.entry(key.clone()).or_default().extend_from_slice(data.as_ref());
+        if let Some(root) = inner.mirror.clone() {
+            let content = inner.files.get(&key).cloned().unwrap_or_default();
+            let rel = key.trim_start_matches('/');
+            let real = root.join(rel);
+            if let Some(parent) = real.parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            let _ = std::fs::write(real, content);
+        }
+        Ok(())
+    }
+
+    pub fn read(&self, path: &str) -> Result<Vec<u8>> {
+        let key = self.norm(path);
+        self.inner
+            .lock()
+            .unwrap()
+            .files
+            .get(&key)
+            .cloned()
+            .ok_or_else(|| Error::Io(format!("no such file: {key}")))
+    }
+
+    pub fn read_string(&self, path: &str) -> Result<String> {
+        String::from_utf8(self.read(path)?)
+            .map_err(|_| Error::Io(format!("not utf-8: {path}")))
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        let key = self.norm(path);
+        self.inner.lock().unwrap().files.contains_key(&key)
+    }
+
+    pub fn remove(&self, path: &str) -> bool {
+        let key = self.norm(path);
+        self.inner.lock().unwrap().files.remove(&key).is_some()
+    }
+
+    /// Copy a file within the shared FS (results staging).
+    pub fn copy(&self, from: &str, to: &str) -> Result<()> {
+        let data = self.read(from)?;
+        // If `to` is a directory path (ends with /), keep the source basename.
+        let to_norm = self.norm(to);
+        let target = if to_norm.ends_with('/') {
+            let base = self.norm(from);
+            let base = base.rsplit('/').next().unwrap_or("out");
+            format!("{to_norm}{base}")
+        } else {
+            to_norm
+        };
+        self.write(&target, data)
+    }
+
+    /// List files under a prefix (sorted).
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        let p = self.norm(prefix);
+        self.inner
+            .lock()
+            .unwrap()
+            .files
+            .keys()
+            .filter(|k| k.starts_with(&p))
+            .cloned()
+            .collect()
+    }
+}
+
+/// `$VAR` / `${VAR}` expansion; unknown vars are left intact.
+pub fn expand_vars(s: &str, lookup: impl Fn(&str) -> Option<String>) -> String {
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'$' && i + 1 < bytes.len() {
+            let (name, consumed) = if bytes[i + 1] == b'{' {
+                if let Some(end) = s[i + 2..].find('}') {
+                    (&s[i + 2..i + 2 + end], end + 3)
+                } else {
+                    ("", 0)
+                }
+            } else {
+                let rest = &s[i + 1..];
+                let len = rest
+                    .char_indices()
+                    .take_while(|(_, c)| c.is_ascii_alphanumeric() || *c == '_')
+                    .map(|(j, c)| j + c.len_utf8())
+                    .last()
+                    .unwrap_or(0);
+                (&rest[..len], len + 1)
+            };
+            if !name.is_empty() {
+                if let Some(v) = lookup(name) {
+                    out.push_str(&v);
+                    i += consumed;
+                    continue;
+                }
+            }
+        }
+        let c = s[i..].chars().next().unwrap();
+        out.push(c);
+        i += c.len_utf8();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let fs = SharedFs::new();
+        fs.write("/home/user/low.out", b"moo").unwrap();
+        assert_eq!(fs.read_string("/home/user/low.out").unwrap(), "moo");
+        assert!(fs.exists("/home/user/low.out"));
+        assert!(!fs.exists("/home/user/other"));
+    }
+
+    #[test]
+    fn home_expansion() {
+        let fs = SharedFs::new();
+        fs.write("$HOME/low.out", b"x").unwrap();
+        assert!(fs.exists("/home/user/low.out"));
+        assert_eq!(fs.read_string("${HOME}/low.out").unwrap(), "x");
+    }
+
+    #[test]
+    fn copy_into_directory() {
+        let fs = SharedFs::new();
+        fs.write("$HOME/low.out", b"result").unwrap();
+        fs.copy("$HOME/low.out", "$HOME/results/").unwrap();
+        assert_eq!(fs.read_string("/home/user/results/low.out").unwrap(), "result");
+    }
+
+    #[test]
+    fn append_accumulates() {
+        let fs = SharedFs::new();
+        fs.append("$HOME/log", b"a").unwrap();
+        fs.append("$HOME/log", b"b").unwrap();
+        assert_eq!(fs.read_string("$HOME/log").unwrap(), "ab");
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let fs = SharedFs::new();
+        assert!(fs.read("/nope").is_err());
+        assert!(fs.copy("/nope", "/x").is_err());
+        assert!(!fs.remove("/nope"));
+    }
+
+    #[test]
+    fn list_prefix() {
+        let fs = SharedFs::new();
+        fs.write("/a/1", b"").unwrap();
+        fs.write("/a/2", b"").unwrap();
+        fs.write("/b/3", b"").unwrap();
+        assert_eq!(fs.list("/a/"), vec!["/a/1".to_string(), "/a/2".to_string()]);
+    }
+
+    #[test]
+    fn expand_vars_cases() {
+        let lk = |k: &str| match k {
+            "HOME" => Some("/h".to_string()),
+            "PATH" => Some("/bin".to_string()),
+            _ => None,
+        };
+        assert_eq!(expand_vars("$HOME/x", lk), "/h/x");
+        assert_eq!(expand_vars("${HOME}/x", lk), "/h/x");
+        assert_eq!(expand_vars("$PATH:$PATH", lk), "/bin:/bin");
+        assert_eq!(expand_vars("$UNKNOWN/x", lk), "$UNKNOWN/x");
+        assert_eq!(expand_vars("no vars", lk), "no vars");
+        assert_eq!(expand_vars("trailing $", lk), "trailing $");
+    }
+
+    #[test]
+    fn double_slash_normalized() {
+        let fs = SharedFs::new();
+        fs.set_env("HOME", "/home/user/");
+        fs.write("$HOME/low.out", b"x").unwrap();
+        assert!(fs.exists("/home/user/low.out"));
+    }
+}

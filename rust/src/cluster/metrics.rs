@@ -1,0 +1,147 @@
+//! Process-wide metrics registry: counters, gauges, latency histograms.
+//!
+//! Every daemon records into a shared [`Metrics`] handle; the CLI's
+//! `hpcorc metrics` and the bench harness read snapshots. Lock granularity
+//! is per-metric-map; hot-path increments are atomics.
+
+use crate::util::Hist;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    hists: Mutex<BTreeMap<String, Arc<Mutex<Hist>>>>,
+}
+
+/// Cloneable metrics registry handle.
+#[derive(Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a counter; returns a cheap handle for hot paths.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.inner.counters.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.counter(name).fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
+        let mut m = self.inner.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicI64::new(0))).clone()
+    }
+
+    pub fn set_gauge(&self, name: &str, v: i64) {
+        self.gauge(name).store(v, Ordering::Relaxed);
+    }
+
+    pub fn hist(&self, name: &str) -> Arc<Mutex<Hist>> {
+        let mut m = self.inner.hists.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Mutex::new(Hist::new()))).clone()
+    }
+
+    /// Record a duration in nanoseconds into a histogram.
+    pub fn observe(&self, name: &str, nanos: u64) {
+        self.hist(name).lock().unwrap().record(nanos);
+    }
+
+    /// Time a closure into a histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.observe(name, t0.elapsed().as_nanos() as u64);
+        r
+    }
+
+    /// Snapshot all metrics as sorted (name, rendering) lines.
+    pub fn snapshot(&self) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        for (k, v) in self.inner.counters.lock().unwrap().iter() {
+            out.push((k.clone(), v.load(Ordering::Relaxed).to_string()));
+        }
+        for (k, v) in self.inner.gauges.lock().unwrap().iter() {
+            out.push((k.clone(), v.load(Ordering::Relaxed).to_string()));
+        }
+        for (k, h) in self.inner.hists.lock().unwrap().iter() {
+            out.push((k.clone(), h.lock().unwrap().summary(1e6, "ms")));
+        }
+        out.sort();
+        out
+    }
+
+    /// Read a counter value (0 if absent) — test/bench helper.
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("jobs.submitted");
+        m.add("jobs.submitted", 4);
+        assert_eq!(m.counter_value("jobs.submitted"), 5);
+        assert_eq!(m.counter_value("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_set() {
+        let m = Metrics::new();
+        m.set_gauge("queue.depth", 7);
+        m.set_gauge("queue.depth", 3);
+        assert_eq!(m.gauge("queue.depth").load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn hist_observe_and_time() {
+        let m = Metrics::new();
+        m.observe("lat", 1_000_000);
+        let out = m.time("lat", || 42);
+        assert_eq!(out, 42);
+        assert_eq!(m.hist("lat").lock().unwrap().count(), 2);
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let m = Metrics::new();
+        m.inc("b.count");
+        m.inc("a.count");
+        m.observe("c.lat", 5);
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, ["a.count", "b.count", "c.lat"]);
+    }
+
+    #[test]
+    fn handles_shared_across_clones() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m2.inc("x");
+        assert_eq!(m.counter_value("x"), 1);
+    }
+}

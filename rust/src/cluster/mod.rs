@@ -1,0 +1,12 @@
+//! Cluster substrate: simulated machines, resource vectors, shared
+//! filesystem, and the metrics registry.
+
+pub mod fs;
+pub mod metrics;
+pub mod node;
+pub mod resources;
+
+pub use fs::SharedFs;
+pub use metrics::Metrics;
+pub use node::{NodeRole, NodeSpec};
+pub use resources::Resources;

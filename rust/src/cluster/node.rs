@@ -1,0 +1,135 @@
+//! Simulated machine descriptions — the substrate both clusters run on.
+//!
+//! A [`NodeSpec`] stands in for a physical host (paper Fig. 1: Torque compute
+//! nodes, Kubernetes worker nodes, and the shared login node). Nodes here
+//! are *capacity + identity*; the live daemons (pbs_mom, kubelet) hold the
+//! mutable allocation state.
+
+use crate::cluster::Resources;
+use crate::encoding::{Decode, Encode, Value};
+use crate::util::Result;
+
+/// Role of a node in the hybrid testbed (paper Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRole {
+    /// Torque head node (runs pbs_server + scheduler).
+    TorqueHead,
+    /// Torque compute node (runs pbs_mom).
+    TorqueCompute,
+    /// Kubernetes master (API server + scheduler + controllers).
+    KubeMaster,
+    /// Kubernetes worker (kubelet + CRI).
+    KubeWorker,
+    /// The shared login node: member of BOTH clusters; hosts red-box and the
+    /// virtual-kubelet (paper: "The login node belongs to both Kubernetes
+    /// and Torque clusters").
+    Login,
+}
+
+impl NodeRole {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NodeRole::TorqueHead => "torque-head",
+            NodeRole::TorqueCompute => "torque-compute",
+            NodeRole::KubeMaster => "kube-master",
+            NodeRole::KubeWorker => "kube-worker",
+            NodeRole::Login => "login",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NodeRole> {
+        Some(match s {
+            "torque-head" => NodeRole::TorqueHead,
+            "torque-compute" => NodeRole::TorqueCompute,
+            "kube-master" => NodeRole::KubeMaster,
+            "kube-worker" => NodeRole::KubeWorker,
+            "login" => NodeRole::Login,
+            _ => return None,
+        })
+    }
+}
+
+/// Description of one simulated host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    pub role: NodeRole,
+    pub capacity: Resources,
+    /// Torque node properties / k8s labels (e.g. `bigmem`, `gpu`).
+    pub features: Vec<String>,
+}
+
+impl NodeSpec {
+    pub fn new(name: impl Into<String>, role: NodeRole, capacity: Resources) -> Self {
+        NodeSpec { name: name.into(), role, capacity, features: Vec::new() }
+    }
+
+    pub fn with_features(mut self, features: &[&str]) -> Self {
+        self.features = features.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn has_feature(&self, f: &str) -> bool {
+        self.features.iter().any(|x| x == f)
+    }
+}
+
+impl Encode for NodeSpec {
+    fn encode(&self) -> Value {
+        Value::map()
+            .with("name", self.name.clone())
+            .with("role", self.role.as_str())
+            .with("capacity", self.capacity.encode())
+            .with(
+                "features",
+                Value::Seq(self.features.iter().map(|f| Value::str(f.clone())).collect()),
+            )
+    }
+}
+
+impl Decode for NodeSpec {
+    fn decode(v: &Value) -> Result<Self> {
+        let role = NodeRole::parse(v.req_str("role")?)
+            .ok_or_else(|| crate::util::Error::parse("bad node role"))?;
+        Ok(NodeSpec {
+            name: v.req_str("name")?.to_string(),
+            role,
+            capacity: Resources::decode(v.req("capacity")?)?,
+            features: v
+                .get("features")
+                .and_then(Value::as_seq)
+                .map(|s| s.iter().filter_map(|f| f.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roles_roundtrip() {
+        for r in [
+            NodeRole::TorqueHead,
+            NodeRole::TorqueCompute,
+            NodeRole::KubeMaster,
+            NodeRole::KubeWorker,
+            NodeRole::Login,
+        ] {
+            assert_eq!(NodeRole::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(NodeRole::parse("nope"), None);
+    }
+
+    #[test]
+    fn spec_encode_roundtrip() {
+        let spec = NodeSpec::new("cn01", NodeRole::TorqueCompute, Resources::cores(16, 64 << 30))
+            .with_features(&["bigmem", "infiniband"]);
+        let v = spec.encode();
+        let back = NodeSpec::decode(&v).unwrap();
+        assert_eq!(back, spec);
+        assert!(back.has_feature("bigmem"));
+        assert!(!back.has_feature("gpu"));
+    }
+}

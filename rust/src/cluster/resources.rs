@@ -1,0 +1,227 @@
+//! Resource vectors: the common currency of both schedulers.
+//!
+//! Torque thinks in nodes×ppn (+mem); Kubernetes in per-pod cpu/memory
+//! requests. Both reduce to a [`Resources`] vector that node capacities are
+//! checked and charged against.
+
+use crate::encoding::{Decode, Encode, Value};
+use crate::util::{Error, Result};
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// A resource quantity vector. `cpu_milli` uses Kubernetes millicore units
+/// (1000 = one core) so fractional requests (`500m`) are exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default, Hash)]
+pub struct Resources {
+    pub cpu_milli: u64,
+    pub mem_bytes: u64,
+    pub gpus: u32,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu_milli: 0, mem_bytes: 0, gpus: 0 };
+
+    pub fn new(cpu_milli: u64, mem_bytes: u64, gpus: u32) -> Self {
+        Resources { cpu_milli, mem_bytes, gpus }
+    }
+
+    /// Whole cores + mem, the common case.
+    pub fn cores(cores: u32, mem_bytes: u64) -> Self {
+        Resources { cpu_milli: cores as u64 * 1000, mem_bytes, gpus: 0 }
+    }
+
+    /// Does `self` (a capacity) fit `req` on every dimension?
+    pub fn fits(&self, req: &Resources) -> bool {
+        self.cpu_milli >= req.cpu_milli
+            && self.mem_bytes >= req.mem_bytes
+            && self.gpus >= req.gpus
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Resources::ZERO
+    }
+
+    /// Saturating subtraction (free = capacity - used with clamping).
+    pub fn saturating_sub(&self, other: &Resources) -> Resources {
+        Resources {
+            cpu_milli: self.cpu_milli.saturating_sub(other.cpu_milli),
+            mem_bytes: self.mem_bytes.saturating_sub(other.mem_bytes),
+            gpus: self.gpus.saturating_sub(other.gpus),
+        }
+    }
+
+    /// Dominant-share fraction of `self` relative to a capacity (for
+    /// least-allocated scoring). Returns 0..=1.
+    pub fn dominant_fraction(&self, capacity: &Resources) -> f64 {
+        let mut frac: f64 = 0.0;
+        if capacity.cpu_milli > 0 {
+            frac = frac.max(self.cpu_milli as f64 / capacity.cpu_milli as f64);
+        }
+        if capacity.mem_bytes > 0 {
+            frac = frac.max(self.mem_bytes as f64 / capacity.mem_bytes as f64);
+        }
+        if capacity.gpus > 0 {
+            frac = frac.max(self.gpus as f64 / capacity.gpus as f64);
+        }
+        frac.min(1.0)
+    }
+
+    /// Parse a Kubernetes-style cpu quantity: `2`, `500m`, `1.5`.
+    pub fn parse_cpu(s: &str) -> Result<u64> {
+        let s = s.trim();
+        if let Some(m) = s.strip_suffix('m') {
+            m.parse::<u64>().map_err(|_| Error::parse(format!("bad cpu quantity `{s}`")))
+        } else {
+            let v: f64 =
+                s.parse().map_err(|_| Error::parse(format!("bad cpu quantity `{s}`")))?;
+            if v < 0.0 {
+                return Err(Error::parse(format!("negative cpu `{s}`")));
+            }
+            Ok((v * 1000.0).round() as u64)
+        }
+    }
+
+    /// Parse a Kubernetes-style memory quantity: `128Mi`, `4Gi`, `1024Ki`, bytes.
+    pub fn parse_mem_k8s(s: &str) -> Result<u64> {
+        let s = s.trim();
+        let (num, mult) = if let Some(n) = s.strip_suffix("Ti") {
+            (n, 1u64 << 40)
+        } else if let Some(n) = s.strip_suffix("Gi") {
+            (n, 1u64 << 30)
+        } else if let Some(n) = s.strip_suffix("Mi") {
+            (n, 1u64 << 20)
+        } else if let Some(n) = s.strip_suffix("Ki") {
+            (n, 1u64 << 10)
+        } else {
+            (s, 1)
+        };
+        let v: f64 =
+            num.parse().map_err(|_| Error::parse(format!("bad memory quantity `{s}`")))?;
+        if v < 0.0 {
+            return Err(Error::parse(format!("negative memory `{s}`")));
+        }
+        Ok((v * mult as f64) as u64)
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            cpu_milli: self.cpu_milli + o.cpu_milli,
+            mem_bytes: self.mem_bytes + o.mem_bytes,
+            gpus: self.gpus + o.gpus,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Resources {
+    type Output = Resources;
+    fn sub(self, o: Resources) -> Resources {
+        Resources {
+            cpu_milli: self.cpu_milli - o.cpu_milli,
+            mem_bytes: self.mem_bytes - o.mem_bytes,
+            gpus: self.gpus - o.gpus,
+        }
+    }
+}
+
+impl SubAssign for Resources {
+    fn sub_assign(&mut self, o: Resources) {
+        *self = *self - o;
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "cpu={}m mem={} gpu={}",
+            self.cpu_milli,
+            crate::util::fmt_mem(self.mem_bytes),
+            self.gpus
+        )
+    }
+}
+
+impl Encode for Resources {
+    fn encode(&self) -> Value {
+        Value::map()
+            .with("cpuMilli", self.cpu_milli)
+            .with("memBytes", self.mem_bytes)
+            .with("gpus", self.gpus as u64)
+    }
+}
+
+impl Decode for Resources {
+    fn decode(v: &Value) -> Result<Self> {
+        Ok(Resources {
+            cpu_milli: v.opt_int("cpuMilli").unwrap_or(0) as u64,
+            mem_bytes: v.opt_int("memBytes").unwrap_or(0) as u64,
+            gpus: v.opt_int("gpus").unwrap_or(0) as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_and_arith() {
+        let cap = Resources::cores(8, 16 << 30);
+        let req = Resources::cores(2, 4 << 30);
+        assert!(cap.fits(&req));
+        let free = cap - req;
+        assert_eq!(free.cpu_milli, 6000);
+        assert!(!req.fits(&cap));
+        let back = free + req;
+        assert_eq!(back, cap);
+    }
+
+    #[test]
+    fn saturating() {
+        let a = Resources::cores(1, 1 << 30);
+        let b = Resources::cores(4, 8 << 30);
+        assert_eq!(a.saturating_sub(&b), Resources::ZERO);
+    }
+
+    #[test]
+    fn parse_cpu_quantities() {
+        assert_eq!(Resources::parse_cpu("2").unwrap(), 2000);
+        assert_eq!(Resources::parse_cpu("500m").unwrap(), 500);
+        assert_eq!(Resources::parse_cpu("1.5").unwrap(), 1500);
+        assert!(Resources::parse_cpu("abc").is_err());
+        assert!(Resources::parse_cpu("-1").is_err());
+    }
+
+    #[test]
+    fn parse_mem_quantities() {
+        assert_eq!(Resources::parse_mem_k8s("128Mi").unwrap(), 128 << 20);
+        assert_eq!(Resources::parse_mem_k8s("4Gi").unwrap(), 4u64 << 30);
+        assert_eq!(Resources::parse_mem_k8s("1024").unwrap(), 1024);
+        assert!(Resources::parse_mem_k8s("x").is_err());
+    }
+
+    #[test]
+    fn dominant_fraction() {
+        let cap = Resources::cores(10, 100 << 30);
+        let half_cpu = Resources::cores(5, 10 << 30);
+        assert!((half_cpu.dominant_fraction(&cap) - 0.5).abs() < 1e-9);
+        let mem_heavy = Resources::cores(1, 90 << 30);
+        assert!((mem_heavy.dominant_fraction(&cap) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let r = Resources::new(1500, 3 << 30, 2);
+        let v = r.encode();
+        assert_eq!(Resources::decode(&v).unwrap(), r);
+    }
+}

@@ -1,0 +1,81 @@
+//! Serialization substrate: dynamic [`Value`] tree with JSON and YAML codecs.
+//!
+//! The offline environment provides no serde/serde_json/serde_yaml, so the
+//! kube API store, red-box wire protocol, manifests, and artifacts manifest
+//! all speak through these hand-rolled codecs.
+//!
+//! Conventions:
+//! - JSON (compact) is the canonical wire + storage form.
+//! - YAML is the human form (manifests in, `-o yaml` out).
+//! - Typed objects implement [`Encode`]/[`Decode`] to convert to/from
+//!   [`Value`] (our serde substitute).
+
+pub mod json;
+pub mod value;
+pub mod yaml;
+
+pub use value::Value;
+
+use crate::util::Result;
+
+/// Convert a typed object into a [`Value`] tree.
+pub trait Encode {
+    fn encode(&self) -> Value;
+}
+
+/// Build a typed object from a [`Value`] tree.
+pub trait Decode: Sized {
+    fn decode(v: &Value) -> Result<Self>;
+}
+
+impl Encode for Value {
+    fn encode(&self) -> Value {
+        self.clone()
+    }
+}
+
+impl Decode for Value {
+    fn decode(v: &Value) -> Result<Self> {
+        Ok(v.clone())
+    }
+}
+
+/// Encode a string map (common in labels/annotations/env).
+pub fn encode_str_map(m: &[(String, String)]) -> Value {
+    Value::Map(m.iter().map(|(k, v)| (k.clone(), Value::str(v.clone()))).collect())
+}
+
+/// Decode a string map, ignoring non-string values.
+pub fn decode_str_map(v: &Value) -> Vec<(String, String)> {
+    v.as_map()
+        .map(|m| {
+            m.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yaml_json_cross_roundtrip() {
+        // A manifest parsed from YAML, stored as JSON, re-read, re-emitted.
+        let y = "kind: Pod\nmeta:\n  labels:\n    app: web\nspec:\n  replicas: 3\n";
+        let v = yaml::parse(y).unwrap();
+        let j = json::to_string(&v);
+        let v2 = json::parse(&j).unwrap();
+        assert_eq!(v, v2);
+        let y2 = yaml::to_string(&v2);
+        assert_eq!(yaml::parse(&y2).unwrap(), v);
+    }
+
+    #[test]
+    fn str_map_helpers() {
+        let m = vec![("a".to_string(), "1".to_string()), ("b".to_string(), "x".to_string())];
+        let v = encode_str_map(&m);
+        assert_eq!(decode_str_map(&v), m);
+    }
+}

@@ -1,0 +1,278 @@
+//! Dynamic value tree shared by the YAML parser, the JSON codec, the kube
+//! object store, and the red-box wire format.
+//!
+//! Mappings preserve insertion order (kube manifests are written for humans;
+//! `kubectl get -o yaml` output should not scramble keys), implemented as an
+//! association list — manifests are small, so linear key lookup is fine.
+
+use crate::util::{Error, Result};
+use std::fmt;
+
+/// A JSON/YAML-style dynamic value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Integers kept distinct from floats so job counts etc. round-trip.
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Value>),
+    /// Insertion-ordered mapping.
+    Map(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    pub fn map() -> Value {
+        Value::Map(Vec::new())
+    }
+
+    /// Builder-style insert; replaces an existing key in place.
+    pub fn with(mut self, key: &str, v: impl Into<Value>) -> Value {
+        self.insert(key, v.into());
+        self
+    }
+
+    pub fn insert(&mut self, key: &str, v: impl Into<Value>) {
+        if let Value::Map(entries) = self {
+            let v = v.into();
+            for (k, slot) in entries.iter_mut() {
+                if k == key {
+                    *slot = v;
+                    return;
+                }
+            }
+            entries.push((key.to_string(), v));
+        } else {
+            panic!("insert on non-map Value");
+        }
+    }
+
+    pub fn remove(&mut self, key: &str) -> Option<Value> {
+        if let Value::Map(entries) = self {
+            let idx = entries.iter().position(|(k, _)| k == key)?;
+            Some(entries.remove(idx).1)
+        } else {
+            None
+        }
+    }
+
+    /// Mapping lookup (None on non-maps and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Value> {
+        match self {
+            Value::Map(entries) => {
+                entries.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Nested lookup: `v.path(&["spec", "batch"])`.
+    pub fn path(&self, keys: &[&str]) -> Option<&Value> {
+        let mut cur = self;
+        for k in keys {
+            cur = cur.get(k)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Value]> {
+        match self {
+            Value::Seq(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    // ---- "required field" accessors producing parse errors, for decoders ----
+
+    pub fn req(&self, key: &str) -> Result<&Value> {
+        self.get(key).ok_or_else(|| Error::parse(format!("missing field `{key}`")))
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| Error::parse(format!("field `{key}` must be a string")))
+    }
+
+    pub fn req_int(&self, key: &str) -> Result<i64> {
+        self.req(key)?
+            .as_int()
+            .ok_or_else(|| Error::parse(format!("field `{key}` must be an integer")))
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn opt_int(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_int)
+    }
+
+    pub fn opt_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+impl From<i64> for Value {
+    fn from(i: i64) -> Value {
+        Value::Int(i)
+    }
+}
+impl From<u64> for Value {
+    fn from(i: u64) -> Value {
+        Value::Int(i as i64)
+    }
+}
+impl From<u32> for Value {
+    fn from(i: u32) -> Value {
+        Value::Int(i as i64)
+    }
+}
+impl From<usize> for Value {
+    fn from(i: usize) -> Value {
+        Value::Int(i as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(f: f64) -> Value {
+        Value::Float(f)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Value {
+        Value::Seq(v)
+    }
+}
+impl<T: Into<Value>> From<Option<T>> for Value {
+    fn from(v: Option<T>) -> Value {
+        match v {
+            Some(x) => x.into(),
+            None => Value::Null,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    /// Display as compact JSON (the canonical wire form).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&super::json::to_string(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_ops_preserve_order() {
+        let mut v = Value::map().with("b", 1i64).with("a", 2i64);
+        v.insert("c", "x");
+        let keys: Vec<&str> =
+            v.as_map().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["b", "a", "c"]);
+        v.insert("b", 9i64); // replace in place keeps position
+        let keys: Vec<&str> =
+            v.as_map().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["b", "a", "c"]);
+        assert_eq!(v.get("b").unwrap().as_int(), Some(9));
+    }
+
+    #[test]
+    fn nested_path() {
+        let v = Value::map().with("spec", Value::map().with("batch", "#!/bin/sh"));
+        assert_eq!(v.path(&["spec", "batch"]).unwrap().as_str(), Some("#!/bin/sh"));
+        assert!(v.path(&["spec", "nope"]).is_none());
+    }
+
+    #[test]
+    fn req_accessors() {
+        let v = Value::map().with("name", "cow").with("n", 3i64);
+        assert_eq!(v.req_str("name").unwrap(), "cow");
+        assert_eq!(v.req_int("n").unwrap(), 3);
+        assert!(v.req_str("missing").is_err());
+        assert!(v.req_int("name").is_err());
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Value::from(3u32), Value::Int(3));
+        assert_eq!(Value::from(Some("x")), Value::str("x"));
+        assert_eq!(Value::from(None::<i64>), Value::Null);
+        assert_eq!(Value::from(true), Value::Bool(true));
+    }
+
+    #[test]
+    fn remove_entry() {
+        let mut v = Value::map().with("a", 1i64).with("b", 2i64);
+        assert_eq!(v.remove("a"), Some(Value::Int(1)));
+        assert_eq!(v.remove("a"), None);
+        assert_eq!(v.as_map().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,820 @@
+//! YAML-subset parser and emitter over [`Value`].
+//!
+//! The offline registry has no serde_yaml, so we implement the subset of
+//! YAML that Kubernetes manifests actually use (and that the paper's Fig. 3
+//! `cow_job.yaml` exercises):
+//!
+//! - block mappings and sequences nested by indentation
+//! - `- ` sequence items, including compact `- key: value` map starts
+//! - plain / single-quoted / double-quoted scalars (JSON escapes in double)
+//! - block literal scalars `|`, `|-`, `|+` (the PBS script in `spec.batch`)
+//!   and folded `>`, `>-`
+//! - flow collections `[a, b]` and `{k: v}` one level deep or nested
+//! - `#` comments, blank lines, `---` document separators
+//! - scalar typing: null/~, booleans, ints, floats, everything else string
+//!
+//! Not supported (rejected with a parse error where detectable): anchors &
+//! aliases, tags, complex keys, tab indentation.
+
+use super::value::Value;
+use crate::util::{Error, Result};
+
+// ----------------------------------------------------------------- parsing
+
+/// Parse a single-document YAML string.
+pub fn parse(src: &str) -> Result<Value> {
+    let docs = parse_all(src)?;
+    match docs.len() {
+        0 => Ok(Value::Null),
+        1 => Ok(docs.into_iter().next().unwrap()),
+        n => Err(Error::parse(format!("expected 1 document, found {n}"))),
+    }
+}
+
+/// Parse a multi-document YAML stream separated by `---`.
+pub fn parse_all(src: &str) -> Result<Vec<Value>> {
+    let mut docs = Vec::new();
+    let mut current: Vec<&str> = Vec::new();
+    for line in src.lines() {
+        if line.trim_end() == "---" {
+            if !current.is_empty() {
+                docs.push(parse_doc(&current)?);
+                current.clear();
+            }
+        } else if line.trim_end() == "..." {
+            // explicit end-of-document
+            if !current.is_empty() {
+                docs.push(parse_doc(&current)?);
+                current.clear();
+            }
+        } else {
+            current.push(line);
+        }
+    }
+    if current.iter().any(|l| !is_blank_or_comment(l)) {
+        docs.push(parse_doc(&current)?);
+    }
+    Ok(docs)
+}
+
+fn is_blank_or_comment(line: &str) -> bool {
+    let t = line.trim_start();
+    t.is_empty() || t.starts_with('#')
+}
+
+struct Line<'a> {
+    indent: usize,
+    /// content after indentation (non-empty, not a pure comment)
+    text: &'a str,
+    /// 1-based source line number for errors
+    no: usize,
+}
+
+fn parse_doc(lines: &[&str]) -> Result<Value> {
+    let mut parsed = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        if raw.contains('\t') && raw.trim_start_matches(' ').starts_with('\t') {
+            return Err(Error::parse(format!("line {}: tab indentation", i + 1)));
+        }
+        // Keep blank/comment lines out, but note: block-literal bodies are
+        // re-read from `lines` directly via their line numbers, so nothing
+        // inside a literal is lost.
+        if is_blank_or_comment(raw) {
+            continue;
+        }
+        let indent = raw.len() - raw.trim_start_matches(' ').len();
+        parsed.push(Line { indent, text: raw[indent..].trim_end(), no: i + 1 });
+    }
+    if parsed.is_empty() {
+        return Ok(Value::Null);
+    }
+    let mut cur = Cursor { lines: &parsed, raw: lines, pos: 0 };
+    let v = cur.block(parsed[0].indent)?;
+    if cur.pos != parsed.len() {
+        let l = &parsed[cur.pos];
+        return Err(Error::parse(format!("line {}: unexpected content `{}`", l.no, l.text)));
+    }
+    Ok(v)
+}
+
+struct Cursor<'a, 'b> {
+    lines: &'b [Line<'a>],
+    /// original raw lines (for block literals)
+    raw: &'b [&'a str],
+    pos: usize,
+}
+
+impl<'a, 'b> Cursor<'a, 'b> {
+    fn peek(&self) -> Option<&Line<'a>> {
+        self.lines.get(self.pos)
+    }
+
+    /// Parse a block (mapping or sequence) whose items sit at `indent`.
+    fn block(&mut self, indent: usize) -> Result<Value> {
+        let first = self.peek().ok_or_else(|| Error::parse("empty block"))?;
+        if first.text == "-" || first.text.starts_with("- ") {
+            self.sequence(indent)
+        } else {
+            self.mapping(indent)
+        }
+    }
+
+    fn sequence(&mut self, indent: usize) -> Result<Value> {
+        let mut items = Vec::new();
+        while let Some(line) = self.peek() {
+            if line.indent != indent || !(line.text == "-" || line.text.starts_with("- ")) {
+                break;
+            }
+            let no = line.no;
+            let rest = line.text[1..].trim_start().to_string();
+            self.pos += 1;
+            if rest.is_empty() {
+                // nested block on following deeper lines
+                match self.peek() {
+                    Some(next) if next.indent > indent => {
+                        let v = self.block(next.indent)?;
+                        items.push(v);
+                    }
+                    _ => items.push(Value::Null),
+                }
+            } else if let Some((key, val_text)) = split_map_key(&rest) {
+                // compact mapping start: `- name: data`
+                // Continuation keys are indented past the dash.
+                let item_indent = indent + 2;
+                let mut map = Vec::new();
+                let v = self.map_value(&val_text, item_indent, no)?;
+                map.push((key, v));
+                while let Some(next) = self.peek() {
+                    if next.indent != item_indent
+                        || next.text.starts_with("- ")
+                        || next.text == "-"
+                    {
+                        break;
+                    }
+                    let (k, vt) = split_map_key(next.text).ok_or_else(|| {
+                        Error::parse(format!("line {}: expected `key:`", next.no))
+                    })?;
+                    let nno = next.no;
+                    self.pos += 1;
+                    let v = self.map_value(&vt, item_indent, nno)?;
+                    map.push((k, v));
+                }
+                items.push(Value::Map(map));
+            } else {
+                items.push(parse_scalar(&rest)?);
+            }
+        }
+        Ok(Value::Seq(items))
+    }
+
+    fn mapping(&mut self, indent: usize) -> Result<Value> {
+        let mut map: Vec<(String, Value)> = Vec::new();
+        while let Some(line) = self.peek() {
+            if line.indent != indent {
+                break;
+            }
+            if line.text == "-" || line.text.starts_with("- ") {
+                break;
+            }
+            let (key, val_text) = split_map_key(line.text).ok_or_else(|| {
+                Error::parse(format!("line {}: expected `key: value`", line.no))
+            })?;
+            if map.iter().any(|(k, _)| *k == key) {
+                return Err(Error::parse(format!("line {}: duplicate key `{key}`", line.no)));
+            }
+            let no = line.no;
+            self.pos += 1;
+            let v = self.map_value(&val_text, indent, no)?;
+            map.push((key, v));
+        }
+        Ok(Value::Map(map))
+    }
+
+    /// Parse the value position of a mapping entry. `val_text` is what
+    /// followed `key:` on the same line (may be empty), `indent` the key's
+    /// indentation, `no` its line number.
+    fn map_value(&mut self, val_text: &str, indent: usize, no: usize) -> Result<Value> {
+        let vt = val_text.trim();
+        if vt.is_empty() {
+            // Nested block, or null if nothing deeper follows. A sequence
+            // under a key may sit at the SAME indent as the key (k8s style).
+            match self.peek() {
+                Some(next)
+                    if next.indent > indent
+                        || (next.indent == indent
+                            && (next.text == "-" || next.text.starts_with("- "))) =>
+                {
+                    let child_indent = next.indent;
+                    self.block(child_indent)
+                }
+                _ => Ok(Value::Null),
+            }
+        } else if vt == "|" || vt == "|-" || vt == "|+" || vt == ">" || vt == ">-" {
+            self.block_scalar(vt, indent, no)
+        } else {
+            parse_scalar(vt)
+        }
+    }
+
+    /// Block literal/folded scalar. Reads from the RAW lines following line
+    /// `no` (blank lines inside the block are significant).
+    fn block_scalar(&mut self, marker: &str, key_indent: usize, no: usize) -> Result<Value> {
+        // Collect raw lines after `no` that are blank or indented > key_indent.
+        let mut body: Vec<&str> = Vec::new();
+        let mut raw_idx = no; // `no` is 1-based; raw[no] is the next line
+        while raw_idx < self.raw.len() {
+            let l = self.raw[raw_idx];
+            let trimmed = l.trim_end();
+            if trimmed.is_empty() {
+                body.push("");
+                raw_idx += 1;
+                continue;
+            }
+            let ind = l.len() - l.trim_start_matches(' ').len();
+            if ind <= key_indent {
+                break;
+            }
+            body.push(trimmed);
+            raw_idx += 1;
+        }
+        // Trim trailing blank lines from the body (they belong to the doc).
+        while body.last() == Some(&"") {
+            body.pop();
+        }
+        // Advance the content cursor past every consumed content line.
+        while let Some(line) = self.peek() {
+            if line.no <= no || line.no > raw_idx {
+                break;
+            }
+            self.pos += 1;
+        }
+        // Dedent by the first content line's indentation.
+        let dedent = body
+            .iter()
+            .filter(|l| !l.is_empty())
+            .map(|l| l.len() - l.trim_start_matches(' ').len())
+            .next()
+            .unwrap_or(0);
+        let dedented: Vec<&str> =
+            body.iter().map(|l| if l.len() >= dedent { &l[dedent..] } else { "" }).collect();
+        let mut text = if marker.starts_with('>') {
+            // folded: newlines become spaces (blank line => newline)
+            let mut out = String::new();
+            for (i, l) in dedented.iter().enumerate() {
+                if l.is_empty() {
+                    out.push('\n');
+                } else {
+                    if i > 0 && !out.ends_with('\n') && !out.is_empty() {
+                        out.push(' ');
+                    }
+                    out.push_str(l);
+                }
+            }
+            out
+        } else {
+            dedented.join("\n")
+        };
+        match marker {
+            "|" | ">" => text.push('\n'),   // clip: single trailing newline
+            "|-" | ">-" => {}               // strip
+            "|+" => text.push('\n'),        // keep (equal to clip after our trim)
+            _ => unreachable!(),
+        }
+        Ok(Value::Str(text))
+    }
+}
+
+/// Split `key: value` — returns None if the line is not a mapping entry.
+/// Handles quoted keys and `:` inside quotes.
+fn split_map_key(text: &str) -> Option<(String, String)> {
+    let bytes = text.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'\\' if in_double => i += 1,
+            b':' if !in_single && !in_double => {
+                // `:` must be followed by space/EOL to be a mapping separator
+                if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                    let raw_key = text[..i].trim();
+                    let key = unquote_key(raw_key)?;
+                    let val = if i + 1 >= text.len() { "" } else { &text[i + 1..] };
+                    return Some((key, val.trim().to_string()));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+fn unquote_key(k: &str) -> Option<String> {
+    if k.is_empty() {
+        return None;
+    }
+    if (k.starts_with('"') && k.ends_with('"') && k.len() >= 2)
+        || (k.starts_with('\'') && k.ends_with('\'') && k.len() >= 2)
+    {
+        Some(k[1..k.len() - 1].to_string())
+    } else {
+        Some(k.to_string())
+    }
+}
+
+/// Parse a flow scalar / flow collection.
+fn parse_scalar(s: &str) -> Result<Value> {
+    let s = strip_inline_comment(s).trim();
+    if s.is_empty() {
+        return Ok(Value::Null);
+    }
+    if s.starts_with('[') || s.starts_with('{') {
+        return parse_flow(s);
+    }
+    if s.starts_with('"') {
+        // Reuse the JSON string parser for escapes.
+        return super::json::parse(s);
+    }
+    if s.starts_with('\'') {
+        if s.len() >= 2 && s.ends_with('\'') {
+            return Ok(Value::Str(s[1..s.len() - 1].replace("''", "'")));
+        }
+        return Err(Error::parse(format!("unterminated single-quoted scalar `{s}`")));
+    }
+    if s.starts_with('&') || s.starts_with('*') {
+        return Err(Error::parse(format!("anchors/aliases unsupported: `{s}`")));
+    }
+    Ok(plain_scalar(s))
+}
+
+/// Type a plain (unquoted) scalar per YAML core schema.
+fn plain_scalar(s: &str) -> Value {
+    match s {
+        "null" | "Null" | "NULL" | "~" => return Value::Null,
+        "true" | "True" | "TRUE" => return Value::Bool(true),
+        "false" | "False" | "FALSE" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if looks_numeric(s) {
+        if let Ok(f) = s.parse::<f64>() {
+            return Value::Float(f);
+        }
+    }
+    Value::Str(s.to_string())
+}
+
+/// Only treat as float what actually looks like a number (so `1.2.3`,
+/// `e5`, version strings etc. stay strings).
+fn looks_numeric(s: &str) -> bool {
+    let t = s.strip_prefix(['-', '+']).unwrap_or(s);
+    !t.is_empty()
+        && t.chars().next().unwrap().is_ascii_digit()
+        && t.chars().all(|c| c.is_ascii_digit() || c == '.' || c == 'e' || c == 'E' || c == '-' || c == '+')
+        && t.matches('.').count() <= 1
+}
+
+fn strip_inline_comment(s: &str) -> &str {
+    let bytes = s.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'\\' if in_double => i += 1,
+            b'#' if !in_single && !in_double && i > 0 && bytes[i - 1] == b' ' => {
+                return &s[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    s
+}
+
+/// Minimal flow-collection parser: `[a, b, {k: v}]`, `{k: v, l: [1]}`.
+fn parse_flow(s: &str) -> Result<Value> {
+    let mut p = Flow { bytes: s.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(Error::parse(format!("trailing flow content in `{s}`")));
+    }
+    Ok(v)
+}
+
+struct Flow<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Flow<'a> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.bytes.get(self.pos) {
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                loop {
+                    self.skip_ws();
+                    if self.bytes.get(self.pos) == Some(&b']') {
+                        self.pos += 1;
+                        return Ok(Value::Seq(items));
+                    }
+                    items.push(self.value()?);
+                    self.skip_ws();
+                    match self.bytes.get(self.pos) {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {}
+                        _ => return Err(Error::parse("expected `,` or `]` in flow seq")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut map = Vec::new();
+                loop {
+                    self.skip_ws();
+                    if self.bytes.get(self.pos) == Some(&b'}') {
+                        self.pos += 1;
+                        return Ok(Value::Map(map));
+                    }
+                    let key = self.token(&[b':'])?;
+                    if self.bytes.get(self.pos) != Some(&b':') {
+                        return Err(Error::parse("expected `:` in flow map"));
+                    }
+                    self.pos += 1;
+                    let v = self.value()?;
+                    map.push((key.trim().to_string(), v));
+                    self.skip_ws();
+                    match self.bytes.get(self.pos) {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {}
+                        _ => return Err(Error::parse("expected `,` or `}` in flow map")),
+                    }
+                }
+            }
+            _ => {
+                let tok = self.token(&[b',', b']', b'}'])?;
+                parse_scalar(tok.trim())
+            }
+        }
+    }
+
+    /// Read a raw token until one of the terminator bytes (outside quotes).
+    fn token(&mut self, terms: &[u8]) -> Result<&'a str> {
+        let start = self.pos;
+        let mut in_single = false;
+        let mut in_double = false;
+        while let Some(&b) = self.bytes.get(self.pos) {
+            match b {
+                b'\'' if !in_double => in_single = !in_single,
+                b'"' if !in_single => in_double = !in_double,
+                b'\\' if in_double => self.pos += 1,
+                _ if !in_single && !in_double && terms.contains(&b) => break,
+                _ => {}
+            }
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| Error::parse("invalid utf-8 in flow"))
+    }
+}
+
+// ---------------------------------------------------------------- emitting
+
+/// Emit a Value as block-style YAML (kubectl `-o yaml` look).
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    emit(v, 0, false, &mut out);
+    if !out.ends_with('\n') {
+        out.push('\n');
+    }
+    out
+}
+
+fn emit(v: &Value, indent: usize, inline: bool, out: &mut String) {
+    match v {
+        Value::Map(m) if m.is_empty() => out.push_str("{}"),
+        Value::Seq(s) if s.is_empty() => out.push_str("[]"),
+        Value::Map(m) => {
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 || !inline {
+                    if i > 0 {
+                        out.push('\n');
+                    }
+                    push_spaces(indent, out);
+                }
+                out.push_str(&emit_key(k));
+                out.push(':');
+                match val {
+                    Value::Map(mm) if !mm.is_empty() => {
+                        out.push('\n');
+                        emit(val, indent + 2, false, out);
+                    }
+                    Value::Seq(ss) if !ss.is_empty() => {
+                        out.push('\n');
+                        emit(val, indent, false, out);
+                    }
+                    // Block literals: clip-style `|`/`|-` cannot represent
+                    // multiple trailing newlines — quote those instead.
+                    Value::Str(s) if s.contains('\n') && !s.ends_with("\n\n") => {
+                        emit_block_literal(s, indent + 2, out);
+                    }
+                    _ => {
+                        out.push(' ');
+                        emit_scalar(val, out);
+                    }
+                }
+            }
+        }
+        Value::Seq(s) => {
+            for (i, item) in s.iter().enumerate() {
+                if i > 0 {
+                    out.push('\n');
+                }
+                push_spaces(indent, out);
+                out.push_str("- ");
+                match item {
+                    Value::Map(m) if !m.is_empty() => emit(item, indent + 2, true, out),
+                    Value::Seq(ss) if !ss.is_empty() => {
+                        // nested sequence: put first item on next line
+                        out.pop();
+                        out.pop();
+                        out.push_str("-\n");
+                        emit(item, indent + 2, false, out);
+                    }
+                    Value::Str(st) if st.contains('\n') => {
+                        // The parser does not accept `- |` block literals;
+                        // emit multi-line sequence strings quoted instead.
+                        out.push_str(&super::json::to_string(&Value::Str(st.clone())));
+                    }
+                    _ => emit_scalar(item, out),
+                }
+            }
+        }
+        scalar => emit_scalar(scalar, out),
+    }
+}
+
+fn emit_block_literal(s: &str, indent: usize, out: &mut String) {
+    if s.ends_with('\n') {
+        out.push_str(" |");
+    } else {
+        out.push_str(" |-");
+    }
+    for line in s.trim_end_matches('\n').split('\n') {
+        out.push('\n');
+        if !line.is_empty() {
+            push_spaces(indent, out);
+            out.push_str(line);
+        }
+    }
+}
+
+fn push_spaces(n: usize, out: &mut String) {
+    for _ in 0..n {
+        out.push(' ');
+    }
+}
+
+fn emit_key(k: &str) -> String {
+    if k.is_empty() || k.contains(':') || k.contains('#') || k.starts_with(['-', ' ', '\'', '"']) {
+        let mut s = String::new();
+        super::json::to_string(&Value::str(k)).clone_into(&mut s);
+        s
+    } else {
+        k.to_string()
+    }
+}
+
+fn emit_scalar(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Float(f) => {
+            let s = format!("{f}");
+            out.push_str(&s);
+            if !s.contains('.') && !s.contains('e') {
+                out.push_str(".0");
+            }
+        }
+        Value::Str(s) => {
+            if needs_quoting(s) {
+                out.push_str(&super::json::to_string(&Value::Str(s.clone())));
+            } else {
+                out.push_str(s);
+            }
+        }
+        // Empty containers render in flow style.
+        Value::Map(m) if m.is_empty() => out.push_str("{}"),
+        Value::Seq(s) if s.is_empty() => out.push_str("[]"),
+        _ => unreachable!("emit_scalar on non-empty container"),
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    if s.is_empty() {
+        return true;
+    }
+    // Would a plain re-parse change type or structure?
+    !matches!(plain_scalar(s), Value::Str(_))
+        || s.starts_with([' ', '-', '?', ':', '&', '*', '!', '|', '>', '%', '@', '`', '\'', '"', '[', ']', '{', '}', '#'])
+        || s.ends_with(' ')
+        || s.contains(": ")
+        || s.ends_with(':')
+        || s.contains(" #")
+        || s.contains('\n')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 3 manifest, verbatim structure.
+    const COW_JOB: &str = r#"apiVersion: wlm.sylabs.io/v1alpha1
+kind: TorqueJob
+metadata:
+  name: cow
+spec:
+  batch: |
+    #!/bin/sh
+    #PBS -l walltime=00:30:00
+    #PBS -l nodes=1
+    #PBS -e $HOME/low.err
+    #PBS -o $HOME/low.out
+    export PATH=$PATH:/usr/local/bin
+    singularity run lolcow_latest.sif
+  results:
+    from: $HOME/low.out
+  mount:
+    name: data
+    hostPath:
+      path: $HOME/
+      type: DirectoryOrCreate
+"#;
+
+    #[test]
+    fn parses_paper_fig3_manifest() {
+        let v = parse(COW_JOB).unwrap();
+        assert_eq!(v.opt_str("kind"), Some("TorqueJob"));
+        assert_eq!(v.path(&["metadata", "name"]).unwrap().as_str(), Some("cow"));
+        let batch = v.path(&["spec", "batch"]).unwrap().as_str().unwrap();
+        assert!(batch.starts_with("#!/bin/sh\n"));
+        assert!(batch.contains("#PBS -l walltime=00:30:00"));
+        assert!(batch.contains("singularity run lolcow_latest.sif"));
+        assert!(batch.ends_with('\n'));
+        assert_eq!(
+            v.path(&["spec", "results", "from"]).unwrap().as_str(),
+            Some("$HOME/low.out")
+        );
+        assert_eq!(
+            v.path(&["spec", "mount", "hostPath", "type"]).unwrap().as_str(),
+            Some("DirectoryOrCreate")
+        );
+    }
+
+    #[test]
+    fn roundtrip_fig3() {
+        let v = parse(COW_JOB).unwrap();
+        let emitted = to_string(&v);
+        let back = parse(&emitted).unwrap();
+        assert_eq!(back, v, "emitted:\n{emitted}");
+    }
+
+    #[test]
+    fn sequences_of_maps() {
+        let y = "containers:\n  - name: a\n    image: img:v1\n    args:\n      - run\n      - \"--fast\"\n  - name: b\n";
+        let v = parse(y).unwrap();
+        let cs = v.get("containers").unwrap().as_seq().unwrap();
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].opt_str("image"), Some("img:v1"));
+        assert_eq!(cs[0].get("args").unwrap().as_seq().unwrap()[1].as_str(), Some("--fast"));
+        assert_eq!(cs[1].opt_str("name"), Some("b"));
+    }
+
+    #[test]
+    fn sequence_at_key_indent() {
+        // k8s style: list items at the same indent as the key
+        let y = "spec:\n  tolerations:\n  - key: virtual-kubelet\n    value: torque\n";
+        let v = parse(y).unwrap();
+        let ts = v.path(&["spec", "tolerations"]).unwrap().as_seq().unwrap();
+        assert_eq!(ts[0].opt_str("key"), Some("virtual-kubelet"));
+    }
+
+    #[test]
+    fn scalar_typing() {
+        let v = parse("a: 1\nb: 1.5\nc: true\nd: null\ne: ~\nf: hello\ng: \"2\"\nh: 1.2.3\n").unwrap();
+        assert_eq!(v.get("a"), Some(&Value::Int(1)));
+        assert_eq!(v.get("b"), Some(&Value::Float(1.5)));
+        assert_eq!(v.get("c"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("d"), Some(&Value::Null));
+        assert_eq!(v.get("e"), Some(&Value::Null));
+        assert_eq!(v.get("f"), Some(&Value::str("hello")));
+        assert_eq!(v.get("g"), Some(&Value::str("2")));
+        assert_eq!(v.get("h"), Some(&Value::str("1.2.3")));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let y = "# header\na: 1 # trailing\n\n# mid\nb: 'x # not comment'\n";
+        let v = parse(y).unwrap();
+        assert_eq!(v.get("a"), Some(&Value::Int(1)));
+        assert_eq!(v.get("b"), Some(&Value::str("x # not comment")));
+    }
+
+    #[test]
+    fn flow_collections() {
+        let v = parse("a: [1, 2, three]\nb: {x: 1, y: [true]}\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_seq().unwrap().len(), 3);
+        assert_eq!(v.path(&["b", "x"]), Some(&Value::Int(1)));
+        assert_eq!(v.path(&["b", "y"]).unwrap().as_seq().unwrap()[0], Value::Bool(true));
+    }
+
+    #[test]
+    fn block_literal_strip_and_fold() {
+        let v = parse("a: |-\n  x\n  y\nb: >\n  one\n  two\n").unwrap();
+        assert_eq!(v.get("a"), Some(&Value::str("x\ny")));
+        assert_eq!(v.get("b"), Some(&Value::str("one two\n")));
+    }
+
+    #[test]
+    fn block_literal_keeps_inner_blank_lines() {
+        let v = parse("s: |\n  l1\n\n  l3\n").unwrap();
+        assert_eq!(v.get("s"), Some(&Value::str("l1\n\nl3\n")));
+    }
+
+    #[test]
+    fn block_literal_with_comment_chars() {
+        // PBS directives start with `#` — they are NOT comments inside a literal.
+        let v = parse("batch: |\n  #PBS -l nodes=1\n  echo hi\n").unwrap();
+        assert_eq!(v.get("batch"), Some(&Value::str("#PBS -l nodes=1\necho hi\n")));
+    }
+
+    #[test]
+    fn multi_document() {
+        let docs = parse_all("---\na: 1\n---\nb: 2\n").unwrap();
+        assert_eq!(docs.len(), 2);
+        assert_eq!(docs[1].get("b"), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("a: 1\nb: 2\n").is_ok());
+        assert!(parse("a: 1\na: 2\n").is_err(), "duplicate key");
+        assert!(parse("a: &anchor x\n").is_err(), "anchor");
+        assert!(parse("key 'no colon'\n").is_err());
+    }
+
+    #[test]
+    fn quoted_strings() {
+        let v = parse("a: \"line\\nbreak\"\nb: 'it''s'\n").unwrap();
+        assert_eq!(v.get("a"), Some(&Value::str("line\nbreak")));
+        assert_eq!(v.get("b"), Some(&Value::str("it's")));
+    }
+
+    #[test]
+    fn emit_quotes_ambiguous_scalars() {
+        let v = Value::map()
+            .with("a", "true")
+            .with("b", "123")
+            .with("c", "- dash")
+            .with("d", "plain");
+        let y = to_string(&v);
+        let back = parse(&y).unwrap();
+        assert_eq!(back, v, "emitted:\n{y}");
+    }
+
+    #[test]
+    fn deep_nesting_roundtrip() {
+        let v = Value::map().with(
+            "a",
+            Value::Seq(vec![
+                Value::map().with("b", Value::Seq(vec![Value::Int(1), Value::str("x y")])),
+                Value::map().with("c", Value::map().with("d", Value::Null)),
+            ]),
+        );
+        let y = to_string(&v);
+        assert_eq!(parse(&y).unwrap(), v, "emitted:\n{y}");
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("").unwrap(), Value::Null);
+        assert_eq!(parse("# only comments\n").unwrap(), Value::Null);
+    }
+}

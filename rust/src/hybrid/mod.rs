@@ -1,0 +1,11 @@
+//! Hybrid testbed: the paper's Fig. 1 architecture in one process.
+//!
+//! An HPC cluster (pbs_server + compute-node moms, queues) and a big-data
+//! cluster (API server + scheduler + kubelets + controllers) joined at the
+//! **login node**, which "belongs to both Kubernetes and Torque clusters":
+//! it hosts the red-box Unix socket, the Torque/Slurm login services, the
+//! kube API RPC surface, the virtual nodes, and both operators.
+
+pub mod testbed;
+
+pub use testbed::{Testbed, TestbedConfig};

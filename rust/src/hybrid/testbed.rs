@@ -1,0 +1,425 @@
+//! Testbed assembly and lifecycle.
+
+use crate::cluster::{Metrics, NodeRole, NodeSpec, Resources, SharedFs};
+use crate::kube::{
+    ApiServer, ControllerRunner, DeploymentController, KubeObject, KubeScheduler, Kubelet,
+    PodPhase, WlmJobView, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+};
+use crate::operator::{
+    self, phase, RedboxBridge, SlurmLoginService, TorqueLoginService, WlmBridge,
+};
+use crate::pbs::{PbsConfig, PbsServer, QueueConfig};
+use crate::redbox::{RedboxClient, RedboxServer};
+use crate::rt::{Shutdown, Timers};
+use crate::singularity::{
+    ComputeEngine, ImageRegistry, Payload, Runtime, RuntimeKind, SifImage, SingularityCri,
+};
+use crate::slurm::{Partition, SlurmConfig, Slurmctld};
+use crate::util::{Error, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Testbed shape (paper Fig. 1 defaults: one head node, compute nodes in a
+/// `batch` queue, a kube master + workers, the shared login node).
+pub struct TestbedConfig {
+    /// Torque compute nodes.
+    pub torque_nodes: usize,
+    pub torque_cores: u32,
+    /// Kubernetes worker nodes (the login node is additionally a worker,
+    /// as in the paper).
+    pub kube_workers: usize,
+    pub kube_cores: u32,
+    /// Extra queues beyond `batch` (name, priority).
+    pub extra_queues: Vec<(String, i64)>,
+    /// Also boot a Slurm cluster + WLM-Operator (for comparisons).
+    pub with_slurm: bool,
+    /// Nominal→real time compression.
+    pub time_scale: f64,
+    /// Attach the PJRT compute engine from this artifacts dir.
+    pub artifacts_dir: Option<PathBuf>,
+    /// Deploy the operator's 4 service containers (paper §III-B) as a
+    /// Kubernetes Deployment.
+    pub operator_deployment: bool,
+    /// Unix socket path for red-box (default: per-pid temp path).
+    pub socket: Option<PathBuf>,
+}
+
+impl Default for TestbedConfig {
+    fn default() -> Self {
+        TestbedConfig {
+            torque_nodes: 4,
+            torque_cores: 8,
+            kube_workers: 2,
+            kube_cores: 8,
+            extra_queues: Vec::new(),
+            with_slurm: false,
+            time_scale: 0.001,
+            artifacts_dir: None,
+            operator_deployment: false,
+            socket: None,
+        }
+    }
+}
+
+/// The running testbed.
+pub struct Testbed {
+    pub api: ApiServer,
+    pub pbs: PbsServer,
+    pub slurm: Option<Slurmctld>,
+    pub fs: SharedFs,
+    pub metrics: Metrics,
+    pub shutdown: Shutdown,
+    pub images: ImageRegistry,
+    redbox: RedboxServer,
+    socket: PathBuf,
+    time_scale: f64,
+}
+
+impl Testbed {
+    /// Boot everything. Daemons run until `shutdown()`.
+    pub fn start(config: TestbedConfig) -> Result<Testbed> {
+        let shutdown = Shutdown::new();
+        let metrics = Metrics::new();
+        let fs = SharedFs::new();
+        let (timers, _timer_handle) = Timers::start(shutdown.clone());
+
+        // ---- images: paper demo + service images + compute payloads ----
+        let images = ImageRegistry::with_defaults();
+        images.push(SifImage::new("wlm-dummy.sif", Payload::Echo { message: "transfer".into() }));
+        images.push(SifImage::new("wlm-collect.sif", Payload::Echo { message: "collect".into() }));
+        images.push(SifImage::new(
+            "torque-operator.sif",
+            Payload::Echo { message: "torque-operator service".into() },
+        ));
+        for variant in ["tiny", "small"] {
+            for steps in [20u32, 50, 100, 200, 300] {
+                images.push(SifImage::new(
+                    format!("cropyield_train_{variant}_{steps}.sif"),
+                    Payload::Compute {
+                        artifact: format!("cropyield_train_{variant}"),
+                        steps,
+                    },
+                ));
+                images.push(SifImage::new(
+                    format!("cropyield_infer_{variant}_{steps}.sif"),
+                    Payload::Compute {
+                        artifact: format!("cropyield_infer_{variant}"),
+                        steps,
+                    },
+                ));
+            }
+        }
+
+        // ---- container runtime (+ optional PJRT compute engine) ----
+        let mut runtime =
+            Runtime::new(RuntimeKind::Singularity, images.clone(), metrics.clone());
+        if let Some(dir) = &config.artifacts_dir {
+            let engine: Arc<dyn ComputeEngine> = Arc::new(crate::runtime::start_pjrt_host(
+                dir,
+                metrics.clone(),
+                shutdown.clone(),
+            )?);
+            runtime = runtime.with_compute(engine);
+        }
+
+        // ---- HPC cluster: pbs_server + moms (Fig. 1 left) ----
+        let torque_node_names: Vec<String> =
+            (0..config.torque_nodes).map(|i| format!("cn{i:02}")).collect();
+        let torque_nodes: Vec<NodeSpec> = torque_node_names
+            .iter()
+            .map(|n| {
+                NodeSpec::new(
+                    n.clone(),
+                    NodeRole::TorqueCompute,
+                    Resources::cores(config.torque_cores, 64 << 30),
+                )
+            })
+            .collect();
+        let mut queues = vec![QueueConfig::batch(
+            &torque_node_names.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        )];
+        for (name, prio) in &config.extra_queues {
+            queues.push(
+                QueueConfig::new(name.clone())
+                    .with_priority(*prio)
+                    .with_nodes(&torque_node_names.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
+            );
+        }
+        let pbs = PbsServer::start(
+            PbsConfig {
+                server_name: "torque-head".into(),
+                queues,
+                sched_period: Duration::from_millis(1),
+                time_scale: config.time_scale,
+            },
+            torque_nodes,
+            runtime.clone(),
+            fs.clone(),
+            Box::new(crate::sched::EasyBackfill),
+            timers.clone(),
+            metrics.clone(),
+            shutdown.clone(),
+        )?;
+
+        // ---- optional Slurm cluster (WLM-Operator baseline) ----
+        let slurm = if config.with_slurm {
+            let names: Vec<String> =
+                (0..config.torque_nodes).map(|i| format!("sn{i:02}")).collect();
+            let nodes: Vec<NodeSpec> = names
+                .iter()
+                .map(|n| {
+                    NodeSpec::new(
+                        n.clone(),
+                        NodeRole::TorqueCompute,
+                        Resources::cores(config.torque_cores, 64 << 30),
+                    )
+                })
+                .collect();
+            Some(Slurmctld::start(
+                SlurmConfig {
+                    cluster_name: "slurm".into(),
+                    partitions: vec![Partition::new(
+                        "normal",
+                        &names.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                    )
+                    .default_partition()],
+                    sched_period: Duration::from_millis(1),
+                    time_scale: config.time_scale,
+                },
+                nodes,
+                runtime.clone(),
+                fs.clone(),
+                Box::new(crate::sched::EasyBackfill),
+                timers.clone(),
+                metrics.clone(),
+                shutdown.clone(),
+            )?)
+        } else {
+            None
+        };
+
+        // ---- login node: red-box socket + services (Fig. 2) ----
+        static SOCKET_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let socket = config.socket.clone().unwrap_or_else(|| {
+            std::env::temp_dir().join(format!(
+                "hpcorc-redbox-{}-{}.sock",
+                std::process::id(),
+                SOCKET_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            ))
+        });
+        let redbox = RedboxServer::start(&socket, shutdown.clone(), metrics.clone())?;
+        redbox.register("torque.Workload", TorqueLoginService::new(pbs.clone()));
+        if let Some(ctld) = &slurm {
+            redbox.register("slurm.Workload", SlurmLoginService::new(ctld.clone()));
+        }
+
+        // ---- big-data cluster: API server + scheduler + kubelets ----
+        let api = ApiServer::new(metrics.clone());
+        redbox.register("kube.Api", api.rpc_service());
+        KubeScheduler::new(api.clone(), metrics.clone())
+            .start(Duration::from_millis(1), shutdown.clone());
+        // Workers + the login node (which is also a kube worker, Fig. 1).
+        let mut worker_names: Vec<String> =
+            (0..config.kube_workers).map(|i| format!("kw{i:02}")).collect();
+        worker_names.push("login".into());
+        for name in &worker_names {
+            let cri = SingularityCri::new(runtime.clone());
+            let kubelet = Kubelet::register(
+                api.clone(),
+                name,
+                Resources::cores(config.kube_cores, 64 << 30),
+                &[],
+                cri,
+                fs.clone(),
+                config.time_scale,
+                metrics.clone(),
+            )?;
+            kubelet.start(Duration::from_millis(1), shutdown.clone());
+        }
+
+        // ---- operators + virtual nodes ----
+        let torque_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::torque(
+            RedboxClient::connect_retry(&socket, Duration::from_secs(5))?,
+        ));
+        operator::register_virtual_nodes(&api, torque_bridge.as_ref(), "torque")?;
+        let torque_op = operator::torque_operator(torque_bridge, metrics.clone());
+        Arc::new(ControllerRunner::new(api.clone(), torque_op, metrics.clone()))
+            .start(shutdown.clone());
+        if slurm.is_some() {
+            let slurm_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::slurm(
+                RedboxClient::connect_retry(&socket, Duration::from_secs(5))?,
+            ));
+            operator::register_virtual_nodes(&api, slurm_bridge.as_ref(), "slurm")?;
+            let slurm_op = operator::wlm_operator(slurm_bridge, metrics.clone());
+            Arc::new(ControllerRunner::new(api.clone(), slurm_op, metrics.clone()))
+                .start(shutdown.clone());
+        }
+        // Deployment controller (+ the operator's own service deployment,
+        // "four Singularity containers … deployed by Kubernetes" §III-B).
+        Arc::new(ControllerRunner::new(
+            api.clone(),
+            Arc::new(DeploymentController),
+            metrics.clone(),
+        ))
+        .start(shutdown.clone());
+        if config.operator_deployment {
+            api.create(DeploymentController::build(
+                "torque-operator",
+                4,
+                "torque-operator.sif",
+                Resources::new(100, 64 << 20, 0),
+            ))?;
+        }
+
+        Ok(Testbed {
+            api,
+            pbs,
+            slurm,
+            fs,
+            metrics,
+            shutdown,
+            images,
+            redbox,
+            socket,
+            time_scale: config.time_scale,
+        })
+    }
+
+    pub fn socket(&self) -> &std::path::Path {
+        &self.socket
+    }
+
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+
+    /// `kubectl apply -f` for a manifest string; returns created names.
+    pub fn kubectl_apply(&self, manifest: &str) -> Result<Vec<String>> {
+        let objs = crate::kube::yaml::parse_manifest(manifest)?;
+        let mut names = Vec::new();
+        for obj in objs {
+            let created = self.api.apply(obj)?;
+            names.push(created.meta.name.clone());
+        }
+        Ok(names)
+    }
+
+    /// Wait until a TorqueJob/SlurmJob reaches a terminal phase.
+    pub fn wait_wlm_job(&self, kind: &str, name: &str, timeout: Duration) -> Result<String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let obj = self.api.get(kind, name)?;
+            let p = obj.status.opt_str("phase").unwrap_or("").to_string();
+            if phase::terminal(&p) {
+                return Ok(p);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::wlm(format!("timeout waiting for {kind}/{name} (phase `{p}`)")));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    pub fn wait_torquejob(&self, name: &str, timeout: Duration) -> Result<String> {
+        self.wait_wlm_job(KIND_TORQUEJOB, name, timeout)
+    }
+
+    pub fn wait_slurmjob(&self, name: &str, timeout: Duration) -> Result<String> {
+        self.wait_wlm_job(KIND_SLURMJOB, name, timeout)
+    }
+
+    /// Wait for a plain pod to finish.
+    pub fn wait_pod(&self, name: &str, timeout: Duration) -> Result<KubeObject> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let obj = self.api.get(KIND_POD, name)?;
+            let p = PodPhase::parse(obj.status.opt_str("phase").unwrap_or(""));
+            if p.terminal() {
+                return Ok(obj);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::wlm(format!("timeout waiting for pod {name}")));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Build a TorqueJob object (programmatic alternative to YAML).
+    pub fn torquejob(name: &str, batch: &str, results_from: &str, mount: &str) -> KubeObject {
+        WlmJobView::build_torquejob(name, batch, results_from, mount)
+    }
+
+    /// Stop every daemon and remove the socket.
+    pub fn stop(mut self) {
+        self.shutdown.trigger();
+        self.redbox.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_boots_and_runs_cow_job() {
+        let tb = Testbed::start(TestbedConfig::default()).unwrap();
+        // The paper's Fig. 3 manifest, via kubectl apply.
+        let names = tb.kubectl_apply(crate::kube::yaml::COW_JOB_YAML).unwrap();
+        assert_eq!(names, vec!["cow"]);
+        let phase = tb.wait_torquejob("cow", Duration::from_secs(30)).unwrap();
+        assert_eq!(phase, "completed");
+        // Fig. 5 output staged to the mount dir.
+        let out = tb.fs.read_string("$HOME/low.out").unwrap();
+        assert!(out.contains("Moo"));
+        tb.stop();
+    }
+
+    #[test]
+    fn operator_deployment_creates_service_pods() {
+        let mut cfg = TestbedConfig::default();
+        cfg.operator_deployment = true;
+        let tb = Testbed::start(cfg).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            let pods = tb.api.list(
+                KIND_POD,
+                &[("deployment".to_string(), "torque-operator".to_string())],
+            );
+            let running = pods
+                .iter()
+                .filter(|p| {
+                    matches!(
+                        PodPhase::parse(p.status.opt_str("phase").unwrap_or("")),
+                        PodPhase::Running | PodPhase::Succeeded
+                    )
+                })
+                .count();
+            if running == 4 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "operator deployment never ready");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        tb.stop();
+    }
+
+    #[test]
+    fn slurm_side_runs_slurmjob() {
+        let mut cfg = TestbedConfig::default();
+        cfg.with_slurm = true;
+        let tb = Testbed::start(cfg).unwrap();
+        let mut obj = WlmJobView::build_torquejob(
+            "scow",
+            "#!/bin/sh\n#SBATCH --nodes=1\n#SBATCH -o $HOME/s.out\nsingularity run lolcow_latest.sif\n",
+            "$HOME/s.out",
+            "$HOME/sres/",
+        );
+        obj.kind = KIND_SLURMJOB.into();
+        tb.api.create(obj).unwrap();
+        let phase = tb.wait_slurmjob("scow", Duration::from_secs(30)).unwrap();
+        assert_eq!(phase, "completed");
+        assert!(tb.fs.read_string("$HOME/sres/s.out").unwrap().contains("Moo"));
+        tb.stop();
+    }
+}

@@ -1,0 +1,492 @@
+//! Kubernetes object model.
+//!
+//! Objects are dynamic (`kind` + metadata + spec/status [`Value`] trees),
+//! exactly how the real API machinery treats CRDs — which is what lets
+//! Torque-Operator "introduce a new object kind, i.e. Torquejob" (paper
+//! §III-B) without touching the store. Typed views (PodView, NodeView,
+//! TorqueJobView) parse the dynamic tree on demand.
+
+use crate::cluster::Resources;
+use crate::encoding::{decode_str_map, encode_str_map, json, Value};
+use crate::util::{Error, Result};
+
+/// Standard object kinds (CRD kinds are plain strings beyond these).
+pub const KIND_POD: &str = "Pod";
+pub const KIND_NODE: &str = "Node";
+pub const KIND_DEPLOYMENT: &str = "Deployment";
+pub const KIND_TORQUEJOB: &str = "TorqueJob";
+pub const KIND_SLURMJOB: &str = "SlurmJob";
+
+/// The apiVersion Torque-Operator registers its CRDs under (paper Fig. 3).
+pub const WLM_API_VERSION: &str = "wlm.sylabs.io/v1alpha1";
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObjectMeta {
+    pub name: String,
+    pub uid: u64,
+    pub resource_version: u64,
+    /// Seconds since apiserver epoch (for AGE columns).
+    pub creation_s: f64,
+    pub labels: Vec<(String, String)>,
+    pub annotations: Vec<(String, String)>,
+    /// Owner reference (kind, name) — drives cascade deletion.
+    pub owner: Option<(String, String)>,
+}
+
+impl ObjectMeta {
+    pub fn named(name: impl Into<String>) -> Self {
+        ObjectMeta { name: name.into(), ..Default::default() }
+    }
+
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn set_label(&mut self, key: &str, val: &str) {
+        for (k, v) in self.labels.iter_mut() {
+            if k == key {
+                *v = val.to_string();
+                return;
+            }
+        }
+        self.labels.push((key.to_string(), val.to_string()));
+    }
+}
+
+/// A dynamic API object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KubeObject {
+    pub kind: String,
+    pub api_version: String,
+    pub meta: ObjectMeta,
+    pub spec: Value,
+    pub status: Value,
+}
+
+impl KubeObject {
+    pub fn new(kind: impl Into<String>, name: impl Into<String>, spec: Value) -> Self {
+        KubeObject {
+            kind: kind.into(),
+            api_version: "v1".into(),
+            meta: ObjectMeta::named(name),
+            spec,
+            status: Value::map(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    /// Encode to the canonical Value tree (JSON/YAML-facing).
+    pub fn encode(&self) -> Value {
+        let mut meta = Value::map()
+            .with("name", self.meta.name.clone())
+            .with("uid", self.meta.uid)
+            .with("resourceVersion", self.meta.resource_version)
+            .with("creationSeconds", self.meta.creation_s);
+        if !self.meta.labels.is_empty() {
+            meta.insert("labels", encode_str_map(&self.meta.labels));
+        }
+        if !self.meta.annotations.is_empty() {
+            meta.insert("annotations", encode_str_map(&self.meta.annotations));
+        }
+        if let Some((k, n)) = &self.meta.owner {
+            meta.insert(
+                "ownerReferences",
+                Value::Seq(vec![Value::map().with("kind", k.clone()).with("name", n.clone())]),
+            );
+        }
+        Value::map()
+            .with("apiVersion", self.api_version.clone())
+            .with("kind", self.kind.clone())
+            .with("metadata", meta)
+            .with("spec", self.spec.clone())
+            .with("status", self.status.clone())
+    }
+
+    /// Decode from a manifest/storage Value tree.
+    pub fn decode(v: &Value) -> Result<KubeObject> {
+        let kind = v.req_str("kind")?.to_string();
+        let meta_v = v.req("metadata")?;
+        let meta = ObjectMeta {
+            name: meta_v.req_str("name")?.to_string(),
+            uid: meta_v.opt_int("uid").unwrap_or(0) as u64,
+            resource_version: meta_v.opt_int("resourceVersion").unwrap_or(0) as u64,
+            creation_s: meta_v.get("creationSeconds").and_then(Value::as_f64).unwrap_or(0.0),
+            labels: meta_v.get("labels").map(decode_str_map).unwrap_or_default(),
+            annotations: meta_v.get("annotations").map(decode_str_map).unwrap_or_default(),
+            owner: meta_v
+                .get("ownerReferences")
+                .and_then(Value::as_seq)
+                .and_then(|s| s.first())
+                .and_then(|o| {
+                    Some((o.opt_str("kind")?.to_string(), o.opt_str("name")?.to_string()))
+                }),
+        };
+        Ok(KubeObject {
+            kind,
+            api_version: v.opt_str("apiVersion").unwrap_or("v1").to_string(),
+            meta,
+            spec: v.get("spec").cloned().unwrap_or_else(Value::map),
+            status: v.get("status").cloned().unwrap_or_else(Value::map),
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        json::to_string(&self.encode())
+    }
+
+    pub fn from_json(s: &str) -> Result<KubeObject> {
+        KubeObject::decode(&json::parse(s)?)
+    }
+}
+
+// ------------------------------------------------------------------- Pods
+
+/// Pod phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+}
+
+impl PodPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PodPhase::Pending => "Pending",
+            PodPhase::Running => "Running",
+            PodPhase::Succeeded => "Succeeded",
+            PodPhase::Failed => "Failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> PodPhase {
+        match s {
+            "Running" => PodPhase::Running,
+            "Succeeded" => PodPhase::Succeeded,
+            "Failed" => PodPhase::Failed,
+            _ => PodPhase::Pending,
+        }
+    }
+
+    pub fn terminal(&self) -> bool {
+        matches!(self, PodPhase::Succeeded | PodPhase::Failed)
+    }
+}
+
+/// Typed view over a Pod's spec/status.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PodView {
+    pub name: String,
+    pub image: String,
+    pub env: Vec<(String, String)>,
+    pub requests: Resources,
+    pub node_name: Option<String>,
+    pub node_selector: Vec<(String, String)>,
+    pub tolerations: Vec<String>,
+    pub phase: PodPhase,
+    pub exit_code: Option<i32>,
+}
+
+impl PodView {
+    pub fn from_object(o: &KubeObject) -> Result<PodView> {
+        if o.kind != KIND_POD {
+            return Err(Error::parse(format!("expected Pod, got {}", o.kind)));
+        }
+        let containers = o
+            .spec
+            .get("containers")
+            .and_then(Value::as_seq)
+            .ok_or_else(|| Error::parse("pod spec.containers missing"))?;
+        let c0 = containers
+            .first()
+            .ok_or_else(|| Error::parse("pod needs at least one container"))?;
+        let requests = c0
+            .path(&["resources", "requests"])
+            .map(|r| -> Result<Resources> {
+                Ok(Resources {
+                    cpu_milli: r
+                        .opt_str("cpu")
+                        .map(Resources::parse_cpu)
+                        .transpose()?
+                        .unwrap_or(0),
+                    mem_bytes: r
+                        .opt_str("memory")
+                        .map(Resources::parse_mem_k8s)
+                        .transpose()?
+                        .unwrap_or(0),
+                    gpus: r.opt_int("gpu").unwrap_or(0) as u32,
+                })
+            })
+            .transpose()?
+            .unwrap_or(Resources::ZERO);
+        Ok(PodView {
+            name: o.meta.name.clone(),
+            image: c0.req_str("image")?.to_string(),
+            env: c0.get("env").map(decode_str_map).unwrap_or_default(),
+            requests,
+            node_name: o.spec.opt_str("nodeName").map(String::from),
+            node_selector: o.spec.get("nodeSelector").map(decode_str_map).unwrap_or_default(),
+            tolerations: o
+                .spec
+                .get("tolerations")
+                .and_then(Value::as_seq)
+                .map(|s| {
+                    s.iter().filter_map(|t| t.opt_str("key").map(String::from)).collect()
+                })
+                .unwrap_or_default(),
+            phase: PodPhase::parse(o.status.opt_str("phase").unwrap_or("Pending")),
+            exit_code: o.status.opt_int("exitCode").map(|i| i as i32),
+        })
+    }
+
+    /// Build a Pod object from this view (status is phase-only).
+    pub fn build(
+        name: &str,
+        image: &str,
+        requests: Resources,
+        env: &[(String, String)],
+    ) -> KubeObject {
+        let mut container = Value::map().with("name", "main").with("image", image);
+        if !env.is_empty() {
+            container.insert("env", encode_str_map(env));
+        }
+        let mut req = Value::map();
+        if requests.cpu_milli > 0 {
+            req.insert("cpu", format!("{}m", requests.cpu_milli));
+        }
+        if requests.mem_bytes > 0 {
+            req.insert("memory", format!("{}Mi", requests.mem_bytes >> 20));
+        }
+        if requests.gpus > 0 {
+            req.insert("gpu", requests.gpus as u64);
+        }
+        container.insert("resources", Value::map().with("requests", req));
+        let spec = Value::map().with("containers", Value::Seq(vec![container]));
+        KubeObject::new(KIND_POD, name, spec)
+    }
+}
+
+// ------------------------------------------------------------------ Nodes
+
+/// Typed view over a Node object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeView {
+    pub name: String,
+    pub capacity: Resources,
+    pub labels: Vec<(String, String)>,
+    /// Taint keys with NoSchedule effect (virtual nodes carry
+    /// `virtual-kubelet`).
+    pub taints: Vec<String>,
+    pub ready: bool,
+    /// Reported runtime, e.g. `singularity-cri`.
+    pub runtime: String,
+}
+
+impl NodeView {
+    pub fn from_object(o: &KubeObject) -> Result<NodeView> {
+        if o.kind != KIND_NODE {
+            return Err(Error::parse(format!("expected Node, got {}", o.kind)));
+        }
+        let cap = o.spec.get("capacity");
+        Ok(NodeView {
+            name: o.meta.name.clone(),
+            capacity: Resources {
+                cpu_milli: cap
+                    .and_then(|c| c.opt_str("cpu"))
+                    .map(Resources::parse_cpu)
+                    .transpose()?
+                    .unwrap_or(0),
+                mem_bytes: cap
+                    .and_then(|c| c.opt_str("memory"))
+                    .map(Resources::parse_mem_k8s)
+                    .transpose()?
+                    .unwrap_or(0),
+                gpus: cap.and_then(|c| c.opt_int("gpu")).unwrap_or(0) as u32,
+            },
+            labels: o.meta.labels.clone(),
+            taints: o
+                .spec
+                .get("taints")
+                .and_then(Value::as_seq)
+                .map(|s| {
+                    s.iter().filter_map(|t| t.opt_str("key").map(String::from)).collect()
+                })
+                .unwrap_or_default(),
+            ready: o.status.opt_str("phase").unwrap_or("Ready") == "Ready",
+            runtime: o.status.opt_str("runtime").unwrap_or("").to_string(),
+        })
+    }
+
+    pub fn build(name: &str, capacity: Resources, taints: &[&str]) -> KubeObject {
+        let cap = Value::map()
+            .with("cpu", format!("{}m", capacity.cpu_milli))
+            .with("memory", format!("{}Mi", capacity.mem_bytes >> 20))
+            .with("gpu", capacity.gpus as u64);
+        let mut spec = Value::map().with("capacity", cap);
+        if !taints.is_empty() {
+            spec.insert(
+                "taints",
+                Value::Seq(
+                    taints
+                        .iter()
+                        .map(|t| Value::map().with("key", *t).with("effect", "NoSchedule"))
+                        .collect(),
+                ),
+            );
+        }
+        let mut node = KubeObject::new(KIND_NODE, name, spec);
+        node.status = Value::map().with("phase", "Ready");
+        node
+    }
+}
+
+// -------------------------------------------------------------- TorqueJob
+
+/// Typed view over the paper's TorqueJob CRD (Fig. 3) and the analogous
+/// SlurmJob (WLM-Operator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WlmJobView {
+    pub name: String,
+    /// The embedded batch script (`spec.batch`, a block literal).
+    pub batch: String,
+    /// `spec.results.from`: file to collect after completion.
+    pub results_from: Option<String>,
+    /// `spec.mount.hostPath.path`: where results are staged.
+    pub mount_path: Option<String>,
+    pub status: String,
+    /// WLM-side job id once submitted (`status.jobId`).
+    pub wlm_job_id: Option<String>,
+}
+
+impl WlmJobView {
+    pub fn from_object(o: &KubeObject) -> Result<WlmJobView> {
+        if o.kind != KIND_TORQUEJOB && o.kind != KIND_SLURMJOB {
+            return Err(Error::parse(format!("expected TorqueJob/SlurmJob, got {}", o.kind)));
+        }
+        Ok(WlmJobView {
+            name: o.meta.name.clone(),
+            batch: o
+                .spec
+                .req_str("batch")
+                .map_err(|_| Error::parse("TorqueJob spec.batch missing"))?
+                .to_string(),
+            results_from: o
+                .spec
+                .path(&["results", "from"])
+                .and_then(Value::as_str)
+                .filter(|s| !s.is_empty())
+                .map(String::from),
+            mount_path: o
+                .spec
+                .path(&["mount", "hostPath", "path"])
+                .and_then(Value::as_str)
+                .filter(|s| !s.is_empty())
+                .map(String::from),
+            status: o.status.opt_str("phase").unwrap_or("").to_string(),
+            wlm_job_id: o.status.opt_str("jobId").map(String::from),
+        })
+    }
+
+    /// Build a TorqueJob object like the paper's cow_job.yaml. Empty
+    /// `results_from`/`mount_path` mean "no results collection".
+    pub fn build_torquejob(name: &str, batch: &str, results_from: &str, mount_path: &str) -> KubeObject {
+        let mut spec = Value::map().with("batch", batch);
+        if !results_from.is_empty() {
+            spec.insert("results", Value::map().with("from", results_from));
+        }
+        if !mount_path.is_empty() {
+            spec.insert(
+                "mount",
+                Value::map().with("name", "data").with(
+                    "hostPath",
+                    Value::map().with("path", mount_path).with("type", "DirectoryOrCreate"),
+                ),
+            );
+        }
+        let mut o = KubeObject::new(KIND_TORQUEJOB, name, spec);
+        o.api_version = WLM_API_VERSION.into();
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_json_roundtrip() {
+        let mut o = KubeObject::new(KIND_POD, "p1", Value::map().with("x", 1i64));
+        o.meta.uid = 42;
+        o.meta.resource_version = 7;
+        o.meta.set_label("app", "web");
+        o.meta.owner = Some((KIND_DEPLOYMENT.into(), "web".into()));
+        o.status = Value::map().with("phase", "Running");
+        let back = KubeObject::from_json(&o.to_json()).unwrap();
+        assert_eq!(back, o);
+    }
+
+    #[test]
+    fn pod_view_roundtrip() {
+        let pod = PodView::build(
+            "p",
+            "lolcow_latest.sif",
+            Resources::new(500, 256 << 20, 0),
+            &[("A".into(), "1".into())],
+        );
+        let v = PodView::from_object(&pod).unwrap();
+        assert_eq!(v.image, "lolcow_latest.sif");
+        assert_eq!(v.requests.cpu_milli, 500);
+        assert_eq!(v.requests.mem_bytes, 256 << 20);
+        assert_eq!(v.env, vec![("A".to_string(), "1".to_string())]);
+        assert_eq!(v.phase, PodPhase::Pending);
+        assert!(v.node_name.is_none());
+    }
+
+    #[test]
+    fn pod_view_rejects_wrong_kind() {
+        let o = KubeObject::new(KIND_NODE, "n", Value::map());
+        assert!(PodView::from_object(&o).is_err());
+        let o = KubeObject::new(KIND_POD, "p", Value::map());
+        assert!(PodView::from_object(&o).is_err(), "no containers");
+    }
+
+    #[test]
+    fn node_view_roundtrip() {
+        let node = NodeView::build("vn-batch", Resources::cores(64, 256 << 30), &["virtual-kubelet"]);
+        let v = NodeView::from_object(&node).unwrap();
+        assert_eq!(v.name, "vn-batch");
+        assert_eq!(v.capacity.cpu_milli, 64_000);
+        assert_eq!(v.taints, vec!["virtual-kubelet"]);
+        assert!(v.ready);
+    }
+
+    #[test]
+    fn torquejob_view_matches_fig3() {
+        let o = WlmJobView::build_torquejob(
+            "cow",
+            "#!/bin/sh\n#PBS -l nodes=1\nsingularity run lolcow_latest.sif\n",
+            "$HOME/low.out",
+            "$HOME/",
+        );
+        assert_eq!(o.api_version, WLM_API_VERSION);
+        assert_eq!(o.kind, KIND_TORQUEJOB);
+        let v = WlmJobView::from_object(&o).unwrap();
+        assert_eq!(v.name, "cow");
+        assert!(v.batch.contains("#PBS -l nodes=1"));
+        assert_eq!(v.results_from.as_deref(), Some("$HOME/low.out"));
+        assert_eq!(v.mount_path.as_deref(), Some("$HOME/"));
+        assert_eq!(v.status, "");
+    }
+
+    #[test]
+    fn phase_parse() {
+        assert_eq!(PodPhase::parse("Running"), PodPhase::Running);
+        assert_eq!(PodPhase::parse("garbage"), PodPhase::Pending);
+        assert!(PodPhase::Succeeded.terminal());
+        assert!(!PodPhase::Running.terminal());
+    }
+}

@@ -1,0 +1,286 @@
+//! API server: the front door of the Kubernetes cluster.
+//!
+//! In-process callers (scheduler, kubelets, controllers, operators) use the
+//! [`ApiServer`] handle directly; remote callers (the `hpcorc kubectl` CLI)
+//! reach the same surface through a red-box RPC service (`kube.Api/*`),
+//! mirroring how the paper's login node hosts both the k8s master and the
+//! Unix-socket bridge.
+
+use super::api::KubeObject;
+use super::store::{Store, WatchEvent};
+use crate::cluster::Metrics;
+use crate::encoding::Value;
+use crate::redbox::{RedboxClient, Service};
+use crate::util::{Error, Result};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// The API server handle (cheap clone; shares the store).
+#[derive(Clone)]
+pub struct ApiServer {
+    store: Store,
+    metrics: Metrics,
+}
+
+impl ApiServer {
+    pub fn new(metrics: Metrics) -> ApiServer {
+        ApiServer { store: Store::new(), metrics }
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.store.now_s()
+    }
+
+    pub fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.metrics.inc("kube.api.create");
+        self.store.create(obj)
+    }
+
+    pub fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.metrics.inc("kube.api.get");
+        self.store.get(kind, name)
+    }
+
+    /// Full update (spec + status) with optimistic concurrency.
+    pub fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.metrics.inc("kube.api.update");
+        self.store.update(obj)
+    }
+
+    /// Status-subresource style update with retry-on-conflict: fetches the
+    /// latest object and applies `f` until it commits (bounded attempts).
+    pub fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: impl Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        for _ in 0..16 {
+            let mut obj = self.store.get(kind, name)?;
+            f(&mut obj);
+            match self.store.update(obj) {
+                Ok(o) => {
+                    self.metrics.inc("kube.api.update_status");
+                    return Ok(o);
+                }
+                Err(e) if e.is_conflict() => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::conflict(kind, name))
+    }
+
+    pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.metrics.inc("kube.api.delete");
+        // Cascade: delete objects owned by this one first.
+        let owned: Vec<KubeObject> = self
+            .store
+            .list_all()
+            .into_iter()
+            .filter(|o| {
+                o.meta.owner.as_ref().map(|(k, n)| k == kind && n == name).unwrap_or(false)
+            })
+            .collect();
+        for o in owned {
+            let _ = self.delete(&o.kind, &o.meta.name);
+        }
+        self.store.delete(kind, name)
+    }
+
+    pub fn list(&self, kind: &str, selector: &[(String, String)]) -> Vec<KubeObject> {
+        self.metrics.inc("kube.api.list");
+        self.store.list(kind, selector)
+    }
+
+    pub fn current_version(&self) -> u64 {
+        self.store.current_version()
+    }
+
+    pub fn watch(&self, kind: Option<&str>, from_version: u64) -> Receiver<WatchEvent> {
+        self.metrics.inc("kube.api.watch");
+        self.store.watch(kind, from_version)
+    }
+
+    /// `kubectl apply`: create, or update (spec-merge) when it exists.
+    pub fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        match self.store.get(&obj.kind, &obj.meta.name) {
+            Ok(existing) => {
+                let mut merged = existing.clone();
+                merged.spec = obj.spec;
+                merged.meta.labels = obj.meta.labels;
+                merged.meta.annotations = obj.meta.annotations;
+                self.store.update(merged)
+            }
+            Err(e) if e.is_not_found() => self.store.create(obj),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Expose this API over a red-box service registry name `kube.Api`.
+    pub fn rpc_service(&self) -> Arc<dyn Service> {
+        Arc::new(ApiService { api: self.clone() })
+    }
+}
+
+struct ApiService {
+    api: ApiServer,
+}
+
+impl Service for ApiService {
+    fn call(&self, method: &str, body: &Value) -> Result<Value> {
+        match method {
+            "Create" => Ok(self.api.create(KubeObject::decode(body)?)?.encode()),
+            "Apply" => Ok(self.api.apply(KubeObject::decode(body)?)?.encode()),
+            "Get" => {
+                let o = self.api.get(body.req_str("kind")?, body.req_str("name")?)?;
+                Ok(o.encode())
+            }
+            "Delete" => {
+                let o = self.api.delete(body.req_str("kind")?, body.req_str("name")?)?;
+                Ok(o.encode())
+            }
+            "List" => {
+                let kind = body.req_str("kind")?;
+                let items = self.api.list(kind, &[]);
+                Ok(Value::map()
+                    .with("serverSeconds", self.api.now_s())
+                    .with("items", Value::Seq(items.iter().map(|o| o.encode()).collect())))
+            }
+            other => Err(Error::rpc(format!("kube.Api has no method `{other}`"))),
+        }
+    }
+}
+
+/// Client-side mirror of the RPC surface (used by the CLI).
+pub struct RemoteApi {
+    client: RedboxClient,
+}
+
+impl RemoteApi {
+    pub fn new(client: RedboxClient) -> RemoteApi {
+        RemoteApi { client }
+    }
+
+    pub fn apply(&self, obj: &KubeObject) -> Result<KubeObject> {
+        KubeObject::decode(&self.client.call("kube.Api/Apply", obj.encode())?)
+    }
+
+    pub fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        KubeObject::decode(
+            &self
+                .client
+                .call("kube.Api/Get", Value::map().with("kind", kind).with("name", name))?,
+        )
+    }
+
+    pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        KubeObject::decode(
+            &self
+                .client
+                .call("kube.Api/Delete", Value::map().with("kind", kind).with("name", name))?,
+        )
+    }
+
+    /// Returns (server time, items) — server time drives AGE columns.
+    pub fn list(&self, kind: &str) -> Result<(f64, Vec<KubeObject>)> {
+        let v = self.client.call("kube.Api/List", Value::map().with("kind", kind))?;
+        let now = v.get("serverSeconds").and_then(Value::as_f64).unwrap_or(0.0);
+        let items = v
+            .get("items")
+            .and_then(Value::as_seq)
+            .map(|s| s.iter().map(KubeObject::decode).collect::<Result<Vec<_>>>())
+            .transpose()?
+            .unwrap_or_default();
+        Ok((now, items))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Value;
+    use crate::kube::api::{KIND_DEPLOYMENT, KIND_POD};
+    use crate::redbox::RedboxServer;
+    use crate::rt::Shutdown;
+
+    fn api() -> ApiServer {
+        ApiServer::new(Metrics::new())
+    }
+
+    fn pod(name: &str) -> KubeObject {
+        KubeObject::new(KIND_POD, name, Value::map().with("v", 1i64))
+    }
+
+    #[test]
+    fn update_status_retries_conflicts() {
+        let a = api();
+        a.create(pod("p")).unwrap();
+        // Interleave an update between get and commit by doing it inside f
+        // on the first call only.
+        let api2 = a.clone();
+        let first = std::sync::atomic::AtomicBool::new(true);
+        let out = a
+            .update_status(KIND_POD, "p", |o| {
+                if first.swap(false, std::sync::atomic::Ordering::SeqCst) {
+                    // racey writer bumps the version under us
+                    api2.update_status(KIND_POD, "p", |o2| {
+                        o2.status.insert("other", "x");
+                    })
+                    .unwrap();
+                }
+                o.status.insert("phase", "Running");
+            })
+            .unwrap();
+        assert_eq!(out.status.opt_str("phase"), Some("Running"));
+        assert_eq!(out.status.opt_str("other"), Some("x"), "racey write preserved");
+    }
+
+    #[test]
+    fn cascade_delete_by_owner() {
+        let a = api();
+        a.create(KubeObject::new(KIND_DEPLOYMENT, "web", Value::map())).unwrap();
+        let mut p = pod("web-1");
+        p.meta.owner = Some((KIND_DEPLOYMENT.into(), "web".into()));
+        a.create(p).unwrap();
+        a.create(pod("standalone")).unwrap();
+        a.delete(KIND_DEPLOYMENT, "web").unwrap();
+        assert!(a.get(KIND_POD, "web-1").unwrap_err().is_not_found());
+        assert!(a.get(KIND_POD, "standalone").is_ok());
+    }
+
+    #[test]
+    fn apply_create_then_merge() {
+        let a = api();
+        let o1 = a.apply(pod("p")).unwrap();
+        a.update_status(KIND_POD, "p", |o| o.status.insert("phase", "Running")).unwrap();
+        // Re-apply with changed spec: spec replaced, status preserved.
+        let mut newer = pod("p");
+        newer.spec.insert("v", 2i64);
+        let o2 = a.apply(newer).unwrap();
+        assert!(o2.meta.resource_version > o1.meta.resource_version);
+        assert_eq!(o2.spec.opt_int("v"), Some(2));
+        assert_eq!(o2.status.opt_str("phase"), Some("Running"));
+    }
+
+    #[test]
+    fn rpc_surface_end_to_end() {
+        let sd = Shutdown::new();
+        let path = std::env::temp_dir()
+            .join(format!("hpcorc-kubeapi-{}.sock", std::process::id()));
+        let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+        let a = api();
+        srv.register("kube.Api", a.rpc_service());
+        let remote = RemoteApi::new(RedboxClient::connect(&path).unwrap());
+
+        let created = remote.apply(&pod("rp")).unwrap();
+        assert!(created.meta.uid > 0);
+        let got = remote.get(KIND_POD, "rp").unwrap();
+        assert_eq!(got.meta.uid, created.meta.uid);
+        let (now, items) = remote.list(KIND_POD).unwrap();
+        assert!(now >= 0.0);
+        assert_eq!(items.len(), 1);
+        remote.delete(KIND_POD, "rp").unwrap();
+        assert!(remote.get(KIND_POD, "rp").is_err());
+        srv.stop();
+    }
+}

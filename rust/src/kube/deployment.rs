@@ -1,0 +1,222 @@
+//! Deployment controller: replicas of a pod template.
+//!
+//! Torque-Operator itself is "set as a Kubernetes deployment" and "builds
+//! four Singularity containers which are deployed by Kubernetes on its
+//! worker nodes to perform the corresponding services" (paper §III-B), so
+//! the testbed needs a working Deployment kind, not just bare pods.
+
+use super::api::{KubeObject, PodPhase, PodView, KIND_DEPLOYMENT, KIND_POD};
+use super::apiserver::ApiServer;
+use super::controller::{Controller, Reconcile};
+use crate::cluster::Resources;
+use crate::encoding::{decode_str_map, Value};
+use crate::util::Result;
+
+pub struct DeploymentController;
+
+impl DeploymentController {
+    /// Build a Deployment object.
+    pub fn build(name: &str, replicas: u32, image: &str, requests: Resources) -> KubeObject {
+        let mut req = Value::map();
+        if requests.cpu_milli > 0 {
+            req.insert("cpu", format!("{}m", requests.cpu_milli));
+        }
+        if requests.mem_bytes > 0 {
+            req.insert("memory", format!("{}Mi", requests.mem_bytes >> 20));
+        }
+        let template = Value::map()
+            .with("image", image)
+            .with("resources", Value::map().with("requests", req));
+        let spec = Value::map()
+            .with("replicas", replicas as u64)
+            .with("template", template);
+        KubeObject::new(KIND_DEPLOYMENT, name, spec)
+    }
+}
+
+impl Controller for DeploymentController {
+    fn kind(&self) -> &str {
+        KIND_DEPLOYMENT
+    }
+
+    fn reconcile(&self, api: &ApiServer, name: &str) -> Result<Reconcile> {
+        let deploy = match api.get(KIND_DEPLOYMENT, name) {
+            Ok(d) => d,
+            // Deleted: cascade handled by the API server's owner logic.
+            Err(e) if e.is_not_found() => return Ok(Reconcile::Ok),
+            Err(e) => return Err(e),
+        };
+        let want = deploy.spec.opt_int("replicas").unwrap_or(0).max(0) as usize;
+        let template = deploy.spec.req("template")?;
+        let image = template.req_str("image")?;
+        let requests = template
+            .path(&["resources", "requests"])
+            .map(|r| -> Result<Resources> {
+                Ok(Resources {
+                    cpu_milli: r
+                        .opt_str("cpu")
+                        .map(Resources::parse_cpu)
+                        .transpose()?
+                        .unwrap_or(0),
+                    mem_bytes: r
+                        .opt_str("memory")
+                        .map(Resources::parse_mem_k8s)
+                        .transpose()?
+                        .unwrap_or(0),
+                    gpus: 0,
+                })
+            })
+            .transpose()?
+            .unwrap_or(Resources::ZERO);
+        let env = template.get("env").map(decode_str_map).unwrap_or_default();
+
+        // Current pods owned by this deployment.
+        let selector = vec![("deployment".to_string(), name.to_string())];
+        let mut pods = api.list(KIND_POD, &selector);
+        // Replace failed pods (restartPolicy: Always, distilled).
+        let mut running = 0usize;
+        for pod in pods.clone() {
+            let view = PodView::from_object(&pod)?;
+            if view.phase == PodPhase::Failed {
+                api.delete(KIND_POD, &pod.meta.name)?;
+                pods.retain(|p| p.meta.name != pod.meta.name);
+            } else {
+                running += 1;
+                let _ = view;
+            }
+        }
+        // Scale up.
+        let mut created = 0;
+        let mut idx = 0;
+        while running + created < want {
+            let pod_name = format!("{name}-{idx}");
+            idx += 1;
+            if pods.iter().any(|p| p.meta.name == pod_name) {
+                continue;
+            }
+            let mut pod = PodView::build(&pod_name, image, requests, &env);
+            pod.meta.set_label("deployment", name);
+            pod.meta.owner = Some((KIND_DEPLOYMENT.to_string(), name.to_string()));
+            match api.create(pod) {
+                Ok(_) => created += 1,
+                Err(e) if matches!(e, crate::util::Error::Api(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        // Scale down (highest index first).
+        let mut excess: Vec<String> = pods.iter().map(|p| p.meta.name.clone()).collect();
+        excess.sort();
+        while running > want {
+            if let Some(victim) = excess.pop() {
+                api.delete(KIND_POD, &victim)?;
+                running -= 1;
+            } else {
+                break;
+            }
+        }
+        // Status.
+        let ready = api
+            .list(KIND_POD, &selector)
+            .iter()
+            .filter_map(|p| PodView::from_object(p).ok())
+            .filter(|v| matches!(v.phase, PodPhase::Running | PodPhase::Succeeded))
+            .count();
+        api.update_status(KIND_DEPLOYMENT, name, |o| {
+            o.status.insert("replicas", want as u64);
+            o.status.insert("readyReplicas", ready as u64);
+        })?;
+        // Poll until all replicas are ready (pods may still be Pending).
+        if ready < want {
+            Ok(Reconcile::RequeueAfter(std::time::Duration::from_millis(10)))
+        } else {
+            Ok(Reconcile::Ok)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Metrics;
+
+    fn setup() -> (ApiServer, DeploymentController) {
+        (ApiServer::new(Metrics::new()), DeploymentController)
+    }
+
+    #[test]
+    fn creates_replica_pods() {
+        let (api, ctrl) = setup();
+        api.create(DeploymentController::build("web", 3, "svc.sif", Resources::ZERO))
+            .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        let pods = api.list(KIND_POD, &[]);
+        assert_eq!(pods.len(), 3);
+        assert!(pods.iter().all(|p| p.meta.label("deployment") == Some("web")));
+        assert!(pods.iter().all(|p| p.meta.owner.is_some()));
+    }
+
+    #[test]
+    fn scale_up_and_down() {
+        let (api, ctrl) = setup();
+        api.create(DeploymentController::build("web", 2, "svc.sif", Resources::ZERO))
+            .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), 2);
+        // Scale to 4.
+        api.update_status(KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 4u64);
+        })
+        .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), 4);
+        // Scale to 1.
+        api.update_status(KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 1u64);
+        })
+        .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), 1);
+    }
+
+    #[test]
+    fn replaces_failed_pods() {
+        let (api, ctrl) = setup();
+        api.create(DeploymentController::build("web", 1, "svc.sif", Resources::ZERO))
+            .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        api.update_status(KIND_POD, "web-0", |o| {
+            o.status.insert("phase", "Failed");
+        })
+        .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        let pods = api.list(KIND_POD, &[]);
+        assert_eq!(pods.len(), 1);
+        let view = PodView::from_object(&pods[0]).unwrap();
+        assert_eq!(view.phase, PodPhase::Pending, "fresh replacement");
+    }
+
+    #[test]
+    fn status_counts_ready() {
+        let (api, ctrl) = setup();
+        api.create(DeploymentController::build("web", 2, "svc.sif", Resources::ZERO))
+            .unwrap();
+        let r = ctrl.reconcile(&api, "web").unwrap();
+        assert!(matches!(r, Reconcile::RequeueAfter(_)), "pods still pending");
+        for p in api.list(KIND_POD, &[]) {
+            api.update_status(KIND_POD, &p.meta.name, |o| {
+                o.status.insert("phase", "Running");
+            })
+            .unwrap();
+        }
+        let r = ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(r, Reconcile::Ok);
+        let d = api.get(KIND_DEPLOYMENT, "web").unwrap();
+        assert_eq!(d.status.opt_int("readyReplicas"), Some(2));
+    }
+
+    #[test]
+    fn deleted_deployment_reconciles_ok() {
+        let (api, ctrl) = setup();
+        assert_eq!(ctrl.reconcile(&api, "ghost").unwrap(), Reconcile::Ok);
+    }
+}

@@ -1,0 +1,294 @@
+//! kubelet: the per-worker node agent.
+//!
+//! Registers its Node object, then reconciles pods bound to it: starts
+//! containers through the CRI (Singularity-CRI here — paper Table I),
+//! tracks them to completion, and writes phase/exit-code/logs back through
+//! the API server.
+
+use super::api::{NodeView, PodPhase, PodView, KIND_NODE, KIND_POD};
+use super::apiserver::ApiServer;
+use crate::cluster::{Metrics, Resources, SharedFs};
+use crate::rt::{self, Shutdown};
+use crate::singularity::{ContainerId, ContainerSpec, ContainerStatus, Cri};
+use crate::util::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct Kubelet<C: Cri> {
+    api: ApiServer,
+    node_name: String,
+    cri: C,
+    fs: SharedFs,
+    time_scale: f64,
+    running: Arc<Mutex<HashMap<String, ContainerId>>>,
+    metrics: Metrics,
+}
+
+impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
+    /// Register the Node object and return the kubelet.
+    pub fn register(
+        api: ApiServer,
+        node_name: &str,
+        capacity: Resources,
+        labels: &[(&str, &str)],
+        cri: C,
+        fs: SharedFs,
+        time_scale: f64,
+        metrics: Metrics,
+    ) -> Result<Kubelet<C>> {
+        let mut node = NodeView::build(node_name, capacity, &[]);
+        for (k, v) in labels {
+            node.meta.set_label(k, v);
+        }
+        node.status.insert("runtime", cri.runtime_name());
+        api.create(node)?;
+        Ok(Kubelet {
+            api,
+            node_name: node_name.to_string(),
+            cri,
+            fs,
+            time_scale,
+            running: Arc::new(Mutex::new(HashMap::new())),
+            metrics,
+        })
+    }
+
+    /// Run as a daemon with the given sync period.
+    pub fn start(self, period: Duration, shutdown: Shutdown)
+    where
+        C: Sync,
+    {
+        let name = format!("kubelet-{}", self.node_name);
+        rt::spawn_named(&name, move || loop {
+            if shutdown.wait_timeout(period) {
+                return;
+            }
+            self.sync_once();
+        });
+    }
+
+    /// One reconcile pass; returns (started, completed). Public for
+    /// deterministic stepping.
+    pub fn sync_once(&self) -> (usize, usize) {
+        let mut started = 0;
+        let mut completed = 0;
+        let pods = self.api.list(KIND_POD, &[]);
+        for obj in pods {
+            let Ok(view) = PodView::from_object(&obj) else { continue };
+            if view.node_name.as_deref() != Some(self.node_name.as_str()) {
+                continue;
+            }
+            let pod_name = view.name.clone();
+            let has_container = self.running.lock().unwrap().contains_key(&pod_name);
+            match (view.phase, has_container) {
+                (PodPhase::Pending, false) => {
+                    let mut spec = ContainerSpec::new(&pod_name, &view.image);
+                    spec.env = view.env.clone();
+                    spec.seed = obj.meta.uid;
+                    spec.time_scale = self.time_scale;
+                    match self.cri.start(spec, self.fs.clone()) {
+                        Ok(id) => {
+                            self.running.lock().unwrap().insert(pod_name.clone(), id);
+                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                                o.status.insert("phase", "Running");
+                                o.status.insert("hostNode", self.node_name.clone());
+                            });
+                            self.metrics.inc("kubelet.pods_started");
+                            started += 1;
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                                o.status.insert("phase", "Failed");
+                                o.status.insert("reason", msg.clone());
+                            });
+                            self.metrics.inc("kubelet.pod_start_failures");
+                        }
+                    }
+                }
+                (PodPhase::Running, true) => {
+                    let id = *self.running.lock().unwrap().get(&pod_name).unwrap();
+                    match self.cri.status(id) {
+                        Ok(ContainerStatus::Exited(res)) => {
+                            let phase =
+                                if res.success() { "Succeeded" } else { "Failed" };
+                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                                o.status.insert("phase", phase);
+                                o.status.insert("exitCode", res.exit_code as i64);
+                                o.status.insert("log", res.stdout.clone());
+                                if !res.stderr.is_empty() {
+                                    o.status.insert("logErr", res.stderr.clone());
+                                }
+                            });
+                            let _ = self.cri.remove(id);
+                            self.running.lock().unwrap().remove(&pod_name);
+                            self.metrics.inc("kubelet.pods_completed");
+                            completed += 1;
+                        }
+                        Ok(ContainerStatus::Failed(msg)) => {
+                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                                o.status.insert("phase", "Failed");
+                                o.status.insert("reason", msg.clone());
+                            });
+                            let _ = self.cri.remove(id);
+                            self.running.lock().unwrap().remove(&pod_name);
+                            completed += 1;
+                        }
+                        _ => {}
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Reap containers whose pods were deleted out from under us.
+        let dangling: Vec<(String, ContainerId)> = {
+            let running = self.running.lock().unwrap();
+            running
+                .iter()
+                .filter(|(pod, _)| self.api.get(KIND_POD, pod).is_err())
+                .map(|(p, id)| (p.clone(), *id))
+                .collect()
+        };
+        for (pod, id) in dangling {
+            let _ = self.cri.stop(id);
+            // remove() once it exits; next sync pass will retry until then.
+            if matches!(self.cri.status(id), Ok(ContainerStatus::Exited(_))) {
+                let _ = self.cri.remove(id);
+                self.running.lock().unwrap().remove(&pod);
+            }
+        }
+        (started, completed)
+    }
+
+    /// Heartbeat the Node object (mark Ready).
+    pub fn heartbeat(&self) {
+        let _ = self.api.update_status(KIND_NODE, &self.node_name, |o| {
+            o.status.insert("phase", "Ready");
+        });
+    }
+
+    pub fn node_name(&self) -> &str {
+        &self.node_name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::singularity::{
+        ImageRegistry, Payload, Runtime, RuntimeKind, SifImage, SingularityCri,
+    };
+
+    fn setup() -> (ApiServer, Kubelet<Arc<SingularityCri>>) {
+        let api = ApiServer::new(Metrics::new());
+        let reg = ImageRegistry::with_defaults();
+        reg.push(SifImage::new("slow.sif", Payload::Sleep { millis: 60_000 }));
+        reg.push(SifImage::new("bad.sif", Payload::Fail { exit_code: 3 }));
+        let cri = SingularityCri::new(Runtime::new(
+            RuntimeKind::Singularity,
+            reg,
+            Metrics::new(),
+        ));
+        let kubelet = Kubelet::register(
+            api.clone(),
+            "w1",
+            Resources::cores(8, 32 << 30),
+            &[],
+            cri,
+            SharedFs::new(),
+            1.0,
+            Metrics::new(),
+        )
+        .unwrap();
+        (api, kubelet)
+    }
+
+    fn bound_pod(api: &ApiServer, name: &str, image: &str) {
+        let mut pod = PodView::build(name, image, Resources::ZERO, &[]);
+        pod.spec.insert("nodeName", "w1");
+        api.create(pod).unwrap();
+    }
+
+    fn phase(api: &ApiServer, name: &str) -> String {
+        api.get(KIND_POD, name).unwrap().status.opt_str("phase").unwrap_or("").to_string()
+    }
+
+    fn drive_until<F: Fn() -> bool>(kubelet: &Kubelet<Arc<SingularityCri>>, pred: F) {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !pred() {
+            assert!(std::time::Instant::now() < deadline, "kubelet never converged");
+            kubelet.sync_once();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn node_registered_with_runtime() {
+        let (api, _kubelet) = setup();
+        let node = NodeView::from_object(&api.get(KIND_NODE, "w1").unwrap()).unwrap();
+        assert_eq!(node.runtime, "singularity-cri");
+        assert_eq!(node.capacity.cpu_milli, 8000);
+    }
+
+    #[test]
+    fn pod_lifecycle_success() {
+        let (api, kubelet) = setup();
+        bound_pod(&api, "p1", "lolcow_latest.sif");
+        let (started, _) = kubelet.sync_once();
+        assert_eq!(started, 1);
+        assert_eq!(phase(&api, "p1"), "Running");
+        drive_until(&kubelet, || phase(&api, "p1") == "Succeeded");
+        let o = api.get(KIND_POD, "p1").unwrap();
+        assert_eq!(o.status.opt_int("exitCode"), Some(0));
+        assert!(o.status.opt_str("log").unwrap().contains("Moo"));
+    }
+
+    #[test]
+    fn pod_failure_reported() {
+        let (api, kubelet) = setup();
+        bound_pod(&api, "pf", "bad.sif");
+        drive_until(&kubelet, || phase(&api, "pf") == "Failed");
+        assert_eq!(api.get(KIND_POD, "pf").unwrap().status.opt_int("exitCode"), Some(3));
+    }
+
+    #[test]
+    fn missing_image_fails_fast() {
+        let (api, kubelet) = setup();
+        bound_pod(&api, "px", "ghost.sif");
+        kubelet.sync_once();
+        assert_eq!(phase(&api, "px"), "Failed");
+        assert!(api
+            .get(KIND_POD, "px")
+            .unwrap()
+            .status
+            .opt_str("reason")
+            .unwrap()
+            .contains("image not found"));
+    }
+
+    #[test]
+    fn ignores_pods_for_other_nodes() {
+        let (api, kubelet) = setup();
+        let mut pod = PodView::build("other", "lolcow_latest.sif", Resources::ZERO, &[]);
+        pod.spec.insert("nodeName", "w2");
+        api.create(pod).unwrap();
+        let (started, _) = kubelet.sync_once();
+        assert_eq!(started, 0);
+    }
+
+    #[test]
+    fn deleted_pod_container_reaped() {
+        let (api, kubelet) = setup();
+        bound_pod(&api, "pd", "slow.sif");
+        kubelet.sync_once();
+        assert_eq!(phase(&api, "pd"), "Running");
+        api.delete(KIND_POD, "pd").unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while kubelet.running.lock().unwrap().contains_key("pd") {
+            assert!(std::time::Instant::now() < deadline);
+            kubelet.sync_once();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Kubernetes-like orchestrator: the big-data cluster of the paper's
+//! testbed (Fig. 1). Dynamic object model with CRDs ([`api`]), versioned
+//! store with watches ([`store`]), API server with an RPC surface
+//! ([`apiserver`]), the scheduler ([`scheduler`]), the node agent
+//! ([`kubelet`]), the controller runtime ([`controller`]), a Deployment
+//! controller ([`deployment`]), and manifest handling ([`yaml`]).
+
+pub mod api;
+pub mod apiserver;
+pub mod controller;
+pub mod deployment;
+pub mod kubelet;
+pub mod scheduler;
+pub mod store;
+pub mod yaml;
+
+pub use api::{
+    KubeObject, NodeView, ObjectMeta, PodPhase, PodView, WlmJobView, KIND_DEPLOYMENT,
+    KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB, WLM_API_VERSION,
+};
+pub use apiserver::{ApiServer, RemoteApi};
+pub use controller::{Controller, ControllerRunner, Reconcile};
+pub use deployment::DeploymentController;
+pub use kubelet::Kubelet;
+pub use scheduler::KubeScheduler;
+pub use store::{Store, WatchEvent};

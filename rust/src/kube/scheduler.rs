@@ -1,0 +1,255 @@
+//! kube-scheduler: assigns pending pods to nodes.
+//!
+//! The standard two-phase cycle: **filter** (resource fit, nodeSelector,
+//! taints/tolerations, node Ready) then **score** (least-allocated), then
+//! **bind** (set `spec.nodeName`). Virtual nodes carry the
+//! `virtual-kubelet` taint, so only the operator's dummy pods — which
+//! tolerate it — land there (paper Fig. 2).
+
+use super::api::{KubeObject, NodeView, PodPhase, PodView, KIND_NODE, KIND_POD};
+use super::apiserver::ApiServer;
+use crate::cluster::{Metrics, Resources};
+use crate::rt::{self, Shutdown};
+use std::time::Duration;
+
+pub struct KubeScheduler {
+    api: ApiServer,
+    metrics: Metrics,
+}
+
+impl KubeScheduler {
+    pub fn new(api: ApiServer, metrics: Metrics) -> KubeScheduler {
+        KubeScheduler { api, metrics }
+    }
+
+    /// Run as a daemon: a scheduling cycle per period.
+    pub fn start(self, period: Duration, shutdown: Shutdown) {
+        rt::pool::spawn_ticker("kube-sched", period, shutdown, move || {
+            self.run_cycle();
+        });
+    }
+
+    /// One full scheduling cycle; returns the number of pods bound.
+    /// Public for deterministic stepping in tests/benches.
+    pub fn run_cycle(&self) -> usize {
+        let t0 = std::time::Instant::now();
+        let nodes: Vec<NodeView> = self
+            .api
+            .list(KIND_NODE, &[])
+            .iter()
+            .filter_map(|o| NodeView::from_object(o).ok())
+            .collect();
+        let pods = self.api.list(KIND_POD, &[]);
+        // Usage per node from bound, non-terminal pods.
+        let mut used: Vec<(String, Resources)> =
+            nodes.iter().map(|n| (n.name.clone(), Resources::ZERO)).collect();
+        let mut pending: Vec<PodView> = Vec::new();
+        for o in &pods {
+            let Ok(view) = PodView::from_object(o) else { continue };
+            match (&view.node_name, view.phase) {
+                (Some(node), phase) if !phase.terminal() => {
+                    if let Some((_, u)) = used.iter_mut().find(|(n, _)| n == node) {
+                        *u += view.requests;
+                    }
+                }
+                (None, PodPhase::Pending) => pending.push(view),
+                _ => {}
+            }
+        }
+        // Sort pending by creation (FIFO-ish, as the real scheduler's
+        // priority queue without priorities).
+        pending.sort_by(|a, b| a.name.cmp(&b.name));
+
+        let mut bound = 0;
+        for pod in pending {
+            let mut candidates: Vec<(&NodeView, Resources)> = nodes
+                .iter()
+                .filter(|n| n.ready)
+                // taints: pod must tolerate every NoSchedule taint
+                .filter(|n| n.taints.iter().all(|t| pod.tolerations.contains(t)))
+                // nodeSelector: all pairs must match node labels
+                .filter(|n| {
+                    pod.node_selector.iter().all(|(k, v)| {
+                        n.labels.iter().any(|(nk, nv)| nk == k && nv == v)
+                    })
+                })
+                .filter_map(|n| {
+                    let u = used
+                        .iter()
+                        .find(|(name, _)| name == &n.name)
+                        .map(|(_, u)| *u)
+                        .unwrap_or(Resources::ZERO);
+                    let free = n.capacity.saturating_sub(&u);
+                    free.fits(&pod.requests).then_some((n, u))
+                })
+                .collect();
+            if candidates.is_empty() {
+                self.metrics.inc("kube.sched.unschedulable");
+                continue;
+            }
+            // Score: least allocated (lowest dominant fraction after adding).
+            candidates.sort_by(|(na, ua), (nb, ub)| {
+                let fa = (*ua + pod.requests).dominant_fraction(&na.capacity);
+                let fb = (*ub + pod.requests).dominant_fraction(&nb.capacity);
+                fa.partial_cmp(&fb).unwrap().then(na.name.cmp(&nb.name))
+            });
+            let chosen = candidates[0].0.name.clone();
+            // Bind.
+            let ok = self
+                .api
+                .update_status(KIND_POD, &pod.name, |o| {
+                    o.spec.insert("nodeName", chosen.clone());
+                })
+                .is_ok();
+            if ok {
+                if let Some((_, u)) = used.iter_mut().find(|(n, _)| n == &chosen) {
+                    *u += pod.requests;
+                }
+                bound += 1;
+                self.metrics.inc("kube.sched.bound");
+            }
+        }
+        self.metrics.observe("kube.sched.cycle_ns", t0.elapsed().as_nanos() as u64);
+        bound
+    }
+}
+
+/// Helper for building schedulable pods in tests and the operator.
+pub fn pod_with_tolerations(mut pod: KubeObject, tolerations: &[&str]) -> KubeObject {
+    if !tolerations.is_empty() {
+        pod.spec.insert(
+            "tolerations",
+            crate::encoding::Value::Seq(
+                tolerations
+                    .iter()
+                    .map(|t| {
+                        crate::encoding::Value::map()
+                            .with("key", *t)
+                            .with("operator", "Exists")
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    pod
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::api::{NodeView, PodView};
+
+    fn setup() -> (ApiServer, KubeScheduler) {
+        let api = ApiServer::new(Metrics::new());
+        let sched = KubeScheduler::new(api.clone(), Metrics::new());
+        (api, sched)
+    }
+
+    fn add_node(api: &ApiServer, name: &str, cores: u32) {
+        api.create(NodeView::build(name, Resources::cores(cores, 32 << 30), &[])).unwrap();
+    }
+
+    fn add_pod(api: &ApiServer, name: &str, cpu_milli: u64) -> KubeObject {
+        let pod = PodView::build(
+            name,
+            "lolcow_latest.sif",
+            Resources::new(cpu_milli, 1 << 30, 0),
+            &[],
+        );
+        api.create(pod).unwrap()
+    }
+
+    fn node_of(api: &ApiServer, pod: &str) -> Option<String> {
+        api.get(KIND_POD, pod).unwrap().spec.opt_str("nodeName").map(String::from)
+    }
+
+    #[test]
+    fn binds_pending_pods() {
+        let (api, sched) = setup();
+        add_node(&api, "w1", 8);
+        add_pod(&api, "p1", 1000);
+        assert_eq!(sched.run_cycle(), 1);
+        assert_eq!(node_of(&api, "p1").as_deref(), Some("w1"));
+        // Second cycle: nothing to do.
+        assert_eq!(sched.run_cycle(), 0);
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let (api, sched) = setup();
+        add_node(&api, "w1", 2); // 2000m
+        add_pod(&api, "p1", 1500);
+        add_pod(&api, "p2", 1500); // doesn't fit alongside p1
+        assert_eq!(sched.run_cycle(), 1);
+        assert!(node_of(&api, "p2").is_none(), "p2 unschedulable");
+        // Free capacity by completing p1.
+        api.update_status(KIND_POD, "p1", |o| {
+            o.status.insert("phase", "Succeeded");
+        })
+        .unwrap();
+        assert_eq!(sched.run_cycle(), 1);
+        assert_eq!(node_of(&api, "p2").as_deref(), Some("w1"));
+    }
+
+    #[test]
+    fn least_allocated_spreads() {
+        let (api, sched) = setup();
+        add_node(&api, "w1", 8);
+        add_node(&api, "w2", 8);
+        add_pod(&api, "p1", 1000);
+        add_pod(&api, "p2", 1000);
+        sched.run_cycle();
+        let n1 = node_of(&api, "p1").unwrap();
+        let n2 = node_of(&api, "p2").unwrap();
+        assert_ne!(n1, n2, "pods spread across nodes");
+    }
+
+    #[test]
+    fn taints_require_toleration() {
+        let (api, sched) = setup();
+        api.create(NodeView::build(
+            "vnode-batch",
+            Resources::cores(64, 256 << 30),
+            &["virtual-kubelet"],
+        ))
+        .unwrap();
+        add_pod(&api, "plain", 100);
+        assert_eq!(sched.run_cycle(), 0, "plain pod cannot land on tainted node");
+        let dummy = pod_with_tolerations(
+            PodView::build("dummy", "lolcow_latest.sif", Resources::ZERO, &[]),
+            &["virtual-kubelet"],
+        );
+        api.create(dummy).unwrap();
+        assert_eq!(sched.run_cycle(), 1);
+        assert_eq!(node_of(&api, "dummy").as_deref(), Some("vnode-batch"));
+    }
+
+    #[test]
+    fn node_selector_filters() {
+        let (api, sched) = setup();
+        add_node(&api, "w1", 8);
+        let mut gpu_node = NodeView::build("w2", Resources::cores(8, 32 << 30), &[]);
+        gpu_node.meta.set_label("accelerator", "gpu");
+        api.create(gpu_node).unwrap();
+        let mut pod = PodView::build("gp", "img", Resources::new(100, 0, 0), &[]);
+        pod.spec.insert(
+            "nodeSelector",
+            crate::encoding::Value::map().with("accelerator", "gpu"),
+        );
+        api.create(pod).unwrap();
+        sched.run_cycle();
+        assert_eq!(node_of(&api, "gp").as_deref(), Some("w2"));
+    }
+
+    #[test]
+    fn not_ready_node_excluded() {
+        let (api, sched) = setup();
+        add_node(&api, "w1", 8);
+        api.update_status(KIND_NODE, "w1", |o| {
+            o.status.insert("phase", "NotReady");
+        })
+        .unwrap();
+        add_pod(&api, "p1", 100);
+        assert_eq!(sched.run_cycle(), 0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Versioned object store with watch streams — etcd + the API machinery's
+//! watch cache, distilled.
+//!
+//! Every mutation bumps a global `resourceVersion`, is applied with
+//! optimistic concurrency (update must carry the current version), and is
+//! appended to a bounded history so watchers can replay from a version.
+
+use super::api::KubeObject;
+use crate::util::{Error, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Watch event types (mirrors the k8s watch API).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WatchEvent {
+    Added(KubeObject),
+    Modified(KubeObject),
+    Deleted(KubeObject),
+}
+
+impl WatchEvent {
+    pub fn object(&self) -> &KubeObject {
+        match self {
+            WatchEvent::Added(o) | WatchEvent::Modified(o) | WatchEvent::Deleted(o) => o,
+        }
+    }
+}
+
+const HISTORY_CAP: usize = 4096;
+
+struct StoreInner {
+    /// (kind, name) → object.
+    objects: BTreeMap<(String, String), KubeObject>,
+    version: u64,
+    uid: u64,
+    history: VecDeque<(u64, WatchEvent)>,
+    watchers: Vec<Watcher>,
+}
+
+struct Watcher {
+    kind: Option<String>,
+    tx: Sender<WatchEvent>,
+}
+
+/// The object store handle.
+#[derive(Clone)]
+pub struct Store {
+    inner: Arc<Mutex<StoreInner>>,
+    epoch: Instant,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store {
+            inner: Arc::new(Mutex::new(StoreInner {
+                objects: BTreeMap::new(),
+                version: 0,
+                uid: 0,
+                history: VecDeque::new(),
+                watchers: Vec::new(),
+            })),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Seconds since store creation (object creation timestamps).
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Create; fails if (kind, name) exists. Returns the stored object
+    /// (with uid/resourceVersion/creation assigned).
+    pub fn create(&self, mut obj: KubeObject) -> Result<KubeObject> {
+        let now = self.now_s();
+        let mut inner = self.inner.lock().unwrap();
+        let key = (obj.kind.clone(), obj.meta.name.clone());
+        if inner.objects.contains_key(&key) {
+            return Err(Error::already_exists(&obj.kind, &obj.meta.name));
+        }
+        inner.version += 1;
+        inner.uid += 1;
+        obj.meta.uid = inner.uid;
+        obj.meta.resource_version = inner.version;
+        obj.meta.creation_s = now;
+        inner.objects.insert(key, obj.clone());
+        let v = inner.version;
+        Self::publish(&mut inner, v, WatchEvent::Added(obj.clone()));
+        Ok(obj)
+    }
+
+    pub fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.inner
+            .lock()
+            .unwrap()
+            .objects
+            .get(&(kind.to_string(), name.to_string()))
+            .cloned()
+            .ok_or_else(|| Error::not_found(kind, name))
+    }
+
+    /// Update with optimistic concurrency: `obj.meta.resource_version` must
+    /// match the stored version.
+    pub fn update(&self, mut obj: KubeObject) -> Result<KubeObject> {
+        let mut inner = self.inner.lock().unwrap();
+        let key = (obj.kind.clone(), obj.meta.name.clone());
+        let current = inner
+            .objects
+            .get(&key)
+            .ok_or_else(|| Error::not_found(&obj.kind, &obj.meta.name))?;
+        if current.meta.resource_version != obj.meta.resource_version {
+            return Err(Error::conflict(&obj.kind, &obj.meta.name));
+        }
+        obj.meta.uid = current.meta.uid;
+        obj.meta.creation_s = current.meta.creation_s;
+        inner.version += 1;
+        obj.meta.resource_version = inner.version;
+        inner.objects.insert(key, obj.clone());
+        let v = inner.version;
+        Self::publish(&mut inner, v, WatchEvent::Modified(obj.clone()));
+        Ok(obj)
+    }
+
+    pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        let mut inner = self.inner.lock().unwrap();
+        let key = (kind.to_string(), name.to_string());
+        let obj = inner
+            .objects
+            .remove(&key)
+            .ok_or_else(|| Error::not_found(kind, name))?;
+        inner.version += 1;
+        let v = inner.version;
+        Self::publish(&mut inner, v, WatchEvent::Deleted(obj.clone()));
+        Ok(obj)
+    }
+
+    /// List objects of a kind, optionally filtered by a label selector
+    /// (all pairs must match).
+    pub fn list(&self, kind: &str, selector: &[(String, String)]) -> Vec<KubeObject> {
+        self.inner
+            .lock()
+            .unwrap()
+            .objects
+            .range((kind.to_string(), String::new())..)
+            .take_while(|((k, _), _)| k == kind)
+            .map(|(_, o)| o.clone())
+            .filter(|o| {
+                selector.iter().all(|(k, v)| o.meta.label(k) == Some(v.as_str()))
+            })
+            .collect()
+    }
+
+    pub fn list_all(&self) -> Vec<KubeObject> {
+        self.inner.lock().unwrap().objects.values().cloned().collect()
+    }
+
+    pub fn current_version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Watch events for `kind` (None = all kinds) from `from_version`
+    /// (exclusive). Replays history first; events older than the retained
+    /// window are silently skipped (callers list+watch, as in k8s).
+    pub fn watch(&self, kind: Option<&str>, from_version: u64) -> Receiver<WatchEvent> {
+        let (tx, rx) = channel();
+        let mut inner = self.inner.lock().unwrap();
+        for (v, ev) in inner.history.iter() {
+            if *v > from_version
+                && kind.map(|k| ev.object().kind == k).unwrap_or(true)
+            {
+                let _ = tx.send(ev.clone());
+            }
+        }
+        inner.watchers.push(Watcher { kind: kind.map(String::from), tx });
+        rx
+    }
+
+    fn publish(inner: &mut StoreInner, version: u64, event: WatchEvent) {
+        inner.history.push_back((version, event.clone()));
+        if inner.history.len() > HISTORY_CAP {
+            inner.history.pop_front();
+        }
+        inner.watchers.retain(|w| match w.kind.as_deref() {
+            // Not subscribed to this kind: keep (dead ones are dropped on
+            // their next matching event).
+            Some(k) if event.object().kind != k => true,
+            _ => w.tx.send(event.clone()).is_ok(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Value;
+    use crate::kube::api::KIND_POD;
+
+    fn pod(name: &str) -> KubeObject {
+        KubeObject::new(KIND_POD, name, Value::map().with("x", 1i64))
+    }
+
+    #[test]
+    fn create_get_delete() {
+        let s = Store::new();
+        let stored = s.create(pod("a")).unwrap();
+        assert_eq!(stored.meta.uid, 1);
+        assert!(stored.meta.resource_version > 0);
+        assert!(s.create(pod("a")).is_err(), "duplicate");
+        assert_eq!(s.get(KIND_POD, "a").unwrap().meta.uid, 1);
+        s.delete(KIND_POD, "a").unwrap();
+        assert!(s.get(KIND_POD, "a").unwrap_err().is_not_found());
+        assert!(s.delete(KIND_POD, "a").is_err());
+    }
+
+    #[test]
+    fn optimistic_concurrency() {
+        let s = Store::new();
+        let a = s.create(pod("a")).unwrap();
+        let mut fresh = a.clone();
+        fresh.spec.insert("x", 2i64);
+        let updated = s.update(fresh).unwrap();
+        assert!(updated.meta.resource_version > a.meta.resource_version);
+        // Updating with the stale version conflicts.
+        let mut stale = a;
+        stale.spec.insert("x", 3i64);
+        assert!(s.update(stale).unwrap_err().is_conflict());
+    }
+
+    #[test]
+    fn list_with_selector() {
+        let s = Store::new();
+        let mut a = pod("a");
+        a.meta.set_label("app", "web");
+        let mut b = pod("b");
+        b.meta.set_label("app", "db");
+        s.create(a).unwrap();
+        s.create(b).unwrap();
+        s.create(KubeObject::new("Node", "n1", Value::map())).unwrap();
+        assert_eq!(s.list(KIND_POD, &[]).len(), 2);
+        let sel = vec![("app".to_string(), "web".to_string())];
+        let filtered = s.list(KIND_POD, &sel);
+        assert_eq!(filtered.len(), 1);
+        assert_eq!(filtered[0].meta.name, "a");
+        assert_eq!(s.list("Node", &[]).len(), 1);
+    }
+
+    #[test]
+    fn watch_receives_live_events() {
+        let s = Store::new();
+        let rx = s.watch(Some(KIND_POD), s.current_version());
+        s.create(pod("a")).unwrap();
+        let mut a2 = s.get(KIND_POD, "a").unwrap();
+        a2.status = Value::map().with("phase", "Running");
+        s.update(a2).unwrap();
+        s.delete(KIND_POD, "a").unwrap();
+        let events: Vec<WatchEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 3);
+        assert!(matches!(events[0], WatchEvent::Added(_)));
+        assert!(matches!(events[1], WatchEvent::Modified(_)));
+        assert!(matches!(events[2], WatchEvent::Deleted(_)));
+    }
+
+    #[test]
+    fn watch_replays_history_from_version() {
+        let s = Store::new();
+        s.create(pod("a")).unwrap();
+        let v = s.current_version();
+        s.create(pod("b")).unwrap();
+        let rx = s.watch(Some(KIND_POD), v);
+        let events: Vec<WatchEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1, "only b replayed");
+        assert_eq!(events[0].object().meta.name, "b");
+    }
+
+    #[test]
+    fn watch_filters_kind() {
+        let s = Store::new();
+        let rx = s.watch(Some("Node"), 0);
+        s.create(pod("a")).unwrap();
+        s.create(KubeObject::new("Node", "n1", Value::map())).unwrap();
+        let events: Vec<WatchEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].object().kind, "Node");
+    }
+
+    #[test]
+    fn update_preserves_identity() {
+        let s = Store::new();
+        let a = s.create(pod("a")).unwrap();
+        let mut mod_a = a.clone();
+        mod_a.meta.uid = 999; // attempts to forge identity are ignored
+        mod_a.meta.creation_s = -1.0;
+        let updated = s.update(mod_a).unwrap();
+        assert_eq!(updated.meta.uid, a.meta.uid);
+        assert_eq!(updated.meta.creation_s, a.meta.creation_s);
+    }
+}

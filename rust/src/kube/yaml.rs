@@ -1,0 +1,117 @@
+//! Manifest handling: YAML ⇄ [`KubeObject`] (kubectl apply / get -o yaml).
+
+use super::api::KubeObject;
+use crate::encoding::{yaml, Value};
+use crate::util::{Error, Result};
+
+/// The paper's Fig. 3 manifest, verbatim — used by tests, the quickstart
+/// example, and `hpcorc demo`.
+pub const COW_JOB_YAML: &str = r#"apiVersion: wlm.sylabs.io/v1alpha1
+kind: TorqueJob
+metadata:
+  name: cow
+spec:
+  batch: |
+    #!/bin/sh
+    #PBS -l walltime=00:30:00
+    #PBS -l nodes=1
+    #PBS -e $HOME/low.err
+    #PBS -o $HOME/low.out
+    export PATH=$PATH:/usr/local/bin
+    singularity run lolcow_latest.sif
+  results:
+    from: $HOME/low.out
+  mount:
+    name: data
+    hostPath:
+      path: $HOME/
+      type: DirectoryOrCreate
+"#;
+
+/// Parse a (possibly multi-document) manifest into objects.
+pub fn parse_manifest(text: &str) -> Result<Vec<KubeObject>> {
+    let docs = yaml::parse_all(text)?;
+    docs.iter()
+        .filter(|d| !d.is_null())
+        .map(|d| {
+            validate(d)?;
+            KubeObject::decode(d)
+        })
+        .collect()
+}
+
+/// Render an object as kubectl-style YAML.
+pub fn to_yaml(obj: &KubeObject) -> String {
+    yaml::to_string(&obj.encode())
+}
+
+fn validate(v: &Value) -> Result<()> {
+    let kind = v
+        .opt_str("kind")
+        .ok_or_else(|| Error::parse("manifest missing `kind`"))?;
+    if kind.is_empty() {
+        return Err(Error::parse("manifest `kind` is empty"));
+    }
+    let name = v
+        .path(&["metadata", "name"])
+        .and_then(Value::as_str)
+        .ok_or_else(|| Error::parse("manifest missing `metadata.name`"))?;
+    // RFC 1123 label-ish validation, as the API server enforces.
+    if name.is_empty()
+        || name.len() > 253
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-' || c == '.')
+        || name.starts_with('-')
+        || name.ends_with('-')
+    {
+        return Err(Error::parse(format!("invalid object name `{name}`")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fig3_manifest() {
+        let objs = parse_manifest(COW_JOB_YAML).unwrap();
+        assert_eq!(objs.len(), 1);
+        let o = &objs[0];
+        assert_eq!(o.kind, "TorqueJob");
+        assert_eq!(o.api_version, "wlm.sylabs.io/v1alpha1");
+        assert_eq!(o.meta.name, "cow");
+        let view = crate::kube::api::WlmJobView::from_object(o).unwrap();
+        assert!(view.batch.contains("#PBS -l walltime=00:30:00"));
+        assert!(view.batch.contains("singularity run lolcow_latest.sif"));
+        assert_eq!(view.results_from.as_deref(), Some("$HOME/low.out"));
+        assert_eq!(view.mount_path.as_deref(), Some("$HOME/"));
+    }
+
+    #[test]
+    fn yaml_roundtrip() {
+        let objs = parse_manifest(COW_JOB_YAML).unwrap();
+        let emitted = to_yaml(&objs[0]);
+        let back = parse_manifest(&emitted).unwrap();
+        assert_eq!(back[0].spec, objs[0].spec);
+        assert_eq!(back[0].meta.name, objs[0].meta.name);
+    }
+
+    #[test]
+    fn multi_document() {
+        let text = "kind: Pod\nmetadata:\n  name: a\nspec:\n  containers:\n    - name: c\n      image: i\n---\nkind: Pod\nmetadata:\n  name: b\nspec:\n  containers:\n    - name: c\n      image: i\n";
+        let objs = parse_manifest(text).unwrap();
+        assert_eq!(objs.len(), 2);
+        assert_eq!(objs[1].meta.name, "b");
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(parse_manifest("metadata:\n  name: x\n").is_err(), "no kind");
+        assert!(parse_manifest("kind: Pod\n").is_err(), "no name");
+        assert!(parse_manifest("kind: Pod\nmetadata:\n  name: Bad_Name\n").is_err());
+        assert!(parse_manifest("kind: Pod\nmetadata:\n  name: -lead\n").is_err());
+        assert!(parse_manifest("kind: Pod\nmetadata:\n  name: ok-name\n").is_ok());
+    }
+}

@@ -1,0 +1,33 @@
+//! # hpcorc — Container Orchestration on HPC Systems, reproduced
+//!
+//! A full-system reproduction of Zhou et al., *Container Orchestration on
+//! HPC Systems* (CS.DC 2020): the **Torque-Operator** bridging a
+//! Kubernetes-like orchestrator ([`kube`]) and a Torque/PBS-like HPC
+//! workload manager ([`pbs`]), with a Slurm baseline ([`slurm`]) for the
+//! WLM-Operator comparison, Singularity-style containers ([`singularity`]),
+//! the red-box Unix-socket RPC bridge ([`redbox`]), and AOT-compiled
+//! JAX/Pallas compute payloads executed from Rust via PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! reproduction results. Python never runs on the request path: all
+//! artifacts under `artifacts/` are produced once by `make artifacts`.
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod encoding;
+pub mod hybrid;
+pub mod kube;
+pub mod operator;
+pub mod pbs;
+pub mod redbox;
+pub mod rt;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod singularity;
+pub mod slurm;
+pub mod util;
+pub mod workload;
+
+pub use util::{Error, Result};

@@ -1,0 +1,6 @@
+//! hpcorc binary entrypoint — see `hpcorc help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(hpcorc::cli::main(argv));
+}

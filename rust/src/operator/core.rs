@@ -1,0 +1,481 @@
+//! The operator core — the paper's contribution.
+//!
+//! One controller drives a `TorqueJob` (or `SlurmJob`) through the flow of
+//! paper §III-B / Fig. 2:
+//!
+//! 1. **dummy pod** `<job>-submit` is created with the `virtual-kubelet`
+//!    toleration and a nodeSelector for the target queue's virtual node;
+//!    the *Kubernetes* scheduler places it (this is the "containerised
+//!    applications can be better scheduled … by taking advantage of the
+//!    scheduling policies of Kubernetes" hook).
+//! 2. once the dummy pod is bound, the embedded batch script is submitted
+//!    through red-box (`qsub` / `sbatch`) and the WLM job id recorded in
+//!    `status.jobId`.
+//! 3. the operator polls job status over red-box and mirrors it into
+//!    `status.phase` (what `kubectl get torquejob` shows, Fig. 4).
+//! 4. on completion a **results pod** `<job>-collect` stages
+//!    `spec.results.from` into the directory from `spec.mount.hostPath`
+//!    (Fig. 5), then the job object reaches `completed`.
+
+use super::redbox_svc::{WlmBridge, WlmStatus};
+use super::virtual_node::{LABEL_QUEUE, LABEL_WLM, VIRTUAL_KUBELET_TAINT};
+use crate::cluster::{Metrics, Resources};
+use crate::encoding::Value;
+use crate::kube::scheduler::pod_with_tolerations;
+use crate::kube::{ApiServer, Controller, PodView, Reconcile, WlmJobView, KIND_POD};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Operator phases surfaced in `status.phase` (lowercase as in Fig. 4).
+pub mod phase {
+    pub const PENDING: &str = "pending";
+    pub const QUEUED: &str = "queued";
+    pub const RUNNING: &str = "running";
+    pub const TRANSFERRING: &str = "transferring-results";
+    pub const COMPLETED: &str = "completed";
+    pub const FAILED: &str = "failed";
+    pub const CANCELLED: &str = "cancelled";
+    pub const TIMEOUT: &str = "timeout";
+
+    pub fn terminal(p: &str) -> bool {
+        matches!(p, COMPLETED | FAILED | CANCELLED | TIMEOUT)
+    }
+}
+
+/// How the operator extracts the destination queue from the batch script.
+pub type QueueExtractor = fn(&str) -> Option<String>;
+
+pub fn torque_queue_extractor(script: &str) -> Option<String> {
+    crate::pbs::PbsScript::parse(script).ok().and_then(|s| s.queue)
+}
+
+pub fn slurm_queue_extractor(script: &str) -> Option<String> {
+    crate::slurm::SlurmScript::parse(script).ok().and_then(|s| s.partition)
+}
+
+pub struct OperatorConfig {
+    /// CRD kind handled (`TorqueJob` / `SlurmJob`).
+    pub kind: &'static str,
+    /// WLM backend name for labels (`torque` / `slurm`).
+    pub wlm: &'static str,
+    /// Poll interval for WLM job status.
+    pub poll: Duration,
+    pub queue_extractor: QueueExtractor,
+}
+
+impl OperatorConfig {
+    pub fn torque() -> Self {
+        OperatorConfig {
+            kind: crate::kube::KIND_TORQUEJOB,
+            wlm: "torque",
+            // Perf pass (EXPERIMENTS.md §Perf): 5ms → 1ms poll cut mean
+            // operator overhead ~9ms → ~3ms/job; red-box JobStatus costs
+            // ~10µs, so polling at 1ms adds negligible login-node load.
+            poll: Duration::from_millis(1),
+            queue_extractor: torque_queue_extractor,
+        }
+    }
+
+    pub fn slurm() -> Self {
+        OperatorConfig {
+            kind: crate::kube::KIND_SLURMJOB,
+            wlm: "slurm",
+            poll: Duration::from_millis(1),
+            queue_extractor: slurm_queue_extractor,
+        }
+    }
+}
+
+/// The operator (generic over the WLM bridge). `TorqueOperator` and
+/// `WlmOperator` (Slurm) are this type with different configs.
+pub struct WlmJobOperator {
+    config: OperatorConfig,
+    bridge: Arc<dyn WlmBridge>,
+    /// name → WLM job id, for cancellation when the object is deleted.
+    tracked: Mutex<HashMap<String, String>>,
+    metrics: Metrics,
+}
+
+impl WlmJobOperator {
+    pub fn new(
+        config: OperatorConfig,
+        bridge: Arc<dyn WlmBridge>,
+        metrics: Metrics,
+    ) -> Arc<Self> {
+        Arc::new(WlmJobOperator { config, bridge, tracked: Mutex::new(HashMap::new()), metrics })
+    }
+
+    fn dummy_pod_name(job: &str) -> String {
+        format!("{job}-submit")
+    }
+
+    fn results_pod_name(job: &str) -> String {
+        format!("{job}-collect")
+    }
+
+    /// Create the dummy pod targeting the queue's virtual node.
+    fn create_dummy_pod(&self, api: &ApiServer, job: &WlmJobView, queue: &str) -> Result<()> {
+        let name = Self::dummy_pod_name(&job.name);
+        let mut pod = pod_with_tolerations(
+            PodView::build(&name, "wlm-dummy.sif", Resources::new(1, 1 << 20, 0), &[]),
+            &[VIRTUAL_KUBELET_TAINT],
+        );
+        pod.spec.insert(
+            "nodeSelector",
+            Value::map()
+                .with(LABEL_QUEUE, queue)
+                .with(LABEL_WLM, self.config.wlm),
+        );
+        pod.meta.set_label("wlm-job", &job.name);
+        pod.meta.owner = Some((self.config.kind.to_string(), job.name.clone()));
+        match api.create(pod) {
+            Ok(_) => Ok(()),
+            Err(ref e) if matches!(e, Error::Api(crate::util::ApiError::AlreadyExists { .. })) => {
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Stage results: read `results.from` from the WLM cluster and write it
+    /// into the hostPath directory, via a results pod object (the paper's
+    /// second dummy pod).
+    fn collect_results(&self, api: &ApiServer, job: &WlmJobView) -> Result<()> {
+        let (Some(from), Some(mount)) = (&job.results_from, &job.mount_path) else {
+            return Ok(()); // nothing requested
+        };
+        let pod_name = Self::results_pod_name(&job.name);
+        let mut pod = pod_with_tolerations(
+            PodView::build(&pod_name, "wlm-collect.sif", Resources::new(1, 1 << 20, 0), &[]),
+            &[VIRTUAL_KUBELET_TAINT],
+        );
+        pod.meta.set_label("wlm-job", &job.name);
+        pod.meta.owner = Some((self.config.kind.to_string(), job.name.clone()));
+        let _ = api.create(pod); // AlreadyExists ok (retry path)
+        let content = self.bridge.read_file(from)?;
+        let base = from.trim_end_matches('/').rsplit('/').next().unwrap_or("results.out");
+        let target = if mount.ends_with('/') {
+            format!("{mount}{base}")
+        } else {
+            format!("{mount}/{base}")
+        };
+        self.bridge.write_file(&target, &content)?;
+        let _ = api.update_status(KIND_POD, &pod_name, |o| {
+            o.status.insert("phase", "Succeeded");
+            o.status.insert("log", format!("staged {from} -> {target}"));
+        });
+        self.metrics.inc("operator.results_collected");
+        Ok(())
+    }
+
+    fn set_phase(&self, api: &ApiServer, name: &str, phase: &str) -> Result<()> {
+        api.update_status(self.config.kind, name, |o| {
+            o.status.insert("phase", phase);
+        })?;
+        Ok(())
+    }
+}
+
+impl Controller for WlmJobOperator {
+    fn kind(&self) -> &str {
+        self.config.kind
+    }
+
+    fn reconcile(&self, api: &ApiServer, name: &str) -> Result<Reconcile> {
+        let obj = match api.get(self.config.kind, name) {
+            Ok(o) => o,
+            Err(e) if e.is_not_found() => {
+                // Object deleted: cancel the WLM job if still tracked.
+                if let Some(job_id) = self.tracked.lock().unwrap().remove(name) {
+                    let _ = self.bridge.cancel(&job_id);
+                    self.metrics.inc("operator.cancelled_on_delete");
+                }
+                return Ok(Reconcile::Ok);
+            }
+            Err(e) => return Err(e),
+        };
+        let view = WlmJobView::from_object(&obj)?;
+
+        match view.status.as_str() {
+            // New object: create the dummy pod on the queue's virtual node.
+            "" => {
+                let queue = (self.config.queue_extractor)(&view.batch)
+                    .or_else(|| self.bridge.queues().ok().and_then(|q| q.first().cloned()))
+                    .ok_or_else(|| Error::wlm("no destination queue"))?;
+                self.create_dummy_pod(api, &view, &queue)?;
+                self.set_phase(api, name, phase::PENDING)?;
+                self.metrics.inc("operator.jobs_admitted");
+                Ok(Reconcile::RequeueAfter(self.config.poll))
+            }
+            // Waiting for the Kubernetes scheduler to bind the dummy pod.
+            phase::PENDING => {
+                let dummy = api.get(KIND_POD, &Self::dummy_pod_name(name))?;
+                let bound = dummy.spec.opt_str("nodeName").is_some();
+                if !bound {
+                    return Ok(Reconcile::RequeueAfter(self.config.poll));
+                }
+                // Dummy pod placed: transfer the job through red-box (qsub).
+                let job_id = self.bridge.submit(&view.batch, "kube-operator")?;
+                self.tracked.lock().unwrap().insert(name.to_string(), job_id.clone());
+                api.update_status(self.config.kind, name, |o| {
+                    o.status.insert("phase", phase::QUEUED);
+                    o.status.insert("jobId", job_id.clone());
+                })?;
+                // The dummy pod's transfer duty is done.
+                let _ = api.update_status(KIND_POD, &Self::dummy_pod_name(name), |o| {
+                    o.status.insert("phase", "Succeeded");
+                    o.status.insert("log", format!("submitted as {job_id}"));
+                });
+                self.metrics.inc("operator.jobs_submitted");
+                Ok(Reconcile::RequeueAfter(self.config.poll))
+            }
+            // Mirror WLM status until terminal.
+            phase::QUEUED | phase::RUNNING => {
+                let job_id = view
+                    .wlm_job_id
+                    .clone()
+                    .ok_or_else(|| Error::internal("queued job without jobId"))?;
+                let status = self.bridge.status(&job_id)?;
+                let next = match status {
+                    WlmStatus::Queued => phase::QUEUED,
+                    WlmStatus::Running => phase::RUNNING,
+                    WlmStatus::Completed => phase::TRANSFERRING,
+                    WlmStatus::Failed { exit_code } => {
+                        api.update_status(self.config.kind, name, |o| {
+                            o.status.insert("exitCode", exit_code as i64);
+                        })?;
+                        phase::FAILED
+                    }
+                    WlmStatus::Cancelled => phase::CANCELLED,
+                    WlmStatus::Timeout => phase::TIMEOUT,
+                };
+                if next != view.status {
+                    self.set_phase(api, name, next)?;
+                }
+                if phase::terminal(next) {
+                    self.tracked.lock().unwrap().remove(name);
+                    self.metrics.inc("operator.jobs_finished");
+                    Ok(Reconcile::Ok)
+                } else {
+                    Ok(Reconcile::RequeueAfter(self.config.poll))
+                }
+            }
+            // Job done on the WLM: stage results, then complete.
+            phase::TRANSFERRING => {
+                self.collect_results(api, &view)?;
+                self.set_phase(api, name, phase::COMPLETED)?;
+                self.tracked.lock().unwrap().remove(name);
+                self.metrics.inc("operator.jobs_finished");
+                Ok(Reconcile::Ok)
+            }
+            p if phase::terminal(p) => Ok(Reconcile::Ok),
+            other => Err(Error::internal(format!("unknown operator phase `{other}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeRole, NodeSpec, SharedFs};
+    use crate::kube::{KubeScheduler, KIND_TORQUEJOB};
+    use crate::operator::redbox_svc::{RedboxBridge, TorqueLoginService};
+    use crate::operator::virtual_node::register_virtual_nodes;
+    use crate::pbs::{PbsConfig, PbsServer};
+    use crate::redbox::{RedboxClient, RedboxServer};
+    use crate::rt::{Shutdown, Timers};
+    use crate::sched::EasyBackfill;
+    use crate::singularity::{ImageRegistry, Runtime, RuntimeKind};
+    use std::time::Instant;
+
+    struct Env {
+        api: ApiServer,
+        sched: KubeScheduler,
+        operator: Arc<WlmJobOperator>,
+        pbs: PbsServer,
+        _rb: RedboxServer,
+        sd: Shutdown,
+    }
+
+    fn setup() -> Env {
+        let sd = Shutdown::new();
+        let (timers, _) = Timers::start(sd.clone());
+        let runtime = Runtime::new(
+            RuntimeKind::Singularity,
+            ImageRegistry::with_defaults(),
+            Metrics::new(),
+        );
+        let nodes = vec![
+            NodeSpec::new("cn01", NodeRole::TorqueCompute, Resources::cores(8, 32 << 30)),
+            NodeSpec::new("cn02", NodeRole::TorqueCompute, Resources::cores(8, 32 << 30)),
+        ];
+        let mut cfg = PbsConfig::default();
+        cfg.time_scale = 0.001;
+        cfg.sched_period = Duration::from_millis(2);
+        let pbs = PbsServer::start(
+            cfg,
+            nodes,
+            runtime,
+            SharedFs::new(),
+            Box::new(EasyBackfill),
+            timers,
+            Metrics::new(),
+            sd.clone(),
+        )
+        .unwrap();
+        let sock = std::env::temp_dir().join(format!(
+            "hpcorc-opcore-{}-{:x}.sock",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .subsec_nanos()
+        ));
+        let mut rb = RedboxServer::start(&sock, sd.clone(), Metrics::new()).unwrap();
+        rb.register("torque.Workload", TorqueLoginService::new(pbs.clone()));
+        let bridge: Arc<dyn WlmBridge> =
+            Arc::new(RedboxBridge::torque(RedboxClient::connect(&sock).unwrap()));
+        let api = ApiServer::new(Metrics::new());
+        register_virtual_nodes(&api, bridge.as_ref(), "torque").unwrap();
+        let sched = KubeScheduler::new(api.clone(), Metrics::new());
+        let operator = WlmJobOperator::new(OperatorConfig::torque(), bridge, Metrics::new());
+        Env { api, sched, operator, pbs, _rb: rb, sd }
+    }
+
+    /// Drive scheduler + operator until the job object reaches a terminal
+    /// phase (deterministic stepping, no daemon threads).
+    fn drive(env: &Env, name: &str, timeout: Duration) -> String {
+        let deadline = Instant::now() + timeout;
+        loop {
+            env.sched.run_cycle();
+            let _ = env.operator.reconcile(&env.api, name);
+            let obj = env.api.get(KIND_TORQUEJOB, name).unwrap();
+            let p = obj.status.opt_str("phase").unwrap_or("").to_string();
+            if phase::terminal(&p) {
+                return p;
+            }
+            assert!(Instant::now() < deadline, "stuck in phase `{p}`");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn cow_job() -> crate::kube::KubeObject {
+        WlmJobView::build_torquejob(
+            "cow",
+            "#!/bin/sh\n#PBS -l walltime=00:30:00\n#PBS -l nodes=1\n#PBS -e $HOME/low.err\n#PBS -o $HOME/low.out\nexport PATH=$PATH:/usr/local/bin\nsingularity run lolcow_latest.sif\n",
+            "$HOME/low.out",
+            "$HOME/results/",
+        )
+    }
+
+    #[test]
+    fn paper_fig3_to_fig5_flow() {
+        let env = setup();
+        env.api.create(cow_job()).unwrap();
+        let final_phase = drive(&env, "cow", Duration::from_secs(20));
+        assert_eq!(final_phase, phase::COMPLETED);
+
+        // Fig. 2 artifacts: dummy pod landed on the virtual node, succeeded.
+        let dummy = env.api.get(KIND_POD, "cow-submit").unwrap();
+        assert_eq!(dummy.spec.opt_str("nodeName"), Some("vnode-torque-batch"));
+        assert_eq!(dummy.status.opt_str("phase"), Some("Succeeded"));
+        assert!(dummy.status.opt_str("log").unwrap().contains("torque-head"));
+
+        // Fig. 5: results staged into the mount directory.
+        let collected = env.pbs.fs().read_string("$HOME/results/low.out").unwrap();
+        assert!(collected.contains("Moo"), "{collected}");
+        let collect_pod = env.api.get(KIND_POD, "cow-collect").unwrap();
+        assert_eq!(collect_pod.status.opt_str("phase"), Some("Succeeded"));
+
+        // status.jobId recorded (qstat cross-check, paper §IV).
+        let obj = env.api.get(KIND_TORQUEJOB, "cow").unwrap();
+        let job_id = obj.status.opt_str("jobId").unwrap();
+        let seq = crate::util::JobId::parse(job_id).unwrap().seq;
+        assert_eq!(env.pbs.qstat_job(seq).unwrap().exit_code, Some(0));
+        env.sd.trigger();
+    }
+
+    #[test]
+    fn failed_wlm_job_reflected() {
+        let env = setup();
+        let obj = WlmJobView::build_torquejob("bad", "exit 3\n", "$HOME/x", "$HOME/");
+        env.api.create(obj).unwrap();
+        let p = drive(&env, "bad", Duration::from_secs(20));
+        assert_eq!(p, phase::FAILED);
+        let obj = env.api.get(KIND_TORQUEJOB, "bad").unwrap();
+        assert_eq!(obj.status.opt_int("exitCode"), Some(3));
+        env.sd.trigger();
+    }
+
+    #[test]
+    fn walltime_exceeded_is_timeout() {
+        let env = setup();
+        let obj = WlmJobView::build_torquejob(
+            "slowpoke",
+            "#PBS -l walltime=0:05\nsleep 60\n",
+            "$HOME/x",
+            "$HOME/",
+        );
+        env.api.create(obj).unwrap();
+        let p = drive(&env, "slowpoke", Duration::from_secs(20));
+        assert_eq!(p, phase::TIMEOUT);
+        env.sd.trigger();
+    }
+
+    #[test]
+    fn delete_cancels_wlm_job() {
+        let env = setup();
+        let obj = WlmJobView::build_torquejob("longrun", "sleep 600\n", "$HOME/x", "$HOME/");
+        env.api.create(obj).unwrap();
+        // Step until submitted.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let job_id = loop {
+            env.sched.run_cycle();
+            let _ = env.operator.reconcile(&env.api, "longrun");
+            let o = env.api.get(KIND_TORQUEJOB, "longrun").unwrap();
+            if let Some(id) = o.status.opt_str("jobId") {
+                break id.to_string();
+            }
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // Delete the CRD object (kubectl delete torquejob longrun).
+        env.api.delete(KIND_TORQUEJOB, "longrun").unwrap();
+        env.operator.reconcile(&env.api, "longrun").unwrap();
+        // The PBS job must be cancelled.
+        let seq = crate::util::JobId::parse(&job_id).unwrap().seq;
+        let job = env.pbs.wait_for(seq, Duration::from_secs(10)).unwrap();
+        assert!(job.cancelled);
+        // Dummy pod cascade-deleted with the owner object.
+        assert!(env.api.get(KIND_POD, "longrun-submit").is_err());
+        env.sd.trigger();
+    }
+
+    #[test]
+    fn job_without_results_spec_completes() {
+        let env = setup();
+        let mut obj = WlmJobView::build_torquejob("plain", "echo done\n", "", "");
+        obj.spec.remove("results");
+        obj.spec.remove("mount");
+        env.api.create(obj).unwrap();
+        let p = drive(&env, "plain", Duration::from_secs(20));
+        assert_eq!(p, phase::COMPLETED);
+        assert!(env.api.get(KIND_POD, "plain-collect").is_err(), "no results pod");
+        env.sd.trigger();
+    }
+
+    #[test]
+    fn queue_extractors() {
+        assert_eq!(
+            torque_queue_extractor("#PBS -q gpu\necho x\n"),
+            Some("gpu".to_string())
+        );
+        assert_eq!(torque_queue_extractor("echo x\n"), None);
+        assert_eq!(
+            slurm_queue_extractor("#SBATCH -p debug\necho x\n"),
+            Some("debug".to_string())
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! Torque-Operator and WLM-Operator — the paper's system contribution.
+//!
+//! [`core`] holds the generic operator state machine; [`redbox_svc`] the
+//! login-node RPC services and client bridges; [`virtual_node`] the
+//! virtual-kubelet node registration. `TorqueOperator` extends
+//! WLM-Operator with Torque support exactly as the paper describes: same
+//! mechanism, different script dialect, submission binary, and status
+//! mapping.
+
+pub mod core;
+pub mod redbox_svc;
+pub mod virtual_node;
+
+pub use core::{phase, OperatorConfig, WlmJobOperator};
+pub use redbox_svc::{
+    RedboxBridge, SlurmLoginService, TorqueLoginService, WlmBridge, WlmStatus,
+};
+pub use virtual_node::{
+    lookup_vnode, register_virtual_nodes, vnode_name, LABEL_QUEUE, LABEL_WLM,
+    VIRTUAL_KUBELET_TAINT,
+};
+
+use std::sync::Arc;
+
+/// Convenience constructors mirroring the paper's names.
+pub fn torque_operator(
+    bridge: Arc<dyn WlmBridge>,
+    metrics: crate::cluster::Metrics,
+) -> Arc<WlmJobOperator> {
+    WlmJobOperator::new(OperatorConfig::torque(), bridge, metrics)
+}
+
+pub fn wlm_operator(
+    bridge: Arc<dyn WlmBridge>,
+    metrics: crate::cluster::Metrics,
+) -> Arc<WlmJobOperator> {
+    WlmJobOperator::new(OperatorConfig::slurm(), bridge, metrics)
+}

@@ -1,0 +1,396 @@
+//! Login-node red-box services: the WLM side of the bridge.
+//!
+//! "Torque-Operator invokes the Torque binary qsub which submits PBS job to
+//! the Torque cluster" (paper §III-B). These services are that invocation
+//! surface, exported over the red-box Unix socket: `torque.Workload/*`
+//! backed by pbs_server, `slurm.Workload/*` backed by slurmctld (the
+//! WLM-Operator baseline). The [`WlmBridge`] trait is the client-side
+//! mirror the operators program against.
+
+use crate::encoding::Value;
+use crate::pbs::{JobState, PbsServer};
+use crate::redbox::{RedboxClient, Service};
+use crate::slurm::{SlurmJobState, Slurmctld};
+use crate::util::{Error, Result};
+use std::sync::Arc;
+
+/// WLM-agnostic job status as the operator sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WlmStatus {
+    Queued,
+    Running,
+    Completed,
+    Failed { exit_code: i32 },
+    Cancelled,
+    Timeout,
+}
+
+impl WlmStatus {
+    pub fn terminal(&self) -> bool {
+        !matches!(self, WlmStatus::Queued | WlmStatus::Running)
+    }
+
+    pub fn encode(&self) -> Value {
+        match self {
+            WlmStatus::Queued => Value::map().with("state", "queued"),
+            WlmStatus::Running => Value::map().with("state", "running"),
+            WlmStatus::Completed => Value::map().with("state", "completed"),
+            WlmStatus::Failed { exit_code } => Value::map()
+                .with("state", "failed")
+                .with("exitCode", *exit_code as i64),
+            WlmStatus::Cancelled => Value::map().with("state", "cancelled"),
+            WlmStatus::Timeout => Value::map().with("state", "timeout"),
+        }
+    }
+
+    pub fn decode(v: &Value) -> Result<WlmStatus> {
+        Ok(match v.req_str("state")? {
+            "queued" => WlmStatus::Queued,
+            "running" => WlmStatus::Running,
+            "completed" => WlmStatus::Completed,
+            "failed" => WlmStatus::Failed {
+                exit_code: v.opt_int("exitCode").unwrap_or(1) as i32,
+            },
+            "cancelled" => WlmStatus::Cancelled,
+            "timeout" => WlmStatus::Timeout,
+            s => return Err(Error::rpc(format!("unknown wlm state `{s}`"))),
+        })
+    }
+}
+
+/// What an operator needs from a workload manager.
+pub trait WlmBridge: Send + Sync {
+    /// Submit a batch script; returns the WLM job id as a string.
+    fn submit(&self, script: &str, user: &str) -> Result<String>;
+    fn status(&self, job_id: &str) -> Result<WlmStatus>;
+    fn cancel(&self, job_id: &str) -> Result<()>;
+    /// Read a file from the WLM cluster's shared FS (results collection).
+    fn read_file(&self, path: &str) -> Result<String>;
+    /// Write a file into the WLM cluster's shared FS (results staging).
+    fn write_file(&self, path: &str, content: &str) -> Result<()>;
+    /// Queue/partition names, default first.
+    fn queues(&self) -> Result<Vec<String>>;
+}
+
+// ------------------------------------------------------------ torque side
+
+/// Red-box service backed by pbs_server (runs on the login node).
+pub struct TorqueLoginService {
+    server: PbsServer,
+}
+
+impl TorqueLoginService {
+    pub fn new(server: PbsServer) -> Arc<Self> {
+        Arc::new(TorqueLoginService { server })
+    }
+}
+
+fn pbs_status(job: &crate::pbs::Job) -> WlmStatus {
+    match job.state {
+        JobState::Queued | JobState::Held => WlmStatus::Queued,
+        JobState::Running => WlmStatus::Running,
+        JobState::Completed => {
+            if job.walltime_exceeded {
+                WlmStatus::Timeout
+            } else if job.cancelled {
+                WlmStatus::Cancelled
+            } else if job.exit_code.unwrap_or(1) == 0 {
+                WlmStatus::Completed
+            } else {
+                WlmStatus::Failed { exit_code: job.exit_code.unwrap_or(1) }
+            }
+        }
+    }
+}
+
+impl Service for TorqueLoginService {
+    fn call(&self, method: &str, body: &Value) -> Result<Value> {
+        match method {
+            "SubmitJob" => {
+                let id = self
+                    .server
+                    .qsub(body.req_str("script")?, body.opt_str("user").unwrap_or("operator"))?;
+                Ok(Value::map().with("jobId", id.to_string()))
+            }
+            "JobStatus" => {
+                let seq = parse_seq(body.req_str("jobId")?)?;
+                let job = self.server.qstat_job(seq)?;
+                Ok(pbs_status(&job).encode())
+            }
+            "CancelJob" => {
+                let seq = parse_seq(body.req_str("jobId")?)?;
+                self.server.qdel(seq)?;
+                Ok(Value::Null)
+            }
+            "ReadFile" => {
+                let content = self.server.fs().read_string(body.req_str("path")?)?;
+                Ok(Value::map().with("content", content))
+            }
+            "WriteFile" => {
+                self.server
+                    .fs()
+                    .write(body.req_str("path")?, body.req_str("content")?.as_bytes())?;
+                Ok(Value::Null)
+            }
+            "Queues" => {
+                let mut names = self.server.queues().names();
+                // default first
+                if let Ok(d) = self.server.queues().resolve(None) {
+                    let d = d.name.clone();
+                    names.retain(|n| n != &d);
+                    names.insert(0, d);
+                }
+                Ok(Value::Seq(names.into_iter().map(Value::Str).collect()))
+            }
+            other => Err(Error::rpc(format!("torque.Workload has no method `{other}`"))),
+        }
+    }
+}
+
+fn parse_seq(job_id: &str) -> Result<u64> {
+    // Accept both `42.torque-head` and bare `42`.
+    crate::util::JobId::parse(job_id)
+        .map(|j| j.seq)
+        .or_else(|| job_id.parse().ok())
+        .ok_or_else(|| Error::rpc(format!("bad job id `{job_id}`")))
+}
+
+// ------------------------------------------------------------- slurm side
+
+/// Red-box service backed by slurmctld.
+pub struct SlurmLoginService {
+    ctld: Slurmctld,
+}
+
+impl SlurmLoginService {
+    pub fn new(ctld: Slurmctld) -> Arc<Self> {
+        Arc::new(SlurmLoginService { ctld })
+    }
+}
+
+fn slurm_status(job: &crate::slurm::SlurmJob) -> WlmStatus {
+    match job.state {
+        SlurmJobState::Pending => WlmStatus::Queued,
+        SlurmJobState::Running => WlmStatus::Running,
+        SlurmJobState::Completed => WlmStatus::Completed,
+        SlurmJobState::Failed => WlmStatus::Failed { exit_code: job.exit_code.unwrap_or(1) },
+        SlurmJobState::Cancelled => WlmStatus::Cancelled,
+        SlurmJobState::Timeout => WlmStatus::Timeout,
+    }
+}
+
+impl Service for SlurmLoginService {
+    fn call(&self, method: &str, body: &Value) -> Result<Value> {
+        match method {
+            "SubmitJob" => {
+                let id = self
+                    .ctld
+                    .sbatch(body.req_str("script")?, body.opt_str("user").unwrap_or("operator"))?;
+                Ok(Value::map().with("jobId", id.to_string()))
+            }
+            "JobStatus" => {
+                let id: u64 = body
+                    .req_str("jobId")?
+                    .parse()
+                    .map_err(|_| Error::rpc("bad slurm job id"))?;
+                let job = self.ctld.scontrol_show(id)?;
+                Ok(slurm_status(&job).encode())
+            }
+            "CancelJob" => {
+                let id: u64 = body
+                    .req_str("jobId")?
+                    .parse()
+                    .map_err(|_| Error::rpc("bad slurm job id"))?;
+                self.ctld.scancel(id)?;
+                Ok(Value::Null)
+            }
+            "ReadFile" => {
+                let content = self.ctld.fs().read_string(body.req_str("path")?)?;
+                Ok(Value::map().with("content", content))
+            }
+            "WriteFile" => {
+                self.ctld
+                    .fs()
+                    .write(body.req_str("path")?, body.req_str("content")?.as_bytes())?;
+                Ok(Value::Null)
+            }
+            "Queues" => {
+                let mut names: Vec<String> =
+                    self.ctld.partitions().iter().map(|p| p.name.clone()).collect();
+                if let Some(d) = self.ctld.partitions().iter().find(|p| p.is_default) {
+                    let d = d.name.clone();
+                    names.retain(|n| n != &d);
+                    names.insert(0, d);
+                }
+                Ok(Value::Seq(names.into_iter().map(Value::Str).collect()))
+            }
+            other => Err(Error::rpc(format!("slurm.Workload has no method `{other}`"))),
+        }
+    }
+}
+
+// --------------------------------------------------------- client bridges
+
+/// Client-side bridge over red-box for a given service prefix
+/// (`torque.Workload` / `slurm.Workload`).
+pub struct RedboxBridge {
+    client: RedboxClient,
+    service: String,
+}
+
+impl RedboxBridge {
+    pub fn torque(client: RedboxClient) -> Self {
+        RedboxBridge { client, service: "torque.Workload".into() }
+    }
+
+    pub fn slurm(client: RedboxClient) -> Self {
+        RedboxBridge { client, service: "slurm.Workload".into() }
+    }
+
+    fn call(&self, method: &str, body: Value) -> Result<Value> {
+        self.client.call(&format!("{}/{method}", self.service), body)
+    }
+}
+
+impl WlmBridge for RedboxBridge {
+    fn submit(&self, script: &str, user: &str) -> Result<String> {
+        let out =
+            self.call("SubmitJob", Value::map().with("script", script).with("user", user))?;
+        Ok(out.req_str("jobId")?.to_string())
+    }
+
+    fn status(&self, job_id: &str) -> Result<WlmStatus> {
+        WlmStatus::decode(&self.call("JobStatus", Value::map().with("jobId", job_id))?)
+    }
+
+    fn cancel(&self, job_id: &str) -> Result<()> {
+        self.call("CancelJob", Value::map().with("jobId", job_id))?;
+        Ok(())
+    }
+
+    fn read_file(&self, path: &str) -> Result<String> {
+        let out = self.call("ReadFile", Value::map().with("path", path))?;
+        Ok(out.req_str("content")?.to_string())
+    }
+
+    fn write_file(&self, path: &str, content: &str) -> Result<()> {
+        self.call("WriteFile", Value::map().with("path", path).with("content", content))?;
+        Ok(())
+    }
+
+    fn queues(&self) -> Result<Vec<String>> {
+        let out = self.call("Queues", Value::Null)?;
+        Ok(out
+            .as_seq()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Metrics, NodeRole, NodeSpec, Resources, SharedFs};
+    use crate::pbs::PbsConfig;
+    use crate::redbox::RedboxServer;
+    use crate::rt::{Shutdown, Timers};
+    use crate::sched::EasyBackfill;
+    use crate::singularity::{ImageRegistry, Runtime, RuntimeKind};
+    use std::time::Duration;
+
+    fn boot_torque(sd: &Shutdown) -> PbsServer {
+        let (timers, _) = Timers::start(sd.clone());
+        let runtime = Runtime::new(
+            RuntimeKind::Singularity,
+            ImageRegistry::with_defaults(),
+            Metrics::new(),
+        );
+        let nodes = vec![
+            NodeSpec::new("cn01", NodeRole::TorqueCompute, Resources::cores(8, 32 << 30)),
+            NodeSpec::new("cn02", NodeRole::TorqueCompute, Resources::cores(8, 32 << 30)),
+        ];
+        let mut cfg = PbsConfig::default();
+        cfg.time_scale = 0.001;
+        cfg.sched_period = Duration::from_millis(2);
+        PbsServer::start(
+            cfg,
+            nodes,
+            runtime,
+            SharedFs::new(),
+            Box::new(EasyBackfill),
+            timers,
+            Metrics::new(),
+            sd.clone(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn torque_bridge_full_cycle_over_socket() {
+        let sd = Shutdown::new();
+        let srv_pbs = boot_torque(&sd);
+        let sock = std::env::temp_dir()
+            .join(format!("hpcorc-redboxsvc-{}.sock", std::process::id()));
+        let mut rb = RedboxServer::start(&sock, sd.clone(), Metrics::new()).unwrap();
+        rb.register("torque.Workload", TorqueLoginService::new(srv_pbs.clone()));
+        let bridge = RedboxBridge::torque(RedboxClient::connect(&sock).unwrap());
+
+        assert_eq!(bridge.queues().unwrap(), vec!["batch".to_string()]);
+        let id = bridge
+            .submit(
+                "#PBS -o $HOME/low.out\nsingularity run lolcow_latest.sif\n",
+                "kube-operator",
+            )
+            .unwrap();
+        assert!(id.ends_with(".torque-head"), "{id}");
+        // Poll to terminal.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let st = bridge.status(&id).unwrap();
+            if st.terminal() {
+                assert_eq!(st, WlmStatus::Completed);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let out = bridge.read_file("$HOME/low.out").unwrap();
+        assert!(out.contains("Moo"));
+        bridge.write_file("$HOME/staged.txt", "copied").unwrap();
+        assert_eq!(srv_pbs.fs().read_string("$HOME/staged.txt").unwrap(), "copied");
+        // Cancel path on a fresh long job.
+        let id2 = bridge.submit("sleep 600\n", "op").unwrap();
+        bridge.cancel(&id2).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let st = bridge.status(&id2).unwrap();
+            if st.terminal() {
+                assert_eq!(st, WlmStatus::Cancelled);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Error transport: unknown job.
+        assert!(bridge.status("9999.torque-head").is_err());
+        rb.stop();
+        sd.trigger();
+    }
+
+    #[test]
+    fn status_mapping() {
+        for (state, expect_terminal) in [
+            (WlmStatus::Queued, false),
+            (WlmStatus::Running, false),
+            (WlmStatus::Completed, true),
+            (WlmStatus::Failed { exit_code: 2 }, true),
+            (WlmStatus::Cancelled, true),
+            (WlmStatus::Timeout, true),
+        ] {
+            assert_eq!(state.terminal(), expect_terminal);
+            assert_eq!(WlmStatus::decode(&state.encode()).unwrap(), state);
+        }
+    }
+}

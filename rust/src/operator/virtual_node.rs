@@ -1,0 +1,130 @@
+//! Virtual nodes: one Kubernetes Node object per WLM queue/partition.
+//!
+//! "The operator creates virtual nodes which correspond to each Slurm
+//! partition … it enables users to connect Kubernetes to other APIs"
+//! (paper §II); Torque-Operator does the same per Torque queue (Fig. 2:
+//! the virtual node corresponds to the `batch` queue). Virtual nodes are
+//! tainted `virtual-kubelet` so only the operator's dummy pods (which
+//! tolerate the taint) schedule onto them.
+
+use super::redbox_svc::WlmBridge;
+use crate::cluster::Resources;
+use crate::kube::{ApiServer, NodeView, KIND_NODE};
+use crate::util::Result;
+
+/// The taint key carried by every virtual node.
+pub const VIRTUAL_KUBELET_TAINT: &str = "virtual-kubelet";
+
+/// Label keys set on virtual nodes (used by dummy-pod nodeSelectors).
+pub const LABEL_QUEUE: &str = "wlm/queue";
+pub const LABEL_WLM: &str = "wlm/backend";
+
+/// Virtual node name for a queue.
+pub fn vnode_name(wlm: &str, queue: &str) -> String {
+    format!("vnode-{wlm}-{queue}")
+}
+
+/// Register one virtual node per WLM queue. `capacity` is deliberately
+/// generous: the real capacity gate is the WLM's own scheduler — the
+/// virtual node only needs to admit dummy pods (which request ~nothing),
+/// exactly as virtual-kubelet reports large synthetic capacity.
+pub fn register_virtual_nodes(
+    api: &ApiServer,
+    bridge: &dyn WlmBridge,
+    wlm: &str,
+) -> Result<Vec<String>> {
+    let mut created = Vec::new();
+    for queue in bridge.queues()? {
+        let name = vnode_name(wlm, &queue);
+        let mut node = NodeView::build(
+            &name,
+            Resources::cores(1024, 1 << 40),
+            &[VIRTUAL_KUBELET_TAINT],
+        );
+        node.meta.set_label(LABEL_QUEUE, &queue);
+        node.meta.set_label(LABEL_WLM, wlm);
+        node.status.insert("runtime", "virtual-kubelet");
+        match api.create(node) {
+            Ok(_) => created.push(name),
+            Err(e) if matches!(&e, crate::util::Error::Api(_)) && !e.is_not_found() => {
+                // Already registered (operator restart): fine.
+                created.push(name);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(created)
+}
+
+/// Find the virtual node for a queue (None = queue has no virtual node).
+pub fn lookup_vnode(api: &ApiServer, wlm: &str, queue: &str) -> Option<String> {
+    let name = vnode_name(wlm, queue);
+    api.get(KIND_NODE, &name).ok().map(|_| name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Metrics;
+    use crate::operator::redbox_svc::WlmStatus;
+    use crate::util::Error;
+
+    /// Bridge stub with fixed queues.
+    struct FakeBridge(Vec<String>);
+
+    impl WlmBridge for FakeBridge {
+        fn submit(&self, _: &str, _: &str) -> Result<String> {
+            Err(Error::wlm("not implemented"))
+        }
+        fn status(&self, _: &str) -> Result<WlmStatus> {
+            Err(Error::wlm("not implemented"))
+        }
+        fn cancel(&self, _: &str) -> Result<()> {
+            Ok(())
+        }
+        fn read_file(&self, _: &str) -> Result<String> {
+            Err(Error::wlm("not implemented"))
+        }
+        fn write_file(&self, _: &str, _: &str) -> Result<()> {
+            Ok(())
+        }
+        fn queues(&self) -> Result<Vec<String>> {
+            Ok(self.0.clone())
+        }
+    }
+
+    #[test]
+    fn registers_node_per_queue_with_taint() {
+        let api = ApiServer::new(Metrics::new());
+        let bridge = FakeBridge(vec!["batch".into(), "gpu".into()]);
+        let created = register_virtual_nodes(&api, &bridge, "torque").unwrap();
+        assert_eq!(created, vec!["vnode-torque-batch", "vnode-torque-gpu"]);
+        let node = NodeView::from_object(&api.get(KIND_NODE, "vnode-torque-batch").unwrap())
+            .unwrap();
+        assert_eq!(node.taints, vec![VIRTUAL_KUBELET_TAINT]);
+        assert_eq!(node.labels.iter().find(|(k, _)| k == LABEL_QUEUE).unwrap().1, "batch");
+        assert_eq!(node.runtime, "virtual-kubelet");
+    }
+
+    #[test]
+    fn idempotent_on_restart() {
+        let api = ApiServer::new(Metrics::new());
+        let bridge = FakeBridge(vec!["batch".into()]);
+        register_virtual_nodes(&api, &bridge, "torque").unwrap();
+        let again = register_virtual_nodes(&api, &bridge, "torque").unwrap();
+        assert_eq!(again, vec!["vnode-torque-batch"]);
+        assert_eq!(api.list(KIND_NODE, &[]).len(), 1);
+    }
+
+    #[test]
+    fn lookup() {
+        let api = ApiServer::new(Metrics::new());
+        let bridge = FakeBridge(vec!["batch".into()]);
+        register_virtual_nodes(&api, &bridge, "torque").unwrap();
+        assert_eq!(
+            lookup_vnode(&api, "torque", "batch").as_deref(),
+            Some("vnode-torque-batch")
+        );
+        assert!(lookup_vnode(&api, "torque", "nope").is_none());
+    }
+}

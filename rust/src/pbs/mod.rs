@@ -1,0 +1,18 @@
+//! Torque/PBS workload manager substrate.
+//!
+//! "Two main-stream workload managers are TORQUE and Slurm … originally
+//! Torque only incorporates resource managers and later extends with job
+//! schedulers" (paper §I). The pieces: [`script`] (#PBS parsing),
+//! [`queue`] (queues + limits), [`server`] (pbs_server job state machine +
+//! the scheduling loop), [`mom`] (per-node execution daemon). Scheduling
+//! *policies* live in [`crate::sched`], shared with Slurm and the sim.
+
+pub mod mom;
+pub mod queue;
+pub mod script;
+pub mod server;
+
+pub use mom::{JobDone, LaunchSpec, Mom};
+pub use queue::{QueueConfig, QueueSet};
+pub use script::PbsScript;
+pub use server::{AcctRecord, Job, JobState, PbsConfig, PbsServer};

@@ -1,0 +1,304 @@
+//! pbs_mom: the per-node execution daemon.
+//!
+//! The server dispatches a launch to the *first* node of a job's placement
+//! (Torque runs the batch script on the head chunk; other chunks only
+//! reserve resources). The mom interprets the script body through the
+//! shell substrate, enforces walltime with a timer, writes the `-o`/`-e`
+//! output files into the shared FS, and reports completion.
+
+use crate::cluster::{Metrics, NodeSpec, SharedFs};
+use crate::rt::{self, Shutdown, Timers};
+use crate::singularity::{CancelToken, Runtime};
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which WLM this execution daemon serves (controls the job environment:
+/// `PBS_*` for pbs_mom, `SLURM_*` for slurmd). The daemon logic is
+/// otherwise identical, so the Slurm baseline reuses this type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WlmFlavor {
+    #[default]
+    Pbs,
+    Slurm,
+}
+
+/// Server → mom launch order.
+#[derive(Debug, Clone)]
+pub struct LaunchSpec {
+    pub job_seq: u64,
+    pub job_name: String,
+    pub body: Vec<String>,
+    pub env: Vec<(String, String)>,
+    pub stdout_path: Option<String>,
+    pub stderr_path: Option<String>,
+    /// Nominal walltime; the mom scales it by `time_scale` for enforcement.
+    pub walltime: Duration,
+    pub seed: u64,
+}
+
+/// Mom → server completion report.
+#[derive(Debug, Clone)]
+pub struct JobDone {
+    pub job_seq: u64,
+    pub node: String,
+    pub exit_code: i32,
+    pub cancelled: bool,
+    pub walltime_exceeded: bool,
+    pub wall: Duration,
+}
+
+struct Running {
+    cancel: CancelToken,
+}
+
+/// One node daemon. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct Mom {
+    pub spec: NodeSpec,
+    fs: SharedFs,
+    runtime: Runtime,
+    timers: Timers,
+    time_scale: f64,
+    done_tx: Sender<JobDone>,
+    running: Arc<Mutex<HashMap<u64, Running>>>,
+    metrics: Metrics,
+    shutdown: Shutdown,
+    flavor: WlmFlavor,
+}
+
+impl Mom {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        spec: NodeSpec,
+        fs: SharedFs,
+        runtime: Runtime,
+        timers: Timers,
+        time_scale: f64,
+        done_tx: Sender<JobDone>,
+        metrics: Metrics,
+        shutdown: Shutdown,
+    ) -> Mom {
+        Mom {
+            spec,
+            fs,
+            runtime,
+            timers,
+            time_scale,
+            done_tx,
+            running: Arc::new(Mutex::new(HashMap::new())),
+            metrics,
+            shutdown,
+            flavor: WlmFlavor::Pbs,
+        }
+    }
+
+    /// Switch the job-environment flavor (slurmd reuses this daemon).
+    pub fn with_flavor(mut self, flavor: WlmFlavor) -> Mom {
+        self.flavor = flavor;
+        self
+    }
+
+    pub fn node_name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Number of jobs currently executing on this node.
+    pub fn active_jobs(&self) -> usize {
+        self.running.lock().unwrap().len()
+    }
+
+    /// Start executing a job (returns immediately).
+    pub fn launch(&self, spec: LaunchSpec) {
+        let cancel = CancelToken::new();
+        let walltime_hit = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        self.running.lock().unwrap().insert(spec.job_seq, Running { cancel: cancel.clone() });
+        // Walltime enforcement: scaled to testbed time.
+        let scaled = Duration::from_secs_f64(
+            (spec.walltime.as_secs_f64() * self.time_scale).max(0.0),
+        );
+        let timer_cancel = cancel.clone();
+        let timer_hit = walltime_hit.clone();
+        let timer_id = self.timers.after(scaled, move || {
+            timer_hit.store(true, std::sync::atomic::Ordering::SeqCst);
+            timer_cancel.trigger();
+        });
+
+        let mom = self.clone();
+        rt::spawn_named(&format!("mom-{}-job{}", self.spec.name, spec.job_seq), move || {
+            let t0 = Instant::now();
+            let mut ctx = crate::singularity::shell::ShellCtx::new(
+                mom.fs.clone(),
+                mom.runtime.clone(),
+                cancel.clone(),
+            );
+            ctx.time_scale = mom.time_scale;
+            ctx.seed = spec.seed;
+            match mom.flavor {
+                WlmFlavor::Pbs => {
+                    ctx.env.insert("PBS_JOBID".into(), spec.job_seq.to_string());
+                    ctx.env.insert("PBS_JOBNAME".into(), spec.job_name.clone());
+                    ctx.env.insert("PBS_NODENAME".into(), mom.spec.name.clone());
+                }
+                WlmFlavor::Slurm => {
+                    ctx.env.insert("SLURM_JOB_ID".into(), spec.job_seq.to_string());
+                    ctx.env.insert("SLURM_JOB_NAME".into(), spec.job_name.clone());
+                    ctx.env.insert("SLURMD_NODENAME".into(), mom.spec.name.clone());
+                }
+            }
+            for (k, v) in &spec.env {
+                ctx.env.insert(k.clone(), v.clone());
+            }
+            let exit_code = ctx.run_script(&spec.body);
+            let wall = t0.elapsed();
+            // Stage output files like pbs_mom's epilogue.
+            let stdout_path = spec
+                .stdout_path
+                .clone()
+                .unwrap_or_else(|| format!("$HOME/{}.o{}", spec.job_name, spec.job_seq));
+            let stderr_path = spec
+                .stderr_path
+                .clone()
+                .unwrap_or_else(|| format!("$HOME/{}.e{}", spec.job_name, spec.job_seq));
+            let _ = mom.fs.write(&stdout_path, ctx.stdout.as_bytes());
+            let _ = mom.fs.write(&stderr_path, ctx.stderr.as_bytes());
+            mom.timers.cancel(timer_id);
+            let hit = walltime_hit.load(std::sync::atomic::Ordering::SeqCst);
+            let cancelled = cancel.is_triggered();
+            mom.running.lock().unwrap().remove(&spec.job_seq);
+            mom.metrics.inc("mom.jobs_completed");
+            if hit {
+                mom.metrics.inc("mom.walltime_kills");
+            }
+            if mom.shutdown.is_triggered() {
+                return; // server tearing down: do not report
+            }
+            let _ = mom.done_tx.send(JobDone {
+                job_seq: spec.job_seq,
+                node: mom.spec.name.clone(),
+                exit_code,
+                cancelled,
+                walltime_exceeded: hit,
+                wall,
+            });
+        });
+    }
+
+    /// Kill a job (qdel). No-op if not running here.
+    pub fn cancel(&self, job_seq: u64) {
+        if let Some(r) = self.running.lock().unwrap().get(&job_seq) {
+            r.cancel.trigger();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeRole, Resources};
+    use crate::singularity::{ImageRegistry, RuntimeKind};
+    use std::sync::mpsc::channel;
+
+    fn mom_with(time_scale: f64) -> (Mom, std::sync::mpsc::Receiver<JobDone>, Shutdown) {
+        let sd = Shutdown::new();
+        let (timers, _h) = Timers::start(sd.clone());
+        let (tx, rx) = channel();
+        let fs = SharedFs::new();
+        let runtime = Runtime::new(
+            RuntimeKind::Singularity,
+            ImageRegistry::with_defaults(),
+            Metrics::new(),
+        );
+        let spec = NodeSpec::new("cn01", NodeRole::TorqueCompute, Resources::cores(8, 32 << 30));
+        let mom =
+            Mom::new(spec, fs, runtime, timers, time_scale, tx, Metrics::new(), sd.clone());
+        (mom, rx, sd)
+    }
+
+    fn spec(seq: u64, body: &[&str], wall_s: u64) -> LaunchSpec {
+        LaunchSpec {
+            job_seq: seq,
+            job_name: "t".into(),
+            body: body.iter().map(|s| s.to_string()).collect(),
+            env: Vec::new(),
+            stdout_path: None,
+            stderr_path: None,
+            walltime: Duration::from_secs(wall_s),
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn runs_script_and_reports() {
+        let (mom, rx, sd) = mom_with(1.0);
+        mom.launch(spec(1, &["echo hello"], 60));
+        let done = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(done.exit_code, 0);
+        assert!(!done.cancelled);
+        assert_eq!(done.job_seq, 1);
+        assert_eq!(done.node, "cn01");
+        sd.trigger();
+    }
+
+    #[test]
+    fn writes_default_output_files() {
+        let (mom, rx, sd) = mom_with(1.0);
+        mom.launch(spec(7, &["echo to stdout", "frobnicate"], 60));
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(mom.fs.read_string("$HOME/t.o7").unwrap(), "to stdout\n");
+        assert!(mom.fs.read_string("$HOME/t.e7").unwrap().contains("command not found"));
+        sd.trigger();
+    }
+
+    #[test]
+    fn pbs_environment_exposed() {
+        let (mom, rx, sd) = mom_with(1.0);
+        mom.launch(spec(3, &["echo job=$PBS_JOBID name=$PBS_JOBNAME node=$PBS_NODENAME"], 60));
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(mom.fs.read_string("$HOME/t.o3").unwrap(), "job=3 name=t node=cn01\n");
+        sd.trigger();
+    }
+
+    #[test]
+    fn walltime_kill() {
+        // time_scale=0.01: a 5s walltime becomes 50ms; the job sleeps "10s"
+        // (scaled 100ms) and must be killed at the walltime.
+        let (mom, rx, sd) = mom_with(0.01);
+        mom.launch(spec(9, &["sleep 10", "echo survived"], 5));
+        let done = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(done.walltime_exceeded, "{done:?}");
+        assert!(done.cancelled);
+        assert_eq!(done.exit_code, 137);
+        let out = mom.fs.read_string("$HOME/t.o9").unwrap();
+        assert!(!out.contains("survived"));
+        sd.trigger();
+    }
+
+    #[test]
+    fn explicit_cancel() {
+        let (mom, rx, sd) = mom_with(1.0);
+        mom.launch(spec(4, &["sleep 30"], 600));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(mom.active_jobs(), 1);
+        mom.cancel(4);
+        let done = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(done.cancelled);
+        assert!(!done.walltime_exceeded);
+        assert_eq!(mom.active_jobs(), 0);
+        sd.trigger();
+    }
+
+    #[test]
+    fn custom_output_paths() {
+        let (mom, rx, sd) = mom_with(1.0);
+        let mut s = spec(5, &["echo custom"], 60);
+        s.stdout_path = Some("$HOME/low.out".into());
+        s.stderr_path = Some("$HOME/low.err".into());
+        mom.launch(s);
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(mom.fs.read_string("$HOME/low.out").unwrap(), "custom\n");
+        assert_eq!(mom.fs.read_string("$HOME/low.err").unwrap(), "");
+        sd.trigger();
+    }
+}

@@ -1,0 +1,231 @@
+//! Torque queues: "nodes are grouped into queues. Each queue is associated
+//! with resource limits such as walltime, job size. One node can be
+//! included in multiple queues." (paper §III-A)
+
+use super::script::PbsScript;
+use crate::util::{Error, Result};
+use std::time::Duration;
+
+/// Configuration of one queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueConfig {
+    pub name: String,
+    /// Jobs exceeding this are rejected at qsub time.
+    pub max_walltime: Option<Duration>,
+    /// Max node-chunks per job.
+    pub max_nodes: Option<u32>,
+    /// Per-queue base priority added to job priority.
+    pub priority: i64,
+    /// Node names that belong to this queue (a node may be in several).
+    pub nodes: Vec<String>,
+    /// Max jobs in the queue (queued + running); None = unlimited.
+    pub max_queuable: Option<usize>,
+    /// Whether this is the default destination queue.
+    pub is_default: bool,
+    /// Users allowed to submit; empty = everyone.
+    pub acl_users: Vec<String>,
+}
+
+impl QueueConfig {
+    pub fn new(name: impl Into<String>) -> Self {
+        QueueConfig {
+            name: name.into(),
+            max_walltime: None,
+            max_nodes: None,
+            priority: 0,
+            nodes: Vec::new(),
+            max_queuable: None,
+            is_default: false,
+            acl_users: Vec::new(),
+        }
+    }
+
+    /// The paper's Fig. 1 queue.
+    pub fn batch(nodes: &[&str]) -> Self {
+        let mut q = QueueConfig::new("batch");
+        q.max_walltime = Some(Duration::from_secs(24 * 3600));
+        q.nodes = nodes.iter().map(|s| s.to_string()).collect();
+        q.is_default = true;
+        q
+    }
+
+    pub fn with_walltime_limit(mut self, d: Duration) -> Self {
+        self.max_walltime = Some(d);
+        self
+    }
+
+    pub fn with_max_nodes(mut self, n: u32) -> Self {
+        self.max_nodes = Some(n);
+        self
+    }
+
+    pub fn with_priority(mut self, p: i64) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: &[&str]) -> Self {
+        self.nodes = nodes.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn default_queue(mut self) -> Self {
+        self.is_default = true;
+        self
+    }
+
+    /// Enforce queue limits on a submitted script (Torque rejects at qsub).
+    pub fn admit(&self, script: &PbsScript, user: &str, current_depth: usize) -> Result<()> {
+        if let Some(max) = self.max_walltime {
+            if script.walltime > max {
+                return Err(Error::wlm(format!(
+                    "job walltime {} exceeds queue `{}` limit {}",
+                    crate::util::fmt_walltime(script.walltime),
+                    self.name,
+                    crate::util::fmt_walltime(max)
+                )));
+            }
+        }
+        if let Some(max) = self.max_nodes {
+            if script.nodes > max {
+                return Err(Error::wlm(format!(
+                    "job requests {} nodes, queue `{}` allows {max}",
+                    script.nodes, self.name
+                )));
+            }
+        }
+        if let Some(max) = self.max_queuable {
+            if current_depth >= max {
+                return Err(Error::wlm(format!("queue `{}` is full ({max} jobs)", self.name)));
+            }
+        }
+        if !self.acl_users.is_empty() && !self.acl_users.iter().any(|u| u == user) {
+            return Err(Error::wlm(format!(
+                "user `{user}` not authorized for queue `{}`",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The queue set of a pbs_server.
+#[derive(Debug, Clone, Default)]
+pub struct QueueSet {
+    queues: Vec<QueueConfig>,
+}
+
+impl QueueSet {
+    pub fn new(queues: Vec<QueueConfig>) -> Result<QueueSet> {
+        if queues.is_empty() {
+            return Err(Error::config("pbs_server needs at least one queue"));
+        }
+        let defaults = queues.iter().filter(|q| q.is_default).count();
+        if defaults > 1 {
+            return Err(Error::config("multiple default queues"));
+        }
+        let mut names: Vec<&str> = queues.iter().map(|q| q.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        if names.len() != queues.len() {
+            return Err(Error::config("duplicate queue names"));
+        }
+        Ok(QueueSet { queues })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&QueueConfig> {
+        self.queues.iter().find(|q| q.name == name)
+    }
+
+    /// Resolve a job's destination: explicit `-q`, else the default queue.
+    pub fn resolve(&self, requested: Option<&str>) -> Result<&QueueConfig> {
+        match requested {
+            Some(name) => self
+                .get(name)
+                .ok_or_else(|| Error::wlm(format!("unknown queue `{name}`"))),
+            None => self
+                .queues
+                .iter()
+                .find(|q| q.is_default)
+                .or_else(|| self.queues.first())
+                .ok_or_else(|| Error::wlm("no default queue")),
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &QueueConfig> {
+        self.queues.iter()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.queues.iter().map(|q| q.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn script(wall_s: u64, nodes: u32) -> PbsScript {
+        PbsScript {
+            walltime: Duration::from_secs(wall_s),
+            nodes,
+            ..PbsScript::default()
+        }
+    }
+
+    #[test]
+    fn admit_enforces_limits() {
+        let q = QueueConfig::new("test")
+            .with_walltime_limit(Duration::from_secs(600))
+            .with_max_nodes(2);
+        assert!(q.admit(&script(600, 2), "alice", 0).is_ok());
+        assert!(q.admit(&script(601, 1), "alice", 0).is_err());
+        assert!(q.admit(&script(60, 3), "alice", 0).is_err());
+    }
+
+    #[test]
+    fn admit_acl_and_depth() {
+        let mut q = QueueConfig::new("restricted");
+        q.acl_users = vec!["alice".into()];
+        q.max_queuable = Some(2);
+        assert!(q.admit(&script(60, 1), "alice", 0).is_ok());
+        assert!(q.admit(&script(60, 1), "bob", 0).is_err());
+        assert!(q.admit(&script(60, 1), "alice", 2).is_err());
+    }
+
+    #[test]
+    fn queue_set_validation() {
+        assert!(QueueSet::new(vec![]).is_err());
+        let dup = vec![QueueConfig::new("a"), QueueConfig::new("a")];
+        assert!(QueueSet::new(dup).is_err());
+        let two_defaults =
+            vec![QueueConfig::new("a").default_queue(), QueueConfig::new("b").default_queue()];
+        assert!(QueueSet::new(two_defaults).is_err());
+    }
+
+    #[test]
+    fn resolve_default_and_named() {
+        let qs = QueueSet::new(vec![
+            QueueConfig::new("batch").default_queue(),
+            QueueConfig::new("gpu"),
+        ])
+        .unwrap();
+        assert_eq!(qs.resolve(None).unwrap().name, "batch");
+        assert_eq!(qs.resolve(Some("gpu")).unwrap().name, "gpu");
+        assert!(qs.resolve(Some("nope")).is_err());
+    }
+
+    #[test]
+    fn resolve_falls_back_to_first_without_default() {
+        let qs = QueueSet::new(vec![QueueConfig::new("only")]).unwrap();
+        assert_eq!(qs.resolve(None).unwrap().name, "only");
+    }
+
+    #[test]
+    fn paper_batch_queue() {
+        let q = QueueConfig::batch(&["cn1", "cn2"]);
+        assert_eq!(q.name, "batch");
+        assert!(q.is_default);
+        assert_eq!(q.nodes.len(), 2);
+    }
+}

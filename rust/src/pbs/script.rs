@@ -1,0 +1,307 @@
+//! PBS batch script parser: the `#PBS` directive dialect of the paper's
+//! Fig. 3 plus the directives Torque users rely on day-to-day.
+//!
+//! ```text
+//! #!/bin/sh
+//! #PBS -N cow                      job name
+//! #PBS -q batch                    destination queue
+//! #PBS -l walltime=00:30:00       resource list (walltime, nodes, ppn, mem)
+//! #PBS -l nodes=1:ppn=2
+//! #PBS -e $HOME/low.err            stderr path
+//! #PBS -o $HOME/low.out            stdout path
+//! #PBS -p 10                       priority
+//! #PBS -v A=1,B=2                  exported environment
+//! <body: shell lines>
+//! ```
+
+use crate::util::{parse_mem, parse_walltime, Error, Result};
+use std::time::Duration;
+
+/// Parsed PBS script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PbsScript {
+    pub name: Option<String>,
+    pub queue: Option<String>,
+    pub nodes: u32,
+    pub ppn: u32,
+    /// Per-chunk memory request (`-l mem=`), bytes.
+    pub mem: u64,
+    pub walltime: Duration,
+    pub priority: i64,
+    pub stdout_path: Option<String>,
+    pub stderr_path: Option<String>,
+    pub env: Vec<(String, String)>,
+    /// Node properties required (`-l nodes=1:ppn=2:bigmem` → ["bigmem"]).
+    pub properties: Vec<String>,
+    /// The executable body (shell lines, shebang/comments included).
+    pub body: Vec<String>,
+}
+
+impl Default for PbsScript {
+    fn default() -> Self {
+        PbsScript {
+            name: None,
+            queue: None,
+            nodes: 1,
+            ppn: 1,
+            mem: 0,
+            walltime: Duration::from_secs(3600), // Torque default 1h
+            priority: 0,
+            stdout_path: None,
+            stderr_path: None,
+            env: Vec::new(),
+            properties: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+}
+
+impl PbsScript {
+    /// Parse a full script text.
+    pub fn parse(text: &str) -> Result<PbsScript> {
+        let mut script = PbsScript::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim_end();
+            if let Some(directive) = line.trim_start().strip_prefix("#PBS") {
+                script.apply_directive(directive.trim()).map_err(|e| {
+                    Error::parse(format!("line {}: {e}", lineno + 1))
+                })?;
+            } else {
+                script.body.push(line.to_string());
+            }
+        }
+        // Trim leading/trailing blank body lines (directives removed).
+        while script.body.first().map(|l| l.trim().is_empty()) == Some(true) {
+            script.body.remove(0);
+        }
+        while script.body.last().map(|l| l.trim().is_empty()) == Some(true) {
+            script.body.pop();
+        }
+        Ok(script)
+    }
+
+    fn apply_directive(&mut self, directive: &str) -> Result<()> {
+        let (flag, rest) = directive
+            .split_once(char::is_whitespace)
+            .map(|(f, r)| (f, r.trim()))
+            .unwrap_or((directive, ""));
+        match flag {
+            "-N" => self.name = Some(nonempty(rest, "-N")?.to_string()),
+            "-q" => self.queue = Some(nonempty(rest, "-q")?.to_string()),
+            "-o" => self.stdout_path = Some(nonempty(rest, "-o")?.to_string()),
+            "-e" => self.stderr_path = Some(nonempty(rest, "-e")?.to_string()),
+            "-p" => {
+                self.priority = rest
+                    .parse()
+                    .map_err(|_| Error::parse(format!("bad priority `{rest}`")))?
+            }
+            "-l" => self.apply_resource_list(rest)?,
+            "-v" => {
+                for pair in rest.split(',') {
+                    if let Some((k, v)) = pair.split_once('=') {
+                        self.env.push((k.trim().to_string(), v.trim().to_string()));
+                    } else if !pair.trim().is_empty() {
+                        self.env.push((pair.trim().to_string(), String::new()));
+                    }
+                }
+            }
+            // Accepted-and-ignored directives (mail, account, join...).
+            "-m" | "-M" | "-A" | "-j" | "-S" | "-r" | "-W" => {}
+            other => return Err(Error::parse(format!("unknown directive `{other}`"))),
+        }
+        Ok(())
+    }
+
+    /// `-l walltime=...,mem=...` and `-l nodes=N:ppn=P:prop1:prop2`.
+    fn apply_resource_list(&mut self, rest: &str) -> Result<()> {
+        for item in rest.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(spec) = item.strip_prefix("nodes=") {
+                let mut parts = spec.split(':');
+                let count = parts.next().unwrap_or("1");
+                self.nodes = count
+                    .parse()
+                    .map_err(|_| Error::parse(format!("bad node count `{count}`")))?;
+                if self.nodes == 0 {
+                    return Err(Error::parse("nodes must be >= 1"));
+                }
+                for p in parts {
+                    if let Some(ppn) = p.strip_prefix("ppn=") {
+                        self.ppn = ppn
+                            .parse()
+                            .map_err(|_| Error::parse(format!("bad ppn `{ppn}`")))?;
+                        if self.ppn == 0 {
+                            return Err(Error::parse("ppn must be >= 1"));
+                        }
+                    } else {
+                        self.properties.push(p.to_string());
+                    }
+                }
+            } else if let Some((k, v)) = item.split_once('=') {
+                match k.trim() {
+                    "walltime" => {
+                        self.walltime = parse_walltime(v.trim())
+                            .ok_or_else(|| Error::parse(format!("bad walltime `{v}`")))?
+                    }
+                    "mem" | "pmem" => {
+                        self.mem = parse_mem(v.trim())
+                            .ok_or_else(|| Error::parse(format!("bad mem `{v}`")))?
+                    }
+                    _ => {} // ncpus, vmem, etc. accepted-and-ignored
+                }
+            } else {
+                return Err(Error::parse(format!("bad resource item `{item}`")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Render back to script text (used when the operator forwards the
+    /// embedded script over red-box).
+    pub fn render(&self) -> String {
+        // If the body opens with a shebang, hoist it above the directives
+        // (standard script layout); otherwise emit directives + body
+        // verbatim so parse(render(s)) == s.
+        let mut body = self.body.as_slice();
+        let mut out = String::new();
+        if body.first().map(|l| l.starts_with("#!")) == Some(true) {
+            out.push_str(&body[0]);
+            out.push('\n');
+            body = &body[1..];
+        }
+        if let Some(n) = &self.name {
+            out.push_str(&format!("#PBS -N {n}\n"));
+        }
+        if let Some(q) = &self.queue {
+            out.push_str(&format!("#PBS -q {q}\n"));
+        }
+        out.push_str(&format!(
+            "#PBS -l walltime={}\n",
+            crate::util::fmt_walltime(self.walltime)
+        ));
+        let mut nodes = format!("#PBS -l nodes={}", self.nodes);
+        if self.ppn != 1 {
+            nodes.push_str(&format!(":ppn={}", self.ppn));
+        }
+        for p in &self.properties {
+            nodes.push_str(&format!(":{p}"));
+        }
+        out.push_str(&nodes);
+        out.push('\n');
+        if self.mem > 0 {
+            out.push_str(&format!("#PBS -l mem={}\n", crate::util::fmt_mem(self.mem)));
+        }
+        if self.priority != 0 {
+            out.push_str(&format!("#PBS -p {}\n", self.priority));
+        }
+        if let Some(p) = &self.stderr_path {
+            out.push_str(&format!("#PBS -e {p}\n"));
+        }
+        if let Some(p) = &self.stdout_path {
+            out.push_str(&format!("#PBS -o {p}\n"));
+        }
+        if !self.env.is_empty() {
+            let pairs: Vec<String> =
+                self.env.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            out.push_str(&format!("#PBS -v {}\n", pairs.join(",")));
+        }
+        for line in body {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn nonempty<'a>(s: &'a str, flag: &str) -> Result<&'a str> {
+    if s.is_empty() {
+        Err(Error::parse(format!("`{flag}` needs an argument")))
+    } else {
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exactly the embedded script of the paper's Fig. 3.
+    const FIG3: &str = "#!/bin/sh\n#PBS -l walltime=00:30:00\n#PBS -l nodes=1\n#PBS -e $HOME/low.err\n#PBS -o $HOME/low.out\nexport PATH=$PATH:/usr/local/bin\nsingularity run lolcow_latest.sif\n";
+
+    #[test]
+    fn parses_paper_fig3_script() {
+        let s = PbsScript::parse(FIG3).unwrap();
+        assert_eq!(s.walltime, Duration::from_secs(1800));
+        assert_eq!(s.nodes, 1);
+        assert_eq!(s.ppn, 1);
+        assert_eq!(s.stderr_path.as_deref(), Some("$HOME/low.err"));
+        assert_eq!(s.stdout_path.as_deref(), Some("$HOME/low.out"));
+        assert_eq!(
+            s.body,
+            vec![
+                "#!/bin/sh",
+                "export PATH=$PATH:/usr/local/bin",
+                "singularity run lolcow_latest.sif"
+            ]
+        );
+    }
+
+    #[test]
+    fn full_directive_set() {
+        let text = "#PBS -N myjob\n#PBS -q gpu\n#PBS -l nodes=4:ppn=8:bigmem,walltime=2:00:00,mem=16gb\n#PBS -p 5\n#PBS -v A=1,B=two\necho hi\n";
+        let s = PbsScript::parse(text).unwrap();
+        assert_eq!(s.name.as_deref(), Some("myjob"));
+        assert_eq!(s.queue.as_deref(), Some("gpu"));
+        assert_eq!(s.nodes, 4);
+        assert_eq!(s.ppn, 8);
+        assert_eq!(s.properties, vec!["bigmem"]);
+        assert_eq!(s.walltime, Duration::from_secs(7200));
+        assert_eq!(s.mem, 16 << 30);
+        assert_eq!(s.priority, 5);
+        assert_eq!(s.env, vec![("A".into(), "1".into()), ("B".into(), "two".into())]);
+        assert_eq!(s.body, vec!["echo hi"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let s = PbsScript::parse("echo hi\n").unwrap();
+        assert_eq!(s.nodes, 1);
+        assert_eq!(s.ppn, 1);
+        assert_eq!(s.walltime, Duration::from_secs(3600));
+        assert!(s.queue.is_none());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = PbsScript::parse("#PBS -l walltime=abc\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        assert!(PbsScript::parse("#PBS -l nodes=0\n").is_err());
+        assert!(PbsScript::parse("#PBS -l nodes=1:ppn=0\n").is_err());
+        assert!(PbsScript::parse("#PBS -p high\n").is_err());
+        assert!(PbsScript::parse("#PBS -X whatever\n").is_err());
+        assert!(PbsScript::parse("#PBS -N\n").is_err());
+    }
+
+    #[test]
+    fn ignored_directives_accepted() {
+        let s = PbsScript::parse("#PBS -m abe\n#PBS -M a@b.c\n#PBS -j oe\necho x\n").unwrap();
+        assert_eq!(s.body, vec!["echo x"]);
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let text = "#PBS -N r\n#PBS -q batch\n#PBS -l nodes=2:ppn=4:gpu\n#PBS -l walltime=00:10:00,mem=2gb\n#PBS -p 3\n#PBS -e /e\n#PBS -o /o\n#PBS -v X=1\necho body\n";
+        let s = PbsScript::parse(text).unwrap();
+        let s2 = PbsScript::parse(&s.render()).unwrap();
+        assert_eq!(s2, s);
+    }
+
+    #[test]
+    fn indented_directives() {
+        let s = PbsScript::parse("  #PBS -N indent\necho x\n").unwrap();
+        assert_eq!(s.name.as_deref(), Some("indent"));
+    }
+}

@@ -1,0 +1,797 @@
+//! pbs_server: job registry, state machine, queue admission, and the
+//! scheduling loop that dispatches to pbs_moms.
+//!
+//! Job states follow Torque: `Q` (queued) → `R` (running) → `C` (completed),
+//! with `H` (held) and deletion (qdel) side paths. Time inside the server
+//! is *nominal* seconds (`now_s = elapsed_real / time_scale`), so walltimes
+//! and backfill reservations behave identically whether the testbed runs
+//! in real time or 1000× compressed.
+
+use super::mom::{JobDone, LaunchSpec, Mom};
+use super::queue::{QueueConfig, QueueSet};
+use super::script::PbsScript;
+use crate::cluster::{Metrics, NodeSpec, SharedFs};
+use crate::rt::{self, Shutdown, Timers};
+use crate::sched::{NodeState, PendingJob, RunningJob, SchedPolicy};
+use crate::singularity::Runtime;
+use crate::util::{Error, JobId, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Torque job states (qstat letters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Held,
+    Running,
+    Completed,
+}
+
+impl JobState {
+    pub fn letter(&self) -> char {
+        match self {
+            JobState::Queued => 'Q',
+            JobState::Held => 'H',
+            JobState::Running => 'R',
+            JobState::Completed => 'C',
+        }
+    }
+}
+
+/// One job's record in the server.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub seq: u64,
+    pub id: JobId,
+    pub script: PbsScript,
+    pub queue: String,
+    pub user: String,
+    pub state: JobState,
+    pub submit_s: f64,
+    pub start_s: Option<f64>,
+    pub end_s: Option<f64>,
+    pub placement: Vec<String>,
+    pub exit_code: Option<i32>,
+    pub cancelled: bool,
+    pub walltime_exceeded: bool,
+}
+
+impl Job {
+    pub fn name(&self) -> &str {
+        self.script.name.as_deref().unwrap_or("STDIN")
+    }
+}
+
+/// Accounting log record (Torque's accounting `E` record, distilled).
+#[derive(Debug, Clone)]
+pub struct AcctRecord {
+    pub seq: u64,
+    pub user: String,
+    pub queue: String,
+    pub submit_s: f64,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub nodes: u32,
+    pub ppn: u32,
+    pub exit_code: i32,
+}
+
+struct NodeAlloc {
+    spec: NodeSpec,
+    used_cores: u32,
+    used_mem: u64,
+}
+
+struct SrvState {
+    jobs: BTreeMap<u64, Job>,
+    nodes: Vec<NodeAlloc>,
+    accounting: Vec<AcctRecord>,
+}
+
+pub struct PbsConfig {
+    pub server_name: String,
+    pub queues: Vec<QueueConfig>,
+    /// Real-time period between scheduling cycles.
+    pub sched_period: Duration,
+    /// Nominal→real compression (0.001 = "30 minutes" runs in 1.8 s).
+    pub time_scale: f64,
+}
+
+impl Default for PbsConfig {
+    fn default() -> Self {
+        PbsConfig {
+            server_name: "torque-head".into(),
+            queues: vec![QueueConfig::batch(&[])],
+            sched_period: Duration::from_millis(5),
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// The pbs_server handle (cheap clone).
+#[derive(Clone)]
+pub struct PbsServer {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    name: String,
+    queues: QueueSet,
+    policy: Box<dyn SchedPolicy>,
+    state: Mutex<SrvState>,
+    moms: Mutex<HashMap<String, Mom>>,
+    metrics: Metrics,
+    time_scale: f64,
+    epoch: Instant,
+    seq: AtomicU64,
+    fs: SharedFs,
+}
+
+impl PbsServer {
+    /// Boot the server: registers a mom per compute node, starts the event
+    /// loop and the scheduler ticker.
+    pub fn start(
+        config: PbsConfig,
+        compute_nodes: Vec<NodeSpec>,
+        runtime: Runtime,
+        fs: SharedFs,
+        policy: Box<dyn SchedPolicy>,
+        timers: Timers,
+        metrics: Metrics,
+        shutdown: Shutdown,
+    ) -> Result<PbsServer> {
+        let queues = QueueSet::new(config.queues)?;
+        let (done_tx, done_rx) = channel::<JobDone>();
+        let mut moms = HashMap::new();
+        for spec in &compute_nodes {
+            let mom = Mom::new(
+                spec.clone(),
+                fs.clone(),
+                runtime.clone(),
+                timers.clone(),
+                config.time_scale,
+                done_tx.clone(),
+                metrics.clone(),
+                shutdown.clone(),
+            );
+            moms.insert(spec.name.clone(), mom);
+        }
+        let inner = Arc::new(Inner {
+            name: config.server_name,
+            queues,
+            policy,
+            state: Mutex::new(SrvState {
+                jobs: BTreeMap::new(),
+                nodes: compute_nodes
+                    .into_iter()
+                    .map(|spec| NodeAlloc { spec, used_cores: 0, used_mem: 0 })
+                    .collect(),
+                accounting: Vec::new(),
+            }),
+            moms: Mutex::new(moms),
+            metrics,
+            time_scale: config.time_scale.max(1e-9),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(1),
+            fs,
+        });
+        let server = PbsServer { inner };
+
+        // Completion event loop.
+        let srv2 = server.clone();
+        let sd2 = shutdown.clone();
+        rt::spawn_named("pbs-events", move || loop {
+            match done_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(done) => srv2.on_job_done(done),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if sd2.is_triggered() {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        });
+
+        // Scheduler ticker.
+        let srv3 = server.clone();
+        rt::pool::spawn_ticker("pbs-sched", config.sched_period, shutdown, move || {
+            srv3.run_sched_cycle();
+        });
+        Ok(server)
+    }
+
+    pub fn server_name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn fs(&self) -> &SharedFs {
+        &self.inner.fs
+    }
+
+    pub fn queues(&self) -> &QueueSet {
+        &self.inner.queues
+    }
+
+    pub fn time_scale(&self) -> f64 {
+        self.inner.time_scale
+    }
+
+    /// Nominal seconds since server boot.
+    pub fn now_s(&self) -> f64 {
+        self.inner.epoch.elapsed().as_secs_f64() / self.inner.time_scale
+    }
+
+    // ------------------------------------------------------------- commands
+
+    /// `qsub`: submit a PBS script. Returns the job id (`<seq>.<server>`).
+    pub fn qsub(&self, script_text: &str, user: &str) -> Result<JobId> {
+        let script = PbsScript::parse(script_text)?;
+        self.qsub_parsed(script, user)
+    }
+
+    pub fn qsub_parsed(&self, script: PbsScript, user: &str) -> Result<JobId> {
+        let queue = self.inner.queues.resolve(script.queue.as_deref())?.clone();
+        {
+            let state = self.inner.state.lock().unwrap();
+            let depth = state
+                .jobs
+                .values()
+                .filter(|j| j.queue == queue.name && j.state != JobState::Completed)
+                .count();
+            queue.admit(&script, user, depth)?;
+            // Reject jobs that can never run (no node is big enough).
+            let feasible = state.nodes.iter().filter(|n| node_matches(n, &script)).count()
+                >= script.nodes as usize;
+            if !feasible {
+                return Err(Error::wlm(format!(
+                    "job requests {} node(s) with ppn={} — queue `{}` cannot ever satisfy it",
+                    script.nodes, script.ppn, queue.name
+                )));
+            }
+        }
+        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let id = JobId::new(seq, &self.inner.name);
+        let job = Job {
+            seq,
+            id: id.clone(),
+            script,
+            queue: queue.name.clone(),
+            user: user.to_string(),
+            state: JobState::Queued,
+            submit_s: self.now_s(),
+            start_s: None,
+            end_s: None,
+            placement: Vec::new(),
+            exit_code: None,
+            cancelled: false,
+            walltime_exceeded: false,
+        };
+        self.inner.state.lock().unwrap().jobs.insert(seq, job);
+        self.inner.metrics.inc("pbs.jobs_submitted");
+        Ok(id)
+    }
+
+    /// `qstat`: all jobs (completed included, like `qstat -x`).
+    pub fn qstat(&self) -> Vec<Job> {
+        self.inner.state.lock().unwrap().jobs.values().cloned().collect()
+    }
+
+    pub fn qstat_job(&self, seq: u64) -> Result<Job> {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .jobs
+            .get(&seq)
+            .cloned()
+            .ok_or_else(|| Error::wlm(format!("qstat: unknown job {seq}")))
+    }
+
+    /// `qdel`: cancel a job.
+    pub fn qdel(&self, seq: u64) -> Result<()> {
+        let mom_to_cancel = {
+            let mut state = self.inner.state.lock().unwrap();
+            let now = self.now_s();
+            let job = state
+                .jobs
+                .get_mut(&seq)
+                .ok_or_else(|| Error::wlm(format!("qdel: unknown job {seq}")))?;
+            match job.state {
+                JobState::Queued | JobState::Held => {
+                    job.state = JobState::Completed;
+                    job.cancelled = true;
+                    job.end_s = Some(now);
+                    job.exit_code = Some(271); // Torque's qdel exit status
+                    None
+                }
+                JobState::Running => {
+                    job.cancelled = true;
+                    job.placement.first().cloned()
+                }
+                JobState::Completed => None,
+            }
+        };
+        if let Some(node) = mom_to_cancel {
+            if let Some(mom) = self.inner.moms.lock().unwrap().get(&node) {
+                mom.cancel(seq);
+            }
+        }
+        self.inner.metrics.inc("pbs.jobs_deleted");
+        Ok(())
+    }
+
+    /// `qhold` / `qrls`.
+    pub fn qhold(&self, seq: u64) -> Result<()> {
+        self.transition(seq, JobState::Queued, JobState::Held, "qhold")
+    }
+
+    pub fn qrls(&self, seq: u64) -> Result<()> {
+        self.transition(seq, JobState::Held, JobState::Queued, "qrls")
+    }
+
+    fn transition(&self, seq: u64, from: JobState, to: JobState, verb: &str) -> Result<()> {
+        let mut state = self.inner.state.lock().unwrap();
+        let job = state
+            .jobs
+            .get_mut(&seq)
+            .ok_or_else(|| Error::wlm(format!("{verb}: unknown job {seq}")))?;
+        if job.state != from {
+            return Err(Error::wlm(format!(
+                "{verb}: job {seq} is {:?}, expected {:?}",
+                job.state, from
+            )));
+        }
+        job.state = to;
+        Ok(())
+    }
+
+    /// `qalter`: modify a queued job's priority and/or walltime.
+    pub fn qalter(
+        &self,
+        seq: u64,
+        priority: Option<i64>,
+        walltime: Option<Duration>,
+    ) -> Result<()> {
+        let mut state = self.inner.state.lock().unwrap();
+        let job = state
+            .jobs
+            .get_mut(&seq)
+            .ok_or_else(|| Error::wlm(format!("qalter: unknown job {seq}")))?;
+        if !matches!(job.state, JobState::Queued | JobState::Held) {
+            return Err(Error::wlm(format!("qalter: job {seq} already started")));
+        }
+        if let Some(p) = priority {
+            job.script.priority = p;
+        }
+        if let Some(w) = walltime {
+            job.script.walltime = w;
+        }
+        Ok(())
+    }
+
+    /// `pbsnodes`: per-node allocation view `(name, used_cores, total_cores)`.
+    pub fn pbsnodes(&self) -> Vec<(String, u32, u32)> {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .nodes
+            .iter()
+            .map(|n| {
+                (n.spec.name.clone(), n.used_cores, (n.spec.capacity.cpu_milli / 1000) as u32)
+            })
+            .collect()
+    }
+
+    pub fn accounting(&self) -> Vec<AcctRecord> {
+        self.inner.state.lock().unwrap().accounting.clone()
+    }
+
+    /// Block until a job completes (tests, the operator's status loop uses
+    /// polling instead).
+    pub fn wait_for(&self, seq: u64, timeout: Duration) -> Result<Job> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let job = self.qstat_job(seq)?;
+            if job.state == JobState::Completed {
+                return Ok(job);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::wlm(format!("timeout waiting for job {seq}")));
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+
+    // ------------------------------------------------------------ scheduling
+
+    /// One scheduling cycle. Public so tests/benches can step deterministically.
+    pub fn run_sched_cycle(&self) {
+        let now = self.now_s();
+        let t0 = Instant::now();
+        let launches = {
+            let mut state = self.inner.state.lock().unwrap();
+            let mut launches: Vec<(String, LaunchSpec)> = Vec::new();
+            // Queues in priority order, highest first.
+            let mut queue_order: Vec<&QueueConfig> = self.inner.queues.iter().collect();
+            queue_order.sort_by(|a, b| b.priority.cmp(&a.priority).then(a.name.cmp(&b.name)));
+            for queue in queue_order {
+                // Group pending by property-set so feature-constrained jobs
+                // only see matching nodes (simplification documented in
+                // DESIGN.md: property groups are scheduled sequentially).
+                let mut prop_groups: Vec<Vec<String>> = Vec::new();
+                for j in state.jobs.values() {
+                    if j.state == JobState::Queued && j.queue == queue.name {
+                        let props = j.script.properties.clone();
+                        if !prop_groups.contains(&props) {
+                            prop_groups.push(props);
+                        }
+                    }
+                }
+                for props in prop_groups {
+                    let pending: Vec<PendingJob> = state
+                        .jobs
+                        .values()
+                        .filter(|j| {
+                            j.state == JobState::Queued
+                                && j.queue == queue.name
+                                && j.script.properties == props
+                        })
+                        .map(|j| PendingJob {
+                            id: j.seq,
+                            nodes: j.script.nodes,
+                            ppn: j.script.ppn,
+                            mem: j.script.mem,
+                            walltime: j.script.walltime,
+                            priority: j.script.priority + queue.priority,
+                            submit_s: j.submit_s,
+                        })
+                        .collect();
+                    if pending.is_empty() {
+                        continue;
+                    }
+                    let (node_states, index_to_name) =
+                        snapshot_nodes(&state, queue, &props);
+                    if node_states.is_empty() {
+                        continue;
+                    }
+                    let running = snapshot_running(&state, &index_to_name);
+                    let assignments =
+                        self.inner.policy.schedule(now, &pending, &node_states, &running);
+                    for a in assignments {
+                        let names: Vec<String> =
+                            a.placement.iter().map(|p| index_to_name[p.node].clone()).collect();
+                        let job = state.jobs.get_mut(&a.job).expect("assigned job exists");
+                        job.state = JobState::Running;
+                        job.start_s = Some(now);
+                        job.placement = names.clone();
+                        let spec = LaunchSpec {
+                            job_seq: job.seq,
+                            job_name: job.name().to_string(),
+                            body: job.script.body.clone(),
+                            env: job.script.env.clone(),
+                            stdout_path: job.script.stdout_path.clone(),
+                            stderr_path: job.script.stderr_path.clone(),
+                            walltime: job.script.walltime,
+                            seed: job.seq,
+                        };
+                        let ppn = job.script.ppn;
+                        let mem = job.script.mem;
+                        for name in &names {
+                            let alloc = state
+                                .nodes
+                                .iter_mut()
+                                .find(|n| &n.spec.name == name)
+                                .expect("placement node exists");
+                            alloc.used_cores += ppn;
+                            alloc.used_mem += mem;
+                        }
+                        // wait time in nominal seconds → histogram in µs units
+                        let wait = now - state.jobs[&a.job].submit_s;
+                        self.inner
+                            .metrics
+                            .observe("pbs.wait_nominal_us", (wait * 1e6).max(0.0) as u64);
+                        launches.push((names[0].clone(), spec));
+                    }
+                }
+            }
+            launches
+        };
+        for (node, spec) in launches {
+            if let Some(mom) = self.inner.moms.lock().unwrap().get(&node) {
+                self.inner.metrics.inc("pbs.jobs_started");
+                mom.launch(spec);
+            }
+        }
+        self.inner.metrics.inc("pbs.sched_cycles");
+        self.inner.metrics.observe("pbs.sched_cycle_ns", t0.elapsed().as_nanos() as u64);
+    }
+
+    fn on_job_done(&self, done: JobDone) {
+        let mut state = self.inner.state.lock().unwrap();
+        let now = self.now_s();
+        let Some(job) = state.jobs.get_mut(&done.job_seq) else { return };
+        if job.state != JobState::Running {
+            return; // duplicate/stale report
+        }
+        job.state = JobState::Completed;
+        job.end_s = Some(now);
+        job.exit_code = Some(done.exit_code);
+        job.walltime_exceeded = done.walltime_exceeded;
+        job.cancelled = job.cancelled || done.cancelled;
+        let record = AcctRecord {
+            seq: job.seq,
+            user: job.user.clone(),
+            queue: job.queue.clone(),
+            submit_s: job.submit_s,
+            start_s: job.start_s.unwrap_or(now),
+            end_s: now,
+            nodes: job.script.nodes,
+            ppn: job.script.ppn,
+            exit_code: done.exit_code,
+        };
+        let ppn = job.script.ppn;
+        let mem = job.script.mem;
+        let placement = job.placement.clone();
+        for name in &placement {
+            if let Some(alloc) = state.nodes.iter_mut().find(|n| &n.spec.name == name) {
+                alloc.used_cores = alloc.used_cores.saturating_sub(ppn);
+                alloc.used_mem = alloc.used_mem.saturating_sub(mem);
+            }
+        }
+        state.accounting.push(record);
+        self.inner.metrics.inc("pbs.jobs_completed");
+    }
+}
+
+fn node_matches(n: &NodeAlloc, script: &PbsScript) -> bool {
+    let cores = (n.spec.capacity.cpu_milli / 1000) as u32;
+    cores >= script.ppn
+        && n.spec.capacity.mem_bytes >= script.mem
+        && script.properties.iter().all(|p| n.spec.has_feature(p))
+}
+
+/// Build policy NodeStates for one queue (+property filter); returns the
+/// dense index → node-name mapping.
+fn snapshot_nodes(
+    state: &SrvState,
+    queue: &QueueConfig,
+    props: &[String],
+) -> (Vec<NodeState>, Vec<String>) {
+    let mut states = Vec::new();
+    let mut names = Vec::new();
+    for alloc in &state.nodes {
+        let in_queue = queue.nodes.is_empty() || queue.nodes.contains(&alloc.spec.name);
+        let has_props = props.iter().all(|p| alloc.spec.has_feature(p));
+        if in_queue && has_props {
+            let total_cores = (alloc.spec.capacity.cpu_milli / 1000) as u32;
+            states.push(NodeState {
+                id: names.len(),
+                total_cores,
+                free_cores: total_cores.saturating_sub(alloc.used_cores),
+                total_mem: alloc.spec.capacity.mem_bytes,
+                free_mem: alloc.spec.capacity.mem_bytes.saturating_sub(alloc.used_mem),
+            });
+            names.push(alloc.spec.name.clone());
+        }
+    }
+    (states, names)
+}
+
+fn snapshot_running(state: &SrvState, index_names: &[String]) -> Vec<RunningJob> {
+    let name_to_idx: HashMap<&str, usize> =
+        index_names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+    state
+        .jobs
+        .values()
+        .filter(|j| j.state == JobState::Running)
+        .map(|j| RunningJob {
+            id: j.seq,
+            placement: j
+                .placement
+                .iter()
+                .filter_map(|n| name_to_idx.get(n.as_str()))
+                .map(|&node| crate::sched::Placement {
+                    node,
+                    cores: j.script.ppn,
+                    mem: j.script.mem,
+                })
+                .collect(),
+            expected_end_s: j.start_s.unwrap_or(0.0) + j.script.walltime.as_secs_f64(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeRole, Resources};
+    use crate::sched::EasyBackfill;
+    use crate::singularity::{ImageRegistry, RuntimeKind};
+
+    fn boot(n_nodes: usize, cores: u32) -> (PbsServer, Shutdown) {
+        let sd = Shutdown::new();
+        let (timers, _) = Timers::start(sd.clone());
+        let fs = SharedFs::new();
+        let runtime = Runtime::new(
+            RuntimeKind::Singularity,
+            ImageRegistry::with_defaults(),
+            Metrics::new(),
+        );
+        let nodes: Vec<NodeSpec> = (0..n_nodes)
+            .map(|i| {
+                NodeSpec::new(
+                    format!("cn{i:02}"),
+                    NodeRole::TorqueCompute,
+                    Resources::cores(cores, 32 << 30),
+                )
+            })
+            .collect();
+        let mut cfg = PbsConfig::default();
+        cfg.time_scale = 0.001; // 1000x compressed
+        cfg.sched_period = Duration::from_millis(2);
+        let srv = PbsServer::start(
+            cfg,
+            nodes,
+            runtime,
+            fs,
+            Box::new(EasyBackfill),
+            timers,
+            Metrics::new(),
+            sd.clone(),
+        )
+        .unwrap();
+        (srv, sd)
+    }
+
+    #[test]
+    fn fig3_job_lifecycle() {
+        let (srv, sd) = boot(2, 8);
+        let id = srv
+            .qsub(
+                "#!/bin/sh\n#PBS -l walltime=00:30:00\n#PBS -l nodes=1\n#PBS -e $HOME/low.err\n#PBS -o $HOME/low.out\nexport PATH=$PATH:/usr/local/bin\nsingularity run lolcow_latest.sif\n",
+                "user",
+            )
+            .unwrap();
+        assert_eq!(id.server, "torque-head");
+        let job = srv.wait_for(id.seq, Duration::from_secs(10)).unwrap();
+        assert_eq!(job.exit_code, Some(0));
+        assert!(!job.cancelled);
+        let out = srv.fs().read_string("$HOME/low.out").unwrap();
+        assert!(out.contains("Moo"), "lolcow output staged: {out}");
+        assert!(srv.fs().exists("$HOME/low.err"));
+        sd.trigger();
+    }
+
+    #[test]
+    fn resources_charged_and_freed() {
+        let (srv, sd) = boot(1, 8);
+        let id = srv.qsub("#PBS -l nodes=1:ppn=8\nsleep 200\n", "u").unwrap();
+        // wait until running
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if srv.qstat_job(id.seq).unwrap().state == JobState::Running {
+                break;
+            }
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(srv.pbsnodes()[0].1, 8, "all cores charged");
+        // A second full-node job must wait.
+        let id2 = srv.qsub("#PBS -l nodes=1:ppn=8\necho hi\n", "u").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(srv.qstat_job(id2.seq).unwrap().state, JobState::Queued);
+        srv.qdel(id.seq).unwrap();
+        let j2 = srv.wait_for(id2.seq, Duration::from_secs(10)).unwrap();
+        assert_eq!(j2.exit_code, Some(0));
+        assert_eq!(srv.pbsnodes()[0].1, 0, "cores freed");
+        sd.trigger();
+    }
+
+    #[test]
+    fn qdel_queued_and_running() {
+        let (srv, sd) = boot(1, 4);
+        let running = srv.qsub("#PBS -l nodes=1:ppn=4\nsleep 500\n", "u").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let queued = srv.qsub("#PBS -l nodes=1:ppn=4\necho q\n", "u").unwrap();
+        srv.qdel(queued.seq).unwrap();
+        let jq = srv.qstat_job(queued.seq).unwrap();
+        assert_eq!(jq.state, JobState::Completed);
+        assert!(jq.cancelled);
+        assert_eq!(jq.exit_code, Some(271));
+        srv.qdel(running.seq).unwrap();
+        let jr = srv.wait_for(running.seq, Duration::from_secs(10)).unwrap();
+        assert!(jr.cancelled);
+        assert!(srv.qdel(9999).is_err());
+        sd.trigger();
+    }
+
+    #[test]
+    fn hold_release_cycle() {
+        let (srv, sd) = boot(1, 4);
+        // Fill the node so our target job stays queued.
+        let filler = srv.qsub("#PBS -l nodes=1:ppn=4\nsleep 300\n", "u").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let id = srv.qsub("#PBS -l nodes=1:ppn=4\necho held\n", "u").unwrap();
+        srv.qhold(id.seq).unwrap();
+        assert_eq!(srv.qstat_job(id.seq).unwrap().state, JobState::Held);
+        assert!(srv.qhold(id.seq).is_err(), "double hold");
+        srv.qdel(filler.seq).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(
+            srv.qstat_job(id.seq).unwrap().state,
+            JobState::Held,
+            "held job must not start"
+        );
+        srv.qrls(id.seq).unwrap();
+        let j = srv.wait_for(id.seq, Duration::from_secs(10)).unwrap();
+        assert_eq!(j.exit_code, Some(0));
+        sd.trigger();
+    }
+
+    #[test]
+    fn qalter_only_before_start() {
+        let (srv, sd) = boot(1, 4);
+        let filler = srv.qsub("#PBS -l nodes=1:ppn=4\nsleep 300\n", "u").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let id = srv.qsub("#PBS -l nodes=1:ppn=1\necho x\n", "u").unwrap();
+        srv.qalter(id.seq, Some(99), Some(Duration::from_secs(60))).unwrap();
+        let j = srv.qstat_job(id.seq).unwrap();
+        assert_eq!(j.script.priority, 99);
+        assert_eq!(j.script.walltime, Duration::from_secs(60));
+        assert!(srv.qalter(filler.seq, Some(1), None).is_err(), "running job");
+        srv.qdel(filler.seq).unwrap();
+        sd.trigger();
+    }
+
+    #[test]
+    fn infeasible_job_rejected_at_submit() {
+        let (srv, sd) = boot(2, 8);
+        assert!(srv.qsub("#PBS -l nodes=3\necho x\n", "u").is_err(), "too many nodes");
+        assert!(srv.qsub("#PBS -l nodes=1:ppn=16\necho x\n", "u").is_err(), "too wide");
+        assert!(srv.qsub("#PBS -q nope\necho x\n", "u").is_err(), "unknown queue");
+        sd.trigger();
+    }
+
+    #[test]
+    fn walltime_exceeded_recorded() {
+        let (srv, sd) = boot(1, 4);
+        // walltime 5s nominal = 5ms real; job sleeps 60s nominal = 60ms real.
+        let id = srv.qsub("#PBS -l walltime=0:05\nsleep 60\n", "u").unwrap();
+        let j = srv.wait_for(id.seq, Duration::from_secs(10)).unwrap();
+        assert!(j.walltime_exceeded, "{j:?}");
+        assert_eq!(j.exit_code, Some(137));
+        sd.trigger();
+    }
+
+    #[test]
+    fn accounting_written() {
+        let (srv, sd) = boot(2, 8);
+        let a = srv.qsub("#PBS -N a\necho a\n", "alice").unwrap();
+        let b = srv.qsub("#PBS -N b\necho b\n", "bob").unwrap();
+        srv.wait_for(a.seq, Duration::from_secs(10)).unwrap();
+        srv.wait_for(b.seq, Duration::from_secs(10)).unwrap();
+        let acct = srv.accounting();
+        assert_eq!(acct.len(), 2);
+        assert!(acct.iter().any(|r| r.user == "alice"));
+        assert!(acct.iter().all(|r| r.end_s >= r.start_s && r.start_s >= r.submit_s));
+        sd.trigger();
+    }
+
+    #[test]
+    fn multi_node_job_charges_all_chunks() {
+        let (srv, sd) = boot(3, 4);
+        let id = srv.qsub("#PBS -l nodes=2:ppn=4\nsleep 100\n", "u").unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        let used: u32 = srv.pbsnodes().iter().map(|(_, u, _)| *u).sum();
+        assert_eq!(used, 8, "two chunks of 4 cores");
+        let j = srv.qstat_job(id.seq).unwrap();
+        assert_eq!(j.placement.len(), 2);
+        srv.qdel(id.seq).unwrap();
+        srv.wait_for(id.seq, Duration::from_secs(10)).unwrap();
+        sd.trigger();
+    }
+}

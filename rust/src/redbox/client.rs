@@ -1,0 +1,157 @@
+//! red-box client: synchronous request/response over the Unix socket,
+//! thread-safe (a mutex serializes frames per connection — the operator's
+//! call pattern is low-rate control traffic), with lazy reconnect.
+
+use super::proto::{read_frame, write_frame, Request, Response};
+use crate::encoding::Value;
+use crate::util::{Error, Result};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+pub struct RedboxClient {
+    path: PathBuf,
+    conn: Mutex<Option<UnixStream>>,
+    next_id: AtomicU64,
+}
+
+impl RedboxClient {
+    /// Connect now; fails fast if the server socket is absent.
+    pub fn connect(path: impl AsRef<Path>) -> Result<RedboxClient> {
+        let path = path.as_ref().to_path_buf();
+        let stream = UnixStream::connect(&path)
+            .map_err(|e| Error::rpc(format!("connect {}: {e}", path.display())))?;
+        Ok(RedboxClient {
+            path,
+            conn: Mutex::new(Some(stream)),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Connect with retry — used at testbed boot where daemon start order
+    /// is not guaranteed.
+    pub fn connect_retry(path: impl AsRef<Path>, timeout: Duration) -> Result<RedboxClient> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match Self::connect(path.as_ref()) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+
+    /// Issue `Service/Method` with a JSON body; returns the response body.
+    /// One transparent reconnect+retry on transport failure (the server may
+    /// have restarted — red-box "future work: more stable deployments").
+    pub fn call(&self, method: &str, body: Value) -> Result<Value> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, method: method.to_string(), body };
+        let mut guard = self.conn.lock().unwrap();
+        match Self::round_trip(&mut guard, &self.path, &req) {
+            Ok(resp) => resp.into_result(),
+            Err(first) => {
+                // transport-level failure: reconnect once
+                *guard = None;
+                match Self::round_trip(&mut guard, &self.path, &req) {
+                    Ok(resp) => resp.into_result(),
+                    Err(_) => Err(first),
+                }
+            }
+        }
+    }
+
+    fn round_trip(
+        conn: &mut Option<UnixStream>,
+        path: &Path,
+        req: &Request,
+    ) -> Result<Response> {
+        if conn.is_none() {
+            let stream = UnixStream::connect(path)
+                .map_err(|e| Error::rpc(format!("reconnect {}: {e}", path.display())))?;
+            *conn = Some(stream);
+        }
+        let stream = conn.as_mut().unwrap();
+        let result: Result<Response> = (|| {
+            write_frame(stream, &req.encode())?;
+            let frame = read_frame(stream)?
+                .ok_or_else(|| Error::rpc("server closed connection"))?;
+            Response::decode(&frame)
+        })();
+        if result.is_err() {
+            *conn = None; // poison the connection
+        }
+        let resp = result?;
+        if resp.id != req.id {
+            *conn = None;
+            return Err(Error::rpc(format!(
+                "response id mismatch: sent {} got {}",
+                req.id, resp.id
+            )));
+        }
+        Ok(resp)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Metrics;
+    use crate::redbox::server::{FnService, RedboxServer};
+    use crate::rt::Shutdown;
+    use std::sync::Arc;
+
+    fn sock(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hpcorc-cli-{tag}-{}.sock", std::process::id()))
+    }
+
+    #[test]
+    fn connect_fails_without_server() {
+        assert!(RedboxClient::connect("/tmp/does-not-exist-hpcorc.sock").is_err());
+    }
+
+    #[test]
+    fn reconnects_after_server_restart() {
+        let path = sock("restart");
+        let sd1 = Shutdown::new();
+        let mut srv1 = RedboxServer::start(&path, sd1.clone(), Metrics::new()).unwrap();
+        srv1.register("s.S", Arc::new(FnService(|_: &str, _: &Value| Ok(Value::Int(1)))));
+        let client = RedboxClient::connect(&path).unwrap();
+        assert_eq!(client.call("s.S/m", Value::Null).unwrap(), Value::Int(1));
+        srv1.stop();
+        // Server gone: a fresh server comes up on the same socket.
+        let sd2 = Shutdown::new();
+        let mut srv2 = RedboxServer::start(&path, sd2.clone(), Metrics::new()).unwrap();
+        srv2.register("s.S", Arc::new(FnService(|_: &str, _: &Value| Ok(Value::Int(2)))));
+        // The old connection is dead; call() reconnects transparently.
+        assert_eq!(client.call("s.S/m", Value::Null).unwrap(), Value::Int(2));
+        srv2.stop();
+    }
+
+    #[test]
+    fn connect_retry_waits_for_server() {
+        let path = sock("retry");
+        let p2 = path.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let sd = Shutdown::new();
+            let mut srv = RedboxServer::start(&p2, sd, Metrics::new()).unwrap();
+            srv.register("s.S", Arc::new(FnService(|_: &str, _: &Value| Ok(Value::Null))));
+            std::thread::sleep(Duration::from_millis(200));
+            srv.stop();
+        });
+        let c = RedboxClient::connect_retry(&path, Duration::from_secs(5)).unwrap();
+        assert!(c.call("s.S/m", Value::Null).is_ok());
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,16 @@
+//! red-box: the Unix-socket RPC bridge between the Kubernetes side and the
+//! Torque side of the login node (paper §II/§III-B).
+//!
+//! WLM-Operator implements red-box as a gRPC proxy; this is the same
+//! three-piece shape — a service definition ([`proto`]), a server that
+//! listens and dispatches ([`server`]), and clients that mirror the methods
+//! ([`client`]) — over length-prefixed JSON frames on a real Unix domain
+//! socket.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::RedboxClient;
+pub use proto::{Request, Response};
+pub use server::{FnService, RedboxServer, Service};

@@ -1,0 +1,187 @@
+//! red-box wire protocol.
+//!
+//! WLM-Operator's red-box is a gRPC proxy over a Unix socket; ours is the
+//! same shape without the protoc toolchain: a **service/method** envelope,
+//! length-prefixed frames, JSON bodies. Method names are `Service/Method`
+//! (e.g. `torque.Workload/SubmitJob`), mirroring gRPC paths, and services
+//! are defined as Rust traits in [`super::server`].
+//!
+//! Frame layout: `u32 LE body length | body bytes` where body is the JSON
+//! encoding of [`Request`] or [`Response`].
+
+use crate::encoding::{json, Value};
+use crate::util::{Error, Result};
+use std::io::{Read, Write};
+
+/// Maximum accepted frame (defensive; PBS scripts are small).
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client-assigned id, echoed in the response.
+    pub id: u64,
+    /// `Service/Method`, e.g. `torque.Workload/SubmitJob`.
+    pub method: String,
+    pub body: Value,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    /// Ok ⇒ `body` is the result; Err ⇒ `error` holds the message.
+    pub ok: bool,
+    pub body: Value,
+    pub error: String,
+}
+
+impl Request {
+    pub fn encode(&self) -> Value {
+        Value::map()
+            .with("id", self.id)
+            .with("method", self.method.clone())
+            .with("body", self.body.clone())
+    }
+
+    pub fn decode(v: &Value) -> Result<Request> {
+        Ok(Request {
+            id: v.req_int("id")? as u64,
+            method: v.req_str("method")?.to_string(),
+            body: v.get("body").cloned().unwrap_or(Value::Null),
+        })
+    }
+
+    /// Split `Service/Method`.
+    pub fn split_method(&self) -> Result<(&str, &str)> {
+        self.method
+            .split_once('/')
+            .ok_or_else(|| Error::rpc(format!("malformed method `{}`", self.method)))
+    }
+}
+
+impl Response {
+    pub fn ok(id: u64, body: Value) -> Response {
+        Response { id, ok: true, body, error: String::new() }
+    }
+
+    pub fn err(id: u64, error: impl Into<String>) -> Response {
+        Response { id, ok: false, body: Value::Null, error: error.into() }
+    }
+
+    pub fn encode(&self) -> Value {
+        Value::map()
+            .with("id", self.id)
+            .with("ok", self.ok)
+            .with("body", self.body.clone())
+            .with("error", self.error.clone())
+    }
+
+    pub fn decode(v: &Value) -> Result<Response> {
+        Ok(Response {
+            id: v.req_int("id")? as u64,
+            ok: v.opt_bool("ok").unwrap_or(false),
+            body: v.get("body").cloned().unwrap_or(Value::Null),
+            error: v.opt_str("error").unwrap_or("").to_string(),
+        })
+    }
+
+    /// Convert into a Result, mapping transported errors back.
+    pub fn into_result(self) -> Result<Value> {
+        if self.ok {
+            Ok(self.body)
+        } else {
+            Err(Error::rpc(self.error))
+        }
+    }
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<()> {
+    let body = json::to_string(v);
+    let bytes = body.as_bytes();
+    if bytes.len() as u64 > MAX_FRAME as u64 {
+        return Err(Error::rpc(format!("frame too large: {} bytes", bytes.len())));
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Value>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(Error::rpc(format!("oversized frame: {len} bytes")));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    let text = std::str::from_utf8(&body).map_err(|_| Error::rpc("frame not utf-8"))?;
+    Ok(Some(json::parse(text)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request {
+            id: 7,
+            method: "torque.Workload/SubmitJob".into(),
+            body: Value::map().with("script", "#PBS -l nodes=1"),
+        };
+        let back = Request::decode(&req.encode()).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(back.split_method().unwrap(), ("torque.Workload", "SubmitJob"));
+    }
+
+    #[test]
+    fn response_roundtrip_and_result() {
+        let ok = Response::ok(1, Value::str("42.torque-head"));
+        assert_eq!(Response::decode(&ok.encode()).unwrap(), ok);
+        assert_eq!(ok.clone().into_result().unwrap(), Value::str("42.torque-head"));
+        let err = Response::err(2, "queue not found");
+        assert!(Response::decode(&err.encode()).unwrap().into_result().is_err());
+    }
+
+    #[test]
+    fn malformed_method() {
+        let req = Request { id: 1, method: "nope".into(), body: Value::Null };
+        assert!(req.split_method().is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        let v = Value::map().with("hello", "world");
+        write_frame(&mut buf, &v).unwrap();
+        write_frame(&mut buf, &Value::Int(5)).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(v));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Value::Int(5)));
+        assert_eq!(read_frame(&mut r).unwrap(), None); // clean EOF
+    }
+
+    #[test]
+    fn truncated_frame_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Value::str("x")).unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

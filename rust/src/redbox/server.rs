@@ -1,0 +1,289 @@
+//! red-box server: a Unix-domain-socket RPC endpoint on the login node.
+//!
+//! "Red-box generates a Unix socket which allows data exchange among the
+//! Kubernetes and Torque processes" (paper §III-B). Services register under
+//! a name (`torque.Workload`); each accepted connection gets a handler
+//! thread that reads request frames and dispatches `Service/Method` calls.
+
+use super::proto::{read_frame, write_frame, Request, Response};
+use crate::cluster::Metrics;
+use crate::encoding::Value;
+use crate::rt::{self, Shutdown};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+
+/// One RPC service: a bundle of methods under a service name.
+pub trait Service: Send + Sync {
+    /// Handle `method` (the part after the `/`).
+    fn call(&self, method: &str, body: &Value) -> Result<Value>;
+}
+
+/// Plain function services for tests / small endpoints.
+pub struct FnService<F>(pub F);
+
+impl<F> Service for FnService<F>
+where
+    F: Fn(&str, &Value) -> Result<Value> + Send + Sync,
+{
+    fn call(&self, method: &str, body: &Value) -> Result<Value> {
+        (self.0)(method, body)
+    }
+}
+
+type Registry = Arc<RwLock<HashMap<String, Arc<dyn Service>>>>;
+
+/// The listening server. Dropping does NOT stop it; trigger the shutdown.
+pub struct RedboxServer {
+    path: PathBuf,
+    registry: Registry,
+    shutdown: Shutdown,
+    accept_thread: Option<JoinHandle<()>>,
+    metrics: Metrics,
+    /// Clones of accepted streams so stop() can unblock reader threads.
+    conns: Arc<std::sync::Mutex<Vec<UnixStream>>>,
+}
+
+impl RedboxServer {
+    /// Bind and start accepting. Removes a stale socket file first (as
+    /// red-box does on restart).
+    pub fn start(
+        path: impl AsRef<Path>,
+        shutdown: Shutdown,
+        metrics: Metrics,
+    ) -> Result<RedboxServer> {
+        let path = path.as_ref().to_path_buf();
+        if path.exists() {
+            std::fs::remove_file(&path)?;
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let listener = UnixListener::bind(&path)
+            .map_err(|e| Error::rpc(format!("bind {}: {e}", path.display())))?;
+        // Accept loop polls so shutdown is honored promptly.
+        listener.set_nonblocking(true)?;
+        let registry: Registry = Arc::new(RwLock::new(HashMap::new()));
+        let conns: Arc<std::sync::Mutex<Vec<UnixStream>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let reg2 = registry.clone();
+        let sd2 = shutdown.clone();
+        let m2 = metrics.clone();
+        let conns2 = conns.clone();
+        let accept_thread = rt::spawn_named("redbox-accept", move || {
+            loop {
+                if sd2.is_triggered() {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        if let Ok(clone) = stream.try_clone() {
+                            conns2.lock().unwrap().push(clone);
+                        }
+                        let reg = reg2.clone();
+                        let sd = sd2.clone();
+                        let m = m2.clone();
+                        rt::spawn_named("redbox-conn", move || {
+                            handle_conn(stream, reg, sd, m);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if sd2.wait_timeout(std::time::Duration::from_millis(2)) {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+        });
+        Ok(RedboxServer {
+            path,
+            registry,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            metrics,
+            conns,
+        })
+    }
+
+    /// Register (or replace) a service.
+    pub fn register(&self, name: &str, svc: Arc<dyn Service>) {
+        self.registry.write().unwrap().insert(name.to_string(), svc);
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop accepting and join the accept loop (open connections drain on
+    /// their own when clients disconnect or shutdown trips mid-read).
+    pub fn stop(&mut self) {
+        self.shutdown.trigger();
+        // Unblock per-connection reader threads waiting in read_frame.
+        for conn in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for RedboxServer {
+    fn drop(&mut self) {
+        if self.accept_thread.is_some() {
+            self.stop();
+        }
+    }
+}
+
+fn handle_conn(mut stream: UnixStream, registry: Registry, shutdown: Shutdown, metrics: Metrics) {
+    loop {
+        if shutdown.is_triggered() {
+            return;
+        }
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(v)) => v,
+            Ok(None) => return, // client closed (or server stop() shut us down)
+            Err(_) => return,   // transport error: drop connection
+        };
+        let resp = match Request::decode(&frame) {
+            Ok(req) => {
+                metrics.inc("redbox.requests");
+                let t0 = std::time::Instant::now();
+                let resp = dispatch(&req, &registry);
+                metrics.observe("redbox.handle_ns", t0.elapsed().as_nanos() as u64);
+                resp
+            }
+            Err(e) => Response::err(0, format!("bad request: {e}")),
+        };
+        if write_frame(&mut stream, &resp.encode()).is_err() {
+            return;
+        }
+    }
+}
+
+fn dispatch(req: &Request, registry: &Registry) -> Response {
+    let (service, method) = match req.split_method() {
+        Ok(x) => x,
+        Err(e) => return Response::err(req.id, e.to_string()),
+    };
+    let svc = registry.read().unwrap().get(service).cloned();
+    match svc {
+        Some(svc) => match svc.call(method, &req.body) {
+            Ok(body) => Response::ok(req.id, body),
+            Err(e) => Response::err(req.id, e.to_string()),
+        },
+        None => Response::err(req.id, format!("unknown service `{service}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::redbox::client::RedboxClient;
+
+    fn sock_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hpcorc-test-{tag}-{}.sock", std::process::id()))
+    }
+
+    #[test]
+    fn echo_service_roundtrip() {
+        let sd = Shutdown::new();
+        let mut srv =
+            RedboxServer::start(sock_path("echo"), sd.clone(), Metrics::new()).unwrap();
+        srv.register(
+            "test.Echo",
+            Arc::new(FnService(|method: &str, body: &Value| {
+                Ok(Value::map().with("method", method).with("echo", body.clone()))
+            })),
+        );
+        let client = RedboxClient::connect(srv.path()).unwrap();
+        let out = client.call("test.Echo/Hi", Value::str("moo")).unwrap();
+        assert_eq!(out.opt_str("method"), Some("Hi"));
+        assert_eq!(out.get("echo"), Some(&Value::str("moo")));
+        srv.stop();
+    }
+
+    #[test]
+    fn unknown_service_and_error_paths() {
+        let sd = Shutdown::new();
+        let mut srv =
+            RedboxServer::start(sock_path("unknown"), sd.clone(), Metrics::new()).unwrap();
+        srv.register(
+            "svc.Err",
+            Arc::new(FnService(|_: &str, _: &Value| -> Result<Value> {
+                Err(Error::wlm("queue not found"))
+            })),
+        );
+        let client = RedboxClient::connect(srv.path()).unwrap();
+        let err = client.call("nope.Svc/X", Value::Null).unwrap_err();
+        assert!(err.to_string().contains("unknown service"));
+        let err = client.call("svc.Err/X", Value::Null).unwrap_err();
+        assert!(err.to_string().contains("queue not found"), "{err}");
+        // Connection survives errors; a good call still works after.
+        srv.register(
+            "svc.Ok",
+            Arc::new(FnService(|_: &str, _: &Value| Ok(Value::Bool(true)))),
+        );
+        assert_eq!(client.call("svc.Ok/X", Value::Null).unwrap(), Value::Bool(true));
+        srv.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let sd = Shutdown::new();
+        let mut srv =
+            RedboxServer::start(sock_path("conc"), sd.clone(), Metrics::new()).unwrap();
+        srv.register(
+            "math.Add",
+            Arc::new(FnService(|_: &str, body: &Value| {
+                let a = body.req_int("a")?;
+                let b = body.req_int("b")?;
+                Ok(Value::Int(a + b))
+            })),
+        );
+        let path = srv.path().to_path_buf();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let p = path.clone();
+                std::thread::spawn(move || {
+                    let c = RedboxClient::connect(&p).unwrap();
+                    for i in 0..50i64 {
+                        let out = c
+                            .call("math.Add/Run", Value::map().with("a", i).with("b", t as i64))
+                            .unwrap();
+                        assert_eq!(out, Value::Int(i + t as i64));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.metrics().counter_value("redbox.requests"), 400);
+        srv.stop();
+    }
+
+    #[test]
+    fn stale_socket_replaced() {
+        let path = sock_path("stale");
+        std::fs::write(&path, b"stale").unwrap();
+        let sd = Shutdown::new();
+        let mut srv = RedboxServer::start(&path, sd, Metrics::new()).unwrap();
+        srv.register("s.S", Arc::new(FnService(|_: &str, _: &Value| Ok(Value::Null))));
+        let c = RedboxClient::connect(&path).unwrap();
+        assert!(c.call("s.S/m", Value::Null).is_ok());
+        srv.stop();
+        assert!(!path.exists(), "socket removed on stop");
+    }
+}

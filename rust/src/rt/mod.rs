@@ -1,0 +1,194 @@
+//! Minimal threaded runtime (tokio substitute).
+//!
+//! Every long-lived component (API server loops, controllers, pbs_server,
+//! moms, kubelets, red-box) runs as a named OS thread; coordination is via
+//! std mpsc channels, a shared [`Shutdown`] token, and a [`Timers`] service
+//! for deadlines (walltime limits, heartbeats, requeue backoff).
+
+pub mod pool;
+pub mod timers;
+
+pub use pool::Pool;
+pub use timers::Timers;
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Spawn a named thread (names show up in debuggers/profilers).
+pub fn spawn_named<F>(name: &str, f: F) -> JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("failed to spawn thread {name}: {e}"))
+}
+
+/// Cooperative shutdown token. Clone freely; `trigger()` wakes all waiters.
+#[derive(Clone, Default)]
+pub struct Shutdown {
+    inner: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Shutdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn trigger(&self) {
+        let (lock, cv) = &*self.inner;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        *self.inner.0.lock().unwrap()
+    }
+
+    /// Block until triggered.
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    /// Sleep for `d`, returning early with `true` if shutdown triggered.
+    /// Returns `false` on a full (uninterrupted) sleep — the normal tick.
+    pub fn wait_timeout(&self, d: Duration) -> bool {
+        let (lock, cv) = &*self.inner;
+        let deadline = Instant::now() + d;
+        let mut g = lock.lock().unwrap();
+        loop {
+            if *g {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (ng, res) = cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if res.timed_out() && !*g {
+                return false;
+            }
+        }
+    }
+}
+
+/// A one-shot event another thread can wait on (used for request/response
+/// rendezvous without spinning).
+#[derive(Clone, Default)]
+pub struct Notify {
+    inner: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Notify {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn notify(&self) {
+        let (lock, cv) = &*self.inner;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> bool {
+        let (lock, cv) = &*self.inner;
+        let deadline = Instant::now() + d;
+        let mut g = lock.lock().unwrap();
+        while !*g {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (ng, _) = cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+        true
+    }
+}
+
+/// Join a set of handles, panicking with the thread name on a poisoned join
+/// (a worker panic should fail tests loudly, not hang).
+pub fn join_all(handles: Vec<JoinHandle<()>>) {
+    for h in handles {
+        let name = h.thread().name().unwrap_or("<unnamed>").to_string();
+        if let Err(e) = h.join() {
+            let msg = e
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| e.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("thread {name} panicked: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn shutdown_wakes_waiters() {
+        let s = Shutdown::new();
+        let s2 = s.clone();
+        let woke = Arc::new(AtomicUsize::new(0));
+        let w2 = woke.clone();
+        let h = spawn_named("waiter", move || {
+            s2.wait();
+            w2.fetch_add(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(woke.load(Ordering::SeqCst), 0);
+        s.trigger();
+        h.join().unwrap();
+        assert_eq!(woke.load(Ordering::SeqCst), 1);
+        assert!(s.is_triggered());
+    }
+
+    #[test]
+    fn wait_timeout_full_sleep_returns_false() {
+        let s = Shutdown::new();
+        let t0 = Instant::now();
+        assert!(!s.wait_timeout(Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn wait_timeout_interrupted_returns_true() {
+        let s = Shutdown::new();
+        let s2 = s.clone();
+        spawn_named("trigger", move || {
+            std::thread::sleep(Duration::from_millis(10));
+            s2.trigger();
+        });
+        let t0 = Instant::now();
+        assert!(s.wait_timeout(Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn notify_rendezvous() {
+        let n = Notify::new();
+        let n2 = n.clone();
+        spawn_named("notifier", move || {
+            std::thread::sleep(Duration::from_millis(5));
+            n2.notify();
+        });
+        assert!(n.wait_timeout(Duration::from_secs(5)));
+        // Already-notified waits return immediately.
+        assert!(n.wait_timeout(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn notify_timeout() {
+        let n = Notify::new();
+        assert!(!n.wait_timeout(Duration::from_millis(10)));
+    }
+}

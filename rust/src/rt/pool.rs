@@ -1,0 +1,166 @@
+//! Fixed-size worker thread pool for short tasks (container launches,
+//! result staging, RPC handler offload).
+
+use super::Shutdown;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A work-stealing-free, shared-queue thread pool.
+pub struct Pool {
+    tx: Option<Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `n` workers named `{name}-{i}`.
+    pub fn new(name: &str, n: usize) -> Self {
+        assert!(n > 0, "pool needs at least one worker");
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                super::spawn_named(&format!("{name}-{i}"), move || loop {
+                    let task = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match task {
+                        Ok(t) => t(),
+                        Err(_) => break, // all senders dropped
+                    }
+                })
+            })
+            .collect();
+        Pool { tx: Some(tx), workers }
+    }
+
+    /// Submit a task. Panics if the pool is shut down.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Drain and join. Pending tasks complete first.
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // close the channel
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Run tasks from `items` with up to `parallelism` threads and collect the
+/// results in input order (scoped fan-out; used by benches and the sim).
+pub fn scoped_map<T, R, F>(items: Vec<T>, parallelism: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let slots: Vec<Mutex<&mut Option<R>>> =
+        results.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..parallelism.max(1).min(n.max(1)) {
+            s.spawn(|| loop {
+                let next = work.lock().unwrap().next();
+                match next {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        **slots[i].lock().unwrap() = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    drop(slots);
+    results.into_iter().map(|r| r.expect("scoped_map slot unfilled")).collect()
+}
+
+/// Convenience: a shutdown-aware periodic loop in its own thread.
+pub fn spawn_ticker<F>(
+    name: &str,
+    period: std::time::Duration,
+    shutdown: Shutdown,
+    mut tick: F,
+) -> JoinHandle<()>
+where
+    F: FnMut() + Send + 'static,
+{
+    super::spawn_named(name, move || loop {
+        if shutdown.wait_timeout(period) {
+            return;
+        }
+        tick();
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn pool_runs_all_tasks() {
+        let mut pool = Pool::new("test", 4);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scoped_map_preserves_order() {
+        let out = scoped_map((0..64).collect(), 8, |i: i32| i * 2);
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty() {
+        let out: Vec<i32> = scoped_map(Vec::<i32>::new(), 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn ticker_ticks_and_stops() {
+        let shutdown = Shutdown::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let h = spawn_ticker("tick", Duration::from_millis(5), shutdown.clone(), move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(60));
+        shutdown.trigger();
+        h.join().unwrap();
+        let n = count.load(Ordering::SeqCst);
+        assert!(n >= 3, "expected several ticks, got {n}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Timer service: schedule callbacks at deadlines with cancellation.
+//!
+//! One dedicated thread drives a min-heap of deadlines. Used for PBS
+//! walltime enforcement, kubelet heartbeats, and controller requeue backoff.
+
+use super::Shutdown;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::HashSet;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+type Callback = Box<dyn FnOnce() + Send + 'static>;
+
+struct Entry {
+    deadline: Instant,
+    id: u64,
+    cb: Callback,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.id == other.id
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.deadline, self.id).cmp(&(other.deadline, other.id))
+    }
+}
+
+#[derive(Default)]
+struct State {
+    heap: BinaryHeap<Reverse<Entry>>,
+    cancelled: HashSet<u64>,
+    next_id: u64,
+    closed: bool,
+}
+
+/// Handle to a scheduled timer; keep it to cancel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TimerId(u64);
+
+/// The timer service. Clone the handle freely.
+#[derive(Clone)]
+pub struct Timers {
+    state: Arc<(Mutex<State>, Condvar)>,
+}
+
+impl Timers {
+    /// Start the timer thread. The returned JoinHandle ends on shutdown.
+    pub fn start(shutdown: Shutdown) -> (Timers, JoinHandle<()>) {
+        let timers = Timers { state: Arc::new((Mutex::new(State::default()), Condvar::new())) };
+        let t2 = timers.clone();
+        let sd = shutdown;
+        let handle = super::spawn_named("timers", move || t2.run(sd));
+        (timers, handle)
+    }
+
+    /// Schedule `cb` to run after `delay` on the timer thread. Callbacks must
+    /// be short; offload heavy work to a [`super::Pool`].
+    pub fn after<F: FnOnce() + Send + 'static>(&self, delay: Duration, cb: F) -> TimerId {
+        self.at(Instant::now() + delay, cb)
+    }
+
+    /// Schedule `cb` at an absolute deadline.
+    pub fn at<F: FnOnce() + Send + 'static>(&self, deadline: Instant, cb: F) -> TimerId {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.heap.push(Reverse(Entry { deadline, id, cb: Box::new(cb) }));
+        cv.notify_one();
+        TimerId(id)
+    }
+
+    /// Cancel a timer. Returns true if it had not fired yet.
+    pub fn cancel(&self, id: TimerId) -> bool {
+        let (lock, _) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        let pending =
+            st.heap.iter().any(|Reverse(e)| e.id == id.0) && !st.cancelled.contains(&id.0);
+        if pending {
+            st.cancelled.insert(id.0);
+        }
+        pending
+    }
+
+    /// Number of pending (non-cancelled) timers.
+    pub fn pending(&self) -> usize {
+        let (lock, _) = &*self.state;
+        let st = lock.lock().unwrap();
+        st.heap.iter().filter(|Reverse(e)| !st.cancelled.contains(&e.id)).count()
+    }
+
+    fn run(&self, shutdown: Shutdown) {
+        let (lock, cv) = &*self.state;
+        loop {
+            let mut fired: Vec<Callback> = Vec::new();
+            {
+                let mut st = lock.lock().unwrap();
+                loop {
+                    if shutdown.is_triggered() {
+                        st.closed = true;
+                        return;
+                    }
+                    let now = Instant::now();
+                    // Pop all due entries.
+                    let mut popped_any = false;
+                    while let Some(Reverse(top)) = st.heap.peek() {
+                        if top.deadline <= now {
+                            let Reverse(e) = st.heap.pop().unwrap();
+                            if !st.cancelled.remove(&e.id) {
+                                fired.push(e.cb);
+                            }
+                            popped_any = true;
+                        } else {
+                            break;
+                        }
+                    }
+                    if popped_any && !fired.is_empty() {
+                        break; // run callbacks outside the lock
+                    }
+                    // Sleep until next deadline or a new entry arrives.
+                    let wait = st
+                        .heap
+                        .peek()
+                        .map(|Reverse(e)| e.deadline.saturating_duration_since(now))
+                        .unwrap_or(Duration::from_millis(50));
+                    let wait = wait.min(Duration::from_millis(50)).max(Duration::from_micros(100));
+                    let (ng, _) = cv.wait_timeout(st, wait).unwrap();
+                    st = ng;
+                }
+            }
+            for cb in fired {
+                cb();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn setup() -> (Timers, Shutdown) {
+        let sd = Shutdown::new();
+        let (t, _h) = Timers::start(sd.clone());
+        (t, sd)
+    }
+
+    #[test]
+    fn fires_in_order() {
+        let (t, sd) = setup();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for (i, d) in [(2u32, 30u64), (1, 15), (0, 5)] {
+            let log = log.clone();
+            t.after(Duration::from_millis(d), move || log.lock().unwrap().push(i));
+        }
+        std::thread::sleep(Duration::from_millis(120));
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2]);
+        sd.trigger();
+    }
+
+    #[test]
+    fn cancel_prevents_fire() {
+        let (t, sd) = setup();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let id = t.after(Duration::from_millis(30), move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(t.cancel(id));
+        assert!(!t.cancel(id), "second cancel is a no-op");
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(count.load(Ordering::SeqCst), 0);
+        sd.trigger();
+    }
+
+    #[test]
+    fn many_timers() {
+        let (t, sd) = setup();
+        let count = Arc::new(AtomicUsize::new(0));
+        for i in 0..200 {
+            let c = count.clone();
+            t.after(Duration::from_millis(1 + (i % 20)), move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(count.load(Ordering::SeqCst), 200);
+        assert_eq!(t.pending(), 0);
+        sd.trigger();
+    }
+
+    #[test]
+    fn shutdown_stops_thread() {
+        let sd = Shutdown::new();
+        let (t, h) = Timers::start(sd.clone());
+        t.after(Duration::from_secs(600), || panic!("should never fire"));
+        sd.trigger();
+        h.join().unwrap();
+    }
+}

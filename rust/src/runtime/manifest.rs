@@ -1,0 +1,179 @@
+//! artifacts/manifest.json parsing — the contract between `python/compile/
+//! aot.py` and the Rust runtime.
+
+use crate::encoding::{json, Value};
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn decode(v: &Value) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: v
+                .req("shape")?
+                .as_seq()
+                .ok_or_else(|| Error::parse("shape must be a list"))?
+                .iter()
+                .filter_map(|d| d.as_int().map(|i| i as usize))
+                .collect(),
+            dtype: v.req_str("dtype")?.to_string(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// `init` | `train_step` | `infer`.
+    pub role: String,
+    /// Name of the init artifact producing this artifact's params.
+    pub init: Option<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub metric: Option<String>,
+    pub metric_output_index: Option<usize>,
+    pub param_count: Option<usize>,
+    pub flops_per_step: Option<u64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::compute(format!("read {}: {e} (run `make artifacts`)", path.display())))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        if v.opt_int("formatVersion") != Some(1) {
+            return Err(Error::compute("unsupported manifest formatVersion"));
+        }
+        let arts = v
+            .req("artifacts")?
+            .as_map()
+            .ok_or_else(|| Error::parse("artifacts must be a map"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in arts {
+            let decode_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .req(key)?
+                    .as_seq()
+                    .ok_or_else(|| Error::parse(format!("{key} must be a list")))?
+                    .iter()
+                    .map(TensorSpec::decode)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: entry.req_str("file")?.to_string(),
+                    role: entry.req_str("role")?.to_string(),
+                    init: entry.opt_str("init").map(String::from),
+                    inputs: decode_specs("inputs")?,
+                    outputs: decode_specs("outputs")?,
+                    metric: entry.opt_str("metric").map(String::from),
+                    metric_output_index: entry
+                        .opt_int("metricOutputIndex")
+                        .map(|i| i as usize),
+                    param_count: entry.opt_int("paramCount").map(|i| i as usize),
+                    flops_per_step: entry.opt_int("flopsPerStep").map(|i| i as u64),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::compute(format!("unknown artifact `{name}`")))
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "formatVersion": 1,
+      "artifacts": {
+        "m_init": {"file": "m_init.hlo.txt", "role": "init",
+                   "inputs": [{"shape": [], "dtype": "int32"}],
+                   "outputs": [{"shape": [4, 8], "dtype": "float32"}]},
+        "m_train": {"file": "m_train.hlo.txt", "role": "train_step",
+                    "init": "m_init",
+                    "inputs": [{"shape": [], "dtype": "int32"},
+                               {"shape": [4, 8], "dtype": "float32"}],
+                    "outputs": [{"shape": [4, 8], "dtype": "float32"},
+                                {"shape": [], "dtype": "float32"}],
+                    "metric": "loss", "metricOutputIndex": 1,
+                    "paramCount": 1, "flopsPerStep": 1000}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.names(), vec!["m_init", "m_train"]);
+        let t = m.get("m_train").unwrap();
+        assert_eq!(t.role, "train_step");
+        assert_eq!(t.init.as_deref(), Some("m_init"));
+        assert_eq!(t.param_count, Some(1));
+        assert_eq!(t.metric_output_index, Some(1));
+        assert_eq!(t.inputs[1].shape, vec![4, 8]);
+        assert_eq!(t.inputs[1].element_count(), 32);
+        assert_eq!(m.hlo_path(t), PathBuf::from("/tmp/m_train.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"formatVersion": 2, "artifacts": {}}"#, "/tmp".into())
+            .is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let train = m.get("cropyield_train_tiny").unwrap();
+        assert_eq!(train.role, "train_step");
+        let pc = train.param_count.unwrap();
+        assert_eq!(train.inputs.len(), pc + 1);
+        assert_eq!(train.outputs.len(), pc + 1);
+        assert!(m.hlo_path(train).exists());
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime: loads AOT-compiled HLO artifacts (produced once by
+//! `make artifacts` → `python/compile/aot.py`) and executes them via the
+//! PJRT C API from the Rust hot path. Python never runs here.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use pjrt::{start_pjrt_host, PjrtHandle};

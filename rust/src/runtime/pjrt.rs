@@ -1,0 +1,368 @@
+//! PJRT execution host: a dedicated thread owning the (non-Send) PJRT CPU
+//! client, compiled-executable cache, and the run loops for compute
+//! payloads. Other threads talk to it through [`PjrtHandle`], which
+//! implements [`ComputeEngine`] for the container runtime.
+//!
+//! Flow per compute payload (`cropyield_train_small`, 200 steps):
+//!   1. run the artifact's `init` HLO once with the job seed → params
+//!   2. loop: execute the step HLO with (step, params…) → (params…, metric)
+//!   3. stream (step, metric) back to the caller; honour cancellation
+//!
+//! Artifacts are HLO TEXT compiled once per process and cached (compile is
+//! the expensive part; execution reuses the loaded executable).
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::cluster::Metrics;
+use crate::rt::{self, Shutdown};
+use crate::singularity::{ComputeEngine, ComputeSummary};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// A compute request sent to the PJRT thread.
+struct Request {
+    artifact: String,
+    steps: u32,
+    seed: u64,
+    /// Per-step metric stream back to the caller.
+    step_tx: Sender<(u32, f32)>,
+    cancel: Shutdown,
+    done_tx: Sender<Result<ComputeSummary>>,
+}
+
+/// Cloneable handle; implements [`ComputeEngine`].
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<Request>,
+    metrics: Metrics,
+    manifest: Arc<Manifest>,
+}
+
+/// Spawn the PJRT host thread over an artifacts directory.
+pub fn start_pjrt_host(
+    artifacts_dir: impl AsRef<Path>,
+    metrics: Metrics,
+    shutdown: Shutdown,
+) -> Result<PjrtHandle> {
+    let manifest = Arc::new(Manifest::load(artifacts_dir)?);
+    let (tx, rx) = channel::<Request>();
+    let m2 = manifest.clone();
+    let met2 = metrics.clone();
+    let (boot_tx, boot_rx) = channel::<Result<()>>();
+    rt::spawn_named("pjrt-host", move || host_loop(m2, rx, met2, shutdown, boot_tx));
+    // Surface client-construction errors synchronously.
+    boot_rx
+        .recv()
+        .map_err(|_| Error::compute("pjrt host thread died during boot"))??;
+    Ok(PjrtHandle { tx, metrics, manifest })
+}
+
+impl PjrtHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+impl ComputeEngine for PjrtHandle {
+    fn run(
+        &self,
+        artifact: &str,
+        steps: u32,
+        seed: u64,
+        on_step: &mut dyn FnMut(u32, f32) -> bool,
+    ) -> Result<ComputeSummary> {
+        let (step_tx, step_rx) = channel();
+        let (done_tx, done_rx) = channel();
+        let cancel = Shutdown::new();
+        self.tx
+            .send(Request {
+                artifact: artifact.to_string(),
+                steps,
+                seed,
+                step_tx,
+                cancel: cancel.clone(),
+                done_tx,
+            })
+            .map_err(|_| Error::compute("pjrt host gone"))?;
+        // Pump per-step events until the host reports completion.
+        loop {
+            // Drain step events (non-blocking) and forward to the caller.
+            while let Ok((step, metric)) = step_rx.try_recv() {
+                if !on_step(step, metric) {
+                    cancel.trigger();
+                }
+            }
+            match done_rx.recv_timeout(std::time::Duration::from_micros(500)) {
+                Ok(result) => {
+                    // Flush any remaining step events for accurate logs.
+                    while let Ok((step, metric)) = step_rx.try_recv() {
+                        if !on_step(step, metric) {
+                            cancel.trigger();
+                        }
+                    }
+                    self.metrics.inc("pjrt.runs");
+                    return result;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(_) => return Err(Error::compute("pjrt host dropped request")),
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- host thread body
+
+fn host_loop(
+    manifest: Arc<Manifest>,
+    rx: Receiver<Request>,
+    metrics: Metrics,
+    shutdown: Shutdown,
+    boot_tx: Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = boot_tx.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = boot_tx.send(Err(Error::compute(format!("PjRtClient::cpu: {e}"))));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    loop {
+        let req = match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if shutdown.is_triggered() {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        };
+        let result = serve_request(&client, &manifest, &mut cache, &metrics, &req);
+        let _ = req.done_tx.send(result);
+    }
+}
+
+fn compile<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    metrics: &Metrics,
+    name: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(name) {
+        let entry = manifest.get(name)?;
+        let path = manifest.hlo_path(entry);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::compute("non-utf8 path"))?,
+        )
+        .map_err(|e| Error::compute(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::compute(format!("compile {name}: {e}")))?;
+        metrics.observe("pjrt.compile_ns", t0.elapsed().as_nanos() as u64);
+        metrics.inc("pjrt.compiles");
+        cache.insert(name.to_string(), exe);
+    }
+    Ok(cache.get(name).unwrap())
+}
+
+/// Execute a compiled artifact; unpacks the returned 1-element tuple into
+/// its constituent literals.
+fn execute(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+    metrics: &Metrics,
+) -> Result<Vec<xla::Literal>> {
+    let t0 = std::time::Instant::now();
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| Error::compute(format!("execute: {e}")))?;
+    let out = result
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| Error::compute("empty execution result"))?
+        .to_literal_sync()
+        .map_err(|e| Error::compute(format!("to_literal: {e}")))?;
+    metrics.observe("pjrt.execute_ns", t0.elapsed().as_nanos() as u64);
+    // aot.py lowers with return_tuple=True: always a tuple, even for 1.
+    out.to_tuple().map_err(|e| Error::compute(format!("untuple: {e}")))
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| Error::compute(format!("metric read: {e}")))?
+        .first()
+        .copied()
+        .ok_or_else(|| Error::compute("empty metric literal"))
+}
+
+fn serve_request(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    metrics: &Metrics,
+    req: &Request,
+) -> Result<ComputeSummary> {
+    let entry: ArtifactEntry = manifest.get(&req.artifact)?.clone();
+    match entry.role.as_str() {
+        "train_step" | "infer" => {
+            let init_name = entry
+                .init
+                .as_ref()
+                .ok_or_else(|| Error::compute("step artifact without init"))?
+                .clone();
+            // 1) init(seed) -> params
+            let params = {
+                let init_exe = compile(client, manifest, cache, metrics, &init_name)?;
+                let seed = xla::Literal::scalar(req.seed as i32);
+                execute(init_exe, &[seed], metrics)?
+            };
+            let param_count = entry.param_count.unwrap_or(params.len());
+            let metric_idx = entry.metric_output_index.unwrap_or(param_count);
+            let metric_name =
+                entry.metric.clone().unwrap_or_else(|| "metric".to_string());
+            if params.len() != param_count {
+                return Err(Error::compute(format!(
+                    "init produced {} arrays, manifest says {param_count}",
+                    params.len()
+                )));
+            }
+            // 2) step loop
+            let exe = compile(client, manifest, cache, metrics, &req.artifact)?;
+            let mut params = params;
+            let mut first_metric = f32::NAN;
+            let mut last_metric = f32::NAN;
+            let mut done = 0u32;
+            for step in 0..req.steps {
+                if req.cancel.is_triggered() {
+                    break;
+                }
+                let mut inputs = Vec::with_capacity(params.len() + 1);
+                inputs.push(xla::Literal::scalar(step as i32));
+                inputs.append(&mut params);
+                let mut outputs = execute(exe, &inputs, metrics)?;
+                let metric = scalar_f32(&outputs[metric_idx])?;
+                if entry.role == "train_step" {
+                    // params carried forward: outputs[..param_count]
+                    params = outputs.drain(..param_count).collect();
+                } else {
+                    // infer: params unchanged; reuse the inputs we moved out.
+                    params = inputs.drain(1..).collect();
+                }
+                if step == 0 {
+                    first_metric = metric;
+                }
+                last_metric = metric;
+                done = step + 1;
+                let _ = req.step_tx.send((step, metric));
+            }
+            metrics.add("pjrt.steps", done as u64);
+            Ok(ComputeSummary {
+                steps_done: done,
+                first_metric,
+                last_metric,
+                metric_name,
+            })
+        }
+        "init" => {
+            let exe = compile(client, manifest, cache, metrics, &req.artifact)?;
+            let seed = xla::Literal::scalar(req.seed as i32);
+            let out = execute(exe, &[seed], metrics)?;
+            Ok(ComputeSummary {
+                steps_done: 1,
+                first_metric: out.len() as f32,
+                last_metric: out.len() as f32,
+                metric_name: "arrays".into(),
+            })
+        }
+        other => Err(Error::compute(format!("unknown artifact role `{other}`"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn train_loss_decreases_via_pjrt() {
+        let Some(dir) = artifacts_dir() else { return };
+        let sd = Shutdown::new();
+        let handle = start_pjrt_host(&dir, Metrics::new(), sd.clone()).unwrap();
+        let mut series = Vec::new();
+        let summary = handle
+            .run("cropyield_train_tiny", 30, 0, &mut |step, loss| {
+                series.push((step, loss));
+                true
+            })
+            .unwrap();
+        assert_eq!(summary.steps_done, 30);
+        assert_eq!(summary.metric_name, "loss");
+        assert_eq!(series.len(), 30);
+        assert!(
+            summary.last_metric < summary.first_metric * 0.8,
+            "loss {} -> {} did not decrease",
+            summary.first_metric,
+            summary.last_metric
+        );
+        sd.trigger();
+    }
+
+    #[test]
+    fn infer_runs_and_cancels() {
+        let Some(dir) = artifacts_dir() else { return };
+        let sd = Shutdown::new();
+        let handle = start_pjrt_host(&dir, Metrics::new(), sd.clone()).unwrap();
+        let summary = handle
+            .run("cropyield_infer_tiny", 5, 1, &mut |_, m| {
+                assert!(m.is_finite());
+                true
+            })
+            .unwrap();
+        assert_eq!(summary.steps_done, 5);
+        assert_eq!(summary.metric_name, "mse");
+        // Cancellation after 3 steps.
+        let summary = handle
+            .run("cropyield_train_tiny", 100, 0, &mut |step, _| step < 2)
+            .unwrap();
+        assert!(summary.steps_done < 100, "cancelled early: {}", summary.steps_done);
+        sd.trigger();
+    }
+
+    #[test]
+    fn deterministic_across_runs_same_seed() {
+        let Some(dir) = artifacts_dir() else { return };
+        let sd = Shutdown::new();
+        let handle = start_pjrt_host(&dir, Metrics::new(), sd.clone()).unwrap();
+        let run = |seed| {
+            handle
+                .run("cropyield_train_tiny", 5, seed, &mut |_, _| true)
+                .unwrap()
+                .last_metric
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4), "different seed, different init");
+        sd.trigger();
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(dir) = artifacts_dir() else { return };
+        let sd = Shutdown::new();
+        let handle = start_pjrt_host(&dir, Metrics::new(), sd.clone()).unwrap();
+        assert!(handle.run("nope", 1, 0, &mut |_, _| true).is_err());
+        sd.trigger();
+    }
+}

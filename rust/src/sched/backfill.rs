@@ -1,0 +1,279 @@
+//! EASY backfill (Lifka 1995) — the production discipline of Torque+Maui
+//! and Slurm's `sched/backfill`.
+//!
+//! Head-of-queue job blocked? Compute its *shadow time* (earliest instant
+//! enough capacity frees up, from running jobs' expected ends), reserve the
+//! capacity, then let later jobs jump the queue **only if** they cannot
+//! delay the reservation: either they finish before the shadow time, or
+//! they use only capacity the reserved job won't need ("extra" nodes).
+
+use super::policy::{
+    queue_order, try_place, Assignment, NodeState, PendingJob, RunningJob, SchedPolicy,
+};
+
+pub struct EasyBackfill;
+
+impl SchedPolicy for EasyBackfill {
+    fn name(&self) -> &'static str {
+        "easy-backfill"
+    }
+
+    fn schedule(
+        &self,
+        now_s: f64,
+        pending: &[PendingJob],
+        nodes: &[NodeState],
+        running: &[RunningJob],
+    ) -> Vec<Assignment> {
+        let mut queue: Vec<&PendingJob> = pending.iter().collect();
+        queue.sort_by(|a, b| queue_order(a, b));
+        let mut free: Vec<NodeState> = nodes.to_vec();
+        let mut out = Vec::new();
+
+        // Phase 1: start queue-order jobs while they fit.
+        let mut idx = 0;
+        while idx < queue.len() {
+            match try_place(queue[idx], &mut free) {
+                Some(placement) => {
+                    out.push(Assignment { job: queue[idx].id, placement });
+                    idx += 1;
+                }
+                None => break,
+            }
+        }
+        if idx >= queue.len() {
+            return out;
+        }
+
+        // Phase 2: reservation for the blocked head `queue[idx]`.
+        let head = queue[idx];
+        let reservation = compute_reservation(head, now_s, &free, running);
+
+        // Phase 3: backfill the remainder.
+        for job in &queue[idx + 1..] {
+            // Candidate must fit right now.
+            let mut trial = free.clone();
+            let placement = match try_place(job, &mut trial) {
+                Some(p) => p,
+                None => continue,
+            };
+            let ok = match &reservation {
+                None => true, // head can never run (bigger than the machine)
+                Some(res) => {
+                    let ends_before_shadow =
+                        now_s + job.walltime.as_secs_f64() <= res.shadow_s + 1e-9;
+                    let avoids_reserved =
+                        placement.iter().all(|p| !res.nodes.contains(&p.node));
+                    ends_before_shadow || avoids_reserved
+                }
+            };
+            if ok {
+                free = trial;
+                out.push(Assignment { job: job.id, placement });
+            }
+        }
+        out
+    }
+}
+
+struct Reservation {
+    /// Earliest time the head job can start.
+    shadow_s: f64,
+    /// Nodes the head job will occupy at the shadow time.
+    nodes: Vec<usize>,
+}
+
+/// Simulate node releases in expected-end order until the head job fits.
+fn compute_reservation(
+    head: &PendingJob,
+    now_s: f64,
+    free_now: &[NodeState],
+    running: &[RunningJob],
+) -> Option<Reservation> {
+    let mut future: Vec<NodeState> = free_now.to_vec();
+    // Releases sorted by time.
+    let mut releases: Vec<(f64, usize, u32, u64)> = running
+        .iter()
+        .flat_map(|r| {
+            r.placement
+                .iter()
+                .map(move |p| (r.expected_end_s.max(now_s), p.node, p.cores, p.mem))
+        })
+        .collect();
+    releases.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // Try at `now`, then after each release.
+    let check = |future: &mut Vec<NodeState>, t: f64| -> Option<Reservation> {
+        let mut trial = future.clone();
+        try_place(head, &mut trial).map(|placement| Reservation {
+            shadow_s: t,
+            nodes: placement.iter().map(|p| p.node).collect(),
+        })
+    };
+    if let Some(r) = check(&mut future, now_s) {
+        return Some(r); // shouldn't happen (head was blocked) but harmless
+    }
+    let mut i = 0;
+    while i < releases.len() {
+        let t = releases[i].0;
+        // apply all releases at time t
+        while i < releases.len() && (releases[i].0 - t).abs() < 1e-9 {
+            let (_, node, cores, mem) = releases[i];
+            if let Some(n) = future.iter_mut().find(|n| n.id == node) {
+                n.free_cores = (n.free_cores + cores).min(n.total_cores);
+                n.free_mem = (n.free_mem + mem).min(n.total_mem);
+            }
+            i += 1;
+        }
+        if let Some(r) = check(&mut future, t) {
+            return Some(r);
+        }
+    }
+    None // head never fits even on an empty machine
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    fn nodes(n: usize, cores: u32) -> Vec<NodeState> {
+        (0..n).map(|i| NodeState::whole(i, cores, 64 << 30)).collect()
+    }
+
+    fn job(id: u64, n: u32, ppn: u32, wall_s: u64, submit: f64) -> PendingJob {
+        let mut j = PendingJob::simple(id, n, ppn, wall_s);
+        j.submit_s = submit;
+        j
+    }
+
+    /// 2 nodes; node 0 busy until t=100. Head needs both nodes.
+    /// A short job (ends before 100) backfills; a long one must not.
+    #[test]
+    fn backfills_short_job_under_reservation() {
+        let running = vec![RunningJob {
+            id: 99,
+            placement: vec![super::super::policy::Placement { node: 0, cores: 8, mem: 0 }],
+            expected_end_s: 100.0,
+        }];
+        let mut ns = nodes(2, 8);
+        ns[0].free_cores = 0;
+        let pending = vec![
+            job(1, 2, 8, 50, 0.0),  // head: needs both nodes -> blocked
+            job(2, 1, 8, 50, 1.0),  // short: 0+50 <= 100 -> backfills on node 1
+            job(3, 1, 8, 500, 2.0), // long: would delay head -> no
+        ];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        let ids: Vec<u64> = out.iter().map(|a| a.job).collect();
+        assert_eq!(ids, vec![2]);
+        assert_eq!(out[0].placement[0].node, 1);
+    }
+
+    #[test]
+    fn long_job_backfills_on_extra_nodes() {
+        // 3 nodes; node 0 busy till 100; head needs 2 nodes => reserved
+        // {1,2}? No: at shadow time all of {0,1,2} free; reservation picks
+        // first-fit {0,1}; node 2 is extra => a long 1-node job may run there.
+        let running = vec![RunningJob {
+            id: 99,
+            placement: vec![super::super::policy::Placement { node: 0, cores: 8, mem: 0 }],
+            expected_end_s: 100.0,
+        }];
+        let mut ns = nodes(3, 8);
+        ns[0].free_cores = 0;
+        // head needs 3 nodes -> blocked until node 0 frees; reserved {0,1,2}.
+        let pending = vec![job(1, 3, 8, 50, 0.0), job(2, 1, 8, 500, 1.0)];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        assert!(out.is_empty(), "no extra node: reservation covers all nodes");
+
+        // head needs only 2 nodes -> reservation {0,1}; node 2 is extra.
+        let pending = vec![job(1, 2, 8, 50, 0.0), job(2, 1, 8, 500, 1.0)];
+        let mut ns = nodes(3, 8);
+        ns[0].free_cores = 0;
+        // head fits NOW on {1,2}… so it is not blocked. Fill node 2 too.
+        ns[2].free_cores = 0;
+        let running2 = vec![
+            running[0].clone(),
+            RunningJob {
+                id: 98,
+                placement: vec![super::super::policy::Placement {
+                    node: 2,
+                    cores: 8,
+                    mem: 0,
+                }],
+                expected_end_s: 200.0,
+            },
+        ];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running2);
+        // shadow: node 0 frees at 100 -> head fits on {0,1} at t=100.
+        // job 2 (500s) cannot finish by 100 but node… 1 is reserved; only
+        // node 1 is free now and it IS reserved -> nothing backfills.
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn head_placed_when_it_fits() {
+        let pending = vec![job(1, 2, 4, 60, 0.0), job(2, 1, 4, 60, 1.0)];
+        let out = EasyBackfill.schedule(0.0, &pending, &nodes(2, 8), &[]);
+        assert_eq!(out.len(), 2, "both fit immediately");
+    }
+
+    #[test]
+    fn impossible_head_does_not_block_backfill() {
+        // Head asks for more nodes than exist: EASY lets everything else run.
+        let pending = vec![job(1, 10, 8, 60, 0.0), job(2, 1, 8, 9999, 1.0)];
+        let out = EasyBackfill.schedule(0.0, &pending, &nodes(2, 8), &[]);
+        let ids: Vec<u64> = out.iter().map(|a| a.job).collect();
+        assert_eq!(ids, vec![2]);
+    }
+
+    #[test]
+    fn backfill_beats_fifo_on_utilization() {
+        // The E1 shape in miniature: FIFO leaves node 1 idle, EASY fills it.
+        let running = vec![RunningJob {
+            id: 99,
+            placement: vec![super::super::policy::Placement { node: 0, cores: 8, mem: 0 }],
+            expected_end_s: 100.0,
+        }];
+        let mut ns = nodes(2, 8);
+        ns[0].free_cores = 0;
+        let pending = vec![job(1, 2, 8, 50, 0.0), job(2, 1, 8, 50, 1.0)];
+        let fifo = super::super::policy::FifoPolicy.schedule(0.0, &pending, &ns, &running);
+        let easy = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        assert!(fifo.is_empty());
+        assert_eq!(easy.len(), 1);
+    }
+
+    #[test]
+    fn reservation_uses_expected_ends_in_order() {
+        // nodes 0,1 busy until 50 and 100; head needs 2 idle+1 => shadow
+        // must be 100 (when both free), so a 60s backfill (ends at 60 <=100)
+        // is allowed on the idle node 2… wait head needs 3 nodes: {2} free.
+        let running = vec![
+            RunningJob {
+                id: 90,
+                placement: vec![super::super::policy::Placement { node: 0, cores: 8, mem: 0 }],
+                expected_end_s: 50.0,
+            },
+            RunningJob {
+                id: 91,
+                placement: vec![super::super::policy::Placement { node: 1, cores: 8, mem: 0 }],
+                expected_end_s: 100.0,
+            },
+        ];
+        let mut ns = nodes(3, 8);
+        ns[0].free_cores = 0;
+        ns[1].free_cores = 0;
+        let pending = vec![job(1, 3, 8, 10, 0.0), job(2, 1, 8, 60, 1.0)];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        // shadow = 100; job 2 ends at 60 <= 100 -> backfills on node 2.
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].job, 2);
+
+        // A 150s job would delay the head (ends 150 > 100) and node 2 is
+        // reserved at shadow time -> rejected.
+        let pending = vec![job(1, 3, 8, 10, 0.0), job(3, 1, 8, 150, 1.0)];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        assert!(out.is_empty());
+    }
+}

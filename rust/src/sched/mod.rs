@@ -1,0 +1,17 @@
+//! Shared scheduling cores — pure, sans-IO policy functions.
+//!
+//! Both live workload managers (pbs_server, slurmctld), the Kubernetes
+//! scheduler approximation used in comparisons, and the discrete-event
+//! simulator call into these. Keeping policies pure is what makes the
+//! future-work evaluation (paper §V: "compare efficiency of scheduling the
+//! container jobs by Kubernetes and Torque") honest: the live path and the
+//! large-scale sim run the *same* decision code.
+
+pub mod backfill;
+pub mod policy;
+
+pub use backfill::EasyBackfill;
+pub use policy::{
+    Assignment, FifoPolicy, KubeGreedyPolicy, NodeState, PendingJob, Placement, RunningJob,
+    SchedPolicy,
+};

@@ -1,0 +1,307 @@
+//! Scheduling state model and the FIFO / Kubernetes-greedy policies.
+//!
+//! The unit of allocation is (node, cores, memory): a job asks for `nodes`
+//! chunks of `ppn` cores + `mem` bytes each (the Torque `-l nodes=N:ppn=P`
+//! model; Slurm's `-N/--ntasks-per-node` and one-pod-per-node Kubernetes
+//! jobs reduce to the same shape).
+
+use std::time::Duration;
+
+/// A job awaiting placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingJob {
+    pub id: u64,
+    /// Number of node-chunks required.
+    pub nodes: u32,
+    /// Cores per chunk.
+    pub ppn: u32,
+    /// Memory per chunk (bytes).
+    pub mem: u64,
+    /// Requested walltime — what backfill reservations are computed from.
+    pub walltime: Duration,
+    /// Higher runs first (PBS `-p`, Slurm `--priority`).
+    pub priority: i64,
+    /// Submission time, seconds on the caller's clock.
+    pub submit_s: f64,
+}
+
+impl PendingJob {
+    pub fn simple(id: u64, nodes: u32, ppn: u32, walltime_s: u64) -> Self {
+        PendingJob {
+            id,
+            nodes,
+            ppn,
+            mem: 0,
+            walltime: Duration::from_secs(walltime_s),
+            priority: 0,
+            submit_s: 0.0,
+        }
+    }
+}
+
+/// One node's free capacity at schedule time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeState {
+    pub id: usize,
+    pub total_cores: u32,
+    pub free_cores: u32,
+    pub total_mem: u64,
+    pub free_mem: u64,
+}
+
+impl NodeState {
+    pub fn whole(id: usize, cores: u32, mem: u64) -> Self {
+        NodeState { id, total_cores: cores, free_cores: cores, total_mem: mem, free_mem: mem }
+    }
+
+    pub fn fits_chunk(&self, job: &PendingJob) -> bool {
+        self.free_cores >= job.ppn && self.free_mem >= job.mem
+    }
+}
+
+/// A running job's footprint — what backfill uses to predict node release.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunningJob {
+    pub id: u64,
+    /// (node id, cores, mem) per chunk.
+    pub placement: Vec<Placement>,
+    /// Predicted completion (start + requested walltime), caller-clock secs.
+    pub expected_end_s: f64,
+}
+
+/// One chunk of an assignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub node: usize,
+    pub cores: u32,
+    pub mem: u64,
+}
+
+/// A placement decision for one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub job: u64,
+    pub placement: Vec<Placement>,
+}
+
+/// A scheduling policy: pure function from cluster snapshot to assignments.
+pub trait SchedPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Decide which pending jobs start now. `pending` is in submission
+    /// order; implementations re-order internally per their discipline.
+    /// Must not over-commit: assignments are applied atomically by callers.
+    fn schedule(
+        &self,
+        now_s: f64,
+        pending: &[PendingJob],
+        nodes: &[NodeState],
+        running: &[RunningJob],
+    ) -> Vec<Assignment>;
+}
+
+/// Sort key shared by the WLM policies: priority desc, then submit asc,
+/// then id asc (PBS/Slurm tie-breaking).
+pub fn queue_order(a: &PendingJob, b: &PendingJob) -> std::cmp::Ordering {
+    b.priority
+        .cmp(&a.priority)
+        .then(a.submit_s.partial_cmp(&b.submit_s).unwrap_or(std::cmp::Ordering::Equal))
+        .then(a.id.cmp(&b.id))
+}
+
+/// Try to place a job on the given free state; on success, mutates
+/// `free` and returns the chunks. First-fit over nodes sorted by id
+/// (deterministic), one chunk per node (Torque default `nodes=N` semantics:
+/// N distinct virtual processors on possibly-distinct hosts — we use
+/// distinct hosts, the common configuration).
+pub fn try_place(job: &PendingJob, free: &mut [NodeState]) -> Option<Vec<Placement>> {
+    let mut chosen = Vec::with_capacity(job.nodes as usize);
+    for n in free.iter_mut() {
+        if chosen.len() == job.nodes as usize {
+            break;
+        }
+        if n.fits_chunk(job) {
+            chosen.push(n.id);
+            n.free_cores -= job.ppn;
+            n.free_mem -= job.mem;
+        }
+    }
+    if chosen.len() == job.nodes as usize {
+        Some(chosen.into_iter().map(|node| Placement { node, cores: job.ppn, mem: job.mem }).collect())
+    } else {
+        // Roll back partial reservations.
+        for p in chosen {
+            let n = free.iter_mut().find(|n| n.id == p).unwrap();
+            n.free_cores += job.ppn;
+            n.free_mem += job.mem;
+        }
+        None
+    }
+}
+
+/// Strict FIFO (no backfill): place in queue order, stop at the first job
+/// that does not fit. Torque's default pbs_sched discipline.
+pub struct FifoPolicy;
+
+impl SchedPolicy for FifoPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn schedule(
+        &self,
+        _now_s: f64,
+        pending: &[PendingJob],
+        nodes: &[NodeState],
+        _running: &[RunningJob],
+    ) -> Vec<Assignment> {
+        let mut queue: Vec<&PendingJob> = pending.iter().collect();
+        queue.sort_by(|a, b| queue_order(a, b));
+        let mut free: Vec<NodeState> = nodes.to_vec();
+        let mut out = Vec::new();
+        for job in queue {
+            match try_place(job, &mut free) {
+                Some(placement) => out.push(Assignment { job: job.id, placement }),
+                None => break, // strict: head-of-queue blocks everything
+            }
+        }
+        out
+    }
+}
+
+/// Kubernetes-default-scheduler approximation for WLM comparisons: every
+/// pending pod is tried each cycle (no head-of-queue blocking, no
+/// walltime-based reservations — kube-scheduler has no walltime concept),
+/// nodes scored least-allocated first (the default NodeResourcesFit
+/// LeastAllocated strategy). Wide jobs can therefore starve — the
+/// behavioural difference bench E1 surfaces.
+pub struct KubeGreedyPolicy;
+
+impl SchedPolicy for KubeGreedyPolicy {
+    fn name(&self) -> &'static str {
+        "kube-greedy"
+    }
+
+    fn schedule(
+        &self,
+        _now_s: f64,
+        pending: &[PendingJob],
+        nodes: &[NodeState],
+        _running: &[RunningJob],
+    ) -> Vec<Assignment> {
+        let mut queue: Vec<&PendingJob> = pending.iter().collect();
+        queue.sort_by(|a, b| queue_order(a, b));
+        let mut free: Vec<NodeState> = nodes.to_vec();
+        let mut out = Vec::new();
+        for job in queue {
+            // Least-allocated scoring: prefer emptier nodes.
+            free.sort_by(|a, b| {
+                let fa = a.free_cores as f64 / a.total_cores.max(1) as f64;
+                let fb = b.free_cores as f64 / b.total_cores.max(1) as f64;
+                fb.partial_cmp(&fa).unwrap().then(a.id.cmp(&b.id))
+            });
+            if let Some(placement) = try_place(job, &mut free) {
+                out.push(Assignment { job: job.id, placement });
+            }
+            // no break: greedy continues past blocked pods
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize, cores: u32) -> Vec<NodeState> {
+        (0..n).map(|i| NodeState::whole(i, cores, 64 << 30)).collect()
+    }
+
+    #[test]
+    fn try_place_distinct_nodes() {
+        let job = PendingJob::simple(1, 2, 4, 60);
+        let mut free = nodes(3, 8);
+        let placement = try_place(&job, &mut free).unwrap();
+        assert_eq!(placement.len(), 2);
+        assert_ne!(placement[0].node, placement[1].node);
+        assert_eq!(free[0].free_cores, 4);
+        assert_eq!(free[1].free_cores, 4);
+        assert_eq!(free[2].free_cores, 8);
+    }
+
+    #[test]
+    fn try_place_rolls_back_on_failure() {
+        let job = PendingJob::simple(1, 3, 8, 60);
+        let mut free = nodes(2, 8);
+        assert!(try_place(&job, &mut free).is_none());
+        assert!(free.iter().all(|n| n.free_cores == 8), "rollback restored");
+    }
+
+    #[test]
+    fn fifo_blocks_behind_wide_job() {
+        // head needs 4 nodes (cluster has 2) => nothing behind it runs
+        let pending = vec![
+            PendingJob::simple(1, 4, 1, 60),
+            PendingJob::simple(2, 1, 1, 60),
+        ];
+        let out = FifoPolicy.schedule(0.0, &pending, &nodes(2, 8), &[]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn fifo_respects_priority_then_submit() {
+        let mut a = PendingJob::simple(1, 1, 8, 60);
+        a.submit_s = 0.0;
+        let mut b = PendingJob::simple(2, 1, 8, 60);
+        b.submit_s = 1.0;
+        b.priority = 10;
+        // only one node free: priority job wins despite later submit
+        let out = FifoPolicy.schedule(2.0, &[a, b], &nodes(1, 8), &[]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].job, 2);
+    }
+
+    #[test]
+    fn kube_greedy_skips_blocked_wide_job() {
+        let pending = vec![
+            PendingJob::simple(1, 4, 1, 60), // cannot fit
+            PendingJob::simple(2, 1, 1, 60),
+            PendingJob::simple(3, 1, 1, 60),
+        ];
+        let out = KubeGreedyPolicy.schedule(0.0, &pending, &nodes(2, 8), &[]);
+        let ids: Vec<u64> = out.iter().map(|a| a.job).collect();
+        assert_eq!(ids, vec![2, 3], "greedy passes over the blocked job");
+    }
+
+    #[test]
+    fn kube_greedy_spreads_least_allocated() {
+        let mut ns = nodes(2, 8);
+        ns[0].free_cores = 2; // node 0 mostly used
+        let pending = vec![PendingJob::simple(1, 1, 1, 60)];
+        let out = KubeGreedyPolicy.schedule(0.0, &pending, &ns, &[]);
+        assert_eq!(out[0].placement[0].node, 1, "prefers the emptier node");
+    }
+
+    #[test]
+    fn no_overcommit_single_cycle() {
+        let pending: Vec<PendingJob> =
+            (0..10).map(|i| PendingJob::simple(i, 1, 8, 60)).collect();
+        for policy in [&FifoPolicy as &dyn SchedPolicy, &KubeGreedyPolicy] {
+            let out = policy.schedule(0.0, &pending, &nodes(3, 8), &[]);
+            assert_eq!(out.len(), 3, "{}: exactly the free capacity", policy.name());
+            let mut used: Vec<usize> =
+                out.iter().flat_map(|a| a.placement.iter().map(|p| p.node)).collect();
+            used.sort();
+            used.dedup();
+            assert_eq!(used.len(), 3, "distinct nodes");
+        }
+    }
+
+    #[test]
+    fn mem_constraint_respected() {
+        let mut job = PendingJob::simple(1, 1, 1, 60);
+        job.mem = 128 << 30; // more than node's 64gb
+        let out = FifoPolicy.schedule(0.0, &[job], &nodes(4, 8), &[]);
+        assert!(out.is_empty());
+    }
+}

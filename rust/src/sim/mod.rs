@@ -1,0 +1,11 @@
+//! Discrete-event cluster simulator for the large-scale scheduling
+//! evaluation (experiment E1/E3: "compare efficiency of scheduling the
+//! container jobs by Kubernetes and Torque", paper §V).
+//!
+//! Reuses the *same* [`crate::sched`] policy code the live daemons run —
+//! the simulator only replaces wallclock and process machinery, not the
+//! decision logic. Deterministic: same trace + policy ⇒ same report.
+
+pub mod engine;
+
+pub use engine::{simulate, OperatorModel, SimParams, SimReport};

@@ -1,0 +1,234 @@
+//! Singularity-CRI: the Container Runtime Interface shim that lets the
+//! Kubernetes kubelet drive Singularity containers (paper §III: "Kubernetes
+//! supports Docker by default, though it can be adjusted to perform
+//! services for Singularity by adding Singularity-CRI").
+//!
+//! The interface is a distilled CRI: start / status / stop / remove, with
+//! container state held by the shim (as the real CRI daemon does).
+
+use super::runtime::{CancelToken, RunRequest, RunResult, Runtime};
+use crate::cluster::SharedFs;
+use crate::rt;
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// What the kubelet asks the CRI to run (one container of a pod).
+#[derive(Debug, Clone)]
+pub struct ContainerSpec {
+    pub name: String,
+    pub image: String,
+    pub env: Vec<(String, String)>,
+    pub seed: u64,
+    pub time_scale: f64,
+}
+
+impl ContainerSpec {
+    pub fn new(name: impl Into<String>, image: impl Into<String>) -> Self {
+        ContainerSpec {
+            name: name.into(),
+            image: image.into(),
+            env: Vec::new(),
+            seed: 0,
+            time_scale: 1.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ContainerId(pub u64);
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ContainerStatus {
+    Running,
+    Exited(RunResult),
+    /// Start failed before the payload ran (image pull error etc.).
+    Failed(String),
+}
+
+/// The distilled Container Runtime Interface.
+pub trait Cri: Send + Sync {
+    /// Runtime name as reported in node status (`singularity`, `docker-sim`).
+    fn runtime_name(&self) -> String;
+    /// Start a container; returns immediately with an id.
+    fn start(&self, spec: ContainerSpec, fs: SharedFs) -> Result<ContainerId>;
+    fn status(&self, id: ContainerId) -> Result<ContainerStatus>;
+    /// Request termination (idempotent). Does not wait.
+    fn stop(&self, id: ContainerId) -> Result<()>;
+    /// Forget a terminal container. Errors if still running.
+    fn remove(&self, id: ContainerId) -> Result<()>;
+    /// Block until the container exits (test/bench convenience).
+    fn wait(&self, id: ContainerId, timeout: std::time::Duration) -> Result<RunResult> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match self.status(id)? {
+                ContainerStatus::Exited(r) => return Ok(r),
+                ContainerStatus::Failed(e) => return Err(Error::container(e)),
+                ContainerStatus::Running => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(Error::container("wait timeout"));
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(300));
+                }
+            }
+        }
+    }
+}
+
+struct Entry {
+    cancel: CancelToken,
+    state: ContainerStatus,
+}
+
+/// CRI shim running containers on a [`Runtime`] via one thread each.
+pub struct SingularityCri {
+    runtime: Runtime,
+    containers: Arc<Mutex<HashMap<u64, Entry>>>,
+    next_id: AtomicU64,
+}
+
+impl SingularityCri {
+    pub fn new(runtime: Runtime) -> Arc<Self> {
+        Arc::new(SingularityCri {
+            runtime,
+            containers: Arc::new(Mutex::new(HashMap::new())),
+            next_id: AtomicU64::new(1),
+        })
+    }
+}
+
+impl Cri for Arc<SingularityCri> {
+    fn runtime_name(&self) -> String {
+        format!("{}-cri", self.runtime.kind.as_str())
+    }
+
+    fn start(&self, spec: ContainerSpec, fs: SharedFs) -> Result<ContainerId> {
+        // Fail fast on unknown images (CRI ImageService would).
+        if !self.runtime.registry().exists(&spec.image) {
+            return Err(Error::container(format!("image not found: {}", spec.image)));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let cancel = CancelToken::new();
+        self.containers
+            .lock()
+            .unwrap()
+            .insert(id, Entry { cancel: cancel.clone(), state: ContainerStatus::Running });
+        let containers = self.containers.clone();
+        let runtime = self.runtime.clone();
+        rt::spawn_named(&format!("cri-{}", spec.name), move || {
+            let mut req = RunRequest::new(spec.image.clone());
+            req.env = spec.env.clone();
+            req.seed = spec.seed;
+            req.time_scale = spec.time_scale;
+            let state = match runtime.run(&req, &fs, &cancel) {
+                Ok(res) => ContainerStatus::Exited(res),
+                Err(e) => ContainerStatus::Failed(e.to_string()),
+            };
+            if let Some(entry) = containers.lock().unwrap().get_mut(&id) {
+                entry.state = state;
+            }
+        });
+        Ok(ContainerId(id))
+    }
+
+    fn status(&self, id: ContainerId) -> Result<ContainerStatus> {
+        self.containers
+            .lock()
+            .unwrap()
+            .get(&id.0)
+            .map(|e| e.state.clone())
+            .ok_or_else(|| Error::container(format!("no such container {}", id.0)))
+    }
+
+    fn stop(&self, id: ContainerId) -> Result<()> {
+        match self.containers.lock().unwrap().get(&id.0) {
+            Some(entry) => {
+                entry.cancel.trigger();
+                Ok(())
+            }
+            None => Err(Error::container(format!("no such container {}", id.0))),
+        }
+    }
+
+    fn remove(&self, id: ContainerId) -> Result<()> {
+        let mut map = self.containers.lock().unwrap();
+        match map.get(&id.0) {
+            Some(e) if matches!(e.state, ContainerStatus::Running) => {
+                Err(Error::container("container still running"))
+            }
+            Some(_) => {
+                map.remove(&id.0);
+                Ok(())
+            }
+            None => Err(Error::container(format!("no such container {}", id.0))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Metrics;
+    use crate::singularity::image::{Payload, SifImage};
+    use crate::singularity::registry::ImageRegistry;
+    use crate::singularity::runtime::RuntimeKind;
+    use std::time::Duration;
+
+    fn cri() -> Arc<SingularityCri> {
+        let reg = ImageRegistry::with_defaults();
+        reg.push(SifImage::new("long.sif", Payload::Sleep { millis: 60_000 }));
+        let rt = Runtime::new(RuntimeKind::Singularity, reg, Metrics::new());
+        SingularityCri::new(rt)
+    }
+
+    #[test]
+    fn start_wait_remove() {
+        let cri = cri();
+        let fs = SharedFs::new();
+        let id = cri.start(ContainerSpec::new("c1", "lolcow_latest.sif"), fs).unwrap();
+        let res = cri.wait(id, Duration::from_secs(5)).unwrap();
+        assert!(res.success());
+        assert!(res.stdout.contains("Moo"));
+        cri.remove(id).unwrap();
+        assert!(cri.status(id).is_err());
+    }
+
+    #[test]
+    fn unknown_image_fails_fast() {
+        let cri = cri();
+        assert!(cri.start(ContainerSpec::new("c", "ghost.sif"), SharedFs::new()).is_err());
+    }
+
+    #[test]
+    fn stop_kills_running_container() {
+        let cri = cri();
+        let id = cri.start(ContainerSpec::new("c", "long.sif"), SharedFs::new()).unwrap();
+        assert_eq!(cri.status(id).unwrap(), ContainerStatus::Running);
+        assert!(cri.remove(id).is_err(), "cannot remove running container");
+        cri.stop(id).unwrap();
+        let res = cri.wait(id, Duration::from_secs(5)).unwrap();
+        assert!(res.cancelled);
+        cri.remove(id).unwrap();
+    }
+
+    #[test]
+    fn runtime_name_reflects_kind() {
+        assert_eq!(cri().runtime_name(), "singularity-cri");
+    }
+
+    #[test]
+    fn parallel_containers() {
+        let cri = cri();
+        let fs = SharedFs::new();
+        let ids: Vec<_> = (0..16)
+            .map(|i| {
+                cri.start(ContainerSpec::new(format!("c{i}"), "lolcow_latest.sif"), fs.clone())
+                    .unwrap()
+            })
+            .collect();
+        for id in ids {
+            assert!(cri.wait(id, Duration::from_secs(10)).unwrap().success());
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! SIF-style container images.
+//!
+//! Singularity packs a container into a single SIF file; ours is a compact
+//! stand-in: a magic header, a JSON descriptor (name, payload, labels,
+//! environment), and an integrity checksum. Images carry an executable
+//! [`Payload`] instead of a rootfs — the runscript equivalent — so
+//! containerised jobs do *real work* (PJRT compute, output generation)
+//! without a kernel namespace substrate.
+
+use crate::encoding::{json, Decode, Encode, Value};
+use crate::util::{Error, Result};
+
+/// Magic bytes heading every image file.
+pub const SIF_MAGIC: &[u8; 8] = b"SIFHPC\x01\n";
+
+/// What running the container does (the %runscript).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Print a message (the paper's `lolcow` demo image).
+    Echo { message: String },
+    /// Busy-wait/sleep for a duration — synthetic HPC job body.
+    /// `millis` is *nominal* job length; the runtime may scale it.
+    Sleep { millis: u64 },
+    /// Run an AOT-compiled artifact via PJRT: the CYBELE-pilot stand-in.
+    /// `steps` train/infer iterations of `artifact` (see artifacts/manifest).
+    Compute { artifact: String, steps: u32 },
+    /// Interpret a small shell script (lines of the supported subset).
+    Script { lines: Vec<String> },
+    /// Exit with a code — failure injection.
+    Fail { exit_code: i32 },
+}
+
+impl Payload {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Echo { .. } => "echo",
+            Payload::Sleep { .. } => "sleep",
+            Payload::Compute { .. } => "compute",
+            Payload::Script { .. } => "script",
+            Payload::Fail { .. } => "fail",
+        }
+    }
+}
+
+impl Encode for Payload {
+    fn encode(&self) -> Value {
+        match self {
+            Payload::Echo { message } => {
+                Value::map().with("kind", "echo").with("message", message.clone())
+            }
+            Payload::Sleep { millis } => {
+                Value::map().with("kind", "sleep").with("millis", *millis)
+            }
+            Payload::Compute { artifact, steps } => Value::map()
+                .with("kind", "compute")
+                .with("artifact", artifact.clone())
+                .with("steps", *steps as u64),
+            Payload::Script { lines } => Value::map().with("kind", "script").with(
+                "lines",
+                Value::Seq(lines.iter().map(|l| Value::str(l.clone())).collect()),
+            ),
+            Payload::Fail { exit_code } => {
+                Value::map().with("kind", "fail").with("exitCode", *exit_code as i64)
+            }
+        }
+    }
+}
+
+impl Decode for Payload {
+    fn decode(v: &Value) -> Result<Self> {
+        Ok(match v.req_str("kind")? {
+            "echo" => Payload::Echo { message: v.req_str("message")?.to_string() },
+            "sleep" => Payload::Sleep { millis: v.req_int("millis")? as u64 },
+            "compute" => Payload::Compute {
+                artifact: v.req_str("artifact")?.to_string(),
+                steps: v.req_int("steps")? as u32,
+            },
+            "script" => Payload::Script {
+                lines: v
+                    .req("lines")?
+                    .as_seq()
+                    .ok_or_else(|| Error::parse("script lines must be a list"))?
+                    .iter()
+                    .filter_map(|l| l.as_str().map(String::from))
+                    .collect(),
+            },
+            "fail" => Payload::Fail { exit_code: v.req_int("exitCode")? as i32 },
+            k => return Err(Error::parse(format!("unknown payload kind `{k}`"))),
+        })
+    }
+}
+
+/// A built image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SifImage {
+    /// Reference, e.g. `lolcow_latest.sif` or `cropyield:v1`.
+    pub name: String,
+    pub payload: Payload,
+    pub labels: Vec<(String, String)>,
+    /// Environment baked at build time (%environment section).
+    pub env: Vec<(String, String)>,
+}
+
+impl SifImage {
+    pub fn new(name: impl Into<String>, payload: Payload) -> Self {
+        SifImage { name: name.into(), payload, labels: Vec::new(), env: Vec::new() }
+    }
+
+    /// The paper's demo image.
+    pub fn lolcow() -> Self {
+        SifImage::new(
+            "lolcow_latest.sif",
+            Payload::Echo {
+                message: concat!(
+                    " _________________________________\n",
+                    "< Moo-ve over, HPC — containers!  >\n",
+                    " ---------------------------------\n",
+                    "        \\   ^__^\n",
+                    "         \\  (oo)\\_______\n",
+                    "            (__)\\       )\\/\\\n",
+                    "                ||----w |\n",
+                    "                ||     ||\n"
+                )
+                .to_string(),
+            },
+        )
+    }
+
+    /// Serialize to SIF bytes: magic + u32 length + JSON + u32 checksum.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let body = json::to_string(&self.encode());
+        let mut out = Vec::with_capacity(body.len() + 16);
+        out.extend_from_slice(SIF_MAGIC);
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(body.as_bytes());
+        out.extend_from_slice(&fletcher32(body.as_bytes()).to_le_bytes());
+        out
+    }
+
+    /// Parse SIF bytes, verifying magic and checksum.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SifImage> {
+        if bytes.len() < 16 || &bytes[..8] != SIF_MAGIC {
+            return Err(Error::container("not a SIF image (bad magic)"));
+        }
+        let len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        if bytes.len() < 12 + len + 4 {
+            return Err(Error::container("truncated SIF image"));
+        }
+        let body = &bytes[12..12 + len];
+        let want = u32::from_le_bytes(bytes[12 + len..16 + len].try_into().unwrap());
+        if fletcher32(body) != want {
+            return Err(Error::container("SIF checksum mismatch"));
+        }
+        let text =
+            std::str::from_utf8(body).map_err(|_| Error::container("SIF body not utf-8"))?;
+        SifImage::decode(&json::parse(text)?)
+    }
+}
+
+impl Encode for SifImage {
+    fn encode(&self) -> Value {
+        Value::map()
+            .with("name", self.name.clone())
+            .with("payload", self.payload.encode())
+            .with("labels", crate::encoding::encode_str_map(&self.labels))
+            .with("env", crate::encoding::encode_str_map(&self.env))
+    }
+}
+
+impl Decode for SifImage {
+    fn decode(v: &Value) -> Result<Self> {
+        Ok(SifImage {
+            name: v.req_str("name")?.to_string(),
+            payload: Payload::decode(v.req("payload")?)?,
+            labels: v.get("labels").map(crate::encoding::decode_str_map).unwrap_or_default(),
+            env: v.get("env").map(crate::encoding::decode_str_map).unwrap_or_default(),
+        })
+    }
+}
+
+fn fletcher32(data: &[u8]) -> u32 {
+    let mut a: u32 = 0;
+    let mut b: u32 = 0;
+    for chunk in data.chunks(360) {
+        for &byte in chunk {
+            a += byte as u32;
+            b += a;
+        }
+        a %= 65535;
+        b %= 65535;
+    }
+    (b << 16) | a
+}
+
+/// Parse a Singularity definition file (the subset we support):
+///
+/// ```text
+/// Bootstrap: payload
+/// From: compute            # echo | sleep | compute | script | fail
+///
+/// %labels
+///     author hlrs
+/// %environment
+///     export MODEL=cropyield
+/// %runscript
+///     artifact=cropyield_train steps=200   # compute
+/// ```
+pub fn parse_definition(name: &str, def: &str) -> Result<SifImage> {
+    let mut kind = String::new();
+    let mut section = String::new();
+    let mut labels = Vec::new();
+    let mut env = Vec::new();
+    let mut run_lines: Vec<String> = Vec::new();
+    for raw in def.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('%') {
+            section = rest.split_whitespace().next().unwrap_or("").to_string();
+            continue;
+        }
+        if section.is_empty() {
+            if let Some(v) = line.strip_prefix("Bootstrap:") {
+                if v.trim() != "payload" {
+                    return Err(Error::parse(format!("unsupported Bootstrap `{}`", v.trim())));
+                }
+            } else if let Some(v) = line.strip_prefix("From:") {
+                kind = v.trim().to_string();
+            }
+            continue;
+        }
+        match section.as_str() {
+            "labels" => {
+                if let Some((k, v)) = line.split_once(char::is_whitespace) {
+                    labels.push((k.to_string(), v.trim().to_string()));
+                }
+            }
+            "environment" => {
+                let line = line.strip_prefix("export ").unwrap_or(line);
+                if let Some((k, v)) = line.split_once('=') {
+                    env.push((k.trim().to_string(), v.trim().to_string()));
+                }
+            }
+            "runscript" => run_lines.push(line.to_string()),
+            _ => {} // ignore unknown sections (%post, %files...)
+        }
+    }
+    let args: Vec<(String, String)> = run_lines
+        .iter()
+        .flat_map(|l| l.split_whitespace())
+        .filter_map(|tok| tok.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+        .collect();
+    let get = |key: &str| args.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone());
+    let payload = match kind.as_str() {
+        "echo" => Payload::Echo {
+            message: get("message").unwrap_or_else(|| "hello from hpcorc".into()),
+        },
+        "sleep" => Payload::Sleep {
+            millis: get("millis")
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| Error::parse("sleep payload needs millis=<n>"))?,
+        },
+        "compute" => Payload::Compute {
+            artifact: get("artifact").ok_or_else(|| Error::parse("compute needs artifact="))?,
+            steps: get("steps").and_then(|v| v.parse().ok()).unwrap_or(1),
+        },
+        "script" => Payload::Script { lines: run_lines.clone() },
+        "fail" => Payload::Fail {
+            exit_code: get("exit_code").and_then(|v| v.parse().ok()).unwrap_or(1),
+        },
+        k => return Err(Error::parse(format!("unknown payload kind `{k}`"))),
+    };
+    let mut img = SifImage::new(name, payload);
+    img.labels = labels;
+    img.env = env;
+    Ok(img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let img = SifImage::lolcow();
+        let bytes = img.to_bytes();
+        let back = SifImage::from_bytes(&bytes).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn corrupt_image_rejected() {
+        let img = SifImage::lolcow();
+        let mut bytes = img.to_bytes();
+        assert!(SifImage::from_bytes(&bytes[..10]).is_err(), "truncated");
+        let n = bytes.len();
+        bytes[n / 2] ^= 0xFF;
+        assert!(SifImage::from_bytes(&bytes).is_err(), "checksum");
+        let mut bad_magic = img.to_bytes();
+        bad_magic[0] = b'X';
+        assert!(SifImage::from_bytes(&bad_magic).is_err(), "magic");
+    }
+
+    #[test]
+    fn payload_encode_roundtrip() {
+        for p in [
+            Payload::Echo { message: "hi".into() },
+            Payload::Sleep { millis: 1500 },
+            Payload::Compute { artifact: "cropyield_train".into(), steps: 200 },
+            Payload::Script { lines: vec!["echo a".into(), "sleep 1".into()] },
+            Payload::Fail { exit_code: 3 },
+        ] {
+            assert_eq!(Payload::decode(&p.encode()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn definition_file_compute() {
+        let def = "\
+Bootstrap: payload
+From: compute
+
+%labels
+    author hlrs
+    project cybele
+%environment
+    export MODEL=cropyield
+%runscript
+    artifact=cropyield_train steps=200
+";
+        let img = parse_definition("cropyield:v1", def).unwrap();
+        assert_eq!(img.name, "cropyield:v1");
+        assert_eq!(
+            img.payload,
+            Payload::Compute { artifact: "cropyield_train".into(), steps: 200 }
+        );
+        assert_eq!(img.labels[0], ("author".into(), "hlrs".into()));
+        assert_eq!(img.env[0], ("MODEL".into(), "cropyield".into()));
+    }
+
+    #[test]
+    fn definition_errors() {
+        assert!(parse_definition("x", "Bootstrap: docker\nFrom: echo\n").is_err());
+        assert!(parse_definition("x", "Bootstrap: payload\nFrom: nope\n").is_err());
+        assert!(
+            parse_definition("x", "Bootstrap: payload\nFrom: compute\n%runscript\n  steps=2\n")
+                .is_err(),
+            "compute without artifact"
+        );
+    }
+
+    #[test]
+    fn fletcher_known_values() {
+        assert_eq!(fletcher32(b""), 0);
+        assert_ne!(fletcher32(b"abcde"), fletcher32(b"abcdf"));
+    }
+}

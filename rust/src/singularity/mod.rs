@@ -1,0 +1,16 @@
+//! Singularity substrate: SIF-style images, a registry, the container
+//! runtime (with Docker-sim and native baselines for bench E5), the batch
+//! shell interpreter, and the Singularity-CRI shim for the kubelet.
+
+pub mod cri;
+pub mod image;
+pub mod registry;
+pub mod runtime;
+pub mod shell;
+
+pub use cri::{ContainerId, ContainerSpec, ContainerStatus, Cri, SingularityCri};
+pub use image::{parse_definition, Payload, SifImage};
+pub use registry::ImageRegistry;
+pub use runtime::{
+    CancelToken, ComputeEngine, ComputeSummary, RunRequest, RunResult, Runtime, RuntimeKind,
+};

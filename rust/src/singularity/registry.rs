@@ -1,0 +1,116 @@
+//! Image registry: where built SIF images live.
+//!
+//! Models both the user's directory of `.sif` files (Singularity's model —
+//! images are plain files, one reason it suits HPC shared filesystems) and
+//! a pull-through cache keyed by reference. Thread-safe; shared by moms,
+//! kubelets and the CLI.
+
+use super::image::SifImage;
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, Default)]
+pub struct ImageRegistry {
+    inner: Arc<Mutex<BTreeMap<String, Arc<SifImage>>>>,
+}
+
+impl ImageRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A registry pre-loaded with the images the examples/benches use.
+    pub fn with_defaults() -> Self {
+        let reg = Self::new();
+        reg.push(SifImage::lolcow());
+        reg.push(SifImage::new(
+            "sleep_1s.sif",
+            super::image::Payload::Sleep { millis: 1000 },
+        ));
+        reg
+    }
+
+    /// Store an image under its name (overwrites, like rebuilding a .sif).
+    pub fn push(&self, img: SifImage) {
+        self.inner.lock().unwrap().insert(img.name.clone(), Arc::new(img));
+    }
+
+    /// Look up by exact reference.
+    pub fn pull(&self, name: &str) -> Result<Arc<SifImage>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::container(format!("image not found: {name}")))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().contains_key(name)
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().remove(name).is_some()
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Persist an image to a real `.sif` file on disk.
+    pub fn save_to_file(&self, name: &str, path: &std::path::Path) -> Result<()> {
+        let img = self.pull(name)?;
+        std::fs::write(path, img.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load a `.sif` file from disk into the registry.
+    pub fn load_from_file(&self, path: &std::path::Path) -> Result<String> {
+        let bytes = std::fs::read(path)?;
+        let img = SifImage::from_bytes(&bytes)?;
+        let name = img.name.clone();
+        self.push(img);
+        Ok(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::singularity::image::Payload;
+
+    #[test]
+    fn push_pull_list() {
+        let reg = ImageRegistry::new();
+        assert!(reg.pull("missing.sif").is_err());
+        reg.push(SifImage::lolcow());
+        assert!(reg.exists("lolcow_latest.sif"));
+        let img = reg.pull("lolcow_latest.sif").unwrap();
+        assert!(matches!(img.payload, Payload::Echo { .. }));
+        assert_eq!(reg.list(), vec!["lolcow_latest.sif".to_string()]);
+        assert!(reg.remove("lolcow_latest.sif"));
+        assert!(!reg.remove("lolcow_latest.sif"));
+    }
+
+    #[test]
+    fn defaults_present() {
+        let reg = ImageRegistry::with_defaults();
+        assert!(reg.exists("lolcow_latest.sif"));
+        assert!(reg.exists("sleep_1s.sif"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let reg = ImageRegistry::with_defaults();
+        let dir = std::env::temp_dir().join(format!("hpcorc-sif-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lolcow.sif");
+        reg.save_to_file("lolcow_latest.sif", &path).unwrap();
+        let reg2 = ImageRegistry::new();
+        let name = reg2.load_from_file(&path).unwrap();
+        assert_eq!(name, "lolcow_latest.sif");
+        assert_eq!(*reg2.pull(&name).unwrap(), *reg.pull(&name).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

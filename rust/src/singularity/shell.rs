@@ -1,0 +1,349 @@
+//! Tiny POSIX-sh-subset interpreter for PBS/Slurm batch script bodies.
+//!
+//! The paper's Fig. 3 batch body is:
+//! ```text
+//! export PATH=$PATH:/usr/local/bin
+//! singularity run lolcow_latest.sif
+//! ```
+//! pbs_mom and slurmd hand the script body to this interpreter. Supported:
+//! comments, `export K=V`, `echo` (with `>`/`>>` redirects into the shared
+//! FS), `sleep N`, `singularity run IMAGE`, `cat FILE`, `true`/`false`,
+//! `exit N`. Unknown commands behave like sh: an error on stderr, exit
+//! status 127, execution continues; the script's status is the last
+//! command's.
+
+use super::runtime::{CancelToken, RunRequest, Runtime};
+use crate::cluster::fs::expand_vars;
+use crate::cluster::SharedFs;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+pub struct ShellCtx {
+    pub env: BTreeMap<String, String>,
+    pub fs: SharedFs,
+    pub runtime: Runtime,
+    pub cancel: CancelToken,
+    pub stdout: String,
+    pub stderr: String,
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl ShellCtx {
+    pub fn new(fs: SharedFs, runtime: Runtime, cancel: CancelToken) -> Self {
+        let mut env = BTreeMap::new();
+        env.insert("HOME".to_string(), fs.env("HOME").unwrap_or_else(|| "/home/user".into()));
+        env.insert("PATH".to_string(), "/usr/bin:/bin".to_string());
+        ShellCtx {
+            env,
+            fs,
+            runtime,
+            cancel,
+            stdout: String::new(),
+            stderr: String::new(),
+            time_scale: 1.0,
+            seed: 0,
+        }
+    }
+
+    fn expand(&self, s: &str) -> String {
+        expand_vars(s, |k| self.env.get(k).cloned())
+    }
+
+    /// Run all lines; returns the script's exit status.
+    pub fn run_script(&mut self, lines: &[String]) -> i32 {
+        let mut status = 0;
+        for line in lines {
+            if self.cancel.is_triggered() {
+                return 137;
+            }
+            match self.run_line(line) {
+                LineOutcome::Status(s) => status = s,
+                LineOutcome::Exit(s) => return s,
+                LineOutcome::Skip => {}
+            }
+        }
+        status
+    }
+
+    fn run_line(&mut self, raw: &str) -> LineOutcome {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return LineOutcome::Skip;
+        }
+        // Redirection: split on the FIRST unquoted `>` / `>>`.
+        let (cmd_part, redirect) = split_redirect(line);
+        let words = split_words(&cmd_part);
+        if words.is_empty() {
+            return LineOutcome::Skip;
+        }
+        let argv: Vec<String> = words.iter().map(|w| self.expand(w)).collect();
+        let mut out = String::new();
+        let status = match argv[0].as_str() {
+            "export" => {
+                for kv in &argv[1..] {
+                    if let Some((k, v)) = kv.split_once('=') {
+                        self.env.insert(k.to_string(), v.to_string());
+                    }
+                }
+                0
+            }
+            "echo" => {
+                out = argv[1..].join(" ");
+                out.push('\n');
+                0
+            }
+            "cat" => match argv.get(1) {
+                Some(path) => match self.fs.read_string(path) {
+                    Ok(content) => {
+                        out = content;
+                        0
+                    }
+                    Err(_) => {
+                        self.stderr.push_str(&format!("cat: {path}: No such file\n"));
+                        1
+                    }
+                },
+                None => 0,
+            },
+            "sleep" => {
+                let secs: f64 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+                let scaled = Duration::from_secs_f64(secs * self.time_scale.max(0.0));
+                if self.cancel.wait_timeout(scaled) {
+                    return LineOutcome::Exit(137);
+                }
+                0
+            }
+            "true" => 0,
+            "false" => 1,
+            "exit" => {
+                let code = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+                return LineOutcome::Exit(code);
+            }
+            "singularity" => {
+                // `singularity run IMAGE [key=value...]`, `exec` treated alike.
+                if argv.len() < 3 || (argv[1] != "run" && argv[1] != "exec") {
+                    self.stderr.push_str("usage: singularity run <image>\n");
+                    2
+                } else {
+                    let mut req = RunRequest::new(argv[2].clone());
+                    req.time_scale = self.time_scale;
+                    req.seed = self.seed;
+                    req.env =
+                        self.env.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+                    match self.runtime.run(&req, &self.fs, &self.cancel) {
+                        Ok(res) => {
+                            out = res.stdout;
+                            self.stderr.push_str(&res.stderr);
+                            if res.cancelled {
+                                return LineOutcome::Exit(137);
+                            }
+                            res.exit_code
+                        }
+                        Err(e) => {
+                            self.stderr.push_str(&format!("singularity: {e}\n"));
+                            255
+                        }
+                    }
+                }
+            }
+            other => {
+                self.stderr.push_str(&format!("{other}: command not found\n"));
+                127
+            }
+        };
+        match redirect {
+            Some((path, append)) => {
+                let target = self.expand(&path);
+                let r = if append {
+                    self.fs.append(&target, out.as_bytes())
+                } else {
+                    self.fs.write(&target, out.as_bytes())
+                };
+                if let Err(e) = r {
+                    self.stderr.push_str(&format!("redirect: {e}\n"));
+                    return LineOutcome::Status(1);
+                }
+            }
+            None => self.stdout.push_str(&out),
+        }
+        LineOutcome::Status(status)
+    }
+}
+
+enum LineOutcome {
+    Status(i32),
+    Exit(i32),
+    Skip,
+}
+
+/// Split `cmd args > file` into (cmd part, Some((file, append))).
+fn split_redirect(line: &str) -> (String, Option<(String, bool)>) {
+    let bytes = line.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for i in 0..bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'>' if !in_single && !in_double => {
+                let append = bytes.get(i + 1) == Some(&b'>');
+                let target_start = if append { i + 2 } else { i + 1 };
+                let target = line[target_start..].trim().to_string();
+                return (line[..i].trim().to_string(), Some((target, append)));
+            }
+            _ => {}
+        }
+    }
+    (line.to_string(), None)
+}
+
+/// Split a command line into words, honouring single/double quotes.
+fn split_words(line: &str) -> Vec<String> {
+    let mut words = Vec::new();
+    let mut cur = String::new();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut has_content = false;
+    for c in line.chars() {
+        match c {
+            '\'' if !in_double => {
+                in_single = !in_single;
+                has_content = true;
+            }
+            '"' if !in_single => {
+                in_double = !in_double;
+                has_content = true;
+            }
+            c if c.is_whitespace() && !in_single && !in_double => {
+                if has_content {
+                    words.push(std::mem::take(&mut cur));
+                    has_content = false;
+                }
+            }
+            c => {
+                cur.push(c);
+                has_content = true;
+            }
+        }
+    }
+    if has_content {
+        words.push(cur);
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Metrics;
+    use crate::singularity::registry::ImageRegistry;
+    use crate::singularity::runtime::RuntimeKind;
+
+    fn ctx() -> ShellCtx {
+        let fs = SharedFs::new();
+        let rt = Runtime::new(RuntimeKind::Singularity, ImageRegistry::with_defaults(), Metrics::new());
+        ShellCtx::new(fs, rt, CancelToken::new())
+    }
+
+    fn lines(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn paper_fig3_script_body() {
+        let mut c = ctx();
+        let status = c.run_script(&lines(&[
+            "export PATH=$PATH:/usr/local/bin",
+            "singularity run lolcow_latest.sif",
+        ]));
+        assert_eq!(status, 0);
+        assert!(c.stdout.contains("Moo"));
+        assert_eq!(c.env["PATH"], "/usr/bin:/bin:/usr/local/bin");
+    }
+
+    #[test]
+    fn echo_with_redirect() {
+        let mut c = ctx();
+        let status = c.run_script(&lines(&[
+            "echo hello world > $HOME/out.txt",
+            "echo again >> $HOME/out.txt",
+        ]));
+        assert_eq!(status, 0);
+        assert_eq!(c.fs.read_string("$HOME/out.txt").unwrap(), "hello world\nagain\n");
+        assert!(c.stdout.is_empty());
+    }
+
+    #[test]
+    fn cat_reads_fs() {
+        let mut c = ctx();
+        c.fs.write("$HOME/data", b"content\n").unwrap();
+        assert_eq!(c.run_script(&lines(&["cat $HOME/data"])), 0);
+        assert_eq!(c.stdout, "content\n");
+        assert_eq!(c.run_script(&lines(&["cat $HOME/nope"])), 1);
+    }
+
+    #[test]
+    fn unknown_command_is_127_but_continues() {
+        let mut c = ctx();
+        let status = c.run_script(&lines(&["frobnicate --fast", "echo ok"]));
+        assert_eq!(status, 0, "last command wins");
+        assert!(c.stderr.contains("frobnicate: command not found"));
+        assert_eq!(c.stdout, "ok\n");
+        let status = c.run_script(&lines(&["echo ok", "frobnicate"]));
+        assert_eq!(status, 127);
+    }
+
+    #[test]
+    fn exit_stops_script() {
+        let mut c = ctx();
+        let status = c.run_script(&lines(&["exit 3", "echo never"]));
+        assert_eq!(status, 3);
+        assert!(!c.stdout.contains("never"));
+    }
+
+    #[test]
+    fn quoting() {
+        let mut c = ctx();
+        c.run_script(&lines(&["echo 'single quoted  spaces' \"double $HOME\""]));
+        assert_eq!(c.stdout, "single quoted  spaces double /home/user\n");
+    }
+
+    #[test]
+    fn sleep_scaled_and_cancellable() {
+        let mut c = ctx();
+        c.time_scale = 0.001;
+        let t0 = std::time::Instant::now();
+        assert_eq!(c.run_script(&lines(&["sleep 10"])), 0); // 10s -> 10ms
+        assert!(t0.elapsed() < Duration::from_secs(1));
+
+        let mut c2 = ctx();
+        c2.cancel.trigger();
+        assert_eq!(c2.run_script(&lines(&["sleep 100", "echo no"])), 137);
+    }
+
+    #[test]
+    fn comments_and_shebang_skipped() {
+        let mut c = ctx();
+        let status = c.run_script(&lines(&["#!/bin/sh", "# a comment", "", "echo hi"]));
+        assert_eq!(status, 0);
+        assert_eq!(c.stdout, "hi\n");
+    }
+
+    #[test]
+    fn split_words_quotes() {
+        assert_eq!(split_words("a 'b c' \"d e\""), vec!["a", "b c", "d e"]);
+        assert_eq!(split_words("  "), Vec::<String>::new());
+        assert_eq!(split_words("x ''"), vec!["x", ""]);
+    }
+
+    #[test]
+    fn split_redirect_quoted_gt() {
+        let (cmd, r) = split_redirect("echo 'a > b'");
+        assert_eq!(cmd, "echo 'a > b'");
+        assert!(r.is_none());
+        let (cmd, r) = split_redirect("echo x >> $HOME/f");
+        assert_eq!(cmd, "echo x");
+        assert_eq!(r, Some(("$HOME/f".to_string(), true)));
+    }
+}

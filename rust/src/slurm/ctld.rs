@@ -1,0 +1,678 @@
+//! slurmctld: the Slurm controller — partitions, job table, backfill loop.
+//!
+//! The baseline WLM behind WLM-Operator (paper §II). Same architecture as
+//! [`crate::pbs::PbsServer`] with Slurm semantics: partitions instead of
+//! queues, Slurm job states (PD/R/CD/CA/F/TO), sbatch/squeue/scancel/sacct/
+//! scontrol verbs. Execution reuses the generic node daemon
+//! ([`crate::pbs::Mom`]) with the `SLURM_*` environment flavor.
+
+use super::script::SlurmScript;
+use crate::cluster::{Metrics, NodeSpec, SharedFs};
+use crate::pbs::mom::{JobDone, LaunchSpec, Mom, WlmFlavor};
+use crate::rt::{self, Shutdown, Timers};
+use crate::sched::{NodeState, PendingJob, RunningJob, SchedPolicy};
+use crate::singularity::Runtime;
+use crate::util::{Error, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Slurm job states (squeue codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlurmJobState {
+    Pending,
+    Running,
+    Completed,
+    Cancelled,
+    Failed,
+    Timeout,
+}
+
+impl SlurmJobState {
+    pub fn code(&self) -> &'static str {
+        match self {
+            SlurmJobState::Pending => "PD",
+            SlurmJobState::Running => "R",
+            SlurmJobState::Completed => "CD",
+            SlurmJobState::Cancelled => "CA",
+            SlurmJobState::Failed => "F",
+            SlurmJobState::Timeout => "TO",
+        }
+    }
+
+    pub fn terminal(&self) -> bool {
+        !matches!(self, SlurmJobState::Pending | SlurmJobState::Running)
+    }
+}
+
+/// A Slurm partition (queue analog).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub name: String,
+    pub nodes: Vec<String>,
+    pub max_time: Option<Duration>,
+    pub priority: i64,
+    pub is_default: bool,
+}
+
+impl Partition {
+    pub fn new(name: impl Into<String>, nodes: &[&str]) -> Self {
+        Partition {
+            name: name.into(),
+            nodes: nodes.iter().map(|s| s.to_string()).collect(),
+            max_time: None,
+            priority: 0,
+            is_default: false,
+        }
+    }
+
+    pub fn default_partition(mut self) -> Self {
+        self.is_default = true;
+        self
+    }
+
+    pub fn with_max_time(mut self, d: Duration) -> Self {
+        self.max_time = Some(d);
+        self
+    }
+}
+
+/// One job's record.
+#[derive(Debug, Clone)]
+pub struct SlurmJob {
+    pub id: u64,
+    pub script: SlurmScript,
+    pub partition: String,
+    pub user: String,
+    pub state: SlurmJobState,
+    pub submit_s: f64,
+    pub start_s: Option<f64>,
+    pub end_s: Option<f64>,
+    pub placement: Vec<String>,
+    pub exit_code: Option<i32>,
+}
+
+impl SlurmJob {
+    pub fn name(&self) -> &str {
+        self.script.name.as_deref().unwrap_or("sbatch")
+    }
+}
+
+struct NodeAlloc {
+    spec: NodeSpec,
+    used_cores: u32,
+    used_mem: u64,
+}
+
+struct CtldState {
+    jobs: BTreeMap<u64, SlurmJob>,
+    nodes: Vec<NodeAlloc>,
+}
+
+pub struct SlurmConfig {
+    pub cluster_name: String,
+    pub partitions: Vec<Partition>,
+    pub sched_period: Duration,
+    pub time_scale: f64,
+}
+
+impl Default for SlurmConfig {
+    fn default() -> Self {
+        SlurmConfig {
+            cluster_name: "slurm".into(),
+            partitions: vec![Partition::new("normal", &[]).default_partition()],
+            sched_period: Duration::from_millis(5),
+            time_scale: 1.0,
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Slurmctld {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    name: String,
+    partitions: Vec<Partition>,
+    policy: Box<dyn SchedPolicy>,
+    state: Mutex<CtldState>,
+    moms: Mutex<HashMap<String, Mom>>,
+    metrics: Metrics,
+    time_scale: f64,
+    epoch: Instant,
+    seq: AtomicU64,
+    fs: SharedFs,
+}
+
+impl Slurmctld {
+    pub fn start(
+        config: SlurmConfig,
+        compute_nodes: Vec<NodeSpec>,
+        runtime: Runtime,
+        fs: SharedFs,
+        policy: Box<dyn SchedPolicy>,
+        timers: Timers,
+        metrics: Metrics,
+        shutdown: Shutdown,
+    ) -> Result<Slurmctld> {
+        if config.partitions.is_empty() {
+            return Err(Error::config("slurmctld needs at least one partition"));
+        }
+        let (done_tx, done_rx) = channel::<JobDone>();
+        let mut moms = HashMap::new();
+        for spec in &compute_nodes {
+            let mom = Mom::new(
+                spec.clone(),
+                fs.clone(),
+                runtime.clone(),
+                timers.clone(),
+                config.time_scale,
+                done_tx.clone(),
+                metrics.clone(),
+                shutdown.clone(),
+            )
+            .with_flavor(WlmFlavor::Slurm);
+            moms.insert(spec.name.clone(), mom);
+        }
+        let inner = Arc::new(Inner {
+            name: config.cluster_name,
+            partitions: config.partitions,
+            policy,
+            state: Mutex::new(CtldState {
+                jobs: BTreeMap::new(),
+                nodes: compute_nodes
+                    .into_iter()
+                    .map(|spec| NodeAlloc { spec, used_cores: 0, used_mem: 0 })
+                    .collect(),
+            }),
+            moms: Mutex::new(moms),
+            metrics,
+            time_scale: config.time_scale.max(1e-9),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(1),
+            fs,
+        });
+        let ctld = Slurmctld { inner };
+
+        let c2 = ctld.clone();
+        let sd2 = shutdown.clone();
+        rt::spawn_named("slurm-events", move || loop {
+            match done_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(done) => c2.on_job_done(done),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if sd2.is_triggered() {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        });
+        let c3 = ctld.clone();
+        rt::pool::spawn_ticker("slurm-sched", config.sched_period, shutdown, move || {
+            c3.run_sched_cycle();
+        });
+        Ok(ctld)
+    }
+
+    pub fn cluster_name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn fs(&self) -> &SharedFs {
+        &self.inner.fs
+    }
+
+    pub fn partitions(&self) -> &[Partition] {
+        &self.inner.partitions
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.inner.epoch.elapsed().as_secs_f64() / self.inner.time_scale
+    }
+
+    fn resolve_partition(&self, requested: Option<&str>) -> Result<&Partition> {
+        match requested {
+            Some(name) => self
+                .inner
+                .partitions
+                .iter()
+                .find(|p| p.name == name)
+                .ok_or_else(|| Error::wlm(format!("invalid partition `{name}`"))),
+            None => self
+                .inner
+                .partitions
+                .iter()
+                .find(|p| p.is_default)
+                .or_else(|| self.inner.partitions.first())
+                .ok_or_else(|| Error::wlm("no default partition")),
+        }
+    }
+
+    // ------------------------------------------------------------- commands
+
+    /// `sbatch`: submit. Returns the numeric job id.
+    pub fn sbatch(&self, script_text: &str, user: &str) -> Result<u64> {
+        let script = SlurmScript::parse(script_text)?;
+        self.sbatch_parsed(script, user)
+    }
+
+    pub fn sbatch_parsed(&self, script: SlurmScript, user: &str) -> Result<u64> {
+        let partition = self.resolve_partition(script.partition.as_deref())?.clone();
+        if let Some(max) = partition.max_time {
+            if script.time > max {
+                return Err(Error::wlm(format!(
+                    "time limit exceeds partition `{}` max",
+                    partition.name
+                )));
+            }
+        }
+        {
+            let state = self.inner.state.lock().unwrap();
+            let feasible = state
+                .nodes
+                .iter()
+                .filter(|n| {
+                    let in_part =
+                        partition.nodes.is_empty() || partition.nodes.contains(&n.spec.name);
+                    let cores = (n.spec.capacity.cpu_milli / 1000) as u32;
+                    in_part
+                        && cores >= script.tasks_per_node
+                        && n.spec.capacity.mem_bytes >= script.mem
+                        && script.constraints.iter().all(|c| n.spec.has_feature(c))
+                })
+                .count()
+                >= script.nodes as usize;
+            if !feasible {
+                return Err(Error::wlm(
+                    "sbatch: requested node configuration is not available",
+                ));
+            }
+        }
+        let id = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let job = SlurmJob {
+            id,
+            script,
+            partition: partition.name.clone(),
+            user: user.to_string(),
+            state: SlurmJobState::Pending,
+            submit_s: self.now_s(),
+            start_s: None,
+            end_s: None,
+            placement: Vec::new(),
+            exit_code: None,
+        };
+        self.inner.state.lock().unwrap().jobs.insert(id, job);
+        self.inner.metrics.inc("slurm.jobs_submitted");
+        Ok(id)
+    }
+
+    /// `squeue`: non-terminal jobs.
+    pub fn squeue(&self) -> Vec<SlurmJob> {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .jobs
+            .values()
+            .filter(|j| !j.state.terminal())
+            .cloned()
+            .collect()
+    }
+
+    /// `sacct`: all jobs including terminal (accounting view).
+    pub fn sacct(&self) -> Vec<SlurmJob> {
+        self.inner.state.lock().unwrap().jobs.values().cloned().collect()
+    }
+
+    /// `scontrol show job`.
+    pub fn scontrol_show(&self, id: u64) -> Result<SlurmJob> {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .jobs
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::wlm(format!("Invalid job id specified: {id}")))
+    }
+
+    /// `scancel`.
+    pub fn scancel(&self, id: u64) -> Result<()> {
+        let mom_to_cancel = {
+            let mut state = self.inner.state.lock().unwrap();
+            let now = self.now_s();
+            let job = state
+                .jobs
+                .get_mut(&id)
+                .ok_or_else(|| Error::wlm(format!("Invalid job id specified: {id}")))?;
+            match job.state {
+                SlurmJobState::Pending => {
+                    job.state = SlurmJobState::Cancelled;
+                    job.end_s = Some(now);
+                    None
+                }
+                SlurmJobState::Running => {
+                    job.state = SlurmJobState::Cancelled; // CG→CA collapsed
+                    job.placement.first().cloned()
+                }
+                _ => None,
+            }
+        };
+        if let Some(node) = mom_to_cancel {
+            if let Some(mom) = self.inner.moms.lock().unwrap().get(&node) {
+                mom.cancel(id);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn wait_for(&self, id: u64, timeout: Duration) -> Result<SlurmJob> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let job = self.scontrol_show(id)?;
+            if job.state.terminal() {
+                return Ok(job);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::wlm(format!("timeout waiting for job {id}")));
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+
+    /// `sinfo`-style node view: `(node, used_cores, total_cores)`.
+    pub fn sinfo(&self) -> Vec<(String, u32, u32)> {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .nodes
+            .iter()
+            .map(|n| {
+                (n.spec.name.clone(), n.used_cores, (n.spec.capacity.cpu_milli / 1000) as u32)
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------ scheduling
+
+    pub fn run_sched_cycle(&self) {
+        let now = self.now_s();
+        let launches = {
+            let mut state = self.inner.state.lock().unwrap();
+            let mut launches: Vec<(String, LaunchSpec)> = Vec::new();
+            let mut parts: Vec<&Partition> = self.inner.partitions.iter().collect();
+            parts.sort_by(|a, b| b.priority.cmp(&a.priority).then(a.name.cmp(&b.name)));
+            for part in parts {
+                let pending: Vec<PendingJob> = state
+                    .jobs
+                    .values()
+                    .filter(|j| j.state == SlurmJobState::Pending && j.partition == part.name)
+                    .map(|j| PendingJob {
+                        id: j.id,
+                        nodes: j.script.nodes,
+                        ppn: j.script.tasks_per_node,
+                        mem: j.script.mem,
+                        walltime: j.script.time,
+                        priority: j.script.priority + part.priority,
+                        submit_s: j.submit_s,
+                    })
+                    .collect();
+                if pending.is_empty() {
+                    continue;
+                }
+                // Snapshot partition nodes.
+                let mut node_states = Vec::new();
+                let mut names = Vec::new();
+                for alloc in &state.nodes {
+                    let in_part =
+                        part.nodes.is_empty() || part.nodes.contains(&alloc.spec.name);
+                    if in_part {
+                        let total = (alloc.spec.capacity.cpu_milli / 1000) as u32;
+                        node_states.push(NodeState {
+                            id: names.len(),
+                            total_cores: total,
+                            free_cores: total.saturating_sub(alloc.used_cores),
+                            total_mem: alloc.spec.capacity.mem_bytes,
+                            free_mem: alloc
+                                .spec
+                                .capacity
+                                .mem_bytes
+                                .saturating_sub(alloc.used_mem),
+                        });
+                        names.push(alloc.spec.name.clone());
+                    }
+                }
+                if node_states.is_empty() {
+                    continue;
+                }
+                let name_to_idx: HashMap<&str, usize> =
+                    names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+                let running: Vec<RunningJob> = state
+                    .jobs
+                    .values()
+                    .filter(|j| j.state == SlurmJobState::Running)
+                    .map(|j| RunningJob {
+                        id: j.id,
+                        placement: j
+                            .placement
+                            .iter()
+                            .filter_map(|n| name_to_idx.get(n.as_str()))
+                            .map(|&node| crate::sched::Placement {
+                                node,
+                                cores: j.script.tasks_per_node,
+                                mem: j.script.mem,
+                            })
+                            .collect(),
+                        expected_end_s: j.start_s.unwrap_or(0.0)
+                            + j.script.time.as_secs_f64(),
+                    })
+                    .collect();
+                for a in self.inner.policy.schedule(now, &pending, &node_states, &running) {
+                    let chosen: Vec<String> =
+                        a.placement.iter().map(|p| names[p.node].clone()).collect();
+                    let job = state.jobs.get_mut(&a.job).expect("assigned job exists");
+                    job.state = SlurmJobState::Running;
+                    job.start_s = Some(now);
+                    job.placement = chosen.clone();
+                    let spec = LaunchSpec {
+                        job_seq: job.id,
+                        job_name: job.name().to_string(),
+                        body: job.script.body.clone(),
+                        env: job.script.env.clone(),
+                        stdout_path: job.script.output.clone(),
+                        stderr_path: job.script.error.clone(),
+                        walltime: job.script.time,
+                        seed: job.id,
+                    };
+                    let (ppn, mem) = (job.script.tasks_per_node, job.script.mem);
+                    for name in &chosen {
+                        if let Some(alloc) =
+                            state.nodes.iter_mut().find(|n| &n.spec.name == name)
+                        {
+                            alloc.used_cores += ppn;
+                            alloc.used_mem += mem;
+                        }
+                    }
+                    launches.push((chosen[0].clone(), spec));
+                }
+            }
+            launches
+        };
+        for (node, spec) in launches {
+            if let Some(mom) = self.inner.moms.lock().unwrap().get(&node) {
+                self.inner.metrics.inc("slurm.jobs_started");
+                mom.launch(spec);
+            }
+        }
+        self.inner.metrics.inc("slurm.sched_cycles");
+    }
+
+    fn on_job_done(&self, done: JobDone) {
+        let mut state = self.inner.state.lock().unwrap();
+        let now = self.now_s();
+        let Some(job) = state.jobs.get_mut(&done.job_seq) else { return };
+        if job.state.terminal() {
+            // scancel already marked it; still need to free resources below.
+        } else {
+            job.state = if done.walltime_exceeded {
+                SlurmJobState::Timeout
+            } else if done.cancelled {
+                SlurmJobState::Cancelled
+            } else if done.exit_code == 0 {
+                SlurmJobState::Completed
+            } else {
+                SlurmJobState::Failed
+            };
+        }
+        job.end_s = Some(now);
+        job.exit_code = Some(done.exit_code);
+        let (ppn, mem) = (job.script.tasks_per_node, job.script.mem);
+        let placement = std::mem::take(&mut job.placement);
+        // keep placement for sacct display
+        let placement_copy = placement.clone();
+        for name in &placement {
+            if let Some(alloc) = state.nodes.iter_mut().find(|n| &n.spec.name == name) {
+                alloc.used_cores = alloc.used_cores.saturating_sub(ppn);
+                alloc.used_mem = alloc.used_mem.saturating_sub(mem);
+            }
+        }
+        if let Some(job) = state.jobs.get_mut(&done.job_seq) {
+            job.placement = placement_copy;
+        }
+        self.inner.metrics.inc("slurm.jobs_completed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeRole, Resources};
+    use crate::sched::EasyBackfill;
+    use crate::singularity::{ImageRegistry, RuntimeKind};
+
+    fn boot(n: usize, cores: u32) -> (Slurmctld, Shutdown) {
+        let sd = Shutdown::new();
+        let (timers, _) = Timers::start(sd.clone());
+        let fs = SharedFs::new();
+        let runtime = Runtime::new(
+            RuntimeKind::Singularity,
+            ImageRegistry::with_defaults(),
+            Metrics::new(),
+        );
+        let nodes: Vec<NodeSpec> = (0..n)
+            .map(|i| {
+                NodeSpec::new(
+                    format!("node{i:02}"),
+                    NodeRole::TorqueCompute,
+                    Resources::cores(cores, 32 << 30),
+                )
+            })
+            .collect();
+        let mut cfg = SlurmConfig::default();
+        cfg.time_scale = 0.001;
+        cfg.sched_period = Duration::from_millis(2);
+        let ctld = Slurmctld::start(
+            cfg,
+            nodes,
+            runtime,
+            fs,
+            Box::new(EasyBackfill),
+            timers,
+            Metrics::new(),
+            sd.clone(),
+        )
+        .unwrap();
+        (ctld, sd)
+    }
+
+    #[test]
+    fn sbatch_lifecycle_with_singularity() {
+        let (ctld, sd) = boot(2, 8);
+        let id = ctld
+            .sbatch(
+                "#!/bin/sh\n#SBATCH --nodes=1\n#SBATCH --time=00:30:00\n#SBATCH -o $HOME/low.out\nsingularity run lolcow_latest.sif\n",
+                "user",
+            )
+            .unwrap();
+        let job = ctld.wait_for(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(job.state, SlurmJobState::Completed);
+        assert!(ctld.fs().read_string("$HOME/low.out").unwrap().contains("Moo"));
+        sd.trigger();
+    }
+
+    #[test]
+    fn slurm_env_exposed() {
+        let (ctld, sd) = boot(1, 8);
+        let id = ctld
+            .sbatch("#SBATCH -J envtest\n#SBATCH -o $HOME/env.out\necho id=$SLURM_JOB_ID name=$SLURM_JOB_NAME\n", "u")
+            .unwrap();
+        ctld.wait_for(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(
+            ctld.fs().read_string("$HOME/env.out").unwrap(),
+            format!("id={id} name=envtest\n")
+        );
+        sd.trigger();
+    }
+
+    #[test]
+    fn states_and_scancel() {
+        let (ctld, sd) = boot(1, 4);
+        let running = ctld.sbatch("#SBATCH --ntasks-per-node=4\nsleep 500\n", "u").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(ctld.scontrol_show(running).unwrap().state, SlurmJobState::Running);
+        let pending = ctld.sbatch("#SBATCH --ntasks-per-node=4\necho x\n", "u").unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(ctld.scontrol_show(pending).unwrap().state, SlurmJobState::Pending);
+        assert_eq!(ctld.squeue().len(), 2);
+        ctld.scancel(pending).unwrap();
+        assert_eq!(ctld.scontrol_show(pending).unwrap().state, SlurmJobState::Cancelled);
+        ctld.scancel(running).unwrap();
+        let j = ctld.wait_for(running, Duration::from_secs(10)).unwrap();
+        assert_eq!(j.state, SlurmJobState::Cancelled);
+        // scancel marks terminal immediately (CG collapsed); the mom's
+        // completion report frees resources shortly after.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ctld.sinfo()[0].1 != 0 {
+            assert!(Instant::now() < deadline, "resources never freed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(ctld.scancel(999).is_err());
+        sd.trigger();
+    }
+
+    #[test]
+    fn failed_and_timeout_states() {
+        let (ctld, sd) = boot(2, 4);
+        let fail = ctld.sbatch("exit 2\n", "u").unwrap();
+        assert_eq!(ctld.wait_for(fail, Duration::from_secs(10)).unwrap().state, SlurmJobState::Failed);
+        // 5s limit (5ms scaled) vs 60s sleep (60ms scaled)
+        let to = ctld.sbatch("#SBATCH -t 0:05\nsleep 60\n", "u").unwrap();
+        assert_eq!(ctld.wait_for(to, Duration::from_secs(10)).unwrap().state, SlurmJobState::Timeout);
+        sd.trigger();
+    }
+
+    #[test]
+    fn partition_limits() {
+        let (ctld, sd) = boot(2, 8);
+        assert!(ctld.sbatch("#SBATCH -p nope\necho x\n", "u").is_err());
+        assert!(ctld.sbatch("#SBATCH -N 3\necho x\n", "u").is_err(), "infeasible");
+        sd.trigger();
+    }
+
+    #[test]
+    fn sacct_keeps_history() {
+        let (ctld, sd) = boot(2, 8);
+        let a = ctld.sbatch("echo a\n", "alice").unwrap();
+        ctld.wait_for(a, Duration::from_secs(10)).unwrap();
+        assert!(ctld.squeue().is_empty());
+        let acct = ctld.sacct();
+        assert_eq!(acct.len(), 1);
+        assert_eq!(acct[0].user, "alice");
+        assert!(!acct[0].placement.is_empty(), "placement kept for sacct");
+        sd.trigger();
+    }
+}

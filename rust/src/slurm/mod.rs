@@ -1,0 +1,10 @@
+//! Slurm workload manager substrate — the baseline WLM-Operator targets
+//! (paper §II). Shares the scheduling cores ([`crate::sched`]) and the node
+//! execution daemon ([`crate::pbs::Mom`], `SLURM_*` flavor) with the Torque
+//! implementation; differs in script dialect, partitions, and job states.
+
+pub mod ctld;
+pub mod script;
+
+pub use ctld::{Partition, SlurmConfig, SlurmJob, SlurmJobState, Slurmctld};
+pub use script::SlurmScript;

@@ -1,0 +1,281 @@
+//! Slurm batch script parser: the `#SBATCH` directive dialect.
+//!
+//! WLM-Operator (which Torque-Operator extends, paper §II) wraps exactly
+//! these scripts. Supported directives:
+//!
+//! ```text
+//! #SBATCH -J name / --job-name=name
+//! #SBATCH -p part / --partition=part
+//! #SBATCH -N 2 / --nodes=2
+//! #SBATCH --ntasks-per-node=8
+//! #SBATCH --mem=4G
+//! #SBATCH -t 30 / --time=1-02:03:04    (min | h:m:s | d-h:m:s)
+//! #SBATCH -o out / --output=out, -e / --error
+//! #SBATCH --nice=-10                   (lower nice = higher priority)
+//! #SBATCH --export=A=1,B=2
+//! #SBATCH -C gpu / --constraint=gpu
+//! ```
+
+use crate::util::{Error, Result};
+use std::time::Duration;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlurmScript {
+    pub name: Option<String>,
+    pub partition: Option<String>,
+    pub nodes: u32,
+    pub tasks_per_node: u32,
+    pub mem: u64,
+    pub time: Duration,
+    /// Priority derived from --nice (negated: lower nice → higher priority).
+    pub priority: i64,
+    pub output: Option<String>,
+    pub error: Option<String>,
+    pub env: Vec<(String, String)>,
+    pub constraints: Vec<String>,
+    pub body: Vec<String>,
+}
+
+impl Default for SlurmScript {
+    fn default() -> Self {
+        SlurmScript {
+            name: None,
+            partition: None,
+            nodes: 1,
+            tasks_per_node: 1,
+            mem: 0,
+            time: Duration::from_secs(3600),
+            priority: 0,
+            output: None,
+            error: None,
+            env: Vec::new(),
+            constraints: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+}
+
+/// Parse Slurm `--time`: `M`, `M:S`, `H:M:S`, `D-H`, `D-H:M`, `D-H:M:S`.
+pub fn parse_slurm_time(s: &str) -> Option<Duration> {
+    let s = s.trim();
+    if let Some((days, rest)) = s.split_once('-') {
+        let d: u64 = days.parse().ok()?;
+        let parts: Vec<u64> = rest.split(':').map(|p| p.parse().ok()).collect::<Option<_>>()?;
+        let secs = match parts.as_slice() {
+            [h] => h * 3600,
+            [h, m] => h * 3600 + m * 60,
+            [h, m, sec] => h * 3600 + m * 60 + sec,
+            _ => return None,
+        };
+        return Some(Duration::from_secs(d * 86_400 + secs));
+    }
+    let parts: Vec<u64> = s.split(':').map(|p| p.parse().ok()).collect::<Option<_>>()?;
+    let secs = match parts.as_slice() {
+        [m] => m * 60, // bare number = minutes in Slurm
+        [m, sec] => m * 60 + sec,
+        [h, m, sec] => h * 3600 + m * 60 + sec,
+        _ => return None,
+    };
+    Some(Duration::from_secs(secs))
+}
+
+/// Parse Slurm `--mem`: `4G`, `512M`, `1024K`, plain MB.
+pub fn parse_slurm_mem(s: &str) -> Option<u64> {
+    let s = s.trim().to_ascii_uppercase();
+    let (num, mult) = if let Some(n) = s.strip_suffix('T') {
+        (n.to_string(), 1u64 << 40)
+    } else if let Some(n) = s.strip_suffix('G') {
+        (n.to_string(), 1u64 << 30)
+    } else if let Some(n) = s.strip_suffix('M') {
+        (n.to_string(), 1u64 << 20)
+    } else if let Some(n) = s.strip_suffix('K') {
+        (n.to_string(), 1u64 << 10)
+    } else {
+        (s, 1u64 << 20) // default unit is MB
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64) as u64)
+}
+
+impl SlurmScript {
+    pub fn parse(text: &str) -> Result<SlurmScript> {
+        let mut s = SlurmScript::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim_end();
+            if let Some(directive) = line.trim_start().strip_prefix("#SBATCH") {
+                s.apply(directive.trim())
+                    .map_err(|e| Error::parse(format!("line {}: {e}", lineno + 1)))?;
+            } else {
+                s.body.push(line.to_string());
+            }
+        }
+        while s.body.first().map(|l| l.trim().is_empty()) == Some(true) {
+            s.body.remove(0);
+        }
+        while s.body.last().map(|l| l.trim().is_empty()) == Some(true) {
+            s.body.pop();
+        }
+        Ok(s)
+    }
+
+    fn apply(&mut self, directive: &str) -> Result<()> {
+        // Normalize `--opt=value` and `-X value` into (opt, value).
+        let (opt, val) = if let Some(rest) = directive.strip_prefix("--") {
+            match rest.split_once('=') {
+                Some((o, v)) => (format!("--{o}"), v.to_string()),
+                None => {
+                    let (o, v) = rest
+                        .split_once(char::is_whitespace)
+                        .unwrap_or((rest, ""));
+                    (format!("--{o}"), v.trim().to_string())
+                }
+            }
+        } else {
+            let (o, v) = directive
+                .split_once(char::is_whitespace)
+                .unwrap_or((directive, ""));
+            (o.to_string(), v.trim().to_string())
+        };
+        let need = |name: &str| -> Result<&str> {
+            if val.is_empty() {
+                Err(Error::parse(format!("`{name}` needs a value")))
+            } else {
+                Ok(val.as_str())
+            }
+        };
+        match opt.as_str() {
+            "-J" | "--job-name" => self.name = Some(need(&opt)?.to_string()),
+            "-p" | "--partition" => self.partition = Some(need(&opt)?.to_string()),
+            "-N" | "--nodes" => {
+                self.nodes = need(&opt)?
+                    .parse()
+                    .map_err(|_| Error::parse(format!("bad node count `{val}`")))?;
+                if self.nodes == 0 {
+                    return Err(Error::parse("nodes must be >= 1"));
+                }
+            }
+            "--ntasks-per-node" => {
+                self.tasks_per_node = need(&opt)?
+                    .parse()
+                    .map_err(|_| Error::parse(format!("bad ntasks-per-node `{val}`")))?;
+                if self.tasks_per_node == 0 {
+                    return Err(Error::parse("ntasks-per-node must be >= 1"));
+                }
+            }
+            "--mem" => {
+                self.mem = parse_slurm_mem(need(&opt)?)
+                    .ok_or_else(|| Error::parse(format!("bad mem `{val}`")))?
+            }
+            "-t" | "--time" => {
+                self.time = parse_slurm_time(need(&opt)?)
+                    .ok_or_else(|| Error::parse(format!("bad time `{val}`")))?
+            }
+            "-o" | "--output" => self.output = Some(need(&opt)?.to_string()),
+            "-e" | "--error" => self.error = Some(need(&opt)?.to_string()),
+            "--nice" => {
+                let nice: i64 = need(&opt)?
+                    .parse()
+                    .map_err(|_| Error::parse(format!("bad nice `{val}`")))?;
+                self.priority = -nice;
+            }
+            "--export" => {
+                for pair in val.split(',') {
+                    if pair.trim().eq_ignore_ascii_case("ALL") || pair.trim().is_empty() {
+                        continue;
+                    }
+                    if let Some((k, v)) = pair.split_once('=') {
+                        self.env.push((k.trim().to_string(), v.trim().to_string()));
+                    }
+                }
+            }
+            "-C" | "--constraint" => {
+                self.constraints.extend(
+                    need(&opt)?.split('&').map(|c| c.trim().to_string()),
+                );
+            }
+            // accepted-and-ignored
+            "-n" | "--ntasks" | "--cpus-per-task" | "-A" | "--account" | "--mail-type"
+            | "--mail-user" | "--requeue" | "--exclusive" => {}
+            other => return Err(Error::parse(format!("unknown directive `{other}`"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wlm_operator_style_script() {
+        let text = "#!/bin/sh\n#SBATCH --nodes=1\n#SBATCH --time=00:30:00\n#SBATCH -o /home/user/low.out\nsingularity run lolcow_latest.sif\n";
+        let s = SlurmScript::parse(text).unwrap();
+        assert_eq!(s.nodes, 1);
+        assert_eq!(s.time, Duration::from_secs(1800));
+        assert_eq!(s.output.as_deref(), Some("/home/user/low.out"));
+        assert_eq!(s.body, vec!["#!/bin/sh", "singularity run lolcow_latest.sif"]);
+    }
+
+    #[test]
+    fn long_and_short_forms() {
+        let text = "#SBATCH -J myjob\n#SBATCH -p gpu\n#SBATCH -N 4\n#SBATCH --ntasks-per-node=8\n#SBATCH --mem=16G\n#SBATCH -t 30\n#SBATCH --nice=-5\n#SBATCH --export=A=1,B=two\n#SBATCH -C gpu&bigmem\necho hi\n";
+        let s = SlurmScript::parse(text).unwrap();
+        assert_eq!(s.name.as_deref(), Some("myjob"));
+        assert_eq!(s.partition.as_deref(), Some("gpu"));
+        assert_eq!(s.nodes, 4);
+        assert_eq!(s.tasks_per_node, 8);
+        assert_eq!(s.mem, 16 << 30);
+        assert_eq!(s.time, Duration::from_secs(1800), "bare number = minutes");
+        assert_eq!(s.priority, 5, "nice -5 -> priority +5");
+        assert_eq!(s.env.len(), 2);
+        assert_eq!(s.constraints, vec!["gpu", "bigmem"]);
+    }
+
+    #[test]
+    fn time_formats() {
+        assert_eq!(parse_slurm_time("90"), Some(Duration::from_secs(5400)));
+        assert_eq!(parse_slurm_time("10:30"), Some(Duration::from_secs(630)));
+        assert_eq!(parse_slurm_time("1:02:03"), Some(Duration::from_secs(3723)));
+        assert_eq!(parse_slurm_time("1-2"), Some(Duration::from_secs(93600)));
+        assert_eq!(parse_slurm_time("1-2:30"), Some(Duration::from_secs(95400)));
+        assert_eq!(
+            parse_slurm_time("2-01:02:03"),
+            Some(Duration::from_secs(2 * 86400 + 3723))
+        );
+        assert_eq!(parse_slurm_time("abc"), None);
+    }
+
+    #[test]
+    fn mem_formats() {
+        assert_eq!(parse_slurm_mem("4G"), Some(4 << 30));
+        assert_eq!(parse_slurm_mem("512M"), Some(512 << 20));
+        assert_eq!(parse_slurm_mem("100"), Some(100 << 20), "default MB");
+        assert_eq!(parse_slurm_mem("2g"), Some(2 << 30), "case-insensitive");
+        assert_eq!(parse_slurm_mem("x"), None);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(SlurmScript::parse("#SBATCH --nodes=0\n").is_err());
+        assert!(SlurmScript::parse("#SBATCH --time=zz\n").is_err());
+        assert!(SlurmScript::parse("#SBATCH --frobnicate=1\n").is_err());
+        assert!(SlurmScript::parse("#SBATCH -J\n").is_err());
+        let err = SlurmScript::parse("echo a\n#SBATCH --mem=bad\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn ignored_options() {
+        let s = SlurmScript::parse("#SBATCH --exclusive\n#SBATCH -n 16\necho x\n").unwrap();
+        assert_eq!(s.body, vec!["echo x"]);
+    }
+
+    #[test]
+    fn export_all_skipped() {
+        let s = SlurmScript::parse("#SBATCH --export=ALL,X=1\n").unwrap();
+        assert_eq!(s.env, vec![("X".to_string(), "1".to_string())]);
+    }
+}

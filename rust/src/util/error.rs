@@ -1,0 +1,153 @@
+//! Crate-wide error type.
+//!
+//! Every subsystem reports failures through [`Error`]; the variants mirror
+//! the boundaries of the system (API server, WLM, RPC, runtime, parsing) so
+//! callers can branch on *where* something failed without string matching.
+
+use std::fmt;
+
+/// Unified error for all hpcorc subsystems.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// Malformed input: YAML/JSON/PBS script/manifest parse failures.
+    Parse(String),
+    /// Object/store errors from the kube API server (not found, conflict...).
+    Api(ApiError),
+    /// Workload-manager rejections (unknown queue, limit exceeded, bad state).
+    Wlm(String),
+    /// red-box / RPC transport failures.
+    Rpc(String),
+    /// Container image / runtime failures.
+    Container(String),
+    /// PJRT / XLA execution failures.
+    Compute(String),
+    /// I/O wrapper (socket, file staging).
+    Io(String),
+    /// Configuration errors (testbed topology, CLI args).
+    Config(String),
+    /// Internal invariant violations — a bug, not a user error.
+    Internal(String),
+}
+
+/// Kubernetes-style API error reasons.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ApiError {
+    NotFound { kind: String, name: String },
+    AlreadyExists { kind: String, name: String },
+    /// Optimistic-concurrency failure: resourceVersion mismatch.
+    Conflict { kind: String, name: String },
+    Invalid(String),
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::NotFound { kind, name } => write!(f, "{kind} \"{name}\" not found"),
+            ApiError::AlreadyExists { kind, name } => {
+                write!(f, "{kind} \"{name}\" already exists")
+            }
+            ApiError::Conflict { kind, name } => write!(
+                f,
+                "operation cannot be fulfilled on {kind} \"{name}\": object was modified"
+            ),
+            ApiError::Invalid(msg) => write!(f, "invalid object: {msg}"),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Api(e) => write!(f, "api error: {e}"),
+            Error::Wlm(m) => write!(f, "wlm error: {m}"),
+            Error::Rpc(m) => write!(f, "rpc error: {m}"),
+            Error::Container(m) => write!(f, "container error: {m}"),
+            Error::Compute(m) => write!(f, "compute error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+impl From<ApiError> for Error {
+    fn from(e: ApiError) -> Self {
+        Error::Api(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand constructors used across the crate.
+impl Error {
+    pub fn parse(m: impl Into<String>) -> Self {
+        Error::Parse(m.into())
+    }
+    pub fn wlm(m: impl Into<String>) -> Self {
+        Error::Wlm(m.into())
+    }
+    pub fn rpc(m: impl Into<String>) -> Self {
+        Error::Rpc(m.into())
+    }
+    pub fn container(m: impl Into<String>) -> Self {
+        Error::Container(m.into())
+    }
+    pub fn compute(m: impl Into<String>) -> Self {
+        Error::Compute(m.into())
+    }
+    pub fn config(m: impl Into<String>) -> Self {
+        Error::Config(m.into())
+    }
+    pub fn internal(m: impl Into<String>) -> Self {
+        Error::Internal(m.into())
+    }
+    pub fn not_found(kind: impl Into<String>, name: impl Into<String>) -> Self {
+        Error::Api(ApiError::NotFound { kind: kind.into(), name: name.into() })
+    }
+    pub fn already_exists(kind: impl Into<String>, name: impl Into<String>) -> Self {
+        Error::Api(ApiError::AlreadyExists { kind: kind.into(), name: name.into() })
+    }
+    pub fn conflict(kind: impl Into<String>, name: impl Into<String>) -> Self {
+        Error::Api(ApiError::Conflict { kind: kind.into(), name: name.into() })
+    }
+
+    /// True if this is a NotFound API error (common branch in controllers).
+    pub fn is_not_found(&self) -> bool {
+        matches!(self, Error::Api(ApiError::NotFound { .. }))
+    }
+    /// True if this is an optimistic-concurrency conflict (controllers retry).
+    pub fn is_conflict(&self) -> bool {
+        matches!(self, Error::Api(ApiError::Conflict { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::not_found("TorqueJob", "cow");
+        assert_eq!(e.to_string(), "api error: TorqueJob \"cow\" not found");
+        assert!(e.is_not_found());
+        assert!(!e.is_conflict());
+    }
+
+    #[test]
+    fn conflict_detection() {
+        let e = Error::conflict("Pod", "p1");
+        assert!(e.is_conflict());
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(matches!(io, Error::Io(_)));
+    }
+}

@@ -1,0 +1,226 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Used by the metrics registry and the bench harness. Buckets are
+//! exponential with 32 sub-buckets per octave, giving ~2-3% relative error
+//! on quantiles over a microsecond..hours range — plenty for scheduling
+//! latencies.
+
+/// A histogram of non-negative u64 samples (typically nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Hist {
+    /// buckets[o][s]: octave o (value ~ 2^o), sub-bucket s of 32.
+    buckets: Vec<[u64; 32]>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist { buckets: vec![[0; 32]; 64], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    fn index(v: u64) -> (usize, usize) {
+        if v < 32 {
+            return (0, v as usize);
+        }
+        let octave = 63 - v.leading_zeros() as usize; // floor(log2 v), >= 5
+        let sub = ((v >> (octave - 5)) & 31) as usize;
+        (octave - 4, sub)
+    }
+
+    /// Representative (upper-edge) value for a bucket.
+    fn value(oct: usize, sub: usize) -> u64 {
+        if oct == 0 {
+            return sub as u64;
+        }
+        let octave = oct + 4;
+        (1u64 << octave) + ((sub as u64) << (octave - 5))
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let (o, s) = Self::index(v);
+        self.buckets[o][s] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        let (o, s) = Self::index(v);
+        self.buckets[o][s] += n;
+        self.count += n;
+        self.sum += v as u128 * n as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0,1]; returns the bucket's representative value.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.count as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0u64;
+        for (o, sub) in self.buckets.iter().enumerate() {
+            for (s, c) in sub.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    return Self::value(o, s).min(self.max).max(self.min);
+                }
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one (for per-thread aggregation).
+    pub fn merge(&mut self, other: &Hist) {
+        for (o, sub) in other.buckets.iter().enumerate() {
+            for (s, c) in sub.iter().enumerate() {
+                self.buckets[o][s] += c;
+            }
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
+    /// Human summary with a nanosecond→unit scale, e.g. `summary(1e6, "ms")`.
+    pub fn summary(&self, scale: f64, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.count,
+            self.mean() / scale,
+            self.p50() as f64 / scale,
+            self.p95() as f64 / scale,
+            self.p99() as f64 / scale,
+            self.max as f64 / scale,
+            u = unit
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn exact_small_values() {
+        let mut h = Hist::new();
+        for v in 0..32 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 31);
+        assert_eq!(h.count(), 32);
+    }
+
+    #[test]
+    fn quantiles_within_relative_error() {
+        let mut h = Hist::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, expect) in [(0.5, 50_000.0), (0.95, 95_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            assert!(
+                (got - expect).abs() / expect < 0.05,
+                "q={q} got={got} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Hist::new();
+        h.record(10);
+        h.record(20);
+        h.record(30);
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        a.record(100);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 100);
+        assert_eq!(a.max(), 1_000_000);
+    }
+
+    #[test]
+    fn record_n_counts() {
+        let mut h = Hist::new();
+        h.record_n(500, 10);
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.mean(), 500.0);
+    }
+
+    #[test]
+    fn index_roundtrip_monotone() {
+        // value(index(v)) stays within one sub-bucket width of v.
+        for v in [0u64, 1, 31, 32, 33, 100, 1023, 1024, 123_456_789, u32::MAX as u64] {
+            let (o, s) = Hist::index(v);
+            let rep = Hist::value(o, s);
+            assert!(rep <= v.max(1) * 2, "v={v} rep={rep}");
+            assert!(rep as f64 >= v as f64 * 0.95 || v < 64, "v={v} rep={rep}");
+        }
+    }
+}

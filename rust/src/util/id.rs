@@ -1,0 +1,73 @@
+//! Monotonic ID generation for jobs, pods, and RPC requests.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide monotonic counter, namespaced by a prefix at format time.
+#[derive(Debug)]
+pub struct IdGen {
+    next: AtomicU64,
+}
+
+impl IdGen {
+    pub const fn new() -> Self {
+        IdGen { next: AtomicU64::new(1) }
+    }
+
+    pub fn next(&self) -> u64 {
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+impl Default for IdGen {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A Torque job id, formatted `<seq>.<server>` as PBS does (e.g. `42.torque-head`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId {
+    pub seq: u64,
+    pub server: String,
+}
+
+impl JobId {
+    pub fn new(seq: u64, server: impl Into<String>) -> Self {
+        JobId { seq, server: server.into() }
+    }
+
+    /// Parse `42.torque-head` (as printed by qsub/qstat).
+    pub fn parse(s: &str) -> Option<JobId> {
+        let (seq, server) = s.split_once('.')?;
+        Some(JobId { seq: seq.parse().ok()?, server: server.to_string() })
+    }
+}
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}", self.seq, self.server)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idgen_monotonic() {
+        let g = IdGen::new();
+        let a = g.next();
+        let b = g.next();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn jobid_roundtrip() {
+        let id = JobId::new(42, "torque-head");
+        assert_eq!(id.to_string(), "42.torque-head");
+        assert_eq!(JobId::parse("42.torque-head"), Some(id));
+        assert_eq!(JobId::parse("garbage"), None);
+        assert_eq!(JobId::parse("x.head"), None);
+    }
+}

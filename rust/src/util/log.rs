@@ -1,0 +1,101 @@
+//! Tiny leveled logger (no `tracing`/`log` crates in the offline registry).
+//!
+//! Components log as `LEVEL ts component: message`. The level is set once at
+//! startup (`HPCORC_LOG=debug|info|warn|error`, default `warn` so tests and
+//! benches stay quiet). Logging goes to stderr; the CLI's user-facing output
+//! goes to stdout and never through here.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Warn
+static INIT: std::sync::Once = std::sync::Once::new();
+
+/// Initialize level from the HPCORC_LOG env var (idempotent).
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("HPCORC_LOG") {
+            set_level(match v.to_ascii_lowercase().as_str() {
+                "debug" => Level::Debug,
+                "info" => Level::Info,
+                "warn" => Level::Warn,
+                "error" => Level::Error,
+                _ => Level::Warn,
+            });
+        }
+    });
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+#[doc(hidden)]
+pub fn write(level: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("{tag} {}.{:03} {component}: {msg}", now.as_secs(), now.subsec_millis());
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Debug, $comp, format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! info {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Info, $comp, format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! warn {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Warn, $comp, format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! error {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Error, $comp, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Warn);
+    }
+}

@@ -1,0 +1,124 @@
+//! Foundation utilities: errors, ids, RNG, histograms, logging, time helpers.
+
+pub mod error;
+pub mod hist;
+pub mod id;
+pub mod log;
+pub mod rng;
+
+pub use error::{ApiError, Error, Result};
+pub use hist::Hist;
+pub use id::{IdGen, JobId};
+pub use rng::Rng;
+
+use std::time::Duration;
+
+/// Format a duration as HH:MM:SS (PBS walltime style).
+pub fn fmt_walltime(d: Duration) -> String {
+    let s = d.as_secs();
+    format!("{:02}:{:02}:{:02}", s / 3600, (s % 3600) / 60, s % 60)
+}
+
+/// Parse a PBS walltime `HH:MM:SS` (or `MM:SS`, or plain seconds).
+pub fn parse_walltime(s: &str) -> Option<Duration> {
+    let parts: Vec<&str> = s.split(':').collect();
+    let nums: Option<Vec<u64>> = parts.iter().map(|p| p.parse().ok()).collect();
+    let nums = nums?;
+    let secs = match nums.as_slice() {
+        [s] => *s,
+        [m, s] => m * 60 + s,
+        [h, m, s] => h * 3600 + m * 60 + s,
+        _ => return None,
+    };
+    Some(Duration::from_secs(secs))
+}
+
+/// Parse a memory size like `4gb`, `512mb`, `100kb`, `1024b`, or plain bytes.
+/// Torque's `-l mem=` accepts these suffixes (case-insensitive).
+pub fn parse_mem(s: &str) -> Option<u64> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(n) = s.strip_suffix("tb") {
+        (n, 1u64 << 40)
+    } else if let Some(n) = s.strip_suffix("gb") {
+        (n, 1u64 << 30)
+    } else if let Some(n) = s.strip_suffix("mb") {
+        (n, 1u64 << 20)
+    } else if let Some(n) = s.strip_suffix("kb") {
+        (n, 1u64 << 10)
+    } else if let Some(n) = s.strip_suffix('b') {
+        (n, 1)
+    } else {
+        (s.as_str(), 1)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64) as u64)
+}
+
+/// Format bytes with a binary suffix (for qstat/kubectl output).
+pub fn fmt_mem(bytes: u64) -> String {
+    const UNITS: [(&str, u64); 4] =
+        [("tb", 1 << 40), ("gb", 1 << 30), ("mb", 1 << 20), ("kb", 1 << 10)];
+    for (suffix, mult) in UNITS {
+        if bytes >= mult && bytes % mult == 0 {
+            return format!("{}{}", bytes / mult, suffix);
+        }
+    }
+    for (suffix, mult) in UNITS {
+        if bytes >= mult {
+            return format!("{:.1}{}", bytes as f64 / mult as f64, suffix);
+        }
+    }
+    format!("{bytes}b")
+}
+
+/// Format an age like kubectl (`2s`, `5m`, `3h`, `2d`).
+pub fn fmt_age(d: Duration) -> String {
+    let s = d.as_secs();
+    if s < 60 {
+        format!("{s}s")
+    } else if s < 3600 {
+        format!("{}m", s / 60)
+    } else if s < 86_400 {
+        format!("{}h", s / 3600)
+    } else {
+        format!("{}d", s / 86_400)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walltime_roundtrip() {
+        assert_eq!(parse_walltime("00:30:00"), Some(Duration::from_secs(1800)));
+        assert_eq!(parse_walltime("01:02:03"), Some(Duration::from_secs(3723)));
+        assert_eq!(parse_walltime("90"), Some(Duration::from_secs(90)));
+        assert_eq!(parse_walltime("5:00"), Some(Duration::from_secs(300)));
+        assert_eq!(parse_walltime("x"), None);
+        assert_eq!(fmt_walltime(Duration::from_secs(3723)), "01:02:03");
+    }
+
+    #[test]
+    fn mem_roundtrip() {
+        assert_eq!(parse_mem("4gb"), Some(4 << 30));
+        assert_eq!(parse_mem("512MB"), Some(512 << 20));
+        assert_eq!(parse_mem("100kb"), Some(100 << 10));
+        assert_eq!(parse_mem("12345"), Some(12345));
+        assert_eq!(parse_mem("1.5gb"), Some((1.5 * (1u64 << 30) as f64) as u64));
+        assert_eq!(parse_mem("-1gb"), None);
+        assert_eq!(fmt_mem(4 << 30), "4gb");
+        assert_eq!(fmt_mem(512 << 20), "512mb");
+    }
+
+    #[test]
+    fn age_format() {
+        assert_eq!(fmt_age(Duration::from_secs(2)), "2s");
+        assert_eq!(fmt_age(Duration::from_secs(300)), "5m");
+        assert_eq!(fmt_age(Duration::from_secs(7200)), "2h");
+        assert_eq!(fmt_age(Duration::from_secs(200_000)), "2d");
+    }
+}

@@ -1,0 +1,247 @@
+//! Deterministic PRNG + distributions.
+//!
+//! The offline registry has no `rand` crate, so workload generation and the
+//! discrete-event simulator use this PCG64-based generator. Determinism
+//! matters: every bench/sim run is reproducible from a seed, which is how
+//! EXPERIMENTS.md numbers are regenerated.
+
+/// PCG-XSL-RR 128/64 generator (O'Neill 2014). 128-bit state, 64-bit output.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Rng {
+    /// Seeded generator; `stream` selects an independent sequence.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Rng { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift with rejection for unbiased sampling.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform float in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Bernoulli trial with probability p.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with given rate (mean = 1/rate). Inter-arrival times of a
+    /// Poisson process — the standard model for job submissions.
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let u = 1.0 - self.f64(); // (0,1] so ln() is finite
+        -u.ln() / rate
+    }
+
+    /// Poisson-distributed count with given mean (Knuth for small, normal
+    /// approximation for large means).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let n = mean + mean.sqrt() * self.normal();
+            if n < 0.0 {
+                0
+            } else {
+                n.round() as u64
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal with given log-space mu/sigma. HPC job runtimes and sizes
+    /// are classically log-normal (Feitelson workload models).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Pick an index according to the given non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random lowercase alphanumeric suffix (pod-name style).
+    pub fn suffix(&mut self, len: usize) -> String {
+        const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789";
+        (0..len)
+            .map(|_| ALPHABET[self.below(ALPHABET.len() as u64) as usize] as char)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Rng::with_stream(42, 1);
+        let mut b = Rng::with_stream(42, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(1);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let sum: f64 = (0..n).map(|_| r.exp(2.0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_close() {
+        let mut r = Rng::new(4);
+        for &m in &[0.5, 5.0, 80.0] {
+            let n = 20_000;
+            let sum: u64 = (0..n).map(|_| r.poisson(m)).sum();
+            let mean = sum as f64 / n as f64;
+            assert!((mean - m).abs() < m.max(1.0) * 0.05, "mean {mean} vs {m}");
+        }
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let mut r = Rng::new(5);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[r.weighted(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0]);
+        assert!((counts[2] as f64 / 30_000.0 - 0.7).abs() < 0.03);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn suffix_shape() {
+        let mut r = Rng::new(8);
+        let s = r.suffix(5);
+        assert_eq!(s.len(), 5);
+        assert!(s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit()));
+    }
+}

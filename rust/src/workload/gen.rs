@@ -1,0 +1,185 @@
+//! Trace generators — Feitelson-style synthetic workloads plus the
+//! CYBELE-pilot mix the paper names as its benchmark plan.
+
+use super::trace::{JobKind, Trace, TraceJob};
+use crate::util::Rng;
+
+/// Deterministic trace generator (seeded).
+pub struct TraceGen {
+    rng: Rng,
+    next_id: u64,
+}
+
+impl TraceGen {
+    pub fn new(seed: u64) -> TraceGen {
+        TraceGen { rng: Rng::new(seed), next_id: 1 }
+    }
+
+    fn id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Poisson arrivals, log-normal runtimes, mixed widths — the classic
+    /// batch-HPC model. `load` ≈ offered utilization against
+    /// `capacity_cores` (1.0 = saturation).
+    pub fn poisson_batch(
+        &mut self,
+        n_jobs: usize,
+        capacity_cores: u32,
+        load: f64,
+        mean_runtime_s: f64,
+    ) -> Trace {
+        // mean cores per job from the width mix below:
+        // 0.55*1 + 0.25*2 + 0.12*4 + 0.08*8 = 2.17
+        let mean_cores = 2.17;
+        let rate = (load * capacity_cores as f64) / (mean_cores * mean_runtime_s);
+        let mut t = 0.0;
+        let jobs = (0..n_jobs)
+            .map(|_| {
+                t += self.rng.exp(rate.max(1e-9));
+                let (nodes, ppn) = self.width_mix();
+                // log-normal runtime with sigma .8, mean ≈ mean_runtime_s
+                let mu = mean_runtime_s.ln() - 0.32;
+                let runtime = self.rng.lognormal(mu, 0.8).clamp(1.0, mean_runtime_s * 20.0);
+                // users over-request walltime by 1–5x (empirically typical)
+                let walltime = runtime * self.rng.uniform(1.1, 5.0);
+                TraceJob::sleep(self.id(), t, nodes, ppn, walltime, runtime)
+            })
+            .collect();
+        Trace::new("poisson-batch", jobs)
+    }
+
+    /// Width mix: mostly narrow, a tail of wide jobs (what makes backfill
+    /// matter). Mean ≈ 2.17 cores.
+    fn width_mix(&mut self) -> (u32, u32) {
+        match self.rng.weighted(&[0.55, 0.25, 0.12, 0.08]) {
+            0 => (1, 1),
+            1 => (1, 2),
+            2 => (2, 2),
+            _ => (4, 2),
+        }
+    }
+
+    /// Bursty arrivals: quiet Poisson background + periodic bursts
+    /// (service-style churn where the K8s greedy scheduler shines).
+    pub fn bursty(&mut self, n_bursts: usize, burst_size: usize, gap_s: f64) -> Trace {
+        let mut jobs = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..n_bursts {
+            t += self.rng.exp(1.0 / gap_s.max(1e-9));
+            for _ in 0..burst_size {
+                let arrival = t + self.rng.uniform(0.0, 1.0);
+                let runtime = self.rng.lognormal(2.2, 0.5).clamp(1.0, 120.0);
+                jobs.push(TraceJob::sleep(
+                    self.id(),
+                    arrival,
+                    1,
+                    1,
+                    runtime * 2.0,
+                    runtime,
+                ));
+            }
+        }
+        Trace::new("bursty", jobs)
+    }
+
+    /// The CYBELE-pilot mix: long multi-node training jobs + streams of
+    /// short single-node inference jobs (precision-agriculture pipelines).
+    pub fn cybele_pilots(&mut self, n_train: usize, n_infer: usize, span_s: f64) -> Trace {
+        let mut jobs = Vec::new();
+        for _ in 0..n_train {
+            let arrival = self.rng.uniform(0.0, span_s * 0.5);
+            let runtime = self.rng.uniform(300.0, 1200.0);
+            let mut j = TraceJob::sleep(
+                self.id(),
+                arrival,
+                self.rng.range(2, 4) as u32,
+                2,
+                runtime * 1.5,
+                runtime,
+            );
+            j.kind = JobKind::Compute { artifact: "cropyield_train".into(), steps: 200 };
+            jobs.push(j);
+        }
+        for _ in 0..n_infer {
+            let arrival = self.rng.uniform(0.0, span_s);
+            let runtime = self.rng.uniform(5.0, 30.0);
+            let mut j =
+                TraceJob::sleep(self.id(), arrival, 1, 1, runtime * 3.0, runtime);
+            j.kind = JobKind::Compute { artifact: "cropyield_infer".into(), steps: 20 };
+            jobs.push(j);
+        }
+        Trace::new("cybele-pilots", jobs)
+    }
+
+    /// Adversarial-for-FIFO trace: alternating wide long and narrow short
+    /// jobs — the textbook case where EASY backfill wins on makespan.
+    pub fn backfill_showcase(&mut self, pairs: usize, cluster_nodes: u32) -> Trace {
+        let mut jobs = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..pairs {
+            jobs.push(TraceJob::sleep(self.id(), t, cluster_nodes, 1, 700.0, 600.0));
+            for _ in 0..4 {
+                t += 0.5;
+                jobs.push(TraceJob::sleep(self.id(), t, 1, 1, 120.0, 100.0));
+            }
+            t += 1.0;
+        }
+        Trace::new("backfill-showcase", jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceGen::new(1).poisson_batch(100, 64, 0.7, 120.0);
+        let b = TraceGen::new(1).poisson_batch(100, 64, 0.7, 120.0);
+        let c = TraceGen::new(2).poisson_batch(100, 64, 0.7, 120.0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn poisson_respects_shape() {
+        let t = TraceGen::new(3).poisson_batch(500, 64, 0.7, 120.0);
+        assert_eq!(t.len(), 500);
+        assert!(t.jobs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(t.jobs.iter().all(|j| j.walltime_s >= j.runtime_s));
+        assert!(t.jobs.iter().all(|j| j.runtime_s >= 1.0));
+        // offered load sanity: core-seconds over span ≈ 0.7 * 64, loosely
+        let span = t.jobs.last().unwrap().arrival_s;
+        let load = t.core_seconds() / (span * 64.0);
+        assert!((0.3..1.4).contains(&load), "offered load {load}");
+    }
+
+    #[test]
+    fn cybele_mix_has_both_kinds() {
+        let t = TraceGen::new(4).cybele_pilots(5, 50, 1000.0);
+        assert_eq!(t.len(), 55);
+        let trains = t
+            .jobs
+            .iter()
+            .filter(|j| matches!(&j.kind, JobKind::Compute { artifact, .. } if artifact.contains("train")))
+            .count();
+        assert_eq!(trains, 5);
+        assert!(t.jobs.iter().all(|j| matches!(j.kind, JobKind::Compute { .. })));
+    }
+
+    #[test]
+    fn backfill_showcase_structure() {
+        let t = TraceGen::new(5).backfill_showcase(3, 8);
+        assert_eq!(t.len(), 15);
+        assert_eq!(t.jobs.iter().filter(|j| j.nodes == 8).count(), 3);
+    }
+
+    #[test]
+    fn bursty_counts() {
+        let t = TraceGen::new(6).bursty(5, 20, 60.0);
+        assert_eq!(t.len(), 100);
+    }
+}

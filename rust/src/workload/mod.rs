@@ -1,0 +1,9 @@
+//! Workload substrate: job traces and generators for the evaluation
+//! (paper §V future work: "The pilots of CYBELE project will be adopted
+//! as the benchmarks" — we synthesise equivalent mixes).
+
+pub mod gen;
+pub mod trace;
+
+pub use gen::TraceGen;
+pub use trace::{JobKind, Trace, TraceJob};

@@ -1,0 +1,219 @@
+//! Job trace format — the common input of the live replayer and the
+//! discrete-event simulator (same workload, both paths).
+
+use crate::encoding::{json, Value};
+use crate::util::{Error, Result};
+
+/// What the job's body does when run live.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobKind {
+    /// Occupies resources for `runtime_s` (scaled) doing nothing.
+    Sleep,
+    /// Runs a compute artifact for `steps` (live path only; the sim uses
+    /// `runtime_s` as its duration).
+    Compute { artifact: String, steps: u32 },
+}
+
+/// One job of a trace. Times are nominal seconds from trace start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceJob {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub nodes: u32,
+    pub ppn: u32,
+    /// Requested walltime (what the scheduler sees).
+    pub walltime_s: f64,
+    /// Actual runtime (what really happens; > walltime ⇒ killed).
+    pub runtime_s: f64,
+    pub priority: i64,
+    pub queue: Option<String>,
+    pub kind: JobKind,
+}
+
+impl TraceJob {
+    pub fn sleep(id: u64, arrival_s: f64, nodes: u32, ppn: u32, walltime_s: f64, runtime_s: f64) -> Self {
+        TraceJob {
+            id,
+            arrival_s,
+            nodes,
+            ppn,
+            walltime_s,
+            runtime_s,
+            priority: 0,
+            queue: None,
+            kind: JobKind::Sleep,
+        }
+    }
+
+    /// Render as a PBS script for the live path.
+    pub fn to_pbs_script(&self, time_scale_hint: f64) -> String {
+        let _ = time_scale_hint;
+        let wall = crate::util::fmt_walltime(std::time::Duration::from_secs_f64(
+            self.walltime_s.max(1.0),
+        ));
+        let mut s = format!(
+            "#!/bin/sh\n#PBS -N trace-{}\n#PBS -l walltime={wall}\n#PBS -l nodes={}:ppn={}\n",
+            self.id, self.nodes, self.ppn
+        );
+        if let Some(q) = &self.queue {
+            s.push_str(&format!("#PBS -q {q}\n"));
+        }
+        if self.priority != 0 {
+            s.push_str(&format!("#PBS -p {}\n", self.priority));
+        }
+        match &self.kind {
+            JobKind::Sleep => s.push_str(&format!("sleep {}\n", self.runtime_s)),
+            JobKind::Compute { artifact, steps } => {
+                s.push_str(&format!("singularity run {artifact}_{steps}.sif\n"))
+            }
+        }
+        s
+    }
+}
+
+/// A full trace.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub name: String,
+    pub jobs: Vec<TraceJob>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, mut jobs: Vec<TraceJob>) -> Trace {
+        jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        Trace { name: name.into(), jobs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Total core-seconds demanded (for utilization bounds).
+    pub fn core_seconds(&self) -> f64 {
+        self.jobs
+            .iter()
+            .map(|j| (j.nodes * j.ppn) as f64 * j.runtime_s.min(j.walltime_s))
+            .sum()
+    }
+
+    pub fn to_json(&self) -> String {
+        let jobs: Vec<Value> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let mut v = Value::map()
+                    .with("id", j.id)
+                    .with("arrival", j.arrival_s)
+                    .with("nodes", j.nodes as u64)
+                    .with("ppn", j.ppn as u64)
+                    .with("walltime", j.walltime_s)
+                    .with("runtime", j.runtime_s)
+                    .with("priority", j.priority);
+                if let Some(q) = &j.queue {
+                    v.insert("queue", q.clone());
+                }
+                match &j.kind {
+                    JobKind::Sleep => v.insert("kind", "sleep"),
+                    JobKind::Compute { artifact, steps } => {
+                        v.insert("kind", "compute");
+                        v.insert("artifact", artifact.clone());
+                        v.insert("steps", *steps as u64);
+                    }
+                }
+                v
+            })
+            .collect();
+        json::to_string_pretty(
+            &Value::map().with("name", self.name.clone()).with("jobs", Value::Seq(jobs)),
+        )
+    }
+
+    pub fn from_json(text: &str) -> Result<Trace> {
+        let v = json::parse(text)?;
+        let jobs = v
+            .req("jobs")?
+            .as_seq()
+            .ok_or_else(|| Error::parse("jobs must be a list"))?
+            .iter()
+            .map(|j| -> Result<TraceJob> {
+                let kind = match j.opt_str("kind").unwrap_or("sleep") {
+                    "compute" => JobKind::Compute {
+                        artifact: j.req_str("artifact")?.to_string(),
+                        steps: j.opt_int("steps").unwrap_or(1) as u32,
+                    },
+                    _ => JobKind::Sleep,
+                };
+                Ok(TraceJob {
+                    id: j.req_int("id")? as u64,
+                    arrival_s: j.req("arrival")?.as_f64().unwrap_or(0.0),
+                    nodes: j.opt_int("nodes").unwrap_or(1) as u32,
+                    ppn: j.opt_int("ppn").unwrap_or(1) as u32,
+                    walltime_s: j.req("walltime")?.as_f64().unwrap_or(60.0),
+                    runtime_s: j.req("runtime")?.as_f64().unwrap_or(60.0),
+                    priority: j.opt_int("priority").unwrap_or(0),
+                    queue: j.opt_str("queue").map(String::from),
+                    kind,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trace::new(v.opt_str("name").unwrap_or("trace"), jobs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let trace = Trace::new(
+            "t",
+            vec![
+                TraceJob::sleep(1, 0.0, 1, 2, 100.0, 80.0),
+                TraceJob {
+                    id: 2,
+                    arrival_s: 5.0,
+                    nodes: 2,
+                    ppn: 4,
+                    walltime_s: 600.0,
+                    runtime_s: 300.0,
+                    priority: 3,
+                    queue: Some("batch".into()),
+                    kind: JobKind::Compute { artifact: "cropyield_train_tiny".into(), steps: 50 },
+                },
+            ],
+        );
+        let back = Trace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn jobs_sorted_by_arrival() {
+        let trace = Trace::new(
+            "t",
+            vec![TraceJob::sleep(1, 9.0, 1, 1, 10.0, 10.0), TraceJob::sleep(2, 1.0, 1, 1, 10.0, 10.0)],
+        );
+        assert_eq!(trace.jobs[0].id, 2);
+    }
+
+    #[test]
+    fn pbs_script_render() {
+        let j = TraceJob::sleep(7, 0.0, 2, 4, 90.0, 60.0);
+        let s = j.to_pbs_script(1.0);
+        assert!(s.contains("#PBS -l nodes=2:ppn=4"));
+        assert!(s.contains("#PBS -l walltime=00:01:30"));
+        assert!(s.contains("sleep 60"));
+        let parsed = crate::pbs::PbsScript::parse(&s).unwrap();
+        assert_eq!(parsed.nodes, 2);
+    }
+
+    #[test]
+    fn core_seconds() {
+        let trace = Trace::new("t", vec![TraceJob::sleep(1, 0.0, 2, 4, 100.0, 50.0)]);
+        assert_eq!(trace.core_seconds(), 8.0 * 50.0);
+    }
+}

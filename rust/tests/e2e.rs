@@ -1,0 +1,163 @@
+//! Integration tests over the public API: the full testbed, the remote
+//! (socket) surface, both operators, and failure paths — everything a
+//! downstream user touches.
+
+use hpcorc::hybrid::{Testbed, TestbedConfig};
+use hpcorc::kube::{RemoteApi, WlmJobView, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB};
+use hpcorc::redbox::RedboxClient;
+use hpcorc::encoding::Value;
+use std::time::Duration;
+
+#[test]
+fn cow_job_via_remote_api_over_socket() {
+    // The CLI path: kubectl apply over the red-box socket, not in-proc.
+    let tb = Testbed::start(TestbedConfig::default()).unwrap();
+    let api = RemoteApi::new(RedboxClient::connect(tb.socket()).unwrap());
+    let objs = hpcorc::kube::yaml::parse_manifest(hpcorc::kube::yaml::COW_JOB_YAML).unwrap();
+    api.apply(&objs[0]).unwrap();
+    let phase = tb.wait_torquejob("cow", Duration::from_secs(30)).unwrap();
+    assert_eq!(phase, "completed");
+    // kubectl get torquejob over the socket shows the Fig. 4 row.
+    let (_, items) = api.list(KIND_TORQUEJOB).unwrap();
+    assert_eq!(items.len(), 1);
+    assert_eq!(items[0].status.opt_str("phase"), Some("completed"));
+    // qstat over the socket agrees.
+    let job_id = items[0].status.opt_str("jobId").unwrap().to_string();
+    let client = RedboxClient::connect(tb.socket()).unwrap();
+    let st = client
+        .call("torque.Workload/JobStatus", Value::map().with("jobId", job_id))
+        .unwrap();
+    assert_eq!(st.opt_str("state"), Some("completed"));
+    tb.stop();
+}
+
+#[test]
+fn torque_and_slurm_operators_same_workload() {
+    // E4: the same lolcow workload through both operators.
+    let mut cfg = TestbedConfig::default();
+    cfg.with_slurm = true;
+    let tb = Testbed::start(cfg).unwrap();
+
+    tb.api
+        .create(WlmJobView::build_torquejob(
+            "via-torque",
+            "#PBS -o $HOME/t.out\nsingularity run lolcow_latest.sif\n",
+            "$HOME/t.out",
+            "$HOME/res-t/",
+        ))
+        .unwrap();
+    let mut sjob = WlmJobView::build_torquejob(
+        "via-slurm",
+        "#SBATCH -o $HOME/s.out\nsingularity run lolcow_latest.sif\n",
+        "$HOME/s.out",
+        "$HOME/res-s/",
+    );
+    sjob.kind = KIND_SLURMJOB.into();
+    tb.api.create(sjob).unwrap();
+
+    assert_eq!(tb.wait_torquejob("via-torque", Duration::from_secs(30)).unwrap(), "completed");
+    assert_eq!(tb.wait_slurmjob("via-slurm", Duration::from_secs(30)).unwrap(), "completed");
+    assert!(tb.fs.read_string("$HOME/res-t/t.out").unwrap().contains("Moo"));
+    assert!(tb.fs.read_string("$HOME/res-s/s.out").unwrap().contains("Moo"));
+    tb.stop();
+}
+
+#[test]
+fn many_concurrent_torquejobs() {
+    let mut cfg = TestbedConfig::default();
+    cfg.torque_nodes = 4;
+    let tb = Testbed::start(cfg).unwrap();
+    let n = 20;
+    for i in 0..n {
+        let name = format!("batch-{i:02}");
+        tb.api
+            .create(WlmJobView::build_torquejob(
+                &name,
+                &format!("#PBS -N {name}\n#PBS -o $HOME/{name}.out\necho job {i} done\nsleep 5\n"),
+                &format!("$HOME/{name}.out"),
+                "$HOME/out/",
+            ))
+            .unwrap();
+    }
+    for i in 0..n {
+        let name = format!("batch-{i:02}");
+        let phase = tb.wait_torquejob(&name, Duration::from_secs(60)).unwrap();
+        assert_eq!(phase, "completed", "{name}");
+        assert_eq!(
+            tb.fs.read_string(&format!("$HOME/out/{name}.out")).unwrap(),
+            format!("job {i} done\n")
+        );
+    }
+    // Every job produced exactly one submit + one collect pod.
+    let pods = tb.api.list(KIND_POD, &[]);
+    assert_eq!(
+        pods.iter().filter(|p| p.meta.name.ends_with("-submit")).count(),
+        n
+    );
+    assert_eq!(
+        pods.iter().filter(|p| p.meta.name.ends_with("-collect")).count(),
+        n
+    );
+    tb.stop();
+}
+
+#[test]
+fn queue_routing_respects_pbs_q_directive() {
+    let mut cfg = TestbedConfig::default();
+    cfg.extra_queues = vec![("express".into(), 100)];
+    let tb = Testbed::start(cfg).unwrap();
+    tb.api
+        .create(WlmJobView::build_torquejob(
+            "fast",
+            "#PBS -q express\n#PBS -o $HOME/f.out\necho express\n",
+            "$HOME/f.out",
+            "$HOME/",
+        ))
+        .unwrap();
+    assert_eq!(tb.wait_torquejob("fast", Duration::from_secs(30)).unwrap(), "completed");
+    // Dummy pod must have landed on the express virtual node.
+    let dummy = tb.api.get(KIND_POD, "fast-submit").unwrap();
+    assert_eq!(dummy.spec.opt_str("nodeName"), Some("vnode-torque-express"));
+    tb.stop();
+}
+
+#[test]
+fn plain_pods_and_torquejobs_coexist() {
+    // Paper's claim: "flexibility to run containerised and
+    // non-containerised jobs" — normal pods on kube workers while
+    // TorqueJobs flow to the HPC side.
+    let tb = Testbed::start(TestbedConfig::default()).unwrap();
+    let pod = hpcorc::kube::PodView::build(
+        "web",
+        "lolcow_latest.sif",
+        hpcorc::cluster::Resources::new(100, 1 << 20, 0),
+        &[],
+    );
+    tb.api.create(pod).unwrap();
+    tb.api
+        .create(WlmJobView::build_torquejob(
+            "hpc",
+            "#PBS -o $HOME/h.out\necho hpc\n",
+            "$HOME/h.out",
+            "$HOME/",
+        ))
+        .unwrap();
+    let pod = tb.wait_pod("web", Duration::from_secs(30)).unwrap();
+    assert_eq!(pod.status.opt_str("phase"), Some("Succeeded"));
+    let node = pod.spec.opt_str("nodeName").unwrap();
+    assert!(!node.starts_with("vnode-"), "plain pod on a real worker, got {node}");
+    assert_eq!(tb.wait_torquejob("hpc", Duration::from_secs(30)).unwrap(), "completed");
+    tb.stop();
+}
+
+#[test]
+fn direct_qsub_bypasses_kubernetes() {
+    // Non-containerised path: qsub straight at pbs_server.
+    let tb = Testbed::start(TestbedConfig::default()).unwrap();
+    let id = tb.pbs.qsub("#PBS -o $HOME/direct.out\necho direct\n", "user").unwrap();
+    let job = tb.pbs.wait_for(id.seq, Duration::from_secs(30)).unwrap();
+    assert_eq!(job.exit_code, Some(0));
+    assert_eq!(tb.fs.read_string("$HOME/direct.out").unwrap(), "direct\n");
+    assert!(tb.api.list(KIND_POD, &[]).is_empty(), "no kube involvement");
+    tb.stop();
+}

@@ -1,0 +1,192 @@
+//! Randomized property tests (proptest substitute — the offline registry
+//! has no proptest, so properties are swept with the crate's own seeded
+//! RNG across many cases; failures print the seed for reproduction).
+
+use hpcorc::encoding::{json, yaml, Value};
+use hpcorc::sched::{EasyBackfill, FifoPolicy, KubeGreedyPolicy, NodeState, PendingJob, SchedPolicy};
+use hpcorc::sim::{simulate, SimParams};
+use hpcorc::util::Rng;
+use hpcorc::workload::TraceGen;
+
+/// Random Value trees for codec roundtrips.
+fn arb_value(rng: &mut Rng, depth: u32) -> Value {
+    match if depth == 0 { rng.below(5) } else { rng.below(7) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.chance(0.5)),
+        2 => Value::Int(rng.next_u64() as i64 >> rng.below(40)),
+        3 => Value::Float((rng.f64() - 0.5) * 1e6),
+        4 => {
+            let n = rng.below(12) as usize;
+            Value::Str((0..n).map(|_| random_char(rng)).collect())
+        }
+        5 => {
+            let n = rng.below(4) as usize;
+            Value::Seq((0..n).map(|_| arb_value(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.below(4) as usize;
+            Value::Map(
+                (0..n)
+                    .map(|i| (format!("k{}{}", i, rng.suffix(3)), arb_value(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+fn random_char(rng: &mut Rng) -> char {
+    match rng.below(10) {
+        0 => '\n',
+        1 => '"',
+        2 => '\\',
+        3 => 'ü',
+        4 => '🐍',
+        5 => '#',
+        6 => ':',
+        _ => (b'a' + rng.below(26) as u8) as char,
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..300 {
+        let mut rng = Rng::new(seed);
+        let v = arb_value(&mut rng, 3);
+        let s = json::to_string(&v);
+        let back = json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{s}"));
+        assert_eq!(back, v, "seed {seed}: {s}");
+    }
+}
+
+#[test]
+fn prop_yaml_emit_parse_roundtrip() {
+    for seed in 0..300 {
+        let mut rng = Rng::new(1000 + seed);
+        // YAML emitter targets maps at the top level (manifests).
+        let v = Value::Map(
+            (0..1 + rng.below(3) as usize)
+                .map(|i| (format!("key{i}"), arb_value(&mut rng, 2)))
+                .collect(),
+        );
+        let y = yaml::to_string(&v);
+        let back = yaml::parse(&y).unwrap_or_else(|e| panic!("seed {seed}: {e}\n---\n{y}"));
+        assert_eq!(back, v, "seed {seed}:\n{y}");
+    }
+}
+
+#[test]
+fn prop_schedulers_never_overcommit_and_respect_feasibility() {
+    for seed in 0..200 {
+        let mut rng = Rng::new(2000 + seed);
+        let n_nodes = 1 + rng.below(8) as usize;
+        let cores = 1 + rng.below(16) as u32;
+        let nodes: Vec<NodeState> = (0..n_nodes)
+            .map(|i| {
+                let mut n = NodeState::whole(i, cores, 1 << 30);
+                n.free_cores = rng.below(cores as u64 + 1) as u32;
+                n
+            })
+            .collect();
+        let pending: Vec<PendingJob> = (0..rng.below(20))
+            .map(|id| {
+                let mut j = PendingJob::simple(
+                    id,
+                    1 + rng.below(4) as u32,
+                    1 + rng.below(8) as u32,
+                    1 + rng.below(1000),
+                );
+                j.priority = rng.below(5) as i64;
+                j.submit_s = rng.f64() * 100.0;
+                j
+            })
+            .collect();
+        for policy in [&FifoPolicy as &dyn SchedPolicy, &EasyBackfill, &KubeGreedyPolicy] {
+            let out = policy.schedule(100.0, &pending, &nodes, &[]);
+            // Each assignment fits within the node's free capacity, summed.
+            let mut used = vec![0u32; n_nodes];
+            for a in &out {
+                let job = pending.iter().find(|j| j.id == a.job).unwrap();
+                assert_eq!(a.placement.len(), job.nodes as usize, "seed {seed}");
+                let mut nodes_seen = std::collections::HashSet::new();
+                for p in &a.placement {
+                    assert!(nodes_seen.insert(p.node), "seed {seed}: duplicate node in one job");
+                    used[p.node] += p.cores;
+                }
+            }
+            for (i, u) in used.iter().enumerate() {
+                assert!(
+                    *u <= nodes[i].free_cores,
+                    "seed {seed} policy {}: node {i} overcommitted {u}>{}",
+                    policy.name(),
+                    nodes[i].free_cores
+                );
+            }
+            // No job assigned twice.
+            let mut ids: Vec<u64> = out.iter().map(|a| a.job).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), out.len(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_sim_invariants_across_policies_and_traces() {
+    for seed in 0..20 {
+        let trace = TraceGen::new(3000 + seed).poisson_batch(
+            100 + (seed as usize * 13) % 150,
+            64,
+            0.5 + (seed as f64 % 5.0) / 10.0,
+            60.0,
+        );
+        let params = SimParams { nodes: 8, cores_per_node: 8, ..SimParams::default() };
+        for policy in [&FifoPolicy as &dyn SchedPolicy, &EasyBackfill, &KubeGreedyPolicy] {
+            let r = simulate(&trace, &params, policy);
+            assert!(r.utilization <= 1.0 + 1e-9, "seed {seed} {}", r.policy);
+            assert!(r.completed <= trace.len());
+            assert!(r.mean_wait_s <= r.max_wait_s + 1e-9);
+            assert!(r.p95_wait_s <= r.max_wait_s + 1e-9);
+            assert!(
+                r.makespan_s + 1e-6
+                    >= trace.jobs.iter().map(|j| j.runtime_s).fold(0.0, f64::max),
+                "seed {seed}: makespan shorter than longest job"
+            );
+            // EASY never loses to FIFO by more than noise on makespan
+            // (EASY only *adds* backfill starts).
+        }
+        let fifo = simulate(&trace, &params, &FifoPolicy);
+        let easy = simulate(&trace, &params, &EasyBackfill);
+        assert!(
+            easy.makespan_s <= fifo.makespan_s * 1.05 + 1.0,
+            "seed {seed}: EASY much worse than FIFO ({} vs {})",
+            easy.makespan_s,
+            fifo.makespan_s
+        );
+    }
+}
+
+#[test]
+fn prop_pbs_script_parse_render_fixpoint() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(4000 + seed);
+        let mut script = hpcorc::pbs::PbsScript::default();
+        if rng.chance(0.7) {
+            script.name = Some(format!("job{}", rng.suffix(4)));
+        }
+        script.nodes = 1 + rng.below(8) as u32;
+        script.ppn = 1 + rng.below(8) as u32;
+        script.priority = rng.below(20) as i64 - 10;
+        script.walltime = std::time::Duration::from_secs(60 + rng.below(100_000));
+        if rng.chance(0.5) {
+            script.mem = (1 + rng.below(64)) << 20;
+        }
+        if rng.chance(0.5) {
+            script.stdout_path = Some(format!("$HOME/{}.out", rng.suffix(3)));
+        }
+        script.body = vec!["echo body".to_string()];
+        let rendered = script.render();
+        let parsed = hpcorc::pbs::PbsScript::parse(&rendered)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{rendered}"));
+        assert_eq!(parsed, script, "seed {seed}:\n{rendered}");
+    }
+}
