@@ -12,7 +12,7 @@
 //!   cargo run --release --example cybele_pilot
 
 use hpcorc::hybrid::{Testbed, TestbedConfig};
-use hpcorc::kube::WlmJobView;
+use hpcorc::kube::{Api, WlmJobView};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -30,6 +30,8 @@ fn main() {
     // so this testbed runs uncompressed: walltimes mean what they say.
     cfg.time_scale = 1.0;
     let tb = Testbed::start(cfg).expect("testbed boot");
+    // Typed handle over the unified ApiClient (default kind: TorqueJob).
+    let jobs: Api<WlmJobView> = Api::new(tb.client());
 
     // Pilot mix: 2 training jobs (300 steps, tiny model) + 6 inference
     // bursts (20 steps each), all as TorqueJobs through the operator.
@@ -41,7 +43,7 @@ fn main() {
             "#!/bin/sh\n#PBS -N {name}\n#PBS -l walltime=00:30:00\n#PBS -l nodes=1:ppn=4\n#PBS -o $HOME/{name}.out\nsingularity run cropyield_train_tiny_300.sif\n"
         );
         let obj = WlmJobView::build_torquejob(&name, &batch, &format!("$HOME/{name}.out"), "$HOME/pilot/");
-        tb.api.create(obj).expect("create");
+        jobs.create(obj).expect("create");
         names.push(name);
     }
     for i in 0..6 {
@@ -50,7 +52,7 @@ fn main() {
             "#!/bin/sh\n#PBS -N {name}\n#PBS -l walltime=00:10:00\n#PBS -l nodes=1:ppn=1\n#PBS -o $HOME/{name}.out\nsingularity run cropyield_infer_tiny_20.sif\n"
         );
         let obj = WlmJobView::build_torquejob(&name, &batch, &format!("$HOME/{name}.out"), "$HOME/pilot/");
-        tb.api.create(obj).expect("create");
+        jobs.create(obj).expect("create");
         names.push(name);
     }
     println!("submitted {} TorqueJobs (2 train x300 steps, 6 infer x20 steps)", names.len());

@@ -11,74 +11,71 @@
 //! Run: cargo run --release --example operator_failover
 
 use hpcorc::hybrid::{Testbed, TestbedConfig};
-use hpcorc::kube::{WlmJobView, KIND_TORQUEJOB};
+use hpcorc::kube::{Api, WlmJobView};
 use std::time::Duration;
 
 fn main() {
     println!("=== operator failure injection ===\n");
     let tb = Testbed::start(TestbedConfig::default()).expect("boot");
+    // Typed handle over the unified ApiClient (default kind: TorqueJob).
+    let jobs: Api<WlmJobView> = Api::new(tb.client());
 
     // 1. walltime timeout (5s nominal walltime, 60s nominal job).
-    tb.api
-        .create(WlmJobView::build_torquejob(
-            "too-long",
-            "#PBS -l walltime=0:05\nsleep 60\n",
-            "$HOME/x",
-            "$HOME/",
-        ))
-        .unwrap();
+    jobs.create(WlmJobView::build_torquejob(
+        "too-long",
+        "#PBS -l walltime=0:05\nsleep 60\n",
+        "$HOME/x",
+        "$HOME/",
+    ))
+    .unwrap();
     let p = tb.wait_torquejob("too-long", Duration::from_secs(30)).unwrap();
     println!("1. walltime exceeded      -> phase `{p}` (expected timeout)");
     assert_eq!(p, "timeout");
 
     // 2. delete mid-run cancels the WLM job.
-    tb.api
-        .create(WlmJobView::build_torquejob(
-            "doomed",
-            "sleep 600\n",
-            "$HOME/x",
-            "$HOME/",
-        ))
-        .unwrap();
-    // wait until it has a WLM job id
+    jobs.create(WlmJobView::build_torquejob(
+        "doomed",
+        "sleep 600\n",
+        "$HOME/x",
+        "$HOME/",
+    ))
+    .unwrap();
+    // wait until it has a WLM job id (the typed view carries it)
     let job_id = loop {
-        let o = tb.api.get(KIND_TORQUEJOB, "doomed").unwrap();
-        if let Some(id) = o.status.opt_str("jobId") {
-            break id.to_string();
+        if let Some(id) = jobs.get("doomed").unwrap().wlm_job_id {
+            break id;
         }
         std::thread::sleep(Duration::from_millis(5));
     };
-    tb.api.delete(KIND_TORQUEJOB, "doomed").unwrap();
+    jobs.delete("doomed").unwrap();
     let seq = hpcorc::util::JobId::parse(&job_id).unwrap().seq;
     let job = tb.pbs.wait_for(seq, Duration::from_secs(30)).unwrap();
     println!("2. kubectl delete mid-run -> torque job {job_id} cancelled={} ✓", job.cancelled);
     assert!(job.cancelled);
 
     // 3. missing image fails cleanly.
-    tb.api
-        .create(WlmJobView::build_torquejob(
-            "ghost",
-            "#PBS -o $HOME/ghost.out\nsingularity run no_such_image.sif\n",
-            "$HOME/ghost.out",
-            "$HOME/",
-        ))
-        .unwrap();
+    jobs.create(WlmJobView::build_torquejob(
+        "ghost",
+        "#PBS -o $HOME/ghost.out\nsingularity run no_such_image.sif\n",
+        "$HOME/ghost.out",
+        "$HOME/",
+    ))
+    .unwrap();
     let p = tb.wait_torquejob("ghost", Duration::from_secs(30)).unwrap();
-    let exit = tb.api.get(KIND_TORQUEJOB, "ghost").unwrap().status.opt_int("exitCode");
+    let exit = jobs.get_raw("ghost").unwrap().status.opt_int("exitCode");
     println!("3. missing image          -> phase `{p}`, exitCode {exit:?} (expected failed/255)");
     assert_eq!(p, "failed");
 
     // 4. results file outside the job's outputs: collect fails, operator
     //    retries with backoff, job still ends terminal (failed reconcile
     //    does not wedge the controller).
-    tb.api
-        .create(WlmJobView::build_torquejob(
-            "no-results",
-            "echo done\n",
-            "$HOME/never-written.out",
-            "$HOME/",
-        ))
-        .unwrap();
+    jobs.create(WlmJobView::build_torquejob(
+        "no-results",
+        "echo done\n",
+        "$HOME/never-written.out",
+        "$HOME/",
+    ))
+    .unwrap();
     match tb.wait_torquejob("no-results", Duration::from_secs(10)) {
         Ok(p) => println!("4. missing results file   -> phase `{p}`"),
         Err(_) => {

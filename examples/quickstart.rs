@@ -7,7 +7,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use hpcorc::hybrid::{Testbed, TestbedConfig};
-use hpcorc::kube::KIND_TORQUEJOB;
+use hpcorc::kube::{Api, ListOptions, NodeView, PodView, WlmJobView};
 use hpcorc::util::fmt_age;
 use std::time::Duration;
 
@@ -18,10 +18,16 @@ fn main() {
     let mut cfg = TestbedConfig::default();
     cfg.operator_deployment = true; // the operator's 4 service containers (§III-B)
     let tb = Testbed::start(cfg).expect("testbed boot");
+    // Everything below goes through typed Api<K> handles over the unified
+    // ApiClient — the same surface the remote CLI uses.
+    let client = tb.client();
+    let nodes: Api<NodeView> = Api::new(client.clone());
+    let pods: Api<PodView> = Api::new(client.clone());
+    let jobs: Api<WlmJobView> = Api::new(client); // default kind: TorqueJob
     println!(
         "testbed up: torque queues {:?}, {} kube node objects (incl. virtual node), red-box at {}\n",
         tb.pbs.queues().names(),
-        tb.api.list("Node", &[]).len(),
+        nodes.list(&ListOptions::all()).map(|n| n.len()).unwrap_or(0),
         tb.socket().display()
     );
 
@@ -31,16 +37,16 @@ fn main() {
     // Fig. 4: show each phase transition as a kubectl table.
     let mut last = String::new();
     loop {
-        let obj = tb.api.get(KIND_TORQUEJOB, "cow").expect("get torquejob");
-        let phase = obj.status.opt_str("phase").unwrap_or("").to_string();
+        let obj = jobs.get_raw("cow").expect("get torquejob");
+        let view = WlmJobView::from_object(&obj).expect("decode torquejob");
+        let phase = view.status.clone();
         if phase != last && !phase.is_empty() {
             println!("\n$ kubectl get torquejob");
             println!("{:<6} {:<5} {:<10}", "NAME", "AGE", "STATUS");
-            let age = fmt_age(Duration::from_secs_f64(
-                (tb.api.now_s() - obj.meta.creation_s).max(0.0),
-            ));
+            let now = jobs.server_time_s().unwrap_or(0.0);
+            let age = fmt_age(Duration::from_secs_f64((now - obj.meta.creation_s).max(0.0)));
             println!("{:<6} {:<5} {:<10}", "cow", age, phase);
-            if let Some(job_id) = obj.status.opt_str("jobId") {
+            if let Some(job_id) = &view.wlm_job_id {
                 println!("  (Torque job id: {job_id} — also visible via qstat on the login node)");
             }
             last = phase.clone();
@@ -56,12 +62,12 @@ fn main() {
     println!("\nresults copy in mount dir: $HOME/low.out -> {}", if tb.fs.exists("$HOME/low.out") { "present" } else { "missing" });
 
     println!("\npods involved (dummy + results + operator services):");
-    for pod in tb.api.list("Pod", &[]) {
+    for pod in pods.list(&ListOptions::all()).expect("list pods") {
         println!(
             "  {:<24} {:<10} node={}",
-            pod.meta.name,
-            pod.status.opt_str("phase").unwrap_or("Pending"),
-            pod.spec.opt_str("nodeName").unwrap_or("<none>")
+            pod.name,
+            pod.phase.as_str(),
+            pod.node_name.as_deref().unwrap_or("<none>")
         );
     }
     tb.stop();

@@ -1,0 +1,99 @@
+//! API-layer overhead: what does each abstraction level cost on the hot
+//! read/write paths? raw `Store` → `ApiServer` (metrics + cascade logic) →
+//! typed `Api<PodView>` (dynamic-tree decode) → `RemoteApi` (red-box
+//! socket). Keeps the cost of the unified `ApiClient` surface visible in
+//! the perf trajectory.
+
+use hpcorc::bench::{header, Bench};
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::kube::{
+    Api, ApiClient, ApiServer, KubeObject, ListOptions, PodView, RemoteApi, Store, KIND_POD,
+};
+use hpcorc::redbox::RedboxServer;
+use hpcorc::rt::Shutdown;
+
+const N: usize = 512;
+
+fn pod(i: usize) -> KubeObject {
+    let mut p = PodView::build(
+        &format!("pod-{i:05}"),
+        "lolcow_latest.sif",
+        Resources::new(100, 1 << 20, 0),
+        &[],
+    );
+    if i % 2 == 0 {
+        p.meta.set_label("parity", "even");
+    }
+    p
+}
+
+fn main() {
+    println!("=== kube API overhead: store vs ApiServer vs Api<K> vs RPC ({N} pods) ===");
+    println!("{}", header());
+    let mid = format!("pod-{:05}", N / 2);
+
+    // Raw store (etcd-analogue floor).
+    let store = Store::new();
+    for i in 0..N {
+        store.create(pod(i)).unwrap();
+    }
+    Bench::new("store.get").warmup(100).iters(2000).run(|| {
+        store.get(KIND_POD, &mid).unwrap();
+    });
+
+    // ApiServer in-process.
+    let api = ApiServer::new(Metrics::new());
+    for i in 0..N {
+        api.create(pod(i)).unwrap();
+    }
+    Bench::new("ApiServer.get").warmup(100).iters(2000).run(|| {
+        api.get(KIND_POD, &mid).unwrap();
+    });
+    Bench::new("ApiServer.update_status").warmup(50).iters(500).run(|| {
+        api.update_status(KIND_POD, &mid, |o| {
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+    });
+    Bench::new("ApiServer.list label-selector").warmup(20).iters(200).run(|| {
+        let items = api.list_opts(
+            KIND_POD,
+            &ListOptions::all().with_label("parity", "even"),
+        );
+        assert_eq!(items.unwrap().items.len(), N / 2);
+    });
+    Bench::new("ApiServer.list field-selector").warmup(20).iters(200).run(|| {
+        let items = api.list_opts(
+            KIND_POD,
+            &ListOptions::all().with_field("metadata.name", &mid),
+        );
+        assert_eq!(items.unwrap().items.len(), 1);
+    });
+
+    // Typed handle (adds the dynamic-tree decode per object).
+    let pods: Api<PodView> = Api::new(api.client());
+    Bench::new("Api<PodView>.get").warmup(100).iters(2000).run(|| {
+        pods.get(&mid).unwrap();
+    });
+    Bench::new("Api<PodView>.list label-selector").warmup(20).iters(200).run(|| {
+        let views = pods.list(&ListOptions::all().with_label("parity", "even")).unwrap();
+        assert_eq!(views.len(), N / 2);
+    });
+
+    // Remote transport (socket hop + JSON codec on top of everything).
+    let sd = Shutdown::new();
+    let path = std::env::temp_dir()
+        .join(format!("hpcorc-bench-kubeapi-{}.sock", std::process::id()));
+    let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+    srv.register("kube.Api", api.rpc_service());
+    let remote = RemoteApi::connect(&path).unwrap();
+    Bench::new("RemoteApi.get (socket)").warmup(50).iters(500).run(|| {
+        ApiClient::get(&remote, KIND_POD, &mid).unwrap();
+    });
+    let remote_pods: Api<PodView> = Api::new(std::sync::Arc::new(remote));
+    Bench::new("Api<PodView>.get (socket)").warmup(50).iters(500).run(|| {
+        remote_pods.get(&mid).unwrap();
+    });
+    srv.stop();
+    sd.trigger();
+}

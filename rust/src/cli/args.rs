@@ -28,8 +28,8 @@ impl Args {
                 } else {
                     bools.push(name.to_string());
                 }
-            } else if a == "-f" || a == "-o" {
-                // kubectl-isms
+            } else if a == "-f" || a == "-o" || a == "-l" {
+                // kubectl-isms (-l = label selector)
                 if i + 1 < argv.len() {
                     flags.insert(a.trim_start_matches('-').to_string(), argv[i + 1].clone());
                     i += 1;
@@ -94,6 +94,13 @@ mod tests {
         assert_eq!(a.flag("socket"), Some("/tmp/x.sock"));
         assert_eq!(a.flag("o"), Some("yaml"));
         assert!(a.positional(3).is_none());
+    }
+
+    #[test]
+    fn label_selector_flag() {
+        let a = args("kubectl get pods -l app=web,tier=db --socket /tmp/x.sock");
+        assert_eq!(a.flag("l"), Some("app=web,tier=db"));
+        assert_eq!(a.positional(2), Some("pods"));
     }
 
     #[test]

@@ -3,7 +3,10 @@
 use super::args::Args;
 use crate::encoding::Value;
 use crate::hybrid::{Testbed, TestbedConfig};
-use crate::kube::{KubeObject, RemoteApi, KIND_TORQUEJOB};
+use crate::kube::{
+    default_scheme, Api, ApiClient, KubeObject, ListOptions, NodeView, RemoteApi,
+    KIND_TORQUEJOB,
+};
 use crate::redbox::RedboxClient;
 use crate::sched::{EasyBackfill, FifoPolicy, KubeGreedyPolicy, SchedPolicy};
 use crate::sim::{simulate, SimParams};
@@ -22,9 +25,10 @@ Testbed:
             boot the hybrid testbed (Fig. 1) and serve until stopped
   demo      run the paper's Fig. 3-5 test case end to end and print it
 
-Kubernetes surface (against a running testbed):
+Kubernetes surface (against a running testbed; KIND accepts kubectl-style
+aliases — pods/po, nodes/no, deploy, torquejobs/tj, slurmjobs/sj):
   kubectl apply -f FILE --socket PATH
-  kubectl get KIND [NAME] [--socket PATH] [-o yaml|json]
+  kubectl get KIND [NAME] [--socket PATH] [-o yaml|json] [-l k=v,...]
   kubectl delete KIND NAME --socket PATH
   kubectl logs POD --socket PATH
 
@@ -75,7 +79,11 @@ pub fn cmd_up(args: &mut Args) -> Result<()> {
     println!("hpcorc testbed up");
     println!("  red-box socket : {}", tb.socket().display());
     println!("  torque         : server `{}`, queues {:?}", tb.pbs.server_name(), tb.pbs.queues().names());
-    println!("  kubernetes     : {} node objects", tb.api.list("Node", &[]).len());
+    let nodes = Api::<NodeView>::new(tb.client());
+    println!(
+        "  kubernetes     : {} node objects",
+        nodes.list(&ListOptions::all()).map(|n| n.len()).unwrap_or(0)
+    );
     if tb.slurm.is_some() {
         println!("  slurm          : cluster `slurm` (WLM-Operator baseline)");
     }
@@ -128,20 +136,20 @@ pub fn cmd_demo(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// The remote transport as the unified client trait — `cmd_kubectl` is
+/// written against `ApiClient` only and would work unchanged in-process.
 fn remote(args: &Args) -> Result<RemoteApi> {
     let sock = args.req_flag("socket")?;
-    Ok(RemoteApi::new(RedboxClient::connect(sock)?))
+    RemoteApi::connect(sock)
 }
 
-fn kind_by_alias(name: &str) -> String {
-    match name.to_ascii_lowercase().as_str() {
-        "pod" | "pods" | "po" => "Pod".into(),
-        "node" | "nodes" | "no" => "Node".into(),
-        "deployment" | "deployments" | "deploy" => "Deployment".into(),
-        "torquejob" | "torquejobs" | "tj" => "TorqueJob".into(),
-        "slurmjob" | "slurmjobs" | "sj" => "SlurmJob".into(),
-        other => other.to_string(),
-    }
+/// Resolve a user-facing kind alias through the scheme; unknown aliases
+/// pass through verbatim so unregistered CRD kinds still work end to end.
+fn resolve_kind(alias: &str) -> String {
+    default_scheme()
+        .canonical_kind(alias)
+        .map(String::from)
+        .unwrap_or_else(|| alias.to_string())
 }
 
 pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
@@ -152,13 +160,13 @@ pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
             let text = std::fs::read_to_string(file)?;
             let api = remote(args)?;
             for obj in crate::kube::yaml::parse_manifest(&text)? {
-                let created = api.apply(&obj)?;
+                let created = api.apply(obj)?;
                 println!("{}/{} created", created.kind.to_lowercase(), created.meta.name);
             }
             Ok(())
         }
         "get" => {
-            let kind = kind_by_alias(args.req_positional(2, "kind")?);
+            let kind = resolve_kind(args.req_positional(2, "kind")?);
             let api = remote(args)?;
             match args.positional(3) {
                 Some(name) => {
@@ -166,14 +174,18 @@ pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
                     print_object(&obj, args.flag("o"))
                 }
                 None => {
-                    let (now, items) = api.list(&kind)?;
-                    print_table(&kind, now, &items);
+                    let mut opts = ListOptions::all();
+                    if let Some(sel) = args.flag("l") {
+                        opts.label_selector = ListOptions::parse_selector(sel)?;
+                    }
+                    let list = api.list(&kind, &opts)?;
+                    print_table(&kind, list.server_s, &list.items);
                     Ok(())
                 }
             }
         }
         "delete" => {
-            let kind = kind_by_alias(args.req_positional(2, "kind")?);
+            let kind = resolve_kind(args.req_positional(2, "kind")?);
             let name = args.req_positional(3, "name")?.to_string();
             let api = remote(args)?;
             api.delete(&kind, &name)?;
@@ -183,7 +195,7 @@ pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
         "logs" => {
             let name = args.req_positional(2, "pod name")?.to_string();
             let api = remote(args)?;
-            let obj = api.get("Pod", &name)?;
+            let obj = api.get(crate::kube::KIND_POD, &name)?;
             print!("{}", obj.status.opt_str("log").unwrap_or(""));
             if let Some(err) = obj.status.opt_str("logErr") {
                 eprint!("{err}");

@@ -2,8 +2,8 @@
 
 use crate::cluster::{Metrics, NodeRole, NodeSpec, Resources, SharedFs};
 use crate::kube::{
-    ApiServer, ControllerRunner, DeploymentController, KubeObject, KubeScheduler, Kubelet,
-    PodPhase, WlmJobView, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+    ApiClient, ApiServer, ControllerRunner, DeploymentController, KubeObject, KubeScheduler,
+    Kubelet, PodPhase, WlmJobView, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
 };
 use crate::operator::{
     self, phase, RedboxBridge, SlurmLoginService, TorqueLoginService, WlmBridge,
@@ -217,7 +217,10 @@ impl Testbed {
         // ---- big-data cluster: API server + scheduler + kubelets ----
         let api = ApiServer::new(metrics.clone());
         redbox.register("kube.Api", api.rpc_service());
-        KubeScheduler::new(api.clone(), metrics.clone())
+        // Every in-process component talks through the transport-agnostic
+        // client handle — the same trait the remote CLI uses.
+        let client: Arc<dyn ApiClient> = api.client();
+        KubeScheduler::new(client.clone(), metrics.clone())
             .start(Duration::from_millis(1), shutdown.clone());
         // Workers + the login node (which is also a kube worker, Fig. 1).
         let mut worker_names: Vec<String> =
@@ -226,7 +229,7 @@ impl Testbed {
         for name in &worker_names {
             let cri = SingularityCri::new(runtime.clone());
             let kubelet = Kubelet::register(
-                api.clone(),
+                client.clone(),
                 name,
                 Resources::cores(config.kube_cores, 64 << 30),
                 &[],
@@ -244,7 +247,7 @@ impl Testbed {
         ));
         operator::register_virtual_nodes(&api, torque_bridge.as_ref(), "torque")?;
         let torque_op = operator::torque_operator(torque_bridge, metrics.clone());
-        Arc::new(ControllerRunner::new(api.clone(), torque_op, metrics.clone()))
+        Arc::new(ControllerRunner::new(client.clone(), torque_op, metrics.clone()))
             .start(shutdown.clone());
         if slurm.is_some() {
             let slurm_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::slurm(
@@ -252,13 +255,13 @@ impl Testbed {
             ));
             operator::register_virtual_nodes(&api, slurm_bridge.as_ref(), "slurm")?;
             let slurm_op = operator::wlm_operator(slurm_bridge, metrics.clone());
-            Arc::new(ControllerRunner::new(api.clone(), slurm_op, metrics.clone()))
+            Arc::new(ControllerRunner::new(client.clone(), slurm_op, metrics.clone()))
                 .start(shutdown.clone());
         }
         // Deployment controller (+ the operator's own service deployment,
         // "four Singularity containers … deployed by Kubernetes" §III-B).
         Arc::new(ControllerRunner::new(
-            api.clone(),
+            client.clone(),
             Arc::new(DeploymentController),
             metrics.clone(),
         ))
@@ -288,6 +291,12 @@ impl Testbed {
 
     pub fn socket(&self) -> &std::path::Path {
         &self.socket
+    }
+
+    /// A transport-agnostic client for this testbed's API server — the
+    /// handle to build typed `Api<K>` views or hand to controllers.
+    pub fn client(&self) -> Arc<dyn ApiClient> {
+        self.api.client()
     }
 
     pub fn time_scale(&self) -> f64 {

@@ -6,6 +6,7 @@
 //! §III-B) without touching the store. Typed views (PodView, NodeView,
 //! TorqueJobView) parse the dynamic tree on demand.
 
+use super::client::ResourceView;
 use crate::cluster::Resources;
 use crate::encoding::{decode_str_map, encode_str_map, json, Value};
 use crate::util::{Error, Result};
@@ -270,6 +271,15 @@ impl PodView {
     }
 }
 
+impl ResourceView for PodView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_POD]
+    }
+    fn from_object(obj: &KubeObject) -> Result<PodView> {
+        PodView::from_object(obj)
+    }
+}
+
 // ------------------------------------------------------------------ Nodes
 
 /// Typed view over a Node object.
@@ -344,6 +354,15 @@ impl NodeView {
     }
 }
 
+impl ResourceView for NodeView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_NODE]
+    }
+    fn from_object(obj: &KubeObject) -> Result<NodeView> {
+        NodeView::from_object(obj)
+    }
+}
+
 // -------------------------------------------------------------- TorqueJob
 
 /// Typed view over the paper's TorqueJob CRD (Fig. 3) and the analogous
@@ -410,6 +429,17 @@ impl WlmJobView {
         let mut o = KubeObject::new(KIND_TORQUEJOB, name, spec);
         o.api_version = WLM_API_VERSION.into();
         o
+    }
+}
+
+impl ResourceView for WlmJobView {
+    /// TorqueJob first: it is the paper's contribution and the default for
+    /// `Api::<WlmJobView>::new`; pick SlurmJob with `Api::of_kind`.
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_TORQUEJOB, KIND_SLURMJOB]
+    }
+    fn from_object(obj: &KubeObject) -> Result<WlmJobView> {
+        WlmJobView::from_object(obj)
     }
 }
 

@@ -1,19 +1,37 @@
 //! API server: the front door of the Kubernetes cluster.
 //!
-//! In-process callers (scheduler, kubelets, controllers, operators) use the
-//! [`ApiServer`] handle directly; remote callers (the `hpcorc kubectl` CLI)
-//! reach the same surface through a red-box RPC service (`kube.Api/*`),
-//! mirroring how the paper's login node hosts both the k8s master and the
-//! Unix-socket bridge.
+//! In-process callers (scheduler, kubelets, controllers, operators) and
+//! remote callers (the `hpcorc kubectl` CLI over the red-box socket) see
+//! the *same* surface: both [`ApiServer`] and [`RemoteApi`] implement
+//! [`ApiClient`], mirroring how the paper's login node hosts both the k8s
+//! master and the Unix-socket bridge. The RPC service (`kube.Api/*`)
+//! covers the full verb set including a poll-based watch, so a controller
+//! written against `Arc<dyn ApiClient>` runs unchanged on either side of
+//! the socket.
 
 use super::api::KubeObject;
+use super::client::{ApiClient, ListOptions, ObjectList};
 use super::store::{Store, WatchEvent};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
 use crate::redbox::{RedboxClient, Service};
+use crate::rt;
 use crate::util::{Error, Result};
-use std::sync::mpsc::Receiver;
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Bounded attempts for retry-on-conflict loops (`update_status`, merge
+/// patch) — shared by both transports so their failure behavior matches.
+pub const MAX_CONFLICT_RETRIES: u32 = 16;
+
+/// How often the remote transport polls for new watch events while the
+/// stream is active; the poll backs off toward [`WATCH_POLL_IDLE_MAX`]
+/// while nothing happens (an abandoned-but-undetectable receiver then
+/// costs ~10 RPCs/s instead of 500).
+const WATCH_POLL_PERIOD: Duration = Duration::from_millis(2);
+const WATCH_POLL_IDLE_MAX: Duration = Duration::from_millis(100);
 
 /// The API server handle (cheap clone; shares the store).
 #[derive(Clone)]
@@ -25,6 +43,11 @@ pub struct ApiServer {
 impl ApiServer {
     pub fn new(metrics: Metrics) -> ApiServer {
         ApiServer { store: Store::new(), metrics }
+    }
+
+    /// This server as a shared transport-agnostic client.
+    pub fn client(&self) -> Arc<dyn ApiClient> {
+        Arc::new(self.clone())
     }
 
     pub fn now_s(&self) -> f64 {
@@ -47,49 +70,119 @@ impl ApiServer {
         self.store.update(obj)
     }
 
-    /// Status-subresource style update with retry-on-conflict: fetches the
-    /// latest object and applies `f` until it commits (bounded attempts).
-    pub fn update_status(
+    /// Bounded retry-on-conflict commit loop shared by `update_status` and
+    /// `patch_merge`: fetch the latest object, apply `mutate`, commit;
+    /// retry on conflict. Exhausting the attempts returns
+    /// `ConflictExhausted`, not a plain conflict, so callers can tell
+    /// pathological contention from a routine race.
+    fn retry_on_conflict(
         &self,
         kind: &str,
         name: &str,
-        f: impl Fn(&mut KubeObject),
+        metric: &'static str,
+        mutate: impl Fn(&mut KubeObject),
     ) -> Result<KubeObject> {
-        for _ in 0..16 {
+        for _ in 0..MAX_CONFLICT_RETRIES {
             let mut obj = self.store.get(kind, name)?;
-            f(&mut obj);
+            mutate(&mut obj);
             match self.store.update(obj) {
                 Ok(o) => {
-                    self.metrics.inc("kube.api.update_status");
+                    self.metrics.inc(metric);
                     return Ok(o);
                 }
                 Err(e) if e.is_conflict() => continue,
                 Err(e) => return Err(e),
             }
         }
-        Err(Error::conflict(kind, name))
+        Err(Error::conflict_exhausted(kind, name, MAX_CONFLICT_RETRIES))
     }
 
+    /// Status-subresource style update with retry-on-conflict (see
+    /// [`ApiServer::retry_on_conflict`] for the loop semantics).
+    pub fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: impl Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        self.retry_on_conflict(kind, name, "kube.api.update_status", f)
+    }
+
+    /// JSON-merge-patch over spec/status/labels/annotations, committed with
+    /// the same bounded retry-on-conflict loop as `update_status`.
+    pub fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        self.retry_on_conflict(kind, name, "kube.api.patch", |obj| {
+            apply_merge_patch(obj, patch)
+        })
+    }
+
+    /// Delete with transitive cascade: the full ownership closure of the
+    /// object (children, grandchildren, ...) is deleted, children before
+    /// parents. A visited set makes ownership cycles terminate instead of
+    /// recursing forever.
     pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
         self.metrics.inc("kube.api.delete");
-        // Cascade: delete objects owned by this one first.
-        let owned: Vec<KubeObject> = self
-            .store
-            .list_all()
-            .into_iter()
-            .filter(|o| {
-                o.meta.owner.as_ref().map(|(k, n)| k == kind && n == name).unwrap_or(false)
-            })
-            .collect();
-        for o in owned {
-            let _ = self.delete(&o.kind, &o.meta.name);
+        // The root must exist before the cascade walks anything: deleting a
+        // nonexistent name must be a NotFound no-op, not a purge of objects
+        // that happen to name it as owner.
+        self.store.get(kind, name)?;
+        let all = self.store.list_all();
+        let root = (kind.to_string(), name.to_string());
+        let mut visited: HashSet<(String, String)> = HashSet::new();
+        visited.insert(root.clone());
+        let mut order: Vec<(String, String)> = Vec::new();
+        let mut frontier = vec![root];
+        while let Some((pk, pn)) = frontier.pop() {
+            for o in &all {
+                let owned =
+                    o.meta.owner.as_ref().map(|(k, n)| *k == pk && *n == pn).unwrap_or(false);
+                if owned {
+                    let key = (o.kind.clone(), o.meta.name.clone());
+                    if visited.insert(key.clone()) {
+                        order.push(key.clone());
+                        frontier.push(key);
+                    }
+                }
+            }
+        }
+        // Discovery order puts ancestors first; delete in reverse so every
+        // child is gone before its owner.
+        for (k, n) in order.iter().rev() {
+            if self.store.delete(k, n).is_ok() {
+                self.metrics.inc("kube.api.cascade_deleted");
+            }
         }
         self.store.delete(kind, name)
     }
 
+    /// List objects of a kind filtered by a label selector (all pairs must
+    /// match). Shorthand for [`ApiServer::list_opts`] kept for in-process
+    /// callers and tests.
     pub fn list(&self, kind: &str, selector: &[(String, String)]) -> Vec<KubeObject> {
         self.metrics.inc("kube.api.list");
         self.store.list(kind, selector)
+    }
+
+    /// Full list API: label + field selectors and a freshness floor.
+    pub fn list_opts(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        self.metrics.inc("kube.api.list");
+        // Version snapshot BEFORE listing: a write racing the list may then
+        // show up both in items and in a subsequent watch replay from this
+        // version — duplicates are fine (consumers are level-triggered),
+        // missed events are not.
+        let resource_version = self.store.current_version();
+        if let Some(min) = opts.min_resource_version {
+            if resource_version < min {
+                return Err(Error::conflict(kind, format!("list@{min}")));
+            }
+        }
+        let items = self
+            .store
+            .list(kind, &opts.label_selector)
+            .into_iter()
+            .filter(|o| opts.matches_fields(o))
+            .collect();
+        Ok(ObjectList { server_s: self.now_s(), resource_version, items })
     }
 
     pub fn current_version(&self) -> u64 {
@@ -99,6 +192,18 @@ impl ApiServer {
     pub fn watch(&self, kind: Option<&str>, from_version: u64) -> Receiver<WatchEvent> {
         self.metrics.inc("kube.api.watch");
         self.store.watch(kind, from_version)
+    }
+
+    /// One-shot watch replay (the RPC transport's poll primitive). The
+    /// third element is the 410-Gone-style reset flag: `from_version` fell
+    /// out of the retained history window and the caller must relist.
+    pub fn events_since(
+        &self,
+        kind: Option<&str>,
+        from_version: u64,
+    ) -> (u64, Vec<WatchEvent>, bool) {
+        self.metrics.inc("kube.api.watch_poll");
+        self.store.events_since(kind, from_version)
     }
 
     /// `kubectl apply`: create, or update (spec-merge) when it exists.
@@ -122,6 +227,105 @@ impl ApiServer {
     }
 }
 
+impl ApiClient for ApiServer {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        ApiServer::create(self, obj)
+    }
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        ApiServer::get(self, kind, name)
+    }
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        ApiServer::update(self, obj)
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        ApiServer::update_status(self, kind, name, f)
+    }
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        ApiServer::patch_merge(self, kind, name, patch)
+    }
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        ApiServer::delete(self, kind, name)
+    }
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        ApiServer::apply(self, obj)
+    }
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        self.list_opts(kind, opts)
+    }
+    fn watch(&self, kind: Option<&str>, from_version: u64) -> Result<Receiver<WatchEvent>> {
+        // 410-Gone parity with the remote transport lives in Store::watch
+        // (checked under the store lock), so inherent and trait callers
+        // get identical semantics.
+        Ok(ApiServer::watch(self, kind, from_version))
+    }
+    fn server_time_s(&self) -> Result<f64> {
+        Ok(self.now_s())
+    }
+}
+
+/// Recursive JSON merge patch (RFC 7386): maps merge key-wise, `null`
+/// removes a key, scalars and sequences replace. A map patch landing on a
+/// non-map target replaces it with a fresh map merged from the patch, so
+/// `null` members are stripped rather than stored literally.
+fn merge_value(dst: &mut Value, patch: &Value) {
+    let Some(entries) = patch.as_map() else {
+        *dst = patch.clone();
+        return;
+    };
+    if dst.as_map().is_none() {
+        *dst = Value::map();
+    }
+    for (k, pv) in entries {
+        if pv.is_null() {
+            dst.remove(k);
+        } else if pv.as_map().is_some() {
+            if dst.get(k).map(|v| v.as_map().is_none()).unwrap_or(true) {
+                dst.insert(k, Value::map());
+            }
+            merge_value(dst.get_mut(k).unwrap(), pv);
+        } else {
+            dst.insert(k, pv.clone());
+        }
+    }
+}
+
+fn merge_str_pairs(pairs: &mut Vec<(String, String)>, patch: &Value) {
+    let Some(entries) = patch.as_map() else { return };
+    for (k, v) in entries {
+        if v.is_null() {
+            pairs.retain(|(pk, _)| pk != k);
+            continue;
+        }
+        let val = v.as_str().map(String::from).unwrap_or_else(|| v.to_string());
+        match pairs.iter_mut().find(|(pk, _)| pk == k) {
+            Some((_, slot)) => *slot = val,
+            None => pairs.push((k.clone(), val)),
+        }
+    }
+}
+
+fn apply_merge_patch(obj: &mut KubeObject, patch: &Value) {
+    if let Some(p) = patch.get("spec") {
+        merge_value(&mut obj.spec, p);
+    }
+    if let Some(p) = patch.get("status") {
+        merge_value(&mut obj.status, p);
+    }
+    if let Some(meta) = patch.get("metadata") {
+        if let Some(labels) = meta.get("labels") {
+            merge_str_pairs(&mut obj.meta.labels, labels);
+        }
+        if let Some(ann) = meta.get("annotations") {
+            merge_str_pairs(&mut obj.meta.annotations, ann);
+        }
+    }
+}
+
 struct ApiService {
     api: ApiServer,
 }
@@ -131,8 +335,17 @@ impl Service for ApiService {
         match method {
             "Create" => Ok(self.api.create(KubeObject::decode(body)?)?.encode()),
             "Apply" => Ok(self.api.apply(KubeObject::decode(body)?)?.encode()),
+            "Update" => Ok(self.api.update(KubeObject::decode(body)?)?.encode()),
             "Get" => {
                 let o = self.api.get(body.req_str("kind")?, body.req_str("name")?)?;
+                Ok(o.encode())
+            }
+            "Patch" => {
+                let o = self.api.patch_merge(
+                    body.req_str("kind")?,
+                    body.req_str("name")?,
+                    body.req("patch")?,
+                )?;
                 Ok(o.encode())
             }
             "Delete" => {
@@ -141,17 +354,44 @@ impl Service for ApiService {
             }
             "List" => {
                 let kind = body.req_str("kind")?;
-                let items = self.api.list(kind, &[]);
+                let opts = ListOptions::from_value(body);
+                let list = self.api.list_opts(kind, &opts)?;
                 Ok(Value::map()
-                    .with("serverSeconds", self.api.now_s())
-                    .with("items", Value::Seq(items.iter().map(|o| o.encode()).collect())))
+                    .with("serverSeconds", list.server_s)
+                    .with("resourceVersion", list.resource_version)
+                    .with(
+                        "items",
+                        Value::Seq(list.items.iter().map(|o| o.encode()).collect()),
+                    ))
             }
+            "Watch" => {
+                let kind = body.opt_str("kind");
+                let from = body.opt_int("fromVersion").unwrap_or(0) as u64;
+                let (rv, events, reset) = self.api.events_since(kind, from);
+                Ok(Value::map()
+                    .with("resourceVersion", rv)
+                    .with("reset", reset)
+                    .with(
+                        "events",
+                        Value::Seq(events.iter().map(WatchEvent::encode).collect()),
+                    ))
+            }
+            "ServerTime" => Ok(Value::map().with("serverSeconds", self.api.now_s())),
             other => Err(Error::rpc(format!("kube.Api has no method `{other}`"))),
         }
     }
 }
 
-/// Client-side mirror of the RPC surface (used by the CLI).
+/// Client-side mirror of the RPC surface: [`ApiClient`] over a red-box
+/// socket. Error *types* survive the hop: the red-box envelope carries a
+/// structured detail ([`crate::util::Error::encode_wire`]) that
+/// `RedboxClient` decodes back into the exact variant, so a remote
+/// caller's `is_not_found()`/`is_conflict()` behave like an in-process
+/// caller's. Watch is poll-based — a background thread replays
+/// `kube.Api/Watch` from its bookmark version and feeds a channel, giving
+/// remote callers the same `Receiver<WatchEvent>` shape as in-process
+/// ones. The poll thread ends when the server goes away or when it first
+/// fails to deliver an event to a dropped receiver.
 pub struct RemoteApi {
     client: RedboxClient,
 }
@@ -161,37 +401,144 @@ impl RemoteApi {
         RemoteApi { client }
     }
 
-    pub fn apply(&self, obj: &KubeObject) -> Result<KubeObject> {
-        KubeObject::decode(&self.client.call("kube.Api/Apply", obj.encode())?)
+    pub fn connect(path: impl AsRef<std::path::Path>) -> Result<RemoteApi> {
+        Ok(RemoteApi::new(RedboxClient::connect(path)?))
     }
 
-    pub fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        KubeObject::decode(
-            &self
-                .client
-                .call("kube.Api/Get", Value::map().with("kind", kind).with("name", name))?,
+    fn obj_call(&self, method: &str, body: Value) -> Result<KubeObject> {
+        KubeObject::decode(&self.client.call(&format!("kube.Api/{method}"), body)?)
+    }
+}
+
+impl ApiClient for RemoteApi {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.obj_call("Create", obj.encode())
+    }
+
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.obj_call("Get", Value::map().with("kind", kind).with("name", name))
+    }
+
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.obj_call("Update", obj.encode())
+    }
+
+    /// Client-side retry loop (closures cannot cross the socket), with the
+    /// same attempt bound and exhaustion error as the in-process server.
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        for _ in 0..MAX_CONFLICT_RETRIES {
+            let mut obj = ApiClient::get(self, kind, name)?;
+            f(&mut obj);
+            match ApiClient::update(self, obj) {
+                Ok(o) => return Ok(o),
+                Err(e) if e.is_conflict() => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::conflict_exhausted(kind, name, MAX_CONFLICT_RETRIES))
+    }
+
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        self.obj_call(
+            "Patch",
+            Value::map().with("kind", kind).with("name", name).with("patch", patch.clone()),
         )
     }
 
-    pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        KubeObject::decode(
-            &self
-                .client
-                .call("kube.Api/Delete", Value::map().with("kind", kind).with("name", name))?,
-        )
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.obj_call("Delete", Value::map().with("kind", kind).with("name", name))
     }
 
-    /// Returns (server time, items) — server time drives AGE columns.
-    pub fn list(&self, kind: &str) -> Result<(f64, Vec<KubeObject>)> {
-        let v = self.client.call("kube.Api/List", Value::map().with("kind", kind))?;
-        let now = v.get("serverSeconds").and_then(Value::as_f64).unwrap_or(0.0);
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.obj_call("Apply", obj.encode())
+    }
+
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        let mut body = opts.to_value();
+        body.insert("kind", kind);
+        let v = self.client.call("kube.Api/List", body)?;
         let items = v
             .get("items")
             .and_then(Value::as_seq)
             .map(|s| s.iter().map(KubeObject::decode).collect::<Result<Vec<_>>>())
             .transpose()?
             .unwrap_or_default();
-        Ok((now, items))
+        Ok(ObjectList {
+            server_s: v.get("serverSeconds").and_then(Value::as_f64).unwrap_or(0.0),
+            resource_version: v.opt_int("resourceVersion").unwrap_or(0) as u64,
+            items,
+        })
+    }
+
+    fn watch(&self, kind: Option<&str>, from_version: u64) -> Result<Receiver<WatchEvent>> {
+        let (tx, rx) = channel();
+        // Dedicated connection so the poll loop never serializes behind
+        // this handle's request/response mutex.
+        let client = RedboxClient::connect(self.client.path())?;
+        let kind = kind.map(String::from);
+        let mut from = from_version;
+        let mut period = WATCH_POLL_PERIOD;
+        rt::spawn_named("kube-remote-watch", move || loop {
+            let mut body = Value::map().with("fromVersion", from);
+            if let Some(k) = &kind {
+                body.insert("kind", k.clone());
+            }
+            let resp = match client.call("kube.Api/Watch", body) {
+                Ok(v) => v,
+                // Server gone: end of stream; the receiver observes the
+                // hangup exactly as it would a dropped local watcher.
+                Err(_) => return,
+            };
+            // 410 Gone: the bookmark fell out of the server's retained
+            // history, so events may be lost. End the stream — consumers
+            // (e.g. ControllerRunner) respond by relisting + rewatching.
+            if resp.opt_bool("reset").unwrap_or(false) {
+                return;
+            }
+            if let Some(rv) = resp.opt_int("resourceVersion") {
+                let rv = rv as u64;
+                // Server version below our bookmark: the server restarted
+                // with a fresh store. Filtering by `> from` would silently
+                // drop everything until it caught up — end the stream so
+                // consumers relist instead.
+                if rv < from {
+                    return;
+                }
+                from = rv;
+            }
+            let events = resp.get("events").and_then(Value::as_seq).unwrap_or(&[]);
+            // Back off while idle; snap back on activity.
+            period = if events.is_empty() {
+                (period * 2).min(WATCH_POLL_IDLE_MAX)
+            } else {
+                WATCH_POLL_PERIOD
+            };
+            for ev_v in events {
+                match WatchEvent::decode(ev_v) {
+                    Ok(ev) => {
+                        if tx.send(ev).is_err() {
+                            return; // receiver dropped
+                        }
+                    }
+                    // Undecodable event (client/server version skew): the
+                    // bookmark already moved past it, so end the stream —
+                    // consumers relist instead of silently losing it.
+                    Err(_) => return,
+                }
+            }
+            std::thread::sleep(period);
+        });
+        Ok(rx)
+    }
+
+    fn server_time_s(&self) -> Result<f64> {
+        let v = self.client.call("kube.Api/ServerTime", Value::map())?;
+        Ok(v.get("serverSeconds").and_then(Value::as_f64).unwrap_or(0.0))
     }
 }
 
@@ -202,6 +549,7 @@ mod tests {
     use crate::kube::api::{KIND_DEPLOYMENT, KIND_POD};
     use crate::redbox::RedboxServer;
     use crate::rt::Shutdown;
+    use std::time::Instant;
 
     fn api() -> ApiServer {
         ApiServer::new(Metrics::new())
@@ -209,6 +557,12 @@ mod tests {
 
     fn pod(name: &str) -> KubeObject {
         KubeObject::new(KIND_POD, name, Value::map().with("v", 1i64))
+    }
+
+    fn owned(kind: &str, name: &str, owner: (&str, &str)) -> KubeObject {
+        let mut o = KubeObject::new(kind, name, Value::map());
+        o.meta.owner = Some((owner.0.to_string(), owner.1.to_string()));
+        o
     }
 
     #[test]
@@ -236,16 +590,70 @@ mod tests {
     }
 
     #[test]
+    fn update_status_exhaustion_is_distinguishable() {
+        let a = api();
+        a.create(pod("p")).unwrap();
+        // A writer that always wins the race: every attempt conflicts.
+        let api2 = a.clone();
+        let err = a
+            .update_status(KIND_POD, "p", |o| {
+                api2.update_status(KIND_POD, "p", |o2| {
+                    o2.status.insert("winner", "other");
+                })
+                .unwrap();
+                o.status.insert("phase", "Running");
+            })
+            .unwrap_err();
+        assert!(err.is_conflict_exhausted(), "got {err}");
+        assert!(!err.is_conflict(), "must not be mistaken for a retryable conflict");
+        assert!(err.to_string().contains("16 consecutive"));
+    }
+
+    #[test]
     fn cascade_delete_by_owner() {
         let a = api();
         a.create(KubeObject::new(KIND_DEPLOYMENT, "web", Value::map())).unwrap();
-        let mut p = pod("web-1");
-        p.meta.owner = Some((KIND_DEPLOYMENT.into(), "web".into()));
-        a.create(p).unwrap();
+        a.create(owned(KIND_POD, "web-1", (KIND_DEPLOYMENT, "web"))).unwrap();
         a.create(pod("standalone")).unwrap();
         a.delete(KIND_DEPLOYMENT, "web").unwrap();
         assert!(a.get(KIND_POD, "web-1").unwrap_err().is_not_found());
         assert!(a.get(KIND_POD, "standalone").is_ok());
+    }
+
+    #[test]
+    fn cascade_delete_follows_owners_transitively() {
+        let a = api();
+        a.create(KubeObject::new(KIND_DEPLOYMENT, "web", Value::map())).unwrap();
+        a.create(owned(KIND_POD, "web-1", (KIND_DEPLOYMENT, "web"))).unwrap();
+        // Grandchild and great-grandchild (a CRD kind, to cross kinds).
+        a.create(owned("Widget", "w1", (KIND_POD, "web-1"))).unwrap();
+        a.create(owned("Widget", "w2", ("Widget", "w1"))).unwrap();
+        // Unrelated object owned by nothing in the chain.
+        a.create(owned("Widget", "other", (KIND_POD, "not-here"))).unwrap();
+        a.delete(KIND_DEPLOYMENT, "web").unwrap();
+        for (kind, name) in [(KIND_POD, "web-1"), ("Widget", "w1"), ("Widget", "w2")] {
+            assert!(a.get(kind, name).unwrap_err().is_not_found(), "{kind}/{name} orphaned");
+        }
+        assert!(a.get("Widget", "other").is_ok());
+        // Deleting a nonexistent root is a NotFound no-op — it must NOT
+        // cascade into objects that name the missing root as owner.
+        assert!(a.delete(KIND_POD, "not-here").unwrap_err().is_not_found());
+        assert!(a.get("Widget", "other").is_ok(), "dangling-owner object survived");
+    }
+
+    #[test]
+    fn cascade_delete_terminates_on_ownership_cycles() {
+        let a = api();
+        a.create(KubeObject::new("Widget", "a", Value::map())).unwrap();
+        a.create(owned("Widget", "b", ("Widget", "a"))).unwrap();
+        // Close the cycle: a is owned by b.
+        a.update_status("Widget", "a", |o| {
+            o.meta.owner = Some(("Widget".to_string(), "b".to_string()));
+        })
+        .unwrap();
+        a.delete("Widget", "a").unwrap();
+        assert!(a.get("Widget", "a").unwrap_err().is_not_found());
+        assert!(a.get("Widget", "b").unwrap_err().is_not_found());
     }
 
     #[test]
@@ -263,24 +671,202 @@ mod tests {
     }
 
     #[test]
-    fn rpc_surface_end_to_end() {
+    fn merge_patch_semantics() {
+        let a = api();
+        let mut p = pod("p");
+        p.spec.insert("keep", "yes");
+        p.spec.insert("drop", "soon");
+        p.spec.insert("nest", Value::map().with("a", 1i64).with("b", 2i64));
+        a.create(p).unwrap();
+        let patch = Value::map()
+            .with(
+                "spec",
+                Value::map()
+                    .with("drop", Value::Null)
+                    .with("nest", Value::map().with("b", 9i64).with("c", 3i64)),
+            )
+            .with("status", Value::map().with("phase", "Running"))
+            .with(
+                "metadata",
+                Value::map().with("labels", Value::map().with("app", "web")),
+            );
+        let o = a.patch_merge(KIND_POD, "p", &patch).unwrap();
+        assert_eq!(o.spec.opt_str("keep"), Some("yes"), "untouched keys survive");
+        assert!(o.spec.get("drop").is_none(), "null removes");
+        assert_eq!(o.spec.path(&["nest", "a"]).and_then(Value::as_int), Some(1));
+        assert_eq!(o.spec.path(&["nest", "b"]).and_then(Value::as_int), Some(9));
+        assert_eq!(o.spec.path(&["nest", "c"]).and_then(Value::as_int), Some(3));
+        assert_eq!(o.status.opt_str("phase"), Some("Running"));
+        assert_eq!(o.meta.label("app"), Some("web"));
+        // Label removal via null.
+        let o = a
+            .patch_merge(
+                KIND_POD,
+                "p",
+                &Value::map().with(
+                    "metadata",
+                    Value::map().with("labels", Value::map().with("app", Value::Null)),
+                ),
+            )
+            .unwrap();
+        assert_eq!(o.meta.label("app"), None);
+        // RFC 7386: a map patch replacing a scalar strips its null members
+        // instead of storing literal nulls.
+        let o = a
+            .patch_merge(
+                KIND_POD,
+                "p",
+                &Value::map().with(
+                    "spec",
+                    Value::map().with(
+                        "keep", // currently the scalar "yes"
+                        Value::map().with("x", Value::Null).with("y", 1i64),
+                    ),
+                ),
+            )
+            .unwrap();
+        assert!(o.spec.path(&["keep", "x"]).is_none(), "null member stripped");
+        assert_eq!(o.spec.path(&["keep", "y"]).and_then(Value::as_int), Some(1));
+    }
+
+    #[test]
+    fn list_opts_field_selector_and_freshness() {
+        let a = api();
+        let mut p1 = pod("p1");
+        p1.spec.insert("nodeName", "w1");
+        a.create(p1).unwrap();
+        let mut p2 = pod("p2");
+        p2.spec.insert("nodeName", "w2");
+        a.create(p2).unwrap();
+        let list = a
+            .list_opts(KIND_POD, &ListOptions::all().with_field("spec.nodeName", "w1"))
+            .unwrap();
+        assert_eq!(list.items.len(), 1);
+        assert_eq!(list.items[0].meta.name, "p1");
+        assert_eq!(list.resource_version, a.current_version());
+        assert!(list.server_s >= 0.0);
+        // Freshness floor: asking for a future version is a conflict.
+        let err = a
+            .list_opts(KIND_POD, &ListOptions::all().not_older_than(a.current_version() + 10))
+            .unwrap_err();
+        assert!(err.is_conflict());
+    }
+
+    fn rpc_pair(tag: &str) -> (Shutdown, RedboxServer, ApiServer, RemoteApi) {
         let sd = Shutdown::new();
-        let path = std::env::temp_dir()
-            .join(format!("hpcorc-kubeapi-{}.sock", std::process::id()));
-        let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "hpcorc-kubeapi-{tag}-{}.sock",
+            std::process::id()
+        ));
+        let srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
         let a = api();
         srv.register("kube.Api", a.rpc_service());
-        let remote = RemoteApi::new(RedboxClient::connect(&path).unwrap());
+        let remote = RemoteApi::connect(&path).unwrap();
+        (sd, srv, a, remote)
+    }
 
-        let created = remote.apply(&pod("rp")).unwrap();
+    #[test]
+    fn rpc_surface_end_to_end() {
+        let (_sd, mut srv, _a, remote) = rpc_pair("e2e");
+
+        let created = remote.apply(pod("rp")).unwrap();
         assert!(created.meta.uid > 0);
-        let got = remote.get(KIND_POD, "rp").unwrap();
+        let got = ApiClient::get(&remote, KIND_POD, "rp").unwrap();
         assert_eq!(got.meta.uid, created.meta.uid);
-        let (now, items) = remote.list(KIND_POD).unwrap();
-        assert!(now >= 0.0);
-        assert_eq!(items.len(), 1);
-        remote.delete(KIND_POD, "rp").unwrap();
-        assert!(remote.get(KIND_POD, "rp").is_err());
+
+        // Full update through the socket.
+        let mut fresh = got.clone();
+        fresh.spec.insert("v", 2i64);
+        let updated = ApiClient::update(&remote, fresh).unwrap();
+        assert_eq!(updated.spec.opt_int("v"), Some(2));
+
+        // update_status (client-side retry loop) and merge patch.
+        let o = remote
+            .update_status(KIND_POD, "rp", &|o| {
+                o.status.insert("phase", "Running");
+            })
+            .unwrap();
+        assert_eq!(o.status.opt_str("phase"), Some("Running"));
+        let o = remote
+            .patch_merge(
+                KIND_POD,
+                "rp",
+                &Value::map().with(
+                    "metadata",
+                    Value::map().with("labels", Value::map().with("app", "web")),
+                ),
+            )
+            .unwrap();
+        assert_eq!(o.meta.label("app"), Some("web"));
+
+        // List with a label selector + server time.
+        remote.create(pod("other")).unwrap();
+        let list = ApiClient::list(
+            &remote,
+            KIND_POD,
+            &ListOptions::all().with_label("app", "web"),
+        )
+        .unwrap();
+        assert_eq!(list.items.len(), 1);
+        assert_eq!(list.items[0].meta.name, "rp");
+        assert!(list.resource_version > 0);
+        assert!(remote.server_time_s().unwrap() >= 0.0);
+
+        ApiClient::delete(&remote, KIND_POD, "rp").unwrap();
+        assert!(ApiClient::get(&remote, KIND_POD, "rp").is_err());
+        srv.stop();
+    }
+
+    #[test]
+    fn rpc_errors_recover_their_type() {
+        let (_sd, mut srv, a, remote) = rpc_pair("retype");
+        let e = ApiClient::get(&remote, KIND_POD, "ghost").unwrap_err();
+        assert!(e.is_not_found(), "got {e}");
+        a.create(pod("p")).unwrap();
+        let e = remote.create(pod("p")).unwrap_err();
+        assert!(
+            matches!(e, Error::Api(crate::util::ApiError::AlreadyExists { .. })),
+            "got {e}"
+        );
+        // Stale update conflicts across the socket, typed.
+        let stored = ApiClient::get(&remote, KIND_POD, "p").unwrap();
+        a.update_status(KIND_POD, "p", |o| o.status.insert("x", 1i64)).unwrap();
+        let e = ApiClient::update(&remote, stored).unwrap_err();
+        assert!(e.is_conflict(), "got {e}");
+        // Unknown RPC method stays an untyped transport error.
+        let e = remote.client.call("kube.Api/Nope", Value::map()).unwrap_err();
+        assert!(matches!(e, Error::Rpc(_)), "got {e}");
+        srv.stop();
+    }
+
+    #[test]
+    fn remote_watch_streams_events() {
+        let (_sd, mut srv, a, remote) = rpc_pair("watch");
+        // Subscribe from version 0 so creation history replays too.
+        let rx = ApiClient::watch(&remote, Some(KIND_POD), 0).unwrap();
+        a.create(pod("w1")).unwrap();
+        a.update_status(KIND_POD, "w1", |o| o.status.insert("phase", "Running")).unwrap();
+        a.create(KubeObject::new("Node", "n1", Value::map())).unwrap(); // filtered out
+        a.delete(KIND_POD, "w1").unwrap();
+
+        let mut events = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while events.len() < 3 {
+            assert!(Instant::now() < deadline, "only saw {events:?}");
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(ev) => events.push((ev.type_str(), ev.object().meta.name.clone())),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(e) => panic!("watch stream died early: {e}"),
+            }
+        }
+        assert_eq!(
+            events,
+            vec![
+                ("ADDED", "w1".to_string()),
+                ("MODIFIED", "w1".to_string()),
+                ("DELETED", "w1".to_string()),
+            ]
+        );
         srv.stop();
     }
 }

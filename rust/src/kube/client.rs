@@ -1,0 +1,384 @@
+//! The unified resource API: one client trait over every transport, plus
+//! typed per-kind handles.
+//!
+//! [`ApiClient`] is the full verb set (create/get/update/update_status/
+//! patch/delete/list/watch) implemented by both the in-process
+//! [`super::ApiServer`] and the socket-backed [`super::RemoteApi`], so
+//! controllers, the operator, and the CLI are written once and run against
+//! either transport. [`Api<K>`] wraps an `Arc<dyn ApiClient>` with a
+//! [`ResourceView`] so callers get `PodView`/`NodeView`/`WlmJobView` back
+//! instead of raw [`KubeObject`] trees — the kube-rs `Api<K>` shape.
+
+use super::api::KubeObject;
+use super::store::WatchEvent;
+use crate::encoding::{decode_str_map, encode_str_map, Value};
+use crate::util::{Error, Result};
+use std::marker::PhantomData;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// List filters, mirroring the k8s list API: label selectors, field
+/// selectors over the encoded object tree (`spec.nodeName`,
+/// `status.phase`, `metadata.name`, ...), and a minimum resourceVersion
+/// (the `resourceVersionMatch=NotOlderThan` contract — the store always
+/// serves the latest state, so the only meaningful check is freshness).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ListOptions {
+    pub label_selector: Vec<(String, String)>,
+    pub field_selector: Vec<(String, String)>,
+    pub min_resource_version: Option<u64>,
+}
+
+impl ListOptions {
+    /// No filtering (list everything of the kind).
+    pub fn all() -> ListOptions {
+        ListOptions::default()
+    }
+
+    pub fn with_label(mut self, key: &str, val: &str) -> ListOptions {
+        self.label_selector.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    pub fn with_field(mut self, path: &str, val: &str) -> ListOptions {
+        self.field_selector.push((path.to_string(), val.to_string()));
+        self
+    }
+
+    pub fn not_older_than(mut self, version: u64) -> ListOptions {
+        self.min_resource_version = Some(version);
+        self
+    }
+
+    /// Parse a kubectl-style selector string: `key=value,key2=value2`.
+    pub fn parse_selector(s: &str) -> Result<Vec<(String, String)>> {
+        s.split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|pair| {
+                pair.split_once('=')
+                    .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                    .ok_or_else(|| {
+                        Error::parse(format!("bad selector `{pair}` (want key=value)"))
+                    })
+            })
+            .collect()
+    }
+
+    /// Does `obj` pass both selectors?
+    pub fn matches(&self, obj: &KubeObject) -> bool {
+        self.label_selector
+            .iter()
+            .all(|(k, v)| obj.meta.label(k) == Some(v.as_str()))
+            && self.matches_fields(obj)
+    }
+
+    /// Field-selector match. Supported roots: `spec.*` and `status.*`
+    /// (walked directly through the dynamic tree — no re-encode of the
+    /// object on this per-list hot path), plus `metadata.name`,
+    /// `metadata.uid`, `metadata.resourceVersion`, and
+    /// `metadata.labels.<key>`. Strings compare verbatim; other scalars
+    /// compare through their compact-JSON rendering (`metadata.uid=3`).
+    pub fn matches_fields(&self, obj: &KubeObject) -> bool {
+        self.field_selector.iter().all(|(path, want)| field_matches(obj, path, want))
+    }
+
+    /// Wire encoding for the RPC transport.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::map();
+        if !self.label_selector.is_empty() {
+            v.insert("labelSelector", encode_str_map(&self.label_selector));
+        }
+        if !self.field_selector.is_empty() {
+            v.insert("fieldSelector", encode_str_map(&self.field_selector));
+        }
+        if let Some(rv) = self.min_resource_version {
+            v.insert("minResourceVersion", rv);
+        }
+        v
+    }
+
+    pub fn from_value(v: &Value) -> ListOptions {
+        ListOptions {
+            label_selector: v.get("labelSelector").map(decode_str_map).unwrap_or_default(),
+            field_selector: v.get("fieldSelector").map(decode_str_map).unwrap_or_default(),
+            min_resource_version: v.opt_int("minResourceVersion").map(|i| i as u64),
+        }
+    }
+}
+
+fn value_matches(v: Option<&Value>, want: &str) -> bool {
+    match v {
+        Some(Value::Str(s)) => s == want,
+        Some(other) => other.to_string() == want,
+        None => false,
+    }
+}
+
+fn field_matches(obj: &KubeObject, path: &str, want: &str) -> bool {
+    let (root, rest) = path.split_once('.').unwrap_or((path, ""));
+    match root {
+        "spec" | "status" => {
+            let tree = if root == "spec" { &obj.spec } else { &obj.status };
+            if rest.is_empty() {
+                return value_matches(Some(tree), want);
+            }
+            let parts: Vec<&str> = rest.split('.').collect();
+            value_matches(tree.path(&parts), want)
+        }
+        "metadata" => match rest {
+            "name" => obj.meta.name == want,
+            "uid" => obj.meta.uid.to_string() == want,
+            "resourceVersion" => obj.meta.resource_version.to_string() == want,
+            _ => rest
+                .strip_prefix("labels.")
+                .map(|k| obj.meta.label(k) == Some(want))
+                .unwrap_or(false),
+        },
+        "kind" => obj.kind == want,
+        "apiVersion" => obj.api_version == want,
+        _ => false,
+    }
+}
+
+/// A list response: items plus the server clock (drives AGE columns) and
+/// the store version the list was served at (the watch bookmark).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectList {
+    pub server_s: f64,
+    pub resource_version: u64,
+    pub items: Vec<KubeObject>,
+}
+
+/// The unified resource-API surface. Object-safe by design: controllers
+/// hold `Arc<dyn ApiClient>` and never know whether they talk to the
+/// in-process store or a red-box socket.
+pub trait ApiClient: Send + Sync {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject>;
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject>;
+    /// Full update with optimistic concurrency (object must carry the
+    /// current resourceVersion).
+    fn update(&self, obj: KubeObject) -> Result<KubeObject>;
+    /// Status-subresource update with bounded retry-on-conflict: fetch the
+    /// latest object, apply `f`, commit; retried until it lands. Returns
+    /// [`crate::util::ApiError::ConflictExhausted`] if contention never
+    /// lets the write through.
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject>;
+    /// JSON-merge-patch over `spec`/`status`/`metadata.labels`/
+    /// `metadata.annotations`: maps merge recursively, `null` deletes a
+    /// key, everything else replaces. Retried on conflict like
+    /// [`ApiClient::update_status`].
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject>;
+    /// Delete, cascading transitively through owner references.
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject>;
+    /// `kubectl apply`: create, or — when the object exists — replace its
+    /// spec, labels, and annotations wholesale while preserving status and
+    /// identity (uid, creation time). For a partial update use
+    /// [`ApiClient::patch_merge`].
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject>;
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList>;
+    /// Watch events for `kind` (None = all kinds) from `from_version`
+    /// (exclusive). Both transports replay retained history first, then
+    /// stream live events. A bookmark that has fallen out of the retained
+    /// history window gets a stream that ends immediately — the 410-Gone
+    /// signal of the k8s watch API — so consumers must relist + rewatch on
+    /// stream end (see `ControllerRunner` for the canonical loop).
+    fn watch(&self, kind: Option<&str>, from_version: u64) -> Result<Receiver<WatchEvent>>;
+    /// Server-side seconds since cluster epoch (AGE columns).
+    fn server_time_s(&self) -> Result<f64>;
+}
+
+/// A typed view over one (or a family of) object kind(s). Implementors
+/// decode the dynamic tree into a struct; `Api<K>` uses this to give
+/// callers typed results.
+pub trait ResourceView: Sized {
+    /// Kinds this view decodes. The first entry is the default kind for
+    /// [`Api::new`]; families (`WlmJobView` covers TorqueJob and SlurmJob)
+    /// list every member and pick one with [`Api::of_kind`].
+    fn kinds() -> &'static [&'static str];
+    fn from_object(obj: &KubeObject) -> Result<Self>;
+}
+
+/// A typed handle for one kind over any [`ApiClient`] — `Api<PodView>`
+/// against the in-process server and against a red-box socket behave
+/// identically.
+pub struct Api<K: ResourceView> {
+    client: Arc<dyn ApiClient>,
+    kind: &'static str,
+    _view: PhantomData<fn() -> K>,
+}
+
+impl<K: ResourceView> Clone for Api<K> {
+    fn clone(&self) -> Self {
+        Api { client: self.client.clone(), kind: self.kind, _view: PhantomData }
+    }
+}
+
+impl<K: ResourceView> Api<K> {
+    /// Handle for the view's default kind.
+    pub fn new(client: Arc<dyn ApiClient>) -> Api<K> {
+        Api { client, kind: K::kinds()[0], _view: PhantomData }
+    }
+
+    /// Handle for a specific member of a view family (e.g.
+    /// `Api::<WlmJobView>::of_kind(client, KIND_SLURMJOB)`).
+    pub fn of_kind(client: Arc<dyn ApiClient>, kind: &str) -> Result<Api<K>> {
+        let k = K::kinds().iter().copied().find(|k| *k == kind).ok_or_else(|| {
+            Error::config(format!(
+                "view does not cover kind `{kind}` (covers {:?})",
+                K::kinds()
+            ))
+        })?;
+        Ok(Api { client, kind: k, _view: PhantomData })
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    pub fn client(&self) -> &Arc<dyn ApiClient> {
+        &self.client
+    }
+
+    /// Create a pre-built object of this kind; returns the typed view of
+    /// the stored object.
+    pub fn create(&self, obj: KubeObject) -> Result<K> {
+        if obj.kind != self.kind {
+            return Err(Error::Api(crate::util::ApiError::Invalid(format!(
+                "Api<{}> cannot create a `{}`",
+                self.kind, obj.kind
+            ))));
+        }
+        K::from_object(&self.client.create(obj)?)
+    }
+
+    pub fn get(&self, name: &str) -> Result<K> {
+        K::from_object(&self.client.get(self.kind, name)?)
+    }
+
+    /// The raw dynamic object (for fields the view does not carry).
+    pub fn get_raw(&self, name: &str) -> Result<KubeObject> {
+        self.client.get(self.kind, name)
+    }
+
+    /// List as typed views. Objects that fail to decode are skipped — the
+    /// store accepts arbitrary shapes (hand-applied manifests), and one
+    /// malformed object must not poison every typed list of the kind.
+    /// Transport errors still propagate.
+    pub fn list(&self, opts: &ListOptions) -> Result<Vec<K>> {
+        Ok(self
+            .list_raw(opts)?
+            .items
+            .iter()
+            .filter_map(|o| K::from_object(o).ok())
+            .collect())
+    }
+
+    pub fn list_raw(&self, opts: &ListOptions) -> Result<ObjectList> {
+        self.client.list(self.kind, opts)
+    }
+
+    pub fn update_status(&self, name: &str, f: &dyn Fn(&mut KubeObject)) -> Result<K> {
+        K::from_object(&self.client.update_status(self.kind, name, f)?)
+    }
+
+    pub fn patch_merge(&self, name: &str, patch: &Value) -> Result<K> {
+        K::from_object(&self.client.patch_merge(self.kind, name, patch)?)
+    }
+
+    pub fn delete(&self, name: &str) -> Result<()> {
+        self.client.delete(self.kind, name).map(|_| ())
+    }
+
+    pub fn watch(&self, from_version: u64) -> Result<Receiver<WatchEvent>> {
+        self.client.watch(Some(self.kind), from_version)
+    }
+
+    pub fn server_time_s(&self) -> Result<f64> {
+        self.client.server_time_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::api::{PodView, KIND_POD};
+
+    #[test]
+    fn selector_parsing() {
+        assert_eq!(
+            ListOptions::parse_selector("app=web, tier=db").unwrap(),
+            vec![
+                ("app".to_string(), "web".to_string()),
+                ("tier".to_string(), "db".to_string())
+            ]
+        );
+        assert_eq!(ListOptions::parse_selector("").unwrap(), vec![]);
+        assert!(ListOptions::parse_selector("nonsense").is_err());
+    }
+
+    #[test]
+    fn field_selector_matches_encoded_paths() {
+        let mut pod = PodView::build("p", "img.sif", crate::cluster::Resources::ZERO, &[]);
+        pod.spec.insert("nodeName", "w1");
+        pod.status.insert("phase", "Running");
+        let opts = ListOptions::all()
+            .with_field("spec.nodeName", "w1")
+            .with_field("status.phase", "Running")
+            .with_field("metadata.name", "p");
+        assert!(opts.matches(&pod));
+        assert!(!ListOptions::all().with_field("spec.nodeName", "w2").matches(&pod));
+        assert!(!ListOptions::all().with_field("spec.missing", "x").matches(&pod));
+        // Non-string scalars compare via JSON rendering.
+        assert!(ListOptions::all().with_field("metadata.uid", "0").matches(&pod));
+        // metadata.labels.<key> and kind are addressable too.
+        let mut labelled = pod.clone();
+        labelled.meta.set_label("app", "web");
+        assert!(ListOptions::all()
+            .with_field("metadata.labels.app", "web")
+            .matches(&labelled));
+        assert!(ListOptions::all().with_field("kind", "Pod").matches(&pod));
+        assert!(!ListOptions::all().with_field("bogusroot.x", "1").matches(&pod));
+    }
+
+    #[test]
+    fn label_selector_matches() {
+        let mut pod = PodView::build("p", "img.sif", crate::cluster::Resources::ZERO, &[]);
+        pod.meta.set_label("app", "web");
+        assert!(ListOptions::all().with_label("app", "web").matches(&pod));
+        assert!(!ListOptions::all().with_label("app", "db").matches(&pod));
+    }
+
+    #[test]
+    fn options_wire_roundtrip() {
+        let opts = ListOptions::all()
+            .with_label("app", "web")
+            .with_field("status.phase", "Running")
+            .not_older_than(7);
+        assert_eq!(ListOptions::from_value(&opts.to_value()), opts);
+        assert_eq!(ListOptions::from_value(&Value::map()), ListOptions::all());
+    }
+
+    #[test]
+    fn of_kind_validates_family() {
+        use crate::cluster::Metrics;
+        use crate::kube::api::WlmJobView;
+        use crate::kube::ApiServer;
+        let client: Arc<dyn ApiClient> = Arc::new(ApiServer::new(Metrics::new()));
+        assert!(Api::<WlmJobView>::of_kind(client.clone(), "SlurmJob").is_ok());
+        assert!(Api::<WlmJobView>::of_kind(client.clone(), "Pod").is_err());
+        let pods = Api::<PodView>::new(client);
+        assert_eq!(pods.kind(), KIND_POD);
+        // Creating the wrong kind through a typed handle is rejected.
+        let node = crate::kube::api::NodeView::build(
+            "n",
+            crate::cluster::Resources::cores(1, 1 << 30),
+            &[],
+        );
+        assert!(pods.create(node).is_err());
+    }
+}

@@ -1,13 +1,17 @@
 //! Controller runtime: watch → workqueue → reconcile, with rate-limited
 //! retries. The machinery under the Deployment controller and both
 //! operators (Torque-Operator, WLM-Operator).
+//!
+//! Controllers are written against the transport-agnostic [`ApiClient`]
+//! trait, so the same reconcile loop runs in-process next to the store or
+//! across the red-box socket against a remote API server.
 
-use super::apiserver::ApiServer;
+use super::client::{ApiClient, ListOptions};
 use super::store::WatchEvent;
 use crate::cluster::Metrics;
 use crate::rt::{self, Shutdown};
 use crate::util::Result;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -26,7 +30,7 @@ pub trait Controller: Send + Sync + 'static {
     fn kind(&self) -> &str;
     /// Reconcile the named object. The object may no longer exist — that is
     /// a valid state (handle deletion).
-    fn reconcile(&self, api: &ApiServer, name: &str) -> Result<Reconcile>;
+    fn reconcile(&self, api: &dyn ApiClient, name: &str) -> Result<Reconcile>;
 }
 
 #[derive(Default)]
@@ -39,16 +43,20 @@ struct Queue {
     failures: HashMap<String, u32>,
 }
 
-/// Runs one controller against the API server.
+/// Runs one controller against any [`ApiClient`] transport.
 pub struct ControllerRunner {
-    api: ApiServer,
+    api: Arc<dyn ApiClient>,
     controller: Arc<dyn Controller>,
     queue: Arc<(Mutex<Queue>, Condvar)>,
     metrics: Metrics,
 }
 
 impl ControllerRunner {
-    pub fn new(api: ApiServer, controller: Arc<dyn Controller>, metrics: Metrics) -> Self {
+    pub fn new(
+        api: Arc<dyn ApiClient>,
+        controller: Arc<dyn Controller>,
+        metrics: Metrics,
+    ) -> Self {
         ControllerRunner {
             api,
             controller,
@@ -58,32 +66,83 @@ impl ControllerRunner {
     }
 
     /// Start the watch thread + worker thread.
+    ///
+    /// The watch thread runs the canonical list+watch loop: seed the queue
+    /// from a list, then stream events from the list's version. On any
+    /// transport failure or stream loss (remote server restart, watch
+    /// bookmark fallen out of the retained history window) it *relists and
+    /// rewatches* — reconciles are level-triggered and the queue dedupes,
+    /// so the relist is always safe. Deletions missed while the stream was
+    /// down are recovered by diffing the relist against the names
+    /// previously known to exist.
     pub fn start(self: Arc<Self>, shutdown: Shutdown) {
         let kind = self.controller.kind().to_string();
-        // Seed with existing objects (list+watch).
-        let version = self.api.current_version();
-        for obj in self.api.list(&kind, &[]) {
-            self.enqueue(obj.meta.name);
-        }
-        let rx = self.api.watch(Some(&kind), version);
         let this = self.clone();
         let sd = shutdown.clone();
-        rt::spawn_named(&format!("ctrl-{kind}-watch"), move || loop {
-            match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(ev) => {
-                    let name = match &ev {
-                        WatchEvent::Added(o) | WatchEvent::Modified(o) | WatchEvent::Deleted(o) => {
-                            o.meta.name.clone()
+        rt::spawn_named(&format!("ctrl-{kind}-watch"), move || {
+            // Names believed to exist, maintained across relists so that a
+            // deletion missed while the stream was down is still enqueued:
+            // a relist can't name deleted objects, but (known − listed)
+            // can — reconcile()'s NotFound branch does the cleanup.
+            let mut known: HashSet<String> = HashSet::new();
+            while !sd.is_triggered() {
+                let version = match this.api.list(&kind, &ListOptions::all()) {
+                    Ok(list) => {
+                        let v = list.resource_version;
+                        let fresh: HashSet<String> =
+                            list.items.into_iter().map(|o| o.meta.name).collect();
+                        for gone in known.difference(&fresh) {
+                            this.enqueue(gone.clone());
                         }
-                    };
-                    this.enqueue(name);
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    if sd.is_triggered() {
-                        return;
+                        for name in &fresh {
+                            this.enqueue(name.clone());
+                        }
+                        known = fresh;
+                        v
+                    }
+                    Err(e) => {
+                        crate::warn!("controller", "{kind} seed list failed: {e}");
+                        if sd.wait_timeout(Duration::from_millis(100)) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
+                let rx = match this.api.watch(Some(&kind), version) {
+                    Ok(rx) => rx,
+                    Err(e) => {
+                        crate::warn!("controller", "{kind} watch failed: {e}");
+                        if sd.wait_timeout(Duration::from_millis(100)) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
+                loop {
+                    match rx.recv_timeout(Duration::from_millis(20)) {
+                        Ok(ev) => {
+                            let name = match &ev {
+                                WatchEvent::Added(o)
+                                | WatchEvent::Modified(o)
+                                | WatchEvent::Deleted(o) => o.meta.name.clone(),
+                            };
+                            if matches!(ev, WatchEvent::Deleted(_)) {
+                                known.remove(&name);
+                            } else {
+                                known.insert(name.clone());
+                            }
+                            this.enqueue(name);
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            if sd.is_triggered() {
+                                return;
+                            }
+                        }
+                        // Stream ended (sender dropped / remote reset):
+                        // break out to relist + rewatch.
+                        Err(_) => break,
                     }
                 }
-                Err(_) => return,
             }
         });
         let this = self.clone();
@@ -120,7 +179,7 @@ impl ControllerRunner {
         };
         let Some(name) = name else { return false };
         self.metrics.inc("controller.reconciles");
-        match self.controller.reconcile(&self.api, &name) {
+        match self.controller.reconcile(self.api.as_ref(), &name) {
             Ok(Reconcile::Ok) => {
                 self.queue.0.lock().unwrap().failures.remove(&name);
             }
@@ -187,6 +246,7 @@ mod tests {
     use super::*;
     use crate::encoding::Value;
     use crate::kube::api::KubeObject;
+    use crate::kube::apiserver::ApiServer;
     use crate::util::Error;
     use std::sync::atomic::{AtomicU32, Ordering};
 
@@ -202,7 +262,7 @@ mod tests {
             &self.kind
         }
 
-        fn reconcile(&self, _api: &ApiServer, _name: &str) -> Result<Reconcile> {
+        fn reconcile(&self, _api: &dyn ApiClient, _name: &str) -> Result<Reconcile> {
             let n = self.count.fetch_add(1, Ordering::SeqCst) + 1;
             if self.fail_first.load(Ordering::SeqCst) >= n {
                 return Err(Error::internal("transient"));
@@ -216,7 +276,7 @@ mod tests {
 
     fn runner(ctrl: Arc<CountingController>) -> (ApiServer, Arc<ControllerRunner>) {
         let api = ApiServer::new(Metrics::new());
-        let r = Arc::new(ControllerRunner::new(api.clone(), ctrl, Metrics::new()));
+        let r = Arc::new(ControllerRunner::new(api.client(), ctrl, Metrics::new()));
         (api, r)
     }
 

@@ -6,7 +6,7 @@
 //! the testbed needs a working Deployment kind, not just bare pods.
 
 use super::api::{KubeObject, PodPhase, PodView, KIND_DEPLOYMENT, KIND_POD};
-use super::apiserver::ApiServer;
+use super::client::{ApiClient, ListOptions};
 use super::controller::{Controller, Reconcile};
 use crate::cluster::Resources;
 use crate::encoding::{decode_str_map, Value};
@@ -39,7 +39,7 @@ impl Controller for DeploymentController {
         KIND_DEPLOYMENT
     }
 
-    fn reconcile(&self, api: &ApiServer, name: &str) -> Result<Reconcile> {
+    fn reconcile(&self, api: &dyn ApiClient, name: &str) -> Result<Reconcile> {
         let deploy = match api.get(KIND_DEPLOYMENT, name) {
             Ok(d) => d,
             // Deleted: cascade handled by the API server's owner logic.
@@ -71,8 +71,8 @@ impl Controller for DeploymentController {
         let env = template.get("env").map(decode_str_map).unwrap_or_default();
 
         // Current pods owned by this deployment.
-        let selector = vec![("deployment".to_string(), name.to_string())];
-        let mut pods = api.list(KIND_POD, &selector);
+        let selector = ListOptions::all().with_label("deployment", name);
+        let mut pods = api.list(KIND_POD, &selector)?.items;
         // Replace failed pods (restartPolicy: Always, distilled).
         let mut running = 0usize;
         for pod in pods.clone() {
@@ -116,12 +116,13 @@ impl Controller for DeploymentController {
         }
         // Status.
         let ready = api
-            .list(KIND_POD, &selector)
+            .list(KIND_POD, &selector)?
+            .items
             .iter()
             .filter_map(|p| PodView::from_object(p).ok())
             .filter(|v| matches!(v.phase, PodPhase::Running | PodPhase::Succeeded))
             .count();
-        api.update_status(KIND_DEPLOYMENT, name, |o| {
+        api.update_status(KIND_DEPLOYMENT, name, &|o| {
             o.status.insert("replicas", want as u64);
             o.status.insert("readyReplicas", ready as u64);
         })?;
@@ -138,6 +139,7 @@ impl Controller for DeploymentController {
 mod tests {
     use super::*;
     use crate::cluster::Metrics;
+    use crate::kube::apiserver::ApiServer;
 
     fn setup() -> (ApiServer, DeploymentController) {
         (ApiServer::new(Metrics::new()), DeploymentController)

@@ -6,7 +6,7 @@
 //! the API server.
 
 use super::api::{NodeView, PodPhase, PodView, KIND_NODE, KIND_POD};
-use super::apiserver::ApiServer;
+use super::client::{ApiClient, ListOptions};
 use crate::cluster::{Metrics, Resources, SharedFs};
 use crate::rt::{self, Shutdown};
 use crate::singularity::{ContainerId, ContainerSpec, ContainerStatus, Cri};
@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 pub struct Kubelet<C: Cri> {
-    api: ApiServer,
+    api: Arc<dyn ApiClient>,
     node_name: String,
     cri: C,
     fs: SharedFs,
@@ -28,7 +28,7 @@ pub struct Kubelet<C: Cri> {
 impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
     /// Register the Node object and return the kubelet.
     pub fn register(
-        api: ApiServer,
+        api: Arc<dyn ApiClient>,
         node_name: &str,
         capacity: Resources,
         labels: &[(&str, &str)],
@@ -73,12 +73,20 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
     pub fn sync_once(&self) -> (usize, usize) {
         let mut started = 0;
         let mut completed = 0;
-        let pods = self.api.list(KIND_POD, &[]);
-        for obj in pods {
-            let Ok(view) = PodView::from_object(&obj) else { continue };
-            if view.node_name.as_deref() != Some(self.node_name.as_str()) {
-                continue;
+        // Field selector: only pods bound to this node — the server (local
+        // or remote) filters, the kubelet never sees the rest.
+        let opts = ListOptions::all().with_field("spec.nodeName", &self.node_name);
+        let pods = match self.api.list(KIND_POD, &opts) {
+            Ok(list) => list,
+            Err(e) => {
+                // A broken transport must not masquerade as an idle node.
+                self.metrics.inc("kubelet.list_errors");
+                crate::warn!("kubelet", "{}: pod list failed: {e}", self.node_name);
+                return (0, 0);
             }
+        };
+        for obj in pods.items {
+            let Ok(view) = PodView::from_object(&obj) else { continue };
             let pod_name = view.name.clone();
             let has_container = self.running.lock().unwrap().contains_key(&pod_name);
             match (view.phase, has_container) {
@@ -90,7 +98,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                     match self.cri.start(spec, self.fs.clone()) {
                         Ok(id) => {
                             self.running.lock().unwrap().insert(pod_name.clone(), id);
-                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                            let _ = self.api.update_status(KIND_POD, &pod_name, &|o| {
                                 o.status.insert("phase", "Running");
                                 o.status.insert("hostNode", self.node_name.clone());
                             });
@@ -99,7 +107,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                         }
                         Err(e) => {
                             let msg = e.to_string();
-                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                            let _ = self.api.update_status(KIND_POD, &pod_name, &|o| {
                                 o.status.insert("phase", "Failed");
                                 o.status.insert("reason", msg.clone());
                             });
@@ -113,7 +121,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                         Ok(ContainerStatus::Exited(res)) => {
                             let phase =
                                 if res.success() { "Succeeded" } else { "Failed" };
-                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                            let _ = self.api.update_status(KIND_POD, &pod_name, &|o| {
                                 o.status.insert("phase", phase);
                                 o.status.insert("exitCode", res.exit_code as i64);
                                 o.status.insert("log", res.stdout.clone());
@@ -127,7 +135,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                             completed += 1;
                         }
                         Ok(ContainerStatus::Failed(msg)) => {
-                            let _ = self.api.update_status(KIND_POD, &pod_name, |o| {
+                            let _ = self.api.update_status(KIND_POD, &pod_name, &|o| {
                                 o.status.insert("phase", "Failed");
                                 o.status.insert("reason", msg.clone());
                             });
@@ -141,12 +149,16 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                 _ => {}
             }
         }
-        // Reap containers whose pods were deleted out from under us.
+        // Reap containers whose pods were deleted out from under us. Only
+        // a definite NotFound counts — a transport error must not read as
+        // "stop every container on the node".
         let dangling: Vec<(String, ContainerId)> = {
             let running = self.running.lock().unwrap();
             running
                 .iter()
-                .filter(|(pod, _)| self.api.get(KIND_POD, pod).is_err())
+                .filter(|(pod, _)| {
+                    self.api.get(KIND_POD, pod).err().map_or(false, |e| e.is_not_found())
+                })
                 .map(|(p, id)| (p.clone(), *id))
                 .collect()
         };
@@ -163,7 +175,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
 
     /// Heartbeat the Node object (mark Ready).
     pub fn heartbeat(&self) {
-        let _ = self.api.update_status(KIND_NODE, &self.node_name, |o| {
+        let _ = self.api.update_status(KIND_NODE, &self.node_name, &|o| {
             o.status.insert("phase", "Ready");
         });
     }
@@ -176,6 +188,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kube::apiserver::ApiServer;
     use crate::singularity::{
         ImageRegistry, Payload, Runtime, RuntimeKind, SifImage, SingularityCri,
     };
@@ -191,7 +204,7 @@ mod tests {
             Metrics::new(),
         ));
         let kubelet = Kubelet::register(
-            api.clone(),
+            api.client(),
             "w1",
             Resources::cores(8, 32 << 30),
             &[],

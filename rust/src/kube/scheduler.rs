@@ -5,21 +5,30 @@
 //! **bind** (set `spec.nodeName`). Virtual nodes carry the
 //! `virtual-kubelet` taint, so only the operator's dummy pods — which
 //! tolerate it — land there (paper Fig. 2).
+//!
+//! Written against typed [`Api`] handles over any [`ApiClient`], so the
+//! scheduler could equally run out-of-process against a remote API server.
 
-use super::api::{KubeObject, NodeView, PodPhase, PodView, KIND_NODE, KIND_POD};
-use super::apiserver::ApiServer;
+use super::api::{KubeObject, NodeView, PodPhase, PodView};
+use super::client::{Api, ApiClient, ListOptions};
 use crate::cluster::{Metrics, Resources};
 use crate::rt::{self, Shutdown};
+use std::sync::Arc;
 use std::time::Duration;
 
 pub struct KubeScheduler {
-    api: ApiServer,
+    nodes: Api<NodeView>,
+    pods: Api<PodView>,
     metrics: Metrics,
 }
 
 impl KubeScheduler {
-    pub fn new(api: ApiServer, metrics: Metrics) -> KubeScheduler {
-        KubeScheduler { api, metrics }
+    pub fn new(client: Arc<dyn ApiClient>, metrics: Metrics) -> KubeScheduler {
+        KubeScheduler {
+            nodes: Api::new(client.clone()),
+            pods: Api::new(client),
+            metrics,
+        }
     }
 
     /// Run as a daemon: a scheduling cycle per period.
@@ -33,19 +42,25 @@ impl KubeScheduler {
     /// Public for deterministic stepping in tests/benches.
     pub fn run_cycle(&self) -> usize {
         let t0 = std::time::Instant::now();
-        let nodes: Vec<NodeView> = self
-            .api
-            .list(KIND_NODE, &[])
-            .iter()
-            .filter_map(|o| NodeView::from_object(o).ok())
-            .collect();
-        let pods = self.api.list(KIND_POD, &[]);
+        // A broken transport must not masquerade as "nothing to schedule".
+        // (Typed lists already skip undecodable objects, so a malformed
+        // hand-written manifest cannot wedge the cycle either.)
+        let (nodes, pods) = match (
+            self.nodes.list(&ListOptions::all()),
+            self.pods.list(&ListOptions::all()),
+        ) {
+            (Ok(n), Ok(p)) => (n, p),
+            (Err(e), _) | (_, Err(e)) => {
+                self.metrics.inc("kube.sched.list_errors");
+                crate::warn!("kube-sched", "list failed, skipping cycle: {e}");
+                return 0;
+            }
+        };
         // Usage per node from bound, non-terminal pods.
         let mut used: Vec<(String, Resources)> =
             nodes.iter().map(|n| (n.name.clone(), Resources::ZERO)).collect();
         let mut pending: Vec<PodView> = Vec::new();
-        for o in &pods {
-            let Ok(view) = PodView::from_object(o) else { continue };
+        for view in pods {
             match (&view.node_name, view.phase) {
                 (Some(node), phase) if !phase.terminal() => {
                     if let Some((_, u)) = used.iter_mut().find(|(n, _)| n == node) {
@@ -96,8 +111,8 @@ impl KubeScheduler {
             let chosen = candidates[0].0.name.clone();
             // Bind.
             let ok = self
-                .api
-                .update_status(KIND_POD, &pod.name, |o| {
+                .pods
+                .update_status(&pod.name, &|o| {
                     o.spec.insert("nodeName", chosen.clone());
                 })
                 .is_ok();
@@ -137,11 +152,12 @@ pub fn pod_with_tolerations(mut pod: KubeObject, tolerations: &[&str]) -> KubeOb
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kube::api::{NodeView, PodView};
+    use crate::kube::api::{NodeView, PodView, KIND_NODE, KIND_POD};
+    use crate::kube::apiserver::ApiServer;
 
     fn setup() -> (ApiServer, KubeScheduler) {
         let api = ApiServer::new(Metrics::new());
-        let sched = KubeScheduler::new(api.clone(), Metrics::new());
+        let sched = KubeScheduler::new(api.client(), Metrics::new());
         (api, sched)
     }
 

@@ -1,0 +1,295 @@
+//! Group/Version/Kind scheme: the type registry of the API machinery.
+//!
+//! Kubernetes never hardcodes kinds — clients resolve user-facing aliases
+//! (`po`, `pods`, `torquejobs`) through a scheme that maps every registered
+//! kind to its [`GroupVersionKind`], plural, and short names. CRDs such as
+//! the paper's `TorqueJob` (Fig. 3, `wlm.sylabs.io/v1alpha1`) register into
+//! the same scheme the built-ins use, which is exactly what lets the
+//! Torque-Operator "introduce a new object kind" without the CLI, the
+//! store, or the transport learning anything new.
+
+use super::api::{
+    KubeObject, KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+    WLM_API_VERSION,
+};
+use crate::encoding::Value;
+use crate::util::{Error, Result};
+use std::sync::OnceLock;
+
+/// The coordinates of an object kind in the API: `group/version, Kind`.
+/// Built-ins live in the core (empty) group; CRDs carry their own group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupVersionKind {
+    pub group: String,
+    pub version: String,
+    pub kind: String,
+}
+
+impl GroupVersionKind {
+    /// A core-group kind (`apiVersion: v1`).
+    pub fn core(version: impl Into<String>, kind: impl Into<String>) -> Self {
+        GroupVersionKind { group: String::new(), version: version.into(), kind: kind.into() }
+    }
+
+    pub fn new(
+        group: impl Into<String>,
+        version: impl Into<String>,
+        kind: impl Into<String>,
+    ) -> Self {
+        GroupVersionKind { group: group.into(), version: version.into(), kind: kind.into() }
+    }
+
+    /// The manifest `apiVersion` string: `group/version`, or bare `version`
+    /// for the core group.
+    pub fn api_version(&self) -> String {
+        if self.group.is_empty() {
+            self.version.clone()
+        } else {
+            format!("{}/{}", self.group, self.version)
+        }
+    }
+
+    /// Parse an `apiVersion` + `kind` pair back into a GVK.
+    pub fn from_api_version(api_version: &str, kind: impl Into<String>) -> Self {
+        match api_version.split_once('/') {
+            Some((g, v)) => GroupVersionKind::new(g, v, kind),
+            None => GroupVersionKind::core(api_version, kind),
+        }
+    }
+}
+
+impl std::fmt::Display for GroupVersionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}, Kind={}", self.api_version(), self.kind)
+    }
+}
+
+/// One registered kind: its GVK plus the aliases `kubectl`-style tooling
+/// accepts (plural and short names, matched case-insensitively).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KindSpec {
+    pub gvk: GroupVersionKind,
+    pub plural: String,
+    pub short_names: Vec<String>,
+}
+
+impl KindSpec {
+    pub fn new(gvk: GroupVersionKind, plural: impl Into<String>, short_names: &[&str]) -> Self {
+        // Aliases are matched against lowercased queries, so store them
+        // lowercased — otherwise an uppercase registration is unreachable.
+        KindSpec {
+            gvk,
+            plural: plural.into().to_ascii_lowercase(),
+            short_names: short_names.iter().map(|s| s.to_ascii_lowercase()).collect(),
+        }
+    }
+
+    /// Does `alias` (already lowercased) name this kind?
+    fn matches(&self, alias: &str) -> bool {
+        self.gvk.kind.to_ascii_lowercase() == alias
+            || self.plural == alias
+            || self.short_names.iter().any(|s| s == alias)
+    }
+}
+
+/// The kind registry. A `Scheme` is cheap to build and immutable once
+/// shared; the process-wide default (built-ins + the paper's WLM CRDs) is
+/// available through [`default_scheme`].
+#[derive(Debug, Clone, Default)]
+pub struct Scheme {
+    kinds: Vec<KindSpec>,
+}
+
+impl Scheme {
+    /// An empty scheme (register everything yourself).
+    pub fn new() -> Scheme {
+        Scheme::default()
+    }
+
+    /// The built-in kinds every cluster serves: Pod, Node, Deployment.
+    pub fn with_builtins() -> Scheme {
+        let mut s = Scheme::new();
+        s.register(KindSpec::new(GroupVersionKind::core("v1", KIND_POD), "pods", &["po"]))
+            .expect("builtin");
+        s.register(KindSpec::new(GroupVersionKind::core("v1", KIND_NODE), "nodes", &["no"]))
+            .expect("builtin");
+        s.register(KindSpec::new(
+            GroupVersionKind::core("v1", KIND_DEPLOYMENT),
+            "deployments",
+            &["deploy"],
+        ))
+        .expect("builtin");
+        s
+    }
+
+    /// Register a kind; rejects duplicate kinds and colliding aliases.
+    pub fn register(&mut self, spec: KindSpec) -> Result<()> {
+        let mut aliases = vec![spec.gvk.kind.to_ascii_lowercase(), spec.plural.clone()];
+        aliases.extend(spec.short_names.iter().cloned());
+        for alias in &aliases {
+            if self.resolve(alias).is_some() {
+                return Err(Error::config(format!(
+                    "scheme: alias `{alias}` already registered (while adding {})",
+                    spec.gvk
+                )));
+            }
+        }
+        self.kinds.push(spec);
+        Ok(())
+    }
+
+    /// Register a CRD kind under the paper's `wlm.sylabs.io/v1alpha1` group
+    /// (Fig. 3). This is the one-liner an operator author calls.
+    pub fn register_wlm_crd(
+        &mut self,
+        kind: &str,
+        plural: &str,
+        short_names: &[&str],
+    ) -> Result<()> {
+        let (group, version) = WLM_API_VERSION
+            .split_once('/')
+            .ok_or_else(|| Error::internal("WLM_API_VERSION must be group/version"))?;
+        self.register(KindSpec::new(
+            GroupVersionKind::new(group, version, kind),
+            plural,
+            short_names,
+        ))
+    }
+
+    /// Resolve a user-facing alias (kind, plural, or short name; any case)
+    /// to its registration.
+    pub fn resolve(&self, alias: &str) -> Option<&KindSpec> {
+        let lower = alias.to_ascii_lowercase();
+        self.kinds.iter().find(|k| k.matches(&lower))
+    }
+
+    /// Canonical kind name for an alias (`po` → `Pod`). Unknown aliases
+    /// resolve to `None`; CLI callers typically fall back to the raw string
+    /// so unregistered CRD kinds still work end to end.
+    pub fn canonical_kind(&self, alias: &str) -> Option<&str> {
+        self.resolve(alias).map(|k| k.gvk.kind.as_str())
+    }
+
+    /// The `apiVersion` a registered kind is served under.
+    pub fn api_version_for(&self, kind: &str) -> Option<String> {
+        self.resolve(kind).map(|k| k.gvk.api_version())
+    }
+
+    /// Build a new object of a registered kind with the correct
+    /// `apiVersion` stamped (accepts any alias).
+    pub fn object(&self, alias: &str, name: &str, spec: Value) -> Result<KubeObject> {
+        let reg = self
+            .resolve(alias)
+            .ok_or_else(|| Error::config(format!("scheme: unknown kind alias `{alias}`")))?;
+        let mut o = KubeObject::new(reg.gvk.kind.clone(), name, spec);
+        o.api_version = reg.gvk.api_version();
+        Ok(o)
+    }
+
+    /// All registered kinds.
+    pub fn kinds(&self) -> &[KindSpec] {
+        &self.kinds
+    }
+}
+
+/// The process-wide default scheme: built-ins plus the two WLM CRDs the
+/// operators ship (TorqueJob, SlurmJob). Controllers and the CLI resolve
+/// against this unless handed a custom scheme.
+pub fn default_scheme() -> &'static Scheme {
+    static SCHEME: OnceLock<Scheme> = OnceLock::new();
+    SCHEME.get_or_init(|| {
+        let mut s = Scheme::with_builtins();
+        s.register_wlm_crd(KIND_TORQUEJOB, "torquejobs", &["tj"]).expect("torquejob crd");
+        s.register_wlm_crd(KIND_SLURMJOB, "slurmjobs", &["sj"]).expect("slurmjob crd");
+        s
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gvk_api_version_roundtrip() {
+        let core = GroupVersionKind::core("v1", "Pod");
+        assert_eq!(core.api_version(), "v1");
+        let crd = GroupVersionKind::new("wlm.sylabs.io", "v1alpha1", "TorqueJob");
+        assert_eq!(crd.api_version(), "wlm.sylabs.io/v1alpha1");
+        assert_eq!(
+            GroupVersionKind::from_api_version("wlm.sylabs.io/v1alpha1", "TorqueJob"),
+            crd
+        );
+        assert_eq!(GroupVersionKind::from_api_version("v1", "Pod"), core);
+        assert_eq!(crd.to_string(), "wlm.sylabs.io/v1alpha1, Kind=TorqueJob");
+    }
+
+    #[test]
+    fn default_scheme_resolves_all_cli_aliases() {
+        let s = default_scheme();
+        for (alias, kind) in [
+            ("pod", "Pod"),
+            ("pods", "Pod"),
+            ("po", "Pod"),
+            ("Pod", "Pod"),
+            ("node", "Node"),
+            ("nodes", "Node"),
+            ("no", "Node"),
+            ("deployment", "Deployment"),
+            ("deployments", "Deployment"),
+            ("deploy", "Deployment"),
+            ("torquejob", "TorqueJob"),
+            ("torquejobs", "TorqueJob"),
+            ("tj", "TorqueJob"),
+            ("slurmjob", "SlurmJob"),
+            ("slurmjobs", "SlurmJob"),
+            ("sj", "SlurmJob"),
+        ] {
+            assert_eq!(s.canonical_kind(alias), Some(kind), "alias {alias}");
+        }
+        assert_eq!(s.canonical_kind("gizmo"), None);
+    }
+
+    #[test]
+    fn crd_registration_and_object_builder() {
+        let mut s = Scheme::with_builtins();
+        s.register_wlm_crd("TorqueJob", "torquejobs", &["tj"]).unwrap();
+        assert_eq!(
+            s.api_version_for("tj").as_deref(),
+            Some("wlm.sylabs.io/v1alpha1")
+        );
+        let o = s.object("tj", "cow", Value::map().with("batch", "echo x")).unwrap();
+        assert_eq!(o.kind, "TorqueJob");
+        assert_eq!(o.api_version, WLM_API_VERSION);
+        let p = s.object("pods", "p1", Value::map()).unwrap();
+        assert_eq!(p.kind, "Pod");
+        assert_eq!(p.api_version, "v1");
+        assert!(s.object("gizmo", "g", Value::map()).is_err());
+    }
+
+    #[test]
+    fn mixed_case_registrations_resolve() {
+        let mut s = Scheme::new();
+        s.register_wlm_crd("FlinkJob", "FlinkJobs", &["FJ"]).unwrap();
+        for alias in ["flinkjob", "FlinkJob", "flinkjobs", "FlinkJobs", "fj", "FJ"] {
+            assert_eq!(s.canonical_kind(alias), Some("FlinkJob"), "alias {alias}");
+        }
+    }
+
+    #[test]
+    fn duplicate_aliases_rejected() {
+        let mut s = Scheme::with_builtins();
+        // Kind collides.
+        assert!(s
+            .register(KindSpec::new(GroupVersionKind::core("v1", "Pod"), "pods2", &[]))
+            .is_err());
+        // Short name collides with an existing alias.
+        assert!(s
+            .register(KindSpec::new(GroupVersionKind::core("v1", "Podling"), "podlings", &["po"]))
+            .is_err());
+        // Clean registration is fine.
+        assert!(s
+            .register(KindSpec::new(GroupVersionKind::core("v1", "Widget"), "widgets", &["wi"]))
+            .is_ok());
+        assert_eq!(s.canonical_kind("wi"), Some("Widget"));
+    }
+}

@@ -6,6 +6,7 @@
 //! appended to a bounded history so watchers can replay from a version.
 
 use super::api::KubeObject;
+use crate::encoding::Value;
 use crate::util::{Error, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,6 +27,30 @@ impl WatchEvent {
             WatchEvent::Added(o) | WatchEvent::Modified(o) | WatchEvent::Deleted(o) => o,
         }
     }
+
+    /// The k8s wire tag for this event type.
+    pub fn type_str(&self) -> &'static str {
+        match self {
+            WatchEvent::Added(_) => "ADDED",
+            WatchEvent::Modified(_) => "MODIFIED",
+            WatchEvent::Deleted(_) => "DELETED",
+        }
+    }
+
+    /// Encode for the RPC transport: `{type, object}`.
+    pub fn encode(&self) -> Value {
+        Value::map().with("type", self.type_str()).with("object", self.object().encode())
+    }
+
+    pub fn decode(v: &Value) -> Result<WatchEvent> {
+        let obj = KubeObject::decode(v.req("object")?)?;
+        match v.req_str("type")? {
+            "ADDED" => Ok(WatchEvent::Added(obj)),
+            "MODIFIED" => Ok(WatchEvent::Modified(obj)),
+            "DELETED" => Ok(WatchEvent::Deleted(obj)),
+            other => Err(Error::parse(format!("unknown watch event type `{other}`"))),
+        }
+    }
 }
 
 const HISTORY_CAP: usize = 4096;
@@ -36,6 +61,9 @@ struct StoreInner {
     version: u64,
     uid: u64,
     history: VecDeque<(u64, WatchEvent)>,
+    /// Highest event version evicted from `history` (0 = nothing evicted).
+    /// Replays from at or below this version may have lost events.
+    trimmed_through: u64,
     watchers: Vec<Watcher>,
 }
 
@@ -65,6 +93,7 @@ impl Store {
                 version: 0,
                 uid: 0,
                 history: VecDeque::new(),
+                trimmed_through: 0,
                 watchers: Vec::new(),
             })),
             epoch: Instant::now(),
@@ -165,12 +194,26 @@ impl Store {
         self.inner.lock().unwrap().version
     }
 
+    /// Highest event version evicted from the watch history (0 = nothing
+    /// evicted yet). A watch bookmark at or below this is stale: replaying
+    /// from it may silently miss events.
+    pub fn trimmed_through(&self) -> u64 {
+        self.inner.lock().unwrap().trimmed_through
+    }
+
     /// Watch events for `kind` (None = all kinds) from `from_version`
-    /// (exclusive). Replays history first; events older than the retained
-    /// window are silently skipped (callers list+watch, as in k8s).
+    /// (exclusive). Replays history first, then streams live events. A
+    /// bookmark older than the retained window cannot be replayed
+    /// faithfully: the returned stream is already ended (no watcher
+    /// registered) — the 410-Gone signal — so the caller relists and
+    /// rewatches. The staleness check happens under the same lock as the
+    /// replay + registration, so it cannot race a concurrent trim.
     pub fn watch(&self, kind: Option<&str>, from_version: u64) -> Receiver<WatchEvent> {
         let (tx, rx) = channel();
         let mut inner = self.inner.lock().unwrap();
+        if from_version < inner.trimmed_through {
+            return rx; // tx dropped: ended stream
+        }
         for (v, ev) in inner.history.iter() {
             if *v > from_version
                 && kind.map(|k| ev.object().kind == k).unwrap_or(true)
@@ -182,10 +225,38 @@ impl Store {
         rx
     }
 
+    /// One-shot replay: events for `kind` (None = all) newer than
+    /// `from_version`, plus the store version they bring the caller up to,
+    /// plus a `reset` flag. This is the poll primitive behind the RPC
+    /// transport's watch — no watcher is registered, so it is safe to call
+    /// at any rate. `reset = true` means `from_version` has fallen out of
+    /// the retained history window, so events may have been lost — the
+    /// 410-Gone signal of the k8s watch API; the caller must relist and
+    /// rewatch rather than trust the replay.
+    pub fn events_since(
+        &self,
+        kind: Option<&str>,
+        from_version: u64,
+    ) -> (u64, Vec<WatchEvent>, bool) {
+        let inner = self.inner.lock().unwrap();
+        let reset = from_version < inner.trimmed_through;
+        let events = inner
+            .history
+            .iter()
+            .filter(|(v, ev)| {
+                *v > from_version && kind.map(|k| ev.object().kind == k).unwrap_or(true)
+            })
+            .map(|(_, ev)| ev.clone())
+            .collect();
+        (inner.version, events, reset)
+    }
+
     fn publish(inner: &mut StoreInner, version: u64, event: WatchEvent) {
         inner.history.push_back((version, event.clone()));
         if inner.history.len() > HISTORY_CAP {
-            inner.history.pop_front();
+            if let Some((evicted, _)) = inner.history.pop_front() {
+                inner.trimmed_through = evicted;
+            }
         }
         inner.watchers.retain(|w| match w.kind.as_deref() {
             // Not subscribed to this kind: keep (dead ones are dropped on
@@ -288,6 +359,81 @@ mod tests {
         let events: Vec<WatchEvent> = rx.try_iter().collect();
         assert_eq!(events.len(), 1);
         assert_eq!(events[0].object().kind, "Node");
+    }
+
+    #[test]
+    fn events_since_replays_without_subscribing() {
+        let s = Store::new();
+        s.create(pod("a")).unwrap();
+        let v = s.current_version();
+        s.create(pod("b")).unwrap();
+        s.create(KubeObject::new("Node", "n1", Value::map())).unwrap();
+        let (rv, events, reset) = s.events_since(Some(KIND_POD), v);
+        assert_eq!(rv, s.current_version());
+        assert!(!reset);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].object().meta.name, "b");
+        // All kinds, from the beginning.
+        let (_, all, _) = s.events_since(None, 0);
+        assert_eq!(all.len(), 3);
+        // Caught up: nothing new.
+        let (rv2, none, reset) = s.events_since(None, rv);
+        assert_eq!(rv2, rv);
+        assert!(none.is_empty());
+        assert!(!reset);
+    }
+
+    #[test]
+    fn watch_with_stale_bookmark_returns_ended_stream() {
+        let s = Store::new();
+        let first = s.create(pod("seed")).unwrap().meta.resource_version;
+        for i in 0..HISTORY_CAP + 8 {
+            let mut o = s.get(KIND_POD, "seed").unwrap();
+            o.status.insert("n", i as u64);
+            s.update(o).unwrap();
+        }
+        let rx = s.watch(Some(KIND_POD), first);
+        assert!(
+            matches!(rx.try_recv(), Err(std::sync::mpsc::TryRecvError::Disconnected)),
+            "stale bookmark must get the 410-Gone ended stream"
+        );
+        // A fresh bookmark still gets a live stream.
+        let rx = s.watch(Some(KIND_POD), s.current_version());
+        s.create(pod("later")).unwrap();
+        assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn events_since_signals_reset_past_history_window() {
+        let s = Store::new();
+        let first = s.create(pod("seed")).unwrap().meta.resource_version;
+        // Push enough writes to evict the seed event from history.
+        for i in 0..HISTORY_CAP + 8 {
+            let mut o = s.get(KIND_POD, "seed").unwrap();
+            o.status.insert("n", i as u64);
+            s.update(o).unwrap();
+        }
+        let (_, _, reset) = s.events_since(None, first);
+        assert!(reset, "bookmark older than the window must signal reset");
+        let (rv, events, reset) = s.events_since(None, s.current_version() - 1);
+        assert!(!reset, "fresh bookmark replays normally");
+        assert_eq!(events.len(), 1);
+        assert_eq!(rv, s.current_version());
+    }
+
+    #[test]
+    fn watch_event_wire_roundtrip() {
+        let s = Store::new();
+        let o = s.create(pod("a")).unwrap();
+        for ev in [
+            WatchEvent::Added(o.clone()),
+            WatchEvent::Modified(o.clone()),
+            WatchEvent::Deleted(o),
+        ] {
+            let back = WatchEvent::decode(&ev.encode()).unwrap();
+            assert_eq!(back, ev);
+        }
+        assert!(WatchEvent::decode(&Value::map().with("type", "BOGUS")).is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use super::virtual_node::{LABEL_QUEUE, LABEL_WLM, VIRTUAL_KUBELET_TAINT};
 use crate::cluster::{Metrics, Resources};
 use crate::encoding::Value;
 use crate::kube::scheduler::pod_with_tolerations;
-use crate::kube::{ApiServer, Controller, PodView, Reconcile, WlmJobView, KIND_POD};
+use crate::kube::{ApiClient, Controller, PodView, Reconcile, WlmJobView, KIND_POD};
 use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -116,7 +116,7 @@ impl WlmJobOperator {
     }
 
     /// Create the dummy pod targeting the queue's virtual node.
-    fn create_dummy_pod(&self, api: &ApiServer, job: &WlmJobView, queue: &str) -> Result<()> {
+    fn create_dummy_pod(&self, api: &dyn ApiClient, job: &WlmJobView, queue: &str) -> Result<()> {
         let name = Self::dummy_pod_name(&job.name);
         let mut pod = pod_with_tolerations(
             PodView::build(&name, "wlm-dummy.sif", Resources::new(1, 1 << 20, 0), &[]),
@@ -142,7 +142,7 @@ impl WlmJobOperator {
     /// Stage results: read `results.from` from the WLM cluster and write it
     /// into the hostPath directory, via a results pod object (the paper's
     /// second dummy pod).
-    fn collect_results(&self, api: &ApiServer, job: &WlmJobView) -> Result<()> {
+    fn collect_results(&self, api: &dyn ApiClient, job: &WlmJobView) -> Result<()> {
         let (Some(from), Some(mount)) = (&job.results_from, &job.mount_path) else {
             return Ok(()); // nothing requested
         };
@@ -162,7 +162,7 @@ impl WlmJobOperator {
             format!("{mount}/{base}")
         };
         self.bridge.write_file(&target, &content)?;
-        let _ = api.update_status(KIND_POD, &pod_name, |o| {
+        let _ = api.update_status(KIND_POD, &pod_name, &|o| {
             o.status.insert("phase", "Succeeded");
             o.status.insert("log", format!("staged {from} -> {target}"));
         });
@@ -170,8 +170,8 @@ impl WlmJobOperator {
         Ok(())
     }
 
-    fn set_phase(&self, api: &ApiServer, name: &str, phase: &str) -> Result<()> {
-        api.update_status(self.config.kind, name, |o| {
+    fn set_phase(&self, api: &dyn ApiClient, name: &str, phase: &str) -> Result<()> {
+        api.update_status(self.config.kind, name, &|o| {
             o.status.insert("phase", phase);
         })?;
         Ok(())
@@ -183,7 +183,7 @@ impl Controller for WlmJobOperator {
         self.config.kind
     }
 
-    fn reconcile(&self, api: &ApiServer, name: &str) -> Result<Reconcile> {
+    fn reconcile(&self, api: &dyn ApiClient, name: &str) -> Result<Reconcile> {
         let obj = match api.get(self.config.kind, name) {
             Ok(o) => o,
             Err(e) if e.is_not_found() => {
@@ -219,12 +219,12 @@ impl Controller for WlmJobOperator {
                 // Dummy pod placed: transfer the job through red-box (qsub).
                 let job_id = self.bridge.submit(&view.batch, "kube-operator")?;
                 self.tracked.lock().unwrap().insert(name.to_string(), job_id.clone());
-                api.update_status(self.config.kind, name, |o| {
+                api.update_status(self.config.kind, name, &|o| {
                     o.status.insert("phase", phase::QUEUED);
                     o.status.insert("jobId", job_id.clone());
                 })?;
                 // The dummy pod's transfer duty is done.
-                let _ = api.update_status(KIND_POD, &Self::dummy_pod_name(name), |o| {
+                let _ = api.update_status(KIND_POD, &Self::dummy_pod_name(name), &|o| {
                     o.status.insert("phase", "Succeeded");
                     o.status.insert("log", format!("submitted as {job_id}"));
                 });
@@ -243,7 +243,7 @@ impl Controller for WlmJobOperator {
                     WlmStatus::Running => phase::RUNNING,
                     WlmStatus::Completed => phase::TRANSFERRING,
                     WlmStatus::Failed { exit_code } => {
-                        api.update_status(self.config.kind, name, |o| {
+                        api.update_status(self.config.kind, name, &|o| {
                             o.status.insert("exitCode", exit_code as i64);
                         })?;
                         phase::FAILED
@@ -339,7 +339,7 @@ mod tests {
             Arc::new(RedboxBridge::torque(RedboxClient::connect(&sock).unwrap()));
         let api = ApiServer::new(Metrics::new());
         register_virtual_nodes(&api, bridge.as_ref(), "torque").unwrap();
-        let sched = KubeScheduler::new(api.clone(), Metrics::new());
+        let sched = KubeScheduler::new(api.client(), Metrics::new());
         let operator = WlmJobOperator::new(OperatorConfig::torque(), bridge, Metrics::new());
         Env { api, sched, operator, pbs, _rb: rb, sd }
     }

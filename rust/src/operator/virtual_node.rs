@@ -9,7 +9,7 @@
 
 use super::redbox_svc::WlmBridge;
 use crate::cluster::Resources;
-use crate::kube::{ApiServer, NodeView, KIND_NODE};
+use crate::kube::{ApiClient, NodeView, KIND_NODE};
 use crate::util::Result;
 
 /// The taint key carried by every virtual node.
@@ -29,7 +29,7 @@ pub fn vnode_name(wlm: &str, queue: &str) -> String {
 /// virtual node only needs to admit dummy pods (which request ~nothing),
 /// exactly as virtual-kubelet reports large synthetic capacity.
 pub fn register_virtual_nodes(
-    api: &ApiServer,
+    api: &dyn ApiClient,
     bridge: &dyn WlmBridge,
     wlm: &str,
 ) -> Result<Vec<String>> {
@@ -57,7 +57,7 @@ pub fn register_virtual_nodes(
 }
 
 /// Find the virtual node for a queue (None = queue has no virtual node).
-pub fn lookup_vnode(api: &ApiServer, wlm: &str, queue: &str) -> Option<String> {
+pub fn lookup_vnode(api: &dyn ApiClient, wlm: &str, queue: &str) -> Option<String> {
     let name = vnode_name(wlm, queue);
     api.get(KIND_NODE, &name).ok().map(|_| name)
 }
@@ -66,6 +66,7 @@ pub fn lookup_vnode(api: &ApiServer, wlm: &str, queue: &str) -> Option<String> {
 mod tests {
     use super::*;
     use crate::cluster::Metrics;
+    use crate::kube::ApiServer;
     use crate::operator::redbox_svc::WlmStatus;
     use crate::util::Error;
 

@@ -32,6 +32,9 @@ pub struct Response {
     pub ok: bool,
     pub body: Value,
     pub error: String,
+    /// Structured error ([`Error::encode_wire`]; `Null` when absent) so
+    /// typed errors survive the socket — the gRPC-status equivalent.
+    pub detail: Value,
 }
 
 impl Request {
@@ -60,19 +63,36 @@ impl Request {
 
 impl Response {
     pub fn ok(id: u64, body: Value) -> Response {
-        Response { id, ok: true, body, error: String::new() }
+        Response { id, ok: true, body, error: String::new(), detail: Value::Null }
     }
 
     pub fn err(id: u64, error: impl Into<String>) -> Response {
-        Response { id, ok: false, body: Value::Null, error: error.into() }
+        Response { id, ok: false, body: Value::Null, error: error.into(), detail: Value::Null }
+    }
+
+    /// Error response carrying the typed error structurally, so the client
+    /// reconstructs the exact [`Error`] variant instead of an opaque
+    /// `Error::Rpc` string.
+    pub fn err_typed(id: u64, e: &Error) -> Response {
+        Response {
+            id,
+            ok: false,
+            body: Value::Null,
+            error: e.to_string(),
+            detail: e.encode_wire(),
+        }
     }
 
     pub fn encode(&self) -> Value {
-        Value::map()
+        let mut v = Value::map()
             .with("id", self.id)
             .with("ok", self.ok)
             .with("body", self.body.clone())
-            .with("error", self.error.clone())
+            .with("error", self.error.clone());
+        if !self.detail.is_null() {
+            v.insert("detail", self.detail.clone());
+        }
+        v
     }
 
     pub fn decode(v: &Value) -> Result<Response> {
@@ -81,13 +101,17 @@ impl Response {
             ok: v.opt_bool("ok").unwrap_or(false),
             body: v.get("body").cloned().unwrap_or(Value::Null),
             error: v.opt_str("error").unwrap_or("").to_string(),
+            detail: v.get("detail").cloned().unwrap_or(Value::Null),
         })
     }
 
-    /// Convert into a Result, mapping transported errors back.
+    /// Convert into a Result, mapping transported errors back — typed when
+    /// the envelope carries a structured detail, `Error::Rpc` otherwise.
     pub fn into_result(self) -> Result<Value> {
         if self.ok {
             Ok(self.body)
+        } else if let Some(e) = Error::decode_wire(&self.detail) {
+            Err(e)
         } else {
             Err(Error::rpc(self.error))
         }
@@ -148,6 +172,20 @@ mod tests {
         assert_eq!(ok.clone().into_result().unwrap(), Value::str("42.torque-head"));
         let err = Response::err(2, "queue not found");
         assert!(Response::decode(&err.encode()).unwrap().into_result().is_err());
+    }
+
+    #[test]
+    fn typed_errors_survive_the_envelope() {
+        let e = Error::not_found("Pod", "p1");
+        let resp = Response::err_typed(3, &e);
+        let back = Response::decode(&resp.encode()).unwrap();
+        assert_eq!(back, resp);
+        let got = back.into_result().unwrap_err();
+        assert_eq!(got, e, "variant reconstructed, not stringly Rpc");
+        assert!(got.is_not_found());
+        // Untyped err still degrades to Error::Rpc.
+        let plain = Response::err(4, "boom").into_result().unwrap_err();
+        assert!(matches!(plain, Error::Rpc(_)));
     }
 
     #[test]

@@ -175,13 +175,15 @@ fn handle_conn(mut stream: UnixStream, registry: Registry, shutdown: Shutdown, m
 fn dispatch(req: &Request, registry: &Registry) -> Response {
     let (service, method) = match req.split_method() {
         Ok(x) => x,
-        Err(e) => return Response::err(req.id, e.to_string()),
+        Err(e) => return Response::err_typed(req.id, &e),
     };
     let svc = registry.read().unwrap().get(service).cloned();
     match svc {
+        // Service failures travel typed (err_typed) so remote callers can
+        // branch on is_not_found()/is_conflict() like in-process ones.
         Some(svc) => match svc.call(method, &req.body) {
             Ok(body) => Response::ok(req.id, body),
-            Err(e) => Response::err(req.id, e.to_string()),
+            Err(e) => Response::err_typed(req.id, &e),
         },
         None => Response::err(req.id, format!("unknown service `{service}`")),
     }

@@ -4,6 +4,7 @@
 //! the boundaries of the system (API server, WLM, RPC, runtime, parsing) so
 //! callers can branch on *where* something failed without string matching.
 
+use crate::encoding::Value;
 use std::fmt;
 
 /// Unified error for all hpcorc subsystems.
@@ -36,6 +37,10 @@ pub enum ApiError {
     AlreadyExists { kind: String, name: String },
     /// Optimistic-concurrency failure: resourceVersion mismatch.
     Conflict { kind: String, name: String },
+    /// A bounded retry-on-conflict loop gave up: `attempts` consecutive
+    /// conflicts. Distinct from [`ApiError::Conflict`] so operator logs show
+    /// "pathological contention" rather than a routine single conflict.
+    ConflictExhausted { kind: String, name: String, attempts: u32 },
     Invalid(String),
 }
 
@@ -49,6 +54,11 @@ impl fmt::Display for ApiError {
             ApiError::Conflict { kind, name } => write!(
                 f,
                 "operation cannot be fulfilled on {kind} \"{name}\": object was modified"
+            ),
+            ApiError::ConflictExhausted { kind, name, attempts } => write!(
+                f,
+                "operation on {kind} \"{name}\" gave up after {attempts} consecutive \
+                 conflicts: pathological write contention"
             ),
             ApiError::Invalid(msg) => write!(f, "invalid object: {msg}"),
         }
@@ -120,14 +130,108 @@ impl Error {
     pub fn conflict(kind: impl Into<String>, name: impl Into<String>) -> Self {
         Error::Api(ApiError::Conflict { kind: kind.into(), name: name.into() })
     }
+    pub fn conflict_exhausted(
+        kind: impl Into<String>,
+        name: impl Into<String>,
+        attempts: u32,
+    ) -> Self {
+        Error::Api(ApiError::ConflictExhausted {
+            kind: kind.into(),
+            name: name.into(),
+            attempts,
+        })
+    }
 
     /// True if this is a NotFound API error (common branch in controllers).
     pub fn is_not_found(&self) -> bool {
         matches!(self, Error::Api(ApiError::NotFound { .. }))
     }
     /// True if this is an optimistic-concurrency conflict (controllers retry).
+    /// Deliberately excludes [`ApiError::ConflictExhausted`]: a retry loop
+    /// that already gave up must not be retried blindly by an outer loop.
     pub fn is_conflict(&self) -> bool {
         matches!(self, Error::Api(ApiError::Conflict { .. }))
+    }
+    /// True if a bounded retry-on-conflict loop exhausted its attempts.
+    pub fn is_conflict_exhausted(&self) -> bool {
+        matches!(self, Error::Api(ApiError::ConflictExhausted { .. }))
+    }
+
+    /// Structured wire form for the red-box envelope, so errors survive
+    /// the socket *typed* — a remote caller's `is_not_found()` /
+    /// `is_conflict()` behave exactly like an in-process caller's.
+    pub fn encode_wire(&self) -> Value {
+        fn tagged(tag: &str, msg: &str) -> Value {
+            Value::map().with("type", tag).with("msg", msg)
+        }
+        match self {
+            Error::Api(api) => {
+                let v = Value::map().with("type", "api");
+                match api {
+                    ApiError::NotFound { kind, name } => v
+                        .with("reason", "NotFound")
+                        .with("kind", kind.clone())
+                        .with("name", name.clone()),
+                    ApiError::AlreadyExists { kind, name } => v
+                        .with("reason", "AlreadyExists")
+                        .with("kind", kind.clone())
+                        .with("name", name.clone()),
+                    ApiError::Conflict { kind, name } => v
+                        .with("reason", "Conflict")
+                        .with("kind", kind.clone())
+                        .with("name", name.clone()),
+                    ApiError::ConflictExhausted { kind, name, attempts } => v
+                        .with("reason", "ConflictExhausted")
+                        .with("kind", kind.clone())
+                        .with("name", name.clone())
+                        .with("attempts", *attempts as u64),
+                    ApiError::Invalid(m) => {
+                        v.with("reason", "Invalid").with("msg", m.clone())
+                    }
+                }
+            }
+            Error::Parse(m) => tagged("parse", m),
+            Error::Wlm(m) => tagged("wlm", m),
+            Error::Rpc(m) => tagged("rpc", m),
+            Error::Container(m) => tagged("container", m),
+            Error::Compute(m) => tagged("compute", m),
+            Error::Io(m) => tagged("io", m),
+            Error::Config(m) => tagged("config", m),
+            Error::Internal(m) => tagged("internal", m),
+        }
+    }
+
+    /// Decode [`Error::encode_wire`] output; `None` for unknown shapes
+    /// (callers fall back to an untyped transport error).
+    pub fn decode_wire(v: &Value) -> Option<Error> {
+        let msg = || v.opt_str("msg").unwrap_or("").to_string();
+        match v.opt_str("type")? {
+            "api" => {
+                let kind = || v.opt_str("kind").unwrap_or("").to_string();
+                let name = || v.opt_str("name").unwrap_or("").to_string();
+                match v.opt_str("reason")? {
+                    "NotFound" => Some(Error::not_found(kind(), name())),
+                    "AlreadyExists" => Some(Error::already_exists(kind(), name())),
+                    "Conflict" => Some(Error::conflict(kind(), name())),
+                    "ConflictExhausted" => Some(Error::conflict_exhausted(
+                        kind(),
+                        name(),
+                        v.opt_int("attempts").unwrap_or(0) as u32,
+                    )),
+                    "Invalid" => Some(Error::Api(ApiError::Invalid(msg()))),
+                    _ => None,
+                }
+            }
+            "parse" => Some(Error::Parse(msg())),
+            "wlm" => Some(Error::Wlm(msg())),
+            "rpc" => Some(Error::Rpc(msg())),
+            "container" => Some(Error::Container(msg())),
+            "compute" => Some(Error::Compute(msg())),
+            "io" => Some(Error::Io(msg())),
+            "config" => Some(Error::Config(msg())),
+            "internal" => Some(Error::Internal(msg())),
+            _ => None,
+        }
     }
 }
 
@@ -147,7 +251,41 @@ mod tests {
     fn conflict_detection() {
         let e = Error::conflict("Pod", "p1");
         assert!(e.is_conflict());
+        assert!(!e.is_conflict_exhausted());
         let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
         assert!(matches!(io, Error::Io(_)));
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_every_variant() {
+        let errors = vec![
+            Error::not_found("Pod", "p1"),
+            Error::already_exists("Pod", "p1"),
+            Error::conflict("Pod", "p1"),
+            Error::conflict_exhausted("Pod", "p1", 16),
+            Error::Api(ApiError::Invalid("bad spec".into())),
+            Error::parse("x"),
+            Error::wlm("queue not found"),
+            Error::rpc("boom"),
+            Error::container("no image"),
+            Error::compute("xla"),
+            Error::Io("eof".into()),
+            Error::config("bad flag"),
+            Error::internal("bug"),
+        ];
+        for e in errors {
+            let back = Error::decode_wire(&e.encode_wire());
+            assert_eq!(back.as_ref(), Some(&e), "roundtrip {e}");
+        }
+        assert!(Error::decode_wire(&Value::map()).is_none());
+        assert!(Error::decode_wire(&Value::map().with("type", "novel")).is_none());
+    }
+
+    #[test]
+    fn conflict_exhausted_is_distinct() {
+        let e = Error::conflict_exhausted("Pod", "p1", 16);
+        assert!(e.is_conflict_exhausted());
+        assert!(!e.is_conflict(), "exhaustion must not look like a retryable conflict");
+        assert!(e.to_string().contains("16 consecutive"));
     }
 }

@@ -1,0 +1,197 @@
+//! Local-vs-remote parity: the same CRUD/list/patch/watch scenario runs
+//! through the in-process `ApiServer` and through `RemoteApi` over a
+//! red-box socket, and must produce an identical transcript. This is the
+//! contract that lets controllers hold `Arc<dyn ApiClient>` without caring
+//! which side of the socket they run on.
+
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::encoding::Value;
+use hpcorc::kube::{
+    ApiClient, ApiServer, ListOptions, NodeView, PodView, RemoteApi, WatchEvent, KIND_NODE,
+    KIND_POD,
+};
+use hpcorc::redbox::RedboxServer;
+use hpcorc::rt::Shutdown;
+use std::time::{Duration, Instant};
+
+fn pod(name: &str) -> hpcorc::kube::KubeObject {
+    PodView::build(name, "img.sif", Resources::new(250, 1 << 20, 0), &[])
+}
+
+/// Drain `n` watch events, tolerating the remote transport's poll latency.
+fn collect_events(rx: &std::sync::mpsc::Receiver<WatchEvent>, n: usize) -> Vec<String> {
+    let mut events = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while events.len() < n && Instant::now() < deadline {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => events.push(format!(
+                "{} {}/{} rv={}",
+                ev.type_str(),
+                ev.object().kind,
+                ev.object().meta.name,
+                ev.object().meta.resource_version
+            )),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(_) => break,
+        }
+    }
+    events
+}
+
+/// The scenario: every verb of the unified API, recorded as a transcript
+/// of transport-independent observations (uids, resourceVersions, error
+/// types, watch events — never wall-clock).
+fn scenario(api: &dyn ApiClient) -> Vec<String> {
+    let mut t: Vec<String> = Vec::new();
+
+    // Watch the Pod kind from the beginning: replay + live both covered.
+    let rx = api.watch(Some(KIND_POD), 0).expect("watch");
+
+    // -- create --------------------------------------------------------
+    let mut p1 = pod("p1");
+    p1.meta.set_label("app", "web");
+    let created = api.create(p1).expect("create p1");
+    t.push(format!("create p1 uid={} rv={}", created.meta.uid, created.meta.resource_version));
+    let dup = api.create(pod("p1")).unwrap_err();
+    t.push(format!(
+        "dup already_exists={} not_found={}",
+        matches!(dup, hpcorc::util::Error::Api(hpcorc::util::ApiError::AlreadyExists { .. })),
+        dup.is_not_found()
+    ));
+    let mut p2 = pod("p2");
+    p2.spec.insert("nodeName", "w2");
+    let created2 = api.create(p2).expect("create p2");
+    t.push(format!("create p2 uid={} rv={}", created2.meta.uid, created2.meta.resource_version));
+    // A Node too: proves kind-filtered list/watch ignore it.
+    api.create(NodeView::build("n1", Resources::cores(8, 32 << 30), &[])).expect("node");
+
+    // -- get / update_status / patch -----------------------------------
+    let missing = api.get(KIND_POD, "ghost").unwrap_err();
+    t.push(format!("get ghost not_found={}", missing.is_not_found()));
+    let o = api
+        .update_status(KIND_POD, "p1", &|o| {
+            o.status.insert("phase", "Running");
+        })
+        .expect("update_status");
+    t.push(format!("us p1 rv={} phase={}", o.meta.resource_version, o.status.opt_str("phase").unwrap_or("")));
+    let o = api
+        .patch_merge(
+            KIND_POD,
+            "p1",
+            &Value::map()
+                .with("status", Value::map().with("exitCode", 0i64))
+                .with(
+                    "metadata",
+                    Value::map().with("labels", Value::map().with("tier", "frontend")),
+                ),
+        )
+        .expect("patch");
+    t.push(format!(
+        "patch p1 rv={} exit={} tier={}",
+        o.meta.resource_version,
+        o.status.opt_int("exitCode").unwrap_or(-1),
+        o.meta.label("tier").unwrap_or("")
+    ));
+
+    // -- list: label selector, field selector, freshness ----------------
+    let by_label = api
+        .list(KIND_POD, &ListOptions::all().with_label("app", "web"))
+        .expect("list by label");
+    t.push(format!(
+        "list app=web rv={} items={:?}",
+        by_label.resource_version,
+        by_label.items.iter().map(|o| o.meta.name.clone()).collect::<Vec<_>>()
+    ));
+    let by_field = api
+        .list(KIND_POD, &ListOptions::all().with_field("spec.nodeName", "w2"))
+        .expect("list by field");
+    t.push(format!(
+        "list nodeName=w2 items={:?}",
+        by_field.items.iter().map(|o| o.meta.name.clone()).collect::<Vec<_>>()
+    ));
+    let nodes = api.list(KIND_NODE, &ListOptions::all()).expect("list nodes");
+    t.push(format!("list nodes n={}", nodes.items.len()));
+    let too_new = api
+        .list(KIND_POD, &ListOptions::all().not_older_than(by_field.resource_version + 100))
+        .unwrap_err();
+    t.push(format!("list too-new conflict={}", too_new.is_conflict()));
+
+    // -- delete with owner cascade --------------------------------------
+    let mut child = pod("p1-child");
+    child.meta.owner = Some((KIND_POD.to_string(), "p1".to_string()));
+    api.create(child).expect("child");
+    api.delete(KIND_POD, "p1").expect("delete p1");
+    t.push(format!(
+        "cascade child_gone={} root_gone={}",
+        api.get(KIND_POD, "p1-child").unwrap_err().is_not_found(),
+        api.get(KIND_POD, "p1").unwrap_err().is_not_found()
+    ));
+
+    // -- watch transcript -----------------------------------------------
+    // create p1, create p2, us p1, patch p1, create child, del child, del p1.
+    t.extend(collect_events(&rx, 7));
+    t
+}
+
+#[test]
+fn same_scenario_identical_through_both_transports() {
+    // Local: straight at a fresh in-process server.
+    let local_api = ApiServer::new(Metrics::new());
+    let local = scenario(&local_api);
+
+    // Remote: a fresh server behind a red-box socket.
+    let sd = Shutdown::new();
+    let path = std::env::temp_dir()
+        .join(format!("hpcorc-parity-{}.sock", std::process::id()));
+    let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+    let remote_server = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", remote_server.rpc_service());
+    let remote_api = RemoteApi::connect(&path).unwrap();
+    let remote = scenario(&remote_api);
+    srv.stop();
+
+    assert_eq!(
+        local, remote,
+        "local and remote ApiClient transcripts diverged"
+    );
+    // Sanity: the transcript actually covered the verbs (not all empty).
+    assert_eq!(local.len(), 11 + 7, "scenario shape changed — update the count");
+    assert!(local.iter().any(|l| l.starts_with("ADDED Pod/p1 ")));
+    assert!(local.iter().any(|l| l.starts_with("DELETED Pod/p1-child ")));
+}
+
+#[test]
+fn typed_api_handles_identical_through_both_transports() {
+    use hpcorc::kube::Api;
+    fn typed_scenario(client: std::sync::Arc<dyn ApiClient>) -> Vec<String> {
+        let pods: Api<PodView> = Api::new(client);
+        let v = pods.create(pod("tp")).expect("typed create");
+        let mut t = vec![format!("created {} image={} phase={:?}", v.name, v.image, v.phase)];
+        let v = pods
+            .update_status("tp", &|o| {
+                o.status.insert("phase", "Running");
+            })
+            .expect("typed us");
+        t.push(format!("running {:?}", v.phase));
+        let listed = pods.list(&ListOptions::all()).expect("typed list");
+        t.push(format!("listed {:?}", listed.iter().map(|p| p.name.clone()).collect::<Vec<_>>()));
+        pods.delete("tp").expect("typed delete");
+        t.push(format!("gone {}", pods.get("tp").unwrap_err().is_not_found()));
+        t
+    }
+
+    let local_api = ApiServer::new(Metrics::new());
+    let local = typed_scenario(local_api.client());
+
+    let sd = Shutdown::new();
+    let path = std::env::temp_dir()
+        .join(format!("hpcorc-parity-typed-{}.sock", std::process::id()));
+    let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+    let remote_server = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", remote_server.rpc_service());
+    let remote_api = RemoteApi::connect(&path).unwrap();
+    let remote = typed_scenario(std::sync::Arc::new(remote_api));
+    srv.stop();
+
+    assert_eq!(local, remote);
+}

@@ -2,27 +2,29 @@
 //! (socket) surface, both operators, and failure paths — everything a
 //! downstream user touches.
 
-use hpcorc::hybrid::{Testbed, TestbedConfig};
-use hpcorc::kube::{RemoteApi, WlmJobView, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB};
-use hpcorc::redbox::RedboxClient;
 use hpcorc::encoding::Value;
+use hpcorc::hybrid::{Testbed, TestbedConfig};
+use hpcorc::kube::{
+    ApiClient, ListOptions, RemoteApi, WlmJobView, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+};
+use hpcorc::redbox::RedboxClient;
 use std::time::Duration;
 
 #[test]
 fn cow_job_via_remote_api_over_socket() {
     // The CLI path: kubectl apply over the red-box socket, not in-proc.
     let tb = Testbed::start(TestbedConfig::default()).unwrap();
-    let api = RemoteApi::new(RedboxClient::connect(tb.socket()).unwrap());
+    let api = RemoteApi::connect(tb.socket()).unwrap();
     let objs = hpcorc::kube::yaml::parse_manifest(hpcorc::kube::yaml::COW_JOB_YAML).unwrap();
-    api.apply(&objs[0]).unwrap();
+    api.apply(objs[0].clone()).unwrap();
     let phase = tb.wait_torquejob("cow", Duration::from_secs(30)).unwrap();
     assert_eq!(phase, "completed");
     // kubectl get torquejob over the socket shows the Fig. 4 row.
-    let (_, items) = api.list(KIND_TORQUEJOB).unwrap();
-    assert_eq!(items.len(), 1);
-    assert_eq!(items[0].status.opt_str("phase"), Some("completed"));
+    let list = api.list(KIND_TORQUEJOB, &ListOptions::all()).unwrap();
+    assert_eq!(list.items.len(), 1);
+    assert_eq!(list.items[0].status.opt_str("phase"), Some("completed"));
     // qstat over the socket agrees.
-    let job_id = items[0].status.opt_str("jobId").unwrap().to_string();
+    let job_id = list.items[0].status.opt_str("jobId").unwrap().to_string();
     let client = RedboxClient::connect(tb.socket()).unwrap();
     let st = client
         .call("torque.Workload/JobStatus", Value::map().with("jobId", job_id))
