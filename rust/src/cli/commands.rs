@@ -7,9 +7,10 @@ use crate::kube::{
     default_scheme, Api, ApiClient, KubeObject, ListOptions, NodeView, RemoteApi,
     KIND_TORQUEJOB,
 };
+use crate::kueue::{ClusterQueueView, QueueOrdering, QueueResources};
 use crate::redbox::RedboxClient;
 use crate::sched::{EasyBackfill, FifoPolicy, KubeGreedyPolicy, SchedPolicy};
-use crate::sim::{simulate, SimParams};
+use crate::sim::{simulate, QueueAdmission, SimParams};
 use crate::util::{fmt_age, Error, Result};
 use crate::workload::{Trace, TraceGen};
 use std::time::Duration;
@@ -26,7 +27,8 @@ Testbed:
   demo      run the paper's Fig. 3-5 test case end to end and print it
 
 Kubernetes surface (against a running testbed; KIND accepts kubectl-style
-aliases — pods/po, nodes/no, deploy, torquejobs/tj, slurmjobs/sj):
+aliases — pods/po, nodes/no, deploy, torquejobs/tj, slurmjobs/sj,
+clusterqueues/cq, localqueues/lq):
   kubectl apply -f FILE --socket PATH
   kubectl get KIND [NAME] [--socket PATH] [-o yaml|json] [-l k=v,...]
   kubectl delete KIND NAME --socket PATH
@@ -38,10 +40,16 @@ Torque surface (against a running testbed):
   qdel JOBID --socket PATH       cancel
 
 Workload tooling:
-  trace gen --kind poisson|bursty|cybele|showcase [--jobs N] [--seed S]
-            [--out FILE]
+  trace gen --kind poisson|bursty|cybele|showcase|tenants [--jobs N]
+            [--seed S] [--tenants N] [--capacity CORES] [--load L]
+            [--mean-runtime SECS] [--out FILE]
   sim --trace FILE|--kind K --policy fifo|easy|kube [--nodes N] [--cores C]
-            run the discrete-event simulator, print the report row
+            [--quota-nodes Q [--cohort]]
+            run the discrete-event simulator, print the report row.
+            --quota-nodes meters each tenant queue found in the trace
+            through a Q-node ClusterQueue (kueue admission in front of the
+            policy); --cohort pools the quotas so idle capacity is
+            borrowable — compare the admitted row against the raw one
   sing list                      list built-in container images
   version [--components]         versions (Table I inventory)
 ";
@@ -241,6 +249,43 @@ fn print_table(kind: &str, server_now: f64, items: &[KubeObject]) {
                 );
             }
         }
+        "ClusterQueue" => {
+            println!(
+                "{:<16} {:<10} {:<12} {:>8} {:>9}",
+                "NAME", "COHORT", "NOMINAL", "PENDING", "ADMITTED"
+            );
+            for o in items {
+                let nominal = o
+                    .spec
+                    .path(&["quota", "nodes"])
+                    .and_then(crate::encoding::Value::as_int)
+                    .map(|n| format!("{n} nodes"))
+                    .unwrap_or_else(|| "unbounded".into());
+                println!(
+                    "{:<16} {:<10} {:<12} {:>8} {:>9}",
+                    o.meta.name,
+                    o.spec.opt_str("cohort").unwrap_or("<none>"),
+                    nominal,
+                    o.status.opt_int("pending").unwrap_or(0),
+                    o.status.opt_int("admitted").unwrap_or(0)
+                );
+            }
+        }
+        "LocalQueue" => {
+            println!(
+                "{:<16} {:<16} {:>8} {:>9}",
+                "NAME", "CLUSTERQUEUE", "PENDING", "ADMITTED"
+            );
+            for o in items {
+                println!(
+                    "{:<16} {:<16} {:>8} {:>9}",
+                    o.meta.name,
+                    o.spec.opt_str("clusterQueue").unwrap_or("<none>"),
+                    o.status.opt_int("pending").unwrap_or(0),
+                    o.status.opt_int("admitted").unwrap_or(0)
+                );
+            }
+        }
         _ => {
             println!("{:<16} {:<6} {:<12}", "NAME", "AGE", "STATUS");
             for o in items {
@@ -304,6 +349,18 @@ pub fn cmd_trace(args: &mut Args) -> Result<()> {
         "bursty" => g.bursty(jobs / 20, 20, 60.0),
         "cybele" => g.cybele_pilots(jobs / 10, jobs - jobs / 10, 1000.0),
         "showcase" => g.backfill_showcase(jobs / 5, args.num("capacity", 8)?),
+        "tenants" => {
+            let n: usize = args.num("tenants", 3)?;
+            let names: Vec<String> = (0..n).map(|i| format!("tenant-{i:02}")).collect();
+            let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+            g.multi_tenant(
+                jobs,
+                &refs,
+                args.num("capacity", 64)?,
+                args.num("load", 0.7)?,
+                args.num("mean-runtime", 120.0)?,
+            )
+        }
         other => return Err(Error::config(format!("unknown trace kind `{other}`"))),
     };
     let text = trace.to_json();
@@ -330,7 +387,36 @@ pub fn cmd_sim(args: &mut Args) -> Result<()> {
         cores_per_node: args.num("cores", 8)?,
         ..SimParams::default()
     };
-    let policy = policy_by_name(&args.flag_or("policy", "easy"))?;
+    let mut policy = policy_by_name(&args.flag_or("policy", "easy"))?;
+    // Queue layer (PR 2): meter every tenant queue in the trace through a
+    // ClusterQueue of --quota-nodes, optionally pooled into one cohort.
+    let quota_nodes: u32 = args.num("quota-nodes", 0)?;
+    if quota_nodes > 0 {
+        let cohort = args.bool("cohort").then_some("pool");
+        let mut tenants: Vec<String> =
+            trace.jobs.iter().filter_map(|j| j.queue.clone()).collect();
+        tenants.sort();
+        tenants.dedup();
+        if tenants.is_empty() {
+            return Err(Error::config(
+                "--quota-nodes needs a trace with per-tenant queue labels (trace gen --kind tenants)",
+            ));
+        }
+        let queues = tenants
+            .iter()
+            .map(|t| {
+                ClusterQueueView::from_object(&ClusterQueueView::build_full(
+                    t,
+                    cohort,
+                    QueueResources::nodes(quota_nodes),
+                    None,
+                    QueueOrdering::Fifo,
+                    Default::default(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        policy = Box::new(QueueAdmission::new(queues, policy));
+    }
     let report = simulate(&trace, &params, policy.as_ref());
     println!("{}", report.row());
     Ok(())

@@ -222,6 +222,10 @@ impl Testbed {
         let client: Arc<dyn ApiClient> = api.client();
         KubeScheduler::new(client.clone(), metrics.clone())
             .start(Duration::from_millis(1), shutdown.clone());
+        // Queue layer (PR 2): quota-aware gang admission. A no-op until
+        // someone applies ClusterQueue/LocalQueue objects — label-less
+        // workloads bypass it entirely.
+        crate::kueue::start_admission(client.clone(), metrics.clone(), shutdown.clone());
         // Workers + the login node (which is also a kube worker, Fig. 1).
         let mut worker_names: Vec<String> =
             (0..config.kube_workers).map(|i| format!("kw{i:02}")).collect();

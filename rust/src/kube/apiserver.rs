@@ -163,7 +163,8 @@ impl ApiServer {
         self.store.list(kind, selector)
     }
 
-    /// Full list API: label + field selectors and a freshness floor.
+    /// Full list API: label + field selectors, a freshness floor, and
+    /// name-cursor paging (`limit`/`continue`).
     pub fn list_opts(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
         self.metrics.inc("kube.api.list");
         // Version snapshot BEFORE listing: a write racing the list may then
@@ -176,13 +177,25 @@ impl ApiServer {
                 return Err(Error::conflict(kind, format!("list@{min}")));
             }
         }
-        let items = self
+        // Store order is (kind, name) — already the stable name order the
+        // continue cursor pages through.
+        let mut items: Vec<KubeObject> = self
             .store
             .list(kind, &opts.label_selector)
             .into_iter()
             .filter(|o| opts.matches_fields(o))
             .collect();
-        Ok(ObjectList { server_s: self.now_s(), resource_version, items })
+        if let Some(token) = &opts.continue_token {
+            items.retain(|o| o.meta.name.as_str() > token.as_str());
+        }
+        let mut continue_token = None;
+        if let Some(limit) = opts.limit {
+            if limit > 0 && items.len() > limit {
+                items.truncate(limit);
+                continue_token = items.last().map(|o| o.meta.name.clone());
+            }
+        }
+        Ok(ObjectList { server_s: self.now_s(), resource_version, items, continue_token })
     }
 
     pub fn current_version(&self) -> u64 {
@@ -356,13 +369,17 @@ impl Service for ApiService {
                 let kind = body.req_str("kind")?;
                 let opts = ListOptions::from_value(body);
                 let list = self.api.list_opts(kind, &opts)?;
-                Ok(Value::map()
+                let mut resp = Value::map()
                     .with("serverSeconds", list.server_s)
                     .with("resourceVersion", list.resource_version)
                     .with(
                         "items",
                         Value::Seq(list.items.iter().map(|o| o.encode()).collect()),
-                    ))
+                    );
+                if let Some(token) = &list.continue_token {
+                    resp.insert("continue", token.clone());
+                }
+                Ok(resp)
             }
             "Watch" => {
                 let kind = body.opt_str("kind");
@@ -472,6 +489,7 @@ impl ApiClient for RemoteApi {
             server_s: v.get("serverSeconds").and_then(Value::as_f64).unwrap_or(0.0),
             resource_version: v.opt_int("resourceVersion").unwrap_or(0) as u64,
             items,
+            continue_token: v.opt_str("continue").map(String::from),
         })
     }
 
@@ -512,12 +530,7 @@ impl ApiClient for RemoteApi {
                 from = rv;
             }
             let events = resp.get("events").and_then(Value::as_seq).unwrap_or(&[]);
-            // Back off while idle; snap back on activity.
-            period = if events.is_empty() {
-                (period * 2).min(WATCH_POLL_IDLE_MAX)
-            } else {
-                WATCH_POLL_PERIOD
-            };
+            let drained = !events.is_empty();
             for ev_v in events {
                 match WatchEvent::decode(ev_v) {
                     Ok(ev) => {
@@ -531,6 +544,19 @@ impl ApiClient for RemoteApi {
                     Err(_) => return,
                 }
             }
+            // Backoff invariant (audited for ISSUE-2): any event batch
+            // snaps the next poll back to the 2 ms active cadence; only
+            // empty polls back off (doubling toward the idle max). The
+            // server replays *every* event since the bookmark in a single
+            // response, so one active-cadence poll fully drains a burst
+            // that accumulated while backed off — and every poll sleeps
+            // at least the active period, keeping a sustained stream
+            // paced instead of becoming a busy RPC loop.
+            period = if drained {
+                WATCH_POLL_PERIOD
+            } else {
+                (period * 2).min(WATCH_POLL_IDLE_MAX)
+            };
             std::thread::sleep(period);
         });
         Ok(rx)
@@ -750,6 +776,36 @@ mod tests {
             .list_opts(KIND_POD, &ListOptions::all().not_older_than(a.current_version() + 10))
             .unwrap_err();
         assert!(err.is_conflict());
+    }
+
+    #[test]
+    fn paged_list_walks_all_objects() {
+        let a = api();
+        for i in 0..7 {
+            a.create(pod(&format!("p{i}"))).unwrap();
+        }
+        let mut seen = Vec::new();
+        let mut opts = ListOptions::all().with_limit(3);
+        let mut pages = 0;
+        loop {
+            let page = a.list_opts(KIND_POD, &opts).unwrap();
+            assert!(page.items.len() <= 3);
+            pages += 1;
+            seen.extend(page.items.iter().map(|o| o.meta.name.clone()));
+            match page.continue_token {
+                Some(t) => opts = ListOptions::all().with_limit(3).continue_from(&t),
+                None => break,
+            }
+        }
+        assert_eq!(pages, 3, "7 items at limit 3");
+        assert_eq!(seen, (0..7).map(|i| format!("p{i}")).collect::<Vec<_>>());
+        // limit 0 = unlimited; an exact-fit page carries no token.
+        let all = a.list_opts(KIND_POD, &ListOptions::all().with_limit(0)).unwrap();
+        assert_eq!(all.items.len(), 7);
+        assert!(all.continue_token.is_none());
+        let exact = a.list_opts(KIND_POD, &ListOptions::all().with_limit(7)).unwrap();
+        assert_eq!(exact.items.len(), 7);
+        assert!(exact.continue_token.is_none(), "exact fit is the final page");
     }
 
     fn rpc_pair(tag: &str) -> (Shutdown, RedboxServer, ApiServer, RemoteApi) {

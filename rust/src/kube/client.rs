@@ -19,14 +19,23 @@ use std::sync::Arc;
 
 /// List filters, mirroring the k8s list API: label selectors, field
 /// selectors over the encoded object tree (`spec.nodeName`,
-/// `status.phase`, `metadata.name`, ...), and a minimum resourceVersion
+/// `status.phase`, `metadata.name`, ...), a minimum resourceVersion
 /// (the `resourceVersionMatch=NotOlderThan` contract — the store always
-/// serves the latest state, so the only meaningful check is freshness).
+/// serves the latest state, so the only meaningful check is freshness),
+/// and paging (`limit` + the `continue` cursor from the previous page).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ListOptions {
     pub label_selector: Vec<(String, String)>,
     pub field_selector: Vec<(String, String)>,
     pub min_resource_version: Option<u64>,
+    /// Page size; 0/None = everything in one response.
+    pub limit: Option<usize>,
+    /// Resume cursor: the `continue_token` of the previous page. Unlike
+    /// real k8s (which pins a snapshot), pages walk the *live* store in
+    /// name order — items created behind the cursor are missed until the
+    /// next full relist, the same freshness contract as
+    /// `min_resource_version`.
+    pub continue_token: Option<String>,
 }
 
 impl ListOptions {
@@ -47,6 +56,18 @@ impl ListOptions {
 
     pub fn not_older_than(mut self, version: u64) -> ListOptions {
         self.min_resource_version = Some(version);
+        self
+    }
+
+    /// Page size for paged lists.
+    pub fn with_limit(mut self, limit: usize) -> ListOptions {
+        self.limit = Some(limit);
+        self
+    }
+
+    /// Resume after the given cursor (an [`ObjectList::continue_token`]).
+    pub fn continue_from(mut self, token: &str) -> ListOptions {
+        self.continue_token = Some(token.to_string());
         self
     }
 
@@ -94,6 +115,12 @@ impl ListOptions {
         if let Some(rv) = self.min_resource_version {
             v.insert("minResourceVersion", rv);
         }
+        if let Some(limit) = self.limit {
+            v.insert("limit", limit as u64);
+        }
+        if let Some(token) = &self.continue_token {
+            v.insert("continue", token.clone());
+        }
         v
     }
 
@@ -102,6 +129,8 @@ impl ListOptions {
             label_selector: v.get("labelSelector").map(decode_str_map).unwrap_or_default(),
             field_selector: v.get("fieldSelector").map(decode_str_map).unwrap_or_default(),
             min_resource_version: v.opt_int("minResourceVersion").map(|i| i as u64),
+            limit: v.opt_int("limit").map(|i| i as usize),
+            continue_token: v.opt_str("continue").map(String::from),
         }
     }
 }
@@ -147,6 +176,10 @@ pub struct ObjectList {
     pub server_s: f64,
     pub resource_version: u64,
     pub items: Vec<KubeObject>,
+    /// Set when a `limit` truncated the result: pass it back via
+    /// [`ListOptions::continue_from`] for the next page. `None` = final
+    /// (or only) page.
+    pub continue_token: Option<String>,
 }
 
 /// The unified resource-API surface. Object-safe by design: controllers
@@ -358,7 +391,9 @@ mod tests {
         let opts = ListOptions::all()
             .with_label("app", "web")
             .with_field("status.phase", "Running")
-            .not_older_than(7);
+            .not_older_than(7)
+            .with_limit(25)
+            .continue_from("pod-00042");
         assert_eq!(ListOptions::from_value(&opts.to_value()), opts);
         assert_eq!(ListOptions::from_value(&Value::map()), ListOptions::all());
     }

@@ -11,7 +11,7 @@ use crate::cluster::{Metrics, Resources, SharedFs};
 use crate::rt::{self, Shutdown};
 use crate::singularity::{ContainerId, ContainerSpec, ContainerStatus, Cri};
 use crate::util::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -21,7 +21,13 @@ pub struct Kubelet<C: Cri> {
     cri: C,
     fs: SharedFs,
     time_scale: f64,
-    running: Arc<Mutex<HashMap<String, ContainerId>>>,
+    /// pod name → (container, owning pod uid). The uid guards against a
+    /// pod deleted and recreated under the same name between syncs: the
+    /// new pod must never adopt the old pod's container.
+    running: Arc<Mutex<HashMap<String, (ContainerId, u64)>>>,
+    /// Pods whose container was ordered stopped by the reap path but has
+    /// not exited yet — the adoption arm must not resurrect these.
+    stopping: Arc<Mutex<HashSet<String>>>,
     metrics: Metrics,
 }
 
@@ -50,6 +56,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
             fs,
             time_scale,
             running: Arc::new(Mutex::new(HashMap::new())),
+            stopping: Arc::new(Mutex::new(HashSet::new())),
             metrics,
         })
     }
@@ -97,7 +104,10 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                     spec.time_scale = self.time_scale;
                     match self.cri.start(spec, self.fs.clone()) {
                         Ok(id) => {
-                            self.running.lock().unwrap().insert(pod_name.clone(), id);
+                            self.running
+                                .lock()
+                                .unwrap()
+                                .insert(pod_name.clone(), (id, obj.meta.uid));
                             let _ = self.api.update_status(KIND_POD, &pod_name, &|o| {
                                 o.status.insert("phase", "Running");
                                 o.status.insert("hostNode", self.node_name.clone());
@@ -116,7 +126,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                     }
                 }
                 (PodPhase::Running, true) => {
-                    let id = *self.running.lock().unwrap().get(&pod_name).unwrap();
+                    let (id, _) = *self.running.lock().unwrap().get(&pod_name).unwrap();
                     match self.cri.status(id) {
                         Ok(ContainerStatus::Exited(res)) => {
                             let phase =
@@ -146,28 +156,61 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                         _ => {}
                     }
                 }
+                (PodPhase::Pending, true) => {
+                    let (id, owner_uid) = *self.running.lock().unwrap().get(&pod_name).unwrap();
+                    let stale = owner_uid != obj.meta.uid
+                        || self.stopping.lock().unwrap().contains(&pod_name);
+                    if stale {
+                        // Dying (reap already ordered a stop) or owned by
+                        // a deleted pod that was recreated under the same
+                        // name: never adopt — stop it and finish the
+                        // teardown so a later sync starts a fresh one.
+                        let _ = self.cri.stop(id);
+                        self.stopping.lock().unwrap().insert(pod_name.clone());
+                        if matches!(self.cri.status(id), Ok(ContainerStatus::Exited(_))) {
+                            let _ = self.cri.remove(id);
+                            self.running.lock().unwrap().remove(&pod_name);
+                            self.stopping.lock().unwrap().remove(&pod_name);
+                        }
+                    } else {
+                        // The phase=Running write from a previous start
+                        // failed. The container is ours and healthy, so
+                        // adopt it — retry the write instead of killing
+                        // it; completion flows through the normal
+                        // (Running, true) arm on a later sync.
+                        let _ = self.api.update_status(KIND_POD, &pod_name, &|o| {
+                            o.status.insert("phase", "Running");
+                            o.status.insert("hostNode", self.node_name.clone());
+                        });
+                    }
+                }
                 _ => {}
             }
         }
-        // Reap containers whose pods were deleted out from under us. Only
-        // a definite NotFound counts — a transport error must not read as
-        // "stop every container on the node".
+        // Reap containers whose pods were deleted out from under us
+        // (NotFound) or are no longer bound to this node — an evicted
+        // (queue-layer preemption) or rebound pod must not leave a zombie
+        // container running off the scheduler's books. A transport error
+        // must not read as "stop every container on the node".
         let dangling: Vec<(String, ContainerId)> = {
             let running = self.running.lock().unwrap();
             running
                 .iter()
-                .filter(|(pod, _)| {
-                    self.api.get(KIND_POD, pod).err().map_or(false, |e| e.is_not_found())
+                .filter(|(pod, _)| match self.api.get(KIND_POD, pod) {
+                    Err(e) => e.is_not_found(),
+                    Ok(o) => o.spec.opt_str("nodeName") != Some(self.node_name.as_str()),
                 })
-                .map(|(p, id)| (p.clone(), *id))
+                .map(|(p, (id, _))| (p.clone(), *id))
                 .collect()
         };
         for (pod, id) in dangling {
             let _ = self.cri.stop(id);
+            self.stopping.lock().unwrap().insert(pod.clone());
             // remove() once it exits; next sync pass will retry until then.
             if matches!(self.cri.status(id), Ok(ContainerStatus::Exited(_))) {
                 let _ = self.cri.remove(id);
                 self.running.lock().unwrap().remove(&pod);
+                self.stopping.lock().unwrap().remove(&pod);
             }
         }
         (started, completed)
@@ -288,6 +331,36 @@ mod tests {
         api.create(pod).unwrap();
         let (started, _) = kubelet.sync_once();
         assert_eq!(started, 0);
+    }
+
+    #[test]
+    fn unbound_pod_container_reaped_and_pod_restartable() {
+        let (api, kubelet) = setup();
+        bound_pod(&api, "pe", "slow.sif");
+        kubelet.sync_once();
+        assert_eq!(phase(&api, "pe"), "Running");
+        // Queue-layer eviction: unbind and reset the phase (what
+        // kueue::evict_gang writes). The container must be reaped.
+        api.update_status(KIND_POD, "pe", |o| {
+            o.spec.remove("nodeName");
+            o.status.insert("phase", "Pending");
+        })
+        .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while kubelet.running.lock().unwrap().contains_key("pe") {
+            assert!(std::time::Instant::now() < deadline, "zombie container never reaped");
+            kubelet.sync_once();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Re-admission re-binds the pod: a fresh container starts (the
+        // pod must not wedge in Pending on its old container entry).
+        api.update_status(KIND_POD, "pe", |o| {
+            o.spec.insert("nodeName", "w1");
+        })
+        .unwrap();
+        let (started, _) = kubelet.sync_once();
+        assert_eq!(started, 1, "evicted pod restarts after re-binding");
+        assert_eq!(phase(&api, "pe"), "Running");
     }
 
     #[test]

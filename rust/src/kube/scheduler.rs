@@ -43,13 +43,13 @@ impl KubeScheduler {
     pub fn run_cycle(&self) -> usize {
         let t0 = std::time::Instant::now();
         // A broken transport must not masquerade as "nothing to schedule".
-        // (Typed lists already skip undecodable objects, so a malformed
+        // (Undecodable objects are skipped below, so a malformed
         // hand-written manifest cannot wedge the cycle either.)
         let (nodes, pods) = match (
             self.nodes.list(&ListOptions::all()),
-            self.pods.list(&ListOptions::all()),
+            self.pods.list_raw(&ListOptions::all()),
         ) {
-            (Ok(n), Ok(p)) => (n, p),
+            (Ok(n), Ok(p)) => (n, p.items),
             (Err(e), _) | (_, Err(e)) => {
                 self.metrics.inc("kube.sched.list_errors");
                 crate::warn!("kube-sched", "list failed, skipping cycle: {e}");
@@ -60,14 +60,24 @@ impl KubeScheduler {
         let mut used: Vec<(String, Resources)> =
             nodes.iter().map(|n| (n.name.clone(), Resources::ZERO)).collect();
         let mut pending: Vec<PodView> = Vec::new();
-        for view in pods {
+        for obj in &pods {
+            let Ok(view) = PodView::from_object(obj) else { continue };
             match (&view.node_name, view.phase) {
                 (Some(node), phase) if !phase.terminal() => {
                     if let Some((_, u)) = used.iter_mut().find(|(n, _)| n == node) {
                         *u += view.requests;
                     }
                 }
-                (None, PodPhase::Pending) => pending.push(view),
+                (None, PodPhase::Pending) => {
+                    // Queue layer (PR 2): a pod that opted into quota
+                    // admission stays unbound until the admission
+                    // controller flips its Admitted condition.
+                    if crate::kueue::admission_gated(obj) {
+                        self.metrics.inc("kube.sched.gated");
+                        continue;
+                    }
+                    pending.push(view);
+                }
                 _ => {}
             }
         }
@@ -255,6 +265,23 @@ mod tests {
         api.create(pod).unwrap();
         sched.run_cycle();
         assert_eq!(node_of(&api, "gp").as_deref(), Some("w2"));
+    }
+
+    #[test]
+    fn admission_gated_pod_held_until_admitted() {
+        let (api, sched) = setup();
+        add_node(&api, "w1", 8);
+        let mut pod = PodView::build("gated", "img", Resources::new(100, 1 << 20, 0), &[]);
+        pod.meta.set_label(crate::kueue::QUEUE_NAME_LABEL, "team");
+        api.create(pod).unwrap();
+        assert_eq!(sched.run_cycle(), 0, "gated pod must not bind");
+        // The admission controller flips the condition → next cycle binds.
+        api.update_status(KIND_POD, "gated", |o| {
+            crate::kueue::set_condition(&mut o.status, crate::kueue::COND_ADMITTED, true);
+        })
+        .unwrap();
+        assert_eq!(sched.run_cycle(), 1);
+        assert_eq!(node_of(&api, "gated").as_deref(), Some("w1"));
     }
 
     #[test]

@@ -146,9 +146,30 @@ impl Scheme {
         plural: &str,
         short_names: &[&str],
     ) -> Result<()> {
-        let (group, version) = WLM_API_VERSION
+        self.register_grouped_crd(WLM_API_VERSION, kind, plural, short_names)
+    }
+
+    /// Register a CRD kind under the queue layer's `kueue.x-k8s.io`
+    /// group (PR 2: ClusterQueue/LocalQueue and friends).
+    pub fn register_kueue_crd(
+        &mut self,
+        kind: &str,
+        plural: &str,
+        short_names: &[&str],
+    ) -> Result<()> {
+        self.register_grouped_crd(crate::kueue::KUEUE_API_VERSION, kind, plural, short_names)
+    }
+
+    fn register_grouped_crd(
+        &mut self,
+        api_version: &str,
+        kind: &str,
+        plural: &str,
+        short_names: &[&str],
+    ) -> Result<()> {
+        let (group, version) = api_version
             .split_once('/')
-            .ok_or_else(|| Error::internal("WLM_API_VERSION must be group/version"))?;
+            .ok_or_else(|| Error::internal("CRD apiVersion must be group/version"))?;
         self.register(KindSpec::new(
             GroupVersionKind::new(group, version, kind),
             plural,
@@ -193,7 +214,8 @@ impl Scheme {
 }
 
 /// The process-wide default scheme: built-ins plus the two WLM CRDs the
-/// operators ship (TorqueJob, SlurmJob). Controllers and the CLI resolve
+/// operators ship (TorqueJob, SlurmJob) and the queue layer's admission
+/// CRDs (ClusterQueue, LocalQueue). Controllers and the CLI resolve
 /// against this unless handed a custom scheme.
 pub fn default_scheme() -> &'static Scheme {
     static SCHEME: OnceLock<Scheme> = OnceLock::new();
@@ -201,6 +223,10 @@ pub fn default_scheme() -> &'static Scheme {
         let mut s = Scheme::with_builtins();
         s.register_wlm_crd(KIND_TORQUEJOB, "torquejobs", &["tj"]).expect("torquejob crd");
         s.register_wlm_crd(KIND_SLURMJOB, "slurmjobs", &["sj"]).expect("slurmjob crd");
+        s.register_kueue_crd(crate::kueue::KIND_CLUSTERQUEUE, "clusterqueues", &["cq"])
+            .expect("clusterqueue crd");
+        s.register_kueue_crd(crate::kueue::KIND_LOCALQUEUE, "localqueues", &["lq"])
+            .expect("localqueue crd");
         s
     })
 }
@@ -243,10 +269,20 @@ mod tests {
             ("slurmjob", "SlurmJob"),
             ("slurmjobs", "SlurmJob"),
             ("sj", "SlurmJob"),
+            ("clusterqueue", "ClusterQueue"),
+            ("clusterqueues", "ClusterQueue"),
+            ("cq", "ClusterQueue"),
+            ("localqueue", "LocalQueue"),
+            ("localqueues", "LocalQueue"),
+            ("lq", "LocalQueue"),
         ] {
             assert_eq!(s.canonical_kind(alias), Some(kind), "alias {alias}");
         }
         assert_eq!(s.canonical_kind("gizmo"), None);
+        assert_eq!(
+            s.api_version_for("cq").as_deref(),
+            Some(crate::kueue::KUEUE_API_VERSION)
+        );
     }
 
     #[test]

@@ -1,0 +1,558 @@
+//! The admission cycle: suspend → reserve → admit → preempt, level-
+//! triggered over any [`ApiClient`].
+//!
+//! Each cycle rebuilds the whole picture from the API (queues, admitted
+//! usage, pending gangs) and converges it one step — the same
+//! crash-tolerant shape as the scheduler's `run_cycle`. Workloads whose
+//! quota cannot be reserved are simply *left alone* (their missing
+//! `Admitted` condition is the suspension — scheduler and operator gate
+//! on it), so a crashed controller resumes from the objects themselves.
+//!
+//! Gangs are atomic throughout: a multi-node WlmJob is one indivisible
+//! demand, a pod group only becomes admissible once all declared members
+//! exist, and the `Admitted` conditions of a gang's members are only ever
+//! written after the *entire* gang's quota was reserved in the ledger.
+
+use super::preemption::{evict_gang, select_victims, AdmittedGang};
+use super::quota::{Fit, Ledger};
+use super::types::{
+    is_admitted, queue_name, set_condition, workload_demand, workload_priority,
+    workload_terminal, ClusterQueueView, LocalQueueView, QueueOrdering, QueueResources,
+    COND_ADMITTED, COND_EVICTED, COND_QUOTA_RESERVED, KIND_CLUSTERQUEUE, KIND_LOCALQUEUE,
+    POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, WORKLOAD_KINDS,
+};
+use crate::cluster::Metrics;
+use crate::kube::{ApiClient, KubeObject, ListOptions};
+use crate::util::Result;
+use std::collections::BTreeMap;
+
+/// What one cycle did (workload-object granularity).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleReport {
+    /// Workload objects newly admitted this cycle.
+    pub admitted: usize,
+    /// Workload objects evicted by preemption this cycle.
+    pub preempted: usize,
+    /// Workload objects still gated after this cycle.
+    pub pending: usize,
+}
+
+/// A not-yet-admitted gang under consideration.
+#[derive(Debug, Clone)]
+struct PendingGang {
+    members: Vec<(String, String)>,
+    /// ClusterQueue charged on admission.
+    cq: String,
+    /// The raw queue-name label (LocalQueue counts key).
+    label: String,
+    demand: QueueResources,
+    priority: i64,
+    /// Min member uid: FIFO key (uids are assigned in creation order).
+    uid: u64,
+    /// Pod groups: all declared members present?
+    complete: bool,
+}
+
+/// The admission controller core. Stateless between cycles by design;
+/// cycles themselves are serialized (see [`AdmissionCore::cycle`]).
+pub struct AdmissionCore {
+    metrics: Metrics,
+    /// Serializes cycles: the shared core is driven from one runner
+    /// thread per watched kind, and two concurrent cycles holding
+    /// divergent list snapshots could each admit a different gang
+    /// against the same quota headroom (the reservation lives only in
+    /// the running cycle's ledger). Under the lock, every cycle lists
+    /// *after* the previous cycle's admission writes landed.
+    serial: std::sync::Mutex<()>,
+}
+
+impl AdmissionCore {
+    pub fn new(metrics: Metrics) -> AdmissionCore {
+        AdmissionCore { metrics, serial: std::sync::Mutex::new(()) }
+    }
+
+    /// One full admission cycle. Public for deterministic stepping in
+    /// tests and benches; the controller runtime calls it on every queue
+    /// or workload event.
+    pub fn cycle(&self, api: &dyn ApiClient) -> Result<CycleReport> {
+        let _one_at_a_time = self.serial.lock().unwrap();
+        let t0 = std::time::Instant::now();
+        self.metrics.inc("kueue.cycles");
+
+        // ---- the queue topology -------------------------------------
+        let cq_objs = api.list(KIND_CLUSTERQUEUE, &ListOptions::all())?.items;
+        let cqs: Vec<ClusterQueueView> = cq_objs
+            .iter()
+            .filter_map(|o| ClusterQueueView::from_object(o).ok())
+            .collect();
+        let lq_objs = api.list(KIND_LOCALQUEUE, &ListOptions::all())?.items;
+        let lqs: Vec<LocalQueueView> =
+            lq_objs.iter().filter_map(|o| LocalQueueView::from_object(o).ok()).collect();
+        if cqs.is_empty() && lqs.is_empty() {
+            // No queue topology: nothing can be admitted and no counts
+            // can change. Skip the workload listing entirely so clusters
+            // that never opted into queueing pay ~nothing per event.
+            return Ok(CycleReport::default());
+        }
+        let resolve = |label: &str| -> Option<String> {
+            lqs.iter()
+                .find(|lq| lq.name == label)
+                .map(|lq| lq.cluster_queue.clone())
+                .or_else(|| {
+                    cqs.iter().find(|cq| cq.name == label).map(|cq| cq.name.clone())
+                })
+                .filter(|cq| cqs.iter().any(|c| &c.name == cq))
+        };
+
+        // ---- workloads ----------------------------------------------
+        // Group by (queue label, pod group); solitary workloads are their
+        // own group. Admitted and pending members of the same group
+        // accumulate separately (keyed by the admitted flag): a
+        // partially-admitted group (crash mid-write) thus splits — the
+        // admitted members charge the ledger, the remainder forms a
+        // pending gang — and re-running the cycle completes the admission.
+        let mut gangs: BTreeMap<(bool, String, String), PendingGang> = BTreeMap::new();
+        let mut declared_counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        let mut group_sizes: BTreeMap<(String, String), usize> = BTreeMap::new();
+        let mut poisoned: std::collections::BTreeSet<(String, String)> =
+            std::collections::BTreeSet::new();
+        for kind in WORKLOAD_KINDS {
+            for obj in api.list(kind, &ListOptions::all())?.items {
+                let Some(label) = queue_name(&obj).map(String::from) else { continue };
+                // Admitted workloads charge the ClusterQueue stamped on
+                // them at admission time — deleting or retargeting a
+                // LocalQueue must not drop live charges (overcommit);
+                // pending workloads resolve through the live topology.
+                let stamped = obj.status.opt_str("clusterQueue").map(String::from);
+                let resolved = if is_admitted(&obj) {
+                    stamped.or_else(|| resolve(&label))
+                } else {
+                    resolve(&label)
+                };
+                let Some(cq) = resolved else {
+                    self.metrics.inc("kueue.unresolved_queue");
+                    continue; // stays suspended until its queue exists
+                };
+                let group = obj
+                    .meta
+                    .label(POD_GROUP_LABEL)
+                    .map(String::from)
+                    .unwrap_or_else(|| format!("__solo/{}/{}", obj.kind, obj.meta.name));
+                let key = (label.clone(), group);
+                *group_sizes.entry(key.clone()).or_insert(0) += 1;
+                if let Some(count) = annotation(&obj, POD_GROUP_COUNT_ANNOTATION)
+                    .and_then(|v| v.parse::<usize>().ok())
+                {
+                    let slot = declared_counts.entry(key.clone()).or_insert(0);
+                    *slot = (*slot).max(count);
+                }
+                // Terminal members release their quota charge but still
+                // count toward the declared group size above — a gang must
+                // not become permanently "incomplete" (and unadmittable)
+                // because one member already finished.
+                if workload_terminal(&obj) {
+                    continue;
+                }
+                let Ok(demand) = workload_demand(&obj) else {
+                    // An undecodable member can never be admitted, so its
+                    // whole gang must be held — admitting the decodable
+                    // remainder would be a partial gang.
+                    self.metrics.inc("kueue.undecodable_workload");
+                    poisoned.insert(key);
+                    continue;
+                };
+                let priority = workload_priority(&obj);
+                let g = gangs
+                    .entry((is_admitted(&obj), key.0, key.1))
+                    .or_insert_with(|| PendingGang {
+                        members: Vec::new(),
+                        cq,
+                        label: label.clone(),
+                        demand: QueueResources::ZERO,
+                        priority,
+                        uid: obj.meta.uid,
+                        complete: true,
+                    });
+                g.members.push((obj.kind.clone(), obj.meta.name.clone()));
+                g.demand = g.demand.saturating_add(&demand);
+                g.priority = g.priority.max(priority);
+                g.uid = g.uid.min(obj.meta.uid);
+            }
+        }
+
+        // ---- the ledger ---------------------------------------------
+        // Split the accumulated gangs; admitted demand charges the ledger,
+        // pending gangs get their completeness verdict (all declared
+        // members present, admitted + pending + terminal).
+        let mut ledger = Ledger::new(cqs.clone());
+        let mut admitted: Vec<AdmittedGang> = Vec::new();
+        let mut pending_gangs: Vec<PendingGang> = Vec::new();
+        for ((is_adm, label, group), mut gang) in gangs {
+            if is_adm {
+                let g = AdmittedGang {
+                    members: gang.members,
+                    queue: gang.cq,
+                    label: gang.label,
+                    demand: gang.demand,
+                    priority: gang.priority,
+                    uid: gang.uid,
+                };
+                ledger.charge(&g.queue, &g.demand);
+                admitted.push(g);
+            } else {
+                let grouped = !group.starts_with("__solo/");
+                let key = (label, group);
+                gang.complete = !poisoned.contains(&key)
+                    && match declared_counts.get(&key) {
+                        Some(declared) => {
+                            group_sizes.get(&key).copied().unwrap_or(0) >= *declared
+                        }
+                        // A grouped gang whose declared size is not yet
+                        // known (the annotated member hasn't been created)
+                        // must be held — admitting early members one by one
+                        // is exactly the partial admission gangs exist to
+                        // prevent. Solo workloads carry no annotation and
+                        // are always ready.
+                        None => !grouped,
+                    };
+                pending_gangs.push(gang);
+            }
+        }
+
+        // ---- admit, strictly ordered per queue ----------------------
+        let mut report = CycleReport::default();
+        let mut pending: Vec<PendingGang> = pending_gangs;
+        for cq in &cqs {
+            let mut queue_gangs: Vec<&PendingGang> =
+                pending.iter().filter(|g| g.cq == cq.name).collect();
+            match cq.ordering {
+                QueueOrdering::Fifo => queue_gangs.sort_by_key(|g| g.uid),
+                QueueOrdering::Priority => {
+                    queue_gangs.sort_by(|a, b| b.priority.cmp(&a.priority).then(a.uid.cmp(&b.uid)))
+                }
+            }
+            let mut decisions: Vec<PendingGang> = Vec::new();
+            for gang in queue_gangs {
+                if !gang.complete {
+                    continue; // waiting for members; does not block the queue
+                }
+                let fit = ledger.fit(&cq.name, &gang.demand);
+                match fit {
+                    Fit::Ok { borrowed } => {
+                        if borrowed {
+                            self.metrics.inc("kueue.admitted_borrowing");
+                        }
+                        ledger.charge(&cq.name, &gang.demand);
+                        decisions.push(gang.clone());
+                    }
+                    Fit::BlockedWithinNominal => {
+                        let Some(victims) =
+                            select_victims(&ledger, &admitted, cq, &gang.demand, gang.priority)
+                        else {
+                            break; // strict: a blocked head holds the queue
+                        };
+                        for v in &victims {
+                            evict_gang(api, v)?;
+                            ledger.uncharge(&v.queue, &v.demand);
+                            report.preempted += v.members.len();
+                            self.metrics.inc("kueue.gangs_preempted");
+                        }
+                        admitted.retain(|a| !victims.contains(a));
+                        ledger.charge(&cq.name, &gang.demand);
+                        decisions.push(gang.clone());
+                    }
+                    Fit::Blocked | Fit::UnknownQueue => break,
+                }
+            }
+            for gang in decisions {
+                self.admit(api, &gang.members, &cq.name)?;
+                report.admitted += gang.members.len();
+                self.metrics.inc("kueue.gangs_admitted");
+                // Move into the admitted set so counts (and later queues'
+                // preemption searches) see it; drop from pending.
+                pending.retain(|g| g.members != gang.members);
+                admitted.push(AdmittedGang {
+                    members: gang.members,
+                    queue: gang.cq,
+                    label: gang.label,
+                    demand: gang.demand,
+                    priority: gang.priority,
+                    uid: gang.uid,
+                });
+            }
+        }
+        report.pending = pending.iter().map(|g| g.members.len()).sum();
+
+        // ---- queue status counts (write only on change) --------------
+        let mut cq_counts: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
+        let mut lq_counts: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
+        for g in &pending {
+            count_into(&mut cq_counts, &g.cq, g.members.len() as u64, 0);
+            if lqs.iter().any(|l| l.name == g.label) {
+                count_into(&mut lq_counts, &g.label, g.members.len() as u64, 0);
+            }
+        }
+        for g in &admitted {
+            count_into(&mut cq_counts, &g.queue, 0, g.members.len() as u64);
+            if lqs.iter().any(|l| l.name == g.label) {
+                count_into(&mut lq_counts, &g.label, 0, g.members.len() as u64);
+            }
+        }
+        for cq in &cqs {
+            let (p, a) = cq_counts.get(cq.name.as_str()).copied().unwrap_or((0, 0));
+            if cq.pending != p || cq.admitted != a {
+                update_counts(api, KIND_CLUSTERQUEUE, &cq.name, p, a)?;
+            }
+        }
+        for lq in &lqs {
+            let (p, a) = lq_counts.get(lq.name.as_str()).copied().unwrap_or((0, 0));
+            if lq.pending != p || lq.admitted != a {
+                update_counts(api, KIND_LOCALQUEUE, &lq.name, p, a)?;
+            }
+        }
+
+        self.metrics.observe("kueue.cycle_ns", t0.elapsed().as_nanos() as u64);
+        Ok(report)
+    }
+
+    /// Flip a whole gang's members to admitted, stamping the ClusterQueue
+    /// their demand is charged to. Only called after the full gang was
+    /// reserved in the ledger — this write order is what the
+    /// "all-or-nothing" guarantee rests on.
+    fn admit(&self, api: &dyn ApiClient, members: &[(String, String)], cq: &str) -> Result<()> {
+        for (i, (kind, name)) in members.iter().enumerate() {
+            let res = api.update_status(kind, name, &|o| {
+                set_condition(&mut o.status, COND_QUOTA_RESERVED, true);
+                set_condition(&mut o.status, COND_ADMITTED, true);
+                set_condition(&mut o.status, COND_EVICTED, false);
+                o.status.insert("clusterQueue", cq);
+            });
+            match res {
+                Ok(_) => {}
+                // Deleted between list and write: its charge vanishes
+                // next cycle; nothing to unwind.
+                Err(e) if e.is_not_found() => {}
+                Err(e) => {
+                    // Best-effort unwind: a partially-admitted gang must
+                    // not survive the cycle — the reservation lives only
+                    // in this cycle's ledger, so stranded members would
+                    // run while the remainder can never re-fit. Roll the
+                    // already-written members back to suspended.
+                    for (k, n) in &members[..i] {
+                        let _ = api.update_status(k, n, &|o| {
+                            set_condition(&mut o.status, COND_ADMITTED, false);
+                            set_condition(&mut o.status, COND_QUOTA_RESERVED, false);
+                            o.status.remove("clusterQueue");
+                        });
+                    }
+                    self.metrics.inc("kueue.admit_unwound");
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn annotation<'a>(obj: &'a KubeObject, key: &str) -> Option<&'a str> {
+    obj.meta.annotations.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn count_into<'a>(
+    counts: &mut BTreeMap<&'a str, (u64, u64)>,
+    key: &'a str,
+    pending: u64,
+    admitted: u64,
+) {
+    let slot = counts.entry(key).or_insert((0, 0));
+    slot.0 += pending;
+    slot.1 += admitted;
+}
+
+fn update_counts(
+    api: &dyn ApiClient,
+    kind: &str,
+    name: &str,
+    pending: u64,
+    admitted: u64,
+) -> Result<()> {
+    match api.update_status(kind, name, &|o| {
+        o.status.insert("pending", pending);
+        o.status.insert("admitted", admitted);
+    }) {
+        Ok(_) => Ok(()),
+        Err(e) if e.is_not_found() => Ok(()),
+        Err(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resources;
+    use crate::kube::{ApiServer, PodView, KIND_POD};
+    use crate::kueue::types::QUEUE_NAME_LABEL;
+
+    fn api() -> ApiServer {
+        ApiServer::new(Metrics::new())
+    }
+
+    fn labelled_pod(name: &str, queue: &str, cpu: u64) -> KubeObject {
+        let mut p = PodView::build(name, "img.sif", Resources::new(cpu, 1 << 20, 0), &[]);
+        p.meta.set_label(QUEUE_NAME_LABEL, queue);
+        p
+    }
+
+    #[test]
+    fn unlabelled_workloads_ignored_and_unknown_queue_held() {
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(PodView::build("plain", "img.sif", Resources::ZERO, &[])).unwrap();
+        a.create(labelled_pod("orphan", "no-such-queue", 100)).unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r, CycleReport::default(), "nothing admitted, nothing counted");
+        assert!(!is_admitted(&a.get(KIND_POD, "orphan").unwrap()));
+        assert!(!is_admitted(&a.get(KIND_POD, "plain").unwrap()));
+    }
+
+    #[test]
+    fn admits_within_quota_and_reports_counts() {
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(ClusterQueueView::build("cq-a", QueueResources::nodes(2))).unwrap();
+        a.create(LocalQueueView::build("team", "cq-a")).unwrap();
+        for i in 0..3 {
+            a.create(labelled_pod(&format!("p{i}"), "team", 100)).unwrap();
+        }
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 2, "FIFO: first two fit the 2-node quota");
+        assert_eq!(r.pending, 1);
+        assert!(is_admitted(&a.get(KIND_POD, "p0").unwrap()));
+        assert!(is_admitted(&a.get(KIND_POD, "p1").unwrap()));
+        assert!(!is_admitted(&a.get(KIND_POD, "p2").unwrap()));
+        // Status counts landed on both queue objects.
+        let cq = ClusterQueueView::from_object(&a.get(KIND_CLUSTERQUEUE, "cq-a").unwrap()).unwrap();
+        assert_eq!((cq.pending, cq.admitted), (1, 2));
+        let lq = LocalQueueView::from_object(&a.get(KIND_LOCALQUEUE, "team").unwrap()).unwrap();
+        assert_eq!(lq.pending, 1);
+        // A second cycle is a no-op (stability: no write storms).
+        let v = a.current_version();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 0);
+        assert_eq!(a.current_version(), v, "steady state writes nothing");
+        // Completion releases quota for the straggler.
+        a.update_status(KIND_POD, "p0", |o| o.status.insert("phase", "Succeeded")).unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 1);
+        assert!(is_admitted(&a.get(KIND_POD, "p2").unwrap()));
+    }
+
+    #[test]
+    fn direct_cluster_queue_label_resolves() {
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(ClusterQueueView::build("cq-direct", QueueResources::nodes(1))).unwrap();
+        a.create(labelled_pod("p", "cq-direct", 100)).unwrap();
+        assert_eq!(core.cycle(&a).unwrap().admitted, 1);
+    }
+
+    #[test]
+    fn strict_fifo_blocks_behind_wide_gang() {
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(ClusterQueueView::build("cq", QueueResources::nodes(3))).unwrap();
+        // Head gang needs 2 nodes via a pod group; only 1 node free after
+        // an earlier admission -> the whole queue waits behind it.
+        a.create(labelled_pod("first", "cq", 100)).unwrap();
+        a.create(labelled_pod("second", "cq", 100)).unwrap();
+        assert_eq!(core.cycle(&a).unwrap().admitted, 2); // 1 node left
+        let mut g0 = labelled_pod("wide-0", "cq", 100);
+        g0.meta.set_label(POD_GROUP_LABEL, "wide");
+        g0.meta
+            .annotations
+            .push((POD_GROUP_COUNT_ANNOTATION.to_string(), "2".to_string()));
+        let mut g1 = labelled_pod("wide-1", "cq", 100);
+        g1.meta.set_label(POD_GROUP_LABEL, "wide");
+        a.create(g0).unwrap();
+        a.create(g1).unwrap();
+        a.create(labelled_pod("small", "cq", 100)).unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 0, "wide gang blocked; strict FIFO holds `small` too");
+        assert_eq!(r.pending, 3);
+        assert!(!is_admitted(&a.get(KIND_POD, "small").unwrap()));
+    }
+
+    #[test]
+    fn group_without_declared_count_is_held() {
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(ClusterQueueView::build("cq", QueueResources::nodes(10))).unwrap();
+        // First member arrives WITHOUT the count annotation (the docs
+        // allow it on any member): the group must be held, not admitted
+        // one member at a time.
+        let mut g0 = labelled_pod("h-0", "cq", 100);
+        g0.meta.set_label(POD_GROUP_LABEL, "h");
+        a.create(g0).unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 0, "unknown gang size: held");
+        // The annotated member lands: both admit together.
+        let mut g1 = labelled_pod("h-1", "cq", 100);
+        g1.meta.set_label(POD_GROUP_LABEL, "h");
+        g1.meta
+            .annotations
+            .push((POD_GROUP_COUNT_ANNOTATION.to_string(), "2".to_string()));
+        a.create(g1).unwrap();
+        assert_eq!(core.cycle(&a).unwrap().admitted, 2);
+    }
+
+    #[test]
+    fn completed_group_member_still_counts_for_completeness() {
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(ClusterQueueView::build("cq", QueueResources::nodes(2))).unwrap();
+        for i in 0..2 {
+            let mut g = labelled_pod(&format!("g-{i}"), "cq", 100);
+            g.meta.set_label(POD_GROUP_LABEL, "g");
+            g.meta
+                .annotations
+                .push((POD_GROUP_COUNT_ANNOTATION.to_string(), "2".to_string()));
+            a.create(g).unwrap();
+        }
+        assert_eq!(core.cycle(&a).unwrap().admitted, 2);
+        // g-0 finishes; g-1 loses its admission (eviction shape). The
+        // survivor must re-admit: the finished member still counts toward
+        // the declared group size.
+        a.update_status(KIND_POD, "g-0", |o| o.status.insert("phase", "Succeeded")).unwrap();
+        a.update_status(KIND_POD, "g-1", |o| {
+            set_condition(&mut o.status, COND_ADMITTED, false);
+        })
+        .unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 1, "remainder of a partially-completed gang re-admits");
+        assert!(is_admitted(&a.get(KIND_POD, "g-1").unwrap()));
+    }
+
+    #[test]
+    fn priority_ordering_reorders_admission() {
+        use crate::kueue::types::{PreemptionPolicy, PRIORITY_LABEL};
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(ClusterQueueView::build_full(
+            "cq",
+            None,
+            QueueResources::nodes(1),
+            None,
+            QueueOrdering::Priority,
+            PreemptionPolicy::default(),
+        ))
+        .unwrap();
+        a.create(labelled_pod("old-low", "cq", 100)).unwrap();
+        let mut vip = labelled_pod("new-high", "cq", 100);
+        vip.meta.set_label(PRIORITY_LABEL, "5");
+        a.create(vip).unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 1);
+        assert!(is_admitted(&a.get(KIND_POD, "new-high").unwrap()), "priority jumps FIFO");
+        assert!(!is_admitted(&a.get(KIND_POD, "old-low").unwrap()));
+    }
+}

@@ -1,0 +1,89 @@
+//! Queue layer: quota-aware gang admission in front of the scheduler and
+//! the operator — a Kueue-style (kueue.x-k8s.io) admission subsystem.
+//!
+//! The paper's Torque-Operator bridges micro-services and batch jobs, but
+//! without a queueing layer every workload races straight into
+//! scheduling: no tenant quotas, no fairness, and no all-or-nothing gang
+//! semantics — exactly the gap converged-computing systems close with an
+//! admission layer (Kueue; the Flux Operator, arXiv:2309.17420) and that
+//! High-Performance Kubernetes (arXiv:2409.16919) names as the blocker
+//! for cloud-native workloads on HPC.
+//!
+//! # Object model ([`types`])
+//!
+//! Two CRDs, registered in [`crate::kube::default_scheme`] like any other
+//! kind:
+//!
+//! - **ClusterQueue** (`kubectl get clusterqueues` / `cq`) — per-resource
+//!   quotas over the `{nodes, cpu, memory}` vector: `nominal` (always
+//!   usable) and an optional `borrowingLimit` (cap on overdraft), a
+//!   `cohort` name pooling spare capacity with peer queues, `ordering`
+//!   (`fifo` | `priority`), and a `preemption` policy.
+//! - **LocalQueue** (`localqueues` / `lq`) — the user-facing binding that
+//!   points at a ClusterQueue.
+//!
+//! Workloads (Pods, TorqueJobs, SlurmJobs) opt in with the
+//! `kueue.x-k8s.io/queue-name` label; pods may additionally form gangs
+//! via the pod-group label + count annotation.
+//!
+//! # Admission flow: suspend → reserve → admit → preempt
+//!
+//! 1. **suspend** — a labelled workload is born *gated*: its `Admitted`
+//!    condition is unset, and both [`crate::kube::KubeScheduler`] (for
+//!    pods) and the operator's dummy-pod path (for WlmJobs) refuse to
+//!    touch gated workloads. Suspension is the *absence* of admission, so
+//!    a crashed controller loses nothing.
+//! 2. **reserve** — each [`admission::AdmissionCore::cycle`] rebuilds a
+//!    pure [`quota::Ledger`] from the queues and the currently admitted
+//!    workloads, then walks each queue's pending gangs in (FIFO or
+//!    priority) order, reserving quota for a gang only if its *entire*
+//!    demand fits — nominal first, then borrowing from idle cohort
+//!    capacity up to the borrowing limit.
+//! 3. **admit** — only after the whole gang is reserved are its members'
+//!    `QuotaReserved`/`Admitted` conditions written; scheduler and
+//!    operator then proceed (a multi-node TorqueJob submits over red-box
+//!    exactly once, with all of its nodes).
+//! 4. **preempt** — when a gang that fits within its own nominal quota is
+//!    blocked, [`preemption::select_victims`] simulates evictions on a
+//!    cloned ledger: cohort peers holding *borrowed* capacity are
+//!    reclaimed first (`reclaimWithinCohort`), then lower-priority gangs
+//!    in the same queue (`withinClusterQueue`) — cheapest victims first,
+//!    whole gangs only, and nothing is evicted unless it actually makes
+//!    the incoming gang fit. Evicted pods are unbound; evicted WlmJobs
+//!    are cancelled over red-box by the operator and resubmitted when
+//!    re-admitted.
+//!
+//! # Mapping to Kueue / Flux concepts
+//!
+//! | here                          | Kueue                      | Flux Operator         |
+//! |-------------------------------|----------------------------|-----------------------|
+//! | `queue-name` label            | `queue-name` label         | MiniCluster job spec  |
+//! | gated (no `Admitted`)         | `spec.suspend=true`        | held in flux queue    |
+//! | `Ledger` nominal/borrowing    | `nominalQuota`/`borrowingLimit` | bank accounting  |
+//! | cohort                        | cohort                     | flux bank hierarchy   |
+//! | gang (WlmJob / pod group)     | Workload with podSets      | MiniCluster gang      |
+//! | `QuotaReserved`→`Admitted`    | same two conditions        | alloc in flux-sched   |
+//!
+//! The simulator mirrors the same semantics with
+//! [`crate::sim::QueueAdmission`], a quota filter in front of any
+//! `SchedPolicy`, so E1-style experiments can compare admitted vs raw
+//! traces at scale.
+
+pub mod admission;
+pub mod controller;
+pub mod preemption;
+pub mod quota;
+pub mod types;
+
+pub use admission::{AdmissionCore, CycleReport};
+pub use controller::{start_admission, KueueController};
+pub use preemption::{evict_gang, select_victims, AdmittedGang};
+pub use quota::{Fit, Ledger, QueueState};
+pub use types::{
+    admission_gated, get_condition, is_admitted, is_evicted, queue_name, set_condition,
+    workload_demand, workload_priority, workload_terminal, ClusterQueueView, LocalQueueView,
+    PreemptionPolicy, QueueOrdering, QueueResources, COND_ADMITTED, COND_EVICTED,
+    COND_QUOTA_RESERVED, KIND_CLUSTERQUEUE, KIND_LOCALQUEUE, KUEUE_API_VERSION,
+    POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, PRIORITY_LABEL, QUEUE_NAME_LABEL,
+    WORKLOAD_KINDS,
+};

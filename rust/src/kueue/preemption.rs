@@ -1,0 +1,258 @@
+//! Preemption: evict borrowing or lower-priority gangs so a
+//! within-nominal gang can take the quota it was promised.
+//!
+//! Two mechanisms, enabled per-ClusterQueue (the *incoming* gang's queue
+//! decides what it may evict):
+//!
+//! - **reclaimWithinCohort** — cohort peers holding capacity beyond their
+//!   nominal quota (borrowers) lose it back when the lender needs it;
+//! - **withinClusterQueue** — lower-priority gangs admitted through the
+//!   same queue make room for a higher-priority arrival.
+//!
+//! Victims are whole gangs (pod groups / multi-node WlmJobs are evicted
+//! atomically — admitting gangs all-or-nothing and then evicting them one
+//! member at a time would break the invariant the layer exists for).
+//! Selection is a greedy search over a cloned [`Ledger`]: cheapest-to-kill
+//! first (lowest priority, then newest), stopping as soon as the incoming
+//! gang fits; if the search cannot make it fit, nothing is evicted.
+
+use super::quota::Ledger;
+use super::types::{
+    set_condition, workload_terminal, ClusterQueueView, QueueResources, COND_ADMITTED,
+    COND_EVICTED, COND_QUOTA_RESERVED,
+};
+use crate::kube::{ApiClient, KIND_POD};
+use crate::util::Result;
+
+/// One admitted gang as the preemption search sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmittedGang {
+    /// Member objects: (kind, name).
+    pub members: Vec<(String, String)>,
+    /// ClusterQueue the gang's demand is charged to.
+    pub queue: String,
+    /// The raw queue-name label (LocalQueue it was submitted through).
+    pub label: String,
+    pub demand: QueueResources,
+    pub priority: i64,
+    /// Admission order proxy (min member uid): newer gangs evict first.
+    pub uid: u64,
+}
+
+/// Pick gangs to evict so `demand` fits in `cq`; `None` when preemption
+/// cannot clear the blockage (the gang keeps waiting instead of evicting
+/// uselessly). Callers only invoke this for `Fit::BlockedWithinNominal`.
+pub fn select_victims(
+    ledger: &Ledger,
+    admitted: &[AdmittedGang],
+    cq: &ClusterQueueView,
+    demand: &QueueResources,
+    priority: i64,
+) -> Option<Vec<AdmittedGang>> {
+    if !cq.preemption.reclaim_within_cohort && !cq.preemption.within_queue {
+        return None;
+    }
+    let mut candidates: Vec<&AdmittedGang> = admitted
+        .iter()
+        .filter(|g| {
+            if g.queue == cq.name {
+                cq.preemption.within_queue && g.priority < priority
+            } else {
+                cq.preemption.reclaim_within_cohort
+                    && cq.cohort.is_some()
+                    && ledger
+                        .queue(&g.queue)
+                        .map(|q| q.view.cohort == cq.cohort && q.is_borrowing())
+                        .unwrap_or(false)
+            }
+        })
+        .collect();
+    // Cheapest victims first: lowest priority, then newest admission.
+    candidates.sort_by(|a, b| a.priority.cmp(&b.priority).then(b.uid.cmp(&a.uid)));
+
+    let mut scratch = ledger.clone();
+    let mut victims: Vec<AdmittedGang> = Vec::new();
+    for g in candidates {
+        if scratch.fit(&cq.name, demand).admissible() {
+            break;
+        }
+        // Reclaim only takes back borrowed capacity: once a peer is back
+        // within nominal (in the simulated state), leave it alone.
+        if g.queue != cq.name
+            && !scratch.queue(&g.queue).map(|q| q.is_borrowing()).unwrap_or(false)
+        {
+            continue;
+        }
+        scratch.uncharge(&g.queue, &g.demand);
+        victims.push(g.clone());
+    }
+    if scratch.fit(&cq.name, demand).admissible() && !victims.is_empty() {
+        Some(victims)
+    } else {
+        None
+    }
+}
+
+/// Evict one gang: flip its members back to suspended (conditions
+/// `Admitted=False`, `QuotaReserved=False`, `Evicted=True`) and unbind
+/// evicted pods so the node scheduler's capacity frees immediately. WLM
+/// jobs already submitted over red-box are cancelled by the operator when
+/// it observes the eviction (see `operator::core`).
+pub fn evict_gang(api: &dyn ApiClient, gang: &AdmittedGang) -> Result<()> {
+    for (kind, name) in &gang.members {
+        let is_pod = kind == KIND_POD;
+        api.update_status(kind, name, &move |o| {
+            // Finished between the cycle's snapshot and this write: its
+            // result (phase/exitCode/log) must survive — there is
+            // nothing left to evict, and its charge is already released.
+            if workload_terminal(o) {
+                return;
+            }
+            set_condition(&mut o.status, COND_ADMITTED, false);
+            set_condition(&mut o.status, COND_QUOTA_RESERVED, false);
+            set_condition(&mut o.status, COND_EVICTED, true);
+            o.status.remove("clusterQueue");
+            if is_pod {
+                o.spec.remove("nodeName");
+                o.status.insert("phase", "Pending");
+            }
+        })?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kueue::types::{PreemptionPolicy, QueueOrdering};
+
+    fn cq_view(
+        name: &str,
+        cohort: Option<&str>,
+        nominal_nodes: u32,
+        preemption: PreemptionPolicy,
+    ) -> ClusterQueueView {
+        ClusterQueueView::from_object(&ClusterQueueView::build_full(
+            name,
+            cohort,
+            QueueResources::nodes(nominal_nodes),
+            None,
+            QueueOrdering::Fifo,
+            preemption,
+        ))
+        .unwrap()
+    }
+
+    fn gang(name: &str, queue: &str, nodes: u32, priority: i64, uid: u64) -> AdmittedGang {
+        AdmittedGang {
+            members: vec![(KIND_POD.to_string(), name.to_string())],
+            queue: queue.to_string(),
+            label: queue.to_string(),
+            demand: QueueResources { nodes, cpu_milli: 0, mem_bytes: 0 },
+            priority,
+            uid,
+        }
+    }
+
+    fn demand(nodes: u32) -> QueueResources {
+        QueueResources { nodes, cpu_milli: 0, mem_bytes: 0 }
+    }
+
+    #[test]
+    fn reclaims_borrowing_peer() {
+        let reclaim = PreemptionPolicy { reclaim_within_cohort: true, within_queue: false };
+        let a = cq_view("a", Some("pool"), 2, PreemptionPolicy::default());
+        let b = cq_view("b", Some("pool"), 2, reclaim);
+        let mut ledger = Ledger::new(vec![a, b.clone()]);
+        let borrower = gang("big", "a", 3, 0, 5);
+        ledger.charge("a", &borrower.demand);
+        let victims =
+            select_victims(&ledger, &[borrower.clone()], &b, &demand(2), 0).expect("reclaims");
+        assert_eq!(victims, vec![borrower]);
+    }
+
+    #[test]
+    fn does_not_evict_peer_within_nominal() {
+        let reclaim = PreemptionPolicy { reclaim_within_cohort: true, within_queue: false };
+        let a = cq_view("a", Some("pool"), 2, PreemptionPolicy::default());
+        let b = cq_view("b", Some("pool"), 2, reclaim);
+        let mut ledger = Ledger::new(vec![a, b.clone()]);
+        // a uses exactly its nominal — not borrowing, untouchable.
+        let within = gang("fair", "a", 2, 0, 5);
+        ledger.charge("a", &within.demand);
+        assert!(ledger.fit("b", &demand(2)).admissible(), "b still fits without eviction");
+        // Over-subscribe the cohort from a THIRD queue to force blockage.
+        let c = cq_view("c", Some("pool"), 0, PreemptionPolicy::default());
+        let mut ledger = Ledger::new(vec![
+            cq_view("a", Some("pool"), 2, PreemptionPolicy::default()),
+            b.clone(),
+            c,
+        ]);
+        ledger.charge("a", &demand(2)); // within nominal
+        ledger.charge("c", &demand(2)); // c's nominal is 0: pure borrower
+        let fair = gang("fair", "a", 2, 0, 1);
+        let borrower = gang("freeloader", "c", 2, 0, 2);
+        let victims = select_victims(
+            &ledger,
+            &[fair.clone(), borrower.clone()],
+            &b,
+            &demand(2),
+            0,
+        )
+        .expect("evicts only the borrower");
+        assert_eq!(victims, vec![borrower], "the within-nominal gang survives");
+    }
+
+    #[test]
+    fn within_queue_priority_eviction_prefers_cheapest() {
+        let pol = PreemptionPolicy { reclaim_within_cohort: false, within_queue: true };
+        let q = cq_view("q", None, 2, pol);
+        let mut ledger = Ledger::new(vec![q.clone()]);
+        let low_old = gang("low-old", "q", 1, 1, 1);
+        let low_new = gang("low-new", "q", 1, 1, 9);
+        ledger.charge("q", &low_old.demand);
+        ledger.charge("q", &low_new.demand);
+        // 1-node high-priority arrival: only ONE victim needed — the
+        // newest of the lowest-priority gangs.
+        let victims = select_victims(
+            &ledger,
+            &[low_old.clone(), low_new.clone()],
+            &q,
+            &demand(1),
+            10,
+        )
+        .expect("preempts");
+        assert_eq!(victims, vec![low_new]);
+    }
+
+    #[test]
+    fn equal_or_higher_priority_is_safe() {
+        let pol = PreemptionPolicy { reclaim_within_cohort: false, within_queue: true };
+        let q = cq_view("q", None, 2, pol);
+        let mut ledger = Ledger::new(vec![q.clone()]);
+        let peer = gang("peer", "q", 2, 5, 1);
+        ledger.charge("q", &peer.demand);
+        assert!(select_victims(&ledger, &[peer.clone()], &q, &demand(1), 5).is_none());
+        assert!(select_victims(&ledger, &[peer], &q, &demand(1), 4).is_none());
+    }
+
+    #[test]
+    fn no_useless_eviction_when_it_cannot_fit() {
+        let pol = PreemptionPolicy { reclaim_within_cohort: false, within_queue: true };
+        let q = cq_view("q", None, 2, pol);
+        let mut ledger = Ledger::new(vec![q.clone()]);
+        let small = gang("small", "q", 1, 0, 1);
+        ledger.charge("q", &small.demand);
+        // Demand 3 exceeds nominal 2: even a clean queue cannot host it.
+        assert!(select_victims(&ledger, &[small], &q, &demand(3), 10).is_none());
+    }
+
+    #[test]
+    fn disabled_policy_never_evicts() {
+        let q = cq_view("q", None, 1, PreemptionPolicy::default());
+        let mut ledger = Ledger::new(vec![q.clone()]);
+        let peer = gang("peer", "q", 1, -5, 1);
+        ledger.charge("q", &peer.demand);
+        assert!(select_victims(&ledger, &[peer], &q, &demand(1), 10).is_none());
+    }
+}

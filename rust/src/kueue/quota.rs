@@ -1,0 +1,248 @@
+//! Quota accounting: a pure ledger over ClusterQueues and their cohorts.
+//!
+//! The ledger answers one question — *can this gang be charged to this
+//! queue right now?* — under the Kueue capacity model:
+//!
+//! - a queue may always use up to its **nominal** quota;
+//! - beyond nominal it **borrows**, capped by its own `borrowingLimit`
+//!   (absent = unlimited) and by the cohort's total capacity (the sum of
+//!   members' nominal quotas — borrowing consumes peers' *idle* nominal
+//!   capacity, never conjures new capacity);
+//! - a queue without a cohort has nobody to borrow from: nominal is its
+//!   ceiling.
+//!
+//! The ledger is pure state (no API calls), so the admission controller,
+//! the simulator's `QueueAdmission` layer, and the preemption victim
+//! search can all run the same arithmetic — preemption simulates
+//! evictions on a cloned ledger before touching any object.
+
+use super::types::{ClusterQueueView, QueueResources};
+
+/// One queue's live accounting entry.
+#[derive(Debug, Clone)]
+pub struct QueueState {
+    pub view: ClusterQueueView,
+    /// Demand of everything currently admitted through this queue.
+    pub usage: QueueResources,
+}
+
+impl QueueState {
+    /// Usage beyond nominal (what this queue currently borrows).
+    pub fn borrowed(&self) -> QueueResources {
+        self.usage.saturating_sub(&self.view.nominal)
+    }
+
+    /// Is any dimension over nominal?
+    pub fn is_borrowing(&self) -> bool {
+        !self.view.nominal.covers(&self.usage)
+    }
+}
+
+/// Why a gang cannot be charged (or that it can).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fit {
+    /// Admissible now; `borrowed` is how far past nominal the queue's
+    /// usage would land.
+    Ok { borrowed: bool },
+    /// Blocked, but the gang alone is within the queue's nominal quota —
+    /// preemption (reclaim / within-queue) could clear the way.
+    BlockedWithinNominal,
+    /// Blocked and the gang needs capacity beyond what preemption may
+    /// reclaim for it: it simply waits (borrowing gangs never preempt).
+    Blocked,
+    /// The queue is not registered in this ledger.
+    UnknownQueue,
+}
+
+impl Fit {
+    pub fn admissible(&self) -> bool {
+        matches!(self, Fit::Ok { .. })
+    }
+}
+
+/// The cohort-aware quota ledger.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    queues: Vec<QueueState>,
+}
+
+impl Ledger {
+    pub fn new(views: Vec<ClusterQueueView>) -> Ledger {
+        Ledger {
+            queues: views
+                .into_iter()
+                .map(|view| QueueState { view, usage: QueueResources::ZERO })
+                .collect(),
+        }
+    }
+
+    pub fn queue(&self, name: &str) -> Option<&QueueState> {
+        self.queues.iter().find(|q| q.view.name == name)
+    }
+
+    fn queue_mut(&mut self, name: &str) -> Option<&mut QueueState> {
+        self.queues.iter_mut().find(|q| q.view.name == name)
+    }
+
+    /// Charge admitted demand to a queue (no capacity check — callers
+    /// rebuild the ledger from observed admitted state, which must be
+    /// represented faithfully even if a quota was shrunk under it).
+    pub fn charge(&mut self, queue: &str, demand: &QueueResources) {
+        if let Some(q) = self.queue_mut(queue) {
+            q.usage = q.usage.saturating_add(demand);
+        }
+    }
+
+    /// Release demand (eviction / completion during a preemption search).
+    pub fn uncharge(&mut self, queue: &str, demand: &QueueResources) {
+        if let Some(q) = self.queue_mut(queue) {
+            q.usage = q.usage.saturating_sub(demand);
+        }
+    }
+
+    /// Total nominal capacity of a cohort (what borrowing draws on).
+    pub fn cohort_capacity(&self, cohort: &str) -> QueueResources {
+        self.queues
+            .iter()
+            .filter(|q| q.view.cohort.as_deref() == Some(cohort))
+            .fold(QueueResources::ZERO, |acc, q| acc.saturating_add(&q.view.nominal))
+    }
+
+    /// Total usage charged across a cohort. Usage above a member's
+    /// nominal still consumes cohort capacity, so this is a plain sum.
+    pub fn cohort_usage(&self, cohort: &str) -> QueueResources {
+        self.queues
+            .iter()
+            .filter(|q| q.view.cohort.as_deref() == Some(cohort))
+            .fold(QueueResources::ZERO, |acc, q| acc.saturating_add(&q.usage))
+    }
+
+    /// Can `demand` be charged to `queue` right now, all-or-nothing?
+    pub fn fit(&self, queue: &str, demand: &QueueResources) -> Fit {
+        let Some(q) = self.queue(queue) else { return Fit::UnknownQueue };
+        let after = q.usage.saturating_add(demand);
+        let ceiling = match (&q.view.cohort, &q.view.borrowing_limit) {
+            // No cohort: nobody to borrow from, nominal is the ceiling.
+            (None, _) => q.view.nominal,
+            (Some(_), Some(limit)) => q.view.nominal.saturating_add(limit),
+            (Some(_), None) => QueueResources::UNBOUNDED,
+        };
+        let cohort_ok = match &q.view.cohort {
+            None => true,
+            Some(c) => self
+                .cohort_capacity(c)
+                .covers(&self.cohort_usage(c).saturating_add(demand)),
+        };
+        if ceiling.covers(&after) && cohort_ok {
+            return Fit::Ok { borrowed: !q.view.nominal.covers(&after) };
+        }
+        // Within nominal on its own (usage aside): preemption could help.
+        if q.view.nominal.covers(demand) {
+            Fit::BlockedWithinNominal
+        } else {
+            Fit::Blocked
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kueue::types::{PreemptionPolicy, QueueOrdering};
+
+    fn cq(
+        name: &str,
+        cohort: Option<&str>,
+        nominal_nodes: u32,
+        borrow_nodes: Option<u32>,
+    ) -> ClusterQueueView {
+        ClusterQueueView::from_object(&ClusterQueueView::build_full(
+            name,
+            cohort,
+            QueueResources::nodes(nominal_nodes),
+            borrow_nodes.map(QueueResources::nodes),
+            QueueOrdering::Fifo,
+            PreemptionPolicy::default(),
+        ))
+        .unwrap()
+    }
+
+    fn nodes(n: u32) -> QueueResources {
+        QueueResources { nodes: n, cpu_milli: 0, mem_bytes: 0 }
+    }
+
+    #[test]
+    fn nominal_is_ceiling_without_cohort() {
+        let mut l = Ledger::new(vec![cq("a", None, 3, None)]);
+        assert_eq!(l.fit("a", &nodes(3)), Fit::Ok { borrowed: false });
+        assert_eq!(l.fit("a", &nodes(4)), Fit::Blocked, "no cohort, no borrowing");
+        l.charge("a", &nodes(2));
+        assert_eq!(l.fit("a", &nodes(1)), Fit::Ok { borrowed: false });
+        assert_eq!(
+            l.fit("a", &nodes(2)),
+            Fit::BlockedWithinNominal,
+            "fits nominal alone, blocked by usage"
+        );
+        l.uncharge("a", &nodes(2));
+        assert_eq!(l.fit("a", &nodes(3)), Fit::Ok { borrowed: false });
+        assert_eq!(l.fit("ghost", &nodes(1)), Fit::UnknownQueue);
+    }
+
+    #[test]
+    fn borrowing_from_idle_cohort_peer() {
+        let mut l = Ledger::new(vec![cq("a", Some("pool"), 2, None), cq("b", Some("pool"), 2, None)]);
+        // a can reach 4 (cohort capacity) while b idles.
+        assert_eq!(l.fit("a", &nodes(3)), Fit::Ok { borrowed: true });
+        assert_eq!(l.fit("a", &nodes(4)), Fit::Ok { borrowed: true });
+        assert_eq!(l.fit("a", &nodes(5)), Fit::Blocked, "cohort capacity is the hard cap");
+        l.charge("a", &nodes(3));
+        assert!(l.queue("a").unwrap().is_borrowing());
+        assert_eq!(l.queue("a").unwrap().borrowed(), nodes(1));
+        // b's nominal is promised but partially consumed by a's borrow.
+        assert_eq!(l.fit("b", &nodes(1)), Fit::Ok { borrowed: false });
+        assert_eq!(
+            l.fit("b", &nodes(2)),
+            Fit::BlockedWithinNominal,
+            "within b's nominal -> reclaim candidate"
+        );
+    }
+
+    #[test]
+    fn borrowing_limit_caps_overdraft() {
+        let l = Ledger::new(vec![
+            cq("a", Some("pool"), 2, Some(1)),
+            cq("b", Some("pool"), 4, None),
+        ]);
+        assert_eq!(l.fit("a", &nodes(3)), Fit::Ok { borrowed: true });
+        assert_eq!(l.fit("a", &nodes(4)), Fit::Blocked, "borrowingLimit 1 caps at 3");
+    }
+
+    #[test]
+    fn cohort_capacity_and_usage_sum_members() {
+        let mut l = Ledger::new(vec![
+            cq("a", Some("pool"), 2, None),
+            cq("b", Some("pool"), 3, None),
+            cq("c", None, 7, None),
+        ]);
+        assert_eq!(l.cohort_capacity("pool").nodes, 5);
+        l.charge("a", &nodes(1));
+        l.charge("b", &nodes(2));
+        l.charge("c", &nodes(7)); // not in the cohort
+        assert_eq!(l.cohort_usage("pool").nodes, 3);
+    }
+
+    #[test]
+    fn multi_dimensional_fit() {
+        let view = ClusterQueueView::from_object(&ClusterQueueView::build(
+            "a",
+            QueueResources { nodes: 4, cpu_milli: 4000, mem_bytes: 4 << 30 },
+        ))
+        .unwrap();
+        let l = Ledger::new(vec![view]);
+        // Node-count fits but cpu does not.
+        let d = QueueResources { nodes: 1, cpu_milli: 8000, mem_bytes: 1 << 30 };
+        assert_eq!(l.fit("a", &d), Fit::Blocked);
+        let d = QueueResources { nodes: 2, cpu_milli: 2000, mem_bytes: 1 << 30 };
+        assert_eq!(l.fit("a", &d), Fit::Ok { borrowed: false });
+    }
+}

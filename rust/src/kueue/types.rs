@@ -1,0 +1,542 @@
+//! Queue-layer object model: the ClusterQueue / LocalQueue CRDs, the
+//! quota vector they meter, and the labels/conditions a workload carries
+//! through admission.
+//!
+//! Mirrors the Kueue API shape (`kueue.x-k8s.io`): a **ClusterQueue** owns
+//! per-resource quotas (`nominal` plus an optional `borrowingLimit`) and
+//! may pool spare capacity with cohort peers; a **LocalQueue** is the
+//! namespace-facing handle that points workloads at a ClusterQueue.
+//! Workloads opt in with the `kueue.x-k8s.io/queue-name` label and are
+//! held suspended until the admission controller flips their
+//! `QuotaReserved`/`Admitted` conditions.
+
+use crate::encoding::Value;
+use crate::kube::{KubeObject, PodPhase, PodView, ResourceView, WlmJobView, KIND_POD,
+    KIND_SLURMJOB, KIND_TORQUEJOB};
+use crate::util::{Error, Result};
+
+/// The apiVersion the queue-layer CRDs are served under.
+pub const KUEUE_API_VERSION: &str = "kueue.x-k8s.io/v1beta1";
+
+pub const KIND_CLUSTERQUEUE: &str = "ClusterQueue";
+pub const KIND_LOCALQUEUE: &str = "LocalQueue";
+
+/// Label a workload carries to request admission through a LocalQueue
+/// (the value may also name a ClusterQueue directly — convenient for the
+/// simulator, which has no namespaces).
+pub const QUEUE_NAME_LABEL: &str = "kueue.x-k8s.io/queue-name";
+/// Optional integer priority label (higher admits first under `Priority`
+/// ordering and wins within-queue preemption).
+pub const PRIORITY_LABEL: &str = "kueue.x-k8s.io/priority";
+/// Pods sharing this label form one gang ("pod group"): they are admitted
+/// all-or-nothing once the declared member count is present.
+pub const POD_GROUP_LABEL: &str = "kueue.x-k8s.io/pod-group-name";
+/// Annotation (on at least one group member) declaring the gang size.
+/// A group is held — never partially admitted — until a member carrying
+/// this annotation exists and the declared count of members is present.
+pub const POD_GROUP_COUNT_ANNOTATION: &str = "kueue.x-k8s.io/pod-group-total-count";
+
+/// Condition types the admission controller flips on workloads.
+pub const COND_QUOTA_RESERVED: &str = "QuotaReserved";
+pub const COND_ADMITTED: &str = "Admitted";
+pub const COND_EVICTED: &str = "Evicted";
+
+/// Kinds the admission controller watches for the queue-name label.
+pub const WORKLOAD_KINDS: &[&str] = &[KIND_POD, KIND_TORQUEJOB, KIND_SLURMJOB];
+
+// --------------------------------------------------------- quota vector
+
+/// The resource vector quotas are expressed in. `nodes` is the gang
+/// dimension (a multi-node WlmJob consumes N); cpu/memory aggregate over
+/// all chunks of the gang.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QueueResources {
+    pub nodes: u32,
+    pub cpu_milli: u64,
+    pub mem_bytes: u64,
+}
+
+impl QueueResources {
+    pub const ZERO: QueueResources = QueueResources { nodes: 0, cpu_milli: 0, mem_bytes: 0 };
+
+    /// A quota that never constrains (cohort-unbounded borrowing, CLI
+    /// node-only quotas).
+    pub const UNBOUNDED: QueueResources =
+        QueueResources { nodes: u32::MAX, cpu_milli: u64::MAX, mem_bytes: u64::MAX };
+
+    pub fn nodes(n: u32) -> QueueResources {
+        QueueResources { nodes: n, ..QueueResources::UNBOUNDED }
+    }
+
+    /// Does this amount cover `other` in every dimension?
+    pub fn covers(&self, other: &QueueResources) -> bool {
+        self.nodes >= other.nodes
+            && self.cpu_milli >= other.cpu_milli
+            && self.mem_bytes >= other.mem_bytes
+    }
+
+    pub fn saturating_add(&self, other: &QueueResources) -> QueueResources {
+        QueueResources {
+            nodes: self.nodes.saturating_add(other.nodes),
+            cpu_milli: self.cpu_milli.saturating_add(other.cpu_milli),
+            mem_bytes: self.mem_bytes.saturating_add(other.mem_bytes),
+        }
+    }
+
+    pub fn saturating_sub(&self, other: &QueueResources) -> QueueResources {
+        QueueResources {
+            nodes: self.nodes.saturating_sub(other.nodes),
+            cpu_milli: self.cpu_milli.saturating_sub(other.cpu_milli),
+            mem_bytes: self.mem_bytes.saturating_sub(other.mem_bytes),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == QueueResources::ZERO
+    }
+
+    /// Encode for a CRD spec tree (`{nodes, cpu, memory}`, plain integers;
+    /// cpu in millicores, memory in bytes). Unbounded dimensions are
+    /// omitted — the decode side reads missing as unbounded, so a
+    /// node-only quota round-trips as `quota: {nodes: 3}`.
+    pub fn encode(&self) -> Value {
+        let mut v = Value::map();
+        if self.nodes != u32::MAX {
+            v.insert("nodes", self.nodes as u64);
+        }
+        if self.cpu_milli != u64::MAX {
+            v.insert("cpu", self.cpu_milli);
+        }
+        if self.mem_bytes != u64::MAX {
+            v.insert("memory", self.mem_bytes);
+        }
+        v
+    }
+
+    /// Decode a spec tree; missing dimensions are unbounded so a
+    /// node-only quota (`quota: {nodes: 3}`) reads naturally.
+    pub fn decode(v: &Value) -> QueueResources {
+        QueueResources {
+            nodes: v.opt_int("nodes").map(|n| n as u32).unwrap_or(u32::MAX),
+            cpu_milli: v.opt_int("cpu").map(|n| n as u64).unwrap_or(u64::MAX),
+            mem_bytes: v.opt_int("memory").map(|n| n as u64).unwrap_or(u64::MAX),
+        }
+    }
+}
+
+// ------------------------------------------------------------ CRD views
+
+/// Admission order within one ClusterQueue. Both are *strict*: a blocked
+/// head gang holds everything behind it in the same queue (the quota
+/// analogue of FIFO head-of-queue blocking; EASY-style relaxations belong
+/// to the node scheduler, not the quota layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueOrdering {
+    #[default]
+    Fifo,
+    Priority,
+}
+
+impl QueueOrdering {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QueueOrdering::Fifo => "fifo",
+            QueueOrdering::Priority => "priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> QueueOrdering {
+        if s.eq_ignore_ascii_case("priority") {
+            QueueOrdering::Priority
+        } else {
+            QueueOrdering::Fifo
+        }
+    }
+}
+
+/// What an incoming (within-nominal) gang of this queue may evict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PreemptionPolicy {
+    /// Evict cohort peers' workloads that push the peer over its nominal
+    /// quota (reclaim borrowed capacity).
+    pub reclaim_within_cohort: bool,
+    /// Evict lower-priority workloads admitted through this same queue.
+    pub within_queue: bool,
+}
+
+/// Typed view over a ClusterQueue object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterQueueView {
+    pub name: String,
+    /// Queues naming the same cohort pool unused nominal capacity.
+    pub cohort: Option<String>,
+    pub nominal: QueueResources,
+    /// Cap on usage beyond nominal (None = unlimited borrowing, bounded
+    /// only by the cohort's total capacity).
+    pub borrowing_limit: Option<QueueResources>,
+    pub ordering: QueueOrdering,
+    pub preemption: PreemptionPolicy,
+    /// Status counts maintained by the admission controller.
+    pub pending: u64,
+    pub admitted: u64,
+}
+
+impl ClusterQueueView {
+    pub fn from_object(o: &KubeObject) -> Result<ClusterQueueView> {
+        if o.kind != KIND_CLUSTERQUEUE {
+            return Err(Error::parse(format!("expected ClusterQueue, got {}", o.kind)));
+        }
+        Ok(ClusterQueueView {
+            name: o.meta.name.clone(),
+            cohort: o.spec.opt_str("cohort").filter(|s| !s.is_empty()).map(String::from),
+            nominal: o
+                .spec
+                .get("quota")
+                .map(QueueResources::decode)
+                .unwrap_or(QueueResources::UNBOUNDED),
+            borrowing_limit: o.spec.get("borrowingLimit").map(QueueResources::decode),
+            ordering: QueueOrdering::parse(o.spec.opt_str("ordering").unwrap_or("fifo")),
+            preemption: PreemptionPolicy {
+                reclaim_within_cohort: o
+                    .spec
+                    .path(&["preemption", "reclaimWithinCohort"])
+                    .and_then(Value::as_bool)
+                    .unwrap_or(false),
+                within_queue: o
+                    .spec
+                    .path(&["preemption", "withinClusterQueue"])
+                    .and_then(Value::as_bool)
+                    .unwrap_or(false),
+            },
+            pending: o.status.opt_int("pending").unwrap_or(0) as u64,
+            admitted: o.status.opt_int("admitted").unwrap_or(0) as u64,
+        })
+    }
+
+    /// Build a ClusterQueue object (FIFO, no cohort, no preemption).
+    pub fn build(name: &str, nominal: QueueResources) -> KubeObject {
+        Self::build_full(name, None, nominal, None, QueueOrdering::Fifo, PreemptionPolicy::default())
+    }
+
+    pub fn build_full(
+        name: &str,
+        cohort: Option<&str>,
+        nominal: QueueResources,
+        borrowing_limit: Option<QueueResources>,
+        ordering: QueueOrdering,
+        preemption: PreemptionPolicy,
+    ) -> KubeObject {
+        let mut spec = Value::map().with("quota", nominal.encode());
+        if let Some(c) = cohort {
+            spec.insert("cohort", c);
+        }
+        if let Some(b) = borrowing_limit {
+            spec.insert("borrowingLimit", b.encode());
+        }
+        spec.insert("ordering", ordering.as_str());
+        spec.insert(
+            "preemption",
+            Value::map()
+                .with("reclaimWithinCohort", preemption.reclaim_within_cohort)
+                .with("withinClusterQueue", preemption.within_queue),
+        );
+        let mut o = KubeObject::new(KIND_CLUSTERQUEUE, name, spec);
+        o.api_version = KUEUE_API_VERSION.into();
+        o
+    }
+}
+
+impl ResourceView for ClusterQueueView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_CLUSTERQUEUE]
+    }
+    fn from_object(obj: &KubeObject) -> Result<ClusterQueueView> {
+        ClusterQueueView::from_object(obj)
+    }
+}
+
+/// Typed view over a LocalQueue object (namespace → ClusterQueue binding).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LocalQueueView {
+    pub name: String,
+    pub cluster_queue: String,
+    pub pending: u64,
+    pub admitted: u64,
+}
+
+impl LocalQueueView {
+    pub fn from_object(o: &KubeObject) -> Result<LocalQueueView> {
+        if o.kind != KIND_LOCALQUEUE {
+            return Err(Error::parse(format!("expected LocalQueue, got {}", o.kind)));
+        }
+        Ok(LocalQueueView {
+            name: o.meta.name.clone(),
+            cluster_queue: o
+                .spec
+                .req_str("clusterQueue")
+                .map_err(|_| Error::parse("LocalQueue spec.clusterQueue missing"))?
+                .to_string(),
+            pending: o.status.opt_int("pending").unwrap_or(0) as u64,
+            admitted: o.status.opt_int("admitted").unwrap_or(0) as u64,
+        })
+    }
+
+    pub fn build(name: &str, cluster_queue: &str) -> KubeObject {
+        let mut o = KubeObject::new(
+            KIND_LOCALQUEUE,
+            name,
+            Value::map().with("clusterQueue", cluster_queue),
+        );
+        o.api_version = KUEUE_API_VERSION.into();
+        o
+    }
+}
+
+impl ResourceView for LocalQueueView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_LOCALQUEUE]
+    }
+    fn from_object(obj: &KubeObject) -> Result<LocalQueueView> {
+        LocalQueueView::from_object(obj)
+    }
+}
+
+// ------------------------------------------- workload-side introspection
+
+/// The LocalQueue (or ClusterQueue) name a workload requests, if any.
+pub fn queue_name(obj: &KubeObject) -> Option<&str> {
+    obj.meta.label(QUEUE_NAME_LABEL)
+}
+
+/// Workload priority from the priority label (0 when absent/garbage).
+pub fn workload_priority(obj: &KubeObject) -> i64 {
+    obj.meta.label(PRIORITY_LABEL).and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// Read a status condition (`None` = never set).
+pub fn get_condition(obj: &KubeObject, cond_type: &str) -> Option<bool> {
+    obj.status.get("conditions").and_then(Value::as_seq).and_then(|conds| {
+        conds
+            .iter()
+            .find(|c| c.opt_str("type") == Some(cond_type))
+            .map(|c| c.opt_str("status") == Some("True"))
+    })
+}
+
+/// Set a condition in a status tree (for use inside `update_status`
+/// closures). Updates in place or appends.
+pub fn set_condition(status: &mut Value, cond_type: &str, val: bool) {
+    let entry =
+        Value::map().with("type", cond_type).with("status", if val { "True" } else { "False" });
+    if !matches!(status.get("conditions"), Some(Value::Seq(_))) {
+        status.insert("conditions", Value::Seq(Vec::new()));
+    }
+    let Some(Value::Seq(conds)) = status.get_mut("conditions") else { return };
+    if let Some(c) = conds.iter_mut().find(|c| c.opt_str("type") == Some(cond_type)) {
+        *c = entry;
+    } else {
+        conds.push(entry);
+    }
+}
+
+/// Has the admission controller admitted this workload?
+pub fn is_admitted(obj: &KubeObject) -> bool {
+    get_condition(obj, COND_ADMITTED) == Some(true)
+}
+
+/// Was this workload preempted out of its quota reservation?
+pub fn is_evicted(obj: &KubeObject) -> bool {
+    get_condition(obj, COND_EVICTED) == Some(true)
+}
+
+/// Should the scheduler/operator hold this workload? True when it opted
+/// into queueing (queue-name label present) and has not been admitted.
+/// Label-less workloads bypass the queue layer entirely.
+pub fn admission_gated(obj: &KubeObject) -> bool {
+    queue_name(obj).is_some() && !is_admitted(obj)
+}
+
+/// Is the workload finished (its quota charge released)?
+pub fn workload_terminal(obj: &KubeObject) -> bool {
+    match obj.kind.as_str() {
+        KIND_POD => PodPhase::parse(obj.status.opt_str("phase").unwrap_or("")).terminal(),
+        KIND_TORQUEJOB | KIND_SLURMJOB => {
+            crate::operator::phase::terminal(obj.status.opt_str("phase").unwrap_or(""))
+        }
+        _ => false,
+    }
+}
+
+/// Normalized quota demand of one workload object.
+///
+/// - Pod: one node-chunk carrying its container resource requests.
+/// - TorqueJob/SlurmJob: the batch script's `-l nodes=N:ppn=P[,mem=M]`
+///   (resp. `-N/--ntasks-per-node/--mem`), aggregated over all N chunks —
+///   this is what makes a multi-node WlmJob one indivisible gang.
+pub fn workload_demand(obj: &KubeObject) -> Result<QueueResources> {
+    match obj.kind.as_str() {
+        KIND_POD => {
+            let p = PodView::from_object(obj)?;
+            Ok(QueueResources {
+                nodes: 1,
+                cpu_milli: p.requests.cpu_milli,
+                mem_bytes: p.requests.mem_bytes,
+            })
+        }
+        KIND_TORQUEJOB => {
+            let v = WlmJobView::from_object(obj)?;
+            let s = crate::pbs::PbsScript::parse(&v.batch)?;
+            Ok(QueueResources {
+                nodes: s.nodes,
+                cpu_milli: (s.nodes as u64 * s.ppn as u64) * 1000,
+                mem_bytes: s.nodes as u64 * s.mem,
+            })
+        }
+        KIND_SLURMJOB => {
+            let v = WlmJobView::from_object(obj)?;
+            let s = crate::slurm::SlurmScript::parse(&v.batch)?;
+            Ok(QueueResources {
+                nodes: s.nodes,
+                cpu_milli: (s.nodes as u64 * s.tasks_per_node as u64) * 1000,
+                mem_bytes: s.nodes as u64 * s.mem,
+            })
+        }
+        other => Err(Error::config(format!("kind `{other}` is not a queueable workload"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resources;
+
+    #[test]
+    fn quota_vector_math() {
+        let q = QueueResources { nodes: 3, cpu_milli: 4000, mem_bytes: 1 << 30 };
+        let d = QueueResources { nodes: 2, cpu_milli: 1000, mem_bytes: 1 << 20 };
+        assert!(q.covers(&d));
+        assert!(!d.covers(&q));
+        assert_eq!(q.saturating_sub(&q), QueueResources::ZERO);
+        assert!(QueueResources::UNBOUNDED.covers(&q));
+        assert_eq!(
+            d.saturating_add(&QueueResources::UNBOUNDED).nodes,
+            u32::MAX,
+            "saturates, not wraps"
+        );
+        // Node-only quota decodes with unbounded cpu/mem.
+        let back = QueueResources::decode(&Value::map().with("nodes", 3u64));
+        assert_eq!(back.nodes, 3);
+        assert_eq!(back.cpu_milli, u64::MAX);
+        // Full encode/decode roundtrip.
+        assert_eq!(QueueResources::decode(&q.encode()), q);
+    }
+
+    #[test]
+    fn cluster_queue_view_roundtrip() {
+        let o = ClusterQueueView::build_full(
+            "tenant-a",
+            Some("pool"),
+            QueueResources::nodes(3),
+            Some(QueueResources::nodes(2)),
+            QueueOrdering::Priority,
+            PreemptionPolicy { reclaim_within_cohort: true, within_queue: false },
+        );
+        assert_eq!(o.api_version, KUEUE_API_VERSION);
+        let v = ClusterQueueView::from_object(&o).unwrap();
+        assert_eq!(v.name, "tenant-a");
+        assert_eq!(v.cohort.as_deref(), Some("pool"));
+        assert_eq!(v.nominal.nodes, 3);
+        assert_eq!(v.borrowing_limit.unwrap().nodes, 2);
+        assert_eq!(v.ordering, QueueOrdering::Priority);
+        assert!(v.preemption.reclaim_within_cohort);
+        assert!(!v.preemption.within_queue);
+        // Minimal build: FIFO, no cohort, unlimited-borrow-irrelevant.
+        let v = ClusterQueueView::from_object(&ClusterQueueView::build(
+            "b",
+            QueueResources::nodes(1),
+        ))
+        .unwrap();
+        assert_eq!(v.ordering, QueueOrdering::Fifo);
+        assert!(v.cohort.is_none());
+        assert!(v.borrowing_limit.is_none());
+    }
+
+    #[test]
+    fn local_queue_view_roundtrip() {
+        let o = LocalQueueView::build("team-x", "tenant-a");
+        let v = LocalQueueView::from_object(&o).unwrap();
+        assert_eq!(v.cluster_queue, "tenant-a");
+        assert!(LocalQueueView::from_object(&KubeObject::new(
+            KIND_LOCALQUEUE,
+            "bad",
+            Value::map()
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn conditions_set_get() {
+        let mut o = KubeObject::new(KIND_POD, "p", Value::map());
+        assert_eq!(get_condition(&o, COND_ADMITTED), None);
+        set_condition(&mut o.status, COND_QUOTA_RESERVED, true);
+        set_condition(&mut o.status, COND_ADMITTED, true);
+        assert!(is_admitted(&o));
+        set_condition(&mut o.status, COND_ADMITTED, false);
+        assert_eq!(get_condition(&o, COND_ADMITTED), Some(false));
+        assert!(!is_admitted(&o));
+        assert_eq!(get_condition(&o, COND_QUOTA_RESERVED), Some(true), "other conds intact");
+    }
+
+    #[test]
+    fn gating_logic() {
+        let mut pod = PodView::build("p", "img.sif", Resources::new(500, 1 << 20, 0), &[]);
+        assert!(!admission_gated(&pod), "label-less workloads bypass the queue layer");
+        pod.meta.set_label(QUEUE_NAME_LABEL, "tenant-a");
+        assert!(admission_gated(&pod));
+        set_condition(&mut pod.status, COND_ADMITTED, true);
+        assert!(!admission_gated(&pod));
+    }
+
+    #[test]
+    fn priority_label_parse() {
+        let mut pod = PodView::build("p", "img.sif", Resources::ZERO, &[]);
+        assert_eq!(workload_priority(&pod), 0);
+        pod.meta.set_label(PRIORITY_LABEL, "17");
+        assert_eq!(workload_priority(&pod), 17);
+        pod.meta.set_label(PRIORITY_LABEL, "not-a-number");
+        assert_eq!(workload_priority(&pod), 0);
+    }
+
+    #[test]
+    fn demand_extraction() {
+        let pod = PodView::build("p", "img.sif", Resources::new(500, 256 << 20, 0), &[]);
+        let d = workload_demand(&pod).unwrap();
+        assert_eq!(d, QueueResources { nodes: 1, cpu_milli: 500, mem_bytes: 256 << 20 });
+
+        let tj = WlmJobView::build_torquejob(
+            "wide",
+            "#!/bin/sh\n#PBS -l nodes=4:ppn=2\n#PBS -l mem=1gb\nsleep 5\n",
+            "",
+            "",
+        );
+        let d = workload_demand(&tj).unwrap();
+        assert_eq!(d.nodes, 4);
+        assert_eq!(d.cpu_milli, 8000);
+        assert_eq!(d.mem_bytes, 4 << 30);
+
+        let node = crate::kube::NodeView::build("n", Resources::cores(1, 1 << 30), &[]);
+        assert!(workload_demand(&node).is_err());
+    }
+
+    #[test]
+    fn terminal_detection() {
+        let mut pod = PodView::build("p", "img.sif", Resources::ZERO, &[]);
+        assert!(!workload_terminal(&pod));
+        pod.status.insert("phase", "Succeeded");
+        assert!(workload_terminal(&pod));
+        let mut tj = WlmJobView::build_torquejob("t", "echo x\n", "", "");
+        assert!(!workload_terminal(&tj));
+        tj.status.insert("phase", crate::operator::phase::COMPLETED);
+        assert!(workload_terminal(&tj));
+    }
+}

@@ -18,6 +18,7 @@ pub mod cluster;
 pub mod encoding;
 pub mod hybrid;
 pub mod kube;
+pub mod kueue;
 pub mod operator;
 pub mod pbs;
 pub mod redbox;

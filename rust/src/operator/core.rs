@@ -198,6 +198,41 @@ impl Controller for WlmJobOperator {
         };
         let view = WlmJobView::from_object(&obj)?;
 
+        // Queue layer (PR 2): a job that opted into quota admission is
+        // held suspended until admitted, and — if preempted mid-flight —
+        // cancelled over red-box and reset so it resubmits on
+        // re-admission (the gang either holds its full reservation or
+        // nothing of it runs).
+        if crate::kueue::admission_gated(&obj) {
+            match view.status.as_str() {
+                // Nothing created yet: stay suspended.
+                "" => {
+                    self.metrics.inc("operator.kueue_suspended");
+                    return Ok(Reconcile::RequeueAfter(self.config.poll));
+                }
+                // Evicted after the flow started: unwind the submission.
+                phase::PENDING | phase::QUEUED | phase::RUNNING => {
+                    if let Some(job_id) = &view.wlm_job_id {
+                        let _ = self.bridge.cancel(job_id);
+                    }
+                    self.tracked.lock().unwrap().remove(name);
+                    // Tear down the dummy pod too: re-admission must re-run
+                    // the placement gate (fresh pod, fresh scheduling pass)
+                    // rather than trust a stale binding to a virtual node
+                    // that may no longer exist.
+                    let _ = api.delete(KIND_POD, &Self::dummy_pod_name(name));
+                    api.update_status(self.config.kind, name, &|o| {
+                        o.status.insert("phase", "");
+                        o.status.remove("jobId");
+                    })?;
+                    self.metrics.inc("operator.kueue_preempted");
+                    return Ok(Reconcile::RequeueAfter(self.config.poll));
+                }
+                // Terminal / transferring: eviction is moot.
+                _ => {}
+            }
+        }
+
         match view.status.as_str() {
             // New object: create the dummy pod on the queue's virtual node.
             "" => {
@@ -463,6 +498,30 @@ mod tests {
         let p = drive(&env, "plain", Duration::from_secs(20));
         assert_eq!(p, phase::COMPLETED);
         assert!(env.api.get(KIND_POD, "plain-collect").is_err(), "no results pod");
+        env.sd.trigger();
+    }
+
+    #[test]
+    fn queue_labelled_job_held_until_admitted() {
+        let env = setup();
+        let mut obj = cow_job();
+        obj.meta.set_label(crate::kueue::QUEUE_NAME_LABEL, "tenant");
+        env.api.create(obj).unwrap();
+        for _ in 0..5 {
+            env.sched.run_cycle();
+            let _ = env.operator.reconcile(&env.api, "cow");
+        }
+        assert!(env.api.get(KIND_POD, "cow-submit").is_err(), "no dummy pod while gated");
+        let o = env.api.get(KIND_TORQUEJOB, "cow").unwrap();
+        assert_eq!(o.status.opt_str("phase").unwrap_or(""), "", "held suspended");
+        // Admission flips the condition → the full Fig. 3 flow proceeds.
+        env.api
+            .update_status(KIND_TORQUEJOB, "cow", |o| {
+                crate::kueue::set_condition(&mut o.status, crate::kueue::COND_ADMITTED, true);
+            })
+            .unwrap();
+        let p = drive(&env, "cow", Duration::from_secs(20));
+        assert_eq!(p, phase::COMPLETED);
         env.sd.trigger();
     }
 

@@ -448,6 +448,7 @@ impl PbsServer {
                             walltime: j.script.walltime,
                             priority: j.script.priority + queue.priority,
                             submit_s: j.submit_s,
+                            queue: Some(j.queue.clone()),
                         })
                         .collect();
                     if pending.is_empty() {

@@ -211,6 +211,87 @@ mod tests {
         assert!(out.is_empty());
     }
 
+    /// Shadow-time boundary: a backfill candidate ending *exactly* at the
+    /// shadow time cannot delay the reservation and must be admitted; one
+    /// second longer must be rejected (it would land on a reserved node).
+    #[test]
+    fn job_exactly_at_shadow_time_backfills() {
+        let running = vec![RunningJob {
+            id: 99,
+            placement: vec![super::super::policy::Placement { node: 0, cores: 8, mem: 0 }],
+            expected_end_s: 100.0,
+        }];
+        let mut ns = nodes(2, 8);
+        ns[0].free_cores = 0;
+        // Head needs both nodes -> blocked; shadow = 100, reserved {0,1}.
+        let head = job(1, 2, 8, 50, 0.0);
+        let exact = job(2, 1, 8, 100, 1.0); // ends at 0 + 100 == shadow
+        let out = EasyBackfill.schedule(0.0, &[head.clone(), exact], &ns, &running);
+        assert_eq!(out.len(), 1, "walltime == shadow gap is admissible");
+        assert_eq!(out[0].job, 2);
+
+        let too_long = job(3, 1, 8, 101, 1.0); // ends at 101 > shadow
+        let out = EasyBackfill.schedule(0.0, &[head, too_long], &ns, &running);
+        assert!(out.is_empty(), "one second past the shadow time must be rejected");
+    }
+
+    /// A long job whose placement avoids every reserved node runs on the
+    /// "extra" capacity even though it outlives the shadow time.
+    #[test]
+    fn long_job_runs_on_extra_nodes() {
+        // Nodes 0 and 1 busy till 100; head needs 2 -> blocked (only node
+        // 2 free). At shadow=100 the reservation first-fits {0,1}, so
+        // node 2 is extra: a 500s 1-node job may take it now.
+        let running = vec![
+            RunningJob {
+                id: 90,
+                placement: vec![super::super::policy::Placement { node: 0, cores: 8, mem: 0 }],
+                expected_end_s: 100.0,
+            },
+            RunningJob {
+                id: 91,
+                placement: vec![super::super::policy::Placement { node: 1, cores: 8, mem: 0 }],
+                expected_end_s: 100.0,
+            },
+        ];
+        let mut ns = nodes(3, 8);
+        ns[0].free_cores = 0;
+        ns[1].free_cores = 0;
+        let pending = vec![job(1, 2, 8, 50, 0.0), job(2, 1, 8, 500, 1.0)];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        assert_eq!(out.len(), 1, "long job admitted on the extra node");
+        assert_eq!(out[0].job, 2);
+        assert_eq!(out[0].placement[0].node, 2, "placed outside the reservation");
+    }
+
+    /// Zero-walltime jobs trivially end before any shadow time: they
+    /// backfill freely even onto reserved nodes, and never delay the head.
+    #[test]
+    fn zero_runtime_jobs_backfill_freely() {
+        let running = vec![RunningJob {
+            id: 99,
+            placement: vec![super::super::policy::Placement { node: 0, cores: 8, mem: 0 }],
+            expected_end_s: 100.0,
+        }];
+        let mut ns = nodes(2, 8);
+        ns[0].free_cores = 0;
+        // Head blocked (needs both nodes); two zero-walltime jobs behind
+        // it — the first fills node 1, the second no longer fits *now*.
+        let pending = vec![
+            job(1, 2, 8, 50, 0.0),
+            job(2, 1, 8, 0, 1.0),
+            job(3, 1, 4, 0, 2.0),
+        ];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        let ids: Vec<u64> = out.iter().map(|a| a.job).collect();
+        assert_eq!(ids, vec![2], "zero-walltime backfills on the reserved node");
+        // With free cores remaining, both zero-walltime jobs go.
+        let pending = vec![job(1, 2, 8, 50, 0.0), job(2, 1, 4, 0, 1.0), job(3, 1, 4, 0, 2.0)];
+        let out = EasyBackfill.schedule(0.0, &pending, &ns, &running);
+        let ids: Vec<u64> = out.iter().map(|a| a.job).collect();
+        assert_eq!(ids, vec![2, 3]);
+    }
+
     #[test]
     fn head_placed_when_it_fits() {
         let pending = vec![job(1, 2, 4, 60, 0.0), job(2, 1, 4, 60, 1.0)];

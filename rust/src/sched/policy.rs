@@ -23,6 +23,9 @@ pub struct PendingJob {
     pub priority: i64,
     /// Submission time, seconds on the caller's clock.
     pub submit_s: f64,
+    /// Destination queue/partition (tenant identity for admission layers
+    /// such as [`crate::sim::QueueAdmission`]); `None` = unqueued.
+    pub queue: Option<String>,
 }
 
 impl PendingJob {
@@ -35,6 +38,7 @@ impl PendingJob {
             walltime: Duration::from_secs(walltime_s),
             priority: 0,
             submit_s: 0.0,
+            queue: None,
         }
     }
 }

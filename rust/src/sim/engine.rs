@@ -191,6 +191,7 @@ pub fn simulate(trace: &Trace, params: &SimParams, policy: &dyn SchedPolicy) -> 
                         walltime: std::time::Duration::from_secs_f64(j.walltime_s),
                         priority: j.priority,
                         submit_s: jobs[id].visible_s,
+                        queue: j.queue.clone(),
                     }
                 })
                 .collect();

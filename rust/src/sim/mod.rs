@@ -6,6 +6,8 @@
 //! the simulator only replaces wallclock and process machinery, not the
 //! decision logic. Deterministic: same trace + policy ⇒ same report.
 
+pub mod admission;
 pub mod engine;
 
+pub use admission::QueueAdmission;
 pub use engine::{simulate, OperatorModel, SimParams, SimReport};

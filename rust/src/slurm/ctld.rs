@@ -419,6 +419,7 @@ impl Slurmctld {
                         walltime: j.script.time,
                         priority: j.script.priority + part.priority,
                         submit_s: j.submit_s,
+                        queue: Some(j.partition.clone()),
                     })
                     .collect();
                 if pending.is_empty() {

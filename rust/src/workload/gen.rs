@@ -114,6 +114,30 @@ impl TraceGen {
         Trace::new("cybele-pilots", jobs)
     }
 
+    /// Multi-tenant trace: a Poisson batch stream where every job carries
+    /// a tenant queue label (`TraceJob::queue`), shares skewed Zipf-style
+    /// (tenant *i* gets weight 1/(i+1)) so one noisy tenant dominates —
+    /// the shape that makes quota admission (`sim::QueueAdmission`, the
+    /// kueue layer) measurable against the raw trace.
+    pub fn multi_tenant(
+        &mut self,
+        n_jobs: usize,
+        tenants: &[&str],
+        capacity_cores: u32,
+        load: f64,
+        mean_runtime_s: f64,
+    ) -> Trace {
+        let mut trace = self.poisson_batch(n_jobs, capacity_cores, load, mean_runtime_s);
+        let weights: Vec<f64> =
+            (0..tenants.len().max(1)).map(|i| 1.0 / (i + 1) as f64).collect();
+        for job in &mut trace.jobs {
+            let pick = if tenants.is_empty() { None } else { Some(self.rng.weighted(&weights)) };
+            job.queue = pick.map(|i| tenants[i].to_string());
+        }
+        trace.name = "multi-tenant".into();
+        trace
+    }
+
     /// Adversarial-for-FIFO trace: alternating wide long and narrow short
     /// jobs — the textbook case where EASY backfill wins on makespan.
     pub fn backfill_showcase(&mut self, pairs: usize, cluster_nodes: u32) -> Trace {
@@ -175,6 +199,19 @@ mod tests {
         let t = TraceGen::new(5).backfill_showcase(3, 8);
         assert_eq!(t.len(), 15);
         assert_eq!(t.jobs.iter().filter(|j| j.nodes == 8).count(), 3);
+    }
+
+    #[test]
+    fn multi_tenant_labels_all_jobs() {
+        let t = TraceGen::new(7).multi_tenant(300, &["a", "b", "c"], 64, 0.7, 100.0);
+        assert_eq!(t.len(), 300);
+        assert!(t.jobs.iter().all(|j| j.queue.is_some()));
+        let count = |q: &str| t.jobs.iter().filter(|j| j.queue.as_deref() == Some(q)).count();
+        assert_eq!(count("a") + count("b") + count("c"), 300);
+        assert!(count("a") > count("c"), "zipf skew: first tenant dominates");
+        // Deterministic per seed, like every other generator.
+        let again = TraceGen::new(7).multi_tenant(300, &["a", "b", "c"], 64, 0.7, 100.0);
+        assert_eq!(t, again);
     }
 
     #[test]

@@ -160,6 +160,65 @@ fn same_scenario_identical_through_both_transports() {
     assert!(local.iter().any(|l| l.starts_with("DELETED Pod/p1-child ")));
 }
 
+/// Paged lists (`limit`/`continue`, ROADMAP follow-up) must page
+/// identically through both transports: same page shapes, same cursors,
+/// same items, and selectors compose with paging.
+#[test]
+fn paged_lists_identical_through_both_transports() {
+    fn paging_scenario(api: &dyn ApiClient) -> Vec<String> {
+        let mut t = Vec::new();
+        for i in 0..7 {
+            let mut p = pod(&format!("pg{i}"));
+            if i % 2 == 0 {
+                p.meta.set_label("parity", "even");
+            }
+            api.create(p).expect("create");
+        }
+        let mut opts = ListOptions::all().with_limit(3);
+        loop {
+            let page = api.list(KIND_POD, &opts).expect("page");
+            t.push(format!(
+                "page items={:?} cont={:?}",
+                page.items.iter().map(|o| o.meta.name.clone()).collect::<Vec<_>>(),
+                page.continue_token
+            ));
+            match page.continue_token {
+                Some(tok) => opts = ListOptions::all().with_limit(3).continue_from(&tok),
+                None => break,
+            }
+        }
+        // Selectors compose with paging.
+        let page = api
+            .list(KIND_POD, &ListOptions::all().with_label("parity", "even").with_limit(2))
+            .expect("filtered page");
+        t.push(format!(
+            "filtered items={:?} cont={:?}",
+            page.items.iter().map(|o| o.meta.name.clone()).collect::<Vec<_>>(),
+            page.continue_token
+        ));
+        t
+    }
+
+    let local_api = ApiServer::new(Metrics::new());
+    let local = paging_scenario(&local_api);
+
+    let sd = Shutdown::new();
+    let path = std::env::temp_dir()
+        .join(format!("hpcorc-parity-paged-{}.sock", std::process::id()));
+    let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+    let remote_server = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", remote_server.rpc_service());
+    let remote_api = RemoteApi::connect(&path).unwrap();
+    let remote = paging_scenario(&remote_api);
+    srv.stop();
+
+    assert_eq!(local, remote, "paged list transcripts diverged");
+    assert_eq!(local.len(), 3 + 1, "3 pages of 7 at limit 3, plus the filtered page");
+    assert!(local[0].contains("pg0") && local[0].contains("cont=Some"));
+    assert!(local[2].contains("cont=None"));
+    assert!(local[3].contains("pg0") && local[3].contains("pg2") && local[3].contains("cont=Some"));
+}
+
 #[test]
 fn typed_api_handles_identical_through_both_transports() {
     use hpcorc::kube::Api;

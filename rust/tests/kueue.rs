@@ -1,0 +1,384 @@
+//! Queue-layer integration: gang atomicity, cohort borrowing, and
+//! preemption, end to end through the real admission controller, the
+//! Kubernetes scheduler, and the operator's red-box submission path
+//! (with a recording bridge standing in for the WLM, so "nothing crossed
+//! red-box" is a hard assertion, not an inference).
+
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::kube::{
+    ApiServer, Controller, KubeObject, KubeScheduler, NodeView, PodView, WlmJobView,
+    KIND_POD, KIND_TORQUEJOB,
+};
+use hpcorc::kueue::{
+    is_admitted, is_evicted, AdmissionCore, ClusterQueueView, LocalQueueView,
+    PreemptionPolicy, QueueOrdering, QueueResources, POD_GROUP_COUNT_ANNOTATION,
+    POD_GROUP_LABEL, PRIORITY_LABEL, QUEUE_NAME_LABEL,
+};
+use hpcorc::operator::{
+    register_virtual_nodes, OperatorConfig, WlmBridge, WlmJobOperator, WlmStatus,
+};
+use hpcorc::pbs::PbsScript;
+use hpcorc::util::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// WLM bridge that records everything crossing the (simulated) red-box
+/// boundary instead of running a PBS server.
+#[derive(Default)]
+struct RecordingBridge {
+    submits: Mutex<Vec<String>>,
+    cancels: Mutex<Vec<String>>,
+    next: AtomicU64,
+}
+
+impl RecordingBridge {
+    fn submits(&self) -> Vec<String> {
+        self.submits.lock().unwrap().clone()
+    }
+    fn cancels(&self) -> Vec<String> {
+        self.cancels.lock().unwrap().clone()
+    }
+}
+
+impl WlmBridge for RecordingBridge {
+    fn submit(&self, script: &str, _user: &str) -> Result<String> {
+        self.submits.lock().unwrap().push(script.to_string());
+        let n = self.next.fetch_add(1, Ordering::SeqCst);
+        Ok(format!("{n}.rec-head"))
+    }
+    fn status(&self, _job_id: &str) -> Result<WlmStatus> {
+        Ok(WlmStatus::Queued)
+    }
+    fn cancel(&self, job_id: &str) -> Result<()> {
+        self.cancels.lock().unwrap().push(job_id.to_string());
+        Ok(())
+    }
+    fn read_file(&self, _path: &str) -> Result<String> {
+        Ok(String::new())
+    }
+    fn write_file(&self, _path: &str, _content: &str) -> Result<()> {
+        Ok(())
+    }
+    fn queues(&self) -> Result<Vec<String>> {
+        Ok(vec!["batch".into()])
+    }
+}
+
+struct Env {
+    api: ApiServer,
+    core: AdmissionCore,
+    sched: KubeScheduler,
+    operator: Arc<WlmJobOperator>,
+    bridge: Arc<RecordingBridge>,
+}
+
+fn env() -> Env {
+    let api = ApiServer::new(Metrics::new());
+    let bridge = Arc::new(RecordingBridge::default());
+    register_virtual_nodes(&api, bridge.as_ref(), "torque").unwrap();
+    let sched = KubeScheduler::new(api.client(), Metrics::new());
+    let wlm: Arc<dyn WlmBridge> = bridge.clone();
+    let operator = WlmJobOperator::new(OperatorConfig::torque(), wlm, Metrics::new());
+    Env { api, core: AdmissionCore::new(Metrics::new()), sched, operator, bridge }
+}
+
+fn queued_pod(name: &str, queue: &str) -> KubeObject {
+    let mut p = PodView::build(name, "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+    p.meta.set_label(QUEUE_NAME_LABEL, queue);
+    p
+}
+
+fn pod_group(queue: &str, group: &str, n: usize) -> Vec<KubeObject> {
+    (0..n)
+        .map(|i| {
+            let mut p = queued_pod(&format!("{group}-{i}"), queue);
+            p.meta.set_label(POD_GROUP_LABEL, group);
+            p.meta
+                .annotations
+                .push((POD_GROUP_COUNT_ANNOTATION.to_string(), n.to_string()));
+            p
+        })
+        .collect()
+}
+
+fn wide_torquejob(name: &str, nodes: u32, queue: &str) -> KubeObject {
+    let mut o = WlmJobView::build_torquejob(
+        name,
+        &format!("#!/bin/sh\n#PBS -l nodes={nodes}:ppn=1\nsleep 5\n"),
+        "",
+        "",
+    );
+    o.meta.set_label(QUEUE_NAME_LABEL, queue);
+    o
+}
+
+/// Acceptance: a 4-node WlmJob against a 3-node-free quota admits zero
+/// pods and submits nothing over red-box; once the quota frees it admits
+/// all-at-once and submits exactly one 4-node job.
+#[test]
+fn gang_admission_is_all_or_nothing_over_redbox() {
+    let e = env();
+    e.api
+        .create(ClusterQueueView::build("cq-a", QueueResources::nodes(4)))
+        .unwrap();
+    e.api.create(LocalQueueView::build("tenant-a", "cq-a")).unwrap();
+
+    // An admitted 1-node pod leaves 3 nodes of quota.
+    e.api.create(queued_pod("occ", "tenant-a")).unwrap();
+    e.core.cycle(&e.api).unwrap();
+    assert!(is_admitted(&e.api.get(KIND_POD, "occ").unwrap()));
+
+    // The 4-node gang arrives against 3 free quota nodes.
+    e.api.create(wide_torquejob("wide", 4, "tenant-a")).unwrap();
+    for _ in 0..5 {
+        e.core.cycle(&e.api).unwrap();
+        e.operator.reconcile(&e.api, "wide").unwrap();
+        e.sched.run_cycle();
+    }
+    assert!(
+        e.api.get(KIND_POD, "wide-submit").unwrap_err().is_not_found(),
+        "gang admitted zero pods"
+    );
+    assert!(e.bridge.submits().is_empty(), "nothing crossed red-box");
+    let obj = e.api.get(KIND_TORQUEJOB, "wide").unwrap();
+    assert!(!is_admitted(&obj));
+    assert_eq!(obj.status.opt_str("phase").unwrap_or(""), "", "held suspended");
+
+    // Quota frees (the occupant completes) → the gang admits atomically.
+    e.api
+        .update_status(KIND_POD, "occ", |o| o.status.insert("phase", "Succeeded"))
+        .unwrap();
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.admitted, 1);
+    e.operator.reconcile(&e.api, "wide").unwrap(); // dummy pod created
+    assert_eq!(e.sched.run_cycle(), 1, "dummy pod binds to the virtual node");
+    e.operator.reconcile(&e.api, "wide").unwrap(); // submits over red-box
+    let submits = e.bridge.submits();
+    assert_eq!(submits.len(), 1, "exactly one all-at-once submission");
+    assert_eq!(PbsScript::parse(&submits[0]).unwrap().nodes, 4);
+    let obj = e.api.get(KIND_TORQUEJOB, "wide").unwrap();
+    assert_eq!(obj.status.opt_str("phase"), Some("queued"));
+}
+
+/// Cohort borrowing: an idle peer's nominal capacity is borrowable, and
+/// the cohort's total capacity is the hard cap.
+#[test]
+fn cohort_borrowing_admits_beyond_nominal() {
+    let e = env();
+    for name in ["cq-a", "cq-b"] {
+        e.api
+            .create(ClusterQueueView::build_full(
+                name,
+                Some("pool"),
+                QueueResources::nodes(2),
+                None,
+                QueueOrdering::Fifo,
+                PreemptionPolicy::default(),
+            ))
+            .unwrap();
+    }
+    e.api.create(LocalQueueView::build("tenant-a", "cq-a")).unwrap();
+    e.api.create(LocalQueueView::build("tenant-b", "cq-b")).unwrap();
+
+    // 3-pod gang on tenant-a: borrows 1 node from idle cq-b.
+    for p in pod_group("tenant-a", "grp-a", 3) {
+        e.api.create(p).unwrap();
+    }
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.admitted, 3, "borrowed idle cohort capacity");
+    for i in 0..3 {
+        assert!(is_admitted(&e.api.get(KIND_POD, &format!("grp-a-{i}")).unwrap()));
+    }
+
+    // tenant-b's own 2-pod gang no longer fits (cohort 3+2 > 4) and
+    // cq-b has no preemption policy: it waits.
+    for p in pod_group("tenant-b", "grp-b", 2) {
+        e.api.create(p).unwrap();
+    }
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.admitted, 0);
+    assert_eq!(r.pending, 2);
+    assert!(!is_admitted(&e.api.get(KIND_POD, "grp-b-0").unwrap()));
+}
+
+/// Preemption (reclaim): a within-nominal gang evicts the cohort peer's
+/// borrowing gang — whole-gang eviction, lender made whole.
+#[test]
+fn preemption_reclaims_borrowed_capacity() {
+    let e = env();
+    e.api
+        .create(ClusterQueueView::build_full(
+            "cq-a",
+            Some("pool"),
+            QueueResources::nodes(2),
+            None,
+            QueueOrdering::Fifo,
+            PreemptionPolicy::default(),
+        ))
+        .unwrap();
+    e.api
+        .create(ClusterQueueView::build_full(
+            "cq-b",
+            Some("pool"),
+            QueueResources::nodes(2),
+            None,
+            QueueOrdering::Fifo,
+            PreemptionPolicy { reclaim_within_cohort: true, within_queue: false },
+        ))
+        .unwrap();
+    e.api.create(LocalQueueView::build("tenant-a", "cq-a")).unwrap();
+    e.api.create(LocalQueueView::build("tenant-b", "cq-b")).unwrap();
+
+    for p in pod_group("tenant-a", "grp-a", 3) {
+        e.api.create(p).unwrap();
+    }
+    assert_eq!(e.core.cycle(&e.api).unwrap().admitted, 3);
+
+    for p in pod_group("tenant-b", "grp-b", 2) {
+        e.api.create(p).unwrap();
+    }
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.preempted, 3, "whole borrowing gang evicted");
+    assert_eq!(r.admitted, 2, "reclaimer admitted in the same cycle");
+    for i in 0..3 {
+        let p = e.api.get(KIND_POD, &format!("grp-a-{i}")).unwrap();
+        assert!(!is_admitted(&p));
+        assert!(is_evicted(&p));
+        assert!(p.spec.opt_str("nodeName").is_none(), "evicted pods are unbound");
+    }
+    for i in 0..2 {
+        assert!(is_admitted(&e.api.get(KIND_POD, &format!("grp-b-{i}")).unwrap()));
+    }
+}
+
+/// Preemption unwinds an already-submitted WLM job: the operator cancels
+/// it over red-box and resubmits after re-admission.
+#[test]
+fn preemption_cancels_submitted_wlm_job_and_resubmits() {
+    let e = env();
+    e.api
+        .create(ClusterQueueView::build_full(
+            "cq-a",
+            Some("pool"),
+            QueueResources::nodes(2),
+            None,
+            QueueOrdering::Fifo,
+            PreemptionPolicy::default(),
+        ))
+        .unwrap();
+    e.api
+        .create(ClusterQueueView::build_full(
+            "cq-b",
+            Some("pool"),
+            QueueResources::nodes(2),
+            None,
+            QueueOrdering::Fifo,
+            PreemptionPolicy { reclaim_within_cohort: true, within_queue: false },
+        ))
+        .unwrap();
+    e.api.create(LocalQueueView::build("tenant-a", "cq-a")).unwrap();
+    e.api.create(LocalQueueView::build("tenant-b", "cq-b")).unwrap();
+
+    // tenant-a's 3-node TorqueJob borrows and goes all the way to qsub.
+    e.api.create(wide_torquejob("borrower", 3, "tenant-a")).unwrap();
+    e.core.cycle(&e.api).unwrap();
+    e.operator.reconcile(&e.api, "borrower").unwrap();
+    e.sched.run_cycle();
+    e.operator.reconcile(&e.api, "borrower").unwrap();
+    assert_eq!(e.bridge.submits().len(), 1, "borrower submitted");
+    let job_id = e
+        .api
+        .get(KIND_TORQUEJOB, "borrower")
+        .unwrap()
+        .status
+        .opt_str("jobId")
+        .unwrap()
+        .to_string();
+
+    // tenant-b reclaims its nominal capacity.
+    e.api.create(wide_torquejob("rightful", 2, "tenant-b")).unwrap();
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.preempted, 1);
+    assert_eq!(r.admitted, 1);
+    // The operator observes the eviction and unwinds the submission.
+    e.operator.reconcile(&e.api, "borrower").unwrap();
+    assert_eq!(e.bridge.cancels(), vec![job_id], "cancelled over red-box");
+    let obj = e.api.get(KIND_TORQUEJOB, "borrower").unwrap();
+    assert_eq!(obj.status.opt_str("phase").unwrap_or(""), "", "reset for resubmission");
+    assert!(obj.status.opt_str("jobId").is_none());
+
+    // The rightful gang proceeds; the borrower stays suspended (cohort
+    // has no room: 2 + 3 > 4).
+    e.operator.reconcile(&e.api, "rightful").unwrap();
+    e.sched.run_cycle();
+    e.operator.reconcile(&e.api, "rightful").unwrap();
+    assert_eq!(e.bridge.submits().len(), 2, "rightful submitted");
+    e.core.cycle(&e.api).unwrap();
+    e.operator.reconcile(&e.api, "borrower").unwrap();
+    assert_eq!(e.bridge.submits().len(), 2, "borrower must not resubmit while evicted");
+}
+
+/// Within-queue preemption: a higher-priority gang evicts the cheapest
+/// lower-priority gang in the same ClusterQueue.
+#[test]
+fn within_queue_priority_preemption() {
+    let e = env();
+    e.api
+        .create(ClusterQueueView::build_full(
+            "cq",
+            None,
+            QueueResources::nodes(2),
+            None,
+            QueueOrdering::Priority,
+            PreemptionPolicy { reclaim_within_cohort: false, within_queue: true },
+        ))
+        .unwrap();
+    e.api.create(LocalQueueView::build("team", "cq")).unwrap();
+
+    for p in pod_group("team", "low", 2) {
+        e.api.create(p).unwrap();
+    }
+    assert_eq!(e.core.cycle(&e.api).unwrap().admitted, 2);
+
+    let mut high = pod_group("team", "high", 2);
+    for p in &mut high {
+        p.meta.set_label(PRIORITY_LABEL, "10");
+    }
+    for p in high {
+        e.api.create(p).unwrap();
+    }
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.preempted, 2);
+    assert_eq!(r.admitted, 2);
+    assert!(is_admitted(&e.api.get(KIND_POD, "high-0").unwrap()));
+    assert!(is_evicted(&e.api.get(KIND_POD, "low-0").unwrap()));
+}
+
+/// Pod-group gangs: members are held until the declared count is present,
+/// then admitted (and scheduled) together.
+#[test]
+fn pod_group_admits_only_when_complete() {
+    let e = env();
+    e.api
+        .create(NodeView::build("w1", Resources::cores(8, 32 << 30), &[]))
+        .unwrap();
+    e.api
+        .create(ClusterQueueView::build("cq", QueueResources::nodes(10)))
+        .unwrap();
+    e.api.create(LocalQueueView::build("team", "cq")).unwrap();
+
+    let members = pod_group("team", "gang", 2);
+    e.api.create(members[0].clone()).unwrap();
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.admitted, 0, "incomplete group held");
+    assert_eq!(e.sched.run_cycle(), 0, "gated member must not bind");
+
+    e.api.create(members[1].clone()).unwrap();
+    let r = e.core.cycle(&e.api).unwrap();
+    assert_eq!(r.admitted, 2, "whole gang admitted in one cycle");
+    assert_eq!(e.sched.run_cycle(), 2, "both members bind");
+    for i in 0..2 {
+        let p = e.api.get(KIND_POD, &format!("gang-{i}")).unwrap();
+        assert_eq!(p.spec.opt_str("nodeName"), Some("w1"));
+    }
+}
