@@ -1,0 +1,171 @@
+//! Autoscale-layer cost at scale:
+//!
+//! - **hpa reconcile** — one HPA pass over a 1k-pod Deployment with a
+//!   full metrics pipeline behind it (list + per-pod metrics gets + the
+//!   recommendation math), the recurring price of every poll tick;
+//! - **ca cycle** — one cluster-autoscaler pass with 1k pending pods
+//!   (the fit simulation + bin-packing, no provisioning);
+//! - **scale-up convergence** — wall time from "1k unschedulable pods"
+//!   to "every pod placeable", provisioning pool nodes and re-running
+//!   scheduler+CA cycles until quiet.
+//!
+//! Ends with one JSON line per stat (`{"bench":...}`) for the perf
+//! trajectory.
+
+use hpcorc::autoscale::{
+    publish_node_sample, CaConfig, ClusterAutoscaler, HpaController, HpaView, NodeProvisioner,
+};
+use hpcorc::bench::{header, Bench, Stats};
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::kube::{
+    ApiServer, Controller, DeploymentController, KubeScheduler, NodeView, KIND_POD,
+};
+use hpcorc::util::Result;
+use std::time::Duration;
+
+const PODS: usize = 1_000;
+
+/// Creates bare Node objects — bench measures control-loop cost, not
+/// kubelet startup.
+struct ObjectProvisioner {
+    api: ApiServer,
+    capacity: Resources,
+}
+
+impl NodeProvisioner for ObjectProvisioner {
+    fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()> {
+        let mut node = NodeView::build(name, self.capacity, &[]);
+        for (k, v) in labels {
+            node.meta.set_label(k, v);
+        }
+        self.api.create(node)?;
+        Ok(())
+    }
+    fn deprovision(&self, name: &str) -> Result<()> {
+        let _ = name;
+        Ok(())
+    }
+}
+
+/// A 1k-pod Deployment, every pod Running on a big node with a published
+/// metrics sample.
+fn hpa_setup() -> ApiServer {
+    let api = ApiServer::new(Metrics::new());
+    api.create(NodeView::build("big", Resources::cores(4096, 1 << 44), &[])).unwrap();
+    api.create(DeploymentController::build(
+        "web",
+        PODS as u32,
+        "svc.sif",
+        Resources::new(1000, 64 << 20, 0),
+    ))
+    .unwrap();
+    DeploymentController.reconcile(&api, "web").unwrap();
+    for pod in api.list(KIND_POD, &[]) {
+        api.update_status(KIND_POD, &pod.meta.name, |o| {
+            o.spec.insert("nodeName", "big");
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+    }
+    publish_node_sample(
+        &api,
+        "big",
+        Resources::cores(4096, 1 << 44),
+        &api.list(KIND_POD, &[]),
+        &Metrics::new(),
+    );
+    api
+}
+
+fn main() {
+    println!("=== autoscale layer: HPA + cluster autoscaler at {PODS} pods ===");
+    println!("{}", header());
+    let mut stats: Vec<Stats> = Vec::new();
+
+    // --- HPA reconcile over 1k sampled pods --------------------------
+    let api = hpa_setup();
+    // Target 50% vs the default 50%-of-request usage: desired == current,
+    // so the steady-state pass is measured (no write amplification).
+    api.create(HpaView::build("h", "web", 1, PODS as u32 * 2, 50, Duration::ZERO)).unwrap();
+    let hpa = HpaController::new(Duration::from_millis(1), Metrics::new());
+    stats.push(Bench::new(format!("hpa reconcile ({PODS} pods)")).warmup(2).iters(15).run(
+        || {
+            hpa.reconcile(&api, "h").unwrap();
+        },
+    ));
+
+    // --- CA cycle with 1k pending pods, nothing provisionable --------
+    let api = ApiServer::new(Metrics::new());
+    for i in 0..PODS {
+        api.create(hpcorc::kube::PodView::build(
+            &format!("p{i:04}"),
+            "img.sif",
+            Resources::new(1000, 1 << 20, 0),
+            &[],
+        ))
+        .unwrap();
+    }
+    let ca = ClusterAutoscaler::new(
+        api.client(),
+        std::sync::Arc::new(ObjectProvisioner {
+            api: api.clone(),
+            capacity: Resources::cores(8, 64 << 30),
+        }),
+        CaConfig { max_nodes: 0, ..CaConfig::default() },
+        Metrics::new(),
+    );
+    stats.push(
+        Bench::new(format!("ca cycle ({PODS} pending, pool capped)"))
+            .warmup(2)
+            .iters(15)
+            .run(|| {
+                let r = ca.run_cycle().unwrap();
+                assert_eq!(r.unschedulable, PODS);
+            }),
+    );
+
+    // --- Scale-up convergence: 1k pods -> pool grows until placeable --
+    let api = ApiServer::new(Metrics::new());
+    for i in 0..PODS {
+        api.create(hpcorc::kube::PodView::build(
+            &format!("p{i:04}"),
+            "img.sif",
+            Resources::new(1000, 1 << 20, 0),
+            &[],
+        ))
+        .unwrap();
+    }
+    let sched = KubeScheduler::new(api.client(), Metrics::new());
+    let ca = ClusterAutoscaler::new(
+        api.client(),
+        std::sync::Arc::new(ObjectProvisioner {
+            api: api.clone(),
+            capacity: Resources::cores(8, 64 << 30),
+        }),
+        CaConfig {
+            max_nodes: PODS / 8 + 1,
+            burst_wlm: None,
+            ..CaConfig::default()
+        },
+        Metrics::new(),
+    );
+    stats.push(
+        Bench::new(format!("scale-up convergence ({PODS} pods, 8-core nodes)"))
+            .warmup(0)
+            .iters(1)
+            .run(|| {
+                loop {
+                    let bound = sched.run_cycle();
+                    let r = ca.run_cycle().unwrap();
+                    if bound == 0 && r.unschedulable == 0 && r.provisioned.is_empty() {
+                        break;
+                    }
+                }
+            }),
+    );
+
+    println!();
+    for s in &stats {
+        println!("{}", s.json());
+    }
+}

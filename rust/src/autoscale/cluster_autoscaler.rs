@@ -1,0 +1,723 @@
+//! Cluster autoscaler: grow the real Kubernetes node pool under pressure,
+//! burst the overflow onto the WLM partition, shrink when idle.
+//!
+//! Each cycle is level-triggered over the API (the scheduler's
+//! `run_cycle` shape) and walks three arms:
+//!
+//! 1. **Scale up** — pods that are Pending, unbound, scheduler-ready (no
+//!    `schedulingGates` — suspended kueue workloads are *not* capacity
+//!    pressure) and that fit no schedulable node are bin-packed into
+//!    hypothetical pool-shaped nodes; that many nodes are provisioned
+//!    through the [`NodeProvisioner`] (the testbed registers a real
+//!    simulated kubelet per node), up to `max_nodes`.
+//! 2. **Burst to WLM** — when the pool is at its cap, unschedulable pods
+//!    that opted in with the [`BURST_LABEL`] label are flipped onto the
+//!    tainted virtual WLM node: the pod is bound to the virtual node and
+//!    a `TorqueJob`/`SlurmJob` wrapping its container is created (owned
+//!    by the pod), which the operator ships to the WLM over red-box —
+//!    the virtual-kubelet path of High-Performance Kubernetes
+//!    (arXiv:2409.16919). The pod's phase mirrors the WLM job's until
+//!    completion.
+//! 3. **Scale down** — a pool node that has held no work (or only
+//!    *movable* work: Deployment-owned pods that are not kueue-admitted)
+//!    below 50% utilization for `scale_down_idle` is cordoned
+//!    (`spec.unschedulable`), its movable pods are deleted (their
+//!    Deployment recreates them elsewhere), and once empty the Node
+//!    object is deleted and the kubelet deprovisioned — never below
+//!    `min_nodes`, and never a node hosting a gang-admitted kueue
+//!    workload: evicting one member mid-run would break the
+//!    all-or-nothing guarantee the queue layer provides, so such nodes
+//!    are simply not drain candidates (their quota charges are the
+//!    kueue ledger's to release, not ours).
+
+use crate::cluster::{Metrics, Resources};
+use crate::encoding::Value;
+use crate::kube::{
+    ApiClient, KubeObject, ListOptions, NodeView, PodPhase, PodView, KIND_DEPLOYMENT,
+    KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+};
+use crate::operator::{phase, LABEL_QUEUE, LABEL_WLM, VIRTUAL_KUBELET_TAINT};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Label marking a node as autoscaler-managed (value: the pool name).
+pub const POOL_LABEL: &str = "autoscale.hpcorc.io/pool";
+/// Opt-in label: an unschedulable pod carrying `burst-to-wlm: "true"` may
+/// be shipped to the WLM partition when the Kubernetes pool is at its cap.
+pub const BURST_LABEL: &str = "autoscale.hpcorc.io/burst-to-wlm";
+
+/// Provisions and tears down pool nodes. The testbed implementation
+/// registers/stops a real simulated kubelet; tests may create bare Node
+/// objects.
+pub trait NodeProvisioner: Send + Sync {
+    /// Bring up a node: after this returns, a Node object named `name`
+    /// carrying `labels` must exist (or be about to register itself).
+    fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()>;
+    /// Tear down the node's agent. The Node object is deleted by the
+    /// autoscaler before this is called.
+    fn deprovision(&self, name: &str) -> Result<()>;
+}
+
+#[derive(Debug, Clone)]
+pub struct CaConfig {
+    /// Pool node name prefix (`{prefix}-{index}`).
+    pub pool_prefix: String,
+    /// Shape of every provisioned node.
+    pub node_capacity: Resources,
+    /// Pool size bounds (managed nodes only; static nodes don't count).
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// How long a node must stay empty/movable-underutilized before it is
+    /// drained.
+    pub scale_down_idle: Duration,
+    /// WLM backend bursted pods are shipped to (`torque` / `slurm`);
+    /// None disables bursting.
+    pub burst_wlm: Option<String>,
+    /// Walltime stamped on burst job scripts.
+    pub burst_walltime: Duration,
+}
+
+impl Default for CaConfig {
+    fn default() -> Self {
+        CaConfig {
+            pool_prefix: "ka".into(),
+            node_capacity: Resources::cores(8, 64 << 30),
+            min_nodes: 0,
+            max_nodes: 4,
+            scale_down_idle: Duration::from_secs(10),
+            burst_wlm: Some("torque".into()),
+            burst_walltime: Duration::from_secs(3600),
+        }
+    }
+}
+
+/// What one cycle did.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CaReport {
+    pub provisioned: Vec<String>,
+    pub bursted: Vec<String>,
+    pub cordoned: Vec<String>,
+    pub removed: Vec<String>,
+    pub unschedulable: usize,
+}
+
+struct CaState {
+    /// Node name → when it first became a drain candidate.
+    idle_since: HashMap<String, Instant>,
+    next_index: u64,
+}
+
+pub struct ClusterAutoscaler {
+    api: std::sync::Arc<dyn ApiClient>,
+    provisioner: std::sync::Arc<dyn NodeProvisioner>,
+    cfg: CaConfig,
+    metrics: Metrics,
+    state: Mutex<CaState>,
+}
+
+impl ClusterAutoscaler {
+    pub fn new(
+        api: std::sync::Arc<dyn ApiClient>,
+        provisioner: std::sync::Arc<dyn NodeProvisioner>,
+        cfg: CaConfig,
+        metrics: Metrics,
+    ) -> ClusterAutoscaler {
+        ClusterAutoscaler {
+            api,
+            provisioner,
+            cfg,
+            metrics,
+            state: Mutex::new(CaState { idle_since: HashMap::new(), next_index: 0 }),
+        }
+    }
+
+    /// Run as a daemon.
+    pub fn start(self, period: Duration, shutdown: crate::rt::Shutdown) {
+        crate::rt::pool::spawn_ticker("cluster-autoscaler", period, shutdown, move || {
+            if let Err(e) = self.run_cycle() {
+                crate::warn!("autoscale", "cluster-autoscaler cycle failed: {e}");
+            }
+        });
+    }
+
+    /// One full cycle; public for deterministic stepping.
+    pub fn run_cycle(&self) -> Result<CaReport> {
+        let t0 = Instant::now();
+        let mut report = CaReport::default();
+        let nodes = self.api.list(KIND_NODE, &ListOptions::all())?.items;
+        let pods = self.api.list(KIND_POD, &ListOptions::all())?.items;
+        let views: Vec<NodeView> =
+            nodes.iter().filter_map(|n| NodeView::from_object(n).ok()).collect();
+
+        // Usage per node from bound, non-terminal pods.
+        let mut used: HashMap<&str, Resources> =
+            views.iter().map(|n| (n.name.as_str(), Resources::ZERO)).collect();
+        for obj in &pods {
+            let Ok(v) = PodView::from_object(obj) else { continue };
+            if let (Some(node), false) = (&v.node_name, v.phase.terminal()) {
+                if let Some(u) = used.get_mut(node.as_str()) {
+                    *u += v.requests;
+                }
+            }
+        }
+
+        // Scheduler-ready pending pods that fit nowhere right now. The fit
+        // simulation charges each placed pod so a burst of pending pods is
+        // assessed against total capacity, not each against the same free
+        // space. Tainted nodes (virtual WLM nodes) are never fit targets —
+        // the pods that belong there (the operator's dummy pods, via
+        // toleration + nodeSelector) are placed by the real scheduler.
+        struct FreeNode<'a> {
+            view: &'a NodeView,
+            free: Resources,
+        }
+        let mut free: Vec<FreeNode> = views
+            .iter()
+            .filter(|n| n.ready && !n.unschedulable && n.taints.is_empty())
+            .map(|n| {
+                let u = used.get(n.name.as_str()).copied().unwrap_or(Resources::ZERO);
+                FreeNode { view: n, free: n.capacity.saturating_sub(&u) }
+            })
+            .collect();
+        let mut unschedulable: Vec<&KubeObject> = Vec::new();
+        let mut pending: Vec<&KubeObject> = pods
+            .iter()
+            .filter(|o| {
+                PodView::from_object(o)
+                    .map(|v| {
+                        v.phase == PodPhase::Pending
+                            && v.node_name.is_none()
+                            && v.scheduling_gates.is_empty()
+                    })
+                    .unwrap_or(false)
+            })
+            .collect();
+        pending.sort_by_key(|o| o.meta.name.clone());
+        for obj in pending {
+            let view = PodView::from_object(obj).expect("filtered above");
+            let slot = free.iter_mut().find(|fnode| {
+                fnode.free.fits(&view.requests)
+                    && view.node_selector.iter().all(|(k, v)| {
+                        fnode.view.labels.iter().any(|(nk, nv)| nk == k && nv == v)
+                    })
+            });
+            match slot {
+                Some(fnode) => fnode.free = fnode.free.saturating_sub(&view.requests),
+                None => unschedulable.push(obj),
+            }
+        }
+        report.unschedulable = unschedulable.len();
+        self.metrics
+            .set_gauge("autoscale.ca.unschedulable", unschedulable.len() as i64);
+
+        // ---- arm 1: grow the pool ------------------------------------
+        let pool: Vec<&NodeView> = views
+            .iter()
+            .filter(|n| n.labels.iter().any(|(k, _)| k == POOL_LABEL))
+            .collect();
+        let mut pool_size = pool.len();
+        // Bin-pack the poolable unschedulable pods into virtual new nodes.
+        let mut new_bins: Vec<Resources> = Vec::new();
+        for obj in &unschedulable {
+            let view = PodView::from_object(obj).expect("filtered above");
+            if !view.node_selector.is_empty() || !self.cfg.node_capacity.fits(&view.requests) {
+                continue; // a pool node could never host it
+            }
+            match new_bins.iter_mut().find(|b| b.fits(&view.requests)) {
+                Some(b) => *b = b.saturating_sub(&view.requests),
+                None => new_bins.push(self.cfg.node_capacity.saturating_sub(&view.requests)),
+            }
+        }
+        let grow = new_bins.len().min(self.cfg.max_nodes.saturating_sub(pool_size));
+        for _ in 0..grow {
+            let name = self.next_node_name(&views);
+            let labels = [(POOL_LABEL, self.cfg.pool_prefix.as_str())];
+            self.provisioner.provision(&name, &labels)?;
+            self.metrics.inc("autoscale.ca.nodes_provisioned");
+            pool_size += 1;
+            report.provisioned.push(name);
+        }
+
+        // ---- arm 2: burst to the WLM partition -----------------------
+        if let Some(wlm) = &self.cfg.burst_wlm {
+            let vnode = views.iter().find(|n| {
+                n.taints.iter().any(|t| t == VIRTUAL_KUBELET_TAINT)
+                    && n.labels.iter().any(|(k, v)| k == LABEL_WLM && v == wlm)
+            });
+            // The K8s partition counts as exhausted for a pod when the
+            // pool is at its cap (and nothing just came up that the next
+            // scheduler pass might use), or when no pool node could ever
+            // host the pod's shape — growing would not help it.
+            let pool_capped =
+                pool_size >= self.cfg.max_nodes && report.provisioned.is_empty();
+            if let Some(vnode) = vnode {
+                for obj in &unschedulable {
+                    if obj.meta.label(BURST_LABEL) != Some("true")
+                        || obj.status.opt_str("burstJob").is_some()
+                    {
+                        continue;
+                    }
+                    let view = PodView::from_object(obj).expect("filtered above");
+                    let pool_unfittable = !self.cfg.node_capacity.fits(&view.requests);
+                    if pool_capped || pool_unfittable {
+                        self.burst_pod(obj, vnode, wlm)?;
+                        report.bursted.push(obj.meta.name.clone());
+                    }
+                }
+            }
+            self.mirror_bursted(&pods)?;
+        }
+
+        // ---- arm 3: shrink the pool ----------------------------------
+        self.scale_down(&views, &pods, &used, pool_size, &mut report)?;
+
+        self.metrics.set_gauge("autoscale.ca.pool_nodes", pool_size as i64);
+        self.metrics.observe("autoscale.ca.cycle_ns", t0.elapsed().as_nanos() as u64);
+        Ok(report)
+    }
+
+    fn next_node_name(&self, views: &[NodeView]) -> String {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let name = format!("{}-{:03}", self.cfg.pool_prefix, st.next_index);
+            st.next_index += 1;
+            if !views.iter().any(|n| n.name == name) {
+                return name;
+            }
+        }
+    }
+
+    /// Bind a burst-eligible pod to the virtual node and create the WLM
+    /// job object that carries its container to the HPC partition.
+    fn burst_pod(&self, pod: &KubeObject, vnode: &NodeView, wlm: &str) -> Result<()> {
+        let view = PodView::from_object(pod)?;
+        let job_name = format!("burst-{}", view.name);
+        let ppn = (view.requests.cpu_milli.div_ceil(1000)).max(1);
+        let wall = crate::util::fmt_walltime(self.cfg.burst_walltime);
+        let queue = vnode.labels.iter().find(|(k, _)| k == LABEL_QUEUE).map(|(_, v)| v.clone());
+        let (kind, script) = if wlm == "slurm" {
+            let mut s = format!(
+                "#!/bin/sh\n#SBATCH -J {job_name}\n#SBATCH --nodes=1\n#SBATCH --ntasks-per-node={ppn}\n#SBATCH --time={wall}\n"
+            );
+            if let Some(q) = &queue {
+                s.push_str(&format!("#SBATCH -p {q}\n"));
+            }
+            s.push_str(&format!("singularity run {}\n", view.image));
+            (KIND_SLURMJOB, s)
+        } else {
+            let mut s = format!(
+                "#!/bin/sh\n#PBS -N {job_name}\n#PBS -l nodes=1:ppn={ppn}\n#PBS -l walltime={wall}\n"
+            );
+            if let Some(q) = &queue {
+                s.push_str(&format!("#PBS -q {q}\n"));
+            }
+            s.push_str(&format!("singularity run {}\n", view.image));
+            (KIND_TORQUEJOB, s)
+        };
+        let mut job = KubeObject::new(kind, &job_name, Value::map().with("batch", script));
+        job.api_version = crate::kube::WLM_API_VERSION.into();
+        job.meta.owner = Some((KIND_POD.to_string(), view.name.clone()));
+        job.meta.set_label("burst-pod", &view.name);
+        match self.api.create(job) {
+            Ok(_) => {}
+            Err(ref e) if matches!(e, Error::Api(crate::util::ApiError::AlreadyExists { .. })) => {}
+            Err(e) => return Err(e),
+        }
+        let vnode_name = vnode.name.clone();
+        self.api.update_status(KIND_POD, &view.name, &|o| {
+            o.spec.insert("nodeName", vnode_name.clone());
+            o.status.insert("burstJob", job_name.clone());
+            o.status.insert("burstKind", kind);
+        })?;
+        self.metrics.inc("autoscale.ca.pods_bursted");
+        Ok(())
+    }
+
+    /// Mirror WLM job phases back onto bursted pods (the virtual-kubelet
+    /// "node agent" duty for pods bound to the virtual node).
+    fn mirror_bursted(&self, pods: &[KubeObject]) -> Result<()> {
+        for pod in pods {
+            let (Some(job), false) = (
+                pod.status.opt_str("burstJob"),
+                PodPhase::parse(pod.status.opt_str("phase").unwrap_or("")).terminal(),
+            ) else {
+                continue;
+            };
+            let kind = pod.status.opt_str("burstKind").unwrap_or(KIND_TORQUEJOB).to_string();
+            let job_obj = match self.api.get(&kind, job) {
+                Ok(o) => o,
+                Err(e) if e.is_not_found() => continue,
+                Err(e) => return Err(e),
+            };
+            let job_phase = job_obj.status.opt_str("phase").unwrap_or("").to_string();
+            let exit = job_obj.status.opt_int("exitCode");
+            let pod_phase = match job_phase.as_str() {
+                phase::RUNNING => Some("Running"),
+                phase::TRANSFERRING | phase::COMPLETED => Some("Succeeded"),
+                phase::FAILED | phase::CANCELLED | phase::TIMEOUT => Some("Failed"),
+                _ => None,
+            };
+            let Some(pod_phase) = pod_phase else { continue };
+            if pod.status.opt_str("phase") == Some(pod_phase) {
+                continue;
+            }
+            let job_phase_c = job_phase.clone();
+            self.api.update_status(KIND_POD, &pod.meta.name, &move |o| {
+                o.status.insert("phase", pod_phase);
+                o.status.insert("log", format!("bursted to WLM ({job_phase_c})"));
+                if pod_phase == "Succeeded" {
+                    o.status.insert("exitCode", 0i64);
+                } else if let Some(code) = exit {
+                    o.status.insert("exitCode", code);
+                }
+            })?;
+            if pod_phase == "Succeeded" || pod_phase == "Failed" {
+                self.metrics.inc("autoscale.ca.bursts_finished");
+            }
+        }
+        Ok(())
+    }
+
+    /// A pod the drain may delete: Deployment-owned (its controller
+    /// recreates it elsewhere) and not holding a kueue admission.
+    fn movable(pod: &KubeObject) -> bool {
+        pod.meta.owner.as_ref().map(|(k, _)| k == KIND_DEPLOYMENT).unwrap_or(false)
+            && !crate::kueue::is_admitted(pod)
+            && crate::kueue::queue_name(pod).is_none()
+    }
+
+    fn scale_down(
+        &self,
+        views: &[NodeView],
+        pods: &[KubeObject],
+        used: &HashMap<&str, Resources>,
+        pool_size: usize,
+        report: &mut CaReport,
+    ) -> Result<()> {
+        let now = Instant::now();
+        let mut removable_budget = pool_size.saturating_sub(self.cfg.min_nodes);
+        let mut st = self.state.lock().unwrap();
+        for node in views {
+            if !node.labels.iter().any(|(k, _)| k == POOL_LABEL) {
+                continue;
+            }
+            let resident: Vec<&KubeObject> = pods
+                .iter()
+                .filter(|p| {
+                    p.spec.opt_str("nodeName") == Some(node.name.as_str())
+                        && !PodPhase::parse(p.status.opt_str("phase").unwrap_or("")).terminal()
+                })
+                .collect();
+            let u = used.get(node.name.as_str()).copied().unwrap_or(Resources::ZERO);
+            let underutilized = u.dominant_fraction(&node.capacity) < 0.5;
+            let candidate =
+                resident.is_empty() || (underutilized && resident.iter().all(|p| Self::movable(p)));
+            if !candidate {
+                st.idle_since.remove(&node.name);
+                continue;
+            }
+            let since = *st.idle_since.entry(node.name.clone()).or_insert(now);
+            if now.duration_since(since) < self.cfg.scale_down_idle || removable_budget == 0 {
+                continue;
+            }
+            // Drain: cordon first so the scheduler stops feeding it, then
+            // clear movable pods; the node is removed once empty.
+            if !node.unschedulable {
+                self.api.update_status(KIND_NODE, &node.name, &|o| {
+                    o.spec.insert("unschedulable", true);
+                })?;
+                self.metrics.inc("autoscale.ca.nodes_cordoned");
+                report.cordoned.push(node.name.clone());
+            }
+            for pod in &resident {
+                match self.api.delete(KIND_POD, &pod.meta.name) {
+                    Ok(_) | Err(Error::Api(crate::util::ApiError::NotFound { .. })) => {}
+                    Err(e) => return Err(e),
+                }
+            }
+            if resident.is_empty() {
+                self.api.delete(KIND_NODE, &node.name)?;
+                self.provisioner.deprovision(&node.name)?;
+                st.idle_since.remove(&node.name);
+                removable_budget -= 1;
+                self.metrics.inc("autoscale.ca.nodes_removed");
+                report.removed.push(node.name.clone());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::ApiServer;
+    use std::sync::Arc;
+    use std::sync::Mutex as StdMutex;
+
+    /// Provisioner that registers bare Node objects (no kubelet).
+    struct FakeProvisioner {
+        api: ApiServer,
+        capacity: Resources,
+        provisioned: StdMutex<Vec<String>>,
+        deprovisioned: StdMutex<Vec<String>>,
+    }
+
+    impl NodeProvisioner for FakeProvisioner {
+        fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()> {
+            let mut node = NodeView::build(name, self.capacity, &[]);
+            for (k, v) in labels {
+                node.meta.set_label(k, v);
+            }
+            self.api.create(node)?;
+            self.provisioned.lock().unwrap().push(name.to_string());
+            Ok(())
+        }
+        fn deprovision(&self, name: &str) -> Result<()> {
+            self.deprovisioned.lock().unwrap().push(name.to_string());
+            Ok(())
+        }
+    }
+
+    fn setup(cfg: CaConfig) -> (ApiServer, Arc<FakeProvisioner>, ClusterAutoscaler) {
+        let api = ApiServer::new(Metrics::new());
+        let prov = Arc::new(FakeProvisioner {
+            api: api.clone(),
+            capacity: cfg.node_capacity,
+            provisioned: StdMutex::new(Vec::new()),
+            deprovisioned: StdMutex::new(Vec::new()),
+        });
+        let ca =
+            ClusterAutoscaler::new(api.client(), prov.clone(), cfg, Metrics::new());
+        (api, prov, ca)
+    }
+
+    fn pending_pod(api: &ApiServer, name: &str, cpu: u64) {
+        api.create(PodView::build(name, "img.sif", Resources::new(cpu, 1 << 20, 0), &[]))
+            .unwrap();
+    }
+
+    #[test]
+    fn provisions_for_unschedulable_pods_up_to_max() {
+        let mut cfg = CaConfig::default();
+        cfg.node_capacity = Resources::cores(2, 8 << 30);
+        cfg.max_nodes = 2;
+        let (api, prov, ca) = setup(cfg);
+        // 5 one-core pods, no nodes at all: needs 3 bins, capped at 2.
+        for i in 0..5 {
+            pending_pod(&api, &format!("p{i}"), 1000);
+        }
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.unschedulable, 5);
+        assert_eq!(r.provisioned.len(), 2, "capped at max_nodes");
+        assert_eq!(prov.provisioned.lock().unwrap().len(), 2);
+        // Next cycle: pool at cap, no further growth.
+        let r = ca.run_cycle().unwrap();
+        assert!(r.provisioned.is_empty());
+    }
+
+    #[test]
+    fn schedulable_and_gated_pods_trigger_nothing() {
+        let mut cfg = CaConfig::default();
+        cfg.node_capacity = Resources::cores(2, 8 << 30);
+        let (api, _prov, ca) = setup(cfg);
+        api.create(NodeView::build("static", Resources::cores(8, 32 << 30), &[])).unwrap();
+        pending_pod(&api, "fits", 1000);
+        let mut gated = PodView::build("gated", "img.sif", Resources::new(1000, 1 << 20, 0), &[]);
+        crate::kube::add_scheduling_gate(&mut gated, "kueue.x-k8s.io/admission");
+        api.create(gated).unwrap();
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.unschedulable, 0, "fits on the static node; gated pod ignored");
+        assert!(r.provisioned.is_empty());
+    }
+
+    #[test]
+    fn bursts_labelled_pod_when_pool_capped() {
+        let mut cfg = CaConfig::default();
+        cfg.node_capacity = Resources::cores(1, 8 << 30);
+        cfg.max_nodes = 1;
+        let (api, _prov, ca) = setup(cfg);
+        // Virtual node for the torque batch queue.
+        let mut vnode =
+            NodeView::build("vnode-torque-batch", Resources::cores(1024, 1 << 40), &[VIRTUAL_KUBELET_TAINT]);
+        vnode.meta.set_label(LABEL_QUEUE, "batch");
+        vnode.meta.set_label(LABEL_WLM, "torque");
+        api.create(vnode).unwrap();
+
+        let mut burstable =
+            PodView::build("hpc-ok", "work.sif", Resources::new(1000, 1 << 20, 0), &[]);
+        burstable.meta.set_label(BURST_LABEL, "true");
+        api.create(burstable).unwrap();
+        // Sorts ahead of "hpc-ok", so the fit simulation hands it the one
+        // provisioned node and leaves the burstable pod unschedulable.
+        pending_pod(&api, "a-plain", 1000);
+
+        // Cycle 1 provisions the single allowed node.
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.provisioned.len(), 1);
+        assert!(r.bursted.is_empty(), "burst only once the pool is capped");
+        // Cycle 2: pool at cap, one pod still unschedulable -> burst the
+        // labelled one.
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.bursted, vec!["hpc-ok"]);
+        let pod = api.get(KIND_POD, "hpc-ok").unwrap();
+        assert_eq!(pod.spec.opt_str("nodeName"), Some("vnode-torque-batch"));
+        assert_eq!(pod.status.opt_str("burstJob"), Some("burst-hpc-ok"));
+        let job = api.get(KIND_TORQUEJOB, "burst-hpc-ok").unwrap();
+        let script = job.spec.opt_str("batch").unwrap();
+        assert!(script.contains("#PBS -l nodes=1:ppn=1"), "{script}");
+        assert!(script.contains("#PBS -q batch"));
+        assert!(script.contains("singularity run work.sif"));
+        assert_eq!(job.meta.owner, Some((KIND_POD.to_string(), "hpc-ok".to_string())));
+
+        // Mirror: job runs, then completes -> pod follows.
+        api.update_status(KIND_TORQUEJOB, "burst-hpc-ok", |o| {
+            o.status.insert("phase", phase::RUNNING);
+        })
+        .unwrap();
+        ca.run_cycle().unwrap();
+        assert_eq!(api.get(KIND_POD, "hpc-ok").unwrap().status.opt_str("phase"), Some("Running"));
+        api.update_status(KIND_TORQUEJOB, "burst-hpc-ok", |o| {
+            o.status.insert("phase", phase::COMPLETED);
+        })
+        .unwrap();
+        ca.run_cycle().unwrap();
+        let pod = api.get(KIND_POD, "hpc-ok").unwrap();
+        assert_eq!(pod.status.opt_str("phase"), Some("Succeeded"));
+        assert_eq!(pod.status.opt_int("exitCode"), Some(0));
+    }
+
+    /// A burst-eligible pod no pool node shape could ever host must not
+    /// wait for unrelated load to cap the pool — it bursts immediately.
+    #[test]
+    fn pool_unfittable_pod_bursts_below_cap() {
+        let mut cfg = CaConfig::default();
+        cfg.node_capacity = Resources::cores(2, 8 << 30);
+        cfg.max_nodes = 4; // plenty of pool headroom
+        let (api, prov, ca) = setup(cfg);
+        let mut vnode = NodeView::build(
+            "vnode-torque-batch",
+            Resources::cores(1024, 1 << 40),
+            &[VIRTUAL_KUBELET_TAINT],
+        );
+        vnode.meta.set_label(LABEL_WLM, "torque");
+        api.create(vnode).unwrap();
+        let mut wide =
+            PodView::build("wide", "work.sif", Resources::new(16_000, 1 << 20, 0), &[]);
+        wide.meta.set_label(BURST_LABEL, "true");
+        api.create(wide).unwrap();
+        let r = ca.run_cycle().unwrap();
+        assert!(r.provisioned.is_empty(), "growing cannot host a 16-core pod");
+        assert_eq!(r.bursted, vec!["wide"]);
+        assert!(prov.provisioned.lock().unwrap().is_empty());
+        assert_eq!(
+            api.get(KIND_POD, "wide").unwrap().spec.opt_str("nodeName"),
+            Some("vnode-torque-batch")
+        );
+    }
+
+    #[test]
+    fn unlabelled_pod_never_bursts() {
+        let mut cfg = CaConfig::default();
+        cfg.max_nodes = 0; // pool permanently at cap
+        let (api, _prov, ca) = setup(cfg);
+        let mut vnode =
+            NodeView::build("vnode-torque-batch", Resources::cores(1024, 1 << 40), &[VIRTUAL_KUBELET_TAINT]);
+        vnode.meta.set_label(LABEL_WLM, "torque");
+        api.create(vnode).unwrap();
+        pending_pod(&api, "plain", 1000);
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.unschedulable, 1);
+        assert!(r.bursted.is_empty());
+        assert!(api.get(KIND_POD, "plain").unwrap().spec.opt_str("nodeName").is_none());
+    }
+
+    #[test]
+    fn scales_down_idle_node_but_not_below_min_or_admitted_work() {
+        let mut cfg = CaConfig::default();
+        cfg.node_capacity = Resources::cores(2, 8 << 30);
+        cfg.max_nodes = 3;
+        cfg.min_nodes = 0;
+        cfg.scale_down_idle = Duration::from_millis(5);
+        let (api, prov, ca) = setup(cfg);
+        // Provision two pool nodes by pressure, then let the pods finish.
+        for i in 0..2 {
+            pending_pod(&api, &format!("p{i}"), 2000);
+        }
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.provisioned.len(), 2);
+        // Pin an *admitted* kueue pod to the first pool node.
+        let first = r.provisioned[0].clone();
+        let mut gang = PodView::build("gang", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+        gang.meta.set_label(crate::kueue::QUEUE_NAME_LABEL, "team");
+        api.create(gang).unwrap();
+        api.update_status(KIND_POD, "gang", |o| {
+            crate::kueue::set_condition(&mut o.status, crate::kueue::COND_ADMITTED, true);
+            o.spec.insert("nodeName", first.clone());
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+        // The pressure pods complete.
+        for i in 0..2 {
+            api.update_status(KIND_POD, &format!("p{i}"), |o| {
+                o.status.insert("phase", "Succeeded");
+            })
+            .unwrap();
+        }
+        // First cycle after the drop starts the idle clock; the next one
+        // past the window drains.
+        let r = ca.run_cycle().unwrap();
+        assert!(r.removed.is_empty(), "idle window not yet elapsed");
+        std::thread::sleep(Duration::from_millis(10));
+        let r = ca.run_cycle().unwrap();
+        let second = prov.provisioned.lock().unwrap()[1].clone();
+        assert_eq!(r.removed, vec![second.clone()], "only the empty node drains");
+        assert!(api.get(KIND_NODE, &second).is_err(), "node object deleted");
+        assert!(api.get(KIND_NODE, &first).is_ok(), "admitted workload's node survives");
+        assert!(!NodeView::from_object(&api.get(KIND_NODE, &first).unwrap())
+            .unwrap()
+            .unschedulable);
+        assert_eq!(prov.deprovisioned.lock().unwrap().as_slice(), &[second]);
+        // The admitted pod is untouched.
+        let gang = api.get(KIND_POD, "gang").unwrap();
+        assert!(crate::kueue::is_admitted(&gang));
+        assert_eq!(gang.status.opt_str("phase"), Some("Running"));
+    }
+
+    #[test]
+    fn drains_movable_deployment_pods_with_cordon() {
+        let mut cfg = CaConfig::default();
+        cfg.node_capacity = Resources::cores(8, 32 << 30);
+        cfg.max_nodes = 2;
+        cfg.scale_down_idle = Duration::from_millis(1);
+        let (api, _prov, ca) = setup(cfg);
+        pending_pod(&api, "seed", 1000);
+        let r = ca.run_cycle().unwrap();
+        let node = r.provisioned[0].clone();
+        api.delete(KIND_POD, "seed").unwrap();
+        // A lightly-loaded deployment pod lands on the pool node.
+        let mut web = PodView::build("web-0", "svc.sif", Resources::new(500, 1 << 20, 0), &[]);
+        web.meta.owner = Some((KIND_DEPLOYMENT.to_string(), "web".to_string()));
+        api.create(web).unwrap();
+        api.update_status(KIND_POD, "web-0", |o| {
+            o.spec.insert("nodeName", node.clone());
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+        ca.run_cycle().unwrap(); // starts the idle clock
+        std::thread::sleep(Duration::from_millis(5));
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.cordoned, vec![node.clone()], "cordon before eviction");
+        assert!(api.get(KIND_POD, "web-0").is_err(), "movable pod deleted for its controller");
+        assert!(
+            NodeView::from_object(&api.get(KIND_NODE, &node).unwrap()).unwrap().unschedulable
+        );
+        // Node is empty now; the next elapsed cycle removes it.
+        std::thread::sleep(Duration::from_millis(5));
+        let r = ca.run_cycle().unwrap();
+        assert_eq!(r.removed, vec![node.clone()]);
+        assert!(api.get(KIND_NODE, &node).is_err());
+    }
+}

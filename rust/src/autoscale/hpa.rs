@@ -1,0 +1,500 @@
+//! HorizontalPodAutoscaler: target-utilization scaling of Deployments.
+//!
+//! An `autoscaling/v2`-style HPA object names a Deployment
+//! (`spec.scaleTargetRef.name`), a CPU utilization target
+//! (`spec.targetCPUUtilizationPercent`, usage/request over the pods the
+//! Deployment owns), replica clamps (`minReplicas`/`maxReplicas`), and
+//! stabilization windows
+//! (`spec.behavior.{scaleUp,scaleDown}.stabilizationWindowSeconds`).
+//!
+//! The controller runs on the ordinary [`Controller`] runtime and
+//! re-polls via `RequeueAfter` (metrics change without object events).
+//! Each reconcile recomputes the classic recommendation
+//!
+//! ```text
+//! desired = ceil(current * observedUtilization / target)
+//! ```
+//!
+//! with a ±10% tolerance band, then filters it through the stabilization
+//! windows: a scale-up uses the *smallest* recommendation seen inside the
+//! up-window (don't chase a single spike), a scale-down the *largest*
+//! inside the down-window (don't collapse on a single trough — the k8s
+//! downscale-stabilization behaviour). Windows are wall-clock seconds;
+//! both default to 0 (immediate) / 30 (damped) respectively.
+
+use super::metrics::{PodMetricsView, KIND_PODMETRICS};
+use crate::cluster::Metrics;
+use crate::encoding::Value;
+use crate::kube::{
+    ApiClient, Controller, KubeObject, ListOptions, PodView, Reconcile, KIND_DEPLOYMENT,
+};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The apiVersion the HPA kind is served under.
+pub const AUTOSCALING_API_VERSION: &str = "autoscaling/v2";
+pub const KIND_HPA: &str = "HorizontalPodAutoscaler";
+
+/// Recommendations within ±10% of the target hold the current size
+/// (the kube-controller-manager default tolerance).
+const TOLERANCE: f64 = 0.10;
+
+/// Typed view over an HPA object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HpaView {
+    pub name: String,
+    /// Target Deployment name (`spec.scaleTargetRef.name`).
+    pub target: String,
+    pub min_replicas: u32,
+    pub max_replicas: u32,
+    /// Average CPU utilization target in percent of requests.
+    pub target_utilization_pct: u64,
+    pub scale_up_window: Duration,
+    pub scale_down_window: Duration,
+    /// Status mirror (written by the controller).
+    pub current_utilization_pct: Option<u64>,
+    pub desired_replicas: Option<u32>,
+}
+
+impl HpaView {
+    pub fn from_object(o: &KubeObject) -> Result<HpaView> {
+        if o.kind != KIND_HPA {
+            return Err(Error::parse(format!("expected HorizontalPodAutoscaler, got {}", o.kind)));
+        }
+        let target = o
+            .spec
+            .path(&["scaleTargetRef", "name"])
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::parse("hpa spec.scaleTargetRef.name missing"))?
+            .to_string();
+        let window = |arm: &str, default_s: u64| {
+            Duration::from_secs(
+                o.spec
+                    .path(&["behavior", arm, "stabilizationWindowSeconds"])
+                    .and_then(Value::as_int)
+                    .map(|v| v.max(0) as u64)
+                    .unwrap_or(default_s),
+            )
+        };
+        let min_replicas = o.spec.opt_int("minReplicas").unwrap_or(1).max(0) as u32;
+        Ok(HpaView {
+            name: o.meta.name.clone(),
+            target,
+            min_replicas,
+            // A max below min would make the clamp panic; treat the min
+            // as authoritative (the k8s API rejects such specs outright).
+            max_replicas: (o.spec.opt_int("maxReplicas").unwrap_or(10).max(1) as u32)
+                .max(min_replicas),
+            target_utilization_pct: o
+                .spec
+                .opt_int("targetCPUUtilizationPercent")
+                .unwrap_or(80)
+                .max(1) as u64,
+            scale_up_window: window("scaleUp", 0),
+            scale_down_window: window("scaleDown", 30),
+            current_utilization_pct: o.status.opt_int("currentUtilizationPct").map(|v| v as u64),
+            desired_replicas: o.status.opt_int("desiredReplicas").map(|v| v as u32),
+        })
+    }
+
+    /// Build an HPA object with immediate (0s) scale-up and the given
+    /// scale-down window.
+    pub fn build(
+        name: &str,
+        target: &str,
+        min: u32,
+        max: u32,
+        target_pct: u64,
+        scale_down_window: Duration,
+    ) -> KubeObject {
+        let spec = Value::map()
+            .with(
+                "scaleTargetRef",
+                Value::map().with("kind", KIND_DEPLOYMENT).with("name", target),
+            )
+            .with("minReplicas", min as u64)
+            .with("maxReplicas", max as u64)
+            .with("targetCPUUtilizationPercent", target_pct)
+            .with(
+                "behavior",
+                Value::map()
+                    .with(
+                        "scaleUp",
+                        Value::map().with("stabilizationWindowSeconds", 0u64),
+                    )
+                    .with(
+                        "scaleDown",
+                        Value::map().with(
+                            "stabilizationWindowSeconds",
+                            scale_down_window.as_secs(),
+                        ),
+                    ),
+            );
+        let mut o = KubeObject::new(KIND_HPA, name, spec);
+        o.api_version = AUTOSCALING_API_VERSION.into();
+        o
+    }
+}
+
+impl crate::kube::ResourceView for HpaView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_HPA]
+    }
+    fn from_object(obj: &KubeObject) -> Result<HpaView> {
+        HpaView::from_object(obj)
+    }
+}
+
+/// The HPA controller. Holds per-HPA recommendation history (the only
+/// state; losing it across a restart merely restarts the stabilization
+/// windows, it cannot mis-scale).
+pub struct HpaController {
+    poll: Duration,
+    history: Mutex<HashMap<String, Vec<(Instant, u32)>>>,
+    metrics: Metrics,
+}
+
+impl HpaController {
+    pub fn new(poll: Duration, metrics: Metrics) -> HpaController {
+        HpaController { poll, history: Mutex::new(HashMap::new()), metrics }
+    }
+
+    /// Stabilized recommendation: record `raw`, prune entries older than
+    /// the larger window, and damp in the direction of change.
+    fn stabilize(&self, hpa: &HpaView, current: u32, raw: u32) -> u32 {
+        let now = Instant::now();
+        let keep = hpa.scale_up_window.max(hpa.scale_down_window);
+        let mut hist = self.history.lock().unwrap();
+        let recs = hist.entry(hpa.name.clone()).or_default();
+        recs.push((now, raw));
+        recs.retain(|(t, _)| now.duration_since(*t) <= keep);
+        if raw > current {
+            let floor = recs
+                .iter()
+                .filter(|(t, _)| now.duration_since(*t) <= hpa.scale_up_window)
+                .map(|(_, r)| *r)
+                .min()
+                .unwrap_or(raw);
+            floor.max(current)
+        } else {
+            let ceil = recs
+                .iter()
+                .filter(|(t, _)| now.duration_since(*t) <= hpa.scale_down_window)
+                .map(|(_, r)| *r)
+                .max()
+                .unwrap_or(raw);
+            ceil.min(current)
+        }
+    }
+}
+
+impl Controller for HpaController {
+    fn kind(&self) -> &str {
+        KIND_HPA
+    }
+
+    fn reconcile(&self, api: &dyn ApiClient, name: &str) -> Result<Reconcile> {
+        let obj = match api.get(KIND_HPA, name) {
+            Ok(o) => o,
+            Err(e) if e.is_not_found() => {
+                self.history.lock().unwrap().remove(name);
+                return Ok(Reconcile::Ok);
+            }
+            Err(e) => return Err(e),
+        };
+        let hpa = HpaView::from_object(&obj)?;
+        let deploy = match api.get(KIND_DEPLOYMENT, &hpa.target) {
+            Ok(d) => d,
+            // Target not created yet: keep polling, it may appear.
+            Err(e) if e.is_not_found() => return Ok(Reconcile::RequeueAfter(self.poll)),
+            Err(e) => return Err(e),
+        };
+        let current = deploy.spec.opt_int("replicas").unwrap_or(0).max(0) as u32;
+
+        // Observed utilization: sum(usage) / sum(requests) over the
+        // target's non-terminal pods that have a metrics sample.
+        let pods = api
+            .list(crate::kube::KIND_POD, &ListOptions::all().with_label("deployment", &hpa.target))?
+            .items;
+        let mut usage = 0u64;
+        let mut requested = 0u64;
+        let mut unsampled_requested = 0u64;
+        let mut sampled = 0u32;
+        for pod in &pods {
+            let Ok(view) = PodView::from_object(pod) else { continue };
+            if view.phase.terminal() || view.requests.cpu_milli == 0 {
+                continue;
+            }
+            match api
+                .get(KIND_PODMETRICS, &view.name)
+                .ok()
+                .and_then(|m| PodMetricsView::from_object(&m).ok())
+            {
+                Some(m) => {
+                    usage += m.cpu_milli;
+                    requested += view.requests.cpu_milli;
+                    sampled += 1;
+                }
+                // Pod exists but has no sample yet (Pending/unscheduled or
+                // a cold pipeline).
+                None => unsampled_requested += view.requests.cpu_milli,
+            }
+        }
+        if sampled == 0 || requested == 0 {
+            // No signal at all: poll.
+            return Ok(Reconcile::RequeueAfter(self.poll));
+        }
+        let mut utilization = usage as f64 / requested as f64 * 100.0;
+        let mut hold = false;
+        if utilization > hpa.target_utilization_pct as f64 && unsampled_requested > 0 {
+            // The k8s conservative rule: before scaling up, metric-less
+            // pods count as 0% usage. Otherwise a capacity-starved
+            // deployment (few Running pods hot, the rest Pending and
+            // sample-less) measures only its hot pods and ratchets
+            // straight to maxReplicas, amplifying the very starvation it
+            // is reacting to. If the assumption flips the direction
+            // entirely, hold — never shrink on made-up zeros.
+            utilization =
+                usage as f64 / (requested + unsampled_requested) as f64 * 100.0;
+            hold = utilization <= hpa.target_utilization_pct as f64;
+        }
+        let ratio = utilization / hpa.target_utilization_pct as f64;
+
+        let raw = if hold || (ratio - 1.0).abs() <= TOLERANCE {
+            current
+        } else {
+            (current as f64 * ratio).ceil() as u32
+        };
+        let desired =
+            self.stabilize(&hpa, current, raw).clamp(hpa.min_replicas, hpa.max_replicas);
+
+        if desired != current {
+            api.update_status(KIND_DEPLOYMENT, &hpa.target, &|o| {
+                o.spec.insert("replicas", desired as u64);
+            })?;
+            self.metrics.inc(if desired > current {
+                "autoscale.hpa.scale_ups"
+            } else {
+                "autoscale.hpa.scale_downs"
+            });
+        }
+        let util_pct = utilization.round() as u64;
+        if hpa.current_utilization_pct != Some(util_pct)
+            || hpa.desired_replicas != Some(desired)
+        {
+            api.update_status(KIND_HPA, name, &|o| {
+                o.status.insert("currentReplicas", current as u64);
+                o.status.insert("desiredReplicas", desired as u64);
+                o.status.insert("currentUtilizationPct", util_pct);
+            })?;
+        }
+        Ok(Reconcile::RequeueAfter(self.poll))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::metrics::{publish_node_sample, CPU_USAGE_ANNOTATION};
+    use crate::cluster::Resources;
+    use crate::kube::{ApiServer, DeploymentController, KIND_POD};
+
+    fn hpa_ctl() -> HpaController {
+        HpaController::new(Duration::from_millis(1), Metrics::new())
+    }
+
+    /// Deployment + pods marked Running + one metrics sample per pod.
+    fn seed(api: &ApiServer, replicas: u32, load_milli: u64) {
+        api.create(DeploymentController::build(
+            "web",
+            replicas,
+            "svc.sif",
+            Resources::new(1000, 64 << 20, 0),
+        ))
+        .unwrap();
+        DeploymentController.reconcile(api, "web").unwrap();
+        for pod in api.list(KIND_POD, &[]) {
+            api.update_status(KIND_POD, &pod.meta.name, |o| {
+                o.spec.insert("nodeName", "w1");
+                o.status.insert("phase", "Running");
+                o.meta
+                    .annotations
+                    .push((CPU_USAGE_ANNOTATION.to_string(), load_milli.to_string()));
+            })
+            .unwrap();
+        }
+        publish_node_sample(
+            api,
+            "w1",
+            Resources::cores(64, 256 << 30),
+            &api.list(KIND_POD, &[]),
+            &Metrics::new(),
+        );
+    }
+
+    fn replicas(api: &ApiServer) -> u32 {
+        api.get(crate::kube::KIND_DEPLOYMENT, "web")
+            .unwrap()
+            .spec
+            .opt_int("replicas")
+            .unwrap_or(0) as u32
+    }
+
+    #[test]
+    fn hpa_view_roundtrip_and_defaults() {
+        let o = HpaView::build("h", "web", 2, 8, 60, Duration::from_secs(12));
+        assert_eq!(o.api_version, AUTOSCALING_API_VERSION);
+        let v = HpaView::from_object(&o).unwrap();
+        assert_eq!(v.target, "web");
+        assert_eq!((v.min_replicas, v.max_replicas), (2, 8));
+        assert_eq!(v.target_utilization_pct, 60);
+        assert_eq!(v.scale_up_window, Duration::ZERO);
+        assert_eq!(v.scale_down_window, Duration::from_secs(12));
+        // Bare spec gets the documented defaults.
+        let mut bare = KubeObject::new(
+            KIND_HPA,
+            "b",
+            Value::map().with("scaleTargetRef", Value::map().with("name", "web")),
+        );
+        bare.api_version = AUTOSCALING_API_VERSION.into();
+        let v = HpaView::from_object(&bare).unwrap();
+        assert_eq!((v.min_replicas, v.max_replicas), (1, 10));
+        assert_eq!(v.target_utilization_pct, 80);
+        assert_eq!(v.scale_down_window, Duration::from_secs(30));
+    }
+
+    #[test]
+    fn scales_up_on_high_utilization() {
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 1000); // 100% of request vs target 50% -> double
+        api.create(HpaView::build("h", "web", 1, 8, 50, Duration::ZERO)).unwrap();
+        let ctl = hpa_ctl();
+        assert!(matches!(ctl.reconcile(&api, "h").unwrap(), Reconcile::RequeueAfter(_)));
+        assert_eq!(replicas(&api), 4);
+        let h = HpaView::from_object(&api.get(KIND_HPA, "h").unwrap()).unwrap();
+        assert_eq!(h.current_utilization_pct, Some(100));
+        assert_eq!(h.desired_replicas, Some(4));
+    }
+
+    #[test]
+    fn respects_max_clamp_and_tolerance() {
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 1000);
+        api.create(HpaView::build("h", "web", 1, 3, 50, Duration::ZERO)).unwrap();
+        let ctl = hpa_ctl();
+        ctl.reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 3, "clamped at maxReplicas");
+
+        // Within the ±10% band nothing moves: 105% of a 100% target.
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 1050);
+        api.create(HpaView::build("h", "web", 1, 8, 100, Duration::ZERO)).unwrap();
+        hpa_ctl().reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 2, "tolerance band holds");
+    }
+
+    /// Re-point every pod's live usage annotation and republish metrics.
+    fn set_pod_load(api: &ApiServer, load_milli: u64) {
+        for pod in api.list(KIND_POD, &[]) {
+            api.update_status(KIND_POD, &pod.meta.name, |o| {
+                o.meta.annotations.retain(|(k, _)| k != CPU_USAGE_ANNOTATION);
+                o.meta
+                    .annotations
+                    .push((CPU_USAGE_ANNOTATION.to_string(), load_milli.to_string()));
+            })
+            .unwrap();
+        }
+        publish_node_sample(
+            api,
+            "w1",
+            Resources::cores(64, 256 << 30),
+            &api.list(KIND_POD, &[]),
+            &Metrics::new(),
+        );
+    }
+
+    #[test]
+    fn scale_down_damped_by_window() {
+        // On-target load records a "stay at 4" recommendation; when the
+        // load then collapses, the 300s down-window still holds it.
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 4, 500); // 50% of request = exactly the 50% target
+        api.create(HpaView::build("h", "web", 1, 8, 50, Duration::from_secs(300))).unwrap();
+        let ctl = hpa_ctl();
+        ctl.reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 4);
+        set_pod_load(&api, 100); // 10% -> wants 1
+        ctl.reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 4, "down-window holds the floor high");
+
+        // With a zero window the same signal collapses immediately.
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 4, 500);
+        api.create(HpaView::build("h", "web", 1, 8, 50, Duration::ZERO)).unwrap();
+        let ctl = hpa_ctl();
+        ctl.reconcile(&api, "h").unwrap();
+        set_pod_load(&api, 100);
+        // A zero window only considers recommendations from this very
+        // instant; step past the first one's timestamp.
+        std::thread::sleep(Duration::from_millis(3));
+        ctl.reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 1);
+    }
+
+    /// Regression: a capacity-starved deployment (hot Running pods,
+    /// the rest Pending with no samples) must not measure only its hot
+    /// pods and ratchet to maxReplicas — metric-less pods count as idle
+    /// on the way up.
+    #[test]
+    fn metricless_pending_pods_damp_scale_up() {
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 1000); // two Running pods at 100% of request
+        // Surge to 4: the two new replicas stay Pending and sample-less.
+        api.update_status(crate::kube::KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 4u64);
+        })
+        .unwrap();
+        DeploymentController.reconcile(&api, "web").unwrap();
+        api.create(HpaView::build("h", "web", 1, 16, 50, Duration::ZERO)).unwrap();
+        hpa_ctl().reconcile(&api, "h").unwrap();
+        assert_eq!(
+            replicas(&api),
+            4,
+            "2 hot + 2 idle-assumed pods average exactly onto the target"
+        );
+    }
+
+    #[test]
+    fn min_clamp_and_no_metrics_noop() {
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 3, 0); // zero usage -> wants 0, min 2 clamps
+        api.create(HpaView::build("h", "web", 2, 8, 50, Duration::ZERO)).unwrap();
+        hpa_ctl().reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 2);
+
+        // No metrics at all: a fresh deployment must not be touched.
+        let api = ApiServer::new(Metrics::new());
+        api.create(DeploymentController::build(
+            "web",
+            3,
+            "svc.sif",
+            Resources::new(1000, 64 << 20, 0),
+        ))
+        .unwrap();
+        api.create(HpaView::build("h", "web", 1, 8, 50, Duration::ZERO)).unwrap();
+        assert!(matches!(
+            hpa_ctl().reconcile(&api, "h").unwrap(),
+            Reconcile::RequeueAfter(_)
+        ));
+        assert_eq!(replicas(&api), 3, "cold pipeline: hands off");
+    }
+
+    #[test]
+    fn deleted_hpa_reconciles_ok_and_drops_history() {
+        let ctl = hpa_ctl();
+        let api = ApiServer::new(Metrics::new());
+        assert_eq!(ctl.reconcile(&api, "ghost").unwrap(), Reconcile::Ok);
+    }
+}

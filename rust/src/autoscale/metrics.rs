@@ -1,0 +1,363 @@
+//! The metrics pipeline: a metrics-server analogue.
+//!
+//! Each kubelet samples per-pod usage while reconciling its node and
+//! publishes `PodMetrics` / `NodeMetrics` objects (group
+//! `metrics.k8s.io/v1beta1`) through the ordinary API — the same objects
+//! `kubectl top nodes|pods` renders and the HPA consumes. Samples also
+//! land in the shared [`crate::cluster::Metrics`] registry as gauges so
+//! `hpcorc metrics` shows live cluster usage without an API round-trip.
+//!
+//! # Usage model
+//!
+//! The container runtime is simulated, so "usage" is a synthetic but
+//! *controllable* signal, resolved per running pod in priority order:
+//!
+//! 1. the live-patchable `autoscale.hpcorc.io/cpu-milli` **annotation**
+//!    (how load generators and tests modulate load on running pods);
+//! 2. the `CPU_LOAD_MILLI` container **env var** (how a Deployment
+//!    template declares the steady-state load of new pods);
+//! 3. half the pod's CPU request (a half-busy service — stable under the
+//!    default 80% HPA target, so un-instrumented workloads never
+//!    self-oscillate).
+//!
+//! Pods that are not `Running` report nothing. Memory usage is the pod's
+//! request while running (fully resident). Writes are suppressed when the
+//! sampled values did not change, so a quiet cluster generates no watch
+//! traffic from its metrics pipeline.
+
+use crate::cluster::{Metrics, Resources};
+use crate::encoding::Value;
+use crate::kube::{ApiClient, KubeObject, ListOptions, PodPhase, PodView};
+use crate::util::Result;
+
+/// The apiVersion the metrics kinds are served under.
+pub const METRICS_API_VERSION: &str = "metrics.k8s.io/v1beta1";
+
+pub const KIND_NODEMETRICS: &str = "NodeMetrics";
+pub const KIND_PODMETRICS: &str = "PodMetrics";
+
+/// Live-patchable per-pod CPU usage override (millicores).
+pub const CPU_USAGE_ANNOTATION: &str = "autoscale.hpcorc.io/cpu-milli";
+/// Template-declared per-pod CPU usage (millicores), read from the
+/// container env.
+pub const CPU_LOAD_ENV: &str = "CPU_LOAD_MILLI";
+
+/// Synthetic CPU usage of one pod in millicores (see the module docs for
+/// the resolution order). Only meaningful for `Running` pods — callers
+/// skip the rest.
+pub fn pod_cpu_usage_milli(obj: &KubeObject, view: &PodView) -> u64 {
+    if let Some(v) = obj
+        .meta
+        .annotations
+        .iter()
+        .find(|(k, _)| k == CPU_USAGE_ANNOTATION)
+        .and_then(|(_, v)| v.parse::<u64>().ok())
+    {
+        return v;
+    }
+    if let Some(v) = view
+        .env
+        .iter()
+        .find(|(k, _)| k == CPU_LOAD_ENV)
+        .and_then(|(_, v)| v.parse::<u64>().ok())
+    {
+        return v;
+    }
+    view.requests.cpu_milli / 2
+}
+
+/// Typed view over a PodMetrics object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PodMetricsView {
+    pub name: String,
+    pub node_name: String,
+    pub cpu_milli: u64,
+    pub mem_bytes: u64,
+}
+
+impl PodMetricsView {
+    pub fn from_object(o: &KubeObject) -> Result<PodMetricsView> {
+        if o.kind != KIND_PODMETRICS {
+            return Err(crate::util::Error::parse(format!(
+                "expected PodMetrics, got {}",
+                o.kind
+            )));
+        }
+        Ok(PodMetricsView {
+            name: o.meta.name.clone(),
+            node_name: o.spec.opt_str("nodeName").unwrap_or("").to_string(),
+            cpu_milli: o.spec.path(&["usage", "cpu"]).and_then(Value::as_int).unwrap_or(0)
+                as u64,
+            mem_bytes: o.spec.path(&["usage", "memory"]).and_then(Value::as_int).unwrap_or(0)
+                as u64,
+        })
+    }
+}
+
+impl crate::kube::ResourceView for PodMetricsView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_PODMETRICS]
+    }
+    fn from_object(obj: &KubeObject) -> Result<PodMetricsView> {
+        PodMetricsView::from_object(obj)
+    }
+}
+
+/// Typed view over a NodeMetrics object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeMetricsView {
+    pub name: String,
+    pub usage_cpu_milli: u64,
+    pub usage_mem_bytes: u64,
+    pub capacity: Resources,
+}
+
+impl NodeMetricsView {
+    pub fn from_object(o: &KubeObject) -> Result<NodeMetricsView> {
+        if o.kind != KIND_NODEMETRICS {
+            return Err(crate::util::Error::parse(format!(
+                "expected NodeMetrics, got {}",
+                o.kind
+            )));
+        }
+        Ok(NodeMetricsView {
+            name: o.meta.name.clone(),
+            usage_cpu_milli: o.spec.path(&["usage", "cpu"]).and_then(Value::as_int).unwrap_or(0)
+                as u64,
+            usage_mem_bytes: o
+                .spec
+                .path(&["usage", "memory"])
+                .and_then(Value::as_int)
+                .unwrap_or(0) as u64,
+            capacity: Resources {
+                cpu_milli: o
+                    .spec
+                    .path(&["capacity", "cpu"])
+                    .and_then(Value::as_int)
+                    .unwrap_or(0) as u64,
+                mem_bytes: o
+                    .spec
+                    .path(&["capacity", "memory"])
+                    .and_then(Value::as_int)
+                    .unwrap_or(0) as u64,
+                gpus: 0,
+            },
+        })
+    }
+}
+
+impl crate::kube::ResourceView for NodeMetricsView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_NODEMETRICS]
+    }
+    fn from_object(obj: &KubeObject) -> Result<NodeMetricsView> {
+        NodeMetricsView::from_object(obj)
+    }
+}
+
+fn usage_value(cpu_milli: u64, mem_bytes: u64) -> Value {
+    Value::map().with("cpu", cpu_milli).with("memory", mem_bytes)
+}
+
+fn pod_metrics_object(pod: &str, node: &str, cpu_milli: u64, mem_bytes: u64) -> KubeObject {
+    let spec = Value::map()
+        .with("nodeName", node)
+        .with("usage", usage_value(cpu_milli, mem_bytes));
+    let mut o = KubeObject::new(KIND_PODMETRICS, pod, spec);
+    o.api_version = METRICS_API_VERSION.into();
+    // Owned by the pod it samples: cascade delete collects the sample
+    // when the pod goes away (the reap below covers rebinds).
+    o.meta.owner = Some((crate::kube::KIND_POD.to_string(), pod.to_string()));
+    o
+}
+
+fn node_metrics_object(
+    node: &str,
+    cpu_milli: u64,
+    mem_bytes: u64,
+    capacity: Resources,
+) -> KubeObject {
+    let spec = Value::map().with("usage", usage_value(cpu_milli, mem_bytes)).with(
+        "capacity",
+        Value::map()
+            .with("cpu", capacity.cpu_milli)
+            .with("memory", capacity.mem_bytes),
+    );
+    let mut o = KubeObject::new(KIND_NODEMETRICS, node, spec);
+    o.api_version = METRICS_API_VERSION.into();
+    // Owned by the Node object: when the cluster autoscaler drains a
+    // pool node and deletes it, the cascade removes the sample too —
+    // `kubectl top nodes` never shows ghosts of deprovisioned nodes.
+    o.meta.owner = Some((crate::kube::KIND_NODE.to_string(), node.to_string()));
+    o
+}
+
+/// Apply an object only when the stored copy's spec differs — metrics are
+/// republished every kubelet sync, and an unchanged cluster must not
+/// generate a write (and watch-event) storm.
+fn apply_on_change(api: &dyn ApiClient, obj: KubeObject) {
+    match api.get(&obj.kind, &obj.meta.name) {
+        Ok(existing) if existing.spec == obj.spec => {}
+        _ => {
+            let _ = api.apply(obj);
+        }
+    }
+}
+
+/// One kubelet's sampling pass: compute per-pod usage for `pods` (the
+/// pods bound to `node`), publish `PodMetrics` for the running ones plus
+/// this node's `NodeMetrics` aggregate, delete `PodMetrics` of pods that
+/// stopped running here, and mirror the aggregate into `metrics` gauges.
+///
+/// Called from [`crate::kube::Kubelet::sync_once`]; also callable
+/// directly for deterministic stepping in tests.
+pub fn publish_node_sample(
+    api: &dyn ApiClient,
+    node: &str,
+    capacity: Resources,
+    pods: &[KubeObject],
+    metrics: &Metrics,
+) {
+    let mut node_cpu = 0u64;
+    let mut node_mem = 0u64;
+    let mut running: Vec<(String, u64, u64)> = Vec::new();
+    for obj in pods {
+        let Ok(view) = PodView::from_object(obj) else { continue };
+        if view.phase != PodPhase::Running {
+            continue;
+        }
+        let cpu = pod_cpu_usage_milli(obj, &view);
+        let mem = view.requests.mem_bytes;
+        node_cpu += cpu;
+        node_mem += mem;
+        running.push((view.name, cpu, mem));
+    }
+    // Reap metrics of pods that no longer run here (completed, deleted,
+    // evicted, or rebound) so `kubectl top pods` never shows ghosts.
+    if let Ok(stale) = api.list(
+        KIND_PODMETRICS,
+        &ListOptions::all().with_field("spec.nodeName", node),
+    ) {
+        for m in stale.items {
+            if !running.iter().any(|(name, _, _)| name == &m.meta.name) {
+                let _ = api.delete(KIND_PODMETRICS, &m.meta.name);
+            }
+        }
+    }
+    for (name, cpu, mem) in &running {
+        apply_on_change(api, pod_metrics_object(name, node, *cpu, *mem));
+    }
+    apply_on_change(api, node_metrics_object(node, node_cpu, node_mem, capacity));
+    metrics.set_gauge(&format!("autoscale.node.{node}.cpu_milli"), node_cpu as i64);
+    metrics.set_gauge(&format!("autoscale.node.{node}.pods"), running.len() as i64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::{ApiServer, KIND_POD};
+
+    fn running_pod(api: &ApiServer, name: &str, cpu_req: u64, env: &[(String, String)]) {
+        let mut pod = PodView::build(name, "img.sif", Resources::new(cpu_req, 1 << 20, 0), env);
+        pod.spec.insert("nodeName", "w1");
+        api.create(pod).unwrap();
+        api.update_status(KIND_POD, name, |o| {
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn usage_resolution_order() {
+        let mut pod = PodView::build(
+            "p",
+            "img.sif",
+            Resources::new(1000, 1 << 20, 0),
+            &[(CPU_LOAD_ENV.to_string(), "700".to_string())],
+        );
+        let view = PodView::from_object(&pod).unwrap();
+        assert_eq!(pod_cpu_usage_milli(&pod, &view), 700, "env beats default");
+        pod.meta.annotations.push((CPU_USAGE_ANNOTATION.to_string(), "250".to_string()));
+        assert_eq!(pod_cpu_usage_milli(&pod, &view), 250, "annotation beats env");
+        let plain = PodView::build("q", "img.sif", Resources::new(1000, 1 << 20, 0), &[]);
+        let view = PodView::from_object(&plain).unwrap();
+        assert_eq!(pod_cpu_usage_milli(&plain, &view), 500, "default: half the request");
+    }
+
+    #[test]
+    fn publish_writes_pod_and_node_metrics() {
+        let api = ApiServer::new(Metrics::new());
+        let m = Metrics::new();
+        running_pod(&api, "a", 1000, &[(CPU_LOAD_ENV.to_string(), "900".to_string())]);
+        running_pod(&api, "b", 1000, &[]);
+        let pods = api.list(KIND_POD, &[]);
+        let cap = Resources::cores(8, 32 << 30);
+        publish_node_sample(&api, "w1", cap, &pods, &m);
+
+        let pm = PodMetricsView::from_object(&api.get(KIND_PODMETRICS, "a").unwrap()).unwrap();
+        assert_eq!(pm.cpu_milli, 900);
+        assert_eq!(pm.node_name, "w1");
+        let nm =
+            NodeMetricsView::from_object(&api.get(KIND_NODEMETRICS, "w1").unwrap()).unwrap();
+        assert_eq!(nm.usage_cpu_milli, 900 + 500);
+        assert_eq!(nm.capacity.cpu_milli, 8000);
+        assert_eq!(m.gauge("autoscale.node.w1.pods").load(std::sync::atomic::Ordering::Relaxed), 2);
+
+        // Unchanged resample writes nothing.
+        let v = api.current_version();
+        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        assert_eq!(api.current_version(), v, "steady state is write-free");
+    }
+
+    /// Regression: without owner references, a drained pool node's
+    /// NodeMetrics (and a deleted pod's PodMetrics) lived forever as
+    /// `kubectl top` ghosts.
+    #[test]
+    fn metrics_objects_cascade_with_their_owners() {
+        let api = ApiServer::new(Metrics::new());
+        let m = Metrics::new();
+        let cap = Resources::cores(8, 32 << 30);
+        api.create(crate::kube::NodeView::build("w1", cap, &[])).unwrap();
+        running_pod(&api, "a", 1000, &[]);
+        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        assert!(api.get(KIND_PODMETRICS, "a").is_ok());
+        assert!(api.get(KIND_NODEMETRICS, "w1").is_ok());
+        api.delete(KIND_POD, "a").unwrap();
+        assert!(api.get(KIND_PODMETRICS, "a").is_err(), "pod cascade removes its sample");
+        api.delete(crate::kube::KIND_NODE, "w1").unwrap();
+        assert!(
+            api.get(KIND_NODEMETRICS, "w1").is_err(),
+            "node cascade removes its sample"
+        );
+    }
+
+    #[test]
+    fn stale_pod_metrics_reaped_and_usage_repatchable() {
+        let api = ApiServer::new(Metrics::new());
+        let m = Metrics::new();
+        running_pod(&api, "a", 1000, &[]);
+        let cap = Resources::cores(8, 32 << 30);
+        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        assert!(api.get(KIND_PODMETRICS, "a").is_ok());
+
+        // Live annotation patch shifts the next sample.
+        api.update_status(KIND_POD, "a", |o| {
+            o.meta.annotations.push((CPU_USAGE_ANNOTATION.to_string(), "123".to_string()));
+        })
+        .unwrap();
+        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        let pm = PodMetricsView::from_object(&api.get(KIND_PODMETRICS, "a").unwrap()).unwrap();
+        assert_eq!(pm.cpu_milli, 123);
+
+        // Completion reaps the PodMetrics and zeroes the node aggregate.
+        api.update_status(KIND_POD, "a", |o| {
+            o.status.insert("phase", "Succeeded");
+        })
+        .unwrap();
+        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        assert!(api.get(KIND_PODMETRICS, "a").is_err(), "ghost metrics reaped");
+        let nm =
+            NodeMetricsView::from_object(&api.get(KIND_NODEMETRICS, "w1").unwrap()).unwrap();
+        assert_eq!(nm.usage_cpu_milli, 0);
+    }
+}

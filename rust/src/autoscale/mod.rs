@@ -1,0 +1,80 @@
+//! Elastic autoscaling: metrics pipeline → HPA → cluster autoscaler, with
+//! burst-to-WLM overflow.
+//!
+//! The paper's Torque-Operator bridges a *fixed* split between the
+//! Kubernetes partition and the WLM partition. This layer makes the split
+//! elastic — the direction of High-Performance Kubernetes (Chazapis et
+//! al., arXiv:2409.16919), which runs cloud-native workloads on HPC
+//! through virtual-kubelet nodes, and of the Flux Operator's elastically
+//! resizable ensembles (Sochat et al., arXiv:2309.17420). Three loops,
+//! each a plain controller over the PR 1 `ApiClient` surface:
+//!
+//! # 1. Metrics pipeline ([`metrics`])
+//!
+//! Kubelets sample per-pod usage while syncing their node (the
+//! metrics-server analogue) and publish `PodMetrics`/`NodeMetrics`
+//! objects under `metrics.k8s.io/v1beta1` — the objects `kubectl top
+//! nodes|pods` renders. Usage is synthetic but controllable: the
+//! live-patchable `autoscale.hpcorc.io/cpu-milli` annotation, then the
+//! `CPU_LOAD_MILLI` template env var, then half the pod's request.
+//! Samples also land as gauges in the shared [`crate::cluster::Metrics`]
+//! registry. Writes are suppressed when nothing changed.
+//!
+//! # 2. HorizontalPodAutoscaler ([`hpa`])
+//!
+//! An `autoscaling/v2`-style HPA kind (registered in
+//! [`crate::kube::default_scheme`], alias `hpa`) reconciled on the
+//! [`crate::kube::Controller`] runtime: classic
+//! `desired = ceil(current × utilization / target)` with a ±10%
+//! tolerance band, min/max replica clamps, and scale-up/scale-down
+//! stabilization windows (damped in the direction of change), driving
+//! `Deployment.spec.replicas`.
+//!
+//! # 3. ClusterAutoscaler ([`cluster_autoscaler`])
+//!
+//! Watches unschedulable pods (Pending, unbound, no `schedulingGates` —
+//! kueue-suspended workloads are *not* capacity pressure). First grows
+//! the real node pool through a [`NodeProvisioner`] (the testbed
+//! registers live simulated kubelets), up to `max_nodes`. When the
+//! Kubernetes partition is at its cap, pods that opted in with the
+//! [`BURST_LABEL`] label are flipped onto the tainted virtual WLM node:
+//! the pod binds to the virtual node, a `TorqueJob`/`SlurmJob` wrapping
+//! its container is created (owned by the pod), and the operator ships
+//! it to Torque/Slurm over red-box; the autoscaler mirrors the WLM
+//! phases back onto the pod — the virtual-kubelet duty for that node.
+//! When load drops it drains: cordon (`spec.unschedulable`), delete
+//! movable (Deployment-owned, non-kueue) pods so their controller
+//! recreates them elsewhere, and deprovision empty nodes — never below
+//! `min_nodes` and **never a node hosting a gang-admitted kueue
+//! workload**: evicting one member would break the queue layer's
+//! all-or-nothing guarantee, so those nodes are not drain candidates and
+//! their quota charges stay untouched until the gang itself finishes.
+//!
+//! # Kueue interaction
+//!
+//! The scheduler now gates on generic pod `schedulingGates`; kueue sets
+//! its `kueue.x-k8s.io/admission` gate on suspended workloads and clears
+//! it at admission (PR 3 inverted that dependency), which is what lets
+//! this layer distinguish "waiting for quota" (gated — ignore) from
+//! "waiting for capacity" (unschedulable — provision or burst).
+//! Provisioning changes physical capacity only; kueue's logical quota
+//! ledger is deliberately untouched.
+//!
+//! The simulator mirrors the elastic loop with
+//! [`crate::sim::ElasticParams`] (provision delay + idle window over a
+//! min/max node range), and `trace gen --kind diurnal` provides the load
+//! shape that makes static-vs-elastic comparisons meaningful.
+
+pub mod cluster_autoscaler;
+pub mod hpa;
+pub mod metrics;
+
+pub use cluster_autoscaler::{
+    CaConfig, CaReport, ClusterAutoscaler, NodeProvisioner, BURST_LABEL, POOL_LABEL,
+};
+pub use hpa::{HpaController, HpaView, AUTOSCALING_API_VERSION, KIND_HPA};
+pub use metrics::{
+    pod_cpu_usage_milli, publish_node_sample, NodeMetricsView, PodMetricsView,
+    CPU_LOAD_ENV, CPU_USAGE_ANNOTATION, KIND_NODEMETRICS, KIND_PODMETRICS,
+    METRICS_API_VERSION,
+};

@@ -48,6 +48,22 @@ impl Stats {
             0.0
         }
     }
+
+    /// Machine-readable JSON line for the perf trajectory (CI logs grep
+    /// these out; keys are stable).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"bench\":\"{}\",\"iters\":{},\"mean_ns\":{:.0},\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{},\"min_ns\":{},\"max_ns\":{}}}",
+            self.name.replace('"', "'"),
+            self.iters,
+            self.mean_ns,
+            self.p50_ns,
+            self.p95_ns,
+            self.p99_ns,
+            self.min_ns,
+            self.max_ns
+        )
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {

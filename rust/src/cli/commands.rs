@@ -23,14 +23,18 @@ USAGE: hpcorc <command> [args]
 Testbed:
   up        [--nodes N] [--cores C] [--workers W] [--slurm] [--artifacts DIR]
             [--time-scale S] [--socket PATH] [--run-for SECS]
-            boot the hybrid testbed (Fig. 1) and serve until stopped
+            [--autoscale-max N [--autoscale-min N] [--autoscale-cores C]]
+            boot the hybrid testbed (Fig. 1) and serve until stopped;
+            --autoscale-max enables the elastic layer (metrics pipeline +
+            HPA + cluster autoscaler with burst-to-WLM)
   demo      run the paper's Fig. 3-5 test case end to end and print it
 
 Kubernetes surface (against a running testbed; KIND accepts kubectl-style
 aliases — pods/po, nodes/no, deploy, torquejobs/tj, slurmjobs/sj,
-clusterqueues/cq, localqueues/lq):
+clusterqueues/cq, localqueues/lq, hpa, nodemetrics, podmetrics):
   kubectl apply -f FILE --socket PATH
   kubectl get KIND [NAME] [--socket PATH] [-o yaml|json] [-l k=v,...]
+  kubectl top nodes|pods --socket PATH
   kubectl delete KIND NAME --socket PATH
   kubectl logs POD --socket PATH
 
@@ -40,16 +44,21 @@ Torque surface (against a running testbed):
   qdel JOBID --socket PATH       cancel
 
 Workload tooling:
-  trace gen --kind poisson|bursty|cybele|showcase|tenants [--jobs N]
-            [--seed S] [--tenants N] [--capacity CORES] [--load L]
-            [--mean-runtime SECS] [--out FILE]
+  trace gen --kind poisson|bursty|cybele|showcase|tenants|diurnal
+            [--jobs N] [--seed S] [--tenants N] [--capacity CORES]
+            [--load L] [--mean-runtime SECS] [--period SECS] [--out FILE]
   sim --trace FILE|--kind K --policy fifo|easy|kube [--nodes N] [--cores C]
             [--quota-nodes Q [--cohort]]
+            [--elastic-max M [--elastic-min N] [--provision-delay S]
+             [--idle-window S]]
             run the discrete-event simulator, print the report row.
             --quota-nodes meters each tenant queue found in the trace
             through a Q-node ClusterQueue (kueue admission in front of the
             policy); --cohort pools the quotas so idle capacity is
-            borrowable — compare the admitted row against the raw one
+            borrowable — compare the admitted row against the raw one.
+            --elastic-max runs an elastic cluster (min..max nodes, grown
+            after --provision-delay, shrunk past --idle-window) — compare
+            a static partition against an elastic one on a diurnal trace
   sing list                      list built-in container images
   version [--components]         versions (Table I inventory)
 ";
@@ -76,6 +85,16 @@ fn testbed_config(args: &Args) -> Result<TestbedConfig> {
     }
     if let Some(sock) = args.flag("socket") {
         cfg.socket = Some(sock.into());
+    }
+    let autoscale_max: usize = args.num("autoscale-max", 0)?;
+    if autoscale_max > 0 {
+        let cores: u32 = args.num("autoscale-cores", cfg.kube_cores)?;
+        cfg.autoscale = Some(crate::autoscale::CaConfig {
+            max_nodes: autoscale_max,
+            min_nodes: args.num("autoscale-min", 0)?,
+            node_capacity: crate::cluster::Resources::cores(cores, 64 << 30),
+            ..crate::autoscale::CaConfig::default()
+        });
     }
     Ok(cfg)
 }
@@ -210,7 +229,68 @@ pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
             }
             Ok(())
         }
+        "top" => {
+            let what = args.req_positional(2, "nodes|pods")?.to_string();
+            let api = remote(args)?;
+            cmd_kubectl_top(&api, &what)
+        }
         other => Err(Error::config(format!("unknown kubectl subcommand `{other}`"))),
+    }
+}
+
+/// `kubectl top nodes|pods`: render the metrics pipeline's
+/// NodeMetrics/PodMetrics objects (autoscale layer).
+fn cmd_kubectl_top(api: &dyn ApiClient, what: &str) -> Result<()> {
+    use crate::autoscale::{NodeMetricsView, PodMetricsView, KIND_NODEMETRICS, KIND_PODMETRICS};
+    match what {
+        "nodes" | "node" | "no" => {
+            println!(
+                "{:<20} {:>10} {:>6} {:>12} {:>8}",
+                "NAME", "CPU(m)", "CPU%", "MEMORY", "MEM%"
+            );
+            let mut items: Vec<NodeMetricsView> = api
+                .list(KIND_NODEMETRICS, &ListOptions::all())?
+                .items
+                .iter()
+                .filter_map(|o| NodeMetricsView::from_object(o).ok())
+                .collect();
+            items.sort_by(|a, b| a.name.cmp(&b.name));
+            for m in items {
+                let pct = |used: u64, cap: u64| {
+                    if cap > 0 { format!("{}%", used * 100 / cap) } else { "-".into() }
+                };
+                println!(
+                    "{:<20} {:>10} {:>6} {:>12} {:>8}",
+                    m.name,
+                    m.usage_cpu_milli,
+                    pct(m.usage_cpu_milli, m.capacity.cpu_milli),
+                    crate::util::fmt_mem(m.usage_mem_bytes),
+                    pct(m.usage_mem_bytes, m.capacity.mem_bytes),
+                );
+            }
+            Ok(())
+        }
+        "pods" | "pod" | "po" => {
+            println!("{:<24} {:<16} {:>10} {:>12}", "NAME", "NODE", "CPU(m)", "MEMORY");
+            let mut items: Vec<PodMetricsView> = api
+                .list(KIND_PODMETRICS, &ListOptions::all())?
+                .items
+                .iter()
+                .filter_map(|o| PodMetricsView::from_object(o).ok())
+                .collect();
+            items.sort_by(|a, b| a.name.cmp(&b.name));
+            for m in items {
+                println!(
+                    "{:<24} {:<16} {:>10} {:>12}",
+                    m.name,
+                    m.node_name,
+                    m.cpu_milli,
+                    crate::util::fmt_mem(m.mem_bytes),
+                );
+            }
+            Ok(())
+        }
+        other => Err(Error::config(format!("kubectl top: unknown resource `{other}`"))),
     }
 }
 
@@ -361,6 +441,13 @@ pub fn cmd_trace(args: &mut Args) -> Result<()> {
                 args.num("mean-runtime", 120.0)?,
             )
         }
+        "diurnal" => g.diurnal(
+            jobs,
+            args.num("capacity", 64)?,
+            args.num("load", 0.8)?,
+            args.num("period", 3600.0)?,
+            args.num("mean-runtime", 60.0)?,
+        ),
         other => return Err(Error::config(format!("unknown trace kind `{other}`"))),
     };
     let text = trace.to_json();
@@ -382,9 +469,16 @@ pub fn cmd_sim(args: &mut Args) -> Result<()> {
             g.poisson_batch(args.num("jobs", 500)?, 128, args.num("load", 0.7)?, 120.0)
         }
     };
+    let elastic_max: usize = args.num("elastic-max", 0)?;
     let params = SimParams {
         nodes: args.num("nodes", 16)?,
         cores_per_node: args.num("cores", 8)?,
+        elastic: (elastic_max > 0).then_some(crate::sim::ElasticParams {
+            min_nodes: args.num("elastic-min", 1)?,
+            max_nodes: elastic_max,
+            provision_delay_s: args.num("provision-delay", 30.0)?,
+            scale_down_idle_s: args.num("idle-window", 300.0)?,
+        }),
         ..SimParams::default()
     };
     let mut policy = policy_by_name(&args.flag_or("policy", "easy"))?;

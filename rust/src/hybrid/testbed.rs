@@ -1,5 +1,6 @@
 //! Testbed assembly and lifecycle.
 
+use crate::autoscale::{CaConfig, ClusterAutoscaler, HpaController, NodeProvisioner};
 use crate::cluster::{Metrics, NodeRole, NodeSpec, Resources, SharedFs};
 use crate::kube::{
     ApiClient, ApiServer, ControllerRunner, DeploymentController, KubeObject, KubeScheduler,
@@ -43,6 +44,12 @@ pub struct TestbedConfig {
     pub operator_deployment: bool,
     /// Unix socket path for red-box (default: per-pid temp path).
     pub socket: Option<PathBuf>,
+    /// Elastic autoscaling (PR 3): when set, kubelets already feed the
+    /// metrics pipeline, and the testbed additionally runs the HPA
+    /// controller plus a cluster autoscaler managing a pool of live
+    /// simulated kubelets (provisioned/drained on demand, bursting
+    /// labelled overflow onto the WLM partition).
+    pub autoscale: Option<CaConfig>,
 }
 
 impl Default for TestbedConfig {
@@ -58,7 +65,68 @@ impl Default for TestbedConfig {
             artifacts_dir: None,
             operator_deployment: false,
             socket: None,
+            autoscale: None,
         }
+    }
+}
+
+/// [`NodeProvisioner`] that registers a live simulated kubelet per pool
+/// node — scale-up gives the scheduler a real node with a real container
+/// runtime behind it, and drain tears the kubelet daemon down again.
+pub struct KubeletProvisioner {
+    client: Arc<dyn ApiClient>,
+    runtime: crate::singularity::Runtime,
+    fs: SharedFs,
+    node_capacity: Resources,
+    time_scale: f64,
+    metrics: Metrics,
+    /// Testbed-wide shutdown; every provisioned kubelet also stops here.
+    shutdown: Shutdown,
+    node_shutdowns: Arc<std::sync::Mutex<std::collections::HashMap<String, Shutdown>>>,
+    /// Lazily starts the single chain thread that fans the testbed
+    /// shutdown out to every live per-node shutdown — one thread total,
+    /// not one per provision (elastic churn would leak them otherwise).
+    chain_started: std::sync::Once,
+}
+
+impl NodeProvisioner for KubeletProvisioner {
+    fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()> {
+        let cri = SingularityCri::new(self.runtime.clone());
+        let kubelet = Kubelet::register(
+            self.client.clone(),
+            name,
+            self.node_capacity,
+            labels,
+            cri,
+            self.fs.clone(),
+            self.time_scale,
+            self.metrics.clone(),
+        )?;
+        // Per-node shutdown: drain stops just this kubelet; the chain
+        // thread below takes all of them down with the testbed. (The
+        // cluster autoscaler's ticker itself stops on the testbed
+        // shutdown, so no provisions race in after the fan-out.)
+        let sd = Shutdown::new();
+        self.node_shutdowns.lock().unwrap().insert(name.to_string(), sd.clone());
+        self.chain_started.call_once(|| {
+            let global = self.shutdown.clone();
+            let nodes = self.node_shutdowns.clone();
+            crate::rt::spawn_named("ka-shutdown-chain", move || {
+                global.wait();
+                for sd in nodes.lock().unwrap().values() {
+                    sd.trigger();
+                }
+            });
+        });
+        kubelet.start(Duration::from_millis(1), sd);
+        Ok(())
+    }
+
+    fn deprovision(&self, name: &str) -> Result<()> {
+        if let Some(sd) = self.node_shutdowns.lock().unwrap().remove(name) {
+            sd.trigger();
+        }
+        Ok(())
     }
 }
 
@@ -279,6 +347,33 @@ impl Testbed {
             ))?;
         }
 
+        // ---- elastic autoscaling (PR 3) -------------------------------
+        // Kubelets feed the metrics pipeline unconditionally; the HPA
+        // controller and cluster autoscaler only run when asked for.
+        if let Some(ca_cfg) = config.autoscale.clone() {
+            Arc::new(ControllerRunner::new(
+                client.clone(),
+                Arc::new(HpaController::new(Duration::from_millis(1), metrics.clone())),
+                metrics.clone(),
+            ))
+            .start(shutdown.clone());
+            let provisioner: Arc<dyn NodeProvisioner> = Arc::new(KubeletProvisioner {
+                client: client.clone(),
+                runtime: runtime.clone(),
+                fs: fs.clone(),
+                node_capacity: ca_cfg.node_capacity,
+                time_scale: config.time_scale,
+                metrics: metrics.clone(),
+                shutdown: shutdown.clone(),
+                node_shutdowns: Arc::new(std::sync::Mutex::new(
+                    std::collections::HashMap::new(),
+                )),
+                chain_started: std::sync::Once::new(),
+            });
+            ClusterAutoscaler::new(client.clone(), provisioner, ca_cfg, metrics.clone())
+                .start(Duration::from_millis(2), shutdown.clone());
+        }
+
         Ok(Testbed {
             api,
             pbs,
@@ -414,6 +509,77 @@ mod tests {
             assert!(Instant::now() < deadline, "operator deployment never ready");
             std::thread::sleep(Duration::from_millis(5));
         }
+        tb.stop();
+    }
+
+    /// Elastic layer smoke test through the real daemons: a loaded
+    /// Deployment scales past the static workers, the cluster autoscaler
+    /// provisions live pool kubelets, and the metrics pipeline serves
+    /// NodeMetrics for every node.
+    #[test]
+    fn elastic_testbed_scales_deployment_onto_provisioned_nodes() {
+        use crate::autoscale::{HpaView, KIND_NODEMETRICS, POOL_LABEL};
+        let mut cfg = TestbedConfig::default();
+        cfg.kube_workers = 1; // + login = 2 static workers x 2 cores
+        cfg.kube_cores = 2;
+        cfg.autoscale = Some(crate::autoscale::CaConfig {
+            node_capacity: Resources::cores(2, 64 << 30),
+            max_nodes: 2,
+            // No shrink during the smoke test.
+            scale_down_idle: Duration::from_secs(3600),
+            ..Default::default()
+        });
+        let tb = Testbed::start(cfg).unwrap();
+        // Long-running service payload (nominal 10 000s ≈ 10s real here).
+        tb.images.push(SifImage::new(
+            "svc-long.sif",
+            Payload::Sleep { millis: 10_000_000 },
+        ));
+        let mut deploy = DeploymentController::build(
+            "web",
+            1,
+            "svc-long.sif",
+            Resources::new(1000, 64 << 20, 0),
+        );
+        deploy.spec.get_mut("template").unwrap().insert(
+            "env",
+            crate::encoding::Value::map().with("CPU_LOAD_MILLI", "1000"),
+        );
+        tb.api.create(deploy).unwrap();
+        tb.api
+            .create(HpaView::build("h", "web", 1, 6, 50, Duration::ZERO))
+            .unwrap();
+        // 6 x 1000m > 4000m static capacity: the pool must grow and every
+        // replica must end up Running somewhere.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let pods = tb.api.list(
+                KIND_POD,
+                &[("deployment".to_string(), "web".to_string())],
+            );
+            let running = pods
+                .iter()
+                .filter(|p| p.status.opt_str("phase") == Some("Running"))
+                .count();
+            let pool = tb
+                .api
+                .list(crate::kube::KIND_NODE, &[])
+                .iter()
+                .filter(|n| n.meta.label(POOL_LABEL).is_some())
+                .count();
+            if running == 6 && pool >= 1 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "elastic testbed never converged: {running} running, {pool} pool nodes"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // The metrics pipeline published a NodeMetrics object for at
+        // least one loaded node.
+        let metrics_objs = tb.api.list(KIND_NODEMETRICS, &[]);
+        assert!(!metrics_objs.is_empty(), "kubelets publish NodeMetrics");
         tb.stop();
     }
 

@@ -188,6 +188,11 @@ pub struct PodView {
     pub node_name: Option<String>,
     pub node_selector: Vec<(String, String)>,
     pub tolerations: Vec<String>,
+    /// `spec.schedulingGates` names: a pod with any gate present is held
+    /// by the scheduler until every gate is removed (k8s scheduling
+    /// gates). Admission layers (kueue) set/clear their own gate instead
+    /// of the scheduler knowing about them.
+    pub scheduling_gates: Vec<String>,
     pub phase: PodPhase,
     pub exit_code: Option<i32>,
 }
@@ -239,6 +244,7 @@ impl PodView {
                     s.iter().filter_map(|t| t.opt_str("key").map(String::from)).collect()
                 })
                 .unwrap_or_default(),
+            scheduling_gates: scheduling_gates(o),
             phase: PodPhase::parse(o.status.opt_str("phase").unwrap_or("Pending")),
             exit_code: o.status.opt_int("exitCode").map(|i| i as i32),
         })
@@ -280,6 +286,46 @@ impl ResourceView for PodView {
     }
 }
 
+// -------------------------------------------------------- scheduling gates
+
+/// The gate names in `spec.schedulingGates` (k8s `[{name: ...}]` shape).
+pub fn scheduling_gates(obj: &KubeObject) -> Vec<String> {
+    obj.spec
+        .get("schedulingGates")
+        .and_then(Value::as_seq)
+        .map(|s| s.iter().filter_map(|g| g.opt_str("name").map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+/// Add a named scheduling gate (idempotent). Gated pods are skipped by the
+/// scheduler until every gate is removed.
+pub fn add_scheduling_gate(obj: &mut KubeObject, name: &str) {
+    if scheduling_gates(obj).iter().any(|g| g == name) {
+        return;
+    }
+    if !matches!(obj.spec.get("schedulingGates"), Some(Value::Seq(_))) {
+        obj.spec.insert("schedulingGates", Value::Seq(Vec::new()));
+    }
+    if let Some(Value::Seq(gates)) = obj.spec.get_mut("schedulingGates") {
+        gates.push(Value::map().with("name", name));
+    }
+}
+
+/// Remove a named scheduling gate; drops the list entirely once empty so
+/// ungated pods encode exactly as before gates existed.
+pub fn remove_scheduling_gate(obj: &mut KubeObject, name: &str) {
+    let remaining: Vec<String> =
+        scheduling_gates(obj).into_iter().filter(|g| g != name).collect();
+    if remaining.is_empty() {
+        obj.spec.remove("schedulingGates");
+    } else {
+        obj.spec.insert(
+            "schedulingGates",
+            Value::Seq(remaining.into_iter().map(|g| Value::map().with("name", g)).collect()),
+        );
+    }
+}
+
 // ------------------------------------------------------------------ Nodes
 
 /// Typed view over a Node object.
@@ -291,6 +337,10 @@ pub struct NodeView {
     /// Taint keys with NoSchedule effect (virtual nodes carry
     /// `virtual-kubelet`).
     pub taints: Vec<String>,
+    /// Cordoned (`spec.unschedulable`, `kubectl cordon`): the scheduler
+    /// places nothing new here — how the cluster autoscaler drains a node
+    /// before deprovisioning it.
+    pub unschedulable: bool,
     pub ready: bool,
     /// Reported runtime, e.g. `singularity-cri`.
     pub runtime: String,
@@ -326,6 +376,7 @@ impl NodeView {
                     s.iter().filter_map(|t| t.opt_str("key").map(String::from)).collect()
                 })
                 .unwrap_or_default(),
+            unschedulable: o.spec.get("unschedulable").and_then(Value::as_bool).unwrap_or(false),
             ready: o.status.opt_str("phase").unwrap_or("Ready") == "Ready",
             runtime: o.status.opt_str("runtime").unwrap_or("").to_string(),
         })
@@ -510,6 +561,35 @@ mod tests {
         assert_eq!(v.results_from.as_deref(), Some("$HOME/low.out"));
         assert_eq!(v.mount_path.as_deref(), Some("$HOME/"));
         assert_eq!(v.status, "");
+    }
+
+    #[test]
+    fn scheduling_gate_roundtrip() {
+        let mut pod = PodView::build("p", "img.sif", Resources::ZERO, &[]);
+        assert!(scheduling_gates(&pod).is_empty());
+        add_scheduling_gate(&mut pod, "kueue.x-k8s.io/admission");
+        add_scheduling_gate(&mut pod, "kueue.x-k8s.io/admission"); // idempotent
+        add_scheduling_gate(&mut pod, "other");
+        assert_eq!(
+            PodView::from_object(&pod).unwrap().scheduling_gates,
+            vec!["kueue.x-k8s.io/admission", "other"]
+        );
+        // Gates survive the JSON roundtrip (they live in spec).
+        let back = KubeObject::from_json(&pod.to_json()).unwrap();
+        assert_eq!(scheduling_gates(&back).len(), 2);
+        remove_scheduling_gate(&mut pod, "other");
+        assert_eq!(scheduling_gates(&pod), vec!["kueue.x-k8s.io/admission"]);
+        remove_scheduling_gate(&mut pod, "kueue.x-k8s.io/admission");
+        assert!(scheduling_gates(&pod).is_empty());
+        assert!(pod.spec.get("schedulingGates").is_none(), "empty list dropped");
+    }
+
+    #[test]
+    fn node_cordon_flag() {
+        let mut node = NodeView::build("n", Resources::cores(8, 32 << 30), &[]);
+        assert!(!NodeView::from_object(&node).unwrap().unschedulable);
+        node.spec.insert("unschedulable", true);
+        assert!(NodeView::from_object(&node).unwrap().unschedulable);
     }
 
     #[test]

@@ -180,6 +180,93 @@ mod tests {
         assert_eq!(api.list(KIND_POD, &[]).len(), 1);
     }
 
+    /// HPA edge (PR 3): minReplicas can legally be 0 — every pod goes,
+    /// and scaling back up from zero works.
+    #[test]
+    fn scale_to_zero_and_back() {
+        let (api, ctrl) = setup();
+        api.create(DeploymentController::build("web", 3, "svc.sif", Resources::ZERO))
+            .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), 3);
+        api.update_status(KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 0u64);
+        })
+        .unwrap();
+        let r = ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), 0, "scaled to zero");
+        assert_eq!(r, Reconcile::Ok, "0 of 0 ready is converged, not a requeue loop");
+        let d = api.get(KIND_DEPLOYMENT, "web").unwrap();
+        assert_eq!(d.status.opt_int("replicas"), Some(0));
+        assert_eq!(d.status.opt_int("readyReplicas"), Some(0));
+        // Back up from zero.
+        api.update_status(KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 2u64);
+        })
+        .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), 2);
+    }
+
+    /// HPA edge: rapid up → down flapping between reconciles must
+    /// converge on the final size without leaking or double-deleting.
+    #[test]
+    fn rapid_up_down_flapping_converges() {
+        let (api, ctrl) = setup();
+        api.create(DeploymentController::build("web", 1, "svc.sif", Resources::ZERO))
+            .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        for want in [6u64, 2, 5, 1, 4] {
+            api.update_status(KIND_DEPLOYMENT, "web", |o| {
+                o.spec.insert("replicas", want);
+            })
+            .unwrap();
+            ctrl.reconcile(&api, "web").unwrap();
+            let pods = api.list(KIND_POD, &[]);
+            assert_eq!(pods.len(), want as usize, "converged to {want}");
+            // Names stay unique and owner references intact.
+            let mut names: Vec<&str> =
+                pods.iter().map(|p| p.meta.name.as_str()).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), want as usize);
+            assert!(pods.iter().all(|p| p.meta.owner.is_some()));
+        }
+    }
+
+    /// HPA edge: a surge while earlier replicas are still Pending must
+    /// only add the difference — Pending pods count toward the target.
+    #[test]
+    fn surge_while_pods_still_pending() {
+        let (api, ctrl) = setup();
+        api.create(DeploymentController::build("web", 2, "svc.sif", Resources::ZERO))
+            .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        let pods = api.list(KIND_POD, &[]);
+        assert_eq!(pods.len(), 2);
+        assert!(pods
+            .iter()
+            .all(|p| PodView::from_object(p).unwrap().phase == PodPhase::Pending));
+        // Surge to 5 with both originals still Pending (unschedulable,
+        // exactly what a scale-up into a full cluster looks like).
+        api.update_status(KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 5u64);
+        })
+        .unwrap();
+        let r = ctrl.reconcile(&api, "web").unwrap();
+        let pods = api.list(KIND_POD, &[]);
+        assert_eq!(pods.len(), 5, "adds exactly the 3 missing replicas");
+        assert!(matches!(r, Reconcile::RequeueAfter(_)), "still waiting for readiness");
+        // And a partial scale-down with everything Pending removes the
+        // surplus, not the originals' count.
+        api.update_status(KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 3u64);
+        })
+        .unwrap();
+        ctrl.reconcile(&api, "web").unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), 3);
+    }
+
     #[test]
     fn replaces_failed_pods() {
         let (api, ctrl) = setup();

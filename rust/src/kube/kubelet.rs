@@ -18,6 +18,7 @@ use std::time::Duration;
 pub struct Kubelet<C: Cri> {
     api: Arc<dyn ApiClient>,
     node_name: String,
+    capacity: Resources,
     cri: C,
     fs: SharedFs,
     time_scale: f64,
@@ -52,6 +53,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
         Ok(Kubelet {
             api,
             node_name: node_name.to_string(),
+            capacity,
             cri,
             fs,
             time_scale,
@@ -92,8 +94,8 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                 return (0, 0);
             }
         };
-        for obj in pods.items {
-            let Ok(view) = PodView::from_object(&obj) else { continue };
+        for obj in &pods.items {
+            let Ok(view) = PodView::from_object(obj) else { continue };
             let pod_name = view.name.clone();
             let has_container = self.running.lock().unwrap().contains_key(&pod_name);
             match (view.phase, has_container) {
@@ -213,6 +215,19 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                 self.stopping.lock().unwrap().remove(&pod);
             }
         }
+        // Metrics pipeline (autoscale layer): sample this node's pods and
+        // publish NodeMetrics/PodMetrics — write-free when nothing
+        // changed, so the per-sync cost on a quiet node is one list + a
+        // few gets. The pod list used for reconciliation is reused; a
+        // phase written above is observed one sync later, the usual
+        // level-triggered lag.
+        crate::autoscale::publish_node_sample(
+            self.api.as_ref(),
+            &self.node_name,
+            self.capacity,
+            &pods.items,
+            &self.metrics,
+        );
         (started, completed)
     }
 
@@ -361,6 +376,34 @@ mod tests {
         let (started, _) = kubelet.sync_once();
         assert_eq!(started, 1, "evicted pod restarts after re-binding");
         assert_eq!(phase(&api, "pe"), "Running");
+    }
+
+    #[test]
+    fn sync_publishes_node_and_pod_metrics() {
+        use crate::autoscale::{NodeMetricsView, KIND_NODEMETRICS, KIND_PODMETRICS};
+        let (api, kubelet) = setup();
+        let mut pod = PodView::build(
+            "pm",
+            "slow.sif",
+            Resources::new(750, 1 << 20, 0),
+            &[(crate::autoscale::CPU_LOAD_ENV.to_string(), "600".to_string())],
+        );
+        pod.spec.insert("nodeName", "w1");
+        api.create(pod).unwrap();
+        kubelet.sync_once(); // starts the container (phase -> Running)
+        kubelet.sync_once(); // observes Running, publishes the sample
+        let nm = NodeMetricsView::from_object(&api.get(KIND_NODEMETRICS, "w1").unwrap())
+            .unwrap();
+        assert_eq!(nm.usage_cpu_milli, 600);
+        assert_eq!(nm.capacity.cpu_milli, 8000);
+        assert!(api.get(KIND_PODMETRICS, "pm").is_ok());
+        // Once the pod stops running its metrics are reaped.
+        api.update_status(KIND_POD, "pm", |o| {
+            o.status.insert("phase", "Succeeded");
+        })
+        .unwrap();
+        kubelet.sync_once();
+        assert!(api.get(KIND_PODMETRICS, "pm").is_err(), "stale sample reaped");
     }
 
     #[test]

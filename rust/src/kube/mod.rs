@@ -51,8 +51,9 @@ pub mod store;
 pub mod yaml;
 
 pub use api::{
-    KubeObject, NodeView, ObjectMeta, PodPhase, PodView, WlmJobView, KIND_DEPLOYMENT,
-    KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB, WLM_API_VERSION,
+    add_scheduling_gate, remove_scheduling_gate, scheduling_gates, KubeObject, NodeView,
+    ObjectMeta, PodPhase, PodView, WlmJobView, KIND_DEPLOYMENT, KIND_NODE, KIND_POD,
+    KIND_SLURMJOB, KIND_TORQUEJOB, WLM_API_VERSION,
 };
 pub use apiserver::{ApiServer, RemoteApi, MAX_CONFLICT_RETRIES};
 pub use client::{Api, ApiClient, ListOptions, ObjectList, ResourceView};

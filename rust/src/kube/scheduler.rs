@@ -69,10 +69,11 @@ impl KubeScheduler {
                     }
                 }
                 (None, PodPhase::Pending) => {
-                    // Queue layer (PR 2): a pod that opted into quota
-                    // admission stays unbound until the admission
-                    // controller flips its Admitted condition.
-                    if crate::kueue::admission_gated(obj) {
+                    // Scheduling gates (k8s `spec.schedulingGates`): a pod
+                    // with any gate present is not scheduler-ready.
+                    // Admission layers (kueue, PR 2/3) set and clear their
+                    // own gates — the scheduler knows nothing about them.
+                    if !view.scheduling_gates.is_empty() {
                         self.metrics.inc("kube.sched.gated");
                         continue;
                     }
@@ -90,6 +91,8 @@ impl KubeScheduler {
             let mut candidates: Vec<(&NodeView, Resources)> = nodes
                 .iter()
                 .filter(|n| n.ready)
+                // cordoned nodes (autoscaler drain) accept nothing new
+                .filter(|n| !n.unschedulable)
                 // taints: pod must tolerate every NoSchedule taint
                 .filter(|n| n.taints.iter().all(|t| pod.tolerations.contains(t)))
                 // nodeSelector: all pairs must match node labels
@@ -268,20 +271,43 @@ mod tests {
     }
 
     #[test]
-    fn admission_gated_pod_held_until_admitted() {
+    fn scheduling_gated_pod_held_until_gates_clear() {
+        use crate::kube::api::{add_scheduling_gate, remove_scheduling_gate};
         let (api, sched) = setup();
         add_node(&api, "w1", 8);
         let mut pod = PodView::build("gated", "img", Resources::new(100, 1 << 20, 0), &[]);
-        pod.meta.set_label(crate::kueue::QUEUE_NAME_LABEL, "team");
+        add_scheduling_gate(&mut pod, "kueue.x-k8s.io/admission");
+        add_scheduling_gate(&mut pod, "other-layer");
         api.create(pod).unwrap();
         assert_eq!(sched.run_cycle(), 0, "gated pod must not bind");
-        // The admission controller flips the condition → next cycle binds.
+        // One gate down, one to go: still held.
         api.update_status(KIND_POD, "gated", |o| {
-            crate::kueue::set_condition(&mut o.status, crate::kueue::COND_ADMITTED, true);
+            remove_scheduling_gate(o, "kueue.x-k8s.io/admission");
+        })
+        .unwrap();
+        assert_eq!(sched.run_cycle(), 0, "every gate must clear");
+        api.update_status(KIND_POD, "gated", |o| {
+            remove_scheduling_gate(o, "other-layer");
         })
         .unwrap();
         assert_eq!(sched.run_cycle(), 1);
         assert_eq!(node_of(&api, "gated").as_deref(), Some("w1"));
+    }
+
+    #[test]
+    fn cordoned_node_excluded() {
+        let (api, sched) = setup();
+        add_node(&api, "w1", 8);
+        add_node(&api, "w2", 8);
+        api.update_status(KIND_NODE, "w1", |o| {
+            o.spec.insert("unschedulable", true);
+        })
+        .unwrap();
+        add_pod(&api, "p1", 100);
+        add_pod(&api, "p2", 100);
+        assert_eq!(sched.run_cycle(), 2);
+        assert_eq!(node_of(&api, "p1").as_deref(), Some("w2"), "cordoned node skipped");
+        assert_eq!(node_of(&api, "p2").as_deref(), Some("w2"));
     }
 
     #[test]

@@ -160,7 +160,11 @@ impl Scheme {
         self.register_grouped_crd(crate::kueue::KUEUE_API_VERSION, kind, plural, short_names)
     }
 
-    fn register_grouped_crd(
+    /// Register a kind under an arbitrary `group/version` apiVersion —
+    /// the generic entry point the grouped wrappers above delegate to
+    /// (and what new subsystems call directly, e.g. the autoscale layer's
+    /// `autoscaling/v2` and `metrics.k8s.io/v1beta1` kinds).
+    pub fn register_grouped_crd(
         &mut self,
         api_version: &str,
         kind: &str,
@@ -214,9 +218,11 @@ impl Scheme {
 }
 
 /// The process-wide default scheme: built-ins plus the two WLM CRDs the
-/// operators ship (TorqueJob, SlurmJob) and the queue layer's admission
-/// CRDs (ClusterQueue, LocalQueue). Controllers and the CLI resolve
-/// against this unless handed a custom scheme.
+/// operators ship (TorqueJob, SlurmJob), the queue layer's admission CRDs
+/// (ClusterQueue, LocalQueue), and the autoscale layer's kinds (the
+/// `autoscaling/v2` HorizontalPodAutoscaler and the `metrics.k8s.io`
+/// NodeMetrics/PodMetrics the kubelets publish). Controllers and the CLI
+/// resolve against this unless handed a custom scheme.
 pub fn default_scheme() -> &'static Scheme {
     static SCHEME: OnceLock<Scheme> = OnceLock::new();
     SCHEME.get_or_init(|| {
@@ -227,6 +233,27 @@ pub fn default_scheme() -> &'static Scheme {
             .expect("clusterqueue crd");
         s.register_kueue_crd(crate::kueue::KIND_LOCALQUEUE, "localqueues", &["lq"])
             .expect("localqueue crd");
+        s.register_grouped_crd(
+            crate::autoscale::AUTOSCALING_API_VERSION,
+            crate::autoscale::KIND_HPA,
+            "horizontalpodautoscalers",
+            &["hpa"],
+        )
+        .expect("hpa crd");
+        s.register_grouped_crd(
+            crate::autoscale::METRICS_API_VERSION,
+            crate::autoscale::KIND_NODEMETRICS,
+            "nodemetrics",
+            &[],
+        )
+        .expect("nodemetrics crd");
+        s.register_grouped_crd(
+            crate::autoscale::METRICS_API_VERSION,
+            crate::autoscale::KIND_PODMETRICS,
+            "podmetrics",
+            &[],
+        )
+        .expect("podmetrics crd");
         s
     })
 }
@@ -275,6 +302,10 @@ mod tests {
             ("localqueue", "LocalQueue"),
             ("localqueues", "LocalQueue"),
             ("lq", "LocalQueue"),
+            ("hpa", "HorizontalPodAutoscaler"),
+            ("horizontalpodautoscalers", "HorizontalPodAutoscaler"),
+            ("nodemetrics", "NodeMetrics"),
+            ("podmetrics", "PodMetrics"),
         ] {
             assert_eq!(s.canonical_kind(alias), Some(kind), "alias {alias}");
         }
@@ -282,6 +313,14 @@ mod tests {
         assert_eq!(
             s.api_version_for("cq").as_deref(),
             Some(crate::kueue::KUEUE_API_VERSION)
+        );
+        assert_eq!(
+            s.api_version_for("hpa").as_deref(),
+            Some(crate::autoscale::AUTOSCALING_API_VERSION)
+        );
+        assert_eq!(
+            s.api_version_for("podmetrics").as_deref(),
+            Some(crate::autoscale::METRICS_API_VERSION)
         );
     }
 

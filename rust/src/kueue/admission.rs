@@ -19,10 +19,13 @@ use super::types::{
     is_admitted, queue_name, set_condition, workload_demand, workload_priority,
     workload_terminal, ClusterQueueView, LocalQueueView, QueueOrdering, QueueResources,
     COND_ADMITTED, COND_EVICTED, COND_QUOTA_RESERVED, KIND_CLUSTERQUEUE, KIND_LOCALQUEUE,
-    POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, WORKLOAD_KINDS,
+    POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, SCHEDULING_GATE, WORKLOAD_KINDS,
 };
 use crate::cluster::Metrics;
-use crate::kube::{ApiClient, KubeObject, ListOptions};
+use crate::kube::{
+    add_scheduling_gate, remove_scheduling_gate, scheduling_gates, ApiClient, KubeObject,
+    ListOptions, KIND_POD,
+};
 use crate::util::Result;
 use std::collections::BTreeMap;
 
@@ -119,6 +122,22 @@ impl AdmissionCore {
         for kind in WORKLOAD_KINDS {
             for obj in api.list(kind, &ListOptions::all())?.items {
                 let Some(label) = queue_name(&obj).map(String::from) else { continue };
+                // Back-fill the scheduling gate on labelled pods created
+                // without one (the [`super::types::queue_workload`]
+                // builder sets it at birth; this converges stragglers so
+                // the scheduler cannot race a suspended pod onto a node).
+                if *kind == KIND_POD
+                    && !is_admitted(&obj)
+                    && !workload_terminal(&obj)
+                    && !scheduling_gates(&obj).iter().any(|g| g == SCHEDULING_GATE)
+                {
+                    let _ = api.update_status(KIND_POD, &obj.meta.name, &|o| {
+                        if !is_admitted(o) {
+                            add_scheduling_gate(o, SCHEDULING_GATE);
+                        }
+                    });
+                    self.metrics.inc("kueue.gates_backfilled");
+                }
                 // Admitted workloads charge the ClusterQueue stamped on
                 // them at admission time — deleting or retargeting a
                 // LocalQueue must not drop live charges (overcommit);
@@ -326,6 +345,8 @@ impl AdmissionCore {
                 set_condition(&mut o.status, COND_ADMITTED, true);
                 set_condition(&mut o.status, COND_EVICTED, false);
                 o.status.insert("clusterQueue", cq);
+                // Admission is what releases the pod to the scheduler.
+                remove_scheduling_gate(o, SCHEDULING_GATE);
             });
             match res {
                 Ok(_) => {}
@@ -343,6 +364,9 @@ impl AdmissionCore {
                             set_condition(&mut o.status, COND_ADMITTED, false);
                             set_condition(&mut o.status, COND_QUOTA_RESERVED, false);
                             o.status.remove("clusterQueue");
+                            if o.kind == KIND_POD {
+                                add_scheduling_gate(o, SCHEDULING_GATE);
+                            }
                         });
                     }
                     self.metrics.inc("kueue.admit_unwound");
@@ -530,6 +554,34 @@ mod tests {
         let r = core.cycle(&a).unwrap();
         assert_eq!(r.admitted, 1, "remainder of a partially-completed gang re-admits");
         assert!(is_admitted(&a.get(KIND_POD, "g-1").unwrap()));
+    }
+
+    #[test]
+    fn scheduling_gate_backfilled_then_cleared_on_admission() {
+        let a = api();
+        let core = AdmissionCore::new(Metrics::new());
+        a.create(ClusterQueueView::build("cq", QueueResources::nodes(1))).unwrap();
+        // Born gated through the builder.
+        let mut first = PodView::build("first", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+        crate::kueue::queue_workload(&mut first, "cq");
+        a.create(first).unwrap();
+        // Created with a bare label (no gate): the cycle back-fills it.
+        a.create(labelled_pod("second", "cq", 100)).unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 1, "1-node quota admits only the head");
+        let first = a.get(KIND_POD, "first").unwrap();
+        assert!(is_admitted(&first));
+        assert!(
+            crate::kube::scheduling_gates(&first).is_empty(),
+            "admission clears the gate"
+        );
+        let second = a.get(KIND_POD, "second").unwrap();
+        assert!(!is_admitted(&second));
+        assert_eq!(
+            crate::kube::scheduling_gates(&second),
+            vec![crate::kueue::SCHEDULING_GATE.to_string()],
+            "suspended straggler gets the gate back-filled"
+        );
     }
 
     #[test]

@@ -29,9 +29,14 @@
 //! # Admission flow: suspend → reserve → admit → preempt
 //!
 //! 1. **suspend** — a labelled workload is born *gated*: its `Admitted`
-//!    condition is unset, and both [`crate::kube::KubeScheduler`] (for
-//!    pods) and the operator's dummy-pod path (for WlmJobs) refuse to
-//!    touch gated workloads. Suspension is the *absence* of admission, so
+//!    condition is unset. Pods additionally carry the
+//!    `kueue.x-k8s.io/admission` entry in the generic
+//!    `spec.schedulingGates` (set by [`queue_workload`] at creation,
+//!    back-filled by the admission cycle), which is what
+//!    [`crate::kube::KubeScheduler`] actually checks — the scheduler
+//!    knows nothing about kueue (PR 3 inverted that dependency). The
+//!    operator's dummy-pod path (for WlmJobs) still gates on the missing
+//!    `Admitted` condition. Suspension is the *absence* of admission, so
 //!    a crashed controller loses nothing.
 //! 2. **reserve** — each [`admission::AdmissionCore::cycle`] rebuilds a
 //!    pure [`quota::Ledger`] from the queues and the currently admitted
@@ -80,10 +85,10 @@ pub use controller::{start_admission, KueueController};
 pub use preemption::{evict_gang, select_victims, AdmittedGang};
 pub use quota::{Fit, Ledger, QueueState};
 pub use types::{
-    admission_gated, get_condition, is_admitted, is_evicted, queue_name, set_condition,
-    workload_demand, workload_priority, workload_terminal, ClusterQueueView, LocalQueueView,
-    PreemptionPolicy, QueueOrdering, QueueResources, COND_ADMITTED, COND_EVICTED,
-    COND_QUOTA_RESERVED, KIND_CLUSTERQUEUE, KIND_LOCALQUEUE, KUEUE_API_VERSION,
-    POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, PRIORITY_LABEL, QUEUE_NAME_LABEL,
-    WORKLOAD_KINDS,
+    admission_gated, get_condition, is_admitted, is_evicted, queue_name, queue_workload,
+    set_condition, workload_demand, workload_priority, workload_terminal, ClusterQueueView,
+    LocalQueueView, PreemptionPolicy, QueueOrdering, QueueResources, COND_ADMITTED,
+    COND_EVICTED, COND_QUOTA_RESERVED, KIND_CLUSTERQUEUE, KIND_LOCALQUEUE,
+    KUEUE_API_VERSION, POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, PRIORITY_LABEL,
+    QUEUE_NAME_LABEL, SCHEDULING_GATE, WORKLOAD_KINDS,
 };

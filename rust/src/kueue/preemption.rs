@@ -19,9 +19,9 @@
 use super::quota::Ledger;
 use super::types::{
     set_condition, workload_terminal, ClusterQueueView, QueueResources, COND_ADMITTED,
-    COND_EVICTED, COND_QUOTA_RESERVED,
+    COND_EVICTED, COND_QUOTA_RESERVED, SCHEDULING_GATE,
 };
-use crate::kube::{ApiClient, KIND_POD};
+use crate::kube::{add_scheduling_gate, ApiClient, KIND_POD};
 use crate::util::Result;
 
 /// One admitted gang as the preemption search sees it.
@@ -115,6 +115,9 @@ pub fn evict_gang(api: &dyn ApiClient, gang: &AdmittedGang) -> Result<()> {
             if is_pod {
                 o.spec.remove("nodeName");
                 o.status.insert("phase", "Pending");
+                // Back to suspended: re-gate so the scheduler cannot
+                // re-bind the pod before it is re-admitted.
+                add_scheduling_gate(o, SCHEDULING_GATE);
             }
         })?;
     }

@@ -36,6 +36,13 @@ pub const POD_GROUP_LABEL: &str = "kueue.x-k8s.io/pod-group-name";
 /// this annotation exists and the declared count of members is present.
 pub const POD_GROUP_COUNT_ANNOTATION: &str = "kueue.x-k8s.io/pod-group-total-count";
 
+/// The pod scheduling gate kueue owns (`spec.schedulingGates`): set on
+/// suspended queue-labelled pods, cleared at admission, re-set on
+/// eviction. The scheduler holds any gated pod without knowing whose
+/// gate it is — the generic mechanism future admission layers compose
+/// through (PR 3 inverted the old direct `admission_gated` dependency).
+pub const SCHEDULING_GATE: &str = "kueue.x-k8s.io/admission";
+
 /// Condition types the admission controller flips on workloads.
 pub const COND_QUOTA_RESERVED: &str = "QuotaReserved";
 pub const COND_ADMITTED: &str = "Admitted";
@@ -349,11 +356,27 @@ pub fn is_evicted(obj: &KubeObject) -> bool {
     get_condition(obj, COND_EVICTED) == Some(true)
 }
 
-/// Should the scheduler/operator hold this workload? True when it opted
-/// into queueing (queue-name label present) and has not been admitted.
-/// Label-less workloads bypass the queue layer entirely.
+/// Should the operator hold this workload? True when it opted into
+/// queueing (queue-name label present) and has not been admitted.
+/// Label-less workloads bypass the queue layer entirely. (Pods are held
+/// through the generic `schedulingGates` mechanism instead — see
+/// [`SCHEDULING_GATE`] and [`queue_workload`]; this predicate remains the
+/// suspension check for non-schedulable kinds like TorqueJob/SlurmJob,
+/// and the admission controller's own notion of "pending".)
 pub fn admission_gated(obj: &KubeObject) -> bool {
     queue_name(obj).is_some() && !is_admitted(obj)
+}
+
+/// Opt a workload into a queue: sets the queue-name label and — for pods
+/// — the kueue scheduling gate, so the workload is born suspended with no
+/// window for the scheduler to race the admission controller (the
+/// mutating-webhook duty in real Kueue). The admission cycle also
+/// back-fills the gate on labelled pods created without it.
+pub fn queue_workload(obj: &mut KubeObject, queue: &str) {
+    obj.meta.set_label(QUEUE_NAME_LABEL, queue);
+    if obj.kind == KIND_POD {
+        crate::kube::add_scheduling_gate(obj, SCHEDULING_GATE);
+    }
 }
 
 /// Is the workload finished (its quota charge released)?
@@ -495,6 +518,19 @@ mod tests {
         assert!(admission_gated(&pod));
         set_condition(&mut pod.status, COND_ADMITTED, true);
         assert!(!admission_gated(&pod));
+    }
+
+    #[test]
+    fn queue_workload_gates_pods_but_not_wlm_jobs() {
+        let mut pod = PodView::build("p", "img.sif", Resources::new(500, 1 << 20, 0), &[]);
+        queue_workload(&mut pod, "tenant-a");
+        assert_eq!(queue_name(&pod), Some("tenant-a"));
+        assert_eq!(crate::kube::scheduling_gates(&pod), vec![SCHEDULING_GATE]);
+        // WlmJobs never schedule as pods, so they carry no gate.
+        let mut tj = WlmJobView::build_torquejob("t", "echo x\n", "", "");
+        queue_workload(&mut tj, "tenant-a");
+        assert!(crate::kube::scheduling_gates(&tj).is_empty());
+        assert!(admission_gated(&tj));
     }
 
     #[test]

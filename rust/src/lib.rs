@@ -12,6 +12,7 @@
 //! reproduction results. Python never runs on the request path: all
 //! artifacts under `artifacts/` are produced once by `make artifacts`.
 
+pub mod autoscale;
 pub mod bench;
 pub mod cli;
 pub mod cluster;

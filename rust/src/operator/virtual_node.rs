@@ -46,8 +46,17 @@ pub fn register_virtual_nodes(
         node.status.insert("runtime", "virtual-kubelet");
         match api.create(node) {
             Ok(_) => created.push(name),
-            Err(e) if matches!(&e, crate::util::Error::Api(_)) && !e.is_not_found() => {
-                // Already registered (operator restart): fine.
+            // Already registered (operator restart) — and only that. Any
+            // other API error (invalid object, conflict-exhausted, a
+            // transport fault surfacing as an API error) must propagate:
+            // swallowing it would report virtual nodes that do not exist
+            // and strand every dummy pod targeting them.
+            Err(e)
+                if matches!(
+                    &e,
+                    crate::util::Error::Api(crate::util::ApiError::AlreadyExists { .. })
+                ) || e.is_conflict() =>
+            {
                 created.push(name);
             }
             Err(e) => return Err(e),
@@ -115,6 +124,77 @@ mod tests {
         let again = register_virtual_nodes(&api, &bridge, "torque").unwrap();
         assert_eq!(again, vec!["vnode-torque-batch"]);
         assert_eq!(api.list(KIND_NODE, &[]).len(), 1);
+    }
+
+    /// Regression (PR 3): non-NotFound API errors other than
+    /// already-exists/conflict used to be swallowed as "already
+    /// registered"; they must propagate.
+    #[test]
+    fn non_conflict_api_errors_propagate() {
+        use crate::kube::{ApiClient, KubeObject, ListOptions, ObjectList, WatchEvent};
+        use crate::util::ApiError;
+        use std::sync::mpsc::Receiver;
+
+        /// ApiClient whose create always fails with the given error.
+        struct FailingApi(Error);
+        impl ApiClient for FailingApi {
+            fn create(&self, _obj: KubeObject) -> Result<KubeObject> {
+                Err(self.0.clone())
+            }
+            fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+                Err(Error::not_found(kind, name))
+            }
+            fn update(&self, _obj: KubeObject) -> Result<KubeObject> {
+                Err(self.0.clone())
+            }
+            fn update_status(
+                &self,
+                _kind: &str,
+                _name: &str,
+                _f: &dyn Fn(&mut KubeObject),
+            ) -> Result<KubeObject> {
+                Err(self.0.clone())
+            }
+            fn patch_merge(
+                &self,
+                _kind: &str,
+                _name: &str,
+                _patch: &crate::encoding::Value,
+            ) -> Result<KubeObject> {
+                Err(self.0.clone())
+            }
+            fn delete(&self, _kind: &str, _name: &str) -> Result<KubeObject> {
+                Err(self.0.clone())
+            }
+            fn apply(&self, _obj: KubeObject) -> Result<KubeObject> {
+                Err(self.0.clone())
+            }
+            fn list(&self, _kind: &str, _opts: &ListOptions) -> Result<ObjectList> {
+                Err(self.0.clone())
+            }
+            fn watch(&self, _kind: Option<&str>, _v: u64) -> Result<Receiver<WatchEvent>> {
+                Err(self.0.clone())
+            }
+            fn server_time_s(&self) -> Result<f64> {
+                Ok(0.0)
+            }
+        }
+
+        let bridge = FakeBridge(vec!["batch".into()]);
+        // Invalid object: must propagate, not read as "already there".
+        let api = FailingApi(Error::Api(ApiError::Invalid("bad node".into())));
+        assert!(register_virtual_nodes(&api, &bridge, "torque").is_err());
+        // Pathological contention: a retry loop already gave up — propagate.
+        let api = FailingApi(Error::conflict_exhausted("Node", "vnode-torque-batch", 16));
+        assert!(register_virtual_nodes(&api, &bridge, "torque").is_err());
+        // AlreadyExists and routine conflicts still read as registered.
+        let api = FailingApi(Error::already_exists("Node", "vnode-torque-batch"));
+        assert_eq!(
+            register_virtual_nodes(&api, &bridge, "torque").unwrap(),
+            vec!["vnode-torque-batch"]
+        );
+        let api = FailingApi(Error::conflict("Node", "vnode-torque-batch"));
+        assert!(register_virtual_nodes(&api, &bridge, "torque").is_ok());
     }
 
     #[test]

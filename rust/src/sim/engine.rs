@@ -20,14 +20,33 @@ impl OperatorModel {
     pub const NONE: OperatorModel = OperatorModel { submit_delay_s: 0.0, poll_s: 0.0 };
 }
 
+/// Elastic-cluster mode (autoscale layer, PR 3): the node count follows
+/// load instead of being fixed. Mirrors the live cluster autoscaler's
+/// policy — grow when pending work fits no active node (after a
+/// provisioning delay), shrink a node that sat fully idle past the
+/// window, never below `min_nodes` — so E1-style experiments can compare
+/// a static partition against an elastic one on identical traces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticParams {
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// Seconds between the grow decision and the node accepting work.
+    pub provision_delay_s: f64,
+    /// How long a node must sit fully idle before it is released.
+    pub scale_down_idle_s: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct SimParams {
+    /// Node count (static mode), or the initial floor when `elastic` is
+    /// set (ignored in favour of `elastic.min_nodes` then).
     pub nodes: usize,
     pub cores_per_node: u32,
     pub mem_per_node: u64,
     /// Scheduling cycle period (both WLMs run periodic cycles).
     pub sched_period_s: f64,
     pub operator: OperatorModel,
+    pub elastic: Option<ElasticParams>,
 }
 
 impl Default for SimParams {
@@ -38,6 +57,7 @@ impl Default for SimParams {
             mem_per_node: 64 << 30,
             sched_period_s: 1.0,
             operator: OperatorModel::NONE,
+            elastic: None,
         }
     }
 }
@@ -56,15 +76,35 @@ pub struct SimReport {
     pub max_wait_s: f64,
     /// Mean bounded slowdown (wait+run)/max(run, 10s).
     pub mean_slowdown: f64,
-    /// Core-seconds used / (capacity × makespan).
+    /// Core-seconds used / core-seconds provisioned (node-seconds ×
+    /// cores). For a static cluster this is the classic
+    /// capacity × makespan denominator; elastic runs are judged against
+    /// what was actually kept on.
     pub utilization: f64,
     /// Scheduling cycles executed (cost proxy).
     pub sched_cycles: u64,
+    /// Integral of the active node count over the run (= nodes × makespan
+    /// for a static cluster).
+    pub node_seconds: f64,
+    /// Elastic mode only: grow/shrink event counts.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Whether the run was elastic (drives the extra row columns).
+    pub elastic: bool,
 }
 
 impl SimReport {
+    /// Mean active node count over the run.
+    pub fn mean_nodes(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.node_seconds / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
     pub fn row(&self) -> String {
-        format!(
+        let mut row = format!(
             "{:<14} jobs={:<5} done={:<5} killed={:<4} makespan={:>9.1}s wait(mean/p95/max)={:>7.1}/{:>7.1}/{:>7.1}s slowdown={:>6.2} util={:>5.1}%",
             self.policy,
             self.jobs,
@@ -76,7 +116,16 @@ impl SimReport {
             self.max_wait_s,
             self.mean_slowdown,
             self.utilization * 100.0
-        )
+        );
+        if self.elastic {
+            row.push_str(&format!(
+                " nodes(mean)={:>5.1} scale(up/down)={}/{}",
+                self.mean_nodes(),
+                self.scale_ups,
+                self.scale_downs
+            ));
+        }
+        row
     }
 }
 
@@ -109,11 +158,27 @@ pub fn simulate(trace: &Trace, params: &SimParams, policy: &dyn SchedPolicy) -> 
         })
         .collect();
 
-    let mut free: Vec<NodeState> = (0..params.nodes)
+    // Node slots: a static cluster activates all of them forever; an
+    // elastic one starts at `min_nodes` and grows/shrinks within
+    // `max_nodes` slots.
+    let total_slots = params.elastic.map(|e| e.max_nodes.max(1)).unwrap_or(params.nodes);
+    let initial_active =
+        params.elastic.map(|e| e.min_nodes.min(e.max_nodes)).unwrap_or(params.nodes);
+    let mut free: Vec<NodeState> = (0..total_slots)
         .map(|i| NodeState::whole(i, params.cores_per_node, params.mem_per_node))
         .collect();
+    let mut active: Vec<bool> = (0..total_slots).map(|i| i < initial_active).collect();
+    // Fully idle (all cores free) since this time, while active.
+    let mut idle_since: Vec<Option<f64>> = vec![Some(0.0); total_slots];
+    // In-flight provisioning: (ready time, node slot).
+    let mut provisioning: Vec<(f64, usize)> = Vec::new();
+    let mut node_seconds = 0.0f64;
+    let mut scale_ups = 0u64;
+    let mut scale_downs = 0u64;
+    let mut prev_now = 0.0f64;
 
-    // Event times: job visibility and running-job ends drive the clock; a
+    // Event times: job visibility, running-job ends, provisioned nodes
+    // coming online, and idle windows expiring drive the clock; a
     // scheduling cycle runs at each event time (event-driven scheduling
     // with a minimum period to model cycle cost).
     let mut now = 0.0f64;
@@ -131,25 +196,47 @@ pub fn simulate(trace: &Trace, params: &SimParams, policy: &dyn SchedPolicy) -> 
     let mut running: Vec<(f64, u64)> = Vec::new();
 
     loop {
-        // Next event: earliest of next arrival / next completion.
-        let next_arrival = arrivals.last().map(|id| jobs[id].visible_s);
-        let next_end = running.iter().map(|(e, _)| *e).fold(f64::INFINITY, f64::min);
-        let next = match (next_arrival, next_end.is_finite()) {
-            (Some(a), true) => a.min(next_end),
-            (Some(a), false) => a,
-            (None, true) => next_end,
-            (None, false) => {
-                if pending_ids.is_empty() {
-                    break;
+        // Next event: earliest of next arrival / next completion / next
+        // provisioned node coming online / next idle window expiring.
+        let active_count = active.iter().filter(|a| **a).count();
+        let mut next = f64::INFINITY;
+        if let Some(id) = arrivals.last() {
+            next = next.min(jobs[id].visible_s);
+        }
+        next = running.iter().map(|(e, _)| *e).fold(next, f64::min);
+        next = provisioning.iter().map(|(t, _)| *t).fold(next, f64::min);
+        if let Some(e) = params.elastic {
+            if active_count > e.min_nodes {
+                for i in 0..total_slots {
+                    if let (true, Some(t)) = (active[i], idle_since[i]) {
+                        next = next.min(t + e.scale_down_idle_s);
+                    }
                 }
-                // Pending jobs that can never run: drop them as killed.
-                for id in pending_ids.drain(..) {
-                    jobs.get_mut(&id).unwrap().killed = true;
-                }
-                break;
             }
-        };
+        }
+        if !next.is_finite() {
+            // Nothing will ever happen again: remaining pending jobs can
+            // never run — drop them as killed.
+            for id in pending_ids.drain(..) {
+                jobs.get_mut(&id).unwrap().killed = true;
+            }
+            break;
+        }
         now = next.max(now);
+        node_seconds += active_count as f64 * (now - prev_now);
+        prev_now = now;
+
+        // Provisioned nodes come online.
+        let mut i = 0;
+        while i < provisioning.len() {
+            if provisioning[i].0 <= now + 1e-9 {
+                let (_, slot) = provisioning.swap_remove(i);
+                active[slot] = true;
+                idle_since[slot] = Some(now);
+            } else {
+                i += 1;
+            }
+        }
 
         // Process arrivals at `now`.
         while let Some(id) = arrivals.last().copied() {
@@ -204,7 +291,11 @@ pub fn simulate(trace: &Trace, params: &SimParams, policy: &dyn SchedPolicy) -> 
                         + jobs[id].spec.walltime_s.max(*end - jobs[id].start_s.unwrap()),
                 })
                 .collect();
-            let assignments = policy.schedule(now, &pending, &free, &running_view);
+            // Only active nodes are offered to the policy; slot ids are
+            // stable, so assignments map straight back onto `free`.
+            let avail: Vec<NodeState> =
+                free.iter().filter(|n| active[n.id]).cloned().collect();
+            let assignments = policy.schedule(now, &pending, &avail, &running_view);
             sched_cycles += 1;
             for a in assignments {
                 let job = jobs.get_mut(&a.job).unwrap();
@@ -228,18 +319,83 @@ pub fn simulate(trace: &Trace, params: &SimParams, policy: &dyn SchedPolicy) -> 
                 pending_ids.retain(|id| *id != a.job);
             }
         }
+
+        // Elastic control arm: track idleness, grow for unplaceable
+        // pending work, shrink nodes idle past the window.
+        if let Some(e) = params.elastic {
+            for n in &free {
+                if !active[n.id] {
+                    idle_since[n.id] = None;
+                } else if n.free_cores < n.total_cores {
+                    idle_since[n.id] = None;
+                } else if idle_since[n.id].is_none() {
+                    idle_since[n.id] = Some(now);
+                }
+            }
+            // Grow: chunks demanded by shape-feasible pending jobs, minus
+            // what idle active nodes and in-flight provisioning already
+            // cover.
+            let pending_chunks: usize = pending_ids
+                .iter()
+                .map(|id| &jobs[id].spec)
+                .filter(|j| {
+                    j.ppn <= params.cores_per_node && (j.nodes as usize) <= e.max_nodes
+                })
+                .map(|j| j.nodes as usize)
+                .sum();
+            let idle_active = free
+                .iter()
+                .filter(|n| active[n.id] && n.free_cores == n.total_cores)
+                .count();
+            let active_count = active.iter().filter(|a| **a).count();
+            let deficit = pending_chunks
+                .saturating_sub(idle_active)
+                .saturating_sub(provisioning.len());
+            let headroom =
+                e.max_nodes.saturating_sub(active_count + provisioning.len());
+            let grow = deficit.min(headroom);
+            if grow > 0 {
+                let slots: Vec<usize> = (0..total_slots)
+                    .filter(|i| !active[*i] && !provisioning.iter().any(|(_, s)| s == i))
+                    .take(grow)
+                    .collect();
+                for slot in slots {
+                    provisioning.push((now + e.provision_delay_s, slot));
+                    scale_ups += 1;
+                }
+            }
+            // Shrink: fully idle past the window, never below the floor.
+            let mut active_count = active.iter().filter(|a| **a).count();
+            for i in 0..total_slots {
+                if active_count <= e.min_nodes {
+                    break;
+                }
+                if let (true, Some(t)) = (active[i], idle_since[i]) {
+                    if now - t >= e.scale_down_idle_s - 1e-9 {
+                        active[i] = false;
+                        idle_since[i] = None;
+                        active_count -= 1;
+                        scale_downs += 1;
+                    }
+                }
+            }
+        }
         if arrivals.is_empty() && running.is_empty() && pending_ids.is_empty() {
             break;
         }
         // Safety: if nothing can ever be scheduled (pending jobs larger
-        // than the machine), drop them.
-        if !pending_ids.is_empty() && running.is_empty() && arrivals.is_empty() {
+        // than the machine, even fully scaled out), drop them.
+        if !pending_ids.is_empty()
+            && running.is_empty()
+            && arrivals.is_empty()
+            && provisioning.is_empty()
+        {
             let can_run: Vec<u64> = pending_ids
                 .iter()
                 .copied()
                 .filter(|id| {
                     let j = &jobs[id].spec;
-                    (j.nodes as usize) <= params.nodes && j.ppn <= params.cores_per_node
+                    (j.nodes as usize) <= total_slots && j.ppn <= params.cores_per_node
                 })
                 .collect();
             if can_run.is_empty() {
@@ -276,7 +432,9 @@ pub fn simulate(trace: &Trace, params: &SimParams, policy: &dyn SchedPolicy) -> 
         core_seconds += (job.spec.nodes * job.spec.ppn) as f64 * run;
         makespan = makespan.max(end);
     }
-    let capacity = (params.nodes as u32 * params.cores_per_node) as f64;
+    // Provisioned core-seconds: what was actually kept powered. A static
+    // cluster integrates to nodes × makespan — the classic denominator.
+    let provisioned_core_s = node_seconds * params.cores_per_node as f64;
     SimReport {
         policy: policy.name().to_string(),
         jobs: trace.len(),
@@ -291,8 +449,16 @@ pub fn simulate(trace: &Trace, params: &SimParams, policy: &dyn SchedPolicy) -> 
         } else {
             slowdowns.iter().sum::<f64>() / slowdowns.len() as f64
         },
-        utilization: if makespan > 0.0 { core_seconds / (capacity * makespan) } else { 0.0 },
+        utilization: if provisioned_core_s > 0.0 {
+            core_seconds / provisioned_core_s
+        } else {
+            0.0
+        },
         sched_cycles,
+        node_seconds,
+        scale_ups,
+        scale_downs,
+        elastic: params.elastic.is_some(),
     }
 }
 
@@ -406,6 +572,90 @@ mod tests {
     fn impossible_job_dropped_not_hung() {
         let trace = Trace::new("t", vec![TraceJob::sleep(1, 0.0, 99, 1, 10.0, 10.0)]);
         let r = simulate(&trace, &params(2, 1), &EasyBackfill);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.killed_walltime, 1);
+    }
+
+    #[test]
+    fn elastic_grows_for_burst_and_saves_node_seconds() {
+        // 8 one-node jobs at t=0, runtime 100s: a static 8-node cluster
+        // burns 8 nodes for the whole run; the elastic one starts at 1,
+        // grows to 8 after the provisioning delay, and finishes almost as
+        // fast on far fewer node-seconds.
+        let jobs: Vec<TraceJob> =
+            (0..8).map(|i| TraceJob::sleep(i + 1, 0.0, 1, 1, 200.0, 100.0)).collect();
+        let trace = Trace::new("burst", jobs);
+        let static_r = simulate(&trace, &params(8, 1), &FifoPolicy);
+        let mut p = params(8, 1);
+        p.elastic = Some(ElasticParams {
+            min_nodes: 1,
+            max_nodes: 8,
+            provision_delay_s: 10.0,
+            scale_down_idle_s: 1e9,
+        });
+        let elastic_r = simulate(&trace, &p, &FifoPolicy);
+        assert_eq!(elastic_r.completed, 8, "elastic run completes everything");
+        assert!(elastic_r.elastic && !static_r.elastic);
+        assert_eq!(elastic_r.scale_ups, 7, "grew from 1 to 8");
+        assert!(
+            (elastic_r.makespan_s - 110.0).abs() < 1e-6,
+            "one provisioning delay added: {}",
+            elastic_r.makespan_s
+        );
+        assert!((static_r.makespan_s - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn elastic_shrinks_after_idle_window() {
+        // A burst at t=0, then one straggler at t=300: the pool must
+        // shrink in between and still serve the straggler.
+        let mut jobs: Vec<TraceJob> =
+            (0..4).map(|i| TraceJob::sleep(i + 1, 0.0, 1, 1, 100.0, 50.0)).collect();
+        jobs.push(TraceJob::sleep(9, 300.0, 1, 1, 100.0, 50.0));
+        let trace = Trace::new("spike", jobs);
+        let static_r = simulate(&trace, &params(4, 1), &FifoPolicy);
+        let mut p = params(4, 1);
+        p.elastic = Some(ElasticParams {
+            min_nodes: 1,
+            max_nodes: 4,
+            provision_delay_s: 5.0,
+            scale_down_idle_s: 30.0,
+        });
+        let r = simulate(&trace, &p, &FifoPolicy);
+        assert_eq!(r.completed, 5);
+        assert!(r.scale_ups >= 3, "burst grew the pool: {}", r.scale_ups);
+        assert!(r.scale_downs >= 3, "idle window shrank it back: {}", r.scale_downs);
+        assert!(r.mean_nodes() < 3.0, "mean active nodes {}", r.mean_nodes());
+        // The whole point: the idle trough costs a static partition
+        // node-seconds the elastic one releases.
+        assert!(
+            r.node_seconds < static_r.node_seconds * 0.6,
+            "elastic {} vs static {} node-seconds",
+            r.node_seconds,
+            static_r.node_seconds
+        );
+        assert!(r.utilization > static_r.utilization);
+    }
+
+    #[test]
+    fn elastic_deterministic_and_impossible_job_still_dropped() {
+        let trace = TraceGen::new(9).poisson_batch(150, 16, 0.8, 80.0);
+        let mut p = params(4, 4);
+        p.elastic = Some(ElasticParams {
+            min_nodes: 1,
+            max_nodes: 6,
+            provision_delay_s: 3.0,
+            scale_down_idle_s: 60.0,
+        });
+        let a = simulate(&trace, &p, &EasyBackfill);
+        let b = simulate(&trace, &p, &EasyBackfill);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.scale_ups, b.scale_ups);
+        assert_eq!(a.node_seconds, b.node_seconds);
+
+        // A job wider than max_nodes can never run, elastic or not.
+        let trace = Trace::new("t", vec![TraceJob::sleep(1, 0.0, 99, 1, 10.0, 10.0)]);
+        let r = simulate(&trace, &p, &EasyBackfill);
         assert_eq!(r.completed, 0);
         assert_eq!(r.killed_walltime, 1);
     }

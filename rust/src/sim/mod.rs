@@ -10,4 +10,4 @@ pub mod admission;
 pub mod engine;
 
 pub use admission::QueueAdmission;
-pub use engine::{simulate, OperatorModel, SimParams, SimReport};
+pub use engine::{simulate, ElasticParams, OperatorModel, SimParams, SimReport};

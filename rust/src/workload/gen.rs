@@ -138,6 +138,49 @@ impl TraceGen {
         trace
     }
 
+    /// Diurnal service load: single-node short jobs whose arrival rate
+    /// follows a day/night sine — peak ≈ `peak_load` offered utilization
+    /// against `capacity_cores`, trough ≈ 10% of peak, period `period_s`.
+    /// Generated by thinning a homogeneous Poisson stream at the peak
+    /// rate, so it stays deterministic per seed. The load shape that makes
+    /// static-vs-elastic partition comparisons (autoscale layer, PR 3)
+    /// meaningful: a static cluster must be provisioned for the peak and
+    /// idles through every trough.
+    pub fn diurnal(
+        &mut self,
+        n_jobs: usize,
+        capacity_cores: u32,
+        peak_load: f64,
+        period_s: f64,
+        mean_runtime_s: f64,
+    ) -> Trace {
+        const TROUGH: f64 = 0.1;
+        let peak_rate =
+            (peak_load * capacity_cores as f64) / mean_runtime_s.max(1e-9);
+        let rate_at = |t: f64| {
+            // 0 at t=0, peaking mid-period: 0.5*(1-cos) sweeps 0..1.
+            let phase = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * t / period_s).cos());
+            peak_rate * (TROUGH + (1.0 - TROUGH) * phase)
+        };
+        let mut t = 0.0;
+        let jobs = (0..n_jobs)
+            .map(|_| {
+                loop {
+                    t += self.rng.exp(peak_rate.max(1e-9));
+                    if self.rng.uniform(0.0, 1.0) <= rate_at(t) / peak_rate {
+                        break;
+                    }
+                }
+                let runtime = self.rng.lognormal(mean_runtime_s.ln() - 0.18, 0.6).clamp(
+                    1.0,
+                    mean_runtime_s * 10.0,
+                );
+                TraceJob::sleep(self.id(), t, 1, 1, runtime * self.rng.uniform(1.5, 3.0), runtime)
+            })
+            .collect();
+        Trace::new("diurnal", jobs)
+    }
+
     /// Adversarial-for-FIFO trace: alternating wide long and narrow short
     /// jobs — the textbook case where EASY backfill wins on makespan.
     pub fn backfill_showcase(&mut self, pairs: usize, cluster_nodes: u32) -> Trace {
@@ -211,6 +254,34 @@ mod tests {
         assert!(count("a") > count("c"), "zipf skew: first tenant dominates");
         // Deterministic per seed, like every other generator.
         let again = TraceGen::new(7).multi_tenant(300, &["a", "b", "c"], 64, 0.7, 100.0);
+        assert_eq!(t, again);
+    }
+
+    #[test]
+    fn diurnal_shape_and_determinism() {
+        let period = 1000.0;
+        let t = TraceGen::new(11).diurnal(600, 32, 0.8, period, 30.0);
+        assert_eq!(t.len(), 600);
+        assert!(t.jobs.iter().all(|j| j.nodes == 1 && j.ppn == 1));
+        assert!(t.jobs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        // Density peaks mid-period and troughs at the period boundary:
+        // count arrivals falling in peak vs trough windows across the
+        // whole trace.
+        let bucket = |j: &TraceJob| (j.arrival_s % period) / period;
+        let peak = t.jobs.iter().filter(|j| (0.35..0.65).contains(&bucket(j))).count();
+        let trough = t
+            .jobs
+            .iter()
+            .filter(|j| {
+                let b = bucket(j);
+                !(0.15..0.85).contains(&b)
+            })
+            .count();
+        assert!(
+            peak > trough * 2,
+            "diurnal skew missing: peak {peak} vs trough {trough}"
+        );
+        let again = TraceGen::new(11).diurnal(600, 32, 0.8, period, 30.0);
         assert_eq!(t, again);
     }
 

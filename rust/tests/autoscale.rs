@@ -1,0 +1,338 @@
+//! Autoscale-layer integration: the full elastic loop, end to end through
+//! the real metrics pipeline, HPA, cluster autoscaler, Kubernetes
+//! scheduler, kueue admission, and the operator's red-box submission path
+//! (a recording bridge stands in for the WLM, so "bursted onto the HPC
+//! partition" is a hard assertion on what crossed red-box).
+//!
+//! The acceptance scenario, stepped deterministically:
+//! 1. a Deployment under synthetic load scales up via HPA;
+//! 2. the scale-up exhausts the static partition, so the cluster
+//!    autoscaler provisions live kubelet-backed pool nodes up to its cap;
+//! 3. with the K8s partition capped, a burst-labelled pod flips onto the
+//!    virtual WLM node and its wrapped job is submitted over red-box;
+//! 4. on load drop the HPA shrinks the Deployment and the autoscaler
+//!    drains + removes an empty pool node — while the pool node hosting a
+//!    gang-admitted kueue workload survives untouched.
+
+use hpcorc::autoscale::{
+    CaConfig, ClusterAutoscaler, HpaController, HpaView, NodeProvisioner, BURST_LABEL,
+    CPU_USAGE_ANNOTATION,
+};
+use hpcorc::cluster::{Metrics, Resources, SharedFs};
+use hpcorc::kube::{
+    ApiServer, Controller, DeploymentController, KubeScheduler, Kubelet, NodeView, PodView,
+    KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_TORQUEJOB,
+};
+use hpcorc::kueue::{
+    is_admitted, AdmissionCore, ClusterQueueView, LocalQueueView, QueueResources,
+};
+use hpcorc::operator::{
+    register_virtual_nodes, OperatorConfig, WlmBridge, WlmJobOperator, WlmStatus,
+};
+use hpcorc::singularity::{
+    ImageRegistry, Payload, Runtime, RuntimeKind, SifImage, SingularityCri,
+};
+use hpcorc::util::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Records submissions/cancellations; job status is test-controlled.
+struct RecordingBridge {
+    submits: Mutex<Vec<String>>,
+    status: Mutex<WlmStatus>,
+    next: AtomicU64,
+}
+
+impl Default for RecordingBridge {
+    fn default() -> Self {
+        RecordingBridge {
+            submits: Mutex::new(Vec::new()),
+            status: Mutex::new(WlmStatus::Queued),
+            next: AtomicU64::new(1),
+        }
+    }
+}
+
+impl RecordingBridge {
+    fn submits(&self) -> Vec<String> {
+        self.submits.lock().unwrap().clone()
+    }
+}
+
+impl WlmBridge for RecordingBridge {
+    fn submit(&self, script: &str, _user: &str) -> Result<String> {
+        self.submits.lock().unwrap().push(script.to_string());
+        Ok(format!("{}.rec-head", self.next.fetch_add(1, Ordering::SeqCst)))
+    }
+    fn status(&self, _job_id: &str) -> Result<WlmStatus> {
+        Ok(self.status.lock().unwrap().clone())
+    }
+    fn cancel(&self, _job_id: &str) -> Result<()> {
+        Ok(())
+    }
+    fn read_file(&self, _path: &str) -> Result<String> {
+        Ok(String::new())
+    }
+    fn write_file(&self, _path: &str, _content: &str) -> Result<()> {
+        Ok(())
+    }
+    fn queues(&self) -> Result<Vec<String>> {
+        Ok(vec!["batch".into()])
+    }
+}
+
+/// Provisioner backed by real kubelets the test steps by hand.
+struct SteppedProvisioner {
+    api: ApiServer,
+    runtime: Runtime,
+    fs: SharedFs,
+    capacity: Resources,
+    kubelets: Mutex<Vec<Kubelet<Arc<SingularityCri>>>>,
+    deprovisioned: Mutex<Vec<String>>,
+}
+
+impl NodeProvisioner for SteppedProvisioner {
+    fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()> {
+        let kubelet = Kubelet::register(
+            self.api.client(),
+            name,
+            self.capacity,
+            labels,
+            SingularityCri::new(self.runtime.clone()),
+            self.fs.clone(),
+            1.0,
+            Metrics::new(),
+        )?;
+        self.kubelets.lock().unwrap().push(kubelet);
+        Ok(())
+    }
+    fn deprovision(&self, name: &str) -> Result<()> {
+        self.kubelets.lock().unwrap().retain(|k| k.node_name() != name);
+        self.deprovisioned.lock().unwrap().push(name.to_string());
+        Ok(())
+    }
+}
+
+struct Env {
+    api: ApiServer,
+    sched: KubeScheduler,
+    hpa: HpaController,
+    ca: ClusterAutoscaler,
+    core: AdmissionCore,
+    operator: Arc<WlmJobOperator>,
+    bridge: Arc<RecordingBridge>,
+    provisioner: Arc<SteppedProvisioner>,
+    static_kubelet: Kubelet<Arc<SingularityCri>>,
+}
+
+impl Env {
+    /// One step of every control loop, in a scheduler-like order.
+    fn step(&self) {
+        let _ = DeploymentController.reconcile(&self.api, "web");
+        let _ = self.core.cycle(&self.api);
+        self.sched.run_cycle();
+        self.static_kubelet.sync_once();
+        for k in self.provisioner.kubelets.lock().unwrap().iter() {
+            k.sync_once();
+        }
+        let _ = self.hpa.reconcile(&self.api, "h");
+        let _ = self.ca.run_cycle();
+        for job in self.api.list(KIND_TORQUEJOB, &[]) {
+            let _ = self.operator.reconcile(&self.api, &job.meta.name);
+        }
+    }
+
+    fn settle<F: Fn(&Env) -> bool>(&self, what: &str, pred: F) {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while !pred(self) {
+            assert!(Instant::now() < deadline, "never converged: {what}");
+            self.step();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn replicas(&self) -> u32 {
+        self.api
+            .get(KIND_DEPLOYMENT, "web")
+            .unwrap()
+            .spec
+            .opt_int("replicas")
+            .unwrap_or(0) as u32
+    }
+
+    fn running_web_pods(&self) -> usize {
+        self.api
+            .list(KIND_POD, &[("deployment".to_string(), "web".to_string())])
+            .iter()
+            .filter(|p| p.status.opt_str("phase") == Some("Running"))
+            .count()
+    }
+
+    fn pool_nodes(&self) -> Vec<String> {
+        self.api
+            .list(KIND_NODE, &[])
+            .iter()
+            .filter(|n| n.meta.label(hpcorc::autoscale::POOL_LABEL).is_some())
+            .map(|n| n.meta.name.clone())
+            .collect()
+    }
+}
+
+fn env() -> Env {
+    let api = ApiServer::new(Metrics::new());
+    let images = ImageRegistry::with_defaults();
+    // Service payload that outlives the test (kubelets run at 1.0 scale).
+    images.push(SifImage::new("svc.sif", Payload::Sleep { millis: 600_000 }));
+    let runtime = Runtime::new(RuntimeKind::Singularity, images, Metrics::new());
+    let fs = SharedFs::new();
+    let bridge = Arc::new(RecordingBridge::default());
+    register_virtual_nodes(&api, bridge.as_ref(), "torque").unwrap();
+    let static_kubelet = Kubelet::register(
+        api.client(),
+        "static-0",
+        Resources::cores(2, 64 << 30),
+        &[],
+        SingularityCri::new(runtime.clone()),
+        fs.clone(),
+        1.0,
+        Metrics::new(),
+    )
+    .unwrap();
+    let provisioner = Arc::new(SteppedProvisioner {
+        api: api.clone(),
+        runtime,
+        fs,
+        capacity: Resources::cores(2, 64 << 30),
+        kubelets: Mutex::new(Vec::new()),
+        deprovisioned: Mutex::new(Vec::new()),
+    });
+    let ca = ClusterAutoscaler::new(
+        api.client(),
+        provisioner.clone(),
+        CaConfig {
+            pool_prefix: "ka".into(),
+            node_capacity: Resources::cores(2, 64 << 30),
+            min_nodes: 0,
+            max_nodes: 2,
+            scale_down_idle: Duration::from_millis(30),
+            burst_wlm: Some("torque".into()),
+            burst_walltime: Duration::from_secs(600),
+        },
+        Metrics::new(),
+    );
+    let wlm: Arc<dyn WlmBridge> = bridge.clone();
+    Env {
+        sched: KubeScheduler::new(api.client(), Metrics::new()),
+        hpa: HpaController::new(Duration::from_millis(1), Metrics::new()),
+        ca,
+        core: AdmissionCore::new(Metrics::new()),
+        operator: WlmJobOperator::new(OperatorConfig::torque(), wlm, Metrics::new()),
+        bridge,
+        provisioner,
+        static_kubelet,
+        api,
+    }
+}
+
+#[test]
+fn full_elastic_loop_scale_up_burst_and_safe_scale_down() {
+    let e = env();
+
+    // --- 1. Deployment under synthetic load + HPA -------------------
+    // Each replica requests 900m and reports 900m of usage (100%
+    // utilization vs the 50% target): the HPA doubles until maxReplicas.
+    let mut deploy =
+        DeploymentController::build("web", 1, "svc.sif", Resources::new(900, 64 << 20, 0));
+    deploy
+        .spec
+        .get_mut("template")
+        .unwrap()
+        .insert("env", hpcorc::encoding::Value::map().with("CPU_LOAD_MILLI", "900"));
+    e.api.create(deploy).unwrap();
+    e.api
+        .create(HpaView::build("h", "web", 1, 6, 50, Duration::ZERO))
+        .unwrap();
+
+    // --- 2. HPA exhausts the static node; the CA grows the pool -----
+    // 6 × 900m needs 5400m; static-0 holds 2000m, so both pool nodes
+    // (2000m each) must come up for all six replicas to run.
+    e.settle("hpa scale-up to max + pool grown + all running", |e| {
+        e.replicas() == 6 && e.pool_nodes().len() == 2 && e.running_web_pods() == 6
+    });
+    let hpa = HpaView::from_object(&e.api.get(hpcorc::autoscale::KIND_HPA, "h").unwrap())
+        .unwrap();
+    assert_eq!(hpa.desired_replicas, Some(6));
+    assert!(hpa.current_utilization_pct.unwrap_or(0) >= 90, "{hpa:?}");
+
+    // A gang-admitted kueue workload lands on a pool node and stays
+    // there for the rest of the test.
+    e.api
+        .create(ClusterQueueView::build("cq", QueueResources::nodes(1)))
+        .unwrap();
+    e.api.create(LocalQueueView::build("team", "cq")).unwrap();
+    let mut gang = PodView::build("gang", "svc.sif", Resources::new(100, 1 << 20, 0), &[]);
+    hpcorc::kueue::queue_workload(&mut gang, "team");
+    gang.spec.insert(
+        "nodeSelector",
+        hpcorc::encoding::Value::map().with(hpcorc::autoscale::POOL_LABEL, "ka"),
+    );
+    e.api.create(gang).unwrap();
+    e.settle("gang admitted, bound to a pool node, running", |e| {
+        let g = e.api.get(KIND_POD, "gang").unwrap();
+        is_admitted(&g)
+            && g.spec.opt_str("nodeName").map(|n| n.starts_with("ka-")).unwrap_or(false)
+            && g.status.opt_str("phase") == Some("Running")
+    });
+    let gang_node =
+        e.api.get(KIND_POD, "gang").unwrap().spec.opt_str("nodeName").unwrap().to_string();
+
+    // --- 3. Partition capped: the labelled pod bursts over red-box --
+    let mut hpc = PodView::build("hpc", "work.sif", Resources::new(1000, 1 << 20, 0), &[]);
+    hpc.meta.set_label(BURST_LABEL, "true");
+    e.api.create(hpc).unwrap();
+    e.settle("burst job submitted over red-box", |e| !e.bridge.submits().is_empty());
+    let submits = e.bridge.submits();
+    assert_eq!(submits.len(), 1);
+    assert!(submits[0].contains("singularity run work.sif"), "{}", submits[0]);
+    let pod = e.api.get(KIND_POD, "hpc").unwrap();
+    assert_eq!(pod.spec.opt_str("nodeName"), Some("vnode-torque-batch"));
+    assert_eq!(pod.status.opt_str("burstJob"), Some("burst-hpc"));
+    // The WLM runs and finishes the job; the pod mirrors it.
+    *e.bridge.status.lock().unwrap() = WlmStatus::Running;
+    e.settle("bursted pod mirrors Running", |e| {
+        e.api.get(KIND_POD, "hpc").unwrap().status.opt_str("phase") == Some("Running")
+    });
+    *e.bridge.status.lock().unwrap() = WlmStatus::Completed;
+    e.settle("bursted pod mirrors completion", |e| {
+        e.api.get(KIND_POD, "hpc").unwrap().status.opt_str("phase") == Some("Succeeded")
+    });
+    assert!(e.pool_nodes().len() <= 2, "burst must not grow the pool past its cap");
+
+    // --- 4. Load drop: HPA shrinks, CA drains — but never the gang --
+    for p in e.api.list(KIND_POD, &[("deployment".to_string(), "web".to_string())]) {
+        e.api
+            .update_status(KIND_POD, &p.meta.name, |o| {
+                o.meta
+                    .annotations
+                    .push((CPU_USAGE_ANNOTATION.to_string(), "90".to_string()));
+            })
+            .unwrap();
+    }
+    e.settle("hpa scales the deployment back down", |e| e.replicas() == 1);
+    e.settle("empty pool node drained and removed", |e| {
+        !e.provisioner.deprovisioned.lock().unwrap().is_empty()
+    });
+    let removed = e.provisioner.deprovisioned.lock().unwrap().clone();
+    assert!(!removed.contains(&gang_node), "the gang's node must never drain");
+    for name in &removed {
+        assert!(e.api.get(KIND_NODE, name).is_err(), "drained node object deleted");
+    }
+    // The gang-admitted workload survived the whole contraction.
+    let gang = e.api.get(KIND_POD, "gang").unwrap();
+    assert!(is_admitted(&gang), "gang still admitted");
+    assert_eq!(gang.status.opt_str("phase"), Some("Running"), "gang never evicted");
+    assert_eq!(gang.spec.opt_str("nodeName"), Some(gang_node.as_str()));
+    let node = NodeView::from_object(&e.api.get(KIND_NODE, &gang_node).unwrap()).unwrap();
+    assert!(!node.unschedulable, "gang's node was never cordoned");
+}

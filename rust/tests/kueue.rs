@@ -84,7 +84,10 @@ fn env() -> Env {
 
 fn queued_pod(name: &str, queue: &str) -> KubeObject {
     let mut p = PodView::build(name, "img.sif", Resources::new(100, 1 << 20, 0), &[]);
-    p.meta.set_label(QUEUE_NAME_LABEL, queue);
+    // Sets the queue label AND the kueue scheduling gate, so the pod is
+    // born suspended (PR 3: the scheduler gates on generic
+    // schedulingGates; kueue owns its gate).
+    hpcorc::kueue::queue_workload(&mut p, queue);
     p
 }
 
@@ -245,6 +248,11 @@ fn preemption_reclaims_borrowed_capacity() {
         assert!(!is_admitted(&p));
         assert!(is_evicted(&p));
         assert!(p.spec.opt_str("nodeName").is_none(), "evicted pods are unbound");
+        assert_eq!(
+            hpcorc::kube::scheduling_gates(&p),
+            vec![hpcorc::kueue::SCHEDULING_GATE.to_string()],
+            "eviction re-gates the pod against the scheduler"
+        );
     }
     for i in 0..2 {
         assert!(is_admitted(&e.api.get(KIND_POD, &format!("grp-b-{i}")).unwrap()));
