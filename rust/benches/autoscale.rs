@@ -18,7 +18,8 @@ use hpcorc::autoscale::{
 use hpcorc::bench::{header, Bench, Stats};
 use hpcorc::cluster::{Metrics, Resources};
 use hpcorc::kube::{
-    ApiServer, Controller, DeploymentController, KubeScheduler, NodeView, KIND_POD,
+    ApiServer, Controller, DeploymentController, KubeScheduler, NodeView,
+    SharedInformerFactory, KIND_POD,
 };
 use hpcorc::util::Result;
 use std::time::Duration;
@@ -59,7 +60,8 @@ fn hpa_setup() -> ApiServer {
         Resources::new(1000, 64 << 20, 0),
     ))
     .unwrap();
-    DeploymentController.reconcile(&api, "web").unwrap();
+    let informers = SharedInformerFactory::new(api.client(), Metrics::new());
+    DeploymentController::new(&informers).reconcile(&api, "web").unwrap();
     for pod in api.list(KIND_POD, &[]) {
         api.update_status(KIND_POD, &pod.meta.name, |o| {
             o.spec.insert("nodeName", "big");
@@ -69,6 +71,7 @@ fn hpa_setup() -> ApiServer {
     }
     publish_node_sample(
         &api,
+        &informers.informer(hpcorc::autoscale::KIND_PODMETRICS),
         "big",
         Resources::cores(4096, 1 << 44),
         &api.list(KIND_POD, &[]),
@@ -87,7 +90,11 @@ fn main() {
     // Target 50% vs the default 50%-of-request usage: desired == current,
     // so the steady-state pass is measured (no write amplification).
     api.create(HpaView::build("h", "web", 1, PODS as u32 * 2, 50, Duration::ZERO)).unwrap();
-    let hpa = HpaController::new(Duration::from_millis(1), Metrics::new());
+    let hpa = HpaController::new(
+        &SharedInformerFactory::new(api.client(), Metrics::new()),
+        Duration::from_millis(1),
+        Metrics::new(),
+    );
     stats.push(Bench::new(format!("hpa reconcile ({PODS} pods)")).warmup(2).iters(15).run(
         || {
             hpa.reconcile(&api, "h").unwrap();
@@ -106,7 +113,7 @@ fn main() {
         .unwrap();
     }
     let ca = ClusterAutoscaler::new(
-        api.client(),
+        &SharedInformerFactory::new(api.client(), Metrics::new()),
         std::sync::Arc::new(ObjectProvisioner {
             api: api.clone(),
             capacity: Resources::cores(8, 64 << 30),
@@ -135,9 +142,10 @@ fn main() {
         ))
         .unwrap();
     }
-    let sched = KubeScheduler::new(api.client(), Metrics::new());
+    let informers = SharedInformerFactory::new(api.client(), Metrics::new());
+    let sched = KubeScheduler::new(&informers, Metrics::new());
     let ca = ClusterAutoscaler::new(
-        api.client(),
+        &informers,
         std::sync::Arc::new(ObjectProvisioner {
             api: api.clone(),
             capacity: Resources::cores(8, 64 << 30),

@@ -50,7 +50,9 @@ fn main() {
 
     for n in [1_000usize, 10_000] {
         let api = setup(n);
-        let core = AdmissionCore::new(Metrics::new());
+        let informers =
+            hpcorc::kube::SharedInformerFactory::new(api.client(), Metrics::new());
+        let core = AdmissionCore::new(&informers, Metrics::new());
         // The admission burst (one-shot: every admitted pod is written).
         Bench::new(format!("first cycle ({n} queued)")).warmup(0).iters(1).run(|| {
             let r = core.cycle(&api).unwrap();

@@ -33,8 +33,8 @@
 use crate::cluster::{Metrics, Resources};
 use crate::encoding::Value;
 use crate::kube::{
-    ApiClient, KubeObject, ListOptions, NodeView, PodPhase, PodView, KIND_DEPLOYMENT,
-    KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+    ApiClient, Informer, KubeObject, NodeView, PodPhase, PodView, SharedInformerFactory,
+    KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
 };
 use crate::operator::{phase, LABEL_QUEUE, LABEL_WLM, VIRTUAL_KUBELET_TAINT};
 use crate::util::{Error, Result};
@@ -111,6 +111,12 @@ struct CaState {
 
 pub struct ClusterAutoscaler {
     api: std::sync::Arc<dyn ApiClient>,
+    /// Shared caches: nodes + pods drive every arm; the WLM job caches
+    /// serve burst-phase mirroring. A cycle issues zero list RPCs.
+    nodes: Informer,
+    pods: Informer,
+    torquejobs: Informer,
+    slurmjobs: Informer,
     provisioner: std::sync::Arc<dyn NodeProvisioner>,
     cfg: CaConfig,
     metrics: Metrics,
@@ -119,13 +125,17 @@ pub struct ClusterAutoscaler {
 
 impl ClusterAutoscaler {
     pub fn new(
-        api: std::sync::Arc<dyn ApiClient>,
+        informers: &SharedInformerFactory,
         provisioner: std::sync::Arc<dyn NodeProvisioner>,
         cfg: CaConfig,
         metrics: Metrics,
     ) -> ClusterAutoscaler {
         ClusterAutoscaler {
-            api,
+            api: informers.client(),
+            nodes: informers.informer(KIND_NODE),
+            pods: informers.informer(KIND_POD),
+            torquejobs: informers.informer(KIND_TORQUEJOB),
+            slurmjobs: informers.informer(KIND_SLURMJOB),
             provisioner,
             cfg,
             metrics,
@@ -146,8 +156,10 @@ impl ClusterAutoscaler {
     pub fn run_cycle(&self) -> Result<CaReport> {
         let t0 = Instant::now();
         let mut report = CaReport::default();
-        let nodes = self.api.list(KIND_NODE, &ListOptions::all())?.items;
-        let pods = self.api.list(KIND_POD, &ListOptions::all())?.items;
+        self.nodes.sync()?;
+        self.pods.sync()?;
+        let nodes = self.nodes.list();
+        let pods = self.pods.list();
         let views: Vec<NodeView> =
             nodes.iter().filter_map(|n| NodeView::from_object(n).ok()).collect();
 
@@ -336,8 +348,11 @@ impl ClusterAutoscaler {
     }
 
     /// Mirror WLM job phases back onto bursted pods (the virtual-kubelet
-    /// "node agent" duty for pods bound to the virtual node).
+    /// "node agent" duty for pods bound to the virtual node). Job phases
+    /// are read from the shared TorqueJob/SlurmJob caches.
     fn mirror_bursted(&self, pods: &[KubeObject]) -> Result<()> {
+        self.torquejobs.sync()?;
+        self.slurmjobs.sync()?;
         for pod in pods {
             let (Some(job), false) = (
                 pod.status.opt_str("burstJob"),
@@ -345,11 +360,10 @@ impl ClusterAutoscaler {
             ) else {
                 continue;
             };
-            let kind = pod.status.opt_str("burstKind").unwrap_or(KIND_TORQUEJOB).to_string();
-            let job_obj = match self.api.get(&kind, job) {
-                Ok(o) => o,
-                Err(e) if e.is_not_found() => continue,
-                Err(e) => return Err(e),
+            let kind = pod.status.opt_str("burstKind").unwrap_or(KIND_TORQUEJOB);
+            let cache = if kind == KIND_SLURMJOB { &self.slurmjobs } else { &self.torquejobs };
+            let Some(job_obj) = cache.get(job) else {
+                continue; // job object gone (owner cascade) — nothing to mirror
             };
             let job_phase = job_obj.status.opt_str("phase").unwrap_or("").to_string();
             let exit = job_obj.status.opt_int("exitCode");
@@ -489,8 +503,9 @@ mod tests {
             provisioned: StdMutex::new(Vec::new()),
             deprovisioned: StdMutex::new(Vec::new()),
         });
-        let ca =
-            ClusterAutoscaler::new(api.client(), prov.clone(), cfg, Metrics::new());
+        let informers =
+            SharedInformerFactory::new(api.client(), Metrics::new());
+        let ca = ClusterAutoscaler::new(&informers, prov.clone(), cfg, Metrics::new());
         (api, prov, ca)
     }
 

@@ -26,7 +26,8 @@ use super::metrics::{PodMetricsView, KIND_PODMETRICS};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
 use crate::kube::{
-    ApiClient, Controller, KubeObject, ListOptions, PodView, Reconcile, KIND_DEPLOYMENT,
+    ApiClient, Controller, Informer, KubeObject, PodView, Reconcile, SharedInformerFactory,
+    KIND_DEPLOYMENT,
 };
 use crate::util::{Error, Result};
 use std::collections::HashMap;
@@ -149,16 +150,30 @@ impl crate::kube::ResourceView for HpaView {
 
 /// The HPA controller. Holds per-HPA recommendation history (the only
 /// state; losing it across a restart merely restarts the stabilization
-/// windows, it cannot mis-scale).
+/// windows, it cannot mis-scale). Target pods and their metrics samples
+/// are read from the shared informer caches — a reconcile issues no list
+/// RPCs.
 pub struct HpaController {
+    pods: Informer,
+    samples: Informer,
     poll: Duration,
     history: Mutex<HashMap<String, Vec<(Instant, u32)>>>,
     metrics: Metrics,
 }
 
 impl HpaController {
-    pub fn new(poll: Duration, metrics: Metrics) -> HpaController {
-        HpaController { poll, history: Mutex::new(HashMap::new()), metrics }
+    pub fn new(
+        informers: &SharedInformerFactory,
+        poll: Duration,
+        metrics: Metrics,
+    ) -> HpaController {
+        HpaController {
+            pods: informers.informer(crate::kube::KIND_POD),
+            samples: informers.informer(KIND_PODMETRICS),
+            poll,
+            history: Mutex::new(HashMap::new()),
+            metrics,
+        }
     }
 
     /// Stabilized recommendation: record `raw`, prune entries older than
@@ -214,10 +229,11 @@ impl Controller for HpaController {
         let current = deploy.spec.opt_int("replicas").unwrap_or(0).max(0) as u32;
 
         // Observed utilization: sum(usage) / sum(requests) over the
-        // target's non-terminal pods that have a metrics sample.
-        let pods = api
-            .list(crate::kube::KIND_POD, &ListOptions::all().with_label("deployment", &hpa.target))?
-            .items;
+        // target's non-terminal pods that have a metrics sample — both
+        // read from the shared caches (label-indexed pods, sample gets).
+        self.pods.sync()?;
+        self.samples.sync()?;
+        let pods = self.pods.list_labelled("deployment", &hpa.target);
         let mut usage = 0u64;
         let mut requested = 0u64;
         let mut unsampled_requested = 0u64;
@@ -227,9 +243,10 @@ impl Controller for HpaController {
             if view.phase.terminal() || view.requests.cpu_milli == 0 {
                 continue;
             }
-            match api
-                .get(KIND_PODMETRICS, &view.name)
-                .ok()
+            match self
+                .samples
+                .get(&view.name)
+                .filter(|m| m.kind == KIND_PODMETRICS)
                 .and_then(|m| PodMetricsView::from_object(&m).ok())
             {
                 Some(m) => {
@@ -301,8 +318,12 @@ mod tests {
     use crate::cluster::Resources;
     use crate::kube::{ApiServer, DeploymentController, KIND_POD};
 
-    fn hpa_ctl() -> HpaController {
-        HpaController::new(Duration::from_millis(1), Metrics::new())
+    fn factory(api: &ApiServer) -> SharedInformerFactory {
+        SharedInformerFactory::new(api.client(), Metrics::new())
+    }
+
+    fn hpa_ctl(api: &ApiServer) -> HpaController {
+        HpaController::new(&factory(api), Duration::from_millis(1), Metrics::new())
     }
 
     /// Deployment + pods marked Running + one metrics sample per pod.
@@ -314,7 +335,7 @@ mod tests {
             Resources::new(1000, 64 << 20, 0),
         ))
         .unwrap();
-        DeploymentController.reconcile(api, "web").unwrap();
+        DeploymentController::new(&factory(api)).reconcile(api, "web").unwrap();
         for pod in api.list(KIND_POD, &[]) {
             api.update_status(KIND_POD, &pod.meta.name, |o| {
                 o.spec.insert("nodeName", "w1");
@@ -327,6 +348,7 @@ mod tests {
         }
         publish_node_sample(
             api,
+            &factory(api).informer(KIND_PODMETRICS),
             "w1",
             Resources::cores(64, 256 << 30),
             &api.list(KIND_POD, &[]),
@@ -370,7 +392,7 @@ mod tests {
         let api = ApiServer::new(Metrics::new());
         seed(&api, 2, 1000); // 100% of request vs target 50% -> double
         api.create(HpaView::build("h", "web", 1, 8, 50, Duration::ZERO)).unwrap();
-        let ctl = hpa_ctl();
+        let ctl = hpa_ctl(&api);
         assert!(matches!(ctl.reconcile(&api, "h").unwrap(), Reconcile::RequeueAfter(_)));
         assert_eq!(replicas(&api), 4);
         let h = HpaView::from_object(&api.get(KIND_HPA, "h").unwrap()).unwrap();
@@ -383,7 +405,7 @@ mod tests {
         let api = ApiServer::new(Metrics::new());
         seed(&api, 2, 1000);
         api.create(HpaView::build("h", "web", 1, 3, 50, Duration::ZERO)).unwrap();
-        let ctl = hpa_ctl();
+        let ctl = hpa_ctl(&api);
         ctl.reconcile(&api, "h").unwrap();
         assert_eq!(replicas(&api), 3, "clamped at maxReplicas");
 
@@ -391,7 +413,7 @@ mod tests {
         let api = ApiServer::new(Metrics::new());
         seed(&api, 2, 1050);
         api.create(HpaView::build("h", "web", 1, 8, 100, Duration::ZERO)).unwrap();
-        hpa_ctl().reconcile(&api, "h").unwrap();
+        hpa_ctl(&api).reconcile(&api, "h").unwrap();
         assert_eq!(replicas(&api), 2, "tolerance band holds");
     }
 
@@ -408,6 +430,7 @@ mod tests {
         }
         publish_node_sample(
             api,
+            &factory(api).informer(KIND_PODMETRICS),
             "w1",
             Resources::cores(64, 256 << 30),
             &api.list(KIND_POD, &[]),
@@ -422,7 +445,7 @@ mod tests {
         let api = ApiServer::new(Metrics::new());
         seed(&api, 4, 500); // 50% of request = exactly the 50% target
         api.create(HpaView::build("h", "web", 1, 8, 50, Duration::from_secs(300))).unwrap();
-        let ctl = hpa_ctl();
+        let ctl = hpa_ctl(&api);
         ctl.reconcile(&api, "h").unwrap();
         assert_eq!(replicas(&api), 4);
         set_pod_load(&api, 100); // 10% -> wants 1
@@ -433,7 +456,7 @@ mod tests {
         let api = ApiServer::new(Metrics::new());
         seed(&api, 4, 500);
         api.create(HpaView::build("h", "web", 1, 8, 50, Duration::ZERO)).unwrap();
-        let ctl = hpa_ctl();
+        let ctl = hpa_ctl(&api);
         ctl.reconcile(&api, "h").unwrap();
         set_pod_load(&api, 100);
         // A zero window only considers recommendations from this very
@@ -456,9 +479,9 @@ mod tests {
             o.spec.insert("replicas", 4u64);
         })
         .unwrap();
-        DeploymentController.reconcile(&api, "web").unwrap();
+        DeploymentController::new(&factory(&api)).reconcile(&api, "web").unwrap();
         api.create(HpaView::build("h", "web", 1, 16, 50, Duration::ZERO)).unwrap();
-        hpa_ctl().reconcile(&api, "h").unwrap();
+        hpa_ctl(&api).reconcile(&api, "h").unwrap();
         assert_eq!(
             replicas(&api),
             4,
@@ -471,7 +494,7 @@ mod tests {
         let api = ApiServer::new(Metrics::new());
         seed(&api, 3, 0); // zero usage -> wants 0, min 2 clamps
         api.create(HpaView::build("h", "web", 2, 8, 50, Duration::ZERO)).unwrap();
-        hpa_ctl().reconcile(&api, "h").unwrap();
+        hpa_ctl(&api).reconcile(&api, "h").unwrap();
         assert_eq!(replicas(&api), 2);
 
         // No metrics at all: a fresh deployment must not be touched.
@@ -485,7 +508,7 @@ mod tests {
         .unwrap();
         api.create(HpaView::build("h", "web", 1, 8, 50, Duration::ZERO)).unwrap();
         assert!(matches!(
-            hpa_ctl().reconcile(&api, "h").unwrap(),
+            hpa_ctl(&api).reconcile(&api, "h").unwrap(),
             Reconcile::RequeueAfter(_)
         ));
         assert_eq!(replicas(&api), 3, "cold pipeline: hands off");
@@ -493,8 +516,8 @@ mod tests {
 
     #[test]
     fn deleted_hpa_reconciles_ok_and_drops_history() {
-        let ctl = hpa_ctl();
         let api = ApiServer::new(Metrics::new());
+        let ctl = hpa_ctl(&api);
         assert_eq!(ctl.reconcile(&api, "ghost").unwrap(), Reconcile::Ok);
     }
 }

@@ -27,7 +27,7 @@
 
 use crate::cluster::{Metrics, Resources};
 use crate::encoding::Value;
-use crate::kube::{ApiClient, KubeObject, ListOptions, PodPhase, PodView};
+use crate::kube::{ApiClient, Informer, KubeObject, PodPhase, PodView};
 use crate::util::Result;
 
 /// The apiVersion the metrics kinds are served under.
@@ -192,12 +192,13 @@ fn node_metrics_object(
     o
 }
 
-/// Apply an object only when the stored copy's spec differs — metrics are
+/// Apply an object only when the cached copy's spec differs — metrics are
 /// republished every kubelet sync, and an unchanged cluster must not
-/// generate a write (and watch-event) storm.
-fn apply_on_change(api: &dyn ApiClient, obj: KubeObject) {
-    match api.get(&obj.kind, &obj.meta.name) {
-        Ok(existing) if existing.spec == obj.spec => {}
+/// generate a write (and watch-event) storm. The comparison reads the
+/// shared PodMetrics/NodeMetrics cache, so suppression costs no RPC.
+fn apply_on_change(api: &dyn ApiClient, samples: &Informer, obj: KubeObject) {
+    match samples.get(&obj.meta.name) {
+        Some(existing) if existing.kind == obj.kind && existing.spec == obj.spec => {}
         _ => {
             let _ = api.apply(obj);
         }
@@ -208,16 +209,25 @@ fn apply_on_change(api: &dyn ApiClient, obj: KubeObject) {
 /// pods bound to `node`), publish `PodMetrics` for the running ones plus
 /// this node's `NodeMetrics` aggregate, delete `PodMetrics` of pods that
 /// stopped running here, and mirror the aggregate into `metrics` gauges.
+/// `samples` is the shared PodMetrics informer — existing samples are
+/// read from its cache (node-indexed), never listed.
 ///
 /// Called from [`crate::kube::Kubelet::sync_once`]; also callable
 /// directly for deterministic stepping in tests.
 pub fn publish_node_sample(
     api: &dyn ApiClient,
+    samples: &Informer,
     node: &str,
     capacity: Resources,
     pods: &[KubeObject],
     metrics: &Metrics,
 ) {
+    samples.ensure_field_index("spec.nodeName");
+    if let Err(e) = samples.sync() {
+        // Stale suppression state only risks a redundant write or a
+        // deferred reap — both converge next sync; keep publishing.
+        crate::warn!("autoscale", "PodMetrics informer sync failed: {e}");
+    }
     let mut node_cpu = 0u64;
     let mut node_mem = 0u64;
     let mut running: Vec<(String, u64, u64)> = Vec::new();
@@ -234,28 +244,47 @@ pub fn publish_node_sample(
     }
     // Reap metrics of pods that no longer run here (completed, deleted,
     // evicted, or rebound) so `kubectl top pods` never shows ghosts.
-    if let Ok(stale) = api.list(
-        KIND_PODMETRICS,
-        &ListOptions::all().with_field("spec.nodeName", node),
-    ) {
-        for m in stale.items {
-            if !running.iter().any(|(name, _, _)| name == &m.meta.name) {
-                let _ = api.delete(KIND_PODMETRICS, &m.meta.name);
-            }
+    for m in samples.list_by_field("spec.nodeName", node) {
+        if m.kind == KIND_PODMETRICS && !running.iter().any(|(name, _, _)| name == &m.meta.name)
+        {
+            let _ = api.delete(KIND_PODMETRICS, &m.meta.name);
         }
     }
     for (name, cpu, mem) in &running {
-        apply_on_change(api, pod_metrics_object(name, node, *cpu, *mem));
+        apply_on_change(api, samples, pod_metrics_object(name, node, *cpu, *mem));
     }
-    apply_on_change(api, node_metrics_object(node, node_cpu, node_mem, capacity));
+    apply_node_metrics_on_change(api, node, node_cpu, node_mem, capacity);
     metrics.set_gauge(&format!("autoscale.node.{node}.cpu_milli"), node_cpu as i64);
     metrics.set_gauge(&format!("autoscale.node.{node}.pods"), running.len() as i64);
+}
+
+/// NodeMetrics write suppression: one bounded `get` per sync (not a
+/// list); the per-pod suppression above is fully cache-backed.
+fn apply_node_metrics_on_change(
+    api: &dyn ApiClient,
+    node: &str,
+    cpu: u64,
+    mem: u64,
+    capacity: Resources,
+) {
+    let obj = node_metrics_object(node, cpu, mem, capacity);
+    match api.get(KIND_NODEMETRICS, node) {
+        Ok(existing) if existing.spec == obj.spec => {}
+        _ => {
+            let _ = api.apply(obj);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kube::{ApiServer, KIND_POD};
+
+    fn samples(api: &ApiServer) -> Informer {
+        crate::kube::SharedInformerFactory::new(api.client(), Metrics::new())
+            .informer(KIND_PODMETRICS)
+    }
 
     fn running_pod(api: &ApiServer, name: &str, cpu_req: u64, env: &[(String, String)]) {
         let mut pod = PodView::build(name, "img.sif", Resources::new(cpu_req, 1 << 20, 0), env);
@@ -288,11 +317,12 @@ mod tests {
     fn publish_writes_pod_and_node_metrics() {
         let api = ApiServer::new(Metrics::new());
         let m = Metrics::new();
+        let sm = samples(&api);
         running_pod(&api, "a", 1000, &[(CPU_LOAD_ENV.to_string(), "900".to_string())]);
         running_pod(&api, "b", 1000, &[]);
         let pods = api.list(KIND_POD, &[]);
         let cap = Resources::cores(8, 32 << 30);
-        publish_node_sample(&api, "w1", cap, &pods, &m);
+        publish_node_sample(&api, &sm, "w1", cap, &pods, &m);
 
         let pm = PodMetricsView::from_object(&api.get(KIND_PODMETRICS, "a").unwrap()).unwrap();
         assert_eq!(pm.cpu_milli, 900);
@@ -305,7 +335,7 @@ mod tests {
 
         // Unchanged resample writes nothing.
         let v = api.current_version();
-        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        publish_node_sample(&api, &sm, "w1", cap, &api.list(KIND_POD, &[]), &m);
         assert_eq!(api.current_version(), v, "steady state is write-free");
     }
 
@@ -317,9 +347,10 @@ mod tests {
         let api = ApiServer::new(Metrics::new());
         let m = Metrics::new();
         let cap = Resources::cores(8, 32 << 30);
+        let sm = samples(&api);
         api.create(crate::kube::NodeView::build("w1", cap, &[])).unwrap();
         running_pod(&api, "a", 1000, &[]);
-        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        publish_node_sample(&api, &sm, "w1", cap, &api.list(KIND_POD, &[]), &m);
         assert!(api.get(KIND_PODMETRICS, "a").is_ok());
         assert!(api.get(KIND_NODEMETRICS, "w1").is_ok());
         api.delete(KIND_POD, "a").unwrap();
@@ -335,9 +366,10 @@ mod tests {
     fn stale_pod_metrics_reaped_and_usage_repatchable() {
         let api = ApiServer::new(Metrics::new());
         let m = Metrics::new();
+        let sm = samples(&api);
         running_pod(&api, "a", 1000, &[]);
         let cap = Resources::cores(8, 32 << 30);
-        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        publish_node_sample(&api, &sm, "w1", cap, &api.list(KIND_POD, &[]), &m);
         assert!(api.get(KIND_PODMETRICS, "a").is_ok());
 
         // Live annotation patch shifts the next sample.
@@ -345,7 +377,7 @@ mod tests {
             o.meta.annotations.push((CPU_USAGE_ANNOTATION.to_string(), "123".to_string()));
         })
         .unwrap();
-        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        publish_node_sample(&api, &sm, "w1", cap, &api.list(KIND_POD, &[]), &m);
         let pm = PodMetricsView::from_object(&api.get(KIND_PODMETRICS, "a").unwrap()).unwrap();
         assert_eq!(pm.cpu_milli, 123);
 
@@ -354,7 +386,7 @@ mod tests {
             o.status.insert("phase", "Succeeded");
         })
         .unwrap();
-        publish_node_sample(&api, "w1", cap, &api.list(KIND_POD, &[]), &m);
+        publish_node_sample(&api, &sm, "w1", cap, &api.list(KIND_POD, &[]), &m);
         assert!(api.get(KIND_PODMETRICS, "a").is_err(), "ghost metrics reaped");
         let nm =
             NodeMetricsView::from_object(&api.get(KIND_NODEMETRICS, "w1").unwrap()).unwrap();

@@ -1,10 +1,11 @@
 //! Testbed assembly and lifecycle.
 
-use crate::autoscale::{CaConfig, ClusterAutoscaler, HpaController, NodeProvisioner};
+use crate::autoscale::{CaConfig, ClusterAutoscaler, HpaController, NodeProvisioner, KIND_HPA};
 use crate::cluster::{Metrics, NodeRole, NodeSpec, Resources, SharedFs};
 use crate::kube::{
     ApiClient, ApiServer, ControllerRunner, DeploymentController, KubeObject, KubeScheduler,
-    Kubelet, PodPhase, WlmJobView, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+    Kubelet, PodPhase, SharedInformerFactory, WlmJobView, KIND_DEPLOYMENT, KIND_POD,
+    KIND_SLURMJOB, KIND_TORQUEJOB,
 };
 use crate::operator::{
     self, phase, RedboxBridge, SlurmLoginService, TorqueLoginService, WlmBridge,
@@ -44,6 +45,12 @@ pub struct TestbedConfig {
     pub operator_deployment: bool,
     /// Unix socket path for red-box (default: per-pid temp path).
     pub socket: Option<PathBuf>,
+    /// Watch-history window of the API server's store (PR 4). Sized well
+    /// above the store default: every kubelet sync, admission cycle, and
+    /// autoscaler pass writes, and a burst larger than the window forces
+    /// every informer into a spurious relist — exactly the O(cluster)
+    /// cost the informer layer removes.
+    pub watch_history_cap: usize,
     /// Elastic autoscaling (PR 3): when set, kubelets already feed the
     /// metrics pipeline, and the testbed additionally runs the HPA
     /// controller plus a cluster autoscaler managing a pool of live
@@ -65,6 +72,7 @@ impl Default for TestbedConfig {
             artifacts_dir: None,
             operator_deployment: false,
             socket: None,
+            watch_history_cap: 1 << 16,
             autoscale: None,
         }
     }
@@ -74,7 +82,7 @@ impl Default for TestbedConfig {
 /// node — scale-up gives the scheduler a real node with a real container
 /// runtime behind it, and drain tears the kubelet daemon down again.
 pub struct KubeletProvisioner {
-    client: Arc<dyn ApiClient>,
+    informers: SharedInformerFactory,
     runtime: crate::singularity::Runtime,
     fs: SharedFs,
     node_capacity: Resources,
@@ -93,7 +101,7 @@ impl NodeProvisioner for KubeletProvisioner {
     fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()> {
         let cri = SingularityCri::new(self.runtime.clone());
         let kubelet = Kubelet::register(
-            self.client.clone(),
+            &self.informers,
             name,
             self.node_capacity,
             labels,
@@ -283,17 +291,26 @@ impl Testbed {
         }
 
         // ---- big-data cluster: API server + scheduler + kubelets ----
-        let api = ApiServer::new(metrics.clone());
+        // Watch-history window sized for testbed event bursts (PR 4).
+        let api = ApiServer::with_history_cap(metrics.clone(), config.watch_history_cap);
+        // Mutating admission (PR 4 satellite): pods born with a bare
+        // kueue queue-name label are gated at creation — no one-cycle
+        // race window for the scheduler.
+        api.register_mutating_hook(crate::kueue::admission_mutating_hook());
         redbox.register("kube.Api", api.rpc_service());
         // Every in-process component talks through the transport-agnostic
-        // client handle — the same trait the remote CLI uses.
+        // client handle — the same trait the remote CLI uses — and reads
+        // through the shared informer caches (PR 4): one watch stream per
+        // kind for the whole testbed, zero steady-state list RPCs.
         let client: Arc<dyn ApiClient> = api.client();
-        KubeScheduler::new(client.clone(), metrics.clone())
+        let informers = SharedInformerFactory::new(client.clone(), metrics.clone());
+        informers.start(Duration::from_millis(1), shutdown.clone());
+        KubeScheduler::new(&informers, metrics.clone())
             .start(Duration::from_millis(1), shutdown.clone());
         // Queue layer (PR 2): quota-aware gang admission. A no-op until
         // someone applies ClusterQueue/LocalQueue objects — label-less
         // workloads bypass it entirely.
-        crate::kueue::start_admission(client.clone(), metrics.clone(), shutdown.clone());
+        crate::kueue::start_admission(&informers, metrics.clone(), shutdown.clone());
         // Workers + the login node (which is also a kube worker, Fig. 1).
         let mut worker_names: Vec<String> =
             (0..config.kube_workers).map(|i| format!("kw{i:02}")).collect();
@@ -301,7 +318,7 @@ impl Testbed {
         for name in &worker_names {
             let cri = SingularityCri::new(runtime.clone());
             let kubelet = Kubelet::register(
-                client.clone(),
+                &informers,
                 name,
                 Resources::cores(config.kube_cores, 64 << 30),
                 &[],
@@ -320,7 +337,7 @@ impl Testbed {
         operator::register_virtual_nodes(&api, torque_bridge.as_ref(), "torque")?;
         let torque_op = operator::torque_operator(torque_bridge, metrics.clone());
         Arc::new(ControllerRunner::new(client.clone(), torque_op, metrics.clone()))
-            .start(shutdown.clone());
+            .start(informers.informer(KIND_TORQUEJOB), shutdown.clone());
         if slurm.is_some() {
             let slurm_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::slurm(
                 RedboxClient::connect_retry(&socket, Duration::from_secs(5))?,
@@ -328,16 +345,16 @@ impl Testbed {
             operator::register_virtual_nodes(&api, slurm_bridge.as_ref(), "slurm")?;
             let slurm_op = operator::wlm_operator(slurm_bridge, metrics.clone());
             Arc::new(ControllerRunner::new(client.clone(), slurm_op, metrics.clone()))
-                .start(shutdown.clone());
+                .start(informers.informer(KIND_SLURMJOB), shutdown.clone());
         }
         // Deployment controller (+ the operator's own service deployment,
         // "four Singularity containers … deployed by Kubernetes" §III-B).
         Arc::new(ControllerRunner::new(
             client.clone(),
-            Arc::new(DeploymentController),
+            Arc::new(DeploymentController::new(&informers)),
             metrics.clone(),
         ))
-        .start(shutdown.clone());
+        .start(informers.informer(KIND_DEPLOYMENT), shutdown.clone());
         if config.operator_deployment {
             api.create(DeploymentController::build(
                 "torque-operator",
@@ -353,12 +370,16 @@ impl Testbed {
         if let Some(ca_cfg) = config.autoscale.clone() {
             Arc::new(ControllerRunner::new(
                 client.clone(),
-                Arc::new(HpaController::new(Duration::from_millis(1), metrics.clone())),
+                Arc::new(HpaController::new(
+                    &informers,
+                    Duration::from_millis(1),
+                    metrics.clone(),
+                )),
                 metrics.clone(),
             ))
-            .start(shutdown.clone());
+            .start(informers.informer(KIND_HPA), shutdown.clone());
             let provisioner: Arc<dyn NodeProvisioner> = Arc::new(KubeletProvisioner {
-                client: client.clone(),
+                informers: informers.clone(),
                 runtime: runtime.clone(),
                 fs: fs.clone(),
                 node_capacity: ca_cfg.node_capacity,
@@ -370,7 +391,7 @@ impl Testbed {
                 )),
                 chain_started: std::sync::Once::new(),
             });
-            ClusterAutoscaler::new(client.clone(), provisioner, ca_cfg, metrics.clone())
+            ClusterAutoscaler::new(&informers, provisioner, ca_cfg, metrics.clone())
                 .start(Duration::from_millis(2), shutdown.clone());
         }
 

@@ -19,7 +19,7 @@ use crate::rt;
 use crate::util::{Error, Result};
 use std::collections::HashSet;
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Bounded attempts for retry-on-conflict loops (`update_status`, merge
@@ -33,16 +33,54 @@ pub const MAX_CONFLICT_RETRIES: u32 = 16;
 const WATCH_POLL_PERIOD: Duration = Duration::from_millis(2);
 const WATCH_POLL_IDLE_MAX: Duration = Duration::from_millis(100);
 
+/// A mutating-admission hook: runs on every object entering through the
+/// create path (both `create` and the create arm of `apply`, local or
+/// RPC), *before* the store assigns identity — the k8s mutating-webhook
+/// shape. Hooks mutate in place and cannot reject (validation stays the
+/// store's job); they must be cheap and idempotent.
+pub type MutatingHook = Arc<dyn Fn(&mut KubeObject) + Send + Sync>;
+
 /// The API server handle (cheap clone; shares the store).
 #[derive(Clone)]
 pub struct ApiServer {
     store: Store,
     metrics: Metrics,
+    hooks: Arc<Mutex<Vec<MutatingHook>>>,
 }
 
 impl ApiServer {
     pub fn new(metrics: Metrics) -> ApiServer {
-        ApiServer { store: Store::new(), metrics }
+        ApiServer { store: Store::new(), metrics, hooks: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// An API server whose store retains `cap` watch events (see
+    /// [`Store::with_history_cap`]): size it above the largest write burst
+    /// expected between watcher polls, or reflectors are forced into
+    /// spurious 410-Gone relists.
+    pub fn with_history_cap(metrics: Metrics, cap: usize) -> ApiServer {
+        ApiServer {
+            store: Store::with_history_cap(cap),
+            metrics,
+            hooks: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Register a mutating-admission hook (applied in registration order
+    /// to every object entering through the create path). Registration is
+    /// live: existing clones of this handle see the hook immediately.
+    pub fn register_mutating_hook(&self, hook: MutatingHook) {
+        self.hooks.lock().unwrap().push(hook);
+    }
+
+    fn admit_mutate(&self, obj: &mut KubeObject) {
+        let hooks = self.hooks.lock().unwrap();
+        if hooks.is_empty() {
+            return;
+        }
+        for hook in hooks.iter() {
+            hook(obj);
+        }
+        self.metrics.inc("kube.api.admission_mutations");
     }
 
     /// This server as a shared transport-agnostic client.
@@ -54,8 +92,9 @@ impl ApiServer {
         self.store.now_s()
     }
 
-    pub fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+    pub fn create(&self, mut obj: KubeObject) -> Result<KubeObject> {
         self.metrics.inc("kube.api.create");
+        self.admit_mutate(&mut obj);
         self.store.create(obj)
     }
 
@@ -220,7 +259,9 @@ impl ApiServer {
     }
 
     /// `kubectl apply`: create, or update (spec-merge) when it exists.
-    pub fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+    /// The create arm runs the mutating-admission hooks — an applied
+    /// manifest is as much an object birth as a direct create.
+    pub fn apply(&self, mut obj: KubeObject) -> Result<KubeObject> {
         match self.store.get(&obj.kind, &obj.meta.name) {
             Ok(existing) => {
                 let mut merged = existing.clone();
@@ -229,7 +270,10 @@ impl ApiServer {
                 merged.meta.annotations = obj.meta.annotations;
                 self.store.update(merged)
             }
-            Err(e) if e.is_not_found() => self.store.create(obj),
+            Err(e) if e.is_not_found() => {
+                self.admit_mutate(&mut obj);
+                self.store.create(obj)
+            }
             Err(e) => Err(e),
         }
     }
@@ -633,6 +677,45 @@ mod tests {
         assert!(err.is_conflict_exhausted(), "got {err}");
         assert!(!err.is_conflict(), "must not be mistaken for a retryable conflict");
         assert!(err.to_string().contains("16 consecutive"));
+    }
+
+    #[test]
+    fn mutating_hook_runs_on_create_and_apply_create_only() {
+        let a = api();
+        a.register_mutating_hook(Arc::new(|o: &mut KubeObject| {
+            if o.kind == KIND_POD {
+                o.meta.set_label("admitted-by", "hook");
+            }
+        }));
+        // Plain create is mutated.
+        let o = a.create(pod("p1")).unwrap();
+        assert_eq!(o.meta.label("admitted-by"), Some("hook"));
+        // Apply's create arm is mutated too...
+        let o = a.apply(pod("p2")).unwrap();
+        assert_eq!(o.meta.label("admitted-by"), Some("hook"));
+        // ...but the update arm re-applies the manifest's labels verbatim
+        // (an existing object is not re-born; re-gating live objects is
+        // the controllers' job, not admission's).
+        let o = a.apply(pod("p2")).unwrap();
+        assert_eq!(o.meta.label("admitted-by"), None, "update arm skips hooks");
+        // Non-matching kinds pass through untouched.
+        let n = a.create(KubeObject::new("Node", "n1", Value::map())).unwrap();
+        assert_eq!(n.meta.label("admitted-by"), None);
+    }
+
+    #[test]
+    fn history_cap_constructor_plumbs_through() {
+        let a = ApiServer::with_history_cap(Metrics::new(), 64);
+        a.create(pod("seed")).unwrap();
+        let bookmark = a.current_version();
+        for i in 0..100 {
+            a.update_status(KIND_POD, "seed", |o| {
+                o.status.insert("n", i as u64);
+            })
+            .unwrap();
+        }
+        let (_, _, reset) = a.events_since(None, bookmark);
+        assert!(reset, "64-event window must trim a 100-write burst");
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! trait, so the same reconcile loop runs in-process next to the store or
 //! across the red-box socket against a remote API server.
 
-use super::client::{ApiClient, ListOptions};
-use super::store::WatchEvent;
+use super::client::ApiClient;
+use super::informer::{Informer, InformerEvent};
 use crate::cluster::Metrics;
 use crate::rt::{self, Shutdown};
 use crate::util::Result;
@@ -65,83 +65,63 @@ impl ControllerRunner {
         }
     }
 
-    /// Start the watch thread + worker thread.
+    /// Start the event thread + worker thread, fed by the shared informer
+    /// for the controller's kind.
     ///
-    /// The watch thread runs the canonical list+watch loop: seed the queue
-    /// from a list, then stream events from the list's version. On any
-    /// transport failure or stream loss (remote server restart, watch
-    /// bookmark fallen out of the retained history window) it *relists and
-    /// rewatches* — reconciles are level-triggered and the queue dedupes,
-    /// so the relist is always safe. Deletions missed while the stream was
-    /// down are recovered by diffing the relist against the names
-    /// previously known to exist.
-    pub fn start(self: Arc<Self>, shutdown: Shutdown) {
+    /// The event thread never lists: the informer's subscription replays
+    /// the cached objects as `Applied` events and then streams deltas
+    /// straight into the work queue — reconciles are level-triggered and
+    /// the queue dedupes, so duplicates are free. On
+    /// [`InformerEvent::Resync`] (the reflector lost its watch stream and
+    /// relisted — events may be lost) the thread enqueues the union of
+    /// the names it believed to exist and the names now cached: a relist
+    /// cannot name deleted objects, but (known − cached) can, and
+    /// reconcile()'s NotFound branch does the cleanup.
+    pub fn start(self: Arc<Self>, informer: Informer, shutdown: Shutdown) {
         let kind = self.controller.kind().to_string();
+        debug_assert_eq!(informer.kind(), kind, "informer kind must match the controller");
         let this = self.clone();
         let sd = shutdown.clone();
         rt::spawn_named(&format!("ctrl-{kind}-watch"), move || {
-            // Names believed to exist, maintained across relists so that a
-            // deletion missed while the stream was down is still enqueued:
-            // a relist can't name deleted objects, but (known − listed)
-            // can — reconcile()'s NotFound branch does the cleanup.
+            let rx = informer.subscribe();
+            // Names believed to exist (maintained from events; reconciled
+            // against the cache on every resync).
             let mut known: HashSet<String> = HashSet::new();
-            while !sd.is_triggered() {
-                let version = match this.api.list(&kind, &ListOptions::all()) {
-                    Ok(list) => {
-                        let v = list.resource_version;
-                        let fresh: HashSet<String> =
-                            list.items.into_iter().map(|o| o.meta.name).collect();
-                        for gone in known.difference(&fresh) {
+            loop {
+                if sd.is_triggered() {
+                    return;
+                }
+                // Pump the reflector: a no-op when the factory's pump
+                // thread is running, the sole driver when it is not.
+                if let Err(e) = informer.sync() {
+                    crate::warn!("controller", "{kind} informer sync failed: {e}");
+                    if sd.wait_timeout(Duration::from_millis(100)) {
+                        return;
+                    }
+                    continue;
+                }
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(InformerEvent::Applied(o)) => {
+                        known.insert(o.meta.name.clone());
+                        this.enqueue(o.meta.name);
+                    }
+                    Ok(InformerEvent::Deleted(o)) => {
+                        known.remove(&o.meta.name);
+                        this.enqueue(o.meta.name);
+                    }
+                    Ok(InformerEvent::Resync { .. }) => {
+                        let cached: HashSet<String> = informer.names().into_iter().collect();
+                        for gone in known.difference(&cached) {
                             this.enqueue(gone.clone());
                         }
-                        for name in &fresh {
+                        for name in &cached {
                             this.enqueue(name.clone());
                         }
-                        known = fresh;
-                        v
+                        known = cached;
                     }
-                    Err(e) => {
-                        crate::warn!("controller", "{kind} seed list failed: {e}");
-                        if sd.wait_timeout(Duration::from_millis(100)) {
-                            return;
-                        }
-                        continue;
-                    }
-                };
-                let rx = match this.api.watch(Some(&kind), version) {
-                    Ok(rx) => rx,
-                    Err(e) => {
-                        crate::warn!("controller", "{kind} watch failed: {e}");
-                        if sd.wait_timeout(Duration::from_millis(100)) {
-                            return;
-                        }
-                        continue;
-                    }
-                };
-                loop {
-                    match rx.recv_timeout(Duration::from_millis(20)) {
-                        Ok(ev) => {
-                            let name = match &ev {
-                                WatchEvent::Added(o)
-                                | WatchEvent::Modified(o)
-                                | WatchEvent::Deleted(o) => o.meta.name.clone(),
-                            };
-                            if matches!(ev, WatchEvent::Deleted(_)) {
-                                known.remove(&name);
-                            } else {
-                                known.insert(name.clone());
-                            }
-                            this.enqueue(name);
-                        }
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                            if sd.is_triggered() {
-                                return;
-                            }
-                        }
-                        // Stream ended (sender dropped / remote reset):
-                        // break out to relist + rewatch.
-                        Err(_) => break,
-                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    // The reflector was dropped — nothing left to watch.
+                    Err(_) => return,
                 }
             }
         });
@@ -348,7 +328,9 @@ mod tests {
         });
         let (api, r) = runner(ctrl.clone());
         let sd = Shutdown::new();
-        r.clone().start(sd.clone());
+        let factory =
+            crate::kube::SharedInformerFactory::new(api.client(), Metrics::new());
+        r.clone().start(factory.informer("Widget"), sd.clone());
         api.create(KubeObject::new("Widget", "a", Value::map())).unwrap();
         api.create(KubeObject::new("Widget", "b", Value::map())).unwrap();
         let deadline = Instant::now() + Duration::from_secs(5);

@@ -6,15 +6,24 @@
 //! the testbed needs a working Deployment kind, not just bare pods.
 
 use super::api::{KubeObject, PodPhase, PodView, KIND_DEPLOYMENT, KIND_POD};
-use super::client::{ApiClient, ListOptions};
+use super::client::ApiClient;
 use super::controller::{Controller, Reconcile};
+use super::informer::{Informer, SharedInformerFactory};
 use crate::cluster::Resources;
 use crate::encoding::{decode_str_map, Value};
 use crate::util::Result;
 
-pub struct DeploymentController;
+pub struct DeploymentController {
+    /// Shared pod cache; the `deployment` label index serves "my pods"
+    /// without a list RPC.
+    pods: Informer,
+}
 
 impl DeploymentController {
+    pub fn new(informers: &SharedInformerFactory) -> DeploymentController {
+        DeploymentController { pods: informers.informer(KIND_POD) }
+    }
+
     /// Build a Deployment object.
     pub fn build(name: &str, replicas: u32, image: &str, requests: Resources) -> KubeObject {
         let mut req = Value::map();
@@ -70,9 +79,10 @@ impl Controller for DeploymentController {
             .unwrap_or(Resources::ZERO);
         let env = template.get("env").map(decode_str_map).unwrap_or_default();
 
-        // Current pods owned by this deployment.
-        let selector = ListOptions::all().with_label("deployment", name);
-        let mut pods = api.list(KIND_POD, &selector)?.items;
+        // Current pods owned by this deployment, off the shared cache's
+        // label index (no list RPC).
+        self.pods.sync()?;
+        let mut pods = self.pods.list_labelled("deployment", name);
         // Replace failed pods (restartPolicy: Always, distilled).
         let mut running = 0usize;
         for pod in pods.clone() {
@@ -114,10 +124,11 @@ impl Controller for DeploymentController {
                 break;
             }
         }
-        // Status.
-        let ready = api
-            .list(KIND_POD, &selector)?
-            .items
+        // Status. Re-sync so the creates/deletes above are reflected.
+        self.pods.sync()?;
+        let ready = self
+            .pods
+            .list_labelled("deployment", name)
             .iter()
             .filter_map(|p| PodView::from_object(p).ok())
             .filter(|v| matches!(v.phase, PodPhase::Running | PodPhase::Succeeded))
@@ -142,7 +153,11 @@ mod tests {
     use crate::kube::apiserver::ApiServer;
 
     fn setup() -> (ApiServer, DeploymentController) {
-        (ApiServer::new(Metrics::new()), DeploymentController)
+        let api = ApiServer::new(Metrics::new());
+        let informers =
+            crate::kube::SharedInformerFactory::new(api.client(), Metrics::new());
+        let ctrl = DeploymentController::new(&informers);
+        (api, ctrl)
     }
 
     #[test]

@@ -1,0 +1,909 @@
+//! Reflector / shared-informer layer: the machinery that lets every
+//! control loop read a local cache instead of re-listing the world.
+//!
+//! The Kubernetes control plane scales because controllers do not issue
+//! `list()` per reconcile: a **reflector** seeds a local cache with one
+//! (paged) list, then tails `watch()` events into it forever; consumers
+//! read the cache and subscribe to its event stream. This module is that
+//! pattern over the PR 1 [`ApiClient`] trait, so the same reflector runs
+//! in-process next to the store or across the red-box socket:
+//!
+//! - [`Informer`] — a shared per-kind read handle: `get`/`list`, indexed
+//!   reads ([`Informer::list_labelled`], [`Informer::list_by_field`],
+//!   [`Informer::list_owned_by`]), a zero-copy [`Informer::read`] scan,
+//!   and event subscriptions ([`Informer::subscribe`]) that replay the
+//!   current cache and then stream deltas.
+//! - [`SharedInformerFactory`] — one reflector per kind, shared by every
+//!   consumer in the process (scheduler, kubelets, controllers, kueue,
+//!   autoscalers all read the *same* pod cache), plus a pump thread
+//!   ([`SharedInformerFactory::start`]) that drains watch streams.
+//!
+//! # The 410-Gone contract
+//!
+//! A reflector whose watch stream ends (remote server restart, bookmark
+//! fallen out of the store's retained history window — the 410-Gone
+//! signal) **relists, bumps its resync epoch, and emits
+//! [`InformerEvent::Resync`]** to subscribers. Derived state keyed on
+//! individual events (the kueue ledger, a runner's known-name set) must
+//! rebuild from the cache when it observes an epoch bump, because events
+//! may have been lost in the gap. Steady state performs zero list RPCs;
+//! the relist is the explicitly-signalled exception.
+//!
+//! # Determinism
+//!
+//! [`Informer::sync`] drains pending events synchronously, so tests step
+//! `create → sync → read` without daemon threads; the factory's pump
+//! thread is only needed for event-driven daemons.
+
+use super::api::KubeObject;
+use super::client::{ApiClient, ListOptions};
+use super::store::WatchEvent;
+use crate::cluster::Metrics;
+use crate::encoding::Value;
+use crate::rt::Shutdown;
+use crate::util::Result;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Page size for the seeding list (bounds per-RPC payloads; the seed of a
+/// 100k-object kind is 200 bounded pages, not one giant response).
+pub const DEFAULT_LIST_PAGE: usize = 500;
+
+/// What subscribers receive. `Applied` covers both Added and Modified —
+/// consumers are level-triggered and treat them identically.
+#[derive(Debug, Clone)]
+pub enum InformerEvent {
+    /// Object created or modified (the current object is attached).
+    Applied(KubeObject),
+    /// Object deleted (the last-seen object is attached).
+    Deleted(KubeObject),
+    /// The reflector relisted after losing its watch stream: events may
+    /// have been lost. Rebuild event-derived state from the cache.
+    Resync { epoch: u64 },
+}
+
+impl InformerEvent {
+    /// The object the event is about (`None` for `Resync`).
+    pub fn object(&self) -> Option<&KubeObject> {
+        match self {
+            InformerEvent::Applied(o) | InformerEvent::Deleted(o) => Some(o),
+            InformerEvent::Resync { .. } => None,
+        }
+    }
+}
+
+/// The secondary indexes over one kind's cache. A separate struct so
+/// index maintenance can borrow the indexes mutably while the object map
+/// is only read — no object clones on the per-event hot path or during a
+/// relist.
+#[derive(Default)]
+struct Indexes {
+    /// (label key, value) → names.
+    by_label: HashMap<(String, String), BTreeSet<String>>,
+    /// label key (any value) → names; what lets kueue scan only labelled
+    /// workloads out of a large pod population.
+    by_label_key: HashMap<String, BTreeSet<String>>,
+    /// (registered field path, rendered value) → names.
+    by_field: HashMap<(String, String), BTreeSet<String>>,
+    /// (owner kind, owner name) → names.
+    by_owner: HashMap<(String, String), BTreeSet<String>>,
+    /// Field paths maintained in `by_field`.
+    field_paths: Vec<String>,
+}
+
+/// One event subscription. `label_key` restricts delivery to objects
+/// carrying that label key (Resync always passes) — what lets kueue
+/// ignore the unlabelled pod churn of a cluster that never opted into
+/// queueing without paying a clone per event.
+struct Subscriber {
+    tx: Sender<InformerEvent>,
+    label_key: Option<String>,
+}
+
+struct CacheState {
+    objects: BTreeMap<String, KubeObject>,
+    indexes: Indexes,
+    /// Store version the cache has caught up to (watch bookmark).
+    version: u64,
+    /// Bumped on every post-seed relist (the 410 recovery).
+    epoch: u64,
+    seeded: bool,
+    rx: Option<Receiver<WatchEvent>>,
+    subs: Vec<Subscriber>,
+    /// Payload-free wake-up channels ([`Informer::subscribe_notify`]) —
+    /// pinged on every event without cloning any object.
+    notifiers: Vec<Sender<()>>,
+}
+
+/// Rendered value of a field path for indexing — same comparison contract
+/// as [`ListOptions`] field selectors (strings verbatim, other scalars by
+/// their compact-JSON rendering). Only `spec.*` / `status.*` roots are
+/// indexable; everything else falls back to the scan path.
+fn field_value(obj: &KubeObject, path: &str) -> Option<String> {
+    let (root, rest) = path.split_once('.').unwrap_or((path, ""));
+    let tree = match root {
+        "spec" => &obj.spec,
+        "status" => &obj.status,
+        _ => return None,
+    };
+    let v = if rest.is_empty() {
+        Some(tree)
+    } else {
+        let parts: Vec<&str> = rest.split('.').collect();
+        tree.path(&parts)
+    }?;
+    Some(match v {
+        Value::Str(s) => s.clone(),
+        other => other.to_string(),
+    })
+}
+
+impl Indexes {
+    fn insert(&mut self, obj: &KubeObject) {
+        let name = obj.meta.name.clone();
+        for (k, v) in &obj.meta.labels {
+            self.by_label.entry((k.clone(), v.clone())).or_default().insert(name.clone());
+            self.by_label_key.entry(k.clone()).or_default().insert(name.clone());
+        }
+        for path in &self.field_paths {
+            if let Some(val) = field_value(obj, path) {
+                self.by_field.entry((path.clone(), val)).or_default().insert(name.clone());
+            }
+        }
+        if let Some((k, n)) = &obj.meta.owner {
+            self.by_owner.entry((k.clone(), n.clone())).or_default().insert(name);
+        }
+    }
+
+    fn remove(&mut self, obj: &KubeObject) {
+        let name = obj.meta.name.as_str();
+        for (k, v) in &obj.meta.labels {
+            prune(&mut self.by_label, &(k.clone(), v.clone()), name);
+            prune(&mut self.by_label_key, k, name);
+        }
+        for path in &self.field_paths {
+            if let Some(val) = field_value(obj, path) {
+                prune(&mut self.by_field, &(path.clone(), val), name);
+            }
+        }
+        if let Some(owner) = &obj.meta.owner {
+            prune(&mut self.by_owner, owner, name);
+        }
+    }
+
+    /// Rebuild from scratch over the (separately borrowed) object map —
+    /// relists reindex without cloning a single object.
+    fn rebuild(&mut self, objects: &BTreeMap<String, KubeObject>) {
+        self.by_label.clear();
+        self.by_label_key.clear();
+        self.by_field.clear();
+        self.by_owner.clear();
+        for o in objects.values() {
+            self.insert(o);
+        }
+    }
+}
+
+fn prune<K: std::hash::Hash + Eq + Clone>(
+    index: &mut HashMap<K, BTreeSet<String>>,
+    key: &K,
+    name: &str,
+) {
+    if let Some(set) = index.get_mut(key) {
+        set.remove(name);
+        if set.is_empty() {
+            index.remove(key);
+        }
+    }
+}
+
+fn forward(st: &mut CacheState, ev: &InformerEvent) {
+    st.subs.retain(|s| {
+        let wanted = match (&s.label_key, ev.object()) {
+            (Some(key), Some(o)) => o.meta.labels.iter().any(|(k, _)| k == key),
+            // Resync always delivers; unfiltered subscribers take all.
+            _ => true,
+        };
+        !wanted || s.tx.send(ev.clone()).is_ok()
+    });
+    st.notifiers.retain(|tx| tx.send(()).is_ok());
+}
+
+fn apply_event(st: &mut CacheState, ev: WatchEvent) {
+    match ev {
+        WatchEvent::Added(o) | WatchEvent::Modified(o) => {
+            if let Some(old) = st.objects.get(&o.meta.name) {
+                st.indexes.remove(old);
+            }
+            st.version = st.version.max(o.meta.resource_version);
+            st.indexes.insert(&o);
+            st.objects.insert(o.meta.name.clone(), o.clone());
+            forward(st, &InformerEvent::Applied(o));
+        }
+        WatchEvent::Deleted(o) => {
+            if let Some(old) = st.objects.remove(&o.meta.name) {
+                st.indexes.remove(&old);
+            }
+            forward(st, &InformerEvent::Deleted(o));
+        }
+    }
+}
+
+/// One kind's reflector + cache. Shared through [`Informer`] handles; use
+/// [`SharedInformerFactory`] to get one per kind.
+pub struct Reflector {
+    client: Arc<dyn ApiClient>,
+    kind: String,
+    page: usize,
+    metrics: Metrics,
+    state: Mutex<CacheState>,
+}
+
+impl Reflector {
+    fn new(client: Arc<dyn ApiClient>, kind: &str, page: usize, metrics: Metrics) -> Reflector {
+        Reflector {
+            client,
+            kind: kind.to_string(),
+            page: page.max(1),
+            metrics,
+            state: Mutex::new(CacheState {
+                objects: BTreeMap::new(),
+                indexes: Indexes::default(),
+                version: 0,
+                epoch: 0,
+                seeded: false,
+                rx: None,
+                subs: Vec::new(),
+                notifiers: Vec::new(),
+            }),
+        }
+    }
+
+    /// Seed (paged list + watch) or re-seed the cache. The watch starts
+    /// from the *first* page's version so every event racing the
+    /// pagination is replayed afterwards — duplicates upsert idempotently,
+    /// and a burst that outruns the history window mid-seed simply ends
+    /// the new stream, which the next sync recovers from.
+    fn relist(&self, st: &mut CacheState) -> Result<()> {
+        let mut objects: BTreeMap<String, KubeObject> = BTreeMap::new();
+        let mut opts = ListOptions::all().with_limit(self.page);
+        let mut bookmark = None;
+        loop {
+            let page = self.client.list(&self.kind, &opts)?;
+            bookmark.get_or_insert(page.resource_version);
+            for o in page.items {
+                objects.insert(o.meta.name.clone(), o);
+            }
+            match page.continue_token {
+                Some(t) => opts = ListOptions::all().with_limit(self.page).continue_from(&t),
+                None => break,
+            }
+        }
+        let version = bookmark.unwrap_or(0);
+        let rx = self.client.watch(Some(&self.kind), version)?;
+        let was_seeded = st.seeded;
+        st.objects = objects;
+        {
+            // Split borrow: reindex over the object map without cloning.
+            let CacheState { objects: cached, indexes, .. } = &mut *st;
+            indexes.rebuild(cached);
+        }
+        st.version = version;
+        st.rx = Some(rx);
+        st.seeded = true;
+        self.metrics.inc("kube.informer.lists");
+        if was_seeded {
+            // 410 recovery: events may be lost — tell subscribers to
+            // rebuild derived state from the cache.
+            st.epoch += 1;
+            self.metrics.inc("kube.informer.resyncs");
+            let epoch = st.epoch;
+            forward(st, &InformerEvent::Resync { epoch });
+        } else if !st.subs.is_empty() {
+            // Initial seed: subscribers that registered before the seed
+            // see every existing object exactly once, like a replay.
+            // Skipped entirely when nobody is listening — a seed must not
+            // pay an O(objects) clone for an empty audience.
+            let objs: Vec<KubeObject> = st.objects.values().cloned().collect();
+            for o in objs {
+                forward(st, &InformerEvent::Applied(o));
+            }
+        } else if !st.objects.is_empty() {
+            // Wake notify-only listeners once for the whole seed.
+            st.notifiers.retain(|tx| tx.send(()).is_ok());
+        }
+        Ok(())
+    }
+
+    fn sync(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if !st.seeded || st.rx.is_none() {
+            self.relist(&mut st)?;
+        }
+        loop {
+            let next = match &st.rx {
+                Some(rx) => rx.try_recv(),
+                None => break,
+            };
+            match next {
+                Ok(ev) => {
+                    self.metrics.inc("kube.informer.events");
+                    apply_event(&mut st, ev);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // Stream lost: remote restart, or the bookmark fell
+                    // out of the retained history window (410 Gone).
+                    st.rx = None;
+                    self.relist(&mut st)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A shared per-kind read handle over a [`Reflector`]. Cheap to clone;
+/// all clones (and all handles from the same factory) share one cache.
+#[derive(Clone)]
+pub struct Informer {
+    inner: Arc<Reflector>,
+}
+
+impl Informer {
+    /// A standalone informer (its own reflector). Prefer
+    /// [`SharedInformerFactory::informer`] so consumers share caches.
+    pub fn standalone(client: Arc<dyn ApiClient>, kind: &str, metrics: Metrics) -> Informer {
+        Informer { inner: Arc::new(Reflector::new(client, kind, DEFAULT_LIST_PAGE, metrics)) }
+    }
+
+    pub fn kind(&self) -> &str {
+        &self.inner.kind
+    }
+
+    /// Drain pending watch events into the cache (seeding first if
+    /// needed). Synchronous and idempotent: the deterministic-stepping
+    /// entry point, also called by the factory pump thread. On transport
+    /// failure the cache keeps its last-good state and the error
+    /// propagates; the next sync retries.
+    pub fn sync(&self) -> Result<()> {
+        self.inner.sync()
+    }
+
+    /// Cached object by name.
+    pub fn get(&self, name: &str) -> Option<KubeObject> {
+        self.inner.state.lock().unwrap().objects.get(name).cloned()
+    }
+
+    /// All cached objects (cloned). For hot paths prefer
+    /// [`Informer::read`] (no clones) or an indexed read.
+    pub fn list(&self) -> Vec<KubeObject> {
+        self.inner.state.lock().unwrap().objects.values().cloned().collect()
+    }
+
+    /// Cached names (the runner's resync diff primitive).
+    pub fn names(&self) -> Vec<String> {
+        self.inner.state.lock().unwrap().objects.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Objects carrying `key=value` (label index).
+    pub fn list_labelled(&self, key: &str, value: &str) -> Vec<KubeObject> {
+        let st = self.inner.state.lock().unwrap();
+        st.indexes
+            .by_label
+            .get(&(key.to_string(), value.to_string()))
+            .map(|names| names.iter().filter_map(|n| st.objects.get(n).cloned()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Objects carrying the label `key` with any value (what lets kueue
+    /// scan only queue-labelled workloads).
+    pub fn list_with_label_key(&self, key: &str) -> Vec<KubeObject> {
+        let st = self.inner.state.lock().unwrap();
+        st.indexes
+            .by_label_key
+            .get(key)
+            .map(|names| names.iter().filter_map(|n| st.objects.get(n).cloned()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Objects owned by (kind, name) — the ownership index the cascade
+    /// walks server-side, available client-side for free.
+    pub fn list_owned_by(&self, kind: &str, name: &str) -> Vec<KubeObject> {
+        let st = self.inner.state.lock().unwrap();
+        st.indexes
+            .by_owner
+            .get(&(kind.to_string(), name.to_string()))
+            .map(|names| names.iter().filter_map(|n| st.objects.get(n).cloned()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Register a field path (e.g. `spec.nodeName`) for O(matching) reads
+    /// through [`Informer::list_by_field`]. Idempotent; reindexes the
+    /// current cache.
+    pub fn ensure_field_index(&self, path: &str) {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.indexes.field_paths.iter().any(|p| p == path) {
+            return;
+        }
+        st.indexes.field_paths.push(path.to_string());
+        let CacheState { objects, indexes, .. } = &mut *st;
+        for o in objects.values() {
+            if let Some(val) = field_value(o, path) {
+                indexes
+                    .by_field
+                    .entry((path.to_string(), val))
+                    .or_default()
+                    .insert(o.meta.name.clone());
+            }
+        }
+    }
+
+    /// Objects whose `path` renders to `value`. Indexed when the path was
+    /// registered via [`Informer::ensure_field_index`]; otherwise a cache
+    /// scan with full [`ListOptions`] field-selector semantics (correct,
+    /// just not O(matching)).
+    pub fn list_by_field(&self, path: &str, value: &str) -> Vec<KubeObject> {
+        let st = self.inner.state.lock().unwrap();
+        if st.indexes.field_paths.iter().any(|p| p == path) {
+            return st
+                .indexes
+                .by_field
+                .get(&(path.to_string(), value.to_string()))
+                .map(|names| names.iter().filter_map(|n| st.objects.get(n).cloned()).collect())
+                .unwrap_or_default();
+        }
+        let opts = ListOptions::all().with_field(path, value);
+        st.objects.values().filter(|o| opts.matches_fields(o)).cloned().collect()
+    }
+
+    /// Zero-copy scan: run `f` over the cached name→object map under the
+    /// cache lock. `f` must not call back into this informer or block —
+    /// decode what you need and return owned data.
+    pub fn read<R>(&self, f: impl FnOnce(&BTreeMap<String, KubeObject>) -> R) -> R {
+        let st = self.inner.state.lock().unwrap();
+        f(&st.objects)
+    }
+
+    /// Subscribe to cache deltas. The current cache is replayed as
+    /// `Applied` events first (so a late subscriber misses nothing), then
+    /// live events stream as they are drained by [`Informer::sync`].
+    pub fn subscribe(&self) -> Receiver<InformerEvent> {
+        let (tx, rx) = channel();
+        self.subscribe_with(tx);
+        rx
+    }
+
+    /// Like [`Informer::subscribe`] but feeding a caller-supplied sender —
+    /// what lets one consumer multiplex several kinds' events into a
+    /// single channel.
+    pub fn subscribe_with(&self, tx: Sender<InformerEvent>) {
+        let mut st = self.inner.state.lock().unwrap();
+        for o in st.objects.values() {
+            let _ = tx.send(InformerEvent::Applied(o.clone()));
+        }
+        st.subs.push(Subscriber { tx, label_key: None });
+    }
+
+    /// Subscription restricted to objects carrying `label_key` (replay
+    /// and deltas alike; `Resync` always delivers). The cheap way to
+    /// watch a labelled subset of a high-churn kind: unlabelled events
+    /// are dropped inside the reflector, before any clone. Caveat: an
+    /// object whose key is *removed* stops flowing — derived state that
+    /// must observe label removal should rely on the Resync/rebuild path
+    /// (or subscribe unfiltered).
+    pub fn subscribe_with_label_key(&self, tx: Sender<InformerEvent>, label_key: &str) {
+        let mut st = self.inner.state.lock().unwrap();
+        for o in st.objects.values() {
+            if o.meta.labels.iter().any(|(k, _)| k == label_key) {
+                let _ = tx.send(InformerEvent::Applied(o.clone()));
+            }
+        }
+        st.subs.push(Subscriber { tx, label_key: Some(label_key.to_string()) });
+    }
+
+    /// Payload-free wake-up subscription: one `()` per cache event (and
+    /// one when an initial seed lands), never an object clone — for
+    /// consumers that treat events purely as "run a cycle now" signals
+    /// (the scheduler). An existing non-empty cache pings once at
+    /// registration so a late subscriber doesn't sleep through state it
+    /// has never examined.
+    pub fn subscribe_notify(&self, tx: Sender<()>) {
+        let mut st = self.inner.state.lock().unwrap();
+        if !st.objects.is_empty() {
+            let _ = tx.send(());
+        }
+        st.notifiers.push(tx);
+    }
+
+    /// Resync epoch: bumped every time the reflector relisted after
+    /// losing its stream. Event-derived state must rebuild when this
+    /// moves.
+    pub fn epoch(&self) -> u64 {
+        self.inner.state.lock().unwrap().epoch
+    }
+
+    /// Store version the cache has caught up to.
+    pub fn resource_version(&self) -> u64 {
+        self.inner.state.lock().unwrap().version
+    }
+}
+
+struct FactoryInner {
+    client: Arc<dyn ApiClient>,
+    metrics: Metrics,
+    page: usize,
+    reflectors: Mutex<BTreeMap<String, Arc<Reflector>>>,
+}
+
+/// Hands out one shared [`Informer`] per kind. Every consumer built from
+/// the same factory reads the same cache — one watch stream per kind for
+/// the whole process, however many control loops consume it.
+#[derive(Clone)]
+pub struct SharedInformerFactory {
+    inner: Arc<FactoryInner>,
+}
+
+impl SharedInformerFactory {
+    pub fn new(client: Arc<dyn ApiClient>, metrics: Metrics) -> SharedInformerFactory {
+        Self::with_page_size(client, metrics, DEFAULT_LIST_PAGE)
+    }
+
+    pub fn with_page_size(
+        client: Arc<dyn ApiClient>,
+        metrics: Metrics,
+        page: usize,
+    ) -> SharedInformerFactory {
+        SharedInformerFactory {
+            inner: Arc::new(FactoryInner {
+                client,
+                metrics,
+                page,
+                reflectors: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    /// The transport handle consumers write through (informers are the
+    /// read path; create/update/delete still go to the API).
+    pub fn client(&self) -> Arc<dyn ApiClient> {
+        self.inner.client.clone()
+    }
+
+    /// The shared informer for `kind` (created lazily, seeded on first
+    /// sync).
+    pub fn informer(&self, kind: &str) -> Informer {
+        let mut reflectors = self.inner.reflectors.lock().unwrap();
+        let r = reflectors.entry(kind.to_string()).or_insert_with(|| {
+            Arc::new(Reflector::new(
+                self.inner.client.clone(),
+                kind,
+                self.inner.page,
+                self.inner.metrics.clone(),
+            ))
+        });
+        Informer { inner: r.clone() }
+    }
+
+    /// Sync every registered informer once (deterministic stepping).
+    /// Transport errors are logged, not propagated — each reflector keeps
+    /// its last-good cache and retries next round.
+    pub fn sync_all(&self) {
+        let reflectors: Vec<Arc<Reflector>> =
+            self.inner.reflectors.lock().unwrap().values().cloned().collect();
+        for r in reflectors {
+            if let Err(e) = r.sync() {
+                crate::warn!("informer", "{} sync failed: {e}", r.kind);
+            }
+        }
+    }
+
+    /// Start the pump: one thread draining every reflector's watch stream
+    /// each `period`, which is what pushes events to subscribers while
+    /// daemons block on their subscription channels.
+    pub fn start(&self, period: Duration, shutdown: Shutdown) {
+        let this = self.clone();
+        crate::rt::spawn_named("kube-informers", move || loop {
+            if shutdown.wait_timeout(period) {
+                return;
+            }
+            this.sync_all();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resources;
+    use crate::kube::api::{NodeView, PodView, KIND_NODE, KIND_POD};
+    use crate::kube::apiserver::ApiServer;
+    use crate::kube::client::ObjectList;
+
+    fn api() -> ApiServer {
+        ApiServer::new(Metrics::new())
+    }
+
+    fn pod(name: &str) -> KubeObject {
+        PodView::build(name, "img.sif", Resources::new(100, 1 << 20, 0), &[])
+    }
+
+    #[test]
+    fn seeds_then_tails_watch() {
+        let a = api();
+        a.create(pod("a")).unwrap();
+        a.create(pod("b")).unwrap();
+        let factory = SharedInformerFactory::new(a.client(), Metrics::new());
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+        assert_eq!(pods.len(), 2);
+        // Tail: create/update/delete flow in on sync, no relist.
+        a.create(pod("c")).unwrap();
+        a.update_status(KIND_POD, "a", |o| o.status.insert("phase", "Running")).unwrap();
+        a.delete(KIND_POD, "b").unwrap();
+        pods.sync().unwrap();
+        assert_eq!(pods.len(), 2);
+        assert!(pods.get("b").is_none());
+        assert_eq!(pods.get("a").unwrap().status.opt_str("phase"), Some("Running"));
+        assert_eq!(pods.epoch(), 0, "no stream loss, no resync");
+    }
+
+    #[test]
+    fn paged_seed_covers_everything() {
+        let a = api();
+        for i in 0..10 {
+            a.create(pod(&format!("p{i}"))).unwrap();
+        }
+        let factory = SharedInformerFactory::with_page_size(a.client(), Metrics::new(), 3);
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+        assert_eq!(pods.len(), 10, "4 pages of 3 cover all 10");
+    }
+
+    #[test]
+    fn indexes_label_field_owner() {
+        let a = api();
+        let mut p = pod("web-0");
+        p.meta.set_label("deployment", "web");
+        p.meta.owner = Some(("Deployment".to_string(), "web".to_string()));
+        p.spec.insert("nodeName", "w1");
+        a.create(p).unwrap();
+        a.create(pod("lone")).unwrap();
+
+        let factory = SharedInformerFactory::new(a.client(), Metrics::new());
+        let pods = factory.informer(KIND_POD);
+        pods.ensure_field_index("spec.nodeName");
+        pods.sync().unwrap();
+
+        assert_eq!(pods.list_labelled("deployment", "web").len(), 1);
+        assert_eq!(pods.list_with_label_key("deployment").len(), 1);
+        assert_eq!(pods.list_owned_by("Deployment", "web").len(), 1);
+        assert_eq!(pods.list_by_field("spec.nodeName", "w1").len(), 1);
+        assert!(pods.list_by_field("spec.nodeName", "w2").is_empty());
+        // Unindexed path falls back to a correct scan.
+        assert_eq!(pods.list_by_field("status.phase", "Pending").len(), 2);
+
+        // Rebind: the field index follows the mutation.
+        a.update_status(KIND_POD, "web-0", |o| o.spec.insert("nodeName", "w2")).unwrap();
+        pods.sync().unwrap();
+        assert!(pods.list_by_field("spec.nodeName", "w1").is_empty());
+        assert_eq!(pods.list_by_field("spec.nodeName", "w2").len(), 1);
+        // Delete: every index forgets the object.
+        a.delete(KIND_POD, "web-0").unwrap();
+        pods.sync().unwrap();
+        assert!(pods.list_labelled("deployment", "web").is_empty());
+        assert!(pods.list_owned_by("Deployment", "web").is_empty());
+        assert!(pods.list_by_field("spec.nodeName", "w2").is_empty());
+    }
+
+    #[test]
+    fn subscription_replays_then_streams() {
+        let a = api();
+        a.create(pod("pre")).unwrap();
+        let factory = SharedInformerFactory::new(a.client(), Metrics::new());
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+        let rx = pods.subscribe();
+        // Replay of the existing cache.
+        match rx.try_recv().unwrap() {
+            InformerEvent::Applied(o) => assert_eq!(o.meta.name, "pre"),
+            other => panic!("expected replay, got {other:?}"),
+        }
+        // Live events.
+        a.create(pod("live")).unwrap();
+        a.delete(KIND_POD, "live").unwrap();
+        pods.sync().unwrap();
+        let evs: Vec<InformerEvent> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(&evs[0], InformerEvent::Applied(o) if o.meta.name == "live"));
+        assert!(matches!(&evs[1], InformerEvent::Deleted(o) if o.meta.name == "live"));
+    }
+
+    #[test]
+    fn filtered_and_notify_subscriptions() {
+        let a = api();
+        let mut labelled = pod("queued");
+        labelled.meta.set_label("kueue.x-k8s.io/queue-name", "team");
+        a.create(labelled).unwrap();
+        a.create(pod("plain")).unwrap();
+        let factory = SharedInformerFactory::new(a.client(), Metrics::new());
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+
+        // Label-key filter: replay and deltas only for labelled objects.
+        let (tx, rx) = channel();
+        pods.subscribe_with_label_key(tx, "kueue.x-k8s.io/queue-name");
+        let replay: Vec<InformerEvent> = rx.try_iter().collect();
+        assert_eq!(replay.len(), 1, "only the labelled pod replays");
+        a.create(pod("plain2")).unwrap();
+        let mut labelled2 = pod("queued2");
+        labelled2.meta.set_label("kueue.x-k8s.io/queue-name", "team");
+        a.create(labelled2).unwrap();
+        pods.sync().unwrap();
+        let evs: Vec<InformerEvent> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 1, "unlabelled churn is dropped pre-clone");
+        assert_eq!(evs[0].object().unwrap().meta.name, "queued2");
+
+        // Notify-only: one () per event, one at registration (cache
+        // non-empty), never an object.
+        let (ntx, nrx) = channel();
+        pods.subscribe_notify(ntx);
+        assert!(nrx.try_recv().is_ok(), "non-empty cache pings at registration");
+        a.create(pod("another")).unwrap();
+        pods.sync().unwrap();
+        assert!(nrx.try_recv().is_ok(), "events ping the notifier");
+        assert!(nrx.try_recv().is_err(), "exactly one ping per event");
+    }
+
+    #[test]
+    fn factory_shares_one_cache_per_kind() {
+        let a = api();
+        a.create(pod("p")).unwrap();
+        let factory = SharedInformerFactory::new(a.client(), Metrics::new());
+        let h1 = factory.informer(KIND_POD);
+        let h2 = factory.informer(KIND_POD);
+        h1.sync().unwrap();
+        // h2 sees h1's sync: same reflector underneath.
+        assert_eq!(h2.len(), 1);
+        a.create(NodeView::build("n", Resources::cores(1, 1 << 30), &[])).unwrap();
+        let nodes = factory.informer(KIND_NODE);
+        nodes.sync().unwrap();
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(h2.len(), 1, "kinds are isolated");
+    }
+
+    /// An ApiClient wrapper whose watch streams can be severed on demand
+    /// — the deterministic stand-in for a remote server restart or a
+    /// bookmark falling out of the history window.
+    struct KillableApi {
+        api: ApiServer,
+        taps: Mutex<Vec<Shutdown>>,
+    }
+
+    impl KillableApi {
+        fn kill_streams(&self) {
+            for sd in self.taps.lock().unwrap().drain(..) {
+                sd.trigger();
+            }
+        }
+    }
+
+    impl ApiClient for KillableApi {
+        fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+            self.api.create(obj)
+        }
+        fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+            self.api.get(kind, name)
+        }
+        fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+            ApiServer::update(&self.api, obj)
+        }
+        fn update_status(
+            &self,
+            kind: &str,
+            name: &str,
+            f: &dyn Fn(&mut KubeObject),
+        ) -> Result<KubeObject> {
+            self.api.update_status(kind, name, f)
+        }
+        fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+            self.api.patch_merge(kind, name, patch)
+        }
+        fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+            self.api.delete(kind, name)
+        }
+        fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+            self.api.apply(obj)
+        }
+        fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+            self.api.list_opts(kind, opts)
+        }
+        fn watch(&self, kind: Option<&str>, from: u64) -> Result<Receiver<WatchEvent>> {
+            let upstream = ApiServer::watch(&self.api, kind, from);
+            let (tx, rx) = channel();
+            let sd = Shutdown::new();
+            self.taps.lock().unwrap().push(sd.clone());
+            crate::rt::spawn_named("killable-watch", move || loop {
+                if sd.is_triggered() {
+                    return; // drops tx: stream severed
+                }
+                match upstream.recv_timeout(Duration::from_millis(1)) {
+                    Ok(ev) => {
+                        if tx.send(ev).is_err() {
+                            return;
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(_) => return,
+                }
+            });
+            Ok(rx)
+        }
+        fn server_time_s(&self) -> Result<f64> {
+            Ok(self.api.now_s())
+        }
+    }
+
+    #[test]
+    fn stream_loss_relists_and_bumps_epoch() {
+        let killable = Arc::new(KillableApi { api: api(), taps: Mutex::new(Vec::new()) });
+        killable.api.create(pod("before")).unwrap();
+        let factory =
+            SharedInformerFactory::new(killable.clone() as Arc<dyn ApiClient>, Metrics::new());
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+        let rx = pods.subscribe();
+        let _ = rx.try_iter().count(); // drain the replay
+        assert_eq!(pods.epoch(), 0);
+
+        // Sever the stream, then change the world while the informer is
+        // blind: one delete, one create.
+        killable.kill_streams();
+        killable.api.delete(KIND_POD, "before").unwrap();
+        killable.api.create(pod("after")).unwrap();
+        // Give the severed forwarder a beat to drop its sender.
+        std::thread::sleep(Duration::from_millis(10));
+
+        pods.sync().unwrap();
+        assert_eq!(pods.epoch(), 1, "relist bumps the resync epoch");
+        assert!(pods.get("before").is_none(), "missed delete recovered by relist");
+        assert!(pods.get("after").is_some(), "missed create recovered by relist");
+        let evs: Vec<InformerEvent> = rx.try_iter().collect();
+        assert!(
+            evs.iter().any(|e| matches!(e, InformerEvent::Resync { epoch: 1 })),
+            "subscribers told to rebuild: {evs:?}"
+        );
+        // The fresh stream tails normally again.
+        killable.api.create(pod("later")).unwrap();
+        pods.sync().unwrap();
+        assert!(pods.get("later").is_some());
+        assert_eq!(pods.epoch(), 1, "healthy stream does not resync");
+    }
+
+    #[test]
+    fn read_scans_without_cloning() {
+        let a = api();
+        for i in 0..5 {
+            a.create(pod(&format!("p{i}"))).unwrap();
+        }
+        let factory = SharedInformerFactory::new(a.client(), Metrics::new());
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+        let pending = pods.read(|objs| {
+            objs.values()
+                .filter(|o| o.status.opt_str("phase").unwrap_or("Pending") == "Pending")
+                .count()
+        });
+        assert_eq!(pending, 5);
+    }
+}

@@ -6,7 +6,8 @@
 //! the API server.
 
 use super::api::{NodeView, PodPhase, PodView, KIND_NODE, KIND_POD};
-use super::client::{ApiClient, ListOptions};
+use super::client::ApiClient;
+use super::informer::{Informer, SharedInformerFactory};
 use crate::cluster::{Metrics, Resources, SharedFs};
 use crate::rt::{self, Shutdown};
 use crate::singularity::{ContainerId, ContainerSpec, ContainerStatus, Cri};
@@ -17,6 +18,11 @@ use std::time::Duration;
 
 pub struct Kubelet<C: Cri> {
     api: Arc<dyn ApiClient>,
+    /// Shared pod cache, read through the `spec.nodeName` index — the
+    /// kubelet never lists; it sees exactly its node's pods.
+    pods: Informer,
+    /// Shared PodMetrics cache for write-suppressed sample publishing.
+    podmetrics: Informer,
     node_name: String,
     capacity: Resources,
     cri: C,
@@ -33,9 +39,11 @@ pub struct Kubelet<C: Cri> {
 }
 
 impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
-    /// Register the Node object and return the kubelet.
+    /// Register the Node object and return the kubelet. Reads (this
+    /// node's pods, metrics samples) come from the factory's shared
+    /// caches; writes go through the factory's client.
     pub fn register(
-        api: Arc<dyn ApiClient>,
+        informers: &SharedInformerFactory,
         node_name: &str,
         capacity: Resources,
         labels: &[(&str, &str)],
@@ -44,6 +52,11 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
         time_scale: f64,
         metrics: Metrics,
     ) -> Result<Kubelet<C>> {
+        let api = informers.client();
+        let pods = informers.informer(KIND_POD);
+        pods.ensure_field_index("spec.nodeName");
+        let podmetrics = informers.informer(crate::autoscale::KIND_PODMETRICS);
+        podmetrics.ensure_field_index("spec.nodeName");
         let mut node = NodeView::build(node_name, capacity, &[]);
         for (k, v) in labels {
             node.meta.set_label(k, v);
@@ -52,6 +65,8 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
         api.create(node)?;
         Ok(Kubelet {
             api,
+            pods,
+            podmetrics,
             node_name: node_name.to_string(),
             capacity,
             cri,
@@ -82,19 +97,17 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
     pub fn sync_once(&self) -> (usize, usize) {
         let mut started = 0;
         let mut completed = 0;
-        // Field selector: only pods bound to this node — the server (local
-        // or remote) filters, the kubelet never sees the rest.
-        let opts = ListOptions::all().with_field("spec.nodeName", &self.node_name);
-        let pods = match self.api.list(KIND_POD, &opts) {
-            Ok(list) => list,
-            Err(e) => {
-                // A broken transport must not masquerade as an idle node.
-                self.metrics.inc("kubelet.list_errors");
-                crate::warn!("kubelet", "{}: pod list failed: {e}", self.node_name);
-                return (0, 0);
-            }
-        };
-        for obj in &pods.items {
+        // Node-indexed cache read: only pods bound to this node, straight
+        // off the shared informer's `spec.nodeName` index — no list RPC,
+        // and the kubelet never sees the rest of the cluster.
+        if let Err(e) = self.pods.sync() {
+            // A broken transport must not masquerade as an idle node.
+            self.metrics.inc("kubelet.list_errors");
+            crate::warn!("kubelet", "{}: pod informer sync failed: {e}", self.node_name);
+            return (0, 0);
+        }
+        let bound = self.pods.list_by_field("spec.nodeName", &self.node_name);
+        for obj in &bound {
             let Ok(view) = PodView::from_object(obj) else { continue };
             let pod_name = view.name.clone();
             let has_container = self.running.lock().unwrap().contains_key(&pod_name);
@@ -190,17 +203,19 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
             }
         }
         // Reap containers whose pods were deleted out from under us
-        // (NotFound) or are no longer bound to this node — an evicted
-        // (queue-layer preemption) or rebound pod must not leave a zombie
-        // container running off the scheduler's books. A transport error
-        // must not read as "stop every container on the node".
+        // (absent from the cache) or are no longer bound to this node —
+        // an evicted (queue-layer preemption) or rebound pod must not
+        // leave a zombie container running off the scheduler's books. The
+        // cache is authoritative here: a sync failure returned above, so
+        // a transport error can never read as "stop every container on
+        // the node".
         let dangling: Vec<(String, ContainerId)> = {
             let running = self.running.lock().unwrap();
             running
                 .iter()
-                .filter(|(pod, _)| match self.api.get(KIND_POD, pod) {
-                    Err(e) => e.is_not_found(),
-                    Ok(o) => o.spec.opt_str("nodeName") != Some(self.node_name.as_str()),
+                .filter(|(pod, _)| match self.pods.get(pod) {
+                    None => true,
+                    Some(o) => o.spec.opt_str("nodeName") != Some(self.node_name.as_str()),
                 })
                 .map(|(p, (id, _))| (p.clone(), *id))
                 .collect()
@@ -217,15 +232,15 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
         }
         // Metrics pipeline (autoscale layer): sample this node's pods and
         // publish NodeMetrics/PodMetrics — write-free when nothing
-        // changed, so the per-sync cost on a quiet node is one list + a
-        // few gets. The pod list used for reconciliation is reused; a
-        // phase written above is observed one sync later, the usual
-        // level-triggered lag.
+        // changed, and read-free too: both the pod view and the existing
+        // samples come from shared caches. A phase written above is
+        // observed one sync later, the usual level-triggered lag.
         crate::autoscale::publish_node_sample(
             self.api.as_ref(),
+            &self.podmetrics,
             &self.node_name,
             self.capacity,
-            &pods.items,
+            &bound,
             &self.metrics,
         );
         (started, completed)
@@ -261,8 +276,9 @@ mod tests {
             reg,
             Metrics::new(),
         ));
+        let informers = SharedInformerFactory::new(api.client(), Metrics::new());
         let kubelet = Kubelet::register(
-            api.client(),
+            &informers,
             "w1",
             Resources::cores(8, 32 << 30),
             &[],

@@ -6,35 +6,62 @@
 //! `virtual-kubelet` taint, so only the operator's dummy pods — which
 //! tolerate it — land there (paper Fig. 2).
 //!
-//! Written against typed [`Api`] handles over any [`ApiClient`], so the
-//! scheduler could equally run out-of-process against a remote API server.
+//! Reads come from the shared informer caches (PR 4) — a scheduling
+//! cycle issues zero list RPCs; binds write through the [`ApiClient`].
+//! The daemon loop is event-driven: pod/node events wake it, with a
+//! periodic sweep as the level-triggered safety net.
 
 use super::api::{KubeObject, NodeView, PodPhase, PodView};
-use super::client::{Api, ApiClient, ListOptions};
+use super::client::ApiClient;
+use super::informer::{Informer, SharedInformerFactory};
 use crate::cluster::{Metrics, Resources};
 use crate::rt::{self, Shutdown};
 use std::sync::Arc;
 use std::time::Duration;
 
 pub struct KubeScheduler {
-    nodes: Api<NodeView>,
-    pods: Api<PodView>,
+    client: Arc<dyn ApiClient>,
+    nodes: Informer,
+    pods: Informer,
     metrics: Metrics,
 }
 
 impl KubeScheduler {
-    pub fn new(client: Arc<dyn ApiClient>, metrics: Metrics) -> KubeScheduler {
+    pub fn new(informers: &SharedInformerFactory, metrics: Metrics) -> KubeScheduler {
         KubeScheduler {
-            nodes: Api::new(client.clone()),
-            pods: Api::new(client),
+            client: informers.client(),
+            nodes: informers.informer(super::api::KIND_NODE),
+            pods: informers.informer(super::api::KIND_POD),
             metrics,
         }
     }
 
-    /// Run as a daemon: a scheduling cycle per period.
+    /// Run as a daemon. Event-driven: any pod or node event wakes a
+    /// cycle immediately (events coalesce — a burst triggers one pass);
+    /// `period` is only the fallback sweep when nothing happens.
     pub fn start(self, period: Duration, shutdown: Shutdown) {
-        rt::pool::spawn_ticker("kube-sched", period, shutdown, move || {
-            self.run_cycle();
+        rt::spawn_named("kube-sched", move || {
+            // Payload-free wake-ups: the scheduler only needs "something
+            // changed, run a cycle" — never the event objects themselves.
+            let (tx, rx) = std::sync::mpsc::channel();
+            self.pods.subscribe_notify(tx.clone());
+            self.nodes.subscribe_notify(tx);
+            loop {
+                if shutdown.is_triggered() {
+                    return;
+                }
+                self.run_cycle();
+                // Sleep until the next event or the fallback tick, then
+                // coalesce everything pending into one cycle.
+                match rx.recv_timeout(period) {
+                    Ok(_) => {
+                        self.metrics.inc("kube.sched.wakeups");
+                        while rx.try_recv().is_ok() {}
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(_) => return,
+                }
+            }
         });
     }
 
@@ -42,46 +69,51 @@ impl KubeScheduler {
     /// Public for deterministic stepping in tests/benches.
     pub fn run_cycle(&self) -> usize {
         let t0 = std::time::Instant::now();
-        // A broken transport must not masquerade as "nothing to schedule".
+        // A broken transport must not masquerade as "nothing to schedule":
+        // if the informers cannot seed/stay current, skip the cycle.
         // (Undecodable objects are skipped below, so a malformed
         // hand-written manifest cannot wedge the cycle either.)
-        let (nodes, pods) = match (
-            self.nodes.list(&ListOptions::all()),
-            self.pods.list_raw(&ListOptions::all()),
-        ) {
-            (Ok(n), Ok(p)) => (n, p.items),
-            (Err(e), _) | (_, Err(e)) => {
-                self.metrics.inc("kube.sched.list_errors");
-                crate::warn!("kube-sched", "list failed, skipping cycle: {e}");
-                return 0;
-            }
-        };
-        // Usage per node from bound, non-terminal pods.
+        if let Err(e) = self.nodes.sync().and_then(|()| self.pods.sync()) {
+            self.metrics.inc("kube.sched.list_errors");
+            crate::warn!("kube-sched", "informer sync failed, skipping cycle: {e}");
+            return 0;
+        }
+        // Decode node views straight off the cache (no KubeObject clones).
+        let nodes: Vec<NodeView> = self
+            .nodes
+            .read(|objs| objs.values().filter_map(|o| NodeView::from_object(o).ok()).collect());
+        // Usage per node from bound, non-terminal pods; pending pods
+        // decoded in the same zero-copy pass.
         let mut used: Vec<(String, Resources)> =
             nodes.iter().map(|n| (n.name.clone(), Resources::ZERO)).collect();
         let mut pending: Vec<PodView> = Vec::new();
-        for obj in &pods {
-            let Ok(view) = PodView::from_object(obj) else { continue };
-            match (&view.node_name, view.phase) {
-                (Some(node), phase) if !phase.terminal() => {
-                    if let Some((_, u)) = used.iter_mut().find(|(n, _)| n == node) {
-                        *u += view.requests;
+        let mut gated = 0u64;
+        self.pods.read(|objs| {
+            for obj in objs.values() {
+                let Ok(view) = PodView::from_object(obj) else { continue };
+                match (&view.node_name, view.phase) {
+                    (Some(node), phase) if !phase.terminal() => {
+                        if let Some((_, u)) = used.iter_mut().find(|(n, _)| n == node) {
+                            *u += view.requests;
+                        }
                     }
-                }
-                (None, PodPhase::Pending) => {
-                    // Scheduling gates (k8s `spec.schedulingGates`): a pod
-                    // with any gate present is not scheduler-ready.
-                    // Admission layers (kueue, PR 2/3) set and clear their
-                    // own gates — the scheduler knows nothing about them.
-                    if !view.scheduling_gates.is_empty() {
-                        self.metrics.inc("kube.sched.gated");
-                        continue;
+                    (None, PodPhase::Pending) => {
+                        // Scheduling gates (k8s `spec.schedulingGates`): a
+                        // pod with any gate present is not
+                        // scheduler-ready. Admission layers (kueue, PR
+                        // 2/3) set and clear their own gates — the
+                        // scheduler knows nothing about them.
+                        if !view.scheduling_gates.is_empty() {
+                            gated += 1;
+                            continue;
+                        }
+                        pending.push(view);
                     }
-                    pending.push(view);
+                    _ => {}
                 }
-                _ => {}
             }
-        }
+        });
+        self.metrics.add("kube.sched.gated", gated);
         // Sort pending by creation (FIFO-ish, as the real scheduler's
         // priority queue without priorities).
         pending.sort_by(|a, b| a.name.cmp(&b.name));
@@ -122,10 +154,11 @@ impl KubeScheduler {
                 fa.partial_cmp(&fb).unwrap().then(na.name.cmp(&nb.name))
             });
             let chosen = candidates[0].0.name.clone();
-            // Bind.
+            // Bind (writes go through the API; the cache sees the event
+            // on the next sync).
             let ok = self
-                .pods
-                .update_status(&pod.name, &|o| {
+                .client
+                .update_status(super::api::KIND_POD, &pod.name, &|o| {
                     o.spec.insert("nodeName", chosen.clone());
                 })
                 .is_ok();
@@ -170,7 +203,8 @@ mod tests {
 
     fn setup() -> (ApiServer, KubeScheduler) {
         let api = ApiServer::new(Metrics::new());
-        let sched = KubeScheduler::new(api.client(), Metrics::new());
+        let informers = crate::kube::SharedInformerFactory::new(api.client(), Metrics::new());
+        let sched = KubeScheduler::new(&informers, Metrics::new());
         (api, sched)
     }
 

@@ -53,7 +53,14 @@ impl WatchEvent {
     }
 }
 
-const HISTORY_CAP: usize = 4096;
+/// Default watch-history window. Small deployments never notice it; a
+/// testbed expecting event bursts (every kubelet sync, admission cycle,
+/// and autoscaler pass is a potential write) should size it explicitly
+/// via [`Store::with_history_cap`] — a burst larger than the window
+/// forces every watcher whose bookmark predates the trim into a spurious
+/// relist (the 410-Gone path), which is exactly the O(cluster) cost the
+/// informer layer exists to avoid.
+pub const DEFAULT_HISTORY_CAP: usize = 4096;
 
 struct StoreInner {
     /// (kind, name) → object.
@@ -61,6 +68,7 @@ struct StoreInner {
     version: u64,
     uid: u64,
     history: VecDeque<(u64, WatchEvent)>,
+    history_cap: usize,
     /// Highest event version evicted from `history` (0 = nothing evicted).
     /// Replays from at or below this version may have lost events.
     trimmed_through: u64,
@@ -87,17 +95,31 @@ impl Default for Store {
 
 impl Store {
     pub fn new() -> Store {
+        Store::with_history_cap(DEFAULT_HISTORY_CAP)
+    }
+
+    /// A store with an explicit watch-history window. `cap` bounds how
+    /// many events watchers (and the RPC watch poll) can replay before a
+    /// stale bookmark turns into the 410-Gone reset; size it above the
+    /// largest event burst expected between watcher polls.
+    pub fn with_history_cap(cap: usize) -> Store {
         Store {
             inner: Arc::new(Mutex::new(StoreInner {
                 objects: BTreeMap::new(),
                 version: 0,
                 uid: 0,
                 history: VecDeque::new(),
+                history_cap: cap.max(1),
                 trimmed_through: 0,
                 watchers: Vec::new(),
             })),
             epoch: Instant::now(),
         }
+    }
+
+    /// The configured watch-history window.
+    pub fn history_cap(&self) -> usize {
+        self.inner.lock().unwrap().history_cap
     }
 
     /// Seconds since store creation (object creation timestamps).
@@ -253,7 +275,7 @@ impl Store {
 
     fn publish(inner: &mut StoreInner, version: u64, event: WatchEvent) {
         inner.history.push_back((version, event.clone()));
-        if inner.history.len() > HISTORY_CAP {
+        if inner.history.len() > inner.history_cap {
             if let Some((evicted, _)) = inner.history.pop_front() {
                 inner.trimmed_through = evicted;
             }
@@ -387,7 +409,7 @@ mod tests {
     fn watch_with_stale_bookmark_returns_ended_stream() {
         let s = Store::new();
         let first = s.create(pod("seed")).unwrap().meta.resource_version;
-        for i in 0..HISTORY_CAP + 8 {
+        for i in 0..DEFAULT_HISTORY_CAP + 8 {
             let mut o = s.get(KIND_POD, "seed").unwrap();
             o.status.insert("n", i as u64);
             s.update(o).unwrap();
@@ -408,7 +430,7 @@ mod tests {
         let s = Store::new();
         let first = s.create(pod("seed")).unwrap().meta.resource_version;
         // Push enough writes to evict the seed event from history.
-        for i in 0..HISTORY_CAP + 8 {
+        for i in 0..DEFAULT_HISTORY_CAP + 8 {
             let mut o = s.get(KIND_POD, "seed").unwrap();
             o.status.insert("n", i as u64);
             s.update(o).unwrap();
@@ -419,6 +441,39 @@ mod tests {
         assert!(!reset, "fresh bookmark replays normally");
         assert_eq!(events.len(), 1);
         assert_eq!(rv, s.current_version());
+    }
+
+    /// Regression (ISSUE 4 satellite): the watch-history window used to be
+    /// a hardcoded 4096 — an event burst larger than that between two
+    /// watch polls trimmed the bookmark out of history and forced a
+    /// spurious relist. A store sized above the burst replays it cleanly.
+    #[test]
+    fn sized_history_window_survives_burst_that_overflows_old_default() {
+        let burst = DEFAULT_HISTORY_CAP + 100;
+        // Old default: the burst trims the bookmark out of the window.
+        let small = Store::new();
+        let bookmark = small.create(pod("seed")).unwrap().meta.resource_version;
+        for i in 0..burst {
+            let mut o = small.get(KIND_POD, "seed").unwrap();
+            o.status.insert("n", i as u64);
+            small.update(o).unwrap();
+        }
+        let (_, _, reset) = small.events_since(None, bookmark);
+        assert!(reset, "old default window loses a {burst}-event burst");
+
+        // Sized window: the same burst replays without a reset.
+        let big = Store::with_history_cap(2 * DEFAULT_HISTORY_CAP);
+        assert_eq!(big.history_cap(), 2 * DEFAULT_HISTORY_CAP);
+        let bookmark = big.create(pod("seed")).unwrap().meta.resource_version;
+        for i in 0..burst {
+            let mut o = big.get(KIND_POD, "seed").unwrap();
+            o.status.insert("n", i as u64);
+            big.update(o).unwrap();
+        }
+        let (rv, events, reset) = big.events_since(None, bookmark);
+        assert!(!reset, "sized window must absorb the burst");
+        assert_eq!(events.len(), burst);
+        assert_eq!(rv, big.current_version());
     }
 
     #[test]

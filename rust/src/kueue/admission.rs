@@ -1,12 +1,18 @@
 //! The admission cycle: suspend → reserve → admit → preempt, level-
-//! triggered over any [`ApiClient`].
+//! triggered over the shared informer caches.
 //!
-//! Each cycle rebuilds the whole picture from the API (queues, admitted
-//! usage, pending gangs) and converges it one step — the same
-//! crash-tolerant shape as the scheduler's `run_cycle`. Workloads whose
-//! quota cannot be reserved are simply *left alone* (their missing
-//! `Admitted` condition is the suspension — scheduler and operator gate
-//! on it), so a crashed controller resumes from the objects themselves.
+//! Each cycle reads queues and workloads from the [`Informer`] caches —
+//! zero list RPCs — and converges the system one step. The quota
+//! [`Ledger`] is **incremental** (the ROADMAP's named scale step past
+//! ~100k queued workloads): admitted charges are maintained by
+//! charge/uncharge on watch deltas, idempotently keyed per member, with
+//! a full rebuild only when a ClusterQueue *spec* changes or a workload
+//! informer bumps its resync epoch (the 410-Gone path: events may have
+//! been lost, so per-event arithmetic can no longer be trusted).
+//! Workloads whose quota cannot be reserved are simply *left alone*
+//! (their missing `Admitted` condition is the suspension — scheduler and
+//! operator gate on it), so a crashed controller resumes from the
+//! objects themselves.
 //!
 //! Gangs are atomic throughout: a multi-node WlmJob is one indivisible
 //! demand, a pod group only becomes admissible once all declared members
@@ -19,15 +25,19 @@ use super::types::{
     is_admitted, queue_name, set_condition, workload_demand, workload_priority,
     workload_terminal, ClusterQueueView, LocalQueueView, QueueOrdering, QueueResources,
     COND_ADMITTED, COND_EVICTED, COND_QUOTA_RESERVED, KIND_CLUSTERQUEUE, KIND_LOCALQUEUE,
-    POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, SCHEDULING_GATE, WORKLOAD_KINDS,
+    POD_GROUP_COUNT_ANNOTATION, POD_GROUP_LABEL, QUEUE_NAME_LABEL, SCHEDULING_GATE,
+    WORKLOAD_KINDS,
 };
 use crate::cluster::Metrics;
+use crate::encoding::Value;
 use crate::kube::{
-    add_scheduling_gate, remove_scheduling_gate, scheduling_gates, ApiClient, KubeObject,
-    ListOptions, KIND_POD,
+    add_scheduling_gate, remove_scheduling_gate, scheduling_gates, ApiClient, Informer,
+    InformerEvent, KubeObject, SharedInformerFactory, KIND_POD,
 };
 use crate::util::Result;
 use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Mutex;
 
 /// What one cycle did (workload-object granularity).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -44,6 +54,9 @@ pub struct CycleReport {
 #[derive(Debug, Clone)]
 struct PendingGang {
     members: Vec<(String, String)>,
+    /// Per-member demand, aligned with `members` (the incremental
+    /// ledger's charge granularity).
+    member_demands: Vec<QueueResources>,
     /// ClusterQueue charged on admission.
     cq: String,
     /// The raw queue-name label (LocalQueue counts key).
@@ -56,47 +69,194 @@ struct PendingGang {
     complete: bool,
 }
 
-/// The admission controller core. Stateless between cycles by design;
-/// cycles themselves are serialized (see [`AdmissionCore::cycle`]).
+/// The incremental quota state carried between cycles: the live ledger
+/// plus the per-member charge map that makes delta application
+/// idempotent, and the triggers that demand a full rebuild.
+struct LedgerState {
+    ledger: Ledger,
+    /// (kind, name) → (ClusterQueue charged, that member's demand).
+    charged: BTreeMap<(String, String), (String, QueueResources)>,
+    /// ClusterQueue name → spec tree at the last (re)build. Any change
+    /// (add/remove/quota edit) invalidates per-event arithmetic.
+    cq_specs: BTreeMap<String, Value>,
+    /// Workload informer resync epochs at the last (re)build. A bump
+    /// means events may have been lost (410-Gone recovery) — rebuild.
+    epochs: Vec<u64>,
+    inited: bool,
+    rebuilds: u64,
+}
+
+/// The admission controller core. Reads from the shared informer caches;
+/// carries the incremental [`LedgerState`] between cycles; cycles
+/// themselves are serialized (see [`AdmissionCore::cycle`]).
 pub struct AdmissionCore {
     metrics: Metrics,
+    cqs: Informer,
+    lqs: Informer,
+    /// One shared informer per [`WORKLOAD_KINDS`] entry, same order.
+    workloads: Vec<Informer>,
+    /// Merged delta stream from every workload informer — the
+    /// incremental ledger's input.
+    deltas: Mutex<Receiver<InformerEvent>>,
+    state: Mutex<LedgerState>,
     /// Serializes cycles: the shared core is driven from one runner
-    /// thread per watched kind, and two concurrent cycles holding
-    /// divergent list snapshots could each admit a different gang
-    /// against the same quota headroom (the reservation lives only in
-    /// the running cycle's ledger). Under the lock, every cycle lists
-    /// *after* the previous cycle's admission writes landed.
-    serial: std::sync::Mutex<()>,
+    /// thread per watched kind, and two concurrent cycles could each
+    /// admit a different gang against the same quota headroom. Under the
+    /// lock, every cycle syncs *after* the previous cycle's admission
+    /// writes landed.
+    serial: Mutex<()>,
 }
 
 impl AdmissionCore {
-    pub fn new(metrics: Metrics) -> AdmissionCore {
-        AdmissionCore { metrics, serial: std::sync::Mutex::new(()) }
+    pub fn new(informers: &SharedInformerFactory, metrics: Metrics) -> AdmissionCore {
+        let (tx, rx) = channel();
+        let mut workloads = Vec::with_capacity(WORKLOAD_KINDS.len());
+        for kind in WORKLOAD_KINDS {
+            let inf = informers.informer(kind);
+            // Label-key-filtered: unlabelled pod churn (clusters that
+            // never opted into queueing) is dropped inside the reflector
+            // before any clone, preserving the "pay ~nothing per event"
+            // property. Label *removal* on a live admitted workload stops
+            // its events — that charge then holds (conservatively, no
+            // overcommit) until the next rebuild re-derives it away.
+            inf.subscribe_with_label_key(tx.clone(), QUEUE_NAME_LABEL);
+            workloads.push(inf);
+        }
+        AdmissionCore {
+            metrics,
+            cqs: informers.informer(KIND_CLUSTERQUEUE),
+            lqs: informers.informer(KIND_LOCALQUEUE),
+            workloads,
+            deltas: Mutex::new(rx),
+            state: Mutex::new(LedgerState {
+                ledger: Ledger::default(),
+                charged: BTreeMap::new(),
+                cq_specs: BTreeMap::new(),
+                epochs: Vec::new(),
+                inited: false,
+                rebuilds: 0,
+            }),
+            serial: Mutex::new(()),
+        }
+    }
+
+    /// How many times the incremental ledger was fully rebuilt (cold
+    /// start, queue-spec change, or informer resync). Steady-state event
+    /// processing must not move this — asserted by `tests/informer.rs`.
+    pub fn ledger_rebuilds(&self) -> u64 {
+        self.state.lock().unwrap().rebuilds
+    }
+
+    /// What the ledger should charge for `obj` right now: its stamped
+    /// (or, for legacy objects, label-resolved) ClusterQueue and demand —
+    /// `None` when the object holds no charge (unlabelled, suspended,
+    /// terminal, undecodable, or unresolvable). The single predicate both
+    /// the delta path and the rebuild path share, so they can never
+    /// disagree.
+    fn charge_entry(
+        obj: &KubeObject,
+        resolve: &dyn Fn(&str) -> Option<String>,
+    ) -> Option<(String, QueueResources)> {
+        let label = queue_name(obj)?;
+        if !is_admitted(obj) || workload_terminal(obj) {
+            return None;
+        }
+        // Admitted workloads charge the ClusterQueue stamped on them at
+        // admission time — deleting or retargeting a LocalQueue must not
+        // drop live charges (overcommit); the label fallback covers
+        // objects admitted before stamping existed.
+        let cq = obj
+            .status
+            .opt_str("clusterQueue")
+            .map(String::from)
+            .or_else(|| resolve(label))?;
+        let demand = workload_demand(obj).ok()?;
+        Some((cq, demand))
+    }
+
+    /// Idempotent charge/uncharge of one member against the incremental
+    /// ledger (`entry` = what the charge should now be).
+    fn apply_delta(
+        st: &mut LedgerState,
+        key: (String, String),
+        entry: Option<(String, QueueResources)>,
+    ) {
+        match (st.charged.get(&key).cloned(), entry) {
+            (None, None) => {}
+            (None, Some((cq, d))) => {
+                st.ledger.charge(&cq, &d);
+                st.charged.insert(key, (cq, d));
+            }
+            (Some((cq, d)), None) => {
+                st.ledger.uncharge(&cq, &d);
+                st.charged.remove(&key);
+            }
+            (Some((ocq, od)), Some((ncq, nd))) => {
+                if ocq != ncq || od != nd {
+                    st.ledger.uncharge(&ocq, &od);
+                    st.ledger.charge(&ncq, &nd);
+                    st.charged.insert(key, (ncq, nd));
+                }
+            }
+        }
+    }
+
+    /// Full rebuild from the caches — exactly what a fresh controller
+    /// would compute, so resync recovery and cold start share one path.
+    fn rebuild(
+        &self,
+        st: &mut LedgerState,
+        cq_views: &[ClusterQueueView],
+        resolve: &dyn Fn(&str) -> Option<String>,
+    ) {
+        st.ledger = Ledger::new(cq_views.to_vec());
+        st.charged.clear();
+        for inf in &self.workloads {
+            for obj in inf.list_with_label_key(QUEUE_NAME_LABEL) {
+                if let Some((cq, d)) = Self::charge_entry(&obj, resolve) {
+                    st.ledger.charge(&cq, &d);
+                    st.charged.insert((obj.kind.clone(), obj.meta.name.clone()), (cq, d));
+                }
+            }
+        }
+        st.rebuilds += 1;
+        self.metrics.inc("kueue.ledger_rebuilds");
     }
 
     /// One full admission cycle. Public for deterministic stepping in
     /// tests and benches; the controller runtime calls it on every queue
-    /// or workload event.
+    /// or workload event. Reads come from the shared caches and the
+    /// ledger advances by watch deltas — steady state issues zero list
+    /// RPCs.
     pub fn cycle(&self, api: &dyn ApiClient) -> Result<CycleReport> {
         let _one_at_a_time = self.serial.lock().unwrap();
         let t0 = std::time::Instant::now();
         self.metrics.inc("kueue.cycles");
 
-        // ---- the queue topology -------------------------------------
-        let cq_objs = api.list(KIND_CLUSTERQUEUE, &ListOptions::all())?.items;
-        let cqs: Vec<ClusterQueueView> = cq_objs
-            .iter()
-            .filter_map(|o| ClusterQueueView::from_object(o).ok())
-            .collect();
-        let lq_objs = api.list(KIND_LOCALQUEUE, &ListOptions::all())?.items;
-        let lqs: Vec<LocalQueueView> =
-            lq_objs.iter().filter_map(|o| LocalQueueView::from_object(o).ok()).collect();
-        if cqs.is_empty() && lqs.is_empty() {
-            // No queue topology: nothing can be admitted and no counts
-            // can change. Skip the workload listing entirely so clusters
-            // that never opted into queueing pay ~nothing per event.
-            return Ok(CycleReport::default());
+        // ---- refresh the caches -------------------------------------
+        self.cqs.sync()?;
+        self.lqs.sync()?;
+        for inf in &self.workloads {
+            inf.sync()?;
         }
+
+        // ---- the queue topology (from cache) ------------------------
+        // Views and the spec snapshot (the rebuild trigger) MUST come
+        // from one atomic read: the factory pump thread syncs caches
+        // concurrently, and taking them in two reads could pair stale
+        // views with fresh specs — the rebuild would then bake the stale
+        // quotas into the ledger while recording the new specs, so no
+        // later cycle would ever notice.
+        let (cqs, cq_specs): (Vec<ClusterQueueView>, BTreeMap<String, Value>) =
+            self.cqs.read(|objs| {
+                (
+                    objs.values().filter_map(|o| ClusterQueueView::from_object(o).ok()).collect(),
+                    objs.values().map(|o| (o.meta.name.clone(), o.spec.clone())).collect(),
+                )
+            });
+        let lqs: Vec<LocalQueueView> = self.lqs.read(|objs| {
+            objs.values().filter_map(|o| LocalQueueView::from_object(o).ok()).collect()
+        });
         let resolve = |label: &str| -> Option<String> {
             lqs.iter()
                 .find(|lq| lq.name == label)
@@ -107,26 +267,82 @@ impl AdmissionCore {
                 .filter(|cq| cqs.iter().any(|c| &c.name == cq))
         };
 
-        // ---- workloads ----------------------------------------------
+        // ---- incremental ledger maintenance -------------------------
+        // Rebuild triggers: cold start, any ClusterQueue *spec* change
+        // (status count writes don't count), or a workload informer
+        // resync epoch bump (events may have been lost — the 410 path).
+        let mut st = self.state.lock().unwrap();
+        let epochs: Vec<u64> = self.workloads.iter().map(|i| i.epoch()).collect();
+        let mut needs_rebuild = !st.inited || st.cq_specs != cq_specs || st.epochs != epochs;
+        // Drain deltas either way (the channel must not grow unbounded);
+        // apply them only while per-event arithmetic is trustworthy — a
+        // rebuild re-derives everything from the cache anyway.
+        {
+            let rx = self.deltas.lock().unwrap();
+            for ev in rx.try_iter() {
+                match ev {
+                    // A relist landed after the epoch snapshot above (the
+                    // factory pump thread runs concurrently): events may
+                    // have been lost, so the epoch comparison alone is
+                    // not enough — the Resync itself forces the rebuild.
+                    InformerEvent::Resync { .. } => needs_rebuild = true,
+                    _ if needs_rebuild => {}
+                    InformerEvent::Applied(o) => {
+                        let key = (o.kind.clone(), o.meta.name.clone());
+                        let entry = Self::charge_entry(&o, &resolve);
+                        Self::apply_delta(&mut st, key, entry);
+                    }
+                    InformerEvent::Deleted(o) => {
+                        Self::apply_delta(
+                            &mut st,
+                            (o.kind.clone(), o.meta.name.clone()),
+                            None,
+                        );
+                    }
+                }
+            }
+        }
+        if needs_rebuild {
+            self.rebuild(&mut st, &cqs, &resolve);
+        }
+        st.cq_specs = cq_specs;
+        // Record the epoch baseline AFTER the drain: a relist that raced
+        // the snapshot above was just handled through its Resync event; a
+        // relist landing after this point delivers its Resync to the next
+        // cycle's drain.
+        st.epochs = self.workloads.iter().map(|i| i.epoch()).collect();
+        st.inited = true;
+
+        if cqs.is_empty() && lqs.is_empty() {
+            // No queue topology: nothing can be admitted and no counts
+            // can change — clusters that never opted into queueing pay
+            // ~nothing per event.
+            return Ok(CycleReport::default());
+        }
+
+        // ---- workloads (label-indexed cache scan) -------------------
         // Group by (queue label, pod group); solitary workloads are their
         // own group. Admitted and pending members of the same group
         // accumulate separately (keyed by the admitted flag): a
         // partially-admitted group (crash mid-write) thus splits — the
-        // admitted members charge the ledger, the remainder forms a
-        // pending gang — and re-running the cycle completes the admission.
+        // admitted members hold their ledger charges, the remainder forms
+        // a pending gang — and re-running the cycle completes the
+        // admission. The label-key index means the scan touches only
+        // queue-labelled workloads, not the whole pod population.
         let mut gangs: BTreeMap<(bool, String, String), PendingGang> = BTreeMap::new();
         let mut declared_counts: BTreeMap<(String, String), usize> = BTreeMap::new();
         let mut group_sizes: BTreeMap<(String, String), usize> = BTreeMap::new();
         let mut poisoned: std::collections::BTreeSet<(String, String)> =
             std::collections::BTreeSet::new();
-        for kind in WORKLOAD_KINDS {
-            for obj in api.list(kind, &ListOptions::all())?.items {
+        for inf in &self.workloads {
+            for obj in inf.list_with_label_key(QUEUE_NAME_LABEL) {
                 let Some(label) = queue_name(&obj).map(String::from) else { continue };
                 // Back-fill the scheduling gate on labelled pods created
-                // without one (the [`super::types::queue_workload`]
-                // builder sets it at birth; this converges stragglers so
-                // the scheduler cannot race a suspended pod onto a node).
-                if *kind == KIND_POD
+                // without one. The ApiServer's mutating-admission hook
+                // ([`super::types::admission_mutating_hook`]) gates them
+                // at creation; this converges stragglers born before the
+                // hook was registered (or through a hook-less server).
+                if obj.kind == KIND_POD
                     && !is_admitted(&obj)
                     && !workload_terminal(&obj)
                     && !scheduling_gates(&obj).iter().any(|g| g == SCHEDULING_GATE)
@@ -185,6 +401,7 @@ impl AdmissionCore {
                     .entry((is_admitted(&obj), key.0, key.1))
                     .or_insert_with(|| PendingGang {
                         members: Vec::new(),
+                        member_demands: Vec::new(),
                         cq,
                         label: label.clone(),
                         demand: QueueResources::ZERO,
@@ -193,31 +410,30 @@ impl AdmissionCore {
                         complete: true,
                     });
                 g.members.push((obj.kind.clone(), obj.meta.name.clone()));
+                g.member_demands.push(demand);
                 g.demand = g.demand.saturating_add(&demand);
                 g.priority = g.priority.max(priority);
                 g.uid = g.uid.min(obj.meta.uid);
             }
         }
 
-        // ---- the ledger ---------------------------------------------
-        // Split the accumulated gangs; admitted demand charges the ledger,
-        // pending gangs get their completeness verdict (all declared
-        // members present, admitted + pending + terminal).
-        let mut ledger = Ledger::new(cqs.clone());
+        // ---- split admitted / pending -------------------------------
+        // Admitted gangs feed the preemption search and the counts; their
+        // demand is *already* charged in the incremental ledger. Pending
+        // gangs get their completeness verdict (all declared members
+        // present, admitted + pending + terminal).
         let mut admitted: Vec<AdmittedGang> = Vec::new();
         let mut pending_gangs: Vec<PendingGang> = Vec::new();
         for ((is_adm, label, group), mut gang) in gangs {
             if is_adm {
-                let g = AdmittedGang {
+                admitted.push(AdmittedGang {
                     members: gang.members,
                     queue: gang.cq,
                     label: gang.label,
                     demand: gang.demand,
                     priority: gang.priority,
                     uid: gang.uid,
-                };
-                ledger.charge(&g.queue, &g.demand);
-                admitted.push(g);
+                });
             } else {
                 let grouped = !group.starts_with("__solo/");
                 let key = (label, group);
@@ -255,45 +471,81 @@ impl AdmissionCore {
                 if !gang.complete {
                     continue; // waiting for members; does not block the queue
                 }
-                let fit = ledger.fit(&cq.name, &gang.demand);
+                // A member already holding a ledger charge means this
+                // "pending" gang is a stale read: we admitted it in an
+                // earlier cycle and the cache has not yet received the
+                // Admitted echo (possible over the lagging remote
+                // transport). Charging again would leak quota headroom
+                // permanently — the later echo no-ops against the charge
+                // map. Skip; the next cycle sees it admitted. (Eviction
+                // removes charges, so re-admission is never blocked.)
+                if gang.members.iter().any(|m| st.charged.contains_key(m)) {
+                    self.metrics.inc("kueue.stale_pending_skipped");
+                    continue;
+                }
+                let fit = st.ledger.fit(&cq.name, &gang.demand);
                 match fit {
                     Fit::Ok { borrowed } => {
                         if borrowed {
                             self.metrics.inc("kueue.admitted_borrowing");
                         }
-                        ledger.charge(&cq.name, &gang.demand);
+                        st.ledger.charge(&cq.name, &gang.demand);
                         decisions.push(gang.clone());
                     }
                     Fit::BlockedWithinNominal => {
-                        let Some(victims) =
-                            select_victims(&ledger, &admitted, cq, &gang.demand, gang.priority)
-                        else {
+                        let Some(victims) = select_victims(
+                            &st.ledger,
+                            &admitted,
+                            cq,
+                            &gang.demand,
+                            gang.priority,
+                        ) else {
                             break; // strict: a blocked head holds the queue
                         };
                         for v in &victims {
                             evict_gang(api, v)?;
-                            ledger.uncharge(&v.queue, &v.demand);
+                            // Uncharge through the per-member charge map
+                            // (idempotent with the eviction's echo events
+                            // next cycle).
+                            for m in &v.members {
+                                Self::apply_delta(&mut st, m.clone(), None);
+                            }
                             report.preempted += v.members.len();
                             self.metrics.inc("kueue.gangs_preempted");
                         }
                         admitted.retain(|a| !victims.contains(a));
-                        ledger.charge(&cq.name, &gang.demand);
+                        st.ledger.charge(&cq.name, &gang.demand);
                         decisions.push(gang.clone());
                     }
                     Fit::Blocked | Fit::UnknownQueue => break,
                 }
             }
-            for gang in decisions {
-                self.admit(api, &gang.members, &cq.name)?;
+            for (i, gang) in decisions.iter().enumerate() {
+                if let Err(e) = self.admit(api, &gang.members, &cq.name) {
+                    // The selection walk already charged every decision;
+                    // the failed gang and everything after it will not
+                    // admit this cycle — release their reservations so
+                    // the persistent ledger stays truthful.
+                    for g in &decisions[i..] {
+                        st.ledger.uncharge(&cq.name, &g.demand);
+                    }
+                    return Err(e);
+                }
                 report.admitted += gang.members.len();
                 self.metrics.inc("kueue.gangs_admitted");
+                // Record the per-member charges (the ledger was charged
+                // during selection; the map entry makes the admission's
+                // own echo events no-ops next cycle).
+                for (m, d) in gang.members.iter().zip(&gang.member_demands) {
+                    st.charged.insert(m.clone(), (cq.name.clone(), *d));
+                }
                 // Move into the admitted set so counts (and later queues'
                 // preemption searches) see it; drop from pending.
                 pending.retain(|g| g.members != gang.members);
                 admitted.push(AdmittedGang {
-                    members: gang.members,
-                    queue: gang.cq,
-                    label: gang.label,
+                    members: gang.members.clone(),
+                    queue: gang.cq.clone(),
+                    label: gang.label.clone(),
                     demand: gang.demand,
                     priority: gang.priority,
                     uid: gang.uid,
@@ -421,6 +673,12 @@ mod tests {
         ApiServer::new(Metrics::new())
     }
 
+    fn core_for(api: &ApiServer) -> AdmissionCore {
+        let informers =
+            crate::kube::SharedInformerFactory::new(api.client(), Metrics::new());
+        AdmissionCore::new(&informers, Metrics::new())
+    }
+
     fn labelled_pod(name: &str, queue: &str, cpu: u64) -> KubeObject {
         let mut p = PodView::build(name, "img.sif", Resources::new(cpu, 1 << 20, 0), &[]);
         p.meta.set_label(QUEUE_NAME_LABEL, queue);
@@ -430,7 +688,7 @@ mod tests {
     #[test]
     fn unlabelled_workloads_ignored_and_unknown_queue_held() {
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(PodView::build("plain", "img.sif", Resources::ZERO, &[])).unwrap();
         a.create(labelled_pod("orphan", "no-such-queue", 100)).unwrap();
         let r = core.cycle(&a).unwrap();
@@ -442,7 +700,7 @@ mod tests {
     #[test]
     fn admits_within_quota_and_reports_counts() {
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(ClusterQueueView::build("cq-a", QueueResources::nodes(2))).unwrap();
         a.create(LocalQueueView::build("team", "cq-a")).unwrap();
         for i in 0..3 {
@@ -474,7 +732,7 @@ mod tests {
     #[test]
     fn direct_cluster_queue_label_resolves() {
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(ClusterQueueView::build("cq-direct", QueueResources::nodes(1))).unwrap();
         a.create(labelled_pod("p", "cq-direct", 100)).unwrap();
         assert_eq!(core.cycle(&a).unwrap().admitted, 1);
@@ -483,7 +741,7 @@ mod tests {
     #[test]
     fn strict_fifo_blocks_behind_wide_gang() {
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(ClusterQueueView::build("cq", QueueResources::nodes(3))).unwrap();
         // Head gang needs 2 nodes via a pod group; only 1 node free after
         // an earlier admission -> the whole queue waits behind it.
@@ -509,7 +767,7 @@ mod tests {
     #[test]
     fn group_without_declared_count_is_held() {
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(ClusterQueueView::build("cq", QueueResources::nodes(10))).unwrap();
         // First member arrives WITHOUT the count annotation (the docs
         // allow it on any member): the group must be held, not admitted
@@ -532,7 +790,7 @@ mod tests {
     #[test]
     fn completed_group_member_still_counts_for_completeness() {
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(ClusterQueueView::build("cq", QueueResources::nodes(2))).unwrap();
         for i in 0..2 {
             let mut g = labelled_pod(&format!("g-{i}"), "cq", 100);
@@ -559,7 +817,7 @@ mod tests {
     #[test]
     fn scheduling_gate_backfilled_then_cleared_on_admission() {
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(ClusterQueueView::build("cq", QueueResources::nodes(1))).unwrap();
         // Born gated through the builder.
         let mut first = PodView::build("first", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
@@ -588,7 +846,7 @@ mod tests {
     fn priority_ordering_reorders_admission() {
         use crate::kueue::types::{PreemptionPolicy, PRIORITY_LABEL};
         let a = api();
-        let core = AdmissionCore::new(Metrics::new());
+        let core = core_for(&a);
         a.create(ClusterQueueView::build_full(
             "cq",
             None,

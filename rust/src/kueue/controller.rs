@@ -10,7 +10,9 @@
 use super::admission::AdmissionCore;
 use super::types::{KIND_CLUSTERQUEUE, KIND_LOCALQUEUE, WORKLOAD_KINDS};
 use crate::cluster::Metrics;
-use crate::kube::{ApiClient, Controller, ControllerRunner, Reconcile};
+use crate::kube::{
+    ApiClient, Controller, ControllerRunner, Reconcile, SharedInformerFactory,
+};
 use crate::rt::Shutdown;
 use crate::util::Result;
 use std::sync::Arc;
@@ -42,14 +44,16 @@ impl Controller for KueueController {
 }
 
 /// Start the admission controller: one runner per watched kind (the two
-/// queue CRDs plus every workload kind). Returns the shared core so
-/// callers can also step cycles deterministically.
+/// queue CRDs plus every workload kind), each fed by the factory's
+/// shared informer for that kind. Returns the shared core so callers can
+/// also step cycles deterministically.
 pub fn start_admission(
-    api: Arc<dyn ApiClient>,
+    informers: &SharedInformerFactory,
     metrics: Metrics,
     shutdown: Shutdown,
 ) -> Arc<AdmissionCore> {
-    let core = Arc::new(AdmissionCore::new(metrics.clone()));
+    let api: Arc<dyn ApiClient> = informers.client();
+    let core = Arc::new(AdmissionCore::new(informers, metrics.clone()));
     let kinds = [KIND_CLUSTERQUEUE, KIND_LOCALQUEUE]
         .into_iter()
         .chain(WORKLOAD_KINDS.iter().copied());
@@ -59,7 +63,7 @@ pub fn start_admission(
             Arc::new(KueueController::new(core.clone(), kind)),
             metrics.clone(),
         ))
-        .start(shutdown.clone());
+        .start(informers.informer(kind), shutdown.clone());
     }
     core
 }
@@ -80,7 +84,8 @@ mod tests {
     fn daemon_admits_on_events() {
         let api = ApiServer::new(Metrics::new());
         let sd = Shutdown::new();
-        let _core = start_admission(api.client(), Metrics::new(), sd.clone());
+        let informers = SharedInformerFactory::new(api.client(), Metrics::new());
+        let _core = start_admission(&informers, Metrics::new(), sd.clone());
         api.create(ClusterQueueView::build("cq", QueueResources::nodes(1))).unwrap();
         api.create(LocalQueueView::build("team", "cq")).unwrap();
         let mut pod = PodView::build("p", "img.sif", Resources::new(100, 1 << 20, 0), &[]);

@@ -38,12 +38,18 @@
 //!    operator's dummy-pod path (for WlmJobs) still gates on the missing
 //!    `Admitted` condition. Suspension is the *absence* of admission, so
 //!    a crashed controller loses nothing.
-//! 2. **reserve** — each [`admission::AdmissionCore::cycle`] rebuilds a
-//!    pure [`quota::Ledger`] from the queues and the currently admitted
-//!    workloads, then walks each queue's pending gangs in (FIFO or
-//!    priority) order, reserving quota for a gang only if its *entire*
-//!    demand fits — nominal first, then borrowing from idle cohort
-//!    capacity up to the borrowing limit.
+//! 2. **reserve** — each [`admission::AdmissionCore::cycle`] reads
+//!    queues and workloads from the shared informer caches (zero list
+//!    RPCs; PR 4) and maintains an **incremental** [`quota::Ledger`]:
+//!    admitted charges advance by charge/uncharge on watch deltas, with
+//!    a full rebuild only on a ClusterQueue spec change or an informer
+//!    resync epoch bump (the 410-Gone recovery). The cycle then walks
+//!    each queue's pending gangs in (FIFO or priority) order, reserving
+//!    quota for a gang only if its *entire* demand fits — nominal first,
+//!    then borrowing from idle cohort capacity up to the borrowing
+//!    limit. Pods born with a bare queue-name label are gated at
+//!    creation by the ApiServer mutating hook
+//!    ([`admission_mutating_hook`]); the cycle back-fills stragglers.
 //! 3. **admit** — only after the whole gang is reserved are its members'
 //!    `QuotaReserved`/`Admitted` conditions written; scheduler and
 //!    operator then proceed (a multi-node TorqueJob submits over red-box
@@ -85,7 +91,8 @@ pub use controller::{start_admission, KueueController};
 pub use preemption::{evict_gang, select_victims, AdmittedGang};
 pub use quota::{Fit, Ledger, QueueState};
 pub use types::{
-    admission_gated, get_condition, is_admitted, is_evicted, queue_name, queue_workload,
+    admission_gated, admission_mutating_hook, get_condition, is_admitted, is_evicted,
+    queue_name, queue_workload,
     set_condition, workload_demand, workload_priority, workload_terminal, ClusterQueueView,
     LocalQueueView, PreemptionPolicy, QueueOrdering, QueueResources, COND_ADMITTED,
     COND_EVICTED, COND_QUOTA_RESERVED, KIND_CLUSTERQUEUE, KIND_LOCALQUEUE,

@@ -379,6 +379,26 @@ pub fn queue_workload(obj: &mut KubeObject, queue: &str) {
     }
 }
 
+/// The kueue mutating-admission hook for
+/// [`crate::kube::ApiServer::register_mutating_hook`]: a pod entering the
+/// create path with a bare queue-name label (applied manifest, direct
+/// create — anything that bypassed [`queue_workload`]) is gated *at
+/// creation*, so there is no window in which the scheduler could bind a
+/// suspended pod before the first admission cycle back-fills its gate.
+/// The cycle's back-fill stays as the converging safety net for objects
+/// born before the hook was registered.
+pub fn admission_mutating_hook() -> crate::kube::MutatingHook {
+    std::sync::Arc::new(|obj: &mut KubeObject| {
+        if obj.kind == KIND_POD
+            && queue_name(obj).is_some()
+            && !is_admitted(obj)
+            && !workload_terminal(obj)
+        {
+            crate::kube::add_scheduling_gate(obj, SCHEDULING_GATE);
+        }
+    })
+}
+
 /// Is the workload finished (its quota charge released)?
 pub fn workload_terminal(obj: &KubeObject) -> bool {
     match obj.kind.as_str() {
@@ -531,6 +551,37 @@ mod tests {
         queue_workload(&mut tj, "tenant-a");
         assert!(crate::kube::scheduling_gates(&tj).is_empty());
         assert!(admission_gated(&tj));
+    }
+
+    /// ISSUE 4 satellite: a pod created with a bare queue-name label (no
+    /// gate) used to race the scheduler for one admission cycle. The
+    /// mutating hook closes it: the pod is born gated.
+    #[test]
+    fn mutating_hook_gates_bare_labelled_pods_at_creation() {
+        use crate::cluster::Metrics;
+        use crate::kube::{scheduling_gates, ApiServer};
+        let api = ApiServer::new(Metrics::new());
+        api.register_mutating_hook(admission_mutating_hook());
+        // Bare label, no gate — the exact race shape.
+        let mut bare = PodView::build("bare", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+        bare.meta.set_label(QUEUE_NAME_LABEL, "team");
+        let stored = api.create(bare).unwrap();
+        assert_eq!(scheduling_gates(&stored), vec![SCHEDULING_GATE.to_string()]);
+        // Unlabelled pods are untouched.
+        let plain = api
+            .create(PodView::build("plain", "img.sif", Resources::ZERO, &[]))
+            .unwrap();
+        assert!(scheduling_gates(&plain).is_empty());
+        // WLM jobs gate through the Admitted condition, never pod gates.
+        let mut tj = WlmJobView::build_torquejob("tj", "echo x\n", "", "");
+        tj.meta.set_label(QUEUE_NAME_LABEL, "team");
+        let stored = api.create(tj).unwrap();
+        assert!(scheduling_gates(&stored).is_empty());
+        // Idempotent against queue_workload-built pods (no double gate).
+        let mut built = PodView::build("built", "img.sif", Resources::ZERO, &[]);
+        queue_workload(&mut built, "team");
+        let stored = api.create(built).unwrap();
+        assert_eq!(scheduling_gates(&stored).len(), 1);
     }
 
     #[test]

@@ -374,7 +374,9 @@ mod tests {
             Arc::new(RedboxBridge::torque(RedboxClient::connect(&sock).unwrap()));
         let api = ApiServer::new(Metrics::new());
         register_virtual_nodes(&api, bridge.as_ref(), "torque").unwrap();
-        let sched = KubeScheduler::new(api.client(), Metrics::new());
+        let informers =
+            crate::kube::SharedInformerFactory::new(api.client(), Metrics::new());
+        let sched = KubeScheduler::new(&informers, Metrics::new());
         let operator = WlmJobOperator::new(OperatorConfig::torque(), bridge, Metrics::new());
         Env { api, sched, operator, pbs, _rb: rb, sd }
     }

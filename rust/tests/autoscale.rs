@@ -21,7 +21,7 @@ use hpcorc::autoscale::{
 use hpcorc::cluster::{Metrics, Resources, SharedFs};
 use hpcorc::kube::{
     ApiServer, Controller, DeploymentController, KubeScheduler, Kubelet, NodeView, PodView,
-    KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_TORQUEJOB,
+    SharedInformerFactory, KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_TORQUEJOB,
 };
 use hpcorc::kueue::{
     is_admitted, AdmissionCore, ClusterQueueView, LocalQueueView, QueueResources,
@@ -84,7 +84,7 @@ impl WlmBridge for RecordingBridge {
 
 /// Provisioner backed by real kubelets the test steps by hand.
 struct SteppedProvisioner {
-    api: ApiServer,
+    informers: SharedInformerFactory,
     runtime: Runtime,
     fs: SharedFs,
     capacity: Resources,
@@ -95,7 +95,7 @@ struct SteppedProvisioner {
 impl NodeProvisioner for SteppedProvisioner {
     fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()> {
         let kubelet = Kubelet::register(
-            self.api.client(),
+            &self.informers,
             name,
             self.capacity,
             labels,
@@ -116,6 +116,7 @@ impl NodeProvisioner for SteppedProvisioner {
 
 struct Env {
     api: ApiServer,
+    deploy_ctrl: DeploymentController,
     sched: KubeScheduler,
     hpa: HpaController,
     ca: ClusterAutoscaler,
@@ -129,7 +130,7 @@ struct Env {
 impl Env {
     /// One step of every control loop, in a scheduler-like order.
     fn step(&self) {
-        let _ = DeploymentController.reconcile(&self.api, "web");
+        let _ = self.deploy_ctrl.reconcile(&self.api, "web");
         let _ = self.core.cycle(&self.api);
         self.sched.run_cycle();
         self.static_kubelet.sync_once();
@@ -188,8 +189,9 @@ fn env() -> Env {
     let fs = SharedFs::new();
     let bridge = Arc::new(RecordingBridge::default());
     register_virtual_nodes(&api, bridge.as_ref(), "torque").unwrap();
+    let informers = SharedInformerFactory::new(api.client(), Metrics::new());
     let static_kubelet = Kubelet::register(
-        api.client(),
+        &informers,
         "static-0",
         Resources::cores(2, 64 << 30),
         &[],
@@ -200,7 +202,7 @@ fn env() -> Env {
     )
     .unwrap();
     let provisioner = Arc::new(SteppedProvisioner {
-        api: api.clone(),
+        informers: informers.clone(),
         runtime,
         fs,
         capacity: Resources::cores(2, 64 << 30),
@@ -208,7 +210,7 @@ fn env() -> Env {
         deprovisioned: Mutex::new(Vec::new()),
     });
     let ca = ClusterAutoscaler::new(
-        api.client(),
+        &informers,
         provisioner.clone(),
         CaConfig {
             pool_prefix: "ka".into(),
@@ -223,10 +225,11 @@ fn env() -> Env {
     );
     let wlm: Arc<dyn WlmBridge> = bridge.clone();
     Env {
-        sched: KubeScheduler::new(api.client(), Metrics::new()),
-        hpa: HpaController::new(Duration::from_millis(1), Metrics::new()),
+        deploy_ctrl: DeploymentController::new(&informers),
+        sched: KubeScheduler::new(&informers, Metrics::new()),
+        hpa: HpaController::new(&informers, Duration::from_millis(1), Metrics::new()),
         ca,
-        core: AdmissionCore::new(Metrics::new()),
+        core: AdmissionCore::new(&informers, Metrics::new()),
         operator: WlmJobOperator::new(OperatorConfig::torque(), wlm, Metrics::new()),
         bridge,
         provisioner,

@@ -1,0 +1,343 @@
+//! Informer-layer integration (PR 4 acceptance):
+//!
+//! 1. **Zero full-list RPCs in steady state** — a counting `ApiClient`
+//!    wrapper proves that once seeded, scheduler + kueue admission + HPA
+//!    + cluster-autoscaler + deployment-controller + metrics-publish
+//!    cycles never issue a list again.
+//! 2. **Resync recovery** — kill the watch streams, change the world
+//!    (including a write burst larger than the store's retained history
+//!    window, so the old bookmark is truly gone), and assert the
+//!    reflectors relist, bump their resync epoch, the kueue ledger does a
+//!    full rebuild, and the recovered controller converges to exactly the
+//!    admitted set a fresh-start controller computes.
+
+use hpcorc::autoscale::{
+    publish_node_sample, CaConfig, ClusterAutoscaler, HpaController, HpaView, NodeProvisioner,
+    KIND_PODMETRICS,
+};
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::encoding::Value;
+use hpcorc::kube::{
+    ApiClient, ApiServer, Controller, DeploymentController, KubeObject, KubeScheduler,
+    ListOptions, NodeView, ObjectList, PodView, SharedInformerFactory, WatchEvent, KIND_POD,
+};
+use hpcorc::kueue::{
+    is_admitted, AdmissionCore, ClusterQueueView, LocalQueueView, QueueResources,
+    QUEUE_NAME_LABEL,
+};
+use hpcorc::rt::Shutdown;
+use hpcorc::util::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// ApiClient wrapper that counts list RPCs (and can sever watch streams
+/// on demand), delegating everything to an in-process ApiServer.
+struct InstrumentedApi {
+    api: ApiServer,
+    lists: AtomicU64,
+    /// Live watch-forwarder kill switches (sever to simulate a remote
+    /// server restart / stream loss).
+    taps: Mutex<Vec<Shutdown>>,
+}
+
+impl InstrumentedApi {
+    fn new(api: ApiServer) -> Arc<InstrumentedApi> {
+        Arc::new(InstrumentedApi { api, lists: AtomicU64::new(0), taps: Mutex::new(Vec::new()) })
+    }
+
+    fn lists(&self) -> u64 {
+        self.lists.load(Ordering::SeqCst)
+    }
+
+    fn reset_lists(&self) {
+        self.lists.store(0, Ordering::SeqCst);
+    }
+
+    fn kill_streams(&self) {
+        for sd in self.taps.lock().unwrap().drain(..) {
+            sd.trigger();
+        }
+        // Give the severed forwarders a beat to drop their senders.
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+impl ApiClient for InstrumentedApi {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api.create(obj)
+    }
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api.get(kind, name)
+    }
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        ApiServer::update(&self.api, obj)
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        self.api.update_status(kind, name, f)
+    }
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        self.api.patch_merge(kind, name, patch)
+    }
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api.delete(kind, name)
+    }
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api.apply(obj)
+    }
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        self.lists.fetch_add(1, Ordering::SeqCst);
+        self.api.list_opts(kind, opts)
+    }
+    fn watch(&self, kind: Option<&str>, from: u64) -> Result<Receiver<WatchEvent>> {
+        let upstream = ApiServer::watch(&self.api, kind, from);
+        let (tx, rx) = channel();
+        let sd = Shutdown::new();
+        self.taps.lock().unwrap().push(sd.clone());
+        hpcorc::rt::spawn_named("instrumented-watch", move || loop {
+            if sd.is_triggered() {
+                return; // drops tx: stream severed
+            }
+            match upstream.recv_timeout(Duration::from_millis(1)) {
+                Ok(ev) => {
+                    if tx.send(ev).is_err() {
+                        return;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(_) => return,
+            }
+        });
+        Ok(rx)
+    }
+    fn server_time_s(&self) -> Result<f64> {
+        Ok(self.api.now_s())
+    }
+}
+
+/// Node-object provisioner (control-loop cost only, no kubelets).
+struct ObjectProvisioner {
+    api: ApiServer,
+    capacity: Resources,
+}
+
+impl NodeProvisioner for ObjectProvisioner {
+    fn provision(&self, name: &str, labels: &[(&str, &str)]) -> Result<()> {
+        let mut node = NodeView::build(name, self.capacity, &[]);
+        for (k, v) in labels {
+            node.meta.set_label(k, v);
+        }
+        self.api.create(node)?;
+        Ok(())
+    }
+    fn deprovision(&self, _name: &str) -> Result<()> {
+        Ok(())
+    }
+}
+
+fn queued_pod(name: &str, queue: &str, cpu: u64) -> KubeObject {
+    let mut p = PodView::build(name, "img.sif", Resources::new(cpu, 1 << 20, 0), &[]);
+    hpcorc::kueue::queue_workload(&mut p, queue);
+    p
+}
+
+/// Acceptance: steady-state reconcile cycles of every control loop issue
+/// **zero** full-list RPCs — every read is served by the shared caches.
+#[test]
+fn steady_state_cycles_issue_zero_list_rpcs() {
+    let raw = ApiServer::new(Metrics::new());
+    raw.register_mutating_hook(hpcorc::kueue::admission_mutating_hook());
+    let counted = InstrumentedApi::new(raw.clone());
+    let client: Arc<dyn ApiClient> = counted.clone();
+    let informers = SharedInformerFactory::new(client, Metrics::new());
+
+    // Every control loop, built on the same shared caches.
+    let sched = KubeScheduler::new(&informers, Metrics::new());
+    let deploy_ctrl = DeploymentController::new(&informers);
+    let core = AdmissionCore::new(&informers, Metrics::new());
+    let hpa = HpaController::new(&informers, Duration::from_millis(1), Metrics::new());
+    let ca = ClusterAutoscaler::new(
+        &informers,
+        Arc::new(ObjectProvisioner { api: raw.clone(), capacity: Resources::cores(8, 64 << 30) }),
+        CaConfig { max_nodes: 2, burst_wlm: None, ..CaConfig::default() },
+        Metrics::new(),
+    );
+    let samples = informers.informer(KIND_PODMETRICS);
+
+    // ---- world: nodes, a sampled deployment + HPA, a kueue tenant ----
+    counted.create(NodeView::build("w1", Resources::cores(8, 64 << 30), &[])).unwrap();
+    counted
+        .create(DeploymentController::build(
+            "web",
+            2,
+            "svc.sif",
+            Resources::new(500, 64 << 20, 0),
+        ))
+        .unwrap();
+    counted.create(HpaView::build("h", "web", 1, 4, 50, Duration::ZERO)).unwrap();
+    counted.create(ClusterQueueView::build("cq", QueueResources::nodes(2))).unwrap();
+    counted.create(LocalQueueView::build("team", "cq")).unwrap();
+    counted.create(queued_pod("q0", "team", 100)).unwrap();
+    counted.create(queued_pod("q1", "team", 100)).unwrap();
+
+    let step = || {
+        let _ = deploy_ctrl.reconcile(counted.as_ref() as &dyn ApiClient, "web");
+        let _ = core.cycle(counted.as_ref() as &dyn ApiClient);
+        sched.run_cycle();
+        // Mark deployment pods Running so HPA has a stable signal.
+        for pod in raw.list(KIND_POD, &[("deployment".to_string(), "web".to_string())]) {
+            if pod.spec.opt_str("nodeName").is_some()
+                && pod.status.opt_str("phase") != Some("Running")
+            {
+                raw.update_status(KIND_POD, &pod.meta.name, |o| {
+                    o.status.insert("phase", "Running");
+                })
+                .unwrap();
+            }
+        }
+        publish_node_sample(
+            counted.as_ref() as &dyn ApiClient,
+            &samples,
+            "w1",
+            Resources::cores(8, 64 << 30),
+            &informers.informer(KIND_POD).list_by_field("spec.nodeName", "w1"),
+            &Metrics::new(),
+        );
+        let _ = hpa.reconcile(counted.as_ref() as &dyn ApiClient, "h");
+        let _ = ca.run_cycle();
+    };
+
+    // Converge: replicas placed + running, both queued pods admitted.
+    for _ in 0..10 {
+        step();
+    }
+    assert!(is_admitted(&raw.get(KIND_POD, "q0").unwrap()), "tenant pods admitted");
+    assert!(is_admitted(&raw.get(KIND_POD, "q1").unwrap()));
+    assert!(counted.lists() > 0, "seeding had to list at least once");
+
+    // ---- steady state: every loop cycles, nothing may list ----------
+    counted.reset_lists();
+    let rebuilds_before = core.ledger_rebuilds();
+    for _ in 0..25 {
+        step();
+    }
+    assert_eq!(
+        counted.lists(),
+        0,
+        "steady-state scheduler + kueue + autoscale cycles must issue zero list RPCs"
+    );
+    assert_eq!(
+        core.ledger_rebuilds(),
+        rebuilds_before,
+        "steady-state events must never force a ledger rebuild"
+    );
+}
+
+/// Acceptance: the 410-Gone flow. Sever the watch streams, mutate the
+/// world with a burst larger than the retained history window, and the
+/// reflectors must relist + bump their resync epoch, the kueue ledger
+/// must fully rebuild, and the recovered controller must converge to the
+/// same admitted set as a controller started fresh from the API.
+#[test]
+fn watch_loss_past_history_window_relists_and_rebuilds_ledger() {
+    // Tiny retained window: the blind-spot burst below evicts every
+    // bookmark the severed streams ever held.
+    let raw = ApiServer::with_history_cap(Metrics::new(), 64);
+    let counted = InstrumentedApi::new(raw.clone());
+    let client: Arc<dyn ApiClient> = counted.clone();
+    let informers = SharedInformerFactory::new(client, Metrics::new());
+    let core = AdmissionCore::new(&informers, Metrics::new());
+
+    counted.create(ClusterQueueView::build("cq", QueueResources::nodes(2))).unwrap();
+    counted.create(LocalQueueView::build("team", "cq")).unwrap();
+    counted.create(queued_pod("p0", "team", 100)).unwrap();
+    counted.create(queued_pod("p1", "team", 100)).unwrap();
+    counted.create(queued_pod("p2", "team", 100)).unwrap();
+
+    let r = core.cycle(counted.as_ref() as &dyn ApiClient).unwrap();
+    assert_eq!(r.admitted, 2, "2-node quota admits p0+p1");
+    assert!(!is_admitted(&raw.get(KIND_POD, "p2").unwrap()));
+    assert_eq!(core.ledger_rebuilds(), 1, "cold start built the ledger once");
+    let pod_epoch = informers.informer(KIND_POD).epoch();
+
+    // ---- the blind spot --------------------------------------------
+    counted.kill_streams();
+    // p0 completes (frees one node) while the informers see nothing...
+    raw.update_status(KIND_POD, "p0", |o| {
+        o.status.insert("phase", "Succeeded");
+    })
+    .unwrap();
+    // ...and a write burst far beyond the 64-event window guarantees the
+    // severed bookmarks fell out of retained history (a relist is the
+    // only possible recovery, not a replay).
+    raw.create(KubeObject::new("Widget", "spam", Value::map())).unwrap();
+    for i in 0..200u64 {
+        raw.update_status("Widget", "spam", |o| {
+            o.status.insert("n", i);
+        })
+        .unwrap();
+    }
+    let (_, _, reset) = raw.events_since(None, 1);
+    assert!(reset, "burst must overflow the retained history window");
+
+    // ---- recovery ---------------------------------------------------
+    let r = core.cycle(counted.as_ref() as &dyn ApiClient).unwrap();
+    assert!(
+        informers.informer(KIND_POD).epoch() > pod_epoch,
+        "stream loss must bump the resync epoch"
+    );
+    assert_eq!(core.ledger_rebuilds(), 2, "epoch bump must force a full ledger rebuild");
+    assert_eq!(r.admitted, 1, "freed quota admits p2 after recovery");
+    assert!(is_admitted(&raw.get(KIND_POD, "p1").unwrap()));
+    assert!(is_admitted(&raw.get(KIND_POD, "p2").unwrap()));
+
+    // ---- equivalence with a fresh start -----------------------------
+    // A brand-new controller over a brand-new factory sees the same
+    // world: it must agree completely (no admissions, no preemptions, no
+    // writes) — recovery converged to the fresh-start fixed point.
+    let fresh_informers =
+        SharedInformerFactory::new(counted.clone() as Arc<dyn ApiClient>, Metrics::new());
+    let fresh_core = AdmissionCore::new(&fresh_informers, Metrics::new());
+    let version_before = raw.current_version();
+    let r = fresh_core.cycle(counted.as_ref() as &dyn ApiClient).unwrap();
+    assert_eq!((r.admitted, r.preempted), (0, 0), "fresh start finds nothing to change");
+    assert_eq!(
+        raw.current_version(),
+        version_before,
+        "fresh start writes nothing: recovered state is already the fixed point"
+    );
+    let cq = ClusterQueueView::from_object(
+        &raw.get(hpcorc::kueue::KIND_CLUSTERQUEUE, "cq").unwrap(),
+    )
+    .unwrap();
+    assert_eq!((cq.pending, cq.admitted), (0, 2), "counts reflect the converged set");
+}
+
+/// The scheduler stays event-correct through the mutating hook: a pod
+/// born with a bare queue-name label can never be bound before its first
+/// admission cycle, even if the scheduler runs first.
+#[test]
+fn mutating_hook_closes_the_scheduler_race() {
+    let raw = ApiServer::new(Metrics::new());
+    raw.register_mutating_hook(hpcorc::kueue::admission_mutating_hook());
+    let informers = SharedInformerFactory::new(raw.client(), Metrics::new());
+    let sched = KubeScheduler::new(&informers, Metrics::new());
+    raw.create(NodeView::build("w1", Resources::cores(8, 64 << 30), &[])).unwrap();
+    // Bare label — no gate in the manifest, exactly the old race shape.
+    let mut bare = PodView::build("bare", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+    bare.meta.set_label(QUEUE_NAME_LABEL, "team");
+    raw.create(bare).unwrap();
+    // Scheduler runs before any admission cycle ever happened.
+    assert_eq!(sched.run_cycle(), 0, "hook-gated pod must not bind");
+    assert!(raw.get(KIND_POD, "bare").unwrap().spec.opt_str("nodeName").is_none());
+    // An unlabelled pod binds normally through the same path.
+    raw.create(PodView::build("plain", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+        .unwrap();
+    assert_eq!(sched.run_cycle(), 1);
+}

@@ -6,8 +6,8 @@
 
 use hpcorc::cluster::{Metrics, Resources};
 use hpcorc::kube::{
-    ApiServer, Controller, KubeObject, KubeScheduler, NodeView, PodView, WlmJobView,
-    KIND_POD, KIND_TORQUEJOB,
+    ApiServer, Controller, KubeObject, KubeScheduler, NodeView, PodView,
+    SharedInformerFactory, WlmJobView, KIND_POD, KIND_TORQUEJOB,
 };
 use hpcorc::kueue::{
     is_admitted, is_evicted, AdmissionCore, ClusterQueueView, LocalQueueView,
@@ -76,10 +76,11 @@ fn env() -> Env {
     let api = ApiServer::new(Metrics::new());
     let bridge = Arc::new(RecordingBridge::default());
     register_virtual_nodes(&api, bridge.as_ref(), "torque").unwrap();
-    let sched = KubeScheduler::new(api.client(), Metrics::new());
+    let informers = SharedInformerFactory::new(api.client(), Metrics::new());
+    let sched = KubeScheduler::new(&informers, Metrics::new());
     let wlm: Arc<dyn WlmBridge> = bridge.clone();
     let operator = WlmJobOperator::new(OperatorConfig::torque(), wlm, Metrics::new());
-    Env { api, core: AdmissionCore::new(Metrics::new()), sched, operator, bridge }
+    Env { api, core: AdmissionCore::new(&informers, Metrics::new()), sched, operator, bridge }
 }
 
 fn queued_pod(name: &str, queue: &str) -> KubeObject {
