@@ -12,17 +12,26 @@
 //!   place, clone nothing);
 //! - **event fan-out** — per-event cost of draining one watch delta into
 //!   the cache and delivering it to 8 subscribers.
+//! - **remote watch: streaming vs poll** (ISSUE 5) — idle RPC traffic
+//!   over a fixed window and end-to-end event-delivery latency of the
+//!   server-push streaming watch against the legacy poll fallback, over
+//!   a real red-box socket.
 //!
 //! Ends with one JSON line per stat (`{"bench":...}`) for the perf
 //! trajectory, including the acceptance ratio (cached read vs per-cycle
-//! list at 10k — must be ≥10×).
+//! list at 10k — must be ≥10×) and the streaming idle-traffic floor
+//! (must be zero RPCs).
 
 use hpcorc::bench::{header, Bench, Stats};
 use hpcorc::cluster::{Metrics, Resources};
 use hpcorc::kube::{
-    ApiClient, ApiServer, ListOptions, PodPhase, PodView, SharedInformerFactory, KIND_POD,
+    ApiClient, ApiServer, ListOptions, PodPhase, PodView, RemoteApi, SharedInformerFactory,
+    WatchConfig, KIND_POD,
 };
+use hpcorc::redbox::RedboxServer;
+use hpcorc::rt::Shutdown;
 use std::sync::Arc;
+use std::time::Duration;
 
 const NODES: usize = 20;
 
@@ -142,6 +151,63 @@ fn main() {
             }
         },
     ));
+
+    // Remote watch over a real socket: idle traffic + delivery latency,
+    // streaming vs the poll fallback (ISSUE 5).
+    let sd = Shutdown::new();
+    let sock = std::env::temp_dir()
+        .join(format!("hpcorc-bench-informer-{}.sock", std::process::id()));
+    let server_metrics = Metrics::new();
+    let mut srv = RedboxServer::start(&sock, sd.clone(), server_metrics.clone()).unwrap();
+    let api = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", api.rpc_service());
+    api.create(PodView::build("wp", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+        .unwrap();
+    const IDLE_WINDOW_MS: u64 = 300;
+    for (label, force_poll) in [("streaming", false), ("poll", true)] {
+        let remote = RemoteApi::connect(&sock)
+            .unwrap()
+            .with_watch_config(WatchConfig { force_poll, ..WatchConfig::default() });
+        let rx = ApiClient::watch(&remote, Some(KIND_POD), api.current_version()).unwrap();
+        // Idle traffic: requests crossing the socket while nothing happens.
+        let base = server_metrics.counter_value("redbox.requests");
+        std::thread::sleep(Duration::from_millis(IDLE_WINDOW_MS));
+        let idle_rpcs = server_metrics.counter_value("redbox.requests") - base;
+        println!(
+            "{{\"bench\":\"remote watch idle traffic ({label})\",\"window_ms\":{IDLE_WINDOW_MS},\"rpcs\":{idle_rpcs}}}"
+        );
+        if !force_poll {
+            assert_eq!(
+                idle_rpcs, 0,
+                "an idle streaming watch must issue zero RPCs (got {idle_rpcs})"
+            );
+        }
+        // End-to-end delivery latency: write → pushed/polled event seen.
+        let mut beat = 0i64;
+        stats.push(
+            Bench::new(format!("remote watch event delivery ({label})"))
+                .warmup(10)
+                .iters(200)
+                .run(|| {
+                    beat += 1;
+                    api.update_status(KIND_POD, "wp", |o| {
+                        o.status.insert("beat", beat as u64);
+                    })
+                    .unwrap();
+                    loop {
+                        match rx.recv_timeout(Duration::from_secs(5)) {
+                            Ok(ev) => {
+                                if ev.object().status.opt_int("beat") == Some(beat) {
+                                    break;
+                                }
+                            }
+                            Err(e) => panic!("watch ({label}) died: {e}"),
+                        }
+                    }
+                }),
+        );
+    }
+    srv.stop();
 
     println!();
     for s in &stats {

@@ -416,15 +416,14 @@ pub fn cmd_qdel(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-pub fn cmd_trace(args: &mut Args) -> Result<()> {
-    let sub = args.req_positional(1, "trace subcommand")?;
-    if sub != "gen" {
-        return Err(Error::config("only `trace gen` is supported"));
-    }
+/// Build a trace from `--kind` and its knobs — shared by `trace gen` and
+/// `sim --kind K` (the latter was advertised in the usage text but never
+/// implemented; the CI smoke run now exercises exactly this path).
+fn gen_trace(kind: &str, args: &Args) -> Result<Trace> {
     let seed: u64 = args.num("seed", 42)?;
     let jobs: usize = args.num("jobs", 200)?;
     let mut g = TraceGen::new(seed);
-    let trace = match args.flag_or("kind", "poisson").as_str() {
+    Ok(match kind {
         "poisson" => g.poisson_batch(jobs, args.num("capacity", 64)?, args.num("load", 0.7)?, args.num("mean-runtime", 120.0)?),
         "bursty" => g.bursty(jobs / 20, 20, 60.0),
         "cybele" => g.cybele_pilots(jobs / 10, jobs - jobs / 10, 1000.0),
@@ -449,7 +448,15 @@ pub fn cmd_trace(args: &mut Args) -> Result<()> {
             args.num("mean-runtime", 60.0)?,
         ),
         other => return Err(Error::config(format!("unknown trace kind `{other}`"))),
-    };
+    })
+}
+
+pub fn cmd_trace(args: &mut Args) -> Result<()> {
+    let sub = args.req_positional(1, "trace subcommand")?;
+    if sub != "gen" {
+        return Err(Error::config("only `trace gen` is supported"));
+    }
+    let trace = gen_trace(&args.flag_or("kind", "poisson"), args)?;
     let text = trace.to_json();
     match args.flag("out") {
         Some(path) => {
@@ -462,12 +469,13 @@ pub fn cmd_trace(args: &mut Args) -> Result<()> {
 }
 
 pub fn cmd_sim(args: &mut Args) -> Result<()> {
-    let trace = match args.flag("trace") {
-        Some(path) => Trace::from_json(&std::fs::read_to_string(path)?)?,
-        None => {
-            let mut g = TraceGen::new(args.num("seed", 42)?);
-            g.poisson_batch(args.num("jobs", 500)?, 128, args.num("load", 0.7)?, 120.0)
-        }
+    // `--trace FILE` replays a file; otherwise generate in place with the
+    // same defaults as `trace gen` — bare `sim` and `sim --kind poisson`
+    // must run the identical workload (e.g. `sim --kind tenants
+    // --quota-nodes 4` for the kueue path).
+    let trace = match (args.flag("trace"), args.flag("kind")) {
+        (Some(path), _) => Trace::from_json(&std::fs::read_to_string(path)?)?,
+        (None, kind) => gen_trace(kind.unwrap_or("poisson"), args)?,
     };
     let elastic_max: usize = args.num("elastic-max", 0)?;
     let params = SimParams {

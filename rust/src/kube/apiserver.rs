@@ -5,20 +5,38 @@
 //! the *same* surface: both [`ApiServer`] and [`RemoteApi`] implement
 //! [`ApiClient`], mirroring how the paper's login node hosts both the k8s
 //! master and the Unix-socket bridge. The RPC service (`kube.Api/*`)
-//! covers the full verb set including a poll-based watch, so a controller
-//! written against `Arc<dyn ApiClient>` runs unchanged on either side of
-//! the socket.
+//! covers the full verb set including watch, so a controller written
+//! against `Arc<dyn ApiClient>` runs unchanged on either side of the
+//! socket.
+//!
+//! # The remote watch (ISSUE 5): server-push streaming frames
+//!
+//! `kube.Api/Watch` with `stream: true` is a **server-streaming** method
+//! over red-box's multiplexed frame layer: the server subscribes to the
+//! store's event feed and pushes each event as a `StreamItem`, plus
+//! periodic `BOOKMARK` items when *other* kinds advance the store version
+//! (so the client's bookmark never silently staleness-drifts), and a
+//! `gone` `StreamEnd` when the requested bookmark has fallen out of the
+//! retained history window — the 410-Gone signal. An idle stream
+//! transmits **nothing**: no polls, no keepalives.
+//!
+//! [`RemoteApi::watch`] negotiates streaming by default and keeps the old
+//! poll loop only as an explicit fallback ([`WatchConfig::force_poll`],
+//! or a server that answers the poll shape). Either way stream loss
+//! surfaces as the same ended-receiver reset signal, so `Reflector`
+//! relist/epoch-bump machinery is transport-agnostic.
 
 use super::api::KubeObject;
 use super::client::{ApiClient, ListOptions, ObjectList};
 use super::store::{Store, WatchEvent};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
-use crate::redbox::{RedboxClient, Service};
+use crate::redbox::{RedboxClient, Reply, Service, StreamMsg, END_COMPLETE, END_GONE};
 use crate::rt;
 use crate::util::{Error, Result};
 use std::collections::HashSet;
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -26,12 +44,50 @@ use std::time::Duration;
 /// patch) — shared by both transports so their failure behavior matches.
 pub const MAX_CONFLICT_RETRIES: u32 = 16;
 
-/// How often the remote transport polls for new watch events while the
-/// stream is active; the poll backs off toward [`WATCH_POLL_IDLE_MAX`]
-/// while nothing happens (an abandoned-but-undetectable receiver then
-/// costs ~10 RPCs/s instead of 500).
+/// Default poll cadences for the *fallback* poll watch (see
+/// [`WatchConfig`]): poll fast while events flow, back off toward the
+/// idle max while nothing happens (an abandoned-but-undetectable receiver
+/// then costs ~10 RPCs/s instead of 500).
 const WATCH_POLL_PERIOD: Duration = Duration::from_millis(2);
 const WATCH_POLL_IDLE_MAX: Duration = Duration::from_millis(100);
+
+/// How often an *idle* streaming watch producer wakes to check whether
+/// other kinds advanced the store version (and pushes a `BOOKMARK` item
+/// if so). A fully idle store pushes nothing at all.
+const WATCH_BOOKMARK_PERIOD: Duration = Duration::from_millis(200);
+
+/// How a [`RemoteApi`] watch moves events across the socket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WatchMode {
+    /// Server-push streaming frames: zero idle traffic, sub-poll latency.
+    Streaming,
+    /// Poll loop — the explicit fallback for servers without stream
+    /// support.
+    Poll,
+}
+
+/// Remote-watch tuning. The poll cadences used to be hardcoded (ISSUE 5
+/// satellite); streaming is preferred whenever the server offers it.
+#[derive(Debug, Clone)]
+pub struct WatchConfig {
+    /// Poll cadence while events are flowing (poll mode only).
+    pub poll_active: Duration,
+    /// Ceiling the poll backs off to while idle (poll mode only).
+    pub poll_idle_max: Duration,
+    /// Skip stream negotiation and always poll — the explicit old-server
+    /// fallback (also what the parity/bench suites use to pin the mode).
+    pub force_poll: bool,
+}
+
+impl Default for WatchConfig {
+    fn default() -> WatchConfig {
+        WatchConfig {
+            poll_active: WATCH_POLL_PERIOD,
+            poll_idle_max: WATCH_POLL_IDLE_MAX,
+            force_poll: false,
+        }
+    }
+}
 
 /// A mutating-admission hook: runs on every object entering through the
 /// create path (both `create` and the create arm of `apply`, local or
@@ -246,6 +302,18 @@ impl ApiServer {
         self.store.watch(kind, from_version)
     }
 
+    /// Watch with the atomic 410 verdict (see [`Store::try_watch`]): the
+    /// streaming RPC path uses this to answer a stale bookmark with an
+    /// explicit `gone` StreamEnd instead of a silently-ended stream.
+    pub fn try_watch(
+        &self,
+        kind: Option<&str>,
+        from_version: u64,
+    ) -> (u64, Option<Receiver<WatchEvent>>) {
+        self.metrics.inc("kube.api.watch");
+        self.store.try_watch(kind, from_version)
+    }
+
     /// One-shot watch replay (the RPC transport's poll primitive). The
     /// third element is the 410-Gone-style reset flag: `from_version` fell
     /// out of the retained history window and the caller must relist.
@@ -387,6 +455,63 @@ struct ApiService {
     api: ApiServer,
 }
 
+impl ApiService {
+    /// The server-streaming Watch: subscribe to the store's event feed
+    /// and push every event as a stream item. A stale bookmark answers
+    /// with an immediate `gone` StreamEnd (410). While the watched kind
+    /// is idle but *other* kinds move the store version, periodic
+    /// `BOOKMARK` items keep the client's bookmark fresh; a fully idle
+    /// store pushes nothing at all.
+    fn watch_stream_reply(&self, body: &Value) -> Reply {
+        let kind = body.opt_str("kind").map(String::from);
+        let from = body.opt_int("fromVersion").unwrap_or(0) as u64;
+        self.api.metrics.inc("kube.api.watch_stream");
+        let (rv, maybe_rx) = self.api.try_watch(kind.as_deref(), from);
+        let initial = Value::map().with("streaming", true).with("resourceVersion", rv);
+        match maybe_rx {
+            // 410: the bookmark predates retained history. End at once —
+            // the client surfaces the reset and its consumer relists.
+            None => Reply::stream(initial, |sink| sink.end(END_GONE)),
+            Some(rx) => {
+                let api = self.api.clone();
+                Reply::stream(initial, move |mut sink| {
+                    // Highest version the client is known to have seen.
+                    let mut last = rv;
+                    loop {
+                        match rx.recv_timeout(WATCH_BOOKMARK_PERIOD) {
+                            Ok(ev) => {
+                                last = last.max(ev.object().meta.resource_version);
+                                if !sink.item(ev.encode()) {
+                                    return; // cancelled / connection gone
+                                }
+                            }
+                            Err(RecvTimeoutError::Timeout) => {
+                                if sink.is_cancelled() {
+                                    return;
+                                }
+                                let v = api.current_version();
+                                if v > last {
+                                    last = v;
+                                    let bookmark = Value::map()
+                                        .with("type", "BOOKMARK")
+                                        .with("resourceVersion", v);
+                                    if !sink.item(bookmark) {
+                                        return;
+                                    }
+                                }
+                            }
+                            Err(RecvTimeoutError::Disconnected) => {
+                                sink.end(END_COMPLETE);
+                                return;
+                            }
+                        }
+                    }
+                })
+            }
+        }
+    }
+}
+
 impl Service for ApiService {
     fn call(&self, method: &str, body: &Value) -> Result<Value> {
         match method {
@@ -441,6 +566,16 @@ impl Service for ApiService {
             other => Err(Error::rpc(format!("kube.Api has no method `{other}`"))),
         }
     }
+
+    /// Streaming-capable dispatch: `Watch` with `stream: true` becomes a
+    /// server stream; everything else (including the poll-shaped `Watch`
+    /// kept for old clients) stays unary.
+    fn call_full(&self, method: &str, body: &Value) -> Result<Reply> {
+        if method == "Watch" && body.opt_bool("stream") == Some(true) {
+            return Ok(self.watch_stream_reply(body));
+        }
+        self.call(method, body).map(Reply::Unary)
+    }
 }
 
 /// Client-side mirror of the RPC surface: [`ApiClient`] over a red-box
@@ -448,26 +583,181 @@ impl Service for ApiService {
 /// structured detail ([`crate::util::Error::encode_wire`]) that
 /// `RedboxClient` decodes back into the exact variant, so a remote
 /// caller's `is_not_found()`/`is_conflict()` behave like an in-process
-/// caller's. Watch is poll-based — a background thread replays
-/// `kube.Api/Watch` from its bookmark version and feeds a channel, giving
-/// remote callers the same `Receiver<WatchEvent>` shape as in-process
-/// ones. The poll thread ends when the server goes away or when it first
-/// fails to deliver an event to a dropped receiver.
+/// caller's.
+///
+/// Watch is **push-based**: `watch()` opens a server stream on the shared
+/// multiplexed connection and a demux thread feeds the returned channel —
+/// an idle watch transmits nothing. Servers that answer the poll shape
+/// (no `streaming: true` in the response) fall back to the poll loop, as
+/// does [`WatchConfig::force_poll`]. In both modes the stream/poll thread
+/// ends — and the receiver observes the hangup, the reset signal — on
+/// server loss, a 410-Gone end, or a dropped receiver.
 pub struct RemoteApi {
     client: RedboxClient,
+    watch_cfg: WatchConfig,
+    /// Mode of the most recently opened watch (parity tests print this).
+    last_watch_mode: Mutex<Option<WatchMode>>,
+    /// Highest `BOOKMARK` resourceVersion observed on any streaming
+    /// watch — proves idle bookmark frames keep the client current.
+    watch_bookmark: Arc<AtomicU64>,
 }
 
 impl RemoteApi {
     pub fn new(client: RedboxClient) -> RemoteApi {
-        RemoteApi { client }
+        RemoteApi {
+            client,
+            watch_cfg: WatchConfig::default(),
+            last_watch_mode: Mutex::new(None),
+            watch_bookmark: Arc::new(AtomicU64::new(0)),
+        }
     }
 
     pub fn connect(path: impl AsRef<std::path::Path>) -> Result<RemoteApi> {
         Ok(RemoteApi::new(RedboxClient::connect(path)?))
     }
 
+    /// Override the watch tuning (poll cadences / forced poll fallback).
+    pub fn with_watch_config(mut self, cfg: WatchConfig) -> RemoteApi {
+        self.watch_cfg = cfg;
+        self
+    }
+
+    /// Which transport mode the most recent `watch()` negotiated.
+    pub fn last_watch_mode(&self) -> Option<WatchMode> {
+        *self.last_watch_mode.lock().unwrap()
+    }
+
+    /// Highest bookmark version pushed by any streaming watch so far.
+    pub fn watch_bookmark(&self) -> u64 {
+        self.watch_bookmark.load(Ordering::Relaxed)
+    }
+
     fn obj_call(&self, method: &str, body: Value) -> Result<KubeObject> {
         KubeObject::decode(&self.client.call(&format!("kube.Api/{method}"), body)?)
+    }
+
+    /// Try the streaming watch. `Ok(None)` = the server answered the poll
+    /// shape (no stream support): caller falls back. Transport errors
+    /// propagate so reflectors retry like any other failed watch.
+    fn watch_streaming(
+        &self,
+        kind: Option<&str>,
+        from_version: u64,
+    ) -> Result<Option<Receiver<WatchEvent>>> {
+        let mut body = Value::map().with("fromVersion", from_version).with("stream", true);
+        if let Some(k) = kind {
+            body.insert("kind", k);
+        }
+        let (initial, stream) = self.client.open_stream("kube.Api/Watch", body)?;
+        if initial.opt_bool("streaming") != Some(true) {
+            return Ok(None); // old server: it replayed the poll shape
+        }
+        let (tx, rx) = channel();
+        let bookmark = self.watch_bookmark.clone();
+        rt::spawn_named("kube-remote-watch-stream", move || loop {
+            match stream.recv() {
+                Ok(StreamMsg::Item(v)) => {
+                    if v.opt_str("type") == Some("BOOKMARK") {
+                        if let Some(rv) = v.opt_int("resourceVersion") {
+                            bookmark.fetch_max(rv as u64, Ordering::Relaxed);
+                        }
+                        continue; // bookmarks never reach the consumer
+                    }
+                    match WatchEvent::decode(&v) {
+                        Ok(ev) => {
+                            if tx.send(ev).is_err() {
+                                return; // receiver dropped: unsubscribes
+                            }
+                        }
+                        // Undecodable event (version skew): end the
+                        // stream so the consumer relists instead of
+                        // silently losing it.
+                        Err(_) => return,
+                    }
+                }
+                // Explicit end (gone / complete / cancelled) and
+                // connection loss both surface identically: the dropped
+                // sender is the reset signal consumers already handle.
+                Ok(StreamMsg::End(_)) | Err(_) => return,
+            }
+        });
+        Ok(Some(rx))
+    }
+
+    /// The legacy poll loop, kept as the explicit fallback. Cadences come
+    /// from [`WatchConfig`] instead of hardcoded constants.
+    fn watch_poll(
+        &self,
+        kind: Option<&str>,
+        from_version: u64,
+    ) -> Result<Receiver<WatchEvent>> {
+        let (tx, rx) = channel();
+        // Dedicated connection so the poll loop never competes with this
+        // handle's request traffic on very old servers.
+        let client = RedboxClient::connect(self.client.path())?;
+        let kind = kind.map(String::from);
+        let mut from = from_version;
+        let cfg = self.watch_cfg.clone();
+        let mut period = cfg.poll_active;
+        rt::spawn_named("kube-remote-watch", move || loop {
+            let mut body = Value::map().with("fromVersion", from);
+            if let Some(k) = &kind {
+                body.insert("kind", k.clone());
+            }
+            let resp = match client.call("kube.Api/Watch", body) {
+                Ok(v) => v,
+                // Server gone: end of stream; the receiver observes the
+                // hangup exactly as it would a dropped local watcher.
+                Err(_) => return,
+            };
+            // 410 Gone: the bookmark fell out of the server's retained
+            // history, so events may be lost. End the stream — consumers
+            // (e.g. ControllerRunner) respond by relisting + rewatching.
+            if resp.opt_bool("reset").unwrap_or(false) {
+                return;
+            }
+            if let Some(rv) = resp.opt_int("resourceVersion") {
+                let rv = rv as u64;
+                // Server version below our bookmark: the server restarted
+                // with a fresh store. Filtering by `> from` would silently
+                // drop everything until it caught up — end the stream so
+                // consumers relist instead.
+                if rv < from {
+                    return;
+                }
+                from = rv;
+            }
+            let events = resp.get("events").and_then(Value::as_seq).unwrap_or(&[]);
+            let drained = !events.is_empty();
+            for ev_v in events {
+                match WatchEvent::decode(ev_v) {
+                    Ok(ev) => {
+                        if tx.send(ev).is_err() {
+                            return; // receiver dropped
+                        }
+                    }
+                    // Undecodable event (client/server version skew): the
+                    // bookmark already moved past it, so end the stream —
+                    // consumers relist instead of silently losing it.
+                    Err(_) => return,
+                }
+            }
+            // Backoff invariant (audited for ISSUE-2): any event batch
+            // snaps the next poll back to the active cadence; only empty
+            // polls back off (doubling toward the idle max). The server
+            // replays *every* event since the bookmark in a single
+            // response, so one active-cadence poll fully drains a burst
+            // that accumulated while backed off — and every poll sleeps
+            // at least the active period, keeping a sustained stream
+            // paced instead of becoming a busy RPC loop.
+            period = if drained {
+                cfg.poll_active
+            } else {
+                (period * 2).min(cfg.poll_idle_max)
+            };
+            std::thread::sleep(period);
+        });
+        Ok(rx)
     }
 }
 
@@ -538,72 +828,14 @@ impl ApiClient for RemoteApi {
     }
 
     fn watch(&self, kind: Option<&str>, from_version: u64) -> Result<Receiver<WatchEvent>> {
-        let (tx, rx) = channel();
-        // Dedicated connection so the poll loop never serializes behind
-        // this handle's request/response mutex.
-        let client = RedboxClient::connect(self.client.path())?;
-        let kind = kind.map(String::from);
-        let mut from = from_version;
-        let mut period = WATCH_POLL_PERIOD;
-        rt::spawn_named("kube-remote-watch", move || loop {
-            let mut body = Value::map().with("fromVersion", from);
-            if let Some(k) = &kind {
-                body.insert("kind", k.clone());
+        if !self.watch_cfg.force_poll {
+            if let Some(rx) = self.watch_streaming(kind, from_version)? {
+                *self.last_watch_mode.lock().unwrap() = Some(WatchMode::Streaming);
+                return Ok(rx);
             }
-            let resp = match client.call("kube.Api/Watch", body) {
-                Ok(v) => v,
-                // Server gone: end of stream; the receiver observes the
-                // hangup exactly as it would a dropped local watcher.
-                Err(_) => return,
-            };
-            // 410 Gone: the bookmark fell out of the server's retained
-            // history, so events may be lost. End the stream — consumers
-            // (e.g. ControllerRunner) respond by relisting + rewatching.
-            if resp.opt_bool("reset").unwrap_or(false) {
-                return;
-            }
-            if let Some(rv) = resp.opt_int("resourceVersion") {
-                let rv = rv as u64;
-                // Server version below our bookmark: the server restarted
-                // with a fresh store. Filtering by `> from` would silently
-                // drop everything until it caught up — end the stream so
-                // consumers relist instead.
-                if rv < from {
-                    return;
-                }
-                from = rv;
-            }
-            let events = resp.get("events").and_then(Value::as_seq).unwrap_or(&[]);
-            let drained = !events.is_empty();
-            for ev_v in events {
-                match WatchEvent::decode(ev_v) {
-                    Ok(ev) => {
-                        if tx.send(ev).is_err() {
-                            return; // receiver dropped
-                        }
-                    }
-                    // Undecodable event (client/server version skew): the
-                    // bookmark already moved past it, so end the stream —
-                    // consumers relist instead of silently losing it.
-                    Err(_) => return,
-                }
-            }
-            // Backoff invariant (audited for ISSUE-2): any event batch
-            // snaps the next poll back to the 2 ms active cadence; only
-            // empty polls back off (doubling toward the idle max). The
-            // server replays *every* event since the bookmark in a single
-            // response, so one active-cadence poll fully drains a burst
-            // that accumulated while backed off — and every poll sleeps
-            // at least the active period, keeping a sustained stream
-            // paced instead of becoming a busy RPC loop.
-            period = if drained {
-                WATCH_POLL_PERIOD
-            } else {
-                (period * 2).min(WATCH_POLL_IDLE_MAX)
-            };
-            std::thread::sleep(period);
-        });
-        Ok(rx)
+        }
+        *self.last_watch_mode.lock().unwrap() = Some(WatchMode::Poll);
+        self.watch_poll(kind, from_version)
     }
 
     fn server_time_s(&self) -> Result<f64> {
@@ -617,7 +849,7 @@ mod tests {
     use super::*;
     use crate::encoding::Value;
     use crate::kube::api::{KIND_DEPLOYMENT, KIND_POD};
-    use crate::redbox::RedboxServer;
+    use crate::redbox::{FnService, RedboxServer};
     use crate::rt::Shutdown;
     use std::time::Instant;
 
@@ -975,6 +1207,134 @@ mod tests {
         // Unknown RPC method stays an untyped transport error.
         let e = remote.client.call("kube.Api/Nope", Value::map()).unwrap_err();
         assert!(matches!(e, Error::Rpc(_)), "got {e}");
+        srv.stop();
+    }
+
+    #[test]
+    fn streaming_watch_pushes_without_polling() {
+        let (_sd, mut srv, a, remote) = rpc_pair("push");
+        let rx = ApiClient::watch(&remote, Some(KIND_POD), 0).unwrap();
+        assert_eq!(remote.last_watch_mode(), Some(WatchMode::Streaming));
+        // Idle: nothing crosses the socket (the poll path issued ~10-500
+        // requests per second here).
+        let base = srv.metrics().counter_value("redbox.requests");
+        std::thread::sleep(Duration::from_millis(120));
+        assert_eq!(
+            srv.metrics().counter_value("redbox.requests"),
+            base,
+            "an idle streaming watch must transmit nothing"
+        );
+        // Events are pushed, still without a single extra request.
+        a.create(pod("w")).unwrap();
+        let ev = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(ev.object().meta.name, "w");
+        assert_eq!(
+            srv.metrics().counter_value("redbox.requests"),
+            base,
+            "event delivery is server-push, not poll"
+        );
+        srv.stop();
+    }
+
+    #[test]
+    fn streaming_negotiation_falls_back_to_poll_on_old_server() {
+        let sd = Shutdown::new();
+        let path = std::env::temp_dir()
+            .join(format!("hpcorc-kubeapi-fallback-{}.sock", std::process::id()));
+        let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+        let a = api();
+        // An "old" kube.Api: strictly unary, poll-shaped Watch only —
+        // it silently ignores the `stream` flag like any pre-frame peer.
+        let poll_api = a.clone();
+        srv.register(
+            "kube.Api",
+            Arc::new(FnService(move |method: &str, body: &Value| {
+                match method {
+                    "Watch" => {
+                        let kind = body.opt_str("kind");
+                        let from = body.opt_int("fromVersion").unwrap_or(0) as u64;
+                        let (rv, events, reset) = poll_api.events_since(kind, from);
+                        Ok(Value::map()
+                            .with("resourceVersion", rv)
+                            .with("reset", reset)
+                            .with(
+                                "events",
+                                Value::Seq(events.iter().map(WatchEvent::encode).collect()),
+                            ))
+                    }
+                    other => Err(Error::rpc(format!("old server has no `{other}`"))),
+                }
+            })),
+        );
+        let remote = RemoteApi::connect(&path).unwrap();
+        let rx = ApiClient::watch(&remote, Some(KIND_POD), 0).unwrap();
+        assert_eq!(remote.last_watch_mode(), Some(WatchMode::Poll), "negotiation fell back");
+        a.create(pod("p")).unwrap();
+        let ev = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(ev.object().meta.name, "p");
+        srv.stop();
+    }
+
+    #[test]
+    fn streaming_watch_stale_bookmark_gets_gone_end() {
+        let sd = Shutdown::new();
+        let path = std::env::temp_dir()
+            .join(format!("hpcorc-kubeapi-gone-{}.sock", std::process::id()));
+        let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+        let a = ApiServer::with_history_cap(Metrics::new(), 16);
+        srv.register("kube.Api", a.rpc_service());
+        a.create(pod("seed")).unwrap();
+        for i in 0..50 {
+            a.update_status(KIND_POD, "seed", |o| {
+                o.status.insert("n", i as u64);
+            })
+            .unwrap();
+        }
+        let remote = RemoteApi::connect(&path).unwrap();
+        // Bookmark 1 predates the 16-event window: the server answers
+        // with an immediate `gone` StreamEnd; the receiver is simply an
+        // ended stream with zero events — identical to the in-process
+        // stale-watch contract.
+        let rx = ApiClient::watch(&remote, Some(KIND_POD), 1).unwrap();
+        assert_eq!(remote.last_watch_mode(), Some(WatchMode::Streaming));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(ev) => panic!("410 stream must replay nothing, got {ev:?}"),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    assert!(Instant::now() < deadline, "stream never ended");
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn bookmarks_track_foreign_kind_churn() {
+        let (_sd, mut srv, a, remote) = rpc_pair("bookmark");
+        // Watch Pods from the current version, then churn only Nodes:
+        // no Pod events exist, but periodic BOOKMARK frames must keep
+        // the client's bookmark at the store's version.
+        let rx = ApiClient::watch(&remote, Some(KIND_POD), a.current_version()).unwrap();
+        for i in 0..5 {
+            a.create(KubeObject::new("Node", format!("n{i}"), Value::map())).unwrap();
+        }
+        let target = a.current_version();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while remote.watch_bookmark() < target {
+            assert!(
+                Instant::now() < deadline,
+                "bookmark stuck at {} (want {target})",
+                remote.watch_bookmark()
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // The foreign churn never surfaced as events.
+        assert!(
+            matches!(rx.try_recv(), Err(std::sync::mpsc::TryRecvError::Empty)),
+            "bookmarks must be invisible to the event consumer"
+        );
         srv.stop();
     }
 

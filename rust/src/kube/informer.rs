@@ -6,7 +6,10 @@
 //! (paged) list, then tails `watch()` events into it forever; consumers
 //! read the cache and subscribe to its event stream. This module is that
 //! pattern over the PR 1 [`ApiClient`] trait, so the same reflector runs
-//! in-process next to the store or across the red-box socket:
+//! in-process next to the store or across the red-box socket — and since
+//! the remote watch is server-push (ISSUE 5), a steady-state informer is
+//! RPC-silent on either transport: events arrive as pushed frames, and
+//! `sync()` only drains a local channel:
 //!
 //! - [`Informer`] — a shared per-kind read handle: `get`/`list`, indexed
 //!   reads ([`Informer::list_labelled`], [`Informer::list_by_field`],

@@ -20,7 +20,16 @@
 //!   [`ApiServer`] and the socket-backed [`RemoteApi`] both implement it
 //!   with identical semantics (see `tests/api_parity.rs`), so controllers
 //!   hold `Arc<dyn ApiClient>` and never care which side of the red-box
-//!   socket they run on.
+//!   socket they run on. The remote watch is **server-push** (ISSUE 5):
+//!   `kube.Api/Watch stream:true` rides red-box's multiplexed frame
+//!   layer, the server pushes events (+ periodic `BOOKMARK` frames, + a
+//!   `gone` StreamEnd for stale bookmarks — the 410 signal), and an idle
+//!   watch transmits nothing. Fallback negotiation is automatic: a server
+//!   that answers the poll shape (or [`WatchConfig::force_poll`]) drops
+//!   the client into the legacy poll loop with configurable cadences;
+//!   [`RemoteApi::last_watch_mode`] reports which mode a watch got.
+//!   Stream loss surfaces identically in both modes (ended receiver →
+//!   relist + rewatch), so consumers never know the difference.
 //! - **[`Api<K>`]** is the typed handle: `Api::<PodView>::new(client)`
 //!   returns [`PodView`]s instead of raw [`KubeObject`] trees, the kube-rs
 //!   shape. Views implement [`ResourceView`]; a view family covering
@@ -78,6 +87,10 @@
 //! watch-history window ([`ApiServer::with_history_cap`]) above the
 //! largest expected write burst, or reflectors are forced into spurious
 //! relists.
+//!
+//! Remote informers are push-fed: over a streaming [`RemoteApi`] watch,
+//! an **idle informer performs zero RPC round-trips** (proven in
+//! `tests/informer.rs`) — the last per-cycle polling hot path is gone.
 
 pub mod api;
 pub mod apiserver;
@@ -96,7 +109,9 @@ pub use api::{
     ObjectMeta, PodPhase, PodView, WlmJobView, KIND_DEPLOYMENT, KIND_NODE, KIND_POD,
     KIND_SLURMJOB, KIND_TORQUEJOB, WLM_API_VERSION,
 };
-pub use apiserver::{ApiServer, MutatingHook, RemoteApi, MAX_CONFLICT_RETRIES};
+pub use apiserver::{
+    ApiServer, MutatingHook, RemoteApi, WatchConfig, WatchMode, MAX_CONFLICT_RETRIES,
+};
 pub use client::{Api, ApiClient, ListOptions, ObjectList, ResourceView};
 pub use controller::{Controller, ControllerRunner, Reconcile};
 pub use deployment::DeploymentController;

@@ -231,10 +231,28 @@ impl Store {
     /// rewatches. The staleness check happens under the same lock as the
     /// replay + registration, so it cannot race a concurrent trim.
     pub fn watch(&self, kind: Option<&str>, from_version: u64) -> Receiver<WatchEvent> {
+        match self.try_watch(kind, from_version) {
+            (_, Some(rx)) => rx,
+            (_, None) => channel().1, // tx dropped: ended stream (410)
+        }
+    }
+
+    /// Watch with an explicit 410 verdict: `None` when `from_version` has
+    /// fallen out of the retained history window (the caller must relist
+    /// instead of trusting a replay), otherwise the replay-then-live
+    /// receiver of [`Store::watch`]. Also returns the store version at
+    /// registration — the stream's starting bookmark. The staleness
+    /// check, the replay, and the registration all happen under one lock,
+    /// so they cannot race a concurrent trim.
+    pub fn try_watch(
+        &self,
+        kind: Option<&str>,
+        from_version: u64,
+    ) -> (u64, Option<Receiver<WatchEvent>>) {
         let (tx, rx) = channel();
         let mut inner = self.inner.lock().unwrap();
         if from_version < inner.trimmed_through {
-            return rx; // tx dropped: ended stream
+            return (inner.version, None);
         }
         for (v, ev) in inner.history.iter() {
             if *v > from_version
@@ -244,7 +262,7 @@ impl Store {
             }
         }
         inner.watchers.push(Watcher { kind: kind.map(String::from), tx });
-        rx
+        (inner.version, Some(rx))
     }
 
     /// One-shot replay: events for `kind` (None = all) newer than
@@ -423,6 +441,29 @@ mod tests {
         let rx = s.watch(Some(KIND_POD), s.current_version());
         s.create(pod("later")).unwrap();
         assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn try_watch_reports_gone_explicitly() {
+        let s = Store::new();
+        let first = s.create(pod("seed")).unwrap().meta.resource_version;
+        for i in 0..DEFAULT_HISTORY_CAP + 8 {
+            let mut o = s.get(KIND_POD, "seed").unwrap();
+            o.status.insert("n", i as u64);
+            s.update(o).unwrap();
+        }
+        // Stale bookmark: an explicit None (the streaming RPC path turns
+        // this into a `gone` StreamEnd), with the current version so the
+        // caller can relist from it.
+        let (rv, maybe) = s.try_watch(Some(KIND_POD), first);
+        assert_eq!(rv, s.current_version());
+        assert!(maybe.is_none(), "stale bookmark must be an explicit 410");
+        // Fresh bookmark: a live stream.
+        let (rv2, live) = s.try_watch(Some(KIND_POD), s.current_version());
+        assert_eq!(rv2, s.current_version());
+        let live = live.unwrap();
+        s.create(pod("later")).unwrap();
+        assert_eq!(live.try_iter().count(), 1);
     }
 
     #[test]

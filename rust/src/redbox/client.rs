@@ -1,19 +1,242 @@
-//! red-box client: synchronous request/response over the Unix socket,
-//! thread-safe (a mutex serializes frames per connection — the operator's
-//! call pattern is low-rate control traffic), with lazy reconnect.
+//! red-box client: multiplexed request/response and server streams over
+//! one Unix socket, with lazy reconnect.
+//!
+//! Each connection runs a **demux reader thread**: responses route to the
+//! caller that sent the matching request id, stream items route to the
+//! per-stream channel registered when the stream was opened. Concurrent
+//! calls from many threads therefore share one socket without
+//! serializing behind each other — only the frame write itself is
+//! mutex-guarded. An idle connection transmits nothing: there is no
+//! polling anywhere in this client.
+//!
+//! Stream lifecycle: [`RedboxClient::open_stream`] sends a request and
+//! returns the initial response body plus a [`ClientStream`] of
+//! [`StreamMsg`]s. The stream ends when the server sends `StreamEnd`
+//! (explicit [`StreamMsg::End`]) or the connection dies (the channel
+//! disconnects with no `End` — stream loss). Dropping the `ClientStream`
+//! unregisters it; the demux thread answers any later item with a cancel
+//! frame so the server stops producing.
 
-use super::proto::{read_frame, write_frame, Request, Response};
+use super::proto::{read_frame, write_frame, Frame, Request, Response, END_CANCELLED};
 use crate::encoding::Value;
 use crate::util::{Error, Result};
+use std::collections::HashMap;
 use std::os::unix::net::UnixStream;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, Receiver, RecvError, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
+
+/// One message of a client-side stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamMsg {
+    /// One pushed item (seq continuity is checked by the demux thread).
+    Item(Value),
+    /// Explicit server end with its reason (`END_*` constants in
+    /// [`super::proto`]). A stream whose channel disconnects *without*
+    /// an `End` lost its connection instead.
+    End(String),
+}
+
+struct StreamRoute {
+    tx: Sender<StreamMsg>,
+    next_seq: u64,
+}
+
+/// Demux routing state. `dead` is flipped under the same lock that guards
+/// the maps, so registrations cannot race the reader thread's final
+/// drain: once dead, nothing new registers and everything in flight has
+/// been failed.
+struct Routes {
+    dead: bool,
+    pending: HashMap<u64, Sender<Response>>,
+    streams: HashMap<u64, StreamRoute>,
+}
+
+struct Conn {
+    writer: Arc<Mutex<UnixStream>>,
+    routes: Arc<Mutex<Routes>>,
+    /// Socket handle used to unblock the reader thread when this
+    /// connection is abandoned (reconnect or client drop).
+    control: UnixStream,
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        let _ = self.control.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl Conn {
+    /// Register a pending-response slot and send the request. `Err` means
+    /// this connection is unusable (the caller reconnects and retries).
+    fn send_request(&self, req: &Request) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        {
+            let mut r = self.routes.lock().unwrap();
+            if r.dead {
+                return Err(Error::rpc("connection closed"));
+            }
+            r.pending.insert(req.id, tx);
+        }
+        let wrote = {
+            let mut w = self.writer.lock().unwrap();
+            write_frame(&mut *w, &req.encode())
+        };
+        if let Err(e) = wrote {
+            self.routes.lock().unwrap().pending.remove(&req.id);
+            return Err(e);
+        }
+        Ok(rx)
+    }
+
+    fn register_stream(&self, id: u64) -> Result<Receiver<StreamMsg>> {
+        let (tx, rx) = channel();
+        let mut r = self.routes.lock().unwrap();
+        if r.dead {
+            return Err(Error::rpc("connection closed"));
+        }
+        r.streams.insert(id, StreamRoute { tx, next_seq: 0 });
+        Ok(rx)
+    }
+
+    fn drop_stream(&self, id: u64) {
+        self.routes.lock().unwrap().streams.remove(&id);
+    }
+}
+
+/// The demux loop: routes every incoming frame by id, then fails all
+/// in-flight work when the connection ends.
+fn reader_loop(
+    mut stream: UnixStream,
+    writer: Arc<Mutex<UnixStream>>,
+    routes: Arc<Mutex<Routes>>,
+) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(v)) => v,
+            Ok(None) | Err(_) => break,
+        };
+        let frame = match Frame::decode(&frame) {
+            Ok(f) => f,
+            Err(_) => break, // protocol corruption: poison the connection
+        };
+        match frame {
+            Frame::Response(resp) => {
+                let tx = routes.lock().unwrap().pending.remove(&resp.id);
+                match tx {
+                    Some(tx) => {
+                        let _ = tx.send(resp);
+                    }
+                    // id 0 = the server could not parse one of our frames;
+                    // any other unknown id means demux state is corrupt.
+                    // Either way the connection cannot be trusted.
+                    None => break,
+                }
+            }
+            Frame::StreamItem { id, seq, body } => {
+                let mut cancel = false;
+                {
+                    let mut r = routes.lock().unwrap();
+                    match r.streams.get_mut(&id) {
+                        Some(route) => {
+                            if seq != route.next_seq {
+                                // A gap means lost items: end the stream
+                                // so the consumer relists instead of
+                                // trusting a hole.
+                                r.streams.remove(&id);
+                                cancel = true;
+                            } else {
+                                route.next_seq += 1;
+                                if route.tx.send(StreamMsg::Item(body)).is_err() {
+                                    // Consumer went away.
+                                    r.streams.remove(&id);
+                                    cancel = true;
+                                }
+                            }
+                        }
+                        // Item for a stream we dropped: re-signal cancel.
+                        None => cancel = true,
+                    }
+                }
+                if cancel {
+                    // Off the reader thread: the reader must never block
+                    // on the writer mutex — if both directions' socket
+                    // buffers filled, a reader waiting to write while
+                    // writers wait for the peer to read would deadlock
+                    // the connection. Cancels are rare (stream teardown
+                    // only), so a short-lived thread is fine.
+                    let writer = writer.clone();
+                    crate::rt::spawn_named("redbox-cancel", move || {
+                        let end = Frame::StreamEnd { id, reason: END_CANCELLED.into() };
+                        let mut w = writer.lock().unwrap();
+                        let _ = write_frame(&mut *w, &end.encode());
+                    });
+                }
+            }
+            Frame::StreamEnd { id, reason } => {
+                let route = routes.lock().unwrap().streams.remove(&id);
+                if let Some(route) = route {
+                    let _ = route.tx.send(StreamMsg::End(reason));
+                }
+            }
+            Frame::Request(_) => break, // servers do not send requests
+        }
+    }
+    // Connection over: dropping the senders fails every pending call
+    // (disconnect) and ends every stream without an `End` (stream loss).
+    let mut r = routes.lock().unwrap();
+    r.dead = true;
+    r.pending.clear();
+    r.streams.clear();
+}
+
+/// A live server stream. Receive with [`ClientStream::recv`] /
+/// [`ClientStream::recv_timeout`]; drop to unsubscribe (the server is
+/// told to stop on its next push).
+pub struct ClientStream {
+    rx: Receiver<StreamMsg>,
+    id: u64,
+    conn: Weak<Conn>,
+}
+
+impl ClientStream {
+    pub fn recv(&self) -> std::result::Result<StreamMsg, RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn recv_timeout(
+        &self,
+        d: Duration,
+    ) -> std::result::Result<StreamMsg, RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<StreamMsg, TryRecvError> {
+        self.rx.try_recv()
+    }
+}
+
+impl Drop for ClientStream {
+    fn drop(&mut self) {
+        let Some(conn) = self.conn.upgrade() else { return };
+        let was_live = conn.routes.lock().unwrap().streams.remove(&self.id).is_some();
+        if was_live {
+            // The server does not know we stopped listening until told:
+            // without this cancel, an *idle* stream's producer thread
+            // (and its store watcher) would live until the connection
+            // closes — there is no next item to bounce a cancel off.
+            let end = Frame::StreamEnd { id: self.id, reason: END_CANCELLED.into() };
+            let mut w = conn.writer.lock().unwrap();
+            let _ = write_frame(&mut *w, &end.encode());
+        }
+    }
+}
 
 pub struct RedboxClient {
     path: PathBuf,
-    conn: Mutex<Option<UnixStream>>,
+    conn: Mutex<Option<Arc<Conn>>>,
     next_id: AtomicU64,
 }
 
@@ -21,11 +244,10 @@ impl RedboxClient {
     /// Connect now; fails fast if the server socket is absent.
     pub fn connect(path: impl AsRef<Path>) -> Result<RedboxClient> {
         let path = path.as_ref().to_path_buf();
-        let stream = UnixStream::connect(&path)
-            .map_err(|e| Error::rpc(format!("connect {}: {e}", path.display())))?;
+        let conn = Self::new_conn(&path)?;
         Ok(RedboxClient {
             path,
-            conn: Mutex::new(Some(stream)),
+            conn: Mutex::new(Some(conn)),
             next_id: AtomicU64::new(1),
         })
     }
@@ -47,19 +269,57 @@ impl RedboxClient {
         }
     }
 
-    /// Issue `Service/Method` with a JSON body; returns the response body.
-    /// One transparent reconnect+retry on transport failure (the server may
-    /// have restarted — red-box "future work: more stable deployments").
-    pub fn call(&self, method: &str, body: Value) -> Result<Value> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, method: method.to_string(), body };
+    fn new_conn(path: &Path) -> Result<Arc<Conn>> {
+        let stream = UnixStream::connect(path)
+            .map_err(|e| Error::rpc(format!("connect {}: {e}", path.display())))?;
+        let reader = stream.try_clone()?;
+        let control = stream.try_clone()?;
+        let writer = Arc::new(Mutex::new(stream));
+        let routes = Arc::new(Mutex::new(Routes {
+            dead: false,
+            pending: HashMap::new(),
+            streams: HashMap::new(),
+        }));
+        let (w2, r2) = (writer.clone(), routes.clone());
+        crate::rt::spawn_named("redbox-demux", move || reader_loop(reader, w2, r2));
+        Ok(Arc::new(Conn { writer, routes, control }))
+    }
+
+    /// The live connection, reconnecting lazily if the previous one died.
+    fn conn(&self) -> Result<Arc<Conn>> {
         let mut guard = self.conn.lock().unwrap();
-        match Self::round_trip(&mut guard, &self.path, &req) {
+        if let Some(c) = guard.as_ref() {
+            if !c.routes.lock().unwrap().dead {
+                return Ok(c.clone());
+            }
+        }
+        let c = Self::new_conn(&self.path)?;
+        *guard = Some(c.clone());
+        Ok(c)
+    }
+
+    /// Drop the current connection so the next call reconnects. Threads
+    /// still using the old connection finish against it; its reader
+    /// unblocks when the last handle drops.
+    fn invalidate(&self) {
+        *self.conn.lock().unwrap() = None;
+    }
+
+    /// Issue `Service/Method` with a JSON body; returns the response body.
+    /// One transparent reconnect+retry on transport failure (the server
+    /// may have restarted — red-box "future work: more stable
+    /// deployments"). Method-level errors never retry.
+    pub fn call(&self, method: &str, body: Value) -> Result<Value> {
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            method: method.to_string(),
+            body,
+        };
+        match self.round_trip(&req) {
             Ok(resp) => resp.into_result(),
             Err(first) => {
-                // transport-level failure: reconnect once
-                *guard = None;
-                match Self::round_trip(&mut guard, &self.path, &req) {
+                self.invalidate();
+                match self.round_trip(&req) {
                     Ok(resp) => resp.into_result(),
                     Err(_) => Err(first),
                 }
@@ -67,35 +327,51 @@ impl RedboxClient {
         }
     }
 
-    fn round_trip(
-        conn: &mut Option<UnixStream>,
-        path: &Path,
-        req: &Request,
-    ) -> Result<Response> {
-        if conn.is_none() {
-            let stream = UnixStream::connect(path)
-                .map_err(|e| Error::rpc(format!("reconnect {}: {e}", path.display())))?;
-            *conn = Some(stream);
+    fn round_trip(&self, req: &Request) -> Result<Response> {
+        let conn = self.conn()?;
+        let rx = conn.send_request(req)?;
+        rx.recv().map_err(|_| Error::rpc("server closed connection"))
+    }
+
+    /// Open a server stream: send `method` and return the initial
+    /// response body plus the item stream. The stream route registers
+    /// *before* the request goes out, so no pushed item can be missed.
+    /// Reconnects+retries once on transport failure (safe: nothing has
+    /// streamed until the server accepts); a server that answers the
+    /// method with an error fails this call without a retry.
+    pub fn open_stream(&self, method: &str, body: Value) -> Result<(Value, ClientStream)> {
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            method: method.to_string(),
+            body,
+        };
+        let (conn, resp, stream) = match self.try_open(&req) {
+            Ok(out) => out,
+            Err(first) => {
+                self.invalidate();
+                self.try_open(&req).map_err(|_| first)?
+            }
+        };
+        match resp.into_result() {
+            Ok(initial) => Ok((initial, stream)),
+            Err(e) => {
+                conn.drop_stream(req.id);
+                Err(e)
+            }
         }
-        let stream = conn.as_mut().unwrap();
-        let result: Result<Response> = (|| {
-            write_frame(stream, &req.encode())?;
-            let frame = read_frame(stream)?
-                .ok_or_else(|| Error::rpc("server closed connection"))?;
-            Response::decode(&frame)
-        })();
-        if result.is_err() {
-            *conn = None; // poison the connection
-        }
-        let resp = result?;
-        if resp.id != req.id {
-            *conn = None;
-            return Err(Error::rpc(format!(
-                "response id mismatch: sent {} got {}",
-                req.id, resp.id
-            )));
-        }
-        Ok(resp)
+    }
+
+    fn try_open(&self, req: &Request) -> Result<(Arc<Conn>, Response, ClientStream)> {
+        let conn = self.conn()?;
+        let rx = conn.register_stream(req.id)?;
+        // From here on, an early return drops `stream`, whose Drop impl
+        // unregisters the route — no leak on any failure path.
+        let stream = ClientStream { rx, id: req.id, conn: Arc::downgrade(&conn) };
+        let rrx = conn.send_request(req)?;
+        let resp = rrx
+            .recv()
+            .map_err(|_| Error::rpc("server closed connection"))?;
+        Ok((conn, resp, stream))
     }
 
     pub fn path(&self) -> &Path {
@@ -107,7 +383,8 @@ impl RedboxClient {
 mod tests {
     use super::*;
     use crate::cluster::Metrics;
-    use crate::redbox::server::{FnService, RedboxServer};
+    use crate::redbox::proto::{END_COMPLETE, END_GONE};
+    use crate::redbox::server::{FnService, RedboxServer, Reply, Service};
     use crate::rt::Shutdown;
     use std::sync::Arc;
 
@@ -153,5 +430,166 @@ mod tests {
         let c = RedboxClient::connect_retry(&path, Duration::from_secs(5)).unwrap();
         assert!(c.call("s.S/m", Value::Null).is_ok());
         t.join().unwrap();
+    }
+
+    /// A test service with one unary and one streaming method: `Count`
+    /// streams `n` integers then ends with the reason in the body.
+    struct CountService;
+
+    impl Service for CountService {
+        fn call(&self, method: &str, body: &Value) -> Result<Value> {
+            match method {
+                "Echo" => Ok(body.clone()),
+                other => Err(Error::rpc(format!("no method `{other}`"))),
+            }
+        }
+
+        fn call_full(&self, method: &str, body: &Value) -> Result<Reply> {
+            if method != "Count" {
+                return self.call(method, body).map(Reply::Unary);
+            }
+            let n = body.opt_int("n").unwrap_or(0);
+            let reason = body
+                .opt_str("reason")
+                .unwrap_or(END_COMPLETE)
+                .to_string();
+            Ok(Reply::stream(Value::map().with("accepted", true), move |mut sink| {
+                for i in 0..n {
+                    if !sink.item(Value::Int(i)) {
+                        return;
+                    }
+                }
+                sink.end(&reason);
+            }))
+        }
+    }
+
+    #[test]
+    fn server_stream_items_then_end() {
+        let sd = Shutdown::new();
+        let mut srv = RedboxServer::start(sock("stream"), sd, Metrics::new()).unwrap();
+        srv.register("t.Count", Arc::new(CountService));
+        let client = RedboxClient::connect(srv.path()).unwrap();
+        let (initial, stream) = client
+            .open_stream("t.Count/Count", Value::map().with("n", 3i64))
+            .unwrap();
+        assert_eq!(initial.opt_bool("accepted"), Some(true));
+        let mut got = Vec::new();
+        loop {
+            match stream.recv_timeout(Duration::from_secs(5)).unwrap() {
+                StreamMsg::Item(v) => got.push(v),
+                StreamMsg::End(reason) => {
+                    assert_eq!(reason, END_COMPLETE);
+                    break;
+                }
+            }
+        }
+        assert_eq!(got, vec![Value::Int(0), Value::Int(1), Value::Int(2)]);
+        // The channel is cleanly closed after End.
+        assert!(matches!(stream.try_recv(), Err(TryRecvError::Disconnected)));
+        assert_eq!(srv.metrics().counter_value("redbox.streams"), 1);
+        srv.stop();
+    }
+
+    #[test]
+    fn stream_end_reason_travels() {
+        let sd = Shutdown::new();
+        let mut srv = RedboxServer::start(sock("gone"), sd, Metrics::new()).unwrap();
+        srv.register("t.Count", Arc::new(CountService));
+        let client = RedboxClient::connect(srv.path()).unwrap();
+        let (_, stream) = client
+            .open_stream(
+                "t.Count/Count",
+                Value::map().with("n", 0i64).with("reason", END_GONE),
+            )
+            .unwrap();
+        match stream.recv_timeout(Duration::from_secs(5)).unwrap() {
+            StreamMsg::End(reason) => assert_eq!(reason, END_GONE),
+            other => panic!("expected gone end, got {other:?}"),
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn unary_calls_interleave_with_a_live_stream() {
+        // The multiplexing contract: one connection carries a live stream
+        // and concurrent request/response traffic at the same time.
+        let sd = Shutdown::new();
+        let mut srv = RedboxServer::start(sock("mux"), sd, Metrics::new()).unwrap();
+        srv.register("t.Count", Arc::new(CountService));
+        let client = RedboxClient::connect(srv.path()).unwrap();
+        let (_, stream) = client
+            .open_stream("t.Count/Count", Value::map().with("n", 50i64))
+            .unwrap();
+        // Unary traffic on the same socket while items are in flight.
+        for i in 0..10i64 {
+            assert_eq!(client.call("t.Count/Echo", Value::Int(i)).unwrap(), Value::Int(i));
+        }
+        let mut items = 0;
+        loop {
+            match stream.recv_timeout(Duration::from_secs(5)).unwrap() {
+                StreamMsg::Item(_) => items += 1,
+                StreamMsg::End(_) => break,
+            }
+        }
+        assert_eq!(items, 50);
+        srv.stop();
+    }
+
+    #[test]
+    fn method_error_on_stream_open_is_typed_not_retried() {
+        let sd = Shutdown::new();
+        let mut srv = RedboxServer::start(sock("serr"), sd, Metrics::new()).unwrap();
+        srv.register(
+            "t.Err",
+            Arc::new(FnService(|_: &str, _: &Value| -> Result<Value> {
+                Err(Error::not_found("Pod", "ghost"))
+            })),
+        );
+        let client = RedboxClient::connect(srv.path()).unwrap();
+        let err = client.open_stream("t.Err/X", Value::Null).unwrap_err();
+        assert!(err.is_not_found(), "got {err}");
+        srv.stop();
+    }
+
+    #[test]
+    fn server_restart_ends_stream_without_end_marker() {
+        let path = sock("sloss");
+        let sd = Shutdown::new();
+        let mut srv = RedboxServer::start(&path, sd, Metrics::new()).unwrap();
+        // A stream that never completes on its own.
+        srv.register(
+            "t.Hang",
+            Arc::new(HangService),
+        );
+        let client = RedboxClient::connect(&path).unwrap();
+        let (_, stream) = client.open_stream("t.Hang/Watch", Value::Null).unwrap();
+        srv.stop();
+        // Stream loss = disconnect with no StreamMsg::End.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match stream.recv_timeout(Duration::from_millis(50)) {
+                Ok(StreamMsg::End(r)) => panic!("lost stream must not see End({r})"),
+                Ok(StreamMsg::Item(_)) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    assert!(std::time::Instant::now() < deadline, "stream never ended");
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+
+    /// Streams nothing and waits for cancellation.
+    struct HangService;
+
+    impl Service for HangService {
+        fn call(&self, _: &str, _: &Value) -> Result<Value> {
+            Err(Error::rpc("unary not supported"))
+        }
+        fn call_full(&self, _: &str, _: &Value) -> Result<Reply> {
+            Ok(Reply::stream(Value::map(), |sink| {
+                while !sink.wait_cancelled(Duration::from_millis(10)) {}
+            }))
+        }
     }
 }

@@ -6,11 +6,16 @@
 //! listens and dispatches ([`server`]), and clients that mirror the methods
 //! ([`client`]) — over length-prefixed JSON frames on a real Unix domain
 //! socket.
+//!
+//! Since ISSUE 5 the wire is **multiplexed**: one connection carries
+//! concurrent requests *and* server-push streams ([`Frame`]), so gRPC
+//! server-streaming methods (the kube watch) push events instead of being
+//! polled — an idle connection transmits nothing.
 
 pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use client::RedboxClient;
-pub use proto::{Request, Response};
-pub use server::{FnService, RedboxServer, Service};
+pub use client::{ClientStream, RedboxClient, StreamMsg};
+pub use proto::{Frame, Request, Response, END_CANCELLED, END_COMPLETE, END_GONE};
+pub use server::{FnService, RedboxServer, Reply, Service, StreamSink};

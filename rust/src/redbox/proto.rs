@@ -7,7 +7,21 @@
 //! are defined as Rust traits in [`super::server`].
 //!
 //! Frame layout: `u32 LE body length | body bytes` where body is the JSON
-//! encoding of [`Request`] or [`Response`].
+//! encoding of a [`Frame`]:
+//!
+//! - [`Request`] / [`Response`] — the classic unary pair, encoded
+//!   *untagged* (no `frame` key) so pre-stream peers interoperate
+//!   unchanged.
+//! - [`Frame::StreamItem`] — one pushed element of a server stream. `id`
+//!   is the id of the request that opened the stream; `seq` counts items
+//!   from 0 with no gaps (receivers treat a gap as stream corruption).
+//! - [`Frame::StreamEnd`] — the stream is over. Server→client it carries
+//!   the reason ([`END_COMPLETE`], [`END_GONE`], ...); client→server it
+//!   is the cancel signal (the consumer went away, stop producing).
+//!
+//! Streams multiplex: one connection carries any number of concurrent
+//! requests and live streams, demultiplexed by `id` — the gRPC
+//! server-streaming shape over the same socket.
 
 use crate::encoding::{json, Value};
 use crate::util::{Error, Result};
@@ -118,6 +132,71 @@ impl Response {
     }
 }
 
+/// Stream ended because the producer is done (clean end of data).
+pub const END_COMPLETE: &str = "complete";
+/// Stream ended because the requested bookmark fell out of the server's
+/// retained history window — the 410-Gone signal of the k8s watch API.
+/// The consumer must relist and rewatch.
+pub const END_GONE: &str = "gone";
+/// Stream ended because the receiving side cancelled it.
+pub const END_CANCELLED: &str = "cancelled";
+
+/// One wire frame. `Request`/`Response` stay untagged on the wire; stream
+/// frames carry a `"frame":"item"|"end"` discriminator, which untagged
+/// peers never emit — so the tag space is collision-free.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Request(Request),
+    Response(Response),
+    /// One element of server stream `id`; `seq` counts from 0, gapless.
+    StreamItem { id: u64, seq: u64, body: Value },
+    /// Stream `id` is over (server→client: `reason` says why;
+    /// client→server: cancel).
+    StreamEnd { id: u64, reason: String },
+}
+
+impl Frame {
+    pub fn encode(&self) -> Value {
+        match self {
+            Frame::Request(r) => r.encode(),
+            Frame::Response(r) => r.encode(),
+            Frame::StreamItem { id, seq, body } => Value::map()
+                .with("frame", "item")
+                .with("id", *id)
+                .with("seq", *seq)
+                .with("body", body.clone()),
+            Frame::StreamEnd { id, reason } => Value::map()
+                .with("frame", "end")
+                .with("id", *id)
+                .with("reason", reason.clone()),
+        }
+    }
+
+    /// Decode a frame. Untagged maps are a [`Request`] when they name a
+    /// `method`, a [`Response`] otherwise — the pre-stream wire shapes.
+    pub fn decode(v: &Value) -> Result<Frame> {
+        match v.opt_str("frame") {
+            Some("item") => Ok(Frame::StreamItem {
+                id: v.req_int("id")? as u64,
+                seq: v.req_int("seq")? as u64,
+                body: v.get("body").cloned().unwrap_or(Value::Null),
+            }),
+            Some("end") => Ok(Frame::StreamEnd {
+                id: v.req_int("id")? as u64,
+                reason: v.opt_str("reason").unwrap_or("").to_string(),
+            }),
+            Some(other) => Err(Error::rpc(format!("unknown frame tag `{other}`"))),
+            None => {
+                if v.get("method").is_some() {
+                    Ok(Frame::Request(Request::decode(v)?))
+                } else {
+                    Ok(Frame::Response(Response::decode(v)?))
+                }
+            }
+        }
+    }
+}
+
 /// Write one frame.
 pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<()> {
     let body = json::to_string(v);
@@ -186,6 +265,31 @@ mod tests {
         // Untyped err still degrades to Error::Rpc.
         let plain = Response::err(4, "boom").into_result().unwrap_err();
         assert!(matches!(plain, Error::Rpc(_)));
+    }
+
+    #[test]
+    fn frame_roundtrip_all_variants() {
+        let frames = vec![
+            Frame::Request(Request {
+                id: 1,
+                method: "kube.Api/Watch".into(),
+                body: Value::map().with("stream", true),
+            }),
+            Frame::Response(Response::ok(1, Value::map().with("streaming", true))),
+            Frame::StreamItem { id: 1, seq: 0, body: Value::str("ev") },
+            Frame::StreamItem { id: 1, seq: 1, body: Value::Null },
+            Frame::StreamEnd { id: 1, reason: END_GONE.into() },
+        ];
+        for f in frames {
+            assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
+        }
+        // Untagged maps keep decoding as the classic pair.
+        let req = Request { id: 2, method: "a.B/C".into(), body: Value::Null };
+        assert_eq!(Frame::decode(&req.encode()).unwrap(), Frame::Request(req));
+        let resp = Response::err(3, "boom");
+        assert_eq!(Frame::decode(&resp.encode()).unwrap(), Frame::Response(resp));
+        // Unknown tags are rejected, not misread as unary traffic.
+        assert!(Frame::decode(&Value::map().with("frame", "novel")).is_err());
     }
 
     #[test]

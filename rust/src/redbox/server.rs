@@ -4,8 +4,18 @@
 //! Kubernetes and Torque processes" (paper §III-B). Services register under
 //! a name (`torque.Workload`); each accepted connection gets a handler
 //! thread that reads request frames and dispatches `Service/Method` calls.
+//!
+//! Connections are **multiplexed**: the per-connection loop demultiplexes
+//! concurrent requests and live server streams over one socket. A method
+//! answers with a [`Reply`] — `Unary` writes the classic response;
+//! `Stream` writes the response and then runs a producer on its own
+//! thread, pushing [`Frame::StreamItem`] frames through a [`StreamSink`]
+//! that shares the connection's writer. A client-sent `StreamEnd` cancels
+//! the matching producer; connection loss cancels them all. Existing
+//! unary services need no changes — [`Service::call_full`] defaults to
+//! wrapping [`Service::call`].
 
-use super::proto::{read_frame, write_frame, Request, Response};
+use super::proto::{read_frame, write_frame, Frame, Request, Response};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
 use crate::rt::{self, Shutdown};
@@ -13,13 +23,97 @@ use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// What a method hands back through the streaming-capable dispatch path.
+pub enum Reply {
+    /// Classic one-shot response body.
+    Unary(Value),
+    /// Server-streaming: `initial` goes out as the response body, then
+    /// `produce` runs on a dedicated thread pushing items via the sink.
+    Stream { initial: Value, produce: Box<dyn FnOnce(StreamSink) + Send> },
+}
+
+impl Reply {
+    /// Convenience constructor for the streaming arm.
+    pub fn stream(initial: Value, produce: impl FnOnce(StreamSink) + Send + 'static) -> Reply {
+        Reply::Stream { initial, produce: Box::new(produce) }
+    }
+}
+
+/// The server half of one live stream: pushes `StreamItem`/`StreamEnd`
+/// frames for its request id through the connection's shared writer.
+/// Producers run on their own thread and must treat a `false` from
+/// [`StreamSink::item`] (or [`StreamSink::is_cancelled`]) as "stop now":
+/// the client cancelled, the connection died, or the server is stopping.
+pub struct StreamSink {
+    writer: Arc<Mutex<UnixStream>>,
+    id: u64,
+    seq: u64,
+    cancel: Shutdown,
+    metrics: Metrics,
+}
+
+impl StreamSink {
+    /// Push one item; `false` means stop producing.
+    pub fn item(&mut self, body: Value) -> bool {
+        if self.cancel.is_triggered() {
+            return false;
+        }
+        let frame = Frame::StreamItem { id: self.id, seq: self.seq, body };
+        self.seq += 1;
+        let mut w = self.writer.lock().unwrap();
+        if write_frame(&mut *w, &frame.encode()).is_err() {
+            self.cancel.trigger();
+            return false;
+        }
+        self.metrics.inc("redbox.stream_items");
+        true
+    }
+
+    /// End the stream with a reason (see [`super::proto::END_COMPLETE`]
+    /// and friends). No-op if already cancelled — the peer is gone.
+    pub fn end(self, reason: &str) {
+        if self.cancel.is_triggered() {
+            return;
+        }
+        let frame = Frame::StreamEnd { id: self.id, reason: reason.to_string() };
+        {
+            let mut w = self.writer.lock().unwrap();
+            let _ = write_frame(&mut *w, &frame.encode());
+        }
+        // Mark finished so the connection loop can prune this stream's
+        // cancel token — otherwise a long-lived connection accumulates
+        // one entry per server-ended stream (e.g. repeated 410s).
+        self.cancel.trigger();
+    }
+
+    /// True once the stream was cancelled (client cancel, connection
+    /// loss, server shutdown).
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_triggered()
+    }
+
+    /// Sleep up to `d`, returning early with `true` on cancellation — the
+    /// idle tick for producers that emit periodic frames.
+    pub fn wait_cancelled(&self, d: Duration) -> bool {
+        self.cancel.wait_timeout(d)
+    }
+}
 
 /// One RPC service: a bundle of methods under a service name.
 pub trait Service: Send + Sync {
     /// Handle `method` (the part after the `/`).
     fn call(&self, method: &str, body: &Value) -> Result<Value>;
+
+    /// Streaming-capable dispatch: override for methods that answer with
+    /// a server stream. The default delegates to [`Service::call`], so
+    /// unary services are written exactly as before.
+    fn call_full(&self, method: &str, body: &Value) -> Result<Reply> {
+        self.call(method, body).map(Reply::Unary)
+    }
 }
 
 /// Plain function services for tests / small endpoints.
@@ -146,47 +240,117 @@ impl Drop for RedboxServer {
     }
 }
 
-fn handle_conn(mut stream: UnixStream, registry: Registry, shutdown: Shutdown, metrics: Metrics) {
+fn write_locked(writer: &Arc<Mutex<UnixStream>>, v: &Value) -> Result<()> {
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, v)
+}
+
+/// The per-connection demultiplexing loop: reads frames, answers unary
+/// requests in order, spawns a producer thread per stream (all sharing
+/// one writer), and routes client-sent `StreamEnd` frames to the matching
+/// producer's cancel token. When the connection ends — client hangup,
+/// transport error, or server stop — every stream it carried is
+/// cancelled.
+fn handle_conn(stream: UnixStream, registry: Registry, shutdown: Shutdown, metrics: Metrics) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = stream;
+    // Cancel tokens of the streams opened on this connection.
+    let mut streams: HashMap<u64, Shutdown> = HashMap::new();
     loop {
         if shutdown.is_triggered() {
-            return;
+            break;
         }
-        let frame = match read_frame(&mut stream) {
+        let frame = match read_frame(&mut reader) {
             Ok(Some(v)) => v,
-            Ok(None) => return, // client closed (or server stop() shut us down)
-            Err(_) => return,   // transport error: drop connection
+            Ok(None) => break, // client closed (or server stop() shut us down)
+            Err(_) => break,   // transport error: drop connection
         };
-        let resp = match Request::decode(&frame) {
-            Ok(req) => {
+        match Frame::decode(&frame) {
+            Ok(Frame::Request(req)) => {
                 metrics.inc("redbox.requests");
                 let t0 = std::time::Instant::now();
-                let resp = dispatch(&req, &registry);
+                let reply = dispatch(&req, &registry);
                 metrics.observe("redbox.handle_ns", t0.elapsed().as_nanos() as u64);
-                resp
+                match reply {
+                    Ok(Reply::Unary(body)) => {
+                        if write_locked(&writer, &Response::ok(req.id, body).encode())
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Ok(Reply::Stream { initial, produce }) => {
+                        // Response first, so the client observes stream
+                        // acceptance before any item can arrive.
+                        if write_locked(&writer, &Response::ok(req.id, initial).encode())
+                            .is_err()
+                        {
+                            break;
+                        }
+                        let cancel = Shutdown::new();
+                        // Prune tokens of streams that already finished
+                        // (producers trigger theirs via StreamSink::end
+                        // or on write failure) so the map only holds
+                        // live streams, however long the conn lives.
+                        streams.retain(|_, c| !c.is_triggered());
+                        streams.insert(req.id, cancel.clone());
+                        metrics.inc("redbox.streams");
+                        let sink = StreamSink {
+                            writer: writer.clone(),
+                            id: req.id,
+                            seq: 0,
+                            cancel,
+                            metrics: metrics.clone(),
+                        };
+                        rt::spawn_named("redbox-stream", move || produce(sink));
+                    }
+                    Err(e) => {
+                        if write_locked(&writer, &Response::err_typed(req.id, &e).encode())
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                }
             }
-            Err(e) => Response::err(0, format!("bad request: {e}")),
-        };
-        if write_frame(&mut stream, &resp.encode()).is_err() {
-            return;
+            // Client cancel: stop that stream's producer.
+            Ok(Frame::StreamEnd { id, .. }) => {
+                if let Some(c) = streams.remove(&id) {
+                    c.trigger();
+                }
+            }
+            // Clients must not send responses or items; drop silently.
+            Ok(Frame::Response(_)) | Ok(Frame::StreamItem { .. }) => {}
+            Err(e) => {
+                // Undecodable frame: report (id 0 = no request to echo).
+                let resp = Response::err(0, format!("bad request: {e}"));
+                if write_locked(&writer, &resp.encode()).is_err() {
+                    break;
+                }
+            }
         }
+    }
+    // Connection over: cancel every stream it carried.
+    for (_, c) in streams.drain() {
+        c.trigger();
     }
 }
 
-fn dispatch(req: &Request, registry: &Registry) -> Response {
-    let (service, method) = match req.split_method() {
-        Ok(x) => x,
-        Err(e) => return Response::err_typed(req.id, &e),
-    };
-    let svc = registry.read().unwrap().get(service).cloned();
-    match svc {
-        // Service failures travel typed (err_typed) so remote callers can
-        // branch on is_not_found()/is_conflict() like in-process ones.
-        Some(svc) => match svc.call(method, &req.body) {
-            Ok(body) => Response::ok(req.id, body),
-            Err(e) => Response::err_typed(req.id, &e),
-        },
-        None => Response::err(req.id, format!("unknown service `{service}`")),
-    }
+fn dispatch(req: &Request, registry: &Registry) -> Result<Reply> {
+    // Service failures travel typed (err_typed at the write site) so
+    // remote callers can branch on is_not_found()/is_conflict() exactly
+    // like in-process ones.
+    let (service, method) = req.split_method()?;
+    let svc = registry
+        .read()
+        .unwrap()
+        .get(service)
+        .cloned()
+        .ok_or_else(|| Error::rpc(format!("unknown service `{service}`")))?;
+    svc.call_full(method, &req.body)
 }
 
 #[cfg(test)]

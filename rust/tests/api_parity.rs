@@ -1,14 +1,15 @@
 //! Local-vs-remote parity: the same CRUD/list/patch/watch scenario runs
 //! through the in-process `ApiServer` and through `RemoteApi` over a
-//! red-box socket, and must produce an identical transcript. This is the
-//! contract that lets controllers hold `Arc<dyn ApiClient>` without caring
-//! which side of the socket they run on.
+//! red-box socket — in both its streaming and poll-fallback watch modes —
+//! and must produce an identical transcript. This is the contract that
+//! lets controllers hold `Arc<dyn ApiClient>` without caring which side
+//! of the socket (or which watch transport) they run on.
 
 use hpcorc::cluster::{Metrics, Resources};
 use hpcorc::encoding::Value;
 use hpcorc::kube::{
-    ApiClient, ApiServer, ListOptions, NodeView, PodView, RemoteApi, WatchEvent, KIND_NODE,
-    KIND_POD,
+    ApiClient, ApiServer, ListOptions, NodeView, PodView, RemoteApi, WatchConfig, WatchEvent,
+    WatchMode, KIND_NODE, KIND_POD,
 };
 use hpcorc::redbox::RedboxServer;
 use hpcorc::rt::Shutdown;
@@ -217,6 +218,309 @@ fn paged_lists_identical_through_both_transports() {
     assert!(local[0].contains("pg0") && local[0].contains("cont=Some"));
     assert!(local[2].contains("cont=None"));
     assert!(local[3].contains("pg0") && local[3].contains("pg2") && local[3].contains("cont=Some"));
+}
+
+// ---------------------------------------------------------------------
+// Watch-transcript parity (ISSUE 5): the full watch lifecycle — live
+// events, mid-stream server loss, bookmark replay after recovery, and
+// the 410-Gone stale-bookmark path — must read identically through the
+// in-process server, the poll-based remote, and the streaming remote.
+// ---------------------------------------------------------------------
+
+/// In-process `ApiClient` whose watch streams can be severed on demand —
+/// the in-process equivalent of a server restart, so all three
+/// transports run the *same* disruption scenario.
+struct KillableApi {
+    api: ApiServer,
+    taps: std::sync::Mutex<Vec<Shutdown>>,
+}
+
+impl KillableApi {
+    fn new(api: ApiServer) -> KillableApi {
+        KillableApi { api, taps: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    fn kill_streams(&self) {
+        for sd in self.taps.lock().unwrap().drain(..) {
+            sd.trigger();
+        }
+    }
+}
+
+impl ApiClient for KillableApi {
+    fn create(&self, obj: hpcorc::kube::KubeObject) -> hpcorc::util::Result<hpcorc::kube::KubeObject> {
+        self.api.create(obj)
+    }
+    fn get(&self, kind: &str, name: &str) -> hpcorc::util::Result<hpcorc::kube::KubeObject> {
+        self.api.get(kind, name)
+    }
+    fn update(&self, obj: hpcorc::kube::KubeObject) -> hpcorc::util::Result<hpcorc::kube::KubeObject> {
+        ApiServer::update(&self.api, obj)
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut hpcorc::kube::KubeObject),
+    ) -> hpcorc::util::Result<hpcorc::kube::KubeObject> {
+        self.api.update_status(kind, name, f)
+    }
+    fn patch_merge(
+        &self,
+        kind: &str,
+        name: &str,
+        patch: &Value,
+    ) -> hpcorc::util::Result<hpcorc::kube::KubeObject> {
+        self.api.patch_merge(kind, name, patch)
+    }
+    fn delete(&self, kind: &str, name: &str) -> hpcorc::util::Result<hpcorc::kube::KubeObject> {
+        self.api.delete(kind, name)
+    }
+    fn apply(&self, obj: hpcorc::kube::KubeObject) -> hpcorc::util::Result<hpcorc::kube::KubeObject> {
+        self.api.apply(obj)
+    }
+    fn list(
+        &self,
+        kind: &str,
+        opts: &ListOptions,
+    ) -> hpcorc::util::Result<hpcorc::kube::ObjectList> {
+        self.api.list_opts(kind, opts)
+    }
+    fn watch(
+        &self,
+        kind: Option<&str>,
+        from: u64,
+    ) -> hpcorc::util::Result<std::sync::mpsc::Receiver<WatchEvent>> {
+        let upstream = ApiServer::watch(&self.api, kind, from);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sd = Shutdown::new();
+        self.taps.lock().unwrap().push(sd.clone());
+        hpcorc::rt::spawn_named("parity-killable-watch", move || loop {
+            if sd.is_triggered() {
+                return; // drops tx: stream severed
+            }
+            match upstream.recv_timeout(Duration::from_millis(1)) {
+                Ok(ev) => {
+                    if tx.send(ev).is_err() {
+                        return;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(_) => return,
+            }
+        });
+        Ok(rx)
+    }
+    fn server_time_s(&self) -> hpcorc::util::Result<f64> {
+        Ok(self.api.now_s())
+    }
+}
+
+/// Block until the watch stream ends (sender side dropped); `true` when
+/// it did within the deadline.
+fn wait_stream_end(rx: &std::sync::mpsc::Receiver<WatchEvent>) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(_) => {} // late events racing the disruption are fine
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return true,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if Instant::now() > deadline {
+                    return false;
+                }
+            }
+        }
+    }
+}
+
+/// The watch lifecycle, recorded transport-independently. `server` is
+/// the authoritative state (the same write sequence runs for every
+/// transport); `client` is the transport under test; `disrupt`/`restore`
+/// sever and re-establish the transport's event path.
+fn watch_scenario(
+    server: &ApiServer,
+    client: &dyn ApiClient,
+    disrupt: &mut dyn FnMut(),
+    restore: &mut dyn FnMut(),
+) -> Vec<String> {
+    let mut t = Vec::new();
+
+    // -- live events (foreign kinds filtered) ---------------------------
+    let rx = client.watch(Some(KIND_POD), 0).expect("watch");
+    server.create(pod("w1")).expect("w1");
+    server
+        .update_status(KIND_POD, "w1", |o| {
+            o.status.insert("phase", "Running");
+        })
+        .expect("us w1");
+    server
+        .create(NodeView::build("n1", Resources::cores(8, 32 << 30), &[]))
+        .expect("node");
+    t.extend(collect_events(&rx, 2));
+
+    // -- mid-stream server loss -----------------------------------------
+    let bookmark = server.current_version();
+    disrupt();
+    t.push(format!("stream lost={}", wait_stream_end(&rx)));
+
+    // The blind window: the world changes while the transport is down.
+    server.create(pod("w2")).expect("w2");
+    server.delete(KIND_POD, "w1").expect("del w1");
+    restore();
+
+    // -- recovery: rewatch from the pre-loss bookmark replays the blind
+    // window (it is still inside the retained history) ------------------
+    let rx = client.watch(Some(KIND_POD), bookmark).expect("rewatch");
+    t.extend(collect_events(&rx, 2));
+
+    // -- and the recovered stream is live again -------------------------
+    server.create(pod("w3")).expect("w3");
+    t.extend(collect_events(&rx, 1));
+    t
+}
+
+/// The 410 path: a bookmark that fell out of the retained history window
+/// must yield an immediately-ended, zero-event stream; a fresh bookmark
+/// on the same server still watches live.
+fn gone_scenario(server: &ApiServer, client: &dyn ApiClient) -> Vec<String> {
+    let mut t = Vec::new();
+    let stale = server.create(pod("seed")).expect("seed").meta.resource_version;
+    for i in 0..100u64 {
+        server
+            .update_status(KIND_POD, "seed", |o| {
+                o.status.insert("n", i);
+            })
+            .expect("burst");
+    }
+    let rx = client.watch(Some(KIND_POD), stale).expect("stale watch");
+    let mut events = 0;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let ended = loop {
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(_) => events += 1,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break true,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if Instant::now() > deadline {
+                    break false;
+                }
+            }
+        }
+    };
+    t.push(format!("stale watch events={events} ended={ended}"));
+    let rx = client.watch(Some(KIND_POD), server.current_version()).expect("fresh watch");
+    server.create(pod("after")).expect("after");
+    t.extend(collect_events(&rx, 1));
+    t
+}
+
+fn parity_sock(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("hpcorc-parity-{tag}-{}.sock", std::process::id()))
+}
+
+#[test]
+fn watch_transcript_identical_across_all_three_transports() {
+    let mut transcripts: Vec<(&str, Vec<String>)> = Vec::new();
+
+    // -- transport 1: in-process (severable wrapper) --------------------
+    let local_server = ApiServer::new(Metrics::new());
+    let killable = std::sync::Arc::new(KillableApi::new(local_server.clone()));
+    {
+        let k = killable.clone();
+        let mut disrupt = move || k.kill_streams();
+        let mut restore = || {};
+        let t = watch_scenario(
+            &local_server,
+            killable.as_ref() as &dyn ApiClient,
+            &mut disrupt,
+            &mut restore,
+        );
+        eprintln!("in-process: watch mode = local");
+        transcripts.push(("in-process", t));
+    }
+
+    // -- transports 2+3: remote over red-box, poll and streaming --------
+    for (label, force_poll, want_mode) in [
+        ("poll-remote", true, WatchMode::Poll),
+        ("streaming-remote", false, WatchMode::Streaming),
+    ] {
+        let server = ApiServer::new(Metrics::new());
+        let path = parity_sock(label);
+        let first = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+        first.register("kube.Api", server.rpc_service());
+        let srv_cell = std::cell::RefCell::new(Some(first));
+        let remote = RemoteApi::connect(&path)
+            .unwrap()
+            .with_watch_config(WatchConfig { force_poll, ..WatchConfig::default() });
+
+        let t = {
+            let mut disrupt = || {
+                // Server down — and it *stays* down through the blind
+                // window, so even the reconnecting poll loop ends.
+                if let Some(mut s) = srv_cell.borrow_mut().take() {
+                    s.stop();
+                }
+            };
+            let mut restore = || {
+                // Same socket, same ApiServer state: a server restart.
+                let s = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+                s.register("kube.Api", server.rpc_service());
+                *srv_cell.borrow_mut() = Some(s);
+            };
+            watch_scenario(&server, &remote, &mut disrupt, &mut restore)
+        };
+        // ISSUE 5 satellite: the transport reports its watch mode.
+        eprintln!("{label}: watch mode = {:?}", remote.last_watch_mode());
+        assert_eq!(remote.last_watch_mode(), Some(want_mode), "{label} negotiated wrong mode");
+        transcripts.push((label, t));
+        if let Some(mut s) = srv_cell.borrow_mut().take() {
+            s.stop();
+        }
+    }
+
+    let (_, reference) = &transcripts[0];
+    for (label, t) in &transcripts[1..] {
+        assert_eq!(t, reference, "{label} watch transcript diverged from in-process");
+    }
+    // Shape sanity: the transcript really covered the lifecycle.
+    assert_eq!(reference.len(), 2 + 1 + 2 + 1, "scenario shape changed — update the count");
+    assert!(reference.iter().any(|l| l == "stream lost=true"));
+    assert!(reference.iter().any(|l| l.starts_with("DELETED Pod/w1 ")));
+    assert!(reference.iter().any(|l| l.starts_with("ADDED Pod/w3 ")));
+}
+
+#[test]
+fn gone_reset_identical_across_all_three_transports() {
+    const HISTORY: usize = 64; // small window: the burst trims the seed
+
+    let mut transcripts: Vec<(&str, Vec<String>)> = Vec::new();
+
+    let local_server = ApiServer::with_history_cap(Metrics::new(), HISTORY);
+    let killable = KillableApi::new(local_server.clone());
+    transcripts.push(("in-process", gone_scenario(&local_server, &killable)));
+
+    for (label, force_poll, want_mode) in [
+        ("poll-remote", true, WatchMode::Poll),
+        ("streaming-remote", false, WatchMode::Streaming),
+    ] {
+        let server = ApiServer::with_history_cap(Metrics::new(), HISTORY);
+        let path = parity_sock(&format!("gone-{label}"));
+        let mut srv = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+        srv.register("kube.Api", server.rpc_service());
+        let remote = RemoteApi::connect(&path)
+            .unwrap()
+            .with_watch_config(WatchConfig { force_poll, ..WatchConfig::default() });
+        transcripts.push((label, gone_scenario(&server, &remote)));
+        eprintln!("{label}: watch mode = {:?}", remote.last_watch_mode());
+        assert_eq!(remote.last_watch_mode(), Some(want_mode));
+        srv.stop();
+    }
+
+    let (_, reference) = &transcripts[0];
+    for (label, t) in &transcripts[1..] {
+        assert_eq!(t, reference, "{label} 410 transcript diverged from in-process");
+    }
+    assert_eq!(reference[0], "stale watch events=0 ended=true");
+    assert!(reference[1].starts_with("ADDED Pod/after "));
 }
 
 #[test]

@@ -319,6 +319,85 @@ fn watch_loss_past_history_window_relists_and_rebuilds_ledger() {
     assert_eq!((cq.pending, cq.admitted), (0, 2), "counts reflect the converged set");
 }
 
+/// ISSUE 5 acceptance: over a *streaming* remote transport, an idle
+/// informer performs **zero** RPC round-trips — events are pushed as
+/// frames, so steady-state `sync()` only drains a local channel. The
+/// poll fallback on the same server keeps issuing ~10 RPCs/s while idle,
+/// which is exactly the traffic the streaming watch removes. Round-trips
+/// are counted on the server (every `Request` frame increments
+/// `redbox.requests`), so nothing client-side can hide traffic.
+#[test]
+fn idle_streaming_informer_issues_zero_rpc_round_trips() {
+    use hpcorc::kube::{RemoteApi, WatchConfig, WatchMode};
+    use hpcorc::redbox::RedboxServer;
+
+    let sd = Shutdown::new();
+    let path = std::env::temp_dir()
+        .join(format!("hpcorc-informer-stream-{}.sock", std::process::id()));
+    let server_metrics = Metrics::new();
+    let mut srv = RedboxServer::start(&path, sd.clone(), server_metrics.clone()).unwrap();
+    let api = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", api.rpc_service());
+
+    // ---- streaming remote informer ----------------------------------
+    let remote = Arc::new(RemoteApi::connect(&path).unwrap());
+    let informers =
+        SharedInformerFactory::new(remote.clone() as Arc<dyn ApiClient>, Metrics::new());
+    let pods = informers.informer(KIND_POD);
+    api.create(PodView::build("p0", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+        .unwrap();
+    pods.sync().unwrap(); // seed: one paged list + one watch open
+    assert_eq!(pods.len(), 1);
+    assert_eq!(remote.last_watch_mode(), Some(WatchMode::Streaming));
+
+    // Steady state, fully idle: not one request crosses the socket.
+    let base = server_metrics.counter_value("redbox.requests");
+    for _ in 0..40 {
+        pods.sync().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        server_metrics.counter_value("redbox.requests"),
+        base,
+        "idle streaming informer must issue zero RPC round-trips"
+    );
+
+    // Event delivery is push too: the cache catches up with still zero
+    // round-trips issued by this client.
+    api.create(PodView::build("p1", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+        .unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while pods.get("p1").is_none() {
+        assert!(std::time::Instant::now() < deadline, "pushed event never arrived");
+        pods.sync().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(
+        server_metrics.counter_value("redbox.requests"),
+        base,
+        "event delivery must be server-push, not poll"
+    );
+
+    // ---- the poll fallback, for contrast (~10 RPCs/s idle) -----------
+    let poll_remote = Arc::new(
+        RemoteApi::connect(&path)
+            .unwrap()
+            .with_watch_config(WatchConfig { force_poll: true, ..WatchConfig::default() }),
+    );
+    let poll_informers =
+        SharedInformerFactory::new(poll_remote.clone() as Arc<dyn ApiClient>, Metrics::new());
+    let poll_pods = poll_informers.informer(KIND_POD);
+    poll_pods.sync().unwrap();
+    assert_eq!(poll_remote.last_watch_mode(), Some(WatchMode::Poll));
+    let poll_base = server_metrics.counter_value("redbox.requests");
+    std::thread::sleep(Duration::from_millis(500));
+    assert!(
+        server_metrics.counter_value("redbox.requests") > poll_base + 2,
+        "the poll fallback keeps polling while idle (this is the traffic streaming removes)"
+    );
+    srv.stop();
+}
+
 /// The scheduler stays event-correct through the mutating hook: a pod
 /// born with a bare queue-name label can never be bound before its first
 /// admission cycle, even if the scheduler runs first.

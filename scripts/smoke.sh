@@ -1,0 +1,100 @@
+#!/usr/bin/env bash
+# End-to-end CLI smoke: drive the release binary the way a user would —
+# trace generation, the simulator's elastic and kueue-quota paths, and a
+# live testbed exercised through the kubectl table paths over the red-box
+# socket. Run by the CI `smoke` job; runs locally too:
+#
+#   cargo build --release --manifest-path rust/Cargo.toml
+#   scripts/smoke.sh rust/target/release/hpcorc
+set -euo pipefail
+
+HPCORC="${1:-rust/target/release/hpcorc}"
+command -v "$HPCORC" >/dev/null || [ -x "$HPCORC" ] || {
+  echo "smoke: binary not found: $HPCORC" >&2
+  exit 1
+}
+WORK="$(mktemp -d)"
+SOCK="$WORK/redbox.sock"
+UP_PID=""
+cleanup() {
+  [ -n "$UP_PID" ] && kill "$UP_PID" 2>/dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== trace gen (diurnal) =="
+"$HPCORC" trace gen --kind diurnal --jobs 80 --out "$WORK/diurnal.json"
+test -s "$WORK/diurnal.json"
+
+echo "== sim: static vs elastic on the diurnal trace =="
+"$HPCORC" sim --trace "$WORK/diurnal.json" --policy easy --nodes 8
+"$HPCORC" sim --trace "$WORK/diurnal.json" --policy easy \
+  --elastic-max 8 --elastic-min 1 --provision-delay 30 --idle-window 300
+
+echo "== sim: kueue quota admission over a generated tenants trace =="
+"$HPCORC" sim --kind tenants --jobs 60 --policy easy --quota-nodes 4 --cohort
+
+echo "== testbed up + kubectl table paths over the socket =="
+"$HPCORC" up --socket "$SOCK" --run-for 120 >"$WORK/up.log" 2>&1 &
+UP_PID=$!
+for _ in $(seq 1 100); do
+  [ -S "$SOCK" ] && break
+  sleep 0.1
+done
+if ! [ -S "$SOCK" ]; then
+  echo "smoke: red-box socket never appeared" >&2
+  cat "$WORK/up.log" >&2
+  exit 1
+fi
+
+cat >"$WORK/cq.yaml" <<'EOF'
+apiVersion: kueue.x-k8s.io/v1beta1
+kind: ClusterQueue
+metadata:
+  name: smoke-cq
+spec:
+  quota:
+    nodes: 4
+EOF
+"$HPCORC" kubectl apply -f "$WORK/cq.yaml" --socket "$SOCK"
+"$HPCORC" kubectl get cq --socket "$SOCK" | tee "$WORK/cq.out"
+grep -q smoke-cq "$WORK/cq.out"
+
+cat >"$WORK/tj.yaml" <<'EOF'
+apiVersion: wlm.sylabs.io/v1alpha1
+kind: TorqueJob
+metadata:
+  name: smoke-cow
+spec:
+  batch: |
+    #!/bin/sh
+    #PBS -l walltime=00:30:00
+    #PBS -l nodes=1
+    #PBS -e $HOME/smoke.err
+    #PBS -o $HOME/smoke.out
+    singularity run lolcow_latest.sif
+  results:
+    from: $HOME/smoke.out
+  mount:
+    name: data
+    hostPath:
+      path: $HOME/
+      type: DirectoryOrCreate
+EOF
+"$HPCORC" kubectl apply -f "$WORK/tj.yaml" --socket "$SOCK"
+for _ in $(seq 1 150); do
+  "$HPCORC" kubectl get tj --socket "$SOCK" >"$WORK/tj.out"
+  grep -Eq 'completed|failed' "$WORK/tj.out" && break
+  sleep 0.2
+done
+cat "$WORK/tj.out"
+grep -q smoke-cow "$WORK/tj.out"
+grep -q completed "$WORK/tj.out"
+
+"$HPCORC" kubectl get pods --socket "$SOCK" >/dev/null
+"$HPCORC" kubectl get nodes --socket "$SOCK" >/dev/null
+
+kill "$UP_PID" 2>/dev/null || true
+wait "$UP_PID" 2>/dev/null || true
+UP_PID=""
+echo "smoke OK"
