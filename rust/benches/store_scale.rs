@@ -1,0 +1,169 @@
+//! Store scale harness (PR 6): the sharded store + WAL backend at 100k
+//! objects. Tracks create/get/list/watch-fanout latency, delta-list cost
+//! vs a full list, WAL append + replay time, and the shard-isolation
+//! contract: node reads must not stall while a foreign kind (pods)
+//! churns — per-kind locks mean cross-kind contention is bounded by the
+//! brief global commit section, never by the churning shard's lock.
+//!
+//! Object count defaults to 100_000; override with STORE_SCALE_N for
+//! quick local runs.
+
+use hpcorc::bench::{header, Bench};
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::kube::{
+    ApiServer, KubeObject, ListOptions, NodeView, PodView, WalBackend, KIND_NODE, KIND_POD,
+};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn n_objects() -> usize {
+    std::env::var("STORE_SCALE_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100_000)
+}
+
+fn pod(i: usize) -> KubeObject {
+    PodView::build(
+        &format!("pod-{i:06}"),
+        "lolcow_latest.sif",
+        Resources::new(100, 1 << 20, 0),
+        &[],
+    )
+}
+
+fn node(i: usize) -> KubeObject {
+    NodeView::build(&format!("node-{i:03}"), Resources::cores(64, 256 << 30), &[])
+}
+
+fn seed(api: &ApiServer, n: usize, nodes: usize) {
+    for i in 0..n {
+        api.create(pod(i)).unwrap();
+    }
+    for i in 0..nodes {
+        api.create(node(i)).unwrap();
+    }
+}
+
+fn main() {
+    let n = n_objects();
+    println!("=== store scale: {n} pods + 64 nodes, sharded store + WAL (PR 6) ===");
+    println!("{}", header());
+    let mut stats = Vec::new();
+
+    // Create throughput into a fresh in-memory server.
+    stats.push(Bench::new(format!("store.create x{n}")).warmup(0).iters(2).run_throughput(
+        n as u32,
+        |_| {
+            let api = ApiServer::new(Metrics::new());
+            for i in 0..n {
+                api.create(pod(i)).unwrap();
+            }
+            std::hint::black_box(api.current_version());
+        },
+    ));
+
+    // One server seeded at scale for the read-side benches.
+    let api = ApiServer::new(Metrics::new());
+    seed(&api, n, 64);
+    let mid = format!("pod-{:06}", n / 2);
+
+    stats.push(Bench::new(format!("store.get @{n}")).warmup(200).iters(5000).run(|| {
+        api.get(KIND_POD, &mid).unwrap();
+    }));
+
+    stats.push(Bench::new(format!("store.list full @{n}")).warmup(1).iters(5).run(|| {
+        let l = api.list_opts(KIND_POD, &ListOptions::all()).unwrap();
+        assert_eq!(l.items.len(), n);
+    }));
+
+    // Delta list: after 128 changes, a relist ships 128 objects, not n.
+    let floor = api.current_version();
+    for i in 0..128 {
+        api.update_status(KIND_POD, &format!("pod-{i:06}"), |o| {
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+    }
+    stats.push(
+        Bench::new(format!("store.list delta(128) @{n}")).warmup(5).iters(200).run(|| {
+            let l = api.list_opts(KIND_POD, &ListOptions::all().delta_since(floor)).unwrap();
+            assert!(l.delta);
+            assert_eq!(l.items.len(), 128);
+        }),
+    );
+
+    // Watch fan-out: one update delivered to 64 per-kind watchers.
+    let watchers: Vec<_> =
+        (0..64).map(|_| api.watch(Some(KIND_POD), api.current_version())).collect();
+    stats.push(Bench::new("watch.fanout-64 update+drain").warmup(20).iters(500).run(|| {
+        api.update_status(KIND_POD, &mid, |o| {
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+        for rx in &watchers {
+            while rx.try_recv().is_ok() {}
+        }
+    }));
+    drop(watchers);
+
+    // WAL: durable create throughput, then a cold open replaying it all.
+    // Compaction threshold above n keeps this an append-rate measurement
+    // (snapshot cost is the compaction row's business, not this one's).
+    let dir = std::env::temp_dir().join(format!("hpcorc-store-scale-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    stats.push(Bench::new(format!("wal.create x{n}")).warmup(0).iters(1).run_throughput(
+        n as u32,
+        |_| {
+            let _ = std::fs::remove_dir_all(&dir);
+            let backend =
+                Box::new(WalBackend::open(&dir).unwrap().with_compact_threshold(n * 2));
+            let api = ApiServer::with_backend(Metrics::new(), backend, 4096).unwrap();
+            for i in 0..n {
+                api.create(pod(i)).unwrap();
+            }
+        },
+    ));
+    stats.push(Bench::new(format!("wal.open+replay x{n}")).warmup(0).iters(2).run(|| {
+        let backend = Box::new(WalBackend::open(&dir).unwrap().with_compact_threshold(n * 2));
+        let api = ApiServer::with_backend(Metrics::new(), backend, 4096).unwrap();
+        assert_eq!(api.list(KIND_POD, &[]).len(), n);
+    }));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Shard isolation: node reads while the pod shard churns. Per-kind
+    // locks keep the read path off the churning shard entirely; the only
+    // shared section is the global commit lock the reader never takes.
+    let base = Bench::new("node.get baseline").warmup(200).iters(5000).run(|| {
+        api.get(KIND_NODE, "node-032").unwrap();
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let churn_api = api.clone();
+    let churn_stop = stop.clone();
+    let churner = std::thread::spawn(move || {
+        let mut i = 0u64;
+        while !churn_stop.load(Ordering::Relaxed) {
+            let name = format!("pod-{:06}", i % 1024);
+            let _ = churn_api.update_status(KIND_POD, &name, |o| {
+                o.status.insert("beat", i);
+            });
+            i += 1;
+        }
+        i
+    });
+    let under = Bench::new("node.get under-pod-churn").warmup(200).iters(5000).run(|| {
+        api.get(KIND_NODE, "node-032").unwrap();
+    });
+    stop.store(true, Ordering::Relaxed);
+    let churned = churner.join().unwrap();
+    let ratio = under.p99_ns as f64 / base.p99_ns.max(1) as f64;
+    stats.push(base);
+    stats.push(under);
+
+    println!();
+    for s in &stats {
+        println!("{}", s.json());
+    }
+    println!(
+        "{{\"bench\":\"node-read p99 under pod churn @{n}\",\"baseline_p99_ns\":{},\"churn_p99_ns\":{},\"ratio\":{ratio:.2},\"churn_writes\":{churned}}}",
+        stats[stats.len() - 2].p99_ns,
+        stats[stats.len() - 1].p99_ns,
+    );
+}

@@ -1,10 +1,13 @@
-//! HorizontalPodAutoscaler: target-utilization scaling of Deployments.
+//! HorizontalPodAutoscaler: metric-target scaling of Deployments.
 //!
 //! An `autoscaling/v2`-style HPA object names a Deployment
-//! (`spec.scaleTargetRef.name`), a CPU utilization target
-//! (`spec.targetCPUUtilizationPercent`, usage/request over the pods the
-//! Deployment owns), replica clamps (`minReplicas`/`maxReplicas`), and
-//! stabilization windows
+//! (`spec.scaleTargetRef.name`), a metric + target
+//! (`spec.metrics[0].resource`: `cpu` or `memory`, targeted either as
+//! `Utilization` — usage/request percent over the pods the Deployment
+//! owns — or as `AverageValue` — absolute per-pod usage, milli-cores or
+//! bytes; the legacy `spec.targetCPUUtilizationPercent` shorthand still
+//! parses as cpu/Utilization), replica clamps (`minReplicas`/
+//! `maxReplicas`), and stabilization windows
 //! (`spec.behavior.{scaleUp,scaleDown}.stabilizationWindowSeconds`).
 //!
 //! The controller runs on the ordinary [`Controller`] runtime and
@@ -42,6 +45,22 @@ pub const KIND_HPA: &str = "HorizontalPodAutoscaler";
 /// (the kube-controller-manager default tolerance).
 const TOLERANCE: f64 = 0.10;
 
+/// Which pod resource the HPA measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricSource {
+    Cpu,
+    Memory,
+}
+
+/// How the measured resource is targeted: as a percent of pod requests,
+/// or as an absolute per-pod average (milli-cores for cpu, bytes for
+/// memory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricTarget {
+    Utilization(u64),
+    AverageValue(u64),
+}
+
 /// Typed view over an HPA object.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HpaView {
@@ -50,12 +69,15 @@ pub struct HpaView {
     pub target: String,
     pub min_replicas: u32,
     pub max_replicas: u32,
-    /// Average CPU utilization target in percent of requests.
-    pub target_utilization_pct: u64,
+    /// Measured resource (`spec.metrics[0].resource.name`).
+    pub metric: MetricSource,
+    /// Scaling target (`spec.metrics[0].resource.target`).
+    pub metric_target: MetricTarget,
     pub scale_up_window: Duration,
     pub scale_down_window: Duration,
-    /// Status mirror (written by the controller).
+    /// Status mirrors (written by the controller).
     pub current_utilization_pct: Option<u64>,
+    pub current_average_value: Option<u64>,
     pub desired_replicas: Option<u32>,
 }
 
@@ -80,6 +102,7 @@ impl HpaView {
             )
         };
         let min_replicas = o.spec.opt_int("minReplicas").unwrap_or(1).max(0) as u32;
+        let (metric, metric_target) = Self::parse_metric(o)?;
         Ok(HpaView {
             name: o.meta.name.clone(),
             target,
@@ -88,16 +111,52 @@ impl HpaView {
             // as authoritative (the k8s API rejects such specs outright).
             max_replicas: (o.spec.opt_int("maxReplicas").unwrap_or(10).max(1) as u32)
                 .max(min_replicas),
-            target_utilization_pct: o
-                .spec
-                .opt_int("targetCPUUtilizationPercent")
-                .unwrap_or(80)
-                .max(1) as u64,
+            metric,
+            metric_target,
             scale_up_window: window("scaleUp", 0),
             scale_down_window: window("scaleDown", 30),
             current_utilization_pct: o.status.opt_int("currentUtilizationPct").map(|v| v as u64),
+            current_average_value: o.status.opt_int("currentAverageValue").map(|v| v as u64),
             desired_replicas: o.status.opt_int("desiredReplicas").map(|v| v as u32),
         })
+    }
+
+    /// `spec.metrics[0].resource` in the autoscaling/v2 shape, with the
+    /// legacy `spec.targetCPUUtilizationPercent` shorthand (and a bare
+    /// spec's 80% default) parsing as cpu/Utilization.
+    fn parse_metric(o: &KubeObject) -> Result<(MetricSource, MetricTarget)> {
+        let Some(entry) = o.spec.get("metrics").and_then(Value::as_seq).and_then(|s| s.first())
+        else {
+            let pct =
+                o.spec.opt_int("targetCPUUtilizationPercent").unwrap_or(80).max(1) as u64;
+            return Ok((MetricSource::Cpu, MetricTarget::Utilization(pct)));
+        };
+        let res = entry
+            .get("resource")
+            .ok_or_else(|| Error::parse("hpa metrics[0].resource missing"))?;
+        let metric = match res.opt_str("name").unwrap_or("cpu") {
+            "cpu" => MetricSource::Cpu,
+            "memory" => MetricSource::Memory,
+            other => return Err(Error::parse(format!("hpa metric resource `{other}`"))),
+        };
+        let t = res
+            .get("target")
+            .ok_or_else(|| Error::parse("hpa metrics[0].resource.target missing"))?;
+        let metric_target = match t.opt_str("type").unwrap_or("Utilization") {
+            "Utilization" => {
+                MetricTarget::Utilization(t.opt_int("averageUtilization").unwrap_or(80).max(1)
+                    as u64)
+            }
+            "AverageValue" => {
+                let v = t
+                    .opt_int("averageValue")
+                    .filter(|v| *v > 0)
+                    .ok_or_else(|| Error::parse("hpa AverageValue target needs averageValue"))?;
+                MetricTarget::AverageValue(v as u64)
+            }
+            other => return Err(Error::parse(format!("hpa metric target type `{other}`"))),
+        };
+        Ok((metric, metric_target))
     }
 
     /// Build an HPA object with immediate (0s) scale-up and the given
@@ -118,6 +177,64 @@ impl HpaView {
             .with("minReplicas", min as u64)
             .with("maxReplicas", max as u64)
             .with("targetCPUUtilizationPercent", target_pct)
+            .with(
+                "behavior",
+                Value::map()
+                    .with(
+                        "scaleUp",
+                        Value::map().with("stabilizationWindowSeconds", 0u64),
+                    )
+                    .with(
+                        "scaleDown",
+                        Value::map().with(
+                            "stabilizationWindowSeconds",
+                            scale_down_window.as_secs(),
+                        ),
+                    ),
+            );
+        let mut o = KubeObject::new(KIND_HPA, name, spec);
+        o.api_version = AUTOSCALING_API_VERSION.into();
+        o
+    }
+
+    /// Build an HPA with an explicit autoscaling/v2 metric entry
+    /// (`spec.metrics[0].resource`): cpu or memory, utilization-percent
+    /// or absolute per-pod average target.
+    pub fn build_metric(
+        name: &str,
+        target: &str,
+        min: u32,
+        max: u32,
+        metric: MetricSource,
+        metric_target: MetricTarget,
+        scale_down_window: Duration,
+    ) -> KubeObject {
+        let target_v = match metric_target {
+            MetricTarget::Utilization(pct) => {
+                Value::map().with("type", "Utilization").with("averageUtilization", pct)
+            }
+            MetricTarget::AverageValue(v) => {
+                Value::map().with("type", "AverageValue").with("averageValue", v)
+            }
+        };
+        let resource = Value::map()
+            .with(
+                "name",
+                match metric {
+                    MetricSource::Cpu => "cpu",
+                    MetricSource::Memory => "memory",
+                },
+            )
+            .with("target", target_v);
+        let entry = Value::map().with("type", "Resource").with("resource", resource);
+        let spec = Value::map()
+            .with(
+                "scaleTargetRef",
+                Value::map().with("kind", KIND_DEPLOYMENT).with("name", target),
+            )
+            .with("minReplicas", min as u64)
+            .with("maxReplicas", max as u64)
+            .with("metrics", Value::Seq(vec![entry]))
             .with(
                 "behavior",
                 Value::map()
@@ -228,19 +345,27 @@ impl Controller for HpaController {
         };
         let current = deploy.spec.opt_int("replicas").unwrap_or(0).max(0) as u32;
 
-        // Observed utilization: sum(usage) / sum(requests) over the
+        // Observed signal: usage of the measured resource summed over the
         // target's non-terminal pods that have a metrics sample — both
         // read from the shared caches (label-indexed pods, sample gets).
         self.pods.sync()?;
         self.samples.sync()?;
         let pods = self.pods.list_labelled("deployment", &hpa.target);
-        let mut usage = 0u64;
+        let utilization_mode = matches!(hpa.metric_target, MetricTarget::Utilization(_));
+        let mut usage = 0u64; // milli-cores (cpu) or bytes (memory)
         let mut requested = 0u64;
         let mut unsampled_requested = 0u64;
         let mut sampled = 0u32;
+        let mut unsampled = 0u32;
         for pod in &pods {
             let Ok(view) = PodView::from_object(pod) else { continue };
-            if view.phase.terminal() || view.requests.cpu_milli == 0 {
+            let request = match hpa.metric {
+                MetricSource::Cpu => view.requests.cpu_milli,
+                MetricSource::Memory => view.requests.mem_bytes,
+            };
+            // Utilization is usage/request — a request-less pod has no
+            // denominator. AverageValue is absolute; every pod counts.
+            if view.phase.terminal() || (utilization_mode && request == 0) {
                 continue;
             }
             match self
@@ -250,34 +375,52 @@ impl Controller for HpaController {
                 .and_then(|m| PodMetricsView::from_object(&m).ok())
             {
                 Some(m) => {
-                    usage += m.cpu_milli;
-                    requested += view.requests.cpu_milli;
+                    usage += match hpa.metric {
+                        MetricSource::Cpu => m.cpu_milli,
+                        MetricSource::Memory => m.mem_bytes,
+                    };
+                    requested += request;
                     sampled += 1;
                 }
                 // Pod exists but has no sample yet (Pending/unscheduled or
                 // a cold pipeline).
-                None => unsampled_requested += view.requests.cpu_milli,
+                None => {
+                    unsampled_requested += request;
+                    unsampled += 1;
+                }
             }
         }
-        if sampled == 0 || requested == 0 {
+        if sampled == 0 || (utilization_mode && requested == 0) {
             // No signal at all: poll.
             return Ok(Reconcile::RequeueAfter(self.poll));
         }
-        let mut utilization = usage as f64 / requested as f64 * 100.0;
+        // The k8s conservative rule, applied on the way up in both
+        // modes: before scaling up, metric-less pods count as 0 usage.
+        // Otherwise a capacity-starved deployment (few Running pods hot,
+        // the rest Pending and sample-less) measures only its hot pods
+        // and ratchets straight to maxReplicas, amplifying the very
+        // starvation it is reacting to. If the assumption flips the
+        // direction entirely, hold — never shrink on made-up zeros.
         let mut hold = false;
-        if utilization > hpa.target_utilization_pct as f64 && unsampled_requested > 0 {
-            // The k8s conservative rule: before scaling up, metric-less
-            // pods count as 0% usage. Otherwise a capacity-starved
-            // deployment (few Running pods hot, the rest Pending and
-            // sample-less) measures only its hot pods and ratchets
-            // straight to maxReplicas, amplifying the very starvation it
-            // is reacting to. If the assumption flips the direction
-            // entirely, hold — never shrink on made-up zeros.
-            utilization =
-                usage as f64 / (requested + unsampled_requested) as f64 * 100.0;
-            hold = utilization <= hpa.target_utilization_pct as f64;
-        }
-        let ratio = utilization / hpa.target_utilization_pct as f64;
+        let (ratio, signal) = match hpa.metric_target {
+            MetricTarget::Utilization(pct) => {
+                let mut utilization = usage as f64 / requested as f64 * 100.0;
+                if utilization > pct as f64 && unsampled_requested > 0 {
+                    utilization =
+                        usage as f64 / (requested + unsampled_requested) as f64 * 100.0;
+                    hold = utilization <= pct as f64;
+                }
+                (utilization / pct as f64, utilization)
+            }
+            MetricTarget::AverageValue(target_value) => {
+                let mut average = usage as f64 / sampled as f64;
+                if average > target_value as f64 && unsampled > 0 {
+                    average = usage as f64 / (sampled + unsampled) as f64;
+                    hold = average <= target_value as f64;
+                }
+                (average / target_value as f64, average)
+            }
+        };
 
         let raw = if hold || (ratio - 1.0).abs() <= TOLERANCE {
             current
@@ -297,14 +440,24 @@ impl Controller for HpaController {
                 "autoscale.hpa.scale_downs"
             });
         }
-        let util_pct = utilization.round() as u64;
-        if hpa.current_utilization_pct != Some(util_pct)
-            || hpa.desired_replicas != Some(desired)
-        {
+        let signal = signal.round() as u64;
+        let changed = hpa.desired_replicas != Some(desired)
+            || match hpa.metric_target {
+                MetricTarget::Utilization(_) => hpa.current_utilization_pct != Some(signal),
+                MetricTarget::AverageValue(_) => hpa.current_average_value != Some(signal),
+            };
+        if changed {
             api.update_status(KIND_HPA, name, &|o| {
                 o.status.insert("currentReplicas", current as u64);
                 o.status.insert("desiredReplicas", desired as u64);
-                o.status.insert("currentUtilizationPct", util_pct);
+                match hpa.metric_target {
+                    MetricTarget::Utilization(_) => {
+                        o.status.insert("currentUtilizationPct", signal)
+                    }
+                    MetricTarget::AverageValue(_) => {
+                        o.status.insert("currentAverageValue", signal)
+                    }
+                };
             })?;
         }
         Ok(Reconcile::RequeueAfter(self.poll))
@@ -371,7 +524,8 @@ mod tests {
         let v = HpaView::from_object(&o).unwrap();
         assert_eq!(v.target, "web");
         assert_eq!((v.min_replicas, v.max_replicas), (2, 8));
-        assert_eq!(v.target_utilization_pct, 60);
+        assert_eq!(v.metric, MetricSource::Cpu);
+        assert_eq!(v.metric_target, MetricTarget::Utilization(60));
         assert_eq!(v.scale_up_window, Duration::ZERO);
         assert_eq!(v.scale_down_window, Duration::from_secs(12));
         // Bare spec gets the documented defaults.
@@ -383,8 +537,51 @@ mod tests {
         bare.api_version = AUTOSCALING_API_VERSION.into();
         let v = HpaView::from_object(&bare).unwrap();
         assert_eq!((v.min_replicas, v.max_replicas), (1, 10));
-        assert_eq!(v.target_utilization_pct, 80);
+        assert_eq!(v.metric_target, MetricTarget::Utilization(80));
         assert_eq!(v.scale_down_window, Duration::from_secs(30));
+        // The v2 metrics entry round-trips both sources and both target
+        // shapes.
+        let o = HpaView::build_metric(
+            "m",
+            "web",
+            1,
+            8,
+            MetricSource::Memory,
+            MetricTarget::AverageValue(32 << 20),
+            Duration::ZERO,
+        );
+        let v = HpaView::from_object(&o).unwrap();
+        assert_eq!(v.metric, MetricSource::Memory);
+        assert_eq!(v.metric_target, MetricTarget::AverageValue(32 << 20));
+        let o = HpaView::build_metric(
+            "u",
+            "web",
+            1,
+            8,
+            MetricSource::Memory,
+            MetricTarget::Utilization(50),
+            Duration::ZERO,
+        );
+        assert_eq!(HpaView::from_object(&o).unwrap().metric_target, MetricTarget::Utilization(50));
+        // An AverageValue target without a value is a parse error, not a
+        // silent default.
+        let mut bad = HpaView::build_metric(
+            "bad",
+            "web",
+            1,
+            8,
+            MetricSource::Cpu,
+            MetricTarget::AverageValue(1),
+            Duration::ZERO,
+        );
+        let mut entry = bad.spec.get("metrics").and_then(Value::as_seq).unwrap()[0].clone();
+        if let Some(res) = entry.get_mut("resource") {
+            if let Some(t) = res.get_mut("target") {
+                t.remove("averageValue");
+            }
+        }
+        bad.spec.insert("metrics", Value::Seq(vec![entry]));
+        assert!(HpaView::from_object(&bad).is_err());
     }
 
     #[test]
@@ -512,6 +709,95 @@ mod tests {
             Reconcile::RequeueAfter(_)
         ));
         assert_eq!(replicas(&api), 3, "cold pipeline: hands off");
+    }
+
+    #[test]
+    fn memory_utilization_target_scales() {
+        // The metrics publisher samples a Running pod's memory usage at
+        // its request, so memory utilization observes 100%; against a
+        // 50% target the deployment doubles.
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 100);
+        api.create(HpaView::build_metric(
+            "h",
+            "web",
+            1,
+            8,
+            MetricSource::Memory,
+            MetricTarget::Utilization(50),
+            Duration::ZERO,
+        ))
+        .unwrap();
+        hpa_ctl(&api).reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 4);
+        let h = HpaView::from_object(&api.get(KIND_HPA, "h").unwrap()).unwrap();
+        assert_eq!(h.current_utilization_pct, Some(100));
+        assert_eq!(h.desired_replicas, Some(4));
+    }
+
+    #[test]
+    fn average_value_target_scales_and_reports() {
+        // Each pod uses 1000 milli-cores; an AverageValue target of 250m
+        // wants 4x the replicas (clamped at 8 here).
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 1000);
+        api.create(HpaView::build_metric(
+            "h",
+            "web",
+            1,
+            16,
+            MetricSource::Cpu,
+            MetricTarget::AverageValue(250),
+            Duration::ZERO,
+        ))
+        .unwrap();
+        hpa_ctl(&api).reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 8, "avg 1000m vs 250m target quadruples");
+        let h = HpaView::from_object(&api.get(KIND_HPA, "h").unwrap()).unwrap();
+        assert_eq!(h.current_average_value, Some(1000));
+        assert_eq!(h.current_utilization_pct, None, "average mode reports averageValue");
+
+        // Within tolerance nothing moves: 260m vs 250m is inside ±10%.
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 260);
+        api.create(HpaView::build_metric(
+            "h",
+            "web",
+            1,
+            16,
+            MetricSource::Cpu,
+            MetricTarget::AverageValue(250),
+            Duration::ZERO,
+        ))
+        .unwrap();
+        hpa_ctl(&api).reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 2, "tolerance band holds in average mode");
+    }
+
+    #[test]
+    fn average_value_counts_metricless_pods_on_the_way_up() {
+        // 2 hot pods at 1000m + 2 sample-less Pending pods: the
+        // conservative rule averages over all 4 (500m vs 500m target) and
+        // holds instead of ratcheting up.
+        let api = ApiServer::new(Metrics::new());
+        seed(&api, 2, 1000);
+        api.update_status(crate::kube::KIND_DEPLOYMENT, "web", |o| {
+            o.spec.insert("replicas", 4u64);
+        })
+        .unwrap();
+        DeploymentController::new(&factory(&api)).reconcile(&api, "web").unwrap();
+        api.create(HpaView::build_metric(
+            "h",
+            "web",
+            1,
+            16,
+            MetricSource::Cpu,
+            MetricTarget::AverageValue(500),
+            Duration::ZERO,
+        ))
+        .unwrap();
+        hpa_ctl(&api).reconcile(&api, "h").unwrap();
+        assert_eq!(replicas(&api), 4, "metric-less pods damp average-value scale-up");
     }
 
     #[test]

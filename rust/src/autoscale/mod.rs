@@ -72,7 +72,9 @@ pub mod metrics;
 pub use cluster_autoscaler::{
     CaConfig, CaReport, ClusterAutoscaler, NodeProvisioner, BURST_LABEL, POOL_LABEL,
 };
-pub use hpa::{HpaController, HpaView, AUTOSCALING_API_VERSION, KIND_HPA};
+pub use hpa::{
+    HpaController, HpaView, MetricSource, MetricTarget, AUTOSCALING_API_VERSION, KIND_HPA,
+};
 pub use metrics::{
     pod_cpu_usage_milli, publish_node_sample, NodeMetricsView, PodMetricsView,
     CPU_LOAD_ENV, CPU_USAGE_ANNOTATION, KIND_NODEMETRICS, KIND_PODMETRICS,

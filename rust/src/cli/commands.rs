@@ -22,11 +22,13 @@ USAGE: hpcorc <command> [args]
 
 Testbed:
   up        [--nodes N] [--cores C] [--workers W] [--slurm] [--artifacts DIR]
-            [--time-scale S] [--socket PATH] [--run-for SECS]
+            [--time-scale S] [--socket PATH] [--run-for SECS] [--wal-dir DIR]
             [--autoscale-max N [--autoscale-min N] [--autoscale-cores C]]
             boot the hybrid testbed (Fig. 1) and serve until stopped;
             --autoscale-max enables the elastic layer (metrics pipeline +
-            HPA + cluster autoscaler with burst-to-WLM)
+            HPA + cluster autoscaler with burst-to-WLM); --wal-dir makes
+            the API server durable (WAL + snapshots) — boot again on the
+            same dir to recover every object and resource version
   demo      run the paper's Fig. 3-5 test case end to end and print it
 
 Kubernetes surface (against a running testbed; KIND accepts kubectl-style
@@ -85,6 +87,9 @@ fn testbed_config(args: &Args) -> Result<TestbedConfig> {
     }
     if let Some(sock) = args.flag("socket") {
         cfg.socket = Some(sock.into());
+    }
+    if let Some(dir) = args.flag("wal-dir") {
+        cfg.wal_dir = Some(dir.into());
     }
     let autoscale_max: usize = args.num("autoscale-max", 0)?;
     if autoscale_max > 0 {

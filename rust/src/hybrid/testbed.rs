@@ -57,6 +57,13 @@ pub struct TestbedConfig {
     /// simulated kubelets (provisioned/drained on demand, bursting
     /// labelled overflow onto the WLM partition).
     pub autoscale: Option<CaConfig>,
+    /// Durable API server state (PR 6): WAL + snapshot directory. When
+    /// set, every commit is persisted and booting over a non-empty
+    /// directory recovers all objects and resource versions — restart
+    /// the testbed on the same dir and `kubectl get` picks up where it
+    /// left off. Bootstrap writes (node registration, the operator
+    /// deployment) are applies, so recovery does not trip AlreadyExists.
+    pub wal_dir: Option<PathBuf>,
 }
 
 impl Default for TestbedConfig {
@@ -74,6 +81,7 @@ impl Default for TestbedConfig {
             socket: None,
             watch_history_cap: 1 << 16,
             autoscale: None,
+            wal_dir: None,
         }
     }
 }
@@ -292,7 +300,16 @@ impl Testbed {
 
         // ---- big-data cluster: API server + scheduler + kubelets ----
         // Watch-history window sized for testbed event bursts (PR 4).
-        let api = ApiServer::with_history_cap(metrics.clone(), config.watch_history_cap);
+        // With a WAL dir the store commits through the durable backend
+        // (PR 6) and recovers any state a previous run left there.
+        let api = match &config.wal_dir {
+            Some(dir) => ApiServer::with_backend(
+                metrics.clone(),
+                Box::new(crate::kube::WalBackend::open(dir)?),
+                config.watch_history_cap,
+            )?,
+            None => ApiServer::with_history_cap(metrics.clone(), config.watch_history_cap),
+        };
         // Mutating admission (PR 4 satellite): pods born with a bare
         // kueue queue-name label are gated at creation — no one-cycle
         // race window for the scheduler.
@@ -356,7 +373,9 @@ impl Testbed {
         ))
         .start(informers.informer(KIND_DEPLOYMENT), shutdown.clone());
         if config.operator_deployment {
-            api.create(DeploymentController::build(
+            // Apply, not create: a WAL-recovered boot already holds the
+            // deployment (and its pods) from the previous run.
+            api.apply(DeploymentController::build(
                 "torque-operator",
                 4,
                 "torque-operator.sif",

@@ -34,7 +34,7 @@ use crate::encoding::Value;
 use crate::redbox::{RedboxClient, Reply, Service, StreamMsg, END_COMPLETE, END_GONE};
 use crate::rt;
 use crate::util::{Error, Result};
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
@@ -119,6 +119,25 @@ impl ApiServer {
             metrics,
             hooks: Arc::new(Mutex::new(Vec::new())),
         }
+    }
+
+    /// An API server over a durability backend (PR 6): every commit is
+    /// appended to the backend before it becomes visible, and opening
+    /// over a previously-written [`super::persist::WalBackend`] directory
+    /// recovers all objects, resource versions, and the server clock —
+    /// clients cannot tell a recovered server from one that never died
+    /// (watchers with pre-restart bookmarks even get delta replays from
+    /// the recovered WAL tail).
+    pub fn with_backend(
+        metrics: Metrics,
+        backend: Box<dyn super::persist::StoreBackend>,
+        cap: usize,
+    ) -> Result<ApiServer> {
+        Ok(ApiServer {
+            store: Store::with_backend(backend, cap)?,
+            metrics,
+            hooks: Arc::new(Mutex::new(Vec::new())),
+        })
     }
 
     /// Register a mutating-admission hook (applied in registration order
@@ -272,6 +291,15 @@ impl ApiServer {
                 return Err(Error::conflict(kind, format!("list@{min}")));
             }
         }
+        // Delta mode: answer from the shard's watch history instead of the
+        // object set — changed objects plus deleted names since the floor.
+        // Best-effort: when the floor fell out of the retained window the
+        // answer silently degrades to a full list (`delta: false`).
+        if let Some(floor) = opts.delta_floor {
+            if let Some(list) = self.delta_list(kind, floor, opts) {
+                return Ok(list);
+            }
+        }
         // Store order is (kind, name) — already the stable name order the
         // continue cursor pages through.
         let mut items: Vec<KubeObject> = self
@@ -290,7 +318,50 @@ impl ApiServer {
                 continue_token = items.last().map(|o| o.meta.name.clone());
             }
         }
-        Ok(ObjectList { server_s: self.now_s(), resource_version, items, continue_token })
+        Ok(ObjectList::full(self.now_s(), resource_version, items, continue_token))
+    }
+
+    /// Serve a delta list from the shard's retained watch history, or
+    /// `None` when the floor is out of window (caller falls back to a full
+    /// list). Events coalesce per name — only the final state of each
+    /// object since the floor ships, with deletions as bare names.
+    fn delta_list(&self, kind: &str, floor: u64, opts: &ListOptions) -> Option<ObjectList> {
+        let (rv, events, reset) = self.store.events_since(Some(kind), floor);
+        if reset {
+            return None;
+        }
+        self.metrics.inc("kube.api.delta_list");
+        // Last event per name wins; a name that reappears after a delete
+        // leaves the deleted set again.
+        let mut latest: BTreeMap<String, WatchEvent> = BTreeMap::new();
+        for ev in events {
+            let name = match &ev {
+                WatchEvent::Added(o) | WatchEvent::Modified(o) | WatchEvent::Deleted(o) => {
+                    o.meta.name.clone()
+                }
+            };
+            latest.insert(name, ev);
+        }
+        let mut items = Vec::new();
+        let mut deleted = Vec::new();
+        for (name, ev) in latest {
+            match ev {
+                WatchEvent::Added(o) | WatchEvent::Modified(o) => {
+                    if opts.matches(&o) {
+                        items.push(o);
+                    }
+                }
+                WatchEvent::Deleted(_) => deleted.push(name),
+            }
+        }
+        Some(ObjectList {
+            server_s: self.now_s(),
+            resource_version: rv,
+            items,
+            continue_token: None,
+            delta: true,
+            deleted,
+        })
     }
 
     pub fn current_version(&self) -> u64 {
@@ -547,6 +618,13 @@ impl Service for ApiService {
                     );
                 if let Some(token) = &list.continue_token {
                     resp.insert("continue", token.clone());
+                }
+                if list.delta {
+                    resp.insert("delta", true);
+                    resp.insert(
+                        "deleted",
+                        Value::Seq(list.deleted.iter().map(|n| n.as_str().into()).collect()),
+                    );
                 }
                 Ok(resp)
             }
@@ -819,11 +897,18 @@ impl ApiClient for RemoteApi {
             .map(|s| s.iter().map(KubeObject::decode).collect::<Result<Vec<_>>>())
             .transpose()?
             .unwrap_or_default();
+        let deleted = v
+            .get("deleted")
+            .and_then(Value::as_seq)
+            .map(|s| s.iter().filter_map(|n| n.as_str().map(String::from)).collect())
+            .unwrap_or_default();
         Ok(ObjectList {
             server_s: v.get("serverSeconds").and_then(Value::as_f64).unwrap_or(0.0),
             resource_version: v.opt_int("resourceVersion").unwrap_or(0) as u64,
             items,
             continue_token: v.opt_str("continue").map(String::from),
+            delta: v.opt_bool("delta").unwrap_or(false),
+            deleted,
         })
     }
 
@@ -1134,6 +1219,55 @@ mod tests {
         srv.register("kube.Api", a.rpc_service());
         let remote = RemoteApi::connect(&path).unwrap();
         (sd, srv, a, remote)
+    }
+
+    #[test]
+    fn delta_list_ships_changes_and_deletions_over_rpc() {
+        let (_sd, mut srv, a, remote) = rpc_pair("delta");
+        a.create(pod("pa")).unwrap();
+        let mut b = a.create(pod("pb")).unwrap();
+        a.create(pod("pc")).unwrap();
+        let floor = a.current_version();
+
+        b.spec.insert("v", 2i64);
+        a.update(b).unwrap();
+        a.delete(KIND_POD, "pc").unwrap();
+        a.create(pod("pd")).unwrap();
+
+        let dl =
+            ApiClient::list(&remote, KIND_POD, &ListOptions::all().delta_since(floor)).unwrap();
+        assert!(dl.delta, "floor is inside the window: expected a delta answer");
+        let names: Vec<&str> = dl.items.iter().map(|o| o.meta.name.as_str()).collect();
+        assert_eq!(names, vec!["pb", "pd"], "only changed objects ship");
+        assert_eq!(dl.deleted, vec!["pc".to_string()]);
+        assert_eq!(dl.resource_version, a.current_version());
+
+        // Both transports answer a delta list identically.
+        let local = a.list_opts(KIND_POD, &ListOptions::all().delta_since(floor)).unwrap();
+        assert!(local.delta);
+        assert_eq!(
+            local.items.iter().map(|o| o.meta.name.as_str()).collect::<Vec<_>>(),
+            names
+        );
+        assert_eq!(local.deleted, dl.deleted);
+        srv.stop();
+    }
+
+    #[test]
+    fn delta_list_falls_back_to_full_when_floor_out_of_window() {
+        let a = ApiServer::with_history_cap(Metrics::new(), 4);
+        a.create(pod("p0")).unwrap();
+        let floor = a.current_version();
+        for i in 0..20i64 {
+            a.update_status(KIND_POD, "p0", |o| {
+                o.status.insert("i", i);
+            })
+            .unwrap();
+        }
+        let l = a.list_opts(KIND_POD, &ListOptions::all().delta_since(floor)).unwrap();
+        assert!(!l.delta, "trimmed floor must degrade to a full list");
+        assert!(l.deleted.is_empty());
+        assert_eq!(l.items.len(), 1);
     }
 
     #[test]

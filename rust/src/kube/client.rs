@@ -36,6 +36,15 @@ pub struct ListOptions {
     /// next full relist, the same freshness contract as
     /// `min_resource_version`.
     pub continue_token: Option<String>,
+    /// Delta floor (PR 6): ask the server to ship only what changed
+    /// *after* this version — changed objects as items plus deleted names
+    /// ([`ObjectList::deleted`]) — instead of the full set. Best-effort:
+    /// when the server's retained history no longer covers the floor it
+    /// answers a normal full list; check [`ObjectList::delta`] to know
+    /// which you got. Intended for unfiltered cache resyncs (the
+    /// reflector's 410 recovery); `limit`/`continue` are ignored in delta
+    /// mode and selectors filter only the changed items.
+    pub delta_floor: Option<u64>,
 }
 
 impl ListOptions {
@@ -68,6 +77,13 @@ impl ListOptions {
     /// Resume after the given cursor (an [`ObjectList::continue_token`]).
     pub fn continue_from(mut self, token: &str) -> ListOptions {
         self.continue_token = Some(token.to_string());
+        self
+    }
+
+    /// Ask for a delta list: only events after `version` (see
+    /// [`ListOptions::delta_floor`]).
+    pub fn delta_since(mut self, version: u64) -> ListOptions {
+        self.delta_floor = Some(version);
         self
     }
 
@@ -121,6 +137,9 @@ impl ListOptions {
         if let Some(token) = &self.continue_token {
             v.insert("continue", token.clone());
         }
+        if let Some(floor) = self.delta_floor {
+            v.insert("deltaFrom", floor);
+        }
         v
     }
 
@@ -131,6 +150,7 @@ impl ListOptions {
             min_resource_version: v.opt_int("minResourceVersion").map(|i| i as u64),
             limit: v.opt_int("limit").map(|i| i as usize),
             continue_token: v.opt_str("continue").map(String::from),
+            delta_floor: v.opt_int("deltaFrom").map(|i| i as u64),
         }
     }
 }
@@ -180,6 +200,33 @@ pub struct ObjectList {
     /// [`ListOptions::continue_from`] for the next page. `None` = final
     /// (or only) page.
     pub continue_token: Option<String>,
+    /// True when the server answered a [`ListOptions::delta_since`]
+    /// request from its retained history: `items` holds only objects
+    /// changed after the floor, `deleted` the names removed since it.
+    /// False = a normal full list (including delta requests the server
+    /// could not serve as deltas).
+    pub delta: bool,
+    /// Names deleted since the delta floor (delta responses only).
+    pub deleted: Vec<String>,
+}
+
+impl ObjectList {
+    /// A full (non-delta) list response.
+    pub fn full(
+        server_s: f64,
+        resource_version: u64,
+        items: Vec<KubeObject>,
+        continue_token: Option<String>,
+    ) -> ObjectList {
+        ObjectList {
+            server_s,
+            resource_version,
+            items,
+            continue_token,
+            delta: false,
+            deleted: Vec::new(),
+        }
+    }
 }
 
 /// The unified resource-API surface. Object-safe by design: controllers
@@ -393,7 +440,8 @@ mod tests {
             .with_field("status.phase", "Running")
             .not_older_than(7)
             .with_limit(25)
-            .continue_from("pod-00042");
+            .continue_from("pod-00042")
+            .delta_since(42);
         assert_eq!(ListOptions::from_value(&opts.to_value()), opts);
         assert_eq!(ListOptions::from_value(&Value::map()), ListOptions::all());
     }

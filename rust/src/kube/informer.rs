@@ -21,16 +21,21 @@
 //!   autoscalers all read the *same* pod cache), plus a pump thread
 //!   ([`SharedInformerFactory::start`]) that drains watch streams.
 //!
-//! # The 410-Gone contract
+//! # The 410-Gone contract, and delta relists (PR 6)
 //!
-//! A reflector whose watch stream ends (remote server restart, bookmark
-//! fallen out of the store's retained history window — the 410-Gone
-//! signal) **relists, bumps its resync epoch, and emits
-//! [`InformerEvent::Resync`]** to subscribers. Derived state keyed on
-//! individual events (the kueue ledger, a runner's known-name set) must
-//! rebuild from the cache when it observes an epoch bump, because events
-//! may have been lost in the gap. Steady state performs zero list RPCs;
-//! the relist is the explicitly-signalled exception.
+//! A reflector whose watch stream ends first attempts a **delta relist**
+//! ([`ListOptions::delta_since`] from its bookmark): when the server's
+//! per-kind history window still covers the bookmark, the answer is just
+//! the changed objects + deleted names, which the reflector applies as
+//! ordinary events — the cache epoch does not move and **no `Resync` is
+//! emitted**, so event-derived state (the kueue ledger) stays
+//! incremental. Only when the bookmark is genuinely out of window (the
+//! real 410-Gone) does the reflector fall back to a full relist, **bump
+//! its resync epoch, and emit [`InformerEvent::Resync`]**. Derived state
+//! keyed on individual events must rebuild from the cache when it
+//! observes an epoch bump, because events may have been lost in the gap.
+//! Steady state performs zero list RPCs; the relist is the
+//! explicitly-signalled exception.
 //!
 //! # Determinism
 //!
@@ -202,10 +207,18 @@ fn prune<K: std::hash::Hash + Eq + Clone>(
     }
 }
 
-fn forward(st: &mut CacheState, ev: &InformerEvent) {
+/// `prev_labels` is the label set the cached object carried *before* this
+/// event: a label-key-filtered subscriber is also served when the key was
+/// just removed (the event object no longer carries it), so derived state
+/// like the kueue ledger can uncharge incrementally instead of waiting
+/// for a resync rebuild.
+fn forward(st: &mut CacheState, ev: &InformerEvent, prev_labels: Option<&[(String, String)]>) {
     st.subs.retain(|s| {
         let wanted = match (&s.label_key, ev.object()) {
-            (Some(key), Some(o)) => o.meta.labels.iter().any(|(k, _)| k == key),
+            (Some(key), Some(o)) => {
+                o.meta.labels.iter().any(|(k, _)| k == key)
+                    || prev_labels.is_some_and(|ls| ls.iter().any(|(k, _)| k == key))
+            }
             // Resync always delivers; unfiltered subscribers take all.
             _ => true,
         };
@@ -217,19 +230,23 @@ fn forward(st: &mut CacheState, ev: &InformerEvent) {
 fn apply_event(st: &mut CacheState, ev: WatchEvent) {
     match ev {
         WatchEvent::Added(o) | WatchEvent::Modified(o) => {
+            let mut prev_labels = None;
             if let Some(old) = st.objects.get(&o.meta.name) {
+                prev_labels = Some(old.meta.labels.clone());
                 st.indexes.remove(old);
             }
             st.version = st.version.max(o.meta.resource_version);
             st.indexes.insert(&o);
             st.objects.insert(o.meta.name.clone(), o.clone());
-            forward(st, &InformerEvent::Applied(o));
+            forward(st, &InformerEvent::Applied(o), prev_labels.as_deref());
         }
         WatchEvent::Deleted(o) => {
             if let Some(old) = st.objects.remove(&o.meta.name) {
                 st.indexes.remove(&old);
             }
-            forward(st, &InformerEvent::Deleted(o));
+            // The deleted object carries its own final label set, so no
+            // prev is needed for filtered delivery.
+            forward(st, &InformerEvent::Deleted(o), None);
         }
     }
 }
@@ -270,6 +287,15 @@ impl Reflector {
     /// and a burst that outruns the history window mid-seed simply ends
     /// the new stream, which the next sync recovers from.
     fn relist(&self, st: &mut CacheState) -> Result<()> {
+        // A seeded cache first asks for just the changes since its
+        // bookmark; a delta answer keeps the epoch and skips the full
+        // list entirely. An error here falls through to the full relist,
+        // which reports the transport's real health.
+        if st.seeded && st.version > 0 {
+            if let Ok(true) = self.delta_relist(st) {
+                return Ok(());
+            }
+        }
         let mut objects: BTreeMap<String, KubeObject> = BTreeMap::new();
         let mut opts = ListOptions::all().with_limit(self.page);
         let mut bookmark = None;
@@ -303,7 +329,7 @@ impl Reflector {
             st.epoch += 1;
             self.metrics.inc("kube.informer.resyncs");
             let epoch = st.epoch;
-            forward(st, &InformerEvent::Resync { epoch });
+            forward(st, &InformerEvent::Resync { epoch }, None);
         } else if !st.subs.is_empty() {
             // Initial seed: subscribers that registered before the seed
             // see every existing object exactly once, like a replay.
@@ -311,13 +337,38 @@ impl Reflector {
             // pay an O(objects) clone for an empty audience.
             let objs: Vec<KubeObject> = st.objects.values().cloned().collect();
             for o in objs {
-                forward(st, &InformerEvent::Applied(o));
+                forward(st, &InformerEvent::Applied(o), None);
             }
         } else if !st.objects.is_empty() {
             // Wake notify-only listeners once for the whole seed.
             st.notifiers.retain(|tx| tx.send(()).is_ok());
         }
         Ok(())
+    }
+
+    /// Try to recover a lost stream with a delta list from the current
+    /// bookmark. `Ok(true)`: the server's window covered the bookmark —
+    /// missed changes were applied as ordinary events (subscribers see
+    /// them, the epoch does not move) and a fresh watch is installed.
+    /// `Ok(false)`: out of window; the caller must full-relist.
+    fn delta_relist(&self, st: &mut CacheState) -> Result<bool> {
+        let resp = self.client.list(&self.kind, &ListOptions::all().delta_since(st.version))?;
+        if !resp.delta {
+            return Ok(false);
+        }
+        for name in &resp.deleted {
+            // A deletion of an object the cache never held is a no-op.
+            if let Some(old) = st.objects.get(name).cloned() {
+                apply_event(st, WatchEvent::Deleted(old));
+            }
+        }
+        for o in resp.items {
+            apply_event(st, WatchEvent::Modified(o));
+        }
+        st.version = st.version.max(resp.resource_version);
+        st.rx = Some(self.client.watch(Some(&self.kind), st.version)?);
+        self.metrics.inc("kube.informer.delta_relists");
+        Ok(true)
     }
 
     fn sync(&self) -> Result<()> {
@@ -501,10 +552,11 @@ impl Informer {
     /// Subscription restricted to objects carrying `label_key` (replay
     /// and deltas alike; `Resync` always delivers). The cheap way to
     /// watch a labelled subset of a high-churn kind: unlabelled events
-    /// are dropped inside the reflector, before any clone. Caveat: an
-    /// object whose key is *removed* stops flowing — derived state that
-    /// must observe label removal should rely on the Resync/rebuild path
-    /// (or subscribe unfiltered).
+    /// are dropped inside the reflector, before any clone. An object
+    /// whose key is *removed* still delivers that one transition (the
+    /// event object no longer carries the key), so derived state can
+    /// release what it charged — only objects that never carried the key
+    /// are invisible.
     pub fn subscribe_with_label_key(&self, tx: Sender<InformerEvent>, label_key: &str) {
         let mut st = self.inner.state.lock().unwrap();
         for o in st.objects.values() {
@@ -859,7 +911,13 @@ mod tests {
 
     #[test]
     fn stream_loss_relists_and_bumps_epoch() {
-        let killable = Arc::new(KillableApi { api: api(), taps: Mutex::new(Vec::new()) });
+        // History cap 4: the churn below overflows the pod shard's
+        // retained window, so the delta path reports out-of-window and
+        // the reflector must take the full-relist (410-Gone) road.
+        let killable = Arc::new(KillableApi {
+            api: ApiServer::with_history_cap(Metrics::new(), 4),
+            taps: Mutex::new(Vec::new()),
+        });
         killable.api.create(pod("before")).unwrap();
         let factory =
             SharedInformerFactory::new(killable.clone() as Arc<dyn ApiClient>, Metrics::new());
@@ -870,15 +928,18 @@ mod tests {
         assert_eq!(pods.epoch(), 0);
 
         // Sever the stream, then change the world while the informer is
-        // blind: one delete, one create.
+        // blind — more events than the window retains.
         killable.kill_streams();
         killable.api.delete(KIND_POD, "before").unwrap();
         killable.api.create(pod("after")).unwrap();
+        for i in 0..4 {
+            killable.api.create(pod(&format!("filler{i}"))).unwrap();
+        }
         // Give the severed forwarder a beat to drop its sender.
         std::thread::sleep(Duration::from_millis(10));
 
         pods.sync().unwrap();
-        assert_eq!(pods.epoch(), 1, "relist bumps the resync epoch");
+        assert_eq!(pods.epoch(), 1, "out-of-window relist bumps the resync epoch");
         assert!(pods.get("before").is_none(), "missed delete recovered by relist");
         assert!(pods.get("after").is_some(), "missed create recovered by relist");
         let evs: Vec<InformerEvent> = rx.try_iter().collect();
@@ -891,6 +952,91 @@ mod tests {
         pods.sync().unwrap();
         assert!(pods.get("later").is_some());
         assert_eq!(pods.epoch(), 1, "healthy stream does not resync");
+    }
+
+    #[test]
+    fn stream_loss_inside_window_delta_relists_without_resync() {
+        let killable = Arc::new(KillableApi { api: api(), taps: Mutex::new(Vec::new()) });
+        killable.api.create(pod("before")).unwrap();
+        let metrics = Metrics::new();
+        let factory =
+            SharedInformerFactory::new(killable.clone() as Arc<dyn ApiClient>, metrics.clone());
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+        let rx = pods.subscribe();
+        let _ = rx.try_iter().count();
+
+        // Sever the stream; the default window easily retains the gap.
+        killable.kill_streams();
+        killable.api.delete(KIND_POD, "before").unwrap();
+        killable.api.create(pod("after")).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+
+        pods.sync().unwrap();
+        assert_eq!(pods.epoch(), 0, "delta recovery must not bump the epoch");
+        assert!(pods.get("before").is_none());
+        assert!(pods.get("after").is_some());
+        let evs: Vec<InformerEvent> = rx.try_iter().collect();
+        assert!(
+            !evs.iter().any(|e| matches!(e, InformerEvent::Resync { .. })),
+            "no Resync on delta recovery: {evs:?}"
+        );
+        assert!(
+            evs.iter()
+                .any(|e| matches!(e, InformerEvent::Deleted(o) if o.meta.name == "before")),
+            "missed delete surfaces as an ordinary event: {evs:?}"
+        );
+        assert!(
+            evs.iter()
+                .any(|e| matches!(e, InformerEvent::Applied(o) if o.meta.name == "after")),
+            "missed create surfaces as an ordinary event: {evs:?}"
+        );
+        assert_eq!(
+            metrics.counter("kube.informer.delta_relists").load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(
+            metrics.counter("kube.informer.resyncs").load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
+        // The fresh stream tails live events again.
+        killable.api.create(pod("later")).unwrap();
+        pods.sync().unwrap();
+        assert!(pods.get("later").is_some());
+    }
+
+    #[test]
+    fn label_removal_delivers_to_filtered_subscribers() {
+        let a = api();
+        let mut labelled = pod("charged");
+        labelled.meta.set_label("kueue.x-k8s.io/queue-name", "team");
+        a.create(labelled).unwrap();
+        let factory = SharedInformerFactory::new(a.client(), Metrics::new());
+        let pods = factory.informer(KIND_POD);
+        pods.sync().unwrap();
+        let (tx, rx) = channel();
+        pods.subscribe_with_label_key(tx, "kueue.x-k8s.io/queue-name");
+        let _ = rx.try_iter().count(); // drain the replay
+
+        // Strip the queue label: the transition must still deliver (the
+        // event object no longer carries the key) so ledgers can uncharge.
+        let mut stripped = a.get(KIND_POD, "charged").unwrap();
+        stripped.meta.labels.retain(|(k, _)| k != "kueue.x-k8s.io/queue-name");
+        a.update(stripped).unwrap();
+        pods.sync().unwrap();
+        let evs: Vec<InformerEvent> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 1, "the removal transition delivers: {evs:?}");
+        let o = evs[0].object().unwrap();
+        assert_eq!(o.meta.name, "charged");
+        assert!(
+            !o.meta.labels.iter().any(|(k, _)| k == "kueue.x-k8s.io/queue-name"),
+            "subscriber sees the post-removal object"
+        );
+
+        // Subsequent churn on the now-unlabelled object is filtered again.
+        a.update_status(KIND_POD, "charged", |o| o.status.insert("phase", "Running")).unwrap();
+        pods.sync().unwrap();
+        assert!(rx.try_iter().next().is_none(), "steady unlabelled churn stays dropped");
     }
 
     #[test]

@@ -62,7 +62,10 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
             node.meta.set_label(k, v);
         }
         node.status.insert("runtime", cri.runtime_name());
-        api.create(node)?;
+        // Apply, not create: re-registration over a WAL-recovered store
+        // (PR 6) — or a kubelet restart — refreshes the existing Node
+        // instead of failing AlreadyExists.
+        api.apply(node)?;
         Ok(Kubelet {
             api,
             pods,

@@ -91,6 +91,47 @@
 //! Remote informers are push-fed: over a streaming [`RemoteApi`] watch,
 //! an **idle informer performs zero RPC round-trips** (proven in
 //! `tests/informer.rs`) — the last per-cycle polling hot path is gone.
+//!
+//! # Persistence layer (PR 6)
+//!
+//! The store is sharded per kind and commits through a pluggable
+//! durability boundary ([`persist`]):
+//!
+//! - **Backend trait.** Every mutation is handed to a
+//!   [`persist::StoreBackend`] *before* it becomes visible
+//!   (append-on-commit); a failed append aborts the commit. The default
+//!   [`persist::MemoryBackend`] is a no-op; [`persist::WalBackend`]
+//!   writes one JSON line per commit to `<dir>/wal.log` and compacts the
+//!   full object set into `<dir>/snapshot.json` (temp-file + rename,
+//!   crash-safe) every `DEFAULT_COMPACT_THRESHOLD` appends. Build a
+//!   durable server with [`ApiServer::with_backend`] (CLI:
+//!   `hpcorc up --wal-dir DIR`); reopening the same directory recovers
+//!   every object, the resource-version/uid counters, and the store
+//!   clock — `kubectl get` output is byte-identical across the restart.
+//! - **Shard/version contract.** `resourceVersion`s come from one global
+//!   counter (writes serialize through a global commit lock, like etcd's
+//!   single log), but objects, watch histories, and watcher lists live
+//!   in per-kind shards with independent locks: pod churn cannot stall a
+//!   node/queue read, and cannot trim another kind's watch history. A
+//!   per-kind watch from bookmark `b` replays exactly that kind's events
+//!   in `(b, now]` or reports 410-Gone against *its own* retained
+//!   window; cross-kind churn surfaces only as BOOKMARK frames (PR 5),
+//!   whose semantics are unchanged. See `Store::shard_version` and the
+//!   shard-contract tests in `tests/api_parity.rs`.
+//! - **Delta relists.** [`ListOptions::delta_since`] asks a list to ship
+//!   only what changed after a version: the server answers from the
+//!   shard history with changed objects + deleted names
+//!   ([`ObjectList::delta`] = true) when the window still covers the
+//!   bookmark, or falls back to a full list. The [`informer`] reflector
+//!   uses it on 410-Gone/stream-loss recovery — a resync of a huge kind
+//!   ships a handful of events, keeps the cache epoch, and emits **no**
+//!   `Resync` (derived ledgers stay incremental). Because a recovered
+//!   [`persist::WalBackend`] seeds shard histories from the WAL tail,
+//!   this works *across server restarts* too.
+//!
+//! Scale: `benches/store_scale.rs` + the `#[ignore]`d `tests/scale.rs`
+//! stand up 100k objects and track create/list/watch-fanout p99 plus the
+//! pod-churn-vs-node-read isolation ratio in the CI perf trajectory.
 
 pub mod api;
 pub mod apiserver;
@@ -99,6 +140,7 @@ pub mod controller;
 pub mod deployment;
 pub mod informer;
 pub mod kubelet;
+pub mod persist;
 pub mod scheduler;
 pub mod scheme;
 pub mod store;
@@ -117,6 +159,7 @@ pub use controller::{Controller, ControllerRunner, Reconcile};
 pub use deployment::DeploymentController;
 pub use informer::{Informer, InformerEvent, SharedInformerFactory};
 pub use kubelet::Kubelet;
+pub use persist::{MemoryBackend, StoreBackend, WalBackend};
 pub use scheduler::KubeScheduler;
 pub use scheme::{default_scheme, GroupVersionKind, KindSpec, Scheme};
 pub use store::{Store, WatchEvent, DEFAULT_HISTORY_CAP};

@@ -2,13 +2,48 @@
 //! watch cache, distilled.
 //!
 //! Every mutation bumps a global `resourceVersion`, is applied with
-//! optimistic concurrency (update must carry the current version), and is
-//! appended to a bounded history so watchers can replay from a version.
+//! optimistic concurrency (update must carry the current version), is
+//! committed through a [`StoreBackend`] (PR 6: append-on-commit
+//! durability), and is appended to a bounded per-kind history so watchers
+//! can replay from a version.
+//!
+//! # Sharding (PR 6)
+//!
+//! State is sharded **per kind** (the GVK axis of this API machinery):
+//! each kind owns an independent lock, object map, watch history, and
+//! watcher list. Reads — `get`, `list`, per-kind `watch`/`events_since`
+//! — take only their shard's lock, so pod churn cannot stall node or
+//! queue reads. Writes serialize through one global commit lock (the
+//! moral equivalent of etcd's single raft log): that is what keeps
+//! `resourceVersion` a single totally-ordered sequence across kinds,
+//! which the cross-kind BOOKMARK frames of the streaming watch (PR 5)
+//! rely on.
+//!
+//! Lock hierarchy (strictly outer → inner, no exceptions):
+//! `global commit lock` → `shard map` → `individual shard`. Only a
+//! global-lock holder may lock more than one shard. The current version
+//! is mirrored in an atomic, stored while the written shard's lock is
+//! still held — so any version a reader observes is already fully
+//! committed (durable, in its shard's history, delivered to watchers).
+//!
+//! # Per-shard version contract
+//!
+//! - `resourceVersion`s are allocated from one global counter; a shard's
+//!   history holds a (gapped) subsequence of it.
+//! - [`Store::shard_version`] is the version of a kind's latest commit;
+//!   `shard_version(k) <= current_version()` always.
+//! - A per-kind watch from bookmark `b` replays exactly the events of
+//!   that kind in `(b, now]`, or reports 410-Gone when `b` predates the
+//!   shard's retained window. Other kinds' churn advances
+//!   `current_version()` but can neither stall nor reset a shard's
+//!   watch — it only surfaces as BOOKMARK frames.
 
 use super::api::KubeObject;
+use super::persist::{MemoryBackend, RecoveredState, Snapshot, StoreBackend, WalRecord};
 use crate::encoding::Value;
 use crate::util::{Error, Result};
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -53,38 +88,76 @@ impl WatchEvent {
     }
 }
 
-/// Default watch-history window. Small deployments never notice it; a
-/// testbed expecting event bursts (every kubelet sync, admission cycle,
-/// and autoscaler pass is a potential write) should size it explicitly
-/// via [`Store::with_history_cap`] — a burst larger than the window
-/// forces every watcher whose bookmark predates the trim into a spurious
-/// relist (the 410-Gone path), which is exactly the O(cluster) cost the
-/// informer layer exists to avoid.
+/// Default watch-history window **per shard**. Small deployments never
+/// notice it; a testbed expecting event bursts (every kubelet sync,
+/// admission cycle, and autoscaler pass is a potential write) should size
+/// it explicitly via [`Store::with_history_cap`] — a burst larger than
+/// the window forces every watcher whose bookmark predates the trim into
+/// a spurious relist (the 410-Gone path), which is exactly the
+/// O(cluster) cost the informer layer exists to avoid. Since PR 6 the
+/// window is per kind, so one kind's churn no longer evicts another
+/// kind's history.
 pub const DEFAULT_HISTORY_CAP: usize = 4096;
 
-struct StoreInner {
-    /// (kind, name) → object.
-    objects: BTreeMap<(String, String), KubeObject>,
+/// Global commit state: the version/uid counters, the durability
+/// backend, and the all-kinds watcher list. Held for every write (writes
+/// are serialized, like etcd's single log) and for all-kinds reads;
+/// never for per-kind reads.
+struct Global {
     version: u64,
     uid: u64,
-    history: VecDeque<(u64, WatchEvent)>,
-    history_cap: usize,
-    /// Highest event version evicted from `history` (0 = nothing evicted).
-    /// Replays from at or below this version may have lost events.
-    trimmed_through: u64,
-    watchers: Vec<Watcher>,
+    backend: Box<dyn StoreBackend>,
+    /// Subscribers with `kind = None` — they observe the full commit
+    /// sequence in order.
+    watchers: Vec<Sender<WatchEvent>>,
 }
 
-struct Watcher {
-    kind: Option<String>,
-    tx: Sender<WatchEvent>,
+/// Per-kind state. All per-kind reads lock only this.
+struct Shard {
+    /// name → object.
+    objects: BTreeMap<String, KubeObject>,
+    history: VecDeque<(u64, WatchEvent)>,
+    /// Highest event version evicted from `history` (0 = nothing
+    /// evicted). Replays from at or below this version may have lost
+    /// events. Seeded with the recovery floor on WAL-recovered stores:
+    /// pre-restart events below the last snapshot are unknowable.
+    trimmed_through: u64,
+    /// Version of this kind's latest commit.
+    last_version: u64,
+    watchers: Vec<Sender<WatchEvent>>,
 }
+
+impl Shard {
+    fn new(floor: u64) -> Shard {
+        Shard {
+            objects: BTreeMap::new(),
+            history: VecDeque::new(),
+            trimmed_through: floor,
+            last_version: 0,
+            watchers: Vec::new(),
+        }
+    }
+}
+
+type ShardMap = BTreeMap<String, Arc<Mutex<Shard>>>;
 
 /// The object store handle.
 #[derive(Clone)]
 pub struct Store {
-    inner: Arc<Mutex<StoreInner>>,
+    global: Arc<Mutex<Global>>,
+    shards: Arc<Mutex<ShardMap>>,
+    /// Mirror of `Global::version`, stored while the written shard's lock
+    /// is still held — a lock-free `current_version()` that never runs
+    /// ahead of commit visibility.
+    version: Arc<AtomicU64>,
+    history_cap: usize,
+    /// Bookmarks below this predate what the backend recovered: fresh
+    /// shards start their `trimmed_through` here.
+    recovered_floor: u64,
     epoch: Instant,
+    /// Store clock offset recovered from the backend (restart continuity
+    /// for creation timestamps).
+    base_s: f64,
 }
 
 impl Default for Store {
@@ -98,61 +171,181 @@ impl Store {
         Store::with_history_cap(DEFAULT_HISTORY_CAP)
     }
 
-    /// A store with an explicit watch-history window. `cap` bounds how
-    /// many events watchers (and the RPC watch poll) can replay before a
-    /// stale bookmark turns into the 410-Gone reset; size it above the
-    /// largest event burst expected between watcher polls.
+    /// A store with an explicit watch-history window (per shard). `cap`
+    /// bounds how many events watchers (and the RPC watch poll) can
+    /// replay before a stale bookmark turns into the 410-Gone reset;
+    /// size it above the largest per-kind event burst expected between
+    /// watcher polls.
     pub fn with_history_cap(cap: usize) -> Store {
-        Store {
-            inner: Arc::new(Mutex::new(StoreInner {
-                objects: BTreeMap::new(),
-                version: 0,
-                uid: 0,
-                history: VecDeque::new(),
-                history_cap: cap.max(1),
-                trimmed_through: 0,
+        Store::with_backend(Box::new(MemoryBackend::new()), cap)
+            .expect("memory backend cannot fail to load")
+    }
+
+    /// A store over an explicit durability backend. Recovers whatever the
+    /// backend persisted: objects, version/uid counters, the store clock,
+    /// and the WAL tail (which seeds the per-kind watch histories, so
+    /// watchers reconnecting with pre-restart bookmarks replay deltas
+    /// instead of resetting).
+    pub fn with_backend(mut backend: Box<dyn StoreBackend>, cap: usize) -> Result<Store> {
+        let recovered = backend.load()?;
+        let cap = cap.max(1);
+        let mut version = 0;
+        let mut uid = 0;
+        let mut base_s = 0.0;
+        let mut floor = 0;
+        let mut shards: ShardMap = BTreeMap::new();
+        if let Some(RecoveredState { objects, version: v, uid: u, seconds, tail, tail_floor }) =
+            recovered
+        {
+            version = v;
+            uid = u;
+            base_s = seconds;
+            floor = tail_floor;
+            for obj in objects {
+                let sh = shards
+                    .entry(obj.kind.clone())
+                    .or_insert_with(|| Arc::new(Mutex::new(Shard::new(floor))));
+                let mut sh = sh.lock().unwrap();
+                sh.last_version = sh.last_version.max(obj.meta.resource_version);
+                sh.objects.insert(obj.meta.name.clone(), obj);
+            }
+            for (ev_version, event) in tail {
+                let sh = shards
+                    .entry(event.object().kind.clone())
+                    .or_insert_with(|| Arc::new(Mutex::new(Shard::new(floor))));
+                let mut sh = sh.lock().unwrap();
+                sh.history.push_back((ev_version, event));
+                if sh.history.len() > cap {
+                    if let Some((evicted, _)) = sh.history.pop_front() {
+                        sh.trimmed_through = evicted;
+                    }
+                }
+                sh.last_version = sh.last_version.max(ev_version);
+            }
+        }
+        Ok(Store {
+            global: Arc::new(Mutex::new(Global {
+                version,
+                uid,
+                backend,
                 watchers: Vec::new(),
             })),
+            shards: Arc::new(Mutex::new(shards)),
+            version: Arc::new(AtomicU64::new(version)),
+            history_cap: cap,
+            recovered_floor: floor,
             epoch: Instant::now(),
-        }
+            base_s,
+        })
     }
 
-    /// The configured watch-history window.
+    /// The configured watch-history window (per shard).
     pub fn history_cap(&self) -> usize {
-        self.inner.lock().unwrap().history_cap
+        self.history_cap
     }
 
-    /// Seconds since store creation (object creation timestamps).
+    /// Seconds on the store clock (object creation timestamps). Continues
+    /// across restarts when the backend recovered a clock.
     pub fn now_s(&self) -> f64 {
-        self.epoch.elapsed().as_secs_f64()
+        self.base_s + self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// The shard for `kind`, created on first touch. Locks only the shard
+    /// map, and releases it before the caller locks the shard.
+    fn shard(&self, kind: &str) -> Arc<Mutex<Shard>> {
+        let mut map = self.shards.lock().unwrap();
+        if let Some(sh) = map.get(kind) {
+            return sh.clone();
+        }
+        let sh = Arc::new(Mutex::new(Shard::new(self.recovered_floor)));
+        map.insert(kind.to_string(), sh.clone());
+        sh
+    }
+
+    /// Snapshot the shard list (for all-kinds reads under the global
+    /// lock).
+    fn shard_list(&self) -> Vec<Arc<Mutex<Shard>>> {
+        self.shards.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Commit one mutation: durability append (abort on failure), counter
+    /// bump, shard history + fan-out, atomic version publish. `g` is the
+    /// held global lock; `sh` the held shard. Compaction is the caller's
+    /// job (drop the shard lock first, then [`Store::maybe_compact`]).
+    fn commit(
+        &self,
+        g: &mut Global,
+        sh: &mut Shard,
+        event: WatchEvent,
+        bump_uid: bool,
+        now: f64,
+    ) -> Result<u64> {
+        let v = g.version + 1;
+        let uid = if bump_uid { g.uid + 1 } else { g.uid };
+        g.backend.append(&WalRecord { version: v, uid, seconds: now, event: event.clone() })?;
+        g.version = v;
+        g.uid = uid;
+        sh.history.push_back((v, event.clone()));
+        if sh.history.len() > self.history_cap {
+            if let Some((evicted, _)) = sh.history.pop_front() {
+                sh.trimmed_through = evicted;
+            }
+        }
+        sh.last_version = v;
+        sh.watchers.retain(|tx| tx.send(event.clone()).is_ok());
+        g.watchers.retain(|tx| tx.send(event.clone()).is_ok());
+        self.version.store(v, Ordering::Release);
+        Ok(v)
+    }
+
+    /// Compact the backend if it asked for it. Must be called with the
+    /// global lock held and NO shard lock held.
+    fn maybe_compact(&self, g: &mut Global, now: f64) {
+        if !g.backend.wants_compaction() {
+            return;
+        }
+        let mut objects = Vec::new();
+        for sh in self.shard_list() {
+            let sh = sh.lock().unwrap();
+            objects.extend(sh.objects.values().cloned());
+        }
+        let _ = g.backend.compact(&Snapshot {
+            version: g.version,
+            uid: g.uid,
+            seconds: now,
+            objects,
+        });
     }
 
     /// Create; fails if (kind, name) exists. Returns the stored object
     /// (with uid/resourceVersion/creation assigned).
     pub fn create(&self, mut obj: KubeObject) -> Result<KubeObject> {
         let now = self.now_s();
-        let mut inner = self.inner.lock().unwrap();
-        let key = (obj.kind.clone(), obj.meta.name.clone());
-        if inner.objects.contains_key(&key) {
+        let mut g = self.global.lock().unwrap();
+        let shard = self.shard(&obj.kind);
+        let mut sh = shard.lock().unwrap();
+        if sh.objects.contains_key(&obj.meta.name) {
             return Err(Error::already_exists(&obj.kind, &obj.meta.name));
         }
-        inner.version += 1;
-        inner.uid += 1;
-        obj.meta.uid = inner.uid;
-        obj.meta.resource_version = inner.version;
+        obj.meta.uid = g.uid + 1;
+        obj.meta.resource_version = g.version + 1;
         obj.meta.creation_s = now;
-        inner.objects.insert(key, obj.clone());
-        let v = inner.version;
-        Self::publish(&mut inner, v, WatchEvent::Added(obj.clone()));
+        sh.objects.insert(obj.meta.name.clone(), obj.clone());
+        if let Err(e) = self.commit(&mut g, &mut sh, WatchEvent::Added(obj.clone()), true, now) {
+            sh.objects.remove(&obj.meta.name);
+            return Err(e);
+        }
+        drop(sh);
+        self.maybe_compact(&mut g, now);
         Ok(obj)
     }
 
     pub fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        self.inner
+        self.shard(kind)
             .lock()
             .unwrap()
             .objects
-            .get(&(kind.to_string(), name.to_string()))
+            .get(name)
             .cloned()
             .ok_or_else(|| Error::not_found(kind, name))
     }
@@ -160,67 +353,96 @@ impl Store {
     /// Update with optimistic concurrency: `obj.meta.resource_version` must
     /// match the stored version.
     pub fn update(&self, mut obj: KubeObject) -> Result<KubeObject> {
-        let mut inner = self.inner.lock().unwrap();
-        let key = (obj.kind.clone(), obj.meta.name.clone());
-        let current = inner
+        let now = self.now_s();
+        let mut g = self.global.lock().unwrap();
+        let shard = self.shard(&obj.kind);
+        let mut sh = shard.lock().unwrap();
+        let current = sh
             .objects
-            .get(&key)
+            .get(&obj.meta.name)
             .ok_or_else(|| Error::not_found(&obj.kind, &obj.meta.name))?;
         if current.meta.resource_version != obj.meta.resource_version {
             return Err(Error::conflict(&obj.kind, &obj.meta.name));
         }
         obj.meta.uid = current.meta.uid;
         obj.meta.creation_s = current.meta.creation_s;
-        inner.version += 1;
-        obj.meta.resource_version = inner.version;
-        inner.objects.insert(key, obj.clone());
-        let v = inner.version;
-        Self::publish(&mut inner, v, WatchEvent::Modified(obj.clone()));
+        obj.meta.resource_version = g.version + 1;
+        let prev = sh.objects.insert(obj.meta.name.clone(), obj.clone());
+        if let Err(e) =
+            self.commit(&mut g, &mut sh, WatchEvent::Modified(obj.clone()), false, now)
+        {
+            if let Some(prev) = prev {
+                sh.objects.insert(obj.meta.name.clone(), prev);
+            }
+            return Err(e);
+        }
+        drop(sh);
+        self.maybe_compact(&mut g, now);
         Ok(obj)
     }
 
     pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        let mut inner = self.inner.lock().unwrap();
-        let key = (kind.to_string(), name.to_string());
-        let obj = inner
-            .objects
-            .remove(&key)
-            .ok_or_else(|| Error::not_found(kind, name))?;
-        inner.version += 1;
-        let v = inner.version;
-        Self::publish(&mut inner, v, WatchEvent::Deleted(obj.clone()));
+        let now = self.now_s();
+        let mut g = self.global.lock().unwrap();
+        let shard = self.shard(kind);
+        let mut sh = shard.lock().unwrap();
+        let obj = sh.objects.remove(name).ok_or_else(|| Error::not_found(kind, name))?;
+        if let Err(e) =
+            self.commit(&mut g, &mut sh, WatchEvent::Deleted(obj.clone()), false, now)
+        {
+            sh.objects.insert(name.to_string(), obj);
+            return Err(e);
+        }
+        drop(sh);
+        self.maybe_compact(&mut g, now);
         Ok(obj)
     }
 
     /// List objects of a kind, optionally filtered by a label selector
-    /// (all pairs must match).
+    /// (all pairs must match). Locks only the kind's shard.
     pub fn list(&self, kind: &str, selector: &[(String, String)]) -> Vec<KubeObject> {
-        self.inner
+        self.shard(kind)
             .lock()
             .unwrap()
             .objects
-            .range((kind.to_string(), String::new())..)
-            .take_while(|((k, _), _)| k == kind)
-            .map(|(_, o)| o.clone())
-            .filter(|o| {
-                selector.iter().all(|(k, v)| o.meta.label(k) == Some(v.as_str()))
-            })
+            .values()
+            .filter(|o| selector.iter().all(|(k, v)| o.meta.label(k) == Some(v.as_str())))
+            .cloned()
             .collect()
     }
 
+    /// All objects of all kinds — a consistent cross-kind snapshot (takes
+    /// the global lock, so commits are parked while it images the
+    /// shards).
     pub fn list_all(&self) -> Vec<KubeObject> {
-        self.inner.lock().unwrap().objects.values().cloned().collect()
+        let _g = self.global.lock().unwrap();
+        let mut out = Vec::new();
+        for sh in self.shard_list() {
+            out.extend(sh.lock().unwrap().objects.values().cloned());
+        }
+        out
     }
 
     pub fn current_version(&self) -> u64 {
-        self.inner.lock().unwrap().version
+        self.version.load(Ordering::Acquire)
     }
 
-    /// Highest event version evicted from the watch history (0 = nothing
-    /// evicted yet). A watch bookmark at or below this is stale: replaying
-    /// from it may silently miss events.
+    /// Version of `kind`'s latest commit (0 = no commit yet). Always
+    /// `<= current_version()`; the gap is other kinds' churn.
+    pub fn shard_version(&self, kind: &str) -> u64 {
+        self.shard(kind).lock().unwrap().last_version
+    }
+
+    /// Highest event version evicted from any shard's watch history (0 =
+    /// nothing evicted yet). A cross-kind watch bookmark at or below this
+    /// is stale: replaying from it may silently miss events.
     pub fn trimmed_through(&self) -> u64 {
-        self.inner.lock().unwrap().trimmed_through
+        let _g = self.global.lock().unwrap();
+        let mut t = self.recovered_floor;
+        for sh in self.shard_list() {
+            t = t.max(sh.lock().unwrap().trimmed_through);
+        }
+        t
     }
 
     /// Watch events for `kind` (None = all kinds) from `from_version`
@@ -242,68 +464,104 @@ impl Store {
     /// instead of trusting a replay), otherwise the replay-then-live
     /// receiver of [`Store::watch`]. Also returns the store version at
     /// registration — the stream's starting bookmark. The staleness
-    /// check, the replay, and the registration all happen under one lock,
-    /// so they cannot race a concurrent trim.
+    /// check, the replay, and the registration all happen under one lock
+    /// (the shard's for per-kind watches, the global for all-kinds), so
+    /// they cannot race a concurrent trim.
     pub fn try_watch(
         &self,
         kind: Option<&str>,
         from_version: u64,
     ) -> (u64, Option<Receiver<WatchEvent>>) {
         let (tx, rx) = channel();
-        let mut inner = self.inner.lock().unwrap();
-        if from_version < inner.trimmed_through {
-            return (inner.version, None);
-        }
-        for (v, ev) in inner.history.iter() {
-            if *v > from_version
-                && kind.map(|k| ev.object().kind == k).unwrap_or(true)
-            {
-                let _ = tx.send(ev.clone());
+        match kind {
+            Some(k) => {
+                let shard = self.shard(k);
+                let mut sh = shard.lock().unwrap();
+                if from_version < sh.trimmed_through {
+                    return (self.current_version(), None);
+                }
+                for (v, ev) in sh.history.iter() {
+                    if *v > from_version {
+                        let _ = tx.send(ev.clone());
+                    }
+                }
+                sh.watchers.push(tx);
+                // Loaded under the shard lock: every event of this kind
+                // at or below it is replayed above or will arrive live.
+                (self.current_version(), Some(rx))
+            }
+            None => {
+                let mut g = self.global.lock().unwrap();
+                let (version, events, reset) = self.merged_events(&g, from_version);
+                if reset {
+                    return (version, None);
+                }
+                for ev in events {
+                    let _ = tx.send(ev);
+                }
+                g.watchers.push(tx);
+                (version, Some(rx))
             }
         }
-        inner.watchers.push(Watcher { kind: kind.map(String::from), tx });
-        (inner.version, Some(rx))
     }
 
     /// One-shot replay: events for `kind` (None = all) newer than
     /// `from_version`, plus the store version they bring the caller up to,
     /// plus a `reset` flag. This is the poll primitive behind the RPC
-    /// transport's watch — no watcher is registered, so it is safe to call
-    /// at any rate. `reset = true` means `from_version` has fallen out of
-    /// the retained history window, so events may have been lost — the
-    /// 410-Gone signal of the k8s watch API; the caller must relist and
-    /// rewatch rather than trust the replay.
+    /// transport's watch — and, per kind, the delta-relist primitive (PR
+    /// 6) — no watcher is registered, so it is safe to call at any rate.
+    /// `reset = true` means `from_version` has fallen out of the retained
+    /// history window, so events may have been lost — the 410-Gone signal
+    /// of the k8s watch API; the caller must relist and rewatch rather
+    /// than trust the replay.
     pub fn events_since(
         &self,
         kind: Option<&str>,
         from_version: u64,
     ) -> (u64, Vec<WatchEvent>, bool) {
-        let inner = self.inner.lock().unwrap();
-        let reset = from_version < inner.trimmed_through;
-        let events = inner
-            .history
-            .iter()
-            .filter(|(v, ev)| {
-                *v > from_version && kind.map(|k| ev.object().kind == k).unwrap_or(true)
-            })
-            .map(|(_, ev)| ev.clone())
-            .collect();
-        (inner.version, events, reset)
-    }
-
-    fn publish(inner: &mut StoreInner, version: u64, event: WatchEvent) {
-        inner.history.push_back((version, event.clone()));
-        if inner.history.len() > inner.history_cap {
-            if let Some((evicted, _)) = inner.history.pop_front() {
-                inner.trimmed_through = evicted;
+        match kind {
+            Some(k) => {
+                let shard = self.shard(k);
+                let sh = shard.lock().unwrap();
+                let reset = from_version < sh.trimmed_through;
+                let events = sh
+                    .history
+                    .iter()
+                    .filter(|(v, _)| *v > from_version)
+                    .map(|(_, ev)| ev.clone())
+                    .collect();
+                // Loaded under the shard lock, so no event of this kind
+                // at or below the returned version can be missing.
+                (self.current_version(), events, reset)
+            }
+            None => {
+                let g = self.global.lock().unwrap();
+                let (version, events, reset) = self.merged_events(&g, from_version);
+                (version, events.into_iter().map(|(_, ev)| ev).collect(), reset)
             }
         }
-        inner.watchers.retain(|w| match w.kind.as_deref() {
-            // Not subscribed to this kind: keep (dead ones are dropped on
-            // their next matching event).
-            Some(k) if event.object().kind != k => true,
-            _ => w.tx.send(event.clone()).is_ok(),
-        });
+    }
+
+    /// Merge every shard's history above `from_version`, in commit order.
+    /// Caller holds the global lock (`_g`), so no commit can interleave.
+    fn merged_events(
+        &self,
+        g: &Global,
+        from_version: u64,
+    ) -> (u64, Vec<(u64, WatchEvent)>, bool) {
+        let mut reset = from_version < self.recovered_floor;
+        let mut events: Vec<(u64, WatchEvent)> = Vec::new();
+        for sh in self.shard_list() {
+            let sh = sh.lock().unwrap();
+            if from_version < sh.trimmed_through {
+                reset = true;
+            }
+            events.extend(
+                sh.history.iter().filter(|(v, _)| *v > from_version).cloned(),
+            );
+        }
+        events.sort_by_key(|(v, _)| *v);
+        (g.version, events, reset)
     }
 }
 
@@ -312,6 +570,7 @@ mod tests {
     use super::*;
     use crate::encoding::Value;
     use crate::kube::api::KIND_POD;
+    use crate::kube::persist::WalBackend;
 
     fn pod(name: &str) -> KubeObject {
         KubeObject::new(KIND_POD, name, Value::map().with("x", 1i64))
@@ -416,6 +675,10 @@ mod tests {
         // All kinds, from the beginning.
         let (_, all, _) = s.events_since(None, 0);
         assert_eq!(all.len(), 3);
+        // Cross-kind merge preserves commit order.
+        assert_eq!(all[0].object().meta.name, "a");
+        assert_eq!(all[1].object().meta.name, "b");
+        assert_eq!(all[2].object().kind, "Node");
         // Caught up: nothing new.
         let (rv2, none, reset) = s.events_since(None, rv);
         assert_eq!(rv2, rv);
@@ -542,5 +805,199 @@ mod tests {
         let updated = s.update(mod_a).unwrap();
         assert_eq!(updated.meta.uid, a.meta.uid);
         assert_eq!(updated.meta.creation_s, a.meta.creation_s);
+    }
+
+    // ---- PR 6: sharding + durability ---------------------------------
+
+    /// The per-shard version contract: one global sequence, per-kind
+    /// subsequences; another kind's churn past a shard's history cap
+    /// neither resets nor pollutes a per-kind watch.
+    #[test]
+    fn shard_isolation_survives_foreign_kind_churn() {
+        let s = Store::with_history_cap(64);
+        let n = s.create(KubeObject::new("Node", "n1", Value::map())).unwrap();
+        let node_v = n.meta.resource_version;
+        // Churn pods far past the history window.
+        s.create(pod("p")).unwrap();
+        for i in 0..200 {
+            let mut o = s.get(KIND_POD, "p").unwrap();
+            o.status.insert("n", i as u64);
+            s.update(o).unwrap();
+        }
+        assert_eq!(s.shard_version("Node"), node_v, "pod churn leaves the node shard alone");
+        assert!(s.shard_version(KIND_POD) > node_v);
+        assert!(s.shard_version(KIND_POD) <= s.current_version());
+        // A node watch from the pre-churn bookmark replays cleanly: no
+        // reset, no pod events.
+        let (rv, events, reset) = s.events_since(Some("Node"), node_v);
+        assert!(!reset, "foreign churn must not trim the node shard");
+        assert!(events.is_empty());
+        assert_eq!(rv, s.current_version());
+        // Whereas the pod shard itself did trim.
+        let (_, _, reset) = s.events_since(Some(KIND_POD), node_v);
+        assert!(reset, "the churned shard trims normally");
+    }
+
+    #[test]
+    fn wal_store_recovers_objects_versions_and_clock() {
+        let dir = std::env::temp_dir()
+            .join(format!("hpcorc-store-wal-{}-recover", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (version, uid, creation) = {
+            let s = Store::with_backend(
+                Box::new(WalBackend::open(&dir).unwrap()),
+                DEFAULT_HISTORY_CAP,
+            )
+            .unwrap();
+            let a = s.create(pod("a")).unwrap();
+            let mut a2 = a.clone();
+            a2.status = Value::map().with("phase", "Running");
+            s.update(a2).unwrap();
+            s.create(pod("gone")).unwrap();
+            s.delete(KIND_POD, "gone").unwrap();
+            s.create(KubeObject::new("Node", "n1", Value::map())).unwrap();
+            (s.current_version(), a.meta.uid, a.meta.creation_s)
+        };
+
+        let s2 = Store::with_backend(
+            Box::new(WalBackend::open(&dir).unwrap()),
+            DEFAULT_HISTORY_CAP,
+        )
+        .unwrap();
+        assert_eq!(s2.current_version(), version, "version counter survives");
+        let a = s2.get(KIND_POD, "a").unwrap();
+        assert_eq!(a.meta.uid, uid, "uid survives");
+        assert_eq!(a.meta.creation_s, creation, "creation timestamp survives");
+        assert_eq!(a.status.opt_str("phase"), Some("Running"));
+        assert!(s2.get(KIND_POD, "gone").unwrap_err().is_not_found());
+        assert_eq!(s2.list("Node", &[]).len(), 1);
+        assert!(s2.now_s() >= creation, "store clock continues, never rewinds");
+        // New writes continue the version sequence without collisions.
+        let b = s2.create(pod("b")).unwrap();
+        assert!(b.meta.resource_version > version);
+        assert!(b.meta.uid > uid);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A recovered store can serve *delta* replays to watchers whose
+    /// bookmarks predate the restart: the WAL tail seeds the shard
+    /// histories.
+    #[test]
+    fn wal_store_replays_pre_restart_bookmarks_without_reset() {
+        let dir = std::env::temp_dir()
+            .join(format!("hpcorc-store-wal-{}-tail", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let bookmark = {
+            let s = Store::with_backend(
+                Box::new(WalBackend::open(&dir).unwrap()),
+                DEFAULT_HISTORY_CAP,
+            )
+            .unwrap();
+            s.create(pod("a")).unwrap();
+            let bookmark = s.current_version();
+            s.create(pod("b")).unwrap();
+            s.create(pod("c")).unwrap();
+            bookmark
+        };
+        let s2 = Store::with_backend(
+            Box::new(WalBackend::open(&dir).unwrap()),
+            DEFAULT_HISTORY_CAP,
+        )
+        .unwrap();
+        let (rv, events, reset) = s2.events_since(Some(KIND_POD), bookmark);
+        assert!(!reset, "pre-restart bookmark replays from the recovered tail");
+        assert_eq!(events.len(), 2, "only b and c: a delta, not a full relist");
+        assert_eq!(events[0].object().meta.name, "b");
+        assert_eq!(events[1].object().meta.name, "c");
+        assert_eq!(rv, s2.current_version());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Compaction (snapshot + log truncate) keeps recovery exact and
+    /// resets the replayable floor: bookmarks below the snapshot reset.
+    #[test]
+    fn wal_store_compaction_preserves_state_and_floors_bookmarks() {
+        let dir = std::env::temp_dir()
+            .join(format!("hpcorc-store-wal-{}-compact", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (version, early) = {
+            let s = Store::with_backend(
+                Box::new(WalBackend::open(&dir).unwrap().with_compact_threshold(8)),
+                DEFAULT_HISTORY_CAP,
+            )
+            .unwrap();
+            let early = s.create(pod("a")).unwrap().meta.resource_version;
+            for i in 0..20 {
+                let mut o = s.get(KIND_POD, "a").unwrap();
+                o.status.insert("n", i as u64);
+                s.update(o).unwrap();
+            }
+            (s.current_version(), early)
+        };
+        assert!(
+            std::fs::read_to_string(dir.join("snapshot.json")).unwrap().contains("\"a\""),
+            "compaction wrote a snapshot"
+        );
+        let s2 = Store::with_backend(
+            Box::new(WalBackend::open(&dir).unwrap()),
+            DEFAULT_HISTORY_CAP,
+        )
+        .unwrap();
+        assert_eq!(s2.current_version(), version);
+        assert_eq!(s2.list(KIND_POD, &[]).len(), 1);
+        // A bookmark from before the snapshot cannot be served as a
+        // delta: explicit reset, not a silent miss.
+        let (_, _, reset) = s2.events_since(Some(KIND_POD), early);
+        assert!(reset, "pre-snapshot bookmark must reset");
+        // Fresh shards inherit the floor too: a kind never seen since
+        // the snapshot resets rather than replaying emptily.
+        let (_, _, reset) = s2.events_since(Some("Ghost"), early);
+        assert!(reset, "unseen-kind bookmark below the floor must reset");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A failed durability append aborts the commit: no version bump, no
+    /// watch event, no state change.
+    #[test]
+    fn failed_append_aborts_commit() {
+        struct FailingBackend {
+            fail: std::sync::Arc<std::sync::atomic::AtomicBool>,
+        }
+        impl StoreBackend for FailingBackend {
+            fn load(&mut self) -> Result<Option<RecoveredState>> {
+                Ok(None)
+            }
+            fn append(&mut self, _r: &WalRecord) -> Result<()> {
+                if self.fail.load(Ordering::Relaxed) {
+                    Err(Error::internal("disk full"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+        let fail = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let s = Store::with_backend(
+            Box::new(FailingBackend { fail: fail.clone() }),
+            DEFAULT_HISTORY_CAP,
+        )
+        .unwrap();
+        let a = s.create(pod("a")).unwrap();
+        let rx = s.watch(Some(KIND_POD), s.current_version());
+        let v = s.current_version();
+        fail.store(true, Ordering::Relaxed);
+        assert!(s.create(pod("b")).is_err());
+        let mut a2 = a.clone();
+        a2.status.insert("phase", "Running");
+        assert!(s.update(a2.clone()).is_err());
+        assert!(s.delete(KIND_POD, "a").is_err());
+        assert_eq!(s.current_version(), v, "no version bump on failed append");
+        assert!(s.get(KIND_POD, "b").unwrap_err().is_not_found());
+        assert_eq!(s.get(KIND_POD, "a").unwrap(), a, "update rolled back");
+        assert_eq!(rx.try_iter().count(), 0, "no watch event leaked");
+        // Recovered backend: commits flow again and versions resume.
+        fail.store(false, Ordering::Relaxed);
+        let b = s.create(pod("b")).unwrap();
+        assert_eq!(b.meta.resource_version, v + 1);
+        assert_eq!(rx.try_iter().count(), 1);
     }
 }

@@ -116,9 +116,11 @@ impl AdmissionCore {
             // Label-key-filtered: unlabelled pod churn (clusters that
             // never opted into queueing) is dropped inside the reflector
             // before any clone, preserving the "pay ~nothing per event"
-            // property. Label *removal* on a live admitted workload stops
-            // its events — that charge then holds (conservatively, no
-            // overcommit) until the next rebuild re-derives it away.
+            // property. Label *removal* still delivers that one
+            // transition (the informer also matches the pre-event cached
+            // labels), so `charge_entry` returns `None` for the stripped
+            // object and `apply_delta` uncharges it immediately — no
+            // rebuild needed to release the quota.
             inf.subscribe_with_label_key(tx.clone(), QUEUE_NAME_LABEL);
             workloads.push(inf);
         }
@@ -727,6 +729,34 @@ mod tests {
         let r = core.cycle(&a).unwrap();
         assert_eq!(r.admitted, 1);
         assert!(is_admitted(&a.get(KIND_POD, "p2").unwrap()));
+    }
+
+    #[test]
+    fn queue_label_removal_uncharges_without_rebuild() {
+        let a = api();
+        let core = core_for(&a);
+        a.create(ClusterQueueView::build("cq-a", QueueResources::nodes(1))).unwrap();
+        a.create(LocalQueueView::build("team", "cq-a")).unwrap();
+        a.create(labelled_pod("first", "team", 100)).unwrap();
+        assert_eq!(core.cycle(&a).unwrap().admitted, 1);
+        let rebuilds = core.ledger_rebuilds();
+
+        // Strip the queue label from the admitted workload: the informer
+        // still delivers that transition (it matched the pre-event
+        // labels), charge_entry returns None, and apply_delta releases
+        // the charge — incrementally, not via rebuild.
+        let mut stripped = a.get(KIND_POD, "first").unwrap();
+        stripped.meta.labels.retain(|(k, _)| k != QUEUE_NAME_LABEL);
+        a.update(stripped).unwrap();
+        a.create(labelled_pod("second", "team", 100)).unwrap();
+        let r = core.cycle(&a).unwrap();
+        assert_eq!(r.admitted, 1, "freed quota admits the newcomer");
+        assert!(is_admitted(&a.get(KIND_POD, "second").unwrap()));
+        assert_eq!(
+            core.ledger_rebuilds(),
+            rebuilds,
+            "label removal must uncharge without a ledger rebuild"
+        );
     }
 
     #[test]

@@ -558,3 +558,81 @@ fn typed_api_handles_identical_through_both_transports() {
 
     assert_eq!(local, remote);
 }
+
+/// The per-shard version contract (PR 6), in transcript terms: every
+/// kind lives in its own store shard (own lock, history, last-version),
+/// but resource versions are drawn from ONE global counter, and any
+/// list's `resourceVersion` — full or delta, any kind — reports that
+/// global version. Foreign-kind churn therefore advances the version a
+/// node client observes (PR 5's cross-kind BOOKMARK semantics) while a
+/// node *delta* list ships zero items for it. Identical through both
+/// transports.
+#[test]
+fn sharded_delta_lists_identical_through_both_transports() {
+    fn delta_scenario(api: &dyn ApiClient) -> Vec<String> {
+        let mut t = Vec::new();
+        for i in 0..3 {
+            api.create(pod(&format!("d{i}"))).expect("create");
+        }
+        api.create(NodeView::build("dn1", Resources::cores(8, 32 << 30), &[]))
+            .expect("node");
+        let floor = api.list(KIND_POD, &ListOptions::all()).expect("floor").resource_version;
+
+        // Pod-shard churn only; the node shard sees none of it.
+        api.update_status(KIND_POD, "d1", &|o| {
+            o.status.insert("phase", "Running");
+        })
+        .expect("us");
+        api.delete(KIND_POD, "d2").expect("del");
+        api.create(pod("d3")).expect("late create");
+
+        let pods = api
+            .list(KIND_POD, &ListOptions::all().delta_since(floor))
+            .expect("pod delta");
+        t.push(format!(
+            "pod delta={} items={:?} deleted={:?}",
+            pods.delta,
+            pods.items.iter().map(|o| o.meta.name.clone()).collect::<Vec<_>>(),
+            pods.deleted
+        ));
+        let nodes = api
+            .list(KIND_NODE, &ListOptions::all().delta_since(floor))
+            .expect("node delta");
+        t.push(format!(
+            "node delta={} items={} deleted={} (foreign churn ships nothing)",
+            nodes.delta,
+            nodes.items.len(),
+            nodes.deleted.len()
+        ));
+        // One global version counter across all shards: a full node list
+        // observes the version the pod churn advanced it to.
+        let full_nodes = api.list(KIND_NODE, &ListOptions::all()).expect("full nodes");
+        t.push(format!(
+            "global version: node full rv == pod delta rv = {}",
+            full_nodes.resource_version == pods.resource_version
+        ));
+        t
+    }
+
+    let local_api = ApiServer::new(Metrics::new());
+    let local = delta_scenario(&local_api);
+
+    let sd = Shutdown::new();
+    let path = std::env::temp_dir()
+        .join(format!("hpcorc-parity-delta-{}.sock", std::process::id()));
+    let mut srv = RedboxServer::start(&path, sd.clone(), Metrics::new()).unwrap();
+    let remote_server = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", remote_server.rpc_service());
+    let remote_api = RemoteApi::connect(&path).unwrap();
+    let remote = delta_scenario(&remote_api);
+    srv.stop();
+
+    assert_eq!(local, remote, "sharded delta-list transcripts diverged");
+    assert_eq!(
+        local[0],
+        r#"pod delta=true items=["d1", "d3"] deleted=["d2"]"#,
+        "delta coalesces per name: final states + deleted names only"
+    );
+    assert_eq!(local[1], "node delta=true items=0 deleted=0 (foreign churn ships nothing)");
+    assert_eq!(local[2], "global version: node full rv == pod delta rv = true");
+}

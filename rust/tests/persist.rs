@@ -1,0 +1,344 @@
+//! Persistence-layer integration (PR 6 acceptance):
+//!
+//! 1. **Total recovery** — a WAL-backed ApiServer killed and reopened on
+//!    the same directory recovers every object *and every resource
+//!    version*, byte-for-byte, and its version counter resumes (no
+//!    resource-version reuse across the restart).
+//! 2. **Restart mid-workload converges without a full relist** — kueue
+//!    tenant admitted + scheduled, server killed after a blind-spot
+//!    write, a second server opened over the same WAL dir. The informer
+//!    caches recover over a **delta relist** (no epoch bump, no Resync,
+//!    no ledger rebuild, zero additional full-list RPCs), the freed
+//!    quota admits the waiting pod, the scheduler binds it, and a
+//!    brand-new controller stack over the recovered server agrees
+//!    completely — the fresh-start fixed point of `tests/informer.rs`.
+
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::encoding::Value;
+use hpcorc::kube::{
+    ApiClient, ApiServer, KubeObject, KubeScheduler, ListOptions, NodeView, ObjectList,
+    PodView, SharedInformerFactory, WalBackend, WatchEvent, KIND_NODE, KIND_POD,
+};
+use hpcorc::kueue::{
+    is_admitted, AdmissionCore, ClusterQueueView, LocalQueueView, QueueResources,
+    KIND_CLUSTERQUEUE, KIND_LOCALQUEUE,
+};
+use hpcorc::rt::Shutdown;
+use hpcorc::util::Result;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn wal_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hpcorc-persist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn wal_server(dir: &Path) -> ApiServer {
+    ApiServer::with_backend(Metrics::new(), Box::new(WalBackend::open(dir).unwrap()), 4096)
+        .unwrap()
+}
+
+fn queued_pod(name: &str, queue: &str, cpu: u64) -> KubeObject {
+    let mut p = PodView::build(name, "img.sif", Resources::new(cpu, 1 << 20, 0), &[]);
+    hpcorc::kueue::queue_workload(&mut p, queue);
+    p
+}
+
+/// ApiClient wrapper whose backing ApiServer can be swapped mid-flight —
+/// the client-side shape of "the API server restarted". Swapping severs
+/// every live watch stream (the forwarder threads drop their senders) and
+/// routes all subsequent calls to the new server. Full-list RPCs
+/// (`delta_floor` absent) are counted separately so tests can prove
+/// recovery never paid for one.
+struct SwappableApi {
+    inner: Mutex<ApiServer>,
+    full_lists: AtomicU64,
+    taps: Mutex<Vec<Shutdown>>,
+}
+
+impl SwappableApi {
+    fn new(api: ApiServer) -> Arc<SwappableApi> {
+        Arc::new(SwappableApi {
+            inner: Mutex::new(api),
+            full_lists: AtomicU64::new(0),
+            taps: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn api(&self) -> ApiServer {
+        self.inner.lock().unwrap().clone()
+    }
+
+    fn full_lists(&self) -> u64 {
+        self.full_lists.load(Ordering::SeqCst)
+    }
+
+    /// The restart: sever every stream, then serve from `next`.
+    fn swap(&self, next: ApiServer) {
+        for sd in self.taps.lock().unwrap().drain(..) {
+            sd.trigger();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        *self.inner.lock().unwrap() = next;
+    }
+}
+
+impl ApiClient for SwappableApi {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api().create(obj)
+    }
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api().get(kind, name)
+    }
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        ApiServer::update(&self.api(), obj)
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        self.api().update_status(kind, name, f)
+    }
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        self.api().patch_merge(kind, name, patch)
+    }
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api().delete(kind, name)
+    }
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api().apply(obj)
+    }
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        if opts.delta_floor.is_none() {
+            self.full_lists.fetch_add(1, Ordering::SeqCst);
+        }
+        self.api().list_opts(kind, opts)
+    }
+    fn watch(&self, kind: Option<&str>, from: u64) -> Result<Receiver<WatchEvent>> {
+        let upstream = ApiServer::watch(&self.api(), kind, from);
+        let (tx, rx) = channel();
+        let sd = Shutdown::new();
+        self.taps.lock().unwrap().push(sd.clone());
+        hpcorc::rt::spawn_named("swappable-watch", move || loop {
+            if sd.is_triggered() {
+                return; // drops tx: the server "restarted"
+            }
+            match upstream.recv_timeout(Duration::from_millis(1)) {
+                Ok(ev) => {
+                    if tx.send(ev).is_err() {
+                        return;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(_) => return,
+            }
+        });
+        Ok(rx)
+    }
+    fn server_time_s(&self) -> Result<f64> {
+        Ok(self.api().now_s())
+    }
+}
+
+/// Acceptance: kill + reopen recovers every object with its exact
+/// resource version, and the version counter resumes past the old head.
+#[test]
+fn restart_recovers_every_object_and_resource_version() {
+    let dir = wal_dir("total");
+    let first = wal_server(&dir);
+    first.create(NodeView::build("w1", Resources::cores(8, 64 << 30), &[])).unwrap();
+    for i in 0..20 {
+        first
+            .create(PodView::build(
+                &format!("p{i}"),
+                "img.sif",
+                Resources::new(100, 1 << 20, 0),
+                &[],
+            ))
+            .unwrap();
+    }
+    // Mixed history: status updates, a label patch, and a deletion, so
+    // recovery has to replay more than straight creations.
+    for i in 0..5 {
+        first
+            .update_status(KIND_POD, &format!("p{i}"), |o| {
+                o.status.insert("phase", "Running");
+            })
+            .unwrap();
+    }
+    first
+        .patch_merge(
+            KIND_POD,
+            "p7",
+            &Value::map().with("metadata", Value::map().with("labels", Value::map().with("t", "x"))),
+        )
+        .unwrap();
+    first.delete(KIND_POD, "p9").unwrap();
+
+    let before: Vec<KubeObject> = {
+        let mut all = first.list(KIND_NODE, &[]);
+        all.extend(first.list(KIND_POD, &[]));
+        all
+    };
+    let version = first.current_version();
+    drop(first); // the "kill" — per-commit flushes mean nothing is lost
+
+    let second = wal_server(&dir);
+    assert_eq!(second.current_version(), version, "version counter survives the restart");
+    let after: Vec<KubeObject> = {
+        let mut all = second.list(KIND_NODE, &[]);
+        all.extend(second.list(KIND_POD, &[]));
+        all
+    };
+    assert_eq!(after.len(), before.len(), "p9 stays deleted; everything else survives");
+    for (a, b) in after.iter().zip(before.iter()) {
+        assert_eq!(a, b, "{}/{} must recover byte-identical", b.kind, b.meta.name);
+    }
+    assert!(second.get(KIND_POD, "p9").is_err(), "deletions are durable too");
+
+    // New writes resume the counter — no resource-version reuse.
+    let created = second
+        .create(PodView::build("post", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+        .unwrap();
+    assert!(created.meta.resource_version > version);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (satellite 4): restart mid-workload. Informer caches, the
+/// kueue ledger, and the scheduler converge to the fresh-start fixed
+/// point — over a delta relist, with no epoch bump, no Resync-driven
+/// ledger rebuild, and zero additional full-list RPCs.
+#[test]
+fn restart_mid_workload_converges_over_delta_relist() {
+    let dir = wal_dir("workload");
+    let first = wal_server(&dir);
+    let swap = SwappableApi::new(first.clone());
+    let informer_metrics = Metrics::new();
+    let informers =
+        SharedInformerFactory::new(swap.clone() as Arc<dyn ApiClient>, informer_metrics.clone());
+    let core = AdmissionCore::new(&informers, Metrics::new());
+    let sched = KubeScheduler::new(&informers, Metrics::new());
+
+    swap.create(NodeView::build("w1", Resources::cores(8, 64 << 30), &[])).unwrap();
+    swap.create(ClusterQueueView::build("cq", QueueResources::nodes(2))).unwrap();
+    swap.create(LocalQueueView::build("team", "cq")).unwrap();
+    swap.create(queued_pod("p0", "team", 100)).unwrap();
+    swap.create(queued_pod("p1", "team", 100)).unwrap();
+    swap.create(queued_pod("p2", "team", 100)).unwrap();
+
+    // Converge before the restart: quota admits p0+p1, scheduler binds.
+    let r = core.cycle(swap.as_ref() as &dyn ApiClient).unwrap();
+    assert_eq!(r.admitted, 2, "2-node quota admits p0+p1");
+    assert_eq!(sched.run_cycle(), 2, "admitted pods bind to w1");
+    assert!(!is_admitted(&first.get(KIND_POD, "p2").unwrap()));
+    assert_eq!(core.ledger_rebuilds(), 1, "cold start built the ledger once");
+    let pod_epoch = informers.informer(KIND_POD).epoch();
+    let full_lists = swap.full_lists();
+
+    // Blind-spot write, then the kill: p0 completes (freeing quota) in
+    // the instant before the server dies — the reflectors never see the
+    // event over their severed streams, only via recovery.
+    first
+        .update_status(KIND_POD, "p0", |o| {
+            o.status.insert("phase", "Succeeded");
+        })
+        .unwrap();
+    let second = wal_server(&dir);
+    assert_eq!(second.current_version(), first.current_version(), "full recovery");
+    swap.swap(second.clone());
+
+    // Recovery: the recovered WAL tail seeds the new server's watch
+    // histories, so every reflector resumes with a delta relist — the
+    // pre-restart bookmarks are still inside the window.
+    let r = core.cycle(swap.as_ref() as &dyn ApiClient).unwrap();
+    assert_eq!(r.admitted, 1, "freed quota admits p2 after the restart");
+    assert_eq!(sched.run_cycle(), 1, "recovered scheduler binds p2");
+    assert!(is_admitted(&second.get(KIND_POD, "p1").unwrap()));
+    assert!(is_admitted(&second.get(KIND_POD, "p2").unwrap()));
+    assert_eq!(
+        informers.informer(KIND_POD).epoch(),
+        pod_epoch,
+        "delta relist: the resync epoch must not bump"
+    );
+    assert_eq!(core.ledger_rebuilds(), 1, "no Resync: the ledger never rebuilt");
+    assert!(
+        informer_metrics.counter_value("kube.informer.delta_relists") >= 1,
+        "recovery must have gone through the delta-relist path"
+    );
+    assert_eq!(
+        swap.full_lists(),
+        full_lists,
+        "restart recovery must not issue a single full-list RPC"
+    );
+
+    // Steady state on the recovered server: nothing left to do.
+    let r = core.cycle(swap.as_ref() as &dyn ApiClient).unwrap();
+    assert_eq!((r.admitted, r.preempted), (0, 0));
+    assert_eq!(sched.run_cycle(), 0);
+
+    // Fresh-start fixed point: a brand-new controller stack over the
+    // recovered server must agree completely — no admissions, no
+    // preemptions, no binds, no writes.
+    let fresh_informers =
+        SharedInformerFactory::new(swap.clone() as Arc<dyn ApiClient>, Metrics::new());
+    let fresh_core = AdmissionCore::new(&fresh_informers, Metrics::new());
+    let fresh_sched = KubeScheduler::new(&fresh_informers, Metrics::new());
+    let version_before = second.current_version();
+    let r = fresh_core.cycle(swap.as_ref() as &dyn ApiClient).unwrap();
+    assert_eq!((r.admitted, r.preempted), (0, 0), "fresh start finds nothing to change");
+    assert_eq!(fresh_sched.run_cycle(), 0);
+    assert_eq!(
+        second.current_version(),
+        version_before,
+        "fresh start writes nothing: recovered state is already the fixed point"
+    );
+    let cq = ClusterQueueView::from_object(&second.get(KIND_CLUSTERQUEUE, "cq").unwrap())
+        .unwrap();
+    assert_eq!((cq.pending, cq.admitted), (0, 2), "counts reflect the converged set");
+    assert!(second.get(KIND_LOCALQUEUE, "team").is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A bookmark that predates the recovered WAL window must still reset:
+/// compaction moves the floor, and a reflector whose version fell below
+/// it takes the classic full-relist path (the delta contract degrades
+/// gracefully, never silently skips events).
+#[test]
+fn restart_past_compacted_window_falls_back_to_full_relist() {
+    let dir = wal_dir("compacted");
+    let first = ApiServer::with_backend(
+        Metrics::new(),
+        Box::new(WalBackend::open(&dir).unwrap().with_compact_threshold(8)),
+        4096,
+    )
+    .unwrap();
+    first
+        .create(PodView::build("p0", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+        .unwrap();
+    let old_bookmark = first.current_version();
+    // Enough churn to force at least one snapshot + log truncation.
+    for i in 0..32u64 {
+        first
+            .update_status(KIND_POD, "p0", |o| {
+                o.status.insert("n", i);
+            })
+            .unwrap();
+    }
+    drop(first);
+
+    let second = wal_server(&dir);
+    let l = second
+        .list_opts(KIND_POD, &ListOptions::all().delta_since(old_bookmark))
+        .unwrap();
+    assert!(!l.delta, "pre-compaction bookmark is out of the window: full list");
+    assert_eq!(l.items.len(), 1);
+    let (_, _, reset) = second.events_since(Some(KIND_POD), old_bookmark);
+    assert!(reset, "watch from the stale bookmark resets (410-Gone)");
+    let _ = std::fs::remove_dir_all(&dir);
+}

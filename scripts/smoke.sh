@@ -97,4 +97,73 @@ grep -q completed "$WORK/tj.out"
 kill "$UP_PID" 2>/dev/null || true
 wait "$UP_PID" 2>/dev/null || true
 UP_PID=""
+
+echo "== durable restart: same --wal-dir boots back to identical state =="
+# AGE is wall-clock and legitimately advances across the restart; every
+# other column (names, statuses, bindings, queue counts) must come back
+# byte-identical from the WAL.
+strip_age() { awk '{ $2 = "-"; print }'; }
+snapshot() {
+  {
+    "$HPCORC" kubectl get cq --socket "$1"
+    "$HPCORC" kubectl get tj --socket "$1" | strip_age
+    "$HPCORC" kubectl get nodes --socket "$1" | strip_age
+    "$HPCORC" kubectl get pods --socket "$1" | strip_age
+  } >"$2"
+}
+WAL="$WORK/wal"
+SOCK2="$WORK/redbox2.sock"
+"$HPCORC" up --socket "$SOCK2" --run-for 120 --wal-dir "$WAL" >"$WORK/up-wal1.log" 2>&1 &
+UP_PID=$!
+for _ in $(seq 1 100); do
+  [ -S "$SOCK2" ] && break
+  sleep 0.1
+done
+if ! [ -S "$SOCK2" ]; then
+  echo "smoke: WAL testbed socket never appeared" >&2
+  cat "$WORK/up-wal1.log" >&2
+  exit 1
+fi
+"$HPCORC" kubectl apply -f "$WORK/cq.yaml" --socket "$SOCK2"
+"$HPCORC" kubectl apply -f "$WORK/tj.yaml" --socket "$SOCK2"
+for _ in $(seq 1 150); do
+  "$HPCORC" kubectl get tj --socket "$SOCK2" >"$WORK/tj2.out"
+  grep -Eq 'completed|failed' "$WORK/tj2.out" && break
+  sleep 0.2
+done
+grep -q completed "$WORK/tj2.out"
+snapshot "$SOCK2" "$WORK/golden.txt"
+grep -q smoke-cow "$WORK/golden.txt"
+grep -q smoke-cq "$WORK/golden.txt"
+kill "$UP_PID" 2>/dev/null || true
+wait "$UP_PID" 2>/dev/null || true
+
+# Reboot on the same WAL dir: no re-applies — everything must recover.
+SOCK3="$WORK/redbox3.sock"
+"$HPCORC" up --socket "$SOCK3" --run-for 120 --wal-dir "$WAL" >"$WORK/up-wal2.log" 2>&1 &
+UP_PID=$!
+for _ in $(seq 1 100); do
+  [ -S "$SOCK3" ] && break
+  sleep 0.1
+done
+if ! [ -S "$SOCK3" ]; then
+  echo "smoke: recovered testbed socket never appeared" >&2
+  cat "$WORK/up-wal2.log" >&2
+  exit 1
+fi
+for i in $(seq 1 20); do
+  snapshot "$SOCK3" "$WORK/recovered.txt"
+  if diff -u "$WORK/golden.txt" "$WORK/recovered.txt"; then
+    break
+  fi
+  if [ "$i" = 20 ]; then
+    echo "smoke: recovered state diverges from golden transcript" >&2
+    exit 1
+  fi
+  sleep 0.5
+done
+
+kill "$UP_PID" 2>/dev/null || true
+wait "$UP_PID" 2>/dev/null || true
+UP_PID=""
 echo "smoke OK"
