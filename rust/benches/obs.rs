@@ -1,0 +1,88 @@
+//! Observability-layer overhead (PR 7): what tracing and metric
+//! exposition cost the hot paths.
+//!
+//! - `obs/span_record`: open+close one span (the per-operation cost every
+//!   instrumented call site pays while tracing is on).
+//! - `obs/span_disabled`: the same call with tracing off — one atomic
+//!   load; this is the price the whole fleet pays when nobody is looking.
+//! - `obs/nested_span_x8`: an 8-deep child chain (a worst-case causal
+//!   tree step, e.g. CLI → redbox → apiserver → store).
+//! - `obs/prom_render_10k`: render a 10k-metric registry to Prometheus
+//!   text (one full scrape).
+//! - `obs/json_snapshot_10k`: same registry as the structured snapshot.
+//!
+//! Prints `{"bench":...}` JSON rows for the CI perf trajectory.
+
+use hpcorc::bench::{header, Bench};
+use hpcorc::cluster::Metrics;
+use hpcorc::obs;
+
+fn main() {
+    println!("== observability overhead (PR 7) ==");
+    println!("{}", header());
+    let mut rows = Vec::new();
+
+    // Per-span record cost, tracing on.
+    obs::set_enabled(true);
+    obs::clear();
+    rows.push(Bench::new("obs/span_record").warmup(1000).iters(20_000).run(|| {
+        let _g = obs::span("bench", "op");
+    }));
+
+    // Disabled path: the guard must be near-free.
+    obs::set_enabled(false);
+    rows.push(Bench::new("obs/span_disabled").warmup(1000).iters(20_000).run(|| {
+        let _g = obs::span("bench", "op");
+    }));
+    obs::set_enabled(true);
+
+    // Nested chain: stack push/pop + parent linkage, 8 levels.
+    rows.push(Bench::new("obs/nested_span_x8").warmup(100).iters(5_000).run(|| {
+        let _a = obs::span("bench", "l0");
+        let _b = obs::span("bench", "l1");
+        let _c = obs::span("bench", "l2");
+        let _d = obs::span("bench", "l3");
+        let _e = obs::span("bench", "l4");
+        let _f = obs::span("bench", "l5");
+        let _g = obs::span("bench", "l6");
+        let _h = obs::span("bench", "l7");
+    }));
+
+    // A populated registry: 10k metrics split across the three families,
+    // histograms fed enough samples to spread over buckets.
+    let m = Metrics::new();
+    for i in 0..6000u64 {
+        m.add(&format!("bench.counter.{i:04}"), i);
+    }
+    for i in 0..2000i64 {
+        m.set_gauge(&format!("bench.gauge.{i:04}"), i - 1000);
+    }
+    for i in 0..2000u64 {
+        let name = format!("bench.hist.{i:04}");
+        for s in [100, 5_000, 250_000, 10_000_000] {
+            m.observe(&name, s + i);
+        }
+    }
+    rows.push(Bench::new("obs/prom_render_10k").warmup(2).iters(20).run(|| {
+        std::hint::black_box(obs::render_prom(&m));
+    }));
+    rows.push(Bench::new("obs/json_snapshot_10k").warmup(2).iters(20).run(|| {
+        std::hint::black_box(obs::render_json(&m));
+    }));
+
+    println!();
+    for s in &rows {
+        println!("{}", s.json());
+    }
+
+    // Guardrail, not a flaky assert: the disabled path must be far
+    // cheaper than recording. A regression here means someone put work
+    // in front of the enabled() check.
+    let record = rows[0].mean_ns;
+    let disabled = rows[1].mean_ns;
+    if disabled * 10.0 > record + 1.0 {
+        eprintln!(
+            "warning: disabled span path ({disabled:.0}ns) is not ~free vs record ({record:.0}ns)"
+        );
+    }
+}

@@ -63,6 +63,16 @@ Workload tooling:
             a static partition against an elastic one on a diurnal trace
   sing list                      list built-in container images
   version [--components]         versions (Table I inventory)
+
+Observability (against a running testbed, PR 7):
+  metrics --socket PATH [--prom|--json]
+            scrape the daemon's metric registry over the socket; --prom
+            prints Prometheus text exposition, --json the structured
+            snapshot, default a flat listing with histogram summaries
+  trace KIND/NAME --socket PATH [--json]
+            reconstruct the object's lifecycle timeline from its
+            originating trace (create -> admit -> schedule -> bind -> run);
+            --json dumps Chrome trace-event JSON (Perfetto-loadable)
 ";
 
 fn policy_by_name(name: &str) -> Result<Box<dyn SchedPolicy>> {
@@ -191,6 +201,10 @@ pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
             let file = args.req_flag("f")?;
             let text = std::fs::read_to_string(file)?;
             let api = remote(args)?;
+            // Root the trace on the user action: every object in this
+            // apply shares one trace_id, which the client stamps onto the
+            // RPCs and the server bakes into the objects' annotations.
+            let _span = crate::obs::span("cli", "kubectl apply");
             for obj in crate::kube::yaml::parse_manifest(&text)? {
                 let created = api.apply(obj)?;
                 println!("{}/{} created", created.kind.to_lowercase(), created.meta.name);
@@ -456,10 +470,142 @@ fn gen_trace(kind: &str, args: &Args) -> Result<Trace> {
     })
 }
 
+/// `hpcorc metrics --socket PATH [--prom|--json]`: scrape a running
+/// daemon's registry over the red-box socket (the `obs.Metrics` service).
+pub fn cmd_metrics(args: &mut Args) -> Result<()> {
+    let sock = args.req_flag("socket")?;
+    let client = RedboxClient::connect(sock)?;
+    if args.bool("prom") {
+        let out = client.call("obs.Metrics/Prom", Value::Null)?;
+        print!("{}", out.opt_str("text").unwrap_or(""));
+        return Ok(());
+    }
+    let snap = client.call("obs.Metrics/Snapshot", Value::Null)?;
+    if args.bool("json") {
+        println!("{}", crate::encoding::json::to_string_pretty(&snap));
+        return Ok(());
+    }
+    // Default: flat `name = value` listing (counters and gauges), then
+    // histogram summaries.
+    for section in ["counters", "gauges"] {
+        if let Some(Value::Map(entries)) = snap.get(section) {
+            for (k, v) in entries {
+                println!("{k} = {}", crate::encoding::json::to_string(v));
+            }
+        }
+    }
+    if let Some(Value::Map(hists)) = snap.get("hists") {
+        for (k, h) in hists {
+            println!(
+                "{k}: count={} mean={:.0} p50={} p95={} p99={} max={}",
+                h.opt_int("count").unwrap_or(0),
+                h.get("mean").and_then(Value::as_f64).unwrap_or(0.0),
+                h.opt_int("p50").unwrap_or(0),
+                h.opt_int("p95").unwrap_or(0),
+                h.opt_int("p99").unwrap_or(0),
+                h.opt_int("max").unwrap_or(0),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `hpcorc trace KIND/NAME --socket PATH`: reconstruct an object's
+/// lifecycle timeline from its originating trace (the `hpcorc.io/trace`
+/// annotation) and the daemon's span ring (`obs.Spans/ByTrace`).
+fn cmd_trace_timeline(args: &Args, kind_name: &str) -> Result<()> {
+    let (alias, name) = kind_name
+        .split_once('/')
+        .ok_or_else(|| Error::config("expected KIND/NAME"))?;
+    let kind = resolve_kind(alias);
+    let api = remote(args)?;
+    let obj = api.get(&kind, name)?;
+    let Some(wire) = obj.meta.annotation(crate::obs::TRACE_ANNOTATION) else {
+        return Err(Error::config(format!(
+            "{kind}/{name} carries no `{}` annotation (created before tracing, or tracing disabled)",
+            crate::obs::TRACE_ANNOTATION
+        )));
+    };
+    let ctx = crate::obs::TraceContext::parse_wire(wire)
+        .ok_or_else(|| Error::parse(format!("malformed trace annotation `{wire}`")))?;
+    let sock = args.req_flag("socket")?;
+    let client = RedboxClient::connect(sock)?;
+    let out = client.call(
+        "obs.Spans/ByTrace",
+        Value::map().with("trace", format!("{:016x}", ctx.trace_id)),
+    )?;
+    let events = out.get("events").and_then(Value::as_seq).map(<[Value]>::to_vec).unwrap_or_default();
+    if args.bool("json") {
+        // Raw Chrome trace-event JSON — load it straight into Perfetto.
+        println!("{}", crate::encoding::json::to_string_pretty(&Value::Seq(events)));
+        return Ok(());
+    }
+    if events.is_empty() {
+        println!(
+            "trace {:016x}: no spans retained (the ring holds the last {} spans)",
+            ctx.trace_id,
+            crate::obs::trace::RING_CAPACITY
+        );
+        return Ok(());
+    }
+    // Rebuild the causal tree: ts-sorted rows, indented by parent depth.
+    let field = |e: &Value, k: &str| -> u64 {
+        e.get("args")
+            .and_then(|a| a.opt_str(k).map(String::from))
+            .and_then(|s| u64::from_str_radix(&s, 16).ok())
+            .unwrap_or(0)
+    };
+    let mut rows: Vec<(u64, u64, u64, String, String, i64)> = events
+        .iter()
+        .map(|e| {
+            (
+                field(e, "span_id"),
+                field(e, "parent"),
+                e.opt_int("ts").unwrap_or(0) as u64,
+                e.opt_str("cat").unwrap_or("?").to_string(),
+                e.opt_str("name").unwrap_or("?").to_string(),
+                e.opt_int("dur").unwrap_or(0),
+            )
+        })
+        .collect();
+    rows.sort_by_key(|r| (r.2, r.0));
+    let ids: std::collections::BTreeMap<u64, u64> =
+        rows.iter().map(|r| (r.0, r.1)).collect();
+    let depth = |mut span: u64| -> usize {
+        let mut d = 0;
+        // Parent chain walk; the ring may have evicted ancestors, so a
+        // missing parent just terminates the walk.
+        while let Some(&p) = ids.get(&span) {
+            if p == 0 || !ids.contains_key(&p) || d > 32 {
+                break;
+            }
+            d += 1;
+            span = p;
+        }
+        d
+    };
+    let t0 = rows.iter().map(|r| r.2).min().unwrap_or(0);
+    println!("trace {:016x} — {kind}/{name} ({} spans)", ctx.trace_id, rows.len());
+    for (span_id, _, ts, cat, sname, dur) in &rows {
+        println!(
+            "{:>10.3}ms {}{} [{cat}] {sname} ({dur}us)",
+            (*ts - t0) as f64 / 1000.0,
+            "  ".repeat(depth(*span_id)),
+            if depth(*span_id) == 0 { "•" } else { "└" },
+        );
+    }
+    Ok(())
+}
+
 pub fn cmd_trace(args: &mut Args) -> Result<()> {
-    let sub = args.req_positional(1, "trace subcommand")?;
+    let sub = args.req_positional(1, "trace subcommand")?.to_string();
+    // `trace Pod/my-pod --socket S` reads a lifecycle timeline off a
+    // running daemon; `trace gen` synthesizes workload traces.
+    if sub.contains('/') {
+        return cmd_trace_timeline(args, &sub);
+    }
     if sub != "gen" {
-        return Err(Error::config("only `trace gen` is supported"));
+        return Err(Error::config("expected `trace gen` or `trace KIND/NAME --socket PATH`"));
     }
     let trace = gen_trace(&args.flag_or("kind", "poisson"), args)?;
     let text = trace.to_json();

@@ -31,6 +31,7 @@ pub fn main(argv: Vec<String>) -> i32 {
         "qstat" => commands::cmd_qstat(&mut args),
         "qdel" => commands::cmd_qdel(&mut args),
         "trace" => commands::cmd_trace(&mut args),
+        "metrics" => commands::cmd_metrics(&mut args),
         "sim" => commands::cmd_sim(&mut args),
         "sing" => commands::cmd_sing(&mut args),
         "version" => commands::cmd_version(&mut args),

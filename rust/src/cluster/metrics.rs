@@ -84,6 +84,40 @@ impl Metrics {
         out
     }
 
+    /// Typed counter snapshot, sorted by name.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Typed gauge snapshot, sorted by name.
+    pub fn gauges_snapshot(&self) -> Vec<(String, i64)> {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Histogram snapshot (cloned), sorted by name — what the Prometheus
+    /// renderer in `obs::prom` walks for cumulative buckets.
+    pub fn hists_snapshot(&self) -> Vec<(String, Hist)> {
+        self.inner
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), h.lock().unwrap().clone()))
+            .collect()
+    }
+
     /// Read a counter value (0 if absent) — test/bench helper.
     pub fn counter_value(&self, name: &str) -> u64 {
         self.inner

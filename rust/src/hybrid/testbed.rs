@@ -315,6 +315,9 @@ impl Testbed {
         // race window for the scheduler.
         api.register_mutating_hook(crate::kueue::admission_mutating_hook());
         redbox.register("kube.Api", api.rpc_service());
+        // Telemetry plane (PR 7): metrics snapshots + span export over the
+        // same socket (`obs.Metrics` / `obs.Spans`).
+        crate::obs::register(&redbox, metrics.clone());
         // Every in-process component talks through the transport-agnostic
         // client handle — the same trait the remote CLI uses — and reads
         // through the shared informer caches (PR 4): one watch stream per

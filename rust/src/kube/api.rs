@@ -52,6 +52,20 @@ impl ObjectMeta {
         }
         self.labels.push((key.to_string(), val.to_string()));
     }
+
+    pub fn annotation(&self, key: &str) -> Option<&str> {
+        self.annotations.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn set_annotation(&mut self, key: &str, val: &str) {
+        for (k, v) in self.annotations.iter_mut() {
+            if k == key {
+                *v = val.to_string();
+                return;
+            }
+        }
+        self.annotations.push((key.to_string(), val.to_string()));
+    }
 }
 
 /// A dynamic API object.

@@ -106,7 +106,9 @@ pub struct ApiServer {
 
 impl ApiServer {
     pub fn new(metrics: Metrics) -> ApiServer {
-        ApiServer { store: Store::new(), metrics, hooks: Arc::new(Mutex::new(Vec::new())) }
+        let mut store = Store::new();
+        store.set_metrics(metrics.clone());
+        ApiServer { store, metrics, hooks: Arc::new(Mutex::new(Vec::new())) }
     }
 
     /// An API server whose store retains `cap` watch events (see
@@ -114,11 +116,9 @@ impl ApiServer {
     /// expected between watcher polls, or reflectors are forced into
     /// spurious 410-Gone relists.
     pub fn with_history_cap(metrics: Metrics, cap: usize) -> ApiServer {
-        ApiServer {
-            store: Store::with_history_cap(cap),
-            metrics,
-            hooks: Arc::new(Mutex::new(Vec::new())),
-        }
+        let mut store = Store::with_history_cap(cap);
+        store.set_metrics(metrics.clone());
+        ApiServer { store, metrics, hooks: Arc::new(Mutex::new(Vec::new())) }
     }
 
     /// An API server over a durability backend (PR 6): every commit is
@@ -133,11 +133,9 @@ impl ApiServer {
         backend: Box<dyn super::persist::StoreBackend>,
         cap: usize,
     ) -> Result<ApiServer> {
-        Ok(ApiServer {
-            store: Store::with_backend(backend, cap)?,
-            metrics,
-            hooks: Arc::new(Mutex::new(Vec::new())),
-        })
+        let mut store = Store::with_backend(backend, cap)?;
+        store.set_metrics(metrics.clone());
+        Ok(ApiServer { store, metrics, hooks: Arc::new(Mutex::new(Vec::new())) })
     }
 
     /// Register a mutating-admission hook (applied in registration order
@@ -167,9 +165,32 @@ impl ApiServer {
         self.store.now_s()
     }
 
+    /// Stamp the active trace context and the server wall clock onto an
+    /// object entering through the create path (PR 7). The annotations
+    /// ride inside the object through store → WAL → watch → informer, so
+    /// admission/scheduler/operator spans can rejoin the originating
+    /// trace, and the scheduler can observe the create→bound SLO without
+    /// sharing a monotonic clock with the creator.
+    fn stamp_observability(&self, obj: &mut KubeObject) {
+        if obj.meta.annotation(crate::obs::TRACE_ANNOTATION).is_none() {
+            if let Some(ctx) = crate::obs::current() {
+                obj.meta.set_annotation(crate::obs::TRACE_ANNOTATION, &ctx.to_wire());
+            }
+        }
+        if obj.meta.annotation(crate::obs::CREATED_WALL_ANNOTATION).is_none() {
+            let wall_ns = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap_or_default()
+                .as_nanos() as u64;
+            obj.meta.set_annotation(crate::obs::CREATED_WALL_ANNOTATION, &wall_ns.to_string());
+        }
+    }
+
     pub fn create(&self, mut obj: KubeObject) -> Result<KubeObject> {
         self.metrics.inc("kube.api.create");
+        let _span = crate::obs::span("apiserver", &format!("create {}/{}", obj.kind, obj.meta.name));
         self.admit_mutate(&mut obj);
+        self.stamp_observability(&mut obj);
         self.store.create(obj)
     }
 
@@ -181,6 +202,7 @@ impl ApiServer {
     /// Full update (spec + status) with optimistic concurrency.
     pub fn update(&self, obj: KubeObject) -> Result<KubeObject> {
         self.metrics.inc("kube.api.update");
+        let _span = crate::obs::span("apiserver", &format!("update {}/{}", obj.kind, obj.meta.name));
         self.store.update(obj)
     }
 
@@ -196,6 +218,7 @@ impl ApiServer {
         metric: &'static str,
         mutate: impl Fn(&mut KubeObject),
     ) -> Result<KubeObject> {
+        let _span = crate::obs::span("apiserver", &format!("{metric} {kind}/{name}"));
         for _ in 0..MAX_CONFLICT_RETRIES {
             let mut obj = self.store.get(kind, name)?;
             mutate(&mut obj);
@@ -236,6 +259,7 @@ impl ApiServer {
     /// recursing forever.
     pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
         self.metrics.inc("kube.api.delete");
+        let _span = crate::obs::span("apiserver", &format!("delete {kind}/{name}"));
         // The root must exist before the cascade walks anything: deleting a
         // nonexistent name must be a NotFound no-op, not a purge of objects
         // that happen to name it as owner.
@@ -401,16 +425,29 @@ impl ApiServer {
     /// The create arm runs the mutating-admission hooks — an applied
     /// manifest is as much an object birth as a direct create.
     pub fn apply(&self, mut obj: KubeObject) -> Result<KubeObject> {
+        let _span = crate::obs::span("apiserver", &format!("apply {}/{}", obj.kind, obj.meta.name));
         match self.store.get(&obj.kind, &obj.meta.name) {
             Ok(existing) => {
                 let mut merged = existing.clone();
                 merged.spec = obj.spec;
                 merged.meta.labels = obj.meta.labels;
                 merged.meta.annotations = obj.meta.annotations;
+                // An applied manifest replaces annotations wholesale;
+                // carry the observability stamps forward so a re-apply
+                // does not orphan the object from its originating trace.
+                for key in [crate::obs::TRACE_ANNOTATION, crate::obs::CREATED_WALL_ANNOTATION] {
+                    if merged.meta.annotation(key).is_none() {
+                        if let Some(v) = existing.meta.annotation(key) {
+                            let v = v.to_string();
+                            merged.meta.set_annotation(key, &v);
+                        }
+                    }
+                }
                 self.store.update(merged)
             }
             Err(e) if e.is_not_found() => {
                 self.admit_mutate(&mut obj);
+                self.stamp_observability(&mut obj);
                 self.store.create(obj)
             }
             Err(e) => Err(e),

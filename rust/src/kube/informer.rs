@@ -53,7 +53,7 @@ use crate::util::Result;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Page size for the seeding list (bounds per-RPC payloads; the seed of a
 /// 100k-object kind is 200 bounded pages, not one giant response).
@@ -384,7 +384,24 @@ impl Reflector {
             match next {
                 Ok(ev) => {
                     self.metrics.inc("kube.informer.events");
+                    // Rejoin the originating write's trace (the object's
+                    // `hpcorc.io/trace` annotation rode through store →
+                    // WAL → watch), so cache apply + fan-out shows up in
+                    // the same causal tree as the create that caused it.
+                    let parent = ev
+                        .object()
+                        .meta
+                        .annotation(crate::obs::TRACE_ANNOTATION)
+                        .and_then(crate::obs::TraceContext::parse_wire);
+                    let _span = crate::obs::span_with_parent(
+                        "informer",
+                        &format!("deliver {}", self.kind),
+                        parent,
+                    );
+                    let t0 = Instant::now();
                     apply_event(&mut st, ev);
+                    self.metrics
+                        .observe("kube.informer.deliver_ns", t0.elapsed().as_nanos() as u64);
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {

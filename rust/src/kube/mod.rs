@@ -132,6 +132,41 @@
 //! Scale: `benches/store_scale.rs` + the `#[ignore]`d `tests/scale.rs`
 //! stand up 100k objects and track create/list/watch-fanout p99 plus the
 //! pod-churn-vs-node-read isolation ratio in the CI perf trajectory.
+//!
+//! # Observability layer (PR 7)
+//!
+//! Everything in this module is causally traceable end to end — see
+//! [`crate::obs`] for the span recorder, the metric-name catalog, and
+//! the remote `obs.Metrics`/`obs.Spans` services. The how-to for
+//! instrumenting a new control loop:
+//!
+//! 1. **Join the object's trace, don't start your own.** A write path
+//!    stamps its active span onto created objects as the
+//!    `hpcorc.io/trace` annotation ([`crate::obs::TRACE_ANNOTATION`],
+//!    done centrally by [`ApiServer::create`]/`apply`). A control loop
+//!    reacting to that object later opens its span with
+//!    [`crate::obs::span_with_parent`], passing
+//!    `obj.meta.annotation(TRACE_ANNOTATION)` parsed through
+//!    [`crate::obs::TraceContext::parse_wire`] — the scheduler's bind,
+//!    kueue's admit, and the operator's WLM submit are the reference
+//!    call sites. Writes made while the span guard is alive propagate
+//!    the context automatically (the red-box client stamps `current()`
+//!    onto every outgoing request; the in-process [`ApiServer`] reads
+//!    the same thread-local).
+//! 2. **Name latency histograms `<component>.<what>_ns`** and observe
+//!    them with `metrics.observe(...)` — they render as Prometheus
+//!    histograms (cumulative `_bucket`/`_sum`/`_count`) on the
+//!    `obs.Metrics/Prom` scrape and as p50/p95/p99 summaries in the
+//!    JSON snapshot. The store commit path (`kube.store.commit_ns`,
+//!    `wal_append_ns`, `fanout_ns`), informer delivery
+//!    (`kube.informer.deliver_ns`), and the end-to-end
+//!    `slo.pod_create_to_bound_ns` SLO are the shipped examples.
+//! 3. **Inspect from outside**: `hpcorc metrics --socket S [--prom|--json]`
+//!    scrapes a live daemon; `hpcorc trace KIND/NAME --socket S`
+//!    reconstructs an object's lifecycle timeline (`--json` dumps
+//!    Chrome trace events for Perfetto). `tests/obs_e2e.rs` is the
+//!    acceptance: one pod's create→admit→schedule→bind is one connected
+//!    trace, and the SLO histogram is remotely scrapeable.
 
 pub mod api;
 pub mod apiserver;

@@ -87,6 +87,13 @@ impl KubeScheduler {
         let mut used: Vec<(String, Resources)> =
             nodes.iter().map(|n| (n.name.clone(), Resources::ZERO)).collect();
         let mut pending: Vec<PodView> = Vec::new();
+        // Observability sidecar per pending pod: originating trace context
+        // and creation wall clock, read off the annotations in the same
+        // pass (PodView itself stays annotation-free).
+        let mut origins: std::collections::BTreeMap<
+            String,
+            (Option<crate::obs::TraceContext>, Option<u64>),
+        > = std::collections::BTreeMap::new();
         let mut gated = 0u64;
         self.pods.read(|objs| {
             for obj in objs.values() {
@@ -107,6 +114,17 @@ impl KubeScheduler {
                             gated += 1;
                             continue;
                         }
+                        origins.insert(
+                            view.name.clone(),
+                            (
+                                obj.meta
+                                    .annotation(crate::obs::TRACE_ANNOTATION)
+                                    .and_then(crate::obs::TraceContext::parse_wire),
+                                obj.meta
+                                    .annotation(crate::obs::CREATED_WALL_ANNOTATION)
+                                    .and_then(|s| s.parse::<u64>().ok()),
+                            ),
+                        );
                         pending.push(view);
                     }
                     _ => {}
@@ -154,8 +172,16 @@ impl KubeScheduler {
                 fa.partial_cmp(&fb).unwrap().then(na.name.cmp(&nb.name))
             });
             let chosen = candidates[0].0.name.clone();
+            let (origin_trace, created_ns) =
+                origins.get(&pod.name).cloned().unwrap_or((None, None));
             // Bind (writes go through the API; the cache sees the event
-            // on the next sync).
+            // on the next sync). The span parents on the pod's
+            // originating trace, so the bind joins the create's tree.
+            let _span = crate::obs::span_with_parent(
+                "kube-sched",
+                &format!("bind {}", pod.name),
+                origin_trace,
+            );
             let ok = self
                 .client
                 .update_status(super::api::KIND_POD, &pod.name, &|o| {
@@ -168,6 +194,16 @@ impl KubeScheduler {
                 }
                 bound += 1;
                 self.metrics.inc("kube.sched.bound");
+                if let Some(t_create) = created_ns {
+                    let now_ns = std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_nanos() as u64)
+                        .unwrap_or(0);
+                    self.metrics.observe(
+                        "slo.pod_create_to_bound_ns",
+                        now_ns.saturating_sub(t_create),
+                    );
+                }
             }
         }
         self.metrics.observe("kube.sched.cycle_ns", t0.elapsed().as_nanos() as u64);

@@ -40,6 +40,7 @@
 
 use super::api::KubeObject;
 use super::persist::{MemoryBackend, RecoveredState, Snapshot, StoreBackend, WalRecord};
+use crate::cluster::Metrics;
 use crate::encoding::Value;
 use crate::util::{Error, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -158,6 +159,10 @@ pub struct Store {
     /// Store clock offset recovered from the backend (restart continuity
     /// for creation timestamps).
     base_s: f64,
+    /// Commit-path latency sink (`kube.store.*` histograms). Defaults to
+    /// a private registry; the ApiServer swaps in its own via
+    /// [`Store::set_metrics`].
+    metrics: Metrics,
 }
 
 impl Default for Store {
@@ -236,7 +241,15 @@ impl Store {
             recovered_floor: floor,
             epoch: Instant::now(),
             base_s,
+            metrics: Metrics::new(),
         })
+    }
+
+    /// Route commit-path histograms (`kube.store.commit_ns`,
+    /// `kube.store.wal_append_ns`, `kube.store.fanout_ns`) into `m`
+    /// instead of the store's private registry. Call before serving.
+    pub fn set_metrics(&mut self, m: Metrics) {
+        self.metrics = m;
     }
 
     /// The configured watch-history window (per shard).
@@ -280,9 +293,12 @@ impl Store {
         bump_uid: bool,
         now: f64,
     ) -> Result<u64> {
+        let t_commit = Instant::now();
         let v = g.version + 1;
         let uid = if bump_uid { g.uid + 1 } else { g.uid };
+        let t_wal = Instant::now();
         g.backend.append(&WalRecord { version: v, uid, seconds: now, event: event.clone() })?;
+        self.metrics.observe("kube.store.wal_append_ns", t_wal.elapsed().as_nanos() as u64);
         g.version = v;
         g.uid = uid;
         sh.history.push_back((v, event.clone()));
@@ -292,9 +308,12 @@ impl Store {
             }
         }
         sh.last_version = v;
+        let t_fanout = Instant::now();
         sh.watchers.retain(|tx| tx.send(event.clone()).is_ok());
         g.watchers.retain(|tx| tx.send(event.clone()).is_ok());
+        self.metrics.observe("kube.store.fanout_ns", t_fanout.elapsed().as_nanos() as u64);
         self.version.store(v, Ordering::Release);
+        self.metrics.observe("kube.store.commit_ns", t_commit.elapsed().as_nanos() as u64);
         Ok(v)
     }
 

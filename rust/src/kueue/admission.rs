@@ -67,6 +67,9 @@ struct PendingGang {
     uid: u64,
     /// Pod groups: all declared members present?
     complete: bool,
+    /// Originating trace of the first member that carries one
+    /// (`hpcorc.io/trace`): the admission write joins the create's tree.
+    trace: Option<crate::obs::TraceContext>,
 }
 
 /// The incremental quota state carried between cycles: the live ledger
@@ -410,7 +413,14 @@ impl AdmissionCore {
                         priority,
                         uid: obj.meta.uid,
                         complete: true,
+                        trace: None,
                     });
+                if g.trace.is_none() {
+                    g.trace = obj
+                        .meta
+                        .annotation(crate::obs::TRACE_ANNOTATION)
+                        .and_then(crate::obs::TraceContext::parse_wire);
+                }
                 g.members.push((obj.kind.clone(), obj.meta.name.clone()));
                 g.member_demands.push(demand);
                 g.demand = g.demand.saturating_add(&demand);
@@ -523,6 +533,13 @@ impl AdmissionCore {
                 }
             }
             for (i, gang) in decisions.iter().enumerate() {
+                // Parent the admission write on the workload's originating
+                // trace, so create → admit reads as one causal chain.
+                let _span = crate::obs::span_with_parent(
+                    "kueue",
+                    &format!("admit {}", gang.label),
+                    gang.trace,
+                );
                 if let Err(e) = self.admit(api, &gang.members, &cq.name) {
                     // The selection walk already charged every decision;
                     // the failed gang and everything after it will not

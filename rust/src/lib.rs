@@ -20,6 +20,7 @@ pub mod encoding;
 pub mod hybrid;
 pub mod kube;
 pub mod kueue;
+pub mod obs;
 pub mod operator;
 pub mod pbs;
 pub mod redbox;

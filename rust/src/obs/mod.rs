@@ -1,0 +1,71 @@
+//! # Observability layer (PR 7): causal tracing + remote telemetry
+//!
+//! Everything the control plane emits about itself lives here: a span
+//! recorder with cross-process trace propagation ([`trace`]), Prometheus
+//! text / JSON rendering of the [`crate::cluster::Metrics`] registry
+//! ([`prom`]), and the red-box services that expose both remotely
+//! ([`service`]).
+//!
+//! ## How a trace flows
+//!
+//! 1. A root span opens wherever work originates — e.g. the CLI's
+//!    `kubectl apply`, or a test calling [`span`].
+//! 2. The red-box client stamps [`current`] onto every outgoing
+//!    [`crate::redbox::proto::Request`] as a `trace` field
+//!    (`<trace_id>-<span_id>` hex). Old peers that don't know the field
+//!    ignore it; requests without it simply start fresh server-side.
+//! 3. The red-box server adopts the wire context around dispatch, so
+//!    ApiServer handler spans parent on the remote caller.
+//! 4. `ApiServer::create`/`apply` stamp the active context onto the
+//!    object as the `hpcorc.io/trace` annotation (plus
+//!    `hpcorc.io/created-wall-ns`, the server wall clock). Annotations
+//!    ride inside the object through store → WAL → watch → informer, so
+//!    every later consumer can rejoin the originating trace.
+//! 5. Kueue admission, the scheduler's bind, and the operator's WLM
+//!    submission each open spans parented on that annotation — one
+//!    connected causal tree from `create` to `run`, reconstructable with
+//!    `hpcorc trace <kind>/<name>` or exported via
+//!    [`export_chrome_json`] straight into Perfetto.
+//!
+//! ## Metric-name catalog
+//!
+//! | Metric | Type | Meaning |
+//! |---|---|---|
+//! | `redbox.requests` | counter | request frames handled by the server |
+//! | `redbox.handle_ns` | histogram | server-side dispatch latency (all methods) |
+//! | `redbox.rpc.<Service.Method>_ns` | histogram | per-RPC-method dispatch latency |
+//! | `redbox.streams` / `redbox.stream_items` | counter | server streams opened / items pushed |
+//! | `kube.api.<verb>` | counter | ApiServer verb calls (create/get/update/...) |
+//! | `kube.store.commit_ns` | histogram | whole store commit (WAL + fan-out + publish) |
+//! | `kube.store.wal_append_ns` | histogram | WAL append inside the commit |
+//! | `kube.store.fanout_ns` | histogram | watcher fan-out inside the commit |
+//! | `kube.informer.deliver_ns` | histogram | informer event apply+forward latency |
+//! | `kube.informer.{lists,resyncs,delta_relists,events}` | counter | reflector activity |
+//! | `kueue.cycles` | counter | admission cycles run |
+//! | `kueue.cycle_ns` | histogram | admission cycle duration |
+//! | `kube.sched.cycle_ns` | histogram | scheduler cycle duration |
+//! | `kube.sched.bound` | counter | pods bound |
+//! | `slo.pod_create_to_bound_ns` | histogram | end-to-end pod create→bound latency |
+//! | `operator.submit_ns` | histogram | operator → WLM submission latency |
+//!
+//! Scrape any of these remotely: `hpcorc metrics --socket <sock> --prom`
+//! (Prometheus text) or `--json` (structured snapshot); span trees via
+//! `hpcorc trace <kind>/<name> --socket <sock>`.
+//!
+//! ## Overhead
+//!
+//! `benches/obs.rs` measures span record cost (one mutex push), the
+//! disabled path (one atomic load — effectively free), and snapshot
+//! rendering at 10k metrics. Disable process-wide with [`set_enabled`].
+
+pub mod prom;
+pub mod service;
+pub mod trace;
+
+pub use prom::{render_json, render_prom, sanitize};
+pub use service::{metrics_service, register, spans_service};
+pub use trace::{
+    by_trace, chrome_events, chrome_json, clear, current, enabled, export_chrome_json,
+    set_enabled, span, span_with_parent, spans_snapshot, Span, SpanGuard, TraceContext,
+    CREATED_WALL_ANNOTATION, TRACE_ANNOTATION,
+};

@@ -1,0 +1,102 @@
+//! Remote telemetry services: `obs.Metrics` and `obs.Spans` over the
+//! red-box socket.
+//!
+//! Registered next to `kube.Api` by the testbed (and anything else that
+//! runs a [`RedboxServer`]), these are what `hpcorc metrics --socket`
+//! and `hpcorc trace <kind>/<name>` scrape — the daemon's registry and
+//! span ring become remotely visible without a second transport.
+//!
+//! Methods:
+//! - `obs.Metrics/Snapshot` → structured JSON ([`super::prom::render_json`])
+//! - `obs.Metrics/Prom` → `{"text": <Prometheus exposition>}`
+//! - `obs.Spans/Export` → `{"events": [<Chrome trace events>]}` (whole ring)
+//! - `obs.Spans/ByTrace` `{trace: "<16-hex id>"}` → same shape, one trace
+
+use super::{prom, trace};
+use crate::cluster::Metrics;
+use crate::encoding::Value;
+use crate::redbox::server::{FnService, RedboxServer, Service};
+use crate::util::{Error, Result};
+use std::sync::Arc;
+
+/// The `obs.Metrics` service over a registry handle.
+pub fn metrics_service(metrics: Metrics) -> Arc<dyn Service> {
+    Arc::new(FnService(move |method: &str, _body: &Value| match method {
+        "Snapshot" => Ok(prom::render_json(&metrics)),
+        "Prom" => Ok(Value::map().with("text", prom::render_prom(&metrics))),
+        other => Err(Error::rpc(format!("obs.Metrics has no method `{other}`"))),
+    }))
+}
+
+/// The `obs.Spans` service over the process-global span ring.
+pub fn spans_service() -> Arc<dyn Service> {
+    Arc::new(FnService(move |method: &str, body: &Value| match method {
+        "Export" => Ok(Value::map().with("events", trace::chrome_events(&trace::spans_snapshot()))),
+        "ByTrace" => {
+            let id = body
+                .opt_str("trace")
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| Error::rpc("ByTrace needs `trace` (16-hex id)"))?;
+            Ok(Value::map().with("events", trace::chrome_events(&trace::by_trace(id))))
+        }
+        other => Err(Error::rpc(format!("obs.Spans has no method `{other}`"))),
+    }))
+}
+
+/// Register both telemetry services on a running server.
+pub fn register(server: &RedboxServer, metrics: Metrics) {
+    server.register("obs.Metrics", metrics_service(metrics));
+    server.register("obs.Spans", spans_service());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::redbox::client::RedboxClient;
+    use crate::rt::Shutdown;
+
+    #[test]
+    fn remote_scrape_roundtrip() {
+        let _serial = trace::test_serial();
+        trace::set_enabled(true);
+        let path = std::env::temp_dir()
+            .join(format!("hpcorc-obs-svc-{}.sock", std::process::id()));
+        let metrics = Metrics::new();
+        metrics.inc("obs.test.counter");
+        metrics.observe("obs.test.lat_ns", 1234);
+        let mut srv = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+        register(&srv, metrics);
+        {
+            let _g = trace::span("obs-test", "remote-scrape");
+        }
+        let client = RedboxClient::connect(&path).unwrap();
+
+        let snap = client.call("obs.Metrics/Snapshot", Value::Null).unwrap();
+        assert_eq!(snap.get("counters").unwrap().opt_int("obs.test.counter"), Some(1));
+
+        let text = client.call("obs.Metrics/Prom", Value::Null).unwrap();
+        let text = text.opt_str("text").unwrap();
+        assert!(text.contains("obs_test_counter 1"), "{text}");
+        assert!(text.contains("# TYPE obs_test_lat_ns histogram"), "{text}");
+
+        let export = client.call("obs.Spans/Export", Value::Null).unwrap();
+        let events = export.get("events").unwrap().as_seq().unwrap();
+        let ev = events
+            .iter()
+            .find(|e| e.opt_str("name") == Some("remote-scrape"))
+            .expect("recorded span is exported");
+        let trace_hex = ev.get("args").unwrap().opt_str("trace_id").unwrap().to_string();
+
+        let one = client
+            .call("obs.Spans/ByTrace", Value::map().with("trace", trace_hex))
+            .unwrap();
+        let events = one.get("events").unwrap().as_seq().unwrap();
+        assert!(events.iter().all(|e| {
+            e.opt_str("name").is_some() && e.get("args").is_some()
+        }));
+        assert!(events.iter().any(|e| e.opt_str("name") == Some("remote-scrape")));
+
+        assert!(client.call("obs.Metrics/Nope", Value::Null).is_err());
+        srv.stop();
+    }
+}

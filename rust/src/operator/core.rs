@@ -251,8 +251,20 @@ impl Controller for WlmJobOperator {
                 if !bound {
                     return Ok(Reconcile::RequeueAfter(self.config.poll));
                 }
-                // Dummy pod placed: transfer the job through red-box (qsub).
+                // Dummy pod placed: transfer the job through red-box
+                // (qsub). The span parents on the job object's originating
+                // trace — the WLM handoff is the tail of the create tree.
+                let _span = crate::obs::span_with_parent(
+                    "operator",
+                    &format!("wlm-submit {name}"),
+                    obj.meta
+                        .annotation(crate::obs::TRACE_ANNOTATION)
+                        .and_then(crate::obs::TraceContext::parse_wire),
+                );
+                let t_submit = std::time::Instant::now();
                 let job_id = self.bridge.submit(&view.batch, "kube-operator")?;
+                self.metrics
+                    .observe("operator.submit_ns", t_submit.elapsed().as_nanos() as u64);
                 self.tracked.lock().unwrap().insert(name.to_string(), job_id.clone());
                 api.update_status(self.config.kind, name, &|o| {
                     o.status.insert("phase", phase::QUEUED);

@@ -314,6 +314,7 @@ impl RedboxClient {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             method: method.to_string(),
             body,
+            trace: crate::obs::current().map(|c| c.to_wire()),
         };
         match self.round_trip(&req) {
             Ok(resp) => resp.into_result(),
@@ -344,6 +345,7 @@ impl RedboxClient {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             method: method.to_string(),
             body,
+            trace: crate::obs::current().map(|c| c.to_wire()),
         };
         let (conn, resp, stream) = match self.try_open(&req) {
             Ok(out) => out,

@@ -37,6 +37,10 @@ pub struct Request {
     /// `Service/Method`, e.g. `torque.Workload/SubmitJob`.
     pub method: String,
     pub body: Value,
+    /// Caller's trace context (`obs::TraceContext::to_wire`), absent when
+    /// no trace is active. Optional on the wire, so old peers that never
+    /// send (or don't understand) it interoperate unchanged.
+    pub trace: Option<String>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -53,10 +57,14 @@ pub struct Response {
 
 impl Request {
     pub fn encode(&self) -> Value {
-        Value::map()
+        let mut v = Value::map()
             .with("id", self.id)
             .with("method", self.method.clone())
-            .with("body", self.body.clone())
+            .with("body", self.body.clone());
+        if let Some(t) = &self.trace {
+            v.insert("trace", t.clone());
+        }
+        v
     }
 
     pub fn decode(v: &Value) -> Result<Request> {
@@ -64,6 +72,7 @@ impl Request {
             id: v.req_int("id")? as u64,
             method: v.req_str("method")?.to_string(),
             body: v.get("body").cloned().unwrap_or(Value::Null),
+            trace: v.opt_str("trace").map(String::from),
         })
     }
 
@@ -238,6 +247,7 @@ mod tests {
             id: 7,
             method: "torque.Workload/SubmitJob".into(),
             body: Value::map().with("script", "#PBS -l nodes=1"),
+            trace: Some("00000000000000ab-00000000000000cd".into()),
         };
         let back = Request::decode(&req.encode()).unwrap();
         assert_eq!(back, req);
@@ -274,6 +284,7 @@ mod tests {
                 id: 1,
                 method: "kube.Api/Watch".into(),
                 body: Value::map().with("stream", true),
+                trace: None,
             }),
             Frame::Response(Response::ok(1, Value::map().with("streaming", true))),
             Frame::StreamItem { id: 1, seq: 0, body: Value::str("ev") },
@@ -284,7 +295,7 @@ mod tests {
             assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
         }
         // Untagged maps keep decoding as the classic pair.
-        let req = Request { id: 2, method: "a.B/C".into(), body: Value::Null };
+        let req = Request { id: 2, method: "a.B/C".into(), body: Value::Null, trace: None };
         assert_eq!(Frame::decode(&req.encode()).unwrap(), Frame::Request(req));
         let resp = Response::err(3, "boom");
         assert_eq!(Frame::decode(&resp.encode()).unwrap(), Frame::Response(resp));
@@ -294,7 +305,7 @@ mod tests {
 
     #[test]
     fn malformed_method() {
-        let req = Request { id: 1, method: "nope".into(), body: Value::Null };
+        let req = Request { id: 1, method: "nope".into(), body: Value::Null, trace: None };
         assert!(req.split_method().is_err());
     }
 

@@ -272,8 +272,21 @@ fn handle_conn(stream: UnixStream, registry: Registry, shutdown: Shutdown, metri
             Ok(Frame::Request(req)) => {
                 metrics.inc("redbox.requests");
                 let t0 = std::time::Instant::now();
-                let reply = dispatch(&req, &registry);
-                metrics.observe("redbox.handle_ns", t0.elapsed().as_nanos() as u64);
+                // Adopt the caller's trace for the duration of dispatch
+                // (dispatch runs inline on this conn thread, so the
+                // thread-local context covers the whole handler). The
+                // server span parents on the client's wire span — the
+                // cross-process causal link.
+                let reply = {
+                    let parent =
+                        req.trace.as_deref().and_then(crate::obs::TraceContext::parse_wire);
+                    let _span =
+                        crate::obs::span_with_parent("redbox-server", &req.method, parent);
+                    dispatch(&req, &registry)
+                };
+                let elapsed = t0.elapsed().as_nanos() as u64;
+                metrics.observe("redbox.handle_ns", elapsed);
+                metrics.observe(&format!("redbox.rpc.{}_ns", req.method.replace('/', ".")), elapsed);
                 match reply {
                     Ok(Reply::Unary(body)) => {
                         if write_locked(&writer, &Response::ok(req.id, body).encode())

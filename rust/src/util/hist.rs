@@ -116,6 +116,34 @@ impl Hist {
         self.quantile(0.99)
     }
 
+    /// Exact sum of all recorded samples.
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Non-empty buckets as `(upper_bound, count)` in ascending bound
+    /// order — what the Prometheus exposition renders as cumulative
+    /// `le` buckets without walking 2048 empty slots. The bound is the
+    /// bucket's upper edge (the next bucket's lower edge), so every
+    /// sample in the bucket satisfies `v <= bound`.
+    pub fn buckets_nonzero(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for (o, sub) in self.buckets.iter().enumerate() {
+            for (s, c) in sub.iter().enumerate() {
+                if *c == 0 {
+                    continue;
+                }
+                let bound = match (s, o + 1 < self.buckets.len()) {
+                    (31, true) => Self::value(o + 1, 0),
+                    (31, false) => u64::MAX,
+                    _ => Self::value(o, s + 1),
+                };
+                out.push((bound, *c));
+            }
+        }
+        out
+    }
+
     /// Merge another histogram into this one (for per-thread aggregation).
     pub fn merge(&mut self, other: &Hist) {
         for (o, sub) in other.buckets.iter().enumerate() {
@@ -211,6 +239,20 @@ mod tests {
         h.record_n(500, 10);
         assert_eq!(h.count(), 10);
         assert_eq!(h.mean(), 500.0);
+    }
+
+    #[test]
+    fn nonzero_buckets_cover_all_samples() {
+        let mut h = Hist::new();
+        for v in [0u64, 5, 100, 3000, 1_000_000] {
+            h.record(v);
+        }
+        let buckets = h.buckets_nonzero();
+        assert_eq!(buckets.iter().map(|(_, c)| c).sum::<u64>(), h.count());
+        // Ascending bounds, and every sample fits under the last bound.
+        assert!(buckets.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(buckets.last().unwrap().0 >= 1_000_000);
+        assert_eq!(h.sum(), 1_003_105);
     }
 
     #[test]

@@ -1,11 +1,21 @@
 //! Tiny leveled logger (no `tracing`/`log` crates in the offline registry).
 //!
-//! Components log as `LEVEL ts component: message`. The level is set once at
-//! startup (`HPCORC_LOG=debug|info|warn|error`, default `warn` so tests and
-//! benches stay quiet). Logging goes to stderr; the CLI's user-facing output
-//! goes to stdout and never through here.
+//! Components log as `LEVEL ts component: message`. When a trace context
+//! is active on the logging thread (PR 7, [`crate::obs`]), the line gains
+//! a `[trace=<id>]` suffix — grep a trace ID across stderr and the span
+//! export and you see the same causal story twice.
+//!
+//! Filtering is per component since PR 7. `HPCORC_LOG` takes a
+//! comma-separated spec: a bare level is the default, and
+//! `component=level` pairs override it by **longest-prefix** match on the
+//! component name — so `HPCORC_LOG=info,kube.store=debug` turns the whole
+//! tree to info but the store (and anything under `kube.store.`) to
+//! debug. Default is `warn` so tests and benches stay quiet. Logging goes
+//! to stderr; the CLI's user-facing output goes to stdout and never
+//! through here.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 use std::time::{SystemTime, UNIX_EPOCH};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -17,35 +27,95 @@ pub enum Level {
     Error = 3,
 }
 
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Warn
 static INIT: std::sync::Once = std::sync::Once::new();
+/// `component-prefix → level` overrides, longest prefix wins. Empty for
+/// the common single-level spec, so the per-line cost stays one atomic
+/// load plus one (uncontended) lock only when overrides exist.
+static OVERRIDES: Mutex<Vec<(String, u8)>> = Mutex::new(Vec::new());
+static HAS_OVERRIDES: AtomicU8 = AtomicU8::new(0);
 
-/// Initialize level from the HPCORC_LOG env var (idempotent).
+/// Initialize from the HPCORC_LOG env var (idempotent). Accepts
+/// `level[,component=level]...` — e.g. `info,kube.store=debug,redbox=error`.
 pub fn init_from_env() {
     INIT.call_once(|| {
         if let Ok(v) = std::env::var("HPCORC_LOG") {
-            set_level(match v.to_ascii_lowercase().as_str() {
-                "debug" => Level::Debug,
-                "info" => Level::Info,
-                "warn" => Level::Warn,
-                "error" => Level::Error,
-                _ => Level::Warn,
-            });
+            set_spec(&v);
         }
     });
 }
 
+/// Apply a filter spec (`level[,component=level]...`). Unknown levels and
+/// malformed clauses are ignored rather than fatal — a typo in an env var
+/// must not take the daemon down.
+pub fn set_spec(spec: &str) {
+    let mut overrides: Vec<(String, u8)> = Vec::new();
+    for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+        match clause.split_once('=') {
+            None => {
+                if let Some(l) = Level::parse(clause) {
+                    LEVEL.store(l as u8, Ordering::Relaxed);
+                }
+            }
+            Some((comp, lvl)) => {
+                if let Some(l) = Level::parse(lvl) {
+                    overrides.push((comp.trim().to_string(), l as u8));
+                }
+            }
+        }
+    }
+    // Longest prefix first, so the first match in `component_level` is
+    // the most specific one.
+    overrides.sort_by(|a, b| b.0.len().cmp(&a.0.len()).then(a.0.cmp(&b.0)));
+    HAS_OVERRIDES.store(if overrides.is_empty() { 0 } else { 1 }, Ordering::Relaxed);
+    *OVERRIDES.lock().unwrap_or_else(|p| p.into_inner()) = overrides;
+}
+
+/// Set the default level (overrides from a previous spec stay in place).
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// The threshold for `component`: its longest matching prefix override,
+/// or the global default.
+fn component_level(component: &str) -> u8 {
+    if HAS_OVERRIDES.load(Ordering::Relaxed) != 0 {
+        let overrides = OVERRIDES.lock().unwrap_or_else(|p| p.into_inner());
+        for (prefix, lvl) in overrides.iter() {
+            if component.starts_with(prefix.as_str()) {
+                return *lvl;
+            }
+        }
+    }
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Would a line at `l` pass the *default* level? (Component overrides are
+/// applied in [`write`]; this keeps the cheap pre-format check usable.)
 pub fn enabled(l: Level) -> bool {
     l as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Like [`enabled`] but honouring per-component overrides.
+pub fn component_enabled(l: Level, component: &str) -> bool {
+    l as u8 >= component_level(component)
+}
+
 #[doc(hidden)]
 pub fn write(level: Level, component: &str, msg: std::fmt::Arguments<'_>) {
-    if !enabled(level) {
+    if !component_enabled(level, component) {
         return;
     }
     let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
@@ -55,7 +125,20 @@ pub fn write(level: Level, component: &str, msg: std::fmt::Arguments<'_>) {
         Level::Warn => "WARN ",
         Level::Error => "ERROR",
     };
-    eprintln!("{tag} {}.{:03} {component}: {msg}", now.as_secs(), now.subsec_millis());
+    // Stamp the active trace so stderr lines join the span export.
+    match crate::obs::current() {
+        Some(ctx) => eprintln!(
+            "{tag} {}.{:03} {component}: {msg} [trace={:016x}]",
+            now.as_secs(),
+            now.subsec_millis(),
+            ctx.trace_id
+        ),
+        None => eprintln!(
+            "{tag} {}.{:03} {component}: {msg}",
+            now.as_secs(),
+            now.subsec_millis()
+        ),
+    }
 }
 
 #[macro_export]
@@ -87,9 +170,14 @@ macro_rules! error {
 mod tests {
     use super::*;
 
+    // Shares process-global level/override state with the other tests in
+    // this module — serialize them.
+    static LOG_SERIAL: Mutex<()> = Mutex::new(());
+
     #[test]
     fn level_gating() {
-        set_level(Level::Warn);
+        let _s = LOG_SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        set_spec("warn");
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
@@ -97,5 +185,21 @@ mod tests {
         set_level(Level::Debug);
         assert!(enabled(Level::Debug));
         set_level(Level::Warn);
+    }
+
+    #[test]
+    fn component_overrides_longest_prefix() {
+        let _s = LOG_SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        set_spec("info,kube=warn,kube.store=debug");
+        assert!(component_enabled(Level::Info, "redbox")); // default: info
+        assert!(!component_enabled(Level::Info, "kube.sched")); // kube=warn
+        assert!(component_enabled(Level::Warn, "kube.sched"));
+        assert!(component_enabled(Level::Debug, "kube.store")); // most specific wins
+        assert!(component_enabled(Level::Debug, "kube.store.commit"));
+        // Malformed clauses are ignored, the rest of the spec applies.
+        set_spec("bogus,kube=nope,error");
+        assert!(!component_enabled(Level::Warn, "kube.sched"));
+        assert!(component_enabled(Level::Error, "kube.sched"));
+        set_spec("warn");
     }
 }

@@ -636,3 +636,83 @@ fn sharded_delta_lists_identical_through_both_transports() {
     assert_eq!(local[1], "node delta=true items=0 deleted=0 (foreign churn ships nothing)");
     assert_eq!(local[2], "global version: node full rv == pod delta rv = true");
 }
+
+// ---------------------------------------------------------------------
+// Trace propagation parity (PR 7): a create issued under a client-side
+// span must stamp the SAME trace id onto the object's `hpcorc.io/trace`
+// annotation whichever transport carried it — in-process, poll-remote,
+// or streaming-remote — and the watch event delivering the object must
+// carry that annotation unchanged.
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_id_stamped_identically_across_all_three_transports() {
+    use hpcorc::obs;
+
+    /// Create a pod under a fresh root span; return
+    /// (root trace id as stamped hex, annotation wire value, the same
+    /// annotation as seen on the watch-delivered event object).
+    fn traced_create(api: &dyn ApiClient, name: &str) -> (String, String, String) {
+        let rx = api.watch(Some(KIND_POD), 0).expect("watch");
+        let guard = obs::span("parity", "traced create");
+        let root = guard.context().expect("tracing enabled by default");
+        let created = api.create(pod(name)).expect("create");
+        drop(guard);
+        let annotated = created
+            .meta
+            .annotation(obs::TRACE_ANNOTATION)
+            .expect("create stamps hpcorc.io/trace")
+            .to_string();
+        assert!(
+            created.meta.annotation(obs::CREATED_WALL_ANNOTATION).is_some(),
+            "create stamps hpcorc.io/created-wall-ns"
+        );
+        // The watch event ships the object annotations and all.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let from_watch = loop {
+            assert!(Instant::now() < deadline, "no watch event for {name}");
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(ev) if ev.object().meta.name == name => {
+                    break ev
+                        .object()
+                        .meta
+                        .annotation(obs::TRACE_ANNOTATION)
+                        .expect("watch-delivered object keeps the annotation")
+                        .to_string();
+                }
+                _ => continue,
+            }
+        };
+        (format!("{:016x}", root.trace_id), annotated, from_watch)
+    }
+
+    let mut runs: Vec<(&str, String, String, String)> = Vec::new();
+
+    let local_api = ApiServer::new(Metrics::new());
+    let (root, ann, watched) = traced_create(&local_api, "tr-local");
+    runs.push(("in-process", root, ann, watched));
+
+    for (label, force_poll) in [("poll-remote", true), ("streaming-remote", false)] {
+        let server = ApiServer::new(Metrics::new());
+        let path = parity_sock(&format!("trace-{label}"));
+        let mut srv = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+        srv.register("kube.Api", server.rpc_service());
+        let remote = RemoteApi::connect(&path)
+            .unwrap()
+            .with_watch_config(WatchConfig { force_poll, ..WatchConfig::default() });
+        let (root, ann, watched) = traced_create(&remote, "tr-remote");
+        runs.push((label, root, ann, watched));
+        srv.stop();
+    }
+
+    for (label, root, ann, watched) in &runs {
+        // The annotation is `<trace_id>-<span_id>` of the server-side
+        // span; the trace half must be the caller's root trace id.
+        let (trace_half, _) = ann.split_once('-').expect("wire format");
+        assert_eq!(
+            trace_half, root,
+            "{label}: object annotation joined a different trace than the caller's span"
+        );
+        assert_eq!(ann, watched, "{label}: watch delivery altered the annotation");
+    }
+}

@@ -420,3 +420,56 @@ fn mutating_hook_closes_the_scheduler_race() {
         .unwrap();
     assert_eq!(sched.run_cycle(), 1);
 }
+
+/// PR 7: an informer subscriber receives watch-delivered objects carrying
+/// the `hpcorc.io/trace` annotation the originating write stamped — the
+/// causal chain survives store → WAL → watch → cache → subscriber.
+#[test]
+fn informer_events_carry_the_originating_writes_trace() {
+    use hpcorc::obs;
+
+    let api = ApiServer::new(Metrics::new());
+    let informer_metrics = Metrics::new();
+    let informers = SharedInformerFactory::new(api.client(), informer_metrics.clone());
+    let pods = informers.informer(KIND_POD);
+    pods.sync().unwrap();
+    let rx = pods.subscribe();
+
+    let guard = obs::span("informer-test", "traced create");
+    let root = guard.context().expect("tracing enabled by default");
+    api.create(PodView::build("traced", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+        .unwrap();
+    drop(guard);
+    pods.sync().unwrap();
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let annotated = loop {
+        assert!(std::time::Instant::now() < deadline, "no informer event for traced pod");
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => {
+                if let Some(o) = ev.object() {
+                    if o.meta.name == "traced" {
+                        break o
+                            .meta
+                            .annotation(obs::TRACE_ANNOTATION)
+                            .expect("cached object keeps the trace annotation")
+                            .to_string();
+                    }
+                }
+            }
+            Err(_) => {
+                // Poll transports may lag; pump the reflector again.
+                let _ = pods.sync();
+            }
+        }
+    };
+    let ctx = obs::TraceContext::parse_wire(&annotated).expect("well-formed wire context");
+    assert_eq!(
+        ctx.trace_id, root.trace_id,
+        "informer-delivered object joined a different trace than the originating write"
+    );
+    // The delivery itself was timed (the informer's fan-out histogram).
+    let delivered =
+        informer_metrics.hist("kube.informer.deliver_ns").lock().unwrap().count();
+    assert!(delivered >= 1, "informer delivery latency must be observed");
+}

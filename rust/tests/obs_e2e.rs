@@ -1,0 +1,122 @@
+//! Observability end-to-end (PR 7 acceptance): one pod driven through
+//! create → kueue-admit → schedule → bind over the red-box testbed must
+//! yield ONE connected causal trace — rooted at the client's span,
+//! joined by the API server, the admission controller, and the
+//! scheduler — exportable as valid Chrome trace-event JSON, with the
+//! create→bound SLO histogram scrapeable remotely in Prometheus text.
+
+use hpcorc::cluster::Resources;
+use hpcorc::encoding::{json, Value};
+use hpcorc::hybrid::{Testbed, TestbedConfig};
+use hpcorc::kube::{ApiClient, PodView, RemoteApi, KIND_POD};
+use hpcorc::kueue::{ClusterQueueView, LocalQueueView, QueueResources};
+use hpcorc::obs;
+use hpcorc::redbox::RedboxClient;
+use std::time::{Duration, Instant};
+
+#[test]
+fn pod_lifecycle_yields_one_connected_trace_and_remote_slo_histogram() {
+    let tb = Testbed::start(TestbedConfig::default()).expect("testbed");
+    let remote = RemoteApi::connect(tb.socket()).expect("remote client");
+
+    // Queue topology first, so the admission controller has somewhere to
+    // admit the pod into.
+    remote
+        .create(ClusterQueueView::build("e2e-cq", QueueResources::nodes(4)))
+        .expect("cluster queue");
+    remote.create(LocalQueueView::build("e2e-team", "e2e-cq")).expect("local queue");
+
+    // The traced create: a client-side root span, exactly like the CLI's
+    // `kubectl apply`. The trace id must survive the wire, the store, and
+    // every control loop downstream.
+    let root = {
+        let guard = obs::span("e2e-test", "create traced pod");
+        let root = guard.context().expect("tracing on by default");
+        let mut p = PodView::build("e2e-pod", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+        hpcorc::kueue::queue_workload(&mut p, "e2e-team");
+        remote.create(p).expect("create pod");
+        root
+    };
+
+    // Wait for the full admit → schedule → bind chain.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let bound = loop {
+        let obj = remote.get(KIND_POD, "e2e-pod").expect("get pod");
+        if obj.spec.opt_str("nodeName").is_some() {
+            break obj;
+        }
+        assert!(Instant::now() < deadline, "pod never bound");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+
+    // -- the annotation carries the caller's trace -----------------------
+    let wire = bound
+        .meta
+        .annotation(obs::TRACE_ANNOTATION)
+        .expect("bound pod keeps hpcorc.io/trace");
+    let ctx = obs::TraceContext::parse_wire(wire).expect("well-formed trace annotation");
+    assert_eq!(ctx.trace_id, root.trace_id, "object joined a different trace");
+    let trace_hex = format!("{:016x}", ctx.trace_id);
+
+    // -- one connected tree, visible through the remote span service -----
+    // Bind/admit spans land in the ring moments after the status write
+    // becomes readable; poll briefly instead of racing them.
+    let rpc = RedboxClient::connect(tb.socket()).expect("rpc client");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let events: Vec<Value> = loop {
+        let out = rpc
+            .call("obs.Spans/ByTrace", Value::map().with("trace", trace_hex.clone()))
+            .expect("ByTrace");
+        let events = out.get("events").and_then(Value::as_seq).unwrap_or(&[]).to_vec();
+        let cats: Vec<&str> =
+            events.iter().filter_map(|e| e.opt_str("cat")).collect();
+        if ["apiserver", "kueue", "kube-sched"].iter().all(|c| cats.contains(c)) {
+            break events;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "trace never connected across components; saw {cats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    for e in &events {
+        assert_eq!(
+            e.get("args").and_then(|a| a.opt_str("trace_id")),
+            Some(trace_hex.as_str()),
+            "every exported span belongs to the one trace"
+        );
+    }
+    // The remote create dispatched through the red-box server under the
+    // same trace (wire-context adoption).
+    assert!(
+        events.iter().any(|e| e.opt_str("cat") == Some("redbox-server")),
+        "server dispatch spans join the caller's trace"
+    );
+
+    // -- valid Chrome trace-event JSON (Perfetto-loadable) ---------------
+    let spans = obs::by_trace(ctx.trace_id);
+    assert!(spans.len() >= 4, "expected a multi-component tree, got {}", spans.len());
+    let chrome = obs::chrome_json(&spans);
+    let parsed = json::parse(&chrome).expect("chrome export is valid JSON");
+    let arr = parsed.as_seq().expect("chrome export is a JSON array");
+    assert_eq!(arr.len(), spans.len());
+    for ev in arr {
+        assert_eq!(ev.opt_str("ph"), Some("X"), "complete-event format");
+        assert!(ev.opt_int("ts").is_some() && ev.opt_int("dur").is_some());
+    }
+
+    // -- the SLO histogram is scrapeable remotely in Prometheus text -----
+    let prom = rpc.call("obs.Metrics/Prom", Value::Null).expect("Prom scrape");
+    let text = prom.opt_str("text").expect("text body");
+    assert!(
+        text.contains("# TYPE slo_pod_create_to_bound_ns histogram"),
+        "create->bound SLO histogram must be exposed"
+    );
+    assert!(text.contains("slo_pod_create_to_bound_ns_count 1"), "exactly the one e2e pod");
+    assert!(text.contains("slo_pod_create_to_bound_ns_bucket{le=\"+Inf\"} 1"));
+    // The commit path instrumentation fired too.
+    assert!(text.contains("# TYPE kube_store_commit_ns histogram"));
+    assert!(text.contains("# TYPE redbox_handle_ns histogram"));
+
+    tb.stop();
+}

@@ -94,6 +94,37 @@ grep -q completed "$WORK/tj.out"
 "$HPCORC" kubectl get pods --socket "$SOCK" >/dev/null
 "$HPCORC" kubectl get nodes --socket "$SOCK" >/dev/null
 
+echo "== observability plane: remote metrics scrape + trace timeline =="
+# Prometheus text exposition over the live socket (PR 7): the RPC-layer
+# and store-commit histograms must be present in well-formed families.
+"$HPCORC" metrics --socket "$SOCK" --prom >"$WORK/metrics.prom"
+grep -q '^# TYPE redbox_requests counter' "$WORK/metrics.prom"
+grep -q '^# TYPE kube_store_commit_ns histogram' "$WORK/metrics.prom"
+grep -q 'kube_store_commit_ns_bucket{le="+Inf"}' "$WORK/metrics.prom"
+"$HPCORC" metrics --socket "$SOCK" --json >"$WORK/metrics.json"
+grep -q '"counters"' "$WORK/metrics.json"
+# Lifecycle timeline reconstructed from an object's originating trace
+# annotation. Use a freshly-applied object so its spans are still in the
+# daemon's (bounded) span ring when we ask.
+cat >"$WORK/trace-cq.yaml" <<'EOF'
+apiVersion: kueue.x-k8s.io/v1beta1
+kind: ClusterQueue
+metadata:
+  name: smoke-trace-cq
+spec:
+  quota:
+    nodes: 1
+EOF
+"$HPCORC" kubectl apply -f "$WORK/trace-cq.yaml" --socket "$SOCK"
+"$HPCORC" trace cq/smoke-trace-cq --socket "$SOCK" | tee "$WORK/trace.out"
+grep -q '^trace ' "$WORK/trace.out"
+grep -q 'apiserver' "$WORK/trace.out"
+# And the Chrome trace-event export parses as JSON (Perfetto-loadable).
+"$HPCORC" trace cq/smoke-trace-cq --socket "$SOCK" --json >"$WORK/trace.json"
+python3 -c "import json,sys; json.load(open('$WORK/trace.json'))" 2>/dev/null \
+  || node -e "JSON.parse(require('fs').readFileSync('$WORK/trace.json'))" 2>/dev/null \
+  || grep -q '^\[' "$WORK/trace.json"
+
 kill "$UP_PID" 2>/dev/null || true
 wait "$UP_PID" 2>/dev/null || true
 UP_PID=""
