@@ -7,14 +7,22 @@
 //!   load; this is the price the whole fleet pays when nobody is looking.
 //! - `obs/nested_span_x8`: an 8-deep child chain (a worst-case causal
 //!   tree step, e.g. CLI → redbox → apiserver → store).
+//! - `obs/span_sampled_out`: a root span under 1-in-N sampling that loses
+//!   the coin flip (`HPCORC_TRACE_SAMPLE`) — guard + one modulo, no ring
+//!   write. Asserted cheap below, same as the disabled path.
 //! - `obs/prom_render_10k`: render a 10k-metric registry to Prometheus
 //!   text (one full scrape).
+//! - `obs/prom_render_10k_labelled`: same series count, but spread over
+//!   labelled families (PR 8) — the canonical-key split/group cost.
 //! - `obs/json_snapshot_10k`: same registry as the structured snapshot.
+//! - `obs/event_record_coalesced`: `EventRecorder::event` for a repeated
+//!   `(object, reason)` — the hot path every control loop pays per cycle
+//!   once the first event object exists (a count-bump `update_status`).
 //!
 //! Prints `{"bench":...}` JSON rows for the CI perf trajectory.
 
 use hpcorc::bench::{header, Bench};
-use hpcorc::cluster::Metrics;
+use hpcorc::cluster::{Metrics, Resources};
 use hpcorc::obs;
 
 fn main() {
@@ -35,6 +43,15 @@ fn main() {
         let _g = obs::span("bench", "op");
     }));
     obs::set_enabled(true);
+
+    // Sampled-out path (PR 8): tracing on, but the root span loses the
+    // 1-in-N coin flip — spans open but are dropped at close. The cost a
+    // production fleet pays per un-sampled operation.
+    obs::set_trace_sample(1 << 30);
+    rows.push(Bench::new("obs/span_sampled_out").warmup(1000).iters(20_000).run(|| {
+        let _g = obs::span("bench", "op");
+    }));
+    obs::set_trace_sample(1);
 
     // Nested chain: stack push/pop + parent linkage, 8 levels.
     rows.push(Bench::new("obs/nested_span_x8").warmup(100).iters(5_000).run(|| {
@@ -70,19 +87,56 @@ fn main() {
         std::hint::black_box(obs::render_json(&m));
     }));
 
+    // 10k series spread over labelled families (PR 8): 100 families x 100
+    // label sets each — the exposition pays the canonical-key split and
+    // per-family grouping instead of a flat walk.
+    let lm = Metrics::new();
+    for f in 0..100u64 {
+        for l in 0..100u64 {
+            lm.inc_with(&format!("bench.labelled.{f:02}"), &[("shard", format!("s{l:03}").as_str())]);
+        }
+    }
+    rows.push(Bench::new("obs/prom_render_10k_labelled").warmup(2).iters(20).run(|| {
+        std::hint::black_box(obs::render_prom(&lm));
+    }));
+
+    // Event-record hot path (PR 8): repeated (object, reason) against an
+    // in-process ApiServer — after the first create, every call is the
+    // coalesced count-bump (`update_status` + dedup-map hit).
+    let api = hpcorc::kube::ApiServer::new(Metrics::new());
+    let pod = hpcorc::kube::PodView::build("bench-pod", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+    let pod = api.create(pod).unwrap();
+    let rec = hpcorc::kube::EventRecorder::new("bench", Metrics::new());
+    let client = api.client();
+    rows.push(Bench::new("obs/event_record_coalesced").warmup(100).iters(5_000).run(|| {
+        rec.event(
+            client.as_ref(),
+            &pod,
+            hpcorc::kube::EVENT_NORMAL,
+            "BenchTick",
+            "benchmark event",
+        )
+        .unwrap();
+    }));
+
     println!();
     for s in &rows {
         println!("{}", s.json());
     }
 
-    // Guardrail, not a flaky assert: the disabled path must be far
-    // cheaper than recording. A regression here means someone put work
-    // in front of the enabled() check.
+    // Guardrails (PR 8, asserted): the paths a fleet pays when nobody is
+    // looking must stay far cheaper than recording. A regression here
+    // means someone put work in front of the enabled()/sampled() checks.
+    // Margins are generous (5x + 200ns slack) to stay CI-stable.
     let record = rows[0].mean_ns;
     let disabled = rows[1].mean_ns;
-    if disabled * 10.0 > record + 1.0 {
-        eprintln!(
-            "warning: disabled span path ({disabled:.0}ns) is not ~free vs record ({record:.0}ns)"
-        );
-    }
+    let sampled_out = rows[2].mean_ns;
+    assert!(
+        disabled * 5.0 <= record + 200.0,
+        "disabled span path ({disabled:.0}ns) is not ~free vs record ({record:.0}ns)"
+    );
+    assert!(
+        sampled_out <= record * 2.0 + 200.0,
+        "sampled-out span path ({sampled_out:.0}ns) costs more than recording ({record:.0}ns)"
+    );
 }

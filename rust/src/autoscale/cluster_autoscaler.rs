@@ -33,14 +33,19 @@
 use crate::cluster::{Metrics, Resources};
 use crate::encoding::Value;
 use crate::kube::{
-    ApiClient, Informer, KubeObject, NodeView, PodPhase, PodView, SharedInformerFactory,
-    KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
+    ApiClient, EventRecorder, Informer, KubeObject, NodeView, PodPhase, PodView,
+    SharedInformerFactory, EVENT_NORMAL, KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_SLURMJOB,
+    KIND_TORQUEJOB,
 };
 use crate::operator::{phase, LABEL_QUEUE, LABEL_WLM, VIRTUAL_KUBELET_TAINT};
 use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Component name stamped on events and audit records this controller
+/// writes.
+const COMPONENT: &str = "cluster-autoscaler";
 
 /// Label marking a node as autoscaler-managed (value: the pool name).
 pub const POOL_LABEL: &str = "autoscale.hpcorc.io/pool";
@@ -119,6 +124,7 @@ pub struct ClusterAutoscaler {
     slurmjobs: Informer,
     provisioner: std::sync::Arc<dyn NodeProvisioner>,
     cfg: CaConfig,
+    events: EventRecorder,
     metrics: Metrics,
     state: Mutex<CaState>,
 }
@@ -138,6 +144,7 @@ impl ClusterAutoscaler {
             slurmjobs: informers.informer(KIND_SLURMJOB),
             provisioner,
             cfg,
+            events: EventRecorder::new(COMPONENT, metrics.clone()),
             metrics,
             state: Mutex::new(CaState { idle_since: HashMap::new(), next_index: 0 }),
         }
@@ -155,6 +162,9 @@ impl ClusterAutoscaler {
     /// One full cycle; public for deterministic stepping.
     pub fn run_cycle(&self) -> Result<CaReport> {
         let t0 = Instant::now();
+        // Every write this cycle makes is attributed to the autoscaler in
+        // the API server's audit trail (PR 8).
+        let _actor = crate::obs::push_actor(COMPONENT);
         let mut report = CaReport::default();
         self.nodes.sync()?;
         self.pods.sync()?;
@@ -248,6 +258,18 @@ impl ClusterAutoscaler {
             let labels = [(POOL_LABEL, self.cfg.pool_prefix.as_str())];
             self.provisioner.provision(&name, &labels)?;
             self.metrics.inc("autoscale.ca.nodes_provisioned");
+            let _ = self.events.event_ref(
+                &self.api,
+                KIND_NODE,
+                &name,
+                None,
+                EVENT_NORMAL,
+                "Provisioned",
+                &format!(
+                    "Provisioned pool node {name} for {} unschedulable pod(s)",
+                    unschedulable.len()
+                ),
+            );
             pool_size += 1;
             report.provisioned.push(name);
         }
@@ -344,6 +366,16 @@ impl ClusterAutoscaler {
             o.status.insert("burstKind", kind);
         })?;
         self.metrics.inc("autoscale.ca.pods_bursted");
+        let _ = self.events.event(
+            &self.api,
+            pod,
+            EVENT_NORMAL,
+            "BurstToWlm",
+            &format!(
+                "Burst to the {wlm} partition as {kind} {job_name} via {}",
+                vnode.name
+            ),
+        );
         Ok(())
     }
 
@@ -586,6 +618,19 @@ mod tests {
         assert!(script.contains("#PBS -q batch"));
         assert!(script.contains("singularity run work.sif"));
         assert_eq!(job.meta.owner, Some((KIND_POD.to_string(), "hpc-ok".to_string())));
+        // Both scaling decisions are narrated as events.
+        let events: Vec<crate::kube::EventView> = api
+            .list(crate::kube::KIND_EVENT, &[])
+            .iter()
+            .map(|o| crate::kube::EventView::from_object(o).unwrap())
+            .collect();
+        let prov = events.iter().find(|e| e.reason == "Provisioned").unwrap();
+        assert_eq!(prov.regarding_kind, KIND_NODE);
+        assert_eq!(prov.reporting_controller, COMPONENT);
+        let burst = events.iter().find(|e| e.reason == "BurstToWlm").unwrap();
+        assert_eq!(burst.regarding_name, "hpc-ok");
+        assert!(burst.note.contains("torque"), "{}", burst.note);
+        assert!(burst.note.contains("burst-hpc-ok"), "{}", burst.note);
 
         // Mirror: job runs, then completes -> pod follows.
         api.update_status(KIND_TORQUEJOB, "burst-hpc-ok", |o| {

@@ -29,8 +29,8 @@ use super::metrics::{PodMetricsView, KIND_PODMETRICS};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
 use crate::kube::{
-    ApiClient, Controller, Informer, KubeObject, PodView, Reconcile, SharedInformerFactory,
-    KIND_DEPLOYMENT,
+    ApiClient, Controller, EventRecorder, Informer, KubeObject, PodView, Reconcile,
+    SharedInformerFactory, EVENT_NORMAL, KIND_DEPLOYMENT,
 };
 use crate::util::{Error, Result};
 use std::collections::HashMap;
@@ -44,6 +44,10 @@ pub const KIND_HPA: &str = "HorizontalPodAutoscaler";
 /// Recommendations within ±10% of the target hold the current size
 /// (the kube-controller-manager default tolerance).
 const TOLERANCE: f64 = 0.10;
+
+/// Component name stamped on events and audit records this controller
+/// writes.
+const COMPONENT: &str = "horizontal-pod-autoscaler";
 
 /// Which pod resource the HPA measures.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -275,6 +279,7 @@ pub struct HpaController {
     samples: Informer,
     poll: Duration,
     history: Mutex<HashMap<String, Vec<(Instant, u32)>>>,
+    events: EventRecorder,
     metrics: Metrics,
 }
 
@@ -289,6 +294,7 @@ impl HpaController {
             samples: informers.informer(KIND_PODMETRICS),
             poll,
             history: Mutex::new(HashMap::new()),
+            events: EventRecorder::new(COMPONENT, metrics.clone()),
             metrics,
         }
     }
@@ -328,6 +334,9 @@ impl Controller for HpaController {
     }
 
     fn reconcile(&self, api: &dyn ApiClient, name: &str) -> Result<Reconcile> {
+        // Every write this pass makes is attributed to the HPA in the API
+        // server's audit trail (PR 8).
+        let _actor = crate::obs::push_actor(COMPONENT);
         let obj = match api.get(KIND_HPA, name) {
             Ok(o) => o,
             Err(e) if e.is_not_found() => {
@@ -439,6 +448,22 @@ impl Controller for HpaController {
             } else {
                 "autoscale.hpa.scale_downs"
             });
+            let reason = if desired > current { "ScaledUp" } else { "ScaledDown" };
+            let _ = self.events.event(
+                api,
+                &deploy,
+                EVENT_NORMAL,
+                reason,
+                &format!(
+                    "Scaled {} from {current} to {desired} replicas (observed {} vs target {})",
+                    hpa.target,
+                    signal.round() as u64,
+                    match hpa.metric_target {
+                        MetricTarget::Utilization(pct) => format!("{pct}%"),
+                        MetricTarget::AverageValue(v) => v.to_string(),
+                    }
+                ),
+            );
         }
         let signal = signal.round() as u64;
         let changed = hpa.desired_replicas != Some(desired)
@@ -595,6 +620,17 @@ mod tests {
         let h = HpaView::from_object(&api.get(KIND_HPA, "h").unwrap()).unwrap();
         assert_eq!(h.current_utilization_pct, Some(100));
         assert_eq!(h.desired_replicas, Some(4));
+        // The scale decision is narrated as an event on the Deployment.
+        let ev = api
+            .list(crate::kube::KIND_EVENT, &[])
+            .iter()
+            .map(|o| crate::kube::EventView::from_object(o).unwrap())
+            .find(|e| e.reason == "ScaledUp")
+            .expect("ScaledUp event");
+        assert_eq!(ev.regarding_kind, crate::kube::KIND_DEPLOYMENT);
+        assert_eq!(ev.regarding_name, "web");
+        assert_eq!(ev.reporting_controller, COMPONENT);
+        assert!(ev.note.contains("from 2 to 4"), "{}", ev.note);
     }
 
     #[test]

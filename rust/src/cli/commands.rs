@@ -4,8 +4,8 @@ use super::args::Args;
 use crate::encoding::Value;
 use crate::hybrid::{Testbed, TestbedConfig};
 use crate::kube::{
-    default_scheme, Api, ApiClient, KubeObject, ListOptions, NodeView, RemoteApi,
-    KIND_TORQUEJOB,
+    default_scheme, Api, ApiClient, EventView, KubeObject, ListOptions, NodeView, RemoteApi,
+    KIND_EVENT, KIND_TORQUEJOB,
 };
 use crate::kueue::{ClusterQueueView, QueueOrdering, QueueResources};
 use crate::redbox::RedboxClient;
@@ -23,19 +23,27 @@ USAGE: hpcorc <command> [args]
 Testbed:
   up        [--nodes N] [--cores C] [--workers W] [--slurm] [--artifacts DIR]
             [--time-scale S] [--socket PATH] [--run-for SECS] [--wal-dir DIR]
+            [--audit-log FILE]
             [--autoscale-max N [--autoscale-min N] [--autoscale-cores C]]
             boot the hybrid testbed (Fig. 1) and serve until stopped;
             --autoscale-max enables the elastic layer (metrics pipeline +
             HPA + cluster autoscaler with burst-to-WLM); --wal-dir makes
             the API server durable (WAL + snapshots) — boot again on the
-            same dir to recover every object and resource version
+            same dir to recover every object and resource version;
+            --audit-log additionally appends every mutating API request
+            to FILE as one JSON record per line
   demo      run the paper's Fig. 3-5 test case end to end and print it
 
 Kubernetes surface (against a running testbed; KIND accepts kubectl-style
 aliases — pods/po, nodes/no, deploy, torquejobs/tj, slurmjobs/sj,
-clusterqueues/cq, localqueues/lq, hpa, nodemetrics, podmetrics):
+clusterqueues/cq, localqueues/lq, hpa, nodemetrics, podmetrics,
+events/ev):
   kubectl apply -f FILE --socket PATH
   kubectl get KIND [NAME] [--socket PATH] [-o yaml|json] [-l k=v,...]
+            `kubectl get events` renders the cluster event table
+            (LAST SEEN / TYPE / REASON / OBJECT / COMPONENT / COUNT)
+  kubectl describe KIND/NAME --socket PATH
+            the object, its events, and its causal trace timeline
   kubectl top nodes|pods --socket PATH
   kubectl delete KIND NAME --socket PATH
   kubectl logs POD --socket PATH
@@ -64,15 +72,20 @@ Workload tooling:
   sing list                      list built-in container images
   version [--components]         versions (Table I inventory)
 
-Observability (against a running testbed, PR 7):
+Observability (against a running testbed, PR 7/8):
   metrics --socket PATH [--prom|--json]
             scrape the daemon's metric registry over the socket; --prom
-            prints Prometheus text exposition, --json the structured
-            snapshot, default a flat listing with histogram summaries
+            prints Prometheus text exposition (labelled families), --json
+            the structured snapshot, default a flat listing with
+            histogram summaries
   trace KIND/NAME --socket PATH [--json]
             reconstruct the object's lifecycle timeline from its
             originating trace (create -> admit -> schedule -> bind -> run);
             --json dumps Chrome trace-event JSON (Perfetto-loadable)
+  audit --socket PATH [--since SEQ] [--kind KIND] [--json]
+            the API server's mutating-request audit trail (verb, object,
+            actor, trace id, outcome, latency), oldest first; --since is
+            an exclusive sequence-number cursor for incremental reads
 ";
 
 fn policy_by_name(name: &str) -> Result<Box<dyn SchedPolicy>> {
@@ -100,6 +113,9 @@ fn testbed_config(args: &Args) -> Result<TestbedConfig> {
     }
     if let Some(dir) = args.flag("wal-dir") {
         cfg.wal_dir = Some(dir.into());
+    }
+    if let Some(file) = args.flag("audit-log") {
+        cfg.audit_log = Some(file.into());
     }
     let autoscale_max: usize = args.num("autoscale-max", 0)?;
     if autoscale_max > 0 {
@@ -196,6 +212,9 @@ fn resolve_kind(alias: &str) -> String {
 
 pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
     let sub = args.req_positional(1, "kubectl subcommand")?.to_string();
+    // Attribute every request this command makes — the actor rides the
+    // red-box envelope and lands in the server's audit trail.
+    let _actor = crate::obs::push_actor("kubectl");
     match sub.as_str() {
         "apply" => {
             let file = args.req_flag("f")?;
@@ -252,6 +271,16 @@ pub fn cmd_kubectl(args: &mut Args) -> Result<()> {
             let what = args.req_positional(2, "nodes|pods")?.to_string();
             let api = remote(args)?;
             cmd_kubectl_top(&api, &what)
+        }
+        "describe" => {
+            let spec = args.req_positional(2, "KIND/NAME")?.to_string();
+            let (alias, name) = spec
+                .split_once('/')
+                .ok_or_else(|| Error::config("expected KIND/NAME"))?;
+            let kind = resolve_kind(alias);
+            let api = remote(args)?;
+            let obj = api.get(&kind, name)?;
+            cmd_kubectl_describe(args, &api, &obj)
         }
         other => Err(Error::config(format!("unknown kubectl subcommand `{other}`"))),
     }
@@ -313,6 +342,62 @@ fn cmd_kubectl_top(api: &dyn ApiClient, what: &str) -> Result<()> {
     }
 }
 
+/// `kubectl describe KIND/NAME`: the object's headline fields, every
+/// cluster event regarding it (oldest first), and — when the object
+/// carries a trace annotation — its causal span timeline. One command
+/// answers "what happened to this pod", across components.
+fn cmd_kubectl_describe(args: &Args, api: &dyn ApiClient, obj: &KubeObject) -> Result<()> {
+    println!("Name:         {}", obj.meta.name);
+    println!("Kind:         {} ({})", obj.kind, obj.api_version);
+    if let Some(phase) = obj.status.opt_str("phase") {
+        println!("Phase:        {phase}");
+    }
+    if let Some(node) = obj.spec.opt_str("nodeName") {
+        println!("Node:         {node}");
+    }
+    if !obj.meta.labels.is_empty() {
+        let rendered: Vec<String> =
+            obj.meta.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        println!("Labels:       {}", rendered.join(","));
+    }
+    for (k, v) in &obj.meta.annotations {
+        println!("Annotation:   {k}={v}");
+    }
+    let list = api.list(KIND_EVENT, &ListOptions::all())?;
+    let mut evs: Vec<EventView> = list
+        .items
+        .iter()
+        .filter_map(|o| EventView::from_object(o).ok())
+        .filter(|e| e.regarding_kind == obj.kind && e.regarding_name == obj.meta.name)
+        .collect();
+    evs.sort_by(|a, b| a.last_seen_s.total_cmp(&b.last_seen_s));
+    println!("\nEvents:");
+    if evs.is_empty() {
+        println!("  <none>");
+    } else {
+        println!(
+            "  {:<8} {:<20} {:<10} {:<28} {:>5}  MESSAGE",
+            "TYPE", "REASON", "AGE", "FROM", "COUNT"
+        );
+        for e in &evs {
+            println!(
+                "  {:<8} {:<20} {:<10} {:<28} {:>5}  {}",
+                e.etype,
+                e.reason,
+                fmt_age(Duration::from_secs_f64((list.server_s - e.last_seen_s).max(0.0))),
+                e.reporting_controller,
+                e.count,
+                e.note
+            );
+        }
+    }
+    if obj.meta.annotation(crate::obs::TRACE_ANNOTATION).is_some() {
+        println!();
+        print_trace_timeline(args, &obj.kind, &obj.meta.name, obj)?;
+    }
+    Ok(())
+}
+
 fn print_object(obj: &KubeObject, output: Option<&str>) -> Result<()> {
     match output.unwrap_or("yaml") {
         "json" => println!("{}", crate::encoding::json::to_string_pretty(&obj.encode())),
@@ -367,6 +452,27 @@ fn print_table(kind: &str, server_now: f64, items: &[KubeObject]) {
                     nominal,
                     o.status.opt_int("pending").unwrap_or(0),
                     o.status.opt_int("admitted").unwrap_or(0)
+                );
+            }
+        }
+        "Event" => {
+            let mut evs: Vec<EventView> =
+                items.iter().filter_map(|o| EventView::from_object(o).ok()).collect();
+            evs.sort_by(|a, b| a.last_seen_s.total_cmp(&b.last_seen_s));
+            println!(
+                "{:<10} {:<8} {:<20} {:<26} {:<26} {:>5}  MESSAGE",
+                "LAST SEEN", "TYPE", "REASON", "OBJECT", "COMPONENT", "COUNT"
+            );
+            for e in &evs {
+                println!(
+                    "{:<10} {:<8} {:<20} {:<26} {:<26} {:>5}  {}",
+                    fmt_age(Duration::from_secs_f64((server_now - e.last_seen_s).max(0.0))),
+                    e.etype,
+                    e.reason,
+                    format!("{}/{}", e.regarding_kind.to_lowercase(), e.regarding_name),
+                    e.reporting_controller,
+                    e.count,
+                    e.note
                 );
             }
         }
@@ -520,6 +626,12 @@ fn cmd_trace_timeline(args: &Args, kind_name: &str) -> Result<()> {
     let kind = resolve_kind(alias);
     let api = remote(args)?;
     let obj = api.get(&kind, name)?;
+    print_trace_timeline(args, &kind, name, &obj)
+}
+
+/// Fetch + render the span timeline for an already-fetched object —
+/// shared by `hpcorc trace KIND/NAME` and `kubectl describe`.
+fn print_trace_timeline(args: &Args, kind: &str, name: &str, obj: &KubeObject) -> Result<()> {
     let Some(wire) = obj.meta.annotation(crate::obs::TRACE_ANNOTATION) else {
         return Err(Error::config(format!(
             "{kind}/{name} carries no `{}` annotation (created before tracing, or tracing disabled)",
@@ -592,6 +704,49 @@ fn cmd_trace_timeline(args: &Args, kind_name: &str) -> Result<()> {
             (*ts - t0) as f64 / 1000.0,
             "  ".repeat(depth(*span_id)),
             if depth(*span_id) == 0 { "•" } else { "└" },
+        );
+    }
+    Ok(())
+}
+
+/// `hpcorc audit --socket PATH [--since SEQ] [--kind KIND] [--json]`:
+/// query the daemon's mutating-request audit trail (the `obs.Audit`
+/// red-box service). `--since` is an exclusive sequence cursor —
+/// re-running with the last printed SEQ yields only new records.
+pub fn cmd_audit(args: &mut Args) -> Result<()> {
+    let sock = args.req_flag("socket")?;
+    let client = RedboxClient::connect(sock)?;
+    let since: u64 = args.num("since", 0)?;
+    let mut body = Value::map().with("since", since);
+    if let Some(kind) = args.flag("kind") {
+        body.insert("kind", resolve_kind(kind));
+    }
+    let out = client.call("obs.Audit/Query", body)?;
+    let records = out
+        .get("records")
+        .and_then(Value::as_seq)
+        .map(<[Value]>::to_vec)
+        .unwrap_or_default();
+    if args.bool("json") {
+        println!("{}", crate::encoding::json::to_string_pretty(&Value::Seq(records)));
+        return Ok(());
+    }
+    println!(
+        "{:>5} {:<13} {:<14} {:<26} {:<26} {:<10} {:>9}  TRACE",
+        "SEQ", "VERB", "KIND", "NAME", "ACTOR", "OUTCOME", "LATENCY"
+    );
+    for r in &records {
+        let lat_us = r.opt_int("latencyNs").unwrap_or(0) as f64 / 1000.0;
+        println!(
+            "{:>5} {:<13} {:<14} {:<26} {:<26} {:<10} {:>7.1}us  {}",
+            r.opt_int("seq").unwrap_or(0),
+            r.opt_str("verb").unwrap_or("?"),
+            r.opt_str("kind").unwrap_or("?"),
+            r.opt_str("name").unwrap_or("?"),
+            r.opt_str("actor").unwrap_or("?"),
+            r.opt_str("outcome").unwrap_or("?"),
+            lat_us,
+            r.opt_str("trace").unwrap_or("-"),
         );
     }
     Ok(())

@@ -1,13 +1,64 @@
-//! Process-wide metrics registry: counters, gauges, latency histograms.
+//! Process-wide metrics registry: counters, gauges, latency histograms —
+//! organized as **labelled families** (PR 8).
 //!
 //! Every daemon records into a shared [`Metrics`] handle; the CLI's
 //! `hpcorc metrics` and the bench harness read snapshots. Lock granularity
 //! is per-metric-map; hot-path increments are atomics.
+//!
+//! A *family* is a metric name (`kube.api.create`); a *series* is one
+//! (family, label set) pair. Series are stored under one canonical key
+//! per label set ([`canonical_key`]: `family{k="v",...}` with pairs
+//! sorted by key), so registry iteration — and therefore every snapshot
+//! and the Prometheus exposition built on it — is deterministic.
+//! [`Metrics::counter_value`] sums a whole family across its label sets,
+//! which keeps pre-PR-8 call sites (`counter_value("kube.api.list")`)
+//! correct after their write paths gained labels.
 
 use crate::util::Hist;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Canonical registry key for one series: the bare family name when the
+/// label set is empty, otherwise `family{k="v",...}` with pairs sorted
+/// by key and values escaped Prometheus-style (`\\` and `\"`). One label
+/// set has exactly one rendering, so it doubles as the exposition form.
+pub fn canonical_key(family: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return family.to_string();
+    }
+    let mut pairs: Vec<(&str, &str)> = labels.to_vec();
+    pairs.sort();
+    let mut out = String::with_capacity(family.len() + 16 * pairs.len());
+    out.push_str(family);
+    out.push('{');
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                _ => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Split a canonical key into `(family, label-pair rendering)` —
+/// `None` labels for a bare series.
+pub fn split_key(key: &str) -> (&str, Option<&str>) {
+    match key.split_once('{') {
+        Some((family, rest)) => (family, Some(rest.strip_suffix('}').unwrap_or(rest))),
+        None => (key, None),
+    }
+}
 
 #[derive(Default)]
 struct Inner {
@@ -33,12 +84,25 @@ impl Metrics {
         m.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone()
     }
 
+    /// Get-or-create one labelled series of a counter family.
+    pub fn counter_with(&self, family: &str, labels: &[(&str, &str)]) -> Arc<AtomicU64> {
+        self.counter(&canonical_key(family, labels))
+    }
+
     pub fn inc(&self, name: &str) {
         self.counter(name).fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn inc_with(&self, family: &str, labels: &[(&str, &str)]) {
+        self.counter_with(family, labels).fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn add(&self, name: &str, v: u64) {
         self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn add_with(&self, family: &str, labels: &[(&str, &str)], v: u64) {
+        self.counter_with(family, labels).fetch_add(v, Ordering::Relaxed);
     }
 
     pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
@@ -46,8 +110,16 @@ impl Metrics {
         m.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicI64::new(0))).clone()
     }
 
+    pub fn gauge_with(&self, family: &str, labels: &[(&str, &str)]) -> Arc<AtomicI64> {
+        self.gauge(&canonical_key(family, labels))
+    }
+
     pub fn set_gauge(&self, name: &str, v: i64) {
         self.gauge(name).store(v, Ordering::Relaxed);
+    }
+
+    pub fn set_gauge_with(&self, family: &str, labels: &[(&str, &str)], v: i64) {
+        self.gauge_with(family, labels).store(v, Ordering::Relaxed);
     }
 
     pub fn hist(&self, name: &str) -> Arc<Mutex<Hist>> {
@@ -55,9 +127,18 @@ impl Metrics {
         m.entry(name.to_string()).or_insert_with(|| Arc::new(Mutex::new(Hist::new()))).clone()
     }
 
+    pub fn hist_with(&self, family: &str, labels: &[(&str, &str)]) -> Arc<Mutex<Hist>> {
+        self.hist(&canonical_key(family, labels))
+    }
+
     /// Record a duration in nanoseconds into a histogram.
     pub fn observe(&self, name: &str, nanos: u64) {
         self.hist(name).lock().unwrap().record(nanos);
+    }
+
+    /// Record into one labelled series of a histogram family.
+    pub fn observe_with(&self, family: &str, labels: &[(&str, &str)], nanos: u64) {
+        self.hist_with(family, labels).lock().unwrap().record(nanos);
     }
 
     /// Time a closure into a histogram.
@@ -118,13 +199,27 @@ impl Metrics {
             .collect()
     }
 
-    /// Read a counter value (0 if absent) — test/bench helper.
-    pub fn counter_value(&self, name: &str) -> u64 {
+    /// Read a counter family's total across all its label sets (0 if
+    /// absent) — test/bench helper. Pre-label call sites keep working:
+    /// `counter_value("kube.api.list")` sums `kube.api.list{gvk="..."}`.
+    pub fn counter_value(&self, family: &str) -> u64 {
         self.inner
             .counters
             .lock()
             .unwrap()
-            .get(name)
+            .iter()
+            .filter(|(k, _)| split_key(k).0 == family)
+            .map(|(_, c)| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Read one exact labelled series of a counter family (0 if absent).
+    pub fn counter_value_with(&self, family: &str, labels: &[(&str, &str)]) -> u64 {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .get(&canonical_key(family, labels))
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
     }
@@ -177,5 +272,51 @@ mod tests {
         let m2 = m.clone();
         m2.inc("x");
         assert_eq!(m.counter_value("x"), 1);
+    }
+
+    #[test]
+    fn canonical_key_sorts_and_escapes() {
+        assert_eq!(canonical_key("f", &[]), "f");
+        assert_eq!(
+            canonical_key("f", &[("z", "2"), ("a", "1")]),
+            r#"f{a="1",z="2"}"#,
+            "label pairs sort by key"
+        );
+        assert_eq!(
+            canonical_key("f", &[("k", r#"a"b\c"#)]),
+            r#"f{k="a\"b\\c"}"#,
+            "values escape quotes and backslashes"
+        );
+        assert_eq!(split_key("f"), ("f", None));
+        assert_eq!(split_key(r#"f{a="1"}"#), ("f", Some(r#"a="1""#)));
+    }
+
+    #[test]
+    fn labelled_families_sum_in_counter_value() {
+        let m = Metrics::new();
+        m.inc_with("kube.api.create", &[("gvk", "pods")]);
+        m.add_with("kube.api.create", &[("gvk", "nodes")], 2);
+        m.inc("kube.api.create"); // bare series of the same family
+        assert_eq!(m.counter_value("kube.api.create"), 4, "family total sums label sets");
+        assert_eq!(m.counter_value_with("kube.api.create", &[("gvk", "pods")]), 1);
+        assert_eq!(m.counter_value_with("kube.api.create", &[("gvk", "ghost")]), 0);
+        // A label set is one series regardless of pair order at the call site.
+        m.inc_with("f", &[("a", "1"), ("b", "2")]);
+        m.inc_with("f", &[("b", "2"), ("a", "1")]);
+        assert_eq!(m.counter_value_with("f", &[("a", "1"), ("b", "2")]), 2);
+        // Family prefix must not leak into counter_value sums.
+        m.inc("kube.api.creates");
+        assert_eq!(m.counter_value("kube.api.create"), 4);
+    }
+
+    #[test]
+    fn labelled_gauges_and_hists() {
+        let m = Metrics::new();
+        m.set_gauge_with("pool.size", &[("pool", "a")], 3);
+        m.set_gauge_with("pool.size", &[("pool", "b")], 5);
+        assert_eq!(m.gauge_with("pool.size", &[("pool", "a")]).load(Ordering::Relaxed), 3);
+        m.observe_with("rpc_ns", &[("method", "kube.Api/Create")], 100);
+        m.observe_with("rpc_ns", &[("method", "kube.Api/Create")], 200);
+        assert_eq!(m.hist_with("rpc_ns", &[("method", "kube.Api/Create")]).lock().unwrap().count(), 2);
     }
 }

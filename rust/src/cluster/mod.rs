@@ -7,6 +7,6 @@ pub mod node;
 pub mod resources;
 
 pub use fs::SharedFs;
-pub use metrics::Metrics;
+pub use metrics::{canonical_key, split_key, Metrics};
 pub use node::{NodeRole, NodeSpec};
 pub use resources::Resources;

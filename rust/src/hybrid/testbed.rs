@@ -64,6 +64,10 @@ pub struct TestbedConfig {
     /// left off. Bootstrap writes (node registration, the operator
     /// deployment) are applies, so recovery does not trip AlreadyExists.
     pub wal_dir: Option<PathBuf>,
+    /// Audit trail file sink (PR 8): when set, every mutating API request
+    /// is additionally appended to this file as one JSON record per line
+    /// (the in-memory ring serves `hpcorc audit` regardless).
+    pub audit_log: Option<PathBuf>,
 }
 
 impl Default for TestbedConfig {
@@ -82,6 +86,7 @@ impl Default for TestbedConfig {
             watch_history_cap: 1 << 16,
             autoscale: None,
             wal_dir: None,
+            audit_log: None,
         }
     }
 }
@@ -158,6 +163,9 @@ pub struct Testbed {
     redbox: RedboxServer,
     socket: PathBuf,
     time_scale: f64,
+    /// True when this testbed attached the process-wide span-log sink
+    /// (WAL runs); `stop()` then detaches it so later boots start clean.
+    owns_span_sink: bool,
 }
 
 impl Testbed {
@@ -315,9 +323,23 @@ impl Testbed {
         // race window for the scheduler.
         api.register_mutating_hook(crate::kueue::admission_mutating_hook());
         redbox.register("kube.Api", api.rpc_service());
-        // Telemetry plane (PR 7): metrics snapshots + span export over the
-        // same socket (`obs.Metrics` / `obs.Spans`).
-        crate::obs::register(&redbox, metrics.clone());
+        // Telemetry plane (PR 7/8): metrics snapshots, span export and the
+        // audit trail over the same socket (`obs.Metrics` / `obs.Spans` /
+        // `obs.Audit`).
+        crate::obs::register(&redbox, metrics.clone(), api.audit_log().clone());
+        if let Some(path) = &config.audit_log {
+            api.audit_log().attach_file_sink(path)?;
+        }
+        // Durable spans (PR 8): completed spans persist next to the WAL so
+        // `hpcorc trace KIND/NAME` still reconstructs a timeline after a
+        // restart. Replay BEFORE attaching the sink — the replay pushes
+        // straight into the ring and must not re-append to the log.
+        let owns_span_sink = config.wal_dir.is_some();
+        if let Some(dir) = &config.wal_dir {
+            let span_log = dir.join("spans.jsonl");
+            crate::obs::replay_span_log(&span_log);
+            crate::obs::attach_span_log(&span_log)?;
+        }
         // Every in-process component talks through the transport-agnostic
         // client handle — the same trait the remote CLI uses — and reads
         // through the shared informer caches (PR 4): one watch stream per
@@ -331,6 +353,19 @@ impl Testbed {
         // someone applies ClusterQueue/LocalQueue objects — label-less
         // workloads bypass it entirely.
         crate::kueue::start_admission(&informers, metrics.clone(), shutdown.clone());
+        // Event TTL GC (PR 8): the coalescing recorder bounds the Event
+        // object count per (object, reason); this ticker bounds their age.
+        {
+            let gc_client = api.client();
+            let gc_metrics = metrics.clone();
+            let sd = shutdown.clone();
+            crate::rt::spawn_named("event-gc", move || {
+                let _actor = crate::obs::push_actor("event-gc");
+                while !sd.wait_timeout(Duration::from_millis(250)) {
+                    let _ = crate::kube::gc_expired(gc_client.as_ref(), &gc_metrics, 3600.0);
+                }
+            });
+        }
         // Workers + the login node (which is also a kube worker, Fig. 1).
         let mut worker_names: Vec<String> =
             (0..config.kube_workers).map(|i| format!("kw{i:02}")).collect();
@@ -428,6 +463,7 @@ impl Testbed {
             redbox,
             socket,
             time_scale: config.time_scale,
+            owns_span_sink,
         })
     }
 
@@ -505,6 +541,11 @@ impl Testbed {
     pub fn stop(mut self) {
         self.shutdown.trigger();
         self.redbox.stop();
+        if self.owns_span_sink {
+            // Release the span-log sink this testbed attached (WAL runs)
+            // so a later boot on a different dir starts clean.
+            crate::obs::set_span_sink(None);
+        }
     }
 }
 

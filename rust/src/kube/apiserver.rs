@@ -31,6 +31,7 @@ use super::client::{ApiClient, ListOptions, ObjectList};
 use super::store::{Store, WatchEvent};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
+use crate::obs::AuditLog;
 use crate::redbox::{RedboxClient, Reply, Service, StreamMsg, END_COMPLETE, END_GONE};
 use crate::rt;
 use crate::util::{Error, Result};
@@ -38,7 +39,7 @@ use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Bounded attempts for retry-on-conflict loops (`update_status`, merge
 /// patch) — shared by both transports so their failure behavior matches.
@@ -102,13 +103,19 @@ pub struct ApiServer {
     store: Store,
     metrics: Metrics,
     hooks: Arc<Mutex<Vec<MutatingHook>>>,
+    audit: AuditLog,
 }
 
 impl ApiServer {
     pub fn new(metrics: Metrics) -> ApiServer {
         let mut store = Store::new();
         store.set_metrics(metrics.clone());
-        ApiServer { store, metrics, hooks: Arc::new(Mutex::new(Vec::new())) }
+        ApiServer {
+            store,
+            metrics,
+            hooks: Arc::new(Mutex::new(Vec::new())),
+            audit: AuditLog::new(),
+        }
     }
 
     /// An API server whose store retains `cap` watch events (see
@@ -118,7 +125,12 @@ impl ApiServer {
     pub fn with_history_cap(metrics: Metrics, cap: usize) -> ApiServer {
         let mut store = Store::with_history_cap(cap);
         store.set_metrics(metrics.clone());
-        ApiServer { store, metrics, hooks: Arc::new(Mutex::new(Vec::new())) }
+        ApiServer {
+            store,
+            metrics,
+            hooks: Arc::new(Mutex::new(Vec::new())),
+            audit: AuditLog::new(),
+        }
     }
 
     /// An API server over a durability backend (PR 6): every commit is
@@ -135,7 +147,19 @@ impl ApiServer {
     ) -> Result<ApiServer> {
         let mut store = Store::with_backend(backend, cap)?;
         store.set_metrics(metrics.clone());
-        Ok(ApiServer { store, metrics, hooks: Arc::new(Mutex::new(Vec::new())) })
+        Ok(ApiServer {
+            store,
+            metrics,
+            hooks: Arc::new(Mutex::new(Vec::new())),
+            audit: AuditLog::new(),
+        })
+    }
+
+    /// The server's audit trail (PR 8): every mutating verb appends one
+    /// record; register it remotely via `obs::register(&redbox, metrics,
+    /// api.audit_log().clone())`.
+    pub fn audit_log(&self) -> &AuditLog {
+        &self.audit
     }
 
     /// Register a mutating-admission hook (applied in registration order
@@ -186,24 +210,62 @@ impl ApiServer {
         }
     }
 
+    /// The GVK label value for a kind: the registered plural
+    /// (`Pod` → `pods`), or the lowercased kind for unregistered CRDs —
+    /// labels stay low-cardinality either way.
+    fn gvk_label(kind: &str) -> String {
+        super::scheme::default_scheme()
+            .resolve(kind)
+            .map(|k| k.plural.clone())
+            .unwrap_or_else(|| kind.to_ascii_lowercase())
+    }
+
+    /// Audit middleware (PR 8): every mutating verb funnels through here.
+    /// Runs the body, then appends one [`crate::obs::AuditRecord`] —
+    /// verb, object, thread-local actor, active trace id, outcome,
+    /// latency — to the server's audit trail. Verb counters stay at the
+    /// call sites (their success-vs-entry semantics predate the audit).
+    fn audited<T>(
+        &self,
+        verb: &str,
+        kind: &str,
+        name: &str,
+        body: impl FnOnce() -> Result<T>,
+    ) -> Result<T> {
+        let start = Instant::now();
+        let res = body();
+        let outcome = match &res {
+            Ok(_) => "ok".to_string(),
+            Err(e) => e.to_string(),
+        };
+        let trace = crate::obs::current().map(|ctx| format!("{:016x}", ctx.trace_id));
+        self.audit.record(verb, kind, name, trace, outcome, start.elapsed().as_nanos() as u64);
+        self.metrics.inc("kube.api.audit_records");
+        res
+    }
+
     pub fn create(&self, mut obj: KubeObject) -> Result<KubeObject> {
-        self.metrics.inc("kube.api.create");
+        self.metrics.inc_with("kube.api.create", &[("gvk", &Self::gvk_label(&obj.kind))]);
         let _span = crate::obs::span("apiserver", &format!("create {}/{}", obj.kind, obj.meta.name));
-        self.admit_mutate(&mut obj);
-        self.stamp_observability(&mut obj);
-        self.store.create(obj)
+        let (kind, name) = (obj.kind.clone(), obj.meta.name.clone());
+        self.audited("create", &kind, &name, move || {
+            self.admit_mutate(&mut obj);
+            self.stamp_observability(&mut obj);
+            self.store.create(obj)
+        })
     }
 
     pub fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        self.metrics.inc("kube.api.get");
+        self.metrics.inc_with("kube.api.get", &[("gvk", &Self::gvk_label(kind))]);
         self.store.get(kind, name)
     }
 
     /// Full update (spec + status) with optimistic concurrency.
     pub fn update(&self, obj: KubeObject) -> Result<KubeObject> {
-        self.metrics.inc("kube.api.update");
+        self.metrics.inc_with("kube.api.update", &[("gvk", &Self::gvk_label(&obj.kind))]);
         let _span = crate::obs::span("apiserver", &format!("update {}/{}", obj.kind, obj.meta.name));
-        self.store.update(obj)
+        let (kind, name) = (obj.kind.clone(), obj.meta.name.clone());
+        self.audited("update", &kind, &name, move || self.store.update(obj))
     }
 
     /// Bounded retry-on-conflict commit loop shared by `update_status` and
@@ -219,19 +281,22 @@ impl ApiServer {
         mutate: impl Fn(&mut KubeObject),
     ) -> Result<KubeObject> {
         let _span = crate::obs::span("apiserver", &format!("{metric} {kind}/{name}"));
-        for _ in 0..MAX_CONFLICT_RETRIES {
-            let mut obj = self.store.get(kind, name)?;
-            mutate(&mut obj);
-            match self.store.update(obj) {
-                Ok(o) => {
-                    self.metrics.inc(metric);
-                    return Ok(o);
+        let verb = metric.strip_prefix("kube.api.").unwrap_or(metric);
+        self.audited(verb, kind, name, || {
+            for _ in 0..MAX_CONFLICT_RETRIES {
+                let mut obj = self.store.get(kind, name)?;
+                mutate(&mut obj);
+                match self.store.update(obj) {
+                    Ok(o) => {
+                        self.metrics.inc_with(metric, &[("gvk", &Self::gvk_label(kind))]);
+                        return Ok(o);
+                    }
+                    Err(e) if e.is_conflict() => continue,
+                    Err(e) => return Err(e),
                 }
-                Err(e) if e.is_conflict() => continue,
-                Err(e) => return Err(e),
             }
-        }
-        Err(Error::conflict_exhausted(kind, name, MAX_CONFLICT_RETRIES))
+            Err(Error::conflict_exhausted(kind, name, MAX_CONFLICT_RETRIES))
+        })
     }
 
     /// Status-subresource style update with retry-on-conflict (see
@@ -258,53 +323,55 @@ impl ApiServer {
     /// parents. A visited set makes ownership cycles terminate instead of
     /// recursing forever.
     pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        self.metrics.inc("kube.api.delete");
+        self.metrics.inc_with("kube.api.delete", &[("gvk", &Self::gvk_label(kind))]);
         let _span = crate::obs::span("apiserver", &format!("delete {kind}/{name}"));
-        // The root must exist before the cascade walks anything: deleting a
-        // nonexistent name must be a NotFound no-op, not a purge of objects
-        // that happen to name it as owner.
-        self.store.get(kind, name)?;
-        let all = self.store.list_all();
-        let root = (kind.to_string(), name.to_string());
-        let mut visited: HashSet<(String, String)> = HashSet::new();
-        visited.insert(root.clone());
-        let mut order: Vec<(String, String)> = Vec::new();
-        let mut frontier = vec![root];
-        while let Some((pk, pn)) = frontier.pop() {
-            for o in &all {
-                let owned =
-                    o.meta.owner.as_ref().map(|(k, n)| *k == pk && *n == pn).unwrap_or(false);
-                if owned {
-                    let key = (o.kind.clone(), o.meta.name.clone());
-                    if visited.insert(key.clone()) {
-                        order.push(key.clone());
-                        frontier.push(key);
+        self.audited("delete", kind, name, || {
+            // The root must exist before the cascade walks anything: deleting a
+            // nonexistent name must be a NotFound no-op, not a purge of objects
+            // that happen to name it as owner.
+            self.store.get(kind, name)?;
+            let all = self.store.list_all();
+            let root = (kind.to_string(), name.to_string());
+            let mut visited: HashSet<(String, String)> = HashSet::new();
+            visited.insert(root.clone());
+            let mut order: Vec<(String, String)> = Vec::new();
+            let mut frontier = vec![root];
+            while let Some((pk, pn)) = frontier.pop() {
+                for o in &all {
+                    let owned =
+                        o.meta.owner.as_ref().map(|(k, n)| *k == pk && *n == pn).unwrap_or(false);
+                    if owned {
+                        let key = (o.kind.clone(), o.meta.name.clone());
+                        if visited.insert(key.clone()) {
+                            order.push(key.clone());
+                            frontier.push(key);
+                        }
                     }
                 }
             }
-        }
-        // Discovery order puts ancestors first; delete in reverse so every
-        // child is gone before its owner.
-        for (k, n) in order.iter().rev() {
-            if self.store.delete(k, n).is_ok() {
-                self.metrics.inc("kube.api.cascade_deleted");
+            // Discovery order puts ancestors first; delete in reverse so every
+            // child is gone before its owner.
+            for (k, n) in order.iter().rev() {
+                if self.store.delete(k, n).is_ok() {
+                    self.metrics.inc("kube.api.cascade_deleted");
+                }
             }
-        }
-        self.store.delete(kind, name)
+            self.store.delete(kind, name)
+        })
     }
 
     /// List objects of a kind filtered by a label selector (all pairs must
     /// match). Shorthand for [`ApiServer::list_opts`] kept for in-process
     /// callers and tests.
     pub fn list(&self, kind: &str, selector: &[(String, String)]) -> Vec<KubeObject> {
-        self.metrics.inc("kube.api.list");
+        self.metrics.inc_with("kube.api.list", &[("gvk", &Self::gvk_label(kind))]);
         self.store.list(kind, selector)
     }
 
     /// Full list API: label + field selectors, a freshness floor, and
     /// name-cursor paging (`limit`/`continue`).
     pub fn list_opts(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
-        self.metrics.inc("kube.api.list");
+        self.metrics.inc_with("kube.api.list", &[("gvk", &Self::gvk_label(kind))]);
         // Version snapshot BEFORE listing: a write racing the list may then
         // show up both in items and in a subsequent watch replay from this
         // version — duplicates are fine (consumers are level-triggered),
@@ -425,8 +492,11 @@ impl ApiServer {
     /// The create arm runs the mutating-admission hooks — an applied
     /// manifest is as much an object birth as a direct create.
     pub fn apply(&self, mut obj: KubeObject) -> Result<KubeObject> {
+        self.metrics.inc_with("kube.api.apply", &[("gvk", &Self::gvk_label(&obj.kind))]);
         let _span = crate::obs::span("apiserver", &format!("apply {}/{}", obj.kind, obj.meta.name));
-        match self.store.get(&obj.kind, &obj.meta.name) {
+        let (kind, name) = (obj.kind.clone(), obj.meta.name.clone());
+        self.audited("apply", &kind, &name, move || match self.store.get(&obj.kind, &obj.meta.name)
+        {
             Ok(existing) => {
                 let mut merged = existing.clone();
                 merged.spec = obj.spec;
@@ -451,7 +521,7 @@ impl ApiServer {
                 self.store.create(obj)
             }
             Err(e) => Err(e),
-        }
+        })
     }
 
     /// Expose this API over a red-box service registry name `kube.Api`.
@@ -987,6 +1057,49 @@ mod tests {
         let mut o = KubeObject::new(kind, name, Value::map());
         o.meta.owner = Some((owner.0.to_string(), owner.1.to_string()));
         o
+    }
+
+    #[test]
+    fn mutating_verbs_audit_with_actor_trace_and_outcome() {
+        let _serial = crate::obs::trace::test_serial();
+        crate::obs::set_enabled(true);
+        let a = api();
+        let trace_hex;
+        {
+            let _actor = crate::obs::push_actor("kube-test");
+            let g = crate::obs::span("test", "audited create");
+            trace_hex = format!("{:016x}", g.context().unwrap().trace_id);
+            a.create(pod("p")).unwrap();
+        }
+        a.update_status(KIND_POD, "p", |o| {
+            o.status.insert("phase", "Running");
+        })
+        .unwrap();
+        // Failed mutation still audits, with the error as outcome.
+        assert!(a.delete(KIND_POD, "ghost").is_err());
+
+        let records = a.audit_log().snapshot();
+        assert_eq!(records.len(), 3, "create + update_status + failed delete");
+        assert_eq!(records[0].verb, "create");
+        assert_eq!(records[0].kind, KIND_POD);
+        assert_eq!(records[0].name, "p");
+        assert_eq!(records[0].actor, "kube-test");
+        assert_eq!(records[0].trace.as_deref(), Some(trace_hex.as_str()));
+        assert_eq!(records[0].outcome, "ok");
+        assert_eq!(records[1].verb, "update_status");
+        assert_eq!(
+            records[1].actor,
+            crate::obs::UNATTRIBUTED,
+            "no pinned actor -> unattributed"
+        );
+        assert_eq!(records[2].verb, "delete");
+        assert!(records[2].outcome.contains("not found"), "{}", records[2].outcome);
+        // Reads never audit.
+        a.get(KIND_POD, "p").unwrap();
+        assert_eq!(a.audit_log().last_seq(), 3);
+        // Verb counters carry the GVK label (and still sum per family).
+        assert_eq!(a.metrics.counter_value_with("kube.api.create", &[("gvk", "pods")]), 1);
+        assert_eq!(a.metrics.counter_value("kube.api.create"), 1);
     }
 
     #[test]

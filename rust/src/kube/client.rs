@@ -272,6 +272,69 @@ pub trait ApiClient: Send + Sync {
     fn server_time_s(&self) -> Result<f64>;
 }
 
+/// A client decorator that pins a fixed audit actor around every call
+/// (PR 8): `ActorClient::wrap(client, "kube-scheduler")` makes every
+/// write through the handle audit as that component, on whatever thread
+/// it runs — the belt-and-braces alternative to pinning
+/// [`crate::obs::push_actor`] at the top of each control cycle.
+pub struct ActorClient {
+    inner: Arc<dyn ApiClient>,
+    actor: String,
+}
+
+impl ActorClient {
+    pub fn wrap(inner: Arc<dyn ApiClient>, actor: &str) -> Arc<dyn ApiClient> {
+        Arc::new(ActorClient { inner, actor: actor.to_string() })
+    }
+}
+
+impl ApiClient for ActorClient {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.create(obj)
+    }
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.get(kind, name)
+    }
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.update(obj)
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.update_status(kind, name, f)
+    }
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.patch_merge(kind, name, patch)
+    }
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.delete(kind, name)
+    }
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.apply(obj)
+    }
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.list(kind, opts)
+    }
+    fn watch(&self, kind: Option<&str>, from_version: u64) -> Result<Receiver<WatchEvent>> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.watch(kind, from_version)
+    }
+    fn server_time_s(&self) -> Result<f64> {
+        self.inner.server_time_s()
+    }
+}
+
 /// A typed view over one (or a family of) object kind(s). Implementors
 /// decode the dynamic tree into a struct; `Api<K>` uses this to give
 /// callers typed results.
@@ -444,6 +507,22 @@ mod tests {
             .delta_since(42);
         assert_eq!(ListOptions::from_value(&opts.to_value()), opts);
         assert_eq!(ListOptions::from_value(&Value::map()), ListOptions::all());
+    }
+
+    #[test]
+    fn actor_client_pins_the_audit_actor() {
+        use crate::cluster::Metrics;
+        use crate::kube::ApiServer;
+        let server = ApiServer::new(Metrics::new());
+        let wrapped = ActorClient::wrap(server.client(), "kube-scheduler");
+        wrapped
+            .create(PodView::build("p", "img.sif", crate::cluster::Resources::ZERO, &[]))
+            .unwrap();
+        let records = server.audit_log().snapshot();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].actor, "kube-scheduler");
+        // The pin is per-call: this thread's actor is untouched after.
+        assert_eq!(crate::obs::current_actor(), None);
     }
 
     #[test]

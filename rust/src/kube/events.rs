@@ -1,0 +1,442 @@
+//! Cluster Events (PR 8): the `events.k8s.io/v1`-shaped `Event` kind and
+//! the write-coalescing [`EventRecorder`] components emit through.
+//!
+//! Events are plain API objects — they ride the same store / WAL / watch
+//! machinery as Pods — so `kubectl get events` and `kubectl describe`
+//! need no new transport. Shape (mirroring `events.k8s.io/v1`):
+//!
+//! - `spec.regarding.{kind,name}` — the object the event is about
+//! - `spec.type` — `Normal` or `Warning`
+//! - `spec.reason` — CamelCase machine token (`Scheduled`, `Killing`, ...)
+//! - `spec.note` — human message
+//! - `spec.reportingController` — the emitting component
+//! - `status.{count,firstSeen,lastSeen}` — dedup bookkeeping (server
+//!   seconds, like every AGE column)
+//!
+//! Each event also carries the regarding object's `hpcorc.io/trace`
+//! annotation, so `kubectl describe` can interleave events with the
+//! causal span timeline of the same trace.
+//!
+//! **Coalescing**: a second `(object, reason)` emission within the
+//! recorder's window bumps `status.count` + `lastSeen` on the existing
+//! event instead of minting a new object — the k8s events-spam defence.
+//! **GC**: [`gc_expired`] reaps events whose `lastSeen` is older than a
+//! TTL; the testbed runs it on a ticker.
+
+use super::api::KubeObject;
+use super::client::{ApiClient, ListOptions, ResourceView};
+use crate::cluster::Metrics;
+use crate::encoding::Value;
+use crate::obs::TRACE_ANNOTATION;
+use crate::util::{ApiError, Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub const KIND_EVENT: &str = "Event";
+
+/// The apiVersion events are served under (k8s `events.k8s.io/v1`).
+pub const EVENTS_API_VERSION: &str = "events.k8s.io/v1";
+
+/// Routine lifecycle event (`spec.type`).
+pub const EVENT_NORMAL: &str = "Normal";
+/// Something went wrong (`spec.type`).
+pub const EVENT_WARNING: &str = "Warning";
+
+/// Default coalescing window: repeats of `(object, reason)` within this
+/// many server-seconds fold into a count bump.
+pub const DEFAULT_COALESCE_WINDOW_S: f64 = 300.0;
+
+/// Typed view over an Event object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventView {
+    pub name: String,
+    pub regarding_kind: String,
+    pub regarding_name: String,
+    /// `Normal` or `Warning`.
+    pub etype: String,
+    pub reason: String,
+    pub note: String,
+    pub reporting_controller: String,
+    pub count: u64,
+    pub first_seen_s: f64,
+    pub last_seen_s: f64,
+    /// The `hpcorc.io/trace` annotation (`<trace_id>-<span_id>` hex),
+    /// copied from the regarding object at emission time.
+    pub trace: Option<String>,
+}
+
+impl EventView {
+    pub fn from_object(o: &KubeObject) -> Result<EventView> {
+        if o.kind != KIND_EVENT {
+            return Err(Error::parse(format!("expected Event, got {}", o.kind)));
+        }
+        let regarding = o.spec.req("regarding")?;
+        Ok(EventView {
+            name: o.meta.name.clone(),
+            regarding_kind: regarding.req_str("kind")?.to_string(),
+            regarding_name: regarding.req_str("name")?.to_string(),
+            etype: o.spec.opt_str("type").unwrap_or(EVENT_NORMAL).to_string(),
+            reason: o.spec.opt_str("reason").unwrap_or("").to_string(),
+            note: o.spec.opt_str("note").unwrap_or("").to_string(),
+            reporting_controller: o
+                .spec
+                .opt_str("reportingController")
+                .unwrap_or("")
+                .to_string(),
+            count: o.status.opt_int("count").unwrap_or(1).max(1) as u64,
+            first_seen_s: o.status.get("firstSeen").and_then(Value::as_f64).unwrap_or(0.0),
+            last_seen_s: o.status.get("lastSeen").and_then(Value::as_f64).unwrap_or(0.0),
+            trace: o.meta.annotation(TRACE_ANNOTATION).map(String::from),
+        })
+    }
+
+    /// The `<trace_id>` half of the carried annotation.
+    pub fn trace_id(&self) -> Option<&str> {
+        self.trace.as_deref().map(|t| t.split('-').next().unwrap_or(t))
+    }
+
+    /// Build an Event object (count=1, firstSeen=lastSeen=`now_s`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        name: &str,
+        regarding_kind: &str,
+        regarding_name: &str,
+        etype: &str,
+        reason: &str,
+        note: &str,
+        component: &str,
+        now_s: f64,
+    ) -> KubeObject {
+        let spec = Value::map()
+            .with(
+                "regarding",
+                Value::map().with("kind", regarding_kind).with("name", regarding_name),
+            )
+            .with("type", etype)
+            .with("reason", reason)
+            .with("note", note)
+            .with("reportingController", component);
+        let mut o = KubeObject::new(KIND_EVENT, name, spec);
+        o.api_version = EVENTS_API_VERSION.into();
+        o.status = Value::map()
+            .with("count", 1u64)
+            .with("firstSeen", now_s)
+            .with("lastSeen", now_s);
+        o
+    }
+}
+
+impl ResourceView for EventView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_EVENT]
+    }
+    fn from_object(obj: &KubeObject) -> Result<EventView> {
+        EventView::from_object(obj)
+    }
+}
+
+/// Per-component event emitter with write coalescing. Cheap to clone
+/// (clones share the dedup map); every control loop owns one:
+///
+/// ```ignore
+/// let rec = EventRecorder::new("kube-scheduler", metrics.clone());
+/// rec.event(&api, &pod, EVENT_NORMAL, "Scheduled", "bound to w1")?;
+/// ```
+#[derive(Clone)]
+pub struct EventRecorder {
+    component: String,
+    window_s: f64,
+    metrics: Metrics,
+    inner: Arc<RecorderInner>,
+}
+
+struct RecorderInner {
+    /// (regarding kind, regarding name, reason) → (event object name,
+    /// window start in server seconds).
+    recent: Mutex<HashMap<(String, String, String), (String, f64)>>,
+    seq: AtomicU64,
+}
+
+impl EventRecorder {
+    pub fn new(component: &str, metrics: Metrics) -> EventRecorder {
+        EventRecorder {
+            component: component.to_string(),
+            window_s: DEFAULT_COALESCE_WINDOW_S,
+            metrics,
+            inner: Arc::new(RecorderInner {
+                recent: Mutex::new(HashMap::new()),
+                seq: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Override the coalescing window (tests use tiny windows).
+    pub fn with_window_s(mut self, window_s: f64) -> EventRecorder {
+        self.window_s = window_s;
+        self
+    }
+
+    pub fn component(&self) -> &str {
+        &self.component
+    }
+
+    /// Emit an event about a live object; the object's `hpcorc.io/trace`
+    /// annotation is carried onto the event.
+    pub fn event(
+        &self,
+        api: &dyn ApiClient,
+        regarding: &KubeObject,
+        etype: &str,
+        reason: &str,
+        note: &str,
+    ) -> Result<()> {
+        self.event_ref(
+            api,
+            &regarding.kind,
+            regarding.name(),
+            regarding.meta.annotation(TRACE_ANNOTATION),
+            etype,
+            reason,
+            note,
+        )
+    }
+
+    /// Emit an event by reference — for objects already deleted (the
+    /// kubelet's `Reaped` fires after the pod is gone) or not at hand.
+    /// `trace` is the regarding object's `hpcorc.io/trace` annotation
+    /// value, when known.
+    #[allow(clippy::too_many_arguments)]
+    pub fn event_ref(
+        &self,
+        api: &dyn ApiClient,
+        regarding_kind: &str,
+        regarding_name: &str,
+        trace: Option<&str>,
+        etype: &str,
+        reason: &str,
+        note: &str,
+    ) -> Result<()> {
+        let now = api.server_time_s()?;
+        let key =
+            (regarding_kind.to_string(), regarding_name.to_string(), reason.to_string());
+
+        // Within the window? Bump the existing event instead of creating.
+        let existing = {
+            let recent = self.inner.recent.lock().unwrap();
+            recent
+                .get(&key)
+                .filter(|(_, start)| now - start < self.window_s)
+                .map(|(n, _)| n.clone())
+        };
+        if let Some(ev_name) = existing {
+            match self.bump(api, &ev_name, note, now) {
+                Ok(()) => {
+                    self.metrics.inc_with("kube.events.coalesced", &[("reason", reason)]);
+                    return Ok(());
+                }
+                // GC (or a user) deleted it under us: mint a fresh one.
+                Err(e) if e.is_not_found() => {}
+                Err(e) => return Err(e),
+            }
+        }
+
+        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let ev_name = format!(
+            "{}.{}.{}.{}",
+            regarding_name.to_ascii_lowercase(),
+            reason.to_ascii_lowercase(),
+            self.component,
+            seq
+        );
+        let mut ev = EventView::build(
+            &ev_name,
+            regarding_kind,
+            regarding_name,
+            etype,
+            reason,
+            note,
+            &self.component,
+            now,
+        );
+        if let Some(t) = trace {
+            ev.meta.set_annotation(TRACE_ANNOTATION, t);
+        }
+        match api.create(ev) {
+            Ok(_) => {}
+            // Another clone of this recorder raced us to the same name.
+            Err(Error::Api(ApiError::AlreadyExists { .. })) => {
+                self.bump(api, &ev_name, note, now)?;
+            }
+            Err(e) => return Err(e),
+        }
+        self.metrics.inc_with("kube.events.emitted", &[("reason", reason)]);
+
+        let mut recent = self.inner.recent.lock().unwrap();
+        recent.insert(key, (ev_name, now));
+        // Drop stale entries so long-lived recorders stay bounded.
+        let window = self.window_s;
+        recent.retain(|_, (_, start)| now - *start < window);
+        Ok(())
+    }
+
+    fn bump(&self, api: &dyn ApiClient, ev_name: &str, note: &str, now: f64) -> Result<()> {
+        let note = note.to_string();
+        api.update_status(KIND_EVENT, ev_name, &move |o| {
+            let count = o.status.opt_int("count").unwrap_or(1).max(1) as u64;
+            o.status.insert("count", count + 1);
+            o.status.insert("lastSeen", now);
+            o.spec.insert("note", note.clone());
+        })
+        .map(|_| ())
+    }
+}
+
+/// Delete events whose `lastSeen` is older than `ttl_s` server-seconds;
+/// returns how many were reaped. The testbed ticks this periodically.
+pub fn gc_expired(api: &dyn ApiClient, metrics: &Metrics, ttl_s: f64) -> Result<usize> {
+    let now = api.server_time_s()?;
+    let list = api.list(KIND_EVENT, &ListOptions::all())?;
+    let mut reaped = 0;
+    for o in &list.items {
+        let last = match EventView::from_object(o) {
+            Ok(v) => v.last_seen_s,
+            Err(_) => continue,
+        };
+        if now - last > ttl_s {
+            match api.delete(KIND_EVENT, o.name()) {
+                Ok(_) => reaped += 1,
+                // Raced another reaper: fine.
+                Err(e) if e.is_not_found() => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    if reaped > 0 {
+        metrics.add("kube.events.gc", reaped as u64);
+    }
+    Ok(reaped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resources;
+    use crate::kube::api::PodView;
+    use crate::kube::ApiServer;
+
+    fn client() -> Arc<dyn ApiClient> {
+        Arc::new(ApiServer::new(Metrics::new()))
+    }
+
+    #[test]
+    fn event_view_roundtrip() {
+        let o = EventView::build(
+            "p1.scheduled.sched.0",
+            "Pod",
+            "p1",
+            EVENT_NORMAL,
+            "Scheduled",
+            "bound to w1",
+            "kube-scheduler",
+            12.5,
+        );
+        assert_eq!(o.api_version, EVENTS_API_VERSION);
+        let v = EventView::from_object(&o).unwrap();
+        assert_eq!(v.regarding_kind, "Pod");
+        assert_eq!(v.regarding_name, "p1");
+        assert_eq!(v.etype, EVENT_NORMAL);
+        assert_eq!(v.reason, "Scheduled");
+        assert_eq!(v.note, "bound to w1");
+        assert_eq!(v.reporting_controller, "kube-scheduler");
+        assert_eq!(v.count, 1);
+        assert_eq!(v.first_seen_s, 12.5);
+        assert_eq!(v.last_seen_s, 12.5);
+        assert_eq!(v.trace, None);
+        assert!(EventView::from_object(&PodView::build(
+            "p",
+            "i.sif",
+            Resources::ZERO,
+            &[]
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn recorder_emits_and_coalesces() {
+        let api = client();
+        let metrics = Metrics::new();
+        let rec = EventRecorder::new("tester", metrics.clone());
+        let pod = api.create(PodView::build("p1", "i.sif", Resources::ZERO, &[])).unwrap();
+
+        rec.event(&api, &pod, EVENT_WARNING, "FailedScheduling", "no fit").unwrap();
+        rec.event(&api, &pod, EVENT_WARNING, "FailedScheduling", "still no fit").unwrap();
+        rec.event(&api, &pod, EVENT_NORMAL, "Scheduled", "bound").unwrap();
+
+        let events = api.list(KIND_EVENT, &ListOptions::all()).unwrap().items;
+        assert_eq!(events.len(), 2, "repeat (object, reason) coalesced");
+        let failed = events
+            .iter()
+            .map(|o| EventView::from_object(o).unwrap())
+            .find(|v| v.reason == "FailedScheduling")
+            .unwrap();
+        assert_eq!(failed.count, 2);
+        assert_eq!(failed.note, "still no fit", "note follows the latest emission");
+        assert!(failed.last_seen_s >= failed.first_seen_s);
+        assert_eq!(
+            metrics.counter_value_with("kube.events.emitted", &[("reason", "FailedScheduling")]),
+            1
+        );
+        assert_eq!(
+            metrics.counter_value_with("kube.events.coalesced", &[("reason", "FailedScheduling")]),
+            1
+        );
+    }
+
+    #[test]
+    fn events_carry_the_regarding_trace() {
+        let api = client();
+        let rec = EventRecorder::new("tester", Metrics::new());
+        let mut pod = PodView::build("p2", "i.sif", Resources::ZERO, &[]);
+        pod.meta.set_annotation(TRACE_ANNOTATION, "00000000deadbeef-0000000000000001");
+        let pod = api.create(pod).unwrap();
+        rec.event(&api, &pod, EVENT_NORMAL, "Started", "running").unwrap();
+
+        let events = api.list(KIND_EVENT, &ListOptions::all()).unwrap().items;
+        let v = EventView::from_object(&events[0]).unwrap();
+        assert_eq!(
+            v.trace.as_deref(),
+            pod.meta.annotation(TRACE_ANNOTATION),
+            "event carries the pod's trace annotation verbatim"
+        );
+        assert_eq!(v.trace_id(), Some("00000000deadbeef"));
+    }
+
+    #[test]
+    fn zero_window_never_coalesces() {
+        let api = client();
+        let rec = EventRecorder::new("tester", Metrics::new()).with_window_s(0.0);
+        let pod = api.create(PodView::build("p3", "i.sif", Resources::ZERO, &[])).unwrap();
+        rec.event(&api, &pod, EVENT_NORMAL, "Started", "a").unwrap();
+        rec.event(&api, &pod, EVENT_NORMAL, "Started", "b").unwrap();
+        assert_eq!(api.list(KIND_EVENT, &ListOptions::all()).unwrap().items.len(), 2);
+    }
+
+    #[test]
+    fn gc_reaps_expired_events() {
+        let api = client();
+        let metrics = Metrics::new();
+        let rec = EventRecorder::new("tester", metrics.clone());
+        let pod = api.create(PodView::build("p4", "i.sif", Resources::ZERO, &[])).unwrap();
+        rec.event(&api, &pod, EVENT_NORMAL, "Started", "x").unwrap();
+        // A generous TTL keeps it; a negative TTL expires everything.
+        assert_eq!(gc_expired(&api, &metrics, 3600.0).unwrap(), 0);
+        assert_eq!(gc_expired(&api, &metrics, -1.0).unwrap(), 1);
+        assert!(api.list(KIND_EVENT, &ListOptions::all()).unwrap().items.is_empty());
+        assert_eq!(metrics.counter_value("kube.events.gc"), 1);
+
+        // A bump after GC recreates rather than erroring.
+        rec.event(&api, &pod, EVENT_NORMAL, "Started", "y").unwrap();
+        assert_eq!(api.list(KIND_EVENT, &ListOptions::all()).unwrap().items.len(), 1);
+    }
+}

@@ -7,6 +7,7 @@
 
 use super::api::{NodeView, PodPhase, PodView, KIND_NODE, KIND_POD};
 use super::client::ApiClient;
+use super::events::{EventRecorder, EVENT_NORMAL, EVENT_WARNING};
 use super::informer::{Informer, SharedInformerFactory};
 use crate::cluster::{Metrics, Resources, SharedFs};
 use crate::rt::{self, Shutdown};
@@ -15,6 +16,9 @@ use crate::util::Result;
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Component name stamped on events and audit records this agent writes.
+const COMPONENT: &str = "kubelet";
 
 pub struct Kubelet<C: Cri> {
     api: Arc<dyn ApiClient>,
@@ -35,6 +39,11 @@ pub struct Kubelet<C: Cri> {
     /// Pods whose container was ordered stopped by the reap path but has
     /// not exited yet — the adoption arm must not resurrect these.
     stopping: Arc<Mutex<HashSet<String>>>,
+    /// pod name → the pod's `hpcorc.io/trace` annotation, remembered at
+    /// start time so Killing/Reaped events still carry the trace after
+    /// the pod object itself has been deleted from the store.
+    traces: Arc<Mutex<HashMap<String, String>>>,
+    events: EventRecorder,
     metrics: Metrics,
 }
 
@@ -77,6 +86,8 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
             time_scale,
             running: Arc::new(Mutex::new(HashMap::new())),
             stopping: Arc::new(Mutex::new(HashSet::new())),
+            traces: Arc::new(Mutex::new(HashMap::new())),
+            events: EventRecorder::new(COMPONENT, metrics.clone()),
             metrics,
         })
     }
@@ -100,6 +111,9 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
     pub fn sync_once(&self) -> (usize, usize) {
         let mut started = 0;
         let mut completed = 0;
+        // Every write this pass makes is attributed to the kubelet in the
+        // API server's audit trail (PR 8).
+        let _actor = crate::obs::push_actor(COMPONENT);
         // Node-indexed cache read: only pods bound to this node, straight
         // off the shared informer's `spec.nodeName` index — no list RPC,
         // and the kubelet never sees the rest of the cluster.
@@ -131,6 +145,34 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                                 o.status.insert("hostNode", self.node_name.clone());
                             });
                             self.metrics.inc("kubelet.pods_started");
+                            if let Some(t) =
+                                obj.meta.annotation(crate::obs::TRACE_ANNOTATION)
+                            {
+                                self.traces
+                                    .lock()
+                                    .unwrap()
+                                    .insert(pod_name.clone(), t.to_string());
+                            }
+                            let _ = self.events.event(
+                                &self.api,
+                                obj,
+                                EVENT_NORMAL,
+                                "Pulled",
+                                &format!(
+                                    "Container image \"{}\" already present on machine",
+                                    view.image
+                                ),
+                            );
+                            let _ = self.events.event(
+                                &self.api,
+                                obj,
+                                EVENT_NORMAL,
+                                "Started",
+                                &format!(
+                                    "Started container {pod_name} (image {}) on {}",
+                                    view.image, self.node_name
+                                ),
+                            );
                             started += 1;
                         }
                         Err(e) => {
@@ -140,6 +182,13 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                                 o.status.insert("reason", msg.clone());
                             });
                             self.metrics.inc("kubelet.pod_start_failures");
+                            let _ = self.events.event(
+                                &self.api,
+                                obj,
+                                EVENT_WARNING,
+                                "FailedStart",
+                                &format!("Failed to start container: {msg}"),
+                            );
                         }
                     }
                 }
@@ -159,6 +208,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                             });
                             let _ = self.cri.remove(id);
                             self.running.lock().unwrap().remove(&pod_name);
+                            self.traces.lock().unwrap().remove(&pod_name);
                             self.metrics.inc("kubelet.pods_completed");
                             completed += 1;
                         }
@@ -169,6 +219,7 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                             });
                             let _ = self.cri.remove(id);
                             self.running.lock().unwrap().remove(&pod_name);
+                            self.traces.lock().unwrap().remove(&pod_name);
                             completed += 1;
                         }
                         _ => {}
@@ -184,11 +235,15 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
                         // name: never adopt — stop it and finish the
                         // teardown so a later sync starts a fresh one.
                         let _ = self.cri.stop(id);
-                        self.stopping.lock().unwrap().insert(pod_name.clone());
+                        if self.stopping.lock().unwrap().insert(pod_name.clone()) {
+                            self.kill_event(&pod_name, "Killing", "Stopping container: pod was deleted and recreated under the same name");
+                        }
                         if matches!(self.cri.status(id), Ok(ContainerStatus::Exited(_))) {
                             let _ = self.cri.remove(id);
                             self.running.lock().unwrap().remove(&pod_name);
                             self.stopping.lock().unwrap().remove(&pod_name);
+                            self.kill_event(&pod_name, "Reaped", "Removed stale container");
+                            self.traces.lock().unwrap().remove(&pod_name);
                         }
                     } else {
                         // The phase=Running write from a previous start
@@ -225,12 +280,16 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
         };
         for (pod, id) in dangling {
             let _ = self.cri.stop(id);
-            self.stopping.lock().unwrap().insert(pod.clone());
+            if self.stopping.lock().unwrap().insert(pod.clone()) {
+                self.kill_event(&pod, "Killing", "Stopping container: pod deleted or no longer bound to this node");
+            }
             // remove() once it exits; next sync pass will retry until then.
             if matches!(self.cri.status(id), Ok(ContainerStatus::Exited(_))) {
                 let _ = self.cri.remove(id);
                 self.running.lock().unwrap().remove(&pod);
                 self.stopping.lock().unwrap().remove(&pod);
+                self.kill_event(&pod, "Reaped", "Removed container for deleted/unbound pod");
+                self.traces.lock().unwrap().remove(&pod);
             }
         }
         // Metrics pipeline (autoscale layer): sample this node's pods and
@@ -247,6 +306,22 @@ impl<C: Cri + Clone + Send + 'static> Kubelet<C> {
             &self.metrics,
         );
         (started, completed)
+    }
+
+    /// Emit a teardown-path event for `pod`. The pod object is usually
+    /// gone from the store by now, so the event references it by name and
+    /// carries the trace remembered at start time.
+    fn kill_event(&self, pod: &str, reason: &str, note: &str) {
+        let trace = self.traces.lock().unwrap().get(pod).cloned();
+        let _ = self.events.event_ref(
+            &self.api,
+            KIND_POD,
+            pod,
+            trace.as_deref(),
+            EVENT_NORMAL,
+            reason,
+            note,
+        );
     }
 
     /// Heartbeat the Node object (mark Ready).
@@ -423,6 +498,52 @@ mod tests {
         .unwrap();
         kubelet.sync_once();
         assert!(api.get(KIND_PODMETRICS, "pm").is_err(), "stale sample reaped");
+    }
+
+    #[test]
+    fn lifecycle_emits_started_killing_reaped_with_trace() {
+        use crate::kube::events::{EventView, EVENT_NORMAL, KIND_EVENT};
+        use crate::kube::client::ListOptions;
+        let (api, kubelet) = setup();
+        let mut pod = PodView::build("pt", "slow.sif", Resources::ZERO, &[]);
+        pod.spec.insert("nodeName", "w1");
+        pod.meta.set_annotation(
+            crate::obs::TRACE_ANNOTATION,
+            "00000000deadbeef-0000000000000001",
+        );
+        api.create(pod).unwrap();
+        kubelet.sync_once();
+        assert_eq!(phase(&api, "pt"), "Running");
+        api.delete(KIND_POD, "pt").unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while kubelet.running.lock().unwrap().contains_key("pt") {
+            assert!(std::time::Instant::now() < deadline);
+            kubelet.sync_once();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let events: Vec<EventView> = api
+            .client()
+            .list(KIND_EVENT, &ListOptions::all())
+            .unwrap()
+            .items
+            .iter()
+            .map(|o| EventView::from_object(o).unwrap())
+            .collect();
+        for reason in ["Started", "Killing", "Reaped"] {
+            let ev = events
+                .iter()
+                .find(|e| e.reason == reason)
+                .unwrap_or_else(|| panic!("missing {reason} event"));
+            assert_eq!(ev.regarding_kind, KIND_POD);
+            assert_eq!(ev.regarding_name, "pt");
+            assert_eq!(ev.etype, EVENT_NORMAL);
+            assert_eq!(ev.reporting_controller, COMPONENT);
+            assert_eq!(
+                ev.trace.as_deref(),
+                Some("00000000deadbeef-0000000000000001"),
+                "{reason} event must carry the pod's trace even after deletion"
+            );
+        }
     }
 
     #[test]

@@ -167,12 +167,49 @@
 //!    Chrome trace events for Perfetto). `tests/obs_e2e.rs` is the
 //!    acceptance: one pod's create→admit→schedule→bind is one connected
 //!    trace, and the SLO histogram is remotely scrapeable.
+//!
+//! # Events & audit (PR 8)
+//!
+//! Two human-facing records of what the cluster did, layered on the
+//! machinery above:
+//!
+//! - **Cluster Events** ([`events`]): `Event` is a real API object
+//!   (`events.k8s.io/v1` shape, registered in [`default_scheme`] as
+//!   `events`/`ev`), so it rides the store/WAL/watch machinery
+//!   unchanged. Components emit through a per-component
+//!   [`EventRecorder`] — `rec.event(&api, &pod, EVENT_NORMAL,
+//!   "Scheduled", "bound to w1")` — which coalesces repeats of the same
+//!   `(object, reason)` within a window into a `status.count` bump
+//!   (the k8s events-spam defence) and carries the regarding object's
+//!   `hpcorc.io/trace` annotation onto the event. TTL GC
+//!   ([`events::gc_expired`]) reaps stale events; the testbed ticks it.
+//!   Read side: `kubectl get events` (LAST SEEN/COUNT columns, sorted)
+//!   and `kubectl describe KIND/NAME` (object + its events + the causal
+//!   span timeline of its trace).
+//!
+//!   The shipped emitters: the scheduler (`Scheduled`/
+//!   `FailedScheduling` with the losing predicate), kueue (`Admitted`/
+//!   `Evicted`/`QuotaExhausted` with the cohort math), the kubelet
+//!   (`Started`/`Killing`/`Reaped`), the operator (`WlmSubmitted`/
+//!   `WlmFailed` with backend + job id), and the autoscalers
+//!   (`ScaledUp`/`ScaledDown`/`Provisioned`/`BurstToWlm`).
+//!
+//! - **API audit trail** ([`crate::obs::AuditLog`]): every mutating
+//!   ApiServer verb appends verb/kind/name/**actor**/trace/outcome/
+//!   latency to a bounded ring inside the server, with an optional file
+//!   sink (`hpcorc up --audit-log FILE`). Actor attribution rides a
+//!   thread-local ([`crate::obs::push_actor`]) that components pin per
+//!   cycle and the red-box transport carries as the request's `actor`
+//!   field — so `hpcorc audit [--since SEQ] [--kind KIND]` shows a
+//!   remote `kubectl apply` and an in-process scheduler bind through
+//!   one code path, each tied to its originating trace id.
 
 pub mod api;
 pub mod apiserver;
 pub mod client;
 pub mod controller;
 pub mod deployment;
+pub mod events;
 pub mod informer;
 pub mod kubelet;
 pub mod persist;
@@ -189,9 +226,13 @@ pub use api::{
 pub use apiserver::{
     ApiServer, MutatingHook, RemoteApi, WatchConfig, WatchMode, MAX_CONFLICT_RETRIES,
 };
-pub use client::{Api, ApiClient, ListOptions, ObjectList, ResourceView};
+pub use client::{ActorClient, Api, ApiClient, ListOptions, ObjectList, ResourceView};
 pub use controller::{Controller, ControllerRunner, Reconcile};
 pub use deployment::DeploymentController;
+pub use events::{
+    gc_expired, EventRecorder, EventView, DEFAULT_COALESCE_WINDOW_S, EVENTS_API_VERSION,
+    EVENT_NORMAL, EVENT_WARNING, KIND_EVENT,
+};
 pub use informer::{Informer, InformerEvent, SharedInformerFactory};
 pub use kubelet::Kubelet;
 pub use persist::{MemoryBackend, StoreBackend, WalBackend};

@@ -13,17 +13,22 @@
 
 use super::api::{KubeObject, NodeView, PodPhase, PodView};
 use super::client::ApiClient;
+use super::events::{EventRecorder, EVENT_NORMAL, EVENT_WARNING};
 use super::informer::{Informer, SharedInformerFactory};
 use crate::cluster::{Metrics, Resources};
 use crate::rt::{self, Shutdown};
 use std::sync::Arc;
 use std::time::Duration;
 
+/// The audit actor and event reportingController of this component.
+const COMPONENT: &str = "kube-scheduler";
+
 pub struct KubeScheduler {
     client: Arc<dyn ApiClient>,
     nodes: Informer,
     pods: Informer,
     metrics: Metrics,
+    events: EventRecorder,
 }
 
 impl KubeScheduler {
@@ -32,6 +37,7 @@ impl KubeScheduler {
             client: informers.client(),
             nodes: informers.informer(super::api::KIND_NODE),
             pods: informers.informer(super::api::KIND_POD),
+            events: EventRecorder::new(COMPONENT, metrics.clone()),
             metrics,
         }
     }
@@ -69,6 +75,8 @@ impl KubeScheduler {
     /// Public for deterministic stepping in tests/benches.
     pub fn run_cycle(&self) -> usize {
         let t0 = std::time::Instant::now();
+        // Audit attribution: every write this cycle makes runs as us.
+        let _actor = crate::obs::push_actor(COMPONENT);
         // A broken transport must not masquerade as "nothing to schedule":
         // if the informers cannot seed/stay current, skip the cycle.
         // (Undecodable objects are skipped below, so a malformed
@@ -163,6 +171,19 @@ impl KubeScheduler {
                 .collect();
             if candidates.is_empty() {
                 self.metrics.inc("kube.sched.unschedulable");
+                let (origin_trace, _) = origins.get(&pod.name).cloned().unwrap_or((None, None));
+                let trace_wire = origin_trace.map(|c| c.to_wire());
+                // Repeats coalesce into a count bump on the same Event
+                // (the reason is constant; only the diagnosis varies).
+                let _ = self.events.event_ref(
+                    &self.client,
+                    super::api::KIND_POD,
+                    &pod.name,
+                    trace_wire.as_deref(),
+                    EVENT_WARNING,
+                    "FailedScheduling",
+                    &losing_predicate(&nodes, &used, &pod),
+                );
                 continue;
             }
             // Score: least allocated (lowest dominant fraction after adding).
@@ -194,6 +215,15 @@ impl KubeScheduler {
                 }
                 bound += 1;
                 self.metrics.inc("kube.sched.bound");
+                let _ = self.events.event_ref(
+                    &self.client,
+                    super::api::KIND_POD,
+                    &pod.name,
+                    origin_trace.map(|c| c.to_wire()).as_deref(),
+                    EVENT_NORMAL,
+                    "Scheduled",
+                    &format!("Successfully assigned {} to {chosen}", pod.name),
+                );
                 if let Some(t_create) = created_ns {
                     let now_ns = std::time::SystemTime::now()
                         .duration_since(std::time::UNIX_EPOCH)
@@ -209,6 +239,57 @@ impl KubeScheduler {
         self.metrics.observe("kube.sched.cycle_ns", t0.elapsed().as_nanos() as u64);
         bound
     }
+}
+
+/// The FailedScheduling diagnosis: walk the filter chain once more,
+/// counting where each node was eliminated — the k8s
+/// `0/N nodes available: ...` message, naming the losing predicate(s).
+fn losing_predicate(
+    nodes: &[NodeView],
+    used: &[(String, Resources)],
+    pod: &PodView,
+) -> String {
+    let (mut not_ready, mut cordoned, mut tainted, mut selector, mut no_fit) = (0, 0, 0, 0, 0);
+    for n in nodes {
+        if !n.ready {
+            not_ready += 1;
+        } else if n.unschedulable {
+            cordoned += 1;
+        } else if !n.taints.iter().all(|t| pod.tolerations.contains(t)) {
+            tainted += 1;
+        } else if !pod
+            .node_selector
+            .iter()
+            .all(|(k, v)| n.labels.iter().any(|(nk, nv)| nk == k && nv == v))
+        {
+            selector += 1;
+        } else {
+            let u = used
+                .iter()
+                .find(|(name, _)| name == &n.name)
+                .map(|(_, u)| *u)
+                .unwrap_or(Resources::ZERO);
+            if !n.capacity.saturating_sub(&u).fits(&pod.requests) {
+                no_fit += 1;
+            }
+        }
+    }
+    let mut parts = Vec::new();
+    for (count, what) in [
+        (not_ready, "node(s) were not ready"),
+        (cordoned, "node(s) were unschedulable"),
+        (tainted, "node(s) had untolerated taints"),
+        (selector, "node(s) didn't match the nodeSelector"),
+        (no_fit, "node(s) had insufficient resources"),
+    ] {
+        if count > 0 {
+            parts.push(format!("{count} {what}"));
+        }
+    }
+    if parts.is_empty() {
+        parts.push("no nodes registered".to_string());
+    }
+    format!("0/{} nodes available: {}", nodes.len(), parts.join(", "))
 }
 
 /// Helper for building schedulable pods in tests and the operator.
@@ -378,6 +459,44 @@ mod tests {
         assert_eq!(sched.run_cycle(), 2);
         assert_eq!(node_of(&api, "p1").as_deref(), Some("w2"), "cordoned node skipped");
         assert_eq!(node_of(&api, "p2").as_deref(), Some("w2"));
+    }
+
+    #[test]
+    fn cycle_emits_scheduled_and_failed_scheduling_events() {
+        use crate::kube::events::{EventView, KIND_EVENT};
+        use crate::kube::ListOptions;
+        let (api, sched) = setup();
+        add_node(&api, "w1", 1); // 1000m
+        add_pod(&api, "fits", 500);
+        add_pod(&api, "huge", 4000);
+        sched.run_cycle();
+        sched.run_cycle(); // second failure for `huge` coalesces
+
+        let events: Vec<EventView> = api
+            .client()
+            .list(KIND_EVENT, &ListOptions::all())
+            .unwrap()
+            .items
+            .iter()
+            .map(|o| EventView::from_object(o).unwrap())
+            .collect();
+        let scheduled = events.iter().find(|e| e.reason == "Scheduled").unwrap();
+        assert_eq!(scheduled.regarding_name, "fits");
+        assert_eq!(scheduled.etype, EVENT_NORMAL);
+        assert_eq!(scheduled.reporting_controller, COMPONENT);
+        assert!(scheduled.note.contains("w1"), "{}", scheduled.note);
+        let failed = events.iter().find(|e| e.reason == "FailedScheduling").unwrap();
+        assert_eq!(failed.regarding_name, "huge");
+        assert_eq!(failed.etype, EVENT_WARNING);
+        assert_eq!(failed.count, 2, "second failure bumps the count");
+        assert!(
+            failed.note.contains("0/1 nodes available") && failed.note.contains("insufficient"),
+            "{}",
+            failed.note
+        );
+        // Writes this cycle audited as the scheduler.
+        let audited = api.audit_log().snapshot();
+        assert!(audited.iter().any(|r| r.actor == COMPONENT && r.verb == "update_status"));
     }
 
     #[test]

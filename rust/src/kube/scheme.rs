@@ -254,6 +254,13 @@ pub fn default_scheme() -> &'static Scheme {
             &[],
         )
         .expect("podmetrics crd");
+        s.register_grouped_crd(
+            super::events::EVENTS_API_VERSION,
+            super::events::KIND_EVENT,
+            "events",
+            &["ev"],
+        )
+        .expect("event kind");
         s
     })
 }
@@ -306,6 +313,9 @@ mod tests {
             ("horizontalpodautoscalers", "HorizontalPodAutoscaler"),
             ("nodemetrics", "NodeMetrics"),
             ("podmetrics", "PodMetrics"),
+            ("event", "Event"),
+            ("events", "Event"),
+            ("ev", "Event"),
         ] {
             assert_eq!(s.canonical_kind(alias), Some(kind), "alias {alias}");
         }
@@ -321,6 +331,10 @@ mod tests {
         assert_eq!(
             s.api_version_for("podmetrics").as_deref(),
             Some(crate::autoscale::METRICS_API_VERSION)
+        );
+        assert_eq!(
+            s.api_version_for("ev").as_deref(),
+            Some(crate::kube::events::EVENTS_API_VERSION)
         );
     }
 

@@ -31,13 +31,18 @@ use super::types::{
 use crate::cluster::Metrics;
 use crate::encoding::Value;
 use crate::kube::{
-    add_scheduling_gate, remove_scheduling_gate, scheduling_gates, ApiClient, Informer,
-    InformerEvent, KubeObject, SharedInformerFactory, KIND_POD,
+    add_scheduling_gate, remove_scheduling_gate, scheduling_gates, ApiClient, EventRecorder,
+    Informer, InformerEvent, KubeObject, SharedInformerFactory, EVENT_NORMAL, EVENT_WARNING,
+    KIND_POD,
 };
 use crate::util::Result;
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Mutex;
+
+/// Component name stamped on events and audit records this controller
+/// writes.
+const COMPONENT: &str = "kueue";
 
 /// What one cycle did (workload-object granularity).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -57,6 +62,9 @@ struct PendingGang {
     /// Per-member demand, aligned with `members` (the incremental
     /// ledger's charge granularity).
     member_demands: Vec<QueueResources>,
+    /// Per-member `hpcorc.io/trace` annotation, aligned with `members` —
+    /// each member's Admitted event carries its own originating trace.
+    member_traces: Vec<Option<String>>,
     /// ClusterQueue charged on admission.
     cq: String,
     /// The raw queue-name label (LocalQueue counts key).
@@ -94,6 +102,7 @@ struct LedgerState {
 /// themselves are serialized (see [`AdmissionCore::cycle`]).
 pub struct AdmissionCore {
     metrics: Metrics,
+    events: EventRecorder,
     cqs: Informer,
     lqs: Informer,
     /// One shared informer per [`WORKLOAD_KINDS`] entry, same order.
@@ -108,6 +117,10 @@ pub struct AdmissionCore {
     /// lock, every cycle syncs *after* the previous cycle's admission
     /// writes landed.
     serial: Mutex<()>,
+    /// (ClusterQueue, gang uid) pairs whose QuotaExhausted event was
+    /// already emitted — the event is edge-triggered so a still-blocked
+    /// head of queue keeps the "steady state writes nothing" property.
+    blocked_noted: Mutex<std::collections::BTreeSet<(String, u64)>>,
 }
 
 impl AdmissionCore {
@@ -128,6 +141,7 @@ impl AdmissionCore {
             workloads.push(inf);
         }
         AdmissionCore {
+            events: EventRecorder::new(COMPONENT, metrics.clone()),
             metrics,
             cqs: informers.informer(KIND_CLUSTERQUEUE),
             lqs: informers.informer(KIND_LOCALQUEUE),
@@ -142,6 +156,7 @@ impl AdmissionCore {
                 rebuilds: 0,
             }),
             serial: Mutex::new(()),
+            blocked_noted: Mutex::new(std::collections::BTreeSet::new()),
         }
     }
 
@@ -236,6 +251,9 @@ impl AdmissionCore {
     pub fn cycle(&self, api: &dyn ApiClient) -> Result<CycleReport> {
         let _one_at_a_time = self.serial.lock().unwrap();
         let t0 = std::time::Instant::now();
+        // Every write this cycle makes is attributed to kueue in the API
+        // server's audit trail (PR 8).
+        let _actor = crate::obs::push_actor(COMPONENT);
         self.metrics.inc("kueue.cycles");
 
         // ---- refresh the caches -------------------------------------
@@ -407,6 +425,7 @@ impl AdmissionCore {
                     .or_insert_with(|| PendingGang {
                         members: Vec::new(),
                         member_demands: Vec::new(),
+                        member_traces: Vec::new(),
                         cq,
                         label: label.clone(),
                         demand: QueueResources::ZERO,
@@ -415,14 +434,16 @@ impl AdmissionCore {
                         complete: true,
                         trace: None,
                     });
+                let member_trace =
+                    obj.meta.annotation(crate::obs::TRACE_ANNOTATION).map(String::from);
                 if g.trace.is_none() {
-                    g.trace = obj
-                        .meta
-                        .annotation(crate::obs::TRACE_ANNOTATION)
+                    g.trace = member_trace
+                        .as_deref()
                         .and_then(crate::obs::TraceContext::parse_wire);
                 }
                 g.members.push((obj.kind.clone(), obj.meta.name.clone()));
                 g.member_demands.push(demand);
+                g.member_traces.push(member_trace);
                 g.demand = g.demand.saturating_add(&demand);
                 g.priority = g.priority.max(priority);
                 g.uid = g.uid.min(obj.meta.uid);
@@ -469,6 +490,8 @@ impl AdmissionCore {
         // ---- admit, strictly ordered per queue ----------------------
         let mut report = CycleReport::default();
         let mut pending: Vec<PendingGang> = pending_gangs;
+        let mut blocked_now: std::collections::BTreeSet<(String, u64)> =
+            std::collections::BTreeSet::new();
         for cq in &cqs {
             let mut queue_gangs: Vec<&PendingGang> =
                 pending.iter().filter(|g| g.cq == cq.name).collect();
@@ -512,6 +535,13 @@ impl AdmissionCore {
                             &gang.demand,
                             gang.priority,
                         ) else {
+                            self.note_quota_exhausted(
+                                api,
+                                gang,
+                                &cq.name,
+                                "no preemptable lower-priority workloads",
+                                &mut blocked_now,
+                            );
                             break; // strict: a blocked head holds the queue
                         };
                         for v in &victims {
@@ -520,6 +550,23 @@ impl AdmissionCore {
                             // (idempotent with the eviction's echo events
                             // next cycle).
                             for m in &v.members {
+                                let trace = api.get(&m.0, &m.1).ok().and_then(|o| {
+                                    o.meta
+                                        .annotation(crate::obs::TRACE_ANNOTATION)
+                                        .map(String::from)
+                                });
+                                let _ = self.events.event_ref(
+                                    api,
+                                    &m.0,
+                                    &m.1,
+                                    trace.as_deref(),
+                                    EVENT_WARNING,
+                                    "Evicted",
+                                    &format!(
+                                        "Preempted from ClusterQueue {} by higher-priority gang {}",
+                                        cq.name, gang.label
+                                    ),
+                                );
                                 Self::apply_delta(&mut st, m.clone(), None);
                             }
                             report.preempted += v.members.len();
@@ -529,7 +576,17 @@ impl AdmissionCore {
                         st.ledger.charge(&cq.name, &gang.demand);
                         decisions.push(gang.clone());
                     }
-                    Fit::Blocked | Fit::UnknownQueue => break,
+                    Fit::Blocked => {
+                        self.note_quota_exhausted(
+                            api,
+                            gang,
+                            &cq.name,
+                            "demand exceeds borrowable quota",
+                            &mut blocked_now,
+                        );
+                        break;
+                    }
+                    Fit::UnknownQueue => break,
                 }
             }
             for (i, gang) in decisions.iter().enumerate() {
@@ -552,6 +609,25 @@ impl AdmissionCore {
                 }
                 report.admitted += gang.members.len();
                 self.metrics.inc("kueue.gangs_admitted");
+                let note = format!(
+                    "Admitted by ClusterQueue {} (gang {}, {} member(s), demand {})",
+                    cq.name,
+                    gang.label,
+                    gang.members.len(),
+                    fmt_demand(&gang.demand),
+                );
+                for ((kind, name), trace) in gang.members.iter().zip(&gang.member_traces)
+                {
+                    let _ = self.events.event_ref(
+                        api,
+                        kind,
+                        name,
+                        trace.as_deref(),
+                        EVENT_NORMAL,
+                        "Admitted",
+                        &note,
+                    );
+                }
                 // Record the per-member charges (the ledger was charged
                 // during selection; the map entry makes the admission's
                 // own echo events no-ops next cycle).
@@ -572,6 +648,10 @@ impl AdmissionCore {
             }
         }
         report.pending = pending.iter().map(|g| g.members.len()).sum();
+        // Edge-trigger baseline for the next cycle: gangs that stopped
+        // being blocked (admitted, deleted, resized) drop out and may
+        // report QuotaExhausted afresh if they block again later.
+        *self.blocked_noted.lock().unwrap() = blocked_now;
 
         // ---- queue status counts (write only on change) --------------
         let mut cq_counts: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
@@ -603,6 +683,44 @@ impl AdmissionCore {
 
         self.metrics.observe("kueue.cycle_ns", t0.elapsed().as_nanos() as u64);
         Ok(report)
+    }
+
+    /// Emit a Warning `QuotaExhausted` event for every member of a
+    /// blocked gang — what `kubectl describe` surfaces for a workload
+    /// stuck at the head of its queue. Edge-triggered via
+    /// [`AdmissionCore::blocked_noted`]: a gang that stays blocked across
+    /// cycles writes nothing after the first report.
+    fn note_quota_exhausted(
+        &self,
+        api: &dyn ApiClient,
+        gang: &PendingGang,
+        cq: &str,
+        why: &str,
+        blocked_now: &mut std::collections::BTreeSet<(String, u64)>,
+    ) {
+        let key = (cq.to_string(), gang.uid);
+        let already = self.blocked_noted.lock().unwrap().contains(&key);
+        blocked_now.insert(key);
+        if already {
+            return;
+        }
+        let note = format!(
+            "ClusterQueue {cq} cannot fit gang {} ({} member(s), demand {}): {why}",
+            gang.label,
+            gang.members.len(),
+            fmt_demand(&gang.demand),
+        );
+        for ((kind, name), trace) in gang.members.iter().zip(&gang.member_traces) {
+            let _ = self.events.event_ref(
+                api,
+                kind,
+                name,
+                trace.as_deref(),
+                EVENT_WARNING,
+                "QuotaExhausted",
+                &note,
+            );
+        }
     }
 
     /// Flip a whole gang's members to admitted, stamping the ClusterQueue
@@ -646,6 +764,26 @@ impl AdmissionCore {
             }
         }
         Ok(())
+    }
+}
+
+/// Human rendering of a gang demand for event notes — only the bounded
+/// dimensions (node-only quotas leave cpu/mem at `u64::MAX`).
+fn fmt_demand(d: &QueueResources) -> String {
+    let mut parts = Vec::new();
+    if d.nodes > 0 && d.nodes < u32::MAX {
+        parts.push(format!("{} node(s)", d.nodes));
+    }
+    if d.cpu_milli > 0 && d.cpu_milli < u64::MAX {
+        parts.push(format!("{}m CPU", d.cpu_milli));
+    }
+    if d.mem_bytes > 0 && d.mem_bytes < u64::MAX {
+        parts.push(format!("{}B memory", d.mem_bytes));
+    }
+    if parts.is_empty() {
+        "none".to_string()
+    } else {
+        parts.join(", ")
     }
 }
 
@@ -887,6 +1025,47 @@ mod tests {
             vec![crate::kueue::SCHEDULING_GATE.to_string()],
             "suspended straggler gets the gate back-filled"
         );
+    }
+
+    #[test]
+    fn admission_emits_admitted_and_quota_exhausted_events() {
+        use crate::kube::events::{EventView, KIND_EVENT};
+        let a = api();
+        let core = core_for(&a);
+        a.create(ClusterQueueView::build("cq-a", QueueResources::nodes(1))).unwrap();
+        a.create(LocalQueueView::build("team", "cq-a")).unwrap();
+        a.create(labelled_pod("first", "team", 100)).unwrap();
+        a.create(labelled_pod("second", "team", 100)).unwrap();
+        core.cycle(&a).unwrap();
+        let evs = |reason: &str| -> Vec<EventView> {
+            a.list(KIND_EVENT, &[])
+                .iter()
+                .map(|o| EventView::from_object(o).unwrap())
+                .filter(|e| e.reason == reason)
+                .collect()
+        };
+        let adm = evs("Admitted");
+        assert_eq!(adm.len(), 1, "one admitted member, one Admitted event");
+        assert_eq!(adm[0].regarding_name, "first");
+        assert_eq!(adm[0].etype, EVENT_NORMAL);
+        assert_eq!(adm[0].reporting_controller, COMPONENT);
+        assert!(adm[0].note.contains("cq-a"), "note names the ClusterQueue");
+        let blocked = evs("QuotaExhausted");
+        assert_eq!(blocked.len(), 1, "head-of-line blockage reported");
+        assert_eq!(blocked[0].regarding_name, "second");
+        assert_eq!(blocked[0].etype, EVENT_WARNING);
+        assert!(blocked[0].note.contains("1 node(s)"), "note carries the demand math");
+        // Still-blocked gangs are edge-triggered: a second cycle must not
+        // re-emit (or bump) QuotaExhausted — steady state writes nothing.
+        let v = a.current_version();
+        core.cycle(&a).unwrap();
+        assert_eq!(a.current_version(), v, "steady state stays write-free");
+        // The audit trail attributes this cycle's writes to kueue.
+        assert!(a
+            .audit_log()
+            .snapshot()
+            .iter()
+            .any(|r| r.actor == COMPONENT && r.verb == "update_status"));
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! API audit trail (PR 8): who mutated what, when, on whose behalf.
+//!
+//! Every mutating ApiServer verb appends one [`AuditRecord`] — verb,
+//! kind/name, **actor** (the component or user the request ran as),
+//! trace id, outcome, latency — to a bounded in-memory ring
+//! ([`AuditLog`]) with an optional WAL-style JSON-line file sink
+//! (`hpcorc up --audit-log FILE`). The ring is queryable remotely via
+//! the `obs.Audit` red-box service ([`audit_service`]) and the
+//! `hpcorc audit [--since SEQ] [--kind KIND]` CLI verb.
+//!
+//! Actor attribution is a thread-local, mirroring how trace context
+//! travels: a component's control loop pins its identity with
+//! [`push_actor`] at the top of each cycle (scheduler, kubelet, kueue,
+//! operator, HPA/CA all do), the red-box client stamps
+//! [`current_actor`] onto every outgoing request as an optional `actor`
+//! field, and the server adopts it around dispatch — so a remote
+//! `kubectl apply` audits as `kubectl` and an in-process bind audits as
+//! `kube-scheduler`, through one code path.
+
+use crate::encoding::Value;
+use crate::redbox::server::{FnService, Service};
+use crate::util::Result;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Records retained in the in-memory ring (oldest evicted first).
+pub const AUDIT_RING_CAPACITY: usize = 4096;
+
+/// Actor recorded when no component pinned one (e.g. a bare test client).
+pub const UNATTRIBUTED: &str = "unattributed";
+
+thread_local! {
+    static ACTOR: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// The actor pinned on this thread, if any.
+pub fn current_actor() -> Option<String> {
+    ACTOR.with(|a| a.borrow().clone())
+}
+
+/// RAII actor scope: restores the previously pinned actor on drop.
+pub struct ActorGuard {
+    prev: Option<String>,
+}
+
+impl Drop for ActorGuard {
+    fn drop(&mut self) {
+        ACTOR.with(|a| *a.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Pin `name` as this thread's actor until the guard drops. Components
+/// call this at the top of a reconcile/sync cycle; servers call it
+/// around dispatch with the wire-carried actor.
+pub fn push_actor(name: &str) -> ActorGuard {
+    ACTOR.with(|a| {
+        let prev = a.borrow_mut().replace(name.to_string());
+        ActorGuard { prev }
+    })
+}
+
+/// One audited mutating API request.
+#[derive(Debug, Clone)]
+pub struct AuditRecord {
+    /// Monotone sequence number (1-based) — the `--since` cursor.
+    pub seq: u64,
+    /// Wall clock at completion, nanoseconds since the Unix epoch.
+    pub wall_ns: u64,
+    /// API verb: create/update/update_status/patch/delete/apply.
+    pub verb: String,
+    pub kind: String,
+    pub name: String,
+    /// Requesting component/user ([`UNATTRIBUTED`] when none was pinned).
+    pub actor: String,
+    /// Originating trace id (16-hex), when the request ran under a span.
+    pub trace: Option<String>,
+    /// `ok`, or the error rendering of a failed request.
+    pub outcome: String,
+    pub latency_ns: u64,
+}
+
+impl AuditRecord {
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::map()
+            .with("seq", self.seq)
+            .with("wallNs", self.wall_ns)
+            .with("verb", self.verb.clone())
+            .with("kind", self.kind.clone())
+            .with("name", self.name.clone())
+            .with("actor", self.actor.clone())
+            .with("outcome", self.outcome.clone())
+            .with("latencyNs", self.latency_ns);
+        if let Some(t) = &self.trace {
+            v.insert("trace", t.clone());
+        }
+        v
+    }
+
+    pub fn from_value(v: &Value) -> Option<AuditRecord> {
+        Some(AuditRecord {
+            seq: v.opt_int("seq")? as u64,
+            wall_ns: v.opt_int("wallNs")? as u64,
+            verb: v.opt_str("verb")?.to_string(),
+            kind: v.opt_str("kind")?.to_string(),
+            name: v.opt_str("name")?.to_string(),
+            actor: v.opt_str("actor")?.to_string(),
+            trace: v.opt_str("trace").map(String::from),
+            outcome: v.opt_str("outcome")?.to_string(),
+            latency_ns: v.opt_int("latencyNs")? as u64,
+        })
+    }
+}
+
+struct AuditInner {
+    ring: Mutex<VecDeque<AuditRecord>>,
+    seq: AtomicU64,
+    cap: usize,
+    sink: Mutex<Option<std::fs::File>>,
+}
+
+/// Bounded, cloneable audit ring with an optional file sink. One lives
+/// inside every `ApiServer`; clones share state.
+#[derive(Clone)]
+pub struct AuditLog {
+    inner: Arc<AuditInner>,
+}
+
+impl Default for AuditLog {
+    fn default() -> Self {
+        Self::with_capacity(AUDIT_RING_CAPACITY)
+    }
+}
+
+impl AuditLog {
+    pub fn new() -> AuditLog {
+        AuditLog::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> AuditLog {
+        AuditLog {
+            inner: Arc::new(AuditInner {
+                ring: Mutex::new(VecDeque::with_capacity(cap.min(1024))),
+                seq: AtomicU64::new(0),
+                cap: cap.max(1),
+                sink: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Attach a WAL-style file sink: every subsequent record appends one
+    /// JSON line to `path` (created if missing), flushed per record.
+    pub fn attach_file_sink(&self, path: &std::path::Path) -> Result<()> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        *self.inner.sink.lock().unwrap() = Some(file);
+        Ok(())
+    }
+
+    /// Append one record; the middleware entry point. Fills seq + wall
+    /// clock + thread-local actor itself.
+    pub fn record(
+        &self,
+        verb: &str,
+        kind: &str,
+        name: &str,
+        trace: Option<String>,
+        outcome: String,
+        latency_ns: u64,
+    ) {
+        let rec = AuditRecord {
+            seq: self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1,
+            wall_ns: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .unwrap_or_default()
+                .as_nanos() as u64,
+            verb: verb.to_string(),
+            kind: kind.to_string(),
+            name: name.to_string(),
+            actor: current_actor().unwrap_or_else(|| UNATTRIBUTED.to_string()),
+            trace,
+            outcome,
+            latency_ns,
+        };
+        if let Some(f) = self.inner.sink.lock().unwrap().as_mut() {
+            use std::io::Write;
+            let _ = writeln!(f, "{}", crate::encoding::json::to_string(&rec.to_value()));
+            let _ = f.flush();
+        }
+        let mut ring = self.inner.ring.lock().unwrap();
+        if ring.len() == self.inner.cap {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+
+    /// Records with `seq > since` (0 = everything retained), optionally
+    /// kind-filtered, oldest first.
+    pub fn query(&self, since: u64, kind: Option<&str>) -> Vec<AuditRecord> {
+        self.inner
+            .ring
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.seq > since && kind.map_or(true, |k| r.kind == k))
+            .cloned()
+            .collect()
+    }
+
+    /// Every retained record, oldest first.
+    pub fn snapshot(&self) -> Vec<AuditRecord> {
+        self.query(0, None)
+    }
+
+    /// Highest sequence number handed out so far.
+    pub fn last_seq(&self) -> u64 {
+        self.inner.seq.load(Ordering::Relaxed)
+    }
+}
+
+/// The `obs.Audit` red-box service over an [`AuditLog`].
+///
+/// - `obs.Audit/Query` `{since?: N, kind?: "Pod"}` → `{records: [...]}`
+pub fn audit_service(log: AuditLog) -> Arc<dyn Service> {
+    Arc::new(FnService(move |method: &str, body: &Value| match method {
+        "Query" => {
+            let since = body.opt_int("since").unwrap_or(0).max(0) as u64;
+            let kind = body.opt_str("kind");
+            let records: Vec<Value> =
+                log.query(since, kind).iter().map(AuditRecord::to_value).collect();
+            Ok(Value::map().with("records", Value::Seq(records)))
+        }
+        other => Err(crate::util::Error::rpc(format!("obs.Audit has no method `{other}`"))),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actor_guard_nests_and_restores() {
+        assert_eq!(current_actor(), None);
+        {
+            let _a = push_actor("scheduler");
+            assert_eq!(current_actor().as_deref(), Some("scheduler"));
+            {
+                let _b = push_actor("kubectl");
+                assert_eq!(current_actor().as_deref(), Some("kubectl"));
+            }
+            assert_eq!(current_actor().as_deref(), Some("scheduler"));
+        }
+        assert_eq!(current_actor(), None);
+    }
+
+    #[test]
+    fn ring_bounds_and_query_filters() {
+        let log = AuditLog::with_capacity(3);
+        for i in 0..5u64 {
+            let kind = if i % 2 == 0 { "Pod" } else { "Node" };
+            let _a = push_actor("test");
+            log.record("create", kind, &format!("o{i}"), None, "ok".into(), i);
+        }
+        let all = log.snapshot();
+        assert_eq!(all.len(), 3, "ring is bounded");
+        assert_eq!(all[0].seq, 3, "oldest evicted first");
+        assert_eq!(log.last_seq(), 5);
+        assert_eq!(log.query(4, None).len(), 1, "--since is an exclusive cursor");
+        let pods = log.query(0, Some("Pod"));
+        assert!(pods.iter().all(|r| r.kind == "Pod"));
+        assert_eq!(all[0].actor, "test");
+    }
+
+    #[test]
+    fn record_value_roundtrip() {
+        let rec = AuditRecord {
+            seq: 9,
+            wall_ns: 123,
+            verb: "patch".into(),
+            kind: "Pod".into(),
+            name: "p1".into(),
+            actor: "kubectl".into(),
+            trace: Some("00000000deadbeef".into()),
+            outcome: "ok".into(),
+            latency_ns: 42,
+        };
+        let back = AuditRecord::from_value(&rec.to_value()).unwrap();
+        assert_eq!(back.seq, 9);
+        assert_eq!(back.trace.as_deref(), Some("00000000deadbeef"));
+        assert_eq!(back.outcome, "ok");
+        // Absent trace stays absent.
+        let rec2 = AuditRecord { trace: None, ..rec };
+        assert_eq!(AuditRecord::from_value(&rec2.to_value()).unwrap().trace, None);
+    }
+
+    #[test]
+    fn file_sink_appends_json_lines() {
+        let path = std::env::temp_dir()
+            .join(format!("hpcorc-audit-sink-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let log = AuditLog::new();
+        log.attach_file_sink(&path).unwrap();
+        log.record("create", "Pod", "p1", Some("ff".into()), "ok".into(), 1);
+        log.record("delete", "Pod", "p1", None, "ok".into(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = AuditRecord::from_value(
+            &crate::encoding::json::parse(lines[1]).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(rec.verb, "delete");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -27,20 +27,49 @@
 //!    `hpcorc trace <kind>/<name>` or exported via
 //!    [`export_chrome_json`] straight into Perfetto.
 //!
+//! ## Labelled metric families (PR 8): naming rules
+//!
+//! The registry stores **families with label sets**
+//! ([`crate::cluster::Metrics::inc_with`] & friends); the rules that
+//! keep the namespace sane:
+//!
+//! 1. **The family name carries the operation, labels carry the
+//!    dimension.** `kube.api.create{gvk="pods"}`, not
+//!    `kube.api.create.pods`; `redbox.rpc_ns{method="kube.Api/Create"}`,
+//!    not `redbox.rpc.kube.Api.Create_ns`. A new value of a dimension
+//!    must never mint a new family.
+//! 2. **Low cardinality only.** Label values must be drawn from a small
+//!    closed set (GVK plurals, RPC methods, event reasons) — never
+//!    object names, trace ids, or anything user-controlled.
+//! 3. **Latency families keep the `_ns` suffix** on the family name
+//!    (`redbox.rpc_ns{method=...}`), so every series of the family
+//!    renders as one Prometheus histogram with merged labels
+//!    (`redbox_rpc_ns_bucket{method="...",le="..."}`).
+//! 4. **Bare and labelled series may coexist** in one family during a
+//!    migration; [`crate::cluster::Metrics::counter_value`] sums the
+//!    whole family, so totals survive a call site gaining labels.
+//!
+//! Exposition is deterministic: families and label sets render in
+//! sorted order in both `--prom` and `--json` output.
+//!
 //! ## Metric-name catalog
 //!
 //! | Metric | Type | Meaning |
 //! |---|---|---|
 //! | `redbox.requests` | counter | request frames handled by the server |
 //! | `redbox.handle_ns` | histogram | server-side dispatch latency (all methods) |
-//! | `redbox.rpc.<Service.Method>_ns` | histogram | per-RPC-method dispatch latency |
+//! | `redbox.rpc_ns{method}` | histogram | per-RPC-method dispatch latency |
 //! | `redbox.streams` / `redbox.stream_items` | counter | server streams opened / items pushed |
-//! | `kube.api.<verb>` | counter | ApiServer verb calls (create/get/update/...) |
+//! | `kube.api.<verb>{gvk}` | counter | ApiServer verb calls (create/get/update/...), per resource |
+//! | `kube.api.audit_records` | counter | audit records appended |
 //! | `kube.store.commit_ns` | histogram | whole store commit (WAL + fan-out + publish) |
 //! | `kube.store.wal_append_ns` | histogram | WAL append inside the commit |
 //! | `kube.store.fanout_ns` | histogram | watcher fan-out inside the commit |
 //! | `kube.informer.deliver_ns` | histogram | informer event apply+forward latency |
 //! | `kube.informer.{lists,resyncs,delta_relists,events}` | counter | reflector activity |
+//! | `kube.events.emitted{reason}` | counter | cluster Events recorded, per reason |
+//! | `kube.events.coalesced{reason}` | counter | Event writes folded into a count bump |
+//! | `kube.events.gc` | counter | Events reaped by TTL GC |
 //! | `kueue.cycles` | counter | admission cycles run |
 //! | `kueue.cycle_ns` | histogram | admission cycle duration |
 //! | `kube.sched.cycle_ns` | histogram | scheduler cycle duration |
@@ -50,22 +79,32 @@
 //!
 //! Scrape any of these remotely: `hpcorc metrics --socket <sock> --prom`
 //! (Prometheus text) or `--json` (structured snapshot); span trees via
-//! `hpcorc trace <kind>/<name> --socket <sock>`.
+//! `hpcorc trace <kind>/<name> --socket <sock>`; the audit trail via
+//! `hpcorc audit --socket <sock>` ([`audit`]).
 //!
 //! ## Overhead
 //!
 //! `benches/obs.rs` measures span record cost (one mutex push), the
-//! disabled path (one atomic load — effectively free), and snapshot
-//! rendering at 10k metrics. Disable process-wide with [`set_enabled`].
+//! disabled path (one atomic load — effectively free), the sampled-out
+//! path under `HPCORC_TRACE_SAMPLE` (one modulo on drop), the event
+//! recorder hot path, and labelled Prometheus rendering at 10k series.
+//! Disable process-wide with [`set_enabled`]; sample with
+//! [`set_trace_sample`].
 
+pub mod audit;
 pub mod prom;
 pub mod service;
 pub mod trace;
 
+pub use audit::{
+    audit_service, current_actor, push_actor, ActorGuard, AuditLog, AuditRecord,
+    AUDIT_RING_CAPACITY, UNATTRIBUTED,
+};
 pub use prom::{render_json, render_prom, sanitize};
 pub use service::{metrics_service, register, spans_service};
 pub use trace::{
-    by_trace, chrome_events, chrome_json, clear, current, enabled, export_chrome_json,
-    set_enabled, span, span_with_parent, spans_snapshot, Span, SpanGuard, TraceContext,
-    CREATED_WALL_ANNOTATION, TRACE_ANNOTATION,
+    attach_span_log, by_trace, chrome_events, chrome_json, clear, current, enabled,
+    export_chrome_json, replay_span_log, sampled, set_enabled, set_span_sink, set_trace_sample,
+    span, span_from_value, span_to_value, span_with_parent, spans_snapshot, Span, SpanGuard,
+    TraceContext, CREATED_WALL_ANNOTATION, TRACE_ANNOTATION,
 };

@@ -2,13 +2,17 @@
 //! [`Metrics`] registry.
 //!
 //! The text format follows the Prometheus exposition conventions:
-//! metric names sanitized to `[a-zA-Z0-9_:]`, one `# TYPE` line per
-//! family, histograms rendered as cumulative `_bucket{le="..."}` series
-//! plus `_sum`/`_count`. Values come straight from the registry's typed
-//! snapshots, so a scrape never blocks a hot path for longer than the
-//! per-map mutexes it already uses.
+//! metric names sanitized to `[a-zA-Z0-9_:]`, **one `# TYPE` line per
+//! family** (a labelled family renders every `{k="v"}` series under a
+//! single header), histograms rendered as cumulative `_bucket{le="..."}`
+//! series plus `_sum`/`_count` — family labels precede `le`. Families
+//! and the label sets inside them render in sorted order (the registry's
+//! canonical-key BTreeMap), so scrapes, smoke greps, and golden diffs
+//! are stable across runs. Values come straight from the registry's
+//! typed snapshots, so a scrape never blocks a hot path for longer than
+//! the per-map mutexes it already uses.
 
-use crate::cluster::Metrics;
+use crate::cluster::{split_key, Metrics};
 use crate::encoding::Value;
 use crate::util::Hist;
 
@@ -24,37 +28,68 @@ pub fn sanitize(name: &str) -> String {
     out
 }
 
+/// Group a snapshot of canonical keys into sorted families, each holding
+/// its series as `(label rendering, value)` in canonical (sorted) order.
+fn families<T>(snap: Vec<(String, T)>) -> Vec<(String, Vec<(Option<String>, T)>)> {
+    let mut out: std::collections::BTreeMap<String, Vec<(Option<String>, T)>> =
+        std::collections::BTreeMap::new();
+    for (key, v) in snap {
+        let (family, labels) = split_key(&key);
+        out.entry(sanitize(family)).or_default().push((labels.map(str::to_string), v));
+    }
+    out.into_iter().collect()
+}
+
 /// Render the whole registry in Prometheus text exposition format.
 pub fn render_prom(metrics: &Metrics) -> String {
     let mut out = String::new();
-    for (name, v) in metrics.counters_snapshot() {
-        let n = sanitize(&name);
-        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+    for (family, series) in families(metrics.counters_snapshot()) {
+        out.push_str(&format!("# TYPE {family} counter\n"));
+        for (labels, v) in series {
+            match labels {
+                Some(l) => out.push_str(&format!("{family}{{{l}}} {v}\n")),
+                None => out.push_str(&format!("{family} {v}\n")),
+            }
+        }
     }
-    for (name, v) in metrics.gauges_snapshot() {
-        let n = sanitize(&name);
-        out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+    for (family, series) in families(metrics.gauges_snapshot()) {
+        out.push_str(&format!("# TYPE {family} gauge\n"));
+        for (labels, v) in series {
+            match labels {
+                Some(l) => out.push_str(&format!("{family}{{{l}}} {v}\n")),
+                None => out.push_str(&format!("{family} {v}\n")),
+            }
+        }
     }
-    for (name, h) in metrics.hists_snapshot() {
-        render_hist(&mut out, &sanitize(&name), &h);
+    for (family, series) in families(metrics.hists_snapshot()) {
+        out.push_str(&format!("# TYPE {family} histogram\n"));
+        for (labels, h) in series {
+            render_hist(&mut out, &family, labels.as_deref(), &h);
+        }
     }
     out
 }
 
-fn render_hist(out: &mut String, name: &str, h: &Hist) {
-    out.push_str(&format!("# TYPE {name} histogram\n"));
+fn render_hist(out: &mut String, name: &str, labels: Option<&str>, h: &Hist) {
+    // Family labels come before `le` so an unlabelled histogram renders
+    // exactly the pre-PR-8 shape (`_bucket{le="..."}`).
+    let le_prefix = labels.map(|l| format!("{l},")).unwrap_or_default();
+    let suffix = labels.map(|l| format!("{{{l}}}")).unwrap_or_default();
     let mut cum = 0u64;
     for (le, count) in h.buckets_nonzero() {
         cum += count;
-        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        out.push_str(&format!("{name}_bucket{{{le_prefix}le=\"{le}\"}} {cum}\n"));
     }
-    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
-    out.push_str(&format!("{name}_sum {}\n", h.sum()));
-    out.push_str(&format!("{name}_count {}\n", h.count()));
+    out.push_str(&format!("{name}_bucket{{{le_prefix}le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum{suffix} {}\n", h.sum()));
+    out.push_str(&format!("{name}_count{suffix} {}\n", h.count()));
 }
 
 /// Render the registry as one structured JSON object:
 /// `{"counters":{...},"gauges":{...},"hists":{name:{count,mean,p50,...}}}`.
+/// Keys are the registry's canonical series keys (labelled series keep
+/// their `{k="v"}` suffix) in sorted order, so the JSON is byte-stable
+/// for a given registry state.
 pub fn render_json(metrics: &Metrics) -> Value {
     let mut counters = Value::map();
     for (name, v) in metrics.counters_snapshot() {
@@ -118,13 +153,69 @@ mod tests {
     }
 
     #[test]
+    fn renders_labelled_families_under_one_type_header() {
+        let m = Metrics::new();
+        m.inc_with("kube.api.create", &[("gvk", "pods")]);
+        m.add_with("kube.api.create", &[("gvk", "nodes")], 2);
+        m.inc("kube.api.create"); // bare series coexists with labelled ones
+        m.observe_with("redbox.rpc_ns", &[("method", "kube.Api/Create")], 500);
+        let text = render_prom(&m);
+        assert_eq!(
+            text.matches("# TYPE kube_api_create counter").count(),
+            1,
+            "one TYPE line per family: {text}"
+        );
+        assert!(text.contains("kube_api_create 1\n"));
+        assert!(text.contains("kube_api_create{gvk=\"nodes\"} 2\n"));
+        assert!(text.contains("kube_api_create{gvk=\"pods\"} 1\n"));
+        // Histogram labels merge before `le`; _sum/_count carry them too.
+        assert!(text.contains("# TYPE redbox_rpc_ns histogram\n"));
+        assert!(
+            text.contains("redbox_rpc_ns_bucket{method=\"kube.Api/Create\",le=\"+Inf\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("redbox_rpc_ns_sum{method=\"kube.Api/Create\"} 500\n"));
+        assert!(text.contains("redbox_rpc_ns_count{method=\"kube.Api/Create\"} 1\n"));
+    }
+
+    #[test]
+    fn exposition_order_is_deterministic_and_sorted() {
+        let text = |order: &[(&str, &str)]| {
+            let m = Metrics::new();
+            for (f, l) in order {
+                m.inc_with(f, &[("k", l)]);
+            }
+            m.inc("alpha");
+            m.observe("zz.lat_ns", 5);
+            render_prom(&m)
+        };
+        let a = text(&[("mid", "b"), ("mid", "a"), ("aaa", "x")]);
+        let b = text(&[("aaa", "x"), ("mid", "a"), ("mid", "b")]);
+        assert_eq!(a, b, "exposition must not depend on recording order");
+        let fam_lines: Vec<&str> =
+            a.lines().filter(|l| l.starts_with("# TYPE")).collect();
+        let mut sorted = fam_lines.clone();
+        sorted.sort();
+        assert_eq!(fam_lines, sorted, "families render in sorted order");
+        let mid_series: Vec<&str> =
+            a.lines().filter(|l| l.starts_with("mid{")).collect();
+        assert_eq!(mid_series, vec![r#"mid{k="a"} 1"#, r#"mid{k="b"} 1"#]);
+    }
+
+    #[test]
     fn json_snapshot_shape() {
         let m = Metrics::new();
         m.inc("c");
         m.set_gauge("g", 5);
         m.observe("h", 42);
+        m.inc_with("c", &[("gvk", "pods")]);
         let v = render_json(&m);
         assert_eq!(v.get("counters").unwrap().opt_int("c"), Some(1));
+        assert_eq!(
+            v.get("counters").unwrap().opt_int(r#"c{gvk="pods"}"#),
+            Some(1),
+            "labelled series keep their canonical key in JSON"
+        );
         assert_eq!(v.get("gauges").unwrap().opt_int("g"), Some(5));
         let h = v.get("hists").unwrap().get("h").unwrap();
         assert_eq!(h.opt_int("count"), Some(1));

@@ -1,18 +1,21 @@
-//! Remote telemetry services: `obs.Metrics` and `obs.Spans` over the
-//! red-box socket.
+//! Remote telemetry services: `obs.Metrics`, `obs.Spans`, and
+//! `obs.Audit` over the red-box socket.
 //!
 //! Registered next to `kube.Api` by the testbed (and anything else that
-//! runs a [`RedboxServer`]), these are what `hpcorc metrics --socket`
-//! and `hpcorc trace <kind>/<name>` scrape — the daemon's registry and
-//! span ring become remotely visible without a second transport.
+//! runs a [`RedboxServer`]), these are what `hpcorc metrics --socket`,
+//! `hpcorc trace <kind>/<name>`, and `hpcorc audit` scrape — the
+//! daemon's registry, span ring, and audit trail become remotely
+//! visible without a second transport.
 //!
 //! Methods:
 //! - `obs.Metrics/Snapshot` → structured JSON ([`super::prom::render_json`])
 //! - `obs.Metrics/Prom` → `{"text": <Prometheus exposition>}`
 //! - `obs.Spans/Export` → `{"events": [<Chrome trace events>]}` (whole ring)
 //! - `obs.Spans/ByTrace` `{trace: "<16-hex id>"}` → same shape, one trace
+//! - `obs.Audit/Query` `{since?, kind?}` → `{"records": [...]}`
+//!   ([`super::audit::audit_service`])
 
-use super::{prom, trace};
+use super::{audit, prom, trace};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
 use crate::redbox::server::{FnService, RedboxServer, Service};
@@ -43,10 +46,13 @@ pub fn spans_service() -> Arc<dyn Service> {
     }))
 }
 
-/// Register both telemetry services on a running server.
-pub fn register(server: &RedboxServer, metrics: Metrics) {
+/// Register the telemetry services on a running server: metrics + spans,
+/// plus `obs.Audit` over the given audit trail (typically the
+/// ApiServer's — `api.audit_log().clone()`).
+pub fn register(server: &RedboxServer, metrics: Metrics, audit_log: audit::AuditLog) {
     server.register("obs.Metrics", metrics_service(metrics));
     server.register("obs.Spans", spans_service());
+    server.register("obs.Audit", audit::audit_service(audit_log));
 }
 
 #[cfg(test)]
@@ -65,7 +71,9 @@ mod tests {
         metrics.inc("obs.test.counter");
         metrics.observe("obs.test.lat_ns", 1234);
         let mut srv = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
-        register(&srv, metrics);
+        let audit_log = audit::AuditLog::new();
+        audit_log.record("create", "Pod", "p1", Some("ff".into()), "ok".into(), 7);
+        register(&srv, metrics, audit_log);
         {
             let _g = trace::span("obs-test", "remote-scrape");
         }
@@ -95,6 +103,14 @@ mod tests {
             e.opt_str("name").is_some() && e.get("args").is_some()
         }));
         assert!(events.iter().any(|e| e.opt_str("name") == Some("remote-scrape")));
+
+        let audit = client
+            .call("obs.Audit/Query", Value::map().with("kind", "Pod"))
+            .unwrap();
+        let records = audit.get("records").unwrap().as_seq().unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].opt_str("verb"), Some("create"));
+        assert_eq!(records[0].opt_str("trace"), Some("ff"));
 
         assert!(client.call("obs.Metrics/Nope", Value::Null).is_err());
         srv.stop();

@@ -16,9 +16,24 @@
 //! disabled ([`set_enabled`]) every guard is a no-op costing one atomic
 //! load — benchmarked in `benches/obs.rs`.
 
+//!
+//! **Sampling** (PR 8): `HPCORC_TRACE_SAMPLE=N` (or [`set_trace_sample`])
+//! records 1-in-N root traces. The verdict is a pure function of the
+//! `trace_id` ([`sampled`]), so every child span — including spans
+//! adopted across the red-box wire or an object annotation — follows its
+//! root's verdict and sampled traces stay *connected*. Unsampled spans
+//! still push/pop thread-local context (propagation is unaffected); only
+//! the ring write is skipped.
+//!
+//! **Durability** (PR 8): a process-wide span sink ([`set_span_sink`])
+//! observes every recorded span — the testbed attaches a WAL-style
+//! JSON-line file sink ([`attach_span_log`]) next to the store's WAL and
+//! replays it into the ring on boot ([`replay_span_log`]), so
+//! `hpcorc trace KIND/NAME` reconstructs timelines across a restart.
+
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 /// Object annotation carrying the originating trace context
@@ -84,6 +99,12 @@ pub struct Span {
 static ENABLED: AtomicBool = AtomicBool::new(true);
 static NEXT: AtomicU64 = AtomicU64::new(1);
 static SEED: AtomicU64 = AtomicU64::new(0);
+/// 0 = read `HPCORC_TRACE_SAMPLE` on first use; >= 1 afterwards.
+static SAMPLE_N: AtomicU64 = AtomicU64::new(0);
+static SINK_SET: AtomicBool = AtomicBool::new(false);
+
+type SpanSink = dyn Fn(&Span) + Send + Sync;
+static SINK: Mutex<Option<Arc<SpanSink>>> = Mutex::new(None);
 
 struct Ring {
     spans: Vec<Span>,
@@ -106,6 +127,44 @@ pub fn enabled() -> bool {
 /// no-op and [`current`] keeps answering for already-open spans only.
 pub fn set_enabled(on: bool) {
     ENABLED.store(on, Ordering::Relaxed);
+}
+
+fn sample_n() -> u64 {
+    let n = SAMPLE_N.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let n = std::env::var("HPCORC_TRACE_SAMPLE")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1);
+    // First writer wins; every thread then agrees on one rate.
+    let _ = SAMPLE_N.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+    SAMPLE_N.load(Ordering::Relaxed)
+}
+
+/// Set the trace sampling rate: record 1-in-`n` root traces (`n <= 1`
+/// records everything). Overrides `HPCORC_TRACE_SAMPLE`.
+pub fn set_trace_sample(n: u64) {
+    SAMPLE_N.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Whether a trace is recorded under the current sampling rate. A pure
+/// function of the trace id, so children (local or adopted across a
+/// wire/annotation hop) always share their root's verdict.
+pub fn sampled(trace_id: u64) -> bool {
+    let n = sample_n();
+    n <= 1 || trace_id % n == 0
+}
+
+/// Install (or with `None`, remove) the process-wide span sink, invoked
+/// for every span recorded into the ring. Used for WAL-style span
+/// durability; see [`attach_span_log`].
+pub fn set_span_sink(sink: Option<Arc<SpanSink>>) {
+    let mut s = SINK.lock().unwrap();
+    SINK_SET.store(sink.is_some(), Ordering::Relaxed);
+    *s = sink;
 }
 
 fn splitmix64(mut x: u64) -> u64 {
@@ -179,6 +238,10 @@ impl Drop for SpanGuard {
                 st.remove(pos);
             }
         });
+        // Context propagated regardless; only the recording is sampled.
+        if !sampled(a.ctx.trace_id) {
+            return;
+        }
         push_span(Span {
             trace_id: a.ctx.trace_id,
             span_id: a.ctx.span_id,
@@ -232,6 +295,18 @@ pub fn span_with_parent(component: &str, name: &str, parent: Option<TraceContext
 }
 
 fn push_span(s: Span) {
+    if SINK_SET.load(Ordering::Relaxed) {
+        let sink = SINK.lock().unwrap().clone();
+        if let Some(sink) = sink {
+            sink(&s);
+        }
+    }
+    push_span_ring_only(s);
+}
+
+/// Ring insert without the sink hop — what [`replay_span_log`] uses so a
+/// boot-time replay never re-appends to the log it is reading.
+fn push_span_ring_only(s: Span) {
     let mut r = RING.lock().unwrap();
     if r.spans.len() < RING_CAPACITY {
         r.spans.push(s);
@@ -308,6 +383,75 @@ pub fn chrome_events(spans: &[Span]) -> crate::encoding::Value {
 /// [`chrome_json`] over the whole ring.
 pub fn export_chrome_json() -> String {
     chrome_json(&spans_snapshot())
+}
+
+// ---------------------------------------------------------------------
+// Span durability (PR 8): JSON-line log next to the store's WAL.
+// ---------------------------------------------------------------------
+
+/// One span as a JSON-line record (ids in hex, matching the wire form).
+pub fn span_to_value(s: &Span) -> crate::encoding::Value {
+    crate::encoding::Value::map()
+        .with("trace", format!("{:016x}", s.trace_id))
+        .with("span", format!("{:016x}", s.span_id))
+        .with("parent", format!("{:016x}", s.parent))
+        .with("cat", s.component.clone())
+        .with("name", s.name.clone())
+        .with("ts", s.start_us)
+        .with("dur", s.dur_us)
+}
+
+/// Decode one [`span_to_value`] record; `None` on anything malformed
+/// (a torn tail line from a crash mid-append just ends the replay).
+pub fn span_from_value(v: &crate::encoding::Value) -> Option<Span> {
+    let hex = |k: &str| v.opt_str(k).and_then(|s| u64::from_str_radix(s, 16).ok());
+    Some(Span {
+        trace_id: hex("trace")?,
+        span_id: hex("span")?,
+        parent: hex("parent")?,
+        component: v.opt_str("cat")?.to_string(),
+        name: v.opt_str("name")?.to_string(),
+        start_us: v.opt_int("ts")? as u64,
+        dur_us: v.opt_int("dur")? as u64,
+    })
+}
+
+/// Install a file sink appending one JSON line per recorded span to
+/// `path` (created if missing, appended otherwise). Replaces any prior
+/// sink. The write is flushed per span — the same durability stance as
+/// the store WAL's append-on-commit.
+pub fn attach_span_log(path: &std::path::Path) -> crate::util::Result<()> {
+    use std::io::Write;
+    let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let file = Mutex::new(file);
+    set_span_sink(Some(Arc::new(move |s: &Span| {
+        let line = crate::encoding::json::to_string(&span_to_value(s));
+        let mut f = file.lock().unwrap();
+        let _ = writeln!(f, "{line}");
+        let _ = f.flush();
+    })));
+    Ok(())
+}
+
+/// Replay a span log into the ring (oldest first; only the newest
+/// [`RING_CAPACITY`] survive, matching live behavior). Malformed lines
+/// are skipped. Returns how many spans were restored. Call **before**
+/// [`attach_span_log`] on the same file, or the replay re-appends.
+pub fn replay_span_log(path: &std::path::Path) -> usize {
+    let Ok(text) = std::fs::read_to_string(path) else { return 0 };
+    let mut spans: Vec<Span> = text
+        .lines()
+        .filter_map(|l| crate::encoding::json::parse(l).ok())
+        .filter_map(|v| span_from_value(&v))
+        .collect();
+    if spans.len() > RING_CAPACITY {
+        spans.drain(..spans.len() - RING_CAPACITY);
+    }
+    let n = spans.len();
+    for s in spans {
+        push_span_ring_only(s);
+    }
+    n
 }
 
 /// The recorder is process-global; tests (here and in sibling modules)
@@ -407,6 +551,74 @@ mod tests {
         assert_eq!(e.opt_str("ph"), Some("X"));
         assert!(e.get("ts").is_some() && e.get("dur").is_some());
         assert!(e.get("args").unwrap().opt_str("trace_id").is_some());
+    }
+
+    #[test]
+    fn sampling_records_one_in_n_and_children_follow_the_root() {
+        let _s = serial();
+        set_enabled(true);
+        clear();
+        set_trace_sample(2);
+        // Trace ids are pseudo-random, so hunt until both verdicts seen.
+        let (mut kept, mut dropped) = (None, None);
+        for _ in 0..512 {
+            let g = span("sample-test", "root");
+            let ctx = g.context().unwrap();
+            assert!(current().is_some(), "context propagates even when unsampled");
+            {
+                let _c = span("sample-test", "child");
+            }
+            drop(g);
+            if sampled(ctx.trace_id) {
+                kept.get_or_insert(ctx.trace_id);
+            } else {
+                dropped.get_or_insert(ctx.trace_id);
+            }
+            if kept.is_some() && dropped.is_some() {
+                break;
+            }
+        }
+        let kept = kept.expect("a sampled trace in 512 draws");
+        let dropped = dropped.expect("an unsampled trace in 512 draws");
+        assert_eq!(by_trace(kept).len(), 2, "sampled root records root + child");
+        assert!(by_trace(dropped).is_empty(), "unsampled trace records nothing");
+        // An adopted span (wire/annotation hop) follows its root's verdict.
+        let remote = TraceContext { trace_id: dropped, span_id: 7, parent: 0 };
+        {
+            let _g = span_with_parent("sample-test", "adopted", Some(remote));
+        }
+        assert!(by_trace(dropped).is_empty(), "adoption keeps the root verdict");
+        set_trace_sample(1);
+    }
+
+    #[test]
+    fn span_log_replays_across_a_restart() {
+        let _s = serial();
+        set_enabled(true);
+        set_trace_sample(1);
+        let path = std::env::temp_dir()
+            .join(format!("hpcorc-span-log-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        attach_span_log(&path).unwrap();
+        let tid = {
+            let g = span("persist-test", "boot-span");
+            let t = g.context().unwrap().trace_id;
+            drop(g);
+            t
+        };
+        set_span_sink(None);
+        clear(); // the "restart": the in-memory ring is gone
+        assert!(by_trace(tid).is_empty());
+        assert!(replay_span_log(&path) >= 1);
+        let got = by_trace(tid);
+        assert_eq!(got.len(), 1, "replay restores the persisted span");
+        assert_eq!(got[0].name, "boot-span");
+        assert_eq!(got[0].component, "persist-test");
+        // Codec round trip is exact.
+        let back = span_from_value(&span_to_value(&got[0])).unwrap();
+        assert_eq!(back.span_id, got[0].span_id);
+        assert_eq!(back.start_us, got[0].start_us);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

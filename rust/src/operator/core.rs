@@ -22,11 +22,18 @@ use super::virtual_node::{LABEL_QUEUE, LABEL_WLM, VIRTUAL_KUBELET_TAINT};
 use crate::cluster::{Metrics, Resources};
 use crate::encoding::Value;
 use crate::kube::scheduler::pod_with_tolerations;
-use crate::kube::{ApiClient, Controller, PodView, Reconcile, WlmJobView, KIND_POD};
+use crate::kube::{
+    ApiClient, Controller, EventRecorder, PodView, Reconcile, WlmJobView, EVENT_NORMAL,
+    EVENT_WARNING, KIND_POD,
+};
 use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Component name stamped on events and audit records this controller
+/// writes.
+const COMPONENT: &str = "kube-operator";
 
 /// Operator phases surfaced in `status.phase` (lowercase as in Fig. 4).
 pub mod phase {
@@ -95,6 +102,7 @@ pub struct WlmJobOperator {
     bridge: Arc<dyn WlmBridge>,
     /// name → WLM job id, for cancellation when the object is deleted.
     tracked: Mutex<HashMap<String, String>>,
+    events: EventRecorder,
     metrics: Metrics,
 }
 
@@ -104,7 +112,13 @@ impl WlmJobOperator {
         bridge: Arc<dyn WlmBridge>,
         metrics: Metrics,
     ) -> Arc<Self> {
-        Arc::new(WlmJobOperator { config, bridge, tracked: Mutex::new(HashMap::new()), metrics })
+        Arc::new(WlmJobOperator {
+            config,
+            bridge,
+            tracked: Mutex::new(HashMap::new()),
+            events: EventRecorder::new(COMPONENT, metrics.clone()),
+            metrics,
+        })
     }
 
     fn dummy_pod_name(job: &str) -> String {
@@ -184,6 +198,9 @@ impl Controller for WlmJobOperator {
     }
 
     fn reconcile(&self, api: &dyn ApiClient, name: &str) -> Result<Reconcile> {
+        // Every write this pass makes is attributed to the operator in the
+        // API server's audit trail (PR 8).
+        let _actor = crate::obs::push_actor(COMPONENT);
         let obj = match api.get(self.config.kind, name) {
             Ok(o) => o,
             Err(e) if e.is_not_found() => {
@@ -275,6 +292,16 @@ impl Controller for WlmJobOperator {
                     o.status.insert("phase", "Succeeded");
                     o.status.insert("log", format!("submitted as {job_id}"));
                 });
+                let _ = self.events.event(
+                    api,
+                    &obj,
+                    EVENT_NORMAL,
+                    "WlmSubmitted",
+                    &format!(
+                        "Submitted batch script to {} as job {job_id}",
+                        self.config.wlm
+                    ),
+                );
                 self.metrics.inc("operator.jobs_submitted");
                 Ok(Reconcile::RequeueAfter(self.config.poll))
             }
@@ -293,6 +320,16 @@ impl Controller for WlmJobOperator {
                         api.update_status(self.config.kind, name, &|o| {
                             o.status.insert("exitCode", exit_code as i64);
                         })?;
+                        let _ = self.events.event(
+                            api,
+                            &obj,
+                            EVENT_WARNING,
+                            "WlmFailed",
+                            &format!(
+                                "{} job {job_id} failed with exit code {exit_code}",
+                                self.config.wlm
+                            ),
+                        );
                         phase::FAILED
                     }
                     WlmStatus::Cancelled => phase::CANCELLED,
@@ -455,6 +492,20 @@ mod tests {
         assert_eq!(p, phase::FAILED);
         let obj = env.api.get(KIND_TORQUEJOB, "bad").unwrap();
         assert_eq!(obj.status.opt_int("exitCode"), Some(3));
+        // The operator narrates the WLM handoff through events.
+        let events: Vec<crate::kube::EventView> = env
+            .api
+            .list(crate::kube::KIND_EVENT, &[])
+            .iter()
+            .map(|o| crate::kube::EventView::from_object(o).unwrap())
+            .collect();
+        let submitted = events.iter().find(|e| e.reason == "WlmSubmitted").unwrap();
+        assert_eq!(submitted.regarding_name, "bad");
+        assert_eq!(submitted.reporting_controller, COMPONENT);
+        assert!(submitted.note.contains("torque"), "{}", submitted.note);
+        let failed = events.iter().find(|e| e.reason == "WlmFailed").unwrap();
+        assert_eq!(failed.etype, crate::kube::EVENT_WARNING);
+        assert!(failed.note.contains("exit code 3"), "{}", failed.note);
         env.sd.trigger();
     }
 

@@ -315,6 +315,7 @@ impl RedboxClient {
             method: method.to_string(),
             body,
             trace: crate::obs::current().map(|c| c.to_wire()),
+            actor: crate::obs::current_actor(),
         };
         match self.round_trip(&req) {
             Ok(resp) => resp.into_result(),
@@ -346,6 +347,7 @@ impl RedboxClient {
             method: method.to_string(),
             body,
             trace: crate::obs::current().map(|c| c.to_wire()),
+            actor: crate::obs::current_actor(),
         };
         let (conn, resp, stream) = match self.try_open(&req) {
             Ok(out) => out,

@@ -41,6 +41,10 @@ pub struct Request {
     /// no trace is active. Optional on the wire, so old peers that never
     /// send (or don't understand) it interoperate unchanged.
     pub trace: Option<String>,
+    /// Caller's actor identity (`obs::current_actor`) for audit
+    /// attribution — e.g. `kubectl`, `kube-scheduler`. Optional on the
+    /// wire with the same old-peer interop stance as `trace`.
+    pub actor: Option<String>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -64,6 +68,9 @@ impl Request {
         if let Some(t) = &self.trace {
             v.insert("trace", t.clone());
         }
+        if let Some(a) = &self.actor {
+            v.insert("actor", a.clone());
+        }
         v
     }
 
@@ -73,6 +80,7 @@ impl Request {
             method: v.req_str("method")?.to_string(),
             body: v.get("body").cloned().unwrap_or(Value::Null),
             trace: v.opt_str("trace").map(String::from),
+            actor: v.opt_str("actor").map(String::from),
         })
     }
 
@@ -248,6 +256,7 @@ mod tests {
             method: "torque.Workload/SubmitJob".into(),
             body: Value::map().with("script", "#PBS -l nodes=1"),
             trace: Some("00000000000000ab-00000000000000cd".into()),
+            actor: Some("kubectl".into()),
         };
         let back = Request::decode(&req.encode()).unwrap();
         assert_eq!(back, req);
@@ -285,6 +294,7 @@ mod tests {
                 method: "kube.Api/Watch".into(),
                 body: Value::map().with("stream", true),
                 trace: None,
+                actor: None,
             }),
             Frame::Response(Response::ok(1, Value::map().with("streaming", true))),
             Frame::StreamItem { id: 1, seq: 0, body: Value::str("ev") },
@@ -295,7 +305,8 @@ mod tests {
             assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
         }
         // Untagged maps keep decoding as the classic pair.
-        let req = Request { id: 2, method: "a.B/C".into(), body: Value::Null, trace: None };
+        let req =
+            Request { id: 2, method: "a.B/C".into(), body: Value::Null, trace: None, actor: None };
         assert_eq!(Frame::decode(&req.encode()).unwrap(), Frame::Request(req));
         let resp = Response::err(3, "boom");
         assert_eq!(Frame::decode(&resp.encode()).unwrap(), Frame::Response(resp));
@@ -305,7 +316,8 @@ mod tests {
 
     #[test]
     fn malformed_method() {
-        let req = Request { id: 1, method: "nope".into(), body: Value::Null, trace: None };
+        let req =
+            Request { id: 1, method: "nope".into(), body: Value::Null, trace: None, actor: None };
         assert!(req.split_method().is_err());
     }
 

@@ -272,21 +272,23 @@ fn handle_conn(stream: UnixStream, registry: Registry, shutdown: Shutdown, metri
             Ok(Frame::Request(req)) => {
                 metrics.inc("redbox.requests");
                 let t0 = std::time::Instant::now();
-                // Adopt the caller's trace for the duration of dispatch
-                // (dispatch runs inline on this conn thread, so the
-                // thread-local context covers the whole handler). The
-                // server span parents on the client's wire span — the
-                // cross-process causal link.
+                // Adopt the caller's trace and actor for the duration of
+                // dispatch (dispatch runs inline on this conn thread, so
+                // the thread-locals cover the whole handler). The server
+                // span parents on the client's wire span — the
+                // cross-process causal link; the actor is what the
+                // ApiServer's audit middleware attributes the mutation to.
                 let reply = {
                     let parent =
                         req.trace.as_deref().and_then(crate::obs::TraceContext::parse_wire);
                     let _span =
                         crate::obs::span_with_parent("redbox-server", &req.method, parent);
+                    let _actor = req.actor.as_deref().map(crate::obs::push_actor);
                     dispatch(&req, &registry)
                 };
                 let elapsed = t0.elapsed().as_nanos() as u64;
                 metrics.observe("redbox.handle_ns", elapsed);
-                metrics.observe(&format!("redbox.rpc.{}_ns", req.method.replace('/', ".")), elapsed);
+                metrics.observe_with("redbox.rpc_ns", &[("method", &req.method)], elapsed);
                 match reply {
                     Ok(Reply::Unary(body)) => {
                         if write_locked(&writer, &Response::ok(req.id, body).encode())

@@ -716,3 +716,65 @@ fn trace_id_stamped_identically_across_all_three_transports() {
         assert_eq!(ann, watched, "{label}: watch delivery altered the annotation");
     }
 }
+
+/// PR 8: an event recorded about a traced object carries the object's
+/// trace id — identically through the in-process server and both remote
+/// watch transports. The Event object is itself plain API state, so the
+/// recorder must work unchanged against any `ApiClient`.
+#[test]
+fn event_trace_id_agrees_across_all_three_transports() {
+    use hpcorc::kube::{EventRecorder, EventView, EVENT_NORMAL, KIND_EVENT};
+    use hpcorc::obs;
+
+    /// Create a traced pod, record one event about it, and read the
+    /// event back through the same transport. Returns
+    /// (root trace id hex, the event's carried trace id).
+    fn traced_event(api: &dyn ApiClient, name: &str) -> (String, String) {
+        let created = {
+            let guard = obs::span("parity", "traced create");
+            let _root = guard.context().expect("tracing enabled by default");
+            api.create(pod(name)).expect("create")
+        };
+        let root_hex = created
+            .meta
+            .annotation(obs::TRACE_ANNOTATION)
+            .expect("create stamps the trace")
+            .split('-')
+            .next()
+            .unwrap()
+            .to_string();
+        let rec = EventRecorder::new("parity-test", Metrics::new());
+        rec.event(api, &created, EVENT_NORMAL, "ParityCheck", "event under test")
+            .expect("record event");
+        let ev = api
+            .list(KIND_EVENT, &ListOptions::all())
+            .expect("list events")
+            .items
+            .iter()
+            .filter_map(|o| EventView::from_object(o).ok())
+            .find(|e| e.regarding_name == name)
+            .expect("event readable through the same transport");
+        assert_eq!(ev.reporting_controller, "parity-test");
+        (root_hex, ev.trace_id().expect("event carries a trace").to_string())
+    }
+
+    let local_api = ApiServer::new(Metrics::new());
+    let (root, ev) = traced_event(&local_api, "ev-local");
+    assert_eq!(root, ev, "in-process: event trace must match the pod's");
+
+    for (label, force_poll) in [("poll-remote", true), ("streaming-remote", false)] {
+        let server = ApiServer::new(Metrics::new());
+        let path = parity_sock(&format!("event-{label}"));
+        let mut srv = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+        srv.register("kube.Api", server.rpc_service());
+        let remote = RemoteApi::connect(&path)
+            .unwrap()
+            .with_watch_config(WatchConfig { force_poll, ..WatchConfig::default() });
+        let (root, ev) = traced_event(&remote, "ev-remote");
+        assert_eq!(root, ev, "{label}: event trace must match the pod's");
+        // The round-trip through the wire must not have re-stamped the
+        // event with the recorder's own (absent) context: the server
+        // only stamps a trace annotation when none is present.
+        srv.stop();
+    }
+}

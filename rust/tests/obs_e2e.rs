@@ -8,10 +8,11 @@
 use hpcorc::cluster::Resources;
 use hpcorc::encoding::{json, Value};
 use hpcorc::hybrid::{Testbed, TestbedConfig};
-use hpcorc::kube::{ApiClient, PodView, RemoteApi, KIND_POD};
+use hpcorc::kube::{ApiClient, EventView, ListOptions, PodView, RemoteApi, KIND_EVENT, KIND_POD};
 use hpcorc::kueue::{ClusterQueueView, LocalQueueView, QueueResources};
 use hpcorc::obs;
 use hpcorc::redbox::RedboxClient;
+use hpcorc::singularity::{Payload, SifImage};
 use std::time::{Duration, Instant};
 
 #[test]
@@ -117,6 +118,122 @@ fn pod_lifecycle_yields_one_connected_trace_and_remote_slo_histogram() {
     // The commit path instrumentation fired too.
     assert!(text.contains("# TYPE kube_store_commit_ns histogram"));
     assert!(text.contains("# TYPE redbox_handle_ns histogram"));
+
+    tb.stop();
+}
+
+/// PR 8 acceptance: one pod lifecycle over the socket yields (a) ≥4
+/// cluster events from ≥3 distinct components, every one carrying the
+/// pod's trace id; (b) an audit trail of the mutating requests, actor-
+/// and trace-attributed; (c) a Prometheus scrape with real labelled
+/// metric families. All three views agree on the same trace.
+#[test]
+fn pod_lifecycle_yields_events_audit_and_labelled_metrics() {
+    let tb = Testbed::start(TestbedConfig::default()).expect("testbed");
+    // A payload long enough to observe Running, short enough to not
+    // outlive the test (nominal ms × time_scale 0.001 ≈ 3s real).
+    tb.images.push(SifImage::new("obs-sleep.sif", Payload::Sleep { millis: 3_000_000 }));
+    let remote = RemoteApi::connect(tb.socket()).expect("remote client");
+    remote
+        .create(ClusterQueueView::build("obs-cq", QueueResources::nodes(4)))
+        .expect("cluster queue");
+    remote.create(LocalQueueView::build("obs-team", "obs-cq")).expect("local queue");
+
+    // Traced + attributed create, exactly like `kubectl apply`.
+    let root = {
+        let _actor = obs::push_actor("e2e-test");
+        let guard = obs::span("e2e-test", "create traced pod");
+        let root = guard.context().expect("tracing on by default");
+        let mut p =
+            PodView::build("obs-pod", "obs-sleep.sif", Resources::new(100, 1 << 20, 0), &[]);
+        hpcorc::kueue::queue_workload(&mut p, "obs-team");
+        remote.create(p).expect("create pod");
+        root
+    };
+    let trace_hex = format!("{:016x}", root.trace_id);
+
+    // Admit → schedule → start: wait for Running, then for the full
+    // event fan (kueue + scheduler + kubelet all write asynchronously).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let obj = remote.get(KIND_POD, "obs-pod").expect("get pod");
+        if obj.status.opt_str("phase") == Some("Running") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "pod never ran");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let evs: Vec<EventView> = loop {
+        let evs: Vec<EventView> = remote
+            .list(KIND_EVENT, &ListOptions::all())
+            .expect("list events")
+            .items
+            .iter()
+            .filter_map(|o| EventView::from_object(o).ok())
+            .filter(|e| e.regarding_kind == KIND_POD && e.regarding_name == "obs-pod")
+            .collect();
+        let mut components: Vec<&str> =
+            evs.iter().map(|e| e.reporting_controller.as_str()).collect();
+        components.sort();
+        components.dedup();
+        if evs.len() >= 4 && components.len() >= 3 {
+            break evs;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "event fan never completed: {:?}",
+            evs.iter().map(|e| format!("{}/{}", e.reporting_controller, e.reason)).collect::<Vec<_>>()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    for e in &evs {
+        assert_eq!(
+            e.trace_id(),
+            Some(trace_hex.as_str()),
+            "event {} from {} must carry the pod's trace",
+            e.reason,
+            e.reporting_controller
+        );
+    }
+    for reason in ["Admitted", "Scheduled", "Started"] {
+        assert!(evs.iter().any(|e| e.reason == reason), "missing event {reason}");
+    }
+
+    // -- the audit trail attributes the mutating requests ----------------
+    let rpc = RedboxClient::connect(tb.socket()).expect("rpc client");
+    let audit = rpc
+        .call("obs.Audit/Query", Value::map().with("kind", KIND_POD))
+        .expect("Audit query");
+    let records = audit.get("records").and_then(Value::as_seq).unwrap_or(&[]).to_vec();
+    let create = records
+        .iter()
+        .find(|r| r.opt_str("verb") == Some("create") && r.opt_str("name") == Some("obs-pod"))
+        .expect("pod create audited");
+    assert_eq!(create.opt_str("actor"), Some("e2e-test"), "actor rides the red-box envelope");
+    assert_eq!(create.opt_str("trace"), Some(trace_hex.as_str()));
+    assert_eq!(create.opt_str("outcome"), Some("ok"));
+    // The scheduler's bind is attributed to its component and joined the
+    // same trace (origin-trace adoption).
+    assert!(
+        records.iter().any(|r| r.opt_str("actor") == Some("kube-scheduler")
+            && r.opt_str("name") == Some("obs-pod")
+            && r.opt_str("trace") == Some(trace_hex.as_str())),
+        "scheduler writes audited under its own actor + the pod's trace"
+    );
+
+    // -- labelled metric families in the Prometheus exposition -----------
+    let prom = rpc.call("obs.Metrics/Prom", Value::Null).expect("Prom scrape");
+    let text = prom.opt_str("text").expect("text body");
+    assert!(
+        text.contains("kube_api_create{gvk=\"pods\"}"),
+        "API verb counters carry a gvk label"
+    );
+    assert!(
+        text.contains("kube_events_emitted{reason=\"Scheduled\"}"),
+        "event emission counters carry a reason label"
+    );
+    assert!(text.contains("# TYPE kube_api_audit_records counter"));
 
     tb.stop();
 }

@@ -342,3 +342,68 @@ fn restart_past_compacted_window_falls_back_to_full_relist() {
     assert!(reset, "watch from the stale bookmark resets (410-Gone)");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// PR 8 satellite: completed spans persist next to the WAL
+/// (`<wal_dir>/spans.jsonl`), so `hpcorc trace KIND/NAME` still
+/// reconstructs a timeline from a rebooted daemon — the object comes
+/// back from the WAL, the spans from the replayed span log.
+#[test]
+fn restart_recovers_span_timeline_through_wal_dir() {
+    use hpcorc::encoding::Value as V;
+    use hpcorc::hybrid::{Testbed, TestbedConfig};
+    use hpcorc::obs;
+
+    let dir = wal_dir("spans");
+    let trace_id = {
+        let mut cfg = TestbedConfig::default();
+        cfg.wal_dir = Some(dir.clone());
+        let tb = Testbed::start(cfg).unwrap();
+        let trace_id = {
+            let guard = obs::span("persist-test", "create traced pod");
+            let id = guard.context().unwrap().trace_id;
+            tb.api
+                .create(PodView::build("sp", "img.sif", Resources::new(100, 1 << 20, 0), &[]))
+                .unwrap();
+            id
+        };
+        // Wait for the bind so the scheduler's span joins the trace.
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        loop {
+            let obj = tb.api.get(KIND_POD, "sp").unwrap();
+            if obj.spec.opt_str("nodeName").is_some() {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "pod never bound");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Give the bind span a moment to close into the sink file.
+        std::thread::sleep(Duration::from_millis(50));
+        tb.stop();
+        trace_id
+    };
+
+    // The "restart": wipe the in-memory ring — only the WAL dir remains.
+    obs::clear();
+    assert!(obs::by_trace(trace_id).is_empty(), "ring wiped; spans only on disk now");
+
+    let mut cfg = TestbedConfig::default();
+    cfg.wal_dir = Some(dir.clone());
+    let tb = Testbed::start(cfg).unwrap();
+    // The object recovered with its trace annotation intact…
+    let obj = tb.api.get(KIND_POD, "sp").unwrap();
+    let wire = obj.meta.annotation(obs::TRACE_ANNOTATION).unwrap();
+    let ctx = obs::TraceContext::parse_wire(wire).unwrap();
+    assert_eq!(ctx.trace_id, trace_id, "annotation survives the WAL");
+    // …and the replayed span log reconstructs its timeline, both
+    // in-process and over the socket (the `hpcorc trace` path).
+    let spans = obs::by_trace(trace_id);
+    assert!(spans.len() >= 3, "replayed timeline is multi-span, got {}", spans.len());
+    let rpc = hpcorc::redbox::RedboxClient::connect(tb.socket()).unwrap();
+    let out = rpc
+        .call("obs.Spans/ByTrace", V::map().with("trace", format!("{trace_id:016x}")))
+        .unwrap();
+    let events = out.get("events").and_then(V::as_seq).unwrap_or(&[]).to_vec();
+    assert!(!events.is_empty(), "remote span service serves the replayed trace");
+    tb.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}

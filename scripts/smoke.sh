@@ -35,7 +35,7 @@ echo "== sim: kueue quota admission over a generated tenants trace =="
 "$HPCORC" sim --kind tenants --jobs 60 --policy easy --quota-nodes 4 --cohort
 
 echo "== testbed up + kubectl table paths over the socket =="
-"$HPCORC" up --socket "$SOCK" --run-for 120 >"$WORK/up.log" 2>&1 &
+"$HPCORC" up --socket "$SOCK" --run-for 120 --audit-log "$WORK/audit.jsonl" >"$WORK/up.log" 2>&1 &
 UP_PID=$!
 for _ in $(seq 1 100); do
   [ -S "$SOCK" ] && break
@@ -124,6 +124,69 @@ grep -q 'apiserver' "$WORK/trace.out"
 python3 -c "import json,sys; json.load(open('$WORK/trace.json'))" 2>/dev/null \
   || node -e "JSON.parse(require('fs').readFileSync('$WORK/trace.json'))" 2>/dev/null \
   || grep -q '^\[' "$WORK/trace.json"
+
+echo "== cluster events + audit trail (PR 8) =="
+# A queued pod drives the full event fan: kueue admits it, the scheduler
+# binds it, a kubelet pulls + starts it — four events, three components.
+cat >"$WORK/ev.yaml" <<'EOF'
+apiVersion: kueue.x-k8s.io/v1beta1
+kind: LocalQueue
+metadata:
+  name: smoke-team
+spec:
+  clusterQueue: smoke-cq
+---
+kind: Pod
+metadata:
+  name: smoke-ev-pod
+  labels:
+    kueue.x-k8s.io/queue-name: smoke-team
+spec:
+  containers:
+    - name: main
+      image: lolcow_latest.sif
+      resources:
+        requests:
+          cpu: 100m
+EOF
+"$HPCORC" kubectl apply -f "$WORK/ev.yaml" --socket "$SOCK"
+for _ in $(seq 1 150); do
+  "$HPCORC" kubectl get events --socket "$SOCK" >"$WORK/events.out"
+  grep -q Started "$WORK/events.out" && break
+  sleep 0.2
+done
+cat "$WORK/events.out"
+for reason in Admitted Scheduled Pulled Started; do
+  grep -q "$reason" "$WORK/events.out"
+done
+# `kubectl describe` interleaves the object, its events (>=4, from >=3
+# components), and the trace timeline — one command, whole lifecycle.
+"$HPCORC" kubectl describe pod/smoke-ev-pod --socket "$SOCK" | tee "$WORK/describe.out"
+grep -q '^Events:' "$WORK/describe.out"
+for reason in Admitted Scheduled Pulled Started; do
+  grep -q "$reason" "$WORK/describe.out"
+done
+for component in kueue kube-scheduler kubelet; do
+  grep -q "$component" "$WORK/describe.out"
+done
+grep -q '^trace ' "$WORK/describe.out"
+# The audit trail attributes the CLI's mutating requests, and its trace
+# id for the pod create matches the describe timeline's.
+"$HPCORC" audit --socket "$SOCK" --kind po >"$WORK/audit.out"
+cat "$WORK/audit.out"
+grep -Eq 'create[[:space:]]+Pod[[:space:]]+smoke-ev-pod[[:space:]]+kubectl[[:space:]]+ok' "$WORK/audit.out"
+TRACE=$(grep -E 'create[[:space:]]+Pod[[:space:]]+smoke-ev-pod' "$WORK/audit.out" | grep -oE '[0-9a-f]{16}$' | head -1)
+test -n "$TRACE"
+grep -q "$TRACE" "$WORK/describe.out"
+# The --audit-log file sink captured the same records as JSON lines.
+grep -q '"verb"' "$WORK/audit.jsonl"
+grep -q 'smoke-ev-pod' "$WORK/audit.jsonl"
+# Labelled metric families (PR 8): a fresh scrape exposes real {k="v"}
+# pairs for the API verbs and the event-emission counters.
+"$HPCORC" metrics --socket "$SOCK" --prom >"$WORK/metrics2.prom"
+grep -q 'kube_api_create{gvk="events"}' "$WORK/metrics2.prom"
+grep -q 'kube_events_emitted{reason="Scheduled"}' "$WORK/metrics2.prom"
+grep -q '^# TYPE kube_api_audit_records counter' "$WORK/metrics2.prom"
 
 kill "$UP_PID" 2>/dev/null || true
 wait "$UP_PID" 2>/dev/null || true
