@@ -1,0 +1,190 @@
+//! Scheduler throughput (PR 9): what do the fit/score index and the
+//! batched bind path actually buy at fleet scale?
+//!
+//! - **flash-crowd drain, indexed vs brute** — pods scheduled per second
+//!   at 1k and 10k nodes. The indexed path is `run_cycle` (SchedIndex
+//!   candidates + one `update_status_batch` per cycle); the baseline is
+//!   `run_cycle_brute`, the pre-PR-9 pass kept verbatim (O(nodes)
+//!   filter/score per pod, linear `used` lookups, one `update_status`
+//!   round trip per bind). Pod creation happens outside the timed
+//!   window — only the scheduling cycle is measured.
+//! - **index maintenance per delta** — cost of folding one informer
+//!   delta (node heartbeat) into the index.
+//! - **bind round trips, batched vs single** — red-box requests crossing
+//!   the socket to commit a 64-pod burst.
+//!
+//! Ends with `{"bench":...}` JSON lines for the perf trajectory and the
+//! PR 9 acceptance asserts: indexed ≥ 10× brute pods/sec at 10k nodes,
+//! and the 64-pod batch commits in ≤ 2 round trips.
+
+use hpcorc::bench::fmt_ns;
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::encoding::Value;
+use hpcorc::kube::{
+    ApiClient, ApiServer, BatchPatchItem, KubeScheduler, NodeView, PodView,
+    RemoteApi, SharedInformerFactory, KIND_NODE, KIND_POD,
+};
+use hpcorc::redbox::RedboxServer;
+use hpcorc::rt::Shutdown;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A uniform fleet of `n` 64-core workers behind a warm scheduler (the
+/// seed cycle pays the informer list + initial index build up front).
+fn fleet(n: usize) -> (ApiServer, SharedInformerFactory, KubeScheduler) {
+    let api = ApiServer::new(Metrics::new());
+    for i in 0..n {
+        api.create(NodeView::build(&format!("w{i:05}"), Resources::cores(64, 256 << 30), &[]))
+            .unwrap();
+    }
+    let informers = SharedInformerFactory::new(api.client(), Metrics::new());
+    let sched = KubeScheduler::new(&informers, Metrics::new());
+    assert_eq!(sched.run_cycle(), 0);
+    (api, informers, sched)
+}
+
+/// Drain `reps` bursts of `burst` pods each through one cycle per burst,
+/// timing only the cycles. Returns pods scheduled per second.
+fn drain_rate(
+    label: &str,
+    api: &ApiServer,
+    sched: &KubeScheduler,
+    burst: usize,
+    reps: usize,
+    brute: bool,
+) -> f64 {
+    let mut seq = 0usize;
+    let mut total_ns = 0u128;
+    let mut total_pods = 0usize;
+    for _ in 0..reps {
+        for _ in 0..burst {
+            seq += 1;
+            api.create(PodView::build(
+                &format!("p{seq:07}"),
+                "lolcow_latest.sif",
+                Resources::new(100, 1 << 20, 0),
+                &[],
+            ))
+            .unwrap();
+        }
+        let t0 = Instant::now();
+        let bound = if brute { sched.run_cycle_brute() } else { sched.run_cycle() };
+        total_ns += t0.elapsed().as_nanos();
+        assert_eq!(bound, burst, "{label}: whole burst must bind");
+        total_pods += bound;
+    }
+    let mean_cycle = total_ns as f64 / reps as f64;
+    let rate = total_pods as f64 / (total_ns as f64 / 1e9).max(1e-12);
+    println!("{label:<44} {:>10}/cycle   {rate:>12.0} pods/s", fmt_ns(mean_cycle));
+    println!(
+        "{{\"bench\":\"{label}\",\"pods\":{total_pods},\"mean_cycle_ns\":{mean_cycle:.0},\"pods_per_sec\":{rate:.0}}}"
+    );
+    rate
+}
+
+fn main() {
+    println!("=== scheduler throughput: fit/score index + batched binds ===");
+
+    // Flash-crowd drain at both fleet scales. Separate fleets per mode:
+    // index state and bound-pod caches must not leak across baselines.
+    // The brute burst shrinks at 10k — it is O(pods × nodes²) and exists
+    // to be beaten, not waited on.
+    let mut indexed_10k = 0.0f64;
+    let mut brute_10k = 0.0f64;
+    for n in [1_000usize, 10_000] {
+        let (api, _inf, sched) = fleet(n);
+        let r = drain_rate(&format!("drain indexed ({n} nodes)"), &api, &sched, 64, 3, false);
+        if n == 10_000 {
+            indexed_10k = r;
+        }
+        let (api, _inf, sched) = fleet(n);
+        let burst = if n >= 10_000 { 8 } else { 64 };
+        let r =
+            drain_rate(&format!("drain brute-force ({n} nodes)"), &api, &sched, burst, 2, true);
+        if n == 10_000 {
+            brute_10k = r;
+        }
+    }
+
+    // Index maintenance: fold a batch of node-heartbeat deltas and charge
+    // the refresh per delta. Writes and informer sync stay untimed — the
+    // row is the index's own cost, not the transport's.
+    let (api, informers, sched) = fleet(1_000);
+    let nodes = informers.informer(KIND_NODE);
+    let index = sched.index();
+    const DELTAS: usize = 100;
+    let mut beat = 0u64;
+    let mut per_delta = Vec::new();
+    for _ in 0..20 {
+        for i in 0..DELTAS {
+            beat += 1;
+            api.update_status(KIND_NODE, &format!("w{i:05}"), |o| {
+                o.status.insert("beat", beat);
+            })
+            .unwrap();
+        }
+        nodes.sync().unwrap();
+        let t0 = Instant::now();
+        index.refresh();
+        per_delta.push(t0.elapsed().as_nanos() as u64 / DELTAS as u64);
+    }
+    let mean = per_delta.iter().sum::<u64>() as f64 / per_delta.len() as f64;
+    println!("{:<44} {:>10}/delta", "index maintenance (1k nodes)", fmt_ns(mean));
+    println!(
+        "{{\"bench\":\"index maintenance per delta (1k nodes)\",\"deltas\":{},\"mean_ns\":{mean:.0}}}",
+        DELTAS * per_delta.len()
+    );
+
+    // Bind round trips over a real socket: one 64-item batch vs 64
+    // singles, counted at the server (`redbox.requests`).
+    let sd = Shutdown::new();
+    let sock = std::env::temp_dir()
+        .join(format!("hpcorc-bench-scheduler-{}.sock", std::process::id()));
+    let server_metrics = Metrics::new();
+    let mut srv = RedboxServer::start(&sock, sd.clone(), server_metrics.clone()).unwrap();
+    let api = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", api.rpc_service());
+    let remote: Arc<dyn ApiClient> = Arc::new(RemoteApi::connect(&sock).unwrap());
+    for i in 0..64 {
+        for prefix in ["bp", "sp"] {
+            api.create(PodView::build(
+                &format!("{prefix}{i:03}"),
+                "lolcow_latest.sif",
+                Resources::new(100, 1 << 20, 0),
+                &[],
+            ))
+            .unwrap();
+        }
+    }
+    let bind = |node: &str| Value::map().with("spec", Value::map().with("nodeName", node));
+    let items: Vec<BatchPatchItem> =
+        (0..64).map(|i| BatchPatchItem::new(KIND_POD, &format!("bp{i:03}"), bind("w1"))).collect();
+    let base = server_metrics.counter_value("redbox.requests");
+    let results = remote.update_status_batch(&items).unwrap();
+    assert!(results.iter().all(|r| r.is_ok()), "every batched bind lands");
+    let batched_rpcs = server_metrics.counter_value("redbox.requests") - base;
+    let base = server_metrics.counter_value("redbox.requests");
+    for i in 0..64 {
+        remote.patch_merge(KIND_POD, &format!("sp{i:03}"), &bind("w1")).unwrap();
+    }
+    let single_rpcs = server_metrics.counter_value("redbox.requests") - base;
+    srv.stop();
+    println!(
+        "{{\"bench\":\"bind round trips (64-pod burst)\",\"batched_rpcs\":{batched_rpcs},\"single_rpcs\":{single_rpcs}}}"
+    );
+
+    // Acceptance (ISSUE 9).
+    let ratio = indexed_10k / brute_10k.max(1.0);
+    println!(
+        "{{\"bench\":\"sched speedup indexed vs brute (10k nodes)\",\"indexed_pods_per_sec\":{indexed_10k:.0},\"brute_pods_per_sec\":{brute_10k:.0},\"ratio_x\":{ratio:.1}}}"
+    );
+    assert!(
+        ratio >= 10.0,
+        "indexed scheduling must be >=10x brute-force pods/sec at 10k nodes (got {ratio:.1}x)"
+    );
+    assert!(
+        batched_rpcs <= 2,
+        "a 64-pod burst must commit in <=2 round trips (got {batched_rpcs})"
+    );
+    assert!(single_rpcs >= 64, "singles baseline pays one RPC per bind (got {single_rpcs})");
+}

@@ -27,7 +27,7 @@
 //! relist/epoch-bump machinery is transport-agnostic.
 
 use super::api::KubeObject;
-use super::client::{ApiClient, ListOptions, ObjectList};
+use super::client::{ApiClient, BatchPatchItem, ListOptions, ObjectList};
 use super::store::{Store, WatchEvent};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
@@ -318,6 +318,50 @@ impl ApiServer {
         })
     }
 
+    /// Batched status commits (PR 9): every item applies inside ONE
+    /// store lock section ([`Store::update_batch`]), so no concurrent
+    /// writer can slip between two binds — the retry-on-conflict loop is
+    /// unnecessary by construction. Results are per item and positional:
+    /// a NotFound on one bind never poisons its batch-mates. Each item
+    /// still appends its own `update_status` audit record, so the trail
+    /// reads like N single calls apart from timing.
+    pub fn update_status_batch(&self, items: &[BatchPatchItem]) -> Vec<Result<KubeObject>> {
+        let _span =
+            crate::obs::span("apiserver", &format!("update_status_batch x{}", items.len()));
+        self.metrics.inc("kube.api.update_status_batch");
+        let start = Instant::now();
+        let keys: Vec<(String, String)> =
+            items.iter().map(|it| (it.kind.clone(), it.name.clone())).collect();
+        let results =
+            self.store.update_batch(&keys, &|i, obj| apply_merge_patch(obj, &items[i].patch));
+        // Latency attribution: the lock section is shared, so each record
+        // carries the per-item average rather than the whole batch.
+        let latency = start.elapsed().as_nanos() as u64 / items.len().max(1) as u64;
+        let trace = crate::obs::current().map(|ctx| format!("{:016x}", ctx.trace_id));
+        for (it, res) in items.iter().zip(&results) {
+            let outcome = match res {
+                Ok(_) => {
+                    self.metrics.inc_with(
+                        "kube.api.update_status",
+                        &[("gvk", &Self::gvk_label(&it.kind))],
+                    );
+                    "ok".to_string()
+                }
+                Err(e) => e.to_string(),
+            };
+            self.audit.record(
+                "update_status",
+                &it.kind,
+                &it.name,
+                trace.clone(),
+                outcome,
+                latency,
+            );
+            self.metrics.inc("kube.api.audit_records");
+        }
+        results
+    }
+
     /// Delete with transitive cascade: the full ownership closure of the
     /// object (children, grandchildren, ...) is deleted, children before
     /// parents. A visited set makes ownership cycles terminate instead of
@@ -551,6 +595,12 @@ impl ApiClient for ApiServer {
     fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
         ApiServer::patch_merge(self, kind, name, patch)
     }
+    fn update_status_batch(
+        &self,
+        items: &[BatchPatchItem],
+    ) -> Result<Vec<Result<KubeObject>>> {
+        Ok(ApiServer::update_status_batch(self, items))
+    }
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
         ApiServer::delete(self, kind, name)
     }
@@ -711,6 +761,32 @@ impl Service for ApiService {
             "Delete" => {
                 let o = self.api.delete(body.req_str("kind")?, body.req_str("name")?)?;
                 Ok(o.encode())
+            }
+            "UpdateStatusBatch" => {
+                let items = body
+                    .get("items")
+                    .and_then(Value::as_seq)
+                    .map(|s| {
+                        s.iter().map(BatchPatchItem::from_value).collect::<Result<Vec<_>>>()
+                    })
+                    .transpose()?
+                    .unwrap_or_default();
+                let results = self.api.update_status_batch(&items);
+                // Per-item results ride inside a successful reply: an
+                // `object` member on success, a structured `error` detail
+                // (same encoding the envelope uses) on failure.
+                Ok(Value::map().with(
+                    "results",
+                    Value::Seq(
+                        results
+                            .iter()
+                            .map(|r| match r {
+                                Ok(o) => Value::map().with("object", o.encode()),
+                                Err(e) => Value::map().with("error", e.encode_wire()),
+                            })
+                            .collect(),
+                    ),
+                ))
             }
             "List" => {
                 let kind = body.req_str("kind")?;
@@ -984,6 +1060,36 @@ impl ApiClient for RemoteApi {
             "Patch",
             Value::map().with("kind", kind).with("name", name).with("patch", patch.clone()),
         )
+    }
+
+    /// The whole batch crosses the socket as ONE `UpdateStatusBatch` RPC;
+    /// per-item errors come back as structured details and decode into
+    /// the exact [`Error`] variant an in-process caller would see.
+    fn update_status_batch(
+        &self,
+        items: &[BatchPatchItem],
+    ) -> Result<Vec<Result<KubeObject>>> {
+        let body = Value::map()
+            .with("items", Value::Seq(items.iter().map(BatchPatchItem::to_value).collect()));
+        let v = self.client.call("kube.Api/UpdateStatusBatch", body)?;
+        let results = v
+            .get("results")
+            .and_then(Value::as_seq)
+            .map(|s| {
+                s.iter()
+                    .map(|r| match r.get("object") {
+                        Some(o) => KubeObject::decode(o),
+                        None => Err(r
+                            .get("error")
+                            .and_then(Error::decode_wire)
+                            .unwrap_or_else(|| {
+                                Error::rpc("UpdateStatusBatch result had neither object nor error")
+                            })),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(results)
     }
 
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
@@ -1369,6 +1475,39 @@ mod tests {
         srv.register("kube.Api", a.rpc_service());
         let remote = RemoteApi::connect(&path).unwrap();
         (sd, srv, a, remote)
+    }
+
+    #[test]
+    fn update_status_batch_is_per_item_over_both_transports() {
+        let (_sd, mut srv, a, remote) = rpc_pair("batch");
+        a.create(pod("b1")).unwrap();
+        a.create(pod("b2")).unwrap();
+        let bind = |node: &str| Value::map().with("spec", Value::map().with("nodeName", node));
+        let items = vec![
+            BatchPatchItem::new(KIND_POD, "b1", bind("n1")),
+            BatchPatchItem::new(KIND_POD, "ghost", bind("n2")),
+            BatchPatchItem::new(KIND_POD, "b2", bind("n3")),
+        ];
+        // One RPC, three positional results; the middle failure is the
+        // same typed NotFound an in-process caller gets, and it does not
+        // poison its batch-mates.
+        let res = ApiClient::update_status_batch(&remote, &items).unwrap();
+        assert_eq!(res.len(), 3);
+        assert_eq!(res[0].as_ref().unwrap().spec.opt_str("nodeName"), Some("n1"));
+        assert!(res[1].as_ref().unwrap_err().is_not_found());
+        assert_eq!(res[2].as_ref().unwrap().spec.opt_str("nodeName"), Some("n3"));
+        assert_eq!(a.get(KIND_POD, "b1").unwrap().spec.opt_str("nodeName"), Some("n1"));
+        assert_eq!(a.get(KIND_POD, "b2").unwrap().spec.opt_str("nodeName"), Some("n3"));
+        // The audit trail reads like N single update_status calls.
+        let records = a.audit_log().snapshot();
+        let batch_verbs: Vec<_> =
+            records.iter().filter(|r| r.verb == "update_status").collect();
+        assert_eq!(batch_verbs.len(), 3);
+        assert_eq!(batch_verbs[1].name, "ghost");
+        assert_ne!(batch_verbs[1].outcome, "ok");
+        assert_eq!(a.metrics.counter_value("kube.api.update_status_batch"), 1);
+        assert_eq!(a.metrics.counter_value("kube.api.update_status"), 2, "successes only");
+        srv.stop();
     }
 
     #[test]

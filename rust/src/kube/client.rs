@@ -229,6 +229,40 @@ impl ObjectList {
     }
 }
 
+/// One item of a batched status update (PR 9): a merge patch against
+/// `(kind, name)` — the server-shippable form of what an
+/// [`ApiClient::update_status`] closure does in-process (closures cannot
+/// cross the socket). Built by the scheduler's bind batch; applied with
+/// [`ApiClient::update_status_batch`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPatchItem {
+    pub kind: String,
+    pub name: String,
+    pub patch: Value,
+}
+
+impl BatchPatchItem {
+    pub fn new(kind: &str, name: &str, patch: Value) -> BatchPatchItem {
+        BatchPatchItem { kind: kind.to_string(), name: name.to_string(), patch }
+    }
+
+    /// Wire encoding for the `UpdateStatusBatch` RPC verb.
+    pub fn to_value(&self) -> Value {
+        Value::map()
+            .with("kind", self.kind.clone())
+            .with("name", self.name.clone())
+            .with("patch", self.patch.clone())
+    }
+
+    pub fn from_value(v: &Value) -> Result<BatchPatchItem> {
+        Ok(BatchPatchItem {
+            kind: v.req_str("kind")?.to_string(),
+            name: v.req_str("name")?.to_string(),
+            patch: v.get("patch").cloned().unwrap_or_else(Value::map),
+        })
+    }
+}
+
 /// The unified resource-API surface. Object-safe by design: controllers
 /// hold `Arc<dyn ApiClient>` and never know whether they talk to the
 /// in-process store or a red-box socket.
@@ -253,6 +287,22 @@ pub trait ApiClient: Send + Sync {
     /// key, everything else replaces. Retried on conflict like
     /// [`ApiClient::update_status`].
     fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject>;
+    /// Batched status updates (PR 9): apply each item's merge patch,
+    /// returning one typed result per item in input order — a failure on
+    /// one item never poisons the rest. The outer `Result` is
+    /// transport-level only (nothing applied). The in-process
+    /// [`super::ApiServer`] commits the whole batch under one
+    /// global-lock section (no conflict window at all); the socket-backed
+    /// [`super::RemoteApi`] ships it as a single `UpdateStatusBatch` RPC
+    /// — one red-box round trip for N writes. The default implementation
+    /// degrades to one [`ApiClient::patch_merge`] per item so decorators
+    /// and test wrappers stay correct without overriding.
+    fn update_status_batch(
+        &self,
+        items: &[BatchPatchItem],
+    ) -> Result<Vec<Result<KubeObject>>> {
+        Ok(items.iter().map(|it| self.patch_merge(&it.kind, &it.name, &it.patch)).collect())
+    }
     /// Delete, cascading transitively through owner references.
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject>;
     /// `kubectl apply`: create, or — when the object exists — replace its
@@ -313,6 +363,13 @@ impl ApiClient for ActorClient {
     fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
         let _a = crate::obs::push_actor(&self.actor);
         self.inner.patch_merge(kind, name, patch)
+    }
+    fn update_status_batch(
+        &self,
+        items: &[BatchPatchItem],
+    ) -> Result<Vec<Result<KubeObject>>> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.update_status_batch(items)
     }
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
         let _a = crate::obs::push_actor(&self.actor);

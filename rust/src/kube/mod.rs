@@ -203,6 +203,55 @@
 //!   field — so `hpcorc audit [--since SEQ] [--kind KIND]` shows a
 //!   remote `kubectl apply` and an in-process scheduler bind through
 //!   one code path, each tied to its originating trace id.
+//!
+//! # Scheduler layer (PR 9): the fit/score index and batched binds
+//!
+//! [`KubeScheduler`] no longer scans the fleet per pod. A scheduling
+//! cycle consults a [`SchedIndex`] — an incrementally-maintained
+//! structure fed by the node/pod informer subscriptions — and commits
+//! all of a cycle's placements through one batched write. The pieces:
+//!
+//! - **Index invariants** ([`sched_index`]): nodes are bucketed by
+//!   taint/label *signature* (sorted, deduped), and each bucket orders
+//!   its nodes by dominant-fraction fullness (ties by name). Only
+//!   `Ready && !unschedulable` nodes live in buckets; the excluded ones
+//!   are counted (`not_ready`/`cordoned`) so unschedulable verdicts
+//!   still reproduce the exact `0/N nodes available: ...` message of
+//!   the old full walk — byte-identical, regression-tested. Candidate
+//!   selection walks only buckets whose signature the pod
+//!   tolerates/selects, ascending by fullness, and stops a bucket as
+//!   soon as its emptiest node is already fuller than the best score
+//!   found — correct because a node's post-placement score is never
+//!   below its current fullness (dominant fraction is monotone). The
+//!   result provably equals the brute-force argmin (differential test
+//!   in `sched_index.rs`, plus `run_cycle_brute` as a live oracle).
+//! - **Reserve/confirm lifecycle**: node usage is `confirmed ⊕
+//!   reserved`. Confirmed usage comes from the informer echo (pods with
+//!   a bound node); a placement *reserves* capacity synchronously the
+//!   moment the cycle picks a node, so the next cycle never
+//!   double-places against unconfirmed capacity while the bind is in
+//!   flight. The informer echo of the bound pod consumes the
+//!   reservation (a Pending echo does not); a failed bind un-reserves,
+//!   and the still-Pending pod simply requeues on a later cycle. On
+//!   [`InformerEvent::Resync`] the index rebuilds from the caches to
+//!   the fresh-start fixed point, re-applying only reservations not yet
+//!   confirmed.
+//! - **Batch semantics**: binds ship as [`BatchPatchItem`]s through
+//!   [`ApiClient::update_status_batch`] — ONE red-box round trip for N
+//!   binds. The in-process [`ApiServer`] applies the whole batch inside
+//!   a single store lock section (`Store::update_batch`), so there is
+//!   no conflict window at all; results are positional and per item
+//!   (one NotFound never poisons its batch-mates), and each item still
+//!   writes its own `update_status` audit record. Daemon mode
+//!   ([`KubeScheduler::start`]) hands batches to a background committer
+//!   thread; single-shot `run_cycle()` commits inline. Per-bind spans
+//!   still parent on the pod's originating trace, so `hpcorc trace`
+//!   shows the batched bind exactly like a single one.
+//!
+//! Throughput: `benches/scheduler.rs` tracks pods-scheduled-per-second
+//! at 1k/10k nodes (indexed vs brute ≥ 10×), index-maintenance cost per
+//! delta, and batched-vs-single bind round trips; `tests/scale.rs` has
+//! the gated 10k-node flash-crowd drain.
 
 pub mod api;
 pub mod apiserver;
@@ -213,6 +262,7 @@ pub mod events;
 pub mod informer;
 pub mod kubelet;
 pub mod persist;
+pub mod sched_index;
 pub mod scheduler;
 pub mod scheme;
 pub mod store;
@@ -226,7 +276,9 @@ pub use api::{
 pub use apiserver::{
     ApiServer, MutatingHook, RemoteApi, WatchConfig, WatchMode, MAX_CONFLICT_RETRIES,
 };
-pub use client::{ActorClient, Api, ApiClient, ListOptions, ObjectList, ResourceView};
+pub use client::{
+    ActorClient, Api, ApiClient, BatchPatchItem, ListOptions, ObjectList, ResourceView,
+};
 pub use controller::{Controller, ControllerRunner, Reconcile};
 pub use deployment::DeploymentController;
 pub use events::{
@@ -236,6 +288,7 @@ pub use events::{
 pub use informer::{Informer, InformerEvent, SharedInformerFactory};
 pub use kubelet::Kubelet;
 pub use persist::{MemoryBackend, StoreBackend, WalBackend};
+pub use sched_index::{Eliminations, SchedIndex};
 pub use scheduler::KubeScheduler;
 pub use scheme::{default_scheme, GroupVersionKind, KindSpec, Scheme};
 pub use store::{Store, WatchEvent, DEFAULT_HISTORY_CAP};

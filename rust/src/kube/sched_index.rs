@@ -1,0 +1,710 @@
+//! sched_index: the scheduler's incrementally-maintained fit/score index
+//! (PR 9).
+//!
+//! Replaces the per-cycle O(pods × nodes) filter/score scan with a
+//! structure updated from informer deltas. Nodes are **bucketed by
+//! signature** — the sorted (taints, labels) pair — because every
+//! match-predicate the scheduler evaluates (taint toleration,
+//! nodeSelector) depends only on that pair: one check admits or
+//! eliminates a whole bucket. Inside a bucket, members are ordered by
+//! **fullness** (the dominant-fraction of confirmed + reserved usage
+//! over capacity), so a selection walk can stop as soon as the next
+//! node's fullness exceeds the best score found — adding a pod can only
+//! raise a node's dominant fraction (`dominant_fraction` is monotone
+//! under component-wise growth, and the `min(1.0)` clamp preserves
+//! that), hence `score(n) ≥ fullness(n)` and nothing past the cut can
+//! win. The walk therefore returns *exactly* the node the brute-force
+//! sort would have picked, including the name tie-break, in
+//! O(buckets + log n + matches-walked) instead of O(n log n).
+//!
+//! Usage is tracked in two maps, both keyed by pod name:
+//!
+//! * `confirmed` — bindings observed through the informer (pods with a
+//!   `nodeName` in a non-terminal phase). The informer echo is the only
+//!   thing that moves usage here.
+//! * `reserved` — placements this scheduler made that the API has not
+//!   echoed back yet. [`SchedIndex::reserve`] charges capacity the
+//!   moment a node is chosen so neither later pods in the same cycle
+//!   nor later cycles (while an async commit is in flight) double-place
+//!   against it; the echo converts the reservation into confirmed
+//!   usage, and a failed bind [`SchedIndex::unreserve`]s so the pod —
+//!   still Pending in the cache — simply requeues.
+//!
+//! A `Resync` from either informer (epoch bump after stream loss)
+//! triggers [`SchedIndex::rebuild`]: derived state is discarded and
+//! reconstructed from the caches, converging to the same fixed point a
+//! fresh start would reach. Reservations survive a rebuild *unless* the
+//! relist already shows the pod bound (then the confirmed entry
+//! supersedes) — an in-flight commit is the one thing the caches cannot
+//! know about.
+
+use super::api::{KubeObject, NodeView, PodPhase, PodView, KIND_NODE, KIND_POD};
+use super::informer::{Informer, InformerEvent, SharedInformerFactory};
+use crate::cluster::{Metrics, Resources};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Mutex;
+
+/// A node's match signature: the sorted taint set and sorted label
+/// pairs. Taint toleration and nodeSelector matching are functions of
+/// the signature alone, so nodes sharing one are interchangeable for
+/// filtering.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Signature {
+    taints: Vec<String>,
+    labels: Vec<(String, String)>,
+}
+
+impl Signature {
+    fn of(node: &NodeView) -> Signature {
+        let mut taints = node.taints.clone();
+        taints.sort();
+        taints.dedup();
+        let mut labels = node.labels.clone();
+        labels.sort();
+        labels.dedup();
+        Signature { taints, labels }
+    }
+
+    /// The pod tolerates every taint in this signature.
+    fn tolerated_by(&self, pod: &PodView) -> bool {
+        self.taints.iter().all(|t| pod.tolerations.contains(t))
+    }
+
+    /// Every nodeSelector pair matches a label in this signature.
+    fn selected_by(&self, pod: &PodView) -> bool {
+        pod.node_selector
+            .iter()
+            .all(|(k, v)| self.labels.iter().any(|(nk, nv)| nk == k && nv == v))
+    }
+}
+
+/// Fullness sort key: `dominant_fraction` is in `0..=1`, and
+/// `f64::to_bits` is order-preserving for non-negative floats, so the
+/// bit pattern sorts identically to the float without `Ord` gymnastics.
+fn frac_bits(used: &Resources, capacity: &Resources) -> u64 {
+    used.dominant_fraction(capacity).to_bits()
+}
+
+struct NodeEntry {
+    view: NodeView,
+    sig: Signature,
+    /// Confirmed + reserved usage on this node.
+    used: Resources,
+}
+
+#[derive(Default)]
+struct IndexState {
+    nodes: BTreeMap<String, NodeEntry>,
+    /// Only ready, uncordoned nodes appear here, ordered within each
+    /// bucket by `(fullness bits, name)`.
+    buckets: BTreeMap<Signature, BTreeSet<(u64, String)>>,
+    /// pod → (node, requests): usage observed through the informer.
+    confirmed: BTreeMap<String, (String, Resources)>,
+    /// pod → (node, requests): placements awaiting the API echo.
+    reserved: BTreeMap<String, (String, Resources)>,
+    /// Nodes excluded from every bucket, by reason (maintained
+    /// incrementally so the failure diagnosis never re-walks nodes).
+    not_ready: usize,
+    cordoned: usize,
+}
+
+/// Per-predicate elimination counts for a pod no node could take — the
+/// data behind the k8s `0/N nodes available: ...` FailedScheduling
+/// message, derived from bucket checks instead of a per-node re-walk.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Eliminations {
+    pub total: usize,
+    pub not_ready: usize,
+    pub cordoned: usize,
+    pub tainted: usize,
+    pub selector: usize,
+    pub no_fit: usize,
+}
+
+impl Eliminations {
+    /// The FailedScheduling note. Byte-identical to the scheduler's
+    /// historical `losing_predicate` walk (regression-tested there).
+    pub fn message(&self) -> String {
+        let mut parts = Vec::new();
+        for (count, what) in [
+            (self.not_ready, "node(s) were not ready"),
+            (self.cordoned, "node(s) were unschedulable"),
+            (self.tainted, "node(s) had untolerated taints"),
+            (self.selector, "node(s) didn't match the nodeSelector"),
+            (self.no_fit, "node(s) had insufficient resources"),
+        ] {
+            if count > 0 {
+                parts.push(format!("{count} {what}"));
+            }
+        }
+        if parts.is_empty() {
+            parts.push("no nodes registered".to_string());
+        }
+        format!("0/{} nodes available: {}", self.total, parts.join(", "))
+    }
+
+    /// Low-cardinality outcome label: the predicate that eliminated the
+    /// most nodes (first wins ties, in filter order).
+    pub fn outcome(&self) -> &'static str {
+        if self.total == 0 {
+            return "no_nodes";
+        }
+        let ranked = [
+            (self.not_ready, "not_ready"),
+            (self.cordoned, "cordoned"),
+            (self.tainted, "untolerated_taints"),
+            (self.selector, "selector_mismatch"),
+            (self.no_fit, "insufficient_resources"),
+        ];
+        let max = ranked.iter().map(|(c, _)| *c).max().unwrap_or(0);
+        ranked.iter().find(|(c, _)| *c == max).map(|(_, l)| *l).unwrap_or("no_nodes")
+    }
+}
+
+/// Detach a node from the index (bucket membership + exclusion
+/// counters), returning its entry so usage can be edited and the node
+/// re-[`attach`]ed.
+fn detach(st: &mut IndexState, name: &str) -> Option<NodeEntry> {
+    let e = st.nodes.remove(name)?;
+    if !e.view.ready {
+        st.not_ready -= 1;
+    } else if e.view.unschedulable {
+        st.cordoned -= 1;
+    } else {
+        let key = (frac_bits(&e.used, &e.view.capacity), name.to_string());
+        if let Some(b) = st.buckets.get_mut(&e.sig) {
+            b.remove(&key);
+            if b.is_empty() {
+                st.buckets.remove(&e.sig);
+            }
+        }
+    }
+    Some(e)
+}
+
+fn attach(st: &mut IndexState, e: NodeEntry) {
+    if !e.view.ready {
+        st.not_ready += 1;
+    } else if e.view.unschedulable {
+        st.cordoned += 1;
+    } else {
+        let key = (frac_bits(&e.used, &e.view.capacity), e.view.name.clone());
+        st.buckets.entry(e.sig.clone()).or_default().insert(key);
+    }
+    st.nodes.insert(e.view.name.clone(), e);
+}
+
+/// Adjust a node's tracked usage (no-op for unknown nodes: their usage
+/// is recomputed from the pod maps when they appear).
+fn charge(st: &mut IndexState, node: &str, delta: Resources, add: bool) {
+    let Some(mut e) = detach(st, node) else { return };
+    e.used = if add { e.used + delta } else { e.used.saturating_sub(&delta) };
+    attach(st, e);
+}
+
+/// Total usage the pod maps attribute to `node` — seeds a node that
+/// (re)appears after its pods were already known.
+fn usage_on(st: &IndexState, node: &str) -> Resources {
+    let mut total = Resources::ZERO;
+    for (n, r) in st.confirmed.values() {
+        if n == node {
+            total += *r;
+        }
+    }
+    for (n, r) in st.reserved.values() {
+        if n == node {
+            total += *r;
+        }
+    }
+    total
+}
+
+fn apply_node(st: &mut IndexState, obj: &KubeObject, deleted: bool) {
+    let prev = detach(st, &obj.meta.name);
+    if deleted {
+        return;
+    }
+    // Undecodable nodes stay out of the index, exactly as the cycle's
+    // `filter_map(NodeView::from_object(..).ok())` skipped them.
+    let Ok(view) = NodeView::from_object(obj) else { return };
+    let used = prev.map(|e| e.used).unwrap_or_else(|| usage_on(st, &view.name));
+    attach(st, NodeEntry { sig: Signature::of(&view), used, view });
+}
+
+/// Fold one pod's cache state into the usage maps. `bound` is its
+/// (node, requests) when it holds a node in a non-terminal phase.
+fn apply_pod_state(st: &mut IndexState, pod: &str, bound: Option<(String, Resources)>) {
+    // A confirmed binding (or the pod vanishing) settles any in-flight
+    // reservation; a still-Pending echo (e.g. a label update before the
+    // bind lands) must NOT release it.
+    if bound.is_some() {
+        if let Some((n, r)) = st.reserved.remove(pod) {
+            charge(st, &n, r, false);
+        }
+    }
+    let prev = st.confirmed.remove(pod);
+    if prev == bound {
+        if let Some(b) = prev {
+            st.confirmed.insert(pod.to_string(), b);
+        }
+        return;
+    }
+    if let Some((n, r)) = prev {
+        charge(st, &n, r, false);
+    }
+    if let Some((n, r)) = bound {
+        charge(st, &n, r, true);
+        st.confirmed.insert(pod.to_string(), (n, r));
+    }
+}
+
+fn apply_pod(st: &mut IndexState, obj: &KubeObject, deleted: bool) {
+    if deleted {
+        if let Some((n, r)) = st.reserved.remove(&obj.meta.name) {
+            charge(st, &n, r, false);
+        }
+        apply_pod_state(st, &obj.meta.name, None);
+        return;
+    }
+    let bound = PodView::from_object(obj).ok().and_then(|v| match (&v.node_name, v.phase) {
+        (Some(n), phase) if !phase.terminal() => Some((n.clone(), v.requests)),
+        _ => None,
+    });
+    apply_pod_state(st, &obj.meta.name, bound);
+}
+
+/// The index handle. Interior-mutable and `Sync`: the scheduling cycle
+/// and the background bind committer share one `Arc<SchedIndex>`.
+pub struct SchedIndex {
+    nodes: Informer,
+    pods: Informer,
+    rx: Mutex<Receiver<InformerEvent>>,
+    state: Mutex<IndexState>,
+    metrics: Metrics,
+}
+
+impl SchedIndex {
+    /// Subscribes to the factory's node and pod informers (PR 4
+    /// machinery): the current caches replay as `Applied` events, then
+    /// live deltas stream — [`SchedIndex::refresh`] drains them.
+    pub fn new(informers: &SharedInformerFactory, metrics: Metrics) -> SchedIndex {
+        let nodes = informers.informer(KIND_NODE);
+        let pods = informers.informer(KIND_POD);
+        let (tx, rx) = channel();
+        nodes.subscribe_with(tx.clone());
+        pods.subscribe_with(tx);
+        SchedIndex {
+            nodes,
+            pods,
+            rx: Mutex::new(rx),
+            state: Mutex::new(IndexState::default()),
+            metrics,
+        }
+    }
+
+    /// Drain pending informer deltas into the index. O(log n) per
+    /// delta; a `Resync` from either informer discards the drained
+    /// batch and rebuilds from the caches instead (they are already
+    /// past every queued event).
+    pub fn refresh(&self) {
+        let events: Vec<InformerEvent> = {
+            let rx = self.rx.lock().unwrap();
+            let mut v = Vec::new();
+            while let Ok(ev) = rx.try_recv() {
+                v.push(ev);
+            }
+            v
+        };
+        if events.iter().any(|e| matches!(e, InformerEvent::Resync { .. })) {
+            self.rebuild();
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        for ev in &events {
+            let t0 = std::time::Instant::now();
+            match ev {
+                InformerEvent::Applied(o) if o.kind == KIND_NODE => apply_node(&mut st, o, false),
+                InformerEvent::Deleted(o) if o.kind == KIND_NODE => apply_node(&mut st, o, true),
+                InformerEvent::Applied(o) if o.kind == KIND_POD => apply_pod(&mut st, o, false),
+                InformerEvent::Deleted(o) if o.kind == KIND_POD => apply_pod(&mut st, o, true),
+                _ => {}
+            }
+            self.metrics.observe("kube.sched.index_update_ns", t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Full reconstruction from the informer caches — the Resync
+    /// contract: event-derived state must converge to what a fresh
+    /// start over the same caches would hold. Reservations are
+    /// re-applied only where the relist does not already show the pod
+    /// bound (in-flight commits are invisible to any cache).
+    pub fn rebuild(&self) {
+        let t0 = std::time::Instant::now();
+        let mut st = self.state.lock().unwrap();
+        let reserved = std::mem::take(&mut st.reserved);
+        *st = IndexState::default();
+        self.nodes.read(|objs| {
+            for o in objs.values() {
+                apply_node(&mut st, o, false);
+            }
+        });
+        self.pods.read(|objs| {
+            for o in objs.values() {
+                apply_pod(&mut st, o, false);
+            }
+        });
+        for (pod, (node, req)) in reserved {
+            if !st.confirmed.contains_key(&pod) {
+                charge(&mut st, &node, req, true);
+                st.reserved.insert(pod, (node, req));
+            }
+        }
+        drop(st);
+        self.metrics.observe("kube.sched.index_update_ns", t0.elapsed().as_nanos() as u64);
+    }
+
+    /// The least-allocated node that fits `pod` — exactly the node the
+    /// brute-force filter+score pass picks (same score, same name
+    /// tie-break) — or the per-predicate elimination counts when no
+    /// node can take it.
+    pub fn select(&self, pod: &PodView) -> std::result::Result<String, Eliminations> {
+        let st = self.state.lock().unwrap();
+        let mut best: Option<(f64, String)> = None;
+        for (sig, members) in &st.buckets {
+            if !sig.tolerated_by(pod) || !sig.selected_by(pod) {
+                continue;
+            }
+            for (bits, name) in members {
+                let fullness = f64::from_bits(*bits);
+                if let Some((best_score, _)) = &best {
+                    // Everything later in the bucket is at least this
+                    // full, and score(n) ≥ fullness(n): nothing past
+                    // here can beat the incumbent. Equal fullness must
+                    // still be walked for the name tie-break.
+                    if fullness > *best_score {
+                        break;
+                    }
+                }
+                let Some(e) = st.nodes.get(name) else { continue };
+                let free = e.view.capacity.saturating_sub(&e.used);
+                if !free.fits(&pod.requests) {
+                    continue;
+                }
+                let score = (e.used + pod.requests).dominant_fraction(&e.view.capacity);
+                let wins = match &best {
+                    Some((bs, bn)) => score < *bs || (score == *bs && name < bn),
+                    None => true,
+                };
+                if wins {
+                    best = Some((score, name.clone()));
+                }
+            }
+        }
+        match best {
+            Some((_, name)) => Ok(name),
+            None => Err(self.eliminations_locked(&st, pod)),
+        }
+    }
+
+    /// Elimination counts for a pod `select` found no node for. Only
+    /// valid in that case: every node in a matching bucket is then
+    /// known to have failed the fit check, so whole buckets are counted
+    /// without revisiting members.
+    fn eliminations_locked(&self, st: &IndexState, pod: &PodView) -> Eliminations {
+        let mut e = Eliminations {
+            total: st.nodes.len(),
+            not_ready: st.not_ready,
+            cordoned: st.cordoned,
+            ..Eliminations::default()
+        };
+        for (sig, members) in &st.buckets {
+            if !sig.tolerated_by(pod) {
+                e.tainted += members.len();
+            } else if !sig.selected_by(pod) {
+                e.selector += members.len();
+            } else {
+                e.no_fit += members.len();
+            }
+        }
+        e
+    }
+
+    /// Charge `requests` against `node` for `pod` ahead of the bind
+    /// commit. Idempotent: an already-reserved or already-confirmed pod
+    /// is left alone (returns false).
+    pub fn reserve(&self, pod: &str, node: &str, requests: Resources) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.reserved.contains_key(pod) || st.confirmed.contains_key(pod) {
+            return false;
+        }
+        charge(&mut st, node, requests, true);
+        st.reserved.insert(pod.to_string(), (node.to_string(), requests));
+        true
+    }
+
+    /// Release a reservation whose bind failed (or was skipped). The
+    /// pod is still Pending in every cache, so the next cycle requeues
+    /// it naturally. Idempotent.
+    pub fn unreserve(&self, pod: &str) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.reserved.remove(pod) {
+            Some((n, r)) => {
+                charge(&mut st, &n, r, false);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn is_reserved(&self, pod: &str) -> bool {
+        self.state.lock().unwrap().reserved.contains_key(pod)
+    }
+
+    /// Names of all pods with in-flight reservations (pending-pod
+    /// selection must skip them).
+    pub fn reserved_pods(&self) -> BTreeSet<String> {
+        self.state.lock().unwrap().reserved.keys().cloned().collect()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.state.lock().unwrap().nodes.len()
+    }
+
+    /// Tracked usage (confirmed + reserved) for a node, for tests and
+    /// diagnostics.
+    pub fn used_on(&self, node: &str) -> Option<Resources> {
+        self.state.lock().unwrap().nodes.get(node).map(|e| e.used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::apiserver::ApiServer;
+    use crate::kube::SharedInformerFactory;
+
+    fn setup() -> (ApiServer, SharedInformerFactory, SchedIndex) {
+        let api = ApiServer::new(Metrics::new());
+        let informers = SharedInformerFactory::new(api.client(), Metrics::new());
+        let index = SchedIndex::new(&informers, Metrics::new());
+        (api, informers, index)
+    }
+
+    fn sync(informers: &SharedInformerFactory, index: &SchedIndex) {
+        informers.informer(KIND_NODE).sync().unwrap();
+        informers.informer(KIND_POD).sync().unwrap();
+        index.refresh();
+    }
+
+    fn probe(name: &str, cpu_milli: u64) -> PodView {
+        PodView::from_object(&PodView::build(
+            name,
+            "img",
+            Resources::new(cpu_milli, 1 << 30, 0),
+            &[],
+        ))
+        .unwrap()
+    }
+
+    /// Reference implementation: the scheduler's original filter+score
+    /// pass, for differential checks against `select`.
+    fn brute_select(api: &ApiServer, index: &SchedIndex, pod: &PodView) -> Option<String> {
+        let nodes: Vec<NodeView> = api
+            .client()
+            .list(KIND_NODE, &crate::kube::ListOptions::all())
+            .unwrap()
+            .items
+            .iter()
+            .filter_map(|o| NodeView::from_object(o).ok())
+            .collect();
+        let mut candidates: Vec<(&NodeView, Resources)> = nodes
+            .iter()
+            .filter(|n| n.ready)
+            .filter(|n| !n.unschedulable)
+            .filter(|n| n.taints.iter().all(|t| pod.tolerations.contains(t)))
+            .filter(|n| {
+                pod.node_selector
+                    .iter()
+                    .all(|(k, v)| n.labels.iter().any(|(nk, nv)| nk == k && nv == v))
+            })
+            .filter_map(|n| {
+                let u = index.used_on(&n.name).unwrap_or(Resources::ZERO);
+                n.capacity.saturating_sub(&u).fits(&pod.requests).then_some((n, u))
+            })
+            .collect();
+        candidates.sort_by(|(na, ua), (nb, ub)| {
+            let fa = (*ua + pod.requests).dominant_fraction(&na.capacity);
+            let fb = (*ub + pod.requests).dominant_fraction(&nb.capacity);
+            fa.partial_cmp(&fb).unwrap().then(na.name.cmp(&nb.name))
+        });
+        candidates.first().map(|(n, _)| n.name.clone())
+    }
+
+    #[test]
+    fn select_matches_brute_force_over_mixed_fleet() {
+        let (api, informers, index) = setup();
+        // A mixed fleet: varying capacity, a tainted node, a labelled
+        // node, a cordoned node, a not-ready node.
+        for (i, cores) in [4u32, 8, 8, 16, 2].iter().enumerate() {
+            api.create(NodeView::build(&format!("n{i}"), Resources::cores(*cores, 32 << 30), &[]))
+                .unwrap();
+        }
+        api.create(NodeView::build("t0", Resources::cores(64, 64 << 30), &["virtual-kubelet"]))
+            .unwrap();
+        let mut labelled = NodeView::build("l0", Resources::cores(8, 32 << 30), &[]);
+        labelled.meta.set_label("zone", "a");
+        api.create(labelled).unwrap();
+        api.update_status(KIND_NODE, "n4", |o| {
+            o.spec.insert("unschedulable", true);
+        })
+        .unwrap();
+        api.update_status(KIND_NODE, "n3", |o| {
+            o.status.insert("phase", "NotReady");
+        })
+        .unwrap();
+        // Pre-existing bound pods skew the usage map.
+        for (i, node) in [("a", "n0"), ("b", "n1"), ("c", "n1")] {
+            let mut pod =
+                PodView::build(&format!("pre-{i}"), "img", Resources::new(1500, 1 << 30, 0), &[]);
+            pod.spec.insert("nodeName", node);
+            api.create(pod).unwrap();
+        }
+        sync(&informers, &index);
+        assert_eq!(index.node_count(), 7);
+        for cpu in [100, 1000, 3000, 7000, 9000] {
+            let pod = probe(&format!("probe-{cpu}"), cpu);
+            assert_eq!(
+                index.select(&pod).ok(),
+                brute_select(&api, &index, &pod),
+                "divergence at {cpu}m"
+            );
+        }
+    }
+
+    #[test]
+    fn eliminations_count_every_predicate() {
+        let (api, informers, index) = setup();
+        api.create(NodeView::build("ready", Resources::cores(1, 1 << 30), &[])).unwrap();
+        api.create(NodeView::build("tainted", Resources::cores(8, 32 << 30), &["gpu-only"]))
+            .unwrap();
+        api.create(NodeView::build("down", Resources::cores(8, 32 << 30), &[])).unwrap();
+        api.update_status(KIND_NODE, "down", |o| {
+            o.status.insert("phase", "NotReady");
+        })
+        .unwrap();
+        api.create(NodeView::build("fenced", Resources::cores(8, 32 << 30), &[])).unwrap();
+        api.update_status(KIND_NODE, "fenced", |o| {
+            o.spec.insert("unschedulable", true);
+        })
+        .unwrap();
+        sync(&informers, &index);
+        let why = index.select(&probe("big", 4000)).unwrap_err();
+        assert_eq!(
+            why,
+            Eliminations {
+                total: 4,
+                not_ready: 1,
+                cordoned: 1,
+                tainted: 1,
+                selector: 0,
+                no_fit: 1,
+            }
+        );
+        assert_eq!(
+            why.message(),
+            "0/4 nodes available: 1 node(s) were not ready, 1 node(s) were unschedulable, \
+             1 node(s) had untolerated taints, 1 node(s) had insufficient resources"
+        );
+        let (_, _, empty_index) = setup();
+        assert_eq!(
+            empty_index.select(&probe("p", 1)).unwrap_err().message(),
+            "0/0 nodes available: no nodes registered"
+        );
+    }
+
+    #[test]
+    fn reserve_confirm_unreserve_lifecycle() {
+        let (api, informers, index) = setup();
+        api.create(NodeView::build("w1", Resources::cores(2, 32 << 30), &[])).unwrap();
+        sync(&informers, &index);
+        let req = Resources::new(1500, 1 << 30, 0);
+        assert!(index.reserve("p1", "w1", req));
+        assert!(!index.reserve("p1", "w1", req), "double reserve is a no-op");
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 1500);
+        // While reserved, nothing else fits.
+        assert!(index.select(&probe("p2", 1000)).is_err());
+        // The informer echo (pod bound) converts the reservation.
+        let mut pod = PodView::build("p1", "img", req, &[]);
+        pod.spec.insert("nodeName", "w1");
+        api.create(pod).unwrap();
+        sync(&informers, &index);
+        assert!(!index.is_reserved("p1"));
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 1500, "no double charge");
+        // Terminal phase releases confirmed usage.
+        api.update_status(KIND_POD, "p1", |o| {
+            o.status.insert("phase", "Succeeded");
+        })
+        .unwrap();
+        sync(&informers, &index);
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 0);
+        // And a failed bind path: reserve then unreserve restores all.
+        assert!(index.reserve("p3", "w1", req));
+        assert!(index.unreserve("p3"));
+        assert!(!index.unreserve("p3"), "unreserve is idempotent");
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 0);
+        assert!(index.select(&probe("p4", 2000)).is_ok());
+    }
+
+    #[test]
+    fn node_churn_keeps_usage() {
+        let (api, informers, index) = setup();
+        api.create(NodeView::build("w1", Resources::cores(4, 32 << 30), &[])).unwrap();
+        let mut pod = PodView::build("p1", "img", Resources::new(1000, 1 << 30, 0), &[]);
+        pod.spec.insert("nodeName", "w1");
+        api.create(pod).unwrap();
+        sync(&informers, &index);
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 1000);
+        // A node status heartbeat must not reset tracked usage.
+        api.update_status(KIND_NODE, "w1", |o| {
+            o.status.insert("heartbeat", 1u64);
+        })
+        .unwrap();
+        sync(&informers, &index);
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 1000);
+        // Delete + recreate: usage is recomputed from the pod maps.
+        api.delete(KIND_NODE, "w1").unwrap();
+        sync(&informers, &index);
+        assert_eq!(index.node_count(), 0);
+        api.create(NodeView::build("w1", Resources::cores(4, 32 << 30), &[])).unwrap();
+        sync(&informers, &index);
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 1000);
+    }
+
+    #[test]
+    fn rebuild_reaches_fresh_start_fixed_point() {
+        let (api, informers, index) = setup();
+        api.create(NodeView::build("w1", Resources::cores(8, 32 << 30), &[])).unwrap();
+        api.create(NodeView::build("w2", Resources::cores(8, 32 << 30), &[])).unwrap();
+        let mut pod = PodView::build("p1", "img", Resources::new(2000, 1 << 30, 0), &[]);
+        pod.spec.insert("nodeName", "w2");
+        api.create(pod).unwrap();
+        sync(&informers, &index);
+        index.reserve("inflight", "w1", Resources::new(500, 0, 0));
+        index.rebuild();
+        // Confirmed usage rebuilt from the cache; the in-flight
+        // reservation survived (no cache can know about it yet).
+        assert_eq!(index.used_on("w2").unwrap().cpu_milli, 2000);
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 500);
+        assert!(index.is_reserved("inflight"));
+        // Once the bind lands and echoes, rebuild drops the reservation
+        // in favour of the confirmed entry — same totals as fresh start.
+        let mut bound = PodView::build("inflight", "img", Resources::new(500, 0, 0), &[]);
+        bound.spec.insert("nodeName", "w1");
+        api.create(bound).unwrap();
+        sync(&informers, &index);
+        index.rebuild();
+        assert!(!index.is_reserved("inflight"));
+        assert_eq!(index.used_on("w1").unwrap().cpu_milli, 500);
+    }
+}

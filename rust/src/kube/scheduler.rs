@@ -7,21 +7,42 @@
 //! tolerate it — land there (paper Fig. 2).
 //!
 //! Reads come from the shared informer caches (PR 4) — a scheduling
-//! cycle issues zero list RPCs; binds write through the [`ApiClient`].
-//! The daemon loop is event-driven: pod/node events wake it, with a
-//! periodic sweep as the level-triggered safety net.
+//! cycle issues zero list RPCs. Since PR 9 the filter/score pass runs
+//! against the incrementally-maintained [`SchedIndex`] (candidates in
+//! O(log n + matches) instead of an O(nodes) scan per pod), and binds
+//! **batch**: a cycle reserves each placement in the index, then commits
+//! every `spec.nodeName` patch through one
+//! [`ApiClient::update_status_batch`] call — inline when stepped
+//! directly (tests/benches), via a background committer thread in
+//! daemon mode so the next cycle never waits on the API. Failed binds
+//! un-reserve and requeue through the informer echo. The daemon loop is
+//! event-driven: pod/node events wake it, with a periodic sweep as the
+//! level-triggered safety net.
 
 use super::api::{KubeObject, NodeView, PodPhase, PodView};
-use super::client::ApiClient;
+use super::client::{ApiClient, BatchPatchItem};
 use super::events::{EventRecorder, EVENT_NORMAL, EVENT_WARNING};
 use super::informer::{Informer, SharedInformerFactory};
+use super::sched_index::SchedIndex;
 use crate::cluster::{Metrics, Resources};
+use crate::encoding::Value;
 use crate::rt::{self, Shutdown};
-use std::sync::Arc;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// The audit actor and event reportingController of this component.
 const COMPONENT: &str = "kube-scheduler";
+
+/// One placement decided by a cycle: the bind is already reserved in
+/// the index; committing (and un-reserving on failure) is the batch
+/// path's job.
+struct Placement {
+    pod: String,
+    node: String,
+    origin_trace: Option<crate::obs::TraceContext>,
+    created_ns: Option<u64>,
+}
 
 pub struct KubeScheduler {
     client: Arc<dyn ApiClient>,
@@ -29,6 +50,10 @@ pub struct KubeScheduler {
     pods: Informer,
     metrics: Metrics,
     events: EventRecorder,
+    index: Arc<SchedIndex>,
+    /// Set in daemon mode ([`KubeScheduler::start`]): cycles hand their
+    /// placement batches here instead of committing inline.
+    committer: Mutex<Option<Sender<Vec<Placement>>>>,
 }
 
 impl KubeScheduler {
@@ -38,15 +63,40 @@ impl KubeScheduler {
             nodes: informers.informer(super::api::KIND_NODE),
             pods: informers.informer(super::api::KIND_POD),
             events: EventRecorder::new(COMPONENT, metrics.clone()),
+            index: Arc::new(SchedIndex::new(informers, metrics.clone())),
+            committer: Mutex::new(None),
             metrics,
         }
     }
 
+    /// The scheduler's fit/score index (tests, benches, diagnostics).
+    pub fn index(&self) -> &Arc<SchedIndex> {
+        &self.index
+    }
+
     /// Run as a daemon. Event-driven: any pod or node event wakes a
     /// cycle immediately (events coalesce — a burst triggers one pass);
-    /// `period` is only the fallback sweep when nothing happens.
+    /// `period` is only the fallback sweep when nothing happens. Bind
+    /// commits move to a background committer thread: a cycle's
+    /// placements are reserved in the index and queued, so scheduling
+    /// latency never includes the API round trip.
     pub fn start(self, period: Duration, shutdown: Shutdown) {
         rt::spawn_named("kube-sched", move || {
+            let (ctx, crx) = std::sync::mpsc::channel::<Vec<Placement>>();
+            {
+                let client = self.client.clone();
+                let index = self.index.clone();
+                let metrics = self.metrics.clone();
+                let events = self.events.clone();
+                // Exits when the scheduler loop (sole sender) returns.
+                rt::spawn_named("kube-sched-commit", move || {
+                    while let Ok(batch) = crx.recv() {
+                        let _actor = crate::obs::push_actor(COMPONENT);
+                        commit_bindings(&client, &index, &metrics, &events, batch);
+                    }
+                });
+            }
+            *self.committer.lock().unwrap() = Some(ctx);
             // Payload-free wake-ups: the scheduler only needs "something
             // changed, run a cycle" — never the event objects themselves.
             let (tx, rx) = std::sync::mpsc::channel();
@@ -71,8 +121,9 @@ impl KubeScheduler {
         });
     }
 
-    /// One full scheduling cycle; returns the number of pods bound.
-    /// Public for deterministic stepping in tests/benches.
+    /// One full scheduling cycle; returns the number of pods placed
+    /// (== bound, when committing inline). Public for deterministic
+    /// stepping in tests/benches.
     pub fn run_cycle(&self) -> usize {
         let t0 = std::time::Instant::now();
         // Audit attribution: every write this cycle makes runs as us.
@@ -81,6 +132,124 @@ impl KubeScheduler {
         // if the informers cannot seed/stay current, skip the cycle.
         // (Undecodable objects are skipped below, so a malformed
         // hand-written manifest cannot wedge the cycle either.)
+        if let Err(e) = self.nodes.sync().and_then(|()| self.pods.sync()) {
+            self.metrics.inc("kube.sched.list_errors");
+            crate::warn!("kube-sched", "informer sync failed, skipping cycle: {e}");
+            return 0;
+        }
+        // Fold the synced deltas into the fit/score index, then snapshot
+        // the in-flight reservations (their pods are placed, not pending).
+        self.index.refresh();
+        let reserved = self.index.reserved_pods();
+
+        let mut pending: Vec<PodView> = Vec::new();
+        // Observability sidecar per pending pod: originating trace context
+        // and creation wall clock, read off the annotations in the same
+        // pass (PodView itself stays annotation-free).
+        let mut origins: std::collections::BTreeMap<
+            String,
+            (Option<crate::obs::TraceContext>, Option<u64>),
+        > = std::collections::BTreeMap::new();
+        let mut gated = 0u64;
+        self.pods.read(|objs| {
+            for obj in objs.values() {
+                let Ok(view) = PodView::from_object(obj) else { continue };
+                if !matches!((&view.node_name, view.phase), (None, PodPhase::Pending)) {
+                    continue;
+                }
+                // Scheduling gates (k8s `spec.schedulingGates`): a pod
+                // with any gate present is not scheduler-ready.
+                // Admission layers (kueue, PR 2/3) set and clear their
+                // own gates — the scheduler knows nothing about them.
+                if !view.scheduling_gates.is_empty() {
+                    gated += 1;
+                    continue;
+                }
+                if reserved.contains(&view.name) {
+                    continue;
+                }
+                origins.insert(
+                    view.name.clone(),
+                    (
+                        obj.meta
+                            .annotation(crate::obs::TRACE_ANNOTATION)
+                            .and_then(crate::obs::TraceContext::parse_wire),
+                        obj.meta
+                            .annotation(crate::obs::CREATED_WALL_ANNOTATION)
+                            .and_then(|s| s.parse::<u64>().ok()),
+                    ),
+                );
+                pending.push(view);
+            }
+        });
+        self.metrics.add("kube.sched.gated", gated);
+        // Sort pending by creation (FIFO-ish, as the real scheduler's
+        // priority queue without priorities).
+        pending.sort_by(|a, b| a.name.cmp(&b.name));
+        self.metrics.set_gauge("kube.sched.pending", pending.len() as i64);
+
+        let mut placements: Vec<Placement> = Vec::new();
+        for pod in pending {
+            match self.index.select(&pod) {
+                Ok(node) => {
+                    // Reserve at selection: later pods in this cycle —
+                    // and later cycles, while the commit is in flight —
+                    // see the capacity as taken.
+                    self.index.reserve(&pod.name, &node, pod.requests);
+                    let (origin_trace, created_ns) =
+                        origins.get(&pod.name).cloned().unwrap_or((None, None));
+                    placements.push(Placement { pod: pod.name, node, origin_trace, created_ns });
+                }
+                Err(why) => {
+                    self.metrics
+                        .inc_with("kube.sched.unschedulable", &[("outcome", why.outcome())]);
+                    let (origin_trace, _) =
+                        origins.get(&pod.name).cloned().unwrap_or((None, None));
+                    let trace_wire = origin_trace.map(|c| c.to_wire());
+                    // Repeats coalesce into a count bump on the same Event
+                    // (the reason is constant; only the diagnosis varies).
+                    let _ = self.events.event_ref(
+                        &self.client,
+                        super::api::KIND_POD,
+                        &pod.name,
+                        trace_wire.as_deref(),
+                        EVENT_WARNING,
+                        "FailedScheduling",
+                        &why.message(),
+                    );
+                }
+            }
+        }
+        let placed = placements.len();
+        if placed == 0 {
+            self.metrics.observe("kube.sched.cycle_ns", t0.elapsed().as_nanos() as u64);
+            return 0;
+        }
+        // Daemon mode queues the batch for the background committer;
+        // direct stepping commits inline so the result is deterministic.
+        let placements = match self.committer.lock().unwrap().as_ref() {
+            Some(tx) => match tx.send(placements) {
+                Ok(()) => {
+                    self.metrics.observe("kube.sched.cycle_ns", t0.elapsed().as_nanos() as u64);
+                    return placed;
+                }
+                // Committer gone (shutdown race): fall back to inline.
+                Err(std::sync::mpsc::SendError(batch)) => batch,
+            },
+            None => placements,
+        };
+        let bound = commit_bindings(&self.client, &self.index, &self.metrics, &self.events, placements);
+        self.metrics.observe("kube.sched.cycle_ns", t0.elapsed().as_nanos() as u64);
+        bound
+    }
+
+    /// The pre-index scheduling pass, kept verbatim as the benchmark
+    /// baseline (`benches/scheduler.rs`) and differential oracle for
+    /// the index: O(nodes) filter/score per pod, linear `used` lookups,
+    /// one `update_status` round trip per bind. Not for production use.
+    pub fn run_cycle_brute(&self) -> usize {
+        let t0 = std::time::Instant::now();
+        let _actor = crate::obs::push_actor(COMPONENT);
         if let Err(e) = self.nodes.sync().and_then(|()| self.pods.sync()) {
             self.metrics.inc("kube.sched.list_errors");
             crate::warn!("kube-sched", "informer sync failed, skipping cycle: {e}");
@@ -95,9 +264,6 @@ impl KubeScheduler {
         let mut used: Vec<(String, Resources)> =
             nodes.iter().map(|n| (n.name.clone(), Resources::ZERO)).collect();
         let mut pending: Vec<PodView> = Vec::new();
-        // Observability sidecar per pending pod: originating trace context
-        // and creation wall clock, read off the annotations in the same
-        // pass (PodView itself stays annotation-free).
         let mut origins: std::collections::BTreeMap<
             String,
             (Option<crate::obs::TraceContext>, Option<u64>),
@@ -113,11 +279,6 @@ impl KubeScheduler {
                         }
                     }
                     (None, PodPhase::Pending) => {
-                        // Scheduling gates (k8s `spec.schedulingGates`): a
-                        // pod with any gate present is not
-                        // scheduler-ready. Admission layers (kueue, PR
-                        // 2/3) set and clear their own gates — the
-                        // scheduler knows nothing about them.
                         if !view.scheduling_gates.is_empty() {
                             gated += 1;
                             continue;
@@ -140,8 +301,6 @@ impl KubeScheduler {
             }
         });
         self.metrics.add("kube.sched.gated", gated);
-        // Sort pending by creation (FIFO-ish, as the real scheduler's
-        // priority queue without priorities).
         pending.sort_by(|a, b| a.name.cmp(&b.name));
 
         let mut bound = 0;
@@ -149,11 +308,8 @@ impl KubeScheduler {
             let mut candidates: Vec<(&NodeView, Resources)> = nodes
                 .iter()
                 .filter(|n| n.ready)
-                // cordoned nodes (autoscaler drain) accept nothing new
                 .filter(|n| !n.unschedulable)
-                // taints: pod must tolerate every NoSchedule taint
                 .filter(|n| n.taints.iter().all(|t| pod.tolerations.contains(t)))
-                // nodeSelector: all pairs must match node labels
                 .filter(|n| {
                     pod.node_selector.iter().all(|(k, v)| {
                         n.labels.iter().any(|(nk, nv)| nk == k && nv == v)
@@ -173,8 +329,6 @@ impl KubeScheduler {
                 self.metrics.inc("kube.sched.unschedulable");
                 let (origin_trace, _) = origins.get(&pod.name).cloned().unwrap_or((None, None));
                 let trace_wire = origin_trace.map(|c| c.to_wire());
-                // Repeats coalesce into a count bump on the same Event
-                // (the reason is constant; only the diagnosis varies).
                 let _ = self.events.event_ref(
                     &self.client,
                     super::api::KIND_POD,
@@ -195,9 +349,6 @@ impl KubeScheduler {
             let chosen = candidates[0].0.name.clone();
             let (origin_trace, created_ns) =
                 origins.get(&pod.name).cloned().unwrap_or((None, None));
-            // Bind (writes go through the API; the cache sees the event
-            // on the next sync). The span parents on the pod's
-            // originating trace, so the bind joins the create's tree.
             let _span = crate::obs::span_with_parent(
                 "kube-sched",
                 &format!("bind {}", pod.name),
@@ -241,9 +392,107 @@ impl KubeScheduler {
     }
 }
 
+/// Commit a cycle's placements as one batched write; returns the number
+/// bound. Shared by the inline path and the daemon-mode committer
+/// thread. Per-item failures (and a whole-batch transport failure)
+/// un-reserve so the pods requeue; successful reservations stay until
+/// the informer echo converts them to confirmed usage.
+fn commit_bindings(
+    client: &Arc<dyn ApiClient>,
+    index: &SchedIndex,
+    metrics: &Metrics,
+    events: &EventRecorder,
+    placements: Vec<Placement>,
+) -> usize {
+    let t0 = std::time::Instant::now();
+    let items: Vec<BatchPatchItem> = placements
+        .iter()
+        .map(|p| {
+            BatchPatchItem::new(
+                super::api::KIND_POD,
+                &p.pod,
+                Value::map().with("spec", Value::map().with("nodeName", p.node.clone())),
+            )
+        })
+        .collect();
+    let results = match client.update_status_batch(&items) {
+        Ok(r) => r,
+        Err(e) => {
+            // Transport-level failure: nothing landed. Release every
+            // reservation — the pods are still Pending in every cache
+            // and requeue on the next cycle.
+            crate::warn!(
+                "kube-sched",
+                "bind batch failed, requeueing {} pod(s): {e}",
+                placements.len()
+            );
+            for p in &placements {
+                index.unreserve(&p.pod);
+                metrics.inc_with("kube.sched.bind_failed", &[("outcome", "transport")]);
+            }
+            return 0;
+        }
+    };
+    metrics.observe("kube.sched.bind_batch_ns", t0.elapsed().as_nanos() as u64);
+    // Defensive: a short result list must not strand reservations.
+    let answered = results.len().min(placements.len());
+    for p in &placements[answered..] {
+        index.unreserve(&p.pod);
+    }
+    let mut bound = 0;
+    for (p, res) in placements.iter().zip(results) {
+        // The bind span parents on the pod's originating trace, so the
+        // batched bind still joins the create's tree in `hpcorc trace`.
+        let _span = crate::obs::span_with_parent(
+            "kube-sched",
+            &format!("bind {}", p.pod),
+            p.origin_trace,
+        );
+        match res {
+            Ok(_) => {
+                bound += 1;
+                metrics.inc_with("kube.sched.bound", &[("outcome", "ok")]);
+                let _ = events.event_ref(
+                    client,
+                    super::api::KIND_POD,
+                    &p.pod,
+                    p.origin_trace.map(|c| c.to_wire()).as_deref(),
+                    EVENT_NORMAL,
+                    "Scheduled",
+                    &format!("Successfully assigned {} to {}", p.pod, p.node),
+                );
+                if let Some(t_create) = p.created_ns {
+                    let now_ns = std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_nanos() as u64)
+                        .unwrap_or(0);
+                    metrics
+                        .observe("slo.pod_create_to_bound_ns", now_ns.saturating_sub(t_create));
+                }
+            }
+            Err(e) => {
+                index.unreserve(&p.pod);
+                let outcome = if e.is_conflict() || e.is_conflict_exhausted() {
+                    "conflict"
+                } else if e.is_not_found() {
+                    "not_found"
+                } else {
+                    "error"
+                };
+                metrics.inc_with("kube.sched.bind_failed", &[("outcome", outcome)]);
+                crate::warn!("kube-sched", "bind {} -> {} failed ({e}), requeued", p.pod, p.node);
+            }
+        }
+    }
+    bound
+}
+
 /// The FailedScheduling diagnosis: walk the filter chain once more,
 /// counting where each node was eliminated — the k8s
 /// `0/N nodes available: ...` message, naming the losing predicate(s).
+/// The indexed path derives the same counts from bucket checks
+/// ([`super::sched_index::Eliminations`]); this walk remains for the
+/// brute path and as the byte-equality oracle in tests.
 fn losing_predicate(
     nodes: &[NodeView],
     used: &[(String, Resources)],
@@ -509,5 +758,114 @@ mod tests {
         .unwrap();
         add_pod(&api, "p1", 100);
         assert_eq!(sched.run_cycle(), 0);
+    }
+
+    /// A mixed fleet driven through both implementations must produce
+    /// identical assignments, pod for pod — the index is an exact
+    /// replacement for the brute-force filter/score pass, not an
+    /// approximation.
+    #[test]
+    fn indexed_cycle_matches_brute_force_assignments() {
+        let build = || {
+            let (api, sched) = setup();
+            add_node(&api, "w1", 2);
+            add_node(&api, "w2", 4);
+            add_node(&api, "w3", 8);
+            add_node(&api, "w4", 8);
+            api.create(NodeView::build(
+                "vnode",
+                Resources::cores(64, 256 << 30),
+                &["virtual-kubelet"],
+            ))
+            .unwrap();
+            let mut gpu = NodeView::build("gpu1", Resources::cores(8, 32 << 30), &[]);
+            gpu.meta.set_label("accelerator", "gpu");
+            api.create(gpu).unwrap();
+            api.update_status(KIND_NODE, "w4", |o| {
+                o.spec.insert("unschedulable", true);
+            })
+            .unwrap();
+            for (name, cpu) in
+                [("a", 500u64), ("b", 1500), ("c", 3000), ("d", 1000), ("e", 9000), ("f", 100)]
+            {
+                add_pod(&api, name, cpu);
+            }
+            let mut sel = PodView::build("g", "img", Resources::new(200, 0, 0), &[]);
+            sel.spec.insert(
+                "nodeSelector",
+                crate::encoding::Value::map().with("accelerator", "gpu"),
+            );
+            api.create(sel).unwrap();
+            let tol = pod_with_tolerations(
+                PodView::build("h", "img", Resources::new(4000, 1 << 30, 0), &[]),
+                &["virtual-kubelet"],
+            );
+            api.create(tol).unwrap();
+            (api, sched)
+        };
+        let (api_idx, sched_idx) = build();
+        let (api_brute, sched_brute) = build();
+        assert_eq!(sched_idx.run_cycle(), sched_brute.run_cycle_brute());
+        for pod in ["a", "b", "c", "d", "e", "f", "g", "h"] {
+            assert_eq!(
+                node_of(&api_idx, pod),
+                node_of(&api_brute, pod),
+                "assignment diverged for {pod}"
+            );
+        }
+    }
+
+    /// Satellite guard: the indexed failure diagnosis must stay
+    /// byte-identical to the legacy `losing_predicate` walk — consumers
+    /// (and humans) pattern-match on this message.
+    #[test]
+    fn failed_scheduling_message_byte_identical_to_legacy_walk() {
+        use crate::kube::events::{EventView, KIND_EVENT};
+        use crate::kube::ListOptions;
+        let (api, sched) = setup();
+        add_node(&api, "tiny", 1);
+        api.create(NodeView::build("tainted", Resources::cores(8, 32 << 30), &["gpu-only"]))
+            .unwrap();
+        add_node(&api, "down", 8);
+        api.update_status(KIND_NODE, "down", |o| {
+            o.status.insert("phase", "NotReady");
+        })
+        .unwrap();
+        add_node(&api, "fenced", 8);
+        api.update_status(KIND_NODE, "fenced", |o| {
+            o.spec.insert("unschedulable", true);
+        })
+        .unwrap();
+        add_pod(&api, "huge", 4000);
+        assert_eq!(sched.run_cycle(), 0);
+        let note = api
+            .client()
+            .list(KIND_EVENT, &ListOptions::all())
+            .unwrap()
+            .items
+            .iter()
+            .filter_map(|o| EventView::from_object(o).ok())
+            .find(|e| e.reason == "FailedScheduling")
+            .unwrap()
+            .note;
+        // Literal expectation first: predicates in filter order.
+        assert_eq!(
+            note,
+            "0/4 nodes available: 1 node(s) were not ready, 1 node(s) were unschedulable, \
+             1 node(s) had untolerated taints, 1 node(s) had insufficient resources"
+        );
+        // And equality with the legacy walk over the same world.
+        let nodes: Vec<NodeView> = api
+            .client()
+            .list(KIND_NODE, &ListOptions::all())
+            .unwrap()
+            .items
+            .iter()
+            .filter_map(|o| NodeView::from_object(o).ok())
+            .collect();
+        let used: Vec<(String, Resources)> =
+            nodes.iter().map(|n| (n.name.clone(), Resources::ZERO)).collect();
+        let pod = PodView::from_object(&api.get(KIND_POD, "huge").unwrap()).unwrap();
+        assert_eq!(note, losing_predicate(&nodes, &used, &pod));
     }
 }

@@ -73,7 +73,13 @@
 //! | `kueue.cycles` | counter | admission cycles run |
 //! | `kueue.cycle_ns` | histogram | admission cycle duration |
 //! | `kube.sched.cycle_ns` | histogram | scheduler cycle duration |
-//! | `kube.sched.bound` | counter | pods bound |
+//! | `kube.sched.bound{outcome}` | counter | pods bound (`outcome="ok"`) |
+//! | `kube.sched.bind_failed{outcome}` | counter | failed bind commits (conflict/not_found/transport/error) |
+//! | `kube.sched.unschedulable{outcome}` | counter | placement verdicts, per dominant losing predicate |
+//! | `kube.sched.pending` | gauge | pods awaiting placement at cycle start |
+//! | `kube.sched.index_update_ns` | histogram | fit/score index maintenance per informer delta |
+//! | `kube.sched.bind_batch_ns` | histogram | batched bind commit (one batch = one observation) |
+//! | `kube.api.update_status_batch` | counter | batched status commits accepted (one per batch) |
 //! | `slo.pod_create_to_bound_ns` | histogram | end-to-end pod create→bound latency |
 //! | `operator.submit_ns` | histogram | operator → WLM submission latency |
 //!

@@ -9,7 +9,8 @@
 
 use hpcorc::cluster::{Metrics, Resources};
 use hpcorc::kube::{
-    ApiServer, KubeObject, ListOptions, PodView, SharedInformerFactory, WalBackend, KIND_POD,
+    ApiServer, KubeObject, KubeScheduler, ListOptions, NodeView, PodView, SharedInformerFactory,
+    WalBackend, KIND_POD,
 };
 
 fn n_objects() -> usize {
@@ -72,6 +73,62 @@ fn delta_list_is_exact_at_scale() {
         assert_eq!(o.meta.name, format!("pod-{i:06}"), "coalesced by name, in order");
         assert_eq!(o.status.opt_str("phase"), Some("Running"));
     }
+}
+
+/// Flash crowd against a 10k-node fleet (PR 9): the indexed scheduler
+/// drains the whole burst, every pod lands on a real node, and
+/// steady-state cycles afterwards issue ZERO list RPCs — the index and
+/// the informer caches absorb everything. Node count defaults to 10_000
+/// (override with SCHED_SCALE_NODES), burst to 512 (SCHED_SCALE_PODS).
+#[test]
+#[ignore = "10k-node scale harness: cargo test --release --test scale -- --ignored"]
+fn flash_crowd_drains_at_scale_with_zero_steady_state_lists() {
+    let nodes: usize =
+        std::env::var("SCHED_SCALE_NODES").ok().and_then(|v| v.parse().ok()).unwrap_or(10_000);
+    let burst: usize =
+        std::env::var("SCHED_SCALE_PODS").ok().and_then(|v| v.parse().ok()).unwrap_or(512);
+    let api_metrics = Metrics::new();
+    let api = ApiServer::new(api_metrics.clone());
+    for i in 0..nodes {
+        api.create(NodeView::build(&format!("w{i:05}"), Resources::cores(64, 256 << 30), &[]))
+            .unwrap();
+    }
+    let informers = SharedInformerFactory::new(api.client(), Metrics::new());
+    let sched = KubeScheduler::new(&informers, Metrics::new());
+    assert_eq!(sched.run_cycle(), 0, "seed cycle: empty fleet, nothing pending");
+
+    for i in 0..burst {
+        api.create(pod(i)).unwrap();
+    }
+    let mut bound = 0;
+    for _ in 0..10 {
+        bound += sched.run_cycle();
+        if bound == burst {
+            break;
+        }
+    }
+    assert_eq!(bound, burst, "the whole flash crowd must drain");
+    for i in (0..burst).step_by((burst / 8).max(1)) {
+        let node = api
+            .get(KIND_POD, &format!("pod-{i:06}"))
+            .unwrap()
+            .spec
+            .opt_str("nodeName")
+            .map(String::from);
+        assert!(node.is_some_and(|n| n.starts_with('w')), "pod-{i:06} must be bound");
+    }
+
+    // Steady state: 25 cycles with nothing to do issue zero list RPCs —
+    // reads come from the caches, index maintenance from watch deltas.
+    let lists_before = api_metrics.counter_value("kube.api.list");
+    for _ in 0..25 {
+        assert_eq!(sched.run_cycle(), 0);
+    }
+    assert_eq!(
+        api_metrics.counter_value("kube.api.list"),
+        lists_before,
+        "steady-state scheduling cycles must issue ZERO list RPCs"
+    );
 }
 
 /// WAL replay at scale: 100k durable creations reopen to the same object

@@ -1,0 +1,285 @@
+//! Scheduler bind-failure reconciliation + index convergence (PR 9
+//! satellite acceptance):
+//!
+//! 1. **Transport failure** — a whole bind batch that never reaches the
+//!    server must release every reservation; the pods stay Pending and
+//!    rebind on a later cycle once the transport heals.
+//! 2. **Per-item failure** — one poisoned bind in a batch requeues only
+//!    its own pod and leaves no phantom usage behind: the freed capacity
+//!    is immediately placeable, down to the last millicore.
+//! 3. **Resync convergence** — severing the watch streams and
+//!    overflowing the pod shard's retained history forces a relist +
+//!    epoch bump; the index must rebuild to exactly the fixed point a
+//!    fresh-start scheduler computes (same shape as `tests/informer.rs`).
+
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::encoding::Value;
+use hpcorc::kube::{
+    ApiClient, ApiServer, BatchPatchItem, KubeObject, KubeScheduler, ListOptions, NodeView,
+    ObjectList, PodView, SharedInformerFactory, WatchEvent, KIND_POD,
+};
+use hpcorc::rt::Shutdown;
+use hpcorc::util::{Error, Result};
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// ApiClient wrapper with three failure injectors: whole-batch transport
+/// failures, per-item bind poisoning (the poisoned item is NOT applied
+/// server-side — a failed bind must not secretly land), and severable
+/// watch streams (the `tests/informer.rs` resync shape).
+struct FaultyApi {
+    api: ApiServer,
+    fail_batches: AtomicBool,
+    poison: Mutex<BTreeSet<String>>,
+    taps: Mutex<Vec<Shutdown>>,
+}
+
+impl FaultyApi {
+    fn new(api: ApiServer) -> Arc<FaultyApi> {
+        Arc::new(FaultyApi {
+            api,
+            fail_batches: AtomicBool::new(false),
+            poison: Mutex::new(BTreeSet::new()),
+            taps: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn fail_batches(&self, on: bool) {
+        self.fail_batches.store(on, Ordering::SeqCst);
+    }
+
+    fn poison(&self, pod: &str) {
+        self.poison.lock().unwrap().insert(pod.to_string());
+    }
+
+    fn heal(&self, pod: &str) {
+        self.poison.lock().unwrap().remove(pod);
+    }
+
+    fn kill_streams(&self) {
+        for sd in self.taps.lock().unwrap().drain(..) {
+            sd.trigger();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+impl ApiClient for FaultyApi {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api.create(obj)
+    }
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api.get(kind, name)
+    }
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        ApiServer::update(&self.api, obj)
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        self.api.update_status(kind, name, f)
+    }
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        self.api.patch_merge(kind, name, patch)
+    }
+    fn update_status_batch(
+        &self,
+        items: &[BatchPatchItem],
+    ) -> Result<Vec<Result<KubeObject>>> {
+        if self.fail_batches.load(Ordering::SeqCst) {
+            return Err(Error::rpc("injected: bind batch lost in transit"));
+        }
+        // Poisoned items are rejected *without* applying — the server
+        // only ever sees the clean subset.
+        let poison = self.poison.lock().unwrap().clone();
+        let clean: Vec<BatchPatchItem> =
+            items.iter().filter(|it| !poison.contains(&it.name)).cloned().collect();
+        let mut applied = self.api.update_status_batch(&clean).into_iter();
+        Ok(items
+            .iter()
+            .map(|it| {
+                if poison.contains(&it.name) {
+                    Err(Error::conflict(it.kind.as_str(), it.name.as_str()))
+                } else {
+                    applied.next().expect("one result per forwarded item")
+                }
+            })
+            .collect())
+    }
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api.delete(kind, name)
+    }
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api.apply(obj)
+    }
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        self.api.list_opts(kind, opts)
+    }
+    fn watch(&self, kind: Option<&str>, from: u64) -> Result<Receiver<WatchEvent>> {
+        let upstream = ApiServer::watch(&self.api, kind, from);
+        let (tx, rx) = channel();
+        let sd = Shutdown::new();
+        self.taps.lock().unwrap().push(sd.clone());
+        hpcorc::rt::spawn_named("faulty-watch", move || loop {
+            if sd.is_triggered() {
+                return; // drops tx: stream severed
+            }
+            match upstream.recv_timeout(Duration::from_millis(1)) {
+                Ok(ev) => {
+                    if tx.send(ev).is_err() {
+                        return;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(_) => return,
+            }
+        });
+        Ok(rx)
+    }
+    fn server_time_s(&self) -> Result<f64> {
+        Ok(self.api.now_s())
+    }
+}
+
+fn setup(api: ApiServer) -> (Arc<FaultyApi>, SharedInformerFactory, KubeScheduler, Metrics) {
+    let faulty = FaultyApi::new(api);
+    let client: Arc<dyn ApiClient> = faulty.clone();
+    let informers = SharedInformerFactory::new(client, Metrics::new());
+    let metrics = Metrics::new();
+    let sched = KubeScheduler::new(&informers, metrics.clone());
+    (faulty, informers, sched, metrics)
+}
+
+fn add_pod(api: &ApiServer, name: &str, cpu_milli: u64) {
+    api.create(PodView::build(name, "img.sif", Resources::new(cpu_milli, 1 << 20, 0), &[]))
+        .unwrap();
+}
+
+fn node_of(api: &ApiServer, pod: &str) -> Option<String> {
+    api.get(KIND_POD, pod).unwrap().spec.opt_str("nodeName").map(String::from)
+}
+
+/// A bind batch lost in transit releases every reservation; the pods
+/// rebind as soon as the transport heals — no lost pods, no phantom
+/// usage.
+#[test]
+fn transport_failure_unreserves_and_rebinds() {
+    let raw = ApiServer::new(Metrics::new());
+    let (faulty, _informers, sched, metrics) = setup(raw.clone());
+    raw.create(NodeView::build("w1", Resources::cores(8, 32 << 30), &[])).unwrap();
+    add_pod(&raw, "p1", 500);
+    add_pod(&raw, "p2", 500);
+
+    faulty.fail_batches(true);
+    assert_eq!(sched.run_cycle(), 0, "nothing binds through a dead transport");
+    assert!(node_of(&raw, "p1").is_none());
+    assert!(node_of(&raw, "p2").is_none());
+    assert!(!sched.index().is_reserved("p1"), "failed batch must release reservations");
+    assert!(!sched.index().is_reserved("p2"));
+    assert_eq!(
+        metrics.counter_value_with("kube.sched.bind_failed", &[("outcome", "transport")]),
+        2
+    );
+
+    faulty.fail_batches(false);
+    assert_eq!(sched.run_cycle(), 2, "healed transport: both pods rebind");
+    assert_eq!(node_of(&raw, "p1").as_deref(), Some("w1"));
+    assert_eq!(node_of(&raw, "p2").as_deref(), Some("w1"));
+    // The echo converts reservations to confirmed usage; nothing stays
+    // reserved once the informers have caught up.
+    sched.run_cycle();
+    assert!(!sched.index().is_reserved("p1"));
+    assert!(!sched.index().is_reserved("p2"));
+}
+
+/// One poisoned bind inside a batch requeues only its own pod — and the
+/// un-reservation is exact: after the victim finally lands, the node is
+/// full to the last millicore and a pod sized for the exact remainder
+/// still fits (phantom usage would push it out).
+#[test]
+fn per_item_failure_requeues_only_the_victim() {
+    let raw = ApiServer::new(Metrics::new());
+    let (faulty, _informers, sched, metrics) = setup(raw.clone());
+    raw.create(NodeView::build("n1", Resources::cores(1, 32 << 30), &[])).unwrap(); // 1000m
+    add_pod(&raw, "pa", 600);
+    add_pod(&raw, "pb", 300);
+
+    faulty.poison("pa");
+    assert_eq!(sched.run_cycle(), 1, "pb binds; pa's conflict only hits pa");
+    assert_eq!(node_of(&raw, "pb").as_deref(), Some("n1"));
+    assert!(node_of(&raw, "pa").is_none(), "poisoned bind must not land");
+    assert!(!sched.index().is_reserved("pa"));
+    assert_eq!(
+        metrics.counter_value_with("kube.sched.bind_failed", &[("outcome", "conflict")]),
+        1
+    );
+
+    faulty.heal("pa");
+    assert_eq!(sched.run_cycle(), 1, "pa requeues and binds");
+    assert_eq!(node_of(&raw, "pa").as_deref(), Some("n1"));
+
+    // 600 + 300 committed: exactly 100m left. If pa's failed first
+    // attempt had leaked usage, this pod could never fit.
+    add_pod(&raw, "pc", 100);
+    assert_eq!(sched.run_cycle(), 1);
+    assert_eq!(node_of(&raw, "pc").as_deref(), Some("n1"));
+}
+
+/// Watch loss + a write burst past the pod shard's retained history
+/// forces a true resync (epoch bump). The rebuilt index must reach the
+/// fresh-start fixed point: capacity freed during the outage is
+/// placeable, and a brand-new scheduler over the same world finds
+/// nothing left to do.
+#[test]
+fn resync_rebuilds_index_to_fresh_start_fixed_point() {
+    let raw = ApiServer::with_history_cap(Metrics::new(), 64);
+    let (faulty, informers, sched, _metrics) = setup(raw.clone());
+    raw.create(NodeView::build("n1", Resources::cores(1, 32 << 30), &[])).unwrap(); // 1000m
+    add_pod(&raw, "hold", 800);
+    assert_eq!(sched.run_cycle(), 1);
+    assert_eq!(node_of(&raw, "hold").as_deref(), Some("n1"));
+    add_pod(&raw, "big", 500);
+    assert_eq!(sched.run_cycle(), 0, "800m held: 500m cannot fit");
+
+    let epoch_before = informers.informer(KIND_POD).epoch();
+    faulty.kill_streams();
+    // While the scheduler is blind: free the capacity, then bury the
+    // bookmark under a burst larger than the retained window, so
+    // recovery cannot be a quiet delta relist.
+    raw.update_status(KIND_POD, "hold", |o| {
+        o.status.insert("phase", "Succeeded");
+    })
+    .unwrap();
+    for i in 0..200u64 {
+        raw.update_status(KIND_POD, "hold", |o| {
+            o.status.insert("burst", i);
+        })
+        .unwrap();
+    }
+
+    assert_eq!(sched.run_cycle(), 1, "resync frees the held capacity; big binds");
+    assert_eq!(node_of(&raw, "big").as_deref(), Some("n1"));
+    assert!(
+        informers.informer(KIND_POD).epoch() > epoch_before,
+        "history overflow must force a real resync, not a delta relist"
+    );
+
+    // Fixed point: a fresh-start scheduler over the same world agrees —
+    // nothing to place, identical tracked usage.
+    let fresh_informers = SharedInformerFactory::new(raw.client(), Metrics::new());
+    let fresh = KubeScheduler::new(&fresh_informers, Metrics::new());
+    assert_eq!(fresh.run_cycle(), 0);
+    sched.run_cycle(); // let the echo confirm big's reservation
+    assert_eq!(
+        sched.index().used_on("n1"),
+        fresh.index().used_on("n1"),
+        "rebuilt index and fresh index must track identical usage"
+    );
+    assert_eq!(sched.index().node_count(), fresh.index().node_count());
+}
