@@ -1,0 +1,97 @@
+//! Fault-injection harness overhead (PR 10): what the chaos layer costs
+//! when it is in the path, and what a full seeded scenario costs end to
+//! end.
+//!
+//! - `chaos/plan_draw`: one [`FaultPlan`] decision — the per-call price
+//!   every decorated verb pays (mutex + one PCG draw).
+//! - `chaos/api_get_raw`: baseline in-process `get` through the plain
+//!   client, for comparison.
+//! - `chaos/faulty_api_get_pass`: the same `get` through a [`FaultyApi`]
+//!   whose mix never injects — the decorator's pass-path overhead (op
+//!   label format + schedule draw). Asserted to stay within a small
+//!   multiple of the raw call, so chaos can wrap hot loops without
+//!   distorting what they measure.
+//! - `chaos/transcript_500`: render the AGE-stripped fixed-point
+//!   transcript over 500 pods + 8 nodes — the convergence probe every
+//!   scenario polls in its wait loops.
+//! - `chaos/scenario_redbox_drop`: one full scenario run (golden testbed
+//!   + faulted testbed, boot to converged transcript) — the end-to-end
+//!   number the CI chaos job's wall-clock rides on.
+//!
+//! Prints `{"bench":...}` JSON rows for the CI perf trajectory.
+
+use hpcorc::bench::{header, Bench};
+use hpcorc::chaos::{self, FaultLog, FaultPlan, FaultyApi};
+use hpcorc::cluster::{Metrics, Resources};
+use hpcorc::kube::{ApiClient, ApiServer, NodeView, PodView};
+
+fn main() {
+    println!("== chaos harness overhead (PR 10) ==");
+    println!("{}", header());
+    let mut rows = Vec::new();
+
+    // One schedule decision: the fixed per-verb cost of being decorated.
+    let plan = FaultPlan::new(7, 1);
+    rows.push(Bench::new("chaos/plan_draw").warmup(1000).iters(50_000).run(|| {
+        std::hint::black_box(plan.next());
+    }));
+
+    // Raw vs decorated get against the same in-process server. The
+    // pass-only mix (0/0/0) means the decorator never injects — what is
+    // left is exactly its bookkeeping.
+    let server = ApiServer::new(Metrics::new());
+    let pod = PodView::build("bench-pod", "img.sif", Resources::new(100, 1 << 20, 0), &[]);
+    server.create(pod).unwrap();
+    let raw = server.client();
+    rows.push(Bench::new("chaos/api_get_raw").warmup(500).iters(20_000).run(|| {
+        std::hint::black_box(raw.get("Pod", "bench-pod").unwrap());
+    }));
+    let faulty = FaultyApi::new(server.client(), FaultPlan::new(7, 1).with_mix(0.0, 0.0, 0.0), FaultLog::new());
+    rows.push(Bench::new("chaos/faulty_api_get_pass").warmup(500).iters(20_000).run(|| {
+        std::hint::black_box(faulty.get("Pod", "bench-pod").unwrap());
+    }));
+
+    // The convergence probe: transcript over a populated store. Every
+    // scenario wait-loop renders this once per poll tick.
+    let big = ApiServer::new(Metrics::new());
+    for i in 0..8u32 {
+        big.create(NodeView::build(&format!("bn{i:02}"), Resources::cores(64, 1 << 34), &[]))
+            .unwrap();
+    }
+    for i in 0..500u32 {
+        big.create(PodView::build(
+            &format!("bp{i:03}"),
+            "img.sif",
+            Resources::new(50, 1 << 20, 0),
+            &[],
+        ))
+        .unwrap();
+    }
+    let big_client = big.client();
+    rows.push(Bench::new("chaos/transcript_500").warmup(2).iters(50).run(|| {
+        std::hint::black_box(chaos::scenarios::transcript(big_client.as_ref()));
+    }));
+
+    // One full scenario: two live testbeds (clean golden + faulted),
+    // booted, driven to their fixed points, diffed. Must converge — a
+    // diverging bench run means the harness itself regressed.
+    rows.push(Bench::new("chaos/scenario_redbox_drop").warmup(0).iters(2).run(|| {
+        let report = chaos::run_scenario("redbox-drop", 7).expect("scenario run");
+        assert!(report.converged(), "bench scenario diverged:\n{}", report.render());
+    }));
+
+    println!();
+    for s in &rows {
+        println!("{}", s.json());
+    }
+
+    // Guardrail: the pass path must stay cheap enough to wrap hot loops.
+    // Generous margin (5x + 2µs slack) to stay CI-stable — the decorator
+    // adds one op-label format and one locked PCG draw per call.
+    let raw_ns = rows[1].mean_ns;
+    let pass_ns = rows[2].mean_ns;
+    assert!(
+        pass_ns <= raw_ns * 5.0 + 2_000.0,
+        "FaultyApi pass path ({pass_ns:.0}ns) dwarfs the raw call ({raw_ns:.0}ns)"
+    );
+}

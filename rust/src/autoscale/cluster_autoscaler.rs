@@ -33,7 +33,7 @@
 use crate::cluster::{Metrics, Resources};
 use crate::encoding::Value;
 use crate::kube::{
-    ApiClient, EventRecorder, Informer, KubeObject, NodeView, PodPhase, PodView,
+    ApiClient, EventRecorder, EvictionMode, Informer, KubeObject, NodeView, PodPhase, PodView,
     SharedInformerFactory, EVENT_NORMAL, KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_SLURMJOB,
     KIND_TORQUEJOB,
 };
@@ -477,11 +477,24 @@ impl ClusterAutoscaler {
                 self.metrics.inc("autoscale.ca.nodes_cordoned");
                 report.cordoned.push(node.name.clone());
             }
+            // Drain through the eviction subresource so PodDisruptionBudgets
+            // are honoured: a vetoed eviction leaves the node cordoned (no
+            // new pods land) and the drain retries on a later cycle when
+            // the budget has headroom again.
+            let mut budget_blocked = false;
             for pod in &resident {
-                match self.api.delete(KIND_POD, &pod.meta.name) {
+                match self.api.evict(&pod.meta.name, &EvictionMode::Delete) {
                     Ok(_) | Err(Error::Api(crate::util::ApiError::NotFound { .. })) => {}
+                    Err(e) if e.is_disruption_budget_exceeded() => {
+                        self.metrics.inc("autoscale.ca.evictions_budget_blocked");
+                        budget_blocked = true;
+                        break;
+                    }
                     Err(e) => return Err(e),
                 }
+            }
+            if budget_blocked {
+                continue;
             }
             if resident.is_empty() {
                 self.api.delete(KIND_NODE, &node.name)?;

@@ -1,0 +1,374 @@
+//! Seeded fault injectors for the owned boundaries of the testbed.
+//!
+//! Two wrappers, one schedule engine:
+//!
+//! - [`FaultyApi`] decorates an [`ApiClient`] (typically a `RemoteApi`
+//!   over the red-box socket) and injects connection drops, delays, and
+//!   duplicated requests in front of every unary verb — the red-box
+//!   transport fault boundary.
+//! - [`FaultyWlm`] decorates a [`WlmBridge`] and makes the HPC side slow
+//!   and lossy underneath the operator — submits and status polls fail
+//!   transiently or stall, the way a loaded login node behaves.
+//!
+//! Both draw their decisions from a [`FaultPlan`]: a PCG stream seeded
+//! from the scenario seed, so the exact sequence of injected faults is a
+//! pure function of `(seed, stream)` and a rerun reproduces it verb for
+//! verb. Every injected fault is recorded in a shared [`FaultLog`] with
+//! the trace id of the span held open around the faulted call — the same
+//! id `hpcorc audit` and `kubectl get events` attribute the downstream
+//! effects to.
+
+use crate::encoding::Value;
+use crate::kube::{
+    ApiClient, BatchPatchItem, EvictionMode, KubeObject, ListOptions, ObjectList, WatchEvent,
+};
+use crate::operator::{WlmBridge, WlmStatus};
+use crate::util::{Error, Result, Rng};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One decision from a [`FaultPlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Let the call through untouched.
+    Pass,
+    /// Fail the call with an injected transport/backend error.
+    Drop,
+    /// Stall the call for the given duration, then let it through.
+    Delay(Duration),
+    /// Execute the call twice (a retransmitted request); the first
+    /// result is returned, the duplicate's is discarded.
+    Duplicate,
+}
+
+impl Fault {
+    fn label(&self) -> &'static str {
+        match self {
+            Fault::Pass => "pass",
+            Fault::Drop => "drop",
+            Fault::Delay(_) => "delay",
+            Fault::Duplicate => "duplicate",
+        }
+    }
+}
+
+/// Seeded, thread-safe fault schedule. Probabilities are per call;
+/// whatever remains after drop/delay/duplicate is a clean pass.
+#[derive(Debug)]
+pub struct FaultPlan {
+    rng: Mutex<Rng>,
+    drop_p: f64,
+    delay_p: f64,
+    dup_p: f64,
+    max_delay: Duration,
+}
+
+impl FaultPlan {
+    /// Default mix: 15% drops, 20% delays (up to 2ms), 5% duplicates.
+    pub fn new(seed: u64, stream: u64) -> FaultPlan {
+        FaultPlan {
+            rng: Mutex::new(Rng::with_stream(seed, stream)),
+            drop_p: 0.15,
+            delay_p: 0.20,
+            dup_p: 0.05,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+
+    /// Override the fault mix (each in [0, 1], summing to at most 1).
+    pub fn with_mix(mut self, drop_p: f64, delay_p: f64, dup_p: f64) -> FaultPlan {
+        self.drop_p = drop_p;
+        self.delay_p = delay_p;
+        self.dup_p = dup_p;
+        self
+    }
+
+    pub fn with_max_delay(mut self, d: Duration) -> FaultPlan {
+        self.max_delay = d;
+        self
+    }
+
+    /// Draw the next scheduled fault.
+    pub fn next(&self) -> Fault {
+        let mut rng = self.rng.lock().unwrap();
+        let x = rng.f64();
+        if x < self.drop_p {
+            Fault::Drop
+        } else if x < self.drop_p + self.delay_p {
+            let max_us = self.max_delay.as_micros().max(1) as u64;
+            Fault::Delay(Duration::from_micros(rng.range(1, max_us)))
+        } else if x < self.drop_p + self.delay_p + self.dup_p {
+            Fault::Duplicate
+        } else {
+            Fault::Pass
+        }
+    }
+}
+
+/// One injected fault, as reported by `hpcorc chaos`.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    /// Injection order within the scenario (0-based).
+    pub seq: usize,
+    /// Boundary the fault was injected at (`api` or `wlm`).
+    pub boundary: &'static str,
+    /// The faulted operation, e.g. `create Pod/p0` or `wlm submit`.
+    pub op: String,
+    /// `drop` | `delay` | `duplicate`.
+    pub fault: String,
+    /// Wire rendering of the chaos span held around the faulted call —
+    /// the id `hpcorc audit` / `hpcorc trace` attribute effects to.
+    pub trace: String,
+}
+
+/// Shared sink for injected-fault records (cheap to clone).
+#[derive(Debug, Clone, Default)]
+pub struct FaultLog {
+    records: Arc<Mutex<Vec<FaultRecord>>>,
+}
+
+impl FaultLog {
+    pub fn new() -> FaultLog {
+        FaultLog::default()
+    }
+
+    fn record(&self, boundary: &'static str, op: &str, fault: &Fault, trace: String) {
+        let mut rs = self.records.lock().unwrap();
+        let seq = rs.len();
+        rs.push(FaultRecord {
+            seq,
+            boundary,
+            op: op.to_string(),
+            fault: fault.label().to_string(),
+            trace,
+        });
+    }
+
+    pub fn take(&self) -> Vec<FaultRecord> {
+        std::mem::take(&mut *self.records.lock().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Run `f` under one scheduled fault decision, recording any injection
+/// into `log` with the trace id of a span held open across the call —
+/// so the server-side audit record / object annotations of a delayed or
+/// duplicated call parent on the chaos trace.
+fn inject<T>(
+    plan: &FaultPlan,
+    log: &FaultLog,
+    boundary: &'static str,
+    op: &str,
+    err: impl FnOnce(String) -> Error,
+    f: impl Fn() -> Result<T>,
+) -> Result<T> {
+    let fault = plan.next();
+    if fault == Fault::Pass {
+        return f();
+    }
+    let _actor = crate::obs::push_actor("chaos");
+    let span = crate::obs::span("chaos", &format!("fault {} {op}", fault.label()));
+    let trace = span.context().map(|c| c.to_wire()).unwrap_or_default();
+    log.record(boundary, op, &fault, trace);
+    match fault {
+        Fault::Pass => unreachable!(),
+        Fault::Drop => Err(err(format!("chaos: injected {boundary} drop on {op}"))),
+        Fault::Delay(d) => {
+            std::thread::sleep(d);
+            f()
+        }
+        Fault::Duplicate => {
+            let first = f();
+            let _ = f(); // the retransmission; result discarded
+            first
+        }
+    }
+}
+
+// ------------------------------------------------------------ red-box side
+
+/// [`ApiClient`] decorator injecting seeded transport faults in front of
+/// every unary verb. Watches pass through untouched (stream loss has its
+/// own scenario — the history-overflow one). Wrap a `RemoteApi` to model
+/// red-box connection trouble; the consumer must survive on retries.
+pub struct FaultyApi {
+    inner: Arc<dyn ApiClient>,
+    plan: FaultPlan,
+    log: FaultLog,
+}
+
+impl FaultyApi {
+    pub fn new(inner: Arc<dyn ApiClient>, plan: FaultPlan, log: FaultLog) -> FaultyApi {
+        FaultyApi { inner, plan, log }
+    }
+
+    fn gate<T>(&self, op: String, f: impl Fn() -> Result<T>) -> Result<T> {
+        inject(&self.plan, &self.log, "api", &op, Error::rpc, f)
+    }
+}
+
+impl ApiClient for FaultyApi {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        let op = format!("create {}/{}", obj.kind, obj.meta.name);
+        self.gate(op, || self.inner.create(obj.clone()))
+    }
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.gate(format!("get {kind}/{name}"), || self.inner.get(kind, name))
+    }
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        let op = format!("update {}/{}", obj.kind, obj.meta.name);
+        self.gate(op, || self.inner.update(obj.clone()))
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        self.gate(format!("update_status {kind}/{name}"), || {
+            self.inner.update_status(kind, name, f)
+        })
+    }
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        self.gate(format!("patch {kind}/{name}"), || {
+            self.inner.patch_merge(kind, name, patch)
+        })
+    }
+    fn update_status_batch(
+        &self,
+        items: &[BatchPatchItem],
+    ) -> Result<Vec<Result<KubeObject>>> {
+        self.gate(format!("update_status_batch x{}", items.len()), || {
+            self.inner.update_status_batch(items)
+        })
+    }
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.gate(format!("delete {kind}/{name}"), || self.inner.delete(kind, name))
+    }
+    fn evict(&self, name: &str, mode: &EvictionMode) -> Result<KubeObject> {
+        self.gate(format!("evict Pod/{name}"), || self.inner.evict(name, mode))
+    }
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        let op = format!("apply {}/{}", obj.kind, obj.meta.name);
+        self.gate(op, || self.inner.apply(obj.clone()))
+    }
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        self.gate(format!("list {kind}"), || self.inner.list(kind, opts))
+    }
+    fn watch(&self, kind: Option<&str>, from_version: u64) -> Result<Receiver<WatchEvent>> {
+        self.inner.watch(kind, from_version)
+    }
+    fn server_time_s(&self) -> Result<f64> {
+        self.inner.server_time_s()
+    }
+}
+
+// --------------------------------------------------------------- WLM side
+
+/// [`WlmBridge`] decorator making the HPC backend slow and lossy: submit
+/// and status calls transiently fail or stall per the plan. Plugs into
+/// [`crate::hybrid::TestbedConfig::wlm_shim`]; the operator's
+/// backoff-and-retry reconcile loop must absorb every injected failure.
+pub struct FaultyWlm {
+    inner: Arc<dyn WlmBridge>,
+    plan: FaultPlan,
+    log: FaultLog,
+}
+
+impl FaultyWlm {
+    pub fn new(inner: Arc<dyn WlmBridge>, plan: FaultPlan, log: FaultLog) -> FaultyWlm {
+        FaultyWlm { inner, plan, log }
+    }
+
+    fn gate<T>(&self, op: &str, f: impl Fn() -> Result<T>) -> Result<T> {
+        inject(&self.plan, &self.log, "wlm", op, Error::wlm, f)
+    }
+}
+
+impl WlmBridge for FaultyWlm {
+    fn submit(&self, script: &str, user: &str) -> Result<String> {
+        self.gate("wlm submit", || self.inner.submit(script, user))
+    }
+    fn status(&self, job_id: &str) -> Result<WlmStatus> {
+        self.gate(&format!("wlm status {job_id}"), || self.inner.status(job_id))
+    }
+    fn cancel(&self, job_id: &str) -> Result<()> {
+        self.gate(&format!("wlm cancel {job_id}"), || self.inner.cancel(job_id))
+    }
+    fn read_file(&self, path: &str) -> Result<String> {
+        self.gate(&format!("wlm read {path}"), || self.inner.read_file(path))
+    }
+    fn write_file(&self, path: &str, content: &str) -> Result<()> {
+        self.gate(&format!("wlm write {path}"), || self.inner.write_file(path, content))
+    }
+    fn queues(&self) -> Result<Vec<String>> {
+        self.gate("wlm queues", || self.inner.queues())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_seed_deterministic() {
+        let a = FaultPlan::new(42, 1);
+        let b = FaultPlan::new(42, 1);
+        let seq_a: Vec<Fault> = (0..200).map(|_| a.next()).collect();
+        let seq_b: Vec<Fault> = (0..200).map(|_| b.next()).collect();
+        assert_eq!(seq_a, seq_b);
+        // A different stream diverges.
+        let c = FaultPlan::new(42, 2);
+        let seq_c: Vec<Fault> = (0..200).map(|_| c.next()).collect();
+        assert_ne!(seq_a, seq_c);
+        // The mix actually injects something.
+        assert!(seq_a.iter().any(|f| *f != Fault::Pass));
+        assert!(seq_a.iter().any(|f| *f == Fault::Pass));
+    }
+
+    #[test]
+    fn faulty_api_drops_and_recovers() {
+        use crate::kube::{ApiServer, PodView};
+        use crate::cluster::{Metrics, Resources};
+        let server = ApiServer::new(Metrics::new());
+        let log = FaultLog::new();
+        // Drop everything: every call must fail with an injected error.
+        let all_drops = FaultPlan::new(7, 0).with_mix(1.0, 0.0, 0.0);
+        let api = FaultyApi::new(server.client(), all_drops, log.clone());
+        let pod = PodView::build("p0", "x.sif", Resources::new(100, 0, 0), &[]);
+        let err = api.create(pod.clone()).unwrap_err();
+        assert!(err.to_string().contains("chaos: injected api drop"));
+        assert_eq!(log.len(), 1);
+        // Pass-through plan: the same call lands.
+        let clean = FaultPlan::new(7, 1).with_mix(0.0, 0.0, 0.0);
+        let api = FaultyApi::new(server.client(), clean, log.clone());
+        api.create(pod).unwrap();
+        assert!(server.get("Pod", "p0").is_ok());
+        assert_eq!(log.len(), 1, "clean passes are not recorded");
+        // Fault records carry a trace id for audit attribution.
+        assert!(!log.take()[0].trace.is_empty());
+    }
+
+    #[test]
+    fn duplicate_returns_first_result() {
+        use crate::kube::{ApiServer, PodView};
+        use crate::cluster::{Metrics, Resources};
+        let server = ApiServer::new(Metrics::new());
+        let log = FaultLog::new();
+        let dups = FaultPlan::new(3, 0).with_mix(0.0, 0.0, 1.0);
+        let api = FaultyApi::new(server.client(), dups, log.clone());
+        let pod = PodView::build("dup", "x.sif", Resources::new(100, 0, 0), &[]);
+        // First create succeeds; the duplicate's AlreadyExists is swallowed.
+        api.create(pod).unwrap();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.take()[0].fault, "duplicate");
+    }
+}

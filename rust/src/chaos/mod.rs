@@ -1,0 +1,187 @@
+//! Deterministic fault-injection harness (PR 10).
+//!
+//! Chaos here is not random monkey-testing: every scenario is a **named,
+//! seed-reproducible schedule of faults** injected at boundaries this
+//! codebase owns, driven against the *live* testbed (real daemons, real
+//! store, real red-box socket), and judged against the fresh-start fixed
+//! point. The paper's testbed claims the orchestration layer hides HPC
+//! infrastructure failures from the Kubernetes side; this module is the
+//! executable form of that claim.
+//!
+//! # The model
+//!
+//! A [`Scenario`] is `(name, seed) -> ChaosReport`. Each scenario:
+//!
+//! 1. **Computes the golden fixed point** — it runs its workload on a
+//!    *clean* testbed and renders an AGE-stripped, `kubectl get`-style
+//!    transcript of the converged end state ([`scenarios::transcript`]).
+//! 2. **Runs the same workload under faults** — injectors wound into one
+//!    owned boundary ([`FaultyApi`] in front of the red-box transport,
+//!    [`FaultyWlm`] under the operator, a WAL-backed server kill+restart,
+//!    a kubelet killed out from under its pods, a watch-history window
+//!    too small for the write load). Every injected fault draws from a
+//!    [`FaultPlan`] — a PCG stream seeded from the scenario seed — and is
+//!    logged with the trace id of the span held open around it, so
+//!    `hpcorc audit` and `kubectl get events` attribute the fallout.
+//! 3. **Asserts convergence** — the faulted run must reach a transcript
+//!    *byte-identical* to the golden one ([`ChaosReport::converged`]),
+//!    plus scenario-specific checks (orphans drained through the
+//!    `pods/eviction` subresource, budgets respected, CRDs surviving the
+//!    restart, ...).
+//!
+//! Same seed, same scenario → same fault schedule and the same final
+//! transcript (`tests/chaos.rs` runs the matrix twice and diffs).
+//!
+//! # Running it
+//!
+//! ```text
+//! hpcorc chaos                          # run every scenario, seed 7
+//! hpcorc chaos --scenario kubelet-death --seed 42
+//! hpcorc chaos --json                   # machine-readable reports
+//! ```
+//!
+//! # Adding a scenario
+//!
+//! 1. Write `fn my_scenario(seed: u64) -> Result<ChaosReport>` in
+//!    [`scenarios`]: boot a golden run, boot a faulted run, drive both to
+//!    their fixed points with `transcript()`, record checks.
+//! 2. Add it to the [`scenarios()`] registry with a kebab-case name.
+//! 3. The CLI, `tests/chaos.rs` matrix, the CI `chaos` job, and
+//!    `benches/chaos.rs` all iterate the registry — no further wiring.
+//!
+//! Fault boundaries are *seams the production code already has*: the
+//! [`crate::kube::ApiClient`] trait, the
+//! [`crate::hybrid::TestbedConfig::wlm_shim`] hook, the WAL directory,
+//! and [`crate::hybrid::Testbed::kill_kubelet`]. Chaos never reaches into
+//! private state — if a fault cannot be injected at a public seam, that
+//! is a missing seam, not a missing hack.
+
+pub mod fault;
+pub mod scenarios;
+
+pub use fault::{Fault, FaultLog, FaultPlan, FaultRecord, FaultyApi, FaultyWlm};
+
+use crate::util::{Error, Result};
+
+/// A named, seed-reproducible fault schedule against the live testbed.
+#[derive(Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    run: fn(u64) -> Result<ChaosReport>,
+}
+
+/// Everything one scenario run produced.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub scenario: String,
+    pub seed: u64,
+    /// Every injected fault, in injection order, trace-stamped.
+    pub faults: Vec<FaultRecord>,
+    /// Fixed-point transcript of the clean (golden) run.
+    pub golden: String,
+    /// Fixed-point transcript of the faulted run.
+    pub transcript: String,
+    /// Scenario-specific assertions that held (named, human-readable).
+    pub checks: Vec<String>,
+}
+
+impl ChaosReport {
+    /// Did the faulted run converge to the fresh-start fixed point?
+    pub fn converged(&self) -> bool {
+        self.golden == self.transcript
+    }
+
+    /// Human rendering for `hpcorc chaos`.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "scenario {} (seed {}): {} — {} faults injected\n",
+            self.scenario,
+            self.seed,
+            if self.converged() { "CONVERGED" } else { "DIVERGED" },
+            self.faults.len(),
+        );
+        for c in &self.checks {
+            out.push_str(&format!("  check: {c}\n"));
+        }
+        for f in self.faults.iter().take(12) {
+            out.push_str(&format!(
+                "  fault #{:<3} [{}] {:<9} {} trace={}\n",
+                f.seq, f.boundary, f.fault, f.op, f.trace
+            ));
+        }
+        if self.faults.len() > 12 {
+            out.push_str(&format!("  ... {} more faults\n", self.faults.len() - 12));
+        }
+        if !self.converged() {
+            out.push_str("--- golden ---\n");
+            out.push_str(&self.golden);
+            out.push_str("--- faulted ---\n");
+            out.push_str(&self.transcript);
+        }
+        out
+    }
+
+    /// One-line JSON rendering for `hpcorc chaos --json` / CI artefacts.
+    pub fn to_json(&self) -> String {
+        let checks: Vec<String> =
+            self.checks.iter().map(|c| format!("\"{}\"", c.replace('"', "'"))).collect();
+        format!(
+            "{{\"scenario\":\"{}\",\"seed\":{},\"converged\":{},\"faults\":{},\"checks\":[{}]}}",
+            self.scenario,
+            self.seed,
+            self.converged(),
+            self.faults.len(),
+            checks.join(",")
+        )
+    }
+}
+
+/// The scenario registry — the CLI, the test matrix, the CI job, and the
+/// bench all iterate this.
+pub fn scenarios() -> &'static [Scenario] {
+    &[
+        Scenario {
+            name: "redbox-drop",
+            summary: "seeded drop/delay/duplicate faults on the red-box API transport",
+            run: scenarios::redbox_drop,
+        },
+        Scenario {
+            name: "apiserver-restart",
+            summary: "API server killed mid-admission and restarted over its WAL",
+            run: scenarios::apiserver_restart,
+        },
+        Scenario {
+            name: "wlm-slow",
+            summary: "slow, lossy WLM backend under the operator",
+            run: scenarios::wlm_slow,
+        },
+        Scenario {
+            name: "kubelet-death",
+            summary: "kubelet killed under running pods; drain via pods/eviction + PDB",
+            run: scenarios::kubelet_death,
+        },
+        Scenario {
+            name: "watch-overflow",
+            summary: "watch-history window overflowed by write bursts",
+            run: scenarios::watch_overflow,
+        },
+    ]
+}
+
+/// Run one scenario by name. Errors on an unknown name or a failed
+/// scenario-internal assertion; a *divergent* transcript is reported via
+/// [`ChaosReport::converged`], not an error, so callers can print the diff.
+pub fn run_scenario(name: &str, seed: u64) -> Result<ChaosReport> {
+    let sc = scenarios()
+        .iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| {
+            let known: Vec<&str> = scenarios().iter().map(|s| s.name).collect();
+            Error::internal(format!(
+                "unknown chaos scenario `{name}` (known: {})",
+                known.join(", ")
+            ))
+        })?;
+    (sc.run)(seed)
+}

@@ -37,7 +37,8 @@ Testbed:
 Kubernetes surface (against a running testbed; KIND accepts kubectl-style
 aliases — pods/po, nodes/no, deploy, torquejobs/tj, slurmjobs/sj,
 clusterqueues/cq, localqueues/lq, hpa, nodemetrics, podmetrics,
-events/ev):
+events/ev, poddisruptionbudgets/pdb, crds/crd — plus any alias of a
+CustomResourceDefinition registered through the API):
   kubectl apply -f FILE --socket PATH
   kubectl get KIND [NAME] [--socket PATH] [-o yaml|json] [-l k=v,...]
             `kubectl get events` renders the cluster event table
@@ -86,6 +87,15 @@ Observability (against a running testbed, PR 7/8):
             the API server's mutating-request audit trail (verb, object,
             actor, trace id, outcome, latency), oldest first; --since is
             an exclusive sequence-number cursor for incremental reads
+
+Fault injection (PR 10; self-contained — boots its own testbeds):
+  chaos     [--scenario NAME] [--seed N] [--json]
+            run the named deterministic fault-injection scenario (default:
+            all of them) against a live testbed and diff the converged
+            state against a clean run's golden transcript; same seed, same
+            faults, same transcript. Scenarios: redbox-drop,
+            apiserver-restart, wlm-slow, kubelet-death, watch-overflow.
+            Exits non-zero if any scenario diverges
 ";
 
 fn policy_by_name(name: &str) -> Result<Box<dyn SchedPolicy>> {
@@ -476,6 +486,39 @@ fn print_table(kind: &str, server_now: f64, items: &[KubeObject]) {
                 );
             }
         }
+        "PodDisruptionBudget" => {
+            println!(
+                "{:<20} {:<6} {:<13} {:<15} {:>7}",
+                "NAME", "AGE", "MIN-AVAILABLE", "MAX-UNAVAILABLE", "ALLOWED"
+            );
+            for o in items {
+                let fmt = |v: Option<i64>| v.map(|n| n.to_string()).unwrap_or_else(|| "N/A".into());
+                println!(
+                    "{:<20} {:<6} {:<13} {:<15} {:>7}",
+                    o.meta.name,
+                    fmt_age(Duration::from_secs_f64((server_now - o.meta.creation_s).max(0.0))),
+                    fmt(o.spec.opt_int("minAvailable")),
+                    fmt(o.spec.opt_int("maxUnavailable")),
+                    o.status.opt_int("disruptionsAllowed").unwrap_or(0)
+                );
+            }
+        }
+        "CustomResourceDefinition" => {
+            println!("{:<28} {:<6} {:<16} {:<16}", "NAME", "AGE", "KIND", "PLURAL");
+            for o in items {
+                let names = o.spec.get("names");
+                let name_of = |k: &str| {
+                    names.and_then(|n| n.opt_str(k)).unwrap_or("").to_string()
+                };
+                println!(
+                    "{:<28} {:<6} {:<16} {:<16}",
+                    o.meta.name,
+                    fmt_age(Duration::from_secs_f64((server_now - o.meta.creation_s).max(0.0))),
+                    name_of("kind"),
+                    name_of("plural")
+                );
+            }
+        }
         "LocalQueue" => {
             println!(
                 "{:<16} {:<16} {:>8} {:>9}",
@@ -748,6 +791,39 @@ pub fn cmd_audit(args: &mut Args) -> Result<()> {
             lat_us,
             r.opt_str("trace").unwrap_or("-"),
         );
+    }
+    Ok(())
+}
+
+pub fn cmd_chaos(args: &mut Args) -> Result<()> {
+    let seed: u64 = args.num("seed", 7)?;
+    let json = args.bool("json");
+    let reports = match args.flag("scenario") {
+        Some(name) => vec![crate::chaos::run_scenario(name, seed)?],
+        None => {
+            let mut out = Vec::new();
+            for sc in crate::chaos::scenarios() {
+                out.push(crate::chaos::run_scenario(sc.name, seed)?);
+            }
+            out
+        }
+    };
+    let mut diverged = 0usize;
+    for r in &reports {
+        if json {
+            println!("{}", r.to_json());
+        } else {
+            print!("{}", r.render());
+        }
+        if !r.converged() {
+            diverged += 1;
+        }
+    }
+    if diverged > 0 {
+        return Err(Error::internal(format!(
+            "{diverged}/{} chaos scenarios diverged from the golden transcript",
+            reports.len()
+        )));
     }
     Ok(())
 }

@@ -33,6 +33,7 @@ pub fn main(argv: Vec<String>) -> i32 {
         "trace" => commands::cmd_trace(&mut args),
         "metrics" => commands::cmd_metrics(&mut args),
         "audit" => commands::cmd_audit(&mut args),
+        "chaos" => commands::cmd_chaos(&mut args),
         "sim" => commands::cmd_sim(&mut args),
         "sing" => commands::cmd_sing(&mut args),
         "version" => commands::cmd_version(&mut args),

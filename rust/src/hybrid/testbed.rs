@@ -68,6 +68,12 @@ pub struct TestbedConfig {
     /// is additionally appended to this file as one JSON record per line
     /// (the in-memory ring serves `hpcorc audit` regardless).
     pub audit_log: Option<PathBuf>,
+    /// Chaos seam (PR 10): wrap the operators' WLM bridges before use.
+    /// `crate::chaos::FaultyWlm` plugs in here to inject seeded latency
+    /// and transient submit/status failures between the operator and the
+    /// HPC cluster without touching either side.
+    #[allow(clippy::type_complexity)]
+    pub wlm_shim: Option<Arc<dyn Fn(Arc<dyn WlmBridge>) -> Arc<dyn WlmBridge> + Send + Sync>>,
 }
 
 impl Default for TestbedConfig {
@@ -87,6 +93,7 @@ impl Default for TestbedConfig {
             autoscale: None,
             wal_dir: None,
             audit_log: None,
+            wlm_shim: None,
         }
     }
 }
@@ -163,6 +170,8 @@ pub struct Testbed {
     redbox: RedboxServer,
     socket: PathBuf,
     time_scale: f64,
+    /// Per-static-worker kubelet shutdowns — the chaos kubelet-death lever.
+    worker_shutdowns: Arc<std::sync::Mutex<std::collections::HashMap<String, Shutdown>>>,
     /// True when this testbed attached the process-wide span-log sink
     /// (WAL runs); `stop()` then detaches it so later boots start clean.
     owns_span_sink: bool,
@@ -367,9 +376,15 @@ impl Testbed {
             });
         }
         // Workers + the login node (which is also a kube worker, Fig. 1).
+        // Each static kubelet gets its OWN shutdown handle (chained to
+        // the testbed-wide one below) so chaos scenarios can kill one
+        // node agent without taking the testbed down — see
+        // [`Testbed::kill_kubelet`].
         let mut worker_names: Vec<String> =
             (0..config.kube_workers).map(|i| format!("kw{i:02}")).collect();
         worker_names.push("login".into());
+        let worker_shutdowns: Arc<std::sync::Mutex<std::collections::HashMap<String, Shutdown>>> =
+            Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
         for name in &worker_names {
             let cri = SingularityCri::new(runtime.clone());
             let kubelet = Kubelet::register(
@@ -382,22 +397,45 @@ impl Testbed {
                 config.time_scale,
                 metrics.clone(),
             )?;
-            kubelet.start(Duration::from_millis(1), shutdown.clone());
+            let sd = Shutdown::new();
+            worker_shutdowns.lock().unwrap().insert(name.clone(), sd.clone());
+            kubelet.start(Duration::from_millis(1), sd);
+        }
+        {
+            // One chain thread fans the testbed shutdown out to every
+            // still-alive static kubelet (mirrors KubeletProvisioner).
+            let global = shutdown.clone();
+            let nodes = worker_shutdowns.clone();
+            crate::rt::spawn_named("tb-kubelet-chain", move || {
+                global.wait();
+                for sd in nodes.lock().unwrap().values() {
+                    sd.trigger();
+                }
+            });
         }
 
         // ---- operators + virtual nodes ----
-        let torque_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::torque(
+        let mut torque_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::torque(
             RedboxClient::connect_retry(&socket, Duration::from_secs(5))?,
         ));
         operator::register_virtual_nodes(&api, torque_bridge.as_ref(), "torque")?;
+        // Chaos seam: the operator talks to the WLM through the shimmed
+        // bridge; node registration above used the clean one so boot
+        // never depends on an injected fault schedule.
+        if let Some(shim) = &config.wlm_shim {
+            torque_bridge = shim(torque_bridge);
+        }
         let torque_op = operator::torque_operator(torque_bridge, metrics.clone());
         Arc::new(ControllerRunner::new(client.clone(), torque_op, metrics.clone()))
             .start(informers.informer(KIND_TORQUEJOB), shutdown.clone());
         if slurm.is_some() {
-            let slurm_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::slurm(
+            let mut slurm_bridge: Arc<dyn WlmBridge> = Arc::new(RedboxBridge::slurm(
                 RedboxClient::connect_retry(&socket, Duration::from_secs(5))?,
             ));
             operator::register_virtual_nodes(&api, slurm_bridge.as_ref(), "slurm")?;
+            if let Some(shim) = &config.wlm_shim {
+                slurm_bridge = shim(slurm_bridge);
+            }
             let slurm_op = operator::wlm_operator(slurm_bridge, metrics.clone());
             Arc::new(ControllerRunner::new(client.clone(), slurm_op, metrics.clone()))
                 .start(informers.informer(KIND_SLURMJOB), shutdown.clone());
@@ -463,6 +501,7 @@ impl Testbed {
             redbox,
             socket,
             time_scale: config.time_scale,
+            worker_shutdowns,
             owns_span_sink,
         })
     }
@@ -479,6 +518,22 @@ impl Testbed {
 
     pub fn time_scale(&self) -> f64 {
         self.time_scale
+    }
+
+    /// Chaos lever (PR 10): kill one static worker's kubelet daemon. The
+    /// Node object stays registered, the node's containers keep running
+    /// unmanaged (orphaned), and nothing updates its pods' status again —
+    /// the failure mode a real node agent crash leaves behind. Recovery
+    /// is the caller's job (drain through the eviction subresource, then
+    /// delete the Node). Returns false if no such live kubelet.
+    pub fn kill_kubelet(&self, node: &str) -> bool {
+        match self.worker_shutdowns.lock().unwrap().remove(node) {
+            Some(sd) => {
+                sd.trigger();
+                true
+            }
+            None => false,
+        }
     }
 
     /// `kubectl apply -f` for a manifest string; returns created names.

@@ -17,9 +17,15 @@ pub const KIND_NODE: &str = "Node";
 pub const KIND_DEPLOYMENT: &str = "Deployment";
 pub const KIND_TORQUEJOB: &str = "TorqueJob";
 pub const KIND_SLURMJOB: &str = "SlurmJob";
+pub const KIND_PODDISRUPTIONBUDGET: &str = "PodDisruptionBudget";
+pub const KIND_CUSTOMRESOURCEDEFINITION: &str = "CustomResourceDefinition";
 
 /// The apiVersion Torque-Operator registers its CRDs under (paper Fig. 3).
 pub const WLM_API_VERSION: &str = "wlm.sylabs.io/v1alpha1";
+/// apiVersion of PodDisruptionBudget (k8s `policy/v1`).
+pub const POLICY_API_VERSION: &str = "policy/v1";
+/// apiVersion of CustomResourceDefinition (k8s `apiextensions.k8s.io/v1`).
+pub const APIEXTENSIONS_API_VERSION: &str = "apiextensions.k8s.io/v1";
 
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct ObjectMeta {
@@ -428,6 +434,227 @@ impl ResourceView for NodeView {
     }
 }
 
+// ------------------------------------------------- PodDisruptionBudget
+
+/// Typed view over a `policy/v1 PodDisruptionBudget`. Exactly one of
+/// `min_available`/`max_unavailable` is normally set; when both are, the
+/// stricter `min_available` wins (matching the validation real k8s would
+/// reject — we keep evaluation total instead of failing the eviction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PdbView {
+    pub name: String,
+    /// `spec.selector.matchLabels` — pods whose labels include every pair
+    /// are covered by this budget.
+    pub selector: Vec<(String, String)>,
+    pub min_available: Option<i64>,
+    pub max_unavailable: Option<i64>,
+    /// `status.disruptionsAllowed` as last computed by the server.
+    pub disruptions_allowed: i64,
+}
+
+impl PdbView {
+    pub fn from_object(o: &KubeObject) -> Result<PdbView> {
+        if o.kind != KIND_PODDISRUPTIONBUDGET {
+            return Err(Error::parse(format!("expected PodDisruptionBudget, got {}", o.kind)));
+        }
+        Ok(PdbView {
+            name: o.meta.name.clone(),
+            selector: o
+                .spec
+                .path(&["selector", "matchLabels"])
+                .map(decode_str_map)
+                .unwrap_or_default(),
+            min_available: o.spec.opt_int("minAvailable"),
+            max_unavailable: o.spec.opt_int("maxUnavailable"),
+            disruptions_allowed: o.status.opt_int("disruptionsAllowed").unwrap_or(0),
+        })
+    }
+
+    /// True when `labels` satisfies the budget's selector (empty selector
+    /// matches nothing — a PDB must name the pods it protects).
+    pub fn matches(&self, labels: &[(String, String)]) -> bool {
+        !self.selector.is_empty()
+            && self
+                .selector
+                .iter()
+                .all(|(k, v)| labels.iter().any(|(lk, lv)| lk == k && lv == v))
+    }
+
+    /// Build a PDB with `minAvailable` semantics.
+    pub fn build_min_available(
+        name: &str,
+        selector: &[(String, String)],
+        min_available: i64,
+    ) -> KubeObject {
+        let spec = Value::map()
+            .with("selector", Value::map().with("matchLabels", encode_str_map(selector)))
+            .with("minAvailable", min_available as u64);
+        let mut o = KubeObject::new(KIND_PODDISRUPTIONBUDGET, name, spec);
+        o.api_version = POLICY_API_VERSION.into();
+        o
+    }
+
+    /// Build a PDB with `maxUnavailable` semantics.
+    pub fn build_max_unavailable(
+        name: &str,
+        selector: &[(String, String)],
+        max_unavailable: i64,
+    ) -> KubeObject {
+        let spec = Value::map()
+            .with("selector", Value::map().with("matchLabels", encode_str_map(selector)))
+            .with("maxUnavailable", max_unavailable as u64);
+        let mut o = KubeObject::new(KIND_PODDISRUPTIONBUDGET, name, spec);
+        o.api_version = POLICY_API_VERSION.into();
+        o
+    }
+}
+
+impl ResourceView for PdbView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_PODDISRUPTIONBUDGET]
+    }
+    fn from_object(obj: &KubeObject) -> Result<PdbView> {
+        PdbView::from_object(obj)
+    }
+}
+
+/// Healthy = Running: the PDB notion of an available replica.
+fn pod_healthy(pod: &KubeObject) -> bool {
+    pod.status.opt_str("phase").unwrap_or("Pending") == "Running"
+}
+
+/// PDB admission verdict for evicting `victim`: the name of the first
+/// budget the disruption would violate, or `None` when every matching
+/// budget (possibly none) allows it. Evicting a pod that is not currently
+/// healthy costs no availability — but a budget already below its floor
+/// blocks *all* evictions of its pods, matching `disruptionsAllowed: 0`.
+pub fn pdb_blocking(
+    pdbs: &[KubeObject],
+    pods: &[KubeObject],
+    victim: &KubeObject,
+) -> Option<String> {
+    let disruption = pod_healthy(victim) as i64;
+    for po in pdbs {
+        let Ok(pdb) = PdbView::from_object(po) else { continue };
+        if !pdb.matches(&victim.meta.labels) {
+            continue;
+        }
+        let matching: Vec<&KubeObject> =
+            pods.iter().filter(|p| pdb.matches(&p.meta.labels)).collect();
+        let healthy = matching.iter().filter(|p| pod_healthy(p)).count() as i64;
+        let total = matching.len() as i64;
+        if let Some(min) = pdb.min_available {
+            if healthy - disruption < min {
+                return Some(pdb.name);
+            }
+        } else if let Some(max) = pdb.max_unavailable {
+            if (total - healthy) + disruption > max {
+                return Some(pdb.name);
+            }
+        }
+    }
+    None
+}
+
+/// How many more voluntary disruptions a PDB allows, given the current pod
+/// set — the `status.disruptionsAllowed` number the server maintains.
+pub fn pdb_disruptions_allowed(pdb: &PdbView, pods: &[KubeObject]) -> i64 {
+    let matching: Vec<&KubeObject> =
+        pods.iter().filter(|p| pdb.matches(&p.meta.labels)).collect();
+    let healthy = matching.iter().filter(|p| pod_healthy(p)).count() as i64;
+    let total = matching.len() as i64;
+    if let Some(min) = pdb.min_available {
+        (healthy - min).max(0)
+    } else if let Some(max) = pdb.max_unavailable {
+        (max - (total - healthy)).max(0)
+    } else {
+        healthy
+    }
+}
+
+/// The requeue-mode eviction mutation: unbind the pod, reset it to
+/// Pending, and park it behind `gate` so the scheduler cannot re-bind it
+/// before the admission layer re-admits — applied atomically inside the
+/// server's eviction path (kueue preemption uses this instead of delete).
+pub fn requeue_evict_mutation(obj: &mut KubeObject, gate: &str) {
+    obj.spec.remove("nodeName");
+    obj.status.insert("phase", "Pending");
+    add_scheduling_gate(obj, gate);
+}
+
+// ------------------------------------------- CustomResourceDefinition
+
+/// Typed view over an `apiextensions.k8s.io/v1 CustomResourceDefinition`.
+/// Creating/applying one against the API server registers the named kind
+/// in the server's *runtime* scheme, so `kubectl get <plural|short>`
+/// resolves it exactly like a built-in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrdView {
+    pub name: String,
+    /// API group (e.g. `stable.example.com`).
+    pub group: String,
+    /// Served version (e.g. `v1`).
+    pub version: String,
+    /// CamelCase kind the CRD introduces (e.g. `FlinkJob`).
+    pub kind: String,
+    pub plural: String,
+    pub short_names: Vec<String>,
+}
+
+impl CrdView {
+    pub fn from_object(o: &KubeObject) -> Result<CrdView> {
+        if o.kind != KIND_CUSTOMRESOURCEDEFINITION {
+            return Err(Error::parse(format!(
+                "expected CustomResourceDefinition, got {}",
+                o.kind
+            )));
+        }
+        let names = o.spec.req("names").map_err(|_| Error::parse("crd spec.names missing"))?;
+        Ok(CrdView {
+            name: o.meta.name.clone(),
+            group: o.spec.req_str("group")?.to_string(),
+            version: o.spec.opt_str("version").unwrap_or("v1").to_string(),
+            kind: names.req_str("kind")?.to_string(),
+            plural: names.req_str("plural")?.to_string(),
+            short_names: names
+                .get("shortNames")
+                .and_then(Value::as_seq)
+                .map(|s| s.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// The `group/version` apiVersion objects of this CRD carry.
+    pub fn api_version(&self) -> String {
+        format!("{}/{}", self.group, self.version)
+    }
+
+    /// Build a CRD object; the conventional object name is
+    /// `<plural>.<group>`.
+    pub fn build(group: &str, version: &str, kind: &str, plural: &str, shorts: &[&str]) -> KubeObject {
+        let mut names = Value::map().with("kind", kind).with("plural", plural);
+        if !shorts.is_empty() {
+            names.insert(
+                "shortNames",
+                Value::Seq(shorts.iter().map(|s| Value::from(*s)).collect()),
+            );
+        }
+        let spec = Value::map().with("group", group).with("version", version).with("names", names);
+        let mut o = KubeObject::new(KIND_CUSTOMRESOURCEDEFINITION, &format!("{plural}.{group}"), spec);
+        o.api_version = APIEXTENSIONS_API_VERSION.into();
+        o
+    }
+}
+
+impl ResourceView for CrdView {
+    fn kinds() -> &'static [&'static str] {
+        &[KIND_CUSTOMRESOURCEDEFINITION]
+    }
+    fn from_object(obj: &KubeObject) -> Result<CrdView> {
+        CrdView::from_object(obj)
+    }
+}
+
 // -------------------------------------------------------------- TorqueJob
 
 /// Typed view over the paper's TorqueJob CRD (Fig. 3) and the analogous
@@ -604,6 +831,36 @@ mod tests {
         assert!(!NodeView::from_object(&node).unwrap().unschedulable);
         node.spec.insert("unschedulable", true);
         assert!(NodeView::from_object(&node).unwrap().unschedulable);
+    }
+
+    #[test]
+    fn pdb_view_roundtrip_and_selector() {
+        let sel = vec![("app".to_string(), "web".to_string())];
+        let o = PdbView::build_min_available("keep-two", &sel, 2);
+        assert_eq!(o.api_version, POLICY_API_VERSION);
+        let v = PdbView::from_object(&o).unwrap();
+        assert_eq!(v.min_available, Some(2));
+        assert_eq!(v.max_unavailable, None);
+        assert!(v.matches(&[("app".into(), "web".into()), ("x".into(), "y".into())]));
+        assert!(!v.matches(&[("app".into(), "db".into())]));
+        assert!(!v.matches(&[]));
+        let o2 = PdbView::build_max_unavailable("burst", &sel, 1);
+        assert_eq!(PdbView::from_object(&o2).unwrap().max_unavailable, Some(1));
+        // Empty selector matches nothing, not everything.
+        let loose = PdbView::build_min_available("loose", &[], 1);
+        assert!(!PdbView::from_object(&loose).unwrap().matches(&[("a".into(), "b".into())]));
+    }
+
+    #[test]
+    fn crd_view_roundtrip() {
+        let o = CrdView::build("stable.example.com", "v1", "FlinkJob", "flinkjobs", &["fj"]);
+        assert_eq!(o.meta.name, "flinkjobs.stable.example.com");
+        assert_eq!(o.api_version, APIEXTENSIONS_API_VERSION);
+        let v = CrdView::from_object(&o).unwrap();
+        assert_eq!(v.kind, "FlinkJob");
+        assert_eq!(v.plural, "flinkjobs");
+        assert_eq!(v.short_names, vec!["fj"]);
+        assert_eq!(v.api_version(), "stable.example.com/v1");
     }
 
     #[test]

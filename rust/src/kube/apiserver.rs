@@ -26,8 +26,12 @@
 //! surfaces as the same ended-receiver reset signal, so `Reflector`
 //! relist/epoch-bump machinery is transport-agnostic.
 
-use super::api::KubeObject;
-use super::client::{ApiClient, BatchPatchItem, ListOptions, ObjectList};
+use super::api::{
+    pdb_blocking, pdb_disruptions_allowed, requeue_evict_mutation, CrdView, KubeObject,
+    PdbView, KIND_CUSTOMRESOURCEDEFINITION, KIND_POD, KIND_PODDISRUPTIONBUDGET,
+};
+use super::client::{ApiClient, BatchPatchItem, EvictionMode, ListOptions, ObjectList};
+use super::scheme::SchemeRegistry;
 use super::store::{Store, WatchEvent};
 use crate::cluster::Metrics;
 use crate::encoding::Value;
@@ -104,6 +108,9 @@ pub struct ApiServer {
     metrics: Metrics,
     hooks: Arc<Mutex<Vec<MutatingHook>>>,
     audit: AuditLog,
+    /// The server-owned kind registry: seeded from the process defaults,
+    /// extended at runtime by CustomResourceDefinition create/apply.
+    scheme: SchemeRegistry,
 }
 
 impl ApiServer {
@@ -115,6 +122,7 @@ impl ApiServer {
             metrics,
             hooks: Arc::new(Mutex::new(Vec::new())),
             audit: AuditLog::new(),
+            scheme: SchemeRegistry::with_defaults(),
         }
     }
 
@@ -130,6 +138,7 @@ impl ApiServer {
             metrics,
             hooks: Arc::new(Mutex::new(Vec::new())),
             audit: AuditLog::new(),
+            scheme: SchemeRegistry::with_defaults(),
         }
     }
 
@@ -147,12 +156,26 @@ impl ApiServer {
     ) -> Result<ApiServer> {
         let mut store = Store::with_backend(backend, cap)?;
         store.set_metrics(metrics.clone());
-        Ok(ApiServer {
+        let api = ApiServer {
             store,
             metrics,
             hooks: Arc::new(Mutex::new(Vec::new())),
             audit: AuditLog::new(),
-        })
+            scheme: SchemeRegistry::with_defaults(),
+        };
+        // Recovered CRD objects re-extend the scheme: a restarted server
+        // serves every dynamically-registered kind its WAL remembers.
+        for o in api.store.list(KIND_CUSTOMRESOURCEDEFINITION, &[]) {
+            if let Ok(crd) = CrdView::from_object(&o) {
+                let _ = api.scheme.register_crd(&crd);
+            }
+        }
+        Ok(api)
+    }
+
+    /// The server-owned kind registry (grown by CRD create/apply).
+    pub fn scheme(&self) -> &SchemeRegistry {
+        &self.scheme
     }
 
     /// The server's audit trail (PR 8): every mutating verb appends one
@@ -212,12 +235,19 @@ impl ApiServer {
 
     /// The GVK label value for a kind: the registered plural
     /// (`Pod` → `pods`), or the lowercased kind for unregistered CRDs —
-    /// labels stay low-cardinality either way.
-    fn gvk_label(kind: &str) -> String {
-        super::scheme::default_scheme()
-            .resolve(kind)
-            .map(|k| k.plural.clone())
-            .unwrap_or_else(|| kind.to_ascii_lowercase())
+    /// labels stay low-cardinality either way. Reads the *server's*
+    /// registry, so dynamically-registered kinds label by their plural.
+    fn gvk_label(&self, kind: &str) -> String {
+        self.scheme.gvk_label(kind)
+    }
+
+    /// Canonicalize a user-facing kind alias through the server's
+    /// registry (`po` → `Pod`, a CRD's plural/short name → its kind);
+    /// unknown aliases pass through verbatim. This is what makes
+    /// `kubectl get <alias>` of a *runtime-registered* kind work: the CLI
+    /// cannot know server-side registrations, so the server resolves.
+    fn canonical(&self, kind: &str) -> String {
+        self.scheme.canonical_kind(kind).unwrap_or_else(|| kind.to_string())
     }
 
     /// Audit middleware (PR 8): every mutating verb funnels through here.
@@ -244,11 +274,29 @@ impl ApiServer {
         res
     }
 
+    /// CustomResourceDefinition serving (ISSUE 10): a CRD entering through
+    /// create/apply extends the server's runtime scheme *before* it is
+    /// stored — a malformed or conflicting CRD is rejected as `Invalid`
+    /// and never becomes an object. Non-CRD kinds pass straight through.
+    fn maybe_register_crd(&self, obj: &KubeObject) -> Result<()> {
+        if obj.kind != KIND_CUSTOMRESOURCEDEFINITION {
+            return Ok(());
+        }
+        let crd = CrdView::from_object(obj)
+            .map_err(|e| Error::Api(crate::util::ApiError::Invalid(e.to_string())))?;
+        self.scheme
+            .register_crd(&crd)
+            .map_err(|e| Error::Api(crate::util::ApiError::Invalid(e.to_string())))?;
+        self.metrics.inc("kube.api.crds_registered");
+        Ok(())
+    }
+
     pub fn create(&self, mut obj: KubeObject) -> Result<KubeObject> {
-        self.metrics.inc_with("kube.api.create", &[("gvk", &Self::gvk_label(&obj.kind))]);
+        self.metrics.inc_with("kube.api.create", &[("gvk", &self.gvk_label(&obj.kind))]);
         let _span = crate::obs::span("apiserver", &format!("create {}/{}", obj.kind, obj.meta.name));
         let (kind, name) = (obj.kind.clone(), obj.meta.name.clone());
         self.audited("create", &kind, &name, move || {
+            self.maybe_register_crd(&obj)?;
             self.admit_mutate(&mut obj);
             self.stamp_observability(&mut obj);
             self.store.create(obj)
@@ -256,13 +304,14 @@ impl ApiServer {
     }
 
     pub fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        self.metrics.inc_with("kube.api.get", &[("gvk", &Self::gvk_label(kind))]);
-        self.store.get(kind, name)
+        let kind = self.canonical(kind);
+        self.metrics.inc_with("kube.api.get", &[("gvk", &self.gvk_label(&kind))]);
+        self.store.get(&kind, name)
     }
 
     /// Full update (spec + status) with optimistic concurrency.
     pub fn update(&self, obj: KubeObject) -> Result<KubeObject> {
-        self.metrics.inc_with("kube.api.update", &[("gvk", &Self::gvk_label(&obj.kind))]);
+        self.metrics.inc_with("kube.api.update", &[("gvk", &self.gvk_label(&obj.kind))]);
         let _span = crate::obs::span("apiserver", &format!("update {}/{}", obj.kind, obj.meta.name));
         let (kind, name) = (obj.kind.clone(), obj.meta.name.clone());
         self.audited("update", &kind, &name, move || self.store.update(obj))
@@ -288,7 +337,7 @@ impl ApiServer {
                 mutate(&mut obj);
                 match self.store.update(obj) {
                     Ok(o) => {
-                        self.metrics.inc_with(metric, &[("gvk", &Self::gvk_label(kind))]);
+                        self.metrics.inc_with(metric, &[("gvk", &self.gvk_label(kind))]);
                         return Ok(o);
                     }
                     Err(e) if e.is_conflict() => continue,
@@ -343,7 +392,7 @@ impl ApiServer {
                 Ok(_) => {
                     self.metrics.inc_with(
                         "kube.api.update_status",
-                        &[("gvk", &Self::gvk_label(&it.kind))],
+                        &[("gvk", &self.gvk_label(&it.kind))],
                     );
                     "ok".to_string()
                 }
@@ -367,7 +416,8 @@ impl ApiServer {
     /// parents. A visited set makes ownership cycles terminate instead of
     /// recursing forever.
     pub fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
-        self.metrics.inc_with("kube.api.delete", &[("gvk", &Self::gvk_label(kind))]);
+        let kind = &self.canonical(kind);
+        self.metrics.inc_with("kube.api.delete", &[("gvk", &self.gvk_label(kind))]);
         let _span = crate::obs::span("apiserver", &format!("delete {kind}/{name}"));
         self.audited("delete", kind, name, || {
             // The root must exist before the cascade walks anything: deleting a
@@ -408,14 +458,85 @@ impl ApiServer {
     /// match). Shorthand for [`ApiServer::list_opts`] kept for in-process
     /// callers and tests.
     pub fn list(&self, kind: &str, selector: &[(String, String)]) -> Vec<KubeObject> {
-        self.metrics.inc_with("kube.api.list", &[("gvk", &Self::gvk_label(kind))]);
+        self.metrics.inc_with("kube.api.list", &[("gvk", &self.gvk_label(kind))]);
         self.store.list(kind, selector)
+    }
+
+    /// Evict a pod through the `pods/eviction` subresource, enforcing
+    /// every matching PodDisruptionBudget (see [`ApiClient::evict`] for
+    /// the caller contract). All three reads plus the verdict happen
+    /// against the live store here, so this override is authoritative
+    /// where the trait's composed default is merely consistent. After the
+    /// attempt — allowed or blocked — the matched budgets' status
+    /// (`disruptionsAllowed`, `currentHealthy`, `expectedPods`) is
+    /// refreshed so `kubectl get pdb` shows live numbers.
+    pub fn evict(&self, name: &str, mode: &EvictionMode) -> Result<KubeObject> {
+        self.metrics.inc_with("kube.api.evict", &[("gvk", &self.gvk_label(KIND_POD))]);
+        let _span = crate::obs::span("apiserver", &format!("evict pod/{name}"));
+        let res = self.audited("evict", KIND_POD, name, || {
+            let victim = self.store.get(KIND_POD, name)?;
+            let pods = self.store.list(KIND_POD, &[]);
+            let pdbs = self.store.list(KIND_PODDISRUPTIONBUDGET, &[]);
+            if let Some(budget) = pdb_blocking(&pdbs, &pods, &victim) {
+                self.metrics.inc("kube.api.evictions_blocked");
+                return Err(Error::disruption_budget_exceeded(KIND_POD, name, budget));
+            }
+            match mode {
+                EvictionMode::Delete => self.store.delete(KIND_POD, name),
+                EvictionMode::Requeue { gate } => {
+                    for _ in 0..MAX_CONFLICT_RETRIES {
+                        let mut obj = self.store.get(KIND_POD, name)?;
+                        requeue_evict_mutation(&mut obj, gate);
+                        match self.store.update(obj) {
+                            Ok(o) => return Ok(o),
+                            Err(e) if e.is_conflict() => continue,
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    Err(Error::conflict_exhausted(KIND_POD, name, MAX_CONFLICT_RETRIES))
+                }
+            }
+        });
+        self.refresh_pdb_status();
+        res
+    }
+
+    /// Recompute `status.disruptionsAllowed` (plus the health counters)
+    /// for every PodDisruptionBudget. Server bookkeeping, not a client
+    /// verb: writes go straight to the store, only when the numbers
+    /// actually changed, and a racing conflict is simply skipped — the
+    /// next eviction attempt refreshes again.
+    fn refresh_pdb_status(&self) {
+        let pdbs = self.store.list(KIND_PODDISRUPTIONBUDGET, &[]);
+        if pdbs.is_empty() {
+            return;
+        }
+        let pods = self.store.list(KIND_POD, &[]);
+        for mut obj in pdbs {
+            let Ok(view) = PdbView::from_object(&obj) else { continue };
+            let matching: Vec<&KubeObject> =
+                pods.iter().filter(|p| view.matches(&p.meta.labels)).collect();
+            let healthy = matching
+                .iter()
+                .filter(|p| p.status.opt_str("phase").unwrap_or("Pending") == "Running")
+                .count() as u64;
+            let allowed = pdb_disruptions_allowed(&view, &pods).max(0) as u64;
+            let fresh = Value::map()
+                .with("disruptionsAllowed", allowed)
+                .with("currentHealthy", healthy)
+                .with("expectedPods", matching.len() as u64);
+            if obj.status != fresh {
+                obj.status = fresh;
+                let _ = self.store.update(obj);
+            }
+        }
     }
 
     /// Full list API: label + field selectors, a freshness floor, and
     /// name-cursor paging (`limit`/`continue`).
     pub fn list_opts(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
-        self.metrics.inc_with("kube.api.list", &[("gvk", &Self::gvk_label(kind))]);
+        let kind = &self.canonical(kind);
+        self.metrics.inc_with("kube.api.list", &[("gvk", &self.gvk_label(kind))]);
         // Version snapshot BEFORE listing: a write racing the list may then
         // show up both in items and in a subsequent watch replay from this
         // version — duplicates are fine (consumers are level-triggered),
@@ -536,11 +657,12 @@ impl ApiServer {
     /// The create arm runs the mutating-admission hooks — an applied
     /// manifest is as much an object birth as a direct create.
     pub fn apply(&self, mut obj: KubeObject) -> Result<KubeObject> {
-        self.metrics.inc_with("kube.api.apply", &[("gvk", &Self::gvk_label(&obj.kind))]);
+        self.metrics.inc_with("kube.api.apply", &[("gvk", &self.gvk_label(&obj.kind))]);
         let _span = crate::obs::span("apiserver", &format!("apply {}/{}", obj.kind, obj.meta.name));
         let (kind, name) = (obj.kind.clone(), obj.meta.name.clone());
-        self.audited("apply", &kind, &name, move || match self.store.get(&obj.kind, &obj.meta.name)
-        {
+        self.audited("apply", &kind, &name, move || {
+            self.maybe_register_crd(&obj)?;
+            match self.store.get(&obj.kind, &obj.meta.name) {
             Ok(existing) => {
                 let mut merged = existing.clone();
                 merged.spec = obj.spec;
@@ -565,6 +687,7 @@ impl ApiServer {
                 self.store.create(obj)
             }
             Err(e) => Err(e),
+            }
         })
     }
 
@@ -603,6 +726,9 @@ impl ApiClient for ApiServer {
     }
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
         ApiServer::delete(self, kind, name)
+    }
+    fn evict(&self, name: &str, mode: &EvictionMode) -> Result<KubeObject> {
+        ApiServer::evict(self, name, mode)
     }
     fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
         ApiServer::apply(self, obj)
@@ -760,6 +886,11 @@ impl Service for ApiService {
             }
             "Delete" => {
                 let o = self.api.delete(body.req_str("kind")?, body.req_str("name")?)?;
+                Ok(o.encode())
+            }
+            "Evict" => {
+                let mode = EvictionMode::from_value(body)?;
+                let o = self.api.evict(body.req_str("name")?, &mode)?;
                 Ok(o.encode())
             }
             "UpdateStatusBatch" => {
@@ -1094,6 +1225,15 @@ impl ApiClient for RemoteApi {
 
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
         self.obj_call("Delete", Value::map().with("kind", kind).with("name", name))
+    }
+
+    /// One `kube.Api/Evict` RPC; a PDB refusal crosses the socket as the
+    /// typed `DisruptionBudgetExceeded` detail, so remote drain loops
+    /// branch on `is_disruption_budget_exceeded()` like in-process ones.
+    fn evict(&self, name: &str, mode: &EvictionMode) -> Result<KubeObject> {
+        let mut body = mode.to_value();
+        body.insert("name", name);
+        self.obj_call("Evict", body)
     }
 
     fn apply(&self, obj: KubeObject) -> Result<KubeObject> {

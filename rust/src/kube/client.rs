@@ -9,7 +9,9 @@
 //! [`ResourceView`] so callers get `PodView`/`NodeView`/`WlmJobView` back
 //! instead of raw [`KubeObject`] trees — the kube-rs `Api<K>` shape.
 
-use super::api::KubeObject;
+use super::api::{
+    pdb_blocking, requeue_evict_mutation, KubeObject, KIND_POD, KIND_PODDISRUPTIONBUDGET,
+};
 use super::store::WatchEvent;
 use crate::encoding::{decode_str_map, encode_str_map, Value};
 use crate::util::{Error, Result};
@@ -263,6 +265,47 @@ impl BatchPatchItem {
     }
 }
 
+/// What an eviction does to the pod once its PodDisruptionBudgets allow
+/// the disruption. Real Kubernetes only deletes; the requeue mode is the
+/// HPC twist — quota preemption (kueue) wants the pod *unbound and
+/// re-gated*, not gone, and doing it inside the eviction keeps the
+/// unbind + gate atomic so the scheduler can never re-bind in between.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EvictionMode {
+    /// Delete the pod (the `pods/eviction` subresource semantics —
+    /// cluster-autoscaler drains and chaos kills use this).
+    Delete,
+    /// Unbind the pod, reset it to Pending, and park it behind the named
+    /// scheduling gate for re-admission (kueue preemption).
+    Requeue { gate: String },
+}
+
+impl EvictionMode {
+    /// Wire encoding for the `kube.Api/Evict` RPC body.
+    pub fn to_value(&self) -> Value {
+        match self {
+            EvictionMode::Delete => Value::map().with("mode", "Delete"),
+            EvictionMode::Requeue { gate } => {
+                Value::map().with("mode", "Requeue").with("gate", gate.clone())
+            }
+        }
+    }
+
+    pub fn from_value(v: &Value) -> Result<EvictionMode> {
+        match v.opt_str("mode").unwrap_or("Delete") {
+            "Delete" => Ok(EvictionMode::Delete),
+            "Requeue" => Ok(EvictionMode::Requeue {
+                gate: v
+                    .opt_str("gate")
+                    .filter(|g| !g.is_empty())
+                    .ok_or_else(|| Error::parse("Requeue eviction needs a gate"))?
+                    .to_string(),
+            }),
+            other => Err(Error::parse(format!("unknown eviction mode `{other}`"))),
+        }
+    }
+}
+
 /// The unified resource-API surface. Object-safe by design: controllers
 /// hold `Arc<dyn ApiClient>` and never know whether they talk to the
 /// in-process store or a red-box socket.
@@ -305,6 +348,33 @@ pub trait ApiClient: Send + Sync {
     }
     /// Delete, cascading transitively through owner references.
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject>;
+    /// The `pods/eviction` subresource: the *polite* disruption path every
+    /// drain/preemption/chaos kill must take instead of a raw delete. The
+    /// server checks the pod against every matching `policy/v1`
+    /// PodDisruptionBudget first; a disruption the budgets cannot absorb
+    /// returns the typed 429-style
+    /// [`crate::util::ApiError::DisruptionBudgetExceeded`] (retry a later
+    /// cycle) and leaves the pod untouched. The default implementation
+    /// composes the check from `get`/`list` plus `delete`/`update_status`
+    /// so decorators and test wrappers stay correct without overriding;
+    /// [`super::ApiServer`] overrides it with the authoritative
+    /// server-side check, and [`super::RemoteApi`] ships it as one
+    /// `kube.Api/Evict` RPC.
+    fn evict(&self, name: &str, mode: &EvictionMode) -> Result<KubeObject> {
+        let victim = self.get(KIND_POD, name)?;
+        let pods = self.list(KIND_POD, &ListOptions::all())?.items;
+        let pdbs = self.list(KIND_PODDISRUPTIONBUDGET, &ListOptions::all())?.items;
+        if let Some(budget) = pdb_blocking(&pdbs, &pods, &victim) {
+            return Err(Error::disruption_budget_exceeded(KIND_POD, name, budget));
+        }
+        match mode {
+            EvictionMode::Delete => self.delete(KIND_POD, name),
+            EvictionMode::Requeue { gate } => {
+                let gate = gate.clone();
+                self.update_status(KIND_POD, name, &move |o| requeue_evict_mutation(o, &gate))
+            }
+        }
+    }
     /// `kubectl apply`: create, or — when the object exists — replace its
     /// spec, labels, and annotations wholesale while preserving status and
     /// identity (uid, creation time). For a partial update use
@@ -374,6 +444,10 @@ impl ApiClient for ActorClient {
     fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
         let _a = crate::obs::push_actor(&self.actor);
         self.inner.delete(kind, name)
+    }
+    fn evict(&self, name: &str, mode: &EvictionMode) -> Result<KubeObject> {
+        let _a = crate::obs::push_actor(&self.actor);
+        self.inner.evict(name, mode)
     }
     fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
         let _a = crate::obs::push_actor(&self.actor);
@@ -492,6 +566,18 @@ impl<K: ResourceView> Api<K> {
 
     pub fn delete(&self, name: &str) -> Result<()> {
         self.client.delete(self.kind, name).map(|_| ())
+    }
+
+    /// Evict a pod through the `pods/eviction` subresource (see
+    /// [`ApiClient::evict`]); only meaningful on `Api<PodView>`.
+    pub fn evict(&self, name: &str, mode: &EvictionMode) -> Result<K> {
+        if self.kind != KIND_POD {
+            return Err(Error::Api(crate::util::ApiError::Invalid(format!(
+                "eviction is a pods subresource (this is Api<{}>)",
+                self.kind
+            ))));
+        }
+        K::from_object(&self.client.evict(name, mode)?)
     }
 
     pub fn watch(&self, from_version: u64) -> Result<Receiver<WatchEvent>> {

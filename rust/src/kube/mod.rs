@@ -252,6 +252,45 @@
 //! at 1k/10k nodes (indexed vs brute ≥ 10×), index-maintenance cost per
 //! delta, and batched-vs-single bind round trips; `tests/scale.rs` has
 //! the gated 10k-node flash-crowd drain.
+//!
+//! # Disruption API (PR 10): eviction + PodDisruptionBudgets
+//!
+//! All *voluntary* disruptions — kueue preemption, cluster-autoscaler
+//! drain, chaos kubelet-kill — go through one typed subresource instead
+//! of ad-hoc `delete`/`update_status` calls:
+//!
+//! - **[`ApiClient::evict`]** is the `pods/eviction` verb. It takes an
+//!   [`EvictionMode`]: `Delete` removes the pod (CA drain), `Requeue {
+//!   gate }` atomically unbinds the pod, resets it to `Pending`, and
+//!   re-adds the scheduling gate *in one server-side write* (kueue
+//!   preemption — the scheduler can never re-bind a half-evicted pod).
+//!   The typed handle is `Api::<PodView>::evict`; any other `Api<K>`
+//!   refuses — eviction is a pods subresource.
+//! - **[`PdbView`]** (`policy/v1 PodDisruptionBudget`, `kubectl get
+//!   pdb`) guards it. The server checks every budget whose selector
+//!   matches the victim: `minAvailable` blocks when healthy (Running)
+//!   matching pods would drop below the floor, `maxUnavailable` when
+//!   unavailability would exceed the ceiling. A refusal is the typed
+//!   [`crate::util::ApiError::DisruptionBudgetExceeded`] — it crosses
+//!   the red-box wire intact (parity-tested), so remote drain loops
+//!   branch on `err.is_disruption_budget_exceeded()` and retry later,
+//!   exactly like in-process ones. Every eviction attempt (allowed or
+//!   blocked) is an `evict` audit record and refreshes
+//!   `status.disruptionsAllowed` on the covering budgets.
+//!
+//! # CRDs served through the API (PR 10)
+//!
+//! `CustomResourceDefinition` (`apiextensions.k8s.io/v1`, `kubectl get
+//! crd`) is itself an API object: `create`/`apply` of a CRD extends the
+//! *server's* kind registry at runtime. The server owns a
+//! [`SchemeRegistry`] (a shared, mutable [`Scheme`]) instead of the
+//! process-static [`default_scheme`]; a registered kind's plural/short
+//! names resolve server-side, so `kubectl get <alias>` works over the
+//! socket with zero CLI changes, and metric/audit labels pick up the
+//! registered plural. Re-`apply` of an identical CRD is idempotent;
+//! a conflicting redefinition is `Invalid`. WAL recovery replays stored
+//! CRDs back into the fresh registry before serving, so dynamic kinds
+//! survive a restart like everything else.
 
 pub mod api;
 pub mod apiserver;
@@ -269,15 +308,18 @@ pub mod store;
 pub mod yaml;
 
 pub use api::{
-    add_scheduling_gate, remove_scheduling_gate, scheduling_gates, KubeObject, NodeView,
-    ObjectMeta, PodPhase, PodView, WlmJobView, KIND_DEPLOYMENT, KIND_NODE, KIND_POD,
-    KIND_SLURMJOB, KIND_TORQUEJOB, WLM_API_VERSION,
+    add_scheduling_gate, pdb_blocking, pdb_disruptions_allowed, remove_scheduling_gate,
+    scheduling_gates, CrdView, KubeObject, NodeView, ObjectMeta, PdbView, PodPhase, PodView,
+    WlmJobView, APIEXTENSIONS_API_VERSION, KIND_CUSTOMRESOURCEDEFINITION, KIND_DEPLOYMENT,
+    KIND_NODE, KIND_POD, KIND_PODDISRUPTIONBUDGET, KIND_SLURMJOB, KIND_TORQUEJOB,
+    POLICY_API_VERSION, WLM_API_VERSION,
 };
 pub use apiserver::{
     ApiServer, MutatingHook, RemoteApi, WatchConfig, WatchMode, MAX_CONFLICT_RETRIES,
 };
 pub use client::{
-    ActorClient, Api, ApiClient, BatchPatchItem, ListOptions, ObjectList, ResourceView,
+    ActorClient, Api, ApiClient, BatchPatchItem, EvictionMode, ListOptions, ObjectList,
+    ResourceView,
 };
 pub use controller::{Controller, ControllerRunner, Reconcile};
 pub use deployment::DeploymentController;
@@ -290,5 +332,5 @@ pub use kubelet::Kubelet;
 pub use persist::{MemoryBackend, StoreBackend, WalBackend};
 pub use sched_index::{Eliminations, SchedIndex};
 pub use scheduler::KubeScheduler;
-pub use scheme::{default_scheme, GroupVersionKind, KindSpec, Scheme};
+pub use scheme::{default_scheme, GroupVersionKind, KindSpec, Scheme, SchemeRegistry};
 pub use store::{Store, WatchEvent, DEFAULT_HISTORY_CAP};

@@ -90,7 +90,22 @@ impl KubeScheduler {
                 let events = self.events.clone();
                 // Exits when the scheduler loop (sole sender) returns.
                 rt::spawn_named("kube-sched-commit", move || {
-                    while let Ok(batch) = crx.recv() {
+                    while let Ok(mut batch) = crx.recv() {
+                        // Backpressure coalescing: under sustained overload
+                        // the scheduler produces batches faster than the
+                        // committer drains them. Merge everything already
+                        // queued into ONE store commit — cross-cycle
+                        // placements never conflict (a pod is reserved
+                        // until its bind echoes, so no pod appears twice),
+                        // and one big batch is one round trip instead of N.
+                        let mut coalesced = 0u64;
+                        while let Ok(next) = crx.try_recv() {
+                            coalesced += 1;
+                            batch.extend(next);
+                        }
+                        if coalesced > 0 {
+                            metrics.add("kube.sched.commit_batches_coalesced", coalesced);
+                        }
                         let _actor = crate::obs::push_actor(COMPONENT);
                         commit_bindings(&client, &index, &metrics, &events, batch);
                     }

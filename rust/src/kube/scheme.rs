@@ -9,12 +9,13 @@
 //! store, or the transport learning anything new.
 
 use super::api::{
-    KubeObject, KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_SLURMJOB, KIND_TORQUEJOB,
-    WLM_API_VERSION,
+    CrdView, KubeObject, APIEXTENSIONS_API_VERSION, KIND_CUSTOMRESOURCEDEFINITION,
+    KIND_DEPLOYMENT, KIND_NODE, KIND_POD, KIND_PODDISRUPTIONBUDGET, KIND_SLURMJOB,
+    KIND_TORQUEJOB, POLICY_API_VERSION, WLM_API_VERSION,
 };
 use crate::encoding::Value;
 use crate::util::{Error, Result};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// The coordinates of an object kind in the API: `group/version, Kind`.
 /// Built-ins live in the core (empty) group; CRDs carry their own group.
@@ -261,8 +262,91 @@ pub fn default_scheme() -> &'static Scheme {
             &["ev"],
         )
         .expect("event kind");
+        s.register_grouped_crd(
+            POLICY_API_VERSION,
+            KIND_PODDISRUPTIONBUDGET,
+            "poddisruptionbudgets",
+            &["pdb"],
+        )
+        .expect("pdb kind");
+        s.register_grouped_crd(
+            APIEXTENSIONS_API_VERSION,
+            KIND_CUSTOMRESOURCEDEFINITION,
+            "customresourcedefinitions",
+            &["crd", "crds"],
+        )
+        .expect("crd kind");
         s
     })
+}
+
+/// A *runtime-extensible* scheme: the server-owned registry behind
+/// CustomResourceDefinition serving. Seeded from [`default_scheme`], it can
+/// grow while the server runs — creating/applying a CRD object calls
+/// [`SchemeRegistry::register_crd`], after which the new kind resolves for
+/// every client of that server exactly like a built-in. Cloning shares the
+/// underlying registry (the server and all its services see one scheme).
+#[derive(Debug, Clone)]
+pub struct SchemeRegistry {
+    inner: Arc<RwLock<Scheme>>,
+}
+
+impl Default for SchemeRegistry {
+    fn default() -> Self {
+        SchemeRegistry::with_defaults()
+    }
+}
+
+impl SchemeRegistry {
+    /// A registry seeded with every [`default_scheme`] kind.
+    pub fn with_defaults() -> SchemeRegistry {
+        SchemeRegistry { inner: Arc::new(RwLock::new(default_scheme().clone())) }
+    }
+
+    /// Register the kind a CustomResourceDefinition describes. Idempotent
+    /// for an identical re-registration (apply of the same CRD); a
+    /// *conflicting* registration (same alias, different GVK) is rejected.
+    pub fn register_crd(&self, crd: &CrdView) -> Result<()> {
+        let spec = KindSpec::new(
+            GroupVersionKind::new(crd.group.clone(), crd.version.clone(), crd.kind.clone()),
+            crd.plural.clone(),
+            &crd.short_names.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        let mut s = self.inner.write().unwrap_or_else(|e| e.into_inner());
+        if let Some(existing) = s.resolve(&crd.kind) {
+            if *existing == spec {
+                return Ok(());
+            }
+        }
+        s.register(spec)
+    }
+
+    /// Canonical kind for an alias (owned — the lock is released on return).
+    pub fn canonical_kind(&self, alias: &str) -> Option<String> {
+        let s = self.inner.read().unwrap_or_else(|e| e.into_inner());
+        s.canonical_kind(alias).map(String::from)
+    }
+
+    /// The apiVersion a kind is served under.
+    pub fn api_version_for(&self, kind: &str) -> Option<String> {
+        let s = self.inner.read().unwrap_or_else(|e| e.into_inner());
+        s.api_version_for(kind)
+    }
+
+    /// The GVK metric-label value for a kind: the registered plural
+    /// (`Pod` → `pods`), or the lowercased kind for unregistered CRDs —
+    /// labels stay low-cardinality either way.
+    pub fn gvk_label(&self, kind: &str) -> String {
+        let s = self.inner.read().unwrap_or_else(|e| e.into_inner());
+        s.resolve(kind)
+            .map(|k| k.plural.clone())
+            .unwrap_or_else(|| kind.to_ascii_lowercase())
+    }
+
+    /// A point-in-time copy of the registry (for enumeration/tests).
+    pub fn snapshot(&self) -> Scheme {
+        self.inner.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
 }
 
 #[cfg(test)]
@@ -316,6 +400,13 @@ mod tests {
             ("event", "Event"),
             ("events", "Event"),
             ("ev", "Event"),
+            ("poddisruptionbudget", "PodDisruptionBudget"),
+            ("poddisruptionbudgets", "PodDisruptionBudget"),
+            ("pdb", "PodDisruptionBudget"),
+            ("customresourcedefinition", "CustomResourceDefinition"),
+            ("customresourcedefinitions", "CustomResourceDefinition"),
+            ("crd", "CustomResourceDefinition"),
+            ("crds", "CustomResourceDefinition"),
         ] {
             assert_eq!(s.canonical_kind(alias), Some(kind), "alias {alias}");
         }
@@ -336,6 +427,45 @@ mod tests {
             s.api_version_for("ev").as_deref(),
             Some(crate::kube::events::EVENTS_API_VERSION)
         );
+        assert_eq!(s.api_version_for("pdb").as_deref(), Some(POLICY_API_VERSION));
+        assert_eq!(
+            s.api_version_for("crd").as_deref(),
+            Some(APIEXTENSIONS_API_VERSION)
+        );
+    }
+
+    #[test]
+    fn registry_extends_at_runtime() {
+        let reg = SchemeRegistry::with_defaults();
+        assert_eq!(reg.canonical_kind("po").as_deref(), Some("Pod"));
+        assert_eq!(reg.canonical_kind("fj"), None);
+        let crd = CrdView::from_object(&CrdView::build(
+            "stable.example.com",
+            "v1",
+            "FlinkJob",
+            "flinkjobs",
+            &["fj"],
+        ))
+        .unwrap();
+        reg.register_crd(&crd).unwrap();
+        assert_eq!(reg.canonical_kind("fj").as_deref(), Some("FlinkJob"));
+        assert_eq!(reg.api_version_for("FlinkJob").as_deref(), Some("stable.example.com/v1"));
+        assert_eq!(reg.gvk_label("FlinkJob"), "flinkjobs");
+        assert_eq!(reg.gvk_label("Gizmo"), "gizmo");
+        // Re-registering the identical CRD is an idempotent no-op...
+        reg.register_crd(&crd).unwrap();
+        // ...but a conflicting registration (same alias, new group) is not.
+        let clash = CrdView::from_object(&CrdView::build(
+            "other.example.com",
+            "v1",
+            "FlinkJob",
+            "flinkjobs",
+            &["fj"],
+        ))
+        .unwrap();
+        assert!(reg.register_crd(&clash).is_err());
+        // The process-static default scheme is untouched.
+        assert_eq!(default_scheme().canonical_kind("fj"), None);
     }
 
     #[test]

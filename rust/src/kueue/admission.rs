@@ -544,8 +544,28 @@ impl AdmissionCore {
                             );
                             break; // strict: a blocked head holds the queue
                         };
+                        let mut budget_blocked = false;
                         for v in &victims {
-                            evict_gang(api, v)?;
+                            if let Err(e) = evict_gang(api, v) {
+                                // A PodDisruptionBudget vetoed a victim:
+                                // this gang cannot be preempted for this
+                                // cycle. Not an error — the budget may
+                                // loosen (pods finish, replicas come up)
+                                // and the head retries next cycle.
+                                if e.is_disruption_budget_exceeded() {
+                                    self.metrics.inc("kueue.preemption_budget_blocked");
+                                    self.note_quota_exhausted(
+                                        api,
+                                        gang,
+                                        &cq.name,
+                                        &format!("preemption blocked: {e}"),
+                                        &mut blocked_now,
+                                    );
+                                    budget_blocked = true;
+                                    break;
+                                }
+                                return Err(e);
+                            }
                             // Uncharge through the per-member charge map
                             // (idempotent with the eviction's echo events
                             // next cycle).
@@ -571,6 +591,9 @@ impl AdmissionCore {
                             }
                             report.preempted += v.members.len();
                             self.metrics.inc("kueue.gangs_preempted");
+                        }
+                        if budget_blocked {
+                            break; // strict: a blocked head holds the queue
                         }
                         admitted.retain(|a| !victims.contains(a));
                         st.ledger.charge(&cq.name, &gang.demand);

@@ -21,7 +21,7 @@ use super::types::{
     set_condition, workload_terminal, ClusterQueueView, QueueResources, COND_ADMITTED,
     COND_EVICTED, COND_QUOTA_RESERVED, SCHEDULING_GATE,
 };
-use crate::kube::{add_scheduling_gate, ApiClient, KIND_POD};
+use crate::kube::{ApiClient, EvictionMode, KIND_POD};
 use crate::util::Result;
 
 /// One admitted gang as the preemption search sees it.
@@ -98,13 +98,29 @@ pub fn select_victims(
 /// evicted pods so the node scheduler's capacity frees immediately. WLM
 /// jobs already submitted over red-box are cancelled by the operator when
 /// it observes the eviction (see `operator::core`).
+///
+/// Pod members go through the `pods/eviction` subresource in `Requeue`
+/// mode — the server unbinds and re-gates atomically and enforces any
+/// `PodDisruptionBudget` covering the victim. A budget refusal surfaces
+/// as `DisruptionBudgetExceeded`; the admission loop treats it as "this
+/// gang cannot be preempted this cycle", not as a hard error.
 pub fn evict_gang(api: &dyn ApiClient, gang: &AdmittedGang) -> Result<()> {
     for (kind, name) in &gang.members {
-        let is_pod = kind == KIND_POD;
-        api.update_status(kind, name, &move |o| {
-            // Finished between the cycle's snapshot and this write: its
-            // result (phase/exitCode/log) must survive — there is
-            // nothing left to evict, and its charge is already released.
+        if kind == KIND_POD {
+            // Finished between the cycle's snapshot and now: its result
+            // (phase/exitCode/log) must survive — there is nothing left
+            // to evict, and its charge is already released.
+            if workload_terminal(&api.get(kind, name)?) {
+                continue;
+            }
+            api.evict(
+                name,
+                &EvictionMode::Requeue {
+                    gate: SCHEDULING_GATE.to_string(),
+                },
+            )?;
+        }
+        api.update_status(kind, name, &|o| {
             if workload_terminal(o) {
                 return;
             }
@@ -112,13 +128,6 @@ pub fn evict_gang(api: &dyn ApiClient, gang: &AdmittedGang) -> Result<()> {
             set_condition(&mut o.status, COND_QUOTA_RESERVED, false);
             set_condition(&mut o.status, COND_EVICTED, true);
             o.status.remove("clusterQueue");
-            if is_pod {
-                o.spec.remove("nodeName");
-                o.status.insert("phase", "Pending");
-                // Back to suspended: re-gate so the scheduler cannot
-                // re-bind the pod before it is re-admitted.
-                add_scheduling_gate(o, SCHEDULING_GATE);
-            }
         })?;
     }
     Ok(())

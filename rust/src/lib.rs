@@ -14,6 +14,7 @@
 
 pub mod autoscale;
 pub mod bench;
+pub mod chaos;
 pub mod cli;
 pub mod cluster;
 pub mod encoding;

@@ -41,6 +41,11 @@ pub enum ApiError {
     /// conflicts. Distinct from [`ApiError::Conflict`] so operator logs show
     /// "pathological contention" rather than a routine single conflict.
     ConflictExhausted { kind: String, name: String, attempts: u32 },
+    /// An eviction was refused because it would violate a
+    /// PodDisruptionBudget (the 429 `DisruptionBudgetExceeded` cause in
+    /// real Kubernetes). `budget` names the PDB that blocked it. Callers
+    /// treat this as retryable-later, never as a hard failure.
+    DisruptionBudgetExceeded { kind: String, name: String, budget: String },
     Invalid(String),
 }
 
@@ -59,6 +64,11 @@ impl fmt::Display for ApiError {
                 f,
                 "operation on {kind} \"{name}\" gave up after {attempts} consecutive \
                  conflicts: pathological write contention"
+            ),
+            ApiError::DisruptionBudgetExceeded { kind, name, budget } => write!(
+                f,
+                "cannot evict {kind} \"{name}\": disruption budget \"{budget}\" would be \
+                 violated (too many requests, retry later)"
             ),
             ApiError::Invalid(msg) => write!(f, "invalid object: {msg}"),
         }
@@ -141,6 +151,17 @@ impl Error {
             attempts,
         })
     }
+    pub fn disruption_budget_exceeded(
+        kind: impl Into<String>,
+        name: impl Into<String>,
+        budget: impl Into<String>,
+    ) -> Self {
+        Error::Api(ApiError::DisruptionBudgetExceeded {
+            kind: kind.into(),
+            name: name.into(),
+            budget: budget.into(),
+        })
+    }
 
     /// True if this is a NotFound API error (common branch in controllers).
     pub fn is_not_found(&self) -> bool {
@@ -155,6 +176,15 @@ impl Error {
     /// True if a bounded retry-on-conflict loop exhausted its attempts.
     pub fn is_conflict_exhausted(&self) -> bool {
         matches!(self, Error::Api(ApiError::ConflictExhausted { .. }))
+    }
+    /// True if an eviction was refused by a PodDisruptionBudget — the
+    /// drain/preemption caller should defer and retry a later cycle.
+    pub fn is_disruption_budget_exceeded(&self) -> bool {
+        matches!(self, Error::Api(ApiError::DisruptionBudgetExceeded { .. }))
+    }
+
+    pub fn is_invalid(&self) -> bool {
+        matches!(self, Error::Api(ApiError::Invalid(_)))
     }
 
     /// Structured wire form for the red-box envelope, so errors survive
@@ -185,6 +215,11 @@ impl Error {
                         .with("kind", kind.clone())
                         .with("name", name.clone())
                         .with("attempts", *attempts as u64),
+                    ApiError::DisruptionBudgetExceeded { kind, name, budget } => v
+                        .with("reason", "DisruptionBudgetExceeded")
+                        .with("kind", kind.clone())
+                        .with("name", name.clone())
+                        .with("budget", budget.clone()),
                     ApiError::Invalid(m) => {
                         v.with("reason", "Invalid").with("msg", m.clone())
                     }
@@ -217,6 +252,11 @@ impl Error {
                         kind(),
                         name(),
                         v.opt_int("attempts").unwrap_or(0) as u32,
+                    )),
+                    "DisruptionBudgetExceeded" => Some(Error::disruption_budget_exceeded(
+                        kind(),
+                        name(),
+                        v.opt_str("budget").unwrap_or("").to_string(),
                     )),
                     "Invalid" => Some(Error::Api(ApiError::Invalid(msg()))),
                     _ => None,
@@ -263,6 +303,7 @@ mod tests {
             Error::already_exists("Pod", "p1"),
             Error::conflict("Pod", "p1"),
             Error::conflict_exhausted("Pod", "p1", 16),
+            Error::disruption_budget_exceeded("Pod", "p1", "keep-two"),
             Error::Api(ApiError::Invalid("bad spec".into())),
             Error::parse("x"),
             Error::wlm("queue not found"),

@@ -8,8 +8,9 @@
 use hpcorc::cluster::{Metrics, Resources};
 use hpcorc::encoding::Value;
 use hpcorc::kube::{
-    ApiClient, ApiServer, ListOptions, NodeView, PodView, RemoteApi, WatchConfig, WatchEvent,
-    WatchMode, KIND_NODE, KIND_POD,
+    scheduling_gates, ApiClient, ApiServer, CrdView, EvictionMode, KubeObject, ListOptions,
+    NodeView, PdbView, PodView, RemoteApi, WatchConfig, WatchEvent, WatchMode,
+    KIND_CUSTOMRESOURCEDEFINITION, KIND_NODE, KIND_POD, KIND_PODDISRUPTIONBUDGET,
 };
 use hpcorc::redbox::RedboxServer;
 use hpcorc::rt::Shutdown;
@@ -715,6 +716,169 @@ fn trace_id_stamped_identically_across_all_three_transports() {
         );
         assert_eq!(ann, watched, "{label}: watch delivery altered the annotation");
     }
+}
+
+// ---------------------------------------------------------------------
+// Disruption API parity (PR 10): the `pods/eviction` subresource and its
+// PodDisruptionBudget enforcement must behave — and *error* — byte-
+// identically through the in-process server, the poll remote, and the
+// streaming remote. A PDB refusal is a typed `DisruptionBudgetExceeded`
+// on every transport, not a stringly server error.
+// ---------------------------------------------------------------------
+
+#[test]
+fn eviction_and_pdb_identical_across_all_three_transports() {
+    fn disruption_scenario(api: &dyn ApiClient) -> Vec<String> {
+        let mut t = Vec::new();
+        let sel = [("disrupt".to_string(), "ha".to_string())];
+        for name in ["e0", "e1", "e2"] {
+            let mut p = pod(name);
+            p.meta.set_label("disrupt", "ha");
+            api.create(p).expect("create");
+        }
+        // Two healthy (Running) replicas; e2 still Pending.
+        for name in ["e0", "e1"] {
+            api.update_status(KIND_POD, name, &|o| {
+                o.status.insert("phase", "Running");
+            })
+            .expect("us");
+        }
+
+        // minAvailable=2: evicting a Running pod would leave 1 < 2.
+        api.create(PdbView::build_min_available("ha-budget", &sel, 2)).expect("pdb");
+        let err = api.evict("e0", &EvictionMode::Delete).unwrap_err();
+        t.push(format!("blocked typed={} msg={err}", err.is_disruption_budget_exceeded()));
+        // A Pending victim consumes no budget: allowed even at min=2.
+        api.evict("e2", &EvictionMode::Delete).expect("evict pending");
+        t.push(format!("pending victim gone={}", api.get(KIND_POD, "e2").unwrap_err().is_not_found()));
+
+        // Relax to minAvailable=1: one Running pod may now be disrupted.
+        api.delete(KIND_PODDISRUPTIONBUDGET, "ha-budget").expect("del pdb");
+        api.create(PdbView::build_min_available("ha-relaxed", &sel, 1)).expect("pdb2");
+        api.evict("e0", &EvictionMode::Delete).expect("evict within budget");
+        let pdb = api.get(KIND_PODDISRUPTIONBUDGET, "ha-relaxed").expect("pdb status");
+        t.push(format!(
+            "after evict allowed={} healthy={}",
+            pdb.status.opt_int("disruptionsAllowed").unwrap_or(-1),
+            pdb.status.opt_int("currentHealthy").unwrap_or(-1)
+        ));
+        // The last Running pod is now protected again...
+        let err = api.evict("e1", &EvictionMode::Requeue { gate: "parity/requeue".into() }).unwrap_err();
+        t.push(format!("last replica blocked typed={}", err.is_disruption_budget_exceeded()));
+        // ...until the budget goes away; then Requeue puts it back in the
+        // scheduling queue (gated, unbound, Pending) instead of deleting.
+        api.delete(KIND_PODDISRUPTIONBUDGET, "ha-relaxed").expect("del pdb2");
+        let o = api
+            .evict("e1", &EvictionMode::Requeue { gate: "parity/requeue".into() })
+            .expect("requeue evict");
+        t.push(format!(
+            "requeued phase={} gates={:?} node={:?}",
+            o.status.opt_str("phase").unwrap_or(""),
+            scheduling_gates(&o),
+            o.spec.opt_str("nodeName")
+        ));
+        t
+    }
+
+    let local_api = ApiServer::new(Metrics::new());
+    let mut transcripts = vec![("in-process", disruption_scenario(&local_api))];
+
+    for (label, force_poll) in [("poll-remote", true), ("streaming-remote", false)] {
+        let server = ApiServer::new(Metrics::new());
+        let path = parity_sock(&format!("evict-{label}"));
+        let mut srv = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+        srv.register("kube.Api", server.rpc_service());
+        let remote = RemoteApi::connect(&path)
+            .unwrap()
+            .with_watch_config(WatchConfig { force_poll, ..WatchConfig::default() });
+        transcripts.push((label, disruption_scenario(&remote)));
+        srv.stop();
+    }
+
+    let (_, reference) = &transcripts[0];
+    for (label, t) in &transcripts[1..] {
+        assert_eq!(t, reference, "{label} disruption transcript diverged from in-process");
+    }
+    assert_eq!(reference.len(), 6, "scenario shape changed — update the count");
+    assert!(reference[0].starts_with("blocked typed=true"));
+    assert!(
+        reference[0].contains("ha-budget"),
+        "typed error names the violated budget: {}",
+        reference[0]
+    );
+    assert_eq!(reference[1], "pending victim gone=true");
+    assert!(reference[3].starts_with("last replica blocked typed=true"));
+    assert!(
+        reference[5].contains("phase=Pending")
+            && reference[5].contains("parity/requeue")
+            && reference[5].contains("node=None"),
+        "requeue eviction must unbind, re-gate, and reset phase: {}",
+        reference[5]
+    );
+}
+
+// ---------------------------------------------------------------------
+// CRD-through-the-API parity (PR 10): registering a
+// CustomResourceDefinition at runtime must extend the server's scheme on
+// every transport — instances of the new kind and its aliases resolve
+// over the wire exactly as in-process.
+// ---------------------------------------------------------------------
+
+#[test]
+fn crd_registration_identical_through_both_transports() {
+    fn crd_scenario(api: &dyn ApiClient) -> Vec<String> {
+        let mut t = Vec::new();
+        api.create(CrdView::build("parity.io", "v1", "Widget", "widgets", &["wd"]))
+            .expect("crd");
+        let mut w = KubeObject::new("Widget", "w1", Value::map().with("size", 3u64));
+        w.api_version = "parity.io/v1".into();
+        api.create(w).expect("widget instance");
+
+        // Aliases resolve server-side: short name, plural, lowercased kind.
+        for alias in ["wd", "widgets", "widget"] {
+            let o = api.get(alias, "w1").expect("alias get");
+            t.push(format!("get {alias} -> {}/{}", o.kind, o.meta.name));
+        }
+        let listed = api.list("wd", &ListOptions::all()).expect("alias list");
+        t.push(format!(
+            "list wd items={:?}",
+            listed.items.iter().map(|o| o.meta.name.clone()).collect::<Vec<_>>()
+        ));
+        // `kubectl get crd` surface: the definition itself is API state.
+        let crds = api.list(KIND_CUSTOMRESOURCEDEFINITION, &ListOptions::all()).expect("crds");
+        t.push(format!(
+            "crds={:?}",
+            crds.items.iter().map(|o| o.meta.name.clone()).collect::<Vec<_>>()
+        ));
+        // Identical re-registration is idempotent (apply flavor)...
+        api.apply(CrdView::build("parity.io", "v1", "Widget", "widgets", &["wd"]))
+            .expect("idempotent re-apply");
+        // ...but a conflicting one (same alias, different kind) is refused.
+        let err = api
+            .create(CrdView::build("parity.io", "v1", "Gadget", "gadgets", &["wd"]))
+            .unwrap_err();
+        t.push(format!("conflict invalid={}", err.is_invalid()));
+        api.delete("wd", "w1").expect("delete via alias");
+        t.push(format!("deleted gone={}", api.get("wd", "w1").unwrap_err().is_not_found()));
+        t
+    }
+
+    let local_api = ApiServer::new(Metrics::new());
+    let local = crd_scenario(&local_api);
+
+    let path = parity_sock("crd");
+    let mut srv = RedboxServer::start(&path, Shutdown::new(), Metrics::new()).unwrap();
+    let remote_server = ApiServer::new(Metrics::new());
+    srv.register("kube.Api", remote_server.rpc_service());
+    let remote_api = RemoteApi::connect(&path).unwrap();
+    let remote = crd_scenario(&remote_api);
+    srv.stop();
+
+    assert_eq!(local, remote, "CRD transcripts diverged");
+    assert_eq!(local[0], "get wd -> Widget/w1");
+    assert!(local[4].contains("widgets.parity.io"), "CRD named <plural>.<group>: {}", local[4]);
+    assert_eq!(local[5], "conflict invalid=true");
+    assert_eq!(local[6], "deleted gone=true");
 }
 
 /// PR 8: an event recorded about a traced object carries the object's

@@ -1,0 +1,84 @@
+//! The deterministic fault-injection matrix (PR 10): every named
+//! scenario in the registry must converge to its golden fixed-point
+//! transcript, and the seeded ones must reproduce the same transcript
+//! when rerun with the same seed. Fault *logs* are not compared across
+//! runs — poll-loop iteration counts legitimately vary; the determinism
+//! contract is on the converged state.
+
+use hpcorc::chaos::{self, ChaosReport};
+
+fn run(name: &str, seed: u64) -> ChaosReport {
+    let report = chaos::run_scenario(name, seed)
+        .unwrap_or_else(|e| panic!("chaos scenario {name} (seed {seed}) errored: {e}"));
+    assert!(
+        report.converged(),
+        "chaos scenario {name} (seed {seed}) diverged:\n{}",
+        report.render()
+    );
+    assert!(!report.checks.is_empty(), "{name}: scenario ran no checks");
+    report
+}
+
+#[test]
+fn redbox_drop_converges_and_is_seed_deterministic() {
+    let a = run("redbox-drop", 7);
+    assert!(!a.faults.is_empty(), "the fault schedule injected nothing");
+    assert!(a.faults.iter().all(|f| f.boundary == "api"));
+    let b = run("redbox-drop", 7);
+    assert_eq!(a.golden, b.golden, "golden transcript changed across same-seed runs");
+    assert_eq!(a.transcript, b.transcript, "faulted transcript changed across same-seed runs");
+}
+
+#[test]
+fn apiserver_restart_recovers_mid_admission_state() {
+    let report = run("apiserver-restart", 7);
+    assert!(
+        report.checks.iter().any(|c| c.contains("CRD short name resolves")),
+        "restart scenario must prove CRD registry recovery: {:?}",
+        report.checks
+    );
+}
+
+#[test]
+fn wlm_slow_converges_and_is_seed_deterministic() {
+    let a = run("wlm-slow", 11);
+    assert!(!a.faults.is_empty());
+    let b = run("wlm-slow", 11);
+    assert_eq!(a.transcript, b.transcript);
+}
+
+#[test]
+fn kubelet_death_drains_through_eviction() {
+    let report = run("kubelet-death", 7);
+    assert!(
+        report.checks.iter().any(|c| c.contains("PDB vetoed")),
+        "kubelet-death must prove budgets bind the chaos drain: {:?}",
+        report.checks
+    );
+    assert!(report.checks.iter().any(|c| c.contains("pods/eviction")));
+}
+
+#[test]
+fn watch_overflow_forces_the_relist_road() {
+    let report = run("watch-overflow", 7);
+    assert!(
+        report.checks.iter().any(|c| c.contains("410-Gone")),
+        "overflow scenario must prove the window actually overflowed: {:?}",
+        report.checks
+    );
+}
+
+#[test]
+fn registry_covers_the_advertised_scenarios() {
+    let names: Vec<&str> = chaos::scenarios().iter().map(|s| s.name).collect();
+    assert_eq!(
+        names,
+        ["redbox-drop", "apiserver-restart", "wlm-slow", "kubelet-death", "watch-overflow"],
+        "scenario registry drifted from the documented set"
+    );
+    for sc in chaos::scenarios() {
+        assert!(!sc.summary.is_empty(), "{}: empty summary", sc.name);
+    }
+    let err = chaos::run_scenario("bogus", 1).unwrap_err().to_string();
+    assert!(err.contains("redbox-drop"), "unknown-scenario error lists the known names: {err}");
+}

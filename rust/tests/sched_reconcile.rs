@@ -165,6 +165,123 @@ fn node_of(api: &ApiServer, pod: &str) -> Option<String> {
     api.get(KIND_POD, pod).unwrap().spec.opt_str("nodeName").map(String::from)
 }
 
+/// ApiClient wrapper whose `update_status_batch` blocks on a shared gate
+/// — models a committer stuck in a slow API round trip while the
+/// scheduler keeps producing placements behind it.
+struct GatedApi {
+    api: ApiServer,
+    gate: Arc<Mutex<()>>,
+    batch_calls: std::sync::atomic::AtomicUsize,
+}
+
+impl ApiClient for GatedApi {
+    fn create(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api.create(obj)
+    }
+    fn get(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api.get(kind, name)
+    }
+    fn update(&self, obj: KubeObject) -> Result<KubeObject> {
+        ApiServer::update(&self.api, obj)
+    }
+    fn update_status(
+        &self,
+        kind: &str,
+        name: &str,
+        f: &dyn Fn(&mut KubeObject),
+    ) -> Result<KubeObject> {
+        self.api.update_status(kind, name, f)
+    }
+    fn patch_merge(&self, kind: &str, name: &str, patch: &Value) -> Result<KubeObject> {
+        self.api.patch_merge(kind, name, patch)
+    }
+    fn update_status_batch(&self, items: &[BatchPatchItem]) -> Result<Vec<Result<KubeObject>>> {
+        self.batch_calls.fetch_add(1, Ordering::SeqCst);
+        let _held = self.gate.lock().unwrap(); // blocks while the test holds it
+        Ok(self.api.update_status_batch(items))
+    }
+    fn delete(&self, kind: &str, name: &str) -> Result<KubeObject> {
+        self.api.delete(kind, name)
+    }
+    fn apply(&self, obj: KubeObject) -> Result<KubeObject> {
+        self.api.apply(obj)
+    }
+    fn list(&self, kind: &str, opts: &ListOptions) -> Result<ObjectList> {
+        self.api.list_opts(kind, opts)
+    }
+    fn watch(&self, kind: Option<&str>, from: u64) -> Result<Receiver<WatchEvent>> {
+        Ok(ApiServer::watch(&self.api, kind, from))
+    }
+    fn server_time_s(&self) -> Result<f64> {
+        Ok(self.api.now_s())
+    }
+}
+
+/// PR 10 satellite: backpressure coalescing in the committer. While one
+/// commit is stuck in its API round trip, every batch the scheduler
+/// queues behind it must merge into ONE follow-up commit (counted by
+/// `kube.sched.commit_batches_coalesced`) — and every pod still binds
+/// exactly once.
+#[test]
+fn committer_coalesces_batches_queued_behind_a_slow_commit() {
+    let raw = ApiServer::new(Metrics::new());
+    let gate = Arc::new(Mutex::new(()));
+    let gated = Arc::new(GatedApi {
+        api: raw.clone(),
+        gate: gate.clone(),
+        batch_calls: std::sync::atomic::AtomicUsize::new(0),
+    });
+    let client: Arc<dyn ApiClient> = gated.clone();
+    let informers = SharedInformerFactory::new(client, Metrics::new());
+    let metrics = Metrics::new();
+    let sched = KubeScheduler::new(&informers, metrics.clone());
+    raw.create(NodeView::build("big", Resources::cores(64, 32 << 30), &[])).unwrap();
+
+    let shutdown = hpcorc::rt::Shutdown::new();
+    let held = gate.lock().unwrap(); // committer will block on its first batch
+    sched.start(Duration::from_millis(1), shutdown.clone());
+
+    // First wave: one pod -> one batch -> the committer blocks on it.
+    add_pod(&raw, "q0", 500);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while gated.batch_calls.load(Ordering::SeqCst) == 0 {
+        assert!(std::time::Instant::now() < deadline, "committer never picked up a batch");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // Two more waves, each given ample time to be scheduled into its own
+    // queued batch while the committer is still stuck on wave one.
+    add_pod(&raw, "q1", 500);
+    std::thread::sleep(Duration::from_millis(100));
+    add_pod(&raw, "q2", 500);
+    std::thread::sleep(Duration::from_millis(100));
+
+    drop(held); // API round trip completes; the backlog drains
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let bound = ["q0", "q1", "q2"]
+            .iter()
+            .filter(|p| node_of(&raw, p).as_deref() == Some("big"))
+            .count();
+        if bound == 3 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "pods never all bound: {bound}/3");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    shutdown.trigger();
+
+    assert!(
+        metrics.counter_value("kube.sched.commit_batches_coalesced") >= 1,
+        "batches queued behind the stuck commit must coalesce"
+    );
+    assert_eq!(
+        gated.batch_calls.load(Ordering::SeqCst),
+        2,
+        "the whole backlog must drain as one merged commit"
+    );
+}
+
 /// A bind batch lost in transit releases every reservation; the pods
 /// rebind as soon as the transport heals — no lost pods, no phantom
 /// usage.

@@ -304,4 +304,21 @@ done
 kill "$UP_PID" 2>/dev/null || true
 wait "$UP_PID" 2>/dev/null || true
 UP_PID=""
+
+echo "== chaos: seeded kill-and-recover under injected faults (PR 10) =="
+# The chaos verb boots its own testbeds (no socket needed here) and exits
+# nonzero if the faulted run's final transcript diverges from the clean
+# golden. redbox-drop covers the connection-fault path; apiserver-restart
+# covers the kill-and-recover WAL leg from *inside* the harness, with the
+# golden-transcript diff done by the scenario itself.
+"$HPCORC" chaos --scenario redbox-drop --seed 7
+"$HPCORC" chaos --scenario apiserver-restart --seed 7 | tee "$WORK/chaos-restart.out"
+grep -q CONVERGED "$WORK/chaos-restart.out"
+# Same seed, same verdicts: fault counts vary with poll timing, but the
+# converged flags must be byte-identical across reruns.
+"$HPCORC" chaos --scenario redbox-drop --seed 42 --json >"$WORK/chaos-a.json"
+"$HPCORC" chaos --scenario redbox-drop --seed 42 --json >"$WORK/chaos-b.json"
+diff <(grep -o '"converged":[a-z]*' "$WORK/chaos-a.json") \
+     <(grep -o '"converged":[a-z]*' "$WORK/chaos-b.json")
+
 echo "smoke OK"
